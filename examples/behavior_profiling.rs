@@ -1,0 +1,60 @@
+//! Behavior profiling (Adnostic-style targeted advertising) under
+//! changing network conditions — the paper's "different partitionings
+//! for different inputs and networks" claim, exercised.
+//!
+//! Profiles the app once per input depth, then prices and solves the
+//! partition for BOTH networks from the same profile trees, showing the
+//! Local/Offload flips across the 3x2 condition grid, and runs the
+//! chosen configuration each time.
+//!
+//!     cargo run --release --example behavior_profiling
+
+use std::path::Path;
+
+use clonecloud::apps::{App, BehaviorProfile, Size};
+use clonecloud::config::{Config, NetworkProfile};
+use clonecloud::pipeline::{clonecloud_cell_from_trees, monolithic_pair, profile_pair};
+use clonecloud::runtime::default_backend;
+use clonecloud::util::bench::Table;
+
+fn main() {
+    let cfg = Config::default();
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+    let app = BehaviorProfile;
+
+    let mut t = Table::new(
+        "Behavior profiling across inputs x networks",
+        &["Input", "Phone(s)", "3G choice", "3G(s)", "WiFi choice", "WiFi(s)"],
+    );
+
+    for size in Size::all() {
+        let program = app.program();
+        let (tm, tc, _) =
+            profile_pair(&app, &program, size, &cfg, &backend).expect("profiling");
+        let trees = (tm, tc);
+        let (po, _co, result) =
+            monolithic_pair(&app, size, &cfg, &backend).expect("monolithic");
+        let g = clonecloud_cell_from_trees(
+            &app, &trees, size, &cfg, &NetworkProfile::threeg(), &backend, po.virtual_ms,
+        )
+        .expect("3g cell");
+        let w = clonecloud_cell_from_trees(
+            &app, &trees, size, &cfg, &NetworkProfile::wifi(), &backend, po.virtual_ms,
+        )
+        .expect("wifi cell");
+        eprintln!("[behavior] {}: {result}", app.input_label(size));
+        t.row(vec![
+            app.input_label(size),
+            format!("{:.2}", po.virtual_ms / 1e3),
+            g.label.into(),
+            format!("{:.2}", g.exec_ms / 1e3),
+            w.label.into(),
+            format!("{:.2}", w.exec_ms / 1e3),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nThe same binary late-binds to different partitions as conditions \
+         change (paper §1: CloneCloud 'late-binds' the split)."
+    );
+}

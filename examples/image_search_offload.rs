@@ -1,0 +1,96 @@
+//! Image search with the partition DATABASE workflow (paper §3/§4):
+//! partition once per execution condition, store the results in the
+//! partition database, then at "launch time" look up the current
+//! conditions and run whichever binary the DB prescribes.
+//!
+//!     cargo run --release --example image_search_offload
+
+use std::path::Path;
+use std::sync::Arc;
+
+use clonecloud::apps::{build_process, App, ImageSearch, Size};
+use clonecloud::config::{Config, NetworkProfile};
+use clonecloud::device::Location;
+use clonecloud::exec::{run_distributed, run_monolithic, InlineClone};
+use clonecloud::partitioner::solver::Partition;
+use clonecloud::partitioner::{rewrite_with_partition, PartitionDb, PartitionEntry};
+use clonecloud::pipeline::{partition_from_trees, profile_pair};
+use clonecloud::runtime::default_backend;
+
+fn main() {
+    let cfg = Config::default();
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+    let app = ImageSearch;
+    let size = Size::Medium; // 10 images
+    let program = app.program();
+
+    // ---- Offline: fill the partition database --------------------------
+    let (tm, tc, _) = profile_pair(&app, &program, size, &cfg, &backend).expect("profiling");
+    let trees = (tm, tc);
+    let mut db = PartitionDb::new();
+    for net in [NetworkProfile::threeg(), NetworkProfile::wifi()] {
+        let (partition, _, _) =
+            partition_from_trees(&app, &trees, &cfg, &net).expect("solve");
+        db.put(PartitionEntry::from_partition(
+            app.name(),
+            &net.name,
+            &program,
+            &partition,
+        ));
+    }
+    let db_path = std::env::temp_dir().join("clonecloud_partitions.json");
+    db.save(&db_path).expect("save db");
+    println!("partition database written to {}:", db_path.display());
+    for e in db.entries() {
+        println!(
+            "  ({}, {:>4}) -> {:8} migrate={:?} expected {:.1}s",
+            e.app, e.network, e.label(), e.migrate, e.expected_ms / 1e3
+        );
+    }
+
+    // ---- Online: launch under current conditions ------------------------
+    let db = PartitionDb::load(&db_path).expect("load db");
+    for net in [NetworkProfile::threeg(), NetworkProfile::wifi()] {
+        let entry = db.lookup(app.name(), &net.name).expect("db entry");
+        println!("\nlaunching under {} -> {}", net.name, entry.label());
+        if entry.label() == "Local" {
+            let mut p = build_process(
+                &app, program.clone(), size, &cfg, Location::Mobile, backend.clone(), false,
+            )
+            .expect("process");
+            let out = run_monolithic(&mut p).expect("run");
+            println!(
+                "  ran locally: {:.2}s virtual ({})",
+                out.virtual_ms / 1e3,
+                app.check(&p, size).unwrap()
+            );
+        } else {
+            let migrate = entry.to_migrate_set(&program).expect("resolve");
+            let partition = Partition {
+                migrate,
+                locations: Default::default(),
+                expected_us: entry.expected_ms * 1e3,
+                local_us: entry.local_ms * 1e3,
+            };
+            let (rewritten, _) =
+                rewrite_with_partition(&program, &partition).expect("rewrite");
+            let rewritten = Arc::new(rewritten);
+            let mut phone = build_process(
+                &app, rewritten.clone(), size, &cfg, Location::Mobile, backend.clone(), false,
+            )
+            .expect("phone");
+            let clone = build_process(
+                &app, rewritten.clone(), size, &cfg, Location::Clone, backend.clone(), false,
+            )
+            .expect("clone");
+            let mut channel = InlineClone::new(clone, cfg.costs.clone());
+            let out = run_distributed(&mut phone, &mut channel, &net, &cfg.costs).expect("run");
+            println!(
+                "  ran offloaded: {:.2}s virtual, {} migration(s) ({})",
+                out.virtual_ms / 1e3,
+                out.migrations,
+                app.check(&phone, size).unwrap()
+            );
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! END-TO-END DRIVER (DESIGN.md §6): the full CloneCloud system on a
+//! real small workload, all layers composing.
+//!
+//! For the image-search application at every input size: generate the
+//! photo corpus, profile on both simulated devices (executing the AOT
+//! PJRT artifacts built from the L1 Pallas kernels), run static
+//! analysis, solve the partitioning ILP for 3G and WiFi, rewrite the
+//! binary, and execute the chosen configuration — distributed runs go
+//! through a REAL loopback-TCP clone node with file synchronization.
+//! Prints the paper-table rows plus the pipeline timing. Recorded in
+//! EXPERIMENTS.md.
+//!
+//!     cargo run --release --example partition_explorer
+
+use std::path::Path;
+use std::sync::Arc;
+
+use clonecloud::apps::{build_process, App, ImageSearch, Size};
+use clonecloud::config::{Config, NetworkProfile};
+use clonecloud::device::Location;
+use clonecloud::exec::{run_distributed, run_monolithic};
+use clonecloud::nodemanager::{CloneServer, NodeManager, TcpEndpoint, TcpTransport};
+use clonecloud::partitioner::rewrite_with_partition;
+use clonecloud::pipeline::{partition_from_trees, profile_pair};
+use clonecloud::runtime::default_backend;
+use clonecloud::util::bench::Table;
+use clonecloud::util::rng::Rng;
+
+fn main() {
+    let cfg = Config::default();
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+    let app = ImageSearch;
+
+    let mut table = Table::new(
+        "partition_explorer: image search, full pipeline, TCP clone node",
+        &[
+            "Input", "Phone(s)", "Clone(s)", "Net", "Choice", "CC(s)", "Speedup",
+            "Migr", "Up", "Down", "Result",
+        ],
+    );
+
+    for size in Size::all() {
+        let program = app.program();
+        // Profile once per input (network-independent).
+        let t0 = std::time::Instant::now();
+        let (tm, tc, rep) = profile_pair(&app, &program, size, &cfg, &backend).unwrap();
+        let trees = (tm, tc);
+        eprintln!(
+            "[explorer] {}: profiled {} methods in {:.1}s wall",
+            app.input_label(size),
+            rep.methods_profiled,
+            t0.elapsed().as_secs_f64()
+        );
+
+        // Monolithic columns.
+        let mut phone = build_process(
+            &app, program.clone(), size, &cfg, Location::Mobile, backend.clone(), false,
+        )
+        .unwrap();
+        let po = run_monolithic(&mut phone).unwrap();
+        let result = app.check(&phone, size).unwrap();
+        let mut clone = build_process(
+            &app, program.clone(), size, &cfg, Location::Clone, backend.clone(), true,
+        )
+        .unwrap();
+        let co = run_monolithic(&mut clone).unwrap();
+
+        for net in [NetworkProfile::threeg(), NetworkProfile::wifi()] {
+            let (partition, _, _) =
+                partition_from_trees(&app, &trees, &cfg, &net).unwrap();
+            if !partition.is_offload() {
+                table.row(vec![
+                    app.input_label(size),
+                    format!("{:.2}", po.virtual_ms / 1e3),
+                    format!("{:.2}", co.virtual_ms / 1e3),
+                    net.name.clone(),
+                    "Local".into(),
+                    format!("{:.2}", po.virtual_ms / 1e3),
+                    "1.00".into(),
+                    "0".into(),
+                    "-".into(),
+                    "-".into(),
+                    result.clone(),
+                ]);
+                continue;
+            }
+            let (rewritten, _) = rewrite_with_partition(&program, &partition).unwrap();
+            let rewritten = Arc::new(rewritten);
+
+            // Real clone node over TCP.
+            let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+            let addr = ep.local_addr().unwrap();
+            let srv_prog = rewritten.clone();
+            let costs = cfg.costs.clone();
+            let artifacts = cfg.artifacts_dir.clone();
+            let server = std::thread::spawn(move || {
+                let t = ep.accept().unwrap();
+                CloneServer::new(
+                    t,
+                    srv_prog,
+                    costs,
+                    Box::new(move |fs| {
+                        clonecloud::appvm::NodeEnv::new(
+                            fs,
+                            default_backend(Path::new(&artifacts)),
+                        )
+                    }),
+                )
+                .serve()
+                .unwrap()
+            });
+            let mut nm = NodeManager::new(TcpTransport::connect(&addr).unwrap());
+            nm.provision(&rewritten, cfg.zygote_objects, cfg.seed ^ 0x2760)
+                .unwrap();
+            let mut rng = Rng::new(cfg.seed);
+            nm.sync_fs(&app.make_fs(size, &mut rng)).unwrap();
+
+            let mut cc_phone = build_process(
+                &app, rewritten.clone(), size, &cfg, Location::Mobile, backend.clone(), false,
+            )
+            .unwrap();
+            let out = run_distributed(&mut cc_phone, &mut nm, &net, &cfg.costs).unwrap();
+            let cc_result = app.check(&cc_phone, size).unwrap();
+            assert_eq!(cc_result, result, "distributed == monolithic result");
+            nm.shutdown().unwrap();
+            server.join().unwrap();
+
+            table.row(vec![
+                app.input_label(size),
+                format!("{:.2}", po.virtual_ms / 1e3),
+                format!("{:.2}", co.virtual_ms / 1e3),
+                net.name.clone(),
+                "Offload".into(),
+                format!("{:.2}", out.virtual_ms / 1e3),
+                format!("{:.2}", po.virtual_ms / out.virtual_ms),
+                format!("{}", out.migrations),
+                clonecloud::util::stats::fmt_bytes(out.transfer.up),
+                clonecloud::util::stats::fmt_bytes(out.transfer.down),
+                cc_result,
+            ]);
+        }
+    }
+    table.print();
+    println!("\nAll distributed results matched their monolithic runs ✓");
+}

@@ -1,0 +1,161 @@
+//! Quickstart: the paper's Figure 5 worked end to end on a toy program.
+//!
+//! Builds a tiny app (a() -> {b() light, c() heavy}), profiles it on the
+//! simulated phone and clone, solves the partitioning ILP, rewrites the
+//! binary, and runs it distributed over an in-process clone — printing
+//! every intermediate artifact (DC/TC relations, profile-tree residuals,
+//! the chosen R(m) set, and the final speedup).
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::natives::{NodeEnv, RustCompute};
+use clonecloud::appvm::process::Process;
+use clonecloud::appvm::zygote::build_template;
+use clonecloud::config::{Config, NetworkProfile};
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::exec::{run_distributed, run_monolithic, InlineClone};
+use clonecloud::partitioner::{
+    profile_run, rewrite_with_partition, solve_partition, Cfg, CostModel,
+};
+use clonecloud::vfs::SimFs;
+
+/// Figure 5's program, with bodies: b() is light, c() is a heavy loop.
+const SRC: &str = r#"
+class C app
+  static out
+  method main nargs=0 regs=4
+    invoke r0 C.a
+    puts C.out r0
+    retv
+  end
+  method a nargs=0 regs=4
+    invoke r0 C.b
+    invoke r1 C.c
+    add r2 r0 r1
+    ret r2
+  end
+  method b nargs=0 regs=4
+    const r0 0
+    const r1 100
+    const r2 1
+  loop:
+    ifge r0 r1 @done
+    add r0 r0 r2
+    goto @loop
+  done:
+    ret r0
+  end
+  method c nargs=0 regs=4
+    const r0 0
+    const r1 400000
+    const r2 1
+  loop:
+    ifge r0 r1 @done
+    add r0 r0 r2
+    goto @loop
+  done:
+    ret r0
+  end
+end
+"#;
+
+fn process(program: &Arc<clonecloud::appvm::Program>, dev: DeviceSpec, loc: Location) -> Process {
+    let template = build_template(program, 500, 7);
+    let mut p = Process::fork_from_zygote(
+        program.clone(),
+        &template,
+        dev,
+        loc,
+        NodeEnv::with_rust_compute(SimFs::new()),
+    );
+    p.cost_params = Some(Config::default().costs);
+    p
+}
+
+fn main() {
+    let cfg = Config::default();
+    let program = Arc::new(assemble(SRC).expect("assemble"));
+    clonecloud::appvm::verifier::verify_program(&program).expect("verify");
+    let entry = program.entry().unwrap();
+
+    // --- Static analysis (paper §3.1) -----------------------------------
+    let cfg_graph = Cfg::build(&program);
+    println!("== static analysis ==");
+    for (i, j) in cfg_graph.dc_edges() {
+        println!(
+            "  DC: {} -> {}",
+            program.method_name(cfg_graph.methods[i]),
+            program.method_name(cfg_graph.methods[j])
+        );
+    }
+
+    // --- Dynamic profiling (paper §3.2) ----------------------------------
+    let mut phone = process(&program, cfg.phone.clone(), Location::Mobile);
+    let (t_mobile, _) = profile_run(&mut phone, entry, &[], true).expect("phone profile");
+    let mut clone = process(&program, cfg.clone.clone(), Location::Clone);
+    let (t_clone, _) = profile_run(&mut clone, entry, &[], false).expect("clone profile");
+    println!("\n== profile trees (method residuals, ms) ==");
+    for m in program.app_methods() {
+        println!(
+            "  {:8}  mobile {:>10.2}  clone {:>8.2}  state {:>8}B",
+            program.method_name(m),
+            t_mobile.method_residual_us(m) / 1e3,
+            t_clone.method_residual_us(m) / 1e3,
+            t_mobile.method_state_bytes(m),
+        );
+    }
+
+    // --- Optimization solving (paper §3.3) -------------------------------
+    let net = NetworkProfile::wifi();
+    let cost_model = CostModel::build_scaled(
+        &[(&t_mobile, &t_clone)],
+        &cfg.costs,
+        &net,
+        cfg.phone.cpu_factor,
+        cfg.clone.cpu_factor,
+    );
+    let (partition, report) = solve_partition(&program, &cfg_graph, &cost_model).expect("solve");
+    println!(
+        "\n== partition ({} vars, {} constraints, {:.1}ms solve) ==",
+        report.n_vars,
+        report.n_constraints,
+        report.solve_wall_s * 1e3
+    );
+    for &m in &partition.migrate {
+        println!("  R(m)=1: {}", program.method_name(m));
+    }
+    println!(
+        "  expected {:.1}ms vs local {:.1}ms",
+        partition.expected_us / 1e3,
+        partition.local_us / 1e3
+    );
+
+    // --- Distributed execution (paper §4) --------------------------------
+    let mut mono = process(&program, cfg.phone.clone(), Location::Mobile);
+    let mono_out = run_monolithic(&mut mono).expect("monolithic");
+
+    let (rewritten, _) = rewrite_with_partition(&program, &partition).expect("rewrite");
+    let rewritten = Arc::new(rewritten);
+    let mut phone = process(&rewritten, cfg.phone.clone(), Location::Mobile);
+    let clone = process(&rewritten, cfg.clone.clone(), Location::Clone);
+    let mut channel = InlineClone::new(clone, cfg.costs.clone());
+    let out = run_distributed(&mut phone, &mut channel, &net, &cfg.costs).expect("distributed");
+
+    println!("\n== execution ==");
+    println!("  monolithic (phone): {:>10.1}ms", mono_out.virtual_ms);
+    println!(
+        "  CloneCloud (WiFi):  {:>10.1}ms  ({} migration, {} objs shipped, {} zygote skipped)",
+        out.virtual_ms, out.migrations, out.objects_shipped, out.zygote_skipped
+    );
+    println!("  speedup: {:.2}x", mono_out.virtual_ms / out.virtual_ms);
+    assert_eq!(
+        clonecloud::apps::read_static_int(&phone, "C", "out"),
+        clonecloud::apps::read_static_int(&mono, "C", "out"),
+        "distributed result equals monolithic result"
+    );
+    println!("  results match ✓");
+    let _ = RustCompute;
+}

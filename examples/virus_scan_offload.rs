@@ -1,0 +1,108 @@
+//! Virus-scanner offload over a REAL TCP clone node.
+//!
+//! Spawns a clone node manager on a loopback TCP listener (its own
+//! thread, its own PJRT runtime — the two "devices" share nothing but
+//! the wire), provisions it (Zygote boot + executable hash check +
+//! file-system synchronization), then runs the partitioned scanner on
+//! the simulated phone: the scan loop migrates to the clone, scans the
+//! synchronized files there with the AOT Pallas signature-match kernel,
+//! and merges the verdict back.
+//!
+//!     cargo run --release --example virus_scan_offload
+
+use std::path::Path;
+use std::sync::Arc;
+
+use clonecloud::apps::{build_process, App, Size, VirusScan};
+use clonecloud::config::{Config, NetworkProfile};
+use clonecloud::device::Location;
+use clonecloud::exec::{run_distributed, run_monolithic};
+use clonecloud::nodemanager::{CloneServer, NodeManager, TcpEndpoint, TcpTransport};
+use clonecloud::partitioner::rewrite_with_partition;
+use clonecloud::pipeline::partition_app;
+use clonecloud::runtime::default_backend;
+use clonecloud::util::rng::Rng;
+
+fn main() {
+    let cfg = Config::default();
+    let app = VirusScan;
+    let size = Size::Medium; // 1 MB file system: Offload on WiFi (Table 1)
+    let net = NetworkProfile::wifi();
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+
+    // Offline: partition for the current conditions.
+    let (partition, report) =
+        partition_app(&app, size, &cfg, &net, &backend).expect("partitioning");
+    println!(
+        "partition for wifi: {} (profiled {} methods, solve {:.1}ms)",
+        partition.label(),
+        report.methods_profiled,
+        report.solve_s * 1e3
+    );
+    let program = app.program();
+    let (rewritten, _) = rewrite_with_partition(&program, &partition).expect("rewrite");
+    let rewritten = Arc::new(rewritten);
+
+    // Clone node: own thread, own transport, own artifacts.
+    let ep = TcpEndpoint::bind("127.0.0.1:0").expect("bind");
+    let addr = ep.local_addr().unwrap();
+    let server_prog = rewritten.clone();
+    let costs = cfg.costs.clone();
+    let artifacts = cfg.artifacts_dir.clone();
+    let server = std::thread::spawn(move || {
+        let t = ep.accept().expect("accept");
+        let srv = CloneServer::new(
+            t,
+            server_prog,
+            costs,
+            Box::new(move |fs| {
+                clonecloud::appvm::NodeEnv::new(fs, default_backend(Path::new(&artifacts)))
+            }),
+        );
+        srv.serve().expect("clone serve")
+    });
+
+    // Phone side: node manager over TCP.
+    let mut nm = NodeManager::new(TcpTransport::connect(&addr).expect("connect"));
+    nm.provision(&rewritten, cfg.zygote_objects, cfg.seed ^ 0x2760)
+        .expect("provision");
+    let mut rng = Rng::new(cfg.seed);
+    let fs = app.make_fs(size, &mut rng);
+    let fs_bytes = nm.sync_fs(&fs).expect("fs sync");
+    println!("provisioned clone at {addr}; synchronized {fs_bytes} fs bytes");
+
+    // Baseline: monolithic on the phone.
+    let mut mono = build_process(
+        &app, program.clone(), size, &cfg, Location::Mobile, backend.clone(), false,
+    )
+    .expect("mono process");
+    let mono_out = run_monolithic(&mut mono).expect("monolithic");
+    println!(
+        "monolithic phone: {:.2}s virtual  ({})",
+        mono_out.virtual_ms / 1e3,
+        app.check(&mono, size).unwrap()
+    );
+
+    // CloneCloud run against the real remote clone.
+    let mut phone = build_process(
+        &app, rewritten.clone(), size, &cfg, Location::Mobile, backend, false,
+    )
+    .expect("phone process");
+    let out = run_distributed(&mut phone, &mut nm, &net, &cfg.costs).expect("distributed");
+    println!(
+        "CloneCloud wifi:  {:.2}s virtual  ({})  [{} migration(s), {}B up / {}B down]",
+        out.virtual_ms / 1e3,
+        app.check(&phone, size).unwrap(),
+        out.migrations,
+        out.transfer.up,
+        out.transfer.down
+    );
+    println!("speedup: {:.2}x", mono_out.virtual_ms / out.virtual_ms);
+
+    nm.shutdown().expect("shutdown");
+    let stats = server.join().unwrap();
+    println!(
+        "clone served {} migrations, {} instrs executed remotely",
+        stats.migrations, stats.instrs_executed
+    );
+}

@@ -1,0 +1,94 @@
+"""AOT lowering: JAX models -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (`proto.id() <= INT_MAX`). The text
+parser reassigns ids, so text round-trips cleanly. Lowering goes through
+stablehlo -> XlaComputation with return_tuple=True; the Rust side unwraps
+with Literal::to_tuple(). See /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--report]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name):
+    fn, specs = MODELS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    return lowered, to_hlo_text(lowered)
+
+
+def hlo_report(text: str) -> dict:
+    """Crude HLO op census for the L2 perf pass (fusion / redundancy check)."""
+    ops = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1].strip()
+        # "f32[8,512]{1,0} dot(...)" -> "dot"
+        for tok in rhs.split():
+            if "(" in tok:
+                op = tok.split("(", 1)[0]
+                ops[op] = ops.get(op, 0) + 1
+                break
+    return ops
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--report", action="store_true", help="print HLO op census")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name in sorted(MODELS):
+        fn, specs = MODELS[name]
+        lowered, text = lower_model(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *specs)
+        outs = jax.tree_util.tree_leaves(out_tree)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+        if args.report:
+            census = hlo_report(text)
+            top = sorted(census.items(), key=lambda kv: -kv[1])[:12]
+            print(f"  op census: {top}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest)} models -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

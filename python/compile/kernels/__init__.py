@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the CloneCloud app compute hot-spots.
+from .cosine import cosine_scores  # noqa: F401
+from .sigmatch import sigmatch_counts  # noqa: F401
+from .conv2d import facedetect  # noqa: F401

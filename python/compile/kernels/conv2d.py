@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: filter-bank face detection over image patches.
+
+CloneCloud's image-search app finds faces in the phone's photo corpus via
+an Android face-detection library. We build the equivalent substrate: a
+bank of zero-mean detection filters correlated against every 8x8 patch of
+the image. The patch correlation is an (P, D) x (D, F) matmul — conv as
+matmul, the MXU-native formulation (the GPU/CPU library's nested loops
+re-thought for the systolic array, DESIGN.md §Hardware-Adaptation).
+
+The patch axis P is tiled into VMEM blocks; two outputs are reduced
+across grid steps into fixed blocks: per-filter response maxima (running
+max) and per-filter above-threshold counts (running sum).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Patch-axis tile.
+BLOCK_P = 256
+NEG_INF = -3.0e38
+
+
+def _facedetect_kernel(p_ref, f_ref, t_ref, max_ref, cnt_ref):
+    """One grid step: correlate BLOCK_P patches with the filter bank.
+
+    p_ref:   (BLOCK_P, D) patch panel.
+    f_ref:   (D, F) filter bank (VMEM-resident every step).
+    t_ref:   (1, 1) detection threshold.
+    max_ref: (1, F) running per-filter maxima.
+    cnt_ref: (1, F) running per-filter detection counts.
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        max_ref[...] = jnp.full_like(max_ref, NEG_INF)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    resp = jnp.dot(p_ref[...], f_ref[...], preferred_element_type=jnp.float32)
+    max_ref[...] = jnp.maximum(max_ref[...], jnp.max(resp, axis=0, keepdims=True))
+    hits = (resp > t_ref[0, 0]).astype(jnp.float32)
+    cnt_ref[...] += jnp.sum(hits, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def facedetect(
+    patches: jnp.ndarray,
+    filters: jnp.ndarray,
+    thresh: jnp.ndarray,
+    block_p: int = BLOCK_P,
+):
+    """Per-filter (maxima, counts): patches (P, D), filters (D, F), thresh ().
+
+    P must be a multiple of block_p; pad patches are all-zero and respond
+    0 to every zero-mean filter (never above a positive threshold).
+    """
+    p, d = patches.shape
+    d2, f = filters.shape
+    assert d == d2, f"patch dim {d} vs filter dim {d2}"
+    assert p % block_p == 0, f"P={p} not a multiple of block_p={block_p}"
+    t = jnp.reshape(thresh.astype(jnp.float32), (1, 1))
+    grid = (p // block_p,)
+    maxima, counts = pl.pallas_call(
+        _facedetect_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, f), jnp.float32),
+            jax.ShapeDtypeStruct((1, f), jnp.float32),
+        ],
+        interpret=True,
+    )(patches, filters, t)
+    return maxima[0], counts[0]

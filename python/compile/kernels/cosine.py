@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: tiled cosine-similarity scoring.
+
+CloneCloud's behavior-profiling app (Adnostic-style targeted advertising)
+computes the cosine similarity between user interest keyword vectors and
+the keyword vectors of DMOZ category nodes. This is the app's compute
+hot-spot; on the phone it dominates the 315.8 s depth-5 run in Table 1.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the similarity is an
+(B, K) x (K, N) matmul over L2-normalized operands. We tile the category
+axis N into MXU-aligned blocks of 128 via BlockSpec so each grid step
+holds a (K, 128) category panel in VMEM; the user panel (B, K) is small
+and mapped whole into every step. Normalization of the category panel is
+fused into the kernel so the HBM->VMEM traffic is one pass.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+
+# MXU-aligned tile along the category axis.
+BLOCK_N = 128
+
+
+def _cosine_kernel(u_ref, c_ref, o_ref):
+    """One grid step: score all users against one category panel.
+
+    u_ref: (B, K) user vectors (whole array each step).
+    c_ref: (K, BLOCK_N) category panel for this step.
+    o_ref: (B, BLOCK_N) output scores for this panel.
+    """
+    u = u_ref[...]
+    c = c_ref[...]
+    un = u / (jnp.sqrt(jnp.sum(u * u, axis=1, keepdims=True)) + EPS)
+    cn = c / (jnp.sqrt(jnp.sum(c * c, axis=0, keepdims=True)) + EPS)
+    # MXU-shaped inner product; accumulate in f32.
+    o_ref[...] = jnp.dot(un, cn, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def cosine_scores(users: jnp.ndarray, cats: jnp.ndarray, block_n: int = BLOCK_N):
+    """Tiled cosine similarity: users (B, K) x cats (K, N) -> (B, N).
+
+    N must be a multiple of block_n (the AOT shapes are padded by the
+    caller; pad columns are zero vectors and score ~0).
+    """
+    b, k = users.shape
+    k2, n = cats.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _cosine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(users, cats)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the three CloneCloud app kernels.
+
+These are the correctness references the Pallas kernels (cosine.py,
+sigmatch.py, conv2d.py) are tested against in python/tests/. They are
+deliberately written in the most direct jnp style — no tiling, no tricks —
+so a mismatch always indicts the kernel, not the oracle.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def cosine_scores_ref(users: jnp.ndarray, cats: jnp.ndarray) -> jnp.ndarray:
+    """Cosine similarity between user keyword vectors and category vectors.
+
+    users: (B, K) float32 — one row per user interest vector.
+    cats:  (K, N) float32 — one column per DMOZ category keyword vector.
+    returns: (B, N) float32 — cosine similarity scores.
+    """
+    un = users / (jnp.linalg.norm(users, axis=1, keepdims=True) + EPS)
+    cn = cats / (jnp.linalg.norm(cats, axis=0, keepdims=True) + EPS)
+    return un @ cn
+
+
+def sigmatch_counts_ref(windows: jnp.ndarray, sigs: jnp.ndarray) -> jnp.ndarray:
+    """Count exact window/signature matches.
+
+    A window w matches signature s iff w == s elementwise, which (over
+    floats encoding bytes) is equivalent to:
+        |w|^2 + |s|^2 - 2 * w.s == 0
+    (this is |w - s|^2).
+
+    windows: (W, L) float32 — sliding byte windows (padded rows use -1,
+             which can never equal a byte value in [0, 255]).
+    sigs:    (L, S) float32 — signature byte columns.
+    returns: (S,) float32 — per-signature match counts.
+    """
+    dots = windows @ sigs  # (W, S)
+    wn2 = jnp.sum(windows * windows, axis=1, keepdims=True)  # (W, 1)
+    sn2 = jnp.sum(sigs * sigs, axis=0, keepdims=True)  # (1, S)
+    d2 = sn2 + wn2 - 2.0 * dots  # squared distance, >= 0 up to fp error
+    match = (d2 < 0.5).astype(jnp.float32)
+    return jnp.sum(match, axis=0)
+
+
+def facedetect_ref(patches: jnp.ndarray, filters: jnp.ndarray, thresh: jnp.ndarray):
+    """Filter-bank face detector over image patches.
+
+    patches: (P, D) float32 — flattened 8x8 image patches (rows of pad
+             patches are 0 and score 0 under the zero-mean filters).
+    filters: (D, F) float32 — flattened zero-mean detection filters.
+    thresh:  ()     float32 — detection threshold.
+    returns: (maxima (F,), counts (F,)) — per-filter max response and the
+             number of patches whose response exceeds thresh.
+    """
+    resp = patches @ filters  # (P, F)
+    maxima = jnp.max(resp, axis=0)
+    counts = jnp.sum((resp > thresh).astype(jnp.float32), axis=0)
+    return maxima, counts

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: sliding-window virus-signature matching.
+
+CloneCloud's virus-scanner app matches the phone file system against a
+library of byte signatures. The paper's per-byte scan loop is re-stated
+for the MXU (DESIGN.md §Hardware-Adaptation): an exact window==signature
+match is detected through squared euclidean distance,
+
+    |w - s|^2 = |w|^2 + |s|^2 - 2 w.s,
+
+whose cross term is a (W, L) x (L, S) matmul — the TPU-native form of
+string matching. The window axis W is tiled into VMEM-sized blocks; the
+signature panel (L, S) is small and resident in VMEM across all steps.
+Per-signature match counts are accumulated across grid steps into a
+single output block (classic Pallas reduction: all steps map to output
+block 0; step 0 zero-initializes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Window-axis tile: 512 windows per grid step.
+BLOCK_W = 512
+
+
+def _sigmatch_kernel(w_ref, s_ref, sn2_ref, o_ref):
+    """One grid step: match BLOCK_W windows against all signatures.
+
+    w_ref:   (BLOCK_W, L) window panel.
+    s_ref:   (L, S) signature matrix (whole, VMEM-resident).
+    sn2_ref: (1, S) precomputed per-signature squared norms.
+    o_ref:   (1, S) accumulated match counts (same block every step).
+    """
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...]
+    s = s_ref[...]
+    dots = jnp.dot(w, s, preferred_element_type=jnp.float32)  # (BW, S)
+    wn2 = jnp.sum(w * w, axis=1, keepdims=True)  # (BW, 1)
+    d2 = sn2_ref[...] + wn2 - 2.0 * dots
+    match = (d2 < 0.5).astype(jnp.float32)
+    o_ref[...] += jnp.sum(match, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def sigmatch_counts(windows: jnp.ndarray, sigs: jnp.ndarray, block_w: int = BLOCK_W):
+    """Per-signature exact-match counts: windows (W, L), sigs (L, S) -> (S,).
+
+    W must be a multiple of block_w; pad rows use -1 bytes (never match).
+    """
+    w, l = windows.shape
+    l2, s = sigs.shape
+    assert l == l2, f"window length {l} vs signature length {l2}"
+    assert w % block_w == 0, f"W={w} not a multiple of block_w={block_w}"
+    sn2 = jnp.sum(sigs * sigs, axis=0, keepdims=True)  # (1, S)
+    grid = (w // block_w,)
+    out = pl.pallas_call(
+        _sigmatch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_w, l), lambda i: (i, 0)),
+            pl.BlockSpec((l, s), lambda i: (0, 0)),
+            pl.BlockSpec((1, s), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, s), jnp.float32),
+        interpret=True,
+    )(windows, sigs, sn2)
+    return out[0]

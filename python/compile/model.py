@@ -1,0 +1,115 @@
+"""L2: the JAX compute graphs behind the three CloneCloud apps.
+
+Each function here is the *native compute* an app method reaches through
+DroidVM's native interface (the analogue of Android's natively-implemented
+API routines, §4 of the paper: "native everywhere" operations available on
+both the phone and the clone). They are jitted, call the L1 Pallas kernels,
+and are lowered ONCE by aot.py to HLO text that the Rust runtime loads via
+PJRT. Python never runs on the request path.
+
+AOT shapes are fixed; the Rust callers pad inputs to these shapes:
+  scan_chunk   : chunk (4096,) f32 byte values, sigs (16, 128) f32
+  face_detect  : img (64, 64) f32, filters (64, 16) f32, thresh () f32
+  categorize   : users (8, 256) f32, cats (256, 512) f32
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cosine_scores, facedetect, sigmatch_counts
+
+# ---------------------------------------------------------------- virus scan
+
+CHUNK = 4096  # bytes per scan call
+SIG_LEN = 16  # signature length in bytes
+N_SIGS = 128  # signatures per artifact (the 1000-sig library is 8 panels)
+
+
+def scan_chunk(chunk: jnp.ndarray, sigs: jnp.ndarray):
+    """Scan one 4 KiB file chunk against a signature panel.
+
+    chunk: (CHUNK,) float32 — byte values 0..255; callers pad short chunks
+           with -1 so pad windows can never match.
+    sigs:  (SIG_LEN, N_SIGS) float32 — signature byte columns.
+    returns: (counts (N_SIGS,), total ()) — per-signature and total hits.
+    """
+    # Sliding windows, one per byte offset. Offsets within SIG_LEN-1 of the
+    # end are padded with -1 (cross-chunk matches are handled by the Rust
+    # caller overlapping chunks by SIG_LEN-1 bytes).
+    padded = jnp.concatenate([chunk, jnp.full((SIG_LEN - 1,), -1.0, jnp.float32)])
+    idx = jnp.arange(CHUNK)[:, None] + jnp.arange(SIG_LEN)[None, :]
+    windows = padded[idx]  # (CHUNK, SIG_LEN)
+    counts = sigmatch_counts(windows, sigs)
+    return counts, jnp.sum(counts)
+
+
+# --------------------------------------------------------------- face detect
+
+IMG = 64  # image side
+PATCH = 8  # detection window side
+N_FILTERS = 16
+N_PATCHES = (IMG - PATCH + 1) ** 2  # 3249
+PAD_PATCHES = 3328  # next multiple of BLOCK_P=256
+
+
+def face_detect(img: jnp.ndarray, filters: jnp.ndarray, thresh: jnp.ndarray):
+    """Detect faces in one image with a zero-mean filter bank.
+
+    img:     (IMG, IMG) float32 grayscale.
+    filters: (PATCH*PATCH, N_FILTERS) float32 zero-mean filters.
+    thresh:  () float32 detection threshold.
+    returns: (maxima (N_FILTERS,), counts (N_FILTERS,), faces ()) where
+             faces is the total number of above-threshold responses.
+    """
+    side = IMG - PATCH + 1
+    rc = jnp.arange(side)
+    base = (rc[:, None] * IMG + rc[None, :]).reshape(-1)  # (3249,)
+    off = (jnp.arange(PATCH)[:, None] * IMG + jnp.arange(PATCH)[None, :]).reshape(-1)
+    idx = base[:, None] + off[None, :]  # (3249, 64)
+    patches = img.reshape(-1)[idx]
+    # Pad the patch axis to the kernel tile multiple; zero patches respond
+    # 0 to zero-mean filters and never cross a positive threshold.
+    patches = jnp.concatenate(
+        [patches, jnp.zeros((PAD_PATCHES - N_PATCHES, PATCH * PATCH), jnp.float32)]
+    )
+    maxima, counts = facedetect(patches, filters, thresh)
+    return maxima, counts, jnp.sum(counts)
+
+
+# ---------------------------------------------------------------- categorize
+
+N_USERS = 8  # interest vectors scored per call (one page-visit batch)
+KDIM = 256  # keyword-vector dimensionality
+N_CATS = 512  # category panel width (a DMOZ level is scored in panels)
+
+
+def categorize(users: jnp.ndarray, cats: jnp.ndarray):
+    """Score user interest vectors against one DMOZ category panel.
+
+    users: (N_USERS, KDIM) float32.
+    cats:  (KDIM, N_CATS) float32 — zero columns are padding and score ~0.
+    returns: (scores (N_USERS, N_CATS), best (N_USERS,) int32,
+              best_score (N_USERS,)).
+    """
+    scores = cosine_scores(users, cats)
+    best = jnp.argmax(scores, axis=1).astype(jnp.int32)
+    best_score = jnp.max(scores, axis=1)
+    return scores, best, best_score
+
+
+# ------------------------------------------------------------- AOT registry
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# name -> (fn, example arg specs). aot.py lowers each entry to
+# artifacts/<name>.hlo.txt and records shapes in artifacts/manifest.json.
+MODELS = {
+    "scan_chunk": (scan_chunk, (_spec(CHUNK), _spec(SIG_LEN, N_SIGS))),
+    "face_detect": (face_detect, (_spec(IMG, IMG), _spec(PATCH * PATCH, N_FILTERS), _spec())),
+    "categorize": (categorize, (_spec(N_USERS, KDIM), _spec(KDIM, N_CATS))),
+}

@@ -1,0 +1,59 @@
+"""AOT lowering tests: HLO text is produced and the manifest is faithful."""
+
+import json
+
+import jax
+
+from compile import aot, model
+
+
+class TestLowering:
+    def test_every_model_lowers_to_hlo_text(self):
+        for name in model.MODELS:
+            _, text = aot.lower_model(name)
+            assert text.startswith("HloModule"), name
+            assert "ENTRY" in text, name
+
+    def test_hlo_has_no_custom_calls(self):
+        # interpret=True Pallas must lower to plain HLO ops — a Mosaic
+        # custom-call would be unloadable by the CPU PJRT client.
+        for name in model.MODELS:
+            _, text = aot.lower_model(name)
+            assert "custom-call" not in text, f"{name} contains custom-call"
+
+    def test_root_is_tuple(self):
+        # return_tuple=True: the Rust side unwraps with Literal::to_tuple().
+        for name in model.MODELS:
+            _, text = aot.lower_model(name)
+            entry = text[text.index("ENTRY") :]
+            root = [l for l in entry.splitlines() if "ROOT" in l]
+            assert root and "tuple(" in root[0], name
+
+    def test_manifest_shapes_match_eval_shape(self, tmp_path):
+        import subprocess, sys, os
+
+        # Run the module the same way the Makefile does.
+        env = dict(os.environ)
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path)],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env=env,
+        )
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert set(manifest) == set(model.MODELS)
+        for name, entry in manifest.items():
+            fn, specs = model.MODELS[name]
+            outs = jax.tree_util.tree_leaves(jax.eval_shape(fn, *specs))
+            assert [o["shape"] for o in entry["inputs"]] == [
+                list(s.shape) for s in specs
+            ]
+            assert [o["shape"] for o in entry["outputs"]] == [
+                list(o.shape) for o in outs
+            ]
+            assert (tmp_path / entry["file"]).exists()
+
+    def test_op_census_reports_dot(self):
+        _, text = aot.lower_model("categorize")
+        census = aot.hlo_report(text)
+        assert any("dot" in k for k in census), census

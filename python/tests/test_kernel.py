@@ -1,0 +1,191 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal.
+
+Each Pallas kernel (interpret=True) is checked against its pure-jnp oracle
+in compile/kernels/ref.py, both on fixed seeds and under hypothesis sweeps
+of shapes and value distributions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import cosine_scores, facedetect, sigmatch_counts
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _users_cats(b, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    users = rng.normal(size=(b, k)).astype(np.float32)
+    cats = rng.normal(size=(k, n)).astype(np.float32)
+    return jnp.asarray(users), jnp.asarray(cats)
+
+
+# ------------------------------------------------------------------- cosine
+
+
+class TestCosine:
+    def test_matches_ref_default_shape(self):
+        users, cats = _users_cats(8, 256, 512)
+        got = cosine_scores(users, cats)
+        want = ref.cosine_scores_ref(users, cats)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_scores_bounded(self):
+        users, cats = _users_cats(8, 256, 512, seed=1)
+        got = np.asarray(cosine_scores(users, cats))
+        assert np.all(got <= 1.0 + 1e-4) and np.all(got >= -1.0 - 1e-4)
+
+    def test_identical_vector_scores_one(self):
+        v = np.abs(RNG.normal(size=256)).astype(np.float32) + 0.1
+        users = jnp.asarray(np.tile(v, (8, 1)))
+        cats = jnp.asarray(np.tile(v[:, None], (1, 128)))
+        got = np.asarray(cosine_scores(users, cats, block_n=128))
+        np.testing.assert_allclose(got, np.ones((8, 128)), atol=1e-4)
+
+    def test_zero_pad_columns_score_zero(self):
+        users, cats = _users_cats(8, 256, 256, seed=2)
+        cats = cats.at[:, 128:].set(0.0)
+        got = np.asarray(cosine_scores(users, cats, block_n=128))
+        np.testing.assert_allclose(got[:, 128:], 0.0, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 16),
+        k=st.sampled_from([32, 64, 256]),
+        nblocks=st.integers(1, 4),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_shapes(self, b, k, nblocks, seed):
+        users, cats = _users_cats(b, k, 128 * nblocks, seed=seed)
+        got = cosine_scores(users, cats)
+        want = ref.cosine_scores_ref(users, cats)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- sigmatch
+
+
+def _plant(windows, sigs, wi, si):
+    """Plant signature column si into window row wi; return updated windows."""
+    return windows.at[wi, :].set(sigs[:, si])
+
+
+class TestSigmatch:
+    def _data(self, w=1024, l=16, s=128, seed=0):
+        rng = np.random.default_rng(seed)
+        windows = jnp.asarray(
+            rng.integers(0, 256, size=(w, l)).astype(np.float32)
+        )
+        sigs = jnp.asarray(rng.integers(0, 256, size=(l, s)).astype(np.float32))
+        return windows, sigs
+
+    def test_matches_ref(self):
+        windows, sigs = self._data()
+        windows = _plant(windows, sigs, 3, 7)
+        windows = _plant(windows, sigs, 900, 7)
+        windows = _plant(windows, sigs, 511, 42)
+        got = sigmatch_counts(windows, sigs)
+        want = ref.sigmatch_counts_ref(windows, sigs)
+        np.testing.assert_allclose(got, want, atol=0.01)
+
+    def test_planted_counts_exact(self):
+        rng = np.random.default_rng(9)
+        # Windows of value 300 can never collide with byte signatures.
+        windows = jnp.full((512, 16), 300.0, jnp.float32)
+        sigs = jnp.asarray(rng.integers(0, 256, size=(16, 128)).astype(np.float32))
+        windows = _plant(windows, sigs, 0, 5)
+        windows = _plant(windows, sigs, 100, 5)
+        windows = _plant(windows, sigs, 511, 99)
+        got = np.asarray(sigmatch_counts(windows, sigs))
+        want = np.zeros(128, np.float32)
+        want[5], want[99] = 2.0, 1.0
+        np.testing.assert_array_equal(got, want)
+
+    def test_pad_rows_never_match(self):
+        rng = np.random.default_rng(10)
+        windows = jnp.full((512, 16), -1.0, jnp.float32)
+        sigs = jnp.asarray(rng.integers(0, 256, size=(16, 128)).astype(np.float32))
+        got = np.asarray(sigmatch_counts(windows, sigs))
+        np.testing.assert_array_equal(got, np.zeros(128, np.float32))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        wblocks=st.integers(1, 4),
+        s=st.sampled_from([32, 128]),
+        nplant=st.integers(0, 8),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_planted(self, wblocks, s, nplant, seed):
+        rng = np.random.default_rng(seed)
+        w = 512 * wblocks
+        windows = jnp.asarray(rng.integers(256, 512, size=(w, 16)).astype(np.float32))
+        sigs = jnp.asarray(rng.integers(0, 256, size=(16, s)).astype(np.float32))
+        expect = np.zeros(s, np.float32)
+        for _ in range(nplant):
+            wi, si = int(rng.integers(w)), int(rng.integers(s))
+            windows = _plant(windows, sigs, wi, si)
+        # Recompute expectation from final windows (plants may overwrite).
+        expect = np.asarray(ref.sigmatch_counts_ref(windows, sigs))
+        got = np.asarray(sigmatch_counts(windows, sigs))
+        np.testing.assert_allclose(got, expect, atol=0.01)
+
+
+# --------------------------------------------------------------- facedetect
+
+
+class TestFacedetect:
+    def _data(self, p=1024, d=64, f=16, seed=0):
+        rng = np.random.default_rng(seed)
+        patches = jnp.asarray(rng.normal(size=(p, d)).astype(np.float32))
+        filters = rng.normal(size=(d, f)).astype(np.float32)
+        filters -= filters.mean(axis=0, keepdims=True)  # zero-mean
+        return patches, jnp.asarray(filters)
+
+    def test_matches_ref(self):
+        patches, filters = self._data()
+        t = jnp.float32(2.0)
+        gm, gc = facedetect(patches, filters, t)
+        wm, wc = ref.facedetect_ref(patches, filters, t)
+        np.testing.assert_allclose(gm, wm, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gc, wc, atol=0.01)
+
+    def test_zero_patches_score_zero(self):
+        patches = jnp.zeros((512, 64), jnp.float32)
+        _, filters = self._data()
+        gm, gc = facedetect(patches, filters, jnp.float32(0.5))
+        np.testing.assert_allclose(gm, np.zeros(16), atol=1e-6)
+        np.testing.assert_allclose(gc, np.zeros(16), atol=1e-6)
+
+    def test_planted_face_detected(self):
+        patches, filters = self._data(seed=3)
+        f0 = np.asarray(filters)[:, 0]
+        strong = 10.0 * f0 / np.linalg.norm(f0)
+        patches = patches.at[77, :].set(jnp.asarray(strong))
+        t = jnp.float32(float(strong @ f0) - 1e-3)
+        _, gc = facedetect(patches, filters, t)
+        assert float(gc[0]) >= 1.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        pblocks=st.integers(1, 4),
+        f=st.sampled_from([8, 16]),
+        thresh=st.floats(-1.0, 4.0),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_shapes(self, pblocks, f, thresh, seed):
+        rng = np.random.default_rng(seed)
+        patches = jnp.asarray(rng.normal(size=(256 * pblocks, 64)).astype(np.float32))
+        filters = jnp.asarray(rng.normal(size=(64, f)).astype(np.float32))
+        t = jnp.float32(thresh)
+        gm, gc = facedetect(patches, filters, t)
+        wm, wc = ref.facedetect_ref(patches, filters, t)
+        np.testing.assert_allclose(gm, wm, rtol=1e-4, atol=1e-4)
+        # Responses within 1e-5 of the threshold can legitimately flip.
+        resp = np.asarray(patches) @ np.asarray(filters)
+        margin = np.min(np.abs(resp - float(t)))
+        if margin > 1e-4:
+            np.testing.assert_allclose(gc, wc, atol=0.01)

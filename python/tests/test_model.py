@@ -1,0 +1,117 @@
+"""L2 model tests: end-to-end app semantics over the Pallas kernels."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+
+class TestScanChunk:
+    def _sigs(self, seed=0):
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, 256, size=(model.SIG_LEN, model.N_SIGS)).astype(
+            np.float32
+        )
+
+    def test_clean_chunk_zero_hits(self):
+        rng = np.random.default_rng(1)
+        sigs = self._sigs()
+        # Byte values 256..511 cannot collide with byte signatures.
+        chunk = rng.integers(256, 512, size=model.CHUNK).astype(np.float32)
+        counts, total = model.scan_chunk(jnp.asarray(chunk), jnp.asarray(sigs))
+        assert float(total) == 0.0
+        np.testing.assert_array_equal(np.asarray(counts), np.zeros(model.N_SIGS))
+
+    def test_planted_signature_found_at_every_offset_class(self):
+        sigs = self._sigs()
+        for off in [0, 1, 1000, model.CHUNK - model.SIG_LEN]:
+            chunk = np.full(model.CHUNK, 300.0, np.float32)
+            chunk[off : off + model.SIG_LEN] = sigs[:, 17]
+            counts, total = model.scan_chunk(jnp.asarray(chunk), jnp.asarray(sigs))
+            assert float(counts[17]) == 1.0, f"offset {off}"
+            assert float(total) == 1.0, f"offset {off}"
+
+    def test_signature_straddling_end_not_counted(self):
+        # A signature whose tail falls off the chunk must not match: the
+        # window is padded with -1 which differs from any byte.
+        sigs = self._sigs()
+        chunk = np.full(model.CHUNK, 300.0, np.float32)
+        chunk[model.CHUNK - 8 :] = sigs[:8, 3]
+        _, total = model.scan_chunk(jnp.asarray(chunk), jnp.asarray(sigs))
+        assert float(total) == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(0, 12), seed=st.integers(0, 2**31))
+    def test_hypothesis_n_plants(self, n, seed):
+        rng = np.random.default_rng(seed)
+        sigs = self._sigs(seed)
+        chunk = np.full(model.CHUNK, 300.0, np.float32)
+        # Non-overlapping plant slots, SIG_LEN apart.
+        slots = rng.choice(model.CHUNK // model.SIG_LEN - 1, size=n, replace=False)
+        for s in slots:
+            si = int(rng.integers(model.N_SIGS))
+            chunk[s * model.SIG_LEN : (s + 1) * model.SIG_LEN] = sigs[:, si]
+        _, total = model.scan_chunk(jnp.asarray(chunk), jnp.asarray(sigs))
+        assert float(total) == float(n)
+
+
+class TestFaceDetect:
+    def test_blank_image_no_faces(self):
+        rng = np.random.default_rng(2)
+        filters = rng.normal(size=(64, model.N_FILTERS)).astype(np.float32)
+        filters -= filters.mean(axis=0, keepdims=True)
+        img = jnp.zeros((model.IMG, model.IMG), jnp.float32)
+        _, _, faces = model.face_detect(img, jnp.asarray(filters), jnp.float32(1.0))
+        assert float(faces) == 0.0
+
+    def test_planted_face_found(self):
+        rng = np.random.default_rng(3)
+        filters = rng.normal(size=(64, model.N_FILTERS)).astype(np.float32)
+        filters -= filters.mean(axis=0, keepdims=True)
+        img = np.zeros((model.IMG, model.IMG), np.float32)
+        face = filters[:, 4].reshape(model.PATCH, model.PATCH)
+        img[20 : 20 + model.PATCH, 30 : 30 + model.PATCH] = 5.0 * face
+        t = 0.5 * 5.0 * float(np.sum(face * face))
+        maxima, counts, faces = model.face_detect(
+            jnp.asarray(img), jnp.asarray(filters), jnp.float32(t)
+        )
+        assert float(faces) >= 1.0
+        assert float(counts[4]) >= 1.0
+
+    def test_output_shapes(self):
+        out = jax.eval_shape(
+            model.face_detect,
+            jax.ShapeDtypeStruct((model.IMG, model.IMG), jnp.float32),
+            jax.ShapeDtypeStruct((64, model.N_FILTERS), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        assert out[0].shape == (model.N_FILTERS,)
+        assert out[1].shape == (model.N_FILTERS,)
+        assert out[2].shape == ()
+
+
+class TestCategorize:
+    def test_best_category_is_argmax(self):
+        rng = np.random.default_rng(4)
+        users = rng.normal(size=(model.N_USERS, model.KDIM)).astype(np.float32)
+        cats = rng.normal(size=(model.KDIM, model.N_CATS)).astype(np.float32)
+        scores, best, best_score = model.categorize(
+            jnp.asarray(users), jnp.asarray(cats)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(best), np.argmax(np.asarray(scores), axis=1)
+        )
+        np.testing.assert_allclose(
+            np.asarray(best_score), np.max(np.asarray(scores), axis=1), rtol=1e-6
+        )
+
+    def test_user_matching_category_wins(self):
+        rng = np.random.default_rng(5)
+        cats = rng.normal(size=(model.KDIM, model.N_CATS)).astype(np.float32)
+        users = np.tile(cats[:, 37], (model.N_USERS, 1)).astype(np.float32)
+        _, best, best_score = model.categorize(jnp.asarray(users), jnp.asarray(cats))
+        assert list(np.asarray(best)) == [37] * model.N_USERS
+        np.testing.assert_allclose(np.asarray(best_score), 1.0, atol=1e-4)

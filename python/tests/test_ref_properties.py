@@ -1,0 +1,109 @@
+"""Property tests on the oracle semantics themselves (and, transitively,
+on the Pallas kernels, which earlier tests pin to the oracles).
+
+These encode the *mathematical* invariants the apps rely on:
+cosine scale-invariance, signature-match shift/permutation behavior,
+detector linearity — so a kernel change that preserves allclose-to-oracle
+but breaks an invariant the apps assume is still caught.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import cosine_scores, ref, sigmatch_counts
+
+
+class TestCosineInvariants:
+    @settings(max_examples=15, deadline=None)
+    @given(scale=st.floats(0.1, 50.0), seed=st.integers(0, 2**31))
+    def test_scale_invariance(self, scale, seed):
+        rng = np.random.default_rng(seed)
+        users = rng.normal(size=(4, 64)).astype(np.float32)
+        cats = rng.normal(size=(64, 128)).astype(np.float32)
+        a = np.asarray(cosine_scores(jnp.asarray(users), jnp.asarray(cats)))
+        b = np.asarray(
+            cosine_scores(jnp.asarray(scale * users), jnp.asarray(cats))
+        )
+        np.testing.assert_allclose(a, b, atol=2e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def test_column_permutation_permutes_scores(self, seed):
+        rng = np.random.default_rng(seed)
+        users = rng.normal(size=(4, 64)).astype(np.float32)
+        cats = rng.normal(size=(64, 128)).astype(np.float32)
+        perm = rng.permutation(128)
+        a = np.asarray(cosine_scores(jnp.asarray(users), jnp.asarray(cats)))
+        b = np.asarray(
+            cosine_scores(jnp.asarray(users), jnp.asarray(cats[:, perm]))
+        )
+        np.testing.assert_allclose(a[:, perm], b, atol=1e-4)
+
+
+class TestSigmatchInvariants:
+    @settings(max_examples=10, deadline=None)
+    @given(shift=st.integers(1, 400), seed=st.integers(0, 2**31))
+    def test_match_count_invariant_under_row_rotation(self, shift, seed):
+        # Rotating the window rows (reordering scan positions) must not
+        # change per-signature totals.
+        rng = np.random.default_rng(seed)
+        windows = rng.integers(0, 256, size=(512, 16)).astype(np.float32)
+        sigs = rng.integers(0, 256, size=(16, 32)).astype(np.float32)
+        windows[7] = sigs[:, 3]
+        a = np.asarray(sigmatch_counts(jnp.asarray(windows), jnp.asarray(sigs)))
+        b = np.asarray(
+            sigmatch_counts(jnp.asarray(np.roll(windows, shift, axis=0)), jnp.asarray(sigs))
+        )
+        np.testing.assert_array_equal(a, b)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31))
+    def test_counts_are_nonnegative_integers(self, seed):
+        rng = np.random.default_rng(seed)
+        windows = rng.integers(0, 256, size=(512, 16)).astype(np.float32)
+        sigs = rng.integers(0, 256, size=(16, 32)).astype(np.float32)
+        c = np.asarray(sigmatch_counts(jnp.asarray(windows), jnp.asarray(sigs)))
+        assert np.all(c >= 0)
+        np.testing.assert_array_equal(c, np.round(c))
+
+    def test_off_by_one_byte_never_matches(self):
+        rng = np.random.default_rng(0)
+        sigs = rng.integers(1, 255, size=(16, 32)).astype(np.float32)
+        windows = np.tile(sigs[:, 5], (512, 1)).astype(np.float32)
+        windows[:, 3] += 1.0  # one byte off
+        c = np.asarray(
+            ref.sigmatch_counts_ref(jnp.asarray(windows), jnp.asarray(sigs))
+        )
+        assert c[5] == 0.0
+
+
+class TestFacedetectInvariants:
+    @settings(max_examples=10, deadline=None)
+    @given(gain=st.floats(1.5, 10.0), seed=st.integers(0, 2**31))
+    def test_response_maxima_scale_linearly(self, gain, seed):
+        rng = np.random.default_rng(seed)
+        patches = rng.normal(size=(256, 64)).astype(np.float32)
+        filters = rng.normal(size=(64, 8)).astype(np.float32)
+        filters -= filters.mean(axis=0, keepdims=True)
+        t = jnp.float32(1e9)  # count nothing; compare maxima only
+        m1, _ = ref.facedetect_ref(jnp.asarray(patches), jnp.asarray(filters), t)
+        m2, _ = ref.facedetect_ref(
+            jnp.asarray(gain * patches), jnp.asarray(filters), t
+        )
+        np.testing.assert_allclose(np.asarray(m2), gain * np.asarray(m1), rtol=1e-3)
+
+    def test_counts_monotone_in_threshold(self):
+        rng = np.random.default_rng(1)
+        patches = rng.normal(size=(256, 64)).astype(np.float32)
+        filters = rng.normal(size=(64, 8)).astype(np.float32)
+        prev = None
+        for t in [-5.0, 0.0, 2.0, 5.0]:
+            _, counts = ref.facedetect_ref(
+                jnp.asarray(patches), jnp.asarray(filters), jnp.float32(t)
+            )
+            total = float(np.sum(np.asarray(counts)))
+            if prev is not None:
+                assert total <= prev
+            prev = total

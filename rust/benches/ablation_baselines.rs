@@ -1,0 +1,86 @@
+//! E8 — related-work baselines (paper §7): what CloneCloud's method
+//! granularity, native-everywhere operation, and one-shot thread
+//! migration buy over
+//!   (a) class-granularity MINCUT partitioning with per-call RPC
+//!       (the Java-partitioning line: Gu/Messer/Ou et al.), and
+//!   (b) thread migration restricted to pure virtualized computation
+//!       (the DJVM line: cJVM, Jessica2 — natives pinned).
+//!
+//! All three are priced on the same profile trees + cost model.
+//!
+//!     cargo bench --bench ablation_baselines
+
+use std::path::Path;
+
+use clonecloud::apps::{all_apps, Size};
+use clonecloud::baselines::{solve_class_partition, solve_no_native_everywhere};
+use clonecloud::config::NetworkProfile;
+use clonecloud::partitioner::{solve_partition, Cfg, CostModel};
+use clonecloud::pipeline::profile_pair;
+use clonecloud::runtime::default_backend;
+use clonecloud::util::bench::Table;
+use clonecloud::Config;
+
+fn main() {
+    let cfg = Config::default();
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+    let net = NetworkProfile::wifi();
+
+    let mut t = Table::new(
+        "Baselines on WiFi (modeled execution time, s)",
+        &[
+            "App",
+            "Input",
+            "All-local",
+            "CloneCloud",
+            "Class-MINCUT+RPC",
+            "No-native-everywhere",
+            "CC wins",
+        ],
+    );
+
+    for app in all_apps() {
+        for size in [Size::Medium, Size::Large] {
+            let program = app.program();
+            let (tm, tc, _) =
+                profile_pair(app.as_ref(), &program, size, &cfg, &backend).expect("profiling");
+            let cm = CostModel::build_scaled(
+                &[(&tm, &tc)],
+                &cfg.costs,
+                &net,
+                cfg.phone.cpu_factor,
+                cfg.clone.cpu_factor,
+            );
+            let cfg_graph = Cfg::build(&program);
+            let (cc, _) = solve_partition(&program, &cfg_graph, &cm).expect("cc solve");
+            let class = solve_class_partition(&program, &cfg_graph, &cm, &net)
+                .expect("class solve");
+            let (nn, _) = solve_no_native_everywhere(&program, &cm).expect("nn solve");
+            let wins = cc.expected_us <= class.expected_us + 1e-6
+                && cc.expected_us <= nn.expected_us + 1e-6;
+            t.row(vec![
+                app.name().into(),
+                app.input_label(size),
+                format!("{:.1}", cc.local_us / 1e6),
+                format!("{:.1} ({})", cc.expected_us / 1e6, cc.label()),
+                format!(
+                    "{:.1} (remote: {})",
+                    class.expected_us / 1e6,
+                    if class.remote_classes.is_empty() {
+                        "none".to_string()
+                    } else {
+                        class.remote_classes.join(",")
+                    }
+                ),
+                format!("{:.1} ({})", nn.expected_us / 1e6, nn.label()),
+                format!("{wins}"),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nshape to check: CloneCloud <= both baselines everywhere; the \
+         no-native-everywhere baseline collapses to Local wherever the \
+         hot loop touches fs/compute natives (paper §7's contrast)."
+    );
+}

@@ -1,0 +1,129 @@
+//! E4 — the Zygote transfer optimization (paper §4.3): "This typically
+//! saves about 40,000 object transmissions with every migration
+//! operation."
+//!
+//! Migrate each app's worker thread out of a full-Zygote phone process
+//! (40k template objects, with a realistic fraction dirtied and a
+//! static rooting the template graph) with the optimization ON and OFF,
+//! and report objects shipped, bytes, and capture wall time.
+//!
+//!     cargo bench --bench ablation_zygote
+
+use std::path::Path;
+use std::sync::Arc;
+
+use clonecloud::apps::{all_apps, build_process, Size};
+use clonecloud::appvm::interp::{run_thread, NoHooks, RunExit};
+use clonecloud::appvm::value::Value;
+use clonecloud::config::NetworkProfile;
+use clonecloud::device::Location;
+use clonecloud::migration::Migrator;
+use clonecloud::partitioner::rewrite_with_partition;
+use clonecloud::pipeline::{partition_from_trees, profile_pair};
+use clonecloud::runtime::default_backend;
+use clonecloud::util::bench::Table;
+use clonecloud::util::stats::fmt_bytes;
+use clonecloud::Config;
+
+fn main() {
+    let cfg = Config::default(); // 40,000 Zygote objects, as on Android
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+
+    let mut t = Table::new(
+        "Zygote-diff ablation: objects/bytes shipped per migration",
+        &[
+            "App",
+            "ZygoteDiff",
+            "Objects shipped",
+            "Zygote skipped",
+            "Bytes",
+            "Capture wall (ms)",
+            "3G transfer (s)",
+        ],
+    );
+
+    for app in all_apps() {
+        let size = Size::Medium;
+        let program = app.program();
+        let (tm, tc, _) =
+            profile_pair(app.as_ref(), &program, size, &cfg, &backend).expect("profiling");
+        let (partition, _, _) =
+            partition_from_trees(app.as_ref(), &(tm, tc), &cfg, &NetworkProfile::wifi())
+                .expect("solve");
+        if !partition.is_offload() {
+            eprintln!("[zygote] {} chose Local on wifi; skipping", app.name());
+            continue;
+        }
+        let (rewritten, _) = rewrite_with_partition(&program, &partition).expect("rewrite");
+        let rewritten = Arc::new(rewritten);
+
+        for diff in [true, false] {
+            let mut phone = build_process(
+                app.as_ref(), rewritten.clone(), size, &cfg,
+                Location::Mobile, backend.clone(), false,
+            )
+            .expect("phone");
+            // Root the WHOLE template graph from app state, as a real
+            // app roots framework objects (resource tables, interned
+            // strings): a registry array referencing every Zygote
+            // object. With diff ON these are named; OFF they all ship.
+            let zy_ids: Vec<Value> = phone
+                .heap
+                .iter()
+                .filter(|(_, o)| o.zygote_seq.is_some())
+                .map(|(id, _)| Value::Ref(id))
+                .collect();
+            let arr_class = phone.array_class;
+            let root_arr = phone.heap.alloc_ref_array(arr_class, zy_ids.len());
+            if let clonecloud::appvm::ObjBody::RefArray(v) =
+                &mut phone.heap.get_mut(root_arr).unwrap().body
+            {
+                v.copy_from_slice(&zy_ids);
+            }
+            // Park the root array in a static of the entry class if one
+            // exists; otherwise in the Scanner-like class slot 0 (all
+            // apps have statics).
+            'root: for (ci, st) in phone.statics.iter_mut().enumerate() {
+                if phone.program.classes[ci].system {
+                    continue;
+                }
+                for slot in st.iter_mut() {
+                    if matches!(slot, Value::Null) {
+                        *slot = Value::Ref(root_arr);
+                        break 'root;
+                    }
+                }
+            }
+
+            let entry = phone.program.entry().unwrap();
+            let tid = phone.spawn_thread(entry, &[]).unwrap();
+            loop {
+                match run_thread(&mut phone, tid, &mut NoHooks, u64::MAX).unwrap() {
+                    RunExit::MigrationPoint { .. } => break,
+                    RunExit::ReintegrationPoint { .. } => continue,
+                    other => panic!("{} never migrated: {other:?}", app.name()),
+                }
+            }
+            let mut m = Migrator::new(cfg.costs.clone());
+            m.opts.zygote_diff = diff;
+            let wall0 = std::time::Instant::now();
+            let (_packet, phases) = m.migrate_out(&mut phone, tid).unwrap();
+            let wall_ms = wall0.elapsed().as_secs_f64() * 1e3;
+            let threeg = NetworkProfile::threeg();
+            t.row(vec![
+                app.name().into(),
+                if diff { "on".into() } else { "off".into() },
+                format!("{}", phases.objects_shipped),
+                format!("{}", phases.zygote_skipped),
+                fmt_bytes(phases.bytes_out),
+                format!("{wall_ms:.1}"),
+                format!("{:.1}", threeg.transfer_ms(phases.bytes_out, true) / 1e3),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nshape to check: diff=on skips ~40,000 template objects per \
+         migration (paper §4.3) and cuts shipped bytes accordingly."
+    );
+}

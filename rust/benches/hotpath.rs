@@ -1,0 +1,206 @@
+//! L3 hot-path microbenchmarks (the §Perf working set): interpreter
+//! dispatch rate, capture/serialize/merge throughput, wire codec, and
+//! ILP solve latency. These are the knobs the perf pass iterates on;
+//! EXPERIMENTS.md §Perf records before/after from this bench's output.
+//!
+//!     cargo bench --bench hotpath
+
+use std::sync::Arc;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::interp::{run_thread, NoHooks, RunExit};
+use clonecloud::appvm::natives::NodeEnv;
+use clonecloud::appvm::process::Process;
+use clonecloud::appvm::value::Value;
+use clonecloud::appvm::zygote::build_template;
+use clonecloud::config::CostParams;
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::migration::{capture_thread, CaptureOptions, CapturePacket, Direction, Migrator};
+use clonecloud::partitioner::lp::{solve_ilp, Constraint, Sense};
+use clonecloud::util::bench::{bench, black_box};
+use clonecloud::vfs::SimFs;
+
+const LOOP: &str = r#"
+class L app
+  method main nargs=0 regs=8
+    const r0 0
+    const r1 1000000
+    const r2 1
+    constf r3 0.0
+  loop:
+    ifge r0 r1 @done
+    add r0 r0 r2
+    i2f r4 r0
+    fadd r3 r3 r4
+    goto @loop
+  done:
+    retv
+  end
+end
+"#;
+
+fn interp_rate() {
+    let program = Arc::new(assemble(LOOP).unwrap());
+    let main = program.entry().unwrap();
+    let r = bench("interp: 5M-instr arithmetic loop", 1, 5, || {
+        let mut p = Process::new(
+            program.clone(),
+            DeviceSpec::clone_desktop(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        );
+        let tid = p.spawn_thread(main, &[]).unwrap();
+        match run_thread(&mut p, tid, &mut NoHooks, u64::MAX).unwrap() {
+            RunExit::Completed(_) => black_box(p.metrics.instrs),
+            other => panic!("{other:?}"),
+        };
+    });
+    // ~1M iterations x 5 instrs per iteration.
+    let mips = 5.0e6 / (r.summary.p50 / 1e3) / 1e6;
+    println!("  -> {mips:.1} M instrs/s");
+}
+
+fn capture_throughput() {
+    let program = Arc::new(assemble(LOOP).unwrap());
+    let main = program.entry().unwrap();
+    for (label, zygote, ballast) in [
+        ("capture: 40k-obj zygote heap (diff on)", 40_000usize, 0usize),
+        ("capture: 1MB app state + 40k zygote", 40_000, 1 << 20),
+    ] {
+        let template = build_template(&program, zygote, 1);
+        let mut p = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        );
+        let tid = p.spawn_thread(main, &[]).unwrap();
+        // Root the whole template graph from a register (a framework
+        // registry array, as real apps have): the capture traversal must
+        // walk all `zygote` objects — and, with diff on, name instead of
+        // ship them.
+        let zy_ids: Vec<Value> = p.heap.iter().map(|(id, _)| Value::Ref(id)).collect();
+        let registry = p.heap.alloc_ref_array(p.array_class, zy_ids.len());
+        if let clonecloud::appvm::ObjBody::RefArray(v) =
+            &mut p.heap.get_mut(registry).unwrap().body
+        {
+            v.copy_from_slice(&zy_ids);
+        }
+        // The registry array itself is dirty app state; the template
+        // objects it references stay clean.
+        for val in &zy_ids {
+            if let Some(id) = val.as_ref() {
+                if let Some(obj) = p.heap.peek_mut(id) {
+                    obj.dirty = false;
+                }
+            }
+        }
+        p.thread_mut(tid).unwrap().current_frame_mut().unwrap().regs[6] =
+            Value::Ref(registry);
+        if ballast > 0 {
+            let arr = p.heap.alloc_byte_array(p.array_class, vec![7u8; ballast]);
+            p.thread_mut(tid).unwrap().current_frame_mut().unwrap().regs[7] =
+                Value::Ref(arr);
+        }
+        let mut bytes = 0u64;
+        let r = bench(label, 2, 10, || {
+            let (packet, stats) =
+                capture_thread(&p, 0, Direction::Forward, None, CaptureOptions::default())
+                    .unwrap();
+            bytes = stats.bytes as u64;
+            black_box(packet.objects.len());
+        });
+        let mbps = bytes as f64 / 1e6 / (r.summary.p50 / 1e3);
+        println!("  -> {bytes} bytes captured, {mbps:.0} MB/s");
+    }
+}
+
+fn codec_throughput() {
+    let program = Arc::new(assemble(LOOP).unwrap());
+    let main = program.entry().unwrap();
+    let template = build_template(&program, 5_000, 1);
+    let mut p = Process::fork_from_zygote(
+        program.clone(),
+        &template,
+        DeviceSpec::phone_g1(),
+        Location::Mobile,
+        NodeEnv::with_rust_compute(SimFs::new()),
+    );
+    let arr = p.heap.alloc_byte_array(p.array_class, vec![9u8; 1 << 20]);
+    let tid = p.spawn_thread(main, &[]).unwrap();
+    p.thread_mut(tid).unwrap().current_frame_mut().unwrap().regs[7] = Value::Ref(arr);
+    // Root the template graph so the packet carries a realistic object
+    // population (diff is off below: everything ships).
+    let zy_ids: Vec<Value> = p.heap.iter().map(|(id, _)| Value::Ref(id)).collect();
+    let registry = p.heap.alloc_ref_array(p.array_class, zy_ids.len());
+    if let clonecloud::appvm::ObjBody::RefArray(v) =
+        &mut p.heap.get_mut(registry).unwrap().body
+    {
+        v.copy_from_slice(&zy_ids);
+    }
+    p.thread_mut(tid).unwrap().current_frame_mut().unwrap().regs[6] = Value::Ref(registry);
+    let mut m = Migrator::new(CostParams::default());
+    m.opts.zygote_diff = false; // big packet
+    let (packet, _) = m.migrate_out(&mut p, tid).unwrap();
+    let encoded = packet.encode();
+    println!("  packet: {} objects, {} bytes", packet.objects.len(), encoded.len());
+    let r = bench("wire: encode capture packet", 2, 20, || {
+        black_box(packet.encode().len());
+    });
+    let mbps = encoded.len() as f64 / 1e6 / (r.summary.p50 / 1e3);
+    println!("  -> encode {mbps:.0} MB/s");
+    let r = bench("wire: decode capture packet", 2, 20, || {
+        black_box(CapturePacket::decode(&encoded).unwrap().objects.len());
+    });
+    let mbps = encoded.len() as f64 / 1e6 / (r.summary.p50 / 1e3);
+    println!("  -> decode {mbps:.0} MB/s");
+}
+
+fn ilp_latency() {
+    // A partitioner-shaped ILP: 16 methods, XOR chains + TC rows.
+    let n = 16usize;
+    let l = |i: usize| i;
+    let r = |i: usize| n + i;
+    let mut cons = vec![Constraint {
+        coeffs: vec![(l(0), 1.0)],
+        sense: Sense::Eq,
+        rhs: 0.0,
+    }];
+    for i in 1..n {
+        let parent = (i - 1) / 2;
+        let (l1, l2, r2) = (l(parent), l(i), r(i));
+        cons.push(Constraint { coeffs: vec![(l2, 1.0), (l1, -1.0), (r2, 1.0)], sense: Sense::Ge, rhs: 0.0 });
+        cons.push(Constraint { coeffs: vec![(l2, 1.0), (l1, -1.0), (r2, -1.0)], sense: Sense::Le, rhs: 0.0 });
+        cons.push(Constraint { coeffs: vec![(l2, 1.0), (r2, -1.0), (l1, 1.0)], sense: Sense::Ge, rhs: 0.0 });
+        cons.push(Constraint { coeffs: vec![(l2, 1.0), (r2, 1.0), (l1, 1.0)], sense: Sense::Le, rhs: 2.0 });
+        // TC with ancestors.
+        let mut a = parent;
+        loop {
+            cons.push(Constraint {
+                coeffs: vec![(r(a), 1.0), (r(i), 1.0)],
+                sense: Sense::Le,
+                rhs: 1.0,
+            });
+            if a == 0 {
+                break;
+            }
+            a = (a - 1) / 2;
+        }
+    }
+    let mut c = vec![0.0; 2 * n];
+    for i in 0..n {
+        c[l(i)] = if i % 3 == 0 { 50.0 } else { -80.0 };
+        c[r(i)] = 20.0;
+    }
+    bench("ilp: 32-var partitioner-shaped solve", 2, 20, || {
+        black_box(solve_ilp(2 * n, &c, &cons));
+    });
+}
+
+fn main() {
+    interp_rate();
+    capture_throughput();
+    codec_throughput();
+    ilp_latency();
+}

@@ -1,0 +1,85 @@
+//! E1 — regenerate the paper's Table 1.
+//!
+//! For each of the three applications at each of the three input sizes:
+//! phone-monolithic execution, clone-monolithic execution, and the
+//! CloneCloud execution under 3G and WiFi (full pipeline: profile both
+//! platforms, solve the ILP, rewrite the binary, run distributed).
+//!
+//! Expected shape (paper §6): clone 18-26x faster; 3G keeps ~5/9
+//! workloads local vs ~2/9 on WiFi; speedups grow with workload size;
+//! largest-workload WiFi speedups ≈ 14x / 21x / 12x.
+//!
+//!     cargo bench --bench table1
+
+use std::path::Path;
+
+use clonecloud::apps::{all_apps, Size};
+use clonecloud::pipeline::table1_row;
+use clonecloud::runtime::default_backend;
+use clonecloud::util::bench::Table;
+use clonecloud::Config;
+
+fn main() {
+    let cfg = Config::default();
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+
+    let mut table = Table::new(
+        "Table 1: execution times of virus scanning, image search, and behavior profiling",
+        &[
+            "Application",
+            "Input",
+            "Phone(s)",
+            "Clone(s)",
+            "MaxSpd",
+            "CC-3G(s)",
+            "Part-3G",
+            "Spd-3G",
+            "CC-WiFi(s)",
+            "Part-WiFi",
+            "Spd-WiFi",
+        ],
+    );
+
+    let mut local_3g = 0;
+    let mut local_wifi = 0;
+    let mut rows = 0;
+    for app in all_apps() {
+        for size in Size::all() {
+            let t0 = std::time::Instant::now();
+            let row = table1_row(app.as_ref(), size, &cfg, &backend)
+                .unwrap_or_else(|e| panic!("{} {:?}: {e}", app.name(), size));
+            eprintln!(
+                "[table1] {} {} done in {:.1}s wall ({})",
+                app.name(),
+                row.input,
+                t0.elapsed().as_secs_f64(),
+                row.result
+            );
+            rows += 1;
+            if row.threeg.label == "Local" {
+                local_3g += 1;
+            }
+            if row.wifi.label == "Local" {
+                local_wifi += 1;
+            }
+            table.row(vec![
+                row.app.to_string(),
+                row.input.clone(),
+                format!("{:.2}", row.phone_ms / 1e3),
+                format!("{:.2}", row.clone_ms / 1e3),
+                format!("{:.2}", row.max_speedup),
+                format!("{:.2}", row.threeg.exec_ms / 1e3),
+                row.threeg.label.to_string(),
+                format!("{:.2}", row.threeg.speedup),
+                format!("{:.2}", row.wifi.exec_ms / 1e3),
+                row.wifi.label.to_string(),
+                format!("{:.2}", row.wifi.speedup),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nshape: {local_3g}/{rows} workloads Local on 3G (paper: 5/9), \
+         {local_wifi}/{rows} Local on WiFi (paper: 2/9)"
+    );
+}

@@ -1,0 +1,202 @@
+//! Behavior profiling / privacy-preserving targeted advertising
+//! (paper §6, after Adnostic): tracks user interests on-device and maps
+//! interest keyword vectors onto the DMOZ category hierarchy, computing
+//! cosine similarity between user keywords and category keywords at
+//! nesting depths 3-5.
+//!
+//! Classes: `AdsUI` (main + pinned UI), `Tracker` (the visit loop; holds
+//! the category panel, user vectors, and browsing-history ballast),
+//! `Similarity` (the everywhere compute native over the L1 Pallas
+//! cosine kernel).
+
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+
+use crate::appvm::assembler::assemble;
+use crate::appvm::natives::shapes;
+use crate::appvm::process::Process;
+use crate::appvm::value::Value;
+use crate::appvm::Program;
+use crate::error::{CloneCloudError, Result};
+use crate::util::rng::Rng;
+use crate::vfs::SimFs;
+
+use super::dmoz::{visits_for_depth, CategoryTree};
+use super::workload::{behavior_depth, Size};
+use super::{read_static_float, App};
+
+const SRC: &str = r#"
+class AdsUI app
+  method main nargs=0 regs=4
+    invokev AdsUI.uiinit
+    invoke r0 Tracker.profile
+    puts Tracker.best r0
+    invokev AdsUI.show r0
+    retv
+  end
+  method uiinit nargs=0 regs=0 native=ui.init
+  method show nargs=1 regs=1 native=ui.show
+end
+class Tracker app
+  static cats
+  static users
+  static hist
+  static visits
+  static best
+  method profile nargs=0 regs=10
+    gets r0 Tracker.visits
+    gets r1 Tracker.users
+    gets r2 Tracker.cats
+    const r3 0
+    constf r4 0.0
+  vloop:
+    ifge r3 r0 @done
+    invoke r5 Similarity.categorize r1 r2
+    # result: [best_idx_of_user0, best_score per user...]
+    const r6 1
+    aget r7 r5 r6
+    fadd r4 r4 r7
+    const r6 1
+    add r3 r3 r6
+    goto @vloop
+  done:
+    ret r4
+  end
+end
+class Similarity app
+  method categorize nargs=2 regs=2 native=compute.categorize
+end
+"#;
+
+static PROGRAM: Lazy<Arc<Program>> = Lazy::new(|| {
+    let p = assemble(SRC).expect("behavior profiling assembles");
+    crate::appvm::verifier::verify_program(&p).expect("behavior profiling verifies");
+    Arc::new(p)
+});
+
+/// The behavior-profiling app.
+pub struct BehaviorProfile;
+
+impl App for BehaviorProfile {
+    fn name(&self) -> &'static str {
+        "behavior"
+    }
+
+    fn input_label(&self, size: Size) -> String {
+        format!("depth {}", behavior_depth(size))
+    }
+
+    fn program(&self) -> Arc<Program> {
+        PROGRAM.clone()
+    }
+
+    fn make_fs(&self, _size: Size, _rng: &mut Rng) -> SimFs {
+        // Browsing history lives in app state, not the fs.
+        SimFs::new()
+    }
+
+    fn install(&self, p: &mut Process, size: Size, rng: &mut Rng) -> Result<()> {
+        let depth = behavior_depth(size);
+        let tree = CategoryTree::generate(depth, rng);
+        let panel = tree.panel();
+        // User interest vectors: biased toward a random category so the
+        // best-score is meaningful.
+        let target = rng.index(tree.nodes.len());
+        let mut users = vec![0f32; shapes::N_USERS * shapes::KDIM];
+        for u in 0..shapes::N_USERS {
+            for k in 0..shapes::KDIM {
+                users[u * shapes::KDIM + k] =
+                    0.7 * tree.nodes[target].keywords[k] + 0.3 * rng.range_f32(-1.0, 1.0);
+            }
+        }
+        let cid = p
+            .program
+            .class_id("Tracker")
+            .ok_or_else(|| CloneCloudError::program("no Tracker class"))?;
+        let class = p.program.class(cid);
+        let cats_slot = class.static_id("cats").unwrap() as usize;
+        let users_slot = class.static_id("users").unwrap() as usize;
+        let hist_slot = class.static_id("hist").unwrap() as usize;
+        let visits_slot = class.static_id("visits").unwrap() as usize;
+        let arr_class = p.array_class;
+        let cats_obj = p.heap.alloc_float_array(arr_class, panel);
+        let users_obj = p.heap.alloc_float_array(arr_class, users);
+        let mut hist = vec![0u8; 150 * 1024];
+        rng.fill_bytes(&mut hist);
+        let hist_obj = p.heap.alloc_byte_array(arr_class, hist);
+        p.statics[cid.0 as usize][cats_slot] = Value::Ref(cats_obj);
+        p.statics[cid.0 as usize][users_slot] = Value::Ref(users_obj);
+        p.statics[cid.0 as usize][hist_slot] = Value::Ref(hist_obj);
+        p.statics[cid.0 as usize][visits_slot] =
+            Value::Int(visits_for_depth(depth) as i64);
+        Ok(())
+    }
+
+    fn check(&self, p: &Process, size: Size) -> Result<String> {
+        let best = read_static_float(p, "Tracker", "best")
+            .ok_or_else(|| CloneCloudError::vm("no best score"))?;
+        let visits = visits_for_depth(behavior_depth(size)) as f64;
+        // Every visit scores the biased user against the panel: the sum
+        // of best scores must be ~0.7-1.0 per visit.
+        let per_visit = best / visits;
+        if !(0.3..=1.01).contains(&per_visit) {
+            return Err(CloneCloudError::vm(format!(
+                "per-visit best score {per_visit:.3} implausible"
+            )));
+        }
+        Ok(format!("best-category score sum {best:.1} over {visits} visits"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::natives::RustCompute;
+    use crate::apps::build_process;
+    use crate::config::Config;
+    use crate::device::Location;
+    use crate::exec::run_monolithic;
+
+    fn cfg() -> Config {
+        Config {
+            zygote_objects: 100,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn depth3_monolithic_scores_plausibly() {
+        let app = BehaviorProfile;
+        let mut p = build_process(
+            &app, app.program(), Size::Small, &cfg(),
+            Location::Mobile, Arc::new(RustCompute), false,
+        )
+        .unwrap();
+        let out = run_monolithic(&mut p).unwrap();
+        app.check(&p, Size::Small).unwrap();
+        // Paper: depth 3 on the phone = 3.6 s.
+        let secs = out.virtual_ms / 1e3;
+        assert!(secs > 1.5 && secs < 8.0, "depth-3 phone run = {secs:.2}s");
+    }
+
+    #[test]
+    fn depth_scaling_matches_paper_ratios() {
+        let app = BehaviorProfile;
+        let mut times = Vec::new();
+        for size in [Size::Small, Size::Medium] {
+            let mut p = build_process(
+                &app, app.program(), size, &cfg(),
+                Location::Mobile, Arc::new(RustCompute), false,
+            )
+            .unwrap();
+            let out = run_monolithic(&mut p).unwrap();
+            times.push(out.virtual_ms);
+        }
+        let ratio = times[1] / times[0];
+        assert!(
+            (ratio - 13.0).abs() < 1.0,
+            "depth4/depth3 = {ratio:.1} (paper: 13x)"
+        );
+    }
+}

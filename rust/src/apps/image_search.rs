@@ -1,0 +1,234 @@
+//! Image search (paper §6): find all faces in the phone's photo
+//! directory using a natively-implemented detection library — the
+//! paper's canonical "native everywhere" API (Android's face detector
+//! exists on the clone too, so the search loop may migrate).
+//!
+//! Classes: `GalleryUI` (main + pinned UI), `Finder` (the search loop +
+//! fs group), `Detector` (the everywhere compute native). State ballast:
+//! the thumbnail cache (~600 KB).
+
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+
+use crate::appvm::assembler::assemble;
+use crate::appvm::natives::shapes;
+use crate::appvm::process::Process;
+use crate::appvm::value::Value;
+use crate::appvm::Program;
+use crate::error::{CloneCloudError, Result};
+use crate::util::rng::Rng;
+use crate::vfs::SimFs;
+
+use super::workload::{image_count, Size};
+use super::{read_static_int, App};
+
+/// Detection threshold (see `make_filters`: planted faces respond ~8,
+/// noise responds within ~4 sigma of 0 at sigma ~1.1).
+pub const THRESHOLD: f64 = 4.0;
+
+/// Images containing a planted face per workload.
+pub fn planted_faces(size: Size) -> usize {
+    match size {
+        Size::Small => 1,
+        Size::Medium => 3,
+        Size::Large => 10,
+    }
+}
+
+const SRC: &str = r#"
+class GalleryUI app
+  method main nargs=0 regs=4
+    invokev GalleryUI.uiinit
+    invoke r0 Finder.find_all
+    puts Finder.faces r0
+    invokev GalleryUI.show r0
+    retv
+  end
+  method uiinit nargs=0 regs=0 native=ui.init
+  method show nargs=1 regs=1 native=ui.show
+end
+class Finder app
+  static filters
+  static thresh
+  static cache
+  static faces
+  method find_all nargs=0 regs=10
+    invoke r0 Finder.count
+    const r1 0
+    const r2 0
+  iloop:
+    ifge r1 r0 @done
+    invoke r3 Finder.search_one r1
+    add r2 r2 r3
+    const r4 1
+    add r1 r1 r4
+    goto @iloop
+  done:
+    ret r2
+  end
+  method search_one nargs=1 regs=8
+    const r1 0
+    const r2 4096
+    invoke r3 Finder.read r0 r1 r2
+    gets r4 Finder.filters
+    gets r5 Finder.thresh
+    invoke r6 Detector.detect r3 r4 r5
+    ret r6
+  end
+  method count nargs=0 regs=0 native=fs.count natstate
+  method read nargs=3 regs=3 native=fs.read natstate
+end
+class Detector app
+  method detect nargs=3 regs=3 native=compute.face_detect
+end
+"#;
+
+static PROGRAM: Lazy<Arc<Program>> = Lazy::new(|| {
+    let p = assemble(SRC).expect("image search assembles");
+    crate::appvm::verifier::verify_program(&p).expect("image search verifies");
+    Arc::new(p)
+});
+
+/// Zero-mean filter bank, shared between fs generation (planting) and
+/// install.
+fn make_filters(rng: &mut Rng) -> Vec<f32> {
+    let mut filters = vec![0f32; shapes::PATCH * shapes::PATCH * shapes::N_FILTERS];
+    for f in 0..shapes::N_FILTERS {
+        let mut col = vec![0f32; 64];
+        let mut mean = 0.0;
+        for c in col.iter_mut() {
+            *c = rng.range_f32(-1.0, 1.0);
+            mean += *c;
+        }
+        mean /= 64.0;
+        for (k, c) in col.iter().enumerate() {
+            filters[k * shapes::N_FILTERS + f] = c - mean;
+        }
+    }
+    filters
+}
+
+/// A face pattern: filter 2's weights mapped into bytes so the detector
+/// responds strongly (response ~ 0.39 |w|^2 ~ 8 >> threshold 4).
+fn face_pattern(filters: &[f32]) -> Vec<u8> {
+    (0..64)
+        .map(|k| {
+            let w = filters[k * shapes::N_FILTERS + 2];
+            (128.0 + 100.0 * w).clamp(0.0, 255.0) as u8
+        })
+        .collect()
+}
+
+/// The image-search app.
+pub struct ImageSearch;
+
+impl App for ImageSearch {
+    fn name(&self) -> &'static str {
+        "image"
+    }
+
+    fn input_label(&self, size: Size) -> String {
+        match size {
+            Size::Small => "1 image".into(),
+            Size::Medium => "10 images".into(),
+            Size::Large => "100 images".into(),
+        }
+    }
+
+    fn program(&self) -> Arc<Program> {
+        PROGRAM.clone()
+    }
+
+    fn make_fs(&self, size: Size, rng: &mut Rng) -> SimFs {
+        let filters = make_filters(rng);
+        let pattern = face_pattern(&filters);
+        SimFs::generate_gallery(
+            rng,
+            image_count(size),
+            shapes::IMG,
+            &pattern,
+            planted_faces(size).min(image_count(size)),
+        )
+    }
+
+    fn install(&self, p: &mut Process, _size: Size, rng: &mut Rng) -> Result<()> {
+        let filters = make_filters(rng);
+        let cid = p
+            .program
+            .class_id("Finder")
+            .ok_or_else(|| CloneCloudError::program("no Finder class"))?;
+        let class = p.program.class(cid);
+        let f_slot = class.static_id("filters").unwrap() as usize;
+        let t_slot = class.static_id("thresh").unwrap() as usize;
+        let c_slot = class.static_id("cache").unwrap() as usize;
+        let arr_class = p.array_class;
+        let f_obj = p.heap.alloc_float_array(arr_class, filters);
+        let mut cache = vec![0u8; 600 * 1024];
+        rng.fill_bytes(&mut cache);
+        let c_obj = p.heap.alloc_byte_array(arr_class, cache);
+        p.statics[cid.0 as usize][f_slot] = Value::Ref(f_obj);
+        p.statics[cid.0 as usize][t_slot] = Value::Float(THRESHOLD);
+        p.statics[cid.0 as usize][c_slot] = Value::Ref(c_obj);
+        Ok(())
+    }
+
+    fn check(&self, p: &Process, size: Size) -> Result<String> {
+        let faces = read_static_int(p, "Finder", "faces")
+            .ok_or_else(|| CloneCloudError::vm("no face count"))?;
+        let planted = planted_faces(size).min(image_count(size)) as i64;
+        if faces < planted {
+            return Err(CloneCloudError::vm(format!(
+                "found {faces} faces, planted {planted}"
+            )));
+        }
+        Ok(format!("{faces} faces found"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::natives::RustCompute;
+    use crate::apps::build_process;
+    use crate::config::Config;
+    use crate::device::Location;
+    use crate::exec::run_monolithic;
+
+    fn cfg() -> Config {
+        Config {
+            zygote_objects: 100,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn finds_planted_faces_monolithically() {
+        let app = ImageSearch;
+        let mut p = build_process(
+            &app, app.program(), Size::Medium, &cfg(),
+            Location::Mobile, Arc::new(RustCompute), false,
+        )
+        .unwrap();
+        run_monolithic(&mut p).unwrap();
+        let msg = app.check(&p, Size::Medium).unwrap();
+        assert!(msg.contains("faces found"), "{msg}");
+        let n = read_static_int(&p, "Finder", "faces").unwrap();
+        assert!(n >= 3, "at least the planted faces: {n}");
+        assert!(n <= 40, "noise must not explode detections: {n}");
+    }
+
+    #[test]
+    fn one_image_run_lands_at_paper_scale() {
+        // Paper: 1 image on the phone = 22.2 s.
+        let app = ImageSearch;
+        let mut p = build_process(
+            &app, app.program(), Size::Small, &cfg(),
+            Location::Mobile, Arc::new(RustCompute), false,
+        )
+        .unwrap();
+        let out = run_monolithic(&mut p).unwrap();
+        let secs = out.virtual_ms / 1e3;
+        assert!(secs > 10.0 && secs < 40.0, "1-image phone run = {secs:.1}s");
+    }
+}

@@ -1,0 +1,115 @@
+//! The paper's three evaluation applications (§6), written in DroidVM
+//! assembly with the same structure the paper describes, each split into
+//! UI / driver / compute classes so method- and class-granularity
+//! partitioners both have meaningful choices.
+//!
+//! Each app implements [`App`]: it supplies the program, generates its
+//! workload (file system + installed static state) at one of three paper
+//! input sizes, and can check the result of a run.
+
+pub mod behavior_profile;
+pub mod dmoz;
+pub mod image_search;
+pub mod virus_scan;
+pub mod workload;
+
+use std::sync::Arc;
+
+use crate::appvm::natives::{ComputeBackend, NodeEnv};
+use crate::appvm::process::Process;
+use crate::appvm::value::Value;
+use crate::appvm::zygote::build_template;
+use crate::appvm::Program;
+use crate::config::Config;
+use crate::device::Location;
+use crate::error::Result;
+use crate::util::rng::Rng;
+use crate::vfs::SimFs;
+
+pub use behavior_profile::BehaviorProfile;
+pub use image_search::ImageSearch;
+pub use virus_scan::VirusScan;
+pub use workload::Size;
+
+/// A CloneCloud evaluation application.
+pub trait App {
+    /// Short name ("virus", "image", "behavior").
+    fn name(&self) -> &'static str;
+    /// Table 1's input-size label for a given size.
+    fn input_label(&self, size: Size) -> String;
+    /// The assembled (unmodified) program.
+    fn program(&self) -> Arc<Program>;
+    /// Generate the phone file system for a workload size.
+    fn make_fs(&self, size: Size, rng: &mut Rng) -> SimFs;
+    /// Install app state (static fields: signature panels, filter banks,
+    /// category panels, caches). Must be deterministic in `rng`.
+    fn install(&self, p: &mut Process, size: Size, rng: &mut Rng) -> Result<()>;
+    /// Check a finished process's result; returns a human-readable
+    /// result string, or an error if the run is wrong.
+    fn check(&self, p: &Process, size: Size) -> Result<String>;
+}
+
+/// Build a ready-to-run process for an app on a device.
+#[allow(clippy::too_many_arguments)]
+pub fn build_process(
+    app: &dyn App,
+    program: Arc<Program>,
+    size: Size,
+    cfg: &Config,
+    location: Location,
+    backend: Arc<dyn ComputeBackend>,
+    allow_pinned: bool,
+) -> Result<Process> {
+    let mut rng = Rng::new(cfg.seed);
+    let fs = app.make_fs(size, &mut rng);
+    let device = match location {
+        Location::Mobile => cfg.phone.clone(),
+        Location::Clone => cfg.clone.clone(),
+    };
+    let template = build_template(&program, cfg.zygote_objects, cfg.seed ^ 0x2760);
+    let mut p = Process::fork_from_zygote(
+        program,
+        &template,
+        device,
+        location,
+        NodeEnv::new(fs, backend),
+    );
+    p.cost_params = Some(cfg.costs.clone());
+    p.allow_pinned = allow_pinned;
+    // Same stream as make_fs: generators and installers derive shared
+    // data (signature libraries, filter banks) from a common prefix.
+    let mut rng2 = Rng::new(cfg.seed);
+    app.install(&mut p, size, &mut rng2)?;
+    Ok(p)
+}
+
+/// Read an integer static by qualified name (result extraction).
+pub fn read_static_int(p: &Process, class: &str, name: &str) -> Option<i64> {
+    let cid = p.program.class_id(class)?;
+    let idx = p.program.class(cid).static_id(name)?;
+    match p.statics[cid.0 as usize][idx as usize] {
+        Value::Int(x) => Some(x),
+        Value::Float(x) => Some(x as i64),
+        _ => None,
+    }
+}
+
+/// Read a float static by qualified name.
+pub fn read_static_float(p: &Process, class: &str, name: &str) -> Option<f64> {
+    let cid = p.program.class_id(class)?;
+    let idx = p.program.class(cid).static_id(name)?;
+    match p.statics[cid.0 as usize][idx as usize] {
+        Value::Float(x) => Some(x),
+        Value::Int(x) => Some(x as f64),
+        _ => None,
+    }
+}
+
+/// The three apps, boxed, for table-driven benches.
+pub fn all_apps() -> Vec<Box<dyn App>> {
+    vec![
+        Box::new(VirusScan),
+        Box::new(ImageSearch),
+        Box::new(BehaviorProfile),
+    ]
+}

@@ -1,0 +1,264 @@
+//! Virus scanner (paper §6): scans the phone file system against a
+//! signature library, one file at a time, in 4 KiB chunks with
+//! SIG_LEN-1-byte overlap so boundary-straddling signatures are found
+//! exactly once.
+//!
+//! Classes: `VirusUI` (main + pinned UI natives), `Scanner` (the scan
+//! driver + native-state fs methods — the V_Nat_C group), `Matcher`
+//! (the everywhere compute native). The partitioner's interesting choice
+//! is `Scanner.scan_all`: offloading it drags the fs group along
+//! (legal — the fs is synchronized) while `VirusUI` stays pinned.
+//!
+//! Calibration (DESIGN.md §3): one `compute.scan_chunk` call models
+//! scanning a 4 KiB chunk against the paper's 1000-signature library
+//! (our artifact holds one 128-signature panel; the virtual cost is
+//! calibrated to the full library so Table 1's phone column lands at the
+//! paper's scale). State ballast: the scanner's quarantine/report cache
+//! (~800 KB) — the app state a migration must carry.
+
+use std::sync::Arc;
+
+use once_cell::sync::Lazy;
+
+use crate::appvm::assembler::assemble;
+use crate::appvm::natives::shapes;
+use crate::appvm::process::Process;
+use crate::appvm::value::Value;
+use crate::appvm::Program;
+use crate::error::{CloneCloudError, Result};
+use crate::util::rng::Rng;
+use crate::vfs::SimFs;
+
+use super::workload::{virus_fs_bytes, Size};
+use super::{read_static_int, App};
+
+/// Chunk stride: 4096 - (SIG_LEN - 1) so a signature crossing a chunk
+/// boundary is seen whole in exactly one chunk.
+pub const STRIDE: usize = shapes::CHUNK - (shapes::SIG_LEN - 1);
+
+/// Signatures planted into the corpus per workload.
+pub const PLANTS: usize = 3;
+
+const SRC: &str = r#"
+class VirusUI app
+  method main nargs=0 regs=4
+    invokev VirusUI.uiinit
+    invoke r0 Scanner.scan_all
+    puts Scanner.total r0
+    invokev VirusUI.show r0
+    retv
+  end
+  method uiinit nargs=0 regs=0 native=ui.init
+  method show nargs=1 regs=1 native=ui.show
+end
+class Scanner app
+  static sigs
+  static cache
+  static total
+  method scan_all nargs=0 regs=10
+    invoke r0 Scanner.count
+    const r1 0
+    const r2 0
+  floop:
+    ifge r1 r0 @done
+    invoke r3 Scanner.scan_file r1
+    add r2 r2 r3
+    const r4 1
+    add r1 r1 r4
+    goto @floop
+  done:
+    ret r2
+  end
+  method scan_file nargs=1 regs=12
+    invoke r1 Scanner.fsize r0
+    const r2 0
+    const r3 0
+    gets r4 Scanner.sigs
+  chunks:
+    ifge r2 r1 @fdone
+    const r5 4096
+    invoke r6 Scanner.read r0 r2 r5
+    invoke r7 Matcher.match r6 r4
+    add r3 r3 r7
+    const r5 4081
+    add r2 r2 r5
+    goto @chunks
+  fdone:
+    ret r3
+  end
+  method count nargs=0 regs=0 native=fs.count natstate
+  method fsize nargs=1 regs=1 native=fs.size natstate
+  method read nargs=3 regs=3 native=fs.read natstate
+end
+class Matcher app
+  method match nargs=2 regs=2 native=compute.scan_chunk
+end
+"#;
+
+static PROGRAM: Lazy<Arc<Program>> = Lazy::new(|| {
+    let p = assemble(SRC).expect("virus scanner assembles");
+    crate::appvm::verifier::verify_program(&p).expect("virus scanner verifies");
+    Arc::new(p)
+});
+
+/// Deterministic signature library (shared by fs generation + install).
+fn make_sigs(rng: &mut Rng) -> Vec<u8> {
+    let mut sigs = vec![0u8; shapes::SIG_LEN * shapes::N_SIGS];
+    rng.fill_bytes(&mut sigs);
+    sigs
+}
+
+/// Column `s` of the signature matrix as raw bytes.
+fn sig_column(sigs: &[u8], s: usize) -> Vec<u8> {
+    (0..shapes::SIG_LEN)
+        .map(|k| sigs[k * shapes::N_SIGS + s])
+        .collect()
+}
+
+/// The virus-scanner app.
+pub struct VirusScan;
+
+impl App for VirusScan {
+    fn name(&self) -> &'static str {
+        "virus"
+    }
+
+    fn input_label(&self, size: Size) -> String {
+        match size {
+            Size::Small => "100KB".into(),
+            Size::Medium => "1MB".into(),
+            Size::Large => "10MB".into(),
+        }
+    }
+
+    fn program(&self) -> Arc<Program> {
+        PROGRAM.clone()
+    }
+
+    fn make_fs(&self, size: Size, rng: &mut Rng) -> SimFs {
+        // Same rng stream ordering as install(): signatures first.
+        let sigs = make_sigs(rng);
+        let plants: Vec<Vec<u8>> = (0..PLANTS)
+            .map(|i| sig_column(&sigs, 7 + 11 * i))
+            .collect();
+        SimFs::generate_corpus(rng, virus_fs_bytes(size), 32 * 1024, &plants)
+    }
+
+    fn install(&self, p: &mut Process, _size: Size, rng: &mut Rng) -> Result<()> {
+        let sigs_bytes = make_sigs(rng);
+        let sigs_f32: Vec<f32> = sigs_bytes.iter().map(|&b| b as f32).collect();
+        let cid = p
+            .program
+            .class_id("Scanner")
+            .ok_or_else(|| CloneCloudError::program("no Scanner class"))?;
+        let class = p.program.class(cid);
+        let sigs_slot = class.static_id("sigs").unwrap() as usize;
+        let cache_slot = class.static_id("cache").unwrap() as usize;
+        let arr_class = p.array_class;
+        let sigs_obj = p.heap.alloc_float_array(arr_class, sigs_f32);
+        // Quarantine/report cache: app-state ballast a migration carries.
+        let mut cache = vec![0u8; 800 * 1024];
+        rng.fill_bytes(&mut cache);
+        let cache_obj = p.heap.alloc_byte_array(arr_class, cache);
+        p.statics[cid.0 as usize][sigs_slot] = Value::Ref(sigs_obj);
+        p.statics[cid.0 as usize][cache_slot] = Value::Ref(cache_obj);
+        Ok(())
+    }
+
+    fn check(&self, p: &Process, _size: Size) -> Result<String> {
+        let total = read_static_int(p, "Scanner", "total")
+            .ok_or_else(|| CloneCloudError::vm("no scan total"))?;
+        // All planted signatures must be found; random 16-byte collisions
+        // are cryptographically unlikely.
+        if total != PLANTS as i64 {
+            return Err(CloneCloudError::vm(format!(
+                "virus scan found {total} hits, planted {PLANTS}"
+            )));
+        }
+        Ok(format!("{total} infected locations"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::natives::RustCompute;
+    use crate::apps::build_process;
+    use crate::config::Config;
+    use crate::device::Location;
+    use crate::exec::run_monolithic;
+
+    #[test]
+    fn monolithic_run_finds_planted_signatures() {
+        let app = VirusScan;
+        let cfg = Config {
+            zygote_objects: 200, // keep the unit test light
+            ..Config::default()
+        };
+        let mut p = build_process(
+            &app,
+            app.program(),
+            Size::Small,
+            &cfg,
+            Location::Mobile,
+            Arc::new(RustCompute),
+            false,
+        )
+        .unwrap();
+        let out = run_monolithic(&mut p).unwrap();
+        let msg = app.check(&p, Size::Small).unwrap();
+        assert!(msg.contains("3 infected"), "{msg}");
+        assert!(out.virtual_ms > 0.0);
+        assert!(p.env.ui_log.iter().any(|l| l.contains("ui.show int:3")));
+    }
+
+    #[test]
+    fn phone_vs_clone_ratio_is_papers() {
+        let app = VirusScan;
+        let cfg = Config {
+            zygote_objects: 100,
+            ..Config::default()
+        };
+        let mut phone = build_process(
+            &app, app.program(), Size::Small, &cfg,
+            Location::Mobile, Arc::new(RustCompute), false,
+        )
+        .unwrap();
+        let mut clone = build_process(
+            &app, app.program(), Size::Small, &cfg,
+            Location::Clone, Arc::new(RustCompute), true,
+        )
+        .unwrap();
+        let po = run_monolithic(&mut phone).unwrap();
+        let co = run_monolithic(&mut clone).unwrap();
+        let speedup = po.virtual_ms / co.virtual_ms;
+        assert!(
+            speedup > 18.0 && speedup < 27.0,
+            "max speedup {speedup} outside the paper's 19-21x band"
+        );
+        // Identical results on both devices.
+        assert_eq!(
+            read_static_int(&phone, "Scanner", "total"),
+            read_static_int(&clone, "Scanner", "total")
+        );
+    }
+
+    #[test]
+    fn small_workload_lands_at_paper_scale() {
+        // Paper: 100 KB on the phone = 5.70 s. Calibration target: same
+        // order of magnitude (2-12 s band).
+        let app = VirusScan;
+        let cfg = Config {
+            zygote_objects: 100,
+            ..Config::default()
+        };
+        let mut p = build_process(
+            &app, app.program(), Size::Small, &cfg,
+            Location::Mobile, Arc::new(RustCompute), false,
+        )
+        .unwrap();
+        let out = run_monolithic(&mut p).unwrap();
+        let secs = out.virtual_ms / 1e3;
+        assert!(secs > 2.0 && secs < 12.0, "100KB phone scan = {secs:.2}s");
+    }
+}

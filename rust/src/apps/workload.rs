@@ -1,0 +1,55 @@
+//! Workload sizes: the paper's three input points per application.
+
+/// Table 1 input sizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Size {
+    Small,
+    Medium,
+    Large,
+}
+
+impl Size {
+    pub fn all() -> [Size; 3] {
+        [Size::Small, Size::Medium, Size::Large]
+    }
+}
+
+/// Virus scanner: total file-system bytes (paper: 100 KB / 1 MB / 10 MB).
+pub fn virus_fs_bytes(size: Size) -> usize {
+    match size {
+        Size::Small => 100 * 1024,
+        Size::Medium => 1024 * 1024,
+        Size::Large => 10 * 1024 * 1024,
+    }
+}
+
+/// Image search: number of images (paper: 1 / 10 / 100).
+pub fn image_count(size: Size) -> usize {
+    match size {
+        Size::Small => 1,
+        Size::Medium => 10,
+        Size::Large => 100,
+    }
+}
+
+/// Behavior profiling: DMOZ tree depth (paper: 3 / 4 / 5).
+pub fn behavior_depth(size: Size) -> usize {
+    match size {
+        Size::Small => 3,
+        Size::Medium => 4,
+        Size::Large => 5,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_paper() {
+        assert_eq!(virus_fs_bytes(Size::Large), 10 * 1024 * 1024);
+        assert_eq!(image_count(Size::Medium), 10);
+        assert_eq!(behavior_depth(Size::Small), 3);
+        assert_eq!(Size::all().len(), 3);
+    }
+}

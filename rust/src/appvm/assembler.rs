@@ -1,0 +1,650 @@
+//! DroidVM textual assembler.
+//!
+//! The three evaluation apps (`apps/`) and the examples are written in
+//! this assembly, keeping their method/call structure as legible as the
+//! paper's Figure 5. Two-pass: signatures first (so forward references
+//! to classes/methods resolve), then bodies.
+//!
+//! ```text
+//! # comment
+//! class VirusScanner app
+//!   static total
+//!   field sigs
+//!   method main nargs=0 regs=8 pinned
+//!     invokev VirusScanner.scan
+//!     retv
+//!   end
+//!   method read nargs=3 regs=4 native=fs.read natstate
+//! end
+//! ```
+//!
+//! Instruction syntax (registers are `rN`; branch targets `@label`,
+//! labels are lines ending in `:`):
+//!
+//! `const rD 42` · `constf rD 3.5` · `move rD rS` ·
+//! `add|sub|mul|div|rem|and|or|xor|shl|shr rD rA rB` ·
+//! `fadd|fsub|fmul|fdiv rD rA rB` ·
+//! `cmplt|cmple|cmpeq|cmpne|cmpge|cmpgt rD rA rB` ·
+//! `ifz|ifnz rA @t` · `iflt|ifle|ifeq|ifne|ifge|ifgt rA rB @t` ·
+//! `goto @t` · `invoke rD Class.method rA...` · `invokev Class.method rA...` ·
+//! `ret rA` · `retv` · `new rD Class` · `getf rD rO Class.field` ·
+//! `putf rO Class.field rS` · `gets rD Class.static` · `puts Class.static rS` ·
+//! `newarr rD byte|float|val rLen` · `aget rD rArr rIdx` ·
+//! `aput rArr rIdx rS` · `len rD rArr` · `i2f rD rS` · `f2i rD rS` ·
+//! `ccstart N` · `ccstop N` · `nop`
+
+use std::collections::HashMap;
+
+use super::bytecode::{ArrKind, ClassId, CmpOp, FloatOp, Instr, IntOp, MRef};
+use super::class::{ClassDef, MethodDef, Program};
+use super::natives::NativeRegistry;
+use super::zygote::install_system_classes;
+use crate::error::{CloneCloudError, Result};
+
+fn perr(line_no: usize, msg: impl Into<String>) -> CloneCloudError {
+    CloneCloudError::program(format!("line {}: {}", line_no + 1, msg.into()))
+}
+
+/// Assemble a program from source. System (Zygote + array) classes are
+/// installed automatically.
+pub fn assemble(src: &str) -> Result<Program> {
+    let lines: Vec<(usize, String)> = src
+        .lines()
+        .enumerate()
+        .map(|(i, l)| {
+            let no_comment = match l.find('#') {
+                Some(p) => &l[..p],
+                None => l,
+            };
+            (i, no_comment.trim().to_string())
+        })
+        .filter(|(_, l)| !l.is_empty())
+        .collect();
+
+    // ---- Pass 1: class/method signatures -------------------------------
+    let mut program = Program::new();
+    install_system_classes(&mut program);
+
+    #[derive(Debug)]
+    struct PendingBody {
+        class: String,
+        method: String,
+        lines: Vec<(usize, String)>,
+    }
+    let mut bodies: Vec<PendingBody> = Vec::new();
+
+    let mut i = 0;
+    while i < lines.len() {
+        let (ln, line) = &lines[i];
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks[0] != "class" {
+            return Err(perr(*ln, format!("expected 'class', got '{}'", toks[0])));
+        }
+        if toks.len() < 2 {
+            return Err(perr(*ln, "class needs a name"));
+        }
+        let cname = toks[1].to_string();
+        let system = toks.get(2) == Some(&"system");
+        if program.class_id(&cname).is_some() {
+            return Err(perr(*ln, format!("duplicate class '{cname}'")));
+        }
+        let mut class = ClassDef::new(&cname, system);
+        i += 1;
+
+        // Class body.
+        loop {
+            if i >= lines.len() {
+                return Err(perr(*ln, format!("class '{cname}' missing 'end'")));
+            }
+            let (mln, mline) = &lines[i];
+            let mtoks: Vec<&str> = mline.split_whitespace().collect();
+            match mtoks[0] {
+                "end" => {
+                    i += 1;
+                    break;
+                }
+                "field" => {
+                    if mtoks.len() != 2 {
+                        return Err(perr(*mln, "field needs a name"));
+                    }
+                    class.add_field(mtoks[1]);
+                    i += 1;
+                }
+                "static" => {
+                    if mtoks.len() != 2 {
+                        return Err(perr(*mln, "static needs a name"));
+                    }
+                    class.add_static(mtoks[1]);
+                    i += 1;
+                }
+                "method" => {
+                    if mtoks.len() < 2 {
+                        return Err(perr(*mln, "method needs a name"));
+                    }
+                    let mname = mtoks[1].to_string();
+                    let mut nargs = 0usize;
+                    let mut nregs = 0usize;
+                    let mut pinned = false;
+                    let mut natstate = false;
+                    let mut native: Option<String> = None;
+                    for t in &mtoks[2..] {
+                        if let Some(v) = t.strip_prefix("nargs=") {
+                            nargs = v
+                                .parse()
+                                .map_err(|_| perr(*mln, "bad nargs"))?;
+                        } else if let Some(v) = t.strip_prefix("regs=") {
+                            nregs = v.parse().map_err(|_| perr(*mln, "bad regs"))?;
+                        } else if *t == "pinned" {
+                            pinned = true;
+                        } else if *t == "natstate" {
+                            natstate = true;
+                        } else if let Some(v) = t.strip_prefix("native=") {
+                            native = Some(v.to_string());
+                        } else {
+                            return Err(perr(*mln, format!("unknown method attr '{t}'")));
+                        }
+                    }
+                    // main is always pinned (Property 1).
+                    if mname == "main" {
+                        pinned = true;
+                    }
+                    let native_id = match &native {
+                        Some(n) => {
+                            let reg = NativeRegistry::standard();
+                            let id = reg
+                                .lookup(n)
+                                .ok_or_else(|| perr(*mln, format!("unknown native '{n}'")))?;
+                            let def = reg.def(id);
+                            if def.nargs != nargs {
+                                return Err(perr(
+                                    *mln,
+                                    format!(
+                                        "native '{n}' takes {} args, method declares {nargs}",
+                                        def.nargs
+                                    ),
+                                ));
+                            }
+                            // Pinned-ness flows from the native definition.
+                            if def.pinned {
+                                pinned = true;
+                            }
+                            Some(id)
+                        }
+                        None => None,
+                    };
+                    let is_native = native_id.is_some();
+                    class.add_method(MethodDef {
+                        name: mname.clone(),
+                        nargs,
+                        nregs: nregs.max(nargs),
+                        code: Vec::new(),
+                        native: native_id,
+                        pinned,
+                        native_state: natstate,
+                        migration_point: None,
+                    });
+                    i += 1;
+                    if !is_native {
+                        // Collect body lines until 'end'.
+                        let mut body = Vec::new();
+                        loop {
+                            if i >= lines.len() {
+                                return Err(perr(*mln, format!("method '{mname}' missing 'end'")));
+                            }
+                            let (bln, bline) = &lines[i];
+                            if bline == "end" {
+                                i += 1;
+                                break;
+                            }
+                            body.push((*bln, bline.clone()));
+                            i += 1;
+                        }
+                        bodies.push(PendingBody {
+                            class: cname.clone(),
+                            method: mname,
+                            lines: body,
+                        });
+                    }
+                }
+                other => return Err(perr(*mln, format!("unexpected '{other}' in class body"))),
+            }
+        }
+        program.add_class(class);
+    }
+
+    // ---- Pass 2: assemble bodies ---------------------------------------
+    for body in bodies {
+        let code = assemble_body(&program, &body.lines)?;
+        let mref = program.resolve(&body.class, &body.method)?;
+        program.method_mut(mref).code = code;
+    }
+    Ok(program)
+}
+
+fn parse_reg(tok: &str, ln: usize) -> Result<u8> {
+    tok.strip_prefix('r')
+        .and_then(|s| s.parse::<u8>().ok())
+        .ok_or_else(|| perr(ln, format!("expected register, got '{tok}'")))
+}
+
+fn parse_label(tok: &str, ln: usize) -> Result<String> {
+    tok.strip_prefix('@')
+        .map(|s| s.to_string())
+        .ok_or_else(|| perr(ln, format!("expected @label, got '{tok}'")))
+}
+
+fn resolve_class(p: &Program, name: &str, ln: usize) -> Result<ClassId> {
+    p.class_id(name)
+        .ok_or_else(|| perr(ln, format!("unknown class '{name}'")))
+}
+
+fn resolve_method(p: &Program, qualified: &str, ln: usize) -> Result<MRef> {
+    let (c, m) = qualified
+        .split_once('.')
+        .ok_or_else(|| perr(ln, format!("expected Class.method, got '{qualified}'")))?;
+    p.resolve(c, m).map_err(|_| {
+        perr(ln, format!("unknown method '{qualified}'"))
+    })
+}
+
+fn split_qualified<'a>(tok: &'a str, ln: usize) -> Result<(&'a str, &'a str)> {
+    tok.split_once('.')
+        .ok_or_else(|| perr(ln, format!("expected Class.name, got '{tok}'")))
+}
+
+fn assemble_body(p: &Program, lines: &[(usize, String)]) -> Result<Vec<Instr>> {
+    // Pass A: label positions (labels don't occupy a slot).
+    let mut labels: HashMap<String, u32> = HashMap::new();
+    let mut pc = 0u32;
+    for (ln, line) in lines {
+        if let Some(name) = line.strip_suffix(':') {
+            if labels.insert(name.to_string(), pc).is_some() {
+                return Err(perr(*ln, format!("duplicate label '{name}'")));
+            }
+        } else {
+            pc += 1;
+        }
+    }
+
+    // Pass B: instructions.
+    let int_ops: HashMap<&str, IntOp> = [
+        ("add", IntOp::Add),
+        ("sub", IntOp::Sub),
+        ("mul", IntOp::Mul),
+        ("div", IntOp::Div),
+        ("rem", IntOp::Rem),
+        ("and", IntOp::And),
+        ("or", IntOp::Or),
+        ("xor", IntOp::Xor),
+        ("shl", IntOp::Shl),
+        ("shr", IntOp::Shr),
+    ]
+    .into_iter()
+    .collect();
+    let float_ops: HashMap<&str, FloatOp> = [
+        ("fadd", FloatOp::Add),
+        ("fsub", FloatOp::Sub),
+        ("fmul", FloatOp::Mul),
+        ("fdiv", FloatOp::Div),
+    ]
+    .into_iter()
+    .collect();
+    let cmp_ops: HashMap<&str, CmpOp> = [
+        ("lt", CmpOp::Lt),
+        ("le", CmpOp::Le),
+        ("eq", CmpOp::Eq),
+        ("ne", CmpOp::Ne),
+        ("ge", CmpOp::Ge),
+        ("gt", CmpOp::Gt),
+    ]
+    .into_iter()
+    .collect();
+
+    let lbl = |labels: &HashMap<String, u32>, name: &str, ln: usize| -> Result<u32> {
+        labels
+            .get(name)
+            .copied()
+            .ok_or_else(|| perr(ln, format!("unknown label '@{name}'")))
+    };
+
+    let mut code = Vec::new();
+    for (ln, line) in lines {
+        if line.ends_with(':') {
+            continue;
+        }
+        let t: Vec<&str> = line.split_whitespace().collect();
+        let op = t[0];
+        let need = |n: usize| -> Result<()> {
+            if t.len() != n + 1 {
+                Err(perr(*ln, format!("'{op}' takes {n} operands, got {}", t.len() - 1)))
+            } else {
+                Ok(())
+            }
+        };
+        let instr = if let Some(io) = int_ops.get(op) {
+            need(3)?;
+            Instr::IntBin(*io, parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?, parse_reg(t[3], *ln)?)
+        } else if let Some(fo) = float_ops.get(op) {
+            need(3)?;
+            Instr::FloatBin(*fo, parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?, parse_reg(t[3], *ln)?)
+        } else if let Some(co) = op.strip_prefix("cmp").and_then(|s| cmp_ops.get(s)) {
+            need(3)?;
+            Instr::Cmp(*co, parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?, parse_reg(t[3], *ln)?)
+        } else if op != "ifz" && op != "ifnz" && op.len() == 4 && op.starts_with("if") {
+            let co = cmp_ops
+                .get(&op[2..])
+                .ok_or_else(|| perr(*ln, format!("unknown op '{op}'")))?;
+            need(3)?;
+            Instr::IfCmp(
+                *co,
+                parse_reg(t[1], *ln)?,
+                parse_reg(t[2], *ln)?,
+                lbl(&labels, &parse_label(t[3], *ln)?, *ln)?,
+            )
+        } else {
+            match op {
+                "nop" => {
+                    need(0)?;
+                    Instr::Nop
+                }
+                "const" => {
+                    need(2)?;
+                    let v: i64 = t[2]
+                        .parse()
+                        .map_err(|_| perr(*ln, format!("bad int '{}'", t[2])))?;
+                    Instr::Const(parse_reg(t[1], *ln)?, v)
+                }
+                "constf" => {
+                    need(2)?;
+                    let v: f64 = t[2]
+                        .parse()
+                        .map_err(|_| perr(*ln, format!("bad float '{}'", t[2])))?;
+                    Instr::ConstF(parse_reg(t[1], *ln)?, v)
+                }
+                "move" => {
+                    need(2)?;
+                    Instr::Move(parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?)
+                }
+                "ifz" => {
+                    need(2)?;
+                    Instr::IfZ(
+                        parse_reg(t[1], *ln)?,
+                        lbl(&labels, &parse_label(t[2], *ln)?, *ln)?,
+                    )
+                }
+                "ifnz" => {
+                    need(2)?;
+                    Instr::IfNZ(
+                        parse_reg(t[1], *ln)?,
+                        lbl(&labels, &parse_label(t[2], *ln)?, *ln)?,
+                    )
+                }
+                "goto" => {
+                    need(1)?;
+                    Instr::Goto(lbl(&labels, &parse_label(t[1], *ln)?, *ln)?)
+                }
+                "invoke" => {
+                    if t.len() < 3 {
+                        return Err(perr(*ln, "invoke rD Class.method [args...]"));
+                    }
+                    let ret = parse_reg(t[1], *ln)?;
+                    let mref = resolve_method(p, t[2], *ln)?;
+                    let args = t[3..]
+                        .iter()
+                        .map(|a| parse_reg(a, *ln))
+                        .collect::<Result<Vec<_>>>()?;
+                    Instr::Invoke {
+                        mref,
+                        ret: Some(ret),
+                        args,
+                    }
+                }
+                "invokev" => {
+                    if t.len() < 2 {
+                        return Err(perr(*ln, "invokev Class.method [args...]"));
+                    }
+                    let mref = resolve_method(p, t[1], *ln)?;
+                    let args = t[2..]
+                        .iter()
+                        .map(|a| parse_reg(a, *ln))
+                        .collect::<Result<Vec<_>>>()?;
+                    Instr::Invoke {
+                        mref,
+                        ret: None,
+                        args,
+                    }
+                }
+                "ret" => {
+                    need(1)?;
+                    Instr::Return(Some(parse_reg(t[1], *ln)?))
+                }
+                "retv" => {
+                    need(0)?;
+                    Instr::Return(None)
+                }
+                "new" => {
+                    need(2)?;
+                    Instr::New(parse_reg(t[1], *ln)?, resolve_class(p, t[2], *ln)?)
+                }
+                "getf" => {
+                    need(3)?;
+                    let (cn, fnm) = split_qualified(t[3], *ln)?;
+                    let cid = resolve_class(p, cn, *ln)?;
+                    let fid = p
+                        .class(cid)
+                        .field_id(fnm)
+                        .ok_or_else(|| perr(*ln, format!("unknown field '{}'", t[3])))?;
+                    Instr::GetField(parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?, fid)
+                }
+                "putf" => {
+                    need(3)?;
+                    let (cn, fnm) = split_qualified(t[2], *ln)?;
+                    let cid = resolve_class(p, cn, *ln)?;
+                    let fid = p
+                        .class(cid)
+                        .field_id(fnm)
+                        .ok_or_else(|| perr(*ln, format!("unknown field '{}'", t[2])))?;
+                    Instr::PutField(parse_reg(t[1], *ln)?, fid, parse_reg(t[3], *ln)?)
+                }
+                "gets" => {
+                    need(2)?;
+                    let (cn, snm) = split_qualified(t[2], *ln)?;
+                    let cid = resolve_class(p, cn, *ln)?;
+                    let sid = p
+                        .class(cid)
+                        .static_id(snm)
+                        .ok_or_else(|| perr(*ln, format!("unknown static '{}'", t[2])))?;
+                    Instr::GetStatic(parse_reg(t[1], *ln)?, cid, sid)
+                }
+                "puts" => {
+                    need(2)?;
+                    let (cn, snm) = split_qualified(t[1], *ln)?;
+                    let cid = resolve_class(p, cn, *ln)?;
+                    let sid = p
+                        .class(cid)
+                        .static_id(snm)
+                        .ok_or_else(|| perr(*ln, format!("unknown static '{}'", t[1])))?;
+                    Instr::PutStatic(cid, sid, parse_reg(t[2], *ln)?)
+                }
+                "newarr" => {
+                    need(3)?;
+                    let kind = match t[2] {
+                        "byte" => ArrKind::Byte,
+                        "float" => ArrKind::Float,
+                        "val" => ArrKind::Val,
+                        other => return Err(perr(*ln, format!("bad array kind '{other}'"))),
+                    };
+                    Instr::NewArray(parse_reg(t[1], *ln)?, kind, parse_reg(t[3], *ln)?)
+                }
+                "aget" => {
+                    need(3)?;
+                    Instr::ArrGet(parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?, parse_reg(t[3], *ln)?)
+                }
+                "aput" => {
+                    need(3)?;
+                    Instr::ArrPut(parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?, parse_reg(t[3], *ln)?)
+                }
+                "len" => {
+                    need(2)?;
+                    Instr::ArrLen(parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?)
+                }
+                "i2f" => {
+                    need(2)?;
+                    Instr::IntToFloat(parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?)
+                }
+                "f2i" => {
+                    need(2)?;
+                    Instr::FloatToInt(parse_reg(t[1], *ln)?, parse_reg(t[2], *ln)?)
+                }
+                "ccstart" => {
+                    need(1)?;
+                    let v: u32 = t[1].parse().map_err(|_| perr(*ln, "bad point id"))?;
+                    Instr::CcStart(v)
+                }
+                "ccstop" => {
+                    need(1)?;
+                    let v: u32 = t[1].parse().map_err(|_| perr(*ln, "bad point id"))?;
+                    Instr::CcStop(v)
+                }
+                other => return Err(perr(*ln, format!("unknown op '{other}'"))),
+            }
+        };
+        code.push(instr);
+    }
+    Ok(code)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FIB: &str = r#"
+# fib(n) benchmark program
+class Fib app
+  static result
+  method main nargs=0 regs=4
+    const r0 10
+    invoke r1 Fib.fib r0
+    puts Fib.result r1
+    retv
+  end
+  method fib nargs=1 regs=6
+    const r1 2
+    ifge r0 r1 @recurse
+    ret r0
+  recurse:
+    const r2 1
+    sub r3 r0 r2
+    invoke r4 Fib.fib r3
+    const r2 2
+    sub r3 r0 r2
+    invoke r5 Fib.fib r3
+    add r3 r4 r5
+    ret r3
+  end
+end
+"#;
+
+    #[test]
+    fn assembles_fib() {
+        let p = assemble(FIB).unwrap();
+        let fib = p.resolve("Fib", "fib").unwrap();
+        assert_eq!(p.method(fib).nargs, 1);
+        assert!(p.method(fib).code.len() > 5);
+        let main = p.entry().unwrap();
+        assert!(p.method(main).pinned, "main auto-pinned");
+    }
+
+    #[test]
+    fn labels_resolve_forward_and_backward() {
+        let src = r#"
+class L app
+  method main nargs=0 regs=2
+    goto @fwd
+  back:
+    retv
+  fwd:
+    goto @back
+  end
+end
+"#;
+        let p = assemble(src).unwrap();
+        let m = p.entry().unwrap();
+        assert_eq!(
+            p.method(m).code,
+            vec![Instr::Goto(2), Instr::Return(None), Instr::Goto(1)]
+        );
+    }
+
+    #[test]
+    fn native_methods_resolve_against_registry() {
+        let src = r#"
+class N app
+  method main nargs=0 regs=2
+    invoke r0 N.count
+    retv
+  end
+  method count nargs=0 regs=0 native=fs.count
+end
+"#;
+        let p = assemble(src).unwrap();
+        let m = p.resolve("N", "count").unwrap();
+        assert!(p.method(m).is_native());
+        assert!(!p.method(m).pinned);
+    }
+
+    #[test]
+    fn pinned_flows_from_native_def() {
+        let src = r#"
+class N app
+  method main nargs=0 regs=1
+    retv
+  end
+  method show nargs=1 regs=1 native=ui.show
+end
+"#;
+        let p = assemble(src).unwrap();
+        let m = p.resolve("N", "show").unwrap();
+        assert!(p.method(m).pinned, "ui native is V_M");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let src = "class X app\n  method main nargs=0 regs=1\n    bogus r1\n  end\nend\n";
+        let e = assemble(src).unwrap_err().to_string();
+        assert!(e.contains("line 3"), "{e}");
+        assert!(e.contains("bogus"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unknown_native_and_bad_arity() {
+        let src = "class X app\n  method main nargs=0 regs=1\n    retv\n  end\n  method f nargs=0 regs=0 native=no.such\nend\n";
+        assert!(assemble(src).is_err());
+        let src2 = "class X app\n  method main nargs=0 regs=1\n    retv\n  end\n  method f nargs=1 regs=1 native=fs.count\nend\n";
+        assert!(assemble(src2).is_err(), "fs.count takes 0 args");
+    }
+
+    #[test]
+    fn rejects_duplicate_class_and_label() {
+        let src = "class X app\n  method main nargs=0 regs=1\n    retv\n  end\nend\nclass X app\nend\n";
+        assert!(assemble(src).is_err());
+        let src2 = "class X app\n  method main nargs=0 regs=1\n  a:\n  a:\n    retv\n  end\nend\n";
+        assert!(assemble(src2).is_err());
+    }
+
+    #[test]
+    fn natstate_attribute_recorded() {
+        let src = r#"
+class R app
+  method main nargs=0 regs=1
+    retv
+  end
+  method read nargs=3 regs=3 native=fs.read natstate
+  method size nargs=1 regs=1 native=fs.size natstate
+end
+"#;
+        let p = assemble(src).unwrap();
+        assert!(p.method(p.resolve("R", "read").unwrap()).native_state);
+        assert!(p.method(p.resolve("R", "size").unwrap()).native_state);
+    }
+}

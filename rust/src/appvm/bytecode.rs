@@ -1,0 +1,266 @@
+//! DroidVM instruction set.
+//!
+//! A register-based bytecode modeled after Dalvik (the paper's target VM):
+//! each method owns a flat register file; instructions reference registers
+//! by index. Two instructions are special to CloneCloud — `CcStart` and
+//! `CcStop` — the migration / reintegration points the partitioner's
+//! rewriter inserts at chosen method entries and exits (paper §5).
+
+use std::fmt;
+
+/// Class index into the program's Method Area.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ClassId(pub u16);
+
+/// Method index within its class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MethodId(pub u16);
+
+/// Global method reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct MRef {
+    pub class: ClassId,
+    pub method: MethodId,
+}
+
+// MRef display needs the program for names; the raw form shows indices.
+impl fmt::Display for MRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "m{}.{}", self.class.0, self.method.0)
+    }
+}
+
+/// Register index within a frame.
+pub type Reg = u8;
+
+/// Integer binary operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+}
+
+/// Float binary operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FloatOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// Comparison operations (int or float operands).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Lt,
+    Le,
+    Eq,
+    Ne,
+    Ge,
+    Gt,
+}
+
+/// Array element kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrKind {
+    /// Packed bytes (file contents, images).
+    Byte,
+    /// Packed f32 (keyword vectors, scores).
+    Float,
+    /// Boxed values (object references or ints).
+    Val,
+}
+
+/// One DroidVM instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    Nop,
+    /// dst <- integer constant
+    Const(Reg, i64),
+    /// dst <- float constant
+    ConstF(Reg, f64),
+    /// dst <- src
+    Move(Reg, Reg),
+    /// dst <- a op b (integers)
+    IntBin(IntOp, Reg, Reg, Reg),
+    /// dst <- a op b (floats)
+    FloatBin(FloatOp, Reg, Reg, Reg),
+    /// dst <- (a op b) ? 1 : 0
+    Cmp(CmpOp, Reg, Reg, Reg),
+    /// branch to target if reg == 0
+    IfZ(Reg, u32),
+    /// branch to target if reg != 0
+    IfNZ(Reg, u32),
+    /// branch to target if (a op b)
+    IfCmp(CmpOp, Reg, Reg, u32),
+    /// unconditional branch
+    Goto(u32),
+    /// call `mref` with argument registers; optional return register
+    Invoke {
+        mref: MRef,
+        ret: Option<Reg>,
+        args: Vec<Reg>,
+    },
+    /// return (with optional value register)
+    Return(Option<Reg>),
+    /// dst <- new instance of class
+    New(Reg, ClassId),
+    /// dst <- obj.field[idx]
+    GetField(Reg, Reg, u16),
+    /// obj.field[idx] <- src
+    PutField(Reg, u16, Reg),
+    /// dst <- Class.static[idx]
+    GetStatic(Reg, ClassId, u16),
+    /// Class.static[idx] <- src
+    PutStatic(ClassId, u16, Reg),
+    /// dst <- new array of kind with length from register
+    NewArray(Reg, ArrKind, Reg),
+    /// dst <- arr[idx]
+    ArrGet(Reg, Reg, Reg),
+    /// arr[idx] <- src
+    ArrPut(Reg, Reg, Reg),
+    /// dst <- arr.length
+    ArrLen(Reg, Reg),
+    /// dst <- (float) src
+    IntToFloat(Reg, Reg),
+    /// dst <- (int) src, truncating
+    FloatToInt(Reg, Reg),
+    /// Migration point (inserted by the rewriter). The operand is the
+    /// partition-point id, used to look up the policy decision.
+    CcStart(u32),
+    /// Reintegration point (inserted by the rewriter).
+    CcStop(u32),
+}
+
+impl Instr {
+    /// Branch target, if this is a branch.
+    pub fn branch_target(&self) -> Option<u32> {
+        match self {
+            Instr::IfZ(_, t) | Instr::IfNZ(_, t) | Instr::IfCmp(_, _, _, t) | Instr::Goto(t) => {
+                Some(*t)
+            }
+            _ => None,
+        }
+    }
+
+    /// The method this instruction calls, if it is an invoke.
+    pub fn callee(&self) -> Option<MRef> {
+        match self {
+            Instr::Invoke { mref, .. } => Some(*mref),
+            _ => None,
+        }
+    }
+}
+
+/// Apply an integer binary op with VM wrap semantics; `Div`/`Rem` by zero
+/// are surfaced as `None` (the interpreter raises a VM fault).
+pub fn eval_int(op: IntOp, a: i64, b: i64) -> Option<i64> {
+    Some(match op {
+        IntOp::Add => a.wrapping_add(b),
+        IntOp::Sub => a.wrapping_sub(b),
+        IntOp::Mul => a.wrapping_mul(b),
+        IntOp::Div => {
+            if b == 0 {
+                return None;
+            }
+            a.wrapping_div(b)
+        }
+        IntOp::Rem => {
+            if b == 0 {
+                return None;
+            }
+            a.wrapping_rem(b)
+        }
+        IntOp::And => a & b,
+        IntOp::Or => a | b,
+        IntOp::Xor => a ^ b,
+        IntOp::Shl => a.wrapping_shl((b & 63) as u32),
+        IntOp::Shr => a.wrapping_shr((b & 63) as u32),
+    })
+}
+
+/// Apply a float binary op.
+pub fn eval_float(op: FloatOp, a: f64, b: f64) -> f64 {
+    match op {
+        FloatOp::Add => a + b,
+        FloatOp::Sub => a - b,
+        FloatOp::Mul => a * b,
+        FloatOp::Div => a / b,
+    }
+}
+
+/// Apply a comparison.
+pub fn eval_cmp_i(op: CmpOp, a: i64, b: i64) -> bool {
+    match op {
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Ge => a >= b,
+        CmpOp::Gt => a > b,
+    }
+}
+
+pub fn eval_cmp_f(op: CmpOp, a: f64, b: f64) -> bool {
+    match op {
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Ge => a >= b,
+        CmpOp::Gt => a > b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_ops() {
+        assert_eq!(eval_int(IntOp::Add, 2, 3), Some(5));
+        assert_eq!(eval_int(IntOp::Div, 7, 2), Some(3));
+        assert_eq!(eval_int(IntOp::Div, 1, 0), None);
+        assert_eq!(eval_int(IntOp::Rem, 1, 0), None);
+        assert_eq!(eval_int(IntOp::Add, i64::MAX, 1), Some(i64::MIN), "wraps");
+        assert_eq!(eval_int(IntOp::Shl, 1, 4), Some(16));
+    }
+
+    #[test]
+    fn cmp_ops() {
+        assert!(eval_cmp_i(CmpOp::Lt, 1, 2));
+        assert!(!eval_cmp_i(CmpOp::Gt, 1, 2));
+        assert!(eval_cmp_f(CmpOp::Ge, 2.0, 2.0));
+        assert!(eval_cmp_f(CmpOp::Ne, 1.0, 2.0));
+    }
+
+    #[test]
+    fn branch_target_extraction() {
+        assert_eq!(Instr::Goto(7).branch_target(), Some(7));
+        assert_eq!(Instr::Nop.branch_target(), None);
+        assert_eq!(Instr::IfZ(0, 3).branch_target(), Some(3));
+    }
+
+    #[test]
+    fn callee_extraction() {
+        let m = MRef {
+            class: ClassId(1),
+            method: MethodId(2),
+        };
+        let i = Instr::Invoke {
+            mref: m,
+            ret: None,
+            args: vec![0],
+        };
+        assert_eq!(i.callee(), Some(m));
+        assert_eq!(Instr::Nop.callee(), None);
+    }
+}

@@ -1,0 +1,288 @@
+//! The Method Area: classes, fields, methods, and the loaded program.
+//!
+//! Mirrors the application-VM model of the paper's §2: a program is a blob
+//! of bytecode organized into classes; the VM-wide Method Area holds the
+//! types and static-variable layout. Methods carry the annotations the
+//! partitioner's static analysis consumes: `pinned` (the V_M set,
+//! Property 1), `native_state` (the V_Nat_C sets, Property 2), and
+//! `system` on the class (system methods are not partition candidates).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::bytecode::{ClassId, Instr, MRef, MethodId};
+use crate::error::{CloneCloudError, Result};
+
+/// Identifies a registered native implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NativeId(pub u16);
+
+/// A method definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MethodDef {
+    pub name: String,
+    /// Number of arguments; they arrive in registers `[0, nargs)`.
+    pub nargs: usize,
+    /// Total registers in the frame (>= nargs).
+    pub nregs: usize,
+    /// Bytecode; empty for native methods.
+    pub code: Vec<Instr>,
+    /// Native implementation, if this is a native method.
+    pub native: Option<NativeId>,
+    /// Property 1 (V_M): pinned to the mobile device — accesses a
+    /// device-unique resource (GPS, camera, UI) or is `main`.
+    pub pinned: bool,
+    /// Property 2: creates/accesses native state below the VM; all such
+    /// methods of one class form a V_Nat_C collocation group.
+    pub native_state: bool,
+    /// Set by the rewriter: this method is a migration point R(m)=1,
+    /// with the given partition-point id.
+    pub migration_point: Option<u32>,
+}
+
+impl MethodDef {
+    pub fn is_native(&self) -> bool {
+        self.native.is_some()
+    }
+}
+
+/// A class definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassDef {
+    pub name: String,
+    /// System classes (core library, Zygote-warmed types) are excluded
+    /// from partitioning; only application classes get R(m) variables.
+    pub system: bool,
+    /// Instance field names; object field storage is positional.
+    pub fields: Vec<String>,
+    /// Static field names; storage lives in `Process::statics`.
+    pub statics: Vec<String>,
+    pub methods: Vec<MethodDef>,
+    method_index: HashMap<String, MethodId>,
+    field_index: HashMap<String, u16>,
+    static_index: HashMap<String, u16>,
+}
+
+impl ClassDef {
+    pub fn new(name: &str, system: bool) -> ClassDef {
+        ClassDef {
+            name: name.to_string(),
+            system,
+            fields: Vec::new(),
+            statics: Vec::new(),
+            methods: Vec::new(),
+            method_index: HashMap::new(),
+            field_index: HashMap::new(),
+            static_index: HashMap::new(),
+        }
+    }
+
+    pub fn add_field(&mut self, name: &str) -> u16 {
+        let idx = self.fields.len() as u16;
+        self.fields.push(name.to_string());
+        self.field_index.insert(name.to_string(), idx);
+        idx
+    }
+
+    pub fn add_static(&mut self, name: &str) -> u16 {
+        let idx = self.statics.len() as u16;
+        self.statics.push(name.to_string());
+        self.static_index.insert(name.to_string(), idx);
+        idx
+    }
+
+    pub fn add_method(&mut self, m: MethodDef) -> MethodId {
+        let id = MethodId(self.methods.len() as u16);
+        self.method_index.insert(m.name.clone(), id);
+        self.methods.push(m);
+        id
+    }
+
+    pub fn method_id(&self, name: &str) -> Option<MethodId> {
+        self.method_index.get(name).copied()
+    }
+
+    pub fn field_id(&self, name: &str) -> Option<u16> {
+        self.field_index.get(name).copied()
+    }
+
+    pub fn static_id(&self, name: &str) -> Option<u16> {
+        self.static_index.get(name).copied()
+    }
+}
+
+/// A loaded program: the immutable Method Area shared by phone and clone
+/// processes (`Arc`; the clone receives the same executable through the
+/// node manager's file-system synchronization).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    pub classes: Vec<ClassDef>,
+    class_index: HashMap<String, ClassId>,
+}
+
+impl Program {
+    pub fn new() -> Program {
+        Program::default()
+    }
+
+    pub fn add_class(&mut self, c: ClassDef) -> ClassId {
+        let id = ClassId(self.classes.len() as u16);
+        self.class_index.insert(c.name.clone(), id);
+        self.classes.push(c);
+        id
+    }
+
+    pub fn class_id(&self, name: &str) -> Option<ClassId> {
+        self.class_index.get(name).copied()
+    }
+
+    pub fn class(&self, id: ClassId) -> &ClassDef {
+        &self.classes[id.0 as usize]
+    }
+
+    pub fn class_mut(&mut self, id: ClassId) -> &mut ClassDef {
+        &mut self.classes[id.0 as usize]
+    }
+
+    pub fn method(&self, mref: MRef) -> &MethodDef {
+        &self.class(mref.class).methods[mref.method.0 as usize]
+    }
+
+    pub fn method_mut(&mut self, mref: MRef) -> &mut MethodDef {
+        &mut self.classes[mref.class.0 as usize].methods[mref.method.0 as usize]
+    }
+
+    /// Resolve "Class.method" to an MRef.
+    pub fn resolve(&self, class: &str, method: &str) -> Result<MRef> {
+        let cid = self
+            .class_id(class)
+            .ok_or_else(|| CloneCloudError::program(format!("no class '{class}'")))?;
+        let mid = self
+            .class(cid)
+            .method_id(method)
+            .ok_or_else(|| CloneCloudError::program(format!("no method '{class}.{method}'")))?;
+        Ok(MRef {
+            class: cid,
+            method: mid,
+        })
+    }
+
+    /// Human-readable method name.
+    pub fn method_name(&self, mref: MRef) -> String {
+        format!(
+            "{}.{}",
+            self.class(mref.class).name,
+            self.method(mref).name
+        )
+    }
+
+    /// The program entry point: the unique `main` on an app class.
+    pub fn entry(&self) -> Result<MRef> {
+        for (ci, c) in self.classes.iter().enumerate() {
+            if c.system {
+                continue;
+            }
+            if let Some(mid) = c.method_id("main") {
+                return Ok(MRef {
+                    class: ClassId(ci as u16),
+                    method: mid,
+                });
+            }
+        }
+        Err(CloneCloudError::program("no app main method"))
+    }
+
+    /// All methods, in deterministic order.
+    pub fn all_methods(&self) -> Vec<MRef> {
+        let mut out = Vec::new();
+        for (ci, c) in self.classes.iter().enumerate() {
+            for mi in 0..c.methods.len() {
+                out.push(MRef {
+                    class: ClassId(ci as u16),
+                    method: MethodId(mi as u16),
+                });
+            }
+        }
+        out
+    }
+
+    /// App (non-system) methods — the partition candidates.
+    pub fn app_methods(&self) -> Vec<MRef> {
+        self.all_methods()
+            .into_iter()
+            .filter(|m| !self.class(m.class).system)
+            .collect()
+    }
+
+    pub fn into_shared(self) -> Arc<Program> {
+        Arc::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Program {
+        let mut p = Program::new();
+        let mut c = ClassDef::new("A", false);
+        c.add_field("x");
+        c.add_static("s");
+        c.add_method(MethodDef {
+            name: "main".into(),
+            nargs: 0,
+            nregs: 2,
+            code: vec![Instr::Return(None)],
+            native: None,
+            pinned: true,
+            native_state: false,
+            migration_point: None,
+        });
+        p.add_class(c);
+        let mut sys = ClassDef::new("java.lang.Object", true);
+        sys.add_method(MethodDef {
+            name: "init".into(),
+            nargs: 0,
+            nregs: 1,
+            code: vec![Instr::Return(None)],
+            native: None,
+            pinned: false,
+            native_state: false,
+            migration_point: None,
+        });
+        p.add_class(sys);
+        p
+    }
+
+    #[test]
+    fn resolve_and_names() {
+        let p = sample();
+        let m = p.resolve("A", "main").unwrap();
+        assert_eq!(p.method_name(m), "A.main");
+        assert!(p.resolve("A", "nope").is_err());
+        assert!(p.resolve("B", "main").is_err());
+    }
+
+    #[test]
+    fn entry_finds_app_main() {
+        let p = sample();
+        let e = p.entry().unwrap();
+        assert_eq!(p.method_name(e), "A.main");
+    }
+
+    #[test]
+    fn app_methods_exclude_system() {
+        let p = sample();
+        assert_eq!(p.all_methods().len(), 2);
+        assert_eq!(p.app_methods().len(), 1);
+    }
+
+    #[test]
+    fn field_and_static_ids() {
+        let p = sample();
+        let c = p.class(p.class_id("A").unwrap());
+        assert_eq!(c.field_id("x"), Some(0));
+        assert_eq!(c.static_id("s"), Some(0));
+        assert_eq!(c.field_id("y"), None);
+    }
+}

@@ -1,0 +1,278 @@
+//! VM-wide heap with monotonic object ids and mark-sweep collection.
+//!
+//! The migrator's capture traversal (paper §4.1) and the post-merge
+//! orphan collection (§4.2) both rely on this module: capture walks
+//! references from thread roots exactly like the mark phase; merge leaves
+//! "orphaned" objects disconnected, and a subsequent sweep collects them.
+
+use std::collections::HashMap;
+
+use super::bytecode::ClassId;
+use super::value::{ObjBody, ObjId, Object, Value};
+use crate::error::{CloneCloudError, Result};
+
+/// The object heap of one VM process.
+#[derive(Debug, Clone, Default)]
+pub struct Heap {
+    objects: HashMap<u64, Object>,
+    next_id: u64,
+    /// Per-class Zygote construction counters (for (class, seq) naming).
+    zygote_counters: HashMap<ClassId, u32>,
+}
+
+impl Heap {
+    pub fn new() -> Heap {
+        Heap {
+            objects: HashMap::new(),
+            next_id: 1,
+            zygote_counters: HashMap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+
+    /// Allocate an object, assigning the next monotonic id.
+    pub fn alloc(&mut self, obj: Object) -> ObjId {
+        let id = ObjId(self.next_id);
+        self.next_id += 1;
+        self.objects.insert(id.0, obj);
+        id
+    }
+
+    /// Allocate a Zygote (template) object: named by (class, seq) so two
+    /// independently-booted Zygotes assign identical names (§4.3).
+    pub fn alloc_zygote(&mut self, mut obj: Object) -> ObjId {
+        let seq = self.zygote_counters.entry(obj.class).or_insert(0);
+        obj.zygote_seq = Some(*seq);
+        obj.dirty = false;
+        *seq += 1;
+        self.alloc(obj)
+    }
+
+    /// Allocate with a specific id (merge-side re-instantiation). The id
+    /// counter is bumped past it so future ids stay unique.
+    pub fn alloc_with_id(&mut self, id: ObjId, obj: Object) -> Result<()> {
+        if self.objects.contains_key(&id.0) {
+            return Err(CloneCloudError::vm(format!("object id {} already live", id.0)));
+        }
+        self.next_id = self.next_id.max(id.0 + 1);
+        self.objects.insert(id.0, obj);
+        Ok(())
+    }
+
+    pub fn get(&self, id: ObjId) -> Result<&Object> {
+        self.objects
+            .get(&id.0)
+            .ok_or_else(|| CloneCloudError::vm(format!("dangling reference to object {}", id.0)))
+    }
+
+    pub fn get_mut(&mut self, id: ObjId) -> Result<&mut Object> {
+        let o = self
+            .objects
+            .get_mut(&id.0)
+            .ok_or_else(|| CloneCloudError::vm(format!("dangling reference to object {}", id.0)))?;
+        o.dirty = true;
+        Ok(o)
+    }
+
+    /// Read-only access that does NOT set the dirty bit.
+    pub fn peek_mut(&mut self, id: ObjId) -> Option<&mut Object> {
+        self.objects.get_mut(&id.0)
+    }
+
+    pub fn contains(&self, id: ObjId) -> bool {
+        self.objects.contains_key(&id.0)
+    }
+
+    pub fn remove(&mut self, id: ObjId) -> Option<Object> {
+        self.objects.remove(&id.0)
+    }
+
+    /// Iterate (id, object) in unspecified order.
+    pub fn iter(&self) -> impl Iterator<Item = (ObjId, &Object)> {
+        self.objects.iter().map(|(k, v)| (ObjId(*k), v))
+    }
+
+    /// Transitive closure of references from `roots` — the mark phase,
+    /// identical to the capture traversal of §4.1.
+    pub fn reachable(&self, roots: &[ObjId]) -> Vec<ObjId> {
+        let mut seen: HashMap<u64, ()> = HashMap::new();
+        let mut stack: Vec<ObjId> = roots.to_vec();
+        let mut out = Vec::new();
+        while let Some(id) = stack.pop() {
+            if seen.insert(id.0, ()).is_some() {
+                continue;
+            }
+            if let Some(obj) = self.objects.get(&id.0) {
+                out.push(id);
+                stack.extend(obj.body.refs());
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Mark-sweep: drop every object unreachable from `roots`. Returns the
+    /// number collected.
+    pub fn gc(&mut self, roots: &[ObjId]) -> usize {
+        let live = self.reachable(roots);
+        let live_set: HashMap<u64, ()> = live.iter().map(|r| (r.0, ())).collect();
+        let before = self.objects.len();
+        self.objects.retain(|id, _| live_set.contains_key(id));
+        before - self.objects.len()
+    }
+
+    /// Total approximate byte size of a set of objects.
+    pub fn byte_size_of(&self, ids: &[ObjId]) -> u64 {
+        ids.iter()
+            .filter_map(|id| self.objects.get(&id.0))
+            .map(|o| o.byte_size())
+            .sum()
+    }
+
+    /// Next id that will be assigned (for tests / diagnostics).
+    pub fn next_id_hint(&self) -> u64 {
+        self.next_id
+    }
+}
+
+/// Helpers for building common objects.
+impl Heap {
+    pub fn alloc_byte_array(&mut self, class: ClassId, bytes: Vec<u8>) -> ObjId {
+        self.alloc(Object {
+            class,
+            body: ObjBody::ByteArray(bytes),
+            zygote_seq: None,
+            dirty: true,
+        })
+    }
+
+    pub fn alloc_float_array(&mut self, class: ClassId, xs: Vec<f32>) -> ObjId {
+        self.alloc(Object {
+            class,
+            body: ObjBody::FloatArray(xs),
+            zygote_seq: None,
+            dirty: true,
+        })
+    }
+
+    pub fn alloc_ref_array(&mut self, class: ClassId, n: usize) -> ObjId {
+        self.alloc(Object {
+            class,
+            body: ObjBody::RefArray(vec![Value::Null; n]),
+            zygote_seq: None,
+            dirty: true,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heap_with_chain() -> (Heap, ObjId, ObjId, ObjId) {
+        // a -> b -> c
+        let mut h = Heap::new();
+        let c = h.alloc(Object::new_fields(ClassId(0), 1));
+        let b = {
+            let mut o = Object::new_fields(ClassId(0), 1);
+            o.body = ObjBody::Fields(vec![Value::Ref(c)]);
+            h.alloc(o)
+        };
+        let a = {
+            let mut o = Object::new_fields(ClassId(0), 1);
+            o.body = ObjBody::Fields(vec![Value::Ref(b)]);
+            h.alloc(o)
+        };
+        (h, a, b, c)
+    }
+
+    #[test]
+    fn ids_are_monotonic_and_unique() {
+        let mut h = Heap::new();
+        let a = h.alloc(Object::new_fields(ClassId(0), 0));
+        let b = h.alloc(Object::new_fields(ClassId(0), 0));
+        assert!(b.0 > a.0);
+        h.remove(a);
+        let c = h.alloc(Object::new_fields(ClassId(0), 0));
+        assert!(c.0 > b.0, "ids never reused even after free");
+    }
+
+    #[test]
+    fn reachability_follows_chains() {
+        let (h, a, b, c) = heap_with_chain();
+        let r = h.reachable(&[a]);
+        assert_eq!(r, {
+            let mut v = vec![a, b, c];
+            v.sort_unstable();
+            v
+        });
+        assert_eq!(h.reachable(&[c]).len(), 1);
+    }
+
+    #[test]
+    fn reachability_handles_cycles() {
+        let mut h = Heap::new();
+        let a = h.alloc(Object::new_fields(ClassId(0), 1));
+        let b = h.alloc(Object::new_fields(ClassId(0), 1));
+        h.get_mut(a).unwrap().body = ObjBody::Fields(vec![Value::Ref(b)]);
+        h.get_mut(b).unwrap().body = ObjBody::Fields(vec![Value::Ref(a)]);
+        assert_eq!(h.reachable(&[a]).len(), 2);
+    }
+
+    #[test]
+    fn gc_collects_orphans() {
+        let (mut h, a, _b, c) = heap_with_chain();
+        // Cut b -> c.
+        let b_id = h.get(a).unwrap().body.refs()[0];
+        h.get_mut(b_id).unwrap().body = ObjBody::Fields(vec![Value::Null]);
+        let collected = h.gc(&[a]);
+        assert_eq!(collected, 1);
+        assert!(!h.contains(c));
+        assert!(h.contains(a));
+    }
+
+    #[test]
+    fn zygote_naming_is_per_class_sequence() {
+        let mut h = Heap::new();
+        let a = h.alloc_zygote(Object::new_fields(ClassId(3), 0));
+        let b = h.alloc_zygote(Object::new_fields(ClassId(3), 0));
+        let c = h.alloc_zygote(Object::new_fields(ClassId(4), 0));
+        assert_eq!(h.get(a).unwrap().zygote_seq, Some(0));
+        assert_eq!(h.get(b).unwrap().zygote_seq, Some(1));
+        assert_eq!(h.get(c).unwrap().zygote_seq, Some(0), "per-class counter");
+        assert!(!h.get(a).unwrap().dirty);
+    }
+
+    #[test]
+    fn get_mut_sets_dirty() {
+        let mut h = Heap::new();
+        let a = h.alloc_zygote(Object::new_fields(ClassId(0), 1));
+        assert!(!h.get(a).unwrap().dirty);
+        h.get_mut(a).unwrap();
+        assert!(h.get(a).unwrap().dirty);
+    }
+
+    #[test]
+    fn alloc_with_id_bumps_counter_and_rejects_dup() {
+        let mut h = Heap::new();
+        h.alloc_with_id(ObjId(100), Object::new_fields(ClassId(0), 0))
+            .unwrap();
+        assert!(h
+            .alloc_with_id(ObjId(100), Object::new_fields(ClassId(0), 0))
+            .is_err());
+        let next = h.alloc(Object::new_fields(ClassId(0), 0));
+        assert!(next.0 > 100);
+    }
+
+    #[test]
+    fn dangling_reference_is_a_fault() {
+        let h = Heap::new();
+        assert!(h.get(ObjId(99)).is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! DroidVM: the application-level virtual machine substrate.
+//!
+//! The paper's prototype modifies Android's Dalvik VM; this module is the
+//! equivalent substrate built from scratch (DESIGN.md §2): a register
+//! bytecode [`bytecode`], the Method Area [`class`], heap with monotonic
+//! object ids and mark-sweep GC [`heap`], threads with safe-point suspend
+//! counters [`thread`], the interpreter with migration-point events
+//! [`interp`], the native interface [`natives`], the Zygote template
+//! [`zygote`], a textual assembler [`assembler`], and a load-time
+//! verifier [`verifier`].
+
+pub mod assembler;
+pub mod bytecode;
+pub mod class;
+pub mod heap;
+pub mod interp;
+pub mod natives;
+pub mod process;
+pub mod thread;
+pub mod value;
+pub mod verifier;
+pub mod zygote;
+
+pub use bytecode::{ClassId, Instr, MRef, MethodId};
+pub use class::{ClassDef, MethodDef, Program};
+pub use heap::Heap;
+pub use interp::{run_thread, ExecHooks, NoHooks, RunExit};
+pub use natives::{ComputeBackend, NativeRegistry, NodeEnv, RustCompute};
+pub use process::Process;
+pub use thread::{Frame, ThreadStatus, VmThread};
+pub use value::{ObjBody, ObjId, Object, Value};

@@ -1,0 +1,583 @@
+//! Native interface framework.
+//!
+//! The paper's §2: "external processing such as file I/O, networking,
+//! using local hardware ... punch through the abstract machine". DroidVM
+//! natives come in two flavors, the distinction CloneCloud's Property 1
+//! is built on:
+//!
+//! * **pinned** natives (`ui.*`, `sensor.*`) touch device-unique hardware
+//!   and form the V_M set — they may only run on the mobile device;
+//! * **everywhere** natives (`fs.*` over the synchronized file system,
+//!   `compute.*` backed by the PJRT artifacts) exist on both devices —
+//!   the paper's distinguishing "native everywhere" feature.
+//!
+//! Compute natives delegate to a [`ComputeBackend`]: the production
+//! implementation loads the AOT HLO artifacts through PJRT
+//! (`runtime::PjrtCompute`); a pure-Rust reference (`RustCompute`) keeps
+//! unit tests hermetic and cross-checks PJRT numerics.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::class::NativeId;
+use super::heap::Heap;
+use super::value::{ObjBody, Value};
+use crate::clock::VirtualClock;
+use crate::config::CostParams;
+use crate::device::{DeviceSpec, Location};
+use crate::error::{CloneCloudError, Result};
+use crate::vfs::SimFs;
+
+/// Fixed artifact shapes (mirror python/compile/model.py).
+pub mod shapes {
+    pub const CHUNK: usize = 4096;
+    pub const SIG_LEN: usize = 16;
+    pub const N_SIGS: usize = 128;
+    pub const IMG: usize = 64;
+    pub const PATCH: usize = 8;
+    pub const N_FILTERS: usize = 16;
+    pub const N_USERS: usize = 8;
+    pub const KDIM: usize = 256;
+    pub const N_CATS: usize = 512;
+}
+
+/// Backend for the heavy app compute (the L1/L2 artifacts).
+///
+/// Deliberately NOT `Send`/`Sync`: the PJRT client wrapper holds
+/// thread-local handles (`Rc`, raw pointers). Each node — phone or clone —
+/// loads its own runtime on its own thread, exactly as each real device
+/// loads its own VM + artifacts.
+pub trait ComputeBackend {
+    /// Scan one chunk against a signature panel. Returns per-signature
+    /// match counts and the total.
+    fn scan_chunk(&self, chunk: &[f32], sigs: &[f32]) -> Result<(Vec<f32>, f32)>;
+    /// Detect faces in one image. Returns (per-filter maxima, per-filter
+    /// counts, total faces).
+    fn face_detect(&self, img: &[f32], filters: &[f32], thresh: f32)
+        -> Result<(Vec<f32>, Vec<f32>, f32)>;
+    /// Score user vectors against a category panel. Returns (scores,
+    /// best index per user, best score per user).
+    fn categorize(&self, users: &[f32], cats: &[f32]) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)>;
+    /// Backend name for diagnostics.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend (same math as python/compile/kernels/ref.py).
+pub struct RustCompute;
+
+impl ComputeBackend for RustCompute {
+    fn scan_chunk(&self, chunk: &[f32], sigs: &[f32]) -> Result<(Vec<f32>, f32)> {
+        use shapes::*;
+        if chunk.len() != CHUNK || sigs.len() != SIG_LEN * N_SIGS {
+            return Err(CloneCloudError::runtime("scan_chunk shape mismatch"));
+        }
+        let mut counts = vec![0f32; N_SIGS];
+        // windows include pad tail of -1 (cannot match byte values).
+        for w0 in 0..CHUNK {
+            'sig: for s in 0..N_SIGS {
+                for k in 0..SIG_LEN {
+                    let wv = if w0 + k < CHUNK { chunk[w0 + k] } else { -1.0 };
+                    // sigs is (SIG_LEN, N_SIGS) row-major.
+                    if (wv - sigs[k * N_SIGS + s]).abs() > 0.25 {
+                        continue 'sig;
+                    }
+                }
+                counts[s] += 1.0;
+            }
+        }
+        let total = counts.iter().sum();
+        Ok((counts, total))
+    }
+
+    fn face_detect(
+        &self,
+        img: &[f32],
+        filters: &[f32],
+        thresh: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        use shapes::*;
+        if img.len() != IMG * IMG || filters.len() != PATCH * PATCH * N_FILTERS {
+            return Err(CloneCloudError::runtime("face_detect shape mismatch"));
+        }
+        let side = IMG - PATCH + 1;
+        let mut maxima = vec![f32::NEG_INFINITY; N_FILTERS];
+        let mut counts = vec![0f32; N_FILTERS];
+        for r in 0..side {
+            for c in 0..side {
+                for f in 0..N_FILTERS {
+                    let mut resp = 0f32;
+                    for dr in 0..PATCH {
+                        for dc in 0..PATCH {
+                            // filters is (PATCH*PATCH, N_FILTERS) row-major.
+                            resp += img[(r + dr) * IMG + c + dc]
+                                * filters[(dr * PATCH + dc) * N_FILTERS + f];
+                        }
+                    }
+                    if resp > maxima[f] {
+                        maxima[f] = resp;
+                    }
+                    if resp > thresh {
+                        counts[f] += 1.0;
+                    }
+                }
+            }
+        }
+        let faces = counts.iter().sum();
+        Ok((maxima, counts, faces))
+    }
+
+    fn categorize(&self, users: &[f32], cats: &[f32]) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)> {
+        use shapes::*;
+        if users.len() != N_USERS * KDIM || cats.len() != KDIM * N_CATS {
+            return Err(CloneCloudError::runtime("categorize shape mismatch"));
+        }
+        const EPS: f32 = 1e-6;
+        let mut cat_norm = vec![0f32; N_CATS];
+        for k in 0..KDIM {
+            for n in 0..N_CATS {
+                let v = cats[k * N_CATS + n];
+                cat_norm[n] += v * v;
+            }
+        }
+        for n in cat_norm.iter_mut() {
+            *n = n.sqrt() + EPS;
+        }
+        let mut scores = vec![0f32; N_USERS * N_CATS];
+        let mut best = vec![0i32; N_USERS];
+        let mut best_score = vec![f32::NEG_INFINITY; N_USERS];
+        for u in 0..N_USERS {
+            let row = &users[u * KDIM..(u + 1) * KDIM];
+            let unorm = row.iter().map(|x| x * x).sum::<f32>().sqrt() + EPS;
+            for n in 0..N_CATS {
+                let mut dot = 0f32;
+                for k in 0..KDIM {
+                    dot += row[k] * cats[k * N_CATS + n];
+                }
+                let s = dot / (unorm * cat_norm[n]);
+                scores[u * N_CATS + n] = s;
+                if s > best_score[u] {
+                    best_score[u] = s;
+                    best[u] = n as i32;
+                }
+            }
+        }
+        Ok((scores, best, best_score))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-reference"
+    }
+}
+
+/// Per-node environment reachable from native methods: the synchronized
+/// file system, sensors/UI (mobile only), and the compute backend.
+pub struct NodeEnv {
+    pub vfs: SimFs,
+    pub compute: Arc<dyn ComputeBackend>,
+    /// UI output log (pinned native side effects, visible to tests).
+    pub ui_log: Vec<String>,
+    /// Count of native invocations by name (metrics).
+    pub native_calls: HashMap<String, u64>,
+}
+
+impl NodeEnv {
+    pub fn new(vfs: SimFs, compute: Arc<dyn ComputeBackend>) -> NodeEnv {
+        NodeEnv {
+            vfs,
+            compute,
+            ui_log: Vec::new(),
+            native_calls: HashMap::new(),
+        }
+    }
+
+    pub fn with_rust_compute(vfs: SimFs) -> NodeEnv {
+        NodeEnv::new(vfs, Arc::new(RustCompute))
+    }
+}
+
+/// Context handed to native handlers.
+pub struct NativeCtx<'a> {
+    pub heap: &'a mut Heap,
+    pub clock: &'a mut VirtualClock,
+    pub device: &'a DeviceSpec,
+    pub costs: &'a CostParams,
+    pub location: Location,
+    pub env: &'a mut NodeEnv,
+    /// Class id used for arrays allocated by natives.
+    pub array_class: super::bytecode::ClassId,
+    /// Clone-monolithic / profiling override for Property-1 enforcement.
+    pub allow_pinned: bool,
+}
+
+type Handler = fn(&mut NativeCtx, &[Value]) -> Result<Value>;
+
+/// A registered native method.
+pub struct NativeDef {
+    pub name: &'static str,
+    /// Property 1: pinned natives form V_M.
+    pub pinned: bool,
+    pub nargs: usize,
+    pub handler: Handler,
+}
+
+/// The native registry: a fixed table, stable across processes (both the
+/// phone and the clone register the same natives — what differs is only
+/// whether the *pinned* ones may legally be reached there).
+pub struct NativeRegistry {
+    defs: Vec<NativeDef>,
+    by_name: HashMap<&'static str, NativeId>,
+}
+
+impl NativeRegistry {
+    /// The standard DroidVM native set.
+    pub fn standard() -> &'static NativeRegistry {
+        use once_cell::sync::Lazy;
+        static REG: Lazy<NativeRegistry> = Lazy::new(NativeRegistry::build);
+        &REG
+    }
+
+    fn build() -> NativeRegistry {
+        let defs: Vec<NativeDef> = vec![
+            NativeDef { name: "ui.init", pinned: true, nargs: 0, handler: n_ui_init },
+            NativeDef { name: "ui.show", pinned: true, nargs: 1, handler: n_ui_show },
+            NativeDef { name: "sensor.gps", pinned: true, nargs: 0, handler: n_sensor_gps },
+            NativeDef { name: "fs.count", pinned: false, nargs: 0, handler: n_fs_count },
+            NativeDef { name: "fs.size", pinned: false, nargs: 1, handler: n_fs_size },
+            NativeDef { name: "fs.read", pinned: false, nargs: 3, handler: n_fs_read },
+            NativeDef {
+                name: "compute.scan_chunk",
+                pinned: false,
+                nargs: 2,
+                handler: n_scan_chunk,
+            },
+            NativeDef {
+                name: "compute.face_detect",
+                pinned: false,
+                nargs: 3,
+                handler: n_face_detect,
+            },
+            NativeDef {
+                name: "compute.categorize",
+                pinned: false,
+                nargs: 2,
+                handler: n_categorize,
+            },
+        ];
+        let by_name = defs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| (d.name, NativeId(i as u16)))
+            .collect();
+        NativeRegistry { defs, by_name }
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<NativeId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn def(&self, id: NativeId) -> &NativeDef {
+        &self.defs[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.defs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.defs.is_empty()
+    }
+
+    /// Dispatch a native call, recording metrics.
+    pub fn call(&self, id: NativeId, ctx: &mut NativeCtx, args: &[Value]) -> Result<Value> {
+        let def = self.def(id);
+        if args.len() != def.nargs {
+            return Err(CloneCloudError::Native {
+                name: def.name.into(),
+                message: format!("expected {} args, got {}", def.nargs, args.len()),
+            });
+        }
+        if def.pinned && ctx.location != Location::Mobile && !ctx.allow_pinned {
+            return Err(CloneCloudError::Native {
+                name: def.name.into(),
+                message: "pinned native invoked on clone (partitioning violated Property 1)"
+                    .into(),
+            });
+        }
+        *ctx.env.native_calls.entry(def.name.to_string()).or_insert(0) += 1;
+        (def.handler)(ctx, args)
+    }
+}
+
+// ------------------------------------------------------------- handlers
+
+fn err(name: &str, msg: impl Into<String>) -> CloneCloudError {
+    CloneCloudError::Native {
+        name: name.into(),
+        message: msg.into(),
+    }
+}
+
+fn get_bytes<'h>(ctx: &'h NativeCtx, v: &Value, name: &str) -> Result<&'h [u8]> {
+    let id = v.as_ref().ok_or_else(|| err(name, "expected byte-array ref"))?;
+    match &ctx.heap.get(id)?.body {
+        ObjBody::ByteArray(b) => Ok(b),
+        _ => Err(err(name, "expected byte array")),
+    }
+}
+
+fn get_floats<'h>(ctx: &'h NativeCtx, v: &Value, name: &str) -> Result<&'h [f32]> {
+    let id = v.as_ref().ok_or_else(|| err(name, "expected float-array ref"))?;
+    match &ctx.heap.get(id)?.body {
+        ObjBody::FloatArray(f) => Ok(f),
+        _ => Err(err(name, "expected float array")),
+    }
+}
+
+fn n_ui_init(ctx: &mut NativeCtx, _args: &[Value]) -> Result<Value> {
+    ctx.clock.charge_us(ctx.device.scale_us(200.0));
+    ctx.env.ui_log.push("ui.init".into());
+    Ok(Value::Null)
+}
+
+fn n_ui_show(ctx: &mut NativeCtx, args: &[Value]) -> Result<Value> {
+    ctx.clock.charge_us(ctx.device.scale_us(100.0));
+    let text = match args[0] {
+        Value::Int(x) => format!("int:{x}"),
+        Value::Float(x) => format!("float:{x:.4}"),
+        Value::Null => "null".into(),
+        Value::Ref(r) => format!("obj:{}", r.0),
+    };
+    ctx.env.ui_log.push(format!("ui.show {text}"));
+    Ok(Value::Null)
+}
+
+fn n_sensor_gps(ctx: &mut NativeCtx, _args: &[Value]) -> Result<Value> {
+    ctx.clock.charge_us(ctx.device.scale_us(500.0));
+    // Berkeley, where the paper was written.
+    Ok(Value::Float(37.8716))
+}
+
+fn n_fs_count(ctx: &mut NativeCtx, _args: &[Value]) -> Result<Value> {
+    ctx.clock.charge_us(ctx.device.scale_us(20.0));
+    Ok(Value::Int(ctx.env.vfs.count() as i64))
+}
+
+fn n_fs_size(ctx: &mut NativeCtx, args: &[Value]) -> Result<Value> {
+    ctx.clock.charge_us(ctx.device.scale_us(20.0));
+    let i = args[0].as_int().ok_or_else(|| err("fs.size", "bad index"))? as usize;
+    ctx.env
+        .vfs
+        .size(i)
+        .map(|s| Value::Int(s as i64))
+        .ok_or_else(|| err("fs.size", format!("no file {i}")))
+}
+
+fn n_fs_read(ctx: &mut NativeCtx, args: &[Value]) -> Result<Value> {
+    let i = args[0].as_int().ok_or_else(|| err("fs.read", "bad index"))? as usize;
+    let off = args[1].as_int().ok_or_else(|| err("fs.read", "bad offset"))? as usize;
+    let len = args[2].as_int().ok_or_else(|| err("fs.read", "bad len"))? as usize;
+    let data = ctx
+        .env
+        .vfs
+        .read(i, off, len)
+        .ok_or_else(|| err("fs.read", format!("no file {i}")))?
+        .to_vec();
+    // I/O cost: flash-read latency + per-byte.
+    ctx.clock
+        .charge_us(ctx.device.scale_us(50.0 + 0.002 * data.len() as f64));
+    let id = ctx.heap.alloc_byte_array(ctx.array_class, data);
+    Ok(Value::Ref(id))
+}
+
+fn n_scan_chunk(ctx: &mut NativeCtx, args: &[Value]) -> Result<Value> {
+    let name = "compute.scan_chunk";
+    let chunk_bytes = get_bytes(ctx, &args[0], name)?;
+    if chunk_bytes.len() > shapes::CHUNK {
+        return Err(err(name, "chunk too large"));
+    }
+    // Pad to artifact shape with -1 (never matches a byte).
+    let mut chunk = vec![-1.0f32; shapes::CHUNK];
+    for (i, &b) in chunk_bytes.iter().enumerate() {
+        chunk[i] = b as f32;
+    }
+    let sigs = get_floats(ctx, &args[1], name)?.to_vec();
+    let (_counts, total) = ctx.env.compute.scan_chunk(&chunk, &sigs)?;
+    ctx.clock
+        .charge_us(ctx.device.scale_us(ctx.costs.scan_chunk_us));
+    Ok(Value::Int(total as i64))
+}
+
+fn n_face_detect(ctx: &mut NativeCtx, args: &[Value]) -> Result<Value> {
+    let name = "compute.face_detect";
+    let img_bytes = get_bytes(ctx, &args[0], name)?;
+    if img_bytes.len() != shapes::IMG * shapes::IMG {
+        return Err(err(name, format!("image must be {0}x{0}", shapes::IMG)));
+    }
+    let img: Vec<f32> = img_bytes.iter().map(|&b| b as f32 / 255.0).collect();
+    let filters = get_floats(ctx, &args[1], name)?.to_vec();
+    let thresh = args[2]
+        .as_float()
+        .ok_or_else(|| err(name, "bad threshold"))? as f32;
+    let (_maxima, _counts, faces) = ctx.env.compute.face_detect(&img, &filters, thresh)?;
+    ctx.clock
+        .charge_us(ctx.device.scale_us(ctx.costs.face_detect_us));
+    Ok(Value::Int(faces as i64))
+}
+
+fn n_categorize(ctx: &mut NativeCtx, args: &[Value]) -> Result<Value> {
+    let name = "compute.categorize";
+    let users = get_floats(ctx, &args[0], name)?.to_vec();
+    let cats = get_floats(ctx, &args[1], name)?.to_vec();
+    let (_scores, best, best_score) = ctx.env.compute.categorize(&users, &cats)?;
+    ctx.clock
+        .charge_us(ctx.device.scale_us(ctx.costs.categorize_us));
+    // Result object: per-user best scores, with best[0] index encoded in
+    // the app-visible return (float array [best0, score0, score1, ...]).
+    let mut out = Vec::with_capacity(1 + best_score.len());
+    out.push(best[0] as f32);
+    out.extend_from_slice(&best_score);
+    let id = ctx.heap.alloc_float_array(ctx.array_class, out);
+    Ok(Value::Ref(id))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::bytecode::ClassId;
+
+    fn ctx_parts() -> (Heap, VirtualClock, DeviceSpec, CostParams, NodeEnv) {
+        (
+            Heap::new(),
+            VirtualClock::new(),
+            DeviceSpec::clone_desktop(),
+            CostParams::default(),
+            NodeEnv::with_rust_compute(SimFs::new()),
+        )
+    }
+
+    macro_rules! ctx {
+        ($h:ident, $c:ident, $d:ident, $costs:ident, $e:ident) => {
+            NativeCtx {
+                heap: &mut $h,
+                clock: &mut $c,
+                device: &$d,
+                costs: &$costs,
+                location: Location::Mobile,
+                env: &mut $e,
+                array_class: ClassId(0),
+                allow_pinned: false,
+            }
+        };
+    }
+
+    #[test]
+    fn registry_lookup_and_arity() {
+        let reg = NativeRegistry::standard();
+        assert!(reg.lookup("fs.read").is_some());
+        assert!(reg.lookup("nope").is_none());
+        let (mut h, mut c, d, costs, mut e) = ctx_parts();
+        let mut cx = ctx!(h, c, d, costs, e);
+        let id = reg.lookup("fs.count").unwrap();
+        // Wrong arity.
+        assert!(reg.call(id, &mut cx, &[Value::Int(1)]).is_err());
+    }
+
+    #[test]
+    fn pinned_native_rejected_on_clone() {
+        let reg = NativeRegistry::standard();
+        let (mut h, mut c, d, costs, mut e) = ctx_parts();
+        let mut cx = ctx!(h, c, d, costs, e);
+        cx.location = Location::Clone;
+        let id = reg.lookup("ui.init").unwrap();
+        let r = reg.call(id, &mut cx, &[]);
+        assert!(r.is_err(), "Property 1 enforced at runtime");
+        cx.location = Location::Mobile;
+        assert!(reg.call(id, &mut cx, &[]).is_ok());
+    }
+
+    #[test]
+    fn fs_read_allocates_byte_array_and_charges_time() {
+        let reg = NativeRegistry::standard();
+        let (mut h, mut c, d, costs, mut e) = ctx_parts();
+        e.vfs.add("f", vec![9, 8, 7, 6]);
+        let mut cx = ctx!(h, c, d, costs, e);
+        let id = reg.lookup("fs.read").unwrap();
+        let v = reg
+            .call(id, &mut cx, &[Value::Int(0), Value::Int(1), Value::Int(2)])
+            .unwrap();
+        let oid = v.as_ref().unwrap();
+        match &cx.heap.get(oid).unwrap().body {
+            ObjBody::ByteArray(b) => assert_eq!(b, &vec![8, 7]),
+            _ => panic!("expected byte array"),
+        }
+        assert!(cx.clock.now_us() > 0.0);
+    }
+
+    #[test]
+    fn rust_compute_scan_finds_planted_sig() {
+        let b = RustCompute;
+        let mut sigs = vec![0f32; shapes::SIG_LEN * shapes::N_SIGS];
+        // Signature 5: bytes 1..=16.
+        for k in 0..shapes::SIG_LEN {
+            sigs[k * shapes::N_SIGS + 5] = (k + 1) as f32;
+        }
+        let mut chunk = vec![300.0f32; shapes::CHUNK];
+        for k in 0..shapes::SIG_LEN {
+            chunk[100 + k] = (k + 1) as f32;
+        }
+        let (counts, total) = b.scan_chunk(&chunk, &sigs).unwrap();
+        assert_eq!(total, 1.0);
+        assert_eq!(counts[5], 1.0);
+    }
+
+    #[test]
+    fn rust_compute_categorize_identical_vector_wins() {
+        let b = RustCompute;
+        let mut cats = vec![0f32; shapes::KDIM * shapes::N_CATS];
+        let mut rng = crate::util::rng::Rng::new(4);
+        for v in cats.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let mut users = vec![0f32; shapes::N_USERS * shapes::KDIM];
+        for u in 0..shapes::N_USERS {
+            for k in 0..shapes::KDIM {
+                users[u * shapes::KDIM + k] = cats[k * shapes::N_CATS + 37];
+            }
+        }
+        let (_s, best, best_score) = b.categorize(&users, &cats).unwrap();
+        assert!(best.iter().all(|&x| x == 37));
+        assert!(best_score.iter().all(|&s| (s - 1.0).abs() < 1e-4));
+    }
+
+    #[test]
+    fn rust_compute_face_detect_planted() {
+        let b = RustCompute;
+        let mut filters = vec![0f32; 64 * shapes::N_FILTERS];
+        let mut rng = crate::util::rng::Rng::new(5);
+        for f in 0..shapes::N_FILTERS {
+            let mut mean = 0.0;
+            let mut col = vec![0f32; 64];
+            for item in col.iter_mut() {
+                *item = rng.range_f32(-1.0, 1.0);
+                mean += *item;
+            }
+            mean /= 64.0;
+            for (k, item) in col.iter().enumerate() {
+                filters[k * shapes::N_FILTERS + f] = item - mean;
+            }
+        }
+        let mut img = vec![0f32; shapes::IMG * shapes::IMG];
+        // Plant filter 2's pattern at (10, 10), amplified.
+        let mut self_dot = 0.0f32;
+        for dr in 0..8 {
+            for dc in 0..8 {
+                let w = filters[(dr * 8 + dc) * shapes::N_FILTERS + 2];
+                img[(10 + dr) * shapes::IMG + 10 + dc] = 3.0 * w;
+                self_dot += 3.0 * w * w;
+            }
+        }
+        let (maxima, counts, faces) = b.face_detect(&img, &filters, self_dot * 0.9).unwrap();
+        assert!(faces >= 1.0);
+        assert!(counts[2] >= 1.0);
+        assert!((maxima[2] - self_dot).abs() < 1e-3);
+    }
+}

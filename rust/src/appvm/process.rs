@@ -1,0 +1,258 @@
+//! A DroidVM process: heap + statics + threads + environment.
+//!
+//! Processes are forked from the Zygote template (paper §4.3): the warm
+//! system heap is copied in, then the app's `main` thread is spawned.
+//! The process also carries the virtual clock and the device spec it is
+//! executing on, so interpreted and native work charge the right costs.
+
+use std::sync::Arc;
+
+use super::bytecode::{ClassId, MRef};
+use super::class::Program;
+use super::heap::Heap;
+use super::natives::NodeEnv;
+use super::thread::{Frame, ThreadStatus, VmThread};
+use super::value::Value;
+use crate::clock::VirtualClock;
+use crate::config::CostParams;
+use crate::device::{DeviceSpec, Location};
+use crate::error::{CloneCloudError, Result};
+
+/// Runtime counters for one process.
+#[derive(Debug, Clone, Default)]
+pub struct VmMetrics {
+    pub instrs: u64,
+    pub invokes: u64,
+    pub native_calls: u64,
+    pub allocations: u64,
+}
+
+/// One running VM process.
+pub struct Process {
+    pub program: Arc<Program>,
+    pub heap: Heap,
+    /// Static fields, indexed [class][static-slot].
+    pub statics: Vec<Vec<Value>>,
+    pub threads: Vec<VmThread>,
+    pub clock: VirtualClock,
+    pub device: DeviceSpec,
+    pub location: Location,
+    pub env: NodeEnv,
+    pub metrics: VmMetrics,
+    /// Class used for arrays allocated by natives and `NewArray`.
+    pub array_class: ClassId,
+    /// Cost calibration override; `None` uses `CostParams::default()`.
+    pub cost_params: Option<CostParams>,
+    /// Allow pinned (V_M) natives to run on the clone. Used for the
+    /// clone-monolithic baseline ("execution at the clone alone",
+    /// Table 1 col. 4) and for clone-side profiling runs — the paper's
+    /// clone is a full Android image where UI/sensor calls exist.
+    pub allow_pinned: bool,
+}
+
+impl Process {
+    /// Create a process with an empty heap (no Zygote warmup).
+    pub fn new(
+        program: Arc<Program>,
+        device: DeviceSpec,
+        location: Location,
+        env: NodeEnv,
+    ) -> Process {
+        let statics = program
+            .classes
+            .iter()
+            .map(|c| vec![Value::Null; c.statics.len()])
+            .collect();
+        // Array class: a system class named "[arr]" if present, else 0.
+        let array_class = program.class_id("[arr]").unwrap_or(ClassId(0));
+        Process {
+            program,
+            heap: Heap::new(),
+            statics,
+            threads: Vec::new(),
+            clock: VirtualClock::new(),
+            device,
+            location,
+            env,
+            metrics: VmMetrics::default(),
+            array_class,
+            cost_params: None,
+            allow_pinned: false,
+        }
+    }
+
+    /// Fork from a Zygote template heap (copy-on-fork semantics: the
+    /// template objects arrive clean, with their (class, seq) names).
+    pub fn fork_from_zygote(
+        program: Arc<Program>,
+        zygote_heap: &Heap,
+        device: DeviceSpec,
+        location: Location,
+        env: NodeEnv,
+    ) -> Process {
+        let mut p = Process::new(program, device, location, env);
+        p.heap = zygote_heap.clone();
+        p
+    }
+
+    /// Spawn a thread entering `mref` with the given arguments.
+    pub fn spawn_thread(&mut self, mref: MRef, args: &[Value]) -> Result<u32> {
+        let m = self.program.method(mref);
+        if m.is_native() {
+            return Err(CloneCloudError::vm("cannot spawn a thread on a native method"));
+        }
+        if args.len() != m.nargs {
+            return Err(CloneCloudError::vm(format!(
+                "{} expects {} args, got {}",
+                self.program.method_name(mref),
+                m.nargs,
+                args.len()
+            )));
+        }
+        let mut frame = Frame::new(mref, m.nregs, None);
+        frame.regs[..args.len()].copy_from_slice(args);
+        let id = self.threads.len() as u32;
+        let mut t = VmThread::new(id);
+        t.frames.push(frame);
+        self.threads.push(t);
+        Ok(id)
+    }
+
+    pub fn thread(&self, tid: u32) -> Result<&VmThread> {
+        self.threads
+            .get(tid as usize)
+            .ok_or_else(|| CloneCloudError::vm(format!("no thread {tid}")))
+    }
+
+    pub fn thread_mut(&mut self, tid: u32) -> Result<&mut VmThread> {
+        self.threads
+            .get_mut(tid as usize)
+            .ok_or_else(|| CloneCloudError::vm(format!("no thread {tid}")))
+    }
+
+    /// GC roots: all thread frames plus all static fields.
+    pub fn gc_roots(&self) -> Vec<super::value::ObjId> {
+        let mut roots = Vec::new();
+        for t in &self.threads {
+            if t.status != ThreadStatus::Finished {
+                roots.extend(t.roots());
+            }
+        }
+        for class_statics in &self.statics {
+            roots.extend(class_statics.iter().filter_map(|v| v.as_ref()));
+        }
+        roots
+    }
+
+    /// Run a garbage collection; returns objects collected.
+    pub fn gc(&mut self) -> usize {
+        let roots = self.gc_roots();
+        self.heap.gc(&roots)
+    }
+
+    /// Suspend all threads except `except` at their next safe point (the
+    /// paper's migrator waits for this before capturing, §5). In this
+    /// single-threaded-interpreter model the others are already at
+    /// instruction boundaries, so the suspension takes effect now.
+    pub fn suspend_others(&mut self, except: u32) {
+        for t in &mut self.threads {
+            if t.id != except && t.status == ThreadStatus::Runnable {
+                t.request_suspend();
+                t.status = ThreadStatus::Suspended;
+            }
+        }
+    }
+
+    pub fn resume_others(&mut self, except: u32) {
+        for t in &mut self.threads {
+            if t.id != except {
+                t.resume();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::bytecode::Instr;
+    use crate::appvm::class::{ClassDef, MethodDef};
+    use crate::vfs::SimFs;
+
+    fn program() -> Arc<Program> {
+        let mut p = Program::new();
+        let mut c = ClassDef::new("App", false);
+        c.add_static("s");
+        c.add_method(MethodDef {
+            name: "main".into(),
+            nargs: 1,
+            nregs: 3,
+            code: vec![Instr::Return(None)],
+            native: None,
+            pinned: true,
+            native_state: false,
+            migration_point: None,
+        });
+        p.add_class(c);
+        p.into_shared()
+    }
+
+    fn process() -> Process {
+        Process::new(
+            program(),
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        )
+    }
+
+    #[test]
+    fn spawn_validates_args() {
+        let mut p = process();
+        let main = p.program.entry().unwrap();
+        assert!(p.spawn_thread(main, &[]).is_err(), "wrong arity");
+        let tid = p.spawn_thread(main, &[Value::Int(1)]).unwrap();
+        assert_eq!(tid, 0);
+        assert_eq!(p.thread(0).unwrap().depth(), 1);
+    }
+
+    #[test]
+    fn fork_copies_zygote_heap() {
+        let mut zh = Heap::new();
+        for _ in 0..10 {
+            zh.alloc_zygote(crate::appvm::value::Object::new_fields(ClassId(0), 2));
+        }
+        let p = Process::fork_from_zygote(
+            program(),
+            &zh,
+            DeviceSpec::clone_desktop(),
+            Location::Clone,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        );
+        assert_eq!(p.heap.len(), 10);
+    }
+
+    #[test]
+    fn suspend_others_skips_self() {
+        let mut p = process();
+        let main = p.program.entry().unwrap();
+        p.spawn_thread(main, &[Value::Int(0)]).unwrap();
+        p.spawn_thread(main, &[Value::Int(0)]).unwrap();
+        p.suspend_others(0);
+        assert_eq!(p.thread(0).unwrap().status, ThreadStatus::Runnable);
+        assert_eq!(p.thread(1).unwrap().status, ThreadStatus::Suspended);
+        p.resume_others(0);
+        assert_eq!(p.thread(1).unwrap().status, ThreadStatus::Runnable);
+    }
+
+    #[test]
+    fn gc_roots_include_statics() {
+        let mut p = process();
+        let obj = p.heap.alloc(crate::appvm::value::Object::new_fields(ClassId(0), 0));
+        p.statics[0][0] = Value::Ref(obj);
+        assert!(p.gc_roots().contains(&obj));
+        assert_eq!(p.gc(), 0, "static-rooted object survives");
+        p.statics[0][0] = Value::Null;
+        assert_eq!(p.gc(), 1);
+    }
+}

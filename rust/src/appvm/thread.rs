@@ -1,0 +1,156 @@
+//! VM threads: virtual stacks, registers, suspend machinery.
+//!
+//! Matches the paper's §2/§5 thread model: each thread owns a virtual
+//! stack of frames (registers + pc); a per-thread suspend counter is
+//! checked at bytecode boundaries so threads stop at *safe points* — the
+//! property the migrator relies on to capture consistent state.
+
+use super::bytecode::{MRef, Reg};
+use super::value::Value;
+
+/// One virtual stack frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub method: MRef,
+    pub regs: Vec<Value>,
+    /// Program counter: index of the NEXT instruction to execute.
+    pub pc: usize,
+    /// Register in the CALLER's frame that receives this frame's return
+    /// value (None for void-context calls).
+    pub ret_reg: Option<Reg>,
+}
+
+impl Frame {
+    pub fn new(method: MRef, nregs: usize, ret_reg: Option<Reg>) -> Frame {
+        Frame {
+            method,
+            regs: vec![Value::Null; nregs],
+            pc: 0,
+            ret_reg,
+        }
+    }
+
+    /// Root object references held in this frame's registers.
+    pub fn ref_roots(&self) -> impl Iterator<Item = super::value::ObjId> + '_ {
+        self.regs.iter().filter_map(|v| v.as_ref())
+    }
+}
+
+/// Thread lifecycle states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThreadStatus {
+    Runnable,
+    /// Suspended by the migrator (suspend counter > 0).
+    Suspended,
+    /// State shipped to the other device; frames here are a tombstone.
+    Migrated,
+    Finished,
+}
+
+/// A VM thread.
+#[derive(Debug, Clone)]
+pub struct VmThread {
+    pub id: u32,
+    pub frames: Vec<Frame>,
+    pub status: ThreadStatus,
+    /// Pending-suspend counter, checked after every instruction (the
+    /// Dalvik safe-point mechanism the prototype reuses, §5).
+    pub suspend_count: u32,
+    /// Virtual time consumed by this thread, µs.
+    pub cpu_us: f64,
+}
+
+impl VmThread {
+    pub fn new(id: u32) -> VmThread {
+        VmThread {
+            id,
+            frames: Vec::new(),
+            status: ThreadStatus::Runnable,
+            suspend_count: 0,
+            cpu_us: 0.0,
+        }
+    }
+
+    pub fn current_frame(&self) -> Option<&Frame> {
+        self.frames.last()
+    }
+
+    pub fn current_frame_mut(&mut self) -> Option<&mut Frame> {
+        self.frames.last_mut()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Request suspension; the interpreter honors it at the next safe
+    /// point (instruction boundary).
+    pub fn request_suspend(&mut self) {
+        self.suspend_count += 1;
+    }
+
+    pub fn resume(&mut self) {
+        if self.suspend_count > 0 {
+            self.suspend_count -= 1;
+        }
+        if self.suspend_count == 0 && self.status == ThreadStatus::Suspended {
+            self.status = ThreadStatus::Runnable;
+        }
+    }
+
+    /// All object roots across the thread's frames (capture roots).
+    pub fn roots(&self) -> Vec<super::value::ObjId> {
+        let mut out = Vec::new();
+        for f in &self.frames {
+            out.extend(f.ref_roots());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::bytecode::{ClassId, MethodId};
+    use crate::appvm::value::ObjId;
+
+    fn mref() -> MRef {
+        MRef {
+            class: ClassId(0),
+            method: MethodId(0),
+        }
+    }
+
+    #[test]
+    fn frame_roots() {
+        let mut f = Frame::new(mref(), 4, None);
+        f.regs[1] = Value::Ref(ObjId(7));
+        f.regs[3] = Value::Ref(ObjId(9));
+        let roots: Vec<_> = f.ref_roots().collect();
+        assert_eq!(roots, vec![ObjId(7), ObjId(9)]);
+    }
+
+    #[test]
+    fn suspend_resume_counts() {
+        let mut t = VmThread::new(0);
+        t.request_suspend();
+        t.request_suspend();
+        t.status = ThreadStatus::Suspended;
+        t.resume();
+        assert_eq!(t.status, ThreadStatus::Suspended, "count still 1");
+        t.resume();
+        assert_eq!(t.status, ThreadStatus::Runnable);
+    }
+
+    #[test]
+    fn thread_roots_span_frames() {
+        let mut t = VmThread::new(0);
+        let mut f1 = Frame::new(mref(), 2, None);
+        f1.regs[0] = Value::Ref(ObjId(1));
+        let mut f2 = Frame::new(mref(), 2, None);
+        f2.regs[1] = Value::Ref(ObjId(2));
+        t.frames.push(f1);
+        t.frames.push(f2);
+        assert_eq!(t.roots(), vec![ObjId(1), ObjId(2)]);
+    }
+}

@@ -1,0 +1,157 @@
+//! VM values and heap objects.
+//!
+//! Every heap object carries the per-VM monotonically-increasing object id
+//! the paper's object-mapping table is built on (§4.2: MIDs at the mobile
+//! device, CIDs at the clone), plus the Zygote bookkeeping used by the
+//! transfer optimization of §4.3.
+
+use super::bytecode::ClassId;
+
+/// A per-VM unique object id, assigned from a monotonic counter at object
+/// creation. Never reused, unlike raw addresses — this is what lets the
+/// migrator distinguish a recycled address from the original object
+/// (paper Fig. 8, address 0x22).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjId(pub u64);
+
+/// A VM register / field value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    Null,
+    Int(i64),
+    Float(f64),
+    Ref(ObjId),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_ref(&self) -> Option<ObjId> {
+        match self {
+            Value::Ref(r) => Some(*r),
+            _ => None,
+        }
+    }
+    pub fn is_truthy(&self) -> bool {
+        match self {
+            Value::Null => false,
+            Value::Int(x) => *x != 0,
+            Value::Float(x) => *x != 0.0,
+            Value::Ref(_) => true,
+        }
+    }
+}
+
+impl Default for Value {
+    fn default() -> Self {
+        Value::Null
+    }
+}
+
+/// Object payload. Byte and float arrays are packed (realistic state
+/// sizes for the migration cost model); `Fields` and `RefArray` hold
+/// boxed values that may reference other objects.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObjBody {
+    Fields(Vec<Value>),
+    ByteArray(Vec<u8>),
+    FloatArray(Vec<f32>),
+    RefArray(Vec<Value>),
+}
+
+impl ObjBody {
+    /// Approximate serialized size in bytes (used for edge annotations in
+    /// profile trees and for the transfer cost model).
+    pub fn byte_size(&self) -> u64 {
+        match self {
+            ObjBody::Fields(vs) | ObjBody::RefArray(vs) => 9 * vs.len() as u64,
+            ObjBody::ByteArray(b) => b.len() as u64,
+            ObjBody::FloatArray(f) => 4 * f.len() as u64,
+        }
+    }
+
+    /// References held by this object.
+    pub fn refs(&self) -> Vec<ObjId> {
+        match self {
+            ObjBody::Fields(vs) | ObjBody::RefArray(vs) => {
+                vs.iter().filter_map(|v| v.as_ref()).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// A heap object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Object {
+    pub class: ClassId,
+    pub body: ObjBody,
+    /// Zygote naming: `(class, construction sequence)` for objects created
+    /// in the template process (paper §4.3); `None` for app objects.
+    pub zygote_seq: Option<u32>,
+    /// Mutated since the process was forked from Zygote. Clean Zygote
+    /// objects are skipped by the transfer optimization.
+    pub dirty: bool,
+}
+
+impl Object {
+    pub fn new_fields(class: ClassId, n: usize) -> Object {
+        Object {
+            class,
+            body: ObjBody::Fields(vec![Value::Null; n]),
+            zygote_seq: None,
+            dirty: true,
+        }
+    }
+
+    pub fn byte_size(&self) -> u64 {
+        // Header (class id + object id + flags) + payload.
+        16 + self.body.byte_size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_int(), Some(3));
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(2.5).as_float(), Some(2.5));
+        assert_eq!(Value::Null.as_int(), None);
+        assert!(Value::Ref(ObjId(1)).is_truthy());
+        assert!(!Value::Null.is_truthy());
+        assert!(!Value::Int(0).is_truthy());
+    }
+
+    #[test]
+    fn body_sizes() {
+        assert_eq!(ObjBody::ByteArray(vec![0; 100]).byte_size(), 100);
+        assert_eq!(ObjBody::FloatArray(vec![0.0; 10]).byte_size(), 40);
+        assert_eq!(ObjBody::Fields(vec![Value::Null; 3]).byte_size(), 27);
+    }
+
+    #[test]
+    fn refs_extraction() {
+        let b = ObjBody::Fields(vec![
+            Value::Ref(ObjId(5)),
+            Value::Int(1),
+            Value::Ref(ObjId(9)),
+            Value::Null,
+        ]);
+        assert_eq!(b.refs(), vec![ObjId(5), ObjId(9)]);
+        assert!(ObjBody::ByteArray(vec![1, 2]).refs().is_empty());
+    }
+}

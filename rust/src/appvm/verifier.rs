@@ -1,0 +1,271 @@
+//! Bytecode verifier.
+//!
+//! Static well-formedness checks run at load time (and after the
+//! partitioner's rewriter touches a binary): register indices within the
+//! frame, branch targets inside the method, invoke arity matching the
+//! callee, field/static indices in range, terminal instruction present.
+//! A rewritten executable must re-verify — this catches rewriter bugs
+//! before they become migration-time faults.
+
+use super::bytecode::{Instr, MRef};
+use super::class::Program;
+use crate::error::{CloneCloudError, Result};
+
+fn verr(p: &Program, m: MRef, msg: impl Into<String>) -> CloneCloudError {
+    CloneCloudError::Verify {
+        method: p.method_name(m),
+        message: msg.into(),
+    }
+}
+
+/// Verify every method of the program.
+pub fn verify_program(p: &Program) -> Result<()> {
+    for mref in p.all_methods() {
+        verify_method(p, mref)?;
+    }
+    Ok(())
+}
+
+/// Verify one method.
+pub fn verify_method(p: &Program, mref: MRef) -> Result<()> {
+    let m = p.method(mref);
+    if m.is_native() {
+        if !m.code.is_empty() {
+            return Err(verr(p, mref, "native method with bytecode"));
+        }
+        return Ok(());
+    }
+    if m.code.is_empty() {
+        return Err(verr(p, mref, "empty body"));
+    }
+    if m.nregs < m.nargs {
+        return Err(verr(p, mref, "fewer registers than arguments"));
+    }
+    if m.nregs > u8::MAX as usize + 1 {
+        return Err(verr(p, mref, "more than 256 registers"));
+    }
+    let nregs = m.nregs;
+    let len = m.code.len() as u32;
+
+    let chk_reg = |r: u8| -> Result<()> {
+        if (r as usize) < nregs {
+            Ok(())
+        } else {
+            Err(verr(p, mref, format!("register r{r} out of range (regs={nregs})")))
+        }
+    };
+    let chk_target = |t: u32| -> Result<()> {
+        if t < len {
+            Ok(())
+        } else {
+            Err(verr(p, mref, format!("branch target {t} out of range (len={len})")))
+        }
+    };
+
+    for (pc, instr) in m.code.iter().enumerate() {
+        match instr {
+            Instr::Nop | Instr::CcStart(_) | Instr::CcStop(_) => {}
+            Instr::Const(d, _) | Instr::ConstF(d, _) => chk_reg(*d)?,
+            Instr::Move(d, s)
+            | Instr::ArrLen(d, s)
+            | Instr::IntToFloat(d, s)
+            | Instr::FloatToInt(d, s) => {
+                chk_reg(*d)?;
+                chk_reg(*s)?;
+            }
+            Instr::IntBin(_, d, a, b)
+            | Instr::FloatBin(_, d, a, b)
+            | Instr::Cmp(_, d, a, b)
+            | Instr::ArrGet(d, a, b)
+            | Instr::ArrPut(d, a, b) => {
+                chk_reg(*d)?;
+                chk_reg(*a)?;
+                chk_reg(*b)?;
+            }
+            Instr::IfZ(r, t) | Instr::IfNZ(r, t) => {
+                chk_reg(*r)?;
+                chk_target(*t)?;
+            }
+            Instr::IfCmp(_, a, b, t) => {
+                chk_reg(*a)?;
+                chk_reg(*b)?;
+                chk_target(*t)?;
+            }
+            Instr::Goto(t) => chk_target(*t)?,
+            Instr::Invoke { mref: callee, ret, args } => {
+                if callee.class.0 as usize >= p.classes.len() {
+                    return Err(verr(p, mref, "invoke: class out of range"));
+                }
+                let cdef = p.class(callee.class);
+                if callee.method.0 as usize >= cdef.methods.len() {
+                    return Err(verr(p, mref, "invoke: method out of range"));
+                }
+                let callee_def = p.method(*callee);
+                if args.len() != callee_def.nargs {
+                    return Err(verr(
+                        p,
+                        mref,
+                        format!(
+                            "invoke {} with {} args (wants {})",
+                            p.method_name(*callee),
+                            args.len(),
+                            callee_def.nargs
+                        ),
+                    ));
+                }
+                if let Some(r) = ret {
+                    chk_reg(*r)?;
+                }
+                for a in args {
+                    chk_reg(*a)?;
+                }
+            }
+            Instr::Return(Some(r)) => chk_reg(*r)?,
+            Instr::Return(None) => {}
+            Instr::New(d, class) => {
+                chk_reg(*d)?;
+                if class.0 as usize >= p.classes.len() {
+                    return Err(verr(p, mref, "new: class out of range"));
+                }
+            }
+            Instr::GetField(d, o, idx) => {
+                chk_reg(*d)?;
+                chk_reg(*o)?;
+                // Field index can't be checked against a class statically
+                // (objects are untyped); bound it loosely.
+                let _ = idx;
+            }
+            Instr::PutField(o, _idx, s) => {
+                chk_reg(*o)?;
+                chk_reg(*s)?;
+            }
+            Instr::GetStatic(d, class, idx) => {
+                chk_reg(*d)?;
+                chk_static(p, mref, *class, *idx)?;
+            }
+            Instr::PutStatic(class, idx, s) => {
+                chk_reg(*s)?;
+                chk_static(p, mref, *class, *idx)?;
+            }
+            Instr::NewArray(d, _, l) => {
+                chk_reg(*d)?;
+                chk_reg(*l)?;
+            }
+        }
+        // Fall-through off the end: last instruction must be terminal
+        // (return or unconditional branch).
+        if pc as u32 == len - 1 {
+            match instr {
+                Instr::Return(_) | Instr::Goto(_) => {}
+                _ => return Err(verr(p, mref, "method can fall off the end")),
+            }
+        }
+    }
+    Ok(())
+}
+
+fn chk_static(
+    p: &Program,
+    m: MRef,
+    class: super::bytecode::ClassId,
+    idx: u16,
+) -> Result<()> {
+    if class.0 as usize >= p.classes.len() {
+        return Err(verr(p, m, "static: class out of range"));
+    }
+    if idx as usize >= p.class(class).statics.len() {
+        return Err(verr(p, m, format!("static index {idx} out of range")));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::bytecode::{ClassId, MethodId};
+    use crate::appvm::class::{ClassDef, MethodDef};
+
+    fn method(code: Vec<Instr>, nregs: usize) -> Program {
+        let mut p = Program::new();
+        let mut c = ClassDef::new("T", false);
+        c.add_static("s");
+        c.add_method(MethodDef {
+            name: "main".into(),
+            nargs: 0,
+            nregs,
+            code,
+            native: None,
+            pinned: true,
+            native_state: false,
+            migration_point: None,
+        });
+        p.add_class(c);
+        p
+    }
+
+    #[test]
+    fn accepts_valid_assembled_program() {
+        let p = assemble(
+            "class A app\n  method main nargs=0 regs=3\n    const r0 1\n    ifz r0 @x\n  x:\n    retv\n  end\nend\n",
+        )
+        .unwrap();
+        verify_program(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_register_out_of_range() {
+        let p = method(vec![Instr::Const(5, 1), Instr::Return(None)], 2);
+        let e = verify_program(&p).unwrap_err().to_string();
+        assert!(e.contains("r5"), "{e}");
+    }
+
+    #[test]
+    fn rejects_branch_out_of_range() {
+        let p = method(vec![Instr::Goto(99)], 1);
+        assert!(verify_program(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_fall_off_end() {
+        let p = method(vec![Instr::Const(0, 1)], 1);
+        let e = verify_program(&p).unwrap_err().to_string();
+        assert!(e.contains("fall off"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_invoke_arity() {
+        let p = method(
+            vec![
+                Instr::Invoke {
+                    mref: MRef {
+                        class: ClassId(0),
+                        method: MethodId(0),
+                    },
+                    ret: None,
+                    args: vec![0, 0],
+                },
+                Instr::Return(None),
+            ],
+            1,
+        );
+        assert!(verify_program(&p).is_err(), "main takes 0 args");
+    }
+
+    #[test]
+    fn rejects_bad_static_index() {
+        let p = method(
+            vec![Instr::GetStatic(0, ClassId(0), 7), Instr::Return(None)],
+            1,
+        );
+        assert!(verify_program(&p).is_err());
+    }
+
+    #[test]
+    fn ccstart_ccstop_are_legal_anywhere_but_not_terminal() {
+        let p = method(vec![Instr::CcStart(0), Instr::Return(None)], 1);
+        verify_program(&p).unwrap();
+        let p2 = method(vec![Instr::CcStop(0)], 1);
+        assert!(verify_program(&p2).is_err(), "ccstop cannot be terminal");
+    }
+}

@@ -1,0 +1,140 @@
+//! The Zygote template process (paper §4.3).
+//!
+//! Android forks every app process from a warm "Zygote" template whose
+//! heap already holds ~40,000 system objects. Because an identical
+//! template boots independently on the phone and on the clone, CloneCloud
+//! can avoid transmitting any Zygote object that is still clean, naming
+//! objects by (class name, construction sequence) — an assumption the
+//! paper verified holds across Zygote instances.
+//!
+//! This module builds a deterministic template heap: same program + same
+//! parameters ⇒ byte-identical object population and identical
+//! (class, seq) names on both devices, independently constructed.
+
+use std::sync::Arc;
+
+use super::bytecode::ClassId;
+use super::class::{ClassDef, Program};
+use super::heap::Heap;
+use super::value::{ObjBody, Object, Value};
+use crate::util::rng::Rng;
+
+/// Names of the synthetic system classes warmed in the template.
+pub const ZYGOTE_CLASSES: &[&str] = &[
+    "sys.String",
+    "sys.HashMapEntry",
+    "sys.Resource",
+    "sys.WidgetStyle",
+    "sys.FontGlyph",
+];
+
+/// Add the Zygote system classes (and the array class) to a program.
+/// Idempotent: skips classes that already exist.
+pub fn install_system_classes(program: &mut Program) {
+    if program.class_id("[arr]").is_none() {
+        program.add_class(ClassDef::new("[arr]", true));
+    }
+    for name in ZYGOTE_CLASSES {
+        if program.class_id(name).is_none() {
+            let mut c = ClassDef::new(name, true);
+            c.add_field("a");
+            c.add_field("b");
+            program.add_class(c);
+        }
+    }
+}
+
+/// Build the template heap with `n_objects` system objects. Construction
+/// order is deterministic in (program, n_objects, seed), so two Zygotes
+/// booted with the same parameters produce identical (class, seq) names —
+/// the §4.3 assumption, which `tests` verify.
+pub fn build_template(program: &Arc<Program>, n_objects: usize, seed: u64) -> Heap {
+    let mut heap = Heap::new();
+    let mut rng = Rng::new(seed);
+    let class_ids: Vec<ClassId> = ZYGOTE_CLASSES
+        .iter()
+        .map(|n| program.class_id(n).expect("system classes installed"))
+        .collect();
+    let mut prev: Option<Value> = None;
+    for i in 0..n_objects {
+        let class = class_ids[i % class_ids.len()];
+        // Small payloads: a couple of fields, sometimes chaining to the
+        // previous object so the template has realistic reference
+        // structure for capture traversals.
+        let chain = if rng.chance(0.3) {
+            prev.unwrap_or(Value::Null)
+        } else {
+            Value::Null
+        };
+        let obj = Object {
+            class,
+            body: ObjBody::Fields(vec![Value::Int(rng.range_i64(0, 1 << 20)), chain]),
+            zygote_seq: None, // assigned by alloc_zygote
+            dirty: true,      // cleared by alloc_zygote
+        };
+        let id = heap.alloc_zygote(obj);
+        prev = Some(Value::Ref(id));
+    }
+    heap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn program() -> Arc<Program> {
+        let mut p = Program::new();
+        install_system_classes(&mut p);
+        p.into_shared()
+    }
+
+    #[test]
+    fn template_is_deterministic_across_boots() {
+        let p = program();
+        let a = build_template(&p, 1000, 42);
+        let b = build_template(&p, 1000, 42);
+        // Identical ids, classes, sequences, payloads.
+        let mut ids_a: Vec<_> = a.iter().map(|(id, _)| id).collect();
+        let mut ids_b: Vec<_> = b.iter().map(|(id, _)| id).collect();
+        ids_a.sort_unstable();
+        ids_b.sort_unstable();
+        assert_eq!(ids_a, ids_b);
+        for id in ids_a {
+            assert_eq!(a.get(id).unwrap(), b.get(id).unwrap());
+        }
+    }
+
+    #[test]
+    fn template_objects_are_clean_with_seq_names() {
+        let p = program();
+        let h = build_template(&p, 500, 1);
+        for (_, obj) in h.iter() {
+            assert!(!obj.dirty);
+            assert!(obj.zygote_seq.is_some());
+        }
+        assert_eq!(h.len(), 500);
+    }
+
+    #[test]
+    fn class_seq_pairs_are_unique() {
+        let p = program();
+        let h = build_template(&p, 777, 9);
+        let mut names: Vec<(ClassId, u32)> = h
+            .iter()
+            .map(|(_, o)| (o.class, o.zygote_seq.unwrap()))
+            .collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "(class, seq) is a unique name");
+    }
+
+    #[test]
+    fn install_is_idempotent() {
+        let mut p = Program::new();
+        install_system_classes(&mut p);
+        let n = p.classes.len();
+        install_system_classes(&mut p);
+        assert_eq!(p.classes.len(), n);
+    }
+}

@@ -1,0 +1,239 @@
+//! Class-granularity MINCUT partitioning baseline (paper §7).
+//!
+//! The related work the paper contrasts against ([20, 25, 28]) partitions
+//! Java *classes* into phone/server groups with MINCUT-style heuristics,
+//! placing remote calls through synchronous RPC (RMI), and cannot place
+//! classes with native state remotely. This module reproduces that
+//! design point so the ablation bench (E8) can show what CloneCloud's
+//! method granularity + native-everywhere + thread migration buy.
+//!
+//! The model: choose a location per app class minimizing
+//!   Σ_m comp(m, loc(class(m)))  +  Σ_{cross-boundary DC edges} RPC cost,
+//! where RPC cost is per *invocation* (one synchronous round trip each).
+//! Classes containing pinned methods, native-state methods, or `main`
+//! are anchored to the phone. Solved exactly by enumeration (apps have a
+//! handful of classes).
+
+use std::collections::HashMap;
+
+use crate::appvm::bytecode::ClassId;
+use crate::appvm::class::Program;
+use crate::config::NetworkProfile;
+use crate::device::Location;
+use crate::error::{CloneCloudError, Result};
+use crate::partitioner::{Cfg, CostModel};
+
+/// Result of the class-level baseline.
+#[derive(Debug, Clone)]
+pub struct ClassPartition {
+    pub locations: HashMap<ClassId, Location>,
+    /// Modeled execution time (µs).
+    pub expected_us: f64,
+    /// All-local cost for comparison (µs).
+    pub local_us: f64,
+    pub remote_classes: Vec<String>,
+}
+
+/// Bytes assumed per RPC call (marshalled args + return).
+const RPC_BYTES: u64 = 256;
+
+/// Solve the class-granularity baseline.
+pub fn solve_class_partition(
+    program: &Program,
+    cfg: &Cfg,
+    costs: &CostModel,
+    net: &NetworkProfile,
+) -> Result<ClassPartition> {
+    // App classes only; anchored = must stay on the phone.
+    let mut classes: Vec<ClassId> = Vec::new();
+    let mut anchored: Vec<bool> = Vec::new();
+    for (ci, class) in program.classes.iter().enumerate() {
+        if class.system {
+            continue;
+        }
+        let cid = ClassId(ci as u16);
+        // Prior-work restriction: classes with native methods of ANY
+        // kind stay on the phone ("only Java classes without native
+        // state can be placed remotely" — and these systems cannot remote
+        // native calls at all), as do pinned methods and main.
+        let anchor = class.methods.iter().any(|m| {
+            m.pinned || m.native_state || m.native.is_some() || m.name == "main"
+        });
+        classes.push(cid);
+        anchored.push(anchor);
+    }
+    let n = classes.len();
+    if n > 20 {
+        return Err(CloneCloudError::partitioner(
+            "class-baseline enumeration capped at 20 classes",
+        ));
+    }
+    let class_pos: HashMap<ClassId, usize> =
+        classes.iter().enumerate().map(|(i, &c)| (c, i)).collect();
+
+    // Per-class comp costs and per-edge invocation counts.
+    let mut local_cost = vec![0.0f64; n];
+    let mut remote_cost = vec![0.0f64; n];
+    for m in program.app_methods() {
+        let Some(&pos) = class_pos.get(&m.class) else { continue };
+        local_cost[pos] += costs.mobile(m);
+        remote_cost[pos] += costs.clone_side(m);
+    }
+    // Cross-class DC edges weighted by callee invocation counts.
+    let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+    for (i, j) in cfg.dc_edges() {
+        let (m1, m2) = (cfg.methods[i], cfg.methods[j]);
+        let (Some(&c1), Some(&c2)) = (class_pos.get(&m1.class), class_pos.get(&m2.class)) else {
+            continue;
+        };
+        if c1 == c2 {
+            continue;
+        }
+        let calls = *costs.invocations.get(&m2).unwrap_or(&0) as f64;
+        if calls > 0.0 {
+            edges.push((c1, c2, calls));
+        }
+    }
+    // One synchronous RPC round trip per call.
+    let rpc_us_per_call =
+        (net.transfer_ms(RPC_BYTES, true) + net.transfer_ms(RPC_BYTES, false)) * 1e3;
+
+    let local_total: f64 = local_cost.iter().sum();
+    let mut best_mask = 0u32;
+    let mut best_cost = f64::INFINITY;
+    'mask: for mask in 0u32..(1 << n) {
+        // Anchored classes must be local (bit 0).
+        for (i, &a) in anchored.iter().enumerate() {
+            if a && (mask >> i) & 1 == 1 {
+                continue 'mask;
+            }
+        }
+        let mut cost = 0.0;
+        for i in 0..n {
+            cost += if (mask >> i) & 1 == 1 {
+                remote_cost[i]
+            } else {
+                local_cost[i]
+            };
+        }
+        for &(c1, c2, calls) in &edges {
+            if (mask >> c1) & 1 != (mask >> c2) & 1 {
+                cost += calls * rpc_us_per_call;
+            }
+        }
+        if cost < best_cost {
+            best_cost = cost;
+            best_mask = mask;
+        }
+    }
+
+    let mut locations = HashMap::new();
+    let mut remote_classes = Vec::new();
+    for (i, &cid) in classes.iter().enumerate() {
+        let loc = if (best_mask >> i) & 1 == 1 {
+            remote_classes.push(program.class(cid).name.clone());
+            Location::Clone
+        } else {
+            Location::Mobile
+        };
+        locations.insert(cid, loc);
+    }
+    Ok(ClassPartition {
+        locations,
+        expected_us: best_cost,
+        local_us: local_total,
+        remote_classes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::bytecode::MRef;
+
+    const SRC: &str = r#"
+class UI app
+  method main nargs=0 regs=2
+    invokev Work.go
+    retv
+  end
+  method show nargs=1 regs=1 native=ui.show
+end
+class Work app
+  method go nargs=0 regs=2
+    invokev Work.inner
+    retv
+  end
+  method inner nargs=0 regs=2
+    retv
+  end
+end
+class Store app
+  method load nargs=3 regs=3 native=fs.read natstate
+end
+"#;
+
+    fn model(program: &Program, entries: &[(&str, &str, f64, f64, usize)]) -> CostModel {
+        let mut cm = CostModel::default();
+        for &(c, m, a, b, inv) in entries {
+            let mref: MRef = program.resolve(c, m).unwrap();
+            cm.mobile_us.insert(mref, a);
+            cm.clone_us.insert(mref, b);
+            cm.invocations.insert(mref, inv);
+        }
+        cm
+    }
+
+    #[test]
+    fn offloads_compute_class_when_few_calls() {
+        let program = assemble(SRC).unwrap();
+        let cfg = Cfg::build(&program);
+        let cm = model(
+            &program,
+            &[
+                ("UI", "main", 10.0, 0.5, 1),
+                ("Work", "go", 2_000_000.0, 100_000.0, 1),
+                ("Work", "inner", 0.0, 0.0, 1),
+            ],
+        );
+        let p = solve_class_partition(&program, &cfg, &cm, &NetworkProfile::wifi()).unwrap();
+        assert!(p.remote_classes.contains(&"Work".to_string()));
+        assert!(p.expected_us < p.local_us);
+    }
+
+    #[test]
+    fn chatty_boundary_stays_local() {
+        let program = assemble(SRC).unwrap();
+        let cfg = Cfg::build(&program);
+        // go is called 100000 times from main: RPC per call swamps the
+        // compute win (the class-granularity pathology CloneCloud avoids
+        // by migrating once).
+        let cm = model(
+            &program,
+            &[
+                ("UI", "main", 10.0, 0.5, 1),
+                ("Work", "go", 2_000_000.0, 100_000.0, 100_000),
+                ("Work", "inner", 0.0, 0.0, 100_000),
+            ],
+        );
+        let p = solve_class_partition(&program, &cfg, &cm, &NetworkProfile::wifi()).unwrap();
+        assert!(p.remote_classes.is_empty(), "{:?}", p.remote_classes);
+    }
+
+    #[test]
+    fn native_state_class_anchored() {
+        let program = assemble(SRC).unwrap();
+        let cfg = Cfg::build(&program);
+        let store = program.resolve("Store", "load").unwrap();
+        let mut cm = CostModel::default();
+        cm.mobile_us.insert(store, 1e9);
+        cm.clone_us.insert(store, 1.0);
+        cm.invocations.insert(store, 1);
+        let p = solve_class_partition(&program, &cfg, &cm, &NetworkProfile::wifi()).unwrap();
+        assert!(
+            !p.remote_classes.contains(&"Store".to_string()),
+            "prior-work baselines cannot move native state"
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Comparison baselines from the paper's related work (§7), for the E8
+//! ablation bench:
+//!
+//! * [`mincut`] — class-granularity MINCUT partitioning with synchronous
+//!   RPC at the boundary (the Java-partitioning line of work);
+//! * [`no_native`] — thread migration restricted to pure virtualized
+//!   computation (the DJVM/migration line of work);
+//! * monolithic phone / clone executions are `exec::run_monolithic` on
+//!   the respective device.
+
+pub mod mincut;
+pub mod no_native;
+
+pub use mincut::{solve_class_partition, ClassPartition};
+pub use no_native::{pin_all_natives, solve_no_native_everywhere};

@@ -1,0 +1,79 @@
+//! "Virtualized-computation-only" migration baseline (paper §7).
+//!
+//! Prior application-layer VM migrators (cJVM, Jessica2, MERPATI) keep
+//! every native feature exclusively on the original platform: only pure
+//! virtualized computation may move. We model that by pinning EVERY
+//! native method to the mobile device and re-running the CloneCloud
+//! solver — any method that (transitively) touches a native then cannot
+//! migrate, which collapses most of Table 1's offload opportunities.
+//! The delta against the real solver is CloneCloud's "native everywhere"
+//! contribution, quantified.
+
+use crate::appvm::class::Program;
+use crate::error::Result;
+use crate::partitioner::{solve_partition, Cfg, CostModel, Partition, SolveReport};
+
+/// Clone the program with all natives pinned (the prior-work restriction).
+pub fn pin_all_natives(program: &Program) -> Program {
+    let mut p = program.clone();
+    for mref in p.all_methods() {
+        if p.method(mref).is_native() {
+            p.method_mut(mref).pinned = true;
+        }
+    }
+    p
+}
+
+/// Solve under the no-native-everywhere restriction.
+pub fn solve_no_native_everywhere(
+    program: &Program,
+    costs: &CostModel,
+) -> Result<(Partition, SolveReport)> {
+    let pinned = pin_all_natives(program);
+    let cfg = Cfg::build(&pinned);
+    solve_partition(&pinned, &cfg, costs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::assembler::assemble;
+
+    /// A worker whose loop calls an everywhere-native (fs.read): real
+    /// CloneCloud can offload it (fs is synchronized); the restricted
+    /// baseline cannot.
+    const SRC: &str = r#"
+class A app
+  method main nargs=0 regs=2
+    invokev A.work
+    retv
+  end
+  method work nargs=0 regs=6
+    const r0 0
+    const r1 0
+    const r2 8
+    invoke r3 A.read r0 r1 r2
+    retv
+  end
+  method read nargs=3 regs=3 native=fs.read
+end
+"#;
+
+    #[test]
+    fn restriction_blocks_offload_that_clonecloud_allows() {
+        let program = assemble(SRC).unwrap();
+        let cfg = Cfg::build(&program);
+        let work = program.resolve("A", "work").unwrap();
+        let mut cm = CostModel::default();
+        cm.mobile_us.insert(work, 1e6);
+        cm.clone_us.insert(work, 1e3);
+        cm.migr_us.insert(work, 100.0);
+        // Real CloneCloud offloads work().
+        let (p, _) = solve_partition(&program, &cfg, &cm).unwrap();
+        assert!(p.migrate.contains(&work), "native-everywhere offload");
+        // The prior-work baseline cannot.
+        let (bp, _) = solve_no_native_everywhere(&program, &cm).unwrap();
+        assert!(bp.migrate.is_empty());
+        assert!(bp.expected_us >= p.expected_us);
+    }
+}

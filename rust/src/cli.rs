@@ -1,0 +1,377 @@
+//! The `clonecloud` command-line interface (hand-rolled; no clap in the
+//! offline environment — DESIGN.md §2).
+//!
+//! ```text
+//! clonecloud partition --app virus --size medium [--config cfg.json] [--db out.json]
+//! clonecloud run --app image --size large --network wifi [--mode local|clonecloud]
+//! clonecloud table1
+//! clonecloud clone-serve --listen 127.0.0.1:7077 --app virus
+//! clonecloud inspect --app behavior
+//! clonecloud help
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::apps::{all_apps, build_process, App, BehaviorProfile, ImageSearch, Size, VirusScan};
+use crate::config::{Config, NetworkProfile};
+use crate::device::Location;
+use crate::error::{CloneCloudError, Result};
+use crate::exec::{run_distributed, run_monolithic, InlineClone};
+use crate::nodemanager::{CloneServer, TcpEndpoint};
+use crate::partitioner::{rewrite_with_partition, Cfg, PartitionDb, PartitionEntry};
+use crate::pipeline::{partition_app, table1_row};
+use crate::runtime::default_backend;
+use crate::util::bench::Table;
+
+const HELP: &str = "\
+clonecloud — CloneCloud (Chun et al., 2010) reproduction
+
+USAGE:
+  clonecloud <command> [options]
+
+COMMANDS:
+  partition    profile + solve a partition for an app under a network
+  run          run an app (local or CloneCloud) and report times
+  table1       regenerate the paper's Table 1
+  clone-serve  run a clone node on a TCP listener
+  inspect      dump an app's program, CFG, and constraint sets
+  help         this text
+
+OPTIONS:
+  --app <virus|image|behavior>   application           (default: virus)
+  --size <small|medium|large>    workload size         (default: medium)
+  --network <3g|wifi>            execution conditions  (default: wifi)
+  --mode <auto|local|clonecloud> run mode              (default: auto)
+  --config <file.json>           config overrides
+  --db <file.json>               partition database path
+  --listen <addr:port>           clone-serve bind address
+";
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .ok_or_else(|| CloneCloudError::Config(format!("--{key} needs a value")))?;
+            flags.insert(key.to_string(), val.clone());
+            i += 2;
+        } else {
+            return Err(CloneCloudError::Config(format!("unexpected argument '{a}'")));
+        }
+    }
+    Ok(flags)
+}
+
+fn app_by_name(name: &str) -> Result<Box<dyn App>> {
+    match name {
+        "virus" => Ok(Box::new(VirusScan)),
+        "image" => Ok(Box::new(ImageSearch)),
+        "behavior" => Ok(Box::new(BehaviorProfile)),
+        other => Err(CloneCloudError::Config(format!("unknown app '{other}'"))),
+    }
+}
+
+fn size_by_name(name: &str) -> Result<Size> {
+    match name {
+        "small" => Ok(Size::Small),
+        "medium" => Ok(Size::Medium),
+        "large" => Ok(Size::Large),
+        other => Err(CloneCloudError::Config(format!("unknown size '{other}'"))),
+    }
+}
+
+fn load_config(flags: &HashMap<String, String>) -> Result<Config> {
+    match flags.get("config") {
+        Some(path) => Config::load(Path::new(path)),
+        None => Ok(Config::default()),
+    }
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let app = app_by_name(flags.get("app").map(String::as_str).unwrap_or("virus"))?;
+    let size = size_by_name(flags.get("size").map(String::as_str).unwrap_or("medium"))?;
+    let net = NetworkProfile::by_name(flags.get("network").map(String::as_str).unwrap_or("wifi"))
+        .ok_or_else(|| CloneCloudError::Config("unknown network".into()))?;
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+    let (partition, report) = partition_app(app.as_ref(), size, &cfg, &net, &backend)?;
+    let program = app.program();
+    println!(
+        "partition for ({}, {}, {}): {}",
+        app.name(),
+        app.input_label(size),
+        net.name,
+        partition.label()
+    );
+    for &m in &partition.migrate {
+        println!("  R(m)=1: {}", program.method_name(m));
+    }
+    println!(
+        "expected {:.2}s vs local {:.2}s; profiled {} methods \
+         (phone {:.2}s wall, migration-cost {:.2}s wall, solve {:.3}s)",
+        partition.expected_us / 1e6,
+        partition.local_us / 1e6,
+        report.methods_profiled,
+        report.profile_phone_s,
+        report.profile_migration_s,
+        report.solve_s,
+    );
+    if let Some(db_path) = flags.get("db") {
+        let path = Path::new(db_path);
+        let mut db = if path.exists() {
+            PartitionDb::load(path)?
+        } else {
+            PartitionDb::new()
+        };
+        db.put(PartitionEntry::from_partition(
+            app.name(),
+            &net.name,
+            &program,
+            &partition,
+        ));
+        db.save(path)?;
+        println!("stored in {db_path} ({} entries)", db.len());
+    }
+    Ok(())
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let app = app_by_name(flags.get("app").map(String::as_str).unwrap_or("virus"))?;
+    let size = size_by_name(flags.get("size").map(String::as_str).unwrap_or("medium"))?;
+    let net = NetworkProfile::by_name(flags.get("network").map(String::as_str).unwrap_or("wifi"))
+        .ok_or_else(|| CloneCloudError::Config("unknown network".into()))?;
+    let mode = flags.get("mode").map(String::as_str).unwrap_or("auto");
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+    let program = app.program();
+
+    let offload = match mode {
+        "local" => false,
+        "clonecloud" => true,
+        "auto" => {
+            let (p, _) = partition_app(app.as_ref(), size, &cfg, &net, &backend)?;
+            p.is_offload()
+        }
+        other => return Err(CloneCloudError::Config(format!("unknown mode '{other}'"))),
+    };
+
+    if !offload {
+        let mut p = build_process(
+            app.as_ref(), program, size, &cfg, Location::Mobile, backend, false,
+        )?;
+        let out = run_monolithic(&mut p)?;
+        println!(
+            "local run: {:.2}s virtual, {} instrs ({})",
+            out.virtual_ms / 1e3,
+            out.instrs,
+            app.check(&p, size)?
+        );
+    } else {
+        let (partition, _) = partition_app(app.as_ref(), size, &cfg, &net, &backend)?;
+        let (rewritten, _) = rewrite_with_partition(&program, &partition)?;
+        let rewritten = Arc::new(rewritten);
+        let mut phone = build_process(
+            app.as_ref(), rewritten.clone(), size, &cfg, Location::Mobile, backend.clone(), false,
+        )?;
+        let clone = build_process(
+            app.as_ref(), rewritten, size, &cfg, Location::Clone, backend, false,
+        )?;
+        let mut channel = InlineClone::new(clone, cfg.costs.clone());
+        let out = run_distributed(&mut phone, &mut channel, &net, &cfg.costs)?;
+        println!(
+            "CloneCloud run ({}): {:.2}s virtual, {} migration(s), {}B up / {}B down ({})",
+            net.name,
+            out.virtual_ms / 1e3,
+            out.migrations,
+            out.transfer.up,
+            out.transfer.down,
+            app.check(&phone, size)?
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table1(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let backend = default_backend(Path::new(&cfg.artifacts_dir));
+    let mut table = Table::new(
+        "Table 1 (paper §6)",
+        &["Application", "Input", "Phone(s)", "Clone(s)", "MaxSpd",
+          "CC-3G(s)", "Part-3G", "Spd-3G", "CC-WiFi(s)", "Part-WiFi", "Spd-WiFi"],
+    );
+    for app in all_apps() {
+        for size in Size::all() {
+            let row = table1_row(app.as_ref(), size, &cfg, &backend)?;
+            table.row(vec![
+                row.app.to_string(),
+                row.input,
+                format!("{:.2}", row.phone_ms / 1e3),
+                format!("{:.2}", row.clone_ms / 1e3),
+                format!("{:.2}", row.max_speedup),
+                format!("{:.2}", row.threeg.exec_ms / 1e3),
+                row.threeg.label.into(),
+                format!("{:.2}", row.threeg.speedup),
+                format!("{:.2}", row.wifi.exec_ms / 1e3),
+                row.wifi.label.into(),
+                format!("{:.2}", row.wifi.speedup),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_clone_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let app = app_by_name(flags.get("app").map(String::as_str).unwrap_or("virus"))?;
+    let addr = flags
+        .get("listen")
+        .map(String::as_str)
+        .unwrap_or("127.0.0.1:7077");
+    // The phone's provision message carries its executable hash, so a
+    // mismatched binary is rejected at the door.
+    let program = app.program();
+    let ep = TcpEndpoint::bind(addr)?;
+    println!(
+        "clone node listening on {} for app '{}'",
+        ep.local_addr()?,
+        app.name()
+    );
+    loop {
+        let t = ep.accept()?;
+        let artifacts = cfg.artifacts_dir.clone();
+        let srv = CloneServer::new(
+            t,
+            program.clone(),
+            cfg.costs.clone(),
+            Box::new(move |fs| {
+                crate::appvm::NodeEnv::new(fs, default_backend(Path::new(&artifacts)))
+            }),
+        );
+        match srv.serve() {
+            Ok(stats) => println!("session done: {} migrations", stats.migrations),
+            Err(e) => eprintln!("session error: {e}"),
+        }
+    }
+}
+
+fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
+    let app = app_by_name(flags.get("app").map(String::as_str).unwrap_or("virus"))?;
+    let program = app.program();
+    println!("app '{}': {} classes", app.name(), program.classes.len());
+    for class in &program.classes {
+        if class.system {
+            continue;
+        }
+        println!("  class {} ({} statics)", class.name, class.statics.len());
+        for m in &class.methods {
+            let kind = if m.is_native() { "native" } else { "bytecode" };
+            let mut attrs = Vec::new();
+            if m.pinned {
+                attrs.push("pinned[V_M]");
+            }
+            if m.native_state {
+                attrs.push("natstate[V_NatC]");
+            }
+            println!(
+                "    {} ({kind}, {} instrs) {}",
+                m.name,
+                m.code.len(),
+                attrs.join(" ")
+            );
+        }
+    }
+    let cfg_graph = Cfg::build(&program);
+    println!(
+        "  CFG: {} methods, {} DC edges, {} TC pairs",
+        cfg_graph.len(),
+        cfg_graph.dc_edges().len(),
+        cfg_graph.tc_pairs().len()
+    );
+    Ok(())
+}
+
+/// CLI entrypoint; returns the process exit code.
+pub fn main(args: &[String]) -> i32 {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => {
+            print!("{HELP}");
+            return 2;
+        }
+    };
+    let flags = match parse_flags(rest) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            print!("{HELP}");
+            return 2;
+        }
+    };
+    let result = match cmd {
+        "partition" => cmd_partition(&flags),
+        "run" => cmd_run(&flags),
+        "table1" => cmd_table1(&flags),
+        "clone-serve" => cmd_clone_serve(&flags),
+        "inspect" => cmd_inspect(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            return 0;
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{HELP}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing() {
+        let f = parse_flags(&["--app".into(), "virus".into(), "--size".into(), "small".into()])
+            .unwrap();
+        assert_eq!(f["app"], "virus");
+        assert_eq!(f["size"], "small");
+        assert!(parse_flags(&["--app".into()]).is_err());
+        assert!(parse_flags(&["stray".into()]).is_err());
+    }
+
+    #[test]
+    fn name_resolution() {
+        assert!(app_by_name("virus").is_ok());
+        assert!(app_by_name("nope").is_err());
+        assert_eq!(size_by_name("large").unwrap(), Size::Large);
+        assert!(size_by_name("xl").is_err());
+    }
+
+    #[test]
+    fn help_and_unknown_commands() {
+        assert_eq!(main(&["help".into()]), 0);
+        assert_eq!(main(&["wat".into()]), 2);
+        assert_eq!(main(&[]), 2);
+    }
+
+    #[test]
+    fn inspect_runs() {
+        assert_eq!(
+            main(&["inspect".into(), "--app".into(), "behavior".into()]),
+            0
+        );
+    }
+}

@@ -1,0 +1,90 @@
+//! Virtual-time ledger.
+//!
+//! All app-level "execution time" in this reproduction is *virtual*
+//! microseconds accumulated here (DESIGN.md §3): interpreted instructions,
+//! native compute, and migration phases charge time scaled by the device
+//! they run on. Wall-clock time is reserved for the coordinator's own perf
+//! measurements.
+
+/// Monotonic virtual clock, microsecond resolution.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now_us: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time in microseconds.
+    pub fn now_us(&self) -> f64 {
+        self.now_us
+    }
+
+    /// Current virtual time in milliseconds.
+    pub fn now_ms(&self) -> f64 {
+        self.now_us / 1e3
+    }
+
+    /// Advance the clock by `us` virtual microseconds.
+    pub fn charge_us(&mut self, us: f64) {
+        debug_assert!(us >= 0.0, "negative time charge {us}");
+        self.now_us += us;
+    }
+
+    /// Advance by milliseconds.
+    pub fn charge_ms(&mut self, ms: f64) {
+        self.charge_us(ms * 1e3);
+    }
+
+    /// Jump the clock forward to an absolute time (used when re-importing
+    /// a migrated thread whose remote execution ended later than `now`).
+    pub fn advance_to_us(&mut self, t_us: f64) {
+        if t_us > self.now_us {
+            self.now_us = t_us;
+        }
+    }
+
+    /// Reset to zero (between benchmark runs).
+    pub fn reset(&mut self) {
+        self.now_us = 0.0;
+    }
+}
+
+/// A span measured against a virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VirtualSpan {
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+impl VirtualSpan {
+    pub fn duration_us(&self) -> f64 {
+        self.end_us - self.start_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let mut c = VirtualClock::new();
+        c.charge_us(5.0);
+        c.charge_ms(1.0);
+        assert!((c.now_us() - 1005.0).abs() < 1e-9);
+        assert!((c.now_ms() - 1.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_to_only_moves_forward() {
+        let mut c = VirtualClock::new();
+        c.charge_us(100.0);
+        c.advance_to_us(50.0);
+        assert_eq!(c.now_us(), 100.0);
+        c.advance_to_us(200.0);
+        assert_eq!(c.now_us(), 200.0);
+    }
+}

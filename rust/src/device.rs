@@ -1,0 +1,99 @@
+//! Device execution model: the phone / clone speed asymmetry.
+//!
+//! The paper's testbed is an HTC G1 (Android Dev Phone 1) against a
+//! 2.83 GHz desktop clone; Table 1's Max-Speedup column shows the clone
+//! executing the same workloads 18-26x faster. We model each device as a
+//! multiplier over a baseline per-unit cost (DESIGN.md §2-3).
+
+/// Where a piece of execution runs. Matches the paper's L(m) encoding:
+/// 0 = mobile device, 1 = clone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Location {
+    Mobile,
+    Clone,
+}
+
+impl Location {
+    pub fn as_bit(self) -> u8 {
+        match self {
+            Location::Mobile => 0,
+            Location::Clone => 1,
+        }
+    }
+    pub fn from_bit(b: u8) -> Location {
+        if b == 0 {
+            Location::Mobile
+        } else {
+            Location::Clone
+        }
+    }
+    pub fn other(self) -> Location {
+        match self {
+            Location::Mobile => Location::Clone,
+            Location::Clone => Location::Mobile,
+        }
+    }
+}
+
+impl std::fmt::Display for Location {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Location::Mobile => write!(f, "mobile"),
+            Location::Clone => write!(f, "clone"),
+        }
+    }
+}
+
+/// Execution-speed model of one device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Multiplier over baseline (clone-class) cost: clone = 1.0, the G1
+    /// phone ~ 20x. Every virtual-time charge on this device is scaled
+    /// by this factor.
+    pub cpu_factor: f64,
+}
+
+impl DeviceSpec {
+    /// The paper's Android Dev Phone 1 (HTC G1), ~20-26x slower than the
+    /// desktop clone across the three applications (Table 1 Max Speedup).
+    pub fn phone_g1() -> DeviceSpec {
+        DeviceSpec {
+            name: "android-dev-phone-1".into(),
+            cpu_factor: 21.0,
+        }
+    }
+
+    /// The paper's clone: 2.83 GHz Dell desktop running Android-x86 VM.
+    pub fn clone_desktop() -> DeviceSpec {
+        DeviceSpec {
+            name: "dell-desktop-2.83ghz".into(),
+            cpu_factor: 1.0,
+        }
+    }
+
+    /// Scale a baseline cost (in µs) to this device.
+    pub fn scale_us(&self, base_us: f64) -> f64 {
+        base_us * self.cpu_factor
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn location_bits_roundtrip() {
+        assert_eq!(Location::from_bit(Location::Mobile.as_bit()), Location::Mobile);
+        assert_eq!(Location::from_bit(Location::Clone.as_bit()), Location::Clone);
+        assert_eq!(Location::Mobile.other(), Location::Clone);
+    }
+
+    #[test]
+    fn phone_is_much_slower() {
+        let p = DeviceSpec::phone_g1();
+        let c = DeviceSpec::clone_desktop();
+        let ratio = p.scale_us(1.0) / c.scale_us(1.0);
+        assert!(ratio >= 18.0 && ratio <= 27.0, "paper's observed range");
+    }
+}

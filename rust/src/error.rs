@@ -1,0 +1,77 @@
+//! Error taxonomy for the CloneCloud stack.
+
+use thiserror::Error;
+
+/// All errors surfaced by the library.
+#[derive(Debug, Error)]
+pub enum CloneCloudError {
+    /// Bytecode loading / assembling problems.
+    #[error("program error: {0}")]
+    Program(String),
+
+    /// Bytecode verifier rejections.
+    #[error("verifier error in {method}: {message}")]
+    Verify { method: String, message: String },
+
+    /// Runtime faults inside the application VM (null deref, bad index...).
+    #[error("vm fault: {0}")]
+    VmFault(String),
+
+    /// Native method failures.
+    #[error("native error in {name}: {message}")]
+    Native { name: String, message: String },
+
+    /// Migration capture/merge failures.
+    #[error("migration error: {0}")]
+    Migration(String),
+
+    /// Wire-format decode failures.
+    #[error("wire error: {0}")]
+    Wire(String),
+
+    /// Node-manager / transport failures.
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    /// Partitioner failures (analysis, profiling, solving).
+    #[error("partitioner error: {0}")]
+    Partitioner(String),
+
+    /// ILP solver failures (infeasible, unbounded, iteration limit).
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// PJRT runtime failures.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Configuration problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+}
+
+pub type Result<T> = std::result::Result<T, CloneCloudError>;
+
+impl CloneCloudError {
+    pub fn vm(msg: impl Into<String>) -> Self {
+        CloneCloudError::VmFault(msg.into())
+    }
+    pub fn program(msg: impl Into<String>) -> Self {
+        CloneCloudError::Program(msg.into())
+    }
+    pub fn migration(msg: impl Into<String>) -> Self {
+        CloneCloudError::Migration(msg.into())
+    }
+    pub fn partitioner(msg: impl Into<String>) -> Self {
+        CloneCloudError::Partitioner(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        CloneCloudError::Runtime(msg.into())
+    }
+}

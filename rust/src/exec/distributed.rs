@@ -1,0 +1,186 @@
+//! The CloneCloud distributed run (paper §4, Figure 7).
+//!
+//! The phone process executes the partitioned binary. At each `CcStart`
+//! the policy engine (the partition DB already chose this binary, so the
+//! answer is "migrate") suspends and captures the thread, charges the
+//! uplink for the real capture bytes, and hands off to the clone channel.
+//! The clone executes to `CcStop`, the reverse capture rides the
+//! downlink, and the merge resumes the thread on the phone.
+//!
+//! Two clone channels: [`InlineClone`] (clone process owned by the
+//! caller — deterministic, used by benches) and any
+//! `nodemanager::NodeManager` over a real transport (TCP loopback in the
+//! examples). Virtual time: the phone clock carries suspend + capture +
+//! uplink; the clone continues from the received timestamp; the phone
+//! then adopts the clone's finish time plus downlink + merge.
+
+use crate::appvm::interp::{run_thread, NoHooks, RunExit};
+use crate::appvm::process::Process;
+use crate::appvm::value::Value;
+use crate::config::{CostParams, NetworkProfile};
+use crate::error::{CloneCloudError, Result};
+use crate::migration::{CapturePacket, MigrationPhases, Migrator};
+use crate::nodemanager::{NodeManager, TransferBytes, Transport};
+
+/// Where the offloaded span runs.
+pub trait CloneChannel {
+    /// Process one forward capture; return the reverse capture bytes and
+    /// the clone's virtual finish time is inside the packet.
+    fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)>;
+}
+
+impl<T: Transport> CloneChannel for NodeManager<T> {
+    fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+        self.migrate(forward)
+    }
+}
+
+/// In-process clone: the caller owns the clone process directly.
+pub struct InlineClone {
+    pub clone: Process,
+    migrator: Migrator,
+    pub migrations: usize,
+}
+
+impl InlineClone {
+    pub fn new(clone: Process, costs: CostParams) -> InlineClone {
+        InlineClone {
+            clone,
+            migrator: Migrator::new(costs),
+            migrations: 0,
+        }
+    }
+
+    pub fn without_zygote_diff(mut self) -> InlineClone {
+        self.migrator = self.migrator.without_zygote_diff();
+        self
+    }
+}
+
+impl CloneChannel for InlineClone {
+    fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+        let up = forward.len() as u64;
+        let packet = CapturePacket::decode(&forward)?;
+        let (tid, table, _) = self.migrator.receive_at_clone(&mut self.clone, &packet)?;
+        loop {
+            match run_thread(&mut self.clone, tid, &mut NoHooks, u64::MAX)? {
+                RunExit::ReintegrationPoint { .. } => break,
+                RunExit::MigrationPoint { .. } => continue,
+                RunExit::Completed(_) => {
+                    return Err(CloneCloudError::migration(
+                        "offloaded thread completed without reintegration",
+                    ))
+                }
+                RunExit::OutOfFuel => unreachable!("u64::MAX fuel"),
+            }
+        }
+        self.migrations += 1;
+        let (rpacket, _, _) = self
+            .migrator
+            .return_from_clone(&mut self.clone, tid, table)?;
+        let bytes = rpacket.encode();
+        let down = bytes.len() as u64;
+        Ok((bytes, TransferBytes { up, down }))
+    }
+}
+
+/// Outcome of a distributed run.
+#[derive(Debug, Clone, Default)]
+pub struct DistOutcome {
+    pub virtual_ms: f64,
+    pub result: Option<Value>,
+    pub wall_s: f64,
+    pub migrations: usize,
+    pub transfer: TransferBytes,
+    /// Aggregated phase timings (virtual ms).
+    pub suspend_capture_ms: f64,
+    pub uplink_ms: f64,
+    pub downlink_ms: f64,
+    pub merge_ms: f64,
+    pub objects_shipped: usize,
+    pub zygote_skipped: usize,
+}
+
+/// Run the partitioned binary on `phone`, off-loading each migration
+/// span through `channel` under the `net` cost model.
+pub fn run_distributed<C: CloneChannel>(
+    phone: &mut Process,
+    channel: &mut C,
+    net: &NetworkProfile,
+    costs: &CostParams,
+) -> Result<DistOutcome> {
+    let wall0 = std::time::Instant::now();
+    let migrator = Migrator::new(costs.clone());
+    let entry = phone.program.entry()?;
+    let tid = phone.spawn_thread(entry, &[])?;
+    let mut out = DistOutcome::default();
+
+    let result = loop {
+        match run_thread(phone, tid, &mut NoHooks, u64::MAX)? {
+            RunExit::Completed(v) => break v,
+            RunExit::ReintegrationPoint { .. } => continue, // local span
+            RunExit::OutOfFuel => unreachable!("u64::MAX fuel"),
+            RunExit::MigrationPoint { .. } => {
+                // --- policy: this binary was picked for offload ---------
+                let (mut packet, phases) = migrator.migrate_out(phone, tid)?;
+                out.suspend_capture_ms += phases.suspend_ms + phases.capture_ms;
+                out.objects_shipped += phases.objects_shipped;
+                out.zygote_skipped += phases.zygote_skipped;
+
+                // Uplink on the phone's slow path, for the real bytes.
+                let fwd = {
+                    let bytes = packet.encode();
+                    let up_ms = net.transfer_ms(bytes.len() as u64, true);
+                    phone.clock.charge_ms(up_ms);
+                    out.uplink_ms += up_ms;
+                    // Clone resumes at the post-transfer timestamp.
+                    packet.clock_us = phone.clock.now_us();
+                    packet.encode()
+                };
+
+                let (rbytes, transfer) = channel.roundtrip(fwd)?;
+                out.transfer.up += transfer.up;
+                out.transfer.down += transfer.down;
+                out.migrations += 1;
+
+                let rpacket = CapturePacket::decode(&rbytes)?;
+                // Adopt the clone's finish time, then pay the downlink.
+                phone.clock.advance_to_us(rpacket.clock_us);
+                let down_ms = net.transfer_ms(rbytes.len() as u64, false);
+                phone.clock.charge_ms(down_ms);
+                out.downlink_ms += down_ms;
+
+                let (_stats, phases) = migrator.merge_back(phone, tid, &rpacket)?;
+                out.merge_ms += phases.merge_ms;
+            }
+        }
+    };
+    out.virtual_ms = phone.clock.now_ms();
+    out.result = result;
+    out.wall_s = wall0.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// Migration-phase record for the E3 bench: one round trip's breakdown.
+#[derive(Debug, Clone, Default)]
+pub struct RoundTripBreakdown {
+    pub suspend_capture_ms: f64,
+    pub uplink_ms: f64,
+    pub clone_exec_ms: f64,
+    pub downlink_ms: f64,
+    pub merge_ms: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+}
+
+impl DistOutcome {
+    /// Total migration overhead (everything but local + clone compute).
+    pub fn migration_overhead_ms(&self) -> f64 {
+        self.suspend_capture_ms + self.uplink_ms + self.downlink_ms + self.merge_ms
+    }
+}
+
+#[allow(unused)]
+fn _assert_phases_used(p: MigrationPhases) -> f64 {
+    p.suspend_ms
+}

@@ -1,0 +1,14 @@
+//! Execution drivers: the lifecycle of §4.
+//!
+//! * [`monolithic`] — status-quo execution of an (unmodified or
+//!   partitioned-but-local) binary on one device.
+//! * [`distributed`] — the CloneCloud run: launch the partitioned binary,
+//!   migrate at CcStart, execute at the clone, reintegrate at CcStop,
+//!   merge, continue — with virtual network time charged from the real
+//!   byte counts.
+
+pub mod distributed;
+pub mod monolithic;
+
+pub use distributed::{run_distributed, DistOutcome, InlineClone};
+pub use monolithic::{run_monolithic, run_monolithic_hooked, MonoOutcome};

@@ -1,0 +1,46 @@
+//! Monolithic execution: the paper's status quo (Table 1 cols 3-4).
+
+use crate::appvm::interp::{run_thread, ExecHooks, NoHooks, RunExit};
+use crate::appvm::process::Process;
+use crate::appvm::value::Value;
+use crate::error::{CloneCloudError, Result};
+
+/// Outcome of a monolithic run.
+#[derive(Debug, Clone)]
+pub struct MonoOutcome {
+    /// Virtual execution time (ms).
+    pub virtual_ms: f64,
+    /// `main`'s return value, if any.
+    pub result: Option<Value>,
+    /// Wall-clock seconds (real PJRT compute + interpretation).
+    pub wall_s: f64,
+    pub instrs: u64,
+}
+
+/// Run the app's entry to completion on `p`. Partition points, if the
+/// binary has them, are skipped (the "Local" policy).
+pub fn run_monolithic(p: &mut Process) -> Result<MonoOutcome> {
+    run_monolithic_hooked(p, &mut NoHooks)
+}
+
+/// Monolithic run with observation hooks (used by the profiler path).
+pub fn run_monolithic_hooked<H: ExecHooks>(p: &mut Process, hooks: &mut H) -> Result<MonoOutcome> {
+    let wall0 = std::time::Instant::now();
+    let entry = p.program.entry()?;
+    let tid = p.spawn_thread(entry, &[])?;
+    let result = loop {
+        match run_thread(p, tid, hooks, u64::MAX)? {
+            RunExit::Completed(v) => break v,
+            RunExit::MigrationPoint { .. } | RunExit::ReintegrationPoint { .. } => continue,
+            RunExit::OutOfFuel => {
+                return Err(CloneCloudError::vm("monolithic run out of fuel"))
+            }
+        }
+    };
+    Ok(MonoOutcome {
+        virtual_ms: p.clock.now_ms(),
+        result,
+        wall_s: wall0.elapsed().as_secs_f64(),
+        instrs: p.metrics.instrs,
+    })
+}

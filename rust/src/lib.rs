@@ -1,0 +1,36 @@
+//! CloneCloud: boosting mobile device applications through cloud clone
+//! execution — a full-system reproduction of Chun et al. (2010).
+//!
+//! Layer map (DESIGN.md):
+//! * [`appvm`] — DroidVM, the Dalvik-like application VM substrate.
+//! * [`partitioner`] — static analysis + dynamic profiling + ILP solver
+//!   + bytecode rewriter (paper §3).
+//! * [`migration`] — thread suspend/capture/resume/merge with the
+//!   MID/CID object-mapping table and Zygote-diff optimization (§4).
+//! * [`nodemanager`] — transport, network models, clone provisioning.
+//! * [`runtime`] — PJRT loader executing the AOT HLO artifacts built by
+//!   `python/compile/aot.py` (L1 Pallas kernels + L2 JAX graphs).
+//! * [`apps`] — the paper's three evaluation applications.
+//! * [`exec`] — monolithic and distributed execution drivers.
+//! * [`baselines`] — comparison partitioners (§7 related work).
+
+pub mod appvm;
+pub mod apps;
+pub mod baselines;
+pub mod clock;
+pub mod config;
+pub mod device;
+pub mod error;
+pub mod exec;
+pub mod metrics;
+pub mod migration;
+pub mod nodemanager;
+pub mod partitioner;
+pub mod pipeline;
+pub mod runtime;
+pub mod util;
+pub mod vfs;
+
+pub use config::Config;
+pub use error::{CloneCloudError, Result};
+pub mod cli;

@@ -1,0 +1,14 @@
+//! `clonecloud` CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands (see `clonecloud help`):
+//!   partition    analyze + profile + solve a partition for an app
+//!   run          run an app monolithically or under CloneCloud
+//!   table1       regenerate the paper's Table 1
+//!   clone-serve  run a clone node (TCP listener) for distributed mode
+//!   inspect      dump program / partition information
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = clonecloud::cli::main(&args);
+    std::process::exit(code);
+}

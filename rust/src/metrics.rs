@@ -1,0 +1,81 @@
+//! Run-level metrics aggregation: one place to collect what a run did
+//! (instructions, native calls, migrations, bytes) for reports and the
+//! benches' summary lines.
+
+use std::collections::BTreeMap;
+
+use crate::appvm::process::Process;
+use crate::exec::DistOutcome;
+
+/// A flat, printable metrics snapshot.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+}
+
+impl MetricsSnapshot {
+    pub fn count(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Absorb a process's VM metrics + native-call counts.
+    pub fn absorb_process(&mut self, prefix: &str, p: &Process) {
+        self.count(&format!("{prefix}.instrs"), p.metrics.instrs);
+        self.count(&format!("{prefix}.invokes"), p.metrics.invokes);
+        self.count(&format!("{prefix}.native_calls"), p.metrics.native_calls);
+        self.count(&format!("{prefix}.allocations"), p.metrics.allocations);
+        for (name, n) in &p.env.native_calls {
+            self.count(&format!("{prefix}.native.{name}"), *n);
+        }
+        self.gauge(&format!("{prefix}.virtual_ms"), p.clock.now_ms());
+        self.gauge(&format!("{prefix}.heap_objects"), p.heap.len() as f64);
+    }
+
+    /// Absorb a distributed-run outcome.
+    pub fn absorb_dist(&mut self, out: &DistOutcome) {
+        self.count("migrations", out.migrations as u64);
+        self.count("bytes.up", out.transfer.up);
+        self.count("bytes.down", out.transfer.down);
+        self.count("objects.shipped", out.objects_shipped as u64);
+        self.count("objects.zygote_skipped", out.zygote_skipped as u64);
+        self.gauge("virtual_ms", out.virtual_ms);
+        self.gauge("phase.suspend_capture_ms", out.suspend_capture_ms);
+        self.gauge("phase.uplink_ms", out.uplink_ms);
+        self.gauge("phase.downlink_ms", out.downlink_ms);
+        self.gauge("phase.merge_ms", out.merge_ms);
+    }
+
+    /// Render as sorted `key = value` lines.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k} = {v:.3}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_render() {
+        let mut m = MetricsSnapshot::default();
+        m.count("a", 2);
+        m.count("a", 3);
+        m.gauge("t", 1.5);
+        assert_eq!(m.counters["a"], 5);
+        let s = m.render();
+        assert!(s.contains("a = 5"));
+        assert!(s.contains("t = 1.500"));
+    }
+}

@@ -1,0 +1,203 @@
+//! Suspend and capture (paper §4.1).
+//!
+//! Collects a suspended thread's execution state for transfer: virtual
+//! stack frames (register contents, pc — stored by method *name* for
+//! portability), all heap objects reachable from the frames and from the
+//! app-class static fields (a mark-and-sweep-style traversal), and the
+//! statics themselves. Clean Zygote objects are referenced by
+//! (class, seq) name instead of being shipped when the §4.3 optimization
+//! is enabled.
+
+use std::collections::HashMap;
+
+use crate::appvm::process::Process;
+use crate::appvm::value::{ObjBody, ObjId, Value};
+use crate::error::{CloneCloudError, Result};
+
+use super::format::{
+    CapturePacket, Direction, WireBody, WireFrame, WireObject, WireStatic, WireValue,
+};
+use super::mapping::MappingTable;
+
+/// Capture options.
+#[derive(Debug, Clone, Copy)]
+pub struct CaptureOptions {
+    /// Enable the Zygote-diff optimization (§4.3). Off = ship everything
+    /// reachable, including clean template objects (the E4 ablation).
+    pub zygote_diff: bool,
+}
+
+impl Default for CaptureOptions {
+    fn default() -> Self {
+        CaptureOptions { zygote_diff: true }
+    }
+}
+
+/// Capture statistics (feeds metrics and the E4 ablation bench).
+#[derive(Debug, Clone, Default)]
+pub struct CaptureStats {
+    /// Objects serialized in full.
+    pub objects: usize,
+    /// Clean Zygote objects referenced by name instead of shipped.
+    pub zygote_skipped: usize,
+    /// Encoded packet size.
+    pub bytes: usize,
+}
+
+/// Capture thread `tid` of `p`. For reverse captures pass the clone-side
+/// mapping table so each object carries its mobile-side MID.
+pub fn capture_thread(
+    p: &Process,
+    tid: u32,
+    direction: Direction,
+    mapping: Option<&MappingTable>,
+    opts: CaptureOptions,
+) -> Result<(CapturePacket, CaptureStats)> {
+    let thread = p.thread(tid)?;
+    if thread.frames.is_empty() {
+        return Err(CloneCloudError::migration("capture of a frame-less thread"));
+    }
+
+    // ---- traversal: assign slots to shipped objects, names to skipped
+    // Zygote objects ------------------------------------------------------
+    let mut slot_of: HashMap<u64, u32> = HashMap::new();
+    let mut order: Vec<ObjId> = Vec::new();
+    let mut zygote_of: HashMap<u64, u32> = HashMap::new();
+    let mut zygote_refs: Vec<(String, u32)> = Vec::new();
+    let mut stats = CaptureStats::default();
+
+    // Roots: every register of every frame + app-class statics.
+    let mut stack: Vec<ObjId> = thread.roots();
+    for (ci, class_statics) in p.statics.iter().enumerate() {
+        if p.program.classes[ci].system {
+            continue;
+        }
+        stack.extend(class_statics.iter().filter_map(|v| v.as_ref()));
+    }
+
+    while let Some(id) = stack.pop() {
+        if slot_of.contains_key(&id.0) || zygote_of.contains_key(&id.0) {
+            continue;
+        }
+        let obj = p.heap.get(id)?;
+        let clean_zygote = opts.zygote_diff && obj.zygote_seq.is_some() && !obj.dirty;
+        if clean_zygote {
+            // Referenced by name; children are template-internal and
+            // identical on the receiving side — not traversed.
+            let zi = zygote_refs.len() as u32;
+            zygote_refs.push((
+                p.program.class(obj.class).name.clone(),
+                obj.zygote_seq.unwrap(),
+            ));
+            zygote_of.insert(id.0, zi);
+            stats.zygote_skipped += 1;
+            continue;
+        }
+        slot_of.insert(id.0, order.len() as u32);
+        order.push(id);
+        stack.extend(obj.body.refs());
+    }
+    stats.objects = order.len();
+
+    let conv = |v: &Value| -> Result<WireValue> {
+        Ok(match v {
+            Value::Null => WireValue::Null,
+            Value::Int(x) => WireValue::Int(*x),
+            Value::Float(x) => WireValue::Float(*x),
+            Value::Ref(r) => {
+                if let Some(&s) = slot_of.get(&r.0) {
+                    WireValue::Slot(s)
+                } else if let Some(&z) = zygote_of.get(&r.0) {
+                    WireValue::Zygote(z)
+                } else {
+                    return Err(CloneCloudError::migration(format!(
+                        "reference to untraversed object {}",
+                        r.0
+                    )));
+                }
+            }
+        })
+    };
+
+    // ---- objects ---------------------------------------------------------
+    let mut objects = Vec::with_capacity(order.len());
+    for &id in &order {
+        let obj = p.heap.get(id)?;
+        let body = match &obj.body {
+            ObjBody::Fields(vs) => {
+                WireBody::Fields(vs.iter().map(&conv).collect::<Result<Vec<_>>>()?)
+            }
+            ObjBody::ByteArray(b) => WireBody::ByteArray(b.clone()),
+            ObjBody::FloatArray(f) => WireBody::FloatArray(f.clone()),
+            ObjBody::RefArray(vs) => {
+                WireBody::RefArray(vs.iter().map(&conv).collect::<Result<Vec<_>>>()?)
+            }
+        };
+        // Reverse direction: attach the mobile-side id from the mapping
+        // table (0 = new object created at the clone).
+        let mapped_id = match (direction, mapping) {
+            (Direction::Reverse, Some(t)) => t.mid_for_cid(id.0).unwrap_or(0),
+            _ => 0,
+        };
+        objects.push(WireObject {
+            origin_id: id.0,
+            mapped_id,
+            class_name: p.program.class(obj.class).name.clone(),
+            zygote_seq: obj.zygote_seq,
+            body,
+        });
+    }
+
+    // ---- frames -----------------------------------------------------------
+    let mut frames = Vec::with_capacity(thread.frames.len());
+    for f in &thread.frames {
+        frames.push(WireFrame {
+            class_name: p.program.class(f.method.class).name.clone(),
+            method_name: p.program.method(f.method).name.clone(),
+            pc: f.pc as u32,
+            ret_reg_plus1: f.ret_reg.map(|r| r + 1).unwrap_or(0),
+            regs: f.regs.iter().map(&conv).collect::<Result<Vec<_>>>()?,
+        });
+    }
+
+    // ---- statics ----------------------------------------------------------
+    let mut statics = Vec::new();
+    for (ci, class_statics) in p.statics.iter().enumerate() {
+        if p.program.classes[ci].system {
+            continue;
+        }
+        for (idx, v) in class_statics.iter().enumerate() {
+            // Null statics are implied; ship only meaningful values.
+            if matches!(v, Value::Null) {
+                continue;
+            }
+            statics.push(WireStatic {
+                class_name: p.program.classes[ci].name.clone(),
+                idx: idx as u16,
+                value: conv(v)?,
+            });
+        }
+    }
+
+    let packet = CapturePacket {
+        direction,
+        thread_id: tid,
+        clock_us: p.clock.now_us(),
+        frames,
+        objects,
+        zygote_refs,
+        statics,
+    };
+    stats.bytes = packet.encode().len();
+    Ok((packet, stats))
+}
+
+/// Convenience: measure the state size (bytes) a migration at the current
+/// point of thread `tid` would transfer. Used by the dynamic profiler for
+/// profile-tree edge annotations (§3.2: "perform the suspend-and-capture
+/// operation of the migrator, measure the state size, and discard the
+/// captured state").
+pub fn measure_state_size(p: &Process, tid: u32, opts: CaptureOptions) -> Result<u64> {
+    let (_packet, stats) = capture_thread(p, tid, Direction::Forward, None, opts)?;
+    Ok(stats.bytes as u64)
+}

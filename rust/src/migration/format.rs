@@ -1,0 +1,503 @@
+//! hprof-like portable capture format (paper §4.1, §5).
+//!
+//! The prototype extends Android's hprof heap-dump format; this module is
+//! the equivalent: a self-contained binary encoding of a captured thread.
+//! Portability rules from the paper:
+//!
+//! * all scalars in **network byte order** (`util::bytes`);
+//! * stack frames name their method by **class + method name**, never a
+//!   native code pointer;
+//! * object references are **capture-local slots** (or Zygote
+//!   (class, seq) names), never addresses;
+//! * every object carries its origin-VM object id (MID or CID) plus, when
+//!   known, its id on the receiving VM — the wire form of the mapping
+//!   table columns.
+
+use crate::error::{CloneCloudError, Result};
+use crate::util::bytes::{WireReader, WireWriter};
+
+/// Magic + version for the capture format ("CCHP" = CloneCloud hprof).
+/// v2 interns class/method names in a string table: a 40k-object Zygote
+/// capture repeats a handful of class names tens of thousands of times,
+/// and naming them by index cut encoded captures ~40% (§Perf P1).
+const MAGIC: u32 = 0x4343_4850;
+const VERSION: u16 = 2;
+
+/// Build-side string interner.
+#[derive(Default)]
+struct Strings {
+    table: Vec<String>,
+    index: std::collections::HashMap<String, u32>,
+}
+
+impl Strings {
+    fn intern(&mut self, s: &str) -> u32 {
+        if let Some(&i) = self.index.get(s) {
+            return i;
+        }
+        let i = self.table.len() as u32;
+        self.table.push(s.to_string());
+        self.index.insert(s.to_string(), i);
+        i
+    }
+}
+
+/// Migration direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Mobile -> clone (migration).
+    Forward,
+    /// Clone -> mobile (reintegration).
+    Reverse,
+}
+
+/// A value on the wire. References are capture slots or Zygote names.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WireValue {
+    Null,
+    Int(i64),
+    Float(f64),
+    /// Index into `CapturePacket::objects`.
+    Slot(u32),
+    /// Index into `CapturePacket::zygote_refs` (a clean template object,
+    /// not shipped — §4.3).
+    Zygote(u32),
+}
+
+/// Object payload on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireBody {
+    Fields(Vec<WireValue>),
+    ByteArray(Vec<u8>),
+    FloatArray(Vec<f32>),
+    RefArray(Vec<WireValue>),
+}
+
+/// One captured object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireObject {
+    /// Object id in the SENDER's VM (MID forward / CID reverse).
+    pub origin_id: u64,
+    /// Object id in the RECEIVER's VM if known (0 = none): reverse
+    /// migration fills this with the MID from the mapping table so the
+    /// mobile device knows which object to overwrite.
+    pub mapped_id: u64,
+    pub class_name: String,
+    /// Set when this is a *dirty* Zygote object: the receiver overwrites
+    /// its own (class, seq) template object instead of allocating.
+    pub zygote_seq: Option<u32>,
+    pub body: WireBody,
+}
+
+/// One captured stack frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireFrame {
+    pub class_name: String,
+    pub method_name: String,
+    pub pc: u32,
+    /// Caller return register + 1; 0 = none.
+    pub ret_reg_plus1: u8,
+    pub regs: Vec<WireValue>,
+}
+
+/// A captured static field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireStatic {
+    pub class_name: String,
+    pub idx: u16,
+    pub value: WireValue,
+}
+
+/// The full capture packet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapturePacket {
+    pub direction: Direction,
+    pub thread_id: u32,
+    /// Sender's virtual clock at capture (µs) — the receiver advances to
+    /// this so time is consistent across the migration.
+    pub clock_us: f64,
+    pub frames: Vec<WireFrame>,
+    pub objects: Vec<WireObject>,
+    /// Clean Zygote objects referenced by (class name, seq) only.
+    pub zygote_refs: Vec<(String, u32)>,
+    pub statics: Vec<WireStatic>,
+}
+
+impl CapturePacket {
+    /// Serialize to network-byte-order bytes. Class/method names are
+    /// interned into a string table written up front.
+    pub fn encode(&self) -> Vec<u8> {
+        // Pass 1: intern every name, in a deterministic order.
+        let mut strings = Strings::default();
+        let frame_names: Vec<(u32, u32)> = self
+            .frames
+            .iter()
+            .map(|f| (strings.intern(&f.class_name), strings.intern(&f.method_name)))
+            .collect();
+        let obj_names: Vec<u32> = self
+            .objects
+            .iter()
+            .map(|o| strings.intern(&o.class_name))
+            .collect();
+        let zy_names: Vec<u32> = self
+            .zygote_refs
+            .iter()
+            .map(|(name, _)| strings.intern(name))
+            .collect();
+        let static_names: Vec<u32> = self
+            .statics
+            .iter()
+            .map(|s| strings.intern(&s.class_name))
+            .collect();
+
+        // Pass 2: emit.
+        let mut w = WireWriter::with_capacity(4096);
+        w.put_u32(MAGIC);
+        w.put_u16(VERSION);
+        w.put_u8(match self.direction {
+            Direction::Forward => 0,
+            Direction::Reverse => 1,
+        });
+        w.put_u32(self.thread_id);
+        w.put_f64(self.clock_us);
+
+        w.put_u32(strings.table.len() as u32);
+        for s in &strings.table {
+            w.put_str(s);
+        }
+
+        w.put_u32(self.frames.len() as u32);
+        for (f, &(cn, mn)) in self.frames.iter().zip(&frame_names) {
+            w.put_u32(cn);
+            w.put_u32(mn);
+            w.put_u32(f.pc);
+            w.put_u8(f.ret_reg_plus1);
+            w.put_u32(f.regs.len() as u32);
+            for v in &f.regs {
+                encode_value(&mut w, v);
+            }
+        }
+
+        w.put_u32(self.objects.len() as u32);
+        for (o, &cn) in self.objects.iter().zip(&obj_names) {
+            w.put_u64(o.origin_id);
+            w.put_u64(o.mapped_id);
+            w.put_u32(cn);
+            match o.zygote_seq {
+                Some(s) => {
+                    w.put_u8(1);
+                    w.put_u32(s);
+                }
+                None => w.put_u8(0),
+            }
+            encode_body(&mut w, &o.body);
+        }
+
+        w.put_u32(self.zygote_refs.len() as u32);
+        for ((_, seq), &cn) in self.zygote_refs.iter().zip(&zy_names) {
+            w.put_u32(cn);
+            w.put_u32(*seq);
+        }
+
+        w.put_u32(self.statics.len() as u32);
+        for (s, &cn) in self.statics.iter().zip(&static_names) {
+            w.put_u32(cn);
+            w.put_u16(s.idx);
+            encode_value(&mut w, &s.value);
+        }
+        w.into_vec()
+    }
+
+    /// Decode from bytes.
+    pub fn decode(buf: &[u8]) -> Result<CapturePacket> {
+        let mut r = WireReader::new(buf);
+        let magic = r.get_u32()?;
+        if magic != MAGIC {
+            return Err(CloneCloudError::Wire(format!("bad magic {magic:#x}")));
+        }
+        let version = r.get_u16()?;
+        if version != VERSION {
+            return Err(CloneCloudError::Wire(format!("unsupported version {version}")));
+        }
+        let direction = match r.get_u8()? {
+            0 => Direction::Forward,
+            1 => Direction::Reverse,
+            d => return Err(CloneCloudError::Wire(format!("bad direction {d}"))),
+        };
+        let thread_id = r.get_u32()?;
+        let clock_us = r.get_f64()?;
+
+        let nstrings = r.get_u32()? as usize;
+        let mut strings = Vec::with_capacity(nstrings);
+        for _ in 0..nstrings {
+            strings.push(r.get_str()?);
+        }
+        let lookup = |i: u32| -> Result<String> {
+            strings
+                .get(i as usize)
+                .cloned()
+                .ok_or_else(|| CloneCloudError::Wire(format!("string index {i} out of range")))
+        };
+
+        let nframes = r.get_u32()? as usize;
+        let mut frames = Vec::with_capacity(nframes);
+        for _ in 0..nframes {
+            let class_name = lookup(r.get_u32()?)?;
+            let method_name = lookup(r.get_u32()?)?;
+            let pc = r.get_u32()?;
+            let ret_reg_plus1 = r.get_u8()?;
+            let nregs = r.get_u32()? as usize;
+            let mut regs = Vec::with_capacity(nregs);
+            for _ in 0..nregs {
+                regs.push(decode_value(&mut r)?);
+            }
+            frames.push(WireFrame {
+                class_name,
+                method_name,
+                pc,
+                ret_reg_plus1,
+                regs,
+            });
+        }
+
+        let nobjs = r.get_u32()? as usize;
+        let mut objects = Vec::with_capacity(nobjs);
+        for _ in 0..nobjs {
+            let origin_id = r.get_u64()?;
+            let mapped_id = r.get_u64()?;
+            let class_name = lookup(r.get_u32()?)?;
+            let zygote_seq = if r.get_u8()? == 1 {
+                Some(r.get_u32()?)
+            } else {
+                None
+            };
+            let body = decode_body(&mut r)?;
+            objects.push(WireObject {
+                origin_id,
+                mapped_id,
+                class_name,
+                zygote_seq,
+                body,
+            });
+        }
+
+        let nzy = r.get_u32()? as usize;
+        let mut zygote_refs = Vec::with_capacity(nzy);
+        for _ in 0..nzy {
+            let name = lookup(r.get_u32()?)?;
+            let seq = r.get_u32()?;
+            zygote_refs.push((name, seq));
+        }
+
+        let nst = r.get_u32()? as usize;
+        let mut statics = Vec::with_capacity(nst);
+        for _ in 0..nst {
+            let class_name = lookup(r.get_u32()?)?;
+            let idx = r.get_u16()?;
+            let value = decode_value(&mut r)?;
+            statics.push(WireStatic {
+                class_name,
+                idx,
+                value,
+            });
+        }
+
+        if !r.is_done() {
+            return Err(CloneCloudError::Wire(format!(
+                "{} trailing bytes",
+                r.remaining()
+            )));
+        }
+        Ok(CapturePacket {
+            direction,
+            thread_id,
+            clock_us,
+            frames,
+            objects,
+            zygote_refs,
+            statics,
+        })
+    }
+}
+
+fn encode_value(w: &mut WireWriter, v: &WireValue) {
+    match v {
+        WireValue::Null => w.put_u8(0),
+        WireValue::Int(x) => {
+            w.put_u8(1);
+            w.put_i64(*x);
+        }
+        WireValue::Float(x) => {
+            w.put_u8(2);
+            w.put_f64(*x);
+        }
+        WireValue::Slot(s) => {
+            w.put_u8(3);
+            w.put_u32(*s);
+        }
+        WireValue::Zygote(z) => {
+            w.put_u8(4);
+            w.put_u32(*z);
+        }
+    }
+}
+
+fn decode_value(r: &mut WireReader) -> Result<WireValue> {
+    Ok(match r.get_u8()? {
+        0 => WireValue::Null,
+        1 => WireValue::Int(r.get_i64()?),
+        2 => WireValue::Float(r.get_f64()?),
+        3 => WireValue::Slot(r.get_u32()?),
+        4 => WireValue::Zygote(r.get_u32()?),
+        t => return Err(CloneCloudError::Wire(format!("bad value tag {t}"))),
+    })
+}
+
+fn encode_body(w: &mut WireWriter, b: &WireBody) {
+    match b {
+        WireBody::Fields(vs) => {
+            w.put_u8(0);
+            w.put_u32(vs.len() as u32);
+            for v in vs {
+                encode_value(w, v);
+            }
+        }
+        WireBody::ByteArray(bytes) => {
+            w.put_u8(1);
+            w.put_bytes(bytes);
+        }
+        WireBody::FloatArray(fs) => {
+            w.put_u8(2);
+            w.put_u32(fs.len() as u32);
+            for f in fs {
+                w.put_f32(*f);
+            }
+        }
+        WireBody::RefArray(vs) => {
+            w.put_u8(3);
+            w.put_u32(vs.len() as u32);
+            for v in vs {
+                encode_value(w, v);
+            }
+        }
+    }
+}
+
+fn decode_body(r: &mut WireReader) -> Result<WireBody> {
+    Ok(match r.get_u8()? {
+        0 => {
+            let n = r.get_u32()? as usize;
+            let mut vs = Vec::with_capacity(n);
+            for _ in 0..n {
+                vs.push(decode_value(r)?);
+            }
+            WireBody::Fields(vs)
+        }
+        1 => WireBody::ByteArray(r.get_bytes()?),
+        2 => {
+            let n = r.get_u32()? as usize;
+            let mut fs = Vec::with_capacity(n);
+            for _ in 0..n {
+                fs.push(r.get_f32()?);
+            }
+            WireBody::FloatArray(fs)
+        }
+        3 => {
+            let n = r.get_u32()? as usize;
+            let mut vs = Vec::with_capacity(n);
+            for _ in 0..n {
+                vs.push(decode_value(r)?);
+            }
+            WireBody::RefArray(vs)
+        }
+        t => return Err(CloneCloudError::Wire(format!("bad body tag {t}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CapturePacket {
+        CapturePacket {
+            direction: Direction::Forward,
+            thread_id: 3,
+            clock_us: 123.5,
+            frames: vec![WireFrame {
+                class_name: "App".into(),
+                method_name: "scan".into(),
+                pc: 17,
+                ret_reg_plus1: 2,
+                regs: vec![
+                    WireValue::Null,
+                    WireValue::Int(-9),
+                    WireValue::Float(2.5),
+                    WireValue::Slot(1),
+                    WireValue::Zygote(0),
+                ],
+            }],
+            objects: vec![
+                WireObject {
+                    origin_id: 42,
+                    mapped_id: 0,
+                    class_name: "App".into(),
+                    zygote_seq: None,
+                    body: WireBody::Fields(vec![WireValue::Slot(1), WireValue::Int(7)]),
+                },
+                WireObject {
+                    origin_id: 43,
+                    mapped_id: 7,
+                    class_name: "[arr]".into(),
+                    zygote_seq: Some(12),
+                    body: WireBody::ByteArray(vec![1, 2, 3]),
+                },
+            ],
+            zygote_refs: vec![("sys.String".into(), 99)],
+            statics: vec![WireStatic {
+                class_name: "App".into(),
+                idx: 0,
+                value: WireValue::Slot(0),
+            }],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = sample();
+        let bytes = p.encode();
+        let q = CapturePacket::decode(&bytes).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let p = sample();
+        let mut bytes = p.encode();
+        bytes[0] ^= 0xFF;
+        assert!(CapturePacket::decode(&bytes).is_err());
+        let bytes2 = p.encode();
+        assert!(CapturePacket::decode(&bytes2[..bytes2.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = sample().encode();
+        bytes.push(0);
+        assert!(CapturePacket::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn wire_is_network_byte_order() {
+        // MAGIC is the first u32, big-endian.
+        let bytes = sample().encode();
+        assert_eq!(&bytes[..4], &[0x43, 0x43, 0x48, 0x50]);
+    }
+
+    #[test]
+    fn float_arrays_roundtrip_precisely() {
+        let mut p = sample();
+        p.objects[1].body = WireBody::FloatArray(vec![1.5, -0.25, 3.0e-8]);
+        let q = CapturePacket::decode(&p.encode()).unwrap();
+        assert_eq!(p.objects[1].body, q.objects[1].body);
+    }
+}

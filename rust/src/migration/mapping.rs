@@ -1,0 +1,154 @@
+//! The object mapping table (paper §4.2, Figure 8).
+//!
+//! References are native memory addresses in most application-layer VMs —
+//! meaningless across address spaces and reused over time. CloneCloud
+//! instead keys migration on per-VM unique object IDs: MID at the mobile
+//! device, CID at the clone. The table exists only during capture and
+//! reintegration; it is created at migration start and destroyed after
+//! the merge.
+
+use std::collections::HashMap;
+
+/// One mapping entry. `None` encodes the paper's "null" column: an object
+/// that does not (yet) have a counterpart on that side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MapEntry {
+    pub mid: Option<u64>,
+    pub cid: Option<u64>,
+}
+
+/// MID <-> CID mapping table.
+#[derive(Debug, Clone, Default)]
+pub struct MappingTable {
+    entries: Vec<MapEntry>,
+    by_mid: HashMap<u64, usize>,
+    by_cid: HashMap<u64, usize>,
+}
+
+impl MappingTable {
+    pub fn new() -> MappingTable {
+        MappingTable::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert an entry; panics (debug) on duplicate non-null keys.
+    pub fn insert(&mut self, mid: Option<u64>, cid: Option<u64>) -> usize {
+        let idx = self.entries.len();
+        self.entries.push(MapEntry { mid, cid });
+        if let Some(m) = mid {
+            debug_assert!(!self.by_mid.contains_key(&m), "duplicate MID {m}");
+            self.by_mid.insert(m, idx);
+        }
+        if let Some(c) = cid {
+            debug_assert!(!self.by_cid.contains_key(&c), "duplicate CID {c}");
+            self.by_cid.insert(c, idx);
+        }
+        idx
+    }
+
+    /// Fill the CID of the entry holding `mid` (clone-side instantiation:
+    /// "the clone recreates all the objects with null CIDs, assigning
+    /// valid fresh CIDs").
+    pub fn assign_cid(&mut self, mid: u64, cid: u64) {
+        if let Some(&idx) = self.by_mid.get(&mid) {
+            self.entries[idx].cid = Some(cid);
+            self.by_cid.insert(cid, idx);
+        }
+    }
+
+    pub fn mid_for_cid(&self, cid: u64) -> Option<u64> {
+        self.by_cid.get(&cid).and_then(|&i| self.entries[i].mid)
+    }
+
+    pub fn cid_for_mid(&self, mid: u64) -> Option<u64> {
+        self.by_mid.get(&mid).and_then(|&i| self.entries[i].cid)
+    }
+
+    pub fn contains_cid(&self, cid: u64) -> bool {
+        self.by_cid.contains_key(&cid)
+    }
+
+    pub fn entries(&self) -> &[MapEntry] {
+        &self.entries
+    }
+
+    /// Drop entries whose CID is not in `returning` — objects from the
+    /// original thread that died at the clone ("entries in the table
+    /// whose CID does not appear in captured objects are deleted").
+    /// Returns the number dropped.
+    pub fn retain_cids(&mut self, returning: &HashMap<u64, ()>) -> usize {
+        let before = self.entries.len();
+        self.entries
+            .retain(|e| matches!(e.cid, Some(c) if returning.contains_key(&c)));
+        self.by_mid.clear();
+        self.by_cid.clear();
+        for (i, e) in self.entries.iter().enumerate() {
+            if let Some(m) = e.mid {
+                self.by_mid.insert(m, i);
+            }
+            if let Some(c) = e.cid {
+                self.by_cid.insert(c, i);
+            }
+        }
+        before - self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reproduce the paper's Figure 8 scenario end to end.
+    #[test]
+    fn figure8_scenario() {
+        // Initial migration: objects with MIDs 1, 2, 3 captured.
+        let mut t = MappingTable::new();
+        t.insert(Some(1), None);
+        t.insert(Some(2), None);
+        t.insert(Some(3), None);
+
+        // At the clone, fresh CIDs 11, 12, 13 are assigned.
+        t.assign_cid(1, 11);
+        t.assign_cid(2, 12);
+        t.assign_cid(3, 13);
+        assert_eq!(t.cid_for_mid(2), Some(12));
+
+        // Thread returns: captured clone objects are CIDs 11, 13 (object
+        // with CID 12 died), plus new objects CIDs 14, 15 (address of the
+        // dead object may have been reused — but its *ID* cannot be).
+        let returning: HashMap<u64, ()> =
+            [(11, ()), (13, ()), (14, ()), (15, ())].into_iter().collect();
+        let dropped = t.retain_cids(&returning);
+        assert_eq!(dropped, 1, "the dead object's entry is deleted");
+        assert_eq!(t.mid_for_cid(11), Some(1));
+        assert_eq!(t.mid_for_cid(13), Some(3));
+        assert_eq!(t.mid_for_cid(12), None);
+
+        // New clone objects get entries with null MID.
+        for cid in [14u64, 15] {
+            if !t.contains_cid(cid) {
+                t.insert(None, Some(cid));
+            }
+        }
+        assert_eq!(t.len(), 4);
+        // Back at the mobile device: null-MID entries become fresh
+        // objects; non-null MIDs are overwritten with returned state.
+        let fresh: Vec<_> = t.entries().iter().filter(|e| e.mid.is_none()).collect();
+        assert_eq!(fresh.len(), 2);
+    }
+
+    #[test]
+    fn lookups_roundtrip() {
+        let mut t = MappingTable::new();
+        t.insert(Some(5), Some(50));
+        assert_eq!(t.mid_for_cid(50), Some(5));
+        assert_eq!(t.cid_for_mid(5), Some(50));
+        assert_eq!(t.cid_for_mid(6), None);
+    }
+}

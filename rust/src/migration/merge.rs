@@ -1,0 +1,256 @@
+//! Resume and merge (paper §4.2).
+//!
+//! Forward direction: overlay a captured thread context onto a clean
+//! clone process — allocate every shipped object (assigning fresh CIDs
+//! into the mapping table), patch references, rebuild the stack frames,
+//! mark the thread runnable.
+//!
+//! Reverse direction: *merge* the returned context into the original
+//! process — overwrite objects with non-null MIDs, create objects with
+//! null MIDs, leave orphans to the garbage collector.
+
+use crate::appvm::bytecode::ClassId;
+use crate::appvm::process::Process;
+use crate::appvm::thread::{Frame, ThreadStatus, VmThread};
+use crate::appvm::value::{ObjBody, ObjId, Object, Value};
+use crate::error::{CloneCloudError, Result};
+
+use super::format::{CapturePacket, Direction, WireBody, WireValue};
+use super::mapping::MappingTable;
+use super::zygote_diff::ZygoteIndex;
+
+/// Merge statistics.
+#[derive(Debug, Clone, Default)]
+pub struct MergeStats {
+    /// Objects freshly created on this side.
+    pub created: usize,
+    /// Objects overwritten in place (non-null mapped id / Zygote name).
+    pub overwritten: usize,
+}
+
+/// Resolve the local object id each wire object lands on, allocating
+/// placeholders for fresh objects. Returns slot -> local id.
+fn place_objects(
+    p: &mut Process,
+    packet: &CapturePacket,
+    zidx: &ZygoteIndex,
+    use_mapped: bool,
+    stats: &mut MergeStats,
+) -> Result<Vec<ObjId>> {
+    let mut locals = Vec::with_capacity(packet.objects.len());
+    for wo in &packet.objects {
+        let class = p
+            .program
+            .class_id(&wo.class_name)
+            .ok_or_else(|| {
+                CloneCloudError::migration(format!("unknown class '{}'", wo.class_name))
+            })?;
+        let local = if let Some(seq) = wo.zygote_seq {
+            // Dirty Zygote object: overwrite the local template twin.
+            stats.overwritten += 1;
+            zidx.lookup(&wo.class_name, seq)?
+        } else if use_mapped && wo.mapped_id != 0 {
+            // Reverse direction, known MID: overwrite in place.
+            let id = ObjId(wo.mapped_id);
+            if !p.heap.contains(id) {
+                return Err(CloneCloudError::migration(format!(
+                    "returned object maps to dead local id {}",
+                    wo.mapped_id
+                )));
+            }
+            stats.overwritten += 1;
+            id
+        } else {
+            stats.created += 1;
+            p.heap.alloc(Object {
+                class,
+                body: ObjBody::Fields(Vec::new()), // placeholder
+                zygote_seq: None,
+                dirty: true,
+            })
+        };
+        locals.push(local);
+    }
+    Ok(locals)
+}
+
+fn make_value_resolver<'a>(
+    locals: &'a [ObjId],
+    zlocal: &'a [ObjId],
+) -> impl Fn(&WireValue) -> Result<Value> + 'a {
+    move |v: &WireValue| -> Result<Value> {
+        Ok(match v {
+            WireValue::Null => Value::Null,
+            WireValue::Int(x) => Value::Int(*x),
+            WireValue::Float(x) => Value::Float(*x),
+            WireValue::Slot(s) => Value::Ref(*locals.get(*s as usize).ok_or_else(|| {
+                CloneCloudError::migration(format!("slot {s} out of range"))
+            })?),
+            WireValue::Zygote(z) => Value::Ref(*zlocal.get(*z as usize).ok_or_else(|| {
+                CloneCloudError::migration(format!("zygote ref {z} out of range"))
+            })?),
+        })
+    }
+}
+
+/// Fill object bodies + statics + build frames from a packet. Shared by
+/// both directions once placement is done.
+fn apply_packet(
+    p: &mut Process,
+    packet: &CapturePacket,
+    locals: &[ObjId],
+    zlocal: &[ObjId],
+) -> Result<Vec<Frame>> {
+    let resolve = make_value_resolver(locals, zlocal);
+
+    // Object bodies.
+    for (wo, &local) in packet.objects.iter().zip(locals) {
+        let body = match &wo.body {
+            WireBody::Fields(vs) => {
+                ObjBody::Fields(vs.iter().map(&resolve).collect::<Result<Vec<_>>>()?)
+            }
+            WireBody::ByteArray(b) => ObjBody::ByteArray(b.clone()),
+            WireBody::FloatArray(f) => ObjBody::FloatArray(f.clone()),
+            WireBody::RefArray(vs) => {
+                ObjBody::RefArray(vs.iter().map(&resolve).collect::<Result<Vec<_>>>()?)
+            }
+        };
+        p.heap.get_mut(local)?.body = body;
+    }
+
+    // Statics.
+    for ws in &packet.statics {
+        let cid: ClassId = p.program.class_id(&ws.class_name).ok_or_else(|| {
+            CloneCloudError::migration(format!("unknown class '{}'", ws.class_name))
+        })?;
+        let v = resolve(&ws.value)?;
+        let slot = p
+            .statics
+            .get_mut(cid.0 as usize)
+            .and_then(|s| s.get_mut(ws.idx as usize))
+            .ok_or_else(|| CloneCloudError::migration("static index out of range"))?;
+        *slot = v;
+    }
+
+    // Frames.
+    let mut frames = Vec::with_capacity(packet.frames.len());
+    for wf in &packet.frames {
+        let mref = p.program.resolve(&wf.class_name, &wf.method_name)?;
+        let mut frame = Frame::new(
+            mref,
+            p.program.method(mref).nregs.max(wf.regs.len()),
+            if wf.ret_reg_plus1 == 0 {
+                None
+            } else {
+                Some(wf.ret_reg_plus1 - 1)
+            },
+        );
+        for (i, rv) in wf.regs.iter().enumerate() {
+            frame.regs[i] = resolve(rv)?;
+        }
+        frame.pc = wf.pc as usize;
+        frames.push(frame);
+    }
+    Ok(frames)
+}
+
+fn resolve_zygote_locals(packet: &CapturePacket, zidx: &ZygoteIndex) -> Result<Vec<ObjId>> {
+    packet
+        .zygote_refs
+        .iter()
+        .map(|(name, seq)| zidx.lookup(name, *seq))
+        .collect()
+}
+
+/// Forward direction: instantiate a migrated thread in a clone process.
+/// Returns the new thread id and the clone-side mapping table.
+pub fn instantiate_at_clone(
+    clone: &mut Process,
+    packet: &CapturePacket,
+    zidx: &ZygoteIndex,
+) -> Result<(u32, MappingTable, MergeStats)> {
+    if packet.direction != Direction::Forward {
+        return Err(CloneCloudError::migration("expected a forward capture"));
+    }
+    let mut stats = MergeStats::default();
+    let zlocal = resolve_zygote_locals(packet, zidx)?;
+    let locals = place_objects(clone, packet, zidx, false, &mut stats)?;
+
+    // Build the mapping table: MID (origin) -> freshly assigned CID.
+    let mut table = MappingTable::new();
+    for (wo, &local) in packet.objects.iter().zip(&locals) {
+        table.insert(Some(wo.origin_id), Some(local.0));
+    }
+
+    let frames = apply_packet(clone, packet, &locals, &zlocal)?;
+    let tid = clone.threads.len() as u32;
+    let mut t = VmThread::new(tid);
+    t.frames = frames;
+    t.status = ThreadStatus::Runnable;
+    clone.threads.push(t);
+    clone.clock.advance_to_us(packet.clock_us);
+    Ok((tid, table, stats))
+}
+
+/// Reverse direction: merge a returned thread context back into the
+/// original process, updating thread `tid` in place. Orphaned objects
+/// (migrated out, died at the clone) become unreachable and are left for
+/// the garbage collector (§4.2).
+pub fn merge_at_mobile(
+    p: &mut Process,
+    tid: u32,
+    packet: &CapturePacket,
+    zidx: &ZygoteIndex,
+) -> Result<MergeStats> {
+    if packet.direction != Direction::Reverse {
+        return Err(CloneCloudError::migration("expected a reverse capture"));
+    }
+    let mut stats = MergeStats::default();
+    let zlocal = resolve_zygote_locals(packet, zidx)?;
+    let locals = place_objects(p, packet, zidx, true, &mut stats)?;
+    let frames = apply_packet(p, packet, &locals, &zlocal)?;
+
+    let t = p.thread_mut(tid)?;
+    t.frames = frames;
+    t.status = ThreadStatus::Runnable;
+    t.suspend_count = 0;
+    p.clock.advance_to_us(packet.clock_us);
+    Ok(stats)
+}
+
+/// Capture-local object count validator used in tests: every Slot in the
+/// packet must be within range.
+pub fn validate_packet(packet: &CapturePacket) -> Result<()> {
+    let n = packet.objects.len() as u32;
+    let nz = packet.zygote_refs.len() as u32;
+    let chk = |v: &WireValue| -> Result<()> {
+        match v {
+            WireValue::Slot(s) if *s >= n => {
+                Err(CloneCloudError::migration(format!("slot {s} >= {n}")))
+            }
+            WireValue::Zygote(z) if *z >= nz => {
+                Err(CloneCloudError::migration(format!("zygote {z} >= {nz}")))
+            }
+            _ => Ok(()),
+        }
+    };
+    for f in &packet.frames {
+        for v in &f.regs {
+            chk(v)?;
+        }
+    }
+    for o in &packet.objects {
+        match &o.body {
+            WireBody::Fields(vs) | WireBody::RefArray(vs) => {
+                for v in vs {
+                    chk(v)?;
+                }
+            }
+            _ => {}
+        }
+    }
+    for s in &packet.statics {
+        chk(&s.value)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! The per-process migrator (paper §4, Figure 7).
+//!
+//! Orchestrates one migration round trip and charges its virtual-time
+//! costs: suspend all threads at safe points, capture the migrant, hand
+//! the packet to the node manager (the caller), and — on the way back —
+//! merge the returned state and resume. The mapping table lives only for
+//! the duration of the thread's stay at the clone (§4.2).
+
+use std::collections::HashMap;
+
+use crate::appvm::process::Process;
+use crate::appvm::thread::ThreadStatus;
+use crate::config::CostParams;
+use crate::error::Result;
+
+use super::capture::{capture_thread, CaptureOptions, CaptureStats};
+use super::format::{CapturePacket, Direction};
+use super::mapping::MappingTable;
+use super::merge::{instantiate_at_clone, merge_at_mobile, MergeStats};
+use super::zygote_diff::ZygoteIndex;
+
+/// Timing breakdown of one migration phase set (virtual ms). Feeds the E3
+/// migration-cost bench.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationPhases {
+    pub suspend_ms: f64,
+    pub capture_ms: f64,
+    pub merge_ms: f64,
+    /// Transfer time is charged by the node manager (network model), not
+    /// here; recorded by the exec driver.
+    pub bytes_out: u64,
+    pub objects_shipped: usize,
+    pub zygote_skipped: usize,
+}
+
+/// The migrator: per-process component, configured with cost calibration
+/// and the Zygote-diff switch.
+pub struct Migrator {
+    pub costs: CostParams,
+    pub opts: CaptureOptions,
+}
+
+impl Migrator {
+    pub fn new(costs: CostParams) -> Migrator {
+        Migrator {
+            costs,
+            opts: CaptureOptions::default(),
+        }
+    }
+
+    pub fn without_zygote_diff(mut self) -> Migrator {
+        self.opts.zygote_diff = false;
+        self
+    }
+
+    /// Suspend + capture thread `tid` for migration. Charges suspend and
+    /// capture costs to the process clock. The thread is marked Migrated.
+    pub fn migrate_out(
+        &self,
+        p: &mut Process,
+        tid: u32,
+    ) -> Result<(CapturePacket, MigrationPhases)> {
+        let mut phases = MigrationPhases::default();
+
+        // Suspend all other threads at safe points (§5: the migrator
+        // waits on a condvar until every thread parks).
+        p.suspend_others(tid);
+        let suspend_us = p.device.scale_us(self.costs.suspend_resume_us / 2.0);
+        p.clock.charge_us(suspend_us);
+        phases.suspend_ms = suspend_us / 1e3;
+
+        let (packet, stats) = capture_thread(p, tid, Direction::Forward, None, self.opts)?;
+        let capture_us = self.capture_cost_us(p, &stats);
+        p.clock.charge_us(capture_us);
+        phases.capture_ms = capture_us / 1e3;
+        phases.bytes_out = stats.bytes as u64;
+        phases.objects_shipped = stats.objects;
+        phases.zygote_skipped = stats.zygote_skipped;
+
+        p.thread_mut(tid)?.status = ThreadStatus::Migrated;
+        Ok((packet, phases))
+    }
+
+    /// Clone side: instantiate the migrant thread. Returns the thread id
+    /// and the mapping table to retain while the thread executes here.
+    pub fn receive_at_clone(
+        &self,
+        clone: &mut Process,
+        packet: &CapturePacket,
+    ) -> Result<(u32, MappingTable, MergeStats)> {
+        let zidx = ZygoteIndex::build(&clone.program, &clone.heap);
+        let (tid, table, stats) = instantiate_at_clone(clone, packet, &zidx)?;
+        // Re-instantiation cost mirrors merge cost on the clone's CPU.
+        let us = clone.device.scale_us(self.merge_cost_base_us(packet));
+        clone.clock.charge_us(us);
+        Ok((tid, table, stats))
+    }
+
+    /// Clone side: capture the thread for reintegration, consuming the
+    /// mapping table (dead entries dropped, new objects added — Fig. 8).
+    pub fn return_from_clone(
+        &self,
+        clone: &mut Process,
+        tid: u32,
+        mut table: MappingTable,
+    ) -> Result<(CapturePacket, MigrationPhases, usize)> {
+        let mut phases = MigrationPhases::default();
+        let suspend_us = clone.device.scale_us(self.costs.suspend_resume_us / 2.0);
+        clone.clock.charge_us(suspend_us);
+        phases.suspend_ms = suspend_us / 1e3;
+
+        let (packet, stats) =
+            capture_thread(clone, tid, Direction::Reverse, Some(&table), self.opts)?;
+        let capture_us = self.capture_cost_us(clone, &stats);
+        clone.clock.charge_us(capture_us);
+        phases.capture_ms = capture_us / 1e3;
+        phases.bytes_out = stats.bytes as u64;
+        phases.objects_shipped = stats.objects;
+        phases.zygote_skipped = stats.zygote_skipped;
+
+        // Update the table per Fig. 8: drop entries whose CID did not
+        // return; report how many died at the clone.
+        let returning: HashMap<u64, ()> =
+            packet.objects.iter().map(|o| (o.origin_id, ())).collect();
+        let dropped = table.retain_cids(&returning);
+
+        clone.thread_mut(tid)?.status = ThreadStatus::Migrated;
+        Ok((packet, phases, dropped))
+    }
+
+    /// Mobile side: merge the returned state into the original process
+    /// and resume. The merge cost (patching references in the running
+    /// address space) dominates WiFi-case migration in the paper (§6).
+    pub fn merge_back(
+        &self,
+        p: &mut Process,
+        tid: u32,
+        packet: &CapturePacket,
+    ) -> Result<(MergeStats, MigrationPhases)> {
+        let mut phases = MigrationPhases::default();
+        let zidx = ZygoteIndex::build(&p.program, &p.heap);
+        let stats = merge_at_mobile(p, tid, packet, &zidx)?;
+        let merge_us = p
+            .device
+            .scale_us(self.merge_cost_base_us(packet) + self.costs.suspend_resume_us / 2.0);
+        p.clock.charge_us(merge_us);
+        phases.merge_ms = merge_us / 1e3;
+        p.resume_others(tid);
+        Ok((stats, phases))
+    }
+
+    /// Baseline merge cost: reference patching per object + per byte of
+    /// payload state (the network-unspecific cost that dominates WiFi
+    /// migrations in the paper's §6).
+    fn merge_cost_base_us(&self, packet: &CapturePacket) -> f64 {
+        use super::format::WireBody;
+        let bytes: u64 = packet
+            .objects
+            .iter()
+            .map(|o| match &o.body {
+                WireBody::ByteArray(b) => b.len() as u64,
+                WireBody::FloatArray(f) => 4 * f.len() as u64,
+                WireBody::Fields(v) | WireBody::RefArray(v) => 9 * v.len() as u64,
+            })
+            .sum();
+        self.costs.merge_per_obj_us * packet.objects.len() as f64
+            + self.costs.merge_per_byte_us * bytes as f64
+    }
+
+    fn capture_cost_us(&self, p: &Process, stats: &CaptureStats) -> f64 {
+        p.device.scale_us(
+            self.costs.capture_per_obj_us * stats.objects as f64
+                + self.costs.per_byte_us * stats.bytes as f64,
+        )
+    }
+}

@@ -1,0 +1,260 @@
+//! Thread-granularity migration (paper §4).
+//!
+//! * [`capture`] — suspend-and-capture: frames + reachable heap + statics.
+//! * [`format`] — hprof-like portable wire encoding (network byte order).
+//! * [`mapping`] — the MID/CID object-mapping table (Fig. 8).
+//! * [`merge`] — clone-side instantiation and mobile-side state merge.
+//! * [`zygote_diff`] — the §4.3 transfer optimization.
+//! * [`migrator`] — the per-process orchestration + cost accounting.
+
+pub mod capture;
+pub mod format;
+pub mod mapping;
+pub mod merge;
+pub mod migrator;
+pub mod zygote_diff;
+
+pub use capture::{capture_thread, measure_state_size, CaptureOptions, CaptureStats};
+pub use format::{CapturePacket, Direction};
+pub use mapping::MappingTable;
+pub use merge::{instantiate_at_clone, merge_at_mobile, validate_packet, MergeStats};
+pub use migrator::{MigrationPhases, Migrator};
+pub use zygote_diff::ZygoteIndex;
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::interp::{run_thread, NoHooks, RunExit};
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::process::Process;
+    use crate::appvm::value::{ObjBody, Value};
+    use crate::appvm::zygote::build_template;
+    use crate::appvm::Program;
+    use crate::config::CostParams;
+    use crate::device::{DeviceSpec, Location};
+    use crate::vfs::SimFs;
+
+    /// A program whose worker mutates state on both sides of a migration
+    /// point: builds an array, migrates (ccstart), fills it remotely,
+    /// reintegrates (ccstop), then sums it locally.
+    const PROG: &str = r#"
+class Work app
+  static out
+  method main nargs=0 regs=8
+    const r0 64
+    newarr r1 float r0
+    invoke r2 Work.fill r1
+    puts Work.out r2
+    retv
+  end
+  method fill nargs=1 regs=8
+    ccstart 0
+    len r1 r0
+    const r2 0
+  loop:
+    ifge r2 r1 @done
+    i2f r3 r2
+    aput r0 r2 r3
+    const r4 1
+    add r2 r2 r4
+    goto @loop
+  done:
+    ccstop 0
+    # sum it up
+    const r2 0
+    constf r5 0.0
+  sum:
+    ifge r2 r1 @end
+    aget r3 r0 r2
+    fadd r5 r5 r3
+    const r4 1
+    add r2 r2 r4
+    goto @sum
+  end:
+    ret r5
+  end
+end
+"#;
+
+    fn make_proc(loc: Location, program: &Arc<Program>, zygote: usize) -> Process {
+        let template = build_template(program, zygote, 99);
+        let dev = match loc {
+            Location::Mobile => DeviceSpec::phone_g1(),
+            Location::Clone => DeviceSpec::clone_desktop(),
+        };
+        Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            dev,
+            loc,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        )
+    }
+
+    /// Full round trip: phone runs to ccstart, migrates, clone executes
+    /// the body, returns at ccstop, phone merges and finishes. The final
+    /// result must equal the monolithic run's.
+    #[test]
+    fn migration_roundtrip_preserves_semantics() {
+        let program = Arc::new(assemble(PROG).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+
+        // Monolithic reference run.
+        let mut mono = make_proc(Location::Mobile, &program, 50);
+        let main = program.entry().unwrap();
+        let tid = mono.spawn_thread(main, &[]).unwrap();
+        let mut exit = run_thread(&mut mono, tid, &mut NoHooks, 1_000_000).unwrap();
+        // Local policy: skip partition points.
+        while matches!(
+            exit,
+            RunExit::MigrationPoint { .. } | RunExit::ReintegrationPoint { .. }
+        ) {
+            exit = run_thread(&mut mono, tid, &mut NoHooks, 1_000_000).unwrap();
+        }
+        assert!(matches!(exit, RunExit::Completed(_)));
+        let expected = mono.statics[main.class.0 as usize][0];
+        // sum 0..64 = 2016
+        assert_eq!(expected.as_float(), Some(2016.0));
+
+        // Distributed run.
+        let mut phone = make_proc(Location::Mobile, &program, 50);
+        let mut clone = make_proc(Location::Clone, &program, 50);
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 1_000_000).unwrap();
+        let RunExit::MigrationPoint { point } = exit else {
+            panic!("expected migration point, got {exit:?}")
+        };
+        assert_eq!(point, 0);
+
+        let migrator = Migrator::new(CostParams::default());
+        let (packet, phases) = migrator.migrate_out(&mut phone, tid).unwrap();
+        assert!(phases.bytes_out > 0);
+        validate_packet(&packet).unwrap();
+
+        // Wire round trip (encode/decode) like the real transport does.
+        let packet = CapturePacket::decode(&packet.encode()).unwrap();
+        let (ctid, table, _) = migrator.receive_at_clone(&mut clone, &packet).unwrap();
+        assert_eq!(table.len(), packet.objects.len());
+
+        // Clone executes the offloaded body up to the reintegration point.
+        let exit = run_thread(&mut clone, ctid, &mut NoHooks, 1_000_000).unwrap();
+        assert!(
+            matches!(exit, RunExit::ReintegrationPoint { point: 0 }),
+            "{exit:?}"
+        );
+
+        let (rpacket, _, _dropped) =
+            migrator.return_from_clone(&mut clone, ctid, table).unwrap();
+        let rpacket = CapturePacket::decode(&rpacket.encode()).unwrap();
+        migrator.merge_back(&mut phone, tid, &rpacket).unwrap();
+
+        // Phone finishes the thread.
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 1_000_000).unwrap();
+        assert!(matches!(exit, RunExit::Completed(_)), "{exit:?}");
+        let got = phone.statics[main.class.0 as usize][0];
+        assert_eq!(got, expected, "distributed result == monolithic result");
+    }
+
+    /// The Zygote-diff optimization must cut shipped objects drastically
+    /// without changing semantics (E4's mechanism).
+    #[test]
+    fn zygote_diff_reduces_shipped_objects() {
+        let program = Arc::new(assemble(PROG).unwrap());
+        let main = program.entry().unwrap();
+
+        let run = |zygote_diff: bool| -> (usize, usize) {
+            let mut phone = make_proc(Location::Mobile, &program, 2000);
+            // Root a zygote object from a static so captures see the
+            // template graph.
+            let some_zy = phone.heap.iter().map(|(id, _)| id).min().unwrap();
+            phone.statics[main.class.0 as usize][0] = Value::Ref(some_zy);
+            let tid = phone.spawn_thread(main, &[]).unwrap();
+            let _ = run_thread(&mut phone, tid, &mut NoHooks, 1_000_000).unwrap();
+            let mut m = Migrator::new(CostParams::default());
+            m.opts.zygote_diff = zygote_diff;
+            let (packet, phases) = m.migrate_out(&mut phone, tid).unwrap();
+            let _ = packet;
+            (phases.objects_shipped, phases.zygote_skipped)
+        };
+
+        let (with_objs, with_skipped) = run(true);
+        let (without_objs, without_skipped) = run(false);
+        assert_eq!(without_skipped, 0);
+        assert!(with_skipped >= 1);
+        assert!(
+            without_objs > with_objs,
+            "diff on: {with_objs} shipped; off: {without_objs}"
+        );
+    }
+
+    /// New objects created at the clone arrive as fresh objects at the
+    /// phone; objects that died at the clone drop out of the mapping.
+    #[test]
+    fn clone_created_objects_materialize_at_phone() {
+        const P2: &str = r#"
+class Gen app
+  static keep
+  method main nargs=0 regs=4
+    invokev Gen.work
+    retv
+  end
+  method work nargs=0 regs=6
+    ccstart 1
+    const r0 16
+    newarr r1 byte r0
+    const r2 0
+    const r3 7
+    aput r1 r2 r3
+    puts Gen.keep r1
+    ccstop 1
+    retv
+  end
+end
+"#;
+        let program = Arc::new(assemble(P2).unwrap());
+        let main = program.entry().unwrap();
+        let mut phone = make_proc(Location::Mobile, &program, 20);
+        let mut clone = make_proc(Location::Clone, &program, 20);
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 100_000).unwrap();
+        assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+        let migrator = Migrator::new(CostParams::default());
+        let (packet, _) = migrator.migrate_out(&mut phone, tid).unwrap();
+        let (ctid, table, _) = migrator.receive_at_clone(&mut clone, &packet).unwrap();
+        let exit = run_thread(&mut clone, ctid, &mut NoHooks, 100_000).unwrap();
+        assert!(matches!(exit, RunExit::ReintegrationPoint { .. }));
+        let (rp, _, _) = migrator.return_from_clone(&mut clone, ctid, table).unwrap();
+        let (stats, _) = migrator.merge_back(&mut phone, tid, &rp).unwrap();
+        assert!(stats.created >= 1, "the clone-allocated array came back");
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 100_000).unwrap();
+        assert!(matches!(exit, RunExit::Completed(_)));
+        // The array created at the clone is now reachable on the phone.
+        let kept = phone.statics[main.class.0 as usize][0].as_ref().unwrap();
+        match &phone.heap.get(kept).unwrap().body {
+            ObjBody::ByteArray(b) => assert_eq!(b[0], 7),
+            other => panic!("expected byte array, got {other:?}"),
+        }
+    }
+
+    /// Running the partitioned binary with the "don't migrate" policy —
+    /// just continuing at CcStart — must equal monolithic execution.
+    #[test]
+    fn local_execution_of_partitioned_binary_is_unchanged() {
+        let program = Arc::new(assemble(PROG).unwrap());
+        let main = program.entry().unwrap();
+        let mut p = make_proc(Location::Mobile, &program, 10);
+        let tid = p.spawn_thread(main, &[]).unwrap();
+        loop {
+            match run_thread(&mut p, tid, &mut NoHooks, 1_000_000).unwrap() {
+                RunExit::Completed(_) => break,
+                RunExit::MigrationPoint { .. } | RunExit::ReintegrationPoint { .. } => continue,
+                other => panic!("{other:?}"),
+            }
+        }
+        let got = p.statics[main.class.0 as usize][0];
+        assert_eq!(got.as_float(), Some(2016.0));
+    }
+}

@@ -1,0 +1,95 @@
+//! Zygote-diff transfer optimization (paper §4.3).
+//!
+//! Because the Zygote template boots independently on the phone and the
+//! clone with identical (class name, construction sequence) object names,
+//! a capture can reference any *clean* template object by name instead of
+//! shipping it — typically saving ~40,000 object transmissions per
+//! migration. This module builds the name -> local-object index each
+//! process uses to resolve such references.
+
+use std::collections::HashMap;
+
+use crate::appvm::class::Program;
+use crate::appvm::heap::Heap;
+use crate::appvm::value::ObjId;
+use crate::error::{CloneCloudError, Result};
+
+/// (class name, construction seq) -> local object id.
+#[derive(Debug, Clone, Default)]
+pub struct ZygoteIndex {
+    by_name: HashMap<(String, u32), ObjId>,
+}
+
+impl ZygoteIndex {
+    /// Build the index from a process heap (scans for template objects).
+    pub fn build(program: &Program, heap: &Heap) -> ZygoteIndex {
+        let mut by_name = HashMap::new();
+        for (id, obj) in heap.iter() {
+            if let Some(seq) = obj.zygote_seq {
+                let cname = program.class(obj.class).name.clone();
+                by_name.insert((cname, seq), id);
+            }
+        }
+        ZygoteIndex { by_name }
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Resolve a (class, seq) name to the local object.
+    pub fn lookup(&self, class_name: &str, seq: u32) -> Result<ObjId> {
+        self.by_name
+            .get(&(class_name.to_string(), seq))
+            .copied()
+            .ok_or_else(|| {
+                CloneCloudError::migration(format!(
+                    "no local Zygote object ({class_name}, {seq}) — template mismatch"
+                ))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::zygote::{build_template, install_system_classes};
+    use std::sync::Arc;
+
+    #[test]
+    fn independent_boots_resolve_same_names() {
+        let mut p = Program::new();
+        install_system_classes(&mut p);
+        let p = Arc::new(p);
+        // Two independently-built templates (same parameters) — the §4.3
+        // assumption: same (class, seq) names on both devices.
+        let phone = build_template(&p, 300, 7);
+        let clone = build_template(&p, 300, 7);
+        let pi = ZygoteIndex::build(&p, &phone);
+        let ci = ZygoteIndex::build(&p, &clone);
+        assert_eq!(pi.len(), 300);
+        assert_eq!(ci.len(), 300);
+        for (id, obj) in phone.iter() {
+            let name = p.class(obj.class).name.clone();
+            let seq = obj.zygote_seq.unwrap();
+            assert_eq!(pi.lookup(&name, seq).unwrap(), id);
+            // The clone resolves the same name (possibly different id,
+            // same (class, seq) object).
+            let cid = ci.lookup(&name, seq).unwrap();
+            assert_eq!(clone.get(cid).unwrap().zygote_seq, Some(seq));
+        }
+    }
+
+    #[test]
+    fn missing_name_is_an_error() {
+        let mut p = Program::new();
+        install_system_classes(&mut p);
+        let p = Arc::new(p);
+        let h = build_template(&p, 10, 1);
+        let idx = ZygoteIndex::build(&p, &h);
+        assert!(idx.lookup("sys.String", 9999).is_err());
+    }
+}

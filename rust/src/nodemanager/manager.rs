@@ -1,0 +1,239 @@
+//! Per-node managers (paper §4, Figure 7).
+//!
+//! The **clone server** owns the clone-side process lifecycle: it
+//! provisions a process forked from an independently-booted Zygote
+//! template, keeps the synchronized file system, instantiates migrated
+//! threads, drives them to their reintegration point, and ships them
+//! home. The **phone-side manager** is the mobile device's stub: one
+//! channel, provision/sync/migrate calls, byte accounting for the
+//! network cost model.
+
+use std::sync::Arc;
+
+use crate::appvm::interp::{run_thread, NoHooks, RunExit};
+use crate::appvm::natives::NodeEnv;
+use crate::appvm::process::Process;
+use crate::appvm::zygote::build_template;
+use crate::appvm::Program;
+use crate::config::CostParams;
+use crate::device::{DeviceSpec, Location};
+use crate::error::{CloneCloudError, Result};
+use crate::migration::{CapturePacket, Migrator};
+use crate::vfs::SimFs;
+
+use super::protocol::{program_hash, Msg};
+use super::transport::Transport;
+
+/// Statistics from one clone-serving session.
+#[derive(Debug, Clone, Default)]
+pub struct CloneServeStats {
+    pub migrations: usize,
+    pub instrs_executed: u64,
+    pub mapping_entries_dropped: usize,
+}
+
+/// The clone node: serves one phone over one transport.
+pub struct CloneServer<T: Transport> {
+    transport: T,
+    program: Arc<Program>,
+    device: DeviceSpec,
+    costs: CostParams,
+    make_env: Box<dyn Fn(SimFs) -> NodeEnv>,
+    /// Interpreter fuel per offloaded span (guards runaway threads).
+    pub fuel: u64,
+}
+
+impl<T: Transport> CloneServer<T> {
+    pub fn new(
+        transport: T,
+        program: Arc<Program>,
+        costs: CostParams,
+        make_env: Box<dyn Fn(SimFs) -> NodeEnv>,
+    ) -> CloneServer<T> {
+        CloneServer {
+            transport,
+            program,
+            device: DeviceSpec::clone_desktop(),
+            costs,
+            make_env,
+            fuel: 2_000_000_000,
+        }
+    }
+
+    /// Serve until Shutdown (or transport loss). Each Migrate is answered
+    /// with a Reintegrate carrying the reverse capture.
+    pub fn serve(mut self) -> Result<CloneServeStats> {
+        let mut stats = CloneServeStats::default();
+        let mut fs = SimFs::new();
+        let mut proc: Option<Process> = None;
+        let migrator = Migrator::new(self.costs.clone());
+
+        loop {
+            let (msg, _) = self.transport.recv()?;
+            match msg {
+                Msg::Provision {
+                    zygote_objects,
+                    zygote_seed,
+                    program_hash: want,
+                } => {
+                    let have = program_hash(&self.program);
+                    if have != want {
+                        self.transport.send(&Msg::Error(format!(
+                            "program hash mismatch: clone={have:#x} phone={want:#x} (resync executables)"
+                        )))?;
+                        continue;
+                    }
+                    // Independent Zygote boot (same parameters => same
+                    // (class, seq) names — §4.3).
+                    let template =
+                        build_template(&self.program, zygote_objects as usize, zygote_seed);
+                    let mut p = Process::fork_from_zygote(
+                        self.program.clone(),
+                        &template,
+                        self.device.clone(),
+                        Location::Clone,
+                        (self.make_env)(fs.synchronize()),
+                    );
+                    p.cost_params = Some(self.costs.clone());
+                    proc = Some(p);
+                    self.transport.send(&Msg::Ack)?;
+                }
+                Msg::SyncFs(newfs) => {
+                    fs = newfs;
+                    if let Some(p) = proc.as_mut() {
+                        p.env.vfs = fs.synchronize();
+                    }
+                    self.transport.send(&Msg::Ack)?;
+                }
+                Msg::Migrate(bytes) => {
+                    let reply = self.handle_migration(&migrator, proc.as_mut(), &bytes, &mut stats);
+                    match reply {
+                        Ok(rbytes) => self.transport.send(&Msg::Reintegrate(rbytes))?,
+                        Err(e) => self.transport.send(&Msg::Error(e.to_string()))?,
+                    };
+                }
+                Msg::Shutdown => return Ok(stats),
+                other => {
+                    self.transport
+                        .send(&Msg::Error(format!("unexpected message {other:?}")))?;
+                }
+            }
+        }
+    }
+
+    fn handle_migration(
+        &self,
+        migrator: &Migrator,
+        proc: Option<&mut Process>,
+        bytes: &[u8],
+        stats: &mut CloneServeStats,
+    ) -> Result<Vec<u8>> {
+        let p = proc.ok_or_else(|| CloneCloudError::Transport("migrate before provision".into()))?;
+        let packet = CapturePacket::decode(bytes)?;
+        let (tid, table, _) = migrator.receive_at_clone(p, &packet)?;
+        let instrs0 = p.metrics.instrs;
+
+        // Drive the migrant to its reintegration point. Nested CcStart
+        // means "already at the clone — continue" (Property 3 guarantees
+        // migration/reintegration alternate).
+        loop {
+            match run_thread(p, tid, &mut NoHooks, self.fuel)? {
+                RunExit::ReintegrationPoint { .. } => break,
+                RunExit::MigrationPoint { .. } => continue,
+                RunExit::Completed(_) => {
+                    return Err(CloneCloudError::migration(
+                        "offloaded thread completed without a reintegration point",
+                    ))
+                }
+                RunExit::OutOfFuel => {
+                    return Err(CloneCloudError::migration("clone execution out of fuel"))
+                }
+            }
+        }
+        stats.migrations += 1;
+        stats.instrs_executed += p.metrics.instrs - instrs0;
+        let (rpacket, _, dropped) = migrator.return_from_clone(p, tid, table)?;
+        stats.mapping_entries_dropped += dropped;
+        Ok(rpacket.encode())
+    }
+}
+
+/// Byte accounting for one migration round trip.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TransferBytes {
+    pub up: u64,
+    pub down: u64,
+}
+
+/// The phone-side node manager.
+pub struct NodeManager<T: Transport> {
+    transport: T,
+    /// Cumulative bytes moved (metrics).
+    pub total: TransferBytes,
+}
+
+impl<T: Transport> NodeManager<T> {
+    pub fn new(transport: T) -> NodeManager<T> {
+        NodeManager {
+            transport,
+            total: TransferBytes::default(),
+        }
+    }
+
+    fn expect_ack(&mut self) -> Result<()> {
+        match self.transport.recv()?.0 {
+            Msg::Ack => Ok(()),
+            Msg::Error(e) => Err(CloneCloudError::Transport(format!("clone error: {e}"))),
+            other => Err(CloneCloudError::Transport(format!("expected Ack, got {other:?}"))),
+        }
+    }
+
+    /// Provision the clone (Zygote boot + executable identity check).
+    pub fn provision(
+        &mut self,
+        program: &Program,
+        zygote_objects: usize,
+        zygote_seed: u64,
+    ) -> Result<()> {
+        self.transport.send(&Msg::Provision {
+            zygote_objects: zygote_objects as u32,
+            zygote_seed,
+            program_hash: program_hash(program),
+        })?;
+        self.expect_ack()
+    }
+
+    /// Synchronize the file system image; returns bytes moved.
+    pub fn sync_fs(&mut self, fs: &SimFs) -> Result<u64> {
+        let n = self.transport.send(&Msg::SyncFs(fs.synchronize()))?;
+        self.expect_ack()?;
+        Ok(n)
+    }
+
+    /// One migration round trip: ship the forward capture, block for the
+    /// reverse capture. Returns (reverse packet bytes, byte accounting).
+    pub fn migrate(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+        let up = self.transport.send(&Msg::Migrate(forward))?;
+        let (msg, down) = self.transport.recv()?;
+        let bytes = match msg {
+            Msg::Reintegrate(b) => b,
+            Msg::Error(e) => {
+                return Err(CloneCloudError::Transport(format!("clone error: {e}")))
+            }
+            other => {
+                return Err(CloneCloudError::Transport(format!(
+                    "expected Reintegrate, got {other:?}"
+                )))
+            }
+        };
+        let t = TransferBytes { up, down };
+        self.total.up += up;
+        self.total.down += down;
+        Ok((bytes, t))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.transport.send(&Msg::Shutdown)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,154 @@
+//! Node managers and transports (paper §4).
+//!
+//! Each node runs a manager shared by its applications: it maintains the
+//! single transport channel to the peer, synchronizes the file system,
+//! provisions clone processes, and moves captured threads. Network
+//! *timing* is a model (`config::NetworkProfile`, the paper's measured
+//! 3G/WiFi parameters) applied to the *real* byte counts the transports
+//! report.
+
+pub mod manager;
+pub mod protocol;
+pub mod transport;
+
+pub use manager::{CloneServeStats, CloneServer, NodeManager, TransferBytes};
+pub use protocol::{program_hash, Msg};
+pub use transport::{InProcTransport, TcpEndpoint, TcpTransport, Transport};
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::interp::{run_thread, NoHooks, RunExit};
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::process::Process;
+    use crate::appvm::zygote::build_template;
+    use crate::config::CostParams;
+    use crate::device::{DeviceSpec, Location};
+    use crate::migration::Migrator;
+    use crate::vfs::SimFs;
+
+    /// Worker reads a file (from the SYNCHRONIZED fs — "native
+    /// everywhere") at the clone and returns its byte sum.
+    const PROG: &str = r#"
+class FsWork app
+  static out
+  method main nargs=0 regs=4
+    invoke r0 FsWork.work
+    puts FsWork.out r0
+    retv
+  end
+  method work nargs=0 regs=10
+    ccstart 0
+    const r0 0
+    const r1 0
+    const r2 64
+    invoke r3 FsWork.read r0 r1 r2
+    len r4 r3
+    const r5 0
+    const r6 0
+  loop:
+    ifge r5 r4 @done
+    aget r7 r3 r5
+    add r6 r6 r7
+    const r8 1
+    add r5 r5 r8
+    goto @loop
+  done:
+    ccstop 0
+    ret r6
+  end
+  method read nargs=3 regs=3 native=fs.read
+end
+"#;
+
+    #[test]
+    fn end_to_end_migration_over_tcp_with_fs_sync() {
+        let program = Arc::new(assemble(PROG).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let main = program.entry().unwrap();
+
+        let mut phone_fs = SimFs::new();
+        phone_fs.add("data.bin", (0u8..64).collect());
+        let expected_sum: i64 = (0u8..64).map(|b| b as i64).sum();
+
+        // Clone node on its own thread (its own env, its own backend).
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        let server_program = program.clone();
+        let server = std::thread::spawn(move || {
+            let t = ep.accept().unwrap();
+            let srv = CloneServer::new(
+                t,
+                server_program,
+                CostParams::default(),
+                Box::new(NodeEnv::with_rust_compute),
+            );
+            srv.serve().unwrap()
+        });
+
+        // Phone side.
+        let mut nm = NodeManager::new(TcpTransport::connect(&addr).unwrap());
+        nm.provision(&program, 500, 42).unwrap();
+        nm.sync_fs(&phone_fs).unwrap();
+
+        let template = build_template(&program, 500, 42);
+        let mut phone = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(phone_fs),
+        );
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 1_000_000).unwrap();
+        assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+
+        let migrator = Migrator::new(CostParams::default());
+        let (packet, _) = migrator.migrate_out(&mut phone, tid).unwrap();
+        let (rbytes, transfer) = nm.migrate(packet.encode()).unwrap();
+        assert!(transfer.up > 0 && transfer.down > 0);
+
+        let rpacket = crate::migration::CapturePacket::decode(&rbytes).unwrap();
+        migrator.merge_back(&mut phone, tid, &rpacket).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 1_000_000).unwrap();
+        assert!(matches!(exit, RunExit::Completed(_)), "{exit:?}");
+        assert_eq!(
+            phone.statics[main.class.0 as usize][0].as_int(),
+            Some(expected_sum),
+            "clone read the synchronized file and the result merged home"
+        );
+
+        nm.shutdown().unwrap();
+        let stats = server.join().unwrap();
+        assert_eq!(stats.migrations, 1);
+        assert!(stats.instrs_executed > 64);
+    }
+
+    #[test]
+    fn provision_rejects_program_mismatch() {
+        let program = Arc::new(assemble(PROG).unwrap());
+        let other = Arc::new(
+            assemble("class B app\n  method main nargs=0 regs=1\n    retv\n  end\nend\n").unwrap(),
+        );
+        let (phone_t, clone_t) = InProcTransport::pair();
+        let srv_prog = other;
+        let server = std::thread::spawn(move || {
+            let srv = CloneServer::new(
+                clone_t,
+                srv_prog,
+                CostParams::default(),
+                Box::new(NodeEnv::with_rust_compute),
+            );
+            // Serve exits on transport loss after the test drops nm.
+            let _ = srv.serve();
+        });
+        let mut nm = NodeManager::new(phone_t);
+        let err = nm.provision(&program, 10, 1).unwrap_err().to_string();
+        assert!(err.contains("hash mismatch"), "{err}");
+        nm.shutdown().unwrap();
+        server.join().unwrap();
+    }
+}

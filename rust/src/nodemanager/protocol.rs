@@ -1,0 +1,173 @@
+//! Node-manager wire protocol.
+//!
+//! The per-node managers speak a small framed protocol over a single
+//! channel (paper §4: "it amortizes the cost of communicating with the
+//! cloud over a single ... transport channel"): provisioning, file-system
+//! synchronization, thread migration, and reintegration.
+
+use crate::error::{CloneCloudError, Result};
+use crate::util::bytes::{WireReader, WireWriter};
+use crate::vfs::SimFs;
+
+/// Protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Provision a clone process: Zygote size, template seed, program
+    /// hash (the executable itself arrives via file sync — both sides
+    /// load the same binary).
+    Provision {
+        zygote_objects: u32,
+        zygote_seed: u64,
+        program_hash: u64,
+    },
+    /// Synchronize the phone file system to the clone.
+    SyncFs(SimFs),
+    /// A forward capture: migrate this thread to the clone.
+    Migrate(Vec<u8>),
+    /// A reverse capture: the thread coming home.
+    Reintegrate(Vec<u8>),
+    /// Positive acknowledgement (provision/sync).
+    Ack,
+    /// Remote failure.
+    Error(String),
+    /// Tear down the clone.
+    Shutdown,
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        match self {
+            Msg::Provision {
+                zygote_objects,
+                zygote_seed,
+                program_hash,
+            } => {
+                w.put_u8(0);
+                w.put_u32(*zygote_objects);
+                w.put_u64(*zygote_seed);
+                w.put_u64(*program_hash);
+            }
+            Msg::SyncFs(fs) => {
+                w.put_u8(1);
+                w.put_u32(fs.count() as u32);
+                for i in 0..fs.count() {
+                    let f = fs.file(i).unwrap();
+                    w.put_str(&f.name);
+                    w.put_bytes(&f.bytes);
+                }
+            }
+            Msg::Migrate(b) => {
+                w.put_u8(2);
+                w.put_bytes(b);
+            }
+            Msg::Reintegrate(b) => {
+                w.put_u8(3);
+                w.put_bytes(b);
+            }
+            Msg::Ack => w.put_u8(4),
+            Msg::Error(e) => {
+                w.put_u8(5);
+                w.put_str(e);
+            }
+            Msg::Shutdown => w.put_u8(6),
+        }
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Msg> {
+        let mut r = WireReader::new(buf);
+        let tag = r.get_u8()?;
+        let msg = match tag {
+            0 => Msg::Provision {
+                zygote_objects: r.get_u32()?,
+                zygote_seed: r.get_u64()?,
+                program_hash: r.get_u64()?,
+            },
+            1 => {
+                let n = r.get_u32()? as usize;
+                let mut fs = SimFs::new();
+                for _ in 0..n {
+                    let name = r.get_str()?;
+                    let bytes = r.get_bytes()?;
+                    fs.add(&name, bytes);
+                }
+                Msg::SyncFs(fs)
+            }
+            2 => Msg::Migrate(r.get_bytes()?),
+            3 => Msg::Reintegrate(r.get_bytes()?),
+            4 => Msg::Ack,
+            5 => Msg::Error(r.get_str()?),
+            6 => Msg::Shutdown,
+            t => return Err(CloneCloudError::Transport(format!("bad message tag {t}"))),
+        };
+        if !r.is_done() {
+            return Err(CloneCloudError::Transport("trailing bytes in message".into()));
+        }
+        Ok(msg)
+    }
+}
+
+/// Deterministic FNV-1a hash of a program's assembly/bytecode identity —
+/// used to confirm the synchronized executable matches before migrating.
+pub fn program_hash(p: &crate::appvm::Program) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+    };
+    for c in &p.classes {
+        eat(c.name.as_bytes());
+        for m in &c.methods {
+            eat(m.name.as_bytes());
+            eat(&(m.code.len() as u32).to_be_bytes());
+            for i in &m.code {
+                eat(format!("{i:?}").as_bytes());
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_roundtrip() {
+        let mut fs = SimFs::new();
+        fs.add("a", vec![1, 2, 3]);
+        let msgs = vec![
+            Msg::Provision {
+                zygote_objects: 40_000,
+                zygote_seed: 7,
+                program_hash: 0xDEAD,
+            },
+            Msg::SyncFs(fs),
+            Msg::Migrate(vec![9, 9, 9]),
+            Msg::Reintegrate(vec![1]),
+            Msg::Ack,
+            Msg::Error("boom".into()),
+            Msg::Shutdown,
+        ];
+        for m in msgs {
+            assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn program_hash_distinguishes_programs() {
+        let a = crate::appvm::assembler::assemble(
+            "class A app\n  method main nargs=0 regs=1\n    retv\n  end\nend\n",
+        )
+        .unwrap();
+        let b = crate::appvm::assembler::assemble(
+            "class A app\n  method main nargs=0 regs=1\n    nop\n    retv\n  end\nend\n",
+        )
+        .unwrap();
+        assert_ne!(program_hash(&a), program_hash(&b));
+        assert_eq!(program_hash(&a), program_hash(&a));
+    }
+}

@@ -1,0 +1,190 @@
+//! Static control-flow graph over methods (paper §3.1).
+//!
+//! Conservative caller/callee approximation from the bytecode: an edge
+//! m1 -> m2 exists iff m1 contains an `Invoke` of m2 (every actual call
+//! path exists in the graph; the converse need not hold). Exported as the
+//! paper's two relations: DC (directly calls) and its transitive closure
+//! TC.
+
+use std::collections::HashMap;
+
+use crate::appvm::bytecode::MRef;
+use crate::appvm::class::Program;
+
+/// The static method-level CFG.
+#[derive(Debug, Clone)]
+pub struct Cfg {
+    /// All methods, deterministic order.
+    pub methods: Vec<MRef>,
+    index: HashMap<MRef, usize>,
+    /// DC(i, j): methods[i] directly calls methods[j].
+    dc: Vec<Vec<bool>>,
+    /// TC(i, j): transitive closure of DC.
+    tc: Vec<Vec<bool>>,
+}
+
+impl Cfg {
+    /// Build the CFG for a program.
+    pub fn build(program: &Program) -> Cfg {
+        let methods = program.all_methods();
+        let n = methods.len();
+        let index: HashMap<MRef, usize> =
+            methods.iter().enumerate().map(|(i, m)| (*m, i)).collect();
+        let mut dc = vec![vec![false; n]; n];
+        for (i, &m) in methods.iter().enumerate() {
+            for instr in &program.method(m).code {
+                if let Some(callee) = instr.callee() {
+                    dc[i][index[&callee]] = true;
+                }
+            }
+        }
+        // Transitive closure (Floyd–Warshall over booleans).
+        let mut tc = dc.clone();
+        for k in 0..n {
+            for i in 0..n {
+                if tc[i][k] {
+                    for j in 0..n {
+                        if tc[k][j] {
+                            tc[i][j] = true;
+                        }
+                    }
+                }
+            }
+        }
+        Cfg {
+            methods,
+            index,
+            dc,
+            tc,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.methods.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.methods.is_empty()
+    }
+
+    pub fn idx(&self, m: MRef) -> usize {
+        self.index[&m]
+    }
+
+    /// "m1 Directly Calls m2".
+    pub fn dc(&self, m1: MRef, m2: MRef) -> bool {
+        self.dc[self.idx(m1)][self.idx(m2)]
+    }
+
+    /// "m1 Transitively Calls m2".
+    pub fn tc(&self, m1: MRef, m2: MRef) -> bool {
+        self.tc[self.idx(m1)][self.idx(m2)]
+    }
+
+    /// All DC edges as index pairs.
+    pub fn dc_edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for i in 0..self.len() {
+            for j in 0..self.len() {
+                if self.dc[i][j] {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// All TC pairs as index pairs.
+    pub fn tc_pairs(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for i in 0..self.len() {
+            for j in 0..self.len() {
+                if self.tc[i][j] {
+                    out.push((i, j));
+                }
+            }
+        }
+        out
+    }
+
+    /// Is method `m` recursive (calls itself transitively)?
+    pub fn recursive(&self, m: MRef) -> bool {
+        self.tc[self.idx(m)][self.idx(m)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::assembler::assemble;
+
+    /// The paper's Figure 5 program: a() calls b() then c().
+    const FIG5: &str = r#"
+class C app
+  method main nargs=0 regs=2
+    invokev C.a
+    retv
+  end
+  method a nargs=0 regs=2
+    invokev C.b
+    invokev C.c
+    retv
+  end
+  method b nargs=0 regs=2
+    retv
+  end
+  method c nargs=0 regs=2
+    retv
+  end
+end
+"#;
+
+    #[test]
+    fn figure5_dc_and_tc() {
+        let p = assemble(FIG5).unwrap();
+        let cfg = Cfg::build(&p);
+        let m = |n: &str| p.resolve("C", n).unwrap();
+        assert!(cfg.dc(m("main"), m("a")));
+        assert!(cfg.dc(m("a"), m("b")));
+        assert!(cfg.dc(m("a"), m("c")));
+        assert!(!cfg.dc(m("main"), m("b")), "not a direct call");
+        assert!(cfg.tc(m("main"), m("b")), "but a transitive one");
+        assert!(cfg.tc(m("main"), m("c")));
+        assert!(!cfg.tc(m("b"), m("a")), "no back edges");
+        assert!(!cfg.recursive(m("a")));
+    }
+
+    #[test]
+    fn recursion_detected() {
+        let src = r#"
+class R app
+  method main nargs=0 regs=2
+    invokev R.f
+    retv
+  end
+  method f nargs=0 regs=2
+    invokev R.g
+    retv
+  end
+  method g nargs=0 regs=2
+    invokev R.f
+    retv
+  end
+end
+"#;
+        let p = assemble(src).unwrap();
+        let cfg = Cfg::build(&p);
+        let f = p.resolve("R", "f").unwrap();
+        let g = p.resolve("R", "g").unwrap();
+        assert!(cfg.recursive(f));
+        assert!(cfg.recursive(g));
+        assert!(cfg.tc(f, f));
+    }
+
+    #[test]
+    fn edges_enumerate() {
+        let p = assemble(FIG5).unwrap();
+        let cfg = Cfg::build(&p);
+        assert_eq!(cfg.dc_edges().len(), 3);
+        assert_eq!(cfg.tc_pairs().len(), 5, "main->{{a,b,c}}, a->{{b,c}}");
+    }
+}

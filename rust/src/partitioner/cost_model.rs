@@ -1,0 +1,177 @@
+//! Cost model assembly (paper §3.2-3.3).
+//!
+//! Collapses the profile-tree pair (T on the mobile device, T' on the
+//! clone) of each profiling execution into per-method aggregates:
+//!
+//! * `mobile_us[m]` = Σ_i C_c(i, 0)   (residuals from T)
+//! * `clone_us[m]`  = Σ_i C_c(i, 1)   (residuals from T')
+//! * `migr_us[m]`   = Σ_i C_s(i)      (suspend/resume + per-byte transfer
+//!   over the edge state sizes measured on T)
+//!
+//! All executions in the set S are treated as equiprobable (summed),
+//! exactly as the paper does.
+
+use std::collections::HashMap;
+
+use crate::appvm::bytecode::MRef;
+use crate::config::{CostParams, NetworkProfile};
+
+use super::profile_tree::ProfileTree;
+
+/// Per-method cost aggregates across the profiling execution set.
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    pub mobile_us: HashMap<MRef, f64>,
+    pub clone_us: HashMap<MRef, f64>,
+    pub migr_us: HashMap<MRef, f64>,
+    pub invocations: HashMap<MRef, usize>,
+}
+
+impl CostModel {
+    /// Build from (mobile tree, clone tree) pairs, one per execution.
+    /// `net` prices the transfer cost; `costs` prices the full
+    /// suspend/capture/serialize/transmit/deserialize/reinstantiate path
+    /// of the paper's C_s — including the phone-side merge, which
+    /// dominates WiFi migrations (§6). `phone_factor`/`clone_factor`
+    /// scale the CPU-bound phases to each device.
+    pub fn build_scaled(
+        pairs: &[(&ProfileTree, &ProfileTree)],
+        costs: &CostParams,
+        net: &NetworkProfile,
+        phone_factor: f64,
+        clone_factor: f64,
+    ) -> CostModel {
+        let mut cm = CostModel::default();
+        for (t_mobile, t_clone) in pairs {
+            // Native call counts (inline code; used by the class-level
+            // baseline's RPC pricing).
+            for (&callee, &n) in &t_mobile.native_calls {
+                *cm.invocations.entry(callee).or_insert(0) += n;
+            }
+            let mut methods: Vec<MRef> = t_mobile.nodes.iter().map(|n| n.method).collect();
+            methods.extend(t_clone.nodes.iter().map(|n| n.method));
+            methods.sort_unstable();
+            methods.dedup();
+            for m in methods {
+                *cm.mobile_us.entry(m).or_insert(0.0) += t_mobile.method_residual_us(m);
+                *cm.clone_us.entry(m).or_insert(0.0) += t_clone.method_residual_us(m);
+                *cm.invocations.entry(m).or_insert(0) += t_mobile.invocation_count(m);
+                // C_s(i): suspend/resume + the volume-dependent cost of
+                // capturing, serializing, transmitting, deserializing,
+                // and reinstantiating state. Edge annotation already
+                // sums capture-at-entry + capture-at-return; half rides
+                // the slow uplink, half comes back down.
+                let n_inv = t_mobile.invocation_count(m) as f64;
+                let bytes = t_mobile.method_state_bytes(m) as f64;
+                let transfer_ms = net.transfer_ms((bytes / 2.0) as u64, true)
+                    + net.transfer_ms((bytes / 2.0) as u64, false);
+                // Phone side: capture/serialize out + merge back in.
+                let phone_us =
+                    (costs.per_byte_us + costs.merge_per_byte_us) * bytes * phone_factor;
+                // Clone side: reinstantiate the forward half.
+                let clone_us = costs.merge_per_byte_us * (bytes / 2.0) * clone_factor;
+                *cm.migr_us.entry(m).or_insert(0.0) += n_inv
+                    * costs.suspend_resume_us
+                    * phone_factor
+                    + transfer_ms * 1e3
+                    + phone_us
+                    + clone_us;
+            }
+        }
+        cm
+    }
+
+    /// [`CostModel::build_scaled`] with the paper's G1/desktop factors.
+    pub fn build(
+        pairs: &[(&ProfileTree, &ProfileTree)],
+        costs: &CostParams,
+        net: &NetworkProfile,
+    ) -> CostModel {
+        let phone = crate::device::DeviceSpec::phone_g1().cpu_factor;
+        Self::build_scaled(pairs, costs, net, phone, 1.0)
+    }
+
+    pub fn mobile(&self, m: MRef) -> f64 {
+        self.mobile_us.get(&m).copied().unwrap_or(0.0)
+    }
+    pub fn clone_side(&self, m: MRef) -> f64 {
+        self.clone_us.get(&m).copied().unwrap_or(0.0)
+    }
+    pub fn migration(&self, m: MRef) -> f64 {
+        self.migr_us.get(&m).copied().unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::bytecode::{ClassId, MethodId};
+
+    fn m(i: u16) -> MRef {
+        MRef {
+            class: ClassId(0),
+            method: MethodId(i),
+        }
+    }
+
+    fn tree(costs: &[(u16, f64, u64)]) -> ProfileTree {
+        // Flat tree: root = method 0, children in order.
+        let mut t = ProfileTree::default();
+        let root = t.push(m(0), None);
+        let mut total = 0.0;
+        for &(mi, c, b) in costs {
+            let n = t.push(m(mi), Some(root));
+            t.nodes[n].cost_us = c;
+            t.nodes[n].edge_state_bytes = b;
+            total += c;
+        }
+        t.nodes[root].cost_us = total + 10.0; // root residual 10
+        t
+    }
+
+    #[test]
+    fn aggregates_and_prices() {
+        let tm = tree(&[(1, 100.0, 1000), (1, 50.0, 500), (2, 40.0, 2000)]);
+        let tc = tree(&[(1, 5.0, 0), (1, 2.5, 0), (2, 2.0, 0)]);
+        let costs = CostParams::default();
+        let net = NetworkProfile::wifi();
+        let cm = CostModel::build(&[(&tm, &tc)], &costs, &net);
+        assert!((cm.mobile(m(1)) - 150.0).abs() < 1e-9);
+        assert!((cm.clone_side(m(1)) - 7.5).abs() < 1e-9);
+        assert!((cm.mobile(m(0)) - 10.0).abs() < 1e-9, "root residual");
+        assert_eq!(cm.invocations[&m(1)], 2);
+        // Migration cost grows with state size: m(2) single call moves
+        // 2000 bytes, m(1) two calls move 1500 total but pay 2x
+        // suspend/resume.
+        assert!(cm.migration(m(2)) > 0.0);
+        let two_latencies_us = 2.0 * net.latency_ms * 1e3;
+        assert!(
+            cm.migration(m(1)) > 2.0 * costs.suspend_resume_us + two_latencies_us,
+            "two invocations pay suspend twice and latency per direction"
+        );
+    }
+
+    #[test]
+    fn threeg_migration_pricier_than_wifi() {
+        let tm = tree(&[(1, 100.0, 500_000)]);
+        let tc = tree(&[(1, 5.0, 0)]);
+        let costs = CostParams::default();
+        let cm_w = CostModel::build(&[(&tm, &tc)], &costs, &NetworkProfile::wifi());
+        let cm_g = CostModel::build(&[(&tm, &tc)], &costs, &NetworkProfile::threeg());
+        // The network-unspecific merge cost is shared; the 3G transfer
+        // component makes the total at least ~2x (paper §6: 10-15 s WiFi
+        // vs ~60 s 3G).
+        assert!(cm_g.migration(m(1)) > 2.0 * cm_w.migration(m(1)));
+    }
+
+    #[test]
+    fn multiple_executions_sum() {
+        let tm = tree(&[(1, 100.0, 0)]);
+        let tc = tree(&[(1, 5.0, 0)]);
+        let costs = CostParams::default();
+        let net = NetworkProfile::wifi();
+        let cm1 = CostModel::build(&[(&tm, &tc)], &costs, &net);
+        let cm2 = CostModel::build(&[(&tm, &tc), (&tm, &tc)], &costs, &net);
+        assert!((cm2.mobile(m(1)) - 2.0 * cm1.mobile(m(1))).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,228 @@
+//! The partition database (paper §3, §4).
+//!
+//! "The partitioning mechanism can be run multiple times for different
+//! execution conditions, resulting in a database that maps partitioning
+//! to conditions. At runtime, the distributed execution mechanism
+//! implements the choice of partition for the current execution
+//! conditions." Keys here are (app, network) pairs; entries name the
+//! R(m)=1 methods plus the expected/local costs; JSON on disk.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::appvm::class::Program;
+use crate::error::{CloneCloudError, Result};
+use crate::util::json::{self, Json};
+
+use super::solver::Partition;
+
+/// One stored partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionEntry {
+    pub app: String,
+    pub network: String,
+    /// Qualified method names ("Class.method") with R(m) = 1.
+    pub migrate: Vec<String>,
+    pub expected_ms: f64,
+    pub local_ms: f64,
+}
+
+impl PartitionEntry {
+    pub fn from_partition(app: &str, network: &str, program: &Program, p: &Partition) -> Self {
+        PartitionEntry {
+            app: app.to_string(),
+            network: network.to_string(),
+            migrate: p
+                .migrate
+                .iter()
+                .map(|&m| program.method_name(m))
+                .collect(),
+            expected_ms: p.expected_us / 1e3,
+            local_ms: p.local_us / 1e3,
+        }
+    }
+
+    /// Re-resolve into a Partition against a program (locations are
+    /// recomputed by the solver when needed; the R set is what the
+    /// runtime requires to pick a binary).
+    pub fn to_migrate_set(
+        &self,
+        program: &Program,
+    ) -> Result<BTreeSet<crate::appvm::bytecode::MRef>> {
+        let mut out = BTreeSet::new();
+        for name in &self.migrate {
+            let (c, m) = name.split_once('.').ok_or_else(|| {
+                CloneCloudError::partitioner(format!("bad method name '{name}'"))
+            })?;
+            out.insert(program.resolve(c, m)?);
+        }
+        Ok(out)
+    }
+
+    pub fn label(&self) -> &'static str {
+        if self.migrate.is_empty() {
+            "Local"
+        } else {
+            "Offload"
+        }
+    }
+}
+
+/// The database: (app, network) -> entry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PartitionDb {
+    entries: BTreeMap<(String, String), PartitionEntry>,
+}
+
+impl PartitionDb {
+    pub fn new() -> PartitionDb {
+        PartitionDb::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn put(&mut self, e: PartitionEntry) {
+        self.entries.insert((e.app.clone(), e.network.clone()), e);
+    }
+
+    /// Runtime lookup for the current execution conditions.
+    pub fn lookup(&self, app: &str, network: &str) -> Option<&PartitionEntry> {
+        self.entries.get(&(app.to_string(), network.to_string()))
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &PartitionEntry> {
+        self.entries.values()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .values()
+                .map(|e| {
+                    Json::obj(vec![
+                        ("app", e.app.as_str().into()),
+                        ("network", e.network.as_str().into()),
+                        (
+                            "migrate",
+                            Json::Arr(
+                                e.migrate.iter().map(|m| m.as_str().into()).collect(),
+                            ),
+                        ),
+                        ("expected_ms", e.expected_ms.into()),
+                        ("local_ms", e.local_ms.into()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<PartitionDb> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| CloneCloudError::partitioner("db must be an array"))?;
+        let mut db = PartitionDb::new();
+        for e in arr {
+            let get = |k: &str| -> Result<String> {
+                e.get(k)
+                    .as_str()
+                    .map(String::from)
+                    .ok_or_else(|| CloneCloudError::partitioner(format!("db entry missing {k}")))
+            };
+            let migrate = e
+                .get("migrate")
+                .as_arr()
+                .ok_or_else(|| CloneCloudError::partitioner("db entry missing migrate"))?
+                .iter()
+                .map(|m| {
+                    m.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| CloneCloudError::partitioner("bad migrate item"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            db.put(PartitionEntry {
+                app: get("app")?,
+                network: get("network")?,
+                migrate,
+                expected_ms: e.get("expected_ms").as_f64().unwrap_or(0.0),
+                local_ms: e.get("local_ms").as_f64().unwrap_or(0.0),
+            });
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, json::emit(&self.to_json()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<PartitionDb> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(app: &str, net: &str, migrate: &[&str]) -> PartitionEntry {
+        PartitionEntry {
+            app: app.into(),
+            network: net.into(),
+            migrate: migrate.iter().map(|s| s.to_string()).collect(),
+            expected_ms: 123.0,
+            local_ms: 456.0,
+        }
+    }
+
+    #[test]
+    fn put_lookup_label() {
+        let mut db = PartitionDb::new();
+        db.put(entry("virus", "wifi", &["V.scan"]));
+        db.put(entry("virus", "3g", &[]));
+        assert_eq!(db.lookup("virus", "wifi").unwrap().label(), "Offload");
+        assert_eq!(db.lookup("virus", "3g").unwrap().label(), "Local");
+        assert!(db.lookup("virus", "bluetooth").is_none());
+        assert_eq!(db.len(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = PartitionDb::new();
+        db.put(entry("image", "wifi", &["I.search", "I.index"]));
+        db.put(entry("image", "3g", &[]));
+        let text = json::emit(&db.to_json());
+        let back = PartitionDb::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(db, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut db = PartitionDb::new();
+        db.put(entry("b", "wifi", &["B.profile"]));
+        let dir = std::env::temp_dir().join(format!("ccdb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("partitions.json");
+        db.save(&path).unwrap();
+        assert_eq!(PartitionDb::load(&path).unwrap(), db);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolves_against_program() {
+        let p = crate::appvm::assembler::assemble(
+            "class V app\n  method main nargs=0 regs=1\n    retv\n  end\n  method scan nargs=0 regs=1\n    retv\n  end\nend\n",
+        )
+        .unwrap();
+        let e = entry("virus", "wifi", &["V.scan"]);
+        let set = e.to_migrate_set(&p).unwrap();
+        assert_eq!(set.len(), 1);
+        let bad = entry("virus", "wifi", &["V.nope"]);
+        assert!(bad.to_migrate_set(&p).is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! 0-1 integer programming by branch-and-bound over the LP relaxation.
+//!
+//! All variables are binary. Depth-first search, branching on the most
+//! fractional variable, pruning by the incumbent objective. Exact for
+//! the partitioner's problem sizes (tens of binaries); property tests
+//! cross-check against exhaustive enumeration.
+
+use super::simplex::{solve_lp, Constraint, LpResult, Sense};
+
+/// ILP outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IlpResult {
+    Optimal { x: Vec<u8>, objective: f64 },
+    Infeasible,
+}
+
+const INT_TOL: f64 = 1e-6;
+
+/// Solve min c·x s.t. constraints, x ∈ {0,1}^n.
+pub fn solve_ilp(n_vars: usize, c: &[f64], constraints: &[Constraint]) -> IlpResult {
+    // Add 0/1 bounds for every variable.
+    let mut cons: Vec<Constraint> = constraints.to_vec();
+    for j in 0..n_vars {
+        cons.push(Constraint {
+            coeffs: vec![(j, 1.0)],
+            sense: Sense::Le,
+            rhs: 1.0,
+        });
+    }
+
+    let mut best: Option<(Vec<u8>, f64)> = None;
+    let mut fixed: Vec<Option<u8>> = vec![None; n_vars];
+    branch(n_vars, c, &cons, &mut fixed, &mut best, 0);
+    match best {
+        Some((x, objective)) => IlpResult::Optimal { x, objective },
+        None => IlpResult::Infeasible,
+    }
+}
+
+fn branch(
+    n_vars: usize,
+    c: &[f64],
+    base_cons: &[Constraint],
+    fixed: &mut Vec<Option<u8>>,
+    best: &mut Option<(Vec<u8>, f64)>,
+    depth: usize,
+) {
+    // Build the LP with fixings as equalities.
+    let mut cons = base_cons.to_vec();
+    for (j, f) in fixed.iter().enumerate() {
+        if let Some(v) = f {
+            cons.push(Constraint {
+                coeffs: vec![(j, 1.0)],
+                sense: Sense::Eq,
+                rhs: *v as f64,
+            });
+        }
+    }
+    let relax = solve_lp(n_vars, c, &cons);
+    let (x, obj) = match relax {
+        LpResult::Optimal { x, objective } => (x, objective),
+        LpResult::Infeasible => return,
+        LpResult::Unbounded => return, // bounded by 0/1 rows; defensive
+    };
+    // Prune by incumbent.
+    if let Some((_, incumbent)) = best {
+        if obj >= *incumbent - 1e-9 {
+            return;
+        }
+    }
+    // Integer-feasible?
+    let frac_var = (0..n_vars)
+        .filter(|&j| {
+            let f = x[j].fract();
+            f.min(1.0 - f) > INT_TOL && x[j] > INT_TOL && x[j] < 1.0 - INT_TOL
+        })
+        .max_by(|&a, &b| {
+            let fa = (x[a] - 0.5).abs();
+            let fb = (x[b] - 0.5).abs();
+            fb.partial_cmp(&fa).unwrap() // most fractional = closest to 0.5
+        });
+    match frac_var {
+        None => {
+            let xi: Vec<u8> = x.iter().map(|&v| if v > 0.5 { 1 } else { 0 }).collect();
+            let better = best.as_ref().map(|(_, b)| obj < *b - 1e-12).unwrap_or(true);
+            if better {
+                *best = Some((xi, obj));
+            }
+        }
+        Some(j) => {
+            if depth > 64 {
+                return; // defensive depth guard
+            }
+            // Branch: try the rounding nearest the relaxation first.
+            let order: [u8; 2] = if x[j] >= 0.5 { [1, 0] } else { [0, 1] };
+            for v in order {
+                fixed[j] = Some(v);
+                branch(n_vars, c, base_cons, fixed, best, depth + 1);
+                fixed[j] = None;
+            }
+        }
+    }
+}
+
+/// Exhaustive 0-1 reference solver (for property tests; exponential).
+pub fn solve_exhaustive(n_vars: usize, c: &[f64], constraints: &[Constraint]) -> IlpResult {
+    assert!(n_vars <= 20, "exhaustive reference capped at 20 vars");
+    let mut best: Option<(Vec<u8>, f64)> = None;
+    'outer: for mask in 0u32..(1 << n_vars) {
+        let x: Vec<u8> = (0..n_vars).map(|j| ((mask >> j) & 1) as u8).collect();
+        for con in constraints {
+            let lhs: f64 = con.coeffs.iter().map(|&(j, v)| v * x[j] as f64).sum();
+            let ok = match con.sense {
+                Sense::Le => lhs <= con.rhs + 1e-9,
+                Sense::Eq => (lhs - con.rhs).abs() <= 1e-9,
+                Sense::Ge => lhs >= con.rhs - 1e-9,
+            };
+            if !ok {
+                continue 'outer;
+            }
+        }
+        let obj: f64 = c.iter().zip(&x).map(|(ci, &xi)| ci * xi as f64).sum();
+        if best.as_ref().map(|(_, b)| obj < *b - 1e-12).unwrap_or(true) {
+            best = Some((x, obj));
+        }
+    }
+    match best {
+        Some((x, objective)) => IlpResult::Optimal { x, objective },
+        None => IlpResult::Infeasible,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, ensure_close, forall, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn con(coeffs: &[(usize, f64)], sense: Sense, rhs: f64) -> Constraint {
+        Constraint {
+            coeffs: coeffs.to_vec(),
+            sense,
+            rhs,
+        }
+    }
+
+    #[test]
+    fn knapsack() {
+        // max 5a + 4b + 3c s.t. 2a + 3b + c <= 5  => min negated.
+        let r = solve_ilp(
+            3,
+            &[-5.0, -4.0, -3.0],
+            &[con(&[(0, 2.0), (1, 3.0), (2, 1.0)], Sense::Le, 5.0)],
+        );
+        match r {
+            IlpResult::Optimal { x, objective } => {
+                assert_eq!(x, vec![1, 1, 0], "a+b fills the knapsack exactly");
+                assert!((objective + 9.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_binary_system() {
+        let r = solve_ilp(
+            2,
+            &[1.0, 1.0],
+            &[
+                con(&[(0, 1.0), (1, 1.0)], Sense::Ge, 3.0), // needs > 2
+            ],
+        );
+        assert_eq!(r, IlpResult::Infeasible);
+    }
+
+    #[test]
+    fn xor_chain_integrality() {
+        // L0=0; L1 = L0 xor R1; minimize (B-A)L1 + S R1 with big win for
+        // L1=1 -> forces R1=1 integrally.
+        let xor = |l2: usize, l1: usize, r2: usize| -> Vec<Constraint> {
+            vec![
+                con(&[(l2, 1.0), (l1, -1.0), (r2, 1.0)], Sense::Ge, 0.0),
+                con(&[(l2, 1.0), (l1, -1.0), (r2, -1.0)], Sense::Le, 0.0),
+                con(&[(l2, 1.0), (r2, -1.0), (l1, 1.0)], Sense::Ge, 0.0),
+                con(&[(l2, 1.0), (r2, 1.0), (l1, 1.0)], Sense::Le, 2.0),
+            ]
+        };
+        let mut cons = vec![con(&[(0, 1.0)], Sense::Eq, 0.0)];
+        cons.extend(xor(1, 0, 2));
+        let r = solve_ilp(3, &[0.0, -100.0, 7.0], &cons);
+        match r {
+            IlpResult::Optimal { x, objective } => {
+                assert_eq!(x, vec![0, 1, 1]);
+                assert!((objective + 93.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// The core correctness property: branch-and-bound == exhaustive on
+    /// random small instances.
+    #[test]
+    fn prop_bnb_matches_exhaustive() {
+        forall(
+            PropConfig { seed: 0xB1B0, cases: 60 },
+            |rng: &mut Rng| {
+                let n = 2 + rng.index(6); // 2..7 vars
+                let c: Vec<f64> = (0..n).map(|_| rng.range_i64(-20, 20) as f64).collect();
+                let ncons = rng.index(5);
+                let cons: Vec<Constraint> = (0..ncons)
+                    .map(|_| {
+                        let k = 1 + rng.index(n.min(3));
+                        let idx = rng.choose_distinct(n, k);
+                        let coeffs: Vec<(usize, f64)> = idx
+                            .into_iter()
+                            .map(|j| (j, rng.range_i64(-5, 5) as f64))
+                            .collect();
+                        let sense = match rng.index(3) {
+                            0 => Sense::Le,
+                            1 => Sense::Ge,
+                            _ => Sense::Eq,
+                        };
+                        let rhs = rng.range_i64(-4, 6) as f64;
+                        Constraint { coeffs, sense, rhs }
+                    })
+                    .collect();
+                (n, c, cons)
+            },
+            |(n, c, cons)| {
+                let a = solve_ilp(*n, c, cons);
+                let b = solve_exhaustive(*n, c, cons);
+                match (a, b) {
+                    (IlpResult::Infeasible, IlpResult::Infeasible) => Ok(()),
+                    (
+                        IlpResult::Optimal { objective: oa, .. },
+                        IlpResult::Optimal { objective: ob, .. },
+                    ) => ensure_close(oa, ob, 1e-6, "objective"),
+                    (a, b) => ensure(false, format!("feasibility mismatch: {a:?} vs {b:?}")),
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,5 @@
+//! LP/ILP solver substrate (Mosek replacement — DESIGN.md §2).
+pub mod ilp;
+pub mod simplex;
+pub use ilp::{solve_exhaustive, solve_ilp, IlpResult};
+pub use simplex::{solve_lp, Constraint, LpResult, Sense};

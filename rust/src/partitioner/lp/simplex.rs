@@ -1,0 +1,404 @@
+//! Dense two-phase primal simplex (the LP-relaxation engine under the
+//! branch-and-bound ILP — our substitute for the paper's Mosek).
+//!
+//! Solves  min c·x  s.t.  A x {<=,=,>=} b,  x >= 0.
+//! Bounded 0/1 variables are expressed by the caller as explicit
+//! `x_i <= 1` rows. Bland's rule is used throughout, so the method cannot
+//! cycle; problem sizes here (tens of variables, hundreds of rows) make
+//! its slower convergence irrelevant.
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// One linear constraint: `coeffs · x (sense) rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub coeffs: Vec<(usize, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// LP outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+    Unbounded,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve min c·x subject to constraints, x >= 0.
+pub fn solve_lp(n_vars: usize, c: &[f64], constraints: &[Constraint]) -> LpResult {
+    assert_eq!(c.len(), n_vars);
+    let m = constraints.len();
+
+    // Normalize to equalities with slack/surplus, rhs >= 0.
+    // Columns: [x (n) | slack/surplus (s) | artificial (a)].
+    let mut rows: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut rhs: Vec<f64> = Vec::with_capacity(m);
+    let mut senses: Vec<Sense> = Vec::with_capacity(m);
+    for con in constraints {
+        let mut row = vec![0.0; n_vars];
+        for &(j, v) in &con.coeffs {
+            assert!(j < n_vars, "coefficient index out of range");
+            row[j] += v;
+        }
+        let (mut r, mut b, mut s) = (row, con.rhs, con.sense);
+        if b < 0.0 {
+            for v in r.iter_mut() {
+                *v = -*v;
+            }
+            b = -b;
+            s = match s {
+                Sense::Le => Sense::Ge,
+                Sense::Ge => Sense::Le,
+                Sense::Eq => Sense::Eq,
+            };
+        }
+        rows.push(r);
+        rhs.push(b);
+        senses.push(s);
+    }
+
+    // Count slack and artificial columns.
+    let mut n_slack = 0;
+    let mut n_art = 0;
+    for s in &senses {
+        match s {
+            Sense::Le => n_slack += 1,
+            Sense::Ge => {
+                n_slack += 1;
+                n_art += 1;
+            }
+            Sense::Eq => n_art += 1,
+        }
+    }
+    let total = n_vars + n_slack + n_art;
+
+    // Tableau: m rows x (total + 1) [last col = rhs].
+    let mut tab = vec![vec![0.0; total + 1]; m];
+    let mut basis = vec![0usize; m];
+    let mut si = n_vars;
+    let mut ai = n_vars + n_slack;
+    let mut artificial_cols: Vec<usize> = Vec::new();
+    for i in 0..m {
+        tab[i][..n_vars].copy_from_slice(&rows[i]);
+        tab[i][total] = rhs[i];
+        match senses[i] {
+            Sense::Le => {
+                tab[i][si] = 1.0;
+                basis[i] = si;
+                si += 1;
+            }
+            Sense::Ge => {
+                tab[i][si] = -1.0;
+                si += 1;
+                tab[i][ai] = 1.0;
+                basis[i] = ai;
+                artificial_cols.push(ai);
+                ai += 1;
+            }
+            Sense::Eq => {
+                tab[i][ai] = 1.0;
+                basis[i] = ai;
+                artificial_cols.push(ai);
+                ai += 1;
+            }
+        }
+    }
+
+    // ---- Phase 1: minimize sum of artificials --------------------------
+    if n_art > 0 {
+        let mut obj = vec![0.0; total + 1];
+        for &a in &artificial_cols {
+            obj[a] = 1.0;
+        }
+        // Make the objective row consistent with the basis (price out).
+        for i in 0..m {
+            if artificial_cols.contains(&basis[i]) {
+                for j in 0..=total {
+                    obj[j] -= tab[i][j];
+                }
+            }
+        }
+        if !pivot_loop(&mut tab, &mut basis, &mut obj, total) {
+            return LpResult::Unbounded; // cannot happen in phase 1
+        }
+        let phase1 = -obj[total];
+        if phase1 > 1e-7 {
+            return LpResult::Infeasible;
+        }
+        // Drive any artificial still in the basis out (degenerate rows).
+        for i in 0..m {
+            if artificial_cols.contains(&basis[i]) {
+                // Find a non-artificial column with nonzero coefficient.
+                let mut found = None;
+                for j in 0..(n_vars + n_slack) {
+                    if tab[i][j].abs() > EPS {
+                        found = Some(j);
+                        break;
+                    }
+                }
+                if let Some(j) = found {
+                    pivot(&mut tab, &mut basis, i, j, total);
+                }
+                // Otherwise the row is all-zero: redundant, leave it.
+            }
+        }
+    }
+
+    // ---- Phase 2: original objective ------------------------------------
+    let mut obj = vec![0.0; total + 1];
+    obj[..n_vars].copy_from_slice(c);
+    // Forbid artificial columns from re-entering.
+    for &a in &artificial_cols {
+        for row in tab.iter_mut() {
+            row[a] = 0.0;
+        }
+        obj[a] = 0.0;
+    }
+    // Price out basic variables.
+    for i in 0..m {
+        let b = basis[i];
+        if obj[b].abs() > EPS {
+            let f = obj[b];
+            for j in 0..=total {
+                obj[j] -= f * tab[i][j];
+            }
+        }
+    }
+    if !pivot_loop(&mut tab, &mut basis, &mut obj, total) {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![0.0; n_vars];
+    for i in 0..m {
+        if basis[i] < n_vars {
+            x[basis[i]] = tab[i][total];
+        }
+    }
+    let objective = c.iter().zip(&x).map(|(ci, xi)| ci * xi).sum();
+    LpResult::Optimal { x, objective }
+}
+
+/// Bland's-rule pivoting until optimal. Returns false on unboundedness.
+fn pivot_loop(
+    tab: &mut [Vec<f64>],
+    basis: &mut [usize],
+    obj: &mut [f64],
+    total: usize,
+) -> bool {
+    let m = tab.len();
+    loop {
+        // Entering: smallest index with negative reduced cost (Bland).
+        let mut enter = None;
+        for j in 0..total {
+            if obj[j] < -EPS {
+                enter = Some(j);
+                break;
+            }
+        }
+        let Some(e) = enter else { return true };
+        // Leaving: min ratio, ties by smallest basis index (Bland).
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for i in 0..m {
+            if tab[i][e] > EPS {
+                let ratio = tab[i][total] / tab[i][e];
+                if ratio < best - EPS
+                    || (ratio < best + EPS
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(false))
+                {
+                    best = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else { return false };
+        pivot_with_obj(tab, basis, obj, l, e, total);
+    }
+}
+
+fn pivot(tab: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let m = tab.len();
+    let p = tab[row][col];
+    for j in 0..=total {
+        tab[row][j] /= p;
+    }
+    for i in 0..m {
+        if i != row && tab[i][col].abs() > EPS {
+            let f = tab[i][col];
+            for j in 0..=total {
+                tab[i][j] -= f * tab[row][j];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn pivot_with_obj(
+    tab: &mut [Vec<f64>],
+    basis: &mut [usize],
+    obj: &mut [f64],
+    row: usize,
+    col: usize,
+    total: usize,
+) {
+    pivot(tab, basis, row, col, total);
+    if obj[col].abs() > EPS {
+        let f = obj[col];
+        for j in 0..=total {
+            obj[j] -= f * tab[row][j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn con(coeffs: &[(usize, f64)], sense: Sense, rhs: f64) -> Constraint {
+        Constraint {
+            coeffs: coeffs.to_vec(),
+            sense,
+            rhs,
+        }
+    }
+
+    #[test]
+    fn textbook_maximization() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18  => min -3x -5y
+        // optimum (2, 6), objective -36.
+        let r = solve_lp(
+            2,
+            &[-3.0, -5.0],
+            &[
+                con(&[(0, 1.0)], Sense::Le, 4.0),
+                con(&[(1, 2.0)], Sense::Le, 12.0),
+                con(&[(0, 3.0), (1, 2.0)], Sense::Le, 18.0),
+            ],
+        );
+        match r {
+            LpResult::Optimal { x, objective } => {
+                assert!((x[0] - 2.0).abs() < 1e-6, "{x:?}");
+                assert!((x[1] - 6.0).abs() < 1e-6);
+                assert!((objective + 36.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn equality_and_ge() {
+        // min x + y s.t. x + y = 10, x >= 3  => (3?,7?) any on segment;
+        // objective must be 10.
+        let r = solve_lp(
+            2,
+            &[1.0, 1.0],
+            &[
+                con(&[(0, 1.0), (1, 1.0)], Sense::Eq, 10.0),
+                con(&[(0, 1.0)], Sense::Ge, 3.0),
+            ],
+        );
+        match r {
+            LpResult::Optimal { x, objective } => {
+                assert!((objective - 10.0).abs() < 1e-6);
+                assert!(x[0] >= 3.0 - 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let r = solve_lp(
+            1,
+            &[1.0],
+            &[
+                con(&[(0, 1.0)], Sense::Ge, 5.0),
+                con(&[(0, 1.0)], Sense::Le, 2.0),
+            ],
+        );
+        assert_eq!(r, LpResult::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x with only x >= 0.
+        let r = solve_lp(1, &[-1.0], &[]);
+        assert_eq!(r, LpResult::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // x - y <= -2  (i.e. y >= x + 2), min y => x=0, y=2.
+        let r = solve_lp(
+            2,
+            &[0.0, 1.0],
+            &[con(&[(0, 1.0), (1, -1.0)], Sense::Le, -2.0)],
+        );
+        match r {
+            LpResult::Optimal { x, objective } => {
+                assert!((objective - 2.0).abs() < 1e-6, "{x:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic degeneracy-prone instance; Bland's rule must terminate.
+        let r = solve_lp(
+            4,
+            &[-0.75, 150.0, -0.02, 6.0],
+            &[
+                con(&[(0, 0.25), (1, -60.0), (2, -0.04), (3, 9.0)], Sense::Le, 0.0),
+                con(&[(0, 0.5), (1, -90.0), (2, -0.02), (3, 3.0)], Sense::Le, 0.0),
+                con(&[(2, 1.0)], Sense::Le, 1.0),
+            ],
+        );
+        match r {
+            LpResult::Optimal { objective, .. } => {
+                assert!((objective + 0.05).abs() < 1e-6, "obj {objective}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn xor_relaxation_solves() {
+        // The partitioner's XOR encoding: L2 = L1 XOR R2 with L1 = 0
+        // and heavy incentive to set L2 = 1 drives R2 = 1.
+        // Vars: L1, L2, R2 in [0,1].
+        let bound = |i| con(&[(i, 1.0)], Sense::Le, 1.0);
+        let r = solve_lp(
+            3,
+            &[0.0, -10.0, 1.0], // min -10*L2 + R2
+            &[
+                bound(0),
+                bound(1),
+                bound(2),
+                con(&[(0, 1.0)], Sense::Eq, 0.0), // L1 = 0 (pinned)
+                // L2 >= L1 - R2 ; L2 <= L1 + R2 ; L2 >= R2 - L1 ; L2 <= 2 - R2 - L1
+                con(&[(1, 1.0), (0, -1.0), (2, 1.0)], Sense::Ge, 0.0),
+                con(&[(1, 1.0), (0, -1.0), (2, -1.0)], Sense::Le, 0.0),
+                con(&[(1, 1.0), (2, -1.0), (0, 1.0)], Sense::Ge, 0.0),
+                con(&[(1, 1.0), (2, 1.0), (0, 1.0)], Sense::Le, 2.0),
+            ],
+        );
+        match r {
+            LpResult::Optimal { x, objective } => {
+                assert!((x[1] - 1.0).abs() < 1e-6, "L2=1: {x:?}");
+                assert!((x[2] - 1.0).abs() < 1e-6, "R2=1: {x:?}");
+                assert!((objective + 9.0).abs() < 1e-6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

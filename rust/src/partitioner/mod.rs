@@ -1,0 +1,19 @@
+//! The CloneCloud partitioner (paper §3): static analysis + dynamic
+//! profiling + optimization solving + binary rewriting.
+
+pub mod cfg;
+pub mod cost_model;
+pub mod database;
+pub mod lp;
+pub mod profile_tree;
+pub mod profiler;
+pub mod rewriter;
+pub mod solver;
+
+pub use cfg::Cfg;
+pub use cost_model::CostModel;
+pub use database::{PartitionDb, PartitionEntry};
+pub use profile_tree::{ProfileNode, ProfileTree};
+pub use profiler::{profile_run, ProfileRunReport, Profiler};
+pub use rewriter::rewrite_with_partition;
+pub use solver::{solve_partition, validate_partition, Partition, SolveReport};

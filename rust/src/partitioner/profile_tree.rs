@@ -1,0 +1,164 @@
+//! Profile trees (paper §3.2, Figure 6).
+//!
+//! One node per method *invocation*, rooted at the application entry;
+//! each node annotated with its invocation cost; each edge annotated with
+//! the thread state size at invocation plus at return (what a migration
+//! at that edge would transfer). Every non-leaf node conceptually has a
+//! *residual* child holding the cost of the method body excluding its
+//! callees — exposed here as [`ProfileTree::residual_us`].
+
+use crate::appvm::bytecode::MRef;
+
+/// One invocation.
+#[derive(Debug, Clone)]
+pub struct ProfileNode {
+    pub method: MRef,
+    /// Total cost of this invocation (µs, virtual).
+    pub cost_us: f64,
+    /// Thread state size (bytes) at invocation + at return — the data a
+    /// migration at this edge would move in both directions.
+    pub edge_state_bytes: u64,
+    /// Child invocations, in call order.
+    pub children: Vec<usize>,
+    pub parent: Option<usize>,
+}
+
+/// A profile tree from one execution on one platform.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileTree {
+    pub nodes: Vec<ProfileNode>,
+    pub roots: Vec<usize>,
+    /// Native calls observed during the run (callee -> count). Natives
+    /// are inline code (§3.2) with no tree nodes, but their call-site
+    /// traffic prices the class-granularity baseline's RPC boundary.
+    pub native_calls: std::collections::HashMap<MRef, usize>,
+}
+
+impl ProfileTree {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The residual node value for invocation `i`: its cost minus its
+    /// children's costs (Figure 6: main' = (t4-t1) - ((t4-t3)+(t2-t1))).
+    pub fn residual_us(&self, i: usize) -> f64 {
+        let n = &self.nodes[i];
+        let kids: f64 = n.children.iter().map(|&c| self.nodes[c].cost_us).sum();
+        (n.cost_us - kids).max(0.0)
+    }
+
+    /// All invocations of a given method.
+    pub fn invocations_of(&self, m: MRef) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].method == m)
+            .collect()
+    }
+
+    /// Total residual cost attributed to a method across the execution —
+    /// Σ_i C_c(i, l) for I(i, m).
+    pub fn method_residual_us(&self, m: MRef) -> f64 {
+        self.invocations_of(m)
+            .into_iter()
+            .map(|i| self.residual_us(i))
+            .sum()
+    }
+
+    /// Total edge state bytes across invocations of a method.
+    pub fn method_state_bytes(&self, m: MRef) -> u64 {
+        self.invocations_of(m)
+            .into_iter()
+            .map(|i| self.nodes[i].edge_state_bytes)
+            .sum()
+    }
+
+    /// Number of invocations of a method (the I(i, m) relation's size).
+    pub fn invocation_count(&self, m: MRef) -> usize {
+        self.invocations_of(m).len()
+    }
+
+    /// Total execution cost (sum of root costs).
+    pub fn total_us(&self) -> f64 {
+        self.roots.iter().map(|&r| self.nodes[r].cost_us).sum()
+    }
+
+    /// Internal: add a node.
+    pub fn push(&mut self, method: MRef, parent: Option<usize>) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(ProfileNode {
+            method,
+            cost_us: 0.0,
+            edge_state_bytes: 0,
+            children: Vec::new(),
+            parent,
+        });
+        match parent {
+            Some(p) => self.nodes[p].children.push(id),
+            None => self.roots.push(id),
+        }
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::bytecode::{ClassId, MethodId};
+
+    fn m(i: u16) -> MRef {
+        MRef {
+            class: ClassId(0),
+            method: MethodId(i),
+        }
+    }
+
+    /// Reconstruct Figure 6: main calls a (which calls b, c) then a again.
+    #[test]
+    fn figure6_residuals() {
+        let mut t = ProfileTree::default();
+        let main = t.push(m(0), None); // main
+        let a1 = t.push(m(1), Some(main)); // a (first call)
+        let b = t.push(m(2), Some(a1));
+        let c = t.push(m(3), Some(a1));
+        let a2 = t.push(m(1), Some(main)); // a (second call)
+        t.nodes[main].cost_us = 100.0; // t4 - t1
+        t.nodes[a1].cost_us = 40.0;
+        t.nodes[b].cost_us = 10.0;
+        t.nodes[c].cost_us = 25.0;
+        t.nodes[a2].cost_us = 30.0;
+
+        // main' = 100 - (40 + 30) = 30
+        assert!((t.residual_us(main) - 30.0).abs() < 1e-9);
+        // a' (first) = 40 - (10 + 25) = 5
+        assert!((t.residual_us(a1) - 5.0).abs() < 1e-9);
+        // leaves: residual == own cost
+        assert_eq!(t.residual_us(b), 10.0);
+        // two invocations of a, summed residual = 5 + 30
+        assert_eq!(t.invocation_count(m(1)), 2);
+        assert!((t.method_residual_us(m(1)) - 35.0).abs() < 1e-9);
+        assert_eq!(t.total_us(), 100.0);
+    }
+
+    #[test]
+    fn residual_clamped_nonnegative() {
+        let mut t = ProfileTree::default();
+        let r = t.push(m(0), None);
+        let k = t.push(m(1), Some(r));
+        t.nodes[r].cost_us = 5.0;
+        t.nodes[k].cost_us = 9.0; // timer skew
+        assert_eq!(t.residual_us(r), 0.0);
+    }
+
+    #[test]
+    fn state_bytes_aggregate() {
+        let mut t = ProfileTree::default();
+        let r = t.push(m(0), None);
+        let k1 = t.push(m(1), Some(r));
+        let k2 = t.push(m(1), Some(r));
+        t.nodes[k1].edge_state_bytes = 100;
+        t.nodes[k2].edge_state_bytes = 250;
+        assert_eq!(t.method_state_bytes(m(1)), 350);
+    }
+}

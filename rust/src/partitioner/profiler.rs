@@ -1,0 +1,246 @@
+//! Dynamic profiler (paper §3.2).
+//!
+//! Temporarily instruments app-method entry/exit during a profile run and
+//! fills in a [`ProfileTree`]: node costs from the virtual clock, edge
+//! state sizes by performing the migrator's suspend-and-capture at
+//! invocation and return and measuring (then discarding) the capture —
+//! exactly the paper's procedure. System/native methods are treated as
+//! inline code of their caller (their time lands in the caller's
+//! residual).
+//!
+//! Each profiling execution runs twice — once on a phone-device process,
+//! once on a clone-device process — producing the T / T' tree pair.
+
+use crate::appvm::bytecode::MRef;
+use crate::appvm::interp::{run_thread, ExecHooks, RunExit};
+use crate::appvm::process::Process;
+use crate::appvm::value::Value;
+use crate::error::{CloneCloudError, Result};
+use crate::migration::{measure_state_size, CaptureOptions};
+
+use super::profile_tree::ProfileTree;
+
+/// Profiler hook state.
+pub struct Profiler {
+    tree: ProfileTree,
+    /// Stack of (node id, entry clock µs).
+    stack: Vec<(usize, f64)>,
+    /// Measure capture sizes at entry/exit (done on the mobile-device
+    /// run only; clone-tree edges keep cost 0 since migrations are not
+    /// initiated there — §3.2).
+    pub measure_state: bool,
+    capture_opts: CaptureOptions,
+    /// Wall-clock seconds spent inside state measurement (reported by
+    /// the E2 bench as the paper's "profiling migration cost" time).
+    pub measure_wall_s: f64,
+}
+
+impl Profiler {
+    pub fn new(measure_state: bool) -> Profiler {
+        Profiler {
+            tree: ProfileTree::default(),
+            stack: Vec::new(),
+            measure_state,
+            capture_opts: CaptureOptions::default(),
+            measure_wall_s: 0.0,
+        }
+    }
+
+    pub fn into_tree(self) -> ProfileTree {
+        self.tree
+    }
+
+    fn is_app_method(&self, p: &Process, m: MRef) -> bool {
+        !p.program.class(m.class).system && !p.program.method(m).is_native()
+    }
+
+    fn measure(&mut self, p: &Process, tid: u32) -> u64 {
+        let t0 = std::time::Instant::now();
+        let bytes = measure_state_size(p, tid, self.capture_opts).unwrap_or(0);
+        self.measure_wall_s += t0.elapsed().as_secs_f64();
+        bytes
+    }
+}
+
+impl ExecHooks for Profiler {
+    fn on_entry(&mut self, p: &mut Process, tid: u32, mref: MRef) {
+        if !self.is_app_method(p, mref) {
+            return;
+        }
+        let parent = self.stack.last().map(|&(n, _)| n);
+        let node = self.tree.push(mref, parent);
+        if self.measure_state {
+            let bytes = self.measure(p, tid);
+            self.tree.nodes[node].edge_state_bytes += bytes;
+        }
+        self.stack.push((node, p.clock.now_us()));
+    }
+
+    fn on_native(&mut self, p: &mut Process, _tid: u32, _caller: MRef, callee: MRef) {
+        if !p.program.class(callee.class).system {
+            *self.tree.native_calls.entry(callee).or_insert(0) += 1;
+        }
+    }
+
+    fn on_exit(&mut self, p: &mut Process, tid: u32, mref: MRef) {
+        if !self.is_app_method(p, mref) {
+            return;
+        }
+        let Some((node, t0)) = self.stack.pop() else {
+            return;
+        };
+        debug_assert_eq!(self.tree.nodes[node].method, mref);
+        self.tree.nodes[node].cost_us = p.clock.now_us() - t0;
+        if self.measure_state {
+            let bytes = self.measure(p, tid);
+            self.tree.nodes[node].edge_state_bytes += bytes;
+        }
+    }
+}
+
+/// Wall-clock + virtual timing of one profile run (feeds E2).
+#[derive(Debug, Clone, Default)]
+pub struct ProfileRunReport {
+    pub wall_s: f64,
+    pub virtual_ms: f64,
+    pub state_measure_wall_s: f64,
+    pub methods_profiled: usize,
+}
+
+/// Run `entry(args)` to completion on `p` under profiling. The root
+/// method is entered manually (hooks only fire on `Invoke`).
+pub fn profile_run(
+    p: &mut Process,
+    entry: MRef,
+    args: &[Value],
+    measure_state: bool,
+) -> Result<(ProfileTree, ProfileRunReport)> {
+    let wall0 = std::time::Instant::now();
+    let tid = p.spawn_thread(entry, args)?;
+    let mut prof = Profiler::new(measure_state);
+
+    // Root node for the entry method itself.
+    prof.on_entry(p, tid, entry);
+    // Fix the root entry: on_entry consumed clock 0 reading; stack holds it.
+
+    loop {
+        match run_thread(p, tid, &mut prof, 4_000_000_000)? {
+            RunExit::Completed(_) => break,
+            // Profiling runs the ORIGINAL binary; if a partitioned binary
+            // is profiled anyway, partition points are no-ops.
+            RunExit::MigrationPoint { .. } | RunExit::ReintegrationPoint { .. } => continue,
+            RunExit::OutOfFuel => {
+                return Err(CloneCloudError::partitioner("profile run out of fuel"))
+            }
+        }
+    }
+    prof.on_exit(p, tid, entry);
+
+    let methods: std::collections::HashSet<MRef> =
+        prof.tree.nodes.iter().map(|n| n.method).collect();
+    let report = ProfileRunReport {
+        wall_s: wall0.elapsed().as_secs_f64(),
+        virtual_ms: p.clock.now_ms(),
+        state_measure_wall_s: prof.measure_wall_s,
+        methods_profiled: methods.len(),
+    };
+    Ok((prof.into_tree(), report))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::Program;
+    use crate::device::{DeviceSpec, Location};
+    use crate::vfs::SimFs;
+
+    const PROG: &str = r#"
+class P app
+  method main nargs=0 regs=4
+    invokev P.a
+    invokev P.a
+    retv
+  end
+  method a nargs=0 regs=6
+    const r0 0
+    const r1 100
+  loop:
+    ifge r0 r1 @done
+    const r2 1
+    add r0 r0 r2
+    goto @loop
+  done:
+    invokev P.b
+    retv
+  end
+  method b nargs=0 regs=2
+    const r0 1
+    retv
+  end
+end
+"#;
+
+    fn proc(dev: DeviceSpec) -> (Process, MRef) {
+        let program: Arc<Program> = Arc::new(assemble(PROG).unwrap());
+        let main = program.entry().unwrap();
+        (
+            Process::new(
+                program,
+                dev,
+                Location::Mobile,
+                NodeEnv::with_rust_compute(SimFs::new()),
+            ),
+            main,
+        )
+    }
+
+    #[test]
+    fn tree_structure_matches_calls() {
+        let (mut p, main) = proc(DeviceSpec::phone_g1());
+        let (tree, report) = profile_run(&mut p, main, &[], false).unwrap();
+        // main + 2x a + 2x b = 5 invocations.
+        assert_eq!(tree.len(), 5);
+        assert_eq!(tree.roots.len(), 1);
+        let a = p.program.resolve("P", "a").unwrap();
+        let b = p.program.resolve("P", "b").unwrap();
+        assert_eq!(tree.invocation_count(a), 2);
+        assert_eq!(tree.invocation_count(b), 2);
+        assert_eq!(report.methods_profiled, 3);
+        // a's residual dominates b's (the loop lives in a's body).
+        assert!(tree.method_residual_us(a) > tree.method_residual_us(b) * 5.0);
+        // Total equals the root cost and is positive.
+        assert!(tree.total_us() > 0.0);
+    }
+
+    #[test]
+    fn phone_tree_costs_scale_with_device() {
+        let (mut phone, main) = proc(DeviceSpec::phone_g1());
+        let (pt, _) = profile_run(&mut phone, main, &[], false).unwrap();
+        let (mut clone, _) = proc(DeviceSpec::clone_desktop());
+        let (ct, _) = profile_run(&mut clone, main, &[], false).unwrap();
+        let ratio = pt.total_us() / ct.total_us();
+        assert!(
+            (ratio - DeviceSpec::phone_g1().cpu_factor).abs() < 0.5,
+            "ratio {ratio}"
+        );
+        // Same tree shape on both platforms (deterministic program).
+        assert_eq!(pt.len(), ct.len());
+    }
+
+    #[test]
+    fn state_measurement_fills_edges() {
+        let (mut p, main) = proc(DeviceSpec::phone_g1());
+        let (tree, report) = profile_run(&mut p, main, &[], true).unwrap();
+        let a = p.program.resolve("P", "a").unwrap();
+        assert!(tree.method_state_bytes(a) > 0, "captures measured");
+        assert!(report.state_measure_wall_s >= 0.0);
+        // Virtual clock unaffected by measurement (capture discarded).
+        let (mut q, main2) = proc(DeviceSpec::phone_g1());
+        let (_t2, r2) = profile_run(&mut q, main2, &[], false).unwrap();
+        assert!((report.virtual_ms - r2.virtual_ms).abs() < 1e-6);
+    }
+}

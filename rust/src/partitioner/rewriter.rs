@@ -1,0 +1,250 @@
+//! Binary rewriter (paper §3, §5 — the Javassist role).
+//!
+//! Takes the original executable and a [`Partition`], and produces the
+//! modified executable: every R(m)=1 method gets a `CcStart(pid)` at its
+//! entry (the migration point) and a `CcStop(pid)` before every return
+//! (the reintegration point). Branch targets are remapped, and the result
+//! must re-verify.
+
+use std::collections::HashMap;
+
+use crate::appvm::bytecode::{Instr, MRef};
+use crate::appvm::class::Program;
+use crate::appvm::verifier::verify_program;
+use crate::error::Result;
+
+use super::solver::Partition;
+
+/// Rewrite `program` with the partition's migration points. Point ids are
+/// assigned in method order; the returned map gives pid -> method.
+pub fn rewrite_with_partition(
+    program: &Program,
+    partition: &Partition,
+) -> Result<(Program, HashMap<u32, MRef>)> {
+    let mut out = program.clone();
+    let mut points = HashMap::new();
+    let mut next_pid: u32 = 0;
+    for &m in &partition.migrate {
+        let pid = next_pid;
+        next_pid += 1;
+        points.insert(pid, m);
+        let def = out.method_mut(m);
+        def.code = insert_cc_points(&def.code, pid);
+        def.migration_point = Some(pid);
+    }
+    verify_program(&out)?;
+    Ok((out, points))
+}
+
+/// Insert CcStart at entry and CcStop before every Return, remapping
+/// branch targets.
+fn insert_cc_points(code: &[Instr], pid: u32) -> Vec<Instr> {
+    // new_pc[i] = landing position of old instruction i in the new code.
+    // CRITICAL: a branch that targets a Return must land on the CcStop
+    // inserted in front of it — otherwise the reintegration point is
+    // skipped and the migrated thread sails past its method exit.
+    let mut new_pc = Vec::with_capacity(code.len());
+    let mut pos = 1u32; // CcStart occupies slot 0
+    for instr in code {
+        new_pc.push(pos); // branches land here (the CcStop for returns)
+        pos += if matches!(instr, Instr::Return(_)) { 2 } else { 1 };
+    }
+
+    let mut out = Vec::with_capacity(pos as usize);
+    out.push(Instr::CcStart(pid));
+    for instr in code {
+        if matches!(instr, Instr::Return(_)) {
+            out.push(Instr::CcStop(pid));
+        }
+        out.push(remap(instr, &new_pc));
+    }
+    out
+}
+
+fn remap(instr: &Instr, new_pc: &[u32]) -> Instr {
+    let mut i = instr.clone();
+    match &mut i {
+        Instr::IfZ(_, t) | Instr::IfNZ(_, t) | Instr::IfCmp(_, _, _, t) | Instr::Goto(t) => {
+            *t = new_pc[*t as usize];
+        }
+        _ => {}
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::interp::{run_thread, NoHooks, RunExit};
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::process::Process;
+    use crate::device::{DeviceSpec, Location};
+    use crate::vfs::SimFs;
+
+    const SRC: &str = r#"
+class C app
+  static out
+  method main nargs=0 regs=4
+    const r0 6
+    invoke r1 C.work r0
+    puts C.out r1
+    retv
+  end
+  method work nargs=1 regs=6
+    const r1 0
+    const r2 0
+  loop:
+    ifge r2 r0 @done
+    add r1 r1 r2
+    const r3 1
+    add r2 r2 r3
+    goto @loop
+  done:
+    ifz r1 @zero
+    ret r1
+  zero:
+    const r1 -1
+    ret r1
+  end
+end
+"#;
+
+    fn partition_of(program: &Program, names: &[&str]) -> Partition {
+        let mut migrate = BTreeSet::new();
+        for n in names {
+            migrate.insert(program.resolve("C", n).unwrap());
+        }
+        Partition {
+            migrate,
+            locations: HashMap::new(),
+            expected_us: 0.0,
+            local_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn rewritten_binary_verifies_and_has_points() {
+        let program = assemble(SRC).unwrap();
+        let work = program.resolve("C", "work").unwrap();
+        let (out, points) =
+            rewrite_with_partition(&program, &partition_of(&program, &["work"])).unwrap();
+        assert_eq!(points.len(), 1);
+        let code = &out.method(work).code;
+        assert!(matches!(code[0], Instr::CcStart(0)));
+        let stops = code
+            .iter()
+            .filter(|i| matches!(i, Instr::CcStop(_)))
+            .count();
+        assert_eq!(stops, 2, "one CcStop per return");
+        assert_eq!(out.method(work).migration_point, Some(0));
+        // The original is untouched.
+        assert!(!program
+            .method(work)
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::CcStart(_))));
+    }
+
+    #[test]
+    fn rewritten_binary_runs_identically_when_local() {
+        let program = Arc::new(assemble(SRC).unwrap());
+        let (rewritten, _) =
+            rewrite_with_partition(&program, &partition_of(&program, &["work"])).unwrap();
+        let rewritten = Arc::new(rewritten);
+
+        let run = |prog: Arc<Program>| -> i64 {
+            let main = prog.entry().unwrap();
+            let mut p = Process::new(
+                prog.clone(),
+                DeviceSpec::phone_g1(),
+                Location::Mobile,
+                NodeEnv::with_rust_compute(SimFs::new()),
+            );
+            let tid = p.spawn_thread(main, &[]).unwrap();
+            loop {
+                match run_thread(&mut p, tid, &mut NoHooks, 1_000_000).unwrap() {
+                    RunExit::Completed(_) => break,
+                    RunExit::MigrationPoint { .. } | RunExit::ReintegrationPoint { .. } => {
+                        continue // local policy: don't migrate
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            p.statics[main.class.0 as usize][0].as_int().unwrap()
+        };
+        assert_eq!(run(program), run(rewritten), "0+1+..+5 = 15 both ways");
+    }
+
+    #[test]
+    fn branch_to_return_lands_on_ccstop() {
+        // Regression: `ifge ... @done` where done: is a `ret` must land
+        // on the CcStop, not jump past it (otherwise a migrated thread
+        // skips its reintegration point and keeps running at the clone).
+        const JUMP_TO_RET: &str = r#"
+class C app
+  method main nargs=0 regs=2
+    invoke r0 C.work r0
+    retv
+  end
+  method work nargs=1 regs=4
+    const r1 0
+  loop:
+    ifge r1 r0 @done
+    const r2 1
+    add r1 r1 r2
+    goto @loop
+  done:
+    ret r1
+  end
+end
+"#;
+        let program = assemble(JUMP_TO_RET).unwrap();
+        let work = program.resolve("C", "work").unwrap();
+        let (out, _) =
+            rewrite_with_partition(&program, &partition_of(&program, &["work"])).unwrap();
+        let code = &out.method(work).code;
+        for instr in code {
+            if let Some(t) = instr.branch_target() {
+                if let Instr::Return(_) = code[t as usize] {
+                    panic!("branch target {t} lands on a Return, skipping CcStop");
+                }
+            }
+        }
+        // And at least one branch lands exactly on a CcStop.
+        let lands_on_stop = code.iter().filter_map(|i| i.branch_target()).any(|t| {
+            matches!(code[t as usize], Instr::CcStop(_))
+        });
+        assert!(lands_on_stop);
+    }
+
+    #[test]
+    fn branch_targets_remapped_correctly() {
+        let program = assemble(SRC).unwrap();
+        let work = program.resolve("C", "work").unwrap();
+        let (out, _) =
+            rewrite_with_partition(&program, &partition_of(&program, &["work"])).unwrap();
+        // Every branch target must land on a real instruction and the
+        // loop must still be reachable (verified structurally by the
+        // verifier; here we additionally check targets moved).
+        let orig_targets: Vec<u32> = program
+            .method(work)
+            .code
+            .iter()
+            .filter_map(|i| i.branch_target())
+            .collect();
+        let new_targets: Vec<u32> = out
+            .method(work)
+            .code
+            .iter()
+            .filter_map(|i| i.branch_target())
+            .collect();
+        assert_eq!(orig_targets.len(), new_targets.len());
+        for (o, n) in orig_targets.iter().zip(&new_targets) {
+            assert!(n > o, "targets shift forward: {o} -> {n}");
+        }
+    }
+}

@@ -1,0 +1,515 @@
+//! The optimization solver (paper §3.3).
+//!
+//! Chooses the binary migration decisions R(m) — and the induced
+//! locations L(m) — minimizing Σ_E C(E) = Comp(E) + Migr(E) subject to
+//! the paper's constraints (1)–(4):
+//!
+//! 1. soundness: a migrant method's body runs opposite its caller
+//!    (encoded as L(callee) = L(caller) XOR R(callee) on every DC edge —
+//!    the XOR also covers the "location only changes at migration
+//!    points" execution semantics);
+//! 2. V_M methods are pinned to the mobile device;
+//! 3. V_Nat_C methods are collocated;
+//! 4. no cyclic migration: R(m1) = 1 ⇒ R(m2) = 0 for TC(m1, m2).
+//!
+//! Solved as a 0-1 ILP with our branch-and-bound simplex (`lp`),
+//! standing in for the paper's Mosek.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::appvm::bytecode::MRef;
+use crate::appvm::class::Program;
+use crate::device::Location;
+use crate::error::{CloneCloudError, Result};
+
+use super::cfg::Cfg;
+use super::cost_model::CostModel;
+use super::lp::{solve_ilp, Constraint, IlpResult, Sense};
+
+/// A partitioning: the R(m)=1 set plus induced locations and costs.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Methods with migration/reintegration points (R(m) = 1).
+    pub migrate: BTreeSet<MRef>,
+    /// Induced location of each app method's body.
+    pub locations: HashMap<MRef, Location>,
+    /// Expected cost of the partitioned execution (µs, model units).
+    pub expected_us: f64,
+    /// Cost of the all-local execution (µs) — the comparison baseline.
+    pub local_us: f64,
+}
+
+impl Partition {
+    /// "Offload" in Table 1's sense: at least one migration point chosen.
+    pub fn is_offload(&self) -> bool {
+        !self.migrate.is_empty()
+    }
+
+    pub fn label(&self) -> &'static str {
+        if self.is_offload() {
+            "Offload"
+        } else {
+            "Local"
+        }
+    }
+}
+
+/// Diagnostics from one solve (feeds the E2 bench).
+#[derive(Debug, Clone, Default)]
+pub struct SolveReport {
+    pub n_vars: usize,
+    pub n_constraints: usize,
+    pub solve_wall_s: f64,
+    pub candidates: usize,
+}
+
+/// Solve the partitioning problem for a program + cost model.
+pub fn solve_partition(
+    program: &Program,
+    cfg: &Cfg,
+    costs: &CostModel,
+) -> Result<(Partition, SolveReport)> {
+    let t0 = std::time::Instant::now();
+
+    // Variables: app methods only (system classes are not partition
+    // candidates, §3.1). x = [L_0..L_{n-1}, R_0..R_{n-1}].
+    let methods: Vec<MRef> = program.app_methods();
+    let n = methods.len();
+    let idx: HashMap<MRef, usize> = methods.iter().enumerate().map(|(i, m)| (*m, i)).collect();
+    let l = |i: usize| i;
+    let r = |i: usize| n + i;
+
+    let mut cons: Vec<Constraint> = Vec::new();
+    let eq = |var: usize, v: f64| Constraint {
+        coeffs: vec![(var, 1.0)],
+        sense: Sense::Eq,
+        rhs: v,
+    };
+
+    // R(m) = 0 for methods that cannot host partition points: pinned
+    // (their body cannot move), native (no bytecode to rewrite),
+    // recursive (Property 3 with m1 = m2), and main.
+    let mut candidates = 0usize;
+    for (i, &m) in methods.iter().enumerate() {
+        let def = program.method(m);
+        let fixed = def.pinned || def.is_native() || cfg.recursive(m);
+        if fixed {
+            cons.push(eq(r(i), 0.0));
+        } else {
+            candidates += 1;
+        }
+        // Constraint (2): V_M pinned to the mobile device.
+        if def.pinned {
+            cons.push(eq(l(i), 0.0));
+        }
+    }
+
+    // Constraint (1) + execution semantics on every DC edge between app
+    // methods: L(m2) = L(m1) XOR R(m2), linearized.
+    for (ci, cj) in cfg.dc_edges() {
+        let (m1, m2) = (cfg.methods[ci], cfg.methods[cj]);
+        let (Some(&i1), Some(&i2)) = (idx.get(&m1), idx.get(&m2)) else {
+            continue; // edge touching a system method
+        };
+        let (l1, l2, r2) = (l(i1), l(i2), r(i2));
+        cons.push(Constraint {
+            coeffs: vec![(l2, 1.0), (l1, -1.0), (r2, 1.0)],
+            sense: Sense::Ge,
+            rhs: 0.0,
+        });
+        cons.push(Constraint {
+            coeffs: vec![(l2, 1.0), (l1, -1.0), (r2, -1.0)],
+            sense: Sense::Le,
+            rhs: 0.0,
+        });
+        cons.push(Constraint {
+            coeffs: vec![(l2, 1.0), (r2, -1.0), (l1, 1.0)],
+            sense: Sense::Ge,
+            rhs: 0.0,
+        });
+        cons.push(Constraint {
+            coeffs: vec![(l2, 1.0), (r2, 1.0), (l1, 1.0)],
+            sense: Sense::Le,
+            rhs: 2.0,
+        });
+    }
+
+    // Constraint (3): V_Nat_C collocation — native-state methods of the
+    // same class share a location.
+    for class in &program.classes {
+        if class.system {
+            continue;
+        }
+        let group: Vec<usize> = class
+            .methods
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| m.native_state)
+            .filter_map(|(mi, _)| {
+                let mref = program.resolve(&class.name, &class.methods[mi].name).ok()?;
+                idx.get(&mref).copied()
+            })
+            .collect();
+        for w in group.windows(2) {
+            cons.push(Constraint {
+                coeffs: vec![(l(w[0]), 1.0), (l(w[1]), -1.0)],
+                sense: Sense::Eq,
+                rhs: 0.0,
+            });
+        }
+    }
+
+    // Constraint (4): no cyclic migration — R(m1) + R(m2) <= 1 when
+    // TC(m1, m2).
+    for (ci, cj) in cfg.tc_pairs() {
+        let (m1, m2) = (cfg.methods[ci], cfg.methods[cj]);
+        let (Some(&i1), Some(&i2)) = (idx.get(&m1), idx.get(&m2)) else {
+            continue;
+        };
+        if i1 == i2 {
+            continue; // recursion handled by the R=0 fixing above
+        }
+        cons.push(Constraint {
+            coeffs: vec![(r(i1), 1.0), (r(i2), 1.0)],
+            sense: Sense::Le,
+            rhs: 1.0,
+        });
+    }
+
+    // Objective: Σ_m [A_m + (B_m - A_m) L_m + S_m R_m]; the constant
+    // Σ A_m is added back afterwards.
+    let mut c = vec![0.0; 2 * n];
+    let mut local_us = 0.0;
+    for (i, &m) in methods.iter().enumerate() {
+        let a = costs.mobile(m);
+        let b = costs.clone_side(m);
+        let s = costs.migration(m);
+        local_us += a;
+        c[l(i)] = b - a;
+        c[r(i)] = s;
+    }
+
+    let report_cons = cons.len();
+    let result = solve_ilp(2 * n, &c, &cons);
+    let (x, obj) = match result {
+        IlpResult::Optimal { x, objective } => (x, objective),
+        IlpResult::Infeasible => {
+            return Err(CloneCloudError::Solver(
+                "partitioning ILP infeasible (constraint bug?)".into(),
+            ))
+        }
+    };
+
+    let mut migrate = BTreeSet::new();
+    let mut locations = HashMap::new();
+    for (i, &m) in methods.iter().enumerate() {
+        if x[r(i)] == 1 {
+            migrate.insert(m);
+        }
+        locations.insert(m, Location::from_bit(x[l(i)]));
+    }
+    let partition = Partition {
+        migrate,
+        locations,
+        expected_us: local_us + obj,
+        local_us,
+    };
+    let report = SolveReport {
+        n_vars: 2 * n,
+        n_constraints: report_cons,
+        solve_wall_s: t0.elapsed().as_secs_f64(),
+        candidates,
+    };
+    Ok((partition, report))
+}
+
+/// Validate that a partition satisfies the paper's constraints against a
+/// program + CFG (used by tests and after DB loads).
+pub fn validate_partition(program: &Program, cfg: &Cfg, p: &Partition) -> Result<()> {
+    for &m in &p.migrate {
+        let def = program.method(m);
+        if def.pinned {
+            return Err(CloneCloudError::partitioner(format!(
+                "migration point on pinned method {}",
+                program.method_name(m)
+            )));
+        }
+        if def.is_native() {
+            return Err(CloneCloudError::partitioner("migration point on native"));
+        }
+        if cfg.recursive(m) {
+            return Err(CloneCloudError::partitioner("migration point on recursion"));
+        }
+        for &m2 in &p.migrate {
+            if m != m2 && cfg.tc(m, m2) {
+                return Err(CloneCloudError::partitioner(format!(
+                    "cyclic migration: {} transitively calls {}",
+                    program.method_name(m),
+                    program.method_name(m2)
+                )));
+            }
+        }
+    }
+    // Pinned methods must be located at the mobile device.
+    for m in program.app_methods() {
+        if program.method(m).pinned {
+            if let Some(loc) = p.locations.get(&m) {
+                if *loc != Location::Mobile {
+                    return Err(CloneCloudError::partitioner(format!(
+                        "pinned {} located at clone",
+                        program.method_name(m)
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::bytecode::{ClassId, MethodId};
+
+    /// Figure 5's program with a cost model that makes c() expensive.
+    const FIG5: &str = r#"
+class C app
+  method main nargs=0 regs=2
+    invokev C.a
+    retv
+  end
+  method a nargs=0 regs=2
+    invokev C.b
+    invokev C.c
+    retv
+  end
+  method b nargs=0 regs=2
+    retv
+  end
+  method c nargs=0 regs=2
+    retv
+  end
+end
+"#;
+
+    fn model(program: &Program, entries: &[(&str, f64, f64, f64)]) -> CostModel {
+        let mut cm = CostModel::default();
+        for &(name, a, b, s) in entries {
+            let m = program.resolve("C", name).unwrap();
+            cm.mobile_us.insert(m, a);
+            cm.clone_us.insert(m, b);
+            cm.migr_us.insert(m, s);
+            cm.invocations.insert(m, 1);
+        }
+        cm
+    }
+
+    #[test]
+    fn figure5_offloads_expensive_c() {
+        let program = assemble(FIG5).unwrap();
+        let cfg = Cfg::build(&program);
+        // c is heavy (1000 vs 50 at the clone), migration cheap (100).
+        let cm = model(
+            &program,
+            &[
+                ("main", 10.0, 0.5, 1e9),
+                ("a", 20.0, 1.0, 200.0),
+                ("b", 5.0, 0.25, 50.0),
+                ("c", 1000.0, 50.0, 100.0),
+            ],
+        );
+        let (p, report) = solve_partition(&program, &cfg, &cm).unwrap();
+        validate_partition(&program, &cfg, &p).unwrap();
+        let c = program.resolve("C", "c").unwrap();
+        let b = program.resolve("C", "b").unwrap();
+        let a = program.resolve("C", "a").unwrap();
+        assert!(p.migrate.contains(&c), "paper Fig. 5c: c() offloaded");
+        assert_eq!(p.locations[&c], Location::Clone);
+        assert_eq!(p.locations[&program.resolve("C", "main").unwrap()], Location::Mobile);
+        assert!(p.expected_us < p.local_us, "offload must beat local");
+        assert!(report.n_vars >= 8);
+        // b stays local (cheap to run, costs 50 to move).
+        assert!(!p.migrate.contains(&b));
+        let _ = a;
+    }
+
+    #[test]
+    fn offloading_a_takes_b_and_c_with_it() {
+        let program = assemble(FIG5).unwrap();
+        let cfg = Cfg::build(&program);
+        // Everything under a() is expensive; moving a() once is cheapest.
+        let cm = model(
+            &program,
+            &[
+                ("main", 10.0, 0.5, 1e9),
+                ("a", 500.0, 25.0, 80.0),
+                ("b", 400.0, 20.0, 500.0),
+                ("c", 400.0, 20.0, 500.0),
+            ],
+        );
+        let (p, _) = solve_partition(&program, &cfg, &cm).unwrap();
+        validate_partition(&program, &cfg, &p).unwrap();
+        let a = program.resolve("C", "a").unwrap();
+        let b = program.resolve("C", "b").unwrap();
+        let c = program.resolve("C", "c").unwrap();
+        assert!(p.migrate.contains(&a));
+        // Property 3: nothing under a() is also a migration point.
+        assert!(!p.migrate.contains(&b) && !p.migrate.contains(&c));
+        // But their bodies run at the clone (XOR propagation).
+        assert_eq!(p.locations[&b], Location::Clone);
+        assert_eq!(p.locations[&c], Location::Clone);
+    }
+
+    #[test]
+    fn expensive_migration_keeps_everything_local() {
+        let program = assemble(FIG5).unwrap();
+        let cfg = Cfg::build(&program);
+        let cm = model(
+            &program,
+            &[
+                ("main", 10.0, 0.5, 1e9),
+                ("a", 100.0, 5.0, 1e9),
+                ("b", 50.0, 2.5, 1e9),
+                ("c", 100.0, 5.0, 1e9),
+            ],
+        );
+        let (p, _) = solve_partition(&program, &cfg, &cm).unwrap();
+        assert!(!p.is_offload());
+        assert_eq!(p.label(), "Local");
+        assert!((p.expected_us - p.local_us).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pinned_subtree_cannot_move() {
+        const SRC: &str = r#"
+class C app
+  method main nargs=0 regs=2
+    invokev C.a
+    retv
+  end
+  method a nargs=0 regs=2
+    invokev C.show
+    retv
+  end
+  method show nargs=1 regs=2 native=ui.show
+end
+"#;
+        // a() calls a pinned UI native: offloading a() would require the
+        // native's location to flip — infeasible, so a() stays local no
+        // matter how expensive it is.
+        let program = assemble(SRC).unwrap();
+        let cfg = Cfg::build(&program);
+        let mut cm = CostModel::default();
+        let a = program.resolve("C", "a").unwrap();
+        cm.mobile_us.insert(a, 1e6);
+        cm.clone_us.insert(a, 1.0);
+        cm.migr_us.insert(a, 1.0);
+        let (p, _) = solve_partition(&program, &cfg, &cm).unwrap();
+        assert!(!p.migrate.contains(&a), "Property 1 wins over cost");
+    }
+
+    #[test]
+    fn native_state_collocation_forces_group_moves() {
+        const SRC: &str = r#"
+class C app
+  method main nargs=0 regs=4
+    invokev C.a
+    invokev C.b
+    retv
+  end
+  method a nargs=0 regs=4
+    const r0 0
+    invoke r1 C.size r0
+    retv
+  end
+  method b nargs=0 regs=4
+    const r0 0
+    invoke r1 C.size2 r0
+    retv
+  end
+  method size nargs=1 regs=1 native=fs.size natstate
+  method size2 nargs=1 regs=1 native=fs.size natstate
+end
+"#;
+        // a uses native-state method `size`, b uses `size2` of the same
+        // class: Property 2 says size/size2 are collocated, so a and b
+        // must land on the same side. Offloading only a (huge win) is
+        // blocked unless b comes too — and b is cheap to move, so the
+        // solver offloads both.
+        let program = assemble(SRC).unwrap();
+        let cfg = Cfg::build(&program);
+        let mut cm = CostModel::default();
+        let a = program.resolve("C", "a").unwrap();
+        let b = program.resolve("C", "b").unwrap();
+        cm.mobile_us.insert(a, 1e6);
+        cm.clone_us.insert(a, 10.0);
+        cm.migr_us.insert(a, 100.0);
+        cm.mobile_us.insert(b, 100.0);
+        cm.clone_us.insert(b, 5.0);
+        cm.migr_us.insert(b, 100.0);
+        let (p, _) = solve_partition(&program, &cfg, &cm).unwrap();
+        validate_partition(&program, &cfg, &p).unwrap();
+        let size = program.resolve("C", "size").unwrap();
+        let size2 = program.resolve("C", "size2").unwrap();
+        assert_eq!(
+            p.locations[&size], p.locations[&size2],
+            "V_Nat_C collocated"
+        );
+        assert!(p.migrate.contains(&a));
+        assert!(p.migrate.contains(&b), "dragged along by collocation");
+    }
+
+    #[test]
+    fn recursion_cannot_be_a_migration_point() {
+        const SRC: &str = r#"
+class C app
+  method main nargs=0 regs=2
+    const r0 5
+    invoke r1 C.f r0
+    retv
+  end
+  method f nargs=1 regs=4
+    ifz r0 @base
+    const r1 1
+    sub r2 r0 r1
+    invoke r3 C.f r2
+    ret r3
+  base:
+    ret r0
+  end
+end
+"#;
+        let program = assemble(SRC).unwrap();
+        let cfg = Cfg::build(&program);
+        let f = program.resolve("C", "f").unwrap();
+        let mut cm = CostModel::default();
+        cm.mobile_us.insert(f, 1e6);
+        cm.clone_us.insert(f, 1.0);
+        cm.migr_us.insert(f, 1.0);
+        let (p, _) = solve_partition(&program, &cfg, &cm).unwrap();
+        assert!(!p.migrate.contains(&f), "Property 3: no nested suspends");
+    }
+
+    #[test]
+    fn validate_rejects_bogus_partition() {
+        let program = assemble(FIG5).unwrap();
+        let cfg = Cfg::build(&program);
+        let a = program.resolve("C", "a").unwrap();
+        let c = program.resolve("C", "c").unwrap();
+        let mut migrate = BTreeSet::new();
+        migrate.insert(a);
+        migrate.insert(c); // a transitively calls c: illegal
+        let p = Partition {
+            migrate,
+            locations: HashMap::new(),
+            expected_us: 0.0,
+            local_us: 0.0,
+        };
+        assert!(validate_partition(&program, &cfg, &p).is_err());
+        let _ = MRef {
+            class: ClassId(0),
+            method: MethodId(0),
+        };
+    }
+}

@@ -1,0 +1,321 @@
+//! The end-to-end CloneCloud pipeline: everything between "here is an
+//! app" and "here is Table 1's row for it".
+//!
+//! Offline (per app x input x network, paper §3): static analysis →
+//! dual-platform profiling → cost model → ILP solve → bytecode rewrite →
+//! partition DB entry. Online (§4): pick the binary for the current
+//! conditions and run it, migrating at its partition points.
+
+use std::sync::Arc;
+
+use crate::appvm::natives::ComputeBackend;
+use crate::appvm::Program;
+use crate::apps::{build_process, App, Size};
+use crate::config::{Config, NetworkProfile};
+use crate::device::Location;
+use crate::error::Result;
+use crate::exec::{run_distributed, run_monolithic, DistOutcome, InlineClone, MonoOutcome};
+use crate::partitioner::{
+    profile_run, rewrite_with_partition, solve_partition, validate_partition, Cfg, CostModel,
+    Partition, ProfileTree,
+};
+
+/// Timing + size diagnostics of one full partitioning run (E2).
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    pub methods_profiled: usize,
+    /// Wall seconds: profiling execution on the phone process.
+    pub profile_phone_s: f64,
+    /// Wall seconds: profiling execution on the clone process.
+    pub profile_clone_s: f64,
+    /// Wall seconds spent measuring migration state sizes (the paper's
+    /// separate "profiling migration cost" phase).
+    pub profile_migration_s: f64,
+    /// Wall seconds: building the static CFG + constraints (jchord's
+    /// role).
+    pub static_analysis_s: f64,
+    /// Wall seconds: generating + solving the ILP (Mosek's role).
+    pub solve_s: f64,
+    /// Virtual profile-run times, for the paper's phone/clone contrast.
+    pub profile_phone_virtual_ms: f64,
+    pub profile_clone_virtual_ms: f64,
+}
+
+/// Profile one app execution on both platforms (the T / T' pair).
+pub fn profile_pair(
+    app: &dyn App,
+    program: &Arc<Program>,
+    size: Size,
+    cfg: &Config,
+    backend: &Arc<dyn ComputeBackend>,
+) -> Result<(ProfileTree, ProfileTree, PipelineReport)> {
+    let mut report = PipelineReport::default();
+
+    let mut phone = build_process(
+        app,
+        program.clone(),
+        size,
+        cfg,
+        Location::Mobile,
+        backend.clone(),
+        false,
+    )?;
+    let entry = program.entry()?;
+    let (t_mobile, pr) = profile_run(&mut phone, entry, &[], true)?;
+    report.profile_phone_s = pr.wall_s - pr.state_measure_wall_s;
+    report.profile_migration_s = pr.state_measure_wall_s;
+    report.profile_phone_virtual_ms = pr.virtual_ms;
+    report.methods_profiled = pr.methods_profiled;
+
+    // Clone profiling: the paper's clone is a full Android image, so
+    // pinned calls execute there during profiling (allow_pinned).
+    let mut clone = build_process(
+        app,
+        program.clone(),
+        size,
+        cfg,
+        Location::Clone,
+        backend.clone(),
+        true,
+    )?;
+    let (t_clone, cr) = profile_run(&mut clone, entry, &[], false)?;
+    report.profile_clone_s = cr.wall_s;
+    report.profile_clone_virtual_ms = cr.virtual_ms;
+
+    Ok((t_mobile, t_clone, report))
+}
+
+/// Solve a partition from already-collected profile trees (profiling is
+/// network-independent; only the cost-model pricing changes per network,
+/// so one T/T' pair serves every execution condition — this is how the
+/// partition database for multiple conditions is filled from one
+/// profiling campaign).
+pub fn partition_from_trees(
+    app: &dyn App,
+    trees: &(ProfileTree, ProfileTree),
+    cfg: &Config,
+    net: &NetworkProfile,
+) -> Result<(Partition, f64, f64)> {
+    let program = app.program();
+    let t0 = std::time::Instant::now();
+    let cfg_graph = Cfg::build(&program);
+    let static_s = t0.elapsed().as_secs_f64();
+    let cost_model = CostModel::build_scaled(
+        &[(&trees.0, &trees.1)],
+        &cfg.costs,
+        net,
+        cfg.phone.cpu_factor,
+        cfg.clone.cpu_factor,
+    );
+    let (partition, solve_report) = solve_partition(&program, &cfg_graph, &cost_model)?;
+    validate_partition(&program, &cfg_graph, &partition)?;
+    Ok((partition, static_s, solve_report.solve_wall_s))
+}
+
+/// Full offline partitioning for one (app, input, network).
+pub fn partition_app(
+    app: &dyn App,
+    size: Size,
+    cfg: &Config,
+    net: &NetworkProfile,
+    backend: &Arc<dyn ComputeBackend>,
+) -> Result<(Partition, PipelineReport)> {
+    let program = app.program();
+    let (t_mobile, t_clone, mut report) = profile_pair(app, &program, size, cfg, backend)?;
+    let (partition, static_s, solve_s) =
+        partition_from_trees(app, &(t_mobile, t_clone), cfg, net)?;
+    report.static_analysis_s = static_s;
+    report.solve_s = solve_s;
+    Ok((partition, report))
+}
+
+/// One Table 1 cell pair for a network: execution time + partition label.
+#[derive(Debug, Clone)]
+pub struct CcCell {
+    pub exec_ms: f64,
+    pub label: &'static str,
+    pub speedup: f64,
+    pub dist: Option<DistOutcome>,
+}
+
+/// One full Table 1 row.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub app: &'static str,
+    pub input: String,
+    pub phone_ms: f64,
+    pub clone_ms: f64,
+    pub max_speedup: f64,
+    pub threeg: CcCell,
+    pub wifi: CcCell,
+    pub result: String,
+}
+
+/// Run the monolithic phone + clone columns.
+pub fn monolithic_pair(
+    app: &dyn App,
+    size: Size,
+    cfg: &Config,
+    backend: &Arc<dyn ComputeBackend>,
+) -> Result<(MonoOutcome, MonoOutcome, String)> {
+    let program = app.program();
+    let mut phone = build_process(
+        app, program.clone(), size, cfg, Location::Mobile, backend.clone(), false,
+    )?;
+    let po = run_monolithic(&mut phone)?;
+    let result = app.check(&phone, size)?;
+    let mut clone = build_process(
+        app, program.clone(), size, cfg, Location::Clone, backend.clone(), true,
+    )?;
+    let co = run_monolithic(&mut clone)?;
+    app.check(&clone, size)?;
+    Ok((po, co, result))
+}
+
+/// Run the CloneCloud column for one network from pre-collected profile
+/// trees: solve, and execute distributed (inline clone) if Offload.
+pub fn clonecloud_cell_from_trees(
+    app: &dyn App,
+    trees: &(ProfileTree, ProfileTree),
+    size: Size,
+    cfg: &Config,
+    net: &NetworkProfile,
+    backend: &Arc<dyn ComputeBackend>,
+    phone_ms: f64,
+) -> Result<CcCell> {
+    let (partition, _static_s, _solve_s) = partition_from_trees(app, trees, cfg, net)?;
+    run_cell(app, partition, size, cfg, net, backend, phone_ms)
+}
+
+/// Run the CloneCloud column for one network: partition, and execute
+/// distributed (inline clone) if the partition says Offload.
+pub fn clonecloud_cell(
+    app: &dyn App,
+    size: Size,
+    cfg: &Config,
+    net: &NetworkProfile,
+    backend: &Arc<dyn ComputeBackend>,
+    phone_ms: f64,
+) -> Result<CcCell> {
+    let (partition, _report) = partition_app(app, size, cfg, net, backend)?;
+    run_cell(app, partition, size, cfg, net, backend, phone_ms)
+}
+
+fn run_cell(
+    app: &dyn App,
+    partition: Partition,
+    size: Size,
+    cfg: &Config,
+    net: &NetworkProfile,
+    backend: &Arc<dyn ComputeBackend>,
+    phone_ms: f64,
+) -> Result<CcCell> {
+    if !partition.is_offload() {
+        return Ok(CcCell {
+            exec_ms: phone_ms,
+            label: "Local",
+            speedup: 1.0,
+            dist: None,
+        });
+    }
+    let program = app.program();
+    let (rewritten, _points) = rewrite_with_partition(&program, &partition)?;
+    let rewritten = Arc::new(rewritten);
+    let mut phone = build_process(
+        app, rewritten.clone(), size, cfg, Location::Mobile, backend.clone(), false,
+    )?;
+    let clone_proc = build_process(
+        app, rewritten.clone(), size, cfg, Location::Clone, backend.clone(), false,
+    )?;
+    let mut channel = InlineClone::new(clone_proc, cfg.costs.clone());
+    let out = run_distributed(&mut phone, &mut channel, net, &cfg.costs)?;
+    app.check(&phone, size)?;
+    Ok(CcCell {
+        exec_ms: out.virtual_ms,
+        label: "Offload",
+        speedup: phone_ms / out.virtual_ms,
+        dist: Some(out),
+    })
+}
+
+/// Produce one complete Table 1 row.
+pub fn table1_row(
+    app: &dyn App,
+    size: Size,
+    cfg: &Config,
+    backend: &Arc<dyn ComputeBackend>,
+) -> Result<Table1Row> {
+    let (po, co, result) = monolithic_pair(app, size, cfg, backend)?;
+    // Profile once; price the cost model per network (profiling is
+    // network-independent).
+    let program = app.program();
+    let (tm, tc, _rep) = profile_pair(app, &program, size, cfg, backend)?;
+    let trees = (tm, tc);
+    let threeg = clonecloud_cell_from_trees(
+        app, &trees, size, cfg, &NetworkProfile::threeg(), backend, po.virtual_ms,
+    )?;
+    let wifi = clonecloud_cell_from_trees(
+        app, &trees, size, cfg, &NetworkProfile::wifi(), backend, po.virtual_ms,
+    )?;
+    Ok(Table1Row {
+        app: {
+            // Stable short label.
+            match app.name() {
+                "virus" => "Virus scanning",
+                "image" => "Image search",
+                "behavior" => "Behavior profiling",
+                other => Box::leak(other.to_string().into_boxed_str()),
+            }
+        },
+        input: app.input_label(size),
+        phone_ms: po.virtual_ms,
+        clone_ms: co.virtual_ms,
+        max_speedup: po.virtual_ms / co.virtual_ms,
+        threeg,
+        wifi,
+        result,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::natives::RustCompute;
+    use crate::apps::VirusScan;
+
+    fn cfg() -> Config {
+        Config {
+            zygote_objects: 300,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn full_pipeline_on_small_virus_workload() {
+        let app = VirusScan;
+        let backend: Arc<dyn ComputeBackend> = Arc::new(RustCompute);
+        let cfg = cfg();
+        let (p_wifi, report) =
+            partition_app(&app, Size::Small, &cfg, &NetworkProfile::wifi(), &backend).unwrap();
+        // Paper Table 1: 100 KB virus scan stays LOCAL on both networks.
+        assert!(!p_wifi.is_offload(), "small scan stays local on wifi");
+        // Bytecode app methods only (natives are inline, §3.2):
+        // main, scan_all, scan_file.
+        assert!(report.methods_profiled >= 3);
+        assert!(report.profile_migration_s >= 0.0);
+        let (p_3g, _) =
+            partition_app(&app, Size::Small, &cfg, &NetworkProfile::threeg(), &backend).unwrap();
+        assert!(!p_3g.is_offload(), "small scan stays local on 3g");
+    }
+
+    #[test]
+    fn table1_row_small_is_consistent() {
+        let app = VirusScan;
+        let backend: Arc<dyn ComputeBackend> = Arc::new(RustCompute);
+        let row = table1_row(&app, Size::Small, &cfg(), &backend).unwrap();
+        assert!(row.max_speedup > 15.0, "clone much faster: {}", row.max_speedup);
+        assert_eq!(row.threeg.label, "Local");
+        assert!((row.threeg.exec_ms - row.phone_ms).abs() < 1e-6);
+        assert!(row.result.contains("infected"));
+    }
+}

@@ -1,0 +1,149 @@
+//! Artifact manifest: the contract between `aot.py` and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{CloneCloudError, Result};
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| CloneCloudError::runtime("tensor spec missing shape"))?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| CloneCloudError::runtime("bad shape element"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .as_str()
+            .ok_or_else(|| CloneCloudError::runtime("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-compiled model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub sha256: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            CloneCloudError::runtime(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = json::parse(text)?;
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| CloneCloudError::runtime("manifest must be an object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in obj {
+            let file = entry
+                .get("file")
+                .as_str()
+                .ok_or_else(|| CloneCloudError::runtime(format!("{name}: missing file")))?;
+            let inputs = entry
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| CloneCloudError::runtime(format!("{name}: missing inputs")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .get("outputs")
+                .as_arr()
+                .ok_or_else(|| CloneCloudError::runtime(format!("{name}: missing outputs")))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    sha256: entry.get("sha256").as_str().unwrap_or("").to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            CloneCloudError::runtime(format!("artifact '{name}' not in manifest"))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "scan_chunk": {
+        "file": "scan_chunk.hlo.txt",
+        "sha256": "ab",
+        "inputs": [
+          {"shape": [4096], "dtype": "float32"},
+          {"shape": [16, 128], "dtype": "float32"}
+        ],
+        "outputs": [
+          {"shape": [128], "dtype": "float32"},
+          {"shape": [], "dtype": "float32"}
+        ]
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        let s = m.get("scan_chunk").unwrap();
+        assert_eq!(s.file, PathBuf::from("/a/scan_chunk.hlo.txt"));
+        assert_eq!(s.inputs[1].shape, vec![16, 128]);
+        assert_eq!(s.inputs[1].numel(), 2048);
+        assert_eq!(s.outputs[1].shape, Vec::<usize>::new());
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("[]", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"x": {"file": "f"}}"#, Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes them from the
+//! L3 hot path.
+//!
+//! `python/compile/aot.py` lowers each L2 JAX model (which embeds the L1
+//! Pallas kernels) ONCE to HLO *text* (see DESIGN.md; the text parser
+//! reassigns instruction ids, dodging the 64-bit-id proto incompatibility
+//! between jax >= 0.5 and xla_extension 0.5.1). This module compiles each
+//! artifact on the PJRT CPU client at startup and caches one loaded
+//! executable per model — Python never runs on the request path.
+
+mod manifest;
+mod pjrt;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use pjrt::{PjrtCompute, PjrtRuntime};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::appvm::natives::{ComputeBackend, RustCompute};
+
+/// The best available backend: the PJRT artifacts if present (production
+/// path), else the pure-Rust reference (hermetic tests). The choice is
+/// printed so bench logs are unambiguous about what executed.
+pub fn default_backend(artifacts_dir: &Path) -> Arc<dyn ComputeBackend> {
+    match PjrtRuntime::load(artifacts_dir) {
+        Ok(rt) => {
+            eprintln!(
+                "[runtime] PJRT backend: {} ({} artifacts)",
+                rt.platform(),
+                rt.artifact_names().len()
+            );
+            Arc::new(PjrtCompute::new(Arc::new(rt)))
+        }
+        Err(e) => {
+            eprintln!("[runtime] falling back to rust-reference backend: {e}");
+            Arc::new(RustCompute)
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! PJRT client wrapper + the PJRT-backed [`ComputeBackend`].
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, with
+//! outputs unwrapped via `Literal::to_tuple()` (aot.py lowers with
+//! `return_tuple=True`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::appvm::natives::{shapes, ComputeBackend};
+use crate::error::{CloneCloudError, Result};
+
+use super::manifest::Manifest;
+
+fn rt_err(e: xla::Error) -> CloneCloudError {
+    CloneCloudError::runtime(format!("xla: {e}"))
+}
+
+/// A loaded PJRT runtime: one compiled executable per artifact.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    /// Executions per artifact (metrics; Mutex: ComputeBackend is &self).
+    calls: Mutex<HashMap<String, u64>>,
+}
+
+impl PjrtRuntime {
+    /// Load and compile every artifact in `dir` (expects `manifest.json`).
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(rt_err)?;
+        let mut exes = HashMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let proto =
+                xla::HloModuleProto::from_text_file(&spec.file).map_err(rt_err)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(rt_err)?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(PjrtRuntime {
+            client,
+            exes,
+            manifest,
+            calls: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.exes.keys().cloned().collect()
+    }
+
+    pub fn call_counts(&self) -> HashMap<String, u64> {
+        self.calls.lock().unwrap().clone()
+    }
+
+    /// Execute artifact `name` with f32 inputs (shapes validated against
+    /// the manifest). Returns the raw output literals.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<xla::Literal>> {
+        let spec = self.manifest.get(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(CloneCloudError::runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, tspec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if data.len() != tspec.numel() {
+                return Err(CloneCloudError::runtime(format!(
+                    "{name}: input {i} has {} elements, expected {} {:?}",
+                    data.len(),
+                    tspec.numel(),
+                    tspec.shape
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = tspec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims).map_err(rt_err)?);
+        }
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| CloneCloudError::runtime(format!("no executable '{name}'")))?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(rt_err)?;
+        let tuple = result[0][0].to_literal_sync().map_err(rt_err)?;
+        let outs = tuple.to_tuple().map_err(rt_err)?;
+        if outs.len() != spec.outputs.len() {
+            return Err(CloneCloudError::runtime(format!(
+                "{name}: got {} outputs, manifest says {}",
+                outs.len(),
+                spec.outputs.len()
+            )));
+        }
+        *self
+            .calls
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        Ok(outs)
+    }
+}
+
+fn to_f32(l: &xla::Literal, ctx: &str) -> Result<Vec<f32>> {
+    l.to_vec::<f32>()
+        .map_err(|e| CloneCloudError::runtime(format!("{ctx}: {e}")))
+}
+
+fn to_i32(l: &xla::Literal, ctx: &str) -> Result<Vec<i32>> {
+    l.to_vec::<i32>()
+        .map_err(|e| CloneCloudError::runtime(format!("{ctx}: {e}")))
+}
+
+/// The production [`ComputeBackend`]: every compute native dispatches to
+/// a compiled artifact. "Native everywhere" in the paper's sense — both
+/// the phone process and the clone process hold one of these.
+pub struct PjrtCompute {
+    rt: std::sync::Arc<PjrtRuntime>,
+}
+
+impl PjrtCompute {
+    pub fn new(rt: std::sync::Arc<PjrtRuntime>) -> PjrtCompute {
+        PjrtCompute { rt }
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.rt
+    }
+}
+
+impl ComputeBackend for PjrtCompute {
+    fn scan_chunk(&self, chunk: &[f32], sigs: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let outs = self.rt.execute_f32("scan_chunk", &[chunk, sigs])?;
+        let counts = to_f32(&outs[0], "scan_chunk.counts")?;
+        let total = to_f32(&outs[1], "scan_chunk.total")?[0];
+        Ok((counts, total))
+    }
+
+    fn face_detect(
+        &self,
+        img: &[f32],
+        filters: &[f32],
+        thresh: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let t = [thresh];
+        let outs = self.rt.execute_f32("face_detect", &[img, filters, &t])?;
+        let maxima = to_f32(&outs[0], "face_detect.maxima")?;
+        let counts = to_f32(&outs[1], "face_detect.counts")?;
+        let faces = to_f32(&outs[2], "face_detect.faces")?[0];
+        Ok((maxima, counts, faces))
+    }
+
+    fn categorize(&self, users: &[f32], cats: &[f32]) -> Result<(Vec<f32>, Vec<i32>, Vec<f32>)> {
+        let outs = self.rt.execute_f32("categorize", &[users, cats])?;
+        let scores = to_f32(&outs[0], "categorize.scores")?;
+        let best = to_i32(&outs[1], "categorize.best")?;
+        let best_score = to_f32(&outs[2], "categorize.best_score")?;
+        debug_assert_eq!(scores.len(), shapes::N_USERS * shapes::N_CATS);
+        Ok((scores, best, best_score))
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `artifacts/` (run `make artifacts` first); they
+    //! are skipped gracefully when artifacts are absent so `cargo test`
+    //! stays hermetic.
+    use super::*;
+    use crate::appvm::natives::RustCompute;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn runtime() -> Option<Arc<PjrtRuntime>> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(Arc::new(PjrtRuntime::load(&dir).expect("load artifacts")))
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let Some(rt) = runtime() else { return };
+        let mut names = rt.artifact_names();
+        names.sort();
+        assert_eq!(names, vec!["categorize", "face_detect", "scan_chunk"]);
+        assert_eq!(rt.platform().to_lowercase().contains("cpu"), true);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let Some(rt) = runtime() else { return };
+        let bad = vec![0f32; 7];
+        assert!(rt.execute_f32("scan_chunk", &[&bad, &bad]).is_err());
+    }
+
+    #[test]
+    fn pjrt_matches_rust_reference_scan() {
+        let Some(rt) = runtime() else { return };
+        let pjrt = PjrtCompute::new(rt);
+        let rust = RustCompute;
+        let mut rng = Rng::new(11);
+        let mut chunk = vec![0f32; shapes::CHUNK];
+        for v in chunk.iter_mut() {
+            *v = rng.below(256) as f32;
+        }
+        let mut sigs = vec![0f32; shapes::SIG_LEN * shapes::N_SIGS];
+        for v in sigs.iter_mut() {
+            *v = rng.below(256) as f32;
+        }
+        // Plant signature 9 at offset 100.
+        for k in 0..shapes::SIG_LEN {
+            chunk[100 + k] = sigs[k * shapes::N_SIGS + 9];
+        }
+        let (pc, pt) = pjrt.scan_chunk(&chunk, &sigs).unwrap();
+        let (rc, rt_) = rust.scan_chunk(&chunk, &sigs).unwrap();
+        assert_eq!(pt, rt_, "totals agree");
+        assert_eq!(pc, rc, "per-signature counts agree");
+        assert!(pt >= 1.0);
+    }
+
+    #[test]
+    fn pjrt_matches_rust_reference_categorize() {
+        let Some(rt) = runtime() else { return };
+        let pjrt = PjrtCompute::new(rt);
+        let rust = RustCompute;
+        let mut rng = Rng::new(13);
+        let mut users = vec![0f32; shapes::N_USERS * shapes::KDIM];
+        let mut cats = vec![0f32; shapes::KDIM * shapes::N_CATS];
+        for v in users.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        for v in cats.iter_mut() {
+            *v = rng.range_f32(-1.0, 1.0);
+        }
+        let (ps, pb, pbs) = pjrt.categorize(&users, &cats).unwrap();
+        let (rs, rb, rbs) = rust.categorize(&users, &cats).unwrap();
+        assert_eq!(pb, rb, "argmax agrees");
+        for (a, b) in ps.iter().zip(&rs) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        for (a, b) in pbs.iter().zip(&rbs) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pjrt_matches_rust_reference_face_detect() {
+        let Some(rt) = runtime() else { return };
+        let pjrt = PjrtCompute::new(rt);
+        let rust = RustCompute;
+        let mut rng = Rng::new(17);
+        let mut img = vec![0f32; shapes::IMG * shapes::IMG];
+        for v in img.iter_mut() {
+            *v = rng.range_f32(0.0, 1.0);
+        }
+        let mut filters = vec![0f32; 64 * shapes::N_FILTERS];
+        for f in 0..shapes::N_FILTERS {
+            let mut col = vec![0f32; 64];
+            let mut mean = 0.0;
+            for c in col.iter_mut() {
+                *c = rng.range_f32(-1.0, 1.0);
+                mean += *c;
+            }
+            mean /= 64.0;
+            for (k, c) in col.iter().enumerate() {
+                filters[k * shapes::N_FILTERS + f] = c - mean;
+            }
+        }
+        let (pm, pc, pf) = pjrt.face_detect(&img, &filters, 1.5).unwrap();
+        let (rm, rc, rf) = rust.face_detect(&img, &filters, 1.5).unwrap();
+        for (a, b) in pm.iter().zip(&rm) {
+            assert!((a - b).abs() < 1e-3, "maxima {a} vs {b}");
+        }
+        assert_eq!(pc, rc, "counts agree");
+        assert_eq!(pf, rf);
+    }
+}

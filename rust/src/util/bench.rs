@@ -1,0 +1,131 @@
+//! Bench harness substrate (the environment has no criterion crate).
+//!
+//! Provides warmup + timed iteration + summary statistics and a paper-table
+//! printer. Every `rust/benches/*.rs` target (`harness = false`) drives its
+//! measurements through this module so output formats are uniform and
+//! comparable across runs (EXPERIMENTS.md copies these tables verbatim).
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Measure wall-clock milliseconds of `f` over `iters` timed iterations
+/// after `warmup` untimed ones. Returns per-iteration samples.
+pub fn time_ms<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    samples
+}
+
+/// One named measurement with its summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+/// Run a named benchmark and print a one-line summary.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchResult {
+    let samples = time_ms(warmup, iters, f);
+    let summary = Summary::of(&samples);
+    println!(
+        "{name:<44} mean {:>10.3}ms  p50 {:>10.3}ms  p95 {:>10.3}ms  (n={})",
+        summary.mean, summary.p50, summary.p95, summary.n
+    );
+    BenchResult {
+        name: name.to_string(),
+        summary,
+    }
+}
+
+/// Fixed-width table printer for paper-style tables.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * (ncols - 1);
+        println!("\n=== {} ===", self.title);
+        let head: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:<w$}", h, w = widths[i]))
+            .collect();
+        println!("{}", head.join(" | "));
+        println!("{}", "-".repeat(total + 2));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("{}", line.join(" | "));
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value (no `std::hint::black_box`
+/// guarantees needed beyond read-volatile semantics).
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66; use it directly.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ms_returns_requested_samples() {
+        let s = time_ms(1, 5, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.len(), 5);
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_panics_on_wrong_row_len() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Network-byte-order (big-endian) wire I/O.
+//!
+//! The paper's capture format stores field values in network byte order so
+//! captures are portable across phone/clone processor architectures
+//! (§4.1). All migration wire formats in `migration/format.rs` and the
+//! node-manager protocol go through this reader/writer pair.
+
+use byteorder::{BigEndian, ByteOrder};
+
+use crate::error::{CloneCloudError, Result};
+
+/// Append-only big-endian writer.
+#[derive(Debug, Default, Clone)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        WireWriter {
+            buf: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn put_u16(&mut self, v: u16) {
+        let mut b = [0u8; 2];
+        BigEndian::write_u16(&mut b, v);
+        self.buf.extend_from_slice(&b);
+    }
+    pub fn put_u32(&mut self, v: u32) {
+        let mut b = [0u8; 4];
+        BigEndian::write_u32(&mut b, v);
+        self.buf.extend_from_slice(&b);
+    }
+    pub fn put_u64(&mut self, v: u64) {
+        let mut b = [0u8; 8];
+        BigEndian::write_u64(&mut b, v);
+        self.buf.extend_from_slice(&b);
+    }
+    pub fn put_i64(&mut self, v: i64) {
+        self.put_u64(v as u64);
+    }
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Big-endian cursor reader with explicit truncation errors.
+#[derive(Debug)]
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(CloneCloudError::Wire(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(BigEndian::read_u16(self.take(2)?))
+    }
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(BigEndian::read_u32(self.take(4)?))
+    }
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(BigEndian::read_u64(self.take(8)?))
+    }
+    pub fn get_i64(&mut self) -> Result<i64> {
+        Ok(self.get_u64()? as i64)
+    }
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b).map_err(|e| CloneCloudError::Wire(format!("bad utf-8: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = WireWriter::new();
+        w.put_u8(7);
+        w.put_u16(0xBEEF);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_i64(-42);
+        w.put_f64(3.25);
+        w.put_f32(-1.5);
+        w.put_bytes(b"abc");
+        w.put_str("m\u{e9}thode");
+        let buf = w.into_vec();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u16().unwrap(), 0xBEEF);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_i64().unwrap(), -42);
+        assert_eq!(r.get_f64().unwrap(), 3.25);
+        assert_eq!(r.get_f32().unwrap(), -1.5);
+        assert_eq!(r.get_bytes().unwrap(), b"abc");
+        assert_eq!(r.get_str().unwrap(), "m\u{e9}thode");
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn big_endian_on_the_wire() {
+        let mut w = WireWriter::new();
+        w.put_u32(1);
+        assert_eq!(w.as_slice(), &[0, 0, 0, 1], "network byte order");
+    }
+
+    #[test]
+    fn truncation_is_an_error() {
+        let mut r = WireReader::new(&[0, 0]);
+        assert!(r.get_u32().is_err());
+        let mut r2 = WireReader::new(&[0, 0, 0, 9, b'a']);
+        assert!(r2.get_bytes().is_err(), "length prefix beyond buffer");
+    }
+}

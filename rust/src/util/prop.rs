@@ -1,0 +1,128 @@
+//! Property-test harness substrate (the environment has no proptest crate).
+//!
+//! A minimal quickcheck-style loop: generate `cases` random inputs from a
+//! seeded [`Rng`], run the property, and on failure report the seed and
+//! case index so the exact failing input can be replayed deterministically.
+//! Used by the ILP-vs-exhaustive, mapping-table, and capture/merge
+//! round-trip property tests.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub seed: u64,
+    pub cases: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            seed: 0xC10E_C10D,
+            cases: 100,
+        }
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` against `cases` generated inputs. `gen` receives a fresh,
+/// per-case deterministic RNG. Panics with seed + case index on failure.
+pub fn forall<T, G, P>(cfg: PropConfig, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> CaseResult,
+    T: std::fmt::Debug,
+{
+    for case in 0..cfg.cases {
+        // Derive a distinct, reproducible stream per case.
+        let mut rng = Rng::new(cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (seed={:#x}, case={case}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_eq<A: PartialEq + std::fmt::Debug>(a: A, b: A, ctx: &str) -> CaseResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Approximate float equality for cost comparisons.
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> CaseResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            PropConfig { seed: 1, cases: 50 },
+            |rng| rng.range_i64(0, 100),
+            |&x| ensure(x >= 0 && x <= 100, "in range"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(
+            PropConfig { seed: 2, cases: 50 },
+            |rng| rng.range_i64(0, 100),
+            |&x| ensure(x < 90, "x too big"),
+        );
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut a_vals = Vec::new();
+        forall(
+            PropConfig { seed: 3, cases: 10 },
+            |rng| rng.next_u64(),
+            |&x| {
+                a_vals.push(x);
+                Ok(())
+            },
+        );
+        let mut b_vals = Vec::new();
+        forall(
+            PropConfig { seed: 3, cases: 10 },
+            |rng| rng.next_u64(),
+            |&x| {
+                b_vals.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(a_vals, b_vals);
+    }
+
+    #[test]
+    fn ensure_close_tolerates() {
+        assert!(ensure_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(ensure_close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! Simulated phone file system.
+//!
+//! The paper's virus scanner walks the phone file system (100 KB - 10 MB
+//! total) and the image-search app reads the photo directory. The node
+//! manager synchronizes this file system to the clone at provisioning
+//! time (§4: "application-unspecific node maintenance, including
+//! file-system synchronization"), which is what makes `fs.*` natives
+//! available on both devices ("native everywhere").
+
+use crate::util::rng::Rng;
+
+/// One file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimFile {
+    pub name: String,
+    pub bytes: Vec<u8>,
+}
+
+/// A flat simulated file system.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimFs {
+    files: Vec<SimFile>,
+}
+
+impl SimFs {
+    pub fn new() -> SimFs {
+        SimFs::default()
+    }
+
+    pub fn add(&mut self, name: &str, bytes: Vec<u8>) -> usize {
+        self.files.push(SimFile {
+            name: name.to_string(),
+            bytes,
+        });
+        self.files.len() - 1
+    }
+
+    pub fn count(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn file(&self, idx: usize) -> Option<&SimFile> {
+        self.files.get(idx)
+    }
+
+    pub fn size(&self, idx: usize) -> Option<usize> {
+        self.files.get(idx).map(|f| f.bytes.len())
+    }
+
+    /// Read up to `len` bytes at `offset` (short reads at EOF).
+    pub fn read(&self, idx: usize, offset: usize, len: usize) -> Option<&[u8]> {
+        let f = self.files.get(idx)?;
+        if offset > f.bytes.len() {
+            return Some(&[]);
+        }
+        let end = (offset + len).min(f.bytes.len());
+        Some(&f.bytes[offset..end])
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.files.iter().map(|f| f.bytes.len()).sum()
+    }
+
+    /// Byte-identical copy for clone synchronization.
+    pub fn synchronize(&self) -> SimFs {
+        self.clone()
+    }
+
+    /// Generate a file system totalling ~`total_bytes`, split into files
+    /// of roughly `file_size` bytes, with `sig_plants` virus signatures
+    /// planted at random offsets (each plant is `sig` bytes copied in).
+    pub fn generate_corpus(
+        rng: &mut Rng,
+        total_bytes: usize,
+        file_size: usize,
+        plants: &[Vec<u8>],
+    ) -> SimFs {
+        let mut fs = SimFs::new();
+        let nfiles = (total_bytes + file_size - 1) / file_size.max(1);
+        let mut remaining = total_bytes;
+        for i in 0..nfiles {
+            let sz = remaining.min(file_size);
+            remaining -= sz;
+            let mut bytes = vec![0u8; sz];
+            rng.fill_bytes(&mut bytes);
+            fs.add(&format!("file_{i:04}.bin"), bytes);
+        }
+        // Plant signatures.
+        for sig in plants {
+            if fs.count() == 0 || sig.is_empty() {
+                continue;
+            }
+            let fi = rng.index(fs.count());
+            let f = &mut fs.files[fi];
+            if f.bytes.len() >= sig.len() {
+                let off = rng.index(f.bytes.len() - sig.len() + 1);
+                f.bytes[off..off + sig.len()].copy_from_slice(sig);
+            }
+        }
+        fs
+    }
+
+    /// Generate a photo directory: `n` grayscale images of `side`^2 bytes,
+    /// `faces` of them containing a planted face pattern.
+    pub fn generate_gallery(
+        rng: &mut Rng,
+        n: usize,
+        side: usize,
+        face_pattern: &[u8],
+        faces: usize,
+    ) -> SimFs {
+        let mut fs = SimFs::new();
+        for i in 0..n {
+            let mut img = vec![0u8; side * side];
+            rng.fill_bytes(&mut img);
+            // Soften noise so planted faces stand out.
+            for px in img.iter_mut() {
+                *px /= 4;
+            }
+            if i < faces && face_pattern.len() <= img.len() {
+                let row = rng.index(side.saturating_sub(8).max(1));
+                let col = rng.index(side.saturating_sub(8).max(1));
+                for (k, &p) in face_pattern.iter().enumerate().take(64) {
+                    let (dr, dc) = (k / 8, k % 8);
+                    img[(row + dr) * side + col + dc] = p;
+                }
+            }
+            fs.add(&format!("img_{i:04}.gray"), img);
+        }
+        fs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_read_roundtrip() {
+        let mut fs = SimFs::new();
+        let i = fs.add("a.bin", vec![1, 2, 3, 4, 5]);
+        assert_eq!(fs.count(), 1);
+        assert_eq!(fs.size(i), Some(5));
+        assert_eq!(fs.read(i, 1, 3), Some(&[2u8, 3, 4][..]));
+        assert_eq!(fs.read(i, 4, 10), Some(&[5u8][..]), "short read at EOF");
+        assert_eq!(fs.read(i, 9, 1), Some(&[][..]), "past EOF");
+        assert_eq!(fs.read(9, 0, 1), None, "no such file");
+    }
+
+    #[test]
+    fn corpus_total_size_and_plants() {
+        let mut rng = Rng::new(1);
+        let sig = vec![0xAA; 16];
+        let fs = SimFs::generate_corpus(&mut rng, 100 * 1024, 32 * 1024, &[sig.clone()]);
+        assert_eq!(fs.total_bytes(), 100 * 1024);
+        assert_eq!(fs.count(), 4);
+        // The signature is present in exactly one file.
+        let hits: usize = (0..fs.count())
+            .map(|i| {
+                let b = &fs.file(i).unwrap().bytes;
+                b.windows(16).filter(|w| *w == &sig[..]).count()
+            })
+            .sum();
+        assert!(hits >= 1);
+    }
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let a = SimFs::generate_corpus(&mut Rng::new(7), 10_000, 4_096, &[]);
+        let b = SimFs::generate_corpus(&mut Rng::new(7), 10_000, 4_096, &[]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn synchronize_is_identical() {
+        let mut rng = Rng::new(2);
+        let fs = SimFs::generate_corpus(&mut rng, 5_000, 1_000, &[]);
+        assert_eq!(fs.synchronize(), fs);
+    }
+
+    #[test]
+    fn gallery_shapes() {
+        let mut rng = Rng::new(3);
+        let pat = vec![250u8; 64];
+        let fs = SimFs::generate_gallery(&mut rng, 5, 64, &pat, 2);
+        assert_eq!(fs.count(), 5);
+        assert!(fs.iter_sizes().all(|s| s == 64 * 64));
+    }
+
+    impl SimFs {
+        fn iter_sizes(&self) -> impl Iterator<Item = usize> + '_ {
+            self.files.iter().map(|f| f.bytes.len())
+        }
+    }
+}

@@ -1,0 +1,290 @@
+//! Cross-module integration tests: the full stack composed the way the
+//! benches and examples use it, on small workloads so `cargo test` stays
+//! fast. Uses the Rust-reference compute backend (hermetic); PJRT-vs-
+//! reference equivalence is covered in `runtime::pjrt` unit tests and
+//! `tests/pjrt_e2e.rs`.
+
+use std::sync::Arc;
+
+use clonecloud::apps::{
+    all_apps, build_process, read_static_int, App, BehaviorProfile, ImageSearch, Size, VirusScan,
+};
+use clonecloud::appvm::natives::{ComputeBackend, RustCompute};
+use clonecloud::config::{Config, NetworkProfile};
+use clonecloud::device::Location;
+use clonecloud::exec::{run_distributed, run_monolithic, InlineClone};
+use clonecloud::nodemanager::{CloneServer, NodeManager, TcpEndpoint, TcpTransport};
+use clonecloud::partitioner::{rewrite_with_partition, solver::Partition};
+use clonecloud::pipeline::{partition_from_trees, profile_pair, table1_row};
+use clonecloud::util::rng::Rng;
+
+fn cfg() -> Config {
+    Config {
+        zygote_objects: 300,
+        ..Config::default()
+    }
+}
+
+fn backend() -> Arc<dyn ComputeBackend> {
+    Arc::new(RustCompute)
+}
+
+/// Force a partition with the given migratory methods.
+fn forced_partition(program: &clonecloud::appvm::Program, names: &[(&str, &str)]) -> Partition {
+    let mut migrate = std::collections::BTreeSet::new();
+    for (c, m) in names {
+        migrate.insert(program.resolve(c, m).unwrap());
+    }
+    Partition {
+        migrate,
+        locations: Default::default(),
+        expected_us: 0.0,
+        local_us: 0.0,
+    }
+}
+
+/// Every app: a forced-offload distributed run returns exactly the
+/// monolithic result (the core semantic-preservation guarantee).
+#[test]
+fn distributed_equals_monolithic_for_all_apps() {
+    let cfg = cfg();
+    let cases: Vec<(Box<dyn App>, (&str, &str))> = vec![
+        (Box::new(VirusScan), ("Scanner", "scan_all")),
+        (Box::new(ImageSearch), ("Finder", "find_all")),
+        (Box::new(BehaviorProfile), ("Tracker", "profile")),
+    ];
+    for (app, point) in cases {
+        let program = app.program();
+        // Monolithic reference.
+        let mut mono = build_process(
+            app.as_ref(), program.clone(), Size::Small, &cfg,
+            Location::Mobile, backend(), false,
+        )
+        .unwrap();
+        run_monolithic(&mut mono).unwrap();
+        let mono_result = app.check(&mono, Size::Small).unwrap();
+
+        // Forced-offload distributed run.
+        let partition = forced_partition(&program, &[point]);
+        let (rewritten, _) = rewrite_with_partition(&program, &partition).unwrap();
+        let rewritten = Arc::new(rewritten);
+        let mut phone = build_process(
+            app.as_ref(), rewritten.clone(), Size::Small, &cfg,
+            Location::Mobile, backend(), false,
+        )
+        .unwrap();
+        let clone = build_process(
+            app.as_ref(), rewritten, Size::Small, &cfg,
+            Location::Clone, backend(), false,
+        )
+        .unwrap();
+        let mut channel = InlineClone::new(clone, cfg.costs.clone());
+        let out =
+            run_distributed(&mut phone, &mut channel, &NetworkProfile::wifi(), &cfg.costs)
+                .unwrap();
+        assert!(out.migrations >= 1, "{} actually migrated", app.name());
+        let dist_result = app.check(&phone, Size::Small).unwrap();
+        assert_eq!(mono_result, dist_result, "{}", app.name());
+    }
+}
+
+/// The partitioner's choices are stable and legal across all apps/sizes/
+/// networks, and the local/offload decision is monotone in network
+/// quality (WiFi never keeps local what 3G offloads).
+#[test]
+fn partition_choices_monotone_in_network_quality() {
+    let cfg = cfg();
+    for app in all_apps() {
+        for size in [Size::Small, Size::Medium] {
+            let program = app.program();
+            let (tm, tc, _) =
+                profile_pair(app.as_ref(), &program, size, &cfg, &backend()).unwrap();
+            let trees = (tm, tc);
+            let (p3g, _, _) =
+                partition_from_trees(app.as_ref(), &trees, &cfg, &NetworkProfile::threeg())
+                    .unwrap();
+            let (pwifi, _, _) =
+                partition_from_trees(app.as_ref(), &trees, &cfg, &NetworkProfile::wifi())
+                    .unwrap();
+            assert!(
+                !(p3g.is_offload() && !pwifi.is_offload()),
+                "{} {:?}: 3G offloads but WiFi doesn't",
+                app.name(),
+                size
+            );
+        }
+    }
+}
+
+/// Table 1 row invariants on the Small workloads.
+#[test]
+fn table1_row_invariants() {
+    let cfg = cfg();
+    for app in all_apps() {
+        let row = table1_row(app.as_ref(), Size::Small, &cfg, &backend()).unwrap();
+        assert!(row.phone_ms > row.clone_ms, "{}", app.name());
+        assert!(
+            row.max_speedup > 15.0 && row.max_speedup < 30.0,
+            "{}: {}",
+            app.name(),
+            row.max_speedup
+        );
+        for cell in [&row.threeg, &row.wifi] {
+            if cell.label == "Local" {
+                assert!((cell.exec_ms - row.phone_ms).abs() < 1e-9);
+            } else {
+                assert!(cell.exec_ms < row.phone_ms, "offload must win");
+            }
+        }
+    }
+}
+
+/// Distributed execution over a REAL TCP clone node with fs sync, for
+/// the virus scanner (forced offload so the test is size-independent).
+#[test]
+fn tcp_clone_node_end_to_end() {
+    let cfg = cfg();
+    let app = VirusScan;
+    let program = app.program();
+    let partition = forced_partition(&program, &[("Scanner", "scan_all")]);
+    let (rewritten, _) = rewrite_with_partition(&program, &partition).unwrap();
+    let rewritten = Arc::new(rewritten);
+
+    let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap();
+    let srv_prog = rewritten.clone();
+    let costs = cfg.costs.clone();
+    let server = std::thread::spawn(move || {
+        let t = ep.accept().unwrap();
+        CloneServer::new(
+            t,
+            srv_prog,
+            costs,
+            Box::new(clonecloud::appvm::NodeEnv::with_rust_compute),
+        )
+        .serve()
+        .unwrap()
+    });
+
+    let mut nm = NodeManager::new(TcpTransport::connect(&addr).unwrap());
+    nm.provision(&rewritten, cfg.zygote_objects, cfg.seed ^ 0x2760)
+        .unwrap();
+    let mut rng = Rng::new(cfg.seed);
+    nm.sync_fs(&app.make_fs(Size::Small, &mut rng)).unwrap();
+
+    let mut phone = build_process(
+        &app, rewritten.clone(), Size::Small, &cfg, Location::Mobile, backend(), false,
+    )
+    .unwrap();
+    let out =
+        run_distributed(&mut phone, &mut nm, &NetworkProfile::wifi(), &cfg.costs).unwrap();
+    assert_eq!(out.migrations, 1);
+    assert_eq!(read_static_int(&phone, "Scanner", "total"), Some(3));
+    nm.shutdown().unwrap();
+    let stats = server.join().unwrap();
+    assert_eq!(stats.migrations, 1);
+}
+
+/// Failure injection: a clone serving the WRONG executable is rejected
+/// at provision; migrating without provisioning errors cleanly.
+#[test]
+fn failure_injection_wrong_binary_and_no_provision() {
+    let cfg = cfg();
+    let app = VirusScan;
+    let program = app.program();
+    let other = ImageSearch.program();
+
+    let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+    let addr = ep.local_addr().unwrap();
+    let costs = cfg.costs.clone();
+    let server = std::thread::spawn(move || {
+        let t = ep.accept().unwrap();
+        // Clone has the image-search binary.
+        let _ = CloneServer::new(
+            t,
+            other,
+            costs,
+            Box::new(clonecloud::appvm::NodeEnv::with_rust_compute),
+        )
+        .serve();
+    });
+    let mut nm = NodeManager::new(TcpTransport::connect(&addr).unwrap());
+    let err = nm
+        .provision(&program, cfg.zygote_objects, 1)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("hash mismatch"), "{err}");
+    // Migrating without a provisioned process errors, not hangs.
+    let err2 = nm.migrate(vec![1, 2, 3]).unwrap_err().to_string();
+    assert!(err2.contains("provision"), "{err2}");
+    nm.shutdown().unwrap();
+    server.join().unwrap();
+}
+
+/// GC interacts correctly with migration: objects that die at the clone
+/// are collected on the phone after the merge (paper Fig. 8 orphans).
+#[test]
+fn orphans_collected_after_merge() {
+    use clonecloud::appvm::assembler::assemble;
+    use clonecloud::appvm::interp::{run_thread, NoHooks, RunExit};
+    use clonecloud::appvm::zygote::build_template;
+    use clonecloud::migration::Migrator;
+
+    const SRC: &str = r#"
+class G app
+  static keep
+  method main nargs=0 regs=4
+    const r0 4096
+    newarr r1 byte r0
+    puts G.keep r1
+    const r1 0
+    invokev G.work
+    retv
+  end
+  method work nargs=0 regs=4
+    ccstart 0
+    # drop the big array at the clone
+    const r0 0
+    newarr r1 byte r0
+    puts G.keep r1
+    ccstop 0
+    retv
+  end
+end
+"#;
+    let program = Arc::new(assemble(SRC).unwrap());
+    let template = build_template(&program, 50, 1);
+    let make = |loc| {
+        clonecloud::appvm::Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            match loc {
+                Location::Mobile => clonecloud::device::DeviceSpec::phone_g1(),
+                Location::Clone => clonecloud::device::DeviceSpec::clone_desktop(),
+            },
+            loc,
+            clonecloud::appvm::NodeEnv::with_rust_compute(clonecloud::vfs::SimFs::new()),
+        )
+    };
+    let mut phone = make(Location::Mobile);
+    let mut clone = make(Location::Clone);
+    let main = program.entry().unwrap();
+    let tid = phone.spawn_thread(main, &[]).unwrap();
+    let exit = run_thread(&mut phone, tid, &mut NoHooks, 100_000).unwrap();
+    assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+    let heap_before = phone.heap.len();
+
+    let m = Migrator::new(cfg().costs);
+    let (pkt, _) = m.migrate_out(&mut phone, tid).unwrap();
+    let (ctid, table, _) = m.receive_at_clone(&mut clone, &pkt).unwrap();
+    let exit = run_thread(&mut clone, ctid, &mut NoHooks, 100_000).unwrap();
+    assert!(matches!(exit, RunExit::ReintegrationPoint { .. }));
+    let (rp, _, dropped) = m.return_from_clone(&mut clone, ctid, table).unwrap();
+    assert!(dropped >= 1, "the 4 KiB array died at the clone");
+    m.merge_back(&mut phone, tid, &rp).unwrap();
+    let exit = run_thread(&mut phone, tid, &mut NoHooks, 100_000).unwrap();
+    assert!(matches!(exit, RunExit::Completed(_)));
+    let collected = phone.gc();
+    assert!(collected >= 1, "orphan collected");
+    assert!(phone.heap.len() <= heap_before);
+}

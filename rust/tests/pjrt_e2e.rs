@@ -1,0 +1,79 @@
+//! End-to-end over the REAL PJRT artifacts (skipped gracefully when
+//! `artifacts/` is absent): the full Table-1 cell path executing the AOT
+//! Pallas kernels from the Rust hot path, plus PJRT/reference
+//! equivalence at the app level.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use clonecloud::apps::{build_process, App, Size, VirusScan};
+use clonecloud::appvm::natives::{ComputeBackend, RustCompute};
+use clonecloud::config::Config;
+use clonecloud::device::Location;
+use clonecloud::exec::run_monolithic;
+use clonecloud::runtime::{PjrtCompute, PjrtRuntime};
+
+fn pjrt() -> Option<Arc<dyn ComputeBackend>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(PjrtCompute::new(Arc::new(
+        PjrtRuntime::load(&dir).expect("load artifacts"),
+    ))))
+}
+
+fn cfg() -> Config {
+    Config {
+        zygote_objects: 200,
+        ..Config::default()
+    }
+}
+
+/// The same app run must produce identical results (and identical
+/// virtual time) under the PJRT artifacts and the Rust reference — the
+/// kernels are semantically interchangeable.
+#[test]
+fn pjrt_and_reference_agree_at_app_level() {
+    let Some(pjrt) = pjrt() else { return };
+    let app = VirusScan;
+    let cfg = cfg();
+    let run = |backend: Arc<dyn ComputeBackend>| {
+        let mut p = build_process(
+            &app, app.program(), Size::Small, &cfg,
+            Location::Mobile, backend, false,
+        )
+        .unwrap();
+        let out = run_monolithic(&mut p).unwrap();
+        let msg = app.check(&p, Size::Small).unwrap();
+        (msg, out.virtual_ms)
+    };
+    let (pjrt_msg, pjrt_ms) = run(pjrt);
+    let (ref_msg, ref_ms) = run(Arc::new(RustCompute));
+    assert_eq!(pjrt_msg, ref_msg);
+    assert!((pjrt_ms - ref_ms).abs() < 1e-6, "virtual time is backend-independent");
+}
+
+/// The PJRT runtime reports per-artifact call counts — the scanner's
+/// chunk count must match the corpus size.
+#[test]
+fn pjrt_call_counts_match_workload() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Arc::new(PjrtRuntime::load(&dir).unwrap());
+    let backend: Arc<dyn ComputeBackend> = Arc::new(PjrtCompute::new(rt.clone()));
+    let app = VirusScan;
+    let cfg = cfg();
+    let mut p = build_process(
+        &app, app.program(), Size::Small, &cfg, Location::Mobile, backend, false,
+    )
+    .unwrap();
+    run_monolithic(&mut p).unwrap();
+    let calls = rt.call_counts();
+    // 100 KB = 3 x 32 KiB files (9 chunk offsets each at stride 4081)
+    // + 1 x 4 KiB file (2 offsets: 0 and 4081 < 4096).
+    assert_eq!(calls.get("scan_chunk"), Some(&29));
+}

@@ -1,0 +1,231 @@
+//! Property tests over the coordinator's core invariants (our prop
+//! harness standing in for proptest — DESIGN.md §2).
+
+use std::sync::Arc;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::interp::{run_thread, NoHooks, RunExit};
+use clonecloud::appvm::natives::NodeEnv;
+use clonecloud::appvm::zygote::build_template;
+use clonecloud::appvm::{ObjBody, Process, Program, Value};
+use clonecloud::config::CostParams;
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::migration::{
+    capture_thread, CaptureOptions, CapturePacket, Direction, Migrator,
+};
+use clonecloud::util::prop::{ensure, ensure_eq, forall, PropConfig};
+use clonecloud::util::rng::Rng;
+use clonecloud::vfs::SimFs;
+
+/// Random-heap capture → wire → decode is lossless, regardless of graph
+/// shape (chains, cycles, shared structure, arrays).
+#[test]
+fn prop_capture_roundtrips_random_heaps() {
+    const SRC: &str = "class H app\n  method main nargs=0 regs=8\n    ccstart 0\n    ccstop 0\n    retv\n  end\nend\n";
+    let program: Arc<Program> = Arc::new(assemble(SRC).unwrap());
+    let main = program.entry().unwrap();
+
+    forall(
+        PropConfig { seed: 0xCAFE, cases: 40 },
+        |rng: &mut Rng| {
+            let n_objs = 1 + rng.index(30);
+            let edges: Vec<(usize, usize)> = (0..n_objs * 2)
+                .map(|_| (rng.index(n_objs), rng.index(n_objs)))
+                .collect();
+            let bytes = rng.index(500);
+            (n_objs, edges, bytes, rng.next_u64())
+        },
+        |(n_objs, edges, nbytes, seed)| {
+            let mut p = Process::new(
+                program.clone(),
+                DeviceSpec::phone_g1(),
+                Location::Mobile,
+                NodeEnv::with_rust_compute(SimFs::new()),
+            );
+            let mut rng = Rng::new(*seed);
+            // Build a random object graph.
+            let ids: Vec<_> = (0..*n_objs)
+                .map(|_| p.heap.alloc_ref_array(p.array_class, 4))
+                .collect();
+            for (a, b) in edges {
+                let target = ids[*b];
+                if let ObjBody::RefArray(v) = &mut p.heap.get_mut(ids[*a]).unwrap().body {
+                    let slot = rng.index(4);
+                    v[slot] = Value::Ref(target);
+                }
+            }
+            let ballast = p
+                .heap
+                .alloc_byte_array(p.array_class, (0..*nbytes).map(|i| i as u8).collect());
+            let tid = p.spawn_thread(main, &[]).unwrap();
+            {
+                let f = p.thread_mut(tid).unwrap().current_frame_mut().unwrap();
+                f.regs[0] = Value::Ref(ids[0]);
+                f.regs[1] = Value::Ref(ballast);
+                f.regs[2] = Value::Int(-7);
+                f.regs[3] = Value::Float(2.5);
+            }
+            let (packet, stats) =
+                capture_thread(&p, tid, Direction::Forward, None, CaptureOptions::default())
+                    .map_err(|e| e.to_string())?;
+            let decoded = CapturePacket::decode(&packet.encode()).map_err(|e| e.to_string())?;
+            ensure_eq(decoded, packet.clone(), "wire roundtrip")?;
+            ensure(
+                stats.objects <= n_objs + 1,
+                "capture bounded by live objects",
+            )?;
+            clonecloud::migration::validate_packet(&packet).map_err(|e| e.to_string())
+        },
+    );
+}
+
+/// Migration round trips preserve program semantics for random loop
+/// bounds: distributed result == local result, always.
+#[test]
+fn prop_migration_preserves_semantics_random_inputs() {
+    const SRC: &str = r#"
+class W app
+  static n
+  static out
+  method main nargs=0 regs=4
+    invoke r0 W.work
+    puts W.out r0
+    retv
+  end
+  method work nargs=0 regs=8
+    ccstart 0
+    gets r0 W.n
+    const r1 0
+    const r2 0
+  loop:
+    ifge r2 r0 @done
+    add r1 r1 r2
+    const r3 1
+    add r2 r2 r3
+    goto @loop
+  done:
+    ccstop 0
+    ret r1
+  end
+end
+"#;
+    let program: Arc<Program> = Arc::new(assemble(SRC).unwrap());
+    let main = program.entry().unwrap();
+    let template = build_template(&program, 100, 3);
+    let n_class = program.class_id("W").unwrap();
+
+    forall(
+        PropConfig { seed: 0xD15C0, cases: 30 },
+        |rng: &mut Rng| rng.range_i64(0, 2000),
+        |&n| {
+            let make = |loc: Location| {
+                let dev = match loc {
+                    Location::Mobile => DeviceSpec::phone_g1(),
+                    Location::Clone => DeviceSpec::clone_desktop(),
+                };
+                let mut p = Process::fork_from_zygote(
+                    program.clone(),
+                    &template,
+                    dev,
+                    loc,
+                    NodeEnv::with_rust_compute(SimFs::new()),
+                );
+                p.statics[n_class.0 as usize][0] = Value::Int(n);
+                p
+            };
+            // Local reference.
+            let mut local = make(Location::Mobile);
+            let tid = local.spawn_thread(main, &[]).unwrap();
+            loop {
+                match run_thread(&mut local, tid, &mut NoHooks, u64::MAX).unwrap() {
+                    RunExit::Completed(_) => break,
+                    RunExit::MigrationPoint { .. } | RunExit::ReintegrationPoint { .. } => {}
+                    other => return Err(format!("{other:?}")),
+                }
+            }
+            let want = local.statics[n_class.0 as usize][1];
+
+            // Migrated run.
+            let mut phone = make(Location::Mobile);
+            let mut clone = make(Location::Clone);
+            let tid = phone.spawn_thread(main, &[]).unwrap();
+            let m = Migrator::new(CostParams::default());
+            loop {
+                match run_thread(&mut phone, tid, &mut NoHooks, u64::MAX).unwrap() {
+                    RunExit::Completed(_) => break,
+                    RunExit::ReintegrationPoint { .. } => {}
+                    RunExit::MigrationPoint { .. } => {
+                        let (pkt, _) = m.migrate_out(&mut phone, tid).map_err(|e| e.to_string())?;
+                        let (ctid, table, _) =
+                            m.receive_at_clone(&mut clone, &pkt).map_err(|e| e.to_string())?;
+                        loop {
+                            match run_thread(&mut clone, ctid, &mut NoHooks, u64::MAX).unwrap() {
+                                RunExit::ReintegrationPoint { .. } => break,
+                                RunExit::MigrationPoint { .. } => {}
+                                other => return Err(format!("clone: {other:?}")),
+                            }
+                        }
+                        let (rp, _, _) = m
+                            .return_from_clone(&mut clone, ctid, table)
+                            .map_err(|e| e.to_string())?;
+                        m.merge_back(&mut phone, tid, &rp).map_err(|e| e.to_string())?;
+                    }
+                    other => return Err(format!("{other:?}")),
+                }
+            }
+            let got = phone.statics[n_class.0 as usize][1];
+            ensure_eq(got, want, "sum 0..n")
+        },
+    );
+}
+
+/// The interpreter is deterministic: same program + same seed => same
+/// metrics, clock, and heap size, across repeated runs.
+#[test]
+fn prop_vm_determinism() {
+    const SRC: &str = r#"
+class D app
+  static acc
+  method main nargs=0 regs=8
+    const r0 0
+    const r1 500
+    constf r2 0.0
+  loop:
+    ifge r0 r1 @done
+    i2f r3 r0
+    fmul r4 r3 r3
+    fadd r2 r2 r4
+    const r5 1
+    add r0 r0 r5
+    goto @loop
+  done:
+    puts D.acc r2
+    retv
+  end
+end
+"#;
+    let program: Arc<Program> = Arc::new(assemble(SRC).unwrap());
+    forall(
+        PropConfig { seed: 0xDE7, cases: 10 },
+        |rng: &mut Rng| rng.next_u64(),
+        |&seed| {
+            let run = || {
+                let template = build_template(&program, 200, seed);
+                let mut p = Process::fork_from_zygote(
+                    program.clone(),
+                    &template,
+                    DeviceSpec::phone_g1(),
+                    Location::Mobile,
+                    NodeEnv::with_rust_compute(SimFs::new()),
+                );
+                let tid = p.spawn_thread(program.entry().unwrap(), &[]).unwrap();
+                match run_thread(&mut p, tid, &mut NoHooks, u64::MAX).unwrap() {
+                    RunExit::Completed(_) => {}
+                    other => panic!("{other:?}"),
+                }
+                (p.metrics.instrs, p.clock.now_us().to_bits(), p.heap.len())
+            };
+            ensure_eq(run(), run(), "deterministic execution")
+        },
+    );
+}
