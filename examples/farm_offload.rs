@@ -1,0 +1,144 @@
+//! Farm offload: 32 concurrent phone sessions against one clone farm.
+//!
+//! Each simulated phone has its own file system (distinct contents), runs
+//! the partitioned synthetic workload under CloneCloud through a
+//! [`FarmClone`] session, and checks its merged result **bit-identically**
+//! against its own monolithic run. The farm serves all 32 phones from a
+//! small worker pool with warm-pool provisioning, affinity placement, and
+//! a bounded admission window — the demo prints the aggregate stats.
+//!
+//!     cargo run --release --example farm_offload
+
+use std::sync::Arc;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::natives::NodeEnv;
+use clonecloud::appvm::process::Process;
+use clonecloud::appvm::zygote::build_template;
+use clonecloud::config::{CostParams, NetworkProfile};
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::exec::{run_distributed, run_monolithic};
+use clonecloud::farm::{
+    synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
+};
+use clonecloud::metrics::MetricsSnapshot;
+use clonecloud::util::rng::Rng;
+use clonecloud::vfs::SimFs;
+
+const PHONES: u64 = 32;
+const ITERS: i64 = 30_000;
+const ZYGOTE_OBJECTS: usize = 4_000;
+const ZYGOTE_SEED: u64 = 0xFA12;
+
+fn phone_fs(phone: u64) -> SimFs {
+    let mut bytes = vec![0u8; 64];
+    Rng::new(0xF5 ^ phone).fill_bytes(&mut bytes);
+    let mut fs = SimFs::new();
+    fs.add("data.bin", bytes);
+    fs
+}
+
+fn phone_process(
+    program: &Arc<clonecloud::appvm::Program>,
+    template: &clonecloud::appvm::Heap,
+    fs: SimFs,
+) -> Process {
+    Process::fork_from_zygote(
+        program.clone(),
+        template,
+        DeviceSpec::phone_g1(),
+        Location::Mobile,
+        NodeEnv::with_rust_compute(fs),
+    )
+}
+
+fn main() {
+    let program = Arc::new(assemble(&synthetic_offload_src(ITERS)).expect("assemble"));
+    clonecloud::appvm::verifier::verify_program(&program).expect("verify");
+    let main_m = program.entry().unwrap();
+
+    let farm = CloneFarm::start(
+        program.clone(),
+        FarmConfig {
+            workers: 4,
+            warm_per_worker: 2,
+            queue_depth: 8, // < PHONES: admission backpressure is exercised
+            policy: PlacementPolicy::Affinity,
+            zygote_objects: ZYGOTE_OBJECTS,
+            zygote_seed: ZYGOTE_SEED,
+            fuel: 2_000_000_000,
+        },
+        CostParams::default(),
+        Arc::new(NodeEnv::with_rust_compute),
+    )
+    .expect("farm start");
+    let handle = farm.handle();
+    // Phones boot the identical template independently (§4.3).
+    let template = Arc::new(build_template(&program, ZYGOTE_OBJECTS, ZYGOTE_SEED));
+
+    println!("== farm_offload: {PHONES} phones, 4 workers, affinity, queue 8 ==");
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for phone in 0..PHONES {
+        let program = program.clone();
+        let template = template.clone();
+        let fs = phone_fs(phone);
+        let mut session = handle.session(phone, fs.synchronize());
+        joins.push(std::thread::spawn(move || {
+            // Monolithic reference on this phone's own data.
+            let mut mono = phone_process(&program, &template, fs.synchronize());
+            run_monolithic(&mut mono).expect("monolithic");
+            let expected = mono.statics[main_m.class.0 as usize][0]
+                .as_int()
+                .expect("mono result");
+
+            // Distributed run through the farm.
+            let mut p = phone_process(&program, &template, fs);
+            let out = run_distributed(
+                &mut p,
+                &mut session,
+                &NetworkProfile::wifi(),
+                &CostParams::default(),
+            )
+            .expect("distributed");
+            let got = p.statics[main_m.class.0 as usize][0]
+                .as_int()
+                .expect("merged result");
+            assert_eq!(
+                got, expected,
+                "phone {phone}: farm result must be bit-identical to monolithic"
+            );
+            session.close();
+            (out.migrations, session.stats.admission_wait_ms)
+        }));
+    }
+
+    let mut migrations = 0;
+    let mut admission_ms = 0.0;
+    for j in joins {
+        let (m, wait) = j.join().expect("phone session");
+        migrations += m;
+        admission_ms += wait;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    assert_eq!(migrations, PHONES as usize, "one migration per phone");
+
+    let stats = farm.shutdown();
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.sessions_closed, PHONES);
+    println!(
+        "all {PHONES} sessions completed with correct merged results ✓  \
+         ({wall_s:.3}s wall, {:.1} sessions/s)",
+        PHONES as f64 / wall_s
+    );
+    println!(
+        "pool: {} hits / {} cold forks ({:.0}% hit), admission wait {:.1}ms total",
+        stats.pool_hits,
+        stats.pool_misses,
+        stats.pool_hit_rate() * 100.0,
+        admission_ms,
+    );
+    let mut m = MetricsSnapshot::default();
+    m.absorb_farm(&stats);
+    print!("{}", m.render());
+}

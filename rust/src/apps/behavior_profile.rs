@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use once_cell::sync::Lazy;
+use crate::util::lazy::Lazy;
 
 use crate::appvm::assembler::assemble;
 use crate::appvm::natives::shapes;

@@ -231,9 +231,8 @@ pub struct NativeRegistry {
 impl NativeRegistry {
     /// The standard DroidVM native set.
     pub fn standard() -> &'static NativeRegistry {
-        use once_cell::sync::Lazy;
-        static REG: Lazy<NativeRegistry> = Lazy::new(NativeRegistry::build);
-        &REG
+        static REG: std::sync::OnceLock<NativeRegistry> = std::sync::OnceLock::new();
+        REG.get_or_init(NativeRegistry::build)
     }
 
     fn build() -> NativeRegistry {

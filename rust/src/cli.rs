@@ -6,6 +6,8 @@
 //! clonecloud run --app image --size large --network wifi [--mode local|clonecloud]
 //! clonecloud table1
 //! clonecloud clone-serve --listen 127.0.0.1:7077 --app virus
+//! clonecloud farm --phones 32 --workers 4 --policy affinity
+//! clonecloud farm --listen 127.0.0.1:7077 --app virus --workers 8
 //! clonecloud inspect --app behavior
 //! clonecloud help
 //! ```
@@ -19,7 +21,11 @@ use crate::config::{Config, NetworkProfile};
 use crate::device::Location;
 use crate::error::{CloneCloudError, Result};
 use crate::exec::{run_distributed, run_monolithic, InlineClone};
-use crate::nodemanager::{CloneServer, TcpEndpoint};
+use crate::farm::{
+    synthetic_expected, synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
+};
+use crate::metrics::MetricsSnapshot;
+use crate::nodemanager::{serve_farm, CloneServer, TcpEndpoint};
 use crate::partitioner::{rewrite_with_partition, Cfg, PartitionDb, PartitionEntry};
 use crate::pipeline::{partition_app, table1_row};
 use crate::runtime::default_backend;
@@ -35,7 +41,9 @@ COMMANDS:
   partition    profile + solve a partition for an app under a network
   run          run an app (local or CloneCloud) and report times
   table1       regenerate the paper's Table 1
-  clone-serve  run a clone node on a TCP listener
+  clone-serve  run a clone node on a TCP listener (one phone)
+  farm         run the multi-tenant clone farm: in-proc demo, or a TCP
+               serve-many gateway with --listen
   inspect      dump an app's program, CFG, and constraint sets
   help         this text
 
@@ -46,7 +54,15 @@ OPTIONS:
   --mode <auto|local|clonecloud> run mode              (default: auto)
   --config <file.json>           config overrides
   --db <file.json>               partition database path
-  --listen <addr:port>           clone-serve bind address
+  --listen <addr:port>           clone-serve / farm bind address
+
+FARM OPTIONS (defaults from the config 'farm' section):
+  --workers <n>                  clone worker threads
+  --warm <n>                     pre-forked processes per worker
+  --queue <n>                    admission window (in-flight bound)
+  --policy <round-robin|least-loaded|affinity>
+  --phones <n>                   demo mode: concurrent phone sessions
+  --iters <n>                    demo mode: clone-side work per session
 ";
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
@@ -260,6 +276,145 @@ fn cmd_clone_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
 }
 
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> Result<usize> {
+    match flags.get(key) {
+        Some(s) => s
+            .parse()
+            .map_err(|_| CloneCloudError::Config(format!("--{key} must be a number, got '{s}'"))),
+        None => Ok(default),
+    }
+}
+
+fn cmd_farm(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    let mut params = cfg.farm.clone();
+    params.workers = flag_usize(flags, "workers", params.workers)?;
+    params.warm_per_worker = flag_usize(flags, "warm", params.warm_per_worker)?;
+    params.queue_depth = flag_usize(flags, "queue", params.queue_depth)?;
+    if let Some(p) = flags.get("policy") {
+        PlacementPolicy::parse(p)?; // validate now, fail fast
+        params.policy = p.clone();
+    }
+    let farm_cfg = FarmConfig::from_params(&params, cfg.zygote_objects, cfg.seed)?;
+
+    if let Some(addr) = flags.get("listen") {
+        // Serve-many gateway for a real app over TCP.
+        let app = app_by_name(flags.get("app").map(String::as_str).unwrap_or("virus"))?;
+        let program = app.program();
+        let artifacts = cfg.artifacts_dir.clone();
+        let farm = CloneFarm::start(
+            program,
+            farm_cfg,
+            cfg.costs.clone(),
+            Arc::new(move |fs| {
+                crate::appvm::NodeEnv::new(fs, default_backend(Path::new(&artifacts)))
+            }),
+        )?;
+        let ep = TcpEndpoint::bind(addr)?;
+        println!(
+            "clone farm listening on {} for app '{}' ({} workers, warm {}, queue {}, policy {})",
+            ep.local_addr()?,
+            app.name(),
+            params.workers,
+            params.warm_per_worker,
+            params.queue_depth,
+            params.policy,
+        );
+        let timeout = if params.read_timeout_ms > 0 {
+            Some(std::time::Duration::from_millis(params.read_timeout_ms))
+        } else {
+            None
+        };
+        return serve_farm(&ep, &farm.handle(), timeout, None);
+    }
+
+    // In-proc demo: N concurrent phones against the synthetic workload.
+    let phones = flag_usize(flags, "phones", 16)?;
+    let iters = flag_usize(flags, "iters", 50_000)? as i64;
+    let program = Arc::new(crate::appvm::assembler::assemble(&synthetic_offload_src(
+        iters,
+    ))?);
+    crate::appvm::verifier::verify_program(&program)?;
+    let farm = CloneFarm::start(
+        program.clone(),
+        farm_cfg,
+        cfg.costs.clone(),
+        Arc::new(crate::appvm::NodeEnv::with_rust_compute),
+    )?;
+    let handle = farm.handle();
+    let template = Arc::new(crate::appvm::zygote::build_template(
+        &program,
+        cfg.zygote_objects,
+        cfg.seed,
+    ));
+
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for phone in 0..phones as u64 {
+        let program = program.clone();
+        let template = template.clone();
+        let costs = cfg.costs.clone();
+        let mut fs = crate::vfs::SimFs::new();
+        let mut bytes = vec![0u8; 64];
+        crate::util::rng::Rng::new(cfg.seed ^ phone).fill_bytes(&mut bytes);
+        fs.add("data.bin", bytes);
+        let expected = synthetic_expected(&fs, iters);
+        let mut session = handle.session(phone, fs.synchronize());
+        joins.push(std::thread::spawn(move || -> Result<()> {
+            let mut p = crate::appvm::Process::fork_from_zygote(
+                program.clone(),
+                &template,
+                crate::device::DeviceSpec::phone_g1(),
+                Location::Mobile,
+                crate::appvm::NodeEnv::with_rust_compute(fs),
+            );
+            run_distributed(&mut p, &mut session, &NetworkProfile::wifi(), &costs)?;
+            let main = program.entry()?;
+            let got = p.statics[main.class.0 as usize][0].as_int();
+            if got != Some(expected) {
+                return Err(CloneCloudError::migration(format!(
+                    "phone {phone}: merged {got:?}, expected {expected}"
+                )));
+            }
+            session.close();
+            Ok(())
+        }));
+    }
+    let mut failures = 0;
+    for j in joins {
+        match j.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                failures += 1;
+                eprintln!("session failed: {e}");
+            }
+            Err(_) => {
+                failures += 1;
+                eprintln!("session panicked");
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let stats = farm.shutdown();
+    println!(
+        "farm demo: {phones} phones over {} workers (policy {}) in {wall_s:.3}s \
+         = {:.1} sessions/s, pool hit rate {:.0}%, {failures} failure(s)",
+        stats.workers,
+        stats.policy,
+        phones as f64 / wall_s,
+        stats.pool_hit_rate() * 100.0,
+    );
+    let mut m = MetricsSnapshot::default();
+    m.absorb_farm(&stats);
+    print!("{}", m.render());
+    if failures > 0 {
+        return Err(CloneCloudError::migration(format!(
+            "{failures} farm session(s) failed"
+        )));
+    }
+    Ok(())
+}
+
 fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
     let app = app_by_name(flags.get("app").map(String::as_str).unwrap_or("virus"))?;
     let program = app.program();
@@ -318,6 +473,7 @@ pub fn main(args: &[String]) -> i32 {
         "run" => cmd_run(&flags),
         "table1" => cmd_table1(&flags),
         "clone-serve" => cmd_clone_serve(&flags),
+        "farm" => cmd_farm(&flags),
         "inspect" => cmd_inspect(&flags),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -365,6 +521,33 @@ mod tests {
         assert_eq!(main(&["help".into()]), 0);
         assert_eq!(main(&["wat".into()]), 2);
         assert_eq!(main(&[]), 2);
+    }
+
+    #[test]
+    fn farm_demo_runs_small() {
+        assert_eq!(
+            main(&[
+                "farm".into(),
+                "--phones".into(),
+                "2".into(),
+                "--workers".into(),
+                "1".into(),
+                "--warm".into(),
+                "1".into(),
+                "--iters".into(),
+                "1000".into(),
+            ]),
+            0
+        );
+    }
+
+    #[test]
+    fn farm_rejects_bad_flags() {
+        assert_eq!(main(&["farm".into(), "--workers".into(), "x".into()]), 1);
+        assert_eq!(
+            main(&["farm".into(), "--policy".into(), "psychic".into()]),
+            1
+        );
     }
 
     #[test]

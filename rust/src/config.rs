@@ -113,6 +113,35 @@ impl Default for CostParams {
     }
 }
 
+/// Clone-farm tunables (the `farm` config section; see `farm` module).
+/// The policy is kept as a string here and validated by
+/// `farm::PlacementPolicy::parse` when a farm is actually started.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FarmParams {
+    /// Clone worker threads (the pool size M).
+    pub workers: usize,
+    /// Pre-forked clone processes kept warm per worker.
+    pub warm_per_worker: usize,
+    /// Farm-wide bound on in-flight migrations (admission window).
+    pub queue_depth: usize,
+    /// Placement policy: "round-robin" | "least-loaded" | "affinity".
+    pub policy: String,
+    /// Gateway connection read timeout in ms (0 = no timeout).
+    pub read_timeout_ms: u64,
+}
+
+impl Default for FarmParams {
+    fn default() -> Self {
+        FarmParams {
+            workers: 4,
+            warm_per_worker: 2,
+            queue_depth: 64,
+            policy: "affinity".into(),
+            read_timeout_ms: 0,
+        }
+    }
+}
+
 /// Top-level system configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -126,6 +155,8 @@ pub struct Config {
     pub zygote_objects: usize,
     /// Seed for all workload generation.
     pub seed: u64,
+    /// Clone-farm parameters (multi-tenant serving).
+    pub farm: FarmParams,
 }
 
 impl Default for Config {
@@ -137,6 +168,7 @@ impl Default for Config {
             artifacts_dir: "artifacts".into(),
             zygote_objects: 40_000,
             seed: 0xC10E,
+            farm: FarmParams::default(),
         }
     }
 }
@@ -211,6 +243,49 @@ impl Config {
                         }
                     }
                 }
+                "farm" => {
+                    let f = val
+                        .as_obj()
+                        .ok_or_else(|| CloneCloudError::Config("farm must be object".into()))?;
+                    for (fk, fv) in f {
+                        match fk.as_str() {
+                            "workers" => {
+                                cfg.farm.workers = fv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("farm.workers".into())
+                                })?
+                            }
+                            "warm_per_worker" => {
+                                cfg.farm.warm_per_worker = fv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("farm.warm_per_worker".into())
+                                })?
+                            }
+                            "queue_depth" => {
+                                cfg.farm.queue_depth = fv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("farm.queue_depth".into())
+                                })?
+                            }
+                            "policy" => {
+                                cfg.farm.policy = fv
+                                    .as_str()
+                                    .ok_or_else(|| {
+                                        CloneCloudError::Config("farm.policy".into())
+                                    })?
+                                    .to_string()
+                            }
+                            "read_timeout_ms" => {
+                                cfg.farm.read_timeout_ms = fv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("farm.read_timeout_ms".into())
+                                })?
+                                    as u64
+                            }
+                            other => {
+                                return Err(CloneCloudError::Config(format!(
+                                    "unknown farm key '{other}'"
+                                )))
+                            }
+                        }
+                    }
+                }
                 other => {
                     return Err(CloneCloudError::Config(format!(
                         "unknown config key '{other}'"
@@ -262,6 +337,22 @@ mod tests {
         assert_eq!(cfg.costs.instr_us, 0.5);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.clone.cpu_factor, 1.0, "untouched default");
+    }
+
+    #[test]
+    fn farm_section_overrides_and_validates() {
+        let v = json::parse(
+            r#"{"farm": {"workers": 8, "queue_depth": 16, "policy": "least-loaded"}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.farm.workers, 8);
+        assert_eq!(cfg.farm.queue_depth, 16);
+        assert_eq!(cfg.farm.policy, "least-loaded");
+        assert_eq!(cfg.farm.warm_per_worker, 2, "untouched default");
+
+        let bad = json::parse(r#"{"farm": {"wrokers": 8}}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err(), "typo'd farm key rejected");
     }
 
     #[test]

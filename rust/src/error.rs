@@ -1,59 +1,95 @@
 //! Error taxonomy for the CloneCloud stack.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline build environment has
+//! no proc-macro crates (thiserror), so the derive is spelled out.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors surfaced by the library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum CloneCloudError {
     /// Bytecode loading / assembling problems.
-    #[error("program error: {0}")]
     Program(String),
 
     /// Bytecode verifier rejections.
-    #[error("verifier error in {method}: {message}")]
     Verify { method: String, message: String },
 
     /// Runtime faults inside the application VM (null deref, bad index...).
-    #[error("vm fault: {0}")]
     VmFault(String),
 
     /// Native method failures.
-    #[error("native error in {name}: {message}")]
     Native { name: String, message: String },
 
     /// Migration capture/merge failures.
-    #[error("migration error: {0}")]
     Migration(String),
 
     /// Wire-format decode failures.
-    #[error("wire error: {0}")]
     Wire(String),
 
     /// Node-manager / transport failures.
-    #[error("transport error: {0}")]
     Transport(String),
 
     /// Partitioner failures (analysis, profiling, solving).
-    #[error("partitioner error: {0}")]
     Partitioner(String),
 
     /// ILP solver failures (infeasible, unbounded, iteration limit).
-    #[error("solver error: {0}")]
     Solver(String),
 
     /// PJRT runtime failures.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Configuration problems.
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
+    Json(crate::util::json::JsonError),
+}
+
+impl fmt::Display for CloneCloudError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CloneCloudError::Program(m) => write!(f, "program error: {m}"),
+            CloneCloudError::Verify { method, message } => {
+                write!(f, "verifier error in {method}: {message}")
+            }
+            CloneCloudError::VmFault(m) => write!(f, "vm fault: {m}"),
+            CloneCloudError::Native { name, message } => {
+                write!(f, "native error in {name}: {message}")
+            }
+            CloneCloudError::Migration(m) => write!(f, "migration error: {m}"),
+            CloneCloudError::Wire(m) => write!(f, "wire error: {m}"),
+            CloneCloudError::Transport(m) => write!(f, "transport error: {m}"),
+            CloneCloudError::Partitioner(m) => write!(f, "partitioner error: {m}"),
+            CloneCloudError::Solver(m) => write!(f, "solver error: {m}"),
+            CloneCloudError::Runtime(m) => write!(f, "runtime error: {m}"),
+            CloneCloudError::Config(m) => write!(f, "config error: {m}"),
+            CloneCloudError::Io(e) => write!(f, "io error: {e}"),
+            CloneCloudError::Json(e) => write!(f, "json error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CloneCloudError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CloneCloudError::Io(e) => Some(e),
+            CloneCloudError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CloneCloudError {
+    fn from(e: std::io::Error) -> Self {
+        CloneCloudError::Io(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for CloneCloudError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        CloneCloudError::Json(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, CloneCloudError>;
@@ -73,5 +109,42 @@ impl CloneCloudError {
     }
     pub fn runtime(msg: impl Into<String>) -> Self {
         CloneCloudError::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive_format() {
+        assert_eq!(
+            CloneCloudError::Transport("peer hung up".into()).to_string(),
+            "transport error: peer hung up"
+        );
+        assert_eq!(
+            CloneCloudError::Verify {
+                method: "A.main".into(),
+                message: "bad reg".into()
+            }
+            .to_string(),
+            "verifier error in A.main: bad reg"
+        );
+        assert_eq!(
+            CloneCloudError::Native {
+                name: "fs.read".into(),
+                message: "no file".into()
+            }
+            .to_string(),
+            "native error in fs.read: no file"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: CloneCloudError =
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

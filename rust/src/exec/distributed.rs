@@ -7,12 +7,14 @@
 //! The clone executes to `CcStop`, the reverse capture rides the
 //! downlink, and the merge resumes the thread on the phone.
 //!
-//! Two clone channels: [`InlineClone`] (clone process owned by the
-//! caller — deterministic, used by benches) and any
+//! Three clone channels: [`InlineClone`] (clone process owned by the
+//! caller — deterministic, used by benches), any
 //! `nodemanager::NodeManager` over a real transport (TCP loopback in the
-//! examples). Virtual time: the phone clock carries suspend + capture +
-//! uplink; the clone continues from the received timestamp; the phone
-//! then adopts the clone's finish time plus downlink + merge.
+//! examples), and [`FarmClone`] (a session on the multi-tenant clone
+//! farm, `crate::farm` — N phones multiplexed over M workers). Virtual
+//! time: the phone clock carries suspend + capture + uplink; the clone
+//! continues from the received timestamp; the phone then adopts the
+//! clone's finish time plus downlink + merge.
 
 use crate::appvm::interp::{run_thread, NoHooks, RunExit};
 use crate::appvm::process::Process;
@@ -21,6 +23,8 @@ use crate::config::{CostParams, NetworkProfile};
 use crate::error::{CloneCloudError, Result};
 use crate::migration::{CapturePacket, MigrationPhases, Migrator};
 use crate::nodemanager::{NodeManager, TransferBytes, Transport};
+
+pub use crate::farm::FarmClone;
 
 /// Where the offloaded span runs.
 pub trait CloneChannel {

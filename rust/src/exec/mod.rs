@@ -10,5 +10,5 @@
 pub mod distributed;
 pub mod monolithic;
 
-pub use distributed::{run_distributed, DistOutcome, InlineClone};
+pub use distributed::{run_distributed, DistOutcome, FarmClone, InlineClone};
 pub use monolithic::{run_monolithic, run_monolithic_hooked, MonoOutcome};

@@ -1,0 +1,315 @@
+//! The clone farm: M workers serving N concurrent phone sessions.
+//!
+//! `CloneFarm::start` builds the deterministic Zygote template **once**,
+//! spawns the worker threads (each pre-warming its own pool in
+//! parallel), and hands out [`FarmHandle`]s. A handle is `Clone + Send`:
+//! gateways and phone threads open sessions from it concurrently.
+//!
+//! Lifecycle: `start` → any number of `session`s → `shutdown` (drains
+//! workers and returns the final stats). Dropping the farm without
+//! `shutdown` also stops the workers (their queues disconnect), but
+//! skips the join.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::appvm::zygote::build_template;
+use crate::appvm::Program;
+use crate::config::{CostParams, FarmParams};
+use crate::error::{CloneCloudError, Result};
+use crate::nodemanager::program_hash;
+use crate::vfs::SimFs;
+
+use super::admission::Admission;
+use super::policy::{PlacementPolicy, Scheduler};
+use super::pool::PoolStats;
+use super::session::FarmClone;
+use super::worker::{worker_main, FarmMsg};
+use super::EnvFactory;
+
+/// Runtime configuration for one farm instance.
+#[derive(Debug, Clone)]
+pub struct FarmConfig {
+    /// Clone workers (pool size M): one OS thread + warm pool each.
+    pub workers: usize,
+    /// Pre-forked processes kept ready per worker.
+    pub warm_per_worker: usize,
+    /// Farm-wide bound on in-flight migrations (admission window).
+    pub queue_depth: usize,
+    pub policy: PlacementPolicy,
+    /// Zygote template parameters — must match the phones' (§4.3
+    /// deterministic naming is what makes the diff optimization sound).
+    pub zygote_objects: usize,
+    pub zygote_seed: u64,
+    /// Interpreter fuel per offloaded span.
+    pub fuel: u64,
+}
+
+impl Default for FarmConfig {
+    fn default() -> Self {
+        FarmConfig {
+            workers: 4,
+            warm_per_worker: 2,
+            queue_depth: 64,
+            policy: PlacementPolicy::Affinity,
+            zygote_objects: 40_000,
+            zygote_seed: 0xC10E,
+            fuel: 2_000_000_000,
+        }
+    }
+}
+
+impl FarmConfig {
+    /// Combine the `config` file's farm section with the run's zygote
+    /// parameters.
+    pub fn from_params(
+        params: &FarmParams,
+        zygote_objects: usize,
+        zygote_seed: u64,
+    ) -> Result<FarmConfig> {
+        Ok(FarmConfig {
+            workers: params.workers,
+            warm_per_worker: params.warm_per_worker,
+            queue_depth: params.queue_depth,
+            policy: PlacementPolicy::parse(&params.policy)?,
+            zygote_objects,
+            zygote_seed,
+            ..FarmConfig::default()
+        })
+    }
+}
+
+/// Per-worker counters.
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    pub jobs: AtomicU64,
+    pub busy_us: AtomicU64,
+}
+
+/// State shared by sessions, workers, and handles.
+pub(crate) struct FarmShared {
+    pub scheduler: Scheduler,
+    pub admission: Admission,
+    pub pool: Arc<PoolStats>,
+    pub worker_stats: Vec<WorkerStats>,
+    pub program_hash: u64,
+    pub zygote_objects: usize,
+    pub zygote_seed: u64,
+    pub next_session: AtomicU64,
+    pub sessions_opened: AtomicU64,
+    pub sessions_closed: AtomicU64,
+    pub migrations: AtomicU64,
+    pub errors: AtomicU64,
+    pub bytes_up: AtomicU64,
+    pub bytes_down: AtomicU64,
+    pub instrs_executed: AtomicU64,
+    pub admission_wait_us: AtomicU64,
+    pub queue_wait_us: AtomicU64,
+}
+
+/// A point-in-time snapshot of farm counters.
+#[derive(Debug, Clone, Default)]
+pub struct FarmStats {
+    pub workers: usize,
+    pub policy: &'static str,
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+    pub migrations: u64,
+    pub errors: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub instrs_executed: u64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    pub pool_refills: u64,
+    /// Total time sessions spent blocked at admission.
+    pub admission_wait_ms: f64,
+    /// Total time jobs waited in worker queues after admission.
+    pub queue_wait_ms: f64,
+    pub worker_jobs: Vec<u64>,
+    pub worker_busy_ms: Vec<f64>,
+}
+
+impl FarmStats {
+    /// Fraction of session provisions served from the warm pool.
+    pub fn pool_hit_rate(&self) -> f64 {
+        let total = self.pool_hits + self.pool_misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.pool_hits as f64 / total as f64
+    }
+}
+
+/// A cloneable, sendable handle for opening sessions on a running farm.
+#[derive(Clone)]
+pub struct FarmHandle {
+    shared: Arc<FarmShared>,
+    senders: Vec<Sender<FarmMsg>>,
+}
+
+impl FarmHandle {
+    /// Open a session for `phone` with its synchronized file system.
+    /// Phone ids identify clone slots: concurrent sessions must use
+    /// distinct ids (or use [`FarmHandle::session_auto`]).
+    pub fn session(&self, phone: u64, fs: SimFs) -> FarmClone {
+        self.shared.sessions_opened.fetch_add(1, Ordering::Relaxed);
+        FarmClone::new(self.shared.clone(), self.senders.clone(), phone, fs)
+    }
+
+    /// Open a session with a farm-assigned unique phone id (the high bit
+    /// is set so auto ids never collide with caller-chosen small ids).
+    pub fn session_auto(&self, fs: SimFs) -> FarmClone {
+        let id = self.shared.next_session.fetch_add(1, Ordering::Relaxed) | (1 << 63);
+        self.session(id, fs)
+    }
+
+    /// Identity of the program the farm serves.
+    pub fn program_hash(&self) -> u64 {
+        self.shared.program_hash
+    }
+
+    /// The farm's Zygote template parameters (objects, seed).
+    pub fn zygote_params(&self) -> (usize, u64) {
+        (self.shared.zygote_objects, self.shared.zygote_seed)
+    }
+
+    pub fn stats(&self) -> FarmStats {
+        let s = &self.shared;
+        FarmStats {
+            workers: s.scheduler.workers(),
+            policy: s.scheduler.policy().name(),
+            sessions_opened: s.sessions_opened.load(Ordering::Relaxed),
+            sessions_closed: s.sessions_closed.load(Ordering::Relaxed),
+            migrations: s.migrations.load(Ordering::Relaxed),
+            errors: s.errors.load(Ordering::Relaxed),
+            bytes_up: s.bytes_up.load(Ordering::Relaxed),
+            bytes_down: s.bytes_down.load(Ordering::Relaxed),
+            instrs_executed: s.instrs_executed.load(Ordering::Relaxed),
+            pool_hits: s.pool.hits.load(Ordering::Relaxed),
+            pool_misses: s.pool.misses.load(Ordering::Relaxed),
+            pool_refills: s.pool.refills.load(Ordering::Relaxed),
+            admission_wait_ms: s.admission_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
+            queue_wait_ms: s.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
+            worker_jobs: s
+                .worker_stats
+                .iter()
+                .map(|w| w.jobs.load(Ordering::Relaxed))
+                .collect(),
+            worker_busy_ms: s
+                .worker_stats
+                .iter()
+                .map(|w| w.busy_us.load(Ordering::Relaxed) as f64 / 1e3)
+                .collect(),
+        }
+    }
+}
+
+/// A running clone farm.
+pub struct CloneFarm {
+    handle: FarmHandle,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl CloneFarm {
+    /// Boot the farm: build the Zygote template once, then spawn the
+    /// workers (each warms its pool on its own thread, in parallel).
+    pub fn start(
+        program: Arc<Program>,
+        cfg: FarmConfig,
+        costs: CostParams,
+        make_env: EnvFactory,
+    ) -> Result<CloneFarm> {
+        if cfg.workers == 0 {
+            return Err(CloneCloudError::Config(
+                "farm needs at least one worker".into(),
+            ));
+        }
+        let template = Arc::new(build_template(&program, cfg.zygote_objects, cfg.zygote_seed));
+        let shared = Arc::new(FarmShared {
+            scheduler: Scheduler::new(cfg.policy, cfg.workers),
+            admission: Admission::new(cfg.queue_depth),
+            pool: Arc::new(PoolStats::default()),
+            worker_stats: (0..cfg.workers).map(|_| WorkerStats::default()).collect(),
+            program_hash: program_hash(&program),
+            zygote_objects: cfg.zygote_objects,
+            zygote_seed: cfg.zygote_seed,
+            next_session: AtomicU64::new(0),
+            sessions_opened: AtomicU64::new(0),
+            sessions_closed: AtomicU64::new(0),
+            migrations: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            bytes_up: AtomicU64::new(0),
+            bytes_down: AtomicU64::new(0),
+            instrs_executed: AtomicU64::new(0),
+            admission_wait_us: AtomicU64::new(0),
+            queue_wait_us: AtomicU64::new(0),
+        });
+
+        let mut senders = Vec::with_capacity(cfg.workers);
+        let mut threads = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let (tx, rx) = mpsc::channel();
+            senders.push(tx);
+            let program = program.clone();
+            let template = template.clone();
+            let costs = costs.clone();
+            let make_env = make_env.clone();
+            let shared = shared.clone();
+            let warm = cfg.warm_per_worker;
+            let fuel = cfg.fuel;
+            let jh = std::thread::Builder::new()
+                .name(format!("farm-worker-{i}"))
+                .spawn(move || {
+                    // The pool (and through it every clone process and
+                    // compute backend) is built on the worker's own
+                    // thread — `Process` never crosses threads.
+                    let pool = super::pool::WarmPool::new(
+                        program,
+                        template,
+                        costs.clone(),
+                        make_env,
+                        warm,
+                        shared.pool.clone(),
+                    );
+                    worker_main(i, rx, pool, shared, costs, fuel);
+                })
+                .map_err(|e| {
+                    CloneCloudError::Runtime(format!("spawn farm worker {i}: {e}"))
+                })?;
+            threads.push(jh);
+        }
+        Ok(CloneFarm {
+            handle: FarmHandle { shared, senders },
+            threads,
+        })
+    }
+
+    pub fn handle(&self) -> FarmHandle {
+        self.handle.clone()
+    }
+
+    /// Convenience for `handle().session(...)`.
+    pub fn session(&self, phone: u64, fs: SimFs) -> FarmClone {
+        self.handle.session(phone, fs)
+    }
+
+    pub fn stats(&self) -> FarmStats {
+        self.handle.stats()
+    }
+
+    /// Stop the workers and return the final counters. Call after all
+    /// sessions finished; jobs still queued behind the shutdown marker
+    /// are dropped (their sessions see a transport error).
+    pub fn shutdown(mut self) -> FarmStats {
+        for s in &self.handle.senders {
+            let _ = s.send(FarmMsg::Shutdown);
+        }
+        for jh in self.threads.drain(..) {
+            let _ = jh.join();
+        }
+        self.handle.stats()
+    }
+}

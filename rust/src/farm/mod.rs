@@ -1,0 +1,292 @@
+//! CloneFarm: a multi-tenant clone-pool scheduler (beyond the paper).
+//!
+//! The paper's runtime pairs one phone with one clone over one channel
+//! (`nodemanager::CloneServer`). This subsystem is the fleet layer that
+//! ThinkAir-style elasticity asks for: **N** concurrent phone sessions
+//! served by **M** clone workers.
+//!
+//! Pieces (one module each):
+//! * [`pool`] — warm pool of processes pre-forked from the deterministic
+//!   Zygote template; provisioning amortized off the critical path
+//!   (pool-hit vs cold-fork is the headline metric).
+//! * [`policy`] — pluggable placement: round-robin, least-loaded, and
+//!   affinity-by-phone (keeps a phone's provisioned clone slot — heap,
+//!   synchronized fs — warm across repeat migrations).
+//! * [`admission`] — bounded in-flight window with backpressure, so the
+//!   farm queues predictably instead of collapsing under load.
+//! * [`worker`] — one OS thread per clone worker; owns the non-`Send`
+//!   processes and backends; execution core shared with `CloneServer`
+//!   (`nodemanager::execute_migration`).
+//! * [`session`] — [`FarmClone`], the phone-side handle implementing
+//!   `exec::CloneChannel`; many sessions multiplex over the worker pool.
+//! * [`farm`] — [`CloneFarm`] orchestration, [`FarmHandle`]s, and the
+//!   [`FarmStats`] snapshot.
+//!
+//! The network front door (accept loop speaking the existing
+//! `protocol::Msg` wire protocol) lives in `nodemanager::gateway`.
+
+pub mod admission;
+#[allow(clippy::module_inception)]
+pub mod farm;
+pub mod policy;
+pub mod pool;
+pub mod session;
+pub(crate) mod worker;
+
+pub use admission::Admission;
+pub use farm::{CloneFarm, FarmConfig, FarmHandle, FarmStats, WorkerStats};
+pub use policy::{PlacementPolicy, Scheduler};
+pub use pool::{PoolStats, WarmPool};
+pub use session::{FarmClone, SessionStats};
+
+use crate::appvm::natives::NodeEnv;
+use crate::vfs::SimFs;
+
+/// Factory for per-worker node environments. Invoked on the worker's own
+/// OS thread, so the compute backend (PJRT handles are thread-local) is
+/// created where it is used — the reason this is a factory and not a
+/// shared environment.
+pub type EnvFactory = std::sync::Arc<dyn Fn(SimFs) -> NodeEnv + Send + Sync>;
+
+/// Assembly for the synthetic farm workload used by the `farm` CLI demo,
+/// `examples/farm_offload.rs`, and `benches/farm_throughput.rs`: read the
+/// phone's file at the clone (exercises fs sync), byte-sum it, then spin
+/// `iters` loop iterations of clone-side compute. Result: byte sum +
+/// `iters`, checkable bit-exactly against a monolithic run.
+pub fn synthetic_offload_src(iters: i64) -> String {
+    format!(
+        r#"
+class FarmWork app
+  static out
+  method main nargs=0 regs=4
+    invoke r0 FarmWork.work
+    puts FarmWork.out r0
+    retv
+  end
+  method work nargs=0 regs=12
+    ccstart 0
+    const r0 0
+    const r1 0
+    const r2 64
+    invoke r3 FarmWork.read r0 r1 r2
+    len r4 r3
+    const r5 0
+    const r6 0
+  bytes:
+    ifge r5 r4 @bdone
+    aget r7 r3 r5
+    add r6 r6 r7
+    const r8 1
+    add r5 r5 r8
+    goto @bytes
+  bdone:
+    const r5 0
+    const r8 1
+    const r9 {iters}
+  spin:
+    ifge r5 r9 @sdone
+    add r6 r6 r8
+    add r5 r5 r8
+    goto @spin
+  sdone:
+    ccstop 0
+    ret r6
+  end
+  method read nargs=3 regs=3 native=fs.read
+end
+"#
+    )
+}
+
+/// The value `synthetic_offload_src` computes for a given phone fs.
+pub fn synthetic_expected(fs: &SimFs, iters: i64) -> i64 {
+    let bytes = fs.read(0, 0, 64).unwrap_or(&[]);
+    bytes.iter().map(|&b| b as i64).sum::<i64>() + iters
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::process::Process;
+    use crate::appvm::zygote::build_template;
+    use crate::config::{CostParams, NetworkProfile};
+    use crate::device::{DeviceSpec, Location};
+    use crate::exec::run_distributed;
+    use crate::util::rng::Rng;
+
+    const ITERS: i64 = 5_000;
+    const ZY_OBJECTS: usize = 300;
+    const ZY_SEED: u64 = 7;
+
+    fn farm_program() -> Arc<crate::appvm::Program> {
+        let p = Arc::new(assemble(&synthetic_offload_src(ITERS)).unwrap());
+        crate::appvm::verifier::verify_program(&p).unwrap();
+        p
+    }
+
+    fn phone_fs(phone: u64) -> SimFs {
+        let mut bytes = vec![0u8; 64];
+        Rng::new(phone + 1).fill_bytes(&mut bytes);
+        let mut fs = SimFs::new();
+        fs.add("data.bin", bytes);
+        fs
+    }
+
+    /// N concurrent phone sessions over M workers: every phone's merged
+    /// result must be bit-identical to its own monolithic expectation.
+    #[test]
+    fn concurrent_sessions_merge_correct_results() {
+        let program = farm_program();
+        let cfg = FarmConfig {
+            workers: 2,
+            warm_per_worker: 1,
+            queue_depth: 4,
+            policy: PlacementPolicy::RoundRobin,
+            zygote_objects: ZY_OBJECTS,
+            zygote_seed: ZY_SEED,
+            fuel: 100_000_000,
+        };
+        let farm = CloneFarm::start(
+            program.clone(),
+            cfg,
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        let handle = farm.handle();
+        let template = Arc::new(build_template(&program, ZY_OBJECTS, ZY_SEED));
+
+        let mut joins = Vec::new();
+        for phone in 0..6u64 {
+            let program = program.clone();
+            let template = template.clone();
+            let fs = phone_fs(phone);
+            let expected = synthetic_expected(&fs, ITERS);
+            let mut session = handle.session(phone, fs.clone());
+            joins.push(std::thread::spawn(move || {
+                let mut p = Process::fork_from_zygote(
+                    program.clone(),
+                    &template,
+                    DeviceSpec::phone_g1(),
+                    Location::Mobile,
+                    NodeEnv::with_rust_compute(fs),
+                );
+                let out = run_distributed(
+                    &mut p,
+                    &mut session,
+                    &NetworkProfile::wifi(),
+                    &CostParams::default(),
+                )
+                .unwrap();
+                assert_eq!(out.migrations, 1);
+                let main = program.entry().unwrap();
+                let got = p.statics[main.class.0 as usize][0].as_int().unwrap();
+                assert_eq!(got, expected, "phone {phone} merged result");
+                session.close();
+                session.stats.clone()
+            }));
+        }
+        for j in joins {
+            let stats = j.join().unwrap();
+            assert_eq!(stats.migrations, 1);
+            assert_eq!(stats.errors, 0);
+        }
+
+        let stats = farm.shutdown();
+        assert_eq!(stats.sessions_opened, 6);
+        assert_eq!(stats.sessions_closed, 6);
+        assert_eq!(stats.migrations, 6);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.pool_hits + stats.pool_misses, 6, "6 provisions");
+        assert!(stats.pool_hits >= 2, "warm pool served the first takes");
+        assert!(stats.instrs_executed > ITERS as u64 * 6);
+        assert_eq!(stats.worker_jobs.iter().sum::<u64>(), 6);
+    }
+
+    /// Repeat migrations from one phone under affinity reuse one clone
+    /// slot: exactly one provision however many roundtrips happen.
+    #[test]
+    fn affinity_reuses_the_phone_slot() {
+        let program = farm_program();
+        let cfg = FarmConfig {
+            workers: 3,
+            warm_per_worker: 1,
+            queue_depth: 4,
+            policy: PlacementPolicy::Affinity,
+            zygote_objects: ZY_OBJECTS,
+            zygote_seed: ZY_SEED,
+            fuel: 100_000_000,
+        };
+        let farm = CloneFarm::start(
+            program.clone(),
+            cfg,
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        let template = Arc::new(build_template(&program, ZY_OBJECTS, ZY_SEED));
+        let fs = phone_fs(42);
+        let expected = synthetic_expected(&fs, ITERS);
+        let mut session = farm.session(42, fs.clone());
+
+        for _ in 0..3 {
+            let mut p = Process::fork_from_zygote(
+                program.clone(),
+                &template,
+                DeviceSpec::phone_g1(),
+                Location::Mobile,
+                NodeEnv::with_rust_compute(fs.synchronize()),
+            );
+            run_distributed(
+                &mut p,
+                &mut session,
+                &NetworkProfile::wifi(),
+                &CostParams::default(),
+            )
+            .unwrap();
+            let main = program.entry().unwrap();
+            assert_eq!(
+                p.statics[main.class.0 as usize][0].as_int(),
+                Some(expected)
+            );
+        }
+        session.close();
+        drop(session);
+        let stats = farm.shutdown();
+        assert_eq!(stats.migrations, 3);
+        assert_eq!(
+            stats.pool_hits + stats.pool_misses,
+            1,
+            "one provision for three migrations"
+        );
+    }
+
+    /// A closed session refuses further roundtrips.
+    #[test]
+    fn closed_session_errors() {
+        let program = farm_program();
+        let farm = CloneFarm::start(
+            program,
+            FarmConfig {
+                workers: 1,
+                warm_per_worker: 0,
+                queue_depth: 1,
+                policy: PlacementPolicy::RoundRobin,
+                zygote_objects: 50,
+                zygote_seed: 1,
+                fuel: 1_000_000,
+            },
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        let mut session = farm.session(1, SimFs::new());
+        session.close();
+        let err = session.roundtrip_bytes(vec![]).unwrap_err().to_string();
+        assert!(err.contains("closed"), "{err}");
+        farm.shutdown();
+    }
+}

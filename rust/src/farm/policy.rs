@@ -1,0 +1,172 @@
+//! Placement policies and the scheduler that applies them.
+//!
+//! The scheduler answers one question per admitted migration: *which
+//! clone worker runs this phone's offloaded span?* Three policies:
+//!
+//! * **round-robin** — rotate over workers; maximal spread, ignores both
+//!   load and locality.
+//! * **least-loaded** — pick the worker with the fewest outstanding jobs
+//!   (queued + executing); best latency under skewed session lengths.
+//! * **affinity** — hash the phone id onto a worker so every migration
+//!   from one phone lands on the same worker. The worker then reuses the
+//!   phone's provisioned clone process, so its synchronized file system
+//!   and heap stay warm across repeat migrations (the MID/CID mapping
+//!   machinery re-instantiates per roundtrip, but the Zygote template
+//!   fork and fs sync are paid once per phone instead of once per
+//!   (phone, worker) pair).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::error::{CloneCloudError, Result};
+
+/// How sessions map onto clone workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    RoundRobin,
+    LeastLoaded,
+    Affinity,
+}
+
+impl PlacementPolicy {
+    /// Parse a config-file / CLI policy name.
+    pub fn parse(s: &str) -> Result<PlacementPolicy> {
+        match s {
+            "round-robin" | "rr" => Ok(PlacementPolicy::RoundRobin),
+            "least-loaded" | "ll" => Ok(PlacementPolicy::LeastLoaded),
+            "affinity" => Ok(PlacementPolicy::Affinity),
+            other => Err(CloneCloudError::Config(format!(
+                "unknown placement policy '{other}' (round-robin|least-loaded|affinity)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round-robin",
+            PlacementPolicy::LeastLoaded => "least-loaded",
+            PlacementPolicy::Affinity => "affinity",
+        }
+    }
+}
+
+/// SplitMix64 finalizer: uncorrelates consecutive phone ids so affinity
+/// placement spreads phones evenly over a small worker count.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Thread-safe placement state shared by all sessions of a farm.
+pub struct Scheduler {
+    policy: PlacementPolicy,
+    /// Round-robin cursor.
+    next: AtomicUsize,
+    /// Outstanding jobs per worker (incremented at dispatch, decremented
+    /// when the worker finishes the job).
+    inflight: Vec<AtomicUsize>,
+}
+
+impl Scheduler {
+    pub fn new(policy: PlacementPolicy, workers: usize) -> Scheduler {
+        assert!(workers >= 1, "scheduler needs at least one worker");
+        Scheduler {
+            policy,
+            next: AtomicUsize::new(0),
+            inflight: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Choose the worker for one migration from `phone`.
+    pub fn pick(&self, phone: u64) -> usize {
+        let n = self.inflight.len();
+        match self.policy {
+            PlacementPolicy::RoundRobin => self.next.fetch_add(1, Ordering::Relaxed) % n,
+            PlacementPolicy::Affinity => (mix64(phone) % n as u64) as usize,
+            PlacementPolicy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = usize::MAX;
+                for (i, c) in self.inflight.iter().enumerate() {
+                    let load = c.load(Ordering::Relaxed);
+                    if load < best_load {
+                        best = i;
+                        best_load = load;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    pub fn job_started(&self, worker: usize) {
+        self.inflight[worker].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn job_finished(&self, worker: usize) {
+        self.inflight[worker].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn inflight(&self, worker: usize) -> usize {
+        self.inflight[worker].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            PlacementPolicy::parse("affinity").unwrap(),
+            PlacementPolicy::Affinity
+        );
+        assert_eq!(
+            PlacementPolicy::parse("rr").unwrap(),
+            PlacementPolicy::RoundRobin
+        );
+        assert!(PlacementPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let s = Scheduler::new(PlacementPolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| s.pick(0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn affinity_is_sticky_and_spreads() {
+        let s = Scheduler::new(PlacementPolicy::Affinity, 4);
+        let mut covered = [false; 4];
+        for phone in 0..64u64 {
+            let w = s.pick(phone);
+            assert_eq!(w, s.pick(phone), "same phone -> same worker");
+            covered[w] = true;
+        }
+        assert!(covered.iter().all(|&c| c), "64 phones cover all 4 workers");
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_worker() {
+        let s = Scheduler::new(PlacementPolicy::LeastLoaded, 3);
+        s.job_started(0);
+        s.job_started(0);
+        s.job_started(1);
+        assert_eq!(s.pick(9), 2);
+        s.job_started(2);
+        s.job_started(2);
+        s.job_finished(0);
+        s.job_finished(0);
+        assert_eq!(s.pick(9), 0);
+    }
+}

@@ -1,0 +1,171 @@
+//! The warm pool: pre-forked clone processes.
+//!
+//! Provisioning a clone is the farm's only expensive control-plane step:
+//! fork a process image from the deterministic Zygote template
+//! (`appvm::zygote::build_template`). The pool pays that cost off the
+//! session critical path — each worker pre-forks `target` processes at
+//! startup and re-fills **only while its job queue is empty** — so a
+//! session start normally just pops a ready process and attaches the
+//! phone's synchronized file system (a *pool hit*). When demand outruns
+//! the pool, the fork happens inline (a *cold fork*, counted as a miss);
+//! the hit/miss split is the pool's headline metric.
+//!
+//! `Process` is deliberately not `Send` (each node loads its own compute
+//! backend on its own thread), so a `WarmPool` is per-worker state, owned
+//! and touched only by that worker's OS thread. Only the counters are
+//! shared, via [`PoolStats`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::appvm::process::Process;
+use crate::appvm::{Heap, Program};
+use crate::config::CostParams;
+use crate::device::{DeviceSpec, Location};
+use crate::vfs::SimFs;
+
+use super::EnvFactory;
+
+/// Farm-wide pool counters (all workers share one instance).
+#[derive(Debug, Default)]
+pub struct PoolStats {
+    /// Session starts served by a pre-forked process.
+    pub hits: AtomicU64,
+    /// Session starts that had to cold-fork inline.
+    pub misses: AtomicU64,
+    /// Background re-forks performed while a worker was idle.
+    pub refills: AtomicU64,
+}
+
+/// One worker's reserve of pre-forked clone processes.
+pub struct WarmPool {
+    program: Arc<Program>,
+    template: Arc<Heap>,
+    device: DeviceSpec,
+    costs: CostParams,
+    make_env: EnvFactory,
+    stats: Arc<PoolStats>,
+    ready: Vec<Process>,
+    target: usize,
+}
+
+impl WarmPool {
+    /// Build a pool and pre-fork `target` processes immediately.
+    pub fn new(
+        program: Arc<Program>,
+        template: Arc<Heap>,
+        costs: CostParams,
+        make_env: EnvFactory,
+        target: usize,
+        stats: Arc<PoolStats>,
+    ) -> WarmPool {
+        let mut pool = WarmPool {
+            program,
+            template,
+            device: DeviceSpec::clone_desktop(),
+            costs,
+            make_env,
+            stats,
+            ready: Vec::with_capacity(target),
+            target,
+        };
+        for _ in 0..target {
+            let p = pool.fork_one();
+            pool.ready.push(p);
+        }
+        pool
+    }
+
+    fn fork_one(&self) -> Process {
+        let mut p = Process::fork_from_zygote(
+            self.program.clone(),
+            &self.template,
+            self.device.clone(),
+            Location::Clone,
+            (self.make_env)(SimFs::new()),
+        );
+        p.cost_params = Some(self.costs.clone());
+        p
+    }
+
+    /// Take a clone process for a new phone session, attaching the
+    /// phone's synchronized file system. Pops a warm process when one is
+    /// ready; cold-forks inline otherwise.
+    pub fn take(&mut self, fs: &SimFs) -> Process {
+        let mut p = match self.ready.pop() {
+            Some(p) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                p
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                self.fork_one()
+            }
+        };
+        p.env.vfs = fs.synchronize();
+        p
+    }
+
+    /// Re-fork up to the target. Callers invoke this only when idle, so
+    /// refills never delay an admitted migration.
+    pub fn refill(&mut self) {
+        while self.ready.len() < self.target {
+            let p = self.fork_one();
+            self.ready.push(p);
+            self.stats.refills.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Pre-forked processes currently ready.
+    pub fn ready(&self) -> usize {
+        self.ready.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::zygote::{build_template, install_system_classes};
+
+    fn parts() -> (Arc<Program>, Arc<Heap>) {
+        let mut p = Program::new();
+        install_system_classes(&mut p);
+        let p = p.into_shared();
+        let t = Arc::new(build_template(&p, 100, 9));
+        (p, t)
+    }
+
+    #[test]
+    fn hits_then_cold_forks_then_refills() {
+        let (program, template) = parts();
+        let stats = Arc::new(PoolStats::default());
+        let mut pool = WarmPool::new(
+            program,
+            template,
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+            2,
+            stats.clone(),
+        );
+        assert_eq!(pool.ready(), 2);
+
+        let mut fs = SimFs::new();
+        fs.add("x", vec![1, 2, 3]);
+        let a = pool.take(&fs);
+        let b = pool.take(&fs);
+        let c = pool.take(&fs);
+        assert_eq!(stats.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.misses.load(Ordering::Relaxed), 1);
+        // Every taken process got the session fs and the zygote heap.
+        for p in [&a, &b, &c] {
+            assert_eq!(p.env.vfs.count(), 1);
+            assert_eq!(p.heap.len(), 100);
+            assert_eq!(p.location, Location::Clone);
+        }
+
+        pool.refill();
+        assert_eq!(pool.ready(), 2);
+        assert_eq!(stats.refills.load(Ordering::Relaxed), 2);
+    }
+}

@@ -1,0 +1,163 @@
+//! Phone sessions: the farm-side clone channel.
+//!
+//! A [`FarmClone`] is what a phone holds instead of a dedicated
+//! `NodeManager` channel: a lightweight handle that runs each migration
+//! roundtrip through admission → placement → a worker queue, and blocks
+//! for the reverse capture. It implements `exec::CloneChannel`, so
+//! `exec::run_distributed` drives a farm session exactly like an inline
+//! or TCP clone — N phones hold N sessions multiplexed over M workers.
+//!
+//! Closing a session (explicitly or on drop) retires the phone's clone
+//! slots on every worker.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::{CloneCloudError, Result};
+use crate::exec::distributed::CloneChannel;
+use crate::nodemanager::TransferBytes;
+use crate::vfs::SimFs;
+
+use super::farm::FarmShared;
+use super::worker::{FarmMsg, Job};
+
+/// Per-session counters (the admission wait is the queueing signal the
+/// phone actually feels).
+#[derive(Debug, Clone, Default)]
+pub struct SessionStats {
+    pub migrations: u64,
+    pub errors: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub admission_wait_ms: f64,
+}
+
+/// One phone's session on the clone farm.
+pub struct FarmClone {
+    shared: Arc<FarmShared>,
+    senders: Vec<Sender<FarmMsg>>,
+    phone: u64,
+    fs: Arc<SimFs>,
+    fs_version: u32,
+    closed: bool,
+    pub stats: SessionStats,
+}
+
+impl FarmClone {
+    pub(crate) fn new(
+        shared: Arc<FarmShared>,
+        senders: Vec<Sender<FarmMsg>>,
+        phone: u64,
+        fs: SimFs,
+    ) -> FarmClone {
+        FarmClone {
+            shared,
+            senders,
+            phone,
+            fs: Arc::new(fs),
+            fs_version: 0,
+            closed: false,
+            stats: SessionStats::default(),
+        }
+    }
+
+    pub fn phone_id(&self) -> u64 {
+        self.phone
+    }
+
+    /// Replace the session's synchronized file system. Clone slots pick
+    /// the new image up on their next migration (version check).
+    pub fn set_fs(&mut self, fs: SimFs) {
+        self.fs = Arc::new(fs);
+        self.fs_version += 1;
+    }
+
+    /// One migration roundtrip through the farm: admission (bounded,
+    /// blocking), placement, worker execution, reverse capture.
+    pub fn roundtrip_bytes(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+        if self.closed {
+            return Err(CloneCloudError::Transport("farm session closed".into()));
+        }
+        let up = forward.len() as u64;
+
+        let waited_ms = self.shared.admission.acquire();
+        self.stats.admission_wait_ms += waited_ms;
+        self.shared
+            .admission_wait_us
+            .fetch_add((waited_ms * 1e3) as u64, Ordering::Relaxed);
+
+        let worker = self.shared.scheduler.pick(self.phone);
+        self.shared.scheduler.job_started(worker);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let job = Job {
+            phone: self.phone,
+            fs: self.fs.clone(),
+            fs_version: self.fs_version,
+            forward,
+            submitted: Instant::now(),
+            reply: reply_tx,
+        };
+        if self.senders[worker].send(FarmMsg::Work(job)).is_err() {
+            self.shared.scheduler.job_finished(worker);
+            self.shared.admission.release();
+            self.stats.errors += 1;
+            self.shared.errors.fetch_add(1, Ordering::Relaxed);
+            return Err(CloneCloudError::Transport(format!(
+                "farm worker {worker} is down"
+            )));
+        }
+        let reply = reply_rx.recv();
+        self.shared.admission.release();
+        match reply {
+            Ok(Ok(bytes)) => {
+                let down = bytes.len() as u64;
+                self.stats.migrations += 1;
+                self.stats.bytes_up += up;
+                self.stats.bytes_down += down;
+                self.shared.migrations.fetch_add(1, Ordering::Relaxed);
+                self.shared.bytes_up.fetch_add(up, Ordering::Relaxed);
+                self.shared.bytes_down.fetch_add(down, Ordering::Relaxed);
+                Ok((bytes, TransferBytes { up, down }))
+            }
+            Ok(Err(e)) => {
+                self.stats.errors += 1;
+                self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+            Err(_) => {
+                self.stats.errors += 1;
+                self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                Err(CloneCloudError::Transport(format!(
+                    "farm worker {worker} dropped the session reply"
+                )))
+            }
+        }
+    }
+
+    /// End the session: retire this phone's clone slot on every worker.
+    /// Idempotent; also invoked on drop.
+    pub fn close(&mut self) {
+        if self.closed {
+            return;
+        }
+        self.closed = true;
+        for s in &self.senders {
+            let _ = s.send(FarmMsg::Retire { phone: self.phone });
+        }
+        self.shared.sessions_closed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl CloneChannel for FarmClone {
+    fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+        self.roundtrip_bytes(forward)
+    }
+}
+
+impl Drop for FarmClone {
+    fn drop(&mut self) {
+        self.close();
+    }
+}

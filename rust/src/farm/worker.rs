@@ -1,0 +1,120 @@
+//! Clone workers: one OS thread per pool slot.
+//!
+//! A worker owns everything that cannot cross threads — its warm pool,
+//! its per-phone clone processes, its compute backend — and serves jobs
+//! from an mpsc queue. The execution core is shared with the single-phone
+//! server (`nodemanager::execute_migration`): decode the forward capture,
+//! instantiate the migrant thread, drive it to its reintegration point,
+//! capture it back.
+//!
+//! Per-phone state: the first migration from a phone provisions a clone
+//! slot for it (warm-pool take), and later migrations reuse the slot —
+//! with the affinity policy, a phone's repeat migrations always land on
+//! the worker already holding its slot. A version number on the session
+//! file system keeps the slot's synchronized fs current without re-paying
+//! the sync when nothing changed.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::appvm::process::Process;
+use crate::config::CostParams;
+use crate::error::Result;
+use crate::migration::Migrator;
+use crate::nodemanager::{execute_migration, CloneServeStats};
+use crate::vfs::SimFs;
+
+use super::farm::FarmShared;
+use super::pool::WarmPool;
+
+/// One admitted migration roundtrip.
+pub(crate) struct Job {
+    pub phone: u64,
+    pub fs: Arc<SimFs>,
+    pub fs_version: u32,
+    pub forward: Vec<u8>,
+    pub submitted: Instant,
+    pub reply: Sender<Result<Vec<u8>>>,
+}
+
+/// Messages a worker consumes.
+pub(crate) enum FarmMsg {
+    Work(Job),
+    /// The phone's session closed; free its clone slot.
+    Retire { phone: u64 },
+    Shutdown,
+}
+
+/// A provisioned per-phone clone process.
+struct CloneSlot {
+    proc: Process,
+    fs_version: u32,
+}
+
+/// Worker thread body. Exits on `Shutdown` or when every sender is gone.
+pub(crate) fn worker_main(
+    idx: usize,
+    rx: Receiver<FarmMsg>,
+    mut pool: WarmPool,
+    shared: Arc<FarmShared>,
+    costs: CostParams,
+    fuel: u64,
+) {
+    let migrator = Migrator::new(costs);
+    let mut slots: HashMap<u64, CloneSlot> = HashMap::new();
+    loop {
+        // Drain eagerly; refill the warm pool only when the queue is
+        // empty so provisioning stays off the migration critical path.
+        let msg = match rx.try_recv() {
+            Ok(m) => m,
+            Err(TryRecvError::Empty) => {
+                pool.refill();
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            }
+            Err(TryRecvError::Disconnected) => break,
+        };
+        match msg {
+            FarmMsg::Work(job) => {
+                let wait_us = job.submitted.elapsed().as_micros() as u64;
+                shared.queue_wait_us.fetch_add(wait_us, Ordering::Relaxed);
+
+                let t0 = Instant::now();
+                let slot = slots.entry(job.phone).or_insert_with(|| CloneSlot {
+                    proc: pool.take(&job.fs),
+                    fs_version: job.fs_version,
+                });
+                if slot.fs_version != job.fs_version {
+                    slot.proc.env.vfs = job.fs.synchronize();
+                    slot.fs_version = job.fs_version;
+                }
+
+                let mut serve = CloneServeStats::default();
+                let result =
+                    execute_migration(&migrator, &mut slot.proc, &job.forward, fuel, &mut serve);
+                shared
+                    .instrs_executed
+                    .fetch_add(serve.instrs_executed, Ordering::Relaxed);
+
+                let ws = &shared.worker_stats[idx];
+                ws.jobs.fetch_add(1, Ordering::Relaxed);
+                ws.busy_us
+                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                shared.scheduler.job_finished(idx);
+                // A dead session (dropped receiver) is not the worker's
+                // problem; the admission slot is released by the session
+                // side regardless.
+                let _ = job.reply.send(result);
+            }
+            FarmMsg::Retire { phone } => {
+                slots.remove(&phone);
+            }
+            FarmMsg::Shutdown => break,
+        }
+    }
+}

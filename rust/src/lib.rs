@@ -7,7 +7,11 @@
 //!   + bytecode rewriter (paper §3).
 //! * [`migration`] — thread suspend/capture/resume/merge with the
 //!   MID/CID object-mapping table and Zygote-diff optimization (§4).
-//! * [`nodemanager`] — transport, network models, clone provisioning.
+//! * [`nodemanager`] — transport, wire protocol, clone provisioning:
+//!   the 1:1 `CloneServer` and the serve-many farm gateway.
+//! * [`farm`] — the multi-tenant clone farm (beyond the paper): warm
+//!   pool, placement policies, admission control, phone sessions
+//!   multiplexed over clone workers.
 //! * [`runtime`] — PJRT loader executing the AOT HLO artifacts built by
 //!   `python/compile/aot.py` (L1 Pallas kernels + L2 JAX graphs).
 //! * [`apps`] — the paper's three evaluation applications.
@@ -22,6 +26,7 @@ pub mod config;
 pub mod device;
 pub mod error;
 pub mod exec;
+pub mod farm;
 pub mod metrics;
 pub mod migration;
 pub mod nodemanager;

@@ -5,6 +5,7 @@
 //!   run          run an app monolithically or under CloneCloud
 //!   table1       regenerate the paper's Table 1
 //!   clone-serve  run a clone node (TCP listener) for distributed mode
+//!   farm         run the multi-tenant clone farm (demo or TCP gateway)
 //!   inspect      dump program / partition information
 
 fn main() {

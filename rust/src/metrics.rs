@@ -50,6 +50,28 @@ impl MetricsSnapshot {
         self.gauge("phase.merge_ms", out.merge_ms);
     }
 
+    /// Absorb a clone-farm stats snapshot (aggregate throughput, queue
+    /// pressure, pool effectiveness, per-worker utilization).
+    pub fn absorb_farm(&mut self, f: &crate::farm::FarmStats) {
+        self.count("farm.sessions_opened", f.sessions_opened);
+        self.count("farm.sessions_closed", f.sessions_closed);
+        self.count("farm.migrations", f.migrations);
+        self.count("farm.errors", f.errors);
+        self.count("farm.bytes.up", f.bytes_up);
+        self.count("farm.bytes.down", f.bytes_down);
+        self.count("farm.instrs_executed", f.instrs_executed);
+        self.count("farm.pool.hits", f.pool_hits);
+        self.count("farm.pool.misses", f.pool_misses);
+        self.count("farm.pool.refills", f.pool_refills);
+        self.gauge("farm.pool.hit_rate", f.pool_hit_rate());
+        self.gauge("farm.admission_wait_ms", f.admission_wait_ms);
+        self.gauge("farm.queue_wait_ms", f.queue_wait_ms);
+        for (i, (jobs, busy)) in f.worker_jobs.iter().zip(&f.worker_busy_ms).enumerate() {
+            self.count(&format!("farm.worker{i}.jobs"), *jobs);
+            self.gauge(&format!("farm.worker{i}.busy_ms"), *busy);
+        }
+    }
+
     /// Render as sorted `key = value` lines.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -66,6 +88,29 @@ impl MetricsSnapshot {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn absorb_farm_maps_all_headline_metrics() {
+        let mut m = MetricsSnapshot::default();
+        let f = crate::farm::FarmStats {
+            workers: 2,
+            policy: "affinity",
+            sessions_opened: 4,
+            sessions_closed: 4,
+            migrations: 9,
+            pool_hits: 3,
+            pool_misses: 1,
+            admission_wait_ms: 12.5,
+            worker_jobs: vec![5, 4],
+            worker_busy_ms: vec![10.0, 8.0],
+            ..Default::default()
+        };
+        m.absorb_farm(&f);
+        assert_eq!(m.counters["farm.migrations"], 9);
+        assert_eq!(m.counters["farm.worker1.jobs"], 4);
+        assert!((m.gauges["farm.pool.hit_rate"] - 0.75).abs() < 1e-9);
+        assert!(m.render().contains("farm.admission_wait_ms = 12.500"));
+    }
 
     #[test]
     fn counters_accumulate_and_render() {

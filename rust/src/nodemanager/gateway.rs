@@ -1,0 +1,250 @@
+//! Farm gateway: the serve-many network front door.
+//!
+//! Where `CloneServer` binds one transport to one dedicated clone
+//! process, the gateway binds *each accepted connection* to a farm
+//! session: the same `protocol::Msg` conversation (provision → fs sync →
+//! migrate… → shutdown) but with execution multiplexed over the farm's
+//! worker pool. A phone-side `NodeManager` cannot tell the difference —
+//! the wire protocol is unchanged.
+//!
+//! Provisioning differs in one respect: the farm's Zygote template is
+//! fixed at farm start, so a phone whose (objects, seed) parameters
+//! disagree is rejected — §4.3's independently-booted-template trick
+//! only works when both sides build the *same* template.
+
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::farm::FarmHandle;
+use crate::vfs::SimFs;
+
+use super::protocol::Msg;
+use super::transport::{TcpEndpoint, Transport};
+
+/// Serve one phone connection against the farm. Returns the number of
+/// migrations served. Exits cleanly on `Shutdown` (explicit, or a clean
+/// TCP EOF which the transport reports as `Shutdown`).
+pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result<u64> {
+    let mut session = None;
+    let mut provisioned = false;
+    let mut migrations = 0u64;
+    loop {
+        let (msg, _) = t.recv()?;
+        match msg {
+            Msg::Provision {
+                zygote_objects,
+                zygote_seed,
+                program_hash: want,
+            } => {
+                let have = handle.program_hash();
+                if have != want {
+                    t.send(&Msg::Error(format!(
+                        "program hash mismatch: farm={have:#x} phone={want:#x} (resync executables)"
+                    )))?;
+                    continue;
+                }
+                let (zo, zs) = handle.zygote_params();
+                if zygote_objects as usize != zo || zygote_seed != zs {
+                    t.send(&Msg::Error(format!(
+                        "zygote parameter mismatch: farm=({zo}, {zs}) phone=({zygote_objects}, {zygote_seed})"
+                    )))?;
+                    continue;
+                }
+                provisioned = true;
+                t.send(&Msg::Ack)?;
+            }
+            Msg::SyncFs(fs) => {
+                match session.as_mut() {
+                    Some(s) => s.set_fs(fs),
+                    None => session = Some(handle.session_auto(fs)),
+                }
+                t.send(&Msg::Ack)?;
+            }
+            Msg::Migrate(bytes) => {
+                if !provisioned {
+                    t.send(&Msg::Error("migrate before provision".into()))?;
+                    continue;
+                }
+                if session.is_none() {
+                    session = Some(handle.session_auto(SimFs::new()));
+                }
+                let s = session.as_mut().unwrap();
+                match s.roundtrip_bytes(bytes) {
+                    Ok((rbytes, _)) => {
+                        migrations += 1;
+                        t.send(&Msg::Reintegrate(rbytes))?;
+                    }
+                    Err(e) => {
+                        t.send(&Msg::Error(e.to_string()))?;
+                    }
+                }
+            }
+            Msg::Shutdown => return Ok(migrations),
+            other => {
+                t.send(&Msg::Error(format!("unexpected message {other:?}")))?;
+            }
+        }
+    }
+}
+
+/// Accept loop: one gateway thread per connection, all sharing the farm.
+/// `read_timeout` bounds how long an idle/hung connection may pin its
+/// gateway thread. `max_sessions` stops accepting after that many
+/// connections (used by tests and drains); `None` serves forever.
+pub fn serve_farm(
+    ep: &TcpEndpoint,
+    handle: &FarmHandle,
+    read_timeout: Option<Duration>,
+    max_sessions: Option<usize>,
+) -> Result<()> {
+    let mut served = 0usize;
+    loop {
+        if let Some(max) = max_sessions {
+            if served >= max {
+                return Ok(());
+            }
+        }
+        // Per-connection failures (ECONNABORTED races, EMFILE spikes,
+        // setsockopt on an already-dead socket) must not take down the
+        // gateway for every other phone.
+        let mut t = match ep.accept() {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("[farm] accept error: {e}");
+                continue;
+            }
+        };
+        if let Some(d) = read_timeout {
+            if let Err(e) = t.set_read_timeout(Some(d)) {
+                eprintln!("[farm] session setup error: {e}");
+                continue;
+            }
+        }
+        let h = handle.clone();
+        std::thread::spawn(move || match serve_farm_session(t, &h) {
+            Ok(n) => eprintln!("[farm] session done: {n} migration(s)"),
+            Err(e) => eprintln!("[farm] session error: {e}"),
+        });
+        served += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::super::manager::NodeManager;
+    use super::super::transport::InProcTransport;
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::process::Process;
+    use crate::appvm::zygote::build_template;
+    use crate::config::CostParams;
+    use crate::device::{DeviceSpec, Location};
+    use crate::farm::{
+        synthetic_expected, synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
+    };
+    use crate::migration::{CapturePacket, Migrator};
+
+    const ITERS: i64 = 2_000;
+    const ZY: usize = 120;
+    const SEED: u64 = 3;
+
+    fn start_farm() -> (Arc<crate::appvm::Program>, CloneFarm) {
+        let program = Arc::new(assemble(&synthetic_offload_src(ITERS)).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let farm = CloneFarm::start(
+            program.clone(),
+            FarmConfig {
+                workers: 2,
+                warm_per_worker: 1,
+                queue_depth: 4,
+                policy: PlacementPolicy::LeastLoaded,
+                zygote_objects: ZY,
+                zygote_seed: SEED,
+                fuel: 100_000_000,
+            },
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        (program, farm)
+    }
+
+    /// Full wire path: a phone-side NodeManager speaks the unchanged Msg
+    /// protocol to a gateway session backed by the farm.
+    #[test]
+    fn gateway_end_to_end_over_wire_protocol() {
+        let (program, farm) = start_farm();
+        let (phone_t, clone_t) = InProcTransport::pair();
+        let handle = farm.handle();
+        let gw = std::thread::spawn(move || serve_farm_session(clone_t, &handle).unwrap());
+
+        let mut fs = crate::vfs::SimFs::new();
+        fs.add("data.bin", (0u8..64).collect());
+        let expected = synthetic_expected(&fs, ITERS);
+
+        let mut nm = NodeManager::new(phone_t);
+        nm.provision(&program, ZY, SEED).unwrap();
+        nm.sync_fs(&fs).unwrap();
+
+        let template = build_template(&program, ZY, SEED);
+        let mut phone = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(fs),
+        );
+        let main = program.entry().unwrap();
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        use crate::appvm::interp::{run_thread, NoHooks, RunExit};
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 100_000_000).unwrap();
+        assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+
+        let migrator = Migrator::new(CostParams::default());
+        let (packet, _) = migrator.migrate_out(&mut phone, tid).unwrap();
+        let (rbytes, transfer) = nm.migrate(packet.encode()).unwrap();
+        assert!(transfer.up > 0 && transfer.down > 0);
+        let rpacket = CapturePacket::decode(&rbytes).unwrap();
+        migrator.merge_back(&mut phone, tid, &rpacket).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 100_000_000).unwrap();
+        assert!(matches!(exit, RunExit::Completed(_)), "{exit:?}");
+        assert_eq!(
+            phone.statics[main.class.0 as usize][0].as_int(),
+            Some(expected)
+        );
+
+        nm.shutdown().unwrap();
+        assert_eq!(gw.join().unwrap(), 1);
+        let stats = farm.shutdown();
+        assert_eq!(stats.migrations, 1);
+        assert_eq!(stats.sessions_opened, 1);
+        assert_eq!(stats.sessions_closed, 1, "gateway session retired");
+    }
+
+    /// The gateway rejects a provision whose executable or Zygote
+    /// parameters disagree with the farm's.
+    #[test]
+    fn gateway_rejects_mismatched_provision() {
+        let (program, farm) = start_farm();
+        let other = Arc::new(
+            assemble("class B app\n  method main nargs=0 regs=1\n    retv\n  end\nend\n").unwrap(),
+        );
+        let (phone_t, clone_t) = InProcTransport::pair();
+        let handle = farm.handle();
+        let gw = std::thread::spawn(move || serve_farm_session(clone_t, &handle).unwrap());
+
+        let mut nm = NodeManager::new(phone_t);
+        let err = nm.provision(&other, ZY, SEED).unwrap_err().to_string();
+        assert!(err.contains("hash mismatch"), "{err}");
+        let err = nm.provision(&program, ZY, SEED + 1).unwrap_err().to_string();
+        assert!(err.contains("zygote parameter mismatch"), "{err}");
+        // The right program + parameters still go through afterwards.
+        nm.provision(&program, ZY, SEED).unwrap();
+        nm.shutdown().unwrap();
+        assert_eq!(gw.join().unwrap(), 0);
+        farm.shutdown();
+    }
+}

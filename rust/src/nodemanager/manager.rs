@@ -129,33 +129,48 @@ impl<T: Transport> CloneServer<T> {
         stats: &mut CloneServeStats,
     ) -> Result<Vec<u8>> {
         let p = proc.ok_or_else(|| CloneCloudError::Transport("migrate before provision".into()))?;
-        let packet = CapturePacket::decode(bytes)?;
-        let (tid, table, _) = migrator.receive_at_clone(p, &packet)?;
-        let instrs0 = p.metrics.instrs;
+        execute_migration(migrator, p, bytes, self.fuel, stats)
+    }
+}
 
-        // Drive the migrant to its reintegration point. Nested CcStart
-        // means "already at the clone — continue" (Property 3 guarantees
-        // migration/reintegration alternate).
-        loop {
-            match run_thread(p, tid, &mut NoHooks, self.fuel)? {
-                RunExit::ReintegrationPoint { .. } => break,
-                RunExit::MigrationPoint { .. } => continue,
-                RunExit::Completed(_) => {
-                    return Err(CloneCloudError::migration(
-                        "offloaded thread completed without a reintegration point",
-                    ))
-                }
-                RunExit::OutOfFuel => {
-                    return Err(CloneCloudError::migration("clone execution out of fuel"))
-                }
+/// Execute one forward capture on a clone process and return the encoded
+/// reverse capture. This is the clone-side inner loop shared by the
+/// single-phone [`CloneServer`] and the multi-tenant farm workers
+/// (`farm::worker`): decode, instantiate, drive to the reintegration
+/// point, capture back.
+pub fn execute_migration(
+    migrator: &Migrator,
+    p: &mut Process,
+    bytes: &[u8],
+    fuel: u64,
+    stats: &mut CloneServeStats,
+) -> Result<Vec<u8>> {
+    let packet = CapturePacket::decode(bytes)?;
+    let (tid, table, _) = migrator.receive_at_clone(p, &packet)?;
+    let instrs0 = p.metrics.instrs;
+
+    // Drive the migrant to its reintegration point. Nested CcStart
+    // means "already at the clone — continue" (Property 3 guarantees
+    // migration/reintegration alternate).
+    loop {
+        match run_thread(p, tid, &mut NoHooks, fuel)? {
+            RunExit::ReintegrationPoint { .. } => break,
+            RunExit::MigrationPoint { .. } => continue,
+            RunExit::Completed(_) => {
+                return Err(CloneCloudError::migration(
+                    "offloaded thread completed without a reintegration point",
+                ))
+            }
+            RunExit::OutOfFuel => {
+                return Err(CloneCloudError::migration("clone execution out of fuel"))
             }
         }
-        stats.migrations += 1;
-        stats.instrs_executed += p.metrics.instrs - instrs0;
-        let (rpacket, _, dropped) = migrator.return_from_clone(p, tid, table)?;
-        stats.mapping_entries_dropped += dropped;
-        Ok(rpacket.encode())
     }
+    stats.migrations += 1;
+    stats.instrs_executed += p.metrics.instrs - instrs0;
+    let (rpacket, _, dropped) = migrator.return_from_clone(p, tid, table)?;
+    stats.mapping_entries_dropped += dropped;
+    Ok(rpacket.encode())
 }
 
 /// Byte accounting for one migration round trip.

@@ -6,12 +6,21 @@
 //! *timing* is a model (`config::NetworkProfile`, the paper's measured
 //! 3G/WiFi parameters) applied to the *real* byte counts the transports
 //! report.
+//!
+//! Two server shapes share one execution core ([`execute_migration`]):
+//! [`CloneServer`] dedicates a clone to a single phone, while
+//! [`gateway`] fronts the multi-tenant farm (`crate::farm`) — same wire
+//! protocol, many phones.
 
+pub mod gateway;
 pub mod manager;
 pub mod protocol;
 pub mod transport;
 
-pub use manager::{CloneServeStats, CloneServer, NodeManager, TransferBytes};
+pub use gateway::{serve_farm, serve_farm_session};
+pub use manager::{
+    execute_migration, CloneServeStats, CloneServer, NodeManager, TransferBytes,
+};
 pub use protocol::{program_hash, Msg};
 pub use transport::{InProcTransport, TcpEndpoint, TcpTransport, Transport};
 

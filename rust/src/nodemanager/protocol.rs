@@ -157,6 +157,101 @@ mod tests {
         }
     }
 
+    /// Generate an arbitrary protocol message: random payload sizes
+    /// (including empty frames), random file sets, random strings.
+    fn gen_msg(rng: &mut crate::util::rng::Rng) -> Msg {
+        match rng.index(7) {
+            0 => Msg::Provision {
+                zygote_objects: rng.next_u64() as u32,
+                zygote_seed: rng.next_u64(),
+                program_hash: rng.next_u64(),
+            },
+            1 => {
+                let mut fs = SimFs::new();
+                for i in 0..rng.index(4) {
+                    let mut bytes = vec![0u8; rng.index(2048)];
+                    rng.fill_bytes(&mut bytes);
+                    fs.add(&format!("f{i}"), bytes);
+                }
+                Msg::SyncFs(fs)
+            }
+            2 => {
+                let mut b = vec![0u8; rng.index(4096)]; // 0 = empty frame
+                rng.fill_bytes(&mut b);
+                Msg::Migrate(b)
+            }
+            3 => {
+                let mut b = vec![0u8; rng.index(4096)];
+                rng.fill_bytes(&mut b);
+                Msg::Reintegrate(b)
+            }
+            4 => Msg::Ack,
+            5 => {
+                let n = rng.index(128);
+                let s: String = (0..n).map(|_| (b'a' + rng.byte() % 26) as char).collect();
+                Msg::Error(s)
+            }
+            _ => Msg::Shutdown,
+        }
+    }
+
+    #[test]
+    fn prop_messages_roundtrip() {
+        use crate::util::prop::{ensure_eq, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xC10E_A11,
+                cases: 200,
+            },
+            gen_msg,
+            |m| {
+                let decoded = Msg::decode(&m.encode())
+                    .map_err(|e| format!("decode failed: {e}"))?;
+                ensure_eq(decoded, m.clone(), "decode(encode(m))")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_strict_prefixes_never_decode() {
+        use crate::util::prop::{ensure, forall, PropConfig};
+        // Every field is length-prefixed and decode demands exhaustion, so
+        // any strict prefix of a valid encoding must be a clean error
+        // (never a panic, never a silent partial parse).
+        forall(
+            PropConfig {
+                seed: 0xC10E_A12,
+                cases: 200,
+            },
+            |rng| {
+                let bytes = gen_msg(rng).encode();
+                let cut = rng.index(bytes.len());
+                (bytes, cut)
+            },
+            |(bytes, cut)| ensure(Msg::decode(&bytes[..*cut]).is_err(), "prefix decoded"),
+        );
+    }
+
+    #[test]
+    fn prop_garbage_never_panics() {
+        use crate::util::prop::{forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xC10E_A13,
+                cases: 300,
+            },
+            |rng| {
+                let mut b = vec![0u8; rng.index(256)];
+                rng.fill_bytes(&mut b);
+                b
+            },
+            |bytes| {
+                let _ = Msg::decode(bytes); // Ok or Err both fine; no panic.
+                Ok(())
+            },
+        );
+    }
+
     #[test]
     fn program_hash_distinguishes_programs() {
         let a = crate::appvm::assembler::assemble(

@@ -7,9 +7,10 @@
 //! network *cost* is applied by the exec driver from the byte counts
 //! these transports report — the wire moves at host speed.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
 
 use crate::error::{CloneCloudError, Result};
 
@@ -66,6 +67,13 @@ impl Transport for InProcTransport {
 // -------------------------------------------------------------------- tcp
 
 /// Framed TCP transport (4-byte big-endian length prefix).
+///
+/// Peer EOF *between* frames is a clean close: `recv` reports it as a
+/// `Msg::Shutdown` so servers tear sessions down without error noise.
+/// EOF *inside* a frame (truncated length or body) is still an error.
+/// An optional read timeout bounds how long `recv` blocks, so a hung
+/// peer cannot wedge the caller forever; a timeout is fatal to the
+/// transport (the frame stream may be mid-frame and desynchronized).
 pub struct TcpTransport {
     stream: TcpStream,
 }
@@ -82,6 +90,17 @@ impl TcpTransport {
         stream.set_nodelay(true).ok();
         TcpTransport { stream }
     }
+
+    /// Bound how long `recv` may block (`None` = wait forever).
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.stream
+            .set_read_timeout(timeout)
+            .map_err(|e| CloneCloudError::Transport(format!("set_read_timeout: {e}")))
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
 }
 
 impl Transport for TcpTransport {
@@ -97,14 +116,32 @@ impl Transport for TcpTransport {
 
     fn recv(&mut self) -> Result<(Msg, u64)> {
         let mut len = [0u8; 4];
-        self.stream
-            .read_exact(&mut len)
-            .map_err(|e| CloneCloudError::Transport(format!("recv len: {e}")))?;
+        // A clean close lands exactly on a frame boundary: only an EOF
+        // before the first prefix byte reads as Shutdown. EOF after a
+        // partial prefix is a truncated frame and stays an error.
+        let mut got = 0usize;
+        while got < 4 {
+            match self.stream.read(&mut len[got..]) {
+                Ok(0) if got == 0 => return Ok((Msg::Shutdown, 0)),
+                Ok(0) => {
+                    return Err(CloneCloudError::Transport(format!(
+                        "recv len: eof after {got} of 4 prefix bytes"
+                    )))
+                }
+                Ok(n) => got += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    let what = if is_timeout(&e) { "recv timed out" } else { "recv len" };
+                    return Err(CloneCloudError::Transport(format!("{what}: {e}")));
+                }
+            }
+        }
         let n = u32::from_be_bytes(len) as usize;
         let mut buf = vec![0u8; n];
-        self.stream
-            .read_exact(&mut buf)
-            .map_err(|e| CloneCloudError::Transport(format!("recv body: {e}")))?;
+        self.stream.read_exact(&mut buf).map_err(|e| {
+            let what = if is_timeout(&e) { "recv timed out mid-frame" } else { "recv body" };
+            CloneCloudError::Transport(format!("{what}: {e}"))
+        })?;
         Ok((Msg::decode(&buf)?, n as u64))
     }
 }
@@ -152,6 +189,40 @@ mod tests {
         assert!(n > 3);
         b.send(&Msg::Ack).unwrap();
         assert_eq!(a.recv().unwrap().0, Msg::Ack);
+    }
+
+    #[test]
+    fn tcp_peer_eof_is_clean_shutdown() {
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let mut t = ep.accept().unwrap();
+            // First frame arrives normally, then the peer closes.
+            assert_eq!(t.recv().unwrap().0, Msg::Ack);
+            let (msg, n) = t.recv().unwrap();
+            assert_eq!(msg, Msg::Shutdown, "EOF between frames reads as Shutdown");
+            assert_eq!(n, 0);
+        });
+        {
+            let mut c = TcpTransport::connect(&addr).unwrap();
+            c.send(&Msg::Ack).unwrap();
+        } // dropped: connection closed
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_read_timeout_unwedges_recv() {
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        // Client connects but never sends anything (a hung clone).
+        let _hung = TcpTransport::connect(&addr).unwrap();
+        let mut t = ep.accept().unwrap();
+        t.set_read_timeout(Some(std::time::Duration::from_millis(50)))
+            .unwrap();
+        let t0 = std::time::Instant::now();
+        let err = t.recv().unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5));
     }
 
     #[test]

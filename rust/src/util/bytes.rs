@@ -5,8 +5,6 @@
 //! (§4.1). All migration wire formats in `migration/format.rs` and the
 //! node-manager protocol go through this reader/writer pair.
 
-use byteorder::{BigEndian, ByteOrder};
-
 use crate::error::{CloneCloudError, Result};
 
 /// Append-only big-endian writer.
@@ -37,19 +35,13 @@ impl WireWriter {
         self.buf.push(v);
     }
     pub fn put_u16(&mut self, v: u16) {
-        let mut b = [0u8; 2];
-        BigEndian::write_u16(&mut b, v);
-        self.buf.extend_from_slice(&b);
+        self.buf.extend_from_slice(&v.to_be_bytes());
     }
     pub fn put_u32(&mut self, v: u32) {
-        let mut b = [0u8; 4];
-        BigEndian::write_u32(&mut b, v);
-        self.buf.extend_from_slice(&b);
+        self.buf.extend_from_slice(&v.to_be_bytes());
     }
     pub fn put_u64(&mut self, v: u64) {
-        let mut b = [0u8; 8];
-        BigEndian::write_u64(&mut b, v);
-        self.buf.extend_from_slice(&b);
+        self.buf.extend_from_slice(&v.to_be_bytes());
     }
     pub fn put_i64(&mut self, v: i64) {
         self.put_u64(v as u64);
@@ -113,13 +105,18 @@ impl<'a> WireReader<'a> {
         Ok(self.take(1)?[0])
     }
     pub fn get_u16(&mut self) -> Result<u16> {
-        Ok(BigEndian::read_u16(self.take(2)?))
+        let b = self.take(2)?;
+        Ok(u16::from_be_bytes([b[0], b[1]]))
     }
     pub fn get_u32(&mut self) -> Result<u32> {
-        Ok(BigEndian::read_u32(self.take(4)?))
+        let b = self.take(4)?;
+        Ok(u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
     }
     pub fn get_u64(&mut self) -> Result<u64> {
-        Ok(BigEndian::read_u64(self.take(8)?))
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_be_bytes(a))
     }
     pub fn get_i64(&mut self) -> Result<i64> {
         Ok(self.get_u64()? as i64)

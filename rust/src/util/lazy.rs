@@ -1,0 +1,55 @@
+//! Lazy statics over `std::sync::OnceLock` (the offline environment has
+//! no once_cell crate). Only the subset the codebase needs: a
+//! const-constructible, `Deref`-transparent lazy cell initialized from a
+//! non-capturing closure.
+
+use std::ops::Deref;
+use std::sync::OnceLock;
+
+/// A value initialized on first access, safe to use in a `static`.
+pub struct Lazy<T> {
+    cell: OnceLock<T>,
+    init: fn() -> T,
+}
+
+impl<T> Lazy<T> {
+    /// `init` must be a non-capturing closure (it coerces to `fn()`).
+    pub const fn new(init: fn() -> T) -> Lazy<T> {
+        Lazy {
+            cell: OnceLock::new(),
+            init,
+        }
+    }
+
+    /// Force initialization and return the value.
+    pub fn force(this: &Lazy<T>) -> &T {
+        this.cell.get_or_init(this.init)
+    }
+}
+
+impl<T> Deref for Lazy<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        Lazy::force(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static CALLS: AtomicUsize = AtomicUsize::new(0);
+    static CELL: Lazy<Vec<u32>> = Lazy::new(|| {
+        CALLS.fetch_add(1, Ordering::SeqCst);
+        vec![1, 2, 3]
+    });
+
+    #[test]
+    fn initializes_once_and_derefs() {
+        assert_eq!(CELL.len(), 3);
+        assert_eq!(CELL[2], 3);
+        assert_eq!(CALLS.load(Ordering::SeqCst), 1, "single initialization");
+    }
+}

@@ -1,10 +1,12 @@
-//! Shared substrates: PRNG, JSON, wire I/O, stats, bench + property
-//! harnesses. These replace crates unavailable in the offline build
-//! environment (rand, serde, criterion, proptest) — see DESIGN.md §2.
+//! Shared substrates: PRNG, JSON, wire I/O, stats, lazy statics, bench +
+//! property harnesses. These replace crates unavailable in the offline
+//! build environment (rand, serde, criterion, proptest, once_cell) — see
+//! DESIGN.md §2.
 
 pub mod bench;
 pub mod bytes;
 pub mod json;
+pub mod lazy;
 pub mod prop;
 pub mod rng;
 pub mod stats;
