@@ -1,0 +1,157 @@
+//! Delta migration end-to-end: repeat offloads ship only the dirty set,
+//! results stay bit-identical to the full-capture path — including after
+//! a forced baseline eviction (digest-mismatch fallback).
+//!
+//! Three runs of the same 12-round offload loop:
+//!   1. full captures every roundtrip (the paper's original pipeline);
+//!   2. delta capsules after first contact;
+//!   3. delta capsules with the clone baseline evicted mid-session (as a
+//!      recycled farm worker would), forcing a `NeedFull` fallback.
+//! All three must produce identical application state, while (2) and (3)
+//! ship a fraction of the bytes.
+//!
+//!     cargo run --example delta_offload
+
+use std::sync::Arc;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::natives::NodeEnv;
+use clonecloud::appvm::process::Process;
+use clonecloud::appvm::value::ObjBody;
+use clonecloud::appvm::zygote::build_template;
+use clonecloud::appvm::{Heap, Program};
+use clonecloud::config::{CostParams, NetworkProfile};
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::exec::{
+    delta_workload_expected, delta_workload_src, run_distributed_session, run_monolithic,
+    InlineClone,
+};
+use clonecloud::migration::MobileSession;
+use clonecloud::vfs::SimFs;
+
+const ROUNDS: i64 = 12;
+const PAYLOAD: i64 = 2_048;
+const ZYGOTE_OBJECTS: usize = 500;
+const ZYGOTE_SEED: u64 = 7;
+
+fn make_proc(program: &Arc<Program>, template: &Heap, loc: Location) -> Process {
+    let dev = match loc {
+        Location::Mobile => DeviceSpec::phone_g1(),
+        Location::Clone => DeviceSpec::clone_desktop(),
+    };
+    Process::fork_from_zygote(
+        program.clone(),
+        template,
+        dev,
+        loc,
+        NodeEnv::with_rust_compute(SimFs::new()),
+    )
+}
+
+/// The observable application state after a run: the `out` static and
+/// the bytes of the clone-allocated `keep` array.
+fn observable_state(program: &Arc<Program>, p: &Process) -> (i64, Vec<u8>) {
+    let main = program.entry().unwrap();
+    let out = p.statics[main.class.0 as usize][1].as_int().expect("out");
+    let keep = p.statics[main.class.0 as usize][2]
+        .as_ref()
+        .expect("keep array");
+    let bytes = match &p.heap.get(keep).unwrap().body {
+        ObjBody::ByteArray(b) => b.clone(),
+        other => panic!("keep should be a byte array, got {other:?}"),
+    };
+    (out, bytes)
+}
+
+struct RunReport {
+    state: (i64, Vec<u8>),
+    bytes: u64,
+    delta_trips: usize,
+    fallbacks: usize,
+}
+
+fn run(
+    program: &Arc<Program>,
+    template: &Heap,
+    delta: bool,
+    evict_mid_session: bool,
+) -> RunReport {
+    let mut phone = make_proc(program, template, Location::Mobile);
+    let clone = make_proc(program, template, Location::Clone);
+    let mut channel = InlineClone::new(clone, CostParams::default());
+    if delta {
+        channel = channel.with_delta();
+    }
+    let mut session = MobileSession::new(delta);
+    let net = NetworkProfile::wifi();
+    let costs = CostParams::default();
+
+    // First pass of the offload loop.
+    let out1 = run_distributed_session(&mut phone, &mut channel, &net, &costs, &mut session)
+        .expect("first run");
+    if evict_mid_session {
+        // Simulate a recycled worker: the clone slot forgets the session
+        // baseline while the phone still holds it. The next delta must be
+        // rejected (`NeedFull`) and transparently resent in full.
+        channel.evict_delta_baseline();
+    }
+    // Second pass reuses the same phone, channel, and session — the
+    // repeat-offload scenario the baseline cache exists for.
+    let out2 = run_distributed_session(&mut phone, &mut channel, &net, &costs, &mut session)
+        .expect("second run");
+
+    RunReport {
+        state: observable_state(program, &phone),
+        bytes: out1.transfer.up + out1.transfer.down + out2.transfer.up + out2.transfer.down,
+        delta_trips: out1.delta_roundtrips + out2.delta_roundtrips,
+        fallbacks: out1.delta_fallbacks + out2.delta_fallbacks,
+    }
+}
+
+fn main() {
+    let program = Arc::new(assemble(&delta_workload_src(ROUNDS, PAYLOAD)).expect("assemble"));
+    clonecloud::appvm::verifier::verify_program(&program).expect("verify");
+    let template = build_template(&program, ZYGOTE_OBJECTS, ZYGOTE_SEED);
+
+    // Local reference: the partitioned binary with the "don't migrate"
+    // policy.
+    let mut local = make_proc(&program, &template, Location::Mobile);
+    run_monolithic(&mut local).expect("local run");
+    let local_state = observable_state(&program, &local);
+    assert_eq!(local_state.0, delta_workload_expected(ROUNDS));
+
+    let full = run(&program, &template, false, false);
+    let delta = run(&program, &template, true, false);
+    let evicted = run(&program, &template, true, true);
+
+    assert_eq!(full.state, local_state, "full path matches local execution");
+    assert_eq!(delta.state, full.state, "delta path is bit-identical");
+    assert_eq!(
+        evicted.state, full.state,
+        "digest-mismatch fallback is bit-identical too"
+    );
+
+    assert_eq!(full.delta_trips, 0);
+    assert!(
+        delta.delta_trips as i64 >= 2 * ROUNDS - 1,
+        "all repeat trips rode deltas ({} of {})",
+        delta.delta_trips,
+        2 * ROUNDS
+    );
+    assert_eq!(full.fallbacks, 0);
+    assert_eq!(delta.fallbacks, 0);
+    assert_eq!(evicted.fallbacks, 1, "eviction forced exactly one fallback");
+
+    let ratio = full.bytes as f64 / delta.bytes as f64;
+    println!(
+        "local out={} | full {} B | delta {} B ({} delta trips, {ratio:.1}x fewer bytes) | \
+         evicted {} B ({} fallback)",
+        local_state.0, full.bytes, delta.bytes, delta.delta_trips, evicted.bytes,
+        evicted.fallbacks
+    );
+    assert!(ratio >= 3.0, "two-run delta session saves bytes ({ratio:.2}x)");
+    println!(
+        "delta_offload: full, delta, and evicted-baseline runs all reached \
+         bit-identical state; delta shipped {ratio:.1}x fewer capsule bytes"
+    );
+}

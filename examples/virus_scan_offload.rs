@@ -16,7 +16,8 @@ use std::sync::Arc;
 use clonecloud::apps::{build_process, App, Size, VirusScan};
 use clonecloud::config::{Config, NetworkProfile};
 use clonecloud::device::Location;
-use clonecloud::exec::{run_distributed, run_monolithic};
+use clonecloud::exec::{run_distributed_session, run_monolithic};
+use clonecloud::migration::MobileSession;
 use clonecloud::nodemanager::{CloneServer, NodeManager, TcpEndpoint, TcpTransport};
 use clonecloud::partitioner::rewrite_with_partition;
 use clonecloud::pipeline::partition_app;
@@ -62,14 +63,18 @@ fn main() {
         srv.serve().expect("clone serve")
     });
 
-    // Phone side: node manager over TCP.
+    // Phone side: node manager over TCP. Hello negotiation arms delta
+    // capsules for the session (per-config).
     let mut nm = NodeManager::new(TcpTransport::connect(&addr).expect("connect"));
+    let delta = cfg.delta_migration && nm.negotiate().expect("hello");
     nm.provision(&rewritten, cfg.zygote_objects, cfg.seed ^ 0x2760)
         .expect("provision");
     let mut rng = Rng::new(cfg.seed);
     let fs = app.make_fs(size, &mut rng);
     let fs_bytes = nm.sync_fs(&fs).expect("fs sync");
-    println!("provisioned clone at {addr}; synchronized {fs_bytes} fs bytes");
+    println!(
+        "provisioned clone at {addr}; synchronized {fs_bytes} fs bytes; delta={delta}"
+    );
 
     // Baseline: monolithic on the phone.
     let mut mono = build_process(
@@ -88,7 +93,9 @@ fn main() {
         &app, rewritten.clone(), size, &cfg, Location::Mobile, backend, false,
     )
     .expect("phone process");
-    let out = run_distributed(&mut phone, &mut nm, &net, &cfg.costs).expect("distributed");
+    let mut session = MobileSession::new(delta);
+    let out = run_distributed_session(&mut phone, &mut nm, &net, &cfg.costs, &mut session)
+        .expect("distributed");
     println!(
         "CloneCloud wifi:  {:.2}s virtual  ({})  [{} migration(s), {}B up / {}B down]",
         out.virtual_ms / 1e3,

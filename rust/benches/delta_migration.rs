@@ -1,0 +1,134 @@
+//! Delta vs full migration: capsule bytes and latency across repeat
+//! offloads with a small mutated working set.
+//!
+//! One phone runs a 24-round offload loop over a 24 x 8 KiB working set;
+//! each round mutates O(1) arrays on each side. The full-capture path
+//! re-ships the whole reachable heap every roundtrip; the delta path
+//! ships the first roundtrip in full, then only the dirty set. Headline:
+//! total capsule bytes (up + down) full/delta ratio — target >= 5x — with
+//! bit-identical application results.
+//!
+//!     cargo bench --bench delta_migration
+
+use std::sync::Arc;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::natives::NodeEnv;
+use clonecloud::appvm::process::Process;
+use clonecloud::appvm::zygote::build_template;
+use clonecloud::appvm::{Heap, Program};
+use clonecloud::config::{CostParams, NetworkProfile};
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::exec::{
+    delta_workload_expected, delta_workload_src, run_distributed_session, DistOutcome,
+    InlineClone,
+};
+use clonecloud::migration::MobileSession;
+use clonecloud::util::bench::Table;
+use clonecloud::vfs::SimFs;
+
+const ROUNDS: i64 = 24;
+const PAYLOAD: i64 = 8 * 1024;
+const ZYGOTE_OBJECTS: usize = 1_000;
+const ZYGOTE_SEED: u64 = 0xDE17A;
+
+fn make_proc(program: &Arc<Program>, template: &Heap, loc: Location) -> Process {
+    let dev = match loc {
+        Location::Mobile => DeviceSpec::phone_g1(),
+        Location::Clone => DeviceSpec::clone_desktop(),
+    };
+    Process::fork_from_zygote(
+        program.clone(),
+        template,
+        dev,
+        loc,
+        NodeEnv::with_rust_compute(SimFs::new()),
+    )
+}
+
+/// One measured run; returns the outcome, the final `out` static, and
+/// wall seconds.
+fn run_mode(program: &Arc<Program>, template: &Heap, delta: bool) -> (DistOutcome, i64, f64) {
+    let mut phone = make_proc(program, template, Location::Mobile);
+    let clone = make_proc(program, template, Location::Clone);
+    let mut channel = InlineClone::new(clone, CostParams::default());
+    if delta {
+        channel = channel.with_delta();
+    }
+    let mut session = MobileSession::new(delta);
+    let t0 = std::time::Instant::now();
+    let out = run_distributed_session(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &CostParams::default(),
+        &mut session,
+    )
+    .expect("distributed run");
+    let wall = t0.elapsed().as_secs_f64();
+    let main = program.entry().unwrap();
+    let got = phone.statics[main.class.0 as usize][1]
+        .as_int()
+        .expect("out static");
+    (out, got, wall)
+}
+
+fn main() {
+    let program = Arc::new(assemble(&delta_workload_src(ROUNDS, PAYLOAD)).expect("assemble"));
+    clonecloud::appvm::verifier::verify_program(&program).expect("verify");
+    let template = build_template(&program, ZYGOTE_OBJECTS, ZYGOTE_SEED);
+    let expected = delta_workload_expected(ROUNDS);
+
+    println!(
+        "delta_migration: {ROUNDS} repeat offloads over a {ROUNDS} x {PAYLOAD} B working set, \
+         O(1) arrays mutated per round"
+    );
+
+    let mut table = Table::new(
+        "Full vs delta capsule transfer (one phone, repeat offloads)",
+        &["Mode", "Trips", "Delta", "Fallback", "Up(KB)", "Down(KB)", "KB/trip", "Wall(ms)"],
+    );
+    let mut rows: Vec<(&str, DistOutcome, f64)> = Vec::new();
+    for (name, delta) in [("full", false), ("delta", true)] {
+        let (out, got, wall) = run_mode(&program, &template, delta);
+        assert_eq!(got, expected, "{name}: application result");
+        let total = out.transfer.up + out.transfer.down;
+        table.row(vec![
+            name.to_string(),
+            out.migrations.to_string(),
+            out.delta_roundtrips.to_string(),
+            out.delta_fallbacks.to_string(),
+            format!("{:.1}", out.transfer.up as f64 / 1024.0),
+            format!("{:.1}", out.transfer.down as f64 / 1024.0),
+            format!("{:.1}", total as f64 / 1024.0 / out.migrations as f64),
+            format!("{:.1}", wall * 1e3),
+        ]);
+        rows.push((name, out, wall));
+    }
+    table.print();
+
+    let full = &rows[0].1;
+    let delta = &rows[1].1;
+    assert_eq!(
+        full.result, delta.result,
+        "full and delta paths are bit-identical"
+    );
+    let full_bytes = full.transfer.up + full.transfer.down;
+    let delta_bytes = delta.transfer.up + delta.transfer.down;
+    let ratio = full_bytes as f64 / delta_bytes as f64;
+    // Steady state (excluding the unavoidable first-contact full trip):
+    // approximate by subtracting one full-trip average from both sides.
+    let full_per_trip = full_bytes / full.migrations as u64;
+    let steady_ratio = (full_bytes - full_per_trip) as f64
+        / delta_bytes.saturating_sub(full_per_trip).max(1) as f64;
+    println!(
+        "\nfull {full_bytes} B vs delta {delta_bytes} B => {ratio:.1}x fewer capsule bytes \
+         ({steady_ratio:.1}x excluding first contact); virtual time {:.1} ms -> {:.1} ms",
+        full.virtual_ms, delta.virtual_ms
+    );
+    assert!(
+        ratio >= 5.0,
+        "delta path must ship >=5x fewer bytes (got {ratio:.2}x)"
+    );
+    println!("PASS: delta migration ships {ratio:.1}x fewer capsule bytes at identical results");
+}

@@ -4,6 +4,14 @@
 //! orphan collection (§4.2) both rely on this module: capture walks
 //! references from thread roots exactly like the mark phase; merge leaves
 //! "orphaned" objects disconnected, and a subsequent sweep collects them.
+//!
+//! The heap also carries the **mutation epoch** behind delta migration:
+//! every mutable access ([`Heap::get_mut`] — the write barrier all
+//! interpreter stores go through) stamps the object with the current
+//! epoch, and the migrator advances the epoch at each migration sync
+//! point. "Changed since the last sync" is then a single integer compare
+//! (`obj.epoch > baseline_epoch`), which is what lets a capture ship only
+//! the dirty set instead of the whole reachable heap.
 
 use std::collections::HashMap;
 
@@ -18,6 +26,9 @@ pub struct Heap {
     next_id: u64,
     /// Per-class Zygote construction counters (for (class, seq) naming).
     zygote_counters: HashMap<ClassId, u32>,
+    /// Current mutation epoch. Advanced by the migrator at each sync
+    /// point; stamped onto objects by `alloc` and `get_mut`.
+    epoch: u64,
 }
 
 impl Heap {
@@ -26,7 +37,21 @@ impl Heap {
             objects: HashMap::new(),
             next_id: 1,
             zygote_counters: HashMap::new(),
+            epoch: 0,
         }
+    }
+
+    /// Current mutation epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Advance the mutation epoch (a migration sync point); returns the
+    /// new epoch. Objects mutated from now on are distinguishable from
+    /// state the other endpoint already holds.
+    pub fn advance_epoch(&mut self) -> u64 {
+        self.epoch += 1;
+        self.epoch
     }
 
     pub fn len(&self) -> usize {
@@ -36,10 +61,13 @@ impl Heap {
         self.objects.is_empty()
     }
 
-    /// Allocate an object, assigning the next monotonic id.
-    pub fn alloc(&mut self, obj: Object) -> ObjId {
+    /// Allocate an object, assigning the next monotonic id. The object is
+    /// stamped with the current mutation epoch (a freshly allocated
+    /// object is by definition newer than any earlier sync point).
+    pub fn alloc(&mut self, mut obj: Object) -> ObjId {
         let id = ObjId(self.next_id);
         self.next_id += 1;
+        obj.epoch = self.epoch;
         self.objects.insert(id.0, obj);
         id
     }
@@ -56,11 +84,12 @@ impl Heap {
 
     /// Allocate with a specific id (merge-side re-instantiation). The id
     /// counter is bumped past it so future ids stay unique.
-    pub fn alloc_with_id(&mut self, id: ObjId, obj: Object) -> Result<()> {
+    pub fn alloc_with_id(&mut self, id: ObjId, mut obj: Object) -> Result<()> {
         if self.objects.contains_key(&id.0) {
             return Err(CloneCloudError::vm(format!("object id {} already live", id.0)));
         }
         self.next_id = self.next_id.max(id.0 + 1);
+        obj.epoch = self.epoch;
         self.objects.insert(id.0, obj);
         Ok(())
     }
@@ -71,16 +100,22 @@ impl Heap {
             .ok_or_else(|| CloneCloudError::vm(format!("dangling reference to object {}", id.0)))
     }
 
+    /// Mutable access — the write barrier. Every interpreter store goes
+    /// through here; the object is marked dirty (Zygote-diff, §4.3) and
+    /// stamped with the current mutation epoch (delta migration).
     pub fn get_mut(&mut self, id: ObjId) -> Result<&mut Object> {
+        let epoch = self.epoch;
         let o = self
             .objects
             .get_mut(&id.0)
             .ok_or_else(|| CloneCloudError::vm(format!("dangling reference to object {}", id.0)))?;
         o.dirty = true;
+        o.epoch = epoch;
         Ok(o)
     }
 
-    /// Read-only access that does NOT set the dirty bit.
+    /// Mutable access that bypasses the write barrier: neither the dirty
+    /// bit nor the mutation epoch is touched (bench/test setup only).
     pub fn peek_mut(&mut self, id: ObjId) -> Option<&mut Object> {
         self.objects.get_mut(&id.0)
     }
@@ -149,6 +184,7 @@ impl Heap {
             body: ObjBody::ByteArray(bytes),
             zygote_seq: None,
             dirty: true,
+            epoch: 0,
         })
     }
 
@@ -158,6 +194,7 @@ impl Heap {
             body: ObjBody::FloatArray(xs),
             zygote_seq: None,
             dirty: true,
+            epoch: 0,
         })
     }
 
@@ -167,6 +204,7 @@ impl Heap {
             body: ObjBody::RefArray(vec![Value::Null; n]),
             zygote_seq: None,
             dirty: true,
+            epoch: 0,
         })
     }
 }
@@ -256,6 +294,26 @@ mod tests {
         assert!(!h.get(a).unwrap().dirty);
         h.get_mut(a).unwrap();
         assert!(h.get(a).unwrap().dirty);
+    }
+
+    #[test]
+    fn write_barrier_stamps_mutation_epoch() {
+        let mut h = Heap::new();
+        let a = h.alloc(Object::new_fields(ClassId(0), 1));
+        assert_eq!(h.get(a).unwrap().epoch, 0, "allocated in epoch 0");
+
+        assert_eq!(h.advance_epoch(), 1);
+        assert_eq!(h.get(a).unwrap().epoch, 0, "untouched objects keep their stamp");
+        h.get_mut(a).unwrap();
+        assert_eq!(h.get(a).unwrap().epoch, 1, "mutation stamps the current epoch");
+
+        let b = h.alloc(Object::new_fields(ClassId(0), 1));
+        assert_eq!(h.get(b).unwrap().epoch, 1, "allocation stamps the current epoch");
+
+        // peek_mut bypasses the barrier entirely.
+        h.advance_epoch();
+        h.peek_mut(a).unwrap();
+        assert_eq!(h.get(a).unwrap().epoch, 1);
     }
 
     #[test]

@@ -150,6 +150,18 @@ impl Process {
         self.heap.gc(&roots)
     }
 
+    /// The process's current mutation epoch (see `Heap::epoch`).
+    pub fn current_epoch(&self) -> u64 {
+        self.heap.epoch()
+    }
+
+    /// Advance the mutation epoch. The migrator calls this at each
+    /// migration sync point so subsequent writes are distinguishable from
+    /// state the peer already holds (delta migration).
+    pub fn advance_epoch(&mut self) -> u64 {
+        self.heap.advance_epoch()
+    }
+
     /// Suspend all threads except `except` at their next safe point (the
     /// paper's migrator waits for this before capturing, §5). In this
     /// single-threaded-interpreter model the others are already at

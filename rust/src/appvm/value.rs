@@ -103,6 +103,10 @@ pub struct Object {
     /// Mutated since the process was forked from Zygote. Clean Zygote
     /// objects are skipped by the transfer optimization.
     pub dirty: bool,
+    /// Heap epoch of the last mutation (stamped by the `Heap::get_mut`
+    /// write barrier, and at allocation). Delta migration ships only
+    /// objects whose epoch is newer than the negotiated baseline epoch.
+    pub epoch: u64,
 }
 
 impl Object {
@@ -112,6 +116,7 @@ impl Object {
             body: ObjBody::Fields(vec![Value::Null; n]),
             zygote_seq: None,
             dirty: true,
+            epoch: 0,
         }
     }
 

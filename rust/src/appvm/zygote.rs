@@ -71,6 +71,7 @@ pub fn build_template(program: &Arc<Program>, n_objects: usize, seed: u64) -> He
             body: ObjBody::Fields(vec![Value::Int(rng.range_i64(0, 1 << 20)), chain]),
             zygote_seq: None, // assigned by alloc_zygote
             dirty: true,      // cleared by alloc_zygote
+            epoch: 0,         // template objects predate every sync point
         };
         let id = heap.alloc_zygote(obj);
         prev = Some(Value::Ref(id));

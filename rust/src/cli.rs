@@ -20,7 +20,7 @@ use crate::apps::{all_apps, build_process, App, BehaviorProfile, ImageSearch, Si
 use crate::config::{Config, NetworkProfile};
 use crate::device::Location;
 use crate::error::{CloneCloudError, Result};
-use crate::exec::{run_distributed, run_monolithic, InlineClone};
+use crate::exec::{run_distributed_session, run_monolithic, InlineClone};
 use crate::farm::{
     synthetic_expected, synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
 };
@@ -198,12 +198,19 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             app.as_ref(), rewritten, size, &cfg, Location::Clone, backend, false,
         )?;
         let mut channel = InlineClone::new(clone, cfg.costs.clone());
-        let out = run_distributed(&mut phone, &mut channel, &net, &cfg.costs)?;
+        if cfg.delta_migration {
+            channel = channel.with_delta();
+        }
+        let mut session = crate::migration::MobileSession::new(cfg.delta_migration);
+        let out =
+            run_distributed_session(&mut phone, &mut channel, &net, &cfg.costs, &mut session)?;
         println!(
-            "CloneCloud run ({}): {:.2}s virtual, {} migration(s), {}B up / {}B down ({})",
+            "CloneCloud run ({}): {:.2}s virtual, {} migration(s) ({} delta), \
+             {}B up / {}B down ({})",
             net.name,
             out.virtual_ms / 1e3,
             out.migrations,
+            out.delta_roundtrips,
             out.transfer.up,
             out.transfer.down,
             app.check(&phone, size)?
@@ -360,6 +367,10 @@ fn cmd_farm(flags: &HashMap<String, String>) -> Result<()> {
         fs.add("data.bin", bytes);
         let expected = synthetic_expected(&fs, iters);
         let mut session = handle.session(phone, fs.synchronize());
+        // Delta only pays off when placement parks the phone's baseline
+        // on one worker (affinity); other policies would thrash NeedFull.
+        let delta = cfg.delta_migration && handle.delta_friendly();
+        session.set_delta(delta);
         joins.push(std::thread::spawn(move || -> Result<()> {
             let mut p = crate::appvm::Process::fork_from_zygote(
                 program.clone(),
@@ -368,7 +379,14 @@ fn cmd_farm(flags: &HashMap<String, String>) -> Result<()> {
                 Location::Mobile,
                 crate::appvm::NodeEnv::with_rust_compute(fs),
             );
-            run_distributed(&mut p, &mut session, &NetworkProfile::wifi(), &costs)?;
+            let mut msess = crate::migration::MobileSession::new(delta);
+            run_distributed_session(
+                &mut p,
+                &mut session,
+                &NetworkProfile::wifi(),
+                &costs,
+                &mut msess,
+            )?;
             let main = program.entry()?;
             let got = p.statics[main.class.0 as usize][0].as_int();
             if got != Some(expected) {

@@ -155,6 +155,12 @@ pub struct Config {
     pub zygote_objects: usize,
     /// Seed for all workload generation.
     pub seed: u64,
+    /// Delta migration: ship only the mutated working set on repeat
+    /// migrations (epoch-based dirty tracking + per-session baseline
+    /// caches). Off = full capture every roundtrip (the paper's original
+    /// behavior; also the automatic fallback whenever a baseline is
+    /// missing or incoherent).
+    pub delta_migration: bool,
     /// Clone-farm parameters (multi-tenant serving).
     pub farm: FarmParams,
 }
@@ -168,6 +174,7 @@ impl Default for Config {
             artifacts_dir: "artifacts".into(),
             zygote_objects: 40_000,
             seed: 0xC10E,
+            delta_migration: true,
             farm: FarmParams::default(),
         }
     }
@@ -216,6 +223,11 @@ impl Config {
                         .as_i64()
                         .ok_or_else(|| CloneCloudError::Config("seed".into()))?
                         as u64
+                }
+                "delta_migration" => {
+                    cfg.delta_migration = val
+                        .as_bool()
+                        .ok_or_else(|| CloneCloudError::Config("delta_migration".into()))?
                 }
                 "costs" => {
                     let c = val
@@ -337,6 +349,15 @@ mod tests {
         assert_eq!(cfg.costs.instr_us, 0.5);
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.clone.cpu_factor, 1.0, "untouched default");
+    }
+
+    #[test]
+    fn delta_migration_knob() {
+        assert!(Config::default().delta_migration, "delta on by default");
+        let v = json::parse(r#"{"delta_migration": false}"#).unwrap();
+        assert!(!Config::from_json(&v).unwrap().delta_migration);
+        let bad = json::parse(r#"{"delta_migration": 3}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err(), "non-bool rejected");
     }
 
     #[test]

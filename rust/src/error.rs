@@ -23,6 +23,11 @@ pub enum CloneCloudError {
     /// Migration capture/merge failures.
     Migration(String),
 
+    /// A delta capsule was rejected because the receiver does not hold
+    /// the negotiated baseline (first contact, recycled worker, digest
+    /// mismatch). Recoverable: the sender re-captures in full.
+    NeedFull(String),
+
     /// Wire-format decode failures.
     Wire(String),
 
@@ -58,6 +63,9 @@ impl fmt::Display for CloneCloudError {
                 write!(f, "native error in {name}: {message}")
             }
             CloneCloudError::Migration(m) => write!(f, "migration error: {m}"),
+            CloneCloudError::NeedFull(m) => {
+                write!(f, "delta rejected: {m} (resend a full capture)")
+            }
             CloneCloudError::Wire(m) => write!(f, "wire error: {m}"),
             CloneCloudError::Transport(m) => write!(f, "transport error: {m}"),
             CloneCloudError::Partitioner(m) => write!(f, "partitioner error: {m}"),
@@ -103,6 +111,14 @@ impl CloneCloudError {
     }
     pub fn migration(msg: impl Into<String>) -> Self {
         CloneCloudError::Migration(msg.into())
+    }
+    pub fn need_full(msg: impl Into<String>) -> Self {
+        CloneCloudError::NeedFull(msg.into())
+    }
+    /// True when the error is the recoverable "resend a full capture"
+    /// signal of the delta-migration path.
+    pub fn is_need_full(&self) -> bool {
+        matches!(self, CloneCloudError::NeedFull(_))
     }
     pub fn partitioner(msg: impl Into<String>) -> Self {
         CloneCloudError::Partitioner(msg.into())

@@ -15,27 +15,57 @@
 //! time: the phone clock carries suspend + capture + uplink; the clone
 //! continues from the received timestamp; the phone then adopts the
 //! clone's finish time plus downlink + merge.
+//!
+//! **Delta migration**: [`run_distributed_session`] threads a
+//! [`MobileSession`] through the run. After first contact, repeat
+//! migrations ship only the mutated working set (epoch-based dirty
+//! tracking, `migration::delta`); a clone that lost its baseline answers
+//! `NeedFull` and the driver transparently falls back to a full capture.
+//! The session can outlive a single run — keep it (and the channel)
+//! around and repeat offloads from the same phone keep paying O(dirty)
+//! instead of O(heap). [`run_distributed`] is the session-less wrapper:
+//! full captures every time, the paper's original behavior.
 
 use crate::appvm::interp::{run_thread, NoHooks, RunExit};
 use crate::appvm::process::Process;
 use crate::appvm::value::Value;
 use crate::config::{CostParams, NetworkProfile};
 use crate::error::{CloneCloudError, Result};
-use crate::migration::{CapturePacket, MigrationPhases, Migrator};
+use crate::migration::{Capsule, CloneSession, MigrationPhases, Migrator, MobileSession};
 use crate::nodemanager::{NodeManager, TransferBytes, Transport};
 
 pub use crate::farm::FarmClone;
 
 /// Where the offloaded span runs.
 pub trait CloneChannel {
-    /// Process one forward capture; return the reverse capture bytes and
-    /// the clone's virtual finish time is inside the packet.
+    /// Process one forward capsule; return the reverse capsule bytes (the
+    /// clone's virtual finish time is inside the capsule). A typed
+    /// `NeedFull` error asks the driver to resend a full capture.
     fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)>;
+
+    /// Whether this channel negotiated delta capsules. The driver
+    /// disables a session's delta path when the channel cannot carry it.
+    fn delta_capable(&self) -> bool {
+        false
+    }
+
+    /// Stand down the clone side's delta emission. The driver calls this
+    /// when its `MobileSession` is disabled, so an armed channel cannot
+    /// send back reverse deltas the mobile cannot merge.
+    fn disarm_delta(&mut self) {}
 }
 
 impl<T: Transport> CloneChannel for NodeManager<T> {
     fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
         self.migrate(forward)
+    }
+
+    fn delta_capable(&self) -> bool {
+        self.delta_negotiated()
+    }
+
+    fn disarm_delta(&mut self) {
+        self.renegotiate_off();
     }
 }
 
@@ -43,6 +73,7 @@ impl<T: Transport> CloneChannel for NodeManager<T> {
 pub struct InlineClone {
     pub clone: Process,
     migrator: Migrator,
+    session: CloneSession,
     pub migrations: usize,
 }
 
@@ -51,6 +82,7 @@ impl InlineClone {
         InlineClone {
             clone,
             migrator: Migrator::new(costs),
+            session: CloneSession::new(false),
             migrations: 0,
         }
     }
@@ -59,13 +91,29 @@ impl InlineClone {
         self.migrator = self.migrator.without_zygote_diff();
         self
     }
+
+    /// Enable delta capsules on this channel (pair with an enabled
+    /// [`MobileSession`] in `run_distributed_session`).
+    pub fn with_delta(mut self) -> InlineClone {
+        self.session.set_enabled(true);
+        self
+    }
+
+    /// Drop the clone-side baseline, as a recycled farm worker would:
+    /// the next delta roundtrip is rejected with `NeedFull` and the
+    /// session re-establishes from a full capture.
+    pub fn evict_delta_baseline(&mut self) {
+        self.session.evict();
+    }
 }
 
 impl CloneChannel for InlineClone {
     fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
         let up = forward.len() as u64;
-        let packet = CapturePacket::decode(&forward)?;
-        let (tid, table, _) = self.migrator.receive_at_clone(&mut self.clone, &packet)?;
+        let capsule = Capsule::decode(&forward)?;
+        let (tid, _) = self
+            .migrator
+            .receive_capsule_at_clone(&mut self.clone, &capsule, &mut self.session)?;
         loop {
             match run_thread(&mut self.clone, tid, &mut NoHooks, u64::MAX)? {
                 RunExit::ReintegrationPoint { .. } => break,
@@ -79,12 +127,22 @@ impl CloneChannel for InlineClone {
             }
         }
         self.migrations += 1;
-        let (rpacket, _, _) = self
-            .migrator
-            .return_from_clone(&mut self.clone, tid, table)?;
-        let bytes = rpacket.encode();
+        let (rcapsule, _, _) = self.migrator.return_capsule_from_clone(
+            &mut self.clone,
+            tid,
+            &mut self.session,
+        )?;
+        let bytes = rcapsule.encode();
         let down = bytes.len() as u64;
         Ok((bytes, TransferBytes { up, down }))
+    }
+
+    fn delta_capable(&self) -> bool {
+        self.session.is_enabled()
+    }
+
+    fn disarm_delta(&mut self) {
+        self.session.set_enabled(false);
     }
 }
 
@@ -103,17 +161,51 @@ pub struct DistOutcome {
     pub merge_ms: f64,
     pub objects_shipped: usize,
     pub zygote_skipped: usize,
+    /// Baseline objects referenced by id instead of shipped (delta).
+    pub base_skipped: usize,
+    /// Roundtrips whose forward capsule was a delta.
+    pub delta_roundtrips: usize,
+    /// Roundtrips that went out as full captures.
+    pub full_roundtrips: usize,
+    /// Deltas rejected by the clone (`NeedFull`) and resent in full.
+    pub delta_fallbacks: usize,
 }
 
 /// Run the partitioned binary on `phone`, off-loading each migration
-/// span through `channel` under the `net` cost model.
+/// span through `channel` under the `net` cost model. Full captures every
+/// roundtrip (the session-less baseline).
 pub fn run_distributed<C: CloneChannel>(
     phone: &mut Process,
     channel: &mut C,
     net: &NetworkProfile,
     costs: &CostParams,
 ) -> Result<DistOutcome> {
+    let mut session = MobileSession::disabled();
+    run_distributed_session(phone, channel, net, costs, &mut session)
+}
+
+/// Session-aware distributed run: delta migration when `session` is
+/// enabled AND the channel negotiated it. The session may be reused
+/// across runs on the same phone/channel pairing to keep the baseline
+/// cache warm.
+pub fn run_distributed_session<C: CloneChannel>(
+    phone: &mut Process,
+    channel: &mut C,
+    net: &NetworkProfile,
+    costs: &CostParams,
+    session: &mut MobileSession,
+) -> Result<DistOutcome> {
     let wall0 = std::time::Instant::now();
+    if session.is_enabled() && !channel.delta_capable() {
+        // The peer cannot carry deltas; degrade the session once, loudly
+        // in the stats rather than silently per-roundtrip.
+        session.disable();
+    }
+    if !session.is_enabled() {
+        // Symmetric guard: an armed channel must not send back reverse
+        // deltas this session cannot merge.
+        channel.disarm_delta();
+    }
     let migrator = Migrator::new(costs.clone());
     let entry = phone.program.entry()?;
     let tid = phone.spawn_thread(entry, &[])?;
@@ -126,35 +218,47 @@ pub fn run_distributed<C: CloneChannel>(
             RunExit::OutOfFuel => unreachable!("u64::MAX fuel"),
             RunExit::MigrationPoint { .. } => {
                 // --- policy: this binary was picked for offload ---------
-                let (mut packet, phases) = migrator.migrate_out(phone, tid)?;
-                out.suspend_capture_ms += phases.suspend_ms + phases.capture_ms;
-                out.objects_shipped += phases.objects_shipped;
-                out.zygote_skipped += phases.zygote_skipped;
+                let (capsule, phases) = migrator.migrate_out_capsule(phone, tid, session)?;
+                absorb_capture_phases(&mut out, &phases);
+                let sent_delta = capsule.is_delta();
+                if sent_delta {
+                    out.delta_roundtrips += 1;
+                } else {
+                    out.full_roundtrips += 1;
+                }
 
-                // Uplink on the phone's slow path, for the real bytes.
-                let fwd = {
-                    let bytes = packet.encode();
-                    let up_ms = net.transfer_ms(bytes.len() as u64, true);
-                    phone.clock.charge_ms(up_ms);
-                    out.uplink_ms += up_ms;
-                    // Clone resumes at the post-transfer timestamp.
-                    packet.clock_us = phone.clock.now_us();
-                    packet.encode()
+                let fwd = stamp_and_encode(phone, net, &mut out, capsule);
+                let fwd_len = fwd.len() as u64;
+                let (rbytes, transfer) = match channel.roundtrip(fwd) {
+                    Ok(ok) => ok,
+                    Err(e) if e.is_need_full() && sent_delta => {
+                        // The rejected delta still crossed the uplink.
+                        out.transfer.up += fwd_len;
+                        // The clone lost/rejected the baseline: resend in
+                        // full.
+                        out.delta_fallbacks += 1;
+                        out.delta_roundtrips -= 1;
+                        out.full_roundtrips += 1;
+                        let (full, phases) = migrator.recapture_full(phone, tid, session)?;
+                        absorb_capture_phases(&mut out, &phases);
+                        let fwd = stamp_and_encode(phone, net, &mut out, full);
+                        channel.roundtrip(fwd)?
+                    }
+                    Err(e) => return Err(e),
                 };
-
-                let (rbytes, transfer) = channel.roundtrip(fwd)?;
                 out.transfer.up += transfer.up;
                 out.transfer.down += transfer.down;
                 out.migrations += 1;
 
-                let rpacket = CapturePacket::decode(&rbytes)?;
+                let rcapsule = Capsule::decode(&rbytes)?;
                 // Adopt the clone's finish time, then pay the downlink.
-                phone.clock.advance_to_us(rpacket.clock_us);
+                phone.clock.advance_to_us(rcapsule.clock_us());
                 let down_ms = net.transfer_ms(rbytes.len() as u64, false);
                 phone.clock.charge_ms(down_ms);
                 out.downlink_ms += down_ms;
 
-                let (_stats, phases) = migrator.merge_back(phone, tid, &rpacket)?;
+                let (_stats, phases) =
+                    migrator.merge_back_capsule(phone, tid, &rcapsule, session)?;
                 out.merge_ms += phases.merge_ms;
             }
         }
@@ -163,6 +267,112 @@ pub fn run_distributed<C: CloneChannel>(
     out.result = result;
     out.wall_s = wall0.elapsed().as_secs_f64();
     Ok(out)
+}
+
+fn absorb_capture_phases(out: &mut DistOutcome, phases: &MigrationPhases) {
+    out.suspend_capture_ms += phases.suspend_ms + phases.capture_ms;
+    out.objects_shipped += phases.objects_shipped;
+    out.zygote_skipped += phases.zygote_skipped;
+    out.base_skipped += phases.base_skipped;
+}
+
+/// Charge the uplink for the capsule's real bytes, stamp the post-transfer
+/// timestamp into it, and encode the final wire form.
+fn stamp_and_encode(
+    phone: &mut Process,
+    net: &NetworkProfile,
+    out: &mut DistOutcome,
+    mut capsule: Capsule,
+) -> Vec<u8> {
+    let bytes = capsule.encode();
+    let up_ms = net.transfer_ms(bytes.len() as u64, true);
+    phone.clock.charge_ms(up_ms);
+    out.uplink_ms += up_ms;
+    // Clone resumes at the post-transfer timestamp.
+    capsule.set_clock_us(phone.clock.now_us());
+    capsule.encode()
+}
+
+/// Assembly for the delta-migration workload used by
+/// `benches/delta_migration.rs` and `examples/delta_offload.rs`:
+/// `rounds` byte arrays of `payload` bytes hang off a static; each round
+/// the phone dirties one byte of round `i`'s array, offloads a byte-sum
+/// over it (the clone dirties a second byte and allocates a fresh
+/// 4-byte array into `keep`), and accumulates the sum. Per round only
+/// O(1) of the arrays changes — the shape delta migration exploits —
+/// while a full capture re-ships all of them.
+///
+/// Requires `rounds <= 256` (byte-array stores) and `payload >= 2`.
+pub fn delta_workload_src(rounds: i64, payload: i64) -> String {
+    assert!((1..=256).contains(&rounds) && payload >= 2);
+    format!(
+        r#"
+class Delta app
+  static data
+  static out
+  static keep
+  method main nargs=0 regs=12
+    const r0 {rounds}
+    newarr r1 val r0
+    puts Delta.data r1
+    const r2 0
+    const r3 {payload}
+  mk:
+    ifge r2 r0 @mkd
+    newarr r4 byte r3
+    aput r1 r2 r4
+    const r5 1
+    add r2 r2 r5
+    goto @mk
+  mkd:
+    const r6 0
+    const r10 0
+  loop:
+    ifge r6 r0 @done
+    aget r4 r1 r6
+    const r5 0
+    aput r4 r5 r6
+    invoke r8 Delta.work r4
+    add r10 r10 r8
+    const r5 1
+    add r6 r6 r5
+    goto @loop
+  done:
+    puts Delta.out r10
+    retv
+  end
+  method work nargs=1 regs=8
+    ccstart 0
+    len r1 r0
+    const r2 0
+    const r3 0
+  sum:
+    ifge r2 r1 @sd
+    aget r4 r0 r2
+    add r3 r3 r4
+    const r5 1
+    add r2 r2 r5
+    goto @sum
+  sd:
+    const r6 1
+    aput r0 r6 r3
+    const r7 4
+    newarr r2 byte r7
+    const r6 0
+    aput r2 r6 r3
+    puts Delta.keep r2
+    ccstop 0
+    ret r3
+  end
+end
+"#
+    )
+}
+
+/// The `out` static `delta_workload_src` computes: round `i` sums array
+/// `i`, which holds a single non-zero byte `i`, so out = Σ i.
+pub fn delta_workload_expected(rounds: i64) -> i64 {
+    rounds * (rounds - 1) / 2
 }
 
 /// Migration-phase record for the E3 bench: one round trip's breakdown.
@@ -182,9 +392,4 @@ impl DistOutcome {
     pub fn migration_overhead_ms(&self) -> f64 {
         self.suspend_capture_ms + self.uplink_ms + self.downlink_ms + self.merge_ms
     }
-}
-
-#[allow(unused)]
-fn _assert_phases_used(p: MigrationPhases) -> f64 {
-    p.suspend_ms
 }

@@ -5,10 +5,14 @@
 //! * [`distributed`] — the CloneCloud run: launch the partitioned binary,
 //!   migrate at CcStart, execute at the clone, reintegrate at CcStop,
 //!   merge, continue — with virtual network time charged from the real
-//!   byte counts.
+//!   byte counts. `run_distributed_session` adds delta migration on top
+//!   (epoch-based dirty tracking, `NeedFull` full-capture fallback).
 
 pub mod distributed;
 pub mod monolithic;
 
-pub use distributed::{run_distributed, DistOutcome, FarmClone, InlineClone};
+pub use distributed::{
+    delta_workload_expected, delta_workload_src, run_distributed, run_distributed_session,
+    DistOutcome, FarmClone, InlineClone,
+};
 pub use monolithic::{run_monolithic, run_monolithic_hooked, MonoOutcome};

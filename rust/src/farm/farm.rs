@@ -107,6 +107,11 @@ pub(crate) struct FarmShared {
     pub instrs_executed: AtomicU64,
     pub admission_wait_us: AtomicU64,
     pub queue_wait_us: AtomicU64,
+    /// Migrations served from delta capsules (baseline-cache hits).
+    pub delta_migrations: AtomicU64,
+    /// Delta capsules answered with `NeedFull` (evicted/incoherent
+    /// baseline; the phone fell back to a full capture).
+    pub delta_rejects: AtomicU64,
 }
 
 /// A point-in-time snapshot of farm counters.
@@ -124,6 +129,10 @@ pub struct FarmStats {
     pub pool_hits: u64,
     pub pool_misses: u64,
     pub pool_refills: u64,
+    /// Migrations that rode delta capsules (vs full captures).
+    pub delta_migrations: u64,
+    /// Delta capsules the farm rejected with `NeedFull`.
+    pub delta_rejects: u64,
     /// Total time sessions spent blocked at admission.
     pub admission_wait_ms: f64,
     /// Total time jobs waited in worker queues after admission.
@@ -176,6 +185,15 @@ impl FarmHandle {
         (self.shared.zygote_objects, self.shared.zygote_seed)
     }
 
+    /// Whether this farm's placement keeps a phone's repeat migrations
+    /// on the worker holding its delta baseline. Only affinity placement
+    /// does — arming delta under round-robin or least-loaded would turn
+    /// most migrations into a `NeedFull` reject plus a full resend,
+    /// strictly worse than full captures.
+    pub fn delta_friendly(&self) -> bool {
+        matches!(self.shared.scheduler.policy(), PlacementPolicy::Affinity)
+    }
+
     pub fn stats(&self) -> FarmStats {
         let s = &self.shared;
         FarmStats {
@@ -191,6 +209,8 @@ impl FarmHandle {
             pool_hits: s.pool.hits.load(Ordering::Relaxed),
             pool_misses: s.pool.misses.load(Ordering::Relaxed),
             pool_refills: s.pool.refills.load(Ordering::Relaxed),
+            delta_migrations: s.delta_migrations.load(Ordering::Relaxed),
+            delta_rejects: s.delta_rejects.load(Ordering::Relaxed),
             admission_wait_ms: s.admission_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             queue_wait_ms: s.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             worker_jobs: s
@@ -246,6 +266,8 @@ impl CloneFarm {
             instrs_executed: AtomicU64::new(0),
             admission_wait_us: AtomicU64::new(0),
             queue_wait_us: AtomicU64::new(0),
+            delta_migrations: AtomicU64::new(0),
+            delta_rejects: AtomicU64::new(0),
         });
 
         let mut senders = Vec::with_capacity(cfg.workers);

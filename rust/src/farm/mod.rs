@@ -264,6 +264,94 @@ mod tests {
         );
     }
 
+    /// Affinity-pinned worker slots retain the delta baseline across
+    /// repeat offloads: after first contact every migration rides a
+    /// delta capsule; recycling the slot (session close) degrades the
+    /// next delta to a `NeedFull` fallback and the session re-arms.
+    #[test]
+    fn delta_baseline_survives_repeat_offloads_and_recycle() {
+        let program = farm_program();
+        let cfg = FarmConfig {
+            workers: 2,
+            warm_per_worker: 1,
+            queue_depth: 4,
+            policy: PlacementPolicy::Affinity,
+            zygote_objects: ZY_OBJECTS,
+            zygote_seed: ZY_SEED,
+            fuel: 100_000_000,
+        };
+        let farm = CloneFarm::start(
+            program.clone(),
+            cfg,
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        let template = Arc::new(build_template(&program, ZY_OBJECTS, ZY_SEED));
+        let fs = phone_fs(7);
+        let expected = synthetic_expected(&fs, ITERS);
+        let main = program.entry().unwrap();
+
+        let mut p = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(fs.synchronize()),
+        );
+        let mut msess = crate::migration::MobileSession::new(true);
+
+        let mut session = farm.session(7, fs.clone());
+        session.set_delta(true);
+        for _ in 0..3 {
+            let out = crate::exec::run_distributed_session(
+                &mut p,
+                &mut session,
+                &NetworkProfile::wifi(),
+                &CostParams::default(),
+                &mut msess,
+            )
+            .unwrap();
+            assert_eq!(out.delta_fallbacks, 0);
+            assert_eq!(
+                p.statics[main.class.0 as usize][0].as_int(),
+                Some(expected)
+            );
+        }
+        // Recycle the slot: close retires the phone's clone on every
+        // worker; the phone still holds its baseline, so the next delta
+        // is rejected and transparently resent in full.
+        session.close();
+        drop(session);
+        let mut session = farm.session(7, fs.clone());
+        session.set_delta(true);
+        let out = crate::exec::run_distributed_session(
+            &mut p,
+            &mut session,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut msess,
+        )
+        .unwrap();
+        assert_eq!(out.delta_fallbacks, 1, "evicted slot forced one fallback");
+        assert_eq!(
+            p.statics[main.class.0 as usize][0].as_int(),
+            Some(expected),
+            "fallback run still merges the right result"
+        );
+        session.close();
+        drop(session);
+
+        let stats = farm.shutdown();
+        assert_eq!(stats.migrations, 4);
+        assert_eq!(stats.errors, 0, "NeedFull is not an error");
+        assert_eq!(
+            stats.delta_migrations, 2,
+            "repeat offloads on the warm slot rode deltas"
+        );
+        assert_eq!(stats.delta_rejects, 1);
+    }
+
     /// A closed session refuses further roundtrips.
     #[test]
     fn closed_session_errors() {

@@ -42,6 +42,9 @@ pub struct FarmClone {
     fs: Arc<SimFs>,
     fs_version: u32,
     closed: bool,
+    /// Delta capsules negotiated for this session. The affinity-pinned
+    /// worker slot then keeps the baseline cache across roundtrips.
+    delta: bool,
     pub stats: SessionStats,
 }
 
@@ -59,12 +62,24 @@ impl FarmClone {
             fs: Arc::new(fs),
             fs_version: 0,
             closed: false,
+            delta: false,
             stats: SessionStats::default(),
         }
     }
 
     pub fn phone_id(&self) -> u64 {
         self.phone
+    }
+
+    /// Enable/disable delta capsules for this session (the gateway arms
+    /// this after Hello negotiation; in-process callers set it directly).
+    pub fn set_delta(&mut self, on: bool) {
+        self.delta = on;
+    }
+
+    /// Whether delta capsules are enabled on this session.
+    pub fn delta_enabled(&self) -> bool {
+        self.delta
     }
 
     /// Replace the session's synchronized file system. Clone slots pick
@@ -96,6 +111,7 @@ impl FarmClone {
             fs: self.fs.clone(),
             fs_version: self.fs_version,
             forward,
+            delta_ok: self.delta,
             submitted: Instant::now(),
             reply: reply_tx,
         };
@@ -120,6 +136,15 @@ impl FarmClone {
                 self.shared.bytes_up.fetch_add(up, Ordering::Relaxed);
                 self.shared.bytes_down.fetch_add(down, Ordering::Relaxed);
                 Ok((bytes, TransferBytes { up, down }))
+            }
+            // NeedFull is the recoverable delta-fallback signal, not a
+            // session failure: the driver re-sends a full capture. The
+            // rejected delta still crossed the uplink — count it, so the
+            // farm's byte counters agree with the driver's.
+            Ok(Err(e)) if e.is_need_full() => {
+                self.stats.bytes_up += up;
+                self.shared.bytes_up.fetch_add(up, Ordering::Relaxed);
+                Err(e)
             }
             Ok(Err(e)) => {
                 self.stats.errors += 1;
@@ -153,6 +178,14 @@ impl FarmClone {
 impl CloneChannel for FarmClone {
     fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
         self.roundtrip_bytes(forward)
+    }
+
+    fn delta_capable(&self) -> bool {
+        self.delta_enabled()
+    }
+
+    fn disarm_delta(&mut self) {
+        self.set_delta(false);
     }
 }
 

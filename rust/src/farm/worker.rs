@@ -23,7 +23,7 @@ use std::time::Instant;
 use crate::appvm::process::Process;
 use crate::config::CostParams;
 use crate::error::Result;
-use crate::migration::Migrator;
+use crate::migration::{CloneSession, Migrator};
 use crate::nodemanager::{execute_migration, CloneServeStats};
 use crate::vfs::SimFs;
 
@@ -36,6 +36,8 @@ pub(crate) struct Job {
     pub fs: Arc<SimFs>,
     pub fs_version: u32,
     pub forward: Vec<u8>,
+    /// The session negotiated delta capsules.
+    pub delta_ok: bool,
     pub submitted: Instant,
     pub reply: Sender<Result<Vec<u8>>>,
 }
@@ -48,10 +50,16 @@ pub(crate) enum FarmMsg {
     Shutdown,
 }
 
-/// A provisioned per-phone clone process.
+/// A provisioned per-phone clone process. The slot retains the delta
+/// session baseline (persistent MID/CID table + epoch + digest) across
+/// repeat migrations from its phone — the payoff of affinity placement.
+/// Retiring the slot (session close / worker recycle) drops the baseline;
+/// the phone's next delta is answered with `NeedFull` and the session
+/// re-establishes from a full capture.
 struct CloneSlot {
     proc: Process,
     fs_version: u32,
+    session: CloneSession,
 }
 
 /// Worker thread body. Exits on `Shutdown` or when every sender is gone.
@@ -88,15 +96,29 @@ pub(crate) fn worker_main(
                 let slot = slots.entry(job.phone).or_insert_with(|| CloneSlot {
                     proc: pool.take(&job.fs),
                     fs_version: job.fs_version,
+                    session: CloneSession::new(job.delta_ok),
                 });
                 if slot.fs_version != job.fs_version {
                     slot.proc.env.vfs = job.fs.synchronize();
                     slot.fs_version = job.fs_version;
                 }
+                slot.session.set_enabled(job.delta_ok);
 
                 let mut serve = CloneServeStats::default();
-                let result =
-                    execute_migration(&migrator, &mut slot.proc, &job.forward, fuel, &mut serve);
+                let result = execute_migration(
+                    &migrator,
+                    &mut slot.proc,
+                    &job.forward,
+                    fuel,
+                    &mut serve,
+                    &mut slot.session,
+                );
+                if matches!(&result, Err(e) if e.is_need_full()) {
+                    shared.delta_rejects.fetch_add(1, Ordering::Relaxed);
+                }
+                shared
+                    .delta_migrations
+                    .fetch_add(serve.delta_migrations as u64, Ordering::Relaxed);
                 shared
                     .instrs_executed
                     .fetch_add(serve.instrs_executed, Ordering::Relaxed);

@@ -6,12 +6,17 @@
 //! * [`partitioner`] — static analysis + dynamic profiling + ILP solver
 //!   + bytecode rewriter (paper §3).
 //! * [`migration`] — thread suspend/capture/resume/merge with the
-//!   MID/CID object-mapping table and Zygote-diff optimization (§4).
-//! * [`nodemanager`] — transport, wire protocol, clone provisioning:
-//!   the 1:1 `CloneServer` and the serve-many farm gateway.
+//!   MID/CID object-mapping table and Zygote-diff optimization (§4),
+//!   plus epoch-based **delta migration**: per-session baseline caches
+//!   ship only the mutated working set on repeat offloads, with a
+//!   digest-guarded full-capture fallback (`NeedFull`).
+//! * [`nodemanager`] — transport, wire protocol (v3: `Hello` capability
+//!   negotiation, delta `NeedFull` frames), clone provisioning: the 1:1
+//!   `CloneServer` and the serve-many farm gateway.
 //! * [`farm`] — the multi-tenant clone farm (beyond the paper): warm
 //!   pool, placement policies, admission control, phone sessions
-//!   multiplexed over clone workers.
+//!   multiplexed over clone workers; affinity-pinned slots retain the
+//!   delta baseline across a phone's repeat migrations.
 //! * [`runtime`] — PJRT loader executing the AOT HLO artifacts built by
 //!   `python/compile/aot.py` (L1 Pallas kernels + L2 JAX graphs).
 //! * [`apps`] — the paper's three evaluation applications.

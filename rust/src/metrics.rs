@@ -41,8 +41,23 @@ impl MetricsSnapshot {
         self.count("migrations", out.migrations as u64);
         self.count("bytes.up", out.transfer.up);
         self.count("bytes.down", out.transfer.down);
+        // Per-direction migration wire bytes under the `migration.`
+        // namespace, so delta benches and farm reports can show bytes
+        // saved without ad-hoc plumbing.
+        self.count("migration.bytes_out", out.transfer.up);
+        self.count("migration.bytes_in", out.transfer.down);
+        self.count("migration.delta.roundtrips", out.delta_roundtrips as u64);
+        self.count("migration.full.roundtrips", out.full_roundtrips as u64);
+        self.count("migration.delta.fallbacks", out.delta_fallbacks as u64);
         self.count("objects.shipped", out.objects_shipped as u64);
         self.count("objects.zygote_skipped", out.zygote_skipped as u64);
+        self.count("objects.base_skipped", out.base_skipped as u64);
+        if out.migrations > 0 {
+            self.gauge(
+                "migration.delta.hit_rate",
+                out.delta_roundtrips as f64 / out.migrations as f64,
+            );
+        }
         self.gauge("virtual_ms", out.virtual_ms);
         self.gauge("phase.suspend_capture_ms", out.suspend_capture_ms);
         self.gauge("phase.uplink_ms", out.uplink_ms);
@@ -63,7 +78,15 @@ impl MetricsSnapshot {
         self.count("farm.pool.hits", f.pool_hits);
         self.count("farm.pool.misses", f.pool_misses);
         self.count("farm.pool.refills", f.pool_refills);
+        self.count("farm.delta.migrations", f.delta_migrations);
+        self.count("farm.delta.rejects", f.delta_rejects);
         self.gauge("farm.pool.hit_rate", f.pool_hit_rate());
+        if f.migrations > 0 {
+            self.gauge(
+                "farm.delta.hit_rate",
+                f.delta_migrations as f64 / f.migrations as f64,
+            );
+        }
         self.gauge("farm.admission_wait_ms", f.admission_wait_ms);
         self.gauge("farm.queue_wait_ms", f.queue_wait_ms);
         for (i, (jobs, busy)) in f.worker_jobs.iter().zip(&f.worker_busy_ms).enumerate() {
@@ -110,6 +133,29 @@ mod tests {
         assert_eq!(m.counters["farm.worker1.jobs"], 4);
         assert!((m.gauges["farm.pool.hit_rate"] - 0.75).abs() < 1e-9);
         assert!(m.render().contains("farm.admission_wait_ms = 12.500"));
+    }
+
+    #[test]
+    fn absorb_dist_records_per_direction_bytes_and_delta() {
+        let mut m = MetricsSnapshot::default();
+        let out = DistOutcome {
+            migrations: 4,
+            transfer: crate::nodemanager::TransferBytes {
+                up: 1000,
+                down: 2000,
+            },
+            delta_roundtrips: 3,
+            full_roundtrips: 1,
+            delta_fallbacks: 1,
+            ..Default::default()
+        };
+        m.absorb_dist(&out);
+        assert_eq!(m.counters["migration.bytes_out"], 1000);
+        assert_eq!(m.counters["migration.bytes_in"], 2000);
+        assert_eq!(m.counters["migration.delta.roundtrips"], 3);
+        assert_eq!(m.counters["migration.full.roundtrips"], 1);
+        assert_eq!(m.counters["migration.delta.fallbacks"], 1);
+        assert!((m.gauges["migration.delta.hit_rate"] - 0.75).abs() < 1e-9);
     }
 
     #[test]

@@ -7,8 +7,17 @@
 //! statics themselves. Clean Zygote objects are referenced by
 //! (class, seq) name instead of being shipped when the §4.3 optimization
 //! is enabled.
+//!
+//! The same traversal also powers **delta captures**: given a session
+//! baseline (the set of objects the receiver already holds, plus the
+//! epoch of the last sync), objects that are members of the baseline and
+//! whose mutation epoch is not newer than it are emitted as
+//! [`WireValue::Base`] references instead of being serialized. Their
+//! children are still traversed — an unchanged object may point at a
+//! changed one — whereas clean Zygote objects remain name-addressed and
+//! untraversed exactly as in a full capture.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::appvm::process::Process;
 use crate::appvm::value::{ObjBody, ObjId, Value};
@@ -40,30 +49,79 @@ pub struct CaptureStats {
     pub objects: usize,
     /// Clean Zygote objects referenced by name instead of shipped.
     pub zygote_skipped: usize,
+    /// Baseline objects referenced by id instead of shipped (delta).
+    pub base_skipped: usize,
     /// Encoded packet size.
     pub bytes: usize,
 }
 
+/// The sender's view of the session baseline during a delta capture: who
+/// is a member of the shared state, and what its **mobile-side** id is.
+/// `Base` references always carry the MID — the session-stable object
+/// name — so the phone resolves them directly and the clone goes through
+/// its persistent mapping table.
+pub(crate) enum BaseView<'a> {
+    /// Phone side: members are the phone's own ids.
+    Mobile(&'a HashSet<u64>),
+    /// Clone side: members are the CIDs in the session mapping table.
+    CloneTable(&'a MappingTable),
+}
+
+impl BaseView<'_> {
+    pub(crate) fn mid_of(&self, local: u64) -> Option<u64> {
+        match self {
+            BaseView::Mobile(mids) => mids.contains(&local).then_some(local),
+            BaseView::CloneTable(t) => t.mid_for_cid(local),
+        }
+    }
+}
+
+/// Baseline parameters for a delta capture.
+pub(crate) struct DeltaBase<'a> {
+    /// Objects with `epoch <= base_epoch` are unchanged since the sync.
+    pub epoch: u64,
+    pub view: BaseView<'a>,
+}
+
+/// The raw output of a capture traversal, before packet framing.
+pub(crate) struct RawCapture {
+    pub frames: Vec<WireFrame>,
+    pub objects: Vec<WireObject>,
+    pub zygote_refs: Vec<(String, u32)>,
+    pub statics: Vec<WireStatic>,
+    /// Every baseline member reached (by MID), whether shipped dirty or
+    /// referenced via `Base`. Members NOT in this set died locally — the
+    /// delta's `deleted` list.
+    pub reached_members: HashSet<u64>,
+    /// Local ids of every shipped object, in slot order.
+    pub shipped: Vec<ObjId>,
+    pub stats: CaptureStats,
+}
+
 /// Capture thread `tid` of `p`. For reverse captures pass the clone-side
-/// mapping table so each object carries its mobile-side MID.
-pub fn capture_thread(
+/// mapping table so each object carries its mobile-side MID. With `base`,
+/// performs a delta capture against the session baseline.
+pub(crate) fn capture_core(
     p: &Process,
     tid: u32,
     direction: Direction,
     mapping: Option<&MappingTable>,
     opts: CaptureOptions,
-) -> Result<(CapturePacket, CaptureStats)> {
+    base: Option<&DeltaBase>,
+) -> Result<RawCapture> {
     let thread = p.thread(tid)?;
     if thread.frames.is_empty() {
         return Err(CloneCloudError::migration("capture of a frame-less thread"));
     }
 
     // ---- traversal: assign slots to shipped objects, names to skipped
-    // Zygote objects ------------------------------------------------------
+    // Zygote objects, MIDs to unchanged baseline members -------------------
     let mut slot_of: HashMap<u64, u32> = HashMap::new();
     let mut order: Vec<ObjId> = Vec::new();
     let mut zygote_of: HashMap<u64, u32> = HashMap::new();
     let mut zygote_refs: Vec<(String, u32)> = Vec::new();
+    let mut base_of: HashMap<u64, u64> = HashMap::new();
+    let mut reached_members: HashSet<u64> = HashSet::new();
     let mut stats = CaptureStats::default();
 
     // Roots: every register of every frame + app-class statics.
@@ -76,23 +134,45 @@ pub fn capture_thread(
     }
 
     while let Some(id) = stack.pop() {
-        if slot_of.contains_key(&id.0) || zygote_of.contains_key(&id.0) {
+        if slot_of.contains_key(&id.0)
+            || zygote_of.contains_key(&id.0)
+            || base_of.contains_key(&id.0)
+        {
             continue;
         }
         let obj = p.heap.get(id)?;
-        let clean_zygote = opts.zygote_diff && obj.zygote_seq.is_some() && !obj.dirty;
-        if clean_zygote {
-            // Referenced by name; children are template-internal and
-            // identical on the receiving side — not traversed.
-            let zi = zygote_refs.len() as u32;
-            zygote_refs.push((
-                p.program.class(obj.class).name.clone(),
-                obj.zygote_seq.unwrap(),
-            ));
-            zygote_of.insert(id.0, zi);
-            stats.zygote_skipped += 1;
-            continue;
+
+        // Delta: a baseline member the receiver already holds. Unchanged
+        // since the sync epoch => reference by id; changed => ship below
+        // (the receiver overwrites in place). Either way its children are
+        // traversed — an unchanged parent can reach a changed child.
+        let member_mid = base.and_then(|b| b.view.mid_of(id.0));
+        if let (Some(b), Some(mid)) = (base, member_mid) {
+            reached_members.insert(mid);
+            if obj.epoch <= b.epoch {
+                base_of.insert(id.0, mid);
+                stats.base_skipped += 1;
+                stack.extend(obj.body.refs());
+                continue;
+            }
         }
+
+        // Clean Zygote template object (never a baseline member — members
+        // were shipped once, which dirties the receiving twin): reference
+        // by (class, seq) name; children are template-internal and
+        // identical on the receiving side — not traversed. A template
+        // object missing its sequence name (malformed heap) degrades to
+        // being shipped like an app object instead of aborting.
+        if member_mid.is_none() && opts.zygote_diff && !obj.dirty {
+            if let Some(seq) = obj.zygote_seq {
+                let zi = zygote_refs.len() as u32;
+                zygote_refs.push((p.program.class(obj.class).name.clone(), seq));
+                zygote_of.insert(id.0, zi);
+                stats.zygote_skipped += 1;
+                continue;
+            }
+        }
+
         slot_of.insert(id.0, order.len() as u32);
         order.push(id);
         stack.extend(obj.body.refs());
@@ -109,6 +189,8 @@ pub fn capture_thread(
                     WireValue::Slot(s)
                 } else if let Some(&z) = zygote_of.get(&r.0) {
                     WireValue::Zygote(z)
+                } else if let Some(&m) = base_of.get(&r.0) {
+                    WireValue::Base(m)
                 } else {
                     return Err(CloneCloudError::migration(format!(
                         "reference to untraversed object {}",
@@ -179,15 +261,37 @@ pub fn capture_thread(
         }
     }
 
-    let packet = CapturePacket {
-        direction,
-        thread_id: tid,
-        clock_us: p.clock.now_us(),
+    Ok(RawCapture {
         frames,
         objects,
         zygote_refs,
         statics,
+        reached_members,
+        shipped: order,
+        stats,
+    })
+}
+
+/// Capture thread `tid` of `p` in full. For reverse captures pass the
+/// clone-side mapping table so each object carries its mobile-side MID.
+pub fn capture_thread(
+    p: &Process,
+    tid: u32,
+    direction: Direction,
+    mapping: Option<&MappingTable>,
+    opts: CaptureOptions,
+) -> Result<(CapturePacket, CaptureStats)> {
+    let raw = capture_core(p, tid, direction, mapping, opts, None)?;
+    let packet = CapturePacket {
+        direction,
+        thread_id: tid,
+        clock_us: p.clock.now_us(),
+        frames: raw.frames,
+        objects: raw.objects,
+        zygote_refs: raw.zygote_refs,
+        statics: raw.statics,
     };
+    let mut stats = raw.stats;
     stats.bytes = packet.encode().len();
     Ok((packet, stats))
 }

@@ -1,0 +1,1042 @@
+//! Incremental migration capsules (epoch-based delta transfer).
+//!
+//! The paper's runtime re-serializes the entire reachable heap at every
+//! `ccstart`/`ccstop`, even when the peer already holds last round's
+//! merged state (a farm worker's affinity-pinned clone slot, or the phone
+//! itself on reintegration). This module replaces that with **delta
+//! capsules**: after any successful sync, both endpoints record a
+//! *session baseline* — the set of shared objects (named by their
+//! mobile-side id, the session-stable MID), the heap's mutation epoch at
+//! the sync, and a canonical digest of the shared state. A later capture
+//! then ships only
+//!
+//! * objects **created** since the baseline,
+//! * baseline members **mutated** since the baseline epoch (the
+//!   `Heap::get_mut` write barrier stamps every store), and
+//! * the ids of members that **died**,
+//!
+//! while unchanged members ride as [`WireValue::Base`] references. The
+//! digest travels with every delta; a receiver whose own digest disagrees
+//! (first contact, recycled worker, divergence) answers with the typed
+//! [`CloneCloudError::NeedFull`] signal and the sender falls back to a
+//! full [`CapturePacket`] — correctness never depends on the cache.
+//!
+//! New objects created at the clone get their MIDs assigned by the mobile
+//! merge; the pairs are piggybacked on the *next* forward capsule
+//! (`assignments`), which is exactly when the clone needs them.
+//!
+//! Epoch-coherence invariant (the codebase's first cross-cutting one):
+//! at every sync point both endpoints record baselines describing the
+//! same logical state, and each endpoint advances its heap epoch
+//! immediately after recording, so "changed since the sync" is the single
+//! comparison `obj.epoch > baseline.epoch` on either side.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::appvm::process::Process;
+use crate::appvm::thread::{ThreadStatus, VmThread};
+use crate::appvm::value::{ObjBody, ObjId, Value};
+use crate::error::{CloneCloudError, Result};
+use crate::util::bytes::{WireReader, WireWriter};
+
+use super::capture::{capture_core, capture_thread, BaseView, CaptureOptions, CaptureStats, DeltaBase};
+use super::format::{
+    decode_direction, encode_direction, CapturePacket, Direction, WireBody, WireObject,
+    WireSections, WireValue, MAGIC as FULL_MAGIC,
+};
+use super::mapping::MappingTable;
+use super::merge::{
+    apply_sections, merge_at_mobile, placeholder, resolve_zygote_locals, BaseResolve,
+    MergeStats,
+};
+use super::zygote_diff::ZygoteIndex;
+
+/// Magic + version for the delta capsule ("CCDP" = CloneCloud delta
+/// packet). Shares the section encoding with the full format.
+pub(crate) const DELTA_MAGIC: u32 = 0x4343_4450;
+const DELTA_VERSION: u16 = 1;
+
+/// An incremental capture: everything that changed since the negotiated
+/// session baseline, plus the bookkeeping to keep both ends coherent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaPacket {
+    pub direction: Direction,
+    pub thread_id: u32,
+    pub clock_us: f64,
+    /// The sender's heap epoch at the baseline sync (diagnostic; the
+    /// digest is the authoritative coherence check).
+    pub base_epoch: u64,
+    /// Canonical digest of the shared baseline state. The receiver
+    /// recomputes its own and answers `NeedFull` on mismatch.
+    pub base_digest: u64,
+    /// Forward only: (clone-side id, assigned mobile id) pairs for
+    /// objects created at the clone last visit, merged at the mobile.
+    pub assignments: Vec<(u64, u64)>,
+    /// Baseline members (by MID) no longer reachable at the sender.
+    pub deleted: Vec<u64>,
+    pub sections: WireSections,
+}
+
+impl DeltaPacket {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::with_capacity(1024);
+        w.put_u32(DELTA_MAGIC);
+        w.put_u16(DELTA_VERSION);
+        encode_direction(&mut w, self.direction);
+        w.put_u32(self.thread_id);
+        w.put_f64(self.clock_us);
+        w.put_u64(self.base_epoch);
+        w.put_u64(self.base_digest);
+        w.put_u32(self.assignments.len() as u32);
+        for (cid, mid) in &self.assignments {
+            w.put_u64(*cid);
+            w.put_u64(*mid);
+        }
+        w.put_u32(self.deleted.len() as u32);
+        for mid in &self.deleted {
+            w.put_u64(*mid);
+        }
+        self.sections.encode_into(&mut w);
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<DeltaPacket> {
+        let mut r = WireReader::new(buf);
+        let magic = r.get_u32()?;
+        if magic != DELTA_MAGIC {
+            return Err(CloneCloudError::Wire(format!("bad delta magic {magic:#x}")));
+        }
+        let version = r.get_u16()?;
+        if version != DELTA_VERSION {
+            return Err(CloneCloudError::Wire(format!(
+                "unsupported delta version {version}"
+            )));
+        }
+        let direction = decode_direction(&mut r)?;
+        let thread_id = r.get_u32()?;
+        let clock_us = r.get_f64()?;
+        let base_epoch = r.get_u64()?;
+        let base_digest = r.get_u64()?;
+        let na = r.get_u32()? as usize;
+        let mut assignments = Vec::with_capacity(na);
+        for _ in 0..na {
+            let cid = r.get_u64()?;
+            let mid = r.get_u64()?;
+            assignments.push((cid, mid));
+        }
+        let nd = r.get_u32()? as usize;
+        let mut deleted = Vec::with_capacity(nd);
+        for _ in 0..nd {
+            deleted.push(r.get_u64()?);
+        }
+        let sections = WireSections::decode_from(&mut r)?;
+        if !r.is_done() {
+            return Err(CloneCloudError::Wire(format!(
+                "{} trailing bytes in delta capsule",
+                r.remaining()
+            )));
+        }
+        Ok(DeltaPacket {
+            direction,
+            thread_id,
+            clock_us,
+            base_epoch,
+            base_digest,
+            assignments,
+            deleted,
+            sections,
+        })
+    }
+}
+
+/// What actually rides the wire in a `Migrate`/`Reintegrate` frame: a
+/// full capture or a delta, distinguished by magic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Capsule {
+    Full(CapturePacket),
+    Delta(DeltaPacket),
+}
+
+impl Capsule {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Capsule::Full(p) => p.encode(),
+            Capsule::Delta(d) => d.encode(),
+        }
+    }
+
+    /// Decode either capsule flavor, dispatching on the leading magic.
+    pub fn decode(buf: &[u8]) -> Result<Capsule> {
+        let mut r = WireReader::new(buf);
+        match r.get_u32()? {
+            FULL_MAGIC => Ok(Capsule::Full(CapturePacket::decode(buf)?)),
+            DELTA_MAGIC => Ok(Capsule::Delta(DeltaPacket::decode(buf)?)),
+            magic => Err(CloneCloudError::Wire(format!(
+                "unknown capsule magic {magic:#x}"
+            ))),
+        }
+    }
+
+    pub fn is_delta(&self) -> bool {
+        matches!(self, Capsule::Delta(_))
+    }
+
+    pub fn direction(&self) -> Direction {
+        match self {
+            Capsule::Full(p) => p.direction,
+            Capsule::Delta(d) => d.direction,
+        }
+    }
+
+    pub fn clock_us(&self) -> f64 {
+        match self {
+            Capsule::Full(p) => p.clock_us,
+            Capsule::Delta(d) => d.clock_us,
+        }
+    }
+
+    pub fn set_clock_us(&mut self, t: f64) {
+        match self {
+            Capsule::Full(p) => p.clock_us = t,
+            Capsule::Delta(d) => d.clock_us = t,
+        }
+    }
+
+    /// The objects serialized in this capsule (cost model input).
+    pub fn objects(&self) -> &[WireObject] {
+        match self {
+            Capsule::Full(p) => &p.objects,
+            Capsule::Delta(d) => &d.sections.objects,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canonical state digest
+// ---------------------------------------------------------------------------
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+    fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x1000_0000_01b3);
+        }
+    }
+    fn eat_u64(&mut self, v: u64) {
+        self.eat(&v.to_be_bytes());
+    }
+}
+
+/// Canonical digest of the shared session state: the baseline members
+/// (`(mid, local id)` pairs), hashed in MID order with every reference
+/// canonicalized to a MID or a Zygote (class, seq) name. Both endpoints
+/// compute this over their own heaps at each sync point; equality means
+/// the baselines describe the same logical state, so a delta against it
+/// is safe to apply.
+pub(crate) fn state_digest(p: &Process, members: &[(u64, ObjId)]) -> u64 {
+    let by_local: HashMap<u64, u64> = members.iter().map(|&(m, l)| (l.0, m)).collect();
+    let mut sorted: Vec<(u64, ObjId)> = members.to_vec();
+    sorted.sort_unstable();
+
+    let mut h = Fnv::new();
+    let eat_value = |h: &mut Fnv, v: &Value| match v {
+        Value::Null => h.eat(&[0]),
+        Value::Int(x) => {
+            h.eat(&[1]);
+            h.eat_u64(*x as u64);
+        }
+        Value::Float(x) => {
+            h.eat(&[2]);
+            h.eat_u64(x.to_bits());
+        }
+        Value::Ref(t) => {
+            if let Some(&mid) = by_local.get(&t.0) {
+                h.eat(&[3]);
+                h.eat_u64(mid);
+            } else if let Ok(obj) = p.heap.get(*t) {
+                match obj.zygote_seq {
+                    Some(seq) => {
+                        h.eat(&[4]);
+                        h.eat(p.program.class(obj.class).name.as_bytes());
+                        h.eat_u64(seq as u64);
+                    }
+                    // A member referencing a non-member app object cannot
+                    // occur at a sync point; poison the digest so any
+                    // asymmetry degrades to a full capture.
+                    None => h.eat(&[5]),
+                }
+            } else {
+                h.eat(&[6]);
+            }
+        }
+    };
+
+    for (mid, local) in sorted {
+        h.eat_u64(mid);
+        let obj = match p.heap.get(local) {
+            Ok(o) => o,
+            Err(_) => {
+                h.eat(b"!dead");
+                continue;
+            }
+        };
+        h.eat(p.program.class(obj.class).name.as_bytes());
+        match &obj.body {
+            ObjBody::Fields(vs) => {
+                h.eat(&[10]);
+                h.eat_u64(vs.len() as u64);
+                for v in vs {
+                    eat_value(&mut h, v);
+                }
+            }
+            ObjBody::ByteArray(b) => {
+                h.eat(&[11]);
+                h.eat_u64(b.len() as u64);
+                h.eat(b);
+            }
+            ObjBody::FloatArray(f) => {
+                h.eat(&[12]);
+                h.eat_u64(f.len() as u64);
+                for x in f {
+                    h.eat(&x.to_bits().to_be_bytes());
+                }
+            }
+            ObjBody::RefArray(vs) => {
+                h.eat(&[13]);
+                h.eat_u64(vs.len() as u64);
+                for v in vs {
+                    eat_value(&mut h, v);
+                }
+            }
+        }
+    }
+    h.0
+}
+
+// ---------------------------------------------------------------------------
+// Session state (one per endpoint per phone/clone pairing)
+// ---------------------------------------------------------------------------
+
+struct MobileBaseline {
+    /// Heap epoch at the sync (objects stamped later are dirty).
+    epoch: u64,
+    /// Canonical digest of the shared state at the sync.
+    digest: u64,
+    /// Mobile-side ids of every shared object.
+    mids: HashSet<u64>,
+}
+
+/// The mobile endpoint's per-session baseline cache. One per
+/// (phone process, clone channel) pairing; survives across roundtrips so
+/// repeat offloads pay O(dirty set) instead of O(heap).
+pub struct MobileSession {
+    enabled: bool,
+    baseline: Option<MobileBaseline>,
+    /// (clone id, assigned mobile id) pairs from the last reverse merge,
+    /// shipped with the next forward capsule.
+    pending: Vec<(u64, u64)>,
+}
+
+impl MobileSession {
+    pub fn new(enabled: bool) -> MobileSession {
+        MobileSession {
+            enabled,
+            baseline: None,
+            pending: Vec::new(),
+        }
+    }
+
+    /// A session that always captures in full (the seed behavior).
+    pub fn disabled() -> MobileSession {
+        MobileSession::new(false)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Turn delta capture off (e.g. the channel did not negotiate it).
+    pub fn disable(&mut self) {
+        self.enabled = false;
+        self.baseline = None;
+        self.pending.clear();
+    }
+
+    pub fn has_baseline(&self) -> bool {
+        self.baseline.is_some()
+    }
+}
+
+struct CloneBaseline {
+    /// Persistent MID <-> CID mapping — the paper's Fig. 8 table promoted
+    /// to session lifetime.
+    table: MappingTable,
+    /// Clone heap epoch right after the last forward apply.
+    fwd_epoch: u64,
+    /// Digest of the state right after the last forward apply (the
+    /// baseline the reverse delta is built against).
+    fwd_digest: u64,
+}
+
+/// The clone endpoint's per-session baseline cache. Lives in the clone
+/// slot (farm worker) or the per-connection server state; evicted when
+/// the slot is recycled.
+pub struct CloneSession {
+    enabled: bool,
+    base: Option<CloneBaseline>,
+}
+
+impl CloneSession {
+    pub fn new(enabled: bool) -> CloneSession {
+        CloneSession {
+            enabled,
+            base: None,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// (Re)arm or disarm delta emission/acceptance for this session.
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    /// Drop the baseline (worker recycle / tests): the next delta from
+    /// the phone is answered with `NeedFull`.
+    pub fn evict(&mut self) {
+        self.base = None;
+    }
+
+    pub fn has_baseline(&self) -> bool {
+        self.base.is_some()
+    }
+}
+
+fn table_members(table: &MappingTable) -> Vec<(u64, ObjId)> {
+    table
+        .entries()
+        .iter()
+        .filter_map(|e| match (e.mid, e.cid) {
+            (Some(m), Some(c)) => Some((m, ObjId(c))),
+            _ => None,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Mobile side: capture forward / merge reverse
+// ---------------------------------------------------------------------------
+
+/// Capture thread `tid` for migration, as a delta against the session
+/// baseline when one exists, else in full. Records the new baseline and
+/// advances the mutation epoch (when the session is enabled).
+pub(crate) fn capture_forward(
+    p: &mut Process,
+    tid: u32,
+    opts: CaptureOptions,
+    sess: &mut MobileSession,
+) -> Result<(Capsule, CaptureStats)> {
+    if sess.enabled && sess.baseline.is_some() {
+        let b = sess.baseline.as_ref().expect("checked");
+        let base = DeltaBase {
+            epoch: b.epoch,
+            view: BaseView::Mobile(&b.mids),
+        };
+        let raw = capture_core(p, tid, Direction::Forward, None, opts, Some(&base))?;
+
+        let mut deleted: Vec<u64> = b
+            .mids
+            .difference(&raw.reached_members)
+            .copied()
+            .collect();
+        deleted.sort_unstable();
+
+        let packet = DeltaPacket {
+            direction: Direction::Forward,
+            thread_id: tid,
+            clock_us: p.clock.now_us(),
+            base_epoch: b.epoch,
+            base_digest: b.digest,
+            assignments: std::mem::take(&mut sess.pending),
+            deleted,
+            sections: WireSections {
+                frames: raw.frames,
+                objects: raw.objects,
+                zygote_refs: raw.zygote_refs,
+                statics: raw.statics,
+            },
+        };
+
+        // New baseline: surviving members plus everything shipped (dirty
+        // members and fresh objects — phone ids are the MIDs).
+        let mids: HashSet<u64> = raw
+            .reached_members
+            .iter()
+            .copied()
+            .chain(raw.shipped.iter().map(|id| id.0))
+            .collect();
+        let members: Vec<(u64, ObjId)> = mids.iter().map(|&m| (m, ObjId(m))).collect();
+        let digest = state_digest(p, &members);
+        sess.baseline = Some(MobileBaseline {
+            epoch: p.heap.epoch(),
+            digest,
+            mids,
+        });
+        p.advance_epoch();
+
+        let mut stats = raw.stats;
+        stats.bytes = packet.encode().len();
+        Ok((Capsule::Delta(packet), stats))
+    } else {
+        let (capsule, stats) = full_forward(p, tid, opts, sess)?;
+        Ok((capsule, stats))
+    }
+}
+
+/// Full forward capture + (if the session is enabled) baseline record.
+fn full_forward(
+    p: &mut Process,
+    tid: u32,
+    opts: CaptureOptions,
+    sess: &mut MobileSession,
+) -> Result<(Capsule, CaptureStats)> {
+    let (packet, stats) = capture_thread(p, tid, Direction::Forward, None, opts)?;
+    if sess.enabled {
+        let mids: HashSet<u64> = packet.objects.iter().map(|o| o.origin_id).collect();
+        let members: Vec<(u64, ObjId)> = mids.iter().map(|&m| (m, ObjId(m))).collect();
+        let digest = state_digest(p, &members);
+        sess.baseline = Some(MobileBaseline {
+            epoch: p.heap.epoch(),
+            digest,
+            mids,
+        });
+        sess.pending.clear();
+        p.advance_epoch();
+    }
+    Ok((Capsule::Full(packet), stats))
+}
+
+/// Re-capture in full after the peer rejected a delta (`NeedFull`). The
+/// thread is still suspended at the same point, so the baseline recorded
+/// by the failed delta attempt already describes this exact state — it is
+/// kept, and the epoch is NOT advanced again (post-resume writes must
+/// stamp past it exactly once).
+pub(crate) fn recapture_forward_full(
+    p: &Process,
+    tid: u32,
+    opts: CaptureOptions,
+    sess: &mut MobileSession,
+) -> Result<(Capsule, CaptureStats)> {
+    let (packet, stats) = capture_thread(p, tid, Direction::Forward, None, opts)?;
+    Ok((Capsule::Full(packet), stats))
+}
+
+/// Merge a reverse capsule into the original process (thread `tid`).
+pub(crate) fn merge_at_mobile_capsule(
+    p: &mut Process,
+    tid: u32,
+    capsule: &Capsule,
+    sess: &mut MobileSession,
+) -> Result<MergeStats> {
+    match capsule {
+        Capsule::Full(pkt) => {
+            let zidx = ZygoteIndex::build(&p.program, &p.heap);
+            let stats = merge_at_mobile(p, tid, pkt, &zidx)?;
+            if sess.enabled {
+                // The clone answered in full, so no coherent shared
+                // baseline survives this visit; re-establish on the next
+                // forward capture.
+                sess.baseline = None;
+                sess.pending.clear();
+            }
+            Ok(stats)
+        }
+        Capsule::Delta(d) => merge_reverse_delta(p, tid, d, sess),
+    }
+}
+
+fn merge_reverse_delta(
+    p: &mut Process,
+    tid: u32,
+    d: &DeltaPacket,
+    sess: &mut MobileSession,
+) -> Result<MergeStats> {
+    if d.direction != Direction::Reverse {
+        return Err(CloneCloudError::migration("expected a reverse capsule"));
+    }
+    let mut b = sess.baseline.take().ok_or_else(|| {
+        CloneCloudError::migration("reverse delta without a mobile baseline")
+    })?;
+    if d.base_digest != b.digest {
+        // Leave the baseline cleared: the next forward capture is full.
+        return Err(CloneCloudError::migration(
+            "reverse delta baseline digest mismatch — endpoints diverged",
+        ));
+    }
+
+    // Baseline references must land on live local objects before any
+    // state is touched.
+    let chk = |v: &WireValue| -> Result<()> {
+        if let WireValue::Base(mid) = v {
+            if !p.heap.contains(ObjId(*mid)) {
+                return Err(CloneCloudError::migration(format!(
+                    "reverse delta references dead baseline object {mid}"
+                )));
+            }
+        }
+        Ok(())
+    };
+    for f in &d.sections.frames {
+        for v in &f.regs {
+            chk(v)?;
+        }
+    }
+    for o in &d.sections.objects {
+        if let WireBody::Fields(vs) | WireBody::RefArray(vs) = &o.body {
+            for v in vs {
+                chk(v)?;
+            }
+        }
+    }
+    for s in &d.sections.statics {
+        chk(&s.value)?;
+    }
+
+    // Members that died at the clone become orphans here (left to GC).
+    for mid in &d.deleted {
+        b.mids.remove(mid);
+    }
+
+    // Placement: overwrite mapped members in place, overwrite Zygote
+    // twins by name, create the rest — recording (cid, mid) assignments
+    // to piggyback on the next forward capsule.
+    let zidx = ZygoteIndex::build(&p.program, &p.heap);
+    let zlocal = resolve_zygote_locals(&d.sections.zygote_refs, &zidx)?;
+    let mut stats = MergeStats::default();
+    let mut assignments: Vec<(u64, u64)> = Vec::new();
+    let mut locals = Vec::with_capacity(d.sections.objects.len());
+    for wo in &d.sections.objects {
+        let local = if wo.mapped_id != 0 {
+            let id = ObjId(wo.mapped_id);
+            if !p.heap.contains(id) {
+                return Err(CloneCloudError::migration(format!(
+                    "returned object maps to dead local id {}",
+                    wo.mapped_id
+                )));
+            }
+            stats.overwritten += 1;
+            id
+        } else if let Some(seq) = wo.zygote_seq {
+            let twin = zidx.lookup(&wo.class_name, seq)?;
+            stats.overwritten += 1;
+            assignments.push((wo.origin_id, twin.0));
+            b.mids.insert(twin.0);
+            twin
+        } else {
+            let class = p.program.class_id(&wo.class_name).ok_or_else(|| {
+                CloneCloudError::migration(format!("unknown class '{}'", wo.class_name))
+            })?;
+            let id = p.heap.alloc(placeholder(class));
+            stats.created += 1;
+            assignments.push((wo.origin_id, id.0));
+            b.mids.insert(id.0);
+            id
+        };
+        locals.push(local);
+    }
+
+    let frames = apply_sections(
+        p,
+        &d.sections.frames,
+        &d.sections.objects,
+        &d.sections.statics,
+        &locals,
+        &zlocal,
+        BaseResolve::Local,
+    )?;
+
+    let t = p.thread_mut(tid)?;
+    t.frames = frames;
+    t.status = ThreadStatus::Runnable;
+    t.suspend_count = 0;
+    p.clock.advance_to_us(d.clock_us);
+
+    // Record the new baseline (state after this merge == the clone's
+    // state at its reverse capture) and advance the epoch.
+    let members: Vec<(u64, ObjId)> = b.mids.iter().map(|&m| (m, ObjId(m))).collect();
+    let digest = state_digest(p, &members);
+    sess.baseline = Some(MobileBaseline {
+        epoch: p.heap.epoch(),
+        digest,
+        mids: b.mids,
+    });
+    sess.pending = assignments;
+    p.advance_epoch();
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
+// Clone side: receive forward / capture reverse
+// ---------------------------------------------------------------------------
+
+/// Apply a forward capsule at the clone: full captures re-instantiate
+/// from scratch (and reset the session baseline), deltas patch the
+/// retained slot state. Returns the new thread id.
+pub(crate) fn receive_at_clone_capsule(
+    clone: &mut Process,
+    capsule: &Capsule,
+    sess: &mut CloneSession,
+) -> Result<(u32, MergeStats)> {
+    match capsule {
+        Capsule::Full(pkt) => {
+            let zidx = ZygoteIndex::build(&clone.program, &clone.heap);
+            let (tid, table, stats) = super::merge::instantiate_at_clone(clone, pkt, &zidx)?;
+            // The digest only matters when deltas may follow.
+            let fwd_digest = if sess.enabled {
+                state_digest(clone, &table_members(&table))
+            } else {
+                0
+            };
+            sess.base = Some(CloneBaseline {
+                table,
+                fwd_epoch: clone.heap.epoch(),
+                fwd_digest,
+            });
+            clone.advance_epoch();
+            Ok((tid, stats))
+        }
+        Capsule::Delta(d) => receive_forward_delta(clone, d, sess),
+    }
+}
+
+fn receive_forward_delta(
+    clone: &mut Process,
+    d: &DeltaPacket,
+    sess: &mut CloneSession,
+) -> Result<(u32, MergeStats)> {
+    if d.direction != Direction::Forward {
+        return Err(CloneCloudError::migration("expected a forward capsule"));
+    }
+    if !sess.enabled {
+        return Err(CloneCloudError::migration(
+            "delta capsule on a session that did not negotiate delta",
+        ));
+    }
+    let mut b = sess
+        .base
+        .take()
+        .ok_or_else(|| CloneCloudError::need_full("no session baseline at the clone"))?;
+
+    // Complete the table with the MIDs the mobile merge assigned to the
+    // objects this slot created last visit.
+    for &(cid, mid) in &d.assignments {
+        if b.table.mid_for_cid(cid).is_none() && b.table.cid_for_mid(mid).is_none() {
+            b.table.insert(Some(mid), Some(cid));
+        }
+    }
+
+    // Verify coherence. The slot heap has not run since the last reverse
+    // capture, so the digest is computed lazily, here.
+    let members = table_members(&b.table);
+    let have = state_digest(clone, &members);
+    if have != d.base_digest {
+        // Baseline poisoned — stay evicted so the retry takes the full
+        // path and re-establishes the session.
+        return Err(CloneCloudError::need_full(format!(
+            "baseline digest mismatch (clone {have:#x} != mobile {:#x})",
+            d.base_digest
+        )));
+    }
+
+    // Members the phone deleted since the sync: drop only the mapping.
+    // The local objects become GC orphans (§4.2) — they are NOT removed
+    // from the heap, because "deleted" is judged by a traversal that does
+    // not descend into clean Zygote objects, so an object still reachable
+    // through template-internal references (or re-shipped later by its
+    // Zygote name) must stay resolvable.
+    b.table.remove_mids(&d.deleted);
+
+    // A malformed template degrades to `NeedFull`: the retried full
+    // capture resolves twins leniently instead of aborting the session.
+    let zidx = ZygoteIndex::try_build(&clone.program, &clone.heap)
+        .map_err(|e| CloneCloudError::need_full(e.to_string()))?;
+    let zlocal = resolve_zygote_locals(&d.sections.zygote_refs, &zidx)?;
+
+    // Placement: known members overwrite in place through the session
+    // table; dirty Zygote newcomers overwrite their twins; the rest are
+    // allocated fresh — all recorded in the table for future rounds.
+    let mut stats = MergeStats::default();
+    let mut locals = Vec::with_capacity(d.sections.objects.len());
+    for wo in &d.sections.objects {
+        let local = if let Some(cid) = b.table.cid_for_mid(wo.origin_id) {
+            stats.overwritten += 1;
+            ObjId(cid)
+        } else if let Some(seq) = wo.zygote_seq {
+            let twin = zidx.lookup(&wo.class_name, seq)?;
+            stats.overwritten += 1;
+            b.table.insert(Some(wo.origin_id), Some(twin.0));
+            twin
+        } else {
+            let class = clone.program.class_id(&wo.class_name).ok_or_else(|| {
+                CloneCloudError::migration(format!("unknown class '{}'", wo.class_name))
+            })?;
+            let id = clone.heap.alloc(placeholder(class));
+            stats.created += 1;
+            b.table.insert(Some(wo.origin_id), Some(id.0));
+            id
+        };
+        locals.push(local);
+    }
+
+    let frames = apply_sections(
+        clone,
+        &d.sections.frames,
+        &d.sections.objects,
+        &d.sections.statics,
+        &locals,
+        &zlocal,
+        BaseResolve::Table(&b.table),
+    )?;
+
+    let tid = clone.threads.len() as u32;
+    let mut t = VmThread::new(tid);
+    t.frames = frames;
+    t.status = ThreadStatus::Runnable;
+    clone.threads.push(t);
+    clone.clock.advance_to_us(d.clock_us);
+
+    // Re-baseline for the reverse direction and advance the epoch.
+    let members = table_members(&b.table);
+    b.fwd_digest = state_digest(clone, &members);
+    b.fwd_epoch = clone.heap.epoch();
+    sess.base = Some(b);
+    clone.advance_epoch();
+    Ok((tid, stats))
+}
+
+/// Capture the migrant thread back for reintegration, as a delta against
+/// the forward baseline when the session negotiated it, else in full.
+/// Returns the capsule and the number of mapping entries dropped (objects
+/// that died at the clone).
+pub(crate) fn return_from_clone_capsule(
+    clone: &mut Process,
+    tid: u32,
+    opts: CaptureOptions,
+    sess: &mut CloneSession,
+) -> Result<(Capsule, CaptureStats, usize)> {
+    let base = sess.base.as_mut().ok_or_else(|| {
+        CloneCloudError::migration("reverse capture without a clone session")
+    })?;
+
+    if sess.enabled {
+        let raw = {
+            let db = DeltaBase {
+                epoch: base.fwd_epoch,
+                view: BaseView::CloneTable(&base.table),
+            };
+            capture_core(clone, tid, Direction::Reverse, Some(&base.table), opts, Some(&db))?
+        };
+
+        let mut deleted: Vec<u64> = table_members(&base.table)
+            .iter()
+            .map(|&(mid, _)| mid)
+            .filter(|mid| !raw.reached_members.contains(mid))
+            .collect();
+        deleted.sort_unstable();
+        let dropped = base.table.remove_mids(&deleted);
+
+        let packet = DeltaPacket {
+            direction: Direction::Reverse,
+            thread_id: tid,
+            clock_us: clone.clock.now_us(),
+            base_epoch: base.fwd_epoch,
+            base_digest: base.fwd_digest,
+            assignments: Vec::new(),
+            deleted,
+            sections: WireSections {
+                frames: raw.frames,
+                objects: raw.objects,
+                zygote_refs: raw.zygote_refs,
+                statics: raw.statics,
+            },
+        };
+        let mut stats = raw.stats;
+        stats.bytes = packet.encode().len();
+        Ok((Capsule::Delta(packet), stats, dropped))
+    } else {
+        let (packet, stats) =
+            capture_thread(clone, tid, Direction::Reverse, Some(&base.table), opts)?;
+        let returning: HashMap<u64, ()> =
+            packet.objects.iter().map(|o| (o.origin_id, ())).collect();
+        let dropped = base.table.retain_cids(&returning);
+        Ok((Capsule::Full(packet), stats, dropped))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::bytecode::ClassId;
+    use crate::appvm::value::Object;
+    use crate::appvm::zygote::install_system_classes;
+    use crate::appvm::Program;
+    use crate::util::rng::Rng;
+
+    fn proc_with(program: std::sync::Arc<Program>) -> Process {
+        use crate::appvm::natives::NodeEnv;
+        use crate::device::{DeviceSpec, Location};
+        use crate::vfs::SimFs;
+        Process::new(
+            program,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        )
+    }
+
+    fn program() -> std::sync::Arc<Program> {
+        let mut p = Program::new();
+        install_system_classes(&mut p);
+        p.into_shared()
+    }
+
+    #[test]
+    fn digest_tracks_content_not_ids() {
+        let p = program();
+        let mut a = proc_with(p.clone());
+        let mut c = proc_with(p);
+        let class = ClassId(0);
+
+        // Same logical state under different local ids: phone objects
+        // 1,2; clone twins 11,12 mapped by the session table.
+        let a1 = a.heap.alloc(Object::new_fields(class, 1));
+        let a2 = a.heap.alloc_byte_array(class, vec![1, 2, 3]);
+        a.heap.get_mut(a1).unwrap().body = ObjBody::Fields(vec![Value::Ref(a2)]);
+
+        for _ in 0..9 {
+            c.heap.alloc(Object::new_fields(class, 0)); // shift the ids
+        }
+        let c1 = c.heap.alloc(Object::new_fields(class, 1));
+        let c2 = c.heap.alloc_byte_array(class, vec![1, 2, 3]);
+        c.heap.get_mut(c1).unwrap().body = ObjBody::Fields(vec![Value::Ref(c2)]);
+
+        let phone_members = vec![(a1.0, a1), (a2.0, a2)];
+        let clone_members = vec![(a1.0, c1), (a2.0, c2)];
+        assert_eq!(
+            state_digest(&a, &phone_members),
+            state_digest(&c, &clone_members),
+            "same logical state digests equal across id spaces"
+        );
+
+        // Mutating one byte diverges the digest.
+        if let ObjBody::ByteArray(b) = &mut c.heap.get_mut(c2).unwrap().body {
+            b[0] ^= 0xFF;
+        }
+        assert_ne!(
+            state_digest(&a, &phone_members),
+            state_digest(&c, &clone_members)
+        );
+    }
+
+    #[test]
+    fn digest_is_member_order_independent() {
+        let p = program();
+        let mut a = proc_with(p);
+        let class = ClassId(0);
+        let x = a.heap.alloc_byte_array(class, vec![7]);
+        let y = a.heap.alloc_byte_array(class, vec![9]);
+        let fwd = vec![(x.0, x), (y.0, y)];
+        let rev = vec![(y.0, y), (x.0, x)];
+        assert_eq!(state_digest(&a, &fwd), state_digest(&a, &rev));
+    }
+
+    fn gen_delta(rng: &mut Rng) -> DeltaPacket {
+        DeltaPacket {
+            direction: if rng.chance(0.5) {
+                Direction::Forward
+            } else {
+                Direction::Reverse
+            },
+            thread_id: rng.next_u64() as u32,
+            clock_us: rng.range_i64(0, 1 << 40) as f64 / 8.0,
+            base_epoch: rng.next_u64(),
+            base_digest: rng.next_u64(),
+            assignments: (0..rng.index(5))
+                .map(|_| (rng.next_u64(), rng.next_u64()))
+                .collect(),
+            deleted: (0..rng.index(6)).map(|_| rng.next_u64()).collect(),
+            sections: WireSections {
+                frames: Vec::new(),
+                objects: (0..rng.index(4))
+                    .map(|_| WireObject {
+                        origin_id: rng.next_u64(),
+                        mapped_id: rng.next_u64(),
+                        class_name: "App".into(),
+                        zygote_seq: rng.chance(0.3).then(|| rng.next_u64() as u32),
+                        body: WireBody::Fields(vec![
+                            WireValue::Base(rng.next_u64()),
+                            WireValue::Int(rng.next_u64() as i64),
+                        ]),
+                    })
+                    .collect(),
+                zygote_refs: Vec::new(),
+                statics: Vec::new(),
+            },
+        }
+    }
+
+    #[test]
+    fn prop_delta_capsules_roundtrip_and_dispatch() {
+        use crate::util::prop::{ensure, ensure_eq, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xDE17A_01,
+                cases: 120,
+            },
+            gen_delta,
+            |d| {
+                let bytes = d.encode();
+                let decoded =
+                    DeltaPacket::decode(&bytes).map_err(|e| format!("decode: {e}"))?;
+                ensure_eq(decoded, d.clone(), "decode(encode(d))")?;
+                // Capsule dispatch picks the delta flavor by magic.
+                match Capsule::decode(&bytes).map_err(|e| format!("capsule: {e}"))? {
+                    Capsule::Delta(q) => ensure_eq(q, d.clone(), "capsule dispatch"),
+                    Capsule::Full(_) => ensure(false, "delta decoded as full"),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_delta_strict_prefixes_never_decode() {
+        use crate::util::prop::{ensure, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xDE17A_02,
+                cases: 120,
+            },
+            |rng| {
+                let bytes = gen_delta(rng).encode();
+                let cut = rng.index(bytes.len());
+                (bytes, cut)
+            },
+            |(bytes, cut)| {
+                ensure(DeltaPacket::decode(&bytes[..*cut]).is_err(), "prefix decoded")
+            },
+        );
+    }
+
+    #[test]
+    fn capsule_decode_rejects_unknown_magic() {
+        assert!(Capsule::decode(&[0, 1, 2, 3, 4, 5]).is_err());
+        assert!(Capsule::decode(&[]).is_err());
+    }
+}

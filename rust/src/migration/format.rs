@@ -8,10 +8,17 @@
 //! * stack frames name their method by **class + method name**, never a
 //!   native code pointer;
 //! * object references are **capture-local slots** (or Zygote
-//!   (class, seq) names), never addresses;
+//!   (class, seq) names, or — in delta capsules — session-baseline ids),
+//!   never addresses;
 //! * every object carries its origin-VM object id (MID or CID) plus, when
 //!   known, its id on the receiving VM — the wire form of the mapping
 //!   table columns.
+//!
+//! The section encoders/decoders (string table, frames, objects, zygote
+//! refs, statics) are shared with the incremental capsule format in
+//! [`super::delta`]: a delta capsule is the same sections under a
+//! different header, restricted to the objects that changed since the
+//! negotiated baseline epoch.
 
 use crate::error::{CloneCloudError, Result};
 use crate::util::bytes::{WireReader, WireWriter};
@@ -20,18 +27,18 @@ use crate::util::bytes::{WireReader, WireWriter};
 /// v2 interns class/method names in a string table: a 40k-object Zygote
 /// capture repeats a handful of class names tens of thousands of times,
 /// and naming them by index cut encoded captures ~40% (§Perf P1).
-const MAGIC: u32 = 0x4343_4850;
+pub(crate) const MAGIC: u32 = 0x4343_4850;
 const VERSION: u16 = 2;
 
 /// Build-side string interner.
 #[derive(Default)]
-struct Strings {
+pub(crate) struct Strings {
     table: Vec<String>,
     index: std::collections::HashMap<String, u32>,
 }
 
 impl Strings {
-    fn intern(&mut self, s: &str) -> u32 {
+    pub(crate) fn intern(&mut self, s: &str) -> u32 {
         if let Some(&i) = self.index.get(s) {
             return i;
         }
@@ -51,7 +58,8 @@ pub enum Direction {
     Reverse,
 }
 
-/// A value on the wire. References are capture slots or Zygote names.
+/// A value on the wire. References are capture slots, Zygote names, or —
+/// in delta capsules — ids of objects the receiver already holds.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum WireValue {
     Null,
@@ -62,6 +70,9 @@ pub enum WireValue {
     /// Index into `CapturePacket::zygote_refs` (a clean template object,
     /// not shipped — §4.3).
     Zygote(u32),
+    /// A session-baseline object the receiver already holds, named by its
+    /// mobile-side id (delta capsules only; full captures never emit it).
+    Base(u64),
 }
 
 /// Object payload on the wire.
@@ -108,14 +119,10 @@ pub struct WireStatic {
     pub value: WireValue,
 }
 
-/// The full capture packet.
-#[derive(Debug, Clone, PartialEq)]
-pub struct CapturePacket {
-    pub direction: Direction,
-    pub thread_id: u32,
-    /// Sender's virtual clock at capture (µs) — the receiver advances to
-    /// this so time is consistent across the migration.
-    pub clock_us: f64,
+/// The thread-state sections every capsule flavor carries: frames, the
+/// shipped objects, by-name Zygote references, and static fields.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WireSections {
     pub frames: Vec<WireFrame>,
     pub objects: Vec<WireObject>,
     /// Clean Zygote objects referenced by (class name, seq) only.
@@ -123,110 +130,90 @@ pub struct CapturePacket {
     pub statics: Vec<WireStatic>,
 }
 
-impl CapturePacket {
-    /// Serialize to network-byte-order bytes. Class/method names are
-    /// interned into a string table written up front.
-    pub fn encode(&self) -> Vec<u8> {
-        // Pass 1: intern every name, in a deterministic order.
-        let mut strings = Strings::default();
-        let frame_names: Vec<(u32, u32)> = self
-            .frames
-            .iter()
-            .map(|f| (strings.intern(&f.class_name), strings.intern(&f.method_name)))
-            .collect();
-        let obj_names: Vec<u32> = self
-            .objects
-            .iter()
-            .map(|o| strings.intern(&o.class_name))
-            .collect();
-        let zy_names: Vec<u32> = self
-            .zygote_refs
-            .iter()
-            .map(|(name, _)| strings.intern(name))
-            .collect();
-        let static_names: Vec<u32> = self
-            .statics
-            .iter()
-            .map(|s| strings.intern(&s.class_name))
-            .collect();
+/// Encode the string table followed by every section (shared tail of
+/// both the full and the delta capsule formats).
+pub(crate) fn encode_sections(
+    w: &mut WireWriter,
+    frames: &[WireFrame],
+    objects: &[WireObject],
+    zygote_refs: &[(String, u32)],
+    statics: &[WireStatic],
+) {
+    // Pass 1: intern every name, in a deterministic order.
+    let mut strings = Strings::default();
+    let frame_names: Vec<(u32, u32)> = frames
+        .iter()
+        .map(|f| (strings.intern(&f.class_name), strings.intern(&f.method_name)))
+        .collect();
+    let obj_names: Vec<u32> = objects
+        .iter()
+        .map(|o| strings.intern(&o.class_name))
+        .collect();
+    let zy_names: Vec<u32> = zygote_refs
+        .iter()
+        .map(|(name, _)| strings.intern(name))
+        .collect();
+    let static_names: Vec<u32> = statics
+        .iter()
+        .map(|s| strings.intern(&s.class_name))
+        .collect();
 
-        // Pass 2: emit.
-        let mut w = WireWriter::with_capacity(4096);
-        w.put_u32(MAGIC);
-        w.put_u16(VERSION);
-        w.put_u8(match self.direction {
-            Direction::Forward => 0,
-            Direction::Reverse => 1,
-        });
-        w.put_u32(self.thread_id);
-        w.put_f64(self.clock_us);
-
-        w.put_u32(strings.table.len() as u32);
-        for s in &strings.table {
-            w.put_str(s);
-        }
-
-        w.put_u32(self.frames.len() as u32);
-        for (f, &(cn, mn)) in self.frames.iter().zip(&frame_names) {
-            w.put_u32(cn);
-            w.put_u32(mn);
-            w.put_u32(f.pc);
-            w.put_u8(f.ret_reg_plus1);
-            w.put_u32(f.regs.len() as u32);
-            for v in &f.regs {
-                encode_value(&mut w, v);
-            }
-        }
-
-        w.put_u32(self.objects.len() as u32);
-        for (o, &cn) in self.objects.iter().zip(&obj_names) {
-            w.put_u64(o.origin_id);
-            w.put_u64(o.mapped_id);
-            w.put_u32(cn);
-            match o.zygote_seq {
-                Some(s) => {
-                    w.put_u8(1);
-                    w.put_u32(s);
-                }
-                None => w.put_u8(0),
-            }
-            encode_body(&mut w, &o.body);
-        }
-
-        w.put_u32(self.zygote_refs.len() as u32);
-        for ((_, seq), &cn) in self.zygote_refs.iter().zip(&zy_names) {
-            w.put_u32(cn);
-            w.put_u32(*seq);
-        }
-
-        w.put_u32(self.statics.len() as u32);
-        for (s, &cn) in self.statics.iter().zip(&static_names) {
-            w.put_u32(cn);
-            w.put_u16(s.idx);
-            encode_value(&mut w, &s.value);
-        }
-        w.into_vec()
+    // Pass 2: emit.
+    w.put_u32(strings.table.len() as u32);
+    for s in &strings.table {
+        w.put_str(s);
     }
 
-    /// Decode from bytes.
-    pub fn decode(buf: &[u8]) -> Result<CapturePacket> {
-        let mut r = WireReader::new(buf);
-        let magic = r.get_u32()?;
-        if magic != MAGIC {
-            return Err(CloneCloudError::Wire(format!("bad magic {magic:#x}")));
+    w.put_u32(frames.len() as u32);
+    for (f, &(cn, mn)) in frames.iter().zip(&frame_names) {
+        w.put_u32(cn);
+        w.put_u32(mn);
+        w.put_u32(f.pc);
+        w.put_u8(f.ret_reg_plus1);
+        w.put_u32(f.regs.len() as u32);
+        for v in &f.regs {
+            encode_value(w, v);
         }
-        let version = r.get_u16()?;
-        if version != VERSION {
-            return Err(CloneCloudError::Wire(format!("unsupported version {version}")));
-        }
-        let direction = match r.get_u8()? {
-            0 => Direction::Forward,
-            1 => Direction::Reverse,
-            d => return Err(CloneCloudError::Wire(format!("bad direction {d}"))),
-        };
-        let thread_id = r.get_u32()?;
-        let clock_us = r.get_f64()?;
+    }
 
+    w.put_u32(objects.len() as u32);
+    for (o, &cn) in objects.iter().zip(&obj_names) {
+        w.put_u64(o.origin_id);
+        w.put_u64(o.mapped_id);
+        w.put_u32(cn);
+        match o.zygote_seq {
+            Some(s) => {
+                w.put_u8(1);
+                w.put_u32(s);
+            }
+            None => w.put_u8(0),
+        }
+        encode_body(w, &o.body);
+    }
+
+    w.put_u32(zygote_refs.len() as u32);
+    for ((_, seq), &cn) in zygote_refs.iter().zip(&zy_names) {
+        w.put_u32(cn);
+        w.put_u32(*seq);
+    }
+
+    w.put_u32(statics.len() as u32);
+    for (s, &cn) in statics.iter().zip(&static_names) {
+        w.put_u32(cn);
+        w.put_u16(s.idx);
+        encode_value(w, &s.value);
+    }
+}
+
+impl WireSections {
+    /// Encode this section set (see [`encode_sections`]).
+    pub(crate) fn encode_into(&self, w: &mut WireWriter) {
+        encode_sections(w, &self.frames, &self.objects, &self.zygote_refs, &self.statics);
+    }
+
+    /// Decode the string table + sections (shared tail; see
+    /// `encode_into`). Does not check reader exhaustion — callers do.
+    pub(crate) fn decode_from(r: &mut WireReader) -> Result<WireSections> {
         let nstrings = r.get_u32()? as usize;
         let mut strings = Vec::with_capacity(nstrings);
         for _ in 0..nstrings {
@@ -249,7 +236,7 @@ impl CapturePacket {
             let nregs = r.get_u32()? as usize;
             let mut regs = Vec::with_capacity(nregs);
             for _ in 0..nregs {
-                regs.push(decode_value(&mut r)?);
+                regs.push(decode_value(r)?);
             }
             frames.push(WireFrame {
                 class_name,
@@ -271,7 +258,7 @@ impl CapturePacket {
             } else {
                 None
             };
-            let body = decode_body(&mut r)?;
+            let body = decode_body(r)?;
             objects.push(WireObject {
                 origin_id,
                 mapped_id,
@@ -294,7 +281,7 @@ impl CapturePacket {
         for _ in 0..nst {
             let class_name = lookup(r.get_u32()?)?;
             let idx = r.get_u16()?;
-            let value = decode_value(&mut r)?;
+            let value = decode_value(r)?;
             statics.push(WireStatic {
                 class_name,
                 idx,
@@ -302,6 +289,80 @@ impl CapturePacket {
             });
         }
 
+        Ok(WireSections {
+            frames,
+            objects,
+            zygote_refs,
+            statics,
+        })
+    }
+}
+
+pub(crate) fn encode_direction(w: &mut WireWriter, d: Direction) {
+    w.put_u8(match d {
+        Direction::Forward => 0,
+        Direction::Reverse => 1,
+    });
+}
+
+pub(crate) fn decode_direction(r: &mut WireReader) -> Result<Direction> {
+    match r.get_u8()? {
+        0 => Ok(Direction::Forward),
+        1 => Ok(Direction::Reverse),
+        d => Err(CloneCloudError::Wire(format!("bad direction {d}"))),
+    }
+}
+
+/// The full capture packet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapturePacket {
+    pub direction: Direction,
+    pub thread_id: u32,
+    /// Sender's virtual clock at capture (µs) — the receiver advances to
+    /// this so time is consistent across the migration.
+    pub clock_us: f64,
+    pub frames: Vec<WireFrame>,
+    pub objects: Vec<WireObject>,
+    /// Clean Zygote objects referenced by (class name, seq) only.
+    pub zygote_refs: Vec<(String, u32)>,
+    pub statics: Vec<WireStatic>,
+}
+
+impl CapturePacket {
+    /// Serialize to network-byte-order bytes. Class/method names are
+    /// interned into a string table written up front.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::with_capacity(4096);
+        w.put_u32(MAGIC);
+        w.put_u16(VERSION);
+        encode_direction(&mut w, self.direction);
+        w.put_u32(self.thread_id);
+        w.put_f64(self.clock_us);
+        encode_sections(
+            &mut w,
+            &self.frames,
+            &self.objects,
+            &self.zygote_refs,
+            &self.statics,
+        );
+        w.into_vec()
+    }
+
+    /// Decode from bytes.
+    pub fn decode(buf: &[u8]) -> Result<CapturePacket> {
+        let mut r = WireReader::new(buf);
+        let magic = r.get_u32()?;
+        if magic != MAGIC {
+            return Err(CloneCloudError::Wire(format!("bad magic {magic:#x}")));
+        }
+        let version = r.get_u16()?;
+        if version != VERSION {
+            return Err(CloneCloudError::Wire(format!("unsupported version {version}")));
+        }
+        let direction = decode_direction(&mut r)?;
+        let thread_id = r.get_u32()?;
+        let clock_us = r.get_f64()?;
+        let s = WireSections::decode_from(&mut r)?;
         if !r.is_done() {
             return Err(CloneCloudError::Wire(format!(
                 "{} trailing bytes",
@@ -312,15 +373,15 @@ impl CapturePacket {
             direction,
             thread_id,
             clock_us,
-            frames,
-            objects,
-            zygote_refs,
-            statics,
+            frames: s.frames,
+            objects: s.objects,
+            zygote_refs: s.zygote_refs,
+            statics: s.statics,
         })
     }
 }
 
-fn encode_value(w: &mut WireWriter, v: &WireValue) {
+pub(crate) fn encode_value(w: &mut WireWriter, v: &WireValue) {
     match v {
         WireValue::Null => w.put_u8(0),
         WireValue::Int(x) => {
@@ -339,16 +400,21 @@ fn encode_value(w: &mut WireWriter, v: &WireValue) {
             w.put_u8(4);
             w.put_u32(*z);
         }
+        WireValue::Base(m) => {
+            w.put_u8(5);
+            w.put_u64(*m);
+        }
     }
 }
 
-fn decode_value(r: &mut WireReader) -> Result<WireValue> {
+pub(crate) fn decode_value(r: &mut WireReader) -> Result<WireValue> {
     Ok(match r.get_u8()? {
         0 => WireValue::Null,
         1 => WireValue::Int(r.get_i64()?),
         2 => WireValue::Float(r.get_f64()?),
         3 => WireValue::Slot(r.get_u32()?),
         4 => WireValue::Zygote(r.get_u32()?),
+        5 => WireValue::Base(r.get_u64()?),
         t => return Err(CloneCloudError::Wire(format!("bad value tag {t}"))),
     })
 }
@@ -417,6 +483,7 @@ fn decode_body(r: &mut WireReader) -> Result<WireBody> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn sample() -> CapturePacket {
         CapturePacket {
@@ -499,5 +566,162 @@ mod tests {
         p.objects[1].body = WireBody::FloatArray(vec![1.5, -0.25, 3.0e-8]);
         let q = CapturePacket::decode(&p.encode()).unwrap();
         assert_eq!(p.objects[1].body, q.objects[1].body);
+    }
+
+    // ---- property tests (mirroring the `Msg` prop suite) ---------------
+
+    /// Generate an arbitrary wire value, including the delta-only `Base`
+    /// kind so the codec is exercised beyond what full captures emit.
+    pub(super) fn gen_value(rng: &mut Rng) -> WireValue {
+        match rng.index(6) {
+            0 => WireValue::Null,
+            1 => WireValue::Int(rng.next_u64() as i64),
+            2 => WireValue::Float(rng.range_i64(-1_000_000, 1_000_000) as f64 / 64.0),
+            3 => WireValue::Slot(rng.next_u64() as u32),
+            4 => WireValue::Zygote(rng.next_u64() as u32),
+            _ => WireValue::Base(rng.next_u64()),
+        }
+    }
+
+    fn gen_name(rng: &mut Rng) -> String {
+        // Small pool so the string table sees real sharing, plus the
+        // occasional unique (and non-ASCII) name.
+        const POOL: &[&str] = &["App", "sys.String", "[arr]", "Работа", "x.y.Z"];
+        if rng.chance(0.8) {
+            POOL[rng.index(POOL.len())].to_string()
+        } else {
+            format!("C{}", rng.next_u64())
+        }
+    }
+
+    fn gen_body(rng: &mut Rng) -> WireBody {
+        match rng.index(4) {
+            0 => WireBody::Fields((0..rng.index(6)).map(|_| gen_value(rng)).collect()),
+            1 => {
+                let mut b = vec![0u8; rng.index(512)];
+                rng.fill_bytes(&mut b);
+                WireBody::ByteArray(b)
+            }
+            2 => WireBody::FloatArray(
+                (0..rng.index(64)).map(|_| rng.range_f32(-1e6, 1e6)).collect(),
+            ),
+            _ => WireBody::RefArray((0..rng.index(6)).map(|_| gen_value(rng)).collect()),
+        }
+    }
+
+    /// Generate an arbitrary capture packet. The codec does not require
+    /// semantic consistency (in-range slots etc.), so none is imposed —
+    /// any structurally valid packet must round-trip.
+    pub(super) fn gen_packet(rng: &mut Rng) -> CapturePacket {
+        CapturePacket {
+            direction: if rng.chance(0.5) {
+                Direction::Forward
+            } else {
+                Direction::Reverse
+            },
+            thread_id: rng.next_u64() as u32,
+            clock_us: rng.range_i64(0, 1 << 40) as f64 / 16.0,
+            frames: (0..rng.index(4))
+                .map(|_| WireFrame {
+                    class_name: gen_name(rng),
+                    method_name: gen_name(rng),
+                    pc: rng.next_u64() as u32,
+                    ret_reg_plus1: rng.byte(),
+                    regs: (0..rng.index(8)).map(|_| gen_value(rng)).collect(),
+                })
+                .collect(),
+            objects: (0..rng.index(8))
+                .map(|_| WireObject {
+                    origin_id: rng.next_u64(),
+                    mapped_id: rng.next_u64(),
+                    class_name: gen_name(rng),
+                    zygote_seq: rng.chance(0.3).then(|| rng.next_u64() as u32),
+                    body: gen_body(rng),
+                })
+                .collect(),
+            zygote_refs: (0..rng.index(4))
+                .map(|_| (gen_name(rng), rng.next_u64() as u32))
+                .collect(),
+            statics: (0..rng.index(4))
+                .map(|_| WireStatic {
+                    class_name: gen_name(rng),
+                    idx: rng.next_u64() as u16,
+                    value: gen_value(rng),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn prop_packets_roundtrip() {
+        use crate::util::prop::{ensure_eq, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xCA97_0001,
+                cases: 150,
+            },
+            gen_packet,
+            |p| {
+                let decoded = CapturePacket::decode(&p.encode())
+                    .map_err(|e| format!("decode failed: {e}"))?;
+                ensure_eq(decoded, p.clone(), "decode(encode(p))")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_strict_prefixes_never_decode() {
+        use crate::util::prop::{ensure, forall, PropConfig};
+        // Every field is length-prefixed and decode demands exhaustion,
+        // so any strict prefix of a valid encoding must be a clean error
+        // (never a panic, never a silent partial parse).
+        forall(
+            PropConfig {
+                seed: 0xCA97_0002,
+                cases: 150,
+            },
+            |rng| {
+                let bytes = gen_packet(rng).encode();
+                let cut = rng.index(bytes.len());
+                (bytes, cut)
+            },
+            |(bytes, cut)| {
+                ensure(
+                    CapturePacket::decode(&bytes[..*cut]).is_err(),
+                    "prefix decoded",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_garbage_never_panics() {
+        use crate::util::prop::{forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xCA97_0003,
+                cases: 300,
+            },
+            |rng| {
+                // Half the cases start from a valid header so the fuzz
+                // reaches the section decoders, not just the magic check.
+                let mut b = if rng.chance(0.5) {
+                    let mut w = crate::util::bytes::WireWriter::new();
+                    w.put_u32(MAGIC);
+                    w.put_u16(2);
+                    w.into_vec()
+                } else {
+                    Vec::new()
+                };
+                let mut tail = vec![0u8; rng.index(256)];
+                rng.fill_bytes(&mut tail);
+                b.extend_from_slice(&tail);
+                b
+            },
+            |bytes| {
+                let _ = CapturePacket::decode(bytes); // Ok or Err; no panic.
+                Ok(())
+            },
+        );
     }
 }

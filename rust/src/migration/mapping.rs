@@ -78,14 +78,22 @@ impl MappingTable {
         &self.entries
     }
 
-    /// Drop entries whose CID is not in `returning` — objects from the
-    /// original thread that died at the clone ("entries in the table
-    /// whose CID does not appear in captured objects are deleted").
-    /// Returns the number dropped.
-    pub fn retain_cids(&mut self, returning: &HashMap<u64, ()>) -> usize {
+    /// Drop the entries holding the given MIDs (the delta path's
+    /// `deleted` list: baseline members that died on the other side).
+    /// Returns the number of entries removed.
+    pub fn remove_mids(&mut self, mids: &[u64]) -> usize {
+        if mids.is_empty() {
+            return 0;
+        }
+        let doomed: std::collections::HashSet<u64> = mids.iter().copied().collect();
         let before = self.entries.len();
         self.entries
-            .retain(|e| matches!(e.cid, Some(c) if returning.contains_key(&c)));
+            .retain(|e| !matches!(e.mid, Some(m) if doomed.contains(&m)));
+        self.rebuild_index();
+        before - self.entries.len()
+    }
+
+    fn rebuild_index(&mut self) {
         self.by_mid.clear();
         self.by_cid.clear();
         for (i, e) in self.entries.iter().enumerate() {
@@ -96,6 +104,17 @@ impl MappingTable {
                 self.by_cid.insert(c, i);
             }
         }
+    }
+
+    /// Drop entries whose CID is not in `returning` — objects from the
+    /// original thread that died at the clone ("entries in the table
+    /// whose CID does not appear in captured objects are deleted").
+    /// Returns the number dropped.
+    pub fn retain_cids(&mut self, returning: &HashMap<u64, ()>) -> usize {
+        let before = self.entries.len();
+        self.entries
+            .retain(|e| matches!(e.cid, Some(c) if returning.contains_key(&c)));
+        self.rebuild_index();
         before - self.entries.len()
     }
 }

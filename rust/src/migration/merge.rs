@@ -8,6 +8,12 @@
 //! Reverse direction: *merge* the returned context into the original
 //! process — overwrite objects with non-null MIDs, create objects with
 //! null MIDs, leave orphans to the garbage collector.
+//!
+//! Delta capsules reuse the same machinery (see [`super::delta`]): the
+//! value resolver additionally understands [`WireValue::Base`] references
+//! to session-baseline objects the receiver already holds — resolved
+//! through the persistent mapping table at the clone, or directly by MID
+//! at the mobile device.
 
 use crate::appvm::bytecode::ClassId;
 use crate::appvm::process::Process;
@@ -15,7 +21,7 @@ use crate::appvm::thread::{Frame, ThreadStatus, VmThread};
 use crate::appvm::value::{ObjBody, ObjId, Object, Value};
 use crate::error::{CloneCloudError, Result};
 
-use super::format::{CapturePacket, Direction, WireBody, WireValue};
+use super::format::{CapturePacket, Direction, WireBody, WireFrame, WireObject, WireStatic, WireValue};
 use super::mapping::MappingTable;
 use super::zygote_diff::ZygoteIndex;
 
@@ -24,8 +30,20 @@ use super::zygote_diff::ZygoteIndex;
 pub struct MergeStats {
     /// Objects freshly created on this side.
     pub created: usize,
-    /// Objects overwritten in place (non-null mapped id / Zygote name).
+    /// Objects overwritten in place (non-null mapped id / Zygote name /
+    /// session baseline).
     pub overwritten: usize,
+}
+
+/// How [`WireValue::Base`] references resolve on the receiving side.
+pub(crate) enum BaseResolve<'a> {
+    /// Full packets never carry `Base`; treat one as corruption.
+    Reject,
+    /// Clone side: resolve MID -> CID through the session mapping table.
+    Table(&'a MappingTable),
+    /// Mobile side: the MID *is* the local id (validated by the caller
+    /// against the live heap before resolution).
+    Local,
 }
 
 /// Resolve the local object id each wire object lands on, allocating
@@ -62,21 +80,28 @@ fn place_objects(
             id
         } else {
             stats.created += 1;
-            p.heap.alloc(Object {
-                class,
-                body: ObjBody::Fields(Vec::new()), // placeholder
-                zygote_seq: None,
-                dirty: true,
-            })
+            p.heap.alloc(placeholder(class))
         };
         locals.push(local);
     }
     Ok(locals)
 }
 
-fn make_value_resolver<'a>(
+/// A placeholder object for a slot whose body is filled in a second pass.
+pub(crate) fn placeholder(class: ClassId) -> Object {
+    Object {
+        class,
+        body: ObjBody::Fields(Vec::new()),
+        zygote_seq: None,
+        dirty: true,
+        epoch: 0, // stamped by `Heap::alloc`
+    }
+}
+
+pub(crate) fn make_value_resolver<'a>(
     locals: &'a [ObjId],
     zlocal: &'a [ObjId],
+    base: BaseResolve<'a>,
 ) -> impl Fn(&WireValue) -> Result<Value> + 'a {
     move |v: &WireValue| -> Result<Value> {
         Ok(match v {
@@ -89,22 +114,40 @@ fn make_value_resolver<'a>(
             WireValue::Zygote(z) => Value::Ref(*zlocal.get(*z as usize).ok_or_else(|| {
                 CloneCloudError::migration(format!("zygote ref {z} out of range"))
             })?),
+            WireValue::Base(mid) => match &base {
+                BaseResolve::Reject => {
+                    return Err(CloneCloudError::migration(
+                        "baseline reference in a full capture",
+                    ))
+                }
+                BaseResolve::Table(t) => {
+                    Value::Ref(ObjId(t.cid_for_mid(*mid).ok_or_else(|| {
+                        CloneCloudError::migration(format!(
+                            "baseline object {mid} missing from the session table"
+                        ))
+                    })?))
+                }
+                BaseResolve::Local => Value::Ref(ObjId(*mid)),
+            },
         })
     }
 }
 
-/// Fill object bodies + statics + build frames from a packet. Shared by
-/// both directions once placement is done.
-fn apply_packet(
+/// Fill object bodies + statics + build frames. Shared by the full and
+/// delta paths once placement is done.
+pub(crate) fn apply_sections(
     p: &mut Process,
-    packet: &CapturePacket,
+    frames_in: &[WireFrame],
+    objects: &[WireObject],
+    statics: &[WireStatic],
     locals: &[ObjId],
     zlocal: &[ObjId],
+    base: BaseResolve<'_>,
 ) -> Result<Vec<Frame>> {
-    let resolve = make_value_resolver(locals, zlocal);
+    let resolve = make_value_resolver(locals, zlocal, base);
 
     // Object bodies.
-    for (wo, &local) in packet.objects.iter().zip(locals) {
+    for (wo, &local) in objects.iter().zip(locals) {
         let body = match &wo.body {
             WireBody::Fields(vs) => {
                 ObjBody::Fields(vs.iter().map(&resolve).collect::<Result<Vec<_>>>()?)
@@ -119,7 +162,7 @@ fn apply_packet(
     }
 
     // Statics.
-    for ws in &packet.statics {
+    for ws in statics {
         let cid: ClassId = p.program.class_id(&ws.class_name).ok_or_else(|| {
             CloneCloudError::migration(format!("unknown class '{}'", ws.class_name))
         })?;
@@ -133,8 +176,8 @@ fn apply_packet(
     }
 
     // Frames.
-    let mut frames = Vec::with_capacity(packet.frames.len());
-    for wf in &packet.frames {
+    let mut frames = Vec::with_capacity(frames_in.len());
+    for wf in frames_in {
         let mref = p.program.resolve(&wf.class_name, &wf.method_name)?;
         let mut frame = Frame::new(
             mref,
@@ -154,9 +197,11 @@ fn apply_packet(
     Ok(frames)
 }
 
-fn resolve_zygote_locals(packet: &CapturePacket, zidx: &ZygoteIndex) -> Result<Vec<ObjId>> {
-    packet
-        .zygote_refs
+pub(crate) fn resolve_zygote_locals(
+    zygote_refs: &[(String, u32)],
+    zidx: &ZygoteIndex,
+) -> Result<Vec<ObjId>> {
+    zygote_refs
         .iter()
         .map(|(name, seq)| zidx.lookup(name, *seq))
         .collect()
@@ -173,7 +218,7 @@ pub fn instantiate_at_clone(
         return Err(CloneCloudError::migration("expected a forward capture"));
     }
     let mut stats = MergeStats::default();
-    let zlocal = resolve_zygote_locals(packet, zidx)?;
+    let zlocal = resolve_zygote_locals(&packet.zygote_refs, zidx)?;
     let locals = place_objects(clone, packet, zidx, false, &mut stats)?;
 
     // Build the mapping table: MID (origin) -> freshly assigned CID.
@@ -182,7 +227,15 @@ pub fn instantiate_at_clone(
         table.insert(Some(wo.origin_id), Some(local.0));
     }
 
-    let frames = apply_packet(clone, packet, &locals, &zlocal)?;
+    let frames = apply_sections(
+        clone,
+        &packet.frames,
+        &packet.objects,
+        &packet.statics,
+        &locals,
+        &zlocal,
+        BaseResolve::Reject,
+    )?;
     let tid = clone.threads.len() as u32;
     let mut t = VmThread::new(tid);
     t.frames = frames;
@@ -206,9 +259,17 @@ pub fn merge_at_mobile(
         return Err(CloneCloudError::migration("expected a reverse capture"));
     }
     let mut stats = MergeStats::default();
-    let zlocal = resolve_zygote_locals(packet, zidx)?;
+    let zlocal = resolve_zygote_locals(&packet.zygote_refs, zidx)?;
     let locals = place_objects(p, packet, zidx, true, &mut stats)?;
-    let frames = apply_packet(p, packet, &locals, &zlocal)?;
+    let frames = apply_sections(
+        p,
+        &packet.frames,
+        &packet.objects,
+        &packet.statics,
+        &locals,
+        &zlocal,
+        BaseResolve::Reject,
+    )?;
 
     let t = p.thread_mut(tid)?;
     t.frames = frames;
@@ -219,7 +280,8 @@ pub fn merge_at_mobile(
 }
 
 /// Capture-local object count validator used in tests: every Slot in the
-/// packet must be within range.
+/// packet must be within range, and a full packet may not carry baseline
+/// references.
 pub fn validate_packet(packet: &CapturePacket) -> Result<()> {
     let n = packet.objects.len() as u32;
     let nz = packet.zygote_refs.len() as u32;
@@ -231,6 +293,9 @@ pub fn validate_packet(packet: &CapturePacket) -> Result<()> {
             WireValue::Zygote(z) if *z >= nz => {
                 Err(CloneCloudError::migration(format!("zygote {z} >= {nz}")))
             }
+            WireValue::Base(m) => Err(CloneCloudError::migration(format!(
+                "baseline reference {m} in a full capture"
+            ))),
             _ => Ok(()),
         }
     };

@@ -14,7 +14,8 @@ use crate::config::CostParams;
 use crate::error::Result;
 
 use super::capture::{capture_thread, CaptureOptions, CaptureStats};
-use super::format::{CapturePacket, Direction};
+use super::delta::{self, Capsule, CloneSession, MobileSession};
+use super::format::{CapturePacket, Direction, WireBody, WireObject};
 use super::mapping::MappingTable;
 use super::merge::{instantiate_at_clone, merge_at_mobile, MergeStats};
 use super::zygote_diff::ZygoteIndex;
@@ -31,6 +32,8 @@ pub struct MigrationPhases {
     pub bytes_out: u64,
     pub objects_shipped: usize,
     pub zygote_skipped: usize,
+    /// Session-baseline objects referenced instead of shipped (delta).
+    pub base_skipped: usize,
 }
 
 /// The migrator: per-process component, configured with cost calibration
@@ -153,9 +156,11 @@ impl Migrator {
     /// payload state (the network-unspecific cost that dominates WiFi
     /// migrations in the paper's §6).
     fn merge_cost_base_us(&self, packet: &CapturePacket) -> f64 {
-        use super::format::WireBody;
-        let bytes: u64 = packet
-            .objects
+        self.merge_cost_objs_us(&packet.objects)
+    }
+
+    fn merge_cost_objs_us(&self, objects: &[WireObject]) -> f64 {
+        let bytes: u64 = objects
             .iter()
             .map(|o| match &o.body {
                 WireBody::ByteArray(b) => b.len() as u64,
@@ -163,7 +168,7 @@ impl Migrator {
                 WireBody::Fields(v) | WireBody::RefArray(v) => 9 * v.len() as u64,
             })
             .sum();
-        self.costs.merge_per_obj_us * packet.objects.len() as f64
+        self.costs.merge_per_obj_us * objects.len() as f64
             + self.costs.merge_per_byte_us * bytes as f64
     }
 
@@ -172,5 +177,123 @@ impl Migrator {
             self.costs.capture_per_obj_us * stats.objects as f64
                 + self.costs.per_byte_us * stats.bytes as f64,
         )
+    }
+
+    fn phases_from_stats(stats: &CaptureStats, phases: &mut MigrationPhases) {
+        phases.bytes_out = stats.bytes as u64;
+        phases.objects_shipped = stats.objects;
+        phases.zygote_skipped = stats.zygote_skipped;
+        phases.base_skipped = stats.base_skipped;
+    }
+}
+
+/// Session-aware capsule API: the delta-migration pipeline. Each endpoint
+/// keeps a per-session baseline cache ([`MobileSession`] at the phone,
+/// [`CloneSession`] in the clone slot); captures degrade to full packets
+/// whenever the baseline is missing or incoherent (`NeedFull`).
+impl Migrator {
+    /// Suspend + capture thread `tid` as a capsule (delta when the
+    /// session holds a baseline). Charges suspend and capture costs; the
+    /// thread is marked Migrated.
+    pub fn migrate_out_capsule(
+        &self,
+        p: &mut Process,
+        tid: u32,
+        sess: &mut MobileSession,
+    ) -> Result<(Capsule, MigrationPhases)> {
+        let mut phases = MigrationPhases::default();
+        p.suspend_others(tid);
+        let suspend_us = p.device.scale_us(self.costs.suspend_resume_us / 2.0);
+        p.clock.charge_us(suspend_us);
+        phases.suspend_ms = suspend_us / 1e3;
+
+        let (capsule, stats) = delta::capture_forward(p, tid, self.opts, sess)?;
+        let capture_us = self.capture_cost_us(p, &stats);
+        p.clock.charge_us(capture_us);
+        phases.capture_ms = capture_us / 1e3;
+        Self::phases_from_stats(&stats, &mut phases);
+
+        p.thread_mut(tid)?.status = ThreadStatus::Migrated;
+        Ok((capsule, phases))
+    }
+
+    /// Re-capture in full after the clone rejected a delta (`NeedFull`).
+    /// The thread is still suspended at the same point; only the capture
+    /// cost is charged (suspension already happened).
+    pub fn recapture_full(
+        &self,
+        p: &mut Process,
+        tid: u32,
+        sess: &mut MobileSession,
+    ) -> Result<(Capsule, MigrationPhases)> {
+        let mut phases = MigrationPhases::default();
+        let (capsule, stats) = delta::recapture_forward_full(p, tid, self.opts, sess)?;
+        let capture_us = self.capture_cost_us(p, &stats);
+        p.clock.charge_us(capture_us);
+        phases.capture_ms = capture_us / 1e3;
+        Self::phases_from_stats(&stats, &mut phases);
+        Ok((capsule, phases))
+    }
+
+    /// Clone side: apply a forward capsule onto the (possibly retained)
+    /// slot process. Full capsules reset the session baseline; deltas
+    /// verify it and patch in place. Returns the new thread id.
+    pub fn receive_capsule_at_clone(
+        &self,
+        clone: &mut Process,
+        capsule: &Capsule,
+        sess: &mut CloneSession,
+    ) -> Result<(u32, MergeStats)> {
+        let (tid, stats) = delta::receive_at_clone_capsule(clone, capsule, sess)?;
+        let us = clone
+            .device
+            .scale_us(self.merge_cost_objs_us(capsule.objects()));
+        clone.clock.charge_us(us);
+        Ok((tid, stats))
+    }
+
+    /// Clone side: capture the thread back for reintegration (delta when
+    /// the session negotiated it). Returns the capsule and the number of
+    /// mapping entries dropped (objects that died at the clone).
+    pub fn return_capsule_from_clone(
+        &self,
+        clone: &mut Process,
+        tid: u32,
+        sess: &mut CloneSession,
+    ) -> Result<(Capsule, MigrationPhases, usize)> {
+        let mut phases = MigrationPhases::default();
+        let suspend_us = clone.device.scale_us(self.costs.suspend_resume_us / 2.0);
+        clone.clock.charge_us(suspend_us);
+        phases.suspend_ms = suspend_us / 1e3;
+
+        let (capsule, stats, dropped) =
+            delta::return_from_clone_capsule(clone, tid, self.opts, sess)?;
+        let capture_us = self.capture_cost_us(clone, &stats);
+        clone.clock.charge_us(capture_us);
+        phases.capture_ms = capture_us / 1e3;
+        Self::phases_from_stats(&stats, &mut phases);
+
+        clone.thread_mut(tid)?.status = ThreadStatus::Migrated;
+        Ok((capsule, phases, dropped))
+    }
+
+    /// Mobile side: merge a reverse capsule and resume. Updates the
+    /// session baseline (or clears it on a full reply).
+    pub fn merge_back_capsule(
+        &self,
+        p: &mut Process,
+        tid: u32,
+        capsule: &Capsule,
+        sess: &mut MobileSession,
+    ) -> Result<(MergeStats, MigrationPhases)> {
+        let mut phases = MigrationPhases::default();
+        let stats = delta::merge_at_mobile_capsule(p, tid, capsule, sess)?;
+        let merge_us = p.device.scale_us(
+            self.merge_cost_objs_us(capsule.objects()) + self.costs.suspend_resume_us / 2.0,
+        );
+        p.clock.charge_us(merge_us);
+        phases.merge_ms = merge_us / 1e3;
+        p.resume_others(tid);
+        Ok((stats, phases))
     }
 }

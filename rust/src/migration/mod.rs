@@ -1,13 +1,20 @@
-//! Thread-granularity migration (paper §4).
+//! Thread-granularity migration (paper §4) + epoch-based delta transfer.
 //!
-//! * [`capture`] — suspend-and-capture: frames + reachable heap + statics.
-//! * [`format`] — hprof-like portable wire encoding (network byte order).
-//! * [`mapping`] — the MID/CID object-mapping table (Fig. 8).
+//! * [`capture`] — suspend-and-capture: frames + reachable heap + statics
+//!   (full, or restricted to the dirty set for delta capsules).
+//! * [`format`] — hprof-like portable wire encoding (network byte order);
+//!   section codecs shared by both capsule flavors.
+//! * [`mapping`] — the MID/CID object-mapping table (Fig. 8), promoted to
+//!   session lifetime by the delta pipeline.
 //! * [`merge`] — clone-side instantiation and mobile-side state merge.
+//! * [`delta`] — incremental capsules: per-session baseline caches,
+//!   mutation-epoch dirty sets, digest-guarded `NeedFull` fallback.
 //! * [`zygote_diff`] — the §4.3 transfer optimization.
-//! * [`migrator`] — the per-process orchestration + cost accounting.
+//! * [`migrator`] — the per-process orchestration + cost accounting (both
+//!   the classic full-packet API and the session-aware capsule API).
 
 pub mod capture;
+pub mod delta;
 pub mod format;
 pub mod mapping;
 pub mod merge;
@@ -15,6 +22,7 @@ pub mod migrator;
 pub mod zygote_diff;
 
 pub use capture::{capture_thread, measure_state_size, CaptureOptions, CaptureStats};
+pub use delta::{Capsule, CloneSession, DeltaPacket, MobileSession};
 pub use format::{CapturePacket, Direction};
 pub use mapping::MappingTable;
 pub use merge::{instantiate_at_clone, merge_at_mobile, validate_packet, MergeStats};
@@ -237,6 +245,216 @@ end
             ObjBody::ByteArray(b) => assert_eq!(b[0], 7),
             other => panic!("expected byte array, got {other:?}"),
         }
+    }
+
+    /// Multi-round offload program for the delta tests: N byte arrays
+    /// hang off a static; each round the phone dirties one byte of one
+    /// array, offloads a byte-sum over it (the clone dirties another
+    /// byte AND allocates a fresh array into `keep` — exercising the
+    /// assignment piggyback and the deleted list), and accumulates the
+    /// result. Only O(1) of the N arrays changes per round — exactly the
+    /// shape delta migration exploits.
+    const DELTA_PROG: &str = r#"
+class D app
+  static data
+  static out
+  static keep
+  method main nargs=0 regs=12
+    const r0 8
+    newarr r1 val r0
+    puts D.data r1
+    const r2 0
+    const r3 2048
+  mk:
+    ifge r2 r0 @mkd
+    newarr r4 byte r3
+    aput r1 r2 r4
+    const r5 1
+    add r2 r2 r5
+    goto @mk
+  mkd:
+    const r6 0
+    const r10 0
+  loop:
+    ifge r6 r0 @done
+    aget r4 r1 r6
+    const r5 0
+    aput r4 r5 r6
+    invoke r8 D.work r4
+    add r10 r10 r8
+    const r5 1
+    add r6 r6 r5
+    goto @loop
+  done:
+    puts D.out r10
+    retv
+  end
+  method work nargs=1 regs=8
+    ccstart 0
+    len r1 r0
+    const r2 0
+    const r3 0
+  sum:
+    ifge r2 r1 @sd
+    aget r4 r0 r2
+    add r3 r3 r4
+    const r5 1
+    add r2 r2 r5
+    goto @sum
+  sd:
+    const r6 1
+    aput r0 r6 r3
+    const r7 4
+    newarr r2 byte r7
+    const r6 0
+    aput r2 r6 r3
+    puts D.keep r2
+    ccstop 0
+    ret r3
+  end
+end
+"#;
+
+    /// Drive a full phone/clone session through the capsule API; returns
+    /// (final `out` static, final `keep` array bytes, per-round
+    /// (is_delta, forward bytes), fallback count).
+    fn run_capsule_session(
+        delta: bool,
+        evict_before_round: Option<usize>,
+    ) -> (Value, Vec<u8>, Vec<(bool, usize)>, usize) {
+        let program = Arc::new(assemble(DELTA_PROG).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let main = program.entry().unwrap();
+        let mut phone = make_proc(Location::Mobile, &program, 40);
+        let mut clone = make_proc(Location::Clone, &program, 40);
+        let migrator = Migrator::new(CostParams::default());
+        let mut msess = MobileSession::new(delta);
+        let mut csess = CloneSession::new(delta);
+
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        let mut rounds = Vec::new();
+        let mut fallbacks = 0usize;
+        loop {
+            match run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap() {
+                RunExit::Completed(_) => break,
+                RunExit::ReintegrationPoint { .. } => continue,
+                RunExit::MigrationPoint { .. } => {
+                    if Some(rounds.len()) == evict_before_round {
+                        csess.evict();
+                    }
+                    let (capsule, _) = migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+                    // Wire roundtrip, with the NeedFull fallback the real
+                    // drivers implement.
+                    let mut bytes = capsule.encode();
+                    let mut sent = Capsule::decode(&bytes).unwrap();
+                    let ctid = loop {
+                        match migrator.receive_capsule_at_clone(&mut clone, &sent, &mut csess) {
+                            Ok((ctid, _)) => break ctid,
+                            Err(e) if e.is_need_full() => {
+                                fallbacks += 1;
+                                let (full, _) =
+                                    migrator.recapture_full(&mut phone, tid, &mut msess).unwrap();
+                                bytes = full.encode();
+                                sent = Capsule::decode(&bytes).unwrap();
+                            }
+                            Err(e) => panic!("receive: {e}"),
+                        }
+                    };
+                    rounds.push((sent.is_delta(), bytes.len()));
+
+                    let exit = run_thread(&mut clone, ctid, &mut NoHooks, 10_000_000).unwrap();
+                    assert!(matches!(exit, RunExit::ReintegrationPoint { .. }), "{exit:?}");
+                    let (rcap, _, _) = migrator
+                        .return_capsule_from_clone(&mut clone, ctid, &mut csess)
+                        .unwrap();
+                    let rcap = Capsule::decode(&rcap.encode()).unwrap();
+                    migrator
+                        .merge_back_capsule(&mut phone, tid, &rcap, &mut msess)
+                        .unwrap();
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        let out = phone.statics[main.class.0 as usize][1];
+        let keep = phone.statics[main.class.0 as usize][2]
+            .as_ref()
+            .expect("keep holds the clone-allocated array");
+        let keep_bytes = match &phone.heap.get(keep).unwrap().body {
+            ObjBody::ByteArray(b) => b.clone(),
+            other => panic!("expected byte array, got {other:?}"),
+        };
+        (out, keep_bytes, rounds, fallbacks)
+    }
+
+    /// Delta and full capsule paths must produce bit-identical results,
+    /// and repeat rounds must ship dramatically fewer bytes via deltas.
+    #[test]
+    fn delta_session_matches_full_and_ships_less() {
+        let (full_out, full_keep, full_rounds, _) = run_capsule_session(false, None);
+        let (delta_out, delta_keep, delta_rounds, fallbacks) = run_capsule_session(true, None);
+        assert_eq!(delta_out, full_out, "delta path is bit-identical");
+        assert_eq!(delta_keep, full_keep, "clone-created state matches too");
+        assert_eq!(fallbacks, 0);
+        assert_eq!(full_rounds.len(), delta_rounds.len());
+        assert!(full_rounds.iter().all(|&(d, _)| !d));
+        assert!(!delta_rounds[0].0, "first contact is a full capture");
+        assert!(
+            delta_rounds[1..].iter().all(|&(d, _)| d),
+            "repeat rounds ride deltas: {delta_rounds:?}"
+        );
+        // Steady-state rounds ship a small fraction of the full capsule.
+        let full_steady: usize = full_rounds[1..].iter().map(|&(_, b)| b).sum();
+        let delta_steady: usize = delta_rounds[1..].iter().map(|&(_, b)| b).sum();
+        assert!(
+            delta_steady * 5 <= full_steady,
+            "delta {delta_steady}B vs full {full_steady}B"
+        );
+    }
+
+    /// Evicting the clone baseline mid-session (worker recycle) triggers
+    /// the NeedFull fallback; the session recovers and results still
+    /// match the full path.
+    #[test]
+    fn delta_digest_mismatch_falls_back_to_full() {
+        let (full_out, full_keep, _, _) = run_capsule_session(false, None);
+        let (out, keep, rounds, fallbacks) = run_capsule_session(true, Some(4));
+        assert_eq!(out, full_out, "fallback preserves bit-identical results");
+        assert_eq!(keep, full_keep);
+        assert_eq!(fallbacks, 1, "exactly one NeedFull fallback");
+        assert!(!rounds[4].0, "the evicted round went out in full");
+        assert!(rounds[5].0, "the session re-established deltas afterwards");
+    }
+
+    /// The epoch-coherence invariant end to end: after every sync both
+    /// endpoints advance their epoch, so a second, no-change round ships
+    /// no objects at all.
+    #[test]
+    fn unchanged_state_ships_no_objects() {
+        let program = Arc::new(assemble(PROG).unwrap());
+        let main = program.entry().unwrap();
+        let mut phone = make_proc(Location::Mobile, &program, 30);
+        let migrator = Migrator::new(CostParams::default());
+        let mut msess = MobileSession::new(true);
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 1_000_000).unwrap();
+        assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+
+        let (first, _) = migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+        assert!(!first.is_delta());
+        // Nothing ran in between: a re-capture of the same state is a
+        // delta with zero shipped objects.
+        phone.thread_mut(tid).unwrap().status =
+            crate::appvm::thread::ThreadStatus::Runnable;
+        let (second, phases) = migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+        match &second {
+            Capsule::Delta(d) => {
+                assert_eq!(d.sections.objects.len(), 0, "no dirty objects");
+                assert!(d.deleted.is_empty());
+            }
+            Capsule::Full(_) => panic!("expected a delta"),
+        }
+        assert_eq!(phases.objects_shipped, 0);
+        assert!(phases.base_skipped > 0, "members referenced by id");
     }
 
     /// Running the partitioned binary with the "don't migrate" policy —

@@ -6,6 +6,11 @@
 //! shipping it — typically saving ~40,000 object transmissions per
 //! migration. This module builds the name -> local-object index each
 //! process uses to resolve such references.
+//!
+//! A malformed template heap (duplicate (class, seq) names) surfaces as a
+//! typed [`CloneCloudError::Migration`] from [`ZygoteIndex::try_build`]
+//! rather than a panic; receivers degrade to requesting a full capture
+//! ([`CloneCloudError::NeedFull`]) instead of aborting the session.
 
 use std::collections::HashMap;
 
@@ -22,6 +27,10 @@ pub struct ZygoteIndex {
 
 impl ZygoteIndex {
     /// Build the index from a process heap (scans for template objects).
+    /// Duplicate names keep the last-seen object — use [`try_build`] when
+    /// a malformed heap must be detected rather than papered over.
+    ///
+    /// [`try_build`]: ZygoteIndex::try_build
     pub fn build(program: &Program, heap: &Heap) -> ZygoteIndex {
         let mut by_name = HashMap::new();
         for (id, obj) in heap.iter() {
@@ -31,6 +40,24 @@ impl ZygoteIndex {
             }
         }
         ZygoteIndex { by_name }
+    }
+
+    /// Build the index, returning a typed error if the heap carries two
+    /// objects with the same (class, seq) name — the §4.3 naming
+    /// assumption is broken and name references would be ambiguous.
+    pub fn try_build(program: &Program, heap: &Heap) -> Result<ZygoteIndex> {
+        let mut by_name = HashMap::new();
+        for (id, obj) in heap.iter() {
+            if let Some(seq) = obj.zygote_seq {
+                let cname = program.class(obj.class).name.clone();
+                if by_name.insert((cname.clone(), seq), id).is_some() {
+                    return Err(CloneCloudError::migration(format!(
+                        "malformed Zygote heap: duplicate template name ({cname}, {seq})"
+                    )));
+                }
+            }
+        }
+        Ok(ZygoteIndex { by_name })
     }
 
     pub fn len(&self) -> usize {
@@ -56,6 +83,7 @@ impl ZygoteIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::appvm::value::Object;
     use crate::appvm::zygote::{build_template, install_system_classes};
     use std::sync::Arc;
 
@@ -74,7 +102,9 @@ mod tests {
         assert_eq!(ci.len(), 300);
         for (id, obj) in phone.iter() {
             let name = p.class(obj.class).name.clone();
-            let seq = obj.zygote_seq.unwrap();
+            let seq = obj
+                .zygote_seq
+                .expect("template objects carry their (class, seq) name");
             assert_eq!(pi.lookup(&name, seq).unwrap(), id);
             // The clone resolves the same name (possibly different id,
             // same (class, seq) object).
@@ -91,5 +121,28 @@ mod tests {
         let h = build_template(&p, 10, 1);
         let idx = ZygoteIndex::build(&p, &h);
         assert!(idx.lookup("sys.String", 9999).is_err());
+    }
+
+    #[test]
+    fn duplicate_template_names_are_a_typed_error() {
+        let mut p = Program::new();
+        install_system_classes(&mut p);
+        let p = Arc::new(p);
+        let mut h = build_template(&p, 10, 1);
+        assert!(ZygoteIndex::try_build(&p, &h).is_ok());
+
+        // Forge a duplicate (class, seq) name — a malformed heap.
+        let (_, sample) = h.iter().next().map(|(id, o)| (id, o.clone())).unwrap();
+        let mut forged = Object::new_fields(sample.class, 0);
+        forged.zygote_seq = sample.zygote_seq;
+        forged.dirty = false;
+        h.alloc(forged);
+
+        let err = ZygoteIndex::try_build(&p, &h).unwrap_err();
+        assert!(
+            err.to_string().contains("duplicate template name"),
+            "{err}"
+        );
+        assert!(!err.is_need_full(), "capture-side error, not the wire signal");
     }
 }

@@ -14,23 +14,37 @@
 
 use std::time::Duration;
 
-use crate::error::Result;
-use crate::farm::FarmHandle;
+use crate::error::{CloneCloudError, Result};
+use crate::farm::{FarmClone, FarmHandle};
 use crate::vfs::SimFs;
 
-use super::protocol::Msg;
+use super::protocol::{Msg, PROTO_VERSION};
 use super::transport::{TcpEndpoint, Transport};
 
 /// Serve one phone connection against the farm. Returns the number of
 /// migrations served. Exits cleanly on `Shutdown` (explicit, or a clean
 /// TCP EOF which the transport reports as `Shutdown`).
 pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result<u64> {
-    let mut session = None;
+    let mut session: Option<FarmClone> = None;
     let mut provisioned = false;
     let mut migrations = 0u64;
+    // Armed by Hello; applied to the session whenever one exists.
+    let mut delta = false;
     loop {
         let (msg, _) = t.recv()?;
         match msg {
+            Msg::Hello { proto, delta: want } => {
+                // Delta also requires placement that parks the phone's
+                // baseline on one worker (affinity).
+                delta = super::protocol::delta_agreed(proto, want) && handle.delta_friendly();
+                if let Some(s) = session.as_mut() {
+                    s.set_delta(delta);
+                }
+                t.send(&Msg::Hello {
+                    proto: PROTO_VERSION,
+                    delta,
+                })?;
+            }
             Msg::Provision {
                 zygote_objects,
                 zygote_seed,
@@ -56,7 +70,11 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
             Msg::SyncFs(fs) => {
                 match session.as_mut() {
                     Some(s) => s.set_fs(fs),
-                    None => session = Some(handle.session_auto(fs)),
+                    None => {
+                        let mut s = handle.session_auto(fs);
+                        s.set_delta(delta);
+                        session = Some(s);
+                    }
                 }
                 t.send(&Msg::Ack)?;
             }
@@ -66,13 +84,18 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                     continue;
                 }
                 if session.is_none() {
-                    session = Some(handle.session_auto(SimFs::new()));
+                    let mut s = handle.session_auto(SimFs::new());
+                    s.set_delta(delta);
+                    session = Some(s);
                 }
                 let s = session.as_mut().unwrap();
                 match s.roundtrip_bytes(bytes) {
                     Ok((rbytes, _)) => {
                         migrations += 1;
                         t.send(&Msg::Reintegrate(rbytes))?;
+                    }
+                    Err(CloneCloudError::NeedFull(reason)) => {
+                        t.send(&Msg::NeedFull(reason))?;
                     }
                     Err(e) => {
                         t.send(&Msg::Error(e.to_string()))?;

@@ -18,10 +18,10 @@ use crate::appvm::Program;
 use crate::config::CostParams;
 use crate::device::{DeviceSpec, Location};
 use crate::error::{CloneCloudError, Result};
-use crate::migration::{CapturePacket, Migrator};
+use crate::migration::{Capsule, CloneSession, Migrator};
 use crate::vfs::SimFs;
 
-use super::protocol::{program_hash, Msg};
+use super::protocol::{program_hash, Msg, PROTO_VERSION};
 use super::transport::Transport;
 
 /// Statistics from one clone-serving session.
@@ -30,6 +30,11 @@ pub struct CloneServeStats {
     pub migrations: usize,
     pub instrs_executed: u64,
     pub mapping_entries_dropped: usize,
+    /// Migrations that arrived as delta capsules.
+    pub delta_migrations: usize,
+    /// Delta capsules rejected with `NeedFull` (missing/incoherent
+    /// baseline); the phone re-sent them in full.
+    pub delta_rejects: usize,
 }
 
 /// The clone node: serves one phone over one transport.
@@ -66,11 +71,21 @@ impl<T: Transport> CloneServer<T> {
         let mut stats = CloneServeStats::default();
         let mut fs = SimFs::new();
         let mut proc: Option<Process> = None;
+        // Delta stays off until the phone negotiates it via Hello.
+        let mut session = CloneSession::new(false);
         let migrator = Migrator::new(self.costs.clone());
 
         loop {
             let (msg, _) = self.transport.recv()?;
             match msg {
+                Msg::Hello { proto, delta } => {
+                    let speak_delta = super::protocol::delta_agreed(proto, delta);
+                    session.set_enabled(speak_delta);
+                    self.transport.send(&Msg::Hello {
+                        proto: PROTO_VERSION,
+                        delta: speak_delta,
+                    })?;
+                }
                 Msg::Provision {
                     zygote_objects,
                     zygote_seed,
@@ -106,9 +121,19 @@ impl<T: Transport> CloneServer<T> {
                     self.transport.send(&Msg::Ack)?;
                 }
                 Msg::Migrate(bytes) => {
-                    let reply = self.handle_migration(&migrator, proc.as_mut(), &bytes, &mut stats);
+                    let reply = self.handle_migration(
+                        &migrator,
+                        proc.as_mut(),
+                        &bytes,
+                        &mut stats,
+                        &mut session,
+                    );
                     match reply {
                         Ok(rbytes) => self.transport.send(&Msg::Reintegrate(rbytes))?,
+                        Err(CloneCloudError::NeedFull(reason)) => {
+                            stats.delta_rejects += 1;
+                            self.transport.send(&Msg::NeedFull(reason))?
+                        }
                         Err(e) => self.transport.send(&Msg::Error(e.to_string()))?,
                     };
                 }
@@ -127,26 +152,33 @@ impl<T: Transport> CloneServer<T> {
         proc: Option<&mut Process>,
         bytes: &[u8],
         stats: &mut CloneServeStats,
+        session: &mut CloneSession,
     ) -> Result<Vec<u8>> {
         let p = proc.ok_or_else(|| CloneCloudError::Transport("migrate before provision".into()))?;
-        execute_migration(migrator, p, bytes, self.fuel, stats)
+        execute_migration(migrator, p, bytes, self.fuel, stats, session)
     }
 }
 
-/// Execute one forward capture on a clone process and return the encoded
-/// reverse capture. This is the clone-side inner loop shared by the
+/// Execute one forward capsule on a clone process and return the encoded
+/// reverse capsule. This is the clone-side inner loop shared by the
 /// single-phone [`CloneServer`] and the multi-tenant farm workers
-/// (`farm::worker`): decode, instantiate, drive to the reintegration
-/// point, capture back.
+/// (`farm::worker`): decode (full capture or delta against the session
+/// baseline), instantiate, drive to the reintegration point, capture
+/// back (as a delta when the session negotiated it).
+///
+/// A `NeedFull` error means the delta could not be applied (no baseline /
+/// digest mismatch); the caller relays it so the phone re-sends in full.
 pub fn execute_migration(
     migrator: &Migrator,
     p: &mut Process,
     bytes: &[u8],
     fuel: u64,
     stats: &mut CloneServeStats,
+    session: &mut CloneSession,
 ) -> Result<Vec<u8>> {
-    let packet = CapturePacket::decode(bytes)?;
-    let (tid, table, _) = migrator.receive_at_clone(p, &packet)?;
+    let capsule = Capsule::decode(bytes)?;
+    let is_delta = capsule.is_delta();
+    let (tid, _) = migrator.receive_capsule_at_clone(p, &capsule, session)?;
     let instrs0 = p.metrics.instrs;
 
     // Drive the migrant to its reintegration point. Nested CcStart
@@ -167,10 +199,13 @@ pub fn execute_migration(
         }
     }
     stats.migrations += 1;
+    if is_delta {
+        stats.delta_migrations += 1;
+    }
     stats.instrs_executed += p.metrics.instrs - instrs0;
-    let (rpacket, _, dropped) = migrator.return_from_clone(p, tid, table)?;
+    let (rcapsule, _, dropped) = migrator.return_capsule_from_clone(p, tid, session)?;
     stats.mapping_entries_dropped += dropped;
-    Ok(rpacket.encode())
+    Ok(rcapsule.encode())
 }
 
 /// Byte accounting for one migration round trip.
@@ -185,6 +220,8 @@ pub struct NodeManager<T: Transport> {
     transport: T,
     /// Cumulative bytes moved (metrics).
     pub total: TransferBytes,
+    /// Set by [`NodeManager::negotiate`]: both peers speak delta.
+    delta_negotiated: bool,
 }
 
 impl<T: Transport> NodeManager<T> {
@@ -192,6 +229,55 @@ impl<T: Transport> NodeManager<T> {
         NodeManager {
             transport,
             total: TransferBytes::default(),
+            delta_negotiated: false,
+        }
+    }
+
+    /// Negotiate protocol capabilities. Returns whether delta capsules
+    /// may flow on this channel; a peer that answers `Error` (pre-v3) is
+    /// treated as full-capture-only rather than a failure.
+    pub fn negotiate(&mut self) -> Result<bool> {
+        self.transport.send(&Msg::Hello {
+            proto: PROTO_VERSION,
+            delta: true,
+        })?;
+        self.delta_negotiated = match self.transport.recv()?.0 {
+            Msg::Hello { proto, delta } => super::protocol::delta_agreed(proto, delta),
+            // A peer that answers Error instead of Hello doesn't do
+            // capability negotiation; stay on full captures. (A peer so
+            // old it can't even *decode* Hello drops the transport, which
+            // surfaces as the recv error above — callers treat a failed
+            // negotiation as fatal for the connection, as they should.)
+            Msg::Error(_) => false,
+            other => {
+                return Err(CloneCloudError::Transport(format!(
+                    "expected Hello, got {other:?}"
+                )))
+            }
+        };
+        Ok(self.delta_negotiated)
+    }
+
+    /// Whether [`NodeManager::negotiate`] agreed on delta capsules.
+    pub fn delta_negotiated(&self) -> bool {
+        self.delta_negotiated
+    }
+
+    /// Re-Hello the peer with `delta = false` (the driver's session
+    /// cannot merge reverse deltas, so the clone must stop emitting
+    /// them). Best effort: a transport failure here will resurface on
+    /// the next real call anyway.
+    pub fn renegotiate_off(&mut self) {
+        if !self.delta_negotiated {
+            return;
+        }
+        self.delta_negotiated = false;
+        let sent = self.transport.send(&Msg::Hello {
+            proto: PROTO_VERSION,
+            delta: false,
+        });
+        if sent.is_ok() {
+            let _ = self.transport.recv(); // consume the peer's Hello reply
         }
     }
 
@@ -232,6 +318,11 @@ impl<T: Transport> NodeManager<T> {
         let (msg, down) = self.transport.recv()?;
         let bytes = match msg {
             Msg::Reintegrate(b) => b,
+            Msg::NeedFull(reason) => {
+                // Typed, recoverable: the driver re-captures in full.
+                self.total.up += up;
+                return Err(CloneCloudError::NeedFull(reason));
+            }
             Msg::Error(e) => {
                 return Err(CloneCloudError::Transport(format!("clone error: {e}")))
             }

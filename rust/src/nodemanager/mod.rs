@@ -21,7 +21,7 @@ pub use gateway::{serve_farm, serve_farm_session};
 pub use manager::{
     execute_migration, CloneServeStats, CloneServer, NodeManager, TransferBytes,
 };
-pub use protocol::{program_hash, Msg};
+pub use protocol::{program_hash, Msg, PROTO_VERSION};
 pub use transport::{InProcTransport, TcpEndpoint, TcpTransport, Transport};
 
 #[cfg(test)]
@@ -134,6 +134,92 @@ end
         let stats = server.join().unwrap();
         assert_eq!(stats.migrations, 1);
         assert!(stats.instrs_executed > 64);
+    }
+
+    /// Wire-path delta session: Hello negotiation, then a multi-round
+    /// offload where every repeat roundtrip rides a delta capsule over
+    /// the Msg protocol, with the correct merged result.
+    #[test]
+    fn wire_delta_session_end_to_end() {
+        use crate::config::NetworkProfile;
+        use crate::exec::{delta_workload_expected, delta_workload_src, run_distributed_session};
+        use crate::migration::MobileSession;
+
+        const ROUNDS: i64 = 6;
+        let program = Arc::new(assemble(&delta_workload_src(ROUNDS, 512)).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let main = program.entry().unwrap();
+
+        let (phone_t, clone_t) = InProcTransport::pair();
+        let srv_prog = program.clone();
+        let server = std::thread::spawn(move || {
+            let srv = CloneServer::new(
+                clone_t,
+                srv_prog,
+                CostParams::default(),
+                Box::new(NodeEnv::with_rust_compute),
+            );
+            srv.serve().unwrap()
+        });
+
+        let mut nm = NodeManager::new(phone_t);
+        let delta = nm.negotiate().unwrap();
+        assert!(delta);
+        nm.provision(&program, 200, 5).unwrap();
+
+        let template = build_template(&program, 200, 5);
+        let mut phone = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        );
+        let mut session = MobileSession::new(delta);
+        let out = run_distributed_session(
+            &mut phone,
+            &mut nm,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+        )
+        .unwrap();
+        assert_eq!(out.migrations as i64, ROUNDS);
+        assert_eq!(out.delta_roundtrips as i64, ROUNDS - 1, "repeat trips rode deltas");
+        assert_eq!(out.delta_fallbacks, 0);
+        assert_eq!(
+            phone.statics[main.class.0 as usize][1].as_int(),
+            Some(delta_workload_expected(ROUNDS))
+        );
+
+        nm.shutdown().unwrap();
+        let stats = server.join().unwrap();
+        assert_eq!(stats.migrations as i64, ROUNDS);
+        assert_eq!(stats.delta_migrations as i64, ROUNDS - 1);
+        assert_eq!(stats.delta_rejects, 0);
+    }
+
+    /// Hello/Hello negotiation arms delta capsules on both ends.
+    #[test]
+    fn hello_negotiates_delta() {
+        let program = Arc::new(assemble(PROG).unwrap());
+        let (phone_t, clone_t) = InProcTransport::pair();
+        let srv_prog = program;
+        let server = std::thread::spawn(move || {
+            let srv = CloneServer::new(
+                clone_t,
+                srv_prog,
+                CostParams::default(),
+                Box::new(NodeEnv::with_rust_compute),
+            );
+            srv.serve().unwrap()
+        });
+        let mut nm = NodeManager::new(phone_t);
+        assert!(!nm.delta_negotiated());
+        assert!(nm.negotiate().unwrap(), "v3 peers agree on delta");
+        assert!(nm.delta_negotiated());
+        nm.shutdown().unwrap();
+        server.join().unwrap();
     }
 
     #[test]

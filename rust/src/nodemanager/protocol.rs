@@ -9,6 +9,25 @@ use crate::error::{CloneCloudError, Result};
 use crate::util::bytes::{WireReader, WireWriter};
 use crate::vfs::SimFs;
 
+/// Protocol revision spoken by this build. v3 adds `Hello` capability
+/// negotiation and the delta-migration frames; `Migrate`/`Reintegrate`
+/// payloads may carry delta capsules only after both peers `Hello` with
+/// `delta = true` (older peers never send `Hello`, so they are never
+/// offered deltas).
+pub const PROTO_VERSION: u16 = 3;
+
+/// Lowest protocol revision that understands delta capsules. Both peers
+/// agree on `min(theirs, ours)`, so a future-version peer and a v3 peer
+/// still land on the same answer (checking `proto >= PROTO_VERSION` on
+/// each side would let version skew arm exactly one end).
+pub const DELTA_MIN_PROTO: u16 = 3;
+
+/// The delta decision both Hello peers compute: the negotiated revision
+/// is the minimum of the two, and it must know delta capsules.
+pub fn delta_agreed(peer_proto: u16, peer_delta: bool) -> bool {
+    peer_delta && peer_proto.min(PROTO_VERSION) >= DELTA_MIN_PROTO
+}
+
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
@@ -32,6 +51,13 @@ pub enum Msg {
     Error(String),
     /// Tear down the clone.
     Shutdown,
+    /// Capability negotiation (v3). The phone sends its protocol version
+    /// and whether it speaks delta capsules; the clone answers with its
+    /// own `Hello`. Deltas flow only when both said `delta = true`.
+    Hello { proto: u16, delta: bool },
+    /// The clone rejected a delta capsule (no/incoherent baseline); the
+    /// phone must resend the migration as a full capture.
+    NeedFull(String),
 }
 
 impl Msg {
@@ -71,6 +97,15 @@ impl Msg {
                 w.put_str(e);
             }
             Msg::Shutdown => w.put_u8(6),
+            Msg::Hello { proto, delta } => {
+                w.put_u8(7);
+                w.put_u16(*proto);
+                w.put_u8(u8::from(*delta));
+            }
+            Msg::NeedFull(reason) => {
+                w.put_u8(8);
+                w.put_str(reason);
+            }
         }
         w.into_vec()
     }
@@ -99,6 +134,11 @@ impl Msg {
             4 => Msg::Ack,
             5 => Msg::Error(r.get_str()?),
             6 => Msg::Shutdown,
+            7 => Msg::Hello {
+                proto: r.get_u16()?,
+                delta: r.get_u8()? != 0,
+            },
+            8 => Msg::NeedFull(r.get_str()?),
             t => return Err(CloneCloudError::Transport(format!("bad message tag {t}"))),
         };
         if !r.is_done() {
@@ -151,6 +191,15 @@ mod tests {
             Msg::Ack,
             Msg::Error("boom".into()),
             Msg::Shutdown,
+            Msg::Hello {
+                proto: PROTO_VERSION,
+                delta: true,
+            },
+            Msg::Hello {
+                proto: 2,
+                delta: false,
+            },
+            Msg::NeedFull("baseline digest mismatch".into()),
         ];
         for m in msgs {
             assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
@@ -160,7 +209,7 @@ mod tests {
     /// Generate an arbitrary protocol message: random payload sizes
     /// (including empty frames), random file sets, random strings.
     fn gen_msg(rng: &mut crate::util::rng::Rng) -> Msg {
-        match rng.index(7) {
+        match rng.index(9) {
             0 => Msg::Provision {
                 zygote_objects: rng.next_u64() as u32,
                 zygote_seed: rng.next_u64(),
@@ -190,6 +239,15 @@ mod tests {
                 let n = rng.index(128);
                 let s: String = (0..n).map(|_| (b'a' + rng.byte() % 26) as char).collect();
                 Msg::Error(s)
+            }
+            6 => Msg::Hello {
+                proto: rng.next_u64() as u16,
+                delta: rng.chance(0.5),
+            },
+            7 => {
+                let n = rng.index(64);
+                let s: String = (0..n).map(|_| (b'a' + rng.byte() % 26) as char).collect();
+                Msg::NeedFull(s)
             }
             _ => Msg::Shutdown,
         }
