@@ -67,6 +67,7 @@ fn main() {
             zygote_objects: ZYGOTE_OBJECTS,
             zygote_seed: ZYGOTE_SEED,
             fuel: 2_000_000_000,
+            slot_gc_interval: 8,
         },
         CostParams::default(),
         Arc::new(NodeEnv::with_rust_compute),

@@ -64,9 +64,17 @@ fn main() {
     });
 
     // Phone side: node manager over TCP. Hello negotiation arms delta
-    // capsules for the session (per-config).
+    // capsules and the frame codec for the session (per-config).
     let mut nm = NodeManager::new(TcpTransport::connect(&addr).expect("connect"));
     let delta = cfg.delta_migration && nm.negotiate().expect("hello");
+    // Log the negotiated capability set — in a mixed-version fleet this
+    // line is how you tell which sessions ride deltas/compression.
+    println!(
+        "negotiated capability set: proto v{}, delta={}, codec={}",
+        nm.negotiated_proto(),
+        nm.delta_negotiated(),
+        nm.negotiated_codec().name()
+    );
     nm.provision(&rewritten, cfg.zygote_objects, cfg.seed ^ 0x2760)
         .expect("provision");
     let mut rng = Rng::new(cfg.seed);
@@ -94,6 +102,9 @@ fn main() {
     )
     .expect("phone process");
     let mut session = MobileSession::new(delta);
+    if cfg.heartbeat_idle_ms > 0 {
+        session.heartbeat_every(std::time::Duration::from_millis(cfg.heartbeat_idle_ms));
+    }
     let out = run_distributed_session(&mut phone, &mut nm, &net, &cfg.costs, &mut session)
         .expect("distributed");
     println!(

@@ -1,12 +1,20 @@
 //! Delta vs full migration: capsule bytes and latency across repeat
-//! offloads with a small mutated working set.
+//! offloads with a small mutated working set and a statics-heavy class.
 //!
-//! One phone runs a 24-round offload loop over a 24 x 8 KiB working set;
-//! each round mutates O(1) arrays on each side. The full-capture path
-//! re-ships the whole reachable heap every roundtrip; the delta path
-//! ships the first roundtrip in full, then only the dirty set. Headline:
-//! total capsule bytes (up + down) full/delta ratio — target >= 5x — with
-//! bit-identical application results.
+//! One phone runs a repeat-offload loop over `ROUNDS` x `PAYLOAD` byte
+//! arrays plus `STATICS` never-changing static slots; each round mutates
+//! O(1) arrays on each side. Four wire shapes are measured:
+//!
+//! * `full`     — full capture every roundtrip (the paper's pipeline);
+//! * `pr2`      — delta capsules, but the statics section re-serialized
+//!                every capsule and no frame codec (the PR 2 shape);
+//! * `delta`    — incremental statics, no codec;
+//! * `delta+lz` — incremental statics + negotiated LZ frame compression.
+//!
+//! Headlines: full/delta capsule-byte ratio (>= 5x), and the new
+//! pr2/(delta+lz) ratio (>= 2x) showing compression + incremental
+//! statics buy a further cut below the PR 2 baseline — all four modes
+//! bit-identical.
 //!
 //!     cargo bench --bench delta_migration
 
@@ -20,17 +28,34 @@ use clonecloud::appvm::{Heap, Program};
 use clonecloud::config::{CostParams, NetworkProfile};
 use clonecloud::device::{DeviceSpec, Location};
 use clonecloud::exec::{
-    delta_workload_expected, delta_workload_src, run_distributed_session, DistOutcome,
+    delta_statics_workload_src, delta_workload_expected, run_distributed_session, DistOutcome,
     InlineClone,
 };
 use clonecloud::migration::MobileSession;
-use clonecloud::util::bench::Table;
+use clonecloud::nodemanager::Codec;
+use clonecloud::util::bench::{emit_json, smoke_mode, Table};
 use clonecloud::vfs::SimFs;
 
-const ROUNDS: i64 = 24;
-const PAYLOAD: i64 = 8 * 1024;
-const ZYGOTE_OBJECTS: usize = 1_000;
 const ZYGOTE_SEED: u64 = 0xDE17A;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Full,
+    Pr2,
+    Delta,
+    DeltaLz,
+}
+
+impl Mode {
+    fn name(&self) -> &'static str {
+        match self {
+            Mode::Full => "full",
+            Mode::Pr2 => "pr2",
+            Mode::Delta => "delta",
+            Mode::DeltaLz => "delta+lz",
+        }
+    }
+}
 
 fn make_proc(program: &Arc<Program>, template: &Heap, loc: Location) -> Process {
     let dev = match loc {
@@ -48,14 +73,20 @@ fn make_proc(program: &Arc<Program>, template: &Heap, loc: Location) -> Process 
 
 /// One measured run; returns the outcome, the final `out` static, and
 /// wall seconds.
-fn run_mode(program: &Arc<Program>, template: &Heap, delta: bool) -> (DistOutcome, i64, f64) {
+fn run_mode(program: &Arc<Program>, template: &Heap, mode: Mode) -> (DistOutcome, i64, f64) {
     let mut phone = make_proc(program, template, Location::Mobile);
     let clone = make_proc(program, template, Location::Clone);
     let mut channel = InlineClone::new(clone, CostParams::default());
-    if delta {
-        channel = channel.with_delta();
+    match mode {
+        Mode::Full => {}
+        Mode::Pr2 => channel = channel.with_delta().with_full_statics(),
+        Mode::Delta => channel = channel.with_delta(),
+        Mode::DeltaLz => channel = channel.with_delta().with_codec(Codec::Lz),
     }
-    let mut session = MobileSession::new(delta);
+    let mut session = MobileSession::new(mode != Mode::Full);
+    if mode == Mode::Pr2 {
+        session.ship_full_statics(true);
+    }
     let t0 = std::time::Instant::now();
     let out = run_distributed_session(
         &mut phone,
@@ -73,62 +104,118 @@ fn run_mode(program: &Arc<Program>, template: &Heap, delta: bool) -> (DistOutcom
     (out, got, wall)
 }
 
+fn total_bytes(out: &DistOutcome) -> u64 {
+    out.transfer.up + out.transfer.down
+}
+
+fn by_mode(outs: &[(Mode, DistOutcome)], m: Mode) -> &DistOutcome {
+    &outs.iter().find(|(x, _)| *x == m).unwrap().1
+}
+
 fn main() {
-    let program = Arc::new(assemble(&delta_workload_src(ROUNDS, PAYLOAD)).expect("assemble"));
+    let smoke = smoke_mode();
+    let (rounds, payload, statics, zygote): (i64, i64, usize, usize) = if smoke {
+        (12, 4 * 1024, 96, 400)
+    } else {
+        (24, 8 * 1024, 192, 1_000)
+    };
+    // The steady-state full/delta gate shrinks with the trip count (the
+    // unavoidable first-contact full trip amortizes less in smoke mode).
+    let full_delta_gate = if smoke { 3.0 } else { 5.0 };
+
+    let program =
+        Arc::new(assemble(&delta_statics_workload_src(rounds, payload, statics)).expect("assemble"));
     clonecloud::appvm::verifier::verify_program(&program).expect("verify");
-    let template = build_template(&program, ZYGOTE_OBJECTS, ZYGOTE_SEED);
-    let expected = delta_workload_expected(ROUNDS);
+    let template = build_template(&program, zygote, ZYGOTE_SEED);
+    let expected = delta_workload_expected(rounds);
 
     println!(
-        "delta_migration: {ROUNDS} repeat offloads over a {ROUNDS} x {PAYLOAD} B working set, \
-         O(1) arrays mutated per round"
+        "delta_migration: {rounds} repeat offloads over a {rounds} x {payload} B working set, \
+         {statics} never-changing statics, O(1) arrays mutated per round{}",
+        if smoke { "  [smoke]" } else { "" }
     );
 
     let mut table = Table::new(
-        "Full vs delta capsule transfer (one phone, repeat offloads)",
-        &["Mode", "Trips", "Delta", "Fallback", "Up(KB)", "Down(KB)", "KB/trip", "Wall(ms)"],
+        "Full vs delta vs compressed capsule transfer (one phone, repeat offloads)",
+        &[
+            "Mode", "Trips", "Delta", "Fallback", "Statics", "Raw(KB)", "Wire(KB)", "KB/trip",
+            "Wall(ms)",
+        ],
     );
-    let mut rows: Vec<(&str, DistOutcome, f64)> = Vec::new();
-    for (name, delta) in [("full", false), ("delta", true)] {
-        let (out, got, wall) = run_mode(&program, &template, delta);
-        assert_eq!(got, expected, "{name}: application result");
-        let total = out.transfer.up + out.transfer.down;
+    let mut outs: Vec<(Mode, DistOutcome)> = Vec::new();
+    for mode in [Mode::Full, Mode::Pr2, Mode::Delta, Mode::DeltaLz] {
+        let (out, got, wall) = run_mode(&program, &template, mode);
+        assert_eq!(got, expected, "{}: application result", mode.name());
         table.row(vec![
-            name.to_string(),
+            mode.name().to_string(),
             out.migrations.to_string(),
             out.delta_roundtrips.to_string(),
             out.delta_fallbacks.to_string(),
-            format!("{:.1}", out.transfer.up as f64 / 1024.0),
-            format!("{:.1}", out.transfer.down as f64 / 1024.0),
-            format!("{:.1}", total as f64 / 1024.0 / out.migrations as f64),
+            out.statics_shipped.to_string(),
+            format!("{:.1}", (out.raw_up + out.raw_down) as f64 / 1024.0),
+            format!("{:.1}", total_bytes(&out) as f64 / 1024.0),
+            format!("{:.1}", total_bytes(&out) as f64 / 1024.0 / out.migrations as f64),
             format!("{:.1}", wall * 1e3),
         ]);
-        rows.push((name, out, wall));
+        outs.push((mode, out));
     }
     table.print();
 
-    let full = &rows[0].1;
-    let delta = &rows[1].1;
-    assert_eq!(
-        full.result, delta.result,
-        "full and delta paths are bit-identical"
-    );
-    let full_bytes = full.transfer.up + full.transfer.down;
-    let delta_bytes = delta.transfer.up + delta.transfer.down;
-    let ratio = full_bytes as f64 / delta_bytes as f64;
-    // Steady state (excluding the unavoidable first-contact full trip):
-    // approximate by subtracting one full-trip average from both sides.
-    let full_per_trip = full_bytes / full.migrations as u64;
-    let steady_ratio = (full_bytes - full_per_trip) as f64
-        / delta_bytes.saturating_sub(full_per_trip).max(1) as f64;
+    let full = by_mode(&outs, Mode::Full);
+    let pr2 = by_mode(&outs, Mode::Pr2);
+    let delta = by_mode(&outs, Mode::Delta);
+    let lz = by_mode(&outs, Mode::DeltaLz);
+
+    for (name, out) in [("pr2", pr2), ("delta", delta), ("delta+lz", lz)] {
+        assert_eq!(
+            full.result, out.result,
+            "{name}: bit-identical to the full path"
+        );
+    }
+
+    let ratio_full_delta = total_bytes(full) as f64 / total_bytes(delta) as f64;
+    let ratio_pr2_lz = total_bytes(pr2) as f64 / total_bytes(lz) as f64;
+    let compression = (lz.raw_up + lz.raw_down) as f64 / total_bytes(lz) as f64;
     println!(
-        "\nfull {full_bytes} B vs delta {delta_bytes} B => {ratio:.1}x fewer capsule bytes \
-         ({steady_ratio:.1}x excluding first contact); virtual time {:.1} ms -> {:.1} ms",
-        full.virtual_ms, delta.virtual_ms
+        "\nfull {} B vs delta {} B => {ratio_full_delta:.1}x fewer capsule bytes; \
+         pr2 {} B vs delta+lz {} B => {ratio_pr2_lz:.1}x below the PR 2 delta baseline \
+         (frame compression {compression:.1}x); virtual time {:.1} ms -> {:.1} ms",
+        total_bytes(full),
+        total_bytes(delta),
+        total_bytes(pr2),
+        total_bytes(lz),
+        full.virtual_ms,
+        lz.virtual_ms
+    );
+
+    emit_json(
+        "delta_migration",
+        &[("mode_set", "full/pr2/delta/delta+lz")],
+        &[
+            ("full_bytes", total_bytes(full) as f64),
+            ("pr2_bytes", total_bytes(pr2) as f64),
+            ("delta_bytes", total_bytes(delta) as f64),
+            ("delta_lz_bytes", total_bytes(lz) as f64),
+            ("ratio_full_delta", ratio_full_delta),
+            ("ratio_pr2_delta_lz", ratio_pr2_lz),
+            ("compression_ratio", compression),
+            ("statics_shipped_pr2", pr2.statics_shipped as f64),
+            ("statics_shipped_delta", delta.statics_shipped as f64),
+        ],
+    );
+
+    assert!(
+        ratio_full_delta >= full_delta_gate,
+        "delta path must ship >={full_delta_gate}x fewer bytes (got {ratio_full_delta:.2}x)"
     );
     assert!(
-        ratio >= 5.0,
-        "delta path must ship >=5x fewer bytes (got {ratio:.2}x)"
+        ratio_pr2_lz >= 2.0,
+        "compression + incremental statics must land >=2x below the PR 2 \
+         delta baseline (got {ratio_pr2_lz:.2}x)"
     );
-    println!("PASS: delta migration ships {ratio:.1}x fewer capsule bytes at identical results");
+    println!(
+        "PASS: delta ships {ratio_full_delta:.1}x fewer bytes than full, and \
+         compression + incremental statics a further {ratio_pr2_lz:.1}x below PR 2, \
+         at identical results"
+    );
 }

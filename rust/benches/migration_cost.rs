@@ -28,6 +28,8 @@ use clonecloud::Config;
 fn main() {
     let cfg = Config::default();
     let backend = default_backend(Path::new(&cfg.artifacts_dir));
+    // CI smoke mode: one app is enough to record the trajectory point.
+    let smoke = clonecloud::util::bench::smoke_mode();
 
     let mut t = Table::new(
         "Migration cost breakdown per round trip (virtual time)",
@@ -46,7 +48,9 @@ fn main() {
     );
 
     // Use the Medium workloads (offload-chosen on WiFi for all three).
-    for app in all_apps() {
+    let apps = all_apps();
+    let napps = if smoke { 1 } else { apps.len() };
+    for app in apps.into_iter().take(napps) {
         let size = Size::Medium;
         let program = app.program();
         let (tm, tc, _) =
@@ -104,6 +108,16 @@ fn main() {
                     clonecloud::util::stats::fmt_bytes(out.transfer.down / out.migrations.max(1) as u64)
                 ),
             ]);
+            clonecloud::util::bench::emit_json(
+                "migration_cost",
+                &[("app", app.name()), ("net", net.name.as_str())],
+                &[
+                    ("migrations", out.migrations as f64),
+                    ("total_s", total),
+                    ("bytes_up", out.transfer.up as f64),
+                    ("bytes_down", out.transfer.down as f64),
+                ],
+            );
         }
     }
     t.print();

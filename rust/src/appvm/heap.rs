@@ -174,6 +174,17 @@ impl Heap {
     pub fn next_id_hint(&self) -> u64 {
         self.next_id
     }
+
+    /// Ids of every Zygote-named object (clean or dirtied). Slot GC
+    /// roots these: template objects must stay resolvable by their
+    /// (class, seq) name however unreachable they look right now.
+    pub fn zygote_ids(&self) -> Vec<ObjId> {
+        self.objects
+            .iter()
+            .filter(|(_, o)| o.zygote_seq.is_some())
+            .map(|(&id, _)| ObjId(id))
+            .collect()
+    }
 }
 
 /// Helpers for building common objects.

@@ -261,12 +261,9 @@ pub fn run_thread<H: ExecHooks>(
             }
             Instr::PutStatic(class, idx, s) => {
                 let v = get_reg(p, tid, s)?;
-                let slot = p
-                    .statics
-                    .get_mut(class.0 as usize)
-                    .and_then(|st| st.get_mut(idx as usize))
-                    .ok_or_else(|| CloneCloudError::vm("static index out of range"))?;
-                *slot = v;
+                // Through the statics write barrier: stamps the slot's
+                // mutation epoch for delta captures.
+                p.put_static(class.0 as usize, idx as usize, v)?;
             }
             Instr::NewArray(d, kind, len_reg) => {
                 let len = int_reg(p, tid, len_reg)?;

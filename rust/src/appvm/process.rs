@@ -31,8 +31,14 @@ pub struct VmMetrics {
 pub struct Process {
     pub program: Arc<Program>,
     pub heap: Heap,
-    /// Static fields, indexed [class][static-slot].
+    /// Static fields, indexed [class][static-slot]. Mutations must go
+    /// through [`Process::put_static`] (the statics write barrier) so
+    /// delta captures can tell which slots changed; direct writes are
+    /// reserved for pre-session setup (app builders, tests).
     pub statics: Vec<Vec<Value>>,
+    /// Mutation epoch of each static slot, same shape as `statics` —
+    /// the statics twin of `Object::epoch` (see `Heap::get_mut`).
+    pub statics_epoch: Vec<Vec<u64>>,
     pub threads: Vec<VmThread>,
     pub clock: VirtualClock,
     pub device: DeviceSpec,
@@ -58,17 +64,19 @@ impl Process {
         location: Location,
         env: NodeEnv,
     ) -> Process {
-        let statics = program
+        let statics: Vec<Vec<Value>> = program
             .classes
             .iter()
             .map(|c| vec![Value::Null; c.statics.len()])
             .collect();
+        let statics_epoch = statics.iter().map(|s| vec![0u64; s.len()]).collect();
         // Array class: a system class named "[arr]" if present, else 0.
         let array_class = program.class_id("[arr]").unwrap_or(ClassId(0));
         Process {
             program,
             heap: Heap::new(),
             statics,
+            statics_epoch,
             threads: Vec::new(),
             clock: VirtualClock::new(),
             device,
@@ -128,6 +136,40 @@ impl Process {
         self.threads
             .get_mut(tid as usize)
             .ok_or_else(|| CloneCloudError::vm(format!("no thread {tid}")))
+    }
+
+    /// Store a static field through the write barrier: the slot is
+    /// stamped with the current mutation epoch, so delta captures ship
+    /// only statics written since the last migration sync point (the
+    /// statics leg of the epoch-coherence invariant).
+    pub fn put_static(&mut self, class: usize, idx: usize, v: Value) -> Result<()> {
+        let epoch = self.heap.epoch();
+        let slot = self
+            .statics
+            .get_mut(class)
+            .and_then(|s| s.get_mut(idx))
+            .ok_or_else(|| CloneCloudError::vm("static index out of range"))?;
+        *slot = v;
+        self.statics_epoch[class][idx] = epoch;
+        Ok(())
+    }
+
+    /// Reset every app-class static to Null, stamping the current epoch.
+    /// A *full* capture implies nulls instead of shipping them, so the
+    /// receiver must clear stale values before applying the packet's
+    /// statics — otherwise a slot reused across sessions could keep a
+    /// value the sender has since nulled.
+    pub fn reset_app_statics(&mut self) {
+        let epoch = self.heap.epoch();
+        for (ci, class_statics) in self.statics.iter_mut().enumerate() {
+            if self.program.classes[ci].system {
+                continue;
+            }
+            for (i, v) in class_statics.iter_mut().enumerate() {
+                *v = Value::Null;
+                self.statics_epoch[ci][i] = epoch;
+            }
+        }
     }
 
     /// GC roots: all thread frames plus all static fields.
@@ -255,6 +297,23 @@ mod tests {
         assert_eq!(p.thread(1).unwrap().status, ThreadStatus::Suspended);
         p.resume_others(0);
         assert_eq!(p.thread(1).unwrap().status, ThreadStatus::Runnable);
+    }
+
+    #[test]
+    fn put_static_stamps_the_mutation_epoch() {
+        let mut p = process();
+        assert_eq!(p.statics_epoch[0][0], 0);
+        p.advance_epoch();
+        p.advance_epoch();
+        p.put_static(0, 0, Value::Int(9)).unwrap();
+        assert_eq!(p.statics[0][0], Value::Int(9));
+        assert_eq!(p.statics_epoch[0][0], 2, "barrier stamped the epoch");
+        assert!(p.put_static(0, 99, Value::Null).is_err(), "bounds checked");
+
+        p.advance_epoch();
+        p.reset_app_statics();
+        assert_eq!(p.statics[0][0], Value::Null);
+        assert_eq!(p.statics_epoch[0][0], 3, "reset stamps too");
     }
 
     #[test]

@@ -202,6 +202,9 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             channel = channel.with_delta();
         }
         let mut session = crate::migration::MobileSession::new(cfg.delta_migration);
+        if cfg.heartbeat_idle_ms > 0 {
+            session.heartbeat_every(std::time::Duration::from_millis(cfg.heartbeat_idle_ms));
+        }
         let out =
             run_distributed_session(&mut phone, &mut channel, &net, &cfg.costs, &mut session)?;
         println!(

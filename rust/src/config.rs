@@ -128,6 +128,9 @@ pub struct FarmParams {
     pub policy: String,
     /// Gateway connection read timeout in ms (0 = no timeout).
     pub read_timeout_ms: u64,
+    /// Collect a clone slot's garbage (tombstone threads + orphaned
+    /// object graphs) every this many roundtrips (0 = never).
+    pub slot_gc_interval: u64,
 }
 
 impl Default for FarmParams {
@@ -138,6 +141,7 @@ impl Default for FarmParams {
             queue_depth: 64,
             policy: "affinity".into(),
             read_timeout_ms: 0,
+            slot_gc_interval: 8,
         }
     }
 }
@@ -161,6 +165,10 @@ pub struct Config {
     /// behavior; also the automatic fallback whenever a baseline is
     /// missing or incoherent).
     pub delta_migration: bool,
+    /// Send a digest-only heartbeat once a delta session's baseline has
+    /// idled this long (ms, 0 = never): a diverged clone answers
+    /// `NeedFull` *before* a doomed delta is built and shipped.
+    pub heartbeat_idle_ms: u64,
     /// Clone-farm parameters (multi-tenant serving).
     pub farm: FarmParams,
 }
@@ -175,6 +183,7 @@ impl Default for Config {
             zygote_objects: 40_000,
             seed: 0xC10E,
             delta_migration: true,
+            heartbeat_idle_ms: 30_000,
             farm: FarmParams::default(),
         }
     }
@@ -228,6 +237,12 @@ impl Config {
                     cfg.delta_migration = val
                         .as_bool()
                         .ok_or_else(|| CloneCloudError::Config("delta_migration".into()))?
+                }
+                "heartbeat_idle_ms" => {
+                    cfg.heartbeat_idle_ms = val
+                        .as_usize()
+                        .ok_or_else(|| CloneCloudError::Config("heartbeat_idle_ms".into()))?
+                        as u64
                 }
                 "costs" => {
                     let c = val
@@ -287,6 +302,12 @@ impl Config {
                             "read_timeout_ms" => {
                                 cfg.farm.read_timeout_ms = fv.as_usize().ok_or_else(|| {
                                     CloneCloudError::Config("farm.read_timeout_ms".into())
+                                })?
+                                    as u64
+                            }
+                            "slot_gc_interval" => {
+                                cfg.farm.slot_gc_interval = fv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("farm.slot_gc_interval".into())
                                 })?
                                     as u64
                             }
@@ -361,16 +382,31 @@ mod tests {
     }
 
     #[test]
+    fn heartbeat_idle_knob() {
+        assert_eq!(Config::default().heartbeat_idle_ms, 30_000);
+        let v = json::parse(r#"{"heartbeat_idle_ms": 0}"#).unwrap();
+        assert_eq!(Config::from_json(&v).unwrap().heartbeat_idle_ms, 0);
+        let bad = json::parse(r#"{"heartbeat_idle_ms": "soon"}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err(), "non-numeric rejected");
+    }
+
+    #[test]
     fn farm_section_overrides_and_validates() {
         let v = json::parse(
-            r#"{"farm": {"workers": 8, "queue_depth": 16, "policy": "least-loaded"}}"#,
+            r#"{"farm": {"workers": 8, "queue_depth": 16, "policy": "least-loaded", "slot_gc_interval": 0}}"#,
         )
         .unwrap();
         let cfg = Config::from_json(&v).unwrap();
         assert_eq!(cfg.farm.workers, 8);
         assert_eq!(cfg.farm.queue_depth, 16);
         assert_eq!(cfg.farm.policy, "least-loaded");
+        assert_eq!(cfg.farm.slot_gc_interval, 0, "slot GC can be disabled");
         assert_eq!(cfg.farm.warm_per_worker, 2, "untouched default");
+        assert_eq!(
+            Config::default().farm.slot_gc_interval,
+            8,
+            "slot GC on by default"
+        );
 
         let bad = json::parse(r#"{"farm": {"wrokers": 8}}"#).unwrap();
         assert!(Config::from_json(&bad).is_err(), "typo'd farm key rejected");

@@ -31,8 +31,14 @@ use crate::appvm::process::Process;
 use crate::appvm::value::Value;
 use crate::config::{CostParams, NetworkProfile};
 use crate::error::{CloneCloudError, Result};
-use crate::migration::{Capsule, CloneSession, MigrationPhases, Migrator, MobileSession};
-use crate::nodemanager::{NodeManager, TransferBytes, Transport};
+use crate::migration::{
+    collect_slot_garbage, Capsule, CloneSession, MigrationPhases, Migrator, MobileSession,
+    CAPSULE_CLOCK_OFFSET,
+};
+use crate::nodemanager::{
+    open_frame, patch_frame_payload, seal_frame, seal_frame_keep_head, Codec, HeartbeatOutcome,
+    NodeManager, TransferBytes, Transport,
+};
 
 pub use crate::farm::FarmClone;
 
@@ -53,6 +59,19 @@ pub trait CloneChannel {
     /// when its `MobileSession` is disabled, so an armed channel cannot
     /// send back reverse deltas the mobile cannot merge.
     fn disarm_delta(&mut self) {}
+
+    /// The frame codec this channel negotiated: the driver seals forward
+    /// capsules with it (and charges the uplink for the sealed bytes).
+    fn codec(&self) -> Codec {
+        Codec::None
+    }
+
+    /// Probe the clone's session baseline with a digest heartbeat. A
+    /// `Divergent` answer must drop the mobile baseline (the impl does),
+    /// so the next capture goes out full instead of as a doomed delta.
+    fn heartbeat(&mut self, _session: &mut MobileSession) -> Result<HeartbeatOutcome> {
+        Ok(HeartbeatOutcome::Unsupported)
+    }
 }
 
 impl<T: Transport> CloneChannel for NodeManager<T> {
@@ -67,6 +86,14 @@ impl<T: Transport> CloneChannel for NodeManager<T> {
     fn disarm_delta(&mut self) {
         self.renegotiate_off();
     }
+
+    fn codec(&self) -> Codec {
+        self.negotiated_codec()
+    }
+
+    fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {
+        NodeManager::heartbeat(self, session)
+    }
 }
 
 /// In-process clone: the caller owns the clone process directly.
@@ -74,6 +101,10 @@ pub struct InlineClone {
     pub clone: Process,
     migrator: Migrator,
     session: CloneSession,
+    codec: Codec,
+    /// Run a slot garbage collection every this many roundtrips
+    /// (0 = never) — same policy as the farm workers.
+    pub gc_interval: u64,
     pub migrations: usize,
 }
 
@@ -83,6 +114,8 @@ impl InlineClone {
             clone,
             migrator: Migrator::new(costs),
             session: CloneSession::new(false),
+            codec: Codec::None,
+            gc_interval: 8,
             migrations: 0,
         }
     }
@@ -99,6 +132,20 @@ impl InlineClone {
         self
     }
 
+    /// Seal/open frames with the given codec, as a negotiated wire
+    /// channel would (benches measure compression through this).
+    pub fn with_codec(mut self, codec: Codec) -> InlineClone {
+        self.codec = codec;
+        self
+    }
+
+    /// Re-send the full statics section in every delta — the PR 2 wire
+    /// shape (bench ablation only).
+    pub fn with_full_statics(mut self) -> InlineClone {
+        self.session.ship_full_statics(true);
+        self
+    }
+
     /// Drop the clone-side baseline, as a recycled farm worker would:
     /// the next delta roundtrip is rejected with `NeedFull` and the
     /// session re-establishes from a full capture.
@@ -110,7 +157,10 @@ impl InlineClone {
 impl CloneChannel for InlineClone {
     fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
         let up = forward.len() as u64;
-        let capsule = Capsule::decode(&forward)?;
+        let capsule = {
+            let raw = open_frame(&forward)?;
+            Capsule::decode(&raw)?
+        };
         let (tid, _) = self
             .migrator
             .receive_capsule_at_clone(&mut self.clone, &capsule, &mut self.session)?;
@@ -132,7 +182,10 @@ impl CloneChannel for InlineClone {
             tid,
             &mut self.session,
         )?;
-        let bytes = rcapsule.encode();
+        if self.gc_interval > 0 && self.migrations as u64 % self.gc_interval == 0 {
+            collect_slot_garbage(&mut self.clone, &self.session);
+        }
+        let bytes = seal_frame(self.codec, rcapsule.encode());
         let down = bytes.len() as u64;
         Ok((bytes, TransferBytes { up, down }))
     }
@@ -144,6 +197,19 @@ impl CloneChannel for InlineClone {
     fn disarm_delta(&mut self) {
         self.session.set_enabled(false);
     }
+
+    fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {
+        if !self.session.is_enabled() {
+            return Ok(HeartbeatOutcome::Unsupported);
+        }
+        crate::nodemanager::drive_heartbeat(session, |_epoch, digest, assignments| {
+            self.session.check_heartbeat(&self.clone, digest, assignments)
+        })
+    }
 }
 
 /// Outcome of a distributed run.
@@ -153,7 +219,13 @@ pub struct DistOutcome {
     pub result: Option<Value>,
     pub wall_s: f64,
     pub migrations: usize,
+    /// Wire bytes moved (post-compression when a codec is negotiated).
     pub transfer: TransferBytes,
+    /// Capsule bytes before frame compression, per direction. Equal to
+    /// `transfer` on uncompressed channels; the quotient is the
+    /// session's compression ratio.
+    pub raw_up: u64,
+    pub raw_down: u64,
     /// Aggregated phase timings (virtual ms).
     pub suspend_capture_ms: f64,
     pub uplink_ms: f64,
@@ -163,12 +235,17 @@ pub struct DistOutcome {
     pub zygote_skipped: usize,
     /// Baseline objects referenced by id instead of shipped (delta).
     pub base_skipped: usize,
+    /// Static slots serialized across all capsules.
+    pub statics_shipped: usize,
     /// Roundtrips whose forward capsule was a delta.
     pub delta_roundtrips: usize,
     /// Roundtrips that went out as full captures.
     pub full_roundtrips: usize,
     /// Deltas rejected by the clone (`NeedFull`) and resent in full.
     pub delta_fallbacks: usize,
+    /// Baseline divergences a digest heartbeat caught *before* a doomed
+    /// delta was built and shipped.
+    pub heartbeat_preempts: usize,
 }
 
 /// Run the partitioned binary on `phone`, off-loading each migration
@@ -207,6 +284,7 @@ pub fn run_distributed_session<C: CloneChannel>(
         channel.disarm_delta();
     }
     let migrator = Migrator::new(costs.clone());
+    let codec = channel.codec();
     let entry = phone.program.entry()?;
     let tid = phone.spawn_thread(entry, &[])?;
     let mut out = DistOutcome::default();
@@ -217,6 +295,15 @@ pub fn run_distributed_session<C: CloneChannel>(
             RunExit::ReintegrationPoint { .. } => continue, // local span
             RunExit::OutOfFuel => unreachable!("u64::MAX fuel"),
             RunExit::MigrationPoint { .. } => {
+                // Long-idle baseline: probe with a digest heartbeat so a
+                // diverged clone pre-arms `NeedFull` here, before a
+                // doomed delta is built and shipped.
+                if session.heartbeat_due()
+                    && channel.heartbeat(session)? == HeartbeatOutcome::Divergent
+                {
+                    out.heartbeat_preempts += 1;
+                }
+
                 // --- policy: this binary was picked for offload ---------
                 let (capsule, phases) = migrator.migrate_out_capsule(phone, tid, session)?;
                 absorb_capture_phases(&mut out, &phases);
@@ -227,7 +314,7 @@ pub fn run_distributed_session<C: CloneChannel>(
                     out.full_roundtrips += 1;
                 }
 
-                let fwd = stamp_and_encode(phone, net, &mut out, capsule);
+                let fwd = stamp_and_encode(phone, net, &mut out, capsule, codec);
                 let fwd_len = fwd.len() as u64;
                 let (rbytes, transfer) = match channel.roundtrip(fwd) {
                     Ok(ok) => ok,
@@ -241,7 +328,7 @@ pub fn run_distributed_session<C: CloneChannel>(
                         out.full_roundtrips += 1;
                         let (full, phases) = migrator.recapture_full(phone, tid, session)?;
                         absorb_capture_phases(&mut out, &phases);
-                        let fwd = stamp_and_encode(phone, net, &mut out, full);
+                        let fwd = stamp_and_encode(phone, net, &mut out, full, codec);
                         channel.roundtrip(fwd)?
                     }
                     Err(e) => return Err(e),
@@ -250,8 +337,13 @@ pub fn run_distributed_session<C: CloneChannel>(
                 out.transfer.down += transfer.down;
                 out.migrations += 1;
 
-                let rcapsule = Capsule::decode(&rbytes)?;
-                // Adopt the clone's finish time, then pay the downlink.
+                let rcapsule = {
+                    let raw = open_frame(&rbytes)?;
+                    out.raw_down += raw.len() as u64;
+                    Capsule::decode(&raw)?
+                };
+                // Adopt the clone's finish time, then pay the downlink
+                // for the *wire* (sealed) bytes.
                 phone.clock.advance_to_us(rcapsule.clock_us());
                 let down_ms = net.transfer_ms(rbytes.len() as u64, false);
                 phone.clock.charge_ms(down_ms);
@@ -274,23 +366,32 @@ fn absorb_capture_phases(out: &mut DistOutcome, phases: &MigrationPhases) {
     out.objects_shipped += phases.objects_shipped;
     out.zygote_skipped += phases.zygote_skipped;
     out.base_skipped += phases.base_skipped;
+    out.statics_shipped += phases.statics_shipped;
 }
 
-/// Charge the uplink for the capsule's real bytes, stamp the post-transfer
-/// timestamp into it, and encode the final wire form.
+/// Charge the uplink for the capsule's *wire* (sealed) bytes, then stamp
+/// the post-transfer timestamp directly into the wire frame. Sealing
+/// keeps the capsule header (through the clock field) out of the
+/// compressed tail, so the clock is patched in place — one encode, one
+/// compression pass, and the charged size IS the sent size.
 fn stamp_and_encode(
     phone: &mut Process,
     net: &NetworkProfile,
     out: &mut DistOutcome,
-    mut capsule: Capsule,
+    capsule: Capsule,
+    codec: Codec,
 ) -> Vec<u8> {
-    let bytes = capsule.encode();
-    let up_ms = net.transfer_ms(bytes.len() as u64, true);
+    let raw = capsule.encode();
+    out.raw_up += raw.len() as u64;
+    let mut wire = seal_frame_keep_head(codec, raw, CAPSULE_CLOCK_OFFSET + 8);
+    let up_ms = net.transfer_ms(wire.len() as u64, true);
     phone.clock.charge_ms(up_ms);
     out.uplink_ms += up_ms;
     // Clone resumes at the post-transfer timestamp.
-    capsule.set_clock_us(phone.clock.now_us());
-    capsule.encode()
+    let clock = phone.clock.now_us().to_bits().to_be_bytes();
+    patch_frame_payload(&mut wire, CAPSULE_CLOCK_OFFSET, &clock)
+        .expect("capsule header is always inside the preserved frame head");
+    wire
 }
 
 /// Assembly for the delta-migration workload used by
@@ -304,15 +405,30 @@ fn stamp_and_encode(
 ///
 /// Requires `rounds <= 256` (byte-array stores) and `payload >= 2`.
 pub fn delta_workload_src(rounds: i64, payload: i64) -> String {
+    delta_statics_workload_src(rounds, payload, 0)
+}
+
+/// [`delta_workload_src`] plus `extra_statics` additional static slots
+/// (`g0..gN`), each set once to a distinct int before the offload loop.
+/// The statics never change afterwards, which is exactly the shape the
+/// incremental-statics optimization exploits: the PR 2 delta format
+/// re-serialized every one of them into every capsule, both directions.
+pub fn delta_statics_workload_src(rounds: i64, payload: i64, extra_statics: usize) -> String {
     assert!((1..=256).contains(&rounds) && payload >= 2);
+    let mut decls = String::new();
+    let mut inits = String::new();
+    for i in 0..extra_statics {
+        decls.push_str(&format!("  static g{i}\n"));
+        inits.push_str(&format!("    const r0 {i}\n    puts Delta.g{i} r0\n"));
+    }
     format!(
         r#"
 class Delta app
   static data
   static out
   static keep
-  method main nargs=0 regs=12
-    const r0 {rounds}
+{decls}  method main nargs=0 regs=12
+{inits}    const r0 {rounds}
     newarr r1 val r0
     puts Delta.data r1
     const r2 0
@@ -391,5 +507,223 @@ impl DistOutcome {
     /// Total migration overhead (everything but local + clone compute).
     pub fn migration_overhead_ms(&self) -> f64 {
         self.suspend_capture_ms + self.uplink_ms + self.downlink_ms + self.merge_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::zygote::build_template;
+    use crate::appvm::{Heap, Program};
+    use crate::device::{DeviceSpec, Location};
+    use crate::vfs::SimFs;
+
+    const ROUNDS: i64 = 10;
+    const PAYLOAD: i64 = 256;
+    const STATICS: usize = 24;
+
+    fn setup() -> (Arc<Program>, Heap) {
+        let program = Arc::new(
+            assemble(&delta_statics_workload_src(ROUNDS, PAYLOAD, STATICS)).unwrap(),
+        );
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let template = build_template(&program, 200, 11);
+        (program, template)
+    }
+
+    fn make_proc(program: &Arc<Program>, template: &Heap, loc: Location) -> Process {
+        let dev = match loc {
+            Location::Mobile => DeviceSpec::phone_g1(),
+            Location::Clone => DeviceSpec::clone_desktop(),
+        };
+        Process::fork_from_zygote(
+            program.clone(),
+            template,
+            dev,
+            loc,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        )
+    }
+
+    fn run(
+        program: &Arc<Program>,
+        template: &Heap,
+        delta: bool,
+        full_statics: bool,
+        codec: Codec,
+    ) -> (DistOutcome, i64) {
+        let mut phone = make_proc(program, template, Location::Mobile);
+        let clone = make_proc(program, template, Location::Clone);
+        let mut channel = InlineClone::new(clone, CostParams::default()).with_codec(codec);
+        if delta {
+            channel = channel.with_delta();
+        }
+        if full_statics {
+            channel = channel.with_full_statics();
+        }
+        let mut session = MobileSession::new(delta);
+        if full_statics {
+            session.ship_full_statics(true);
+        }
+        let out = run_distributed_session(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+        )
+        .unwrap();
+        let main = program.entry().unwrap();
+        let got = phone.statics[main.class.0 as usize][1].as_int().unwrap();
+        (out, got)
+    }
+
+    /// Unchanged statics ride as baseline-implied on repeat deltas: the
+    /// delta session serializes far fewer static slots than the legacy
+    /// full-statics shape, at an identical result.
+    #[test]
+    fn delta_ships_only_dirty_statics() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+
+        let (legacy, got_legacy) = run(&program, &template, true, true, Codec::None);
+        let (incr, got_incr) = run(&program, &template, true, false, Codec::None);
+        assert_eq!(got_legacy, expected);
+        assert_eq!(got_incr, expected);
+        assert_eq!(legacy.result, incr.result, "bit-identical results");
+
+        // Legacy re-sends all non-null statics every forward capsule;
+        // incremental sends them once (first contact) plus the O(1)
+        // slots actually dirtied per round.
+        assert!(
+            legacy.statics_shipped > STATICS * (ROUNDS as usize - 1),
+            "legacy shape re-ships statics ({} shipped)",
+            legacy.statics_shipped
+        );
+        assert!(
+            incr.statics_shipped < legacy.statics_shipped / 2,
+            "incremental statics cut the section ({} vs {})",
+            incr.statics_shipped,
+            legacy.statics_shipped
+        );
+        assert!(
+            incr.transfer.up < legacy.transfer.up,
+            "fewer statics => fewer forward bytes"
+        );
+    }
+
+    /// The negotiated codec shrinks the wire without touching results;
+    /// raw counters expose the ratio.
+    #[test]
+    fn compressed_frames_shrink_the_wire() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+        let (plain, got_plain) = run(&program, &template, true, false, Codec::None);
+        let (lz, got_lz) = run(&program, &template, true, false, Codec::Lz);
+        assert_eq!(got_plain, expected);
+        assert_eq!(got_lz, expected);
+        assert_eq!(plain.result, lz.result);
+        assert_eq!(plain.raw_up, plain.transfer.up, "no codec: raw == wire");
+        assert!(
+            lz.transfer.up < lz.raw_up && lz.transfer.down < lz.raw_down,
+            "sealed frames shrank: {} -> {} up, {} -> {} down",
+            lz.raw_up,
+            lz.transfer.up,
+            lz.raw_down,
+            lz.transfer.down
+        );
+        assert!(
+            lz.transfer.up + lz.transfer.down < plain.transfer.up + plain.transfer.down,
+            "compression reduced total wire bytes"
+        );
+    }
+
+    /// A due heartbeat detects a diverged (evicted) clone baseline and
+    /// pre-arms the full path: zero doomed deltas are built or shipped.
+    #[test]
+    fn heartbeat_preempts_doomed_delta() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+
+        let mut phone = make_proc(&program, &template, Location::Mobile);
+        let clone = make_proc(&program, &template, Location::Clone);
+        let mut channel = InlineClone::new(clone, CostParams::default()).with_delta();
+        let mut session = MobileSession::new(true);
+        session.heartbeat_every(std::time::Duration::ZERO);
+
+        let out = run_distributed_session(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+        )
+        .unwrap();
+        // Heartbeats before every roundtrip are all coherent mid-run.
+        assert_eq!(out.heartbeat_preempts, 0);
+        assert_eq!(out.delta_fallbacks, 0);
+        assert_eq!(
+            phone.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
+            Some(expected)
+        );
+
+        // Recycle the clone slot between runs (a farm would evict the
+        // worker slot); the mobile still holds its baseline.
+        channel.evict_delta_baseline();
+        assert!(session.has_baseline());
+
+        let mut phone2 = make_proc(&program, &template, Location::Mobile);
+        let out2 = run_distributed_session(
+            &mut phone2,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+        )
+        .unwrap();
+        assert!(out2.heartbeat_preempts >= 1, "divergence caught up front");
+        assert_eq!(
+            out2.delta_fallbacks, 0,
+            "no doomed delta was shipped — the heartbeat pre-armed NeedFull"
+        );
+        assert_eq!(
+            phone2.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
+            Some(expected)
+        );
+    }
+
+    /// The inline slot GC keeps tombstone threads bounded across many
+    /// roundtrips without disturbing results or the delta baseline.
+    #[test]
+    fn slot_gc_bounds_inline_clone_growth() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+        let mut phone = make_proc(&program, &template, Location::Mobile);
+        let clone = make_proc(&program, &template, Location::Clone);
+        let mut channel = InlineClone::new(clone, CostParams::default()).with_delta();
+        channel.gc_interval = 4;
+        let mut session = MobileSession::new(true);
+        let out = run_distributed_session(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+        )
+        .unwrap();
+        assert_eq!(out.delta_fallbacks, 0, "GC never evicts the baseline");
+        assert_eq!(
+            phone.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
+            Some(expected)
+        );
+        assert!(
+            channel.clone.threads.len() <= 4,
+            "tombstone threads bounded by the GC interval, got {}",
+            channel.clone.threads.len()
+        );
     }
 }

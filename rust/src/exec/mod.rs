@@ -12,7 +12,7 @@ pub mod distributed;
 pub mod monolithic;
 
 pub use distributed::{
-    delta_workload_expected, delta_workload_src, run_distributed, run_distributed_session,
-    DistOutcome, FarmClone, InlineClone,
+    delta_statics_workload_src, delta_workload_expected, delta_workload_src, run_distributed,
+    run_distributed_session, CloneChannel, DistOutcome, FarmClone, InlineClone,
 };
 pub use monolithic::{run_monolithic, run_monolithic_hooked, MonoOutcome};

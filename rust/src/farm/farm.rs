@@ -45,6 +45,9 @@ pub struct FarmConfig {
     pub zygote_seed: u64,
     /// Interpreter fuel per offloaded span.
     pub fuel: u64,
+    /// Collect a clone slot's garbage (tombstone threads + orphaned
+    /// object graphs) every this many roundtrips; 0 = never.
+    pub slot_gc_interval: u64,
 }
 
 impl Default for FarmConfig {
@@ -57,6 +60,7 @@ impl Default for FarmConfig {
             zygote_objects: 40_000,
             zygote_seed: 0xC10E,
             fuel: 2_000_000_000,
+            slot_gc_interval: 8,
         }
     }
 }
@@ -76,6 +80,7 @@ impl FarmConfig {
             policy: PlacementPolicy::parse(&params.policy)?,
             zygote_objects,
             zygote_seed,
+            slot_gc_interval: params.slot_gc_interval,
             ..FarmConfig::default()
         })
     }
@@ -112,6 +117,21 @@ pub(crate) struct FarmShared {
     /// Delta capsules answered with `NeedFull` (evicted/incoherent
     /// baseline; the phone fell back to a full capture).
     pub delta_rejects: AtomicU64,
+    /// Digest heartbeats answered (and the divergent subset).
+    pub heartbeats: AtomicU64,
+    pub heartbeat_divergent: AtomicU64,
+    /// Slot-GC activity + per-slot high-water marks (tombstone growth).
+    pub slot_gc_runs: AtomicU64,
+    pub slot_gc_threads: AtomicU64,
+    pub slot_gc_objects: AtomicU64,
+    pub slot_threads_peak: AtomicU64,
+    pub slot_heap_peak: AtomicU64,
+    /// Gateway frame-layer byte counters: capsule (raw) vs wire
+    /// (sealed) bytes per direction — the compression ratio inputs.
+    pub wire_raw_up: AtomicU64,
+    pub wire_up: AtomicU64,
+    pub wire_raw_down: AtomicU64,
+    pub wire_down: AtomicU64,
 }
 
 /// A point-in-time snapshot of farm counters.
@@ -133,6 +153,21 @@ pub struct FarmStats {
     pub delta_migrations: u64,
     /// Delta capsules the farm rejected with `NeedFull`.
     pub delta_rejects: u64,
+    /// Digest heartbeats answered, and how many found divergence.
+    pub heartbeats: u64,
+    pub heartbeat_divergent: u64,
+    /// Periodic slot-GC activity and per-slot high-water marks.
+    pub slot_gc_runs: u64,
+    pub slot_gc_threads: u64,
+    pub slot_gc_objects: u64,
+    pub slot_threads_peak: u64,
+    pub slot_heap_peak: u64,
+    /// Gateway frame-layer bytes: raw capsule vs sealed wire, per
+    /// direction (equal when no codec was negotiated).
+    pub wire_raw_up: u64,
+    pub wire_up: u64,
+    pub wire_raw_down: u64,
+    pub wire_down: u64,
     /// Total time sessions spent blocked at admission.
     pub admission_wait_ms: f64,
     /// Total time jobs waited in worker queues after admission.
@@ -194,6 +229,16 @@ impl FarmHandle {
         matches!(self.shared.scheduler.policy(), PlacementPolicy::Affinity)
     }
 
+    /// Feed the gateway's frame-layer byte counters: raw capsule bytes
+    /// vs sealed wire bytes, one call per served migration.
+    pub fn record_wire(&self, raw_up: u64, wire_up: u64, raw_down: u64, wire_down: u64) {
+        let s = &self.shared;
+        s.wire_raw_up.fetch_add(raw_up, Ordering::Relaxed);
+        s.wire_up.fetch_add(wire_up, Ordering::Relaxed);
+        s.wire_raw_down.fetch_add(raw_down, Ordering::Relaxed);
+        s.wire_down.fetch_add(wire_down, Ordering::Relaxed);
+    }
+
     pub fn stats(&self) -> FarmStats {
         let s = &self.shared;
         FarmStats {
@@ -211,6 +256,17 @@ impl FarmHandle {
             pool_refills: s.pool.refills.load(Ordering::Relaxed),
             delta_migrations: s.delta_migrations.load(Ordering::Relaxed),
             delta_rejects: s.delta_rejects.load(Ordering::Relaxed),
+            heartbeats: s.heartbeats.load(Ordering::Relaxed),
+            heartbeat_divergent: s.heartbeat_divergent.load(Ordering::Relaxed),
+            slot_gc_runs: s.slot_gc_runs.load(Ordering::Relaxed),
+            slot_gc_threads: s.slot_gc_threads.load(Ordering::Relaxed),
+            slot_gc_objects: s.slot_gc_objects.load(Ordering::Relaxed),
+            slot_threads_peak: s.slot_threads_peak.load(Ordering::Relaxed),
+            slot_heap_peak: s.slot_heap_peak.load(Ordering::Relaxed),
+            wire_raw_up: s.wire_raw_up.load(Ordering::Relaxed),
+            wire_up: s.wire_up.load(Ordering::Relaxed),
+            wire_raw_down: s.wire_raw_down.load(Ordering::Relaxed),
+            wire_down: s.wire_down.load(Ordering::Relaxed),
             admission_wait_ms: s.admission_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             queue_wait_ms: s.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             worker_jobs: s
@@ -268,6 +324,17 @@ impl CloneFarm {
             queue_wait_us: AtomicU64::new(0),
             delta_migrations: AtomicU64::new(0),
             delta_rejects: AtomicU64::new(0),
+            heartbeats: AtomicU64::new(0),
+            heartbeat_divergent: AtomicU64::new(0),
+            slot_gc_runs: AtomicU64::new(0),
+            slot_gc_threads: AtomicU64::new(0),
+            slot_gc_objects: AtomicU64::new(0),
+            slot_threads_peak: AtomicU64::new(0),
+            slot_heap_peak: AtomicU64::new(0),
+            wire_raw_up: AtomicU64::new(0),
+            wire_up: AtomicU64::new(0),
+            wire_raw_down: AtomicU64::new(0),
+            wire_down: AtomicU64::new(0),
         });
 
         let mut senders = Vec::with_capacity(cfg.workers);
@@ -282,6 +349,7 @@ impl CloneFarm {
             let shared = shared.clone();
             let warm = cfg.warm_per_worker;
             let fuel = cfg.fuel;
+            let slot_gc = cfg.slot_gc_interval;
             let jh = std::thread::Builder::new()
                 .name(format!("farm-worker-{i}"))
                 .spawn(move || {
@@ -296,7 +364,7 @@ impl CloneFarm {
                         warm,
                         shared.pool.clone(),
                     );
-                    worker_main(i, rx, pool, shared, costs, fuel);
+                    worker_main(i, rx, pool, shared, costs, fuel, slot_gc);
                 })
                 .map_err(|e| {
                     CloneCloudError::Runtime(format!("spawn farm worker {i}: {e}"))

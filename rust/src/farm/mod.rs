@@ -148,6 +148,7 @@ mod tests {
             zygote_objects: ZY_OBJECTS,
             zygote_seed: ZY_SEED,
             fuel: 100_000_000,
+            slot_gc_interval: 8,
         };
         let farm = CloneFarm::start(
             program.clone(),
@@ -219,6 +220,7 @@ mod tests {
             zygote_objects: ZY_OBJECTS,
             zygote_seed: ZY_SEED,
             fuel: 100_000_000,
+            slot_gc_interval: 8,
         };
         let farm = CloneFarm::start(
             program.clone(),
@@ -279,6 +281,7 @@ mod tests {
             zygote_objects: ZY_OBJECTS,
             zygote_seed: ZY_SEED,
             fuel: 100_000_000,
+            slot_gc_interval: 8,
         };
         let farm = CloneFarm::start(
             program.clone(),
@@ -352,6 +355,175 @@ mod tests {
         assert_eq!(stats.delta_rejects, 1);
     }
 
+    /// A recycled slot is detected by the digest heartbeat BEFORE any
+    /// delta is built: the driver pre-arms the full path, so the farm
+    /// sees zero doomed deltas (`delta_rejects == 0`) — contrast with
+    /// `delta_baseline_survives_repeat_offloads_and_recycle`, where the
+    /// same recycle costs one shipped-and-rejected delta.
+    #[test]
+    fn heartbeat_prearms_full_capture_after_recycle() {
+        let program = farm_program();
+        let cfg = FarmConfig {
+            workers: 2,
+            warm_per_worker: 1,
+            queue_depth: 4,
+            policy: PlacementPolicy::Affinity,
+            zygote_objects: ZY_OBJECTS,
+            zygote_seed: ZY_SEED,
+            fuel: 100_000_000,
+            slot_gc_interval: 8,
+        };
+        let farm = CloneFarm::start(
+            program.clone(),
+            cfg,
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        let template = Arc::new(build_template(&program, ZY_OBJECTS, ZY_SEED));
+        let fs = phone_fs(9);
+        let expected = synthetic_expected(&fs, ITERS);
+        let main = program.entry().unwrap();
+
+        let mut p = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(fs.synchronize()),
+        );
+        let mut msess = crate::migration::MobileSession::new(true);
+        msess.heartbeat_every(std::time::Duration::ZERO);
+
+        let mut session = farm.session(9, fs.clone());
+        session.set_delta(true);
+        crate::exec::run_distributed_session(
+            &mut p,
+            &mut session,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut msess,
+        )
+        .unwrap();
+        // Recycle the slot; the phone still holds its baseline.
+        session.close();
+        drop(session);
+        assert!(msess.has_baseline());
+
+        let mut session = farm.session(9, fs.clone());
+        session.set_delta(true);
+        let out = crate::exec::run_distributed_session(
+            &mut p,
+            &mut session,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut msess,
+        )
+        .unwrap();
+        assert_eq!(out.heartbeat_preempts, 1, "divergence caught by heartbeat");
+        assert_eq!(out.delta_fallbacks, 0, "no doomed delta was shipped");
+        assert_eq!(out.full_roundtrips, 1);
+        assert_eq!(
+            p.statics[main.class.0 as usize][0].as_int(),
+            Some(expected)
+        );
+        session.close();
+        drop(session);
+
+        let stats = farm.shutdown();
+        assert_eq!(stats.delta_rejects, 0, "NeedFull never cost a capsule");
+        assert_eq!(stats.heartbeats, 1);
+        assert_eq!(stats.heartbeat_divergent, 1);
+    }
+
+    /// Soak: ≥100 roundtrips on one affinity-pinned slot. Periodic slot
+    /// GC keeps tombstone threads and the slot heap bounded (the seed
+    /// leaked one tombstone thread per roundtrip), without ever evicting
+    /// the live delta baseline.
+    #[test]
+    fn soak_slot_gc_bounds_clone_growth() {
+        const ROUNDTRIPS: usize = 110;
+        const GC_INTERVAL: u64 = 8;
+        let iters: i64 = 2_000;
+        let program = Arc::new(assemble(&synthetic_offload_src(iters)).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let cfg = FarmConfig {
+            workers: 2,
+            warm_per_worker: 1,
+            queue_depth: 4,
+            policy: PlacementPolicy::Affinity,
+            zygote_objects: ZY_OBJECTS,
+            zygote_seed: ZY_SEED,
+            fuel: 100_000_000,
+            slot_gc_interval: GC_INTERVAL,
+        };
+        let farm = CloneFarm::start(
+            program.clone(),
+            cfg,
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        let template = Arc::new(build_template(&program, ZY_OBJECTS, ZY_SEED));
+        let fs = phone_fs(3);
+        let expected = synthetic_expected(&fs, iters);
+        let main = program.entry().unwrap();
+
+        let mut p = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(fs.synchronize()),
+        );
+        let mut msess = crate::migration::MobileSession::new(true);
+        let mut session = farm.session(3, fs.clone());
+        session.set_delta(true);
+        for _ in 0..ROUNDTRIPS {
+            let out = crate::exec::run_distributed_session(
+                &mut p,
+                &mut session,
+                &NetworkProfile::wifi(),
+                &CostParams::default(),
+                &mut msess,
+            )
+            .unwrap();
+            assert_eq!(out.delta_fallbacks, 0, "GC never evicted the baseline");
+            assert_eq!(
+                p.statics[main.class.0 as usize][0].as_int(),
+                Some(expected)
+            );
+        }
+        session.close();
+        drop(session);
+
+        let stats = farm.shutdown();
+        assert_eq!(stats.migrations as usize, ROUNDTRIPS);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(
+            stats.delta_migrations as usize,
+            ROUNDTRIPS - 1,
+            "every repeat offload rode a delta"
+        );
+        assert!(
+            stats.slot_gc_runs >= (ROUNDTRIPS as u64 / GC_INTERVAL) - 1,
+            "periodic GC ran ({} runs)",
+            stats.slot_gc_runs
+        );
+        assert!(stats.slot_gc_threads > 0, "tombstone threads reclaimed");
+        assert!(
+            stats.slot_threads_peak <= GC_INTERVAL + 1,
+            "no per-roundtrip tombstone growth across {ROUNDTRIPS} roundtrips \
+             (peak {} threads)",
+            stats.slot_threads_peak
+        );
+        assert!(
+            stats.slot_heap_peak < ZY_OBJECTS as u64 + 300,
+            "slot heap bounded near the template size (peak {} objects)",
+            stats.slot_heap_peak
+        );
+    }
+
     /// A closed session refuses further roundtrips.
     #[test]
     fn closed_session_errors() {
@@ -366,6 +538,7 @@ mod tests {
                 zygote_objects: 50,
                 zygote_seed: 1,
                 fuel: 1_000_000,
+                slot_gc_interval: 8,
             },
             CostParams::default(),
             Arc::new(NodeEnv::with_rust_compute),

@@ -17,7 +17,8 @@ use std::time::Instant;
 
 use crate::error::{CloneCloudError, Result};
 use crate::exec::distributed::CloneChannel;
-use crate::nodemanager::TransferBytes;
+use crate::migration::MobileSession;
+use crate::nodemanager::{HeartbeatOutcome, TransferBytes};
 use crate::vfs::SimFs;
 
 use super::farm::FarmShared;
@@ -161,6 +162,35 @@ impl FarmClone {
         }
     }
 
+    /// Digest-only heartbeat: verify the phone's baseline digest against
+    /// the slot on the placement worker without building a capsule. The
+    /// typed `NeedFull` error means the slot is gone or diverged — the
+    /// caller should drop its baseline and plan a full capture.
+    pub fn heartbeat_probe(&mut self, digest: u64, assignments: &[(u64, u64)]) -> Result<()> {
+        if self.closed {
+            return Err(CloneCloudError::Transport("farm session closed".into()));
+        }
+        // Affinity placement lands on the worker holding the slot; any
+        // other policy answers NeedFull (delta is not armed there).
+        let worker = self.shared.scheduler.pick(self.phone);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.senders[worker]
+            .send(FarmMsg::Heartbeat {
+                phone: self.phone,
+                digest,
+                assignments: assignments.to_vec(),
+                reply: reply_tx,
+            })
+            .map_err(|_| {
+                CloneCloudError::Transport(format!("farm worker {worker} is down"))
+            })?;
+        reply_rx.recv().map_err(|_| {
+            CloneCloudError::Transport(format!(
+                "farm worker {worker} dropped the heartbeat reply"
+            ))
+        })?
+    }
+
     /// End the session: retire this phone's clone slot on every worker.
     /// Idempotent; also invoked on drop.
     pub fn close(&mut self) {
@@ -186,6 +216,15 @@ impl CloneChannel for FarmClone {
 
     fn disarm_delta(&mut self) {
         self.set_delta(false);
+    }
+
+    fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {
+        if !self.delta {
+            return Ok(HeartbeatOutcome::Unsupported);
+        }
+        crate::nodemanager::drive_heartbeat(session, |_epoch, digest, assignments| {
+            self.heartbeat_probe(digest, assignments)
+        })
     }
 }
 

@@ -22,8 +22,8 @@ use std::time::Instant;
 
 use crate::appvm::process::Process;
 use crate::config::CostParams;
-use crate::error::Result;
-use crate::migration::{CloneSession, Migrator};
+use crate::error::{CloneCloudError, Result};
+use crate::migration::{collect_slot_garbage, CloneSession, Migrator};
 use crate::nodemanager::{execute_migration, CloneServeStats};
 use crate::vfs::SimFs;
 
@@ -45,6 +45,14 @@ pub(crate) struct Job {
 /// Messages a worker consumes.
 pub(crate) enum FarmMsg {
     Work(Job),
+    /// Digest heartbeat: verify the phone's baseline digest against the
+    /// slot's session state without building or shipping a capsule.
+    Heartbeat {
+        phone: u64,
+        digest: u64,
+        assignments: Vec<(u64, u64)>,
+        reply: Sender<Result<()>>,
+    },
     /// The phone's session closed; free its clone slot.
     Retire { phone: u64 },
     Shutdown,
@@ -60,6 +68,8 @@ struct CloneSlot {
     proc: Process,
     fs_version: u32,
     session: CloneSession,
+    /// Roundtrips served by this slot (drives periodic slot GC).
+    roundtrips: u64,
 }
 
 /// Worker thread body. Exits on `Shutdown` or when every sender is gone.
@@ -70,6 +80,7 @@ pub(crate) fn worker_main(
     shared: Arc<FarmShared>,
     costs: CostParams,
     fuel: u64,
+    slot_gc_interval: u64,
 ) {
     let migrator = Migrator::new(costs);
     let mut slots: HashMap<u64, CloneSlot> = HashMap::new();
@@ -97,6 +108,7 @@ pub(crate) fn worker_main(
                     proc: pool.take(&job.fs),
                     fs_version: job.fs_version,
                     session: CloneSession::new(job.delta_ok),
+                    roundtrips: 0,
                 });
                 if slot.fs_version != job.fs_version {
                     slot.proc.env.vfs = job.fs.synchronize();
@@ -123,6 +135,28 @@ pub(crate) fn worker_main(
                     .instrs_executed
                     .fetch_add(serve.instrs_executed, Ordering::Relaxed);
 
+                if result.is_ok() {
+                    slot.roundtrips += 1;
+                    // High-water marks BEFORE collection: this is the
+                    // tombstone growth the soak test bounds.
+                    shared
+                        .slot_threads_peak
+                        .fetch_max(slot.proc.threads.len() as u64, Ordering::Relaxed);
+                    shared
+                        .slot_heap_peak
+                        .fetch_max(slot.proc.heap.len() as u64, Ordering::Relaxed);
+                    if slot_gc_interval > 0 && slot.roundtrips % slot_gc_interval == 0 {
+                        let gc = collect_slot_garbage(&mut slot.proc, &slot.session);
+                        shared.slot_gc_runs.fetch_add(1, Ordering::Relaxed);
+                        shared
+                            .slot_gc_threads
+                            .fetch_add(gc.threads_reclaimed as u64, Ordering::Relaxed);
+                        shared
+                            .slot_gc_objects
+                            .fetch_add(gc.objects_reclaimed as u64, Ordering::Relaxed);
+                    }
+                }
+
                 let ws = &shared.worker_stats[idx];
                 ws.jobs.fetch_add(1, Ordering::Relaxed);
                 ws.busy_us
@@ -132,6 +166,22 @@ pub(crate) fn worker_main(
                 // problem; the admission slot is released by the session
                 // side regardless.
                 let _ = job.reply.send(result);
+            }
+            FarmMsg::Heartbeat {
+                phone,
+                digest,
+                assignments,
+                reply,
+            } => {
+                shared.heartbeats.fetch_add(1, Ordering::Relaxed);
+                let res = match slots.get_mut(&phone) {
+                    Some(slot) => slot.session.check_heartbeat(&slot.proc, digest, &assignments),
+                    None => Err(CloneCloudError::need_full("no clone slot for this phone")),
+                };
+                if matches!(&res, Err(e) if e.is_need_full()) {
+                    shared.heartbeat_divergent.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = reply.send(res);
             }
             FarmMsg::Retire { phone } => {
                 slots.remove(&phone);

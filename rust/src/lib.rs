@@ -8,15 +8,21 @@
 //! * [`migration`] — thread suspend/capture/resume/merge with the
 //!   MID/CID object-mapping table and Zygote-diff optimization (§4),
 //!   plus epoch-based **delta migration**: per-session baseline caches
-//!   ship only the mutated working set on repeat offloads, with a
-//!   digest-guarded full-capture fallback (`NeedFull`).
-//! * [`nodemanager`] — transport, wire protocol (v3: `Hello` capability
-//!   negotiation, delta `NeedFull` frames), clone provisioning: the 1:1
-//!   `CloneServer` and the serve-many farm gateway.
+//!   ship only the mutated working set — heap objects *and* statics —
+//!   on repeat offloads, with a digest-guarded full-capture fallback
+//!   (`NeedFull`) and periodic **slot GC** (tombstone threads +
+//!   orphaned object graphs reclaimed without evicting baselines).
+//! * [`nodemanager`] — transport, wire protocol (v4: `Hello` capability
+//!   bitmap — unknown bits ignored, never rejected — delta `NeedFull`
+//!   frames, digest `Heartbeat` probes), negotiated frame compression
+//!   (`util::compress`, LZ77/RLE, incompressible frames ride raw),
+//!   clone provisioning: the 1:1 `CloneServer` and the serve-many farm
+//!   gateway.
 //! * [`farm`] — the multi-tenant clone farm (beyond the paper): warm
 //!   pool, placement policies, admission control, phone sessions
 //!   multiplexed over clone workers; affinity-pinned slots retain the
-//!   delta baseline across a phone's repeat migrations.
+//!   delta baseline across a phone's repeat migrations, answer digest
+//!   heartbeats, and GC themselves on a configurable cadence.
 //! * [`runtime`] — PJRT loader executing the AOT HLO artifacts built by
 //!   `python/compile/aot.py` (L1 Pallas kernels + L2 JAX graphs).
 //! * [`apps`] — the paper's three evaluation applications.

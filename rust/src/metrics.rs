@@ -46,16 +46,37 @@ impl MetricsSnapshot {
         // saved without ad-hoc plumbing.
         self.count("migration.bytes_out", out.transfer.up);
         self.count("migration.bytes_in", out.transfer.down);
+        // Pre-compression capsule bytes: the raw/wire quotient is the
+        // session's per-direction compression ratio.
+        self.count("migration.raw_out", out.raw_up);
+        self.count("migration.raw_in", out.raw_down);
         self.count("migration.delta.roundtrips", out.delta_roundtrips as u64);
         self.count("migration.full.roundtrips", out.full_roundtrips as u64);
         self.count("migration.delta.fallbacks", out.delta_fallbacks as u64);
+        self.count(
+            "migration.heartbeat.preempts",
+            out.heartbeat_preempts as u64,
+        );
         self.count("objects.shipped", out.objects_shipped as u64);
         self.count("objects.zygote_skipped", out.zygote_skipped as u64);
         self.count("objects.base_skipped", out.base_skipped as u64);
+        self.count("statics.shipped", out.statics_shipped as u64);
         if out.migrations > 0 {
             self.gauge(
                 "migration.delta.hit_rate",
                 out.delta_roundtrips as f64 / out.migrations as f64,
+            );
+        }
+        if out.transfer.up > 0 {
+            self.gauge(
+                "migration.compression.ratio_out",
+                out.raw_up as f64 / out.transfer.up as f64,
+            );
+        }
+        if out.transfer.down > 0 {
+            self.gauge(
+                "migration.compression.ratio_in",
+                out.raw_down as f64 / out.transfer.down as f64,
             );
         }
         self.gauge("virtual_ms", out.virtual_ms);
@@ -80,6 +101,29 @@ impl MetricsSnapshot {
         self.count("farm.pool.refills", f.pool_refills);
         self.count("farm.delta.migrations", f.delta_migrations);
         self.count("farm.delta.rejects", f.delta_rejects);
+        self.count("farm.heartbeats", f.heartbeats);
+        self.count("farm.heartbeat.divergent", f.heartbeat_divergent);
+        self.count("farm.slot_gc.runs", f.slot_gc_runs);
+        self.count("farm.slot_gc.threads", f.slot_gc_threads);
+        self.count("farm.slot_gc.objects", f.slot_gc_objects);
+        self.count("farm.wire.raw_up", f.wire_raw_up);
+        self.count("farm.wire.up", f.wire_up);
+        self.count("farm.wire.raw_down", f.wire_raw_down);
+        self.count("farm.wire.down", f.wire_down);
+        self.gauge("farm.slot.threads_peak", f.slot_threads_peak as f64);
+        self.gauge("farm.slot.heap_peak", f.slot_heap_peak as f64);
+        if f.wire_up > 0 {
+            self.gauge(
+                "farm.compression.ratio_up",
+                f.wire_raw_up as f64 / f.wire_up as f64,
+            );
+        }
+        if f.wire_down > 0 {
+            self.gauge(
+                "farm.compression.ratio_down",
+                f.wire_raw_down as f64 / f.wire_down as f64,
+            );
+        }
         self.gauge("farm.pool.hit_rate", f.pool_hit_rate());
         if f.migrations > 0 {
             self.gauge(
@@ -144,18 +188,27 @@ mod tests {
                 up: 1000,
                 down: 2000,
             },
+            raw_up: 3000,
+            raw_down: 2000,
             delta_roundtrips: 3,
             full_roundtrips: 1,
             delta_fallbacks: 1,
+            heartbeat_preempts: 1,
+            statics_shipped: 7,
             ..Default::default()
         };
         m.absorb_dist(&out);
         assert_eq!(m.counters["migration.bytes_out"], 1000);
         assert_eq!(m.counters["migration.bytes_in"], 2000);
+        assert_eq!(m.counters["migration.raw_out"], 3000);
         assert_eq!(m.counters["migration.delta.roundtrips"], 3);
         assert_eq!(m.counters["migration.full.roundtrips"], 1);
         assert_eq!(m.counters["migration.delta.fallbacks"], 1);
+        assert_eq!(m.counters["migration.heartbeat.preempts"], 1);
+        assert_eq!(m.counters["statics.shipped"], 7);
         assert!((m.gauges["migration.delta.hit_rate"] - 0.75).abs() < 1e-9);
+        assert!((m.gauges["migration.compression.ratio_out"] - 3.0).abs() < 1e-9);
+        assert!((m.gauges["migration.compression.ratio_in"] - 1.0).abs() < 1e-9);
     }
 
     #[test]

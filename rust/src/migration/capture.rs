@@ -34,11 +34,19 @@ pub struct CaptureOptions {
     /// Enable the Zygote-diff optimization (§4.3). Off = ship everything
     /// reachable, including clean template objects (the E4 ablation).
     pub zygote_diff: bool,
+    /// Delta captures ship only statics written since the baseline
+    /// epoch (unchanged slots are implied by the baseline). Off = every
+    /// delta re-sends the full non-null statics section — the PR 2 wire
+    /// shape, kept for the bench ablation. Full captures are unaffected.
+    pub incremental_statics: bool,
 }
 
 impl Default for CaptureOptions {
     fn default() -> Self {
-        CaptureOptions { zygote_diff: true }
+        CaptureOptions {
+            zygote_diff: true,
+            incremental_statics: true,
+        }
     }
 }
 
@@ -51,6 +59,8 @@ pub struct CaptureStats {
     pub zygote_skipped: usize,
     /// Baseline objects referenced by id instead of shipped (delta).
     pub base_skipped: usize,
+    /// Static slots serialized into the statics section.
+    pub statics_shipped: usize,
     /// Encoded packet size.
     pub bytes: usize,
 }
@@ -249,9 +259,24 @@ pub(crate) fn capture_core(
             continue;
         }
         for (idx, v) in class_statics.iter().enumerate() {
-            // Null statics are implied; ship only meaningful values.
-            if matches!(v, Value::Null) {
-                continue;
+            match base {
+                // Delta capture: unchanged slots are implied by the
+                // baseline; changed ones ship their current value, Null
+                // included, so a static cleared since the sync is
+                // cleared at the receiver too.
+                Some(b) if opts.incremental_statics => {
+                    if p.statics_epoch[ci][idx] <= b.epoch {
+                        continue;
+                    }
+                }
+                // Full capture (or the legacy full-statics delta shape):
+                // null statics are implied — full-capture receivers
+                // reset app statics before applying.
+                _ => {
+                    if matches!(v, Value::Null) {
+                        continue;
+                    }
+                }
             }
             statics.push(WireStatic {
                 class_name: p.program.classes[ci].name.clone(),
@@ -260,6 +285,7 @@ pub(crate) fn capture_core(
             });
         }
     }
+    stats.statics_shipped = statics.len();
 
     Ok(RawCapture {
         frames,

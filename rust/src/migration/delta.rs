@@ -32,6 +32,7 @@
 //! comparison `obj.epoch > baseline.epoch` on either side.
 
 use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
 
 use crate::appvm::process::Process;
 use crate::appvm::thread::{ThreadStatus, VmThread};
@@ -118,6 +119,7 @@ impl DeltaPacket {
         let base_epoch = r.get_u64()?;
         let base_digest = r.get_u64()?;
         let na = r.get_u32()? as usize;
+        let na = r.checked_count(na, 16)?;
         let mut assignments = Vec::with_capacity(na);
         for _ in 0..na {
             let cid = r.get_u64()?;
@@ -125,6 +127,7 @@ impl DeltaPacket {
             assignments.push((cid, mid));
         }
         let nd = r.get_u32()? as usize;
+        let nd = r.checked_count(nd, 8)?;
         let mut deleted = Vec::with_capacity(nd);
         for _ in 0..nd {
             deleted.push(r.get_u64()?);
@@ -148,6 +151,13 @@ impl DeltaPacket {
         })
     }
 }
+
+/// Byte offset of the `clock_us` field in any encoded capsule: both
+/// flavors lead with magic (u32) + version (u16) + direction (u8) +
+/// thread id (u32), then the f64 clock. The exec driver patches the
+/// post-transfer timestamp at this offset into the (sealed) wire frame
+/// instead of re-encoding and re-compressing the whole capsule.
+pub const CAPSULE_CLOCK_OFFSET: usize = 11;
 
 /// What actually rides the wire in a `Migrate`/`Reintegrate` frame: a
 /// full capture or a delta, distinguished by magic.
@@ -233,11 +243,13 @@ impl Fnv {
 }
 
 /// Canonical digest of the shared session state: the baseline members
-/// (`(mid, local id)` pairs), hashed in MID order with every reference
-/// canonicalized to a MID or a Zygote (class, seq) name. Both endpoints
-/// compute this over their own heaps at each sync point; equality means
-/// the baselines describe the same logical state, so a delta against it
-/// is safe to apply.
+/// (`(mid, local id)` pairs) hashed in MID order, followed by every
+/// app-class static slot (in class order, nulls included), with every
+/// reference canonicalized to a MID or a Zygote (class, seq) name. Both
+/// endpoints compute this over their own heaps at each sync point;
+/// equality means the baselines describe the same logical state —
+/// statics included, now that deltas ship them incrementally — so a
+/// delta against it is safe to apply.
 pub(crate) fn state_digest(p: &Process, members: &[(u64, ObjId)]) -> u64 {
     let by_local: HashMap<u64, u64> = members.iter().map(|&(m, l)| (l.0, m)).collect();
     let mut sorted: Vec<(u64, ObjId)> = members.to_vec();
@@ -315,6 +327,21 @@ pub(crate) fn state_digest(p: &Process, members: &[(u64, ObjId)]) -> u64 {
             }
         }
     }
+
+    // App-class statics are session-shared state too (they ride deltas
+    // incrementally), so a divergent static must poison the digest just
+    // like a divergent member body.
+    for (ci, class_statics) in p.statics.iter().enumerate() {
+        if p.program.classes[ci].system {
+            continue;
+        }
+        h.eat(&[20]);
+        h.eat(p.program.classes[ci].name.as_bytes());
+        h.eat_u64(class_statics.len() as u64);
+        for v in class_statics {
+            eat_value(&mut h, v);
+        }
+    }
     h.0
 }
 
@@ -340,6 +367,15 @@ pub struct MobileSession {
     /// (clone id, assigned mobile id) pairs from the last reverse merge,
     /// shipped with the next forward capsule.
     pending: Vec<(u64, u64)>,
+    /// Ship the full statics section in delta capsules (the PR 2 wire
+    /// shape; bench ablation only).
+    full_statics: bool,
+    /// Send a digest heartbeat when the baseline has idled this long
+    /// (`None` = never).
+    heartbeat_after: Option<Duration>,
+    /// Wall time of the last sync point (baseline record or coherent
+    /// heartbeat).
+    last_sync: Instant,
 }
 
 impl MobileSession {
@@ -348,6 +384,9 @@ impl MobileSession {
             enabled,
             baseline: None,
             pending: Vec::new(),
+            full_statics: false,
+            heartbeat_after: None,
+            last_sync: Instant::now(),
         }
     }
 
@@ -370,6 +409,54 @@ impl MobileSession {
     pub fn has_baseline(&self) -> bool {
         self.baseline.is_some()
     }
+
+    /// Re-send the full statics section in every delta (PR 2 shape;
+    /// bench ablation only — receivers stay compatible either way).
+    pub fn ship_full_statics(&mut self, on: bool) {
+        self.full_statics = on;
+    }
+
+    /// Probe the peer with a digest heartbeat once the baseline has been
+    /// idle this long (`Duration::ZERO` = before every migration).
+    pub fn heartbeat_every(&mut self, interval: Duration) {
+        self.heartbeat_after = Some(interval);
+    }
+
+    /// Whether a heartbeat should precede the next delta capture.
+    pub fn heartbeat_due(&self) -> bool {
+        match self.heartbeat_after {
+            Some(d) if self.enabled && self.baseline.is_some() => {
+                self.last_sync.elapsed() >= d
+            }
+            _ => false,
+        }
+    }
+
+    /// The recorded baseline's (epoch, canonical digest), if any.
+    pub fn baseline_info(&self) -> Option<(u64, u64)> {
+        self.baseline.as_ref().map(|b| (b.epoch, b.digest))
+    }
+
+    /// MID assignments from the last reverse merge, not yet delivered to
+    /// the clone (a heartbeat piggybacks these exactly like a forward
+    /// delta would).
+    pub fn pending_assignments(&self) -> &[(u64, u64)] {
+        &self.pending
+    }
+
+    /// The peer confirmed the baseline (heartbeat `Ack`): the delivered
+    /// assignments are cleared and the idle clock restarts.
+    pub fn mark_coherent(&mut self) {
+        self.pending.clear();
+        self.last_sync = Instant::now();
+    }
+
+    /// Drop the baseline cache (heartbeat `NeedFull`, or any out-of-band
+    /// divergence signal): the next capture is full.
+    pub fn drop_baseline(&mut self) {
+        self.baseline = None;
+        self.pending.clear();
+    }
 }
 
 struct CloneBaseline {
@@ -389,6 +476,9 @@ struct CloneBaseline {
 pub struct CloneSession {
     enabled: bool,
     base: Option<CloneBaseline>,
+    /// Re-send the full statics section in reverse deltas (PR 2 shape;
+    /// bench ablation only).
+    full_statics: bool,
 }
 
 impl CloneSession {
@@ -396,6 +486,7 @@ impl CloneSession {
         CloneSession {
             enabled,
             base: None,
+            full_statics: false,
         }
     }
 
@@ -408,6 +499,12 @@ impl CloneSession {
         self.enabled = on;
     }
 
+    /// Re-send the full statics section in every reverse delta (PR 2
+    /// shape; bench ablation only).
+    pub fn ship_full_statics(&mut self, on: bool) {
+        self.full_statics = on;
+    }
+
     /// Drop the baseline (worker recycle / tests): the next delta from
     /// the phone is answered with `NeedFull`.
     pub fn evict(&mut self) {
@@ -417,6 +514,88 @@ impl CloneSession {
     pub fn has_baseline(&self) -> bool {
         self.base.is_some()
     }
+
+    /// Verify a digest heartbeat against the session baseline: apply the
+    /// piggybacked MID assignments (idempotent — a later delta may carry
+    /// them again), recompute the canonical digest, and answer
+    /// `NeedFull` on any mismatch, evicting the poisoned baseline so the
+    /// next delta cannot ride on it either.
+    pub fn check_heartbeat(
+        &mut self,
+        p: &Process,
+        digest: u64,
+        assignments: &[(u64, u64)],
+    ) -> Result<()> {
+        if !self.enabled {
+            return Err(CloneCloudError::need_full(
+                "heartbeat on a session that did not negotiate delta",
+            ));
+        }
+        let b = match self.base.as_mut() {
+            Some(b) => b,
+            None => {
+                return Err(CloneCloudError::need_full(
+                    "no session baseline at the clone",
+                ))
+            }
+        };
+        for &(cid, mid) in assignments {
+            if b.table.mid_for_cid(cid).is_none() && b.table.cid_for_mid(mid).is_none() {
+                b.table.insert(Some(mid), Some(cid));
+            }
+        }
+        let have = state_digest(p, &table_members(&b.table));
+        if have != digest {
+            self.base = None;
+            return Err(CloneCloudError::need_full(format!(
+                "heartbeat digest mismatch (clone {have:#x} != mobile {digest:#x})"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// What one clone-slot garbage collection reclaimed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SlotGcStats {
+    /// Tombstone threads (Migrated/Finished) dropped from the slot.
+    pub threads_reclaimed: usize,
+    /// Unreachable heap objects swept.
+    pub objects_reclaimed: usize,
+}
+
+/// Periodic clone-slot garbage collection, keyed on the session mapping
+/// table. A retained slot leaks one tombstone thread per roundtrip (its
+/// frames pin every object graph it ever touched) plus, on the full
+/// path, one obsolete object-graph copy per visit. This reclaims both
+/// **without evicting the live baseline**: the GC roots are the slot's
+/// statics and live threads, every CID in the session mapping table
+/// (future `Base` references resolve through it), and every
+/// Zygote-named object (future capsules may address templates by
+/// (class, seq) name). Everything reclaimed is unreachable from all
+/// three, so no future delta, digest, or merge can observe it — the
+/// epoch-coherence invariant is untouched.
+pub fn collect_slot_garbage(p: &mut Process, sess: &CloneSession) -> SlotGcStats {
+    let mut stats = SlotGcStats::default();
+    // Between roundtrips every slot thread is a tombstone; clear them
+    // all so their frames stop pinning dead graphs. If anything is
+    // still live (mid-roundtrip misuse), keep thread ids stable by
+    // skipping thread reclamation entirely.
+    let all_tombstones = p
+        .threads
+        .iter()
+        .all(|t| matches!(t.status, ThreadStatus::Migrated | ThreadStatus::Finished));
+    if all_tombstones {
+        stats.threads_reclaimed = p.threads.len();
+        p.threads.clear();
+    }
+    let mut roots = p.gc_roots();
+    if let Some(b) = sess.base.as_ref() {
+        roots.extend(b.table.cids().map(ObjId));
+    }
+    roots.extend(p.heap.zygote_ids());
+    stats.objects_reclaimed = p.heap.gc(&roots);
+    stats
 }
 
 fn table_members(table: &MappingTable) -> Vec<(u64, ObjId)> {
@@ -440,9 +619,12 @@ fn table_members(table: &MappingTable) -> Vec<(u64, ObjId)> {
 pub(crate) fn capture_forward(
     p: &mut Process,
     tid: u32,
-    opts: CaptureOptions,
+    mut opts: CaptureOptions,
     sess: &mut MobileSession,
 ) -> Result<(Capsule, CaptureStats)> {
+    if sess.full_statics {
+        opts.incremental_statics = false;
+    }
     if sess.enabled && sess.baseline.is_some() {
         let b = sess.baseline.as_ref().expect("checked");
         let base = DeltaBase {
@@ -489,6 +671,7 @@ pub(crate) fn capture_forward(
             digest,
             mids,
         });
+        sess.last_sync = Instant::now();
         p.advance_epoch();
 
         let mut stats = raw.stats;
@@ -518,6 +701,7 @@ fn full_forward(
             mids,
         });
         sess.pending.clear();
+        sess.last_sync = Instant::now();
         p.advance_epoch();
     }
     Ok((Capsule::Full(packet), stats))
@@ -678,6 +862,7 @@ fn merge_reverse_delta(
         mids: b.mids,
     });
     sess.pending = assignments;
+    sess.last_sync = Instant::now();
     p.advance_epoch();
     Ok(stats)
 }
@@ -828,9 +1013,12 @@ fn receive_forward_delta(
 pub(crate) fn return_from_clone_capsule(
     clone: &mut Process,
     tid: u32,
-    opts: CaptureOptions,
+    mut opts: CaptureOptions,
     sess: &mut CloneSession,
 ) -> Result<(Capsule, CaptureStats, usize)> {
+    if sess.full_statics {
+        opts.incremental_statics = false;
+    }
     let base = sess.base.as_mut().ok_or_else(|| {
         CloneCloudError::migration("reverse capture without a clone session")
     })?;
@@ -946,6 +1134,29 @@ mod tests {
     }
 
     #[test]
+    fn digest_covers_app_statics() {
+        let mut prog = Program::new();
+        install_system_classes(&mut prog);
+        let mut c = crate::appvm::class::ClassDef::new("App", false);
+        c.add_static("s");
+        prog.add_class(c);
+        let prog = prog.into_shared();
+        let app = prog.class_id("App").unwrap().0 as usize;
+
+        let mut a = proc_with(prog.clone());
+        let b = proc_with(prog);
+        let members: Vec<(u64, ObjId)> = Vec::new();
+        assert_eq!(state_digest(&a, &members), state_digest(&b, &members));
+
+        a.put_static(app, 0, Value::Int(7)).unwrap();
+        assert_ne!(
+            state_digest(&a, &members),
+            state_digest(&b, &members),
+            "a divergent static poisons the digest"
+        );
+    }
+
+    #[test]
     fn digest_is_member_order_independent() {
         let p = program();
         let mut a = proc_with(p);
@@ -1038,5 +1249,38 @@ mod tests {
     fn capsule_decode_rejects_unknown_magic() {
         assert!(Capsule::decode(&[0, 1, 2, 3, 4, 5]).is_err());
         assert!(Capsule::decode(&[]).is_err());
+    }
+
+    /// The clock field sits at a fixed offset in BOTH capsule flavors —
+    /// the invariant the driver's in-place wire stamping relies on.
+    #[test]
+    fn clock_offset_is_stable_across_flavors() {
+        let mut rng = Rng::new(7);
+        let mut d = gen_delta(&mut rng);
+        d.clock_us = 1.5;
+        let mut bytes = d.encode();
+        bytes[CAPSULE_CLOCK_OFFSET..CAPSULE_CLOCK_OFFSET + 8]
+            .copy_from_slice(&42.25f64.to_bits().to_be_bytes());
+        let back = DeltaPacket::decode(&bytes).unwrap();
+        assert_eq!(back.clock_us, 42.25);
+        assert_eq!(
+            DeltaPacket { clock_us: 1.5, ..back },
+            d,
+            "only the clock changed"
+        );
+
+        let full = CapturePacket {
+            direction: Direction::Forward,
+            thread_id: 3,
+            clock_us: 9.0,
+            frames: Vec::new(),
+            objects: Vec::new(),
+            zygote_refs: Vec::new(),
+            statics: Vec::new(),
+        };
+        let mut bytes = full.encode();
+        bytes[CAPSULE_CLOCK_OFFSET..CAPSULE_CLOCK_OFFSET + 8]
+            .copy_from_slice(&8.125f64.to_bits().to_be_bytes());
+        assert_eq!(CapturePacket::decode(&bytes).unwrap().clock_us, 8.125);
     }
 }

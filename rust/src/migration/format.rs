@@ -214,7 +214,11 @@ impl WireSections {
     /// Decode the string table + sections (shared tail; see
     /// `encode_into`). Does not check reader exhaustion — callers do.
     pub(crate) fn decode_from(r: &mut WireReader) -> Result<WireSections> {
+        // Every section count is validated against the bytes actually
+        // remaining (each entry has a fixed minimum wire size), so a
+        // corrupt count can never force a huge pre-allocation.
         let nstrings = r.get_u32()? as usize;
+        let nstrings = r.checked_count(nstrings, 4)?;
         let mut strings = Vec::with_capacity(nstrings);
         for _ in 0..nstrings {
             strings.push(r.get_str()?);
@@ -227,6 +231,7 @@ impl WireSections {
         };
 
         let nframes = r.get_u32()? as usize;
+        let nframes = r.checked_count(nframes, 17)?;
         let mut frames = Vec::with_capacity(nframes);
         for _ in 0..nframes {
             let class_name = lookup(r.get_u32()?)?;
@@ -234,6 +239,7 @@ impl WireSections {
             let pc = r.get_u32()?;
             let ret_reg_plus1 = r.get_u8()?;
             let nregs = r.get_u32()? as usize;
+            let nregs = r.checked_count(nregs, 1)?;
             let mut regs = Vec::with_capacity(nregs);
             for _ in 0..nregs {
                 regs.push(decode_value(r)?);
@@ -248,6 +254,7 @@ impl WireSections {
         }
 
         let nobjs = r.get_u32()? as usize;
+        let nobjs = r.checked_count(nobjs, 22)?;
         let mut objects = Vec::with_capacity(nobjs);
         for _ in 0..nobjs {
             let origin_id = r.get_u64()?;
@@ -269,6 +276,7 @@ impl WireSections {
         }
 
         let nzy = r.get_u32()? as usize;
+        let nzy = r.checked_count(nzy, 8)?;
         let mut zygote_refs = Vec::with_capacity(nzy);
         for _ in 0..nzy {
             let name = lookup(r.get_u32()?)?;
@@ -277,6 +285,7 @@ impl WireSections {
         }
 
         let nst = r.get_u32()? as usize;
+        let nst = r.checked_count(nst, 7)?;
         let mut statics = Vec::with_capacity(nst);
         for _ in 0..nst {
             let class_name = lookup(r.get_u32()?)?;
@@ -453,6 +462,7 @@ fn decode_body(r: &mut WireReader) -> Result<WireBody> {
     Ok(match r.get_u8()? {
         0 => {
             let n = r.get_u32()? as usize;
+            let n = r.checked_count(n, 1)?;
             let mut vs = Vec::with_capacity(n);
             for _ in 0..n {
                 vs.push(decode_value(r)?);
@@ -462,6 +472,7 @@ fn decode_body(r: &mut WireReader) -> Result<WireBody> {
         1 => WireBody::ByteArray(r.get_bytes()?),
         2 => {
             let n = r.get_u32()? as usize;
+            let n = r.checked_count(n, 4)?;
             let mut fs = Vec::with_capacity(n);
             for _ in 0..n {
                 fs.push(r.get_f32()?);
@@ -470,6 +481,7 @@ fn decode_body(r: &mut WireReader) -> Result<WireBody> {
         }
         3 => {
             let n = r.get_u32()? as usize;
+            let n = r.checked_count(n, 1)?;
             let mut vs = Vec::with_capacity(n);
             for _ in 0..n {
                 vs.push(decode_value(r)?);

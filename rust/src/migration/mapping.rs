@@ -78,6 +78,13 @@ impl MappingTable {
         &self.entries
     }
 
+    /// Every non-null CID in the table. Slot GC roots these: a baseline
+    /// member must survive collection however unreachable it looks,
+    /// because a future delta may address it with a `Base` reference.
+    pub fn cids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.entries.iter().filter_map(|e| e.cid)
+    }
+
     /// Drop the entries holding the given MIDs (the delta path's
     /// `deleted` list: baseline members that died on the other side).
     /// Returns the number of entries removed.

@@ -161,18 +161,17 @@ pub(crate) fn apply_sections(
         p.heap.get_mut(local)?.body = body;
     }
 
-    // Statics.
+    // Statics — through the write barrier, so the applied slots carry
+    // the receiver's current epoch and count as clean after the
+    // post-merge baseline is recorded (exactly like object bodies, which
+    // are stamped by `Heap::get_mut` above).
     for ws in statics {
         let cid: ClassId = p.program.class_id(&ws.class_name).ok_or_else(|| {
             CloneCloudError::migration(format!("unknown class '{}'", ws.class_name))
         })?;
         let v = resolve(&ws.value)?;
-        let slot = p
-            .statics
-            .get_mut(cid.0 as usize)
-            .and_then(|s| s.get_mut(ws.idx as usize))
-            .ok_or_else(|| CloneCloudError::migration("static index out of range"))?;
-        *slot = v;
+        p.put_static(cid.0 as usize, ws.idx as usize, v)
+            .map_err(|_| CloneCloudError::migration("static index out of range"))?;
     }
 
     // Frames.
@@ -217,6 +216,9 @@ pub fn instantiate_at_clone(
     if packet.direction != Direction::Forward {
         return Err(CloneCloudError::migration("expected a forward capture"));
     }
+    // Full packets imply null statics instead of shipping them; clear
+    // whatever a previous session left in this (possibly reused) slot.
+    clone.reset_app_statics();
     let mut stats = MergeStats::default();
     let zlocal = resolve_zygote_locals(&packet.zygote_refs, zidx)?;
     let locals = place_objects(clone, packet, zidx, false, &mut stats)?;
@@ -258,6 +260,10 @@ pub fn merge_at_mobile(
     if packet.direction != Direction::Reverse {
         return Err(CloneCloudError::migration("expected a reverse capture"));
     }
+    // Symmetric to the clone side: a full reverse capture carries the
+    // clone's complete statics view with nulls implied, so stale
+    // non-null slots here must not survive the merge.
+    p.reset_app_statics();
     let mut stats = MergeStats::default();
     let zlocal = resolve_zygote_locals(&packet.zygote_refs, zidx)?;
     let locals = place_objects(p, packet, zidx, true, &mut stats)?;

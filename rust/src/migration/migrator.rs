@@ -34,6 +34,8 @@ pub struct MigrationPhases {
     pub zygote_skipped: usize,
     /// Session-baseline objects referenced instead of shipped (delta).
     pub base_skipped: usize,
+    /// Static slots serialized into the capsule's statics section.
+    pub statics_shipped: usize,
 }
 
 /// The migrator: per-process component, configured with cost calibration
@@ -53,6 +55,13 @@ impl Migrator {
 
     pub fn without_zygote_diff(mut self) -> Migrator {
         self.opts.zygote_diff = false;
+        self
+    }
+
+    /// Ship the full statics section in every delta capsule (the PR 2
+    /// wire shape; bench ablation only).
+    pub fn without_incremental_statics(mut self) -> Migrator {
+        self.opts.incremental_statics = false;
         self
     }
 
@@ -184,6 +193,7 @@ impl Migrator {
         phases.objects_shipped = stats.objects;
         phases.zygote_skipped = stats.zygote_skipped;
         phases.base_skipped = stats.base_skipped;
+        phases.statics_shipped = stats.statics_shipped;
     }
 }
 

@@ -22,7 +22,10 @@ pub mod migrator;
 pub mod zygote_diff;
 
 pub use capture::{capture_thread, measure_state_size, CaptureOptions, CaptureStats};
-pub use delta::{Capsule, CloneSession, DeltaPacket, MobileSession};
+pub use delta::{
+    collect_slot_garbage, Capsule, CloneSession, DeltaPacket, MobileSession, SlotGcStats,
+    CAPSULE_CLOCK_OFFSET,
+};
 pub use format::{CapturePacket, Direction};
 pub use mapping::MappingTable;
 pub use merge::{instantiate_at_clone, merge_at_mobile, validate_packet, MergeStats};

@@ -18,7 +18,9 @@ use crate::error::{CloneCloudError, Result};
 use crate::farm::{FarmClone, FarmHandle};
 use crate::vfs::SimFs;
 
-use super::protocol::{Msg, PROTO_VERSION};
+use super::protocol::{
+    codec_agreed, open_frame, seal_frame, Codec, Msg, PROTO_VERSION, SUPPORTED_CAPS,
+};
 use super::transport::{TcpEndpoint, Transport};
 
 /// Serve one phone connection against the farm. Returns the number of
@@ -30,19 +32,35 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
     let mut migrations = 0u64;
     // Armed by Hello; applied to the session whenever one exists.
     let mut delta = false;
+    let mut codec = Codec::None;
     loop {
         let (msg, _) = t.recv()?;
         match msg {
-            Msg::Hello { proto, delta: want } => {
+            Msg::Hello {
+                proto,
+                delta: want,
+                caps,
+            } => {
                 // Delta also requires placement that parks the phone's
                 // baseline on one worker (affinity).
                 delta = super::protocol::delta_agreed(proto, want) && handle.delta_friendly();
+                codec = codec_agreed(proto, caps);
                 if let Some(s) = session.as_mut() {
                     s.set_delta(delta);
                 }
+                // Log the negotiated capability set: mixed-version
+                // fleets are debugged from exactly this line.
+                eprintln!(
+                    "[farm] session caps: proto v{}, delta={delta}, codec={}",
+                    proto.min(PROTO_VERSION),
+                    codec.name()
+                );
+                // Reply with the negotiated (min) revision so a v3
+                // initiator gets a Hello its decoder accepts.
                 t.send(&Msg::Hello {
-                    proto: PROTO_VERSION,
+                    proto: proto.min(PROTO_VERSION),
                     delta,
+                    caps: SUPPORTED_CAPS,
                 })?;
             }
             Msg::Provision {
@@ -89,10 +107,25 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                     session = Some(s);
                 }
                 let s = session.as_mut().unwrap();
-                match s.roundtrip_bytes(bytes) {
+                // Frame layer: open a (possibly compressed) payload for
+                // the farm, seal the reply under the negotiated codec,
+                // and feed the per-direction raw/wire byte counters.
+                let wire_up = bytes.len() as u64;
+                let raw = match open_frame(&bytes) {
+                    Ok(raw) => raw.into_owned(),
+                    Err(e) => {
+                        t.send(&Msg::Error(e.to_string()))?;
+                        continue;
+                    }
+                };
+                let raw_up = raw.len() as u64;
+                match s.roundtrip_bytes(raw) {
                     Ok((rbytes, _)) => {
                         migrations += 1;
-                        t.send(&Msg::Reintegrate(rbytes))?;
+                        let raw_down = rbytes.len() as u64;
+                        let sealed = seal_frame(codec, rbytes);
+                        handle.record_wire(raw_up, wire_up, raw_down, sealed.len() as u64);
+                        t.send(&Msg::Reintegrate(sealed))?;
                     }
                     Err(CloneCloudError::NeedFull(reason)) => {
                         t.send(&Msg::NeedFull(reason))?;
@@ -101,6 +134,21 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                         t.send(&Msg::Error(e.to_string()))?;
                     }
                 }
+            }
+            Msg::Heartbeat {
+                base_epoch: _,
+                digest,
+                assignments,
+            } => {
+                let res = match session.as_mut() {
+                    Some(s) => s.heartbeat_probe(digest, &assignments),
+                    None => Err(CloneCloudError::need_full("heartbeat before any session")),
+                };
+                match res {
+                    Ok(()) => t.send(&Msg::Ack)?,
+                    Err(e) if e.is_need_full() => t.send(&Msg::NeedFull(e.to_string()))?,
+                    Err(e) => t.send(&Msg::Error(e.to_string()))?,
+                };
             }
             Msg::Shutdown => return Ok(migrations),
             other => {
@@ -187,6 +235,7 @@ mod tests {
                 zygote_objects: ZY,
                 zygote_seed: SEED,
                 fuel: 100_000_000,
+                slot_gc_interval: 8,
             },
             CostParams::default(),
             Arc::new(NodeEnv::with_rust_compute),

@@ -18,10 +18,13 @@ use crate::appvm::Program;
 use crate::config::CostParams;
 use crate::device::{DeviceSpec, Location};
 use crate::error::{CloneCloudError, Result};
-use crate::migration::{Capsule, CloneSession, Migrator};
+use crate::migration::{collect_slot_garbage, Capsule, CloneSession, Migrator, MobileSession};
 use crate::vfs::SimFs;
 
-use super::protocol::{program_hash, Msg, PROTO_VERSION};
+use super::protocol::{
+    codec_agreed, open_frame, program_hash, seal_frame, Codec, HeartbeatOutcome, Msg,
+    PROTO_VERSION, SUPPORTED_CAPS,
+};
 use super::transport::Transport;
 
 /// Statistics from one clone-serving session.
@@ -35,6 +38,14 @@ pub struct CloneServeStats {
     /// Delta capsules rejected with `NeedFull` (missing/incoherent
     /// baseline); the phone re-sent them in full.
     pub delta_rejects: usize,
+    /// Digest heartbeats answered.
+    pub heartbeats: usize,
+    /// Heartbeats answered `NeedFull` (divergent/missing baseline).
+    pub heartbeat_divergent: usize,
+    /// Periodic slot collections run, and what they reclaimed.
+    pub slot_gc_runs: usize,
+    pub slot_gc_threads: usize,
+    pub slot_gc_objects: usize,
 }
 
 /// The clone node: serves one phone over one transport.
@@ -46,6 +57,10 @@ pub struct CloneServer<T: Transport> {
     make_env: Box<dyn Fn(SimFs) -> NodeEnv>,
     /// Interpreter fuel per offloaded span (guards runaway threads).
     pub fuel: u64,
+    /// Run a slot garbage collection every this many migrations
+    /// (0 = never): reclaims tombstone threads + orphaned object-graph
+    /// copies without evicting the live delta baseline.
+    pub slot_gc_interval: u64,
 }
 
 impl<T: Transport> CloneServer<T> {
@@ -62,6 +77,7 @@ impl<T: Transport> CloneServer<T> {
             costs,
             make_env,
             fuel: 2_000_000_000,
+            slot_gc_interval: 8,
         }
     }
 
@@ -71,19 +87,25 @@ impl<T: Transport> CloneServer<T> {
         let mut stats = CloneServeStats::default();
         let mut fs = SimFs::new();
         let mut proc: Option<Process> = None;
-        // Delta stays off until the phone negotiates it via Hello.
+        // Delta and compression stay off until the phone's Hello.
         let mut session = CloneSession::new(false);
+        let mut codec = Codec::None;
+        let mut roundtrips = 0u64;
         let migrator = Migrator::new(self.costs.clone());
 
         loop {
             let (msg, _) = self.transport.recv()?;
             match msg {
-                Msg::Hello { proto, delta } => {
+                Msg::Hello { proto, delta, caps } => {
                     let speak_delta = super::protocol::delta_agreed(proto, delta);
+                    codec = codec_agreed(proto, caps);
                     session.set_enabled(speak_delta);
+                    // Reply with the negotiated (min) revision so a v3
+                    // initiator gets a Hello its decoder accepts.
                     self.transport.send(&Msg::Hello {
-                        proto: PROTO_VERSION,
+                        proto: proto.min(PROTO_VERSION),
                         delta: speak_delta,
+                        caps: SUPPORTED_CAPS,
                     })?;
                 }
                 Msg::Provision {
@@ -121,18 +143,56 @@ impl<T: Transport> CloneServer<T> {
                     self.transport.send(&Msg::Ack)?;
                 }
                 Msg::Migrate(bytes) => {
-                    let reply = self.handle_migration(
-                        &migrator,
-                        proc.as_mut(),
-                        &bytes,
-                        &mut stats,
-                        &mut session,
-                    );
+                    // Frame layer: the payload may arrive sealed
+                    // (compressed); the reply is sealed under the
+                    // negotiated codec.
+                    let reply = open_frame(&bytes).and_then(|raw| {
+                        self.handle_migration(
+                            &migrator,
+                            proc.as_mut(),
+                            &raw,
+                            &mut stats,
+                            &mut session,
+                        )
+                    });
                     match reply {
-                        Ok(rbytes) => self.transport.send(&Msg::Reintegrate(rbytes))?,
+                        Ok(rbytes) => {
+                            roundtrips += 1;
+                            if self.slot_gc_interval > 0
+                                && roundtrips % self.slot_gc_interval == 0
+                            {
+                                if let Some(p) = proc.as_mut() {
+                                    let gc = collect_slot_garbage(p, &session);
+                                    stats.slot_gc_runs += 1;
+                                    stats.slot_gc_threads += gc.threads_reclaimed;
+                                    stats.slot_gc_objects += gc.objects_reclaimed;
+                                }
+                            }
+                            self.transport
+                                .send(&Msg::Reintegrate(seal_frame(codec, rbytes)))?
+                        }
                         Err(CloneCloudError::NeedFull(reason)) => {
                             stats.delta_rejects += 1;
                             self.transport.send(&Msg::NeedFull(reason))?
+                        }
+                        Err(e) => self.transport.send(&Msg::Error(e.to_string()))?,
+                    };
+                }
+                Msg::Heartbeat {
+                    base_epoch: _,
+                    digest,
+                    assignments,
+                } => {
+                    stats.heartbeats += 1;
+                    let res = match proc.as_ref() {
+                        Some(p) => session.check_heartbeat(p, digest, &assignments),
+                        None => Err(CloneCloudError::need_full("heartbeat before provision")),
+                    };
+                    match res {
+                        Ok(()) => self.transport.send(&Msg::Ack)?,
+                        Err(e) if e.is_need_full() => {
+                            stats.heartbeat_divergent += 1;
+                            self.transport.send(&Msg::NeedFull(e.to_string()))?
                         }
                         Err(e) => self.transport.send(&Msg::Error(e.to_string()))?,
                     };
@@ -222,6 +282,10 @@ pub struct NodeManager<T: Transport> {
     pub total: TransferBytes,
     /// Set by [`NodeManager::negotiate`]: both peers speak delta.
     delta_negotiated: bool,
+    /// Set by [`NodeManager::negotiate`]: the agreed frame codec.
+    codec: Codec,
+    /// The peer's protocol revision from its `Hello` (0 = never seen).
+    peer_proto: u16,
 }
 
 impl<T: Transport> NodeManager<T> {
@@ -230,25 +294,37 @@ impl<T: Transport> NodeManager<T> {
             transport,
             total: TransferBytes::default(),
             delta_negotiated: false,
+            codec: Codec::None,
+            peer_proto: 0,
         }
     }
 
     /// Negotiate protocol capabilities. Returns whether delta capsules
-    /// may flow on this channel; a peer that answers `Error` (pre-v3) is
-    /// treated as full-capture-only rather than a failure.
+    /// may flow on this channel (the frame codec lands in
+    /// [`NodeManager::negotiated_codec`]); a peer that answers `Error`
+    /// (pre-v3) is treated as full-capture-only rather than a failure.
     pub fn negotiate(&mut self) -> Result<bool> {
         self.transport.send(&Msg::Hello {
             proto: PROTO_VERSION,
             delta: true,
+            caps: SUPPORTED_CAPS,
         })?;
-        self.delta_negotiated = match self.transport.recv()?.0 {
-            Msg::Hello { proto, delta } => super::protocol::delta_agreed(proto, delta),
+        match self.transport.recv()?.0 {
+            Msg::Hello { proto, delta, caps } => {
+                self.peer_proto = proto;
+                self.delta_negotiated = super::protocol::delta_agreed(proto, delta);
+                self.codec = codec_agreed(proto, caps);
+            }
             // A peer that answers Error instead of Hello doesn't do
-            // capability negotiation; stay on full captures. (A peer so
-            // old it can't even *decode* Hello drops the transport, which
-            // surfaces as the recv error above — callers treat a failed
-            // negotiation as fatal for the connection, as they should.)
-            Msg::Error(_) => false,
+            // capability negotiation; stay on full, uncompressed frames.
+            // (A peer so old it can't even *decode* Hello drops the
+            // transport, which surfaces as the recv error above —
+            // callers treat a failed negotiation as fatal for the
+            // connection, as they should.)
+            Msg::Error(_) => {
+                self.delta_negotiated = false;
+                self.codec = Codec::None;
+            }
             other => {
                 return Err(CloneCloudError::Transport(format!(
                     "expected Hello, got {other:?}"
@@ -263,10 +339,26 @@ impl<T: Transport> NodeManager<T> {
         self.delta_negotiated
     }
 
+    /// The frame codec [`NodeManager::negotiate`] agreed on.
+    pub fn negotiated_codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// The protocol revision this session effectively speaks (the
+    /// min-version agreement; `PROTO_VERSION` before any `Hello`).
+    pub fn negotiated_proto(&self) -> u16 {
+        if self.peer_proto == 0 {
+            PROTO_VERSION
+        } else {
+            self.peer_proto.min(PROTO_VERSION)
+        }
+    }
+
     /// Re-Hello the peer with `delta = false` (the driver's session
     /// cannot merge reverse deltas, so the clone must stop emitting
-    /// them). Best effort: a transport failure here will resurface on
-    /// the next real call anyway.
+    /// them). The codec survives — compression is orthogonal to deltas.
+    /// Best effort: a transport failure here will resurface on the next
+    /// real call anyway.
     pub fn renegotiate_off(&mut self) {
         if !self.delta_negotiated {
             return;
@@ -275,10 +367,44 @@ impl<T: Transport> NodeManager<T> {
         let sent = self.transport.send(&Msg::Hello {
             proto: PROTO_VERSION,
             delta: false,
+            caps: SUPPORTED_CAPS,
         });
         if sent.is_ok() {
             let _ = self.transport.recv(); // consume the peer's Hello reply
         }
+    }
+
+    /// Probe the clone's session baseline with a digest-only heartbeat
+    /// (plus any pending MID assignments). `Divergent` means the clone
+    /// answered `NeedFull`: the local baseline is dropped here, so the
+    /// next capture goes out full instead of as a doomed delta.
+    pub fn heartbeat(&mut self, sess: &mut MobileSession) -> Result<HeartbeatOutcome> {
+        // Heartbeat is a v4 frame: never send it to a peer whose
+        // negotiated revision cannot decode it (tag error would kill
+        // the whole session, not just the probe). Delta negotiation
+        // already implies v4 (`DELTA_MIN_PROTO`), so this is
+        // belt-and-braces against future skew in either constant.
+        if !self.delta_negotiated
+            || self.negotiated_proto() < super::protocol::COMPRESS_MIN_PROTO
+        {
+            return Ok(HeartbeatOutcome::Unsupported);
+        }
+        let transport = &mut self.transport;
+        super::protocol::drive_heartbeat(sess, |base_epoch, digest, assignments| {
+            transport.send(&Msg::Heartbeat {
+                base_epoch,
+                digest,
+                assignments: assignments.to_vec(),
+            })?;
+            match transport.recv()?.0 {
+                Msg::Ack => Ok(()),
+                Msg::NeedFull(reason) => Err(CloneCloudError::NeedFull(reason)),
+                Msg::Error(e) => Err(CloneCloudError::Transport(format!("clone error: {e}"))),
+                other => Err(CloneCloudError::Transport(format!(
+                    "expected heartbeat reply, got {other:?}"
+                ))),
+            }
+        })
     }
 
     fn expect_ack(&mut self) -> Result<()> {

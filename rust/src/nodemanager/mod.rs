@@ -21,7 +21,11 @@ pub use gateway::{serve_farm, serve_farm_session};
 pub use manager::{
     execute_migration, CloneServeStats, CloneServer, NodeManager, TransferBytes,
 };
-pub use protocol::{program_hash, Msg, PROTO_VERSION};
+pub use protocol::{
+    codec_agreed, drive_heartbeat, open_frame, patch_frame_payload, program_hash, seal_frame,
+    seal_frame_keep_head, Codec, HeartbeatOutcome, Msg, CAP_CODEC_LZ, PROTO_VERSION,
+    SUPPORTED_CAPS,
+};
 pub use transport::{InProcTransport, TcpEndpoint, TcpTransport, Transport};
 
 #[cfg(test)]
@@ -197,6 +201,84 @@ end
         assert_eq!(stats.migrations as i64, ROUNDS);
         assert_eq!(stats.delta_migrations as i64, ROUNDS - 1);
         assert_eq!(stats.delta_rejects, 0);
+    }
+
+    /// Wire path with the negotiated codec: frames ride compressed
+    /// (wire < raw), results stay bit-identical, and a digest heartbeat
+    /// round-trips as `Ack` while the baselines agree.
+    #[test]
+    fn wire_compressed_session_and_heartbeat() {
+        use crate::config::NetworkProfile;
+        use crate::exec::{delta_workload_expected, delta_workload_src, run_distributed_session};
+        use crate::migration::MobileSession;
+
+        const ROUNDS: i64 = 5;
+        let program = Arc::new(assemble(&delta_workload_src(ROUNDS, 2_048)).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let main = program.entry().unwrap();
+
+        let (phone_t, clone_t) = InProcTransport::pair();
+        let srv_prog = program.clone();
+        let server = std::thread::spawn(move || {
+            let srv = CloneServer::new(
+                clone_t,
+                srv_prog,
+                CostParams::default(),
+                Box::new(NodeEnv::with_rust_compute),
+            );
+            srv.serve().unwrap()
+        });
+
+        let mut nm = NodeManager::new(phone_t);
+        let delta = nm.negotiate().unwrap();
+        assert!(delta);
+        assert_eq!(nm.negotiated_codec(), Codec::Lz, "same-build peers talk LZ");
+        assert_eq!(nm.negotiated_proto(), PROTO_VERSION);
+        nm.provision(&program, 200, 5).unwrap();
+
+        let template = build_template(&program, 200, 5);
+        let mut phone = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        );
+        let mut session = MobileSession::new(delta);
+        let out = run_distributed_session(
+            &mut phone,
+            &mut nm,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+        )
+        .unwrap();
+        assert_eq!(out.migrations as i64, ROUNDS);
+        assert_eq!(out.delta_fallbacks, 0);
+        assert!(
+            out.transfer.up < out.raw_up && out.transfer.down < out.raw_down,
+            "sealed frames shrank the wire: {}/{} up, {}/{} down",
+            out.transfer.up,
+            out.raw_up,
+            out.transfer.down,
+            out.raw_down
+        );
+        assert_eq!(
+            phone.statics[main.class.0 as usize][1].as_int(),
+            Some(delta_workload_expected(ROUNDS))
+        );
+
+        // Digest heartbeat: both baselines describe the same state.
+        assert_eq!(
+            nm.heartbeat(&mut session).unwrap(),
+            super::HeartbeatOutcome::Coherent
+        );
+
+        nm.shutdown().unwrap();
+        let stats = server.join().unwrap();
+        assert_eq!(stats.migrations as i64, ROUNDS);
+        assert_eq!(stats.heartbeats, 1);
+        assert_eq!(stats.heartbeat_divergent, 0);
     }
 
     /// Hello/Hello negotiation arms delta capsules on both ends.

@@ -5,27 +5,246 @@
 //! cloud over a single ... transport channel"): provisioning, file-system
 //! synchronization, thread migration, and reintegration.
 
+use std::borrow::Cow;
+
 use crate::error::{CloneCloudError, Result};
 use crate::util::bytes::{WireReader, WireWriter};
+use crate::util::compress;
 use crate::vfs::SimFs;
 
-/// Protocol revision spoken by this build. v3 adds `Hello` capability
-/// negotiation and the delta-migration frames; `Migrate`/`Reintegrate`
+/// Protocol revision spoken by this build. v3 added `Hello` capability
+/// negotiation and the delta-migration frames; v4 adds the capability
+/// **bitmap** to `Hello` (codec flags), the digest `Heartbeat` frame,
+/// and folds statics into the session digest. `Migrate`/`Reintegrate`
 /// payloads may carry delta capsules only after both peers `Hello` with
-/// `delta = true` (older peers never send `Hello`, so they are never
-/// offered deltas).
-pub const PROTO_VERSION: u16 = 3;
+/// `delta = true`, and compressed frames only after both advertised a
+/// common codec bit (older peers never send `Hello`, so they are
+/// offered neither).
+///
+/// Skew rules: the caps bitmap rides `Hello` only when its `proto`
+/// field is >= 4, and responders echo the *negotiated* (min) revision,
+/// so a v4 responder interoperates with a v3 initiator byte-for-byte.
+/// A v4 *initiator* against a frozen v3 responder drops at the first
+/// Hello (the v3 decoder demands exact length) — the same
+/// fatal-connection story already documented for pre-v3 peers.
+pub const PROTO_VERSION: u16 = 4;
 
-/// Lowest protocol revision that understands delta capsules. Both peers
-/// agree on `min(theirs, ours)`, so a future-version peer and a v3 peer
-/// still land on the same answer (checking `proto >= PROTO_VERSION` on
-/// each side would let version skew arm exactly one end).
-pub const DELTA_MIN_PROTO: u16 = 3;
+/// Lowest protocol revision that understands *this build's* delta
+/// capsules. Both peers agree on `min(theirs, ours)`, so version skew
+/// can never arm exactly one end. v4 (not v3) because the canonical
+/// session digest now covers app statics: a v3 peer computes digests
+/// over a different domain, so a mixed v3/v4 pairing would reject every
+/// delta — negotiating full-captures-only is strictly better.
+pub const DELTA_MIN_PROTO: u16 = 4;
+
+/// Lowest protocol revision that understands compressed frames and the
+/// digest heartbeat.
+pub const COMPRESS_MIN_PROTO: u16 = 4;
 
 /// The delta decision both Hello peers compute: the negotiated revision
 /// is the minimum of the two, and it must know delta capsules.
 pub fn delta_agreed(peer_proto: u16, peer_delta: bool) -> bool {
     peer_delta && peer_proto.min(PROTO_VERSION) >= DELTA_MIN_PROTO
+}
+
+// ---------------------------------------------------------------------------
+// Capability bitmap + negotiated frame codec
+// ---------------------------------------------------------------------------
+
+/// Capability bit: the peer accepts LZ-compressed frames
+/// ([`crate::util::compress`]).
+pub const CAP_CODEC_LZ: u32 = 1 << 0;
+
+/// Every capability bit this build advertises in its `Hello`.
+pub const SUPPORTED_CAPS: u32 = CAP_CODEC_LZ;
+
+/// The frame codec a session negotiated. `None` is always legal; `Lz`
+/// flows only after both `Hello`s carried [`CAP_CODEC_LZ`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Codec {
+    #[default]
+    None,
+    Lz,
+}
+
+impl Codec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::Lz => "lz",
+        }
+    }
+}
+
+/// The codec decision both Hello peers compute, symmetric like
+/// [`delta_agreed`]: min-version agreement plus the intersection of the
+/// two capability bitmaps. Invariant: **unknown flag bits are ignored,
+/// never rejected** — masking with our own supported set is the entire
+/// forward-compatibility story, so a future peer advertising bits we do
+/// not know still lands on the common subset.
+pub fn codec_agreed(peer_proto: u16, peer_caps: u32) -> Codec {
+    if peer_proto.min(PROTO_VERSION) >= COMPRESS_MIN_PROTO && peer_caps & CAP_CODEC_LZ != 0 {
+        Codec::Lz
+    } else {
+        Codec::None
+    }
+}
+
+/// Outcome of a digest heartbeat, as seen by the mobile endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeartbeatOutcome {
+    /// The channel cannot carry heartbeats (no negotiation, no baseline).
+    Unsupported,
+    /// Both baselines describe the same state; deltas are safe.
+    Coherent,
+    /// The peer answered `NeedFull`: the baseline is gone/diverged and
+    /// the sender's cache was dropped — the next capture is full.
+    Divergent,
+}
+
+/// Shared mobile-side heartbeat driver: fetch the session baseline, run
+/// the channel-specific probe (wire exchange, farm worker round, or
+/// in-process check), and map its `Result` onto the session cache — a
+/// coherent probe clears the delivered assignments and restarts the
+/// idle clock; a `NeedFull` drops the baseline so the next capture goes
+/// out full. Every `CloneChannel::heartbeat` impl goes through here, so
+/// the cache protocol lives in exactly one place.
+pub fn drive_heartbeat<F>(
+    session: &mut crate::migration::MobileSession,
+    probe: F,
+) -> Result<HeartbeatOutcome>
+where
+    F: FnOnce(u64, u64, &[(u64, u64)]) -> Result<()>,
+{
+    let (base_epoch, digest) = match session.baseline_info() {
+        Some(x) => x,
+        None => return Ok(HeartbeatOutcome::Unsupported),
+    };
+    match probe(base_epoch, digest, session.pending_assignments()) {
+        Ok(()) => {
+            session.mark_coherent();
+            Ok(HeartbeatOutcome::Coherent)
+        }
+        Err(e) if e.is_need_full() => {
+            session.drop_baseline();
+            Ok(HeartbeatOutcome::Divergent)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame layer: self-describing compressed payload container
+// ---------------------------------------------------------------------------
+
+/// Magic for a compressed `Migrate`/`Reintegrate` payload ("CCZF" =
+/// CloneCloud Z-frame). Distinct from both capsule magics ("CCHP" full /
+/// "CCDP" delta), so `open_frame` can always tell a sealed frame from a
+/// raw capsule without out-of-band state.
+pub(crate) const FRAME_MAGIC: u32 = 0x4343_5A46;
+
+/// Codec id inside a sealed frame (only LZ exists; `Codec::None`
+/// payloads are never sealed).
+const FRAME_CODEC_LZ: u8 = 1;
+
+/// Sealed-frame header size: magic (4) + codec id (1) + raw length (4)
+/// + preserved-head length (2).
+const FRAME_HEADER: usize = 11;
+
+/// Seal a capsule payload for the wire under the negotiated codec.
+/// Identity when the codec is `None` **or** when compression does not
+/// shrink the payload (incompressible input rides raw) — the receiver
+/// dispatches on the frame magic either way.
+pub fn seal_frame(codec: Codec, raw: Vec<u8>) -> Vec<u8> {
+    seal_frame_keep_head(codec, raw, 0)
+}
+
+/// Like [`seal_frame`], but the first `head` bytes of the payload ride
+/// **uncompressed** inside the container, so a fixed-offset field in
+/// that range (the capsule's clock stamp) can be patched into the
+/// sealed frame afterwards via [`patch_frame_payload`] — without a
+/// second compression pass.
+pub fn seal_frame_keep_head(codec: Codec, raw: Vec<u8>, head: usize) -> Vec<u8> {
+    if codec == Codec::None {
+        return raw;
+    }
+    let head = head.min(raw.len());
+    let body = compress::compress(&raw[head..]);
+    if body.len() + head + FRAME_HEADER >= raw.len() {
+        return raw; // incompressible: passthrough
+    }
+    let mut w = WireWriter::with_capacity(body.len() + head + FRAME_HEADER);
+    w.put_u32(FRAME_MAGIC);
+    w.put_u8(FRAME_CODEC_LZ);
+    w.put_u32(raw.len() as u32);
+    w.put_u16(head as u16);
+    let mut out = w.into_vec();
+    out.extend_from_slice(&raw[..head]);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Open a wire payload: decompress a sealed frame (preserved head +
+/// compressed tail), pass a raw capsule through untouched. Strict once
+/// the frame magic matches — a truncated header, unknown codec id, or
+/// any decompression defect is an error.
+pub fn open_frame(bytes: &[u8]) -> Result<Cow<'_, [u8]>> {
+    if bytes.len() < 4 {
+        return Ok(Cow::Borrowed(bytes));
+    }
+    let magic = u32::from_be_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    if magic != FRAME_MAGIC {
+        return Ok(Cow::Borrowed(bytes));
+    }
+    let mut r = WireReader::new(&bytes[4..]);
+    let codec = r.get_u8()?;
+    if codec != FRAME_CODEC_LZ {
+        return Err(CloneCloudError::Wire(format!(
+            "unknown frame codec id {codec}"
+        )));
+    }
+    let raw_len = r.get_u32()? as usize;
+    let head_len = r.get_u16()? as usize;
+    if head_len > raw_len || FRAME_HEADER + head_len > bytes.len() {
+        return Err(CloneCloudError::Wire(format!(
+            "sealed frame head {head_len} exceeds raw length {raw_len} or frame size"
+        )));
+    }
+    let mut raw = Vec::with_capacity(raw_len.min(1 << 20));
+    raw.extend_from_slice(&bytes[FRAME_HEADER..FRAME_HEADER + head_len]);
+    let tail = compress::decompress(&bytes[FRAME_HEADER + head_len..], raw_len - head_len)?;
+    raw.extend_from_slice(&tail);
+    Ok(Cow::Owned(raw))
+}
+
+/// Overwrite `patch` at `offset` of the frame's *payload* — through the
+/// container header when the frame is sealed (the range must then fall
+/// inside the preserved head), directly when it is raw. This is how the
+/// driver stamps the post-transfer clock into an already-sealed frame.
+pub fn patch_frame_payload(wire: &mut [u8], offset: usize, patch: &[u8]) -> Result<()> {
+    let base = if wire.len() >= 4
+        && u32::from_be_bytes([wire[0], wire[1], wire[2], wire[3]]) == FRAME_MAGIC
+    {
+        if wire.len() < FRAME_HEADER {
+            return Err(CloneCloudError::Wire("truncated sealed frame header".into()));
+        }
+        let head_len = u16::from_be_bytes([wire[9], wire[10]]) as usize;
+        if offset + patch.len() > head_len {
+            return Err(CloneCloudError::Wire(format!(
+                "patch at {offset}..{} outside the sealed frame's {head_len}-byte head",
+                offset + patch.len()
+            )));
+        }
+        FRAME_HEADER
+    } else {
+        0
+    };
+    let start = base + offset;
+    if start + patch.len() > wire.len() {
+        return Err(CloneCloudError::Wire("patch outside the frame".into()));
+    }
+    wire[start..start + patch.len()].copy_from_slice(patch);
+    Ok(())
 }
 
 /// Protocol messages.
@@ -51,13 +270,33 @@ pub enum Msg {
     Error(String),
     /// Tear down the clone.
     Shutdown,
-    /// Capability negotiation (v3). The phone sends its protocol version
-    /// and whether it speaks delta capsules; the clone answers with its
-    /// own `Hello`. Deltas flow only when both said `delta = true`.
-    Hello { proto: u16, delta: bool },
+    /// Capability negotiation (v3, bitmap since v4). The phone sends its
+    /// protocol version, whether it speaks delta capsules, and its
+    /// capability bitmap (codec flags); the clone answers with its own
+    /// `Hello` carrying the *negotiated* (min) revision. Deltas flow
+    /// only when both said `delta = true`; compressed frames only when
+    /// both bitmaps share a codec bit. Unknown bits MUST be ignored,
+    /// never rejected. On the wire the bitmap is present only when
+    /// `proto >= 4` (a v3-shaped `Hello` has no caps field; it decodes
+    /// as `caps = 0`), so a v4 responder stays byte-compatible with v3
+    /// initiators.
+    Hello { proto: u16, delta: bool, caps: u32 },
     /// The clone rejected a delta capsule (no/incoherent baseline); the
     /// phone must resend the migration as a full capture.
     NeedFull(String),
+    /// Digest-only liveness probe for the session baseline (v4): the
+    /// mobile endpoint sends its baseline epoch + canonical digest after
+    /// an idle interval, piggybacking any pending MID assignments. A
+    /// coherent clone answers `Ack`; a divergent/slotless one answers
+    /// `NeedFull`, pre-arming a full capture *before* a doomed delta is
+    /// built and shipped.
+    Heartbeat {
+        base_epoch: u64,
+        digest: u64,
+        /// (clone id, assigned mobile id) pairs from the last reverse
+        /// merge (same bookkeeping a forward delta would carry).
+        assignments: Vec<(u64, u64)>,
+    },
 }
 
 impl Msg {
@@ -97,14 +336,33 @@ impl Msg {
                 w.put_str(e);
             }
             Msg::Shutdown => w.put_u8(6),
-            Msg::Hello { proto, delta } => {
+            Msg::Hello { proto, delta, caps } => {
                 w.put_u8(7);
                 w.put_u16(*proto);
                 w.put_u8(u8::from(*delta));
+                // The caps bitmap exists only from v4 on; a Hello
+                // stamped with an older revision keeps the v3 shape.
+                if *proto >= COMPRESS_MIN_PROTO {
+                    w.put_u32(*caps);
+                }
             }
             Msg::NeedFull(reason) => {
                 w.put_u8(8);
                 w.put_str(reason);
+            }
+            Msg::Heartbeat {
+                base_epoch,
+                digest,
+                assignments,
+            } => {
+                w.put_u8(9);
+                w.put_u64(*base_epoch);
+                w.put_u64(*digest);
+                w.put_u32(assignments.len() as u32);
+                for (cid, mid) in assignments {
+                    w.put_u64(*cid);
+                    w.put_u64(*mid);
+                }
             }
         }
         w.into_vec()
@@ -134,11 +392,34 @@ impl Msg {
             4 => Msg::Ack,
             5 => Msg::Error(r.get_str()?),
             6 => Msg::Shutdown,
-            7 => Msg::Hello {
-                proto: r.get_u16()?,
-                delta: r.get_u8()? != 0,
-            },
+            7 => {
+                let proto = r.get_u16()?;
+                let delta = r.get_u8()? != 0;
+                let caps = if proto >= COMPRESS_MIN_PROTO {
+                    r.get_u32()?
+                } else {
+                    0
+                };
+                Msg::Hello { proto, delta, caps }
+            }
             8 => Msg::NeedFull(r.get_str()?),
+            9 => {
+                let base_epoch = r.get_u64()?;
+                let digest = r.get_u64()?;
+                let n = r.get_u32()? as usize;
+                let n = r.checked_count(n, 16)?;
+                let mut assignments = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let cid = r.get_u64()?;
+                    let mid = r.get_u64()?;
+                    assignments.push((cid, mid));
+                }
+                Msg::Heartbeat {
+                    base_epoch,
+                    digest,
+                    assignments,
+                }
+            }
             t => return Err(CloneCloudError::Transport(format!("bad message tag {t}"))),
         };
         if !r.is_done() {
@@ -194,12 +475,19 @@ mod tests {
             Msg::Hello {
                 proto: PROTO_VERSION,
                 delta: true,
+                caps: SUPPORTED_CAPS,
             },
             Msg::Hello {
                 proto: 2,
                 delta: false,
+                caps: 0,
             },
             Msg::NeedFull("baseline digest mismatch".into()),
+            Msg::Heartbeat {
+                base_epoch: 12,
+                digest: 0xFEED_FACE,
+                assignments: vec![(100, 1), (101, 2)],
+            },
         ];
         for m in msgs {
             assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
@@ -209,7 +497,7 @@ mod tests {
     /// Generate an arbitrary protocol message: random payload sizes
     /// (including empty frames), random file sets, random strings.
     fn gen_msg(rng: &mut crate::util::rng::Rng) -> Msg {
-        match rng.index(9) {
+        match rng.index(10) {
             0 => Msg::Provision {
                 zygote_objects: rng.next_u64() as u32,
                 zygote_seed: rng.next_u64(),
@@ -240,15 +528,35 @@ mod tests {
                 let s: String = (0..n).map(|_| (b'a' + rng.byte() % 26) as char).collect();
                 Msg::Error(s)
             }
-            6 => Msg::Hello {
-                proto: rng.next_u64() as u16,
-                delta: rng.chance(0.5),
-            },
+            6 => {
+                let proto = rng.next_u64() as u16;
+                Msg::Hello {
+                    proto,
+                    delta: rng.chance(0.5),
+                    // Arbitrary bits, including ones this build does not
+                    // know: the bitmap invariant says they must survive
+                    // the codec untouched and be ignored by negotiation.
+                    // Pre-v4 Hellos have no caps field on the wire, so
+                    // only `caps = 0` round-trips for them.
+                    caps: if proto >= COMPRESS_MIN_PROTO {
+                        rng.next_u64() as u32
+                    } else {
+                        0
+                    },
+                }
+            }
             7 => {
                 let n = rng.index(64);
                 let s: String = (0..n).map(|_| (b'a' + rng.byte() % 26) as char).collect();
                 Msg::NeedFull(s)
             }
+            8 => Msg::Heartbeat {
+                base_epoch: rng.next_u64(),
+                digest: rng.next_u64(),
+                assignments: (0..rng.index(5))
+                    .map(|_| (rng.next_u64(), rng.next_u64()))
+                    .collect(),
+            },
             _ => Msg::Shutdown,
         }
     }
@@ -308,6 +616,190 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn negotiation_is_symmetric_and_ignores_unknown_bits() {
+        // Same-build peers agree on LZ.
+        assert_eq!(codec_agreed(PROTO_VERSION, SUPPORTED_CAPS), Codec::Lz);
+        // Unknown high bits are ignored, never rejected.
+        assert_eq!(codec_agreed(PROTO_VERSION, 0xFFFF_FFFF), Codec::Lz);
+        assert_eq!(codec_agreed(PROTO_VERSION, !SUPPORTED_CAPS), Codec::None);
+        // A pre-v4 peer never gets compressed frames, whatever it waves.
+        assert_eq!(codec_agreed(3, SUPPORTED_CAPS), Codec::None);
+        // A future peer lands on our revision's answer.
+        assert_eq!(codec_agreed(u16::MAX, SUPPORTED_CAPS | 0xF0), Codec::Lz);
+        // Delta requires the v4 digest domain (statics included) on
+        // both ends; a v3 peer negotiates full-captures-only.
+        assert!(delta_agreed(PROTO_VERSION, true));
+        assert!(!delta_agreed(3, true), "v3 digests are incomparable");
+    }
+
+    /// A v3-shaped Hello (no caps field) decodes on a v4 build, and a
+    /// min-revision reply to it re-encodes in the v3 shape — the wire
+    /// compatibility the responder side promises.
+    #[test]
+    fn v3_shaped_hello_stays_wire_compatible() {
+        let mut w = WireWriter::new();
+        w.put_u8(7);
+        w.put_u16(3);
+        w.put_u8(1);
+        let v3_bytes = w.into_vec();
+        let decoded = Msg::decode(&v3_bytes).unwrap();
+        assert_eq!(
+            decoded,
+            Msg::Hello {
+                proto: 3,
+                delta: true,
+                caps: 0
+            }
+        );
+        // The responder echoes the negotiated (min) revision: the
+        // encoding must match what a v3 decoder expects, byte for byte.
+        let reply = Msg::Hello {
+            proto: 3,
+            delta: false,
+            caps: 0,
+        };
+        assert_eq!(reply.encode().len(), v3_bytes.len());
+    }
+
+    // ---- frame layer (negotiated compression) ---------------------------
+
+    /// A capsule-shaped payload: zero-heavy body behind a known magic.
+    fn compressible_payload(rng: &mut crate::util::rng::Rng) -> Vec<u8> {
+        let mut b = 0x4343_4850u32.to_be_bytes().to_vec(); // "CCHP"
+        b.extend(std::iter::repeat(0u8).take(512 + rng.index(2048)));
+        b.extend((0..rng.index(64)).map(|_| rng.byte()));
+        b
+    }
+
+    #[test]
+    fn prop_sealed_frames_roundtrip_and_shrink() {
+        use crate::util::prop::{ensure, ensure_eq, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xF4A_3E01,
+                cases: 100,
+            },
+            compressible_payload,
+            |raw| {
+                let sealed = seal_frame(Codec::Lz, raw.clone());
+                ensure(sealed.len() < raw.len(), "compressible frame shrank")?;
+                let opened = open_frame(&sealed).map_err(|e| format!("open: {e}"))?;
+                ensure_eq(opened.into_owned(), raw.clone(), "open(seal(raw))")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_sealed_frame_strict_prefixes_never_open() {
+        use crate::util::prop::{ensure, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xF4A_3E02,
+                cases: 100,
+            },
+            |rng| {
+                let sealed = seal_frame(Codec::Lz, compressible_payload(rng));
+                // Cuts shorter than the magic read as a raw (unsealed)
+                // payload by design; every cut that keeps the magic must
+                // fail to open.
+                let cut = 4 + rng.index(sealed.len() - 4);
+                (sealed, cut)
+            },
+            |(sealed, cut)| ensure(open_frame(&sealed[..*cut]).is_err(), "prefix opened"),
+        );
+    }
+
+    #[test]
+    fn prop_garbage_frames_never_panic() {
+        use crate::util::prop::{forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xF4A_3E03,
+                cases: 300,
+            },
+            |rng| {
+                // Half the cases start from the real frame magic so the
+                // fuzz reaches the container parser, not just the
+                // passthrough.
+                let mut b = if rng.chance(0.5) {
+                    FRAME_MAGIC.to_be_bytes().to_vec()
+                } else {
+                    Vec::new()
+                };
+                let mut tail = vec![0u8; rng.index(256)];
+                rng.fill_bytes(&mut tail);
+                b.extend_from_slice(&tail);
+                b
+            },
+            |bytes| {
+                let _ = open_frame(bytes); // Ok or Err; no panic
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_incompressible_frames_pass_through() {
+        use crate::util::prop::{ensure, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xF4A_3E04,
+                cases: 100,
+            },
+            |rng| {
+                let mut b = vec![0u8; 16 + rng.index(1024)];
+                rng.fill_bytes(&mut b);
+                b
+            },
+            |raw| {
+                // Random bytes do not compress: seal must fall back to
+                // the identity so the wire never grows, and open must
+                // hand the same bytes back untouched.
+                let sealed = seal_frame(Codec::Lz, raw.clone());
+                ensure(sealed == *raw, "incompressible input rode raw")?;
+                let opened = open_frame(&sealed).map_err(|e| format!("open: {e}"))?;
+                ensure(opened.as_ref() == &raw[..], "passthrough intact")
+            },
+        );
+    }
+
+    #[test]
+    fn codec_none_is_identity() {
+        let raw = vec![0u8; 4096];
+        assert_eq!(seal_frame(Codec::None, raw.clone()), raw);
+        assert_eq!(open_frame(&raw).unwrap().into_owned(), raw);
+    }
+
+    /// The preserved-head path: a sealed frame keeps its first bytes
+    /// uncompressed, a patch lands inside them without resealing, and
+    /// the opened payload shows exactly the patched bytes. Patches
+    /// outside the preserved head are refused.
+    #[test]
+    fn sealed_frames_allow_head_patching() {
+        let mut raw = vec![0u8; 2048];
+        for (i, b) in raw.iter_mut().enumerate().take(32) {
+            *b = i as u8; // a distinctive head
+        }
+        let mut wire = seal_frame_keep_head(Codec::Lz, raw.clone(), 19);
+        assert!(wire.len() < raw.len(), "zero-heavy tail still compressed");
+
+        let patch = [0xAA; 8];
+        patch_frame_payload(&mut wire, 11, &patch).unwrap();
+        let mut expect = raw.clone();
+        expect[11..19].copy_from_slice(&patch);
+        assert_eq!(open_frame(&wire).unwrap().into_owned(), expect);
+        assert!(
+            patch_frame_payload(&mut wire, 12, &patch).is_err(),
+            "patch crossing out of the preserved head is refused"
+        );
+
+        // Raw (unsealed) frames patch directly at the payload offset.
+        let mut plain = raw.clone();
+        patch_frame_payload(&mut plain, 11, &patch).unwrap();
+        assert_eq!(plain, expect);
     }
 
     #[test]

@@ -45,6 +45,47 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> Bench
     }
 }
 
+/// Whether the benches should run in CI smoke mode (reduced workloads,
+/// relaxed-but-present assertions): set `CC_BENCH_SMOKE=1`.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("CC_BENCH_SMOKE").is_some()
+}
+
+/// Append one JSON object line to the file named by `CC_BENCH_JSON` (a
+/// no-op when unset). The CI bench-trajectory job collects these lines
+/// into the `BENCH_PR.json` artifact (`jq -s`), so the perf trajectory
+/// is recorded per PR instead of evaporating with the job log. String
+/// labels first, then numeric fields; non-finite numbers are written as
+/// 0 to keep the output valid JSON.
+pub fn emit_json(bench: &str, labels: &[(&str, &str)], fields: &[(&str, f64)]) {
+    let path = match std::env::var_os("CC_BENCH_JSON") {
+        Some(p) => p,
+        None => return,
+    };
+    let mut line = format!("{{\"bench\":\"{bench}\"");
+    for (k, v) in labels {
+        line.push_str(&format!(",\"{k}\":\"{v}\""));
+    }
+    for (k, v) in fields {
+        let v = if v.is_finite() { *v } else { 0.0 };
+        line.push_str(&format!(",\"{k}\":{v}"));
+    }
+    line.push_str("}\n");
+    use std::io::Write;
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path);
+    match file {
+        Ok(mut f) => {
+            if let Err(e) = f.write_all(line.as_bytes()) {
+                eprintln!("emit_json: write {path:?}: {e}");
+            }
+        }
+        Err(e) => eprintln!("emit_json: open {path:?}: {e}"),
+    }
+}
+
 /// Fixed-width table printer for paper-style tables.
 pub struct Table {
     pub title: String,

@@ -101,6 +101,20 @@ impl<'a> WireReader<'a> {
         Ok(s)
     }
 
+    /// Validate an entry count against the bytes actually remaining
+    /// (each entry consumes at least `min_entry_bytes` on the wire), so
+    /// a corrupt or hostile length can never force a huge pre-allocation
+    /// before decoding fails naturally.
+    pub fn checked_count(&self, n: usize, min_entry_bytes: usize) -> Result<usize> {
+        if n > self.remaining() / min_entry_bytes.max(1) {
+            return Err(CloneCloudError::Wire(format!(
+                "count {n} exceeds the {} bytes remaining",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
     pub fn get_u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }

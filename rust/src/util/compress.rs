@@ -1,0 +1,280 @@
+//! Dependency-free frame compression (wire-efficiency layer).
+//!
+//! The offline build environment has no flate2/zstd, so the negotiated
+//! frame codec is hand-rolled: an LZ77-style byte-oriented scheme with a
+//! built-in RLE path (a match at distance 1 is a run). Capture capsules
+//! compress extremely well — zero-heavy arrays, interned-string tables,
+//! repeated section headers — and the codec favors decode simplicity
+//! over ratio: two op kinds, strict bounds checks, deterministic output.
+//!
+//! Stream format (a raw token stream; framing/length live one layer up
+//! in `nodemanager::protocol`):
+//!
+//! * op byte `< 0x80`: a literal run of `op + 1` bytes (1..=128) follows;
+//! * op byte `>= 0x80`: a back-reference of length `(op & 0x7F) + 4`
+//!   (4..=131) at a 2-byte big-endian distance (1..=65535) into the
+//!   already-produced output. Overlapping copies are allowed, so
+//!   distance 1 encodes a run (the RLE fallback).
+//!
+//! Decoding is strict: truncated runs, zero/overlong distances, and any
+//! output-length disagreement with the declared raw length are errors —
+//! a strict prefix of a valid stream never decodes (see the prop tests).
+
+use crate::error::{CloneCloudError, Result};
+
+/// Shortest back-reference worth emitting (a match op costs 3 bytes).
+const MIN_MATCH: usize = 4;
+/// Longest back-reference one op can carry.
+const MAX_MATCH: usize = 131;
+/// Farthest back an op can reach (u16 distance).
+const MAX_DIST: usize = 65_535;
+const HASH_BITS: u32 = 15;
+
+#[inline]
+fn hash4(w: &[u8]) -> usize {
+    let v = u32::from_le_bytes([w[0], w[1], w[2], w[3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+fn flush_literals(out: &mut Vec<u8>, mut lits: &[u8]) {
+    while !lits.is_empty() {
+        let n = lits.len().min(128);
+        out.push((n - 1) as u8);
+        out.extend_from_slice(&lits[..n]);
+        lits = &lits[n..];
+    }
+}
+
+/// Compress `input` into the token stream. Never fails; worst case the
+/// output is `input` plus one literal-run op byte per 128 input bytes
+/// (the frame layer falls back to the raw bytes when compression loses).
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() / 2 + 16);
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i + MIN_MATCH <= input.len() {
+        let h = hash4(&input[i..i + 4]);
+        let cand = table[h];
+        table[h] = i;
+
+        // Best back-reference: the hash candidate, or the distance-1 run
+        // (RLE) — whichever extends further.
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if cand != usize::MAX
+            && i - cand <= MAX_DIST
+            && input[cand..cand + 4] == input[i..i + 4]
+        {
+            let mut l = 4;
+            while i + l < input.len() && l < MAX_MATCH && input[cand + l] == input[i + l] {
+                l += 1;
+            }
+            best_len = l;
+            best_dist = i - cand;
+        }
+        if i > 0 {
+            let b = input[i - 1];
+            let mut l = 0;
+            while i + l < input.len() && l < MAX_MATCH && input[i + l] == b {
+                l += 1;
+            }
+            if l >= MIN_MATCH && l > best_len {
+                best_len = l;
+                best_dist = 1;
+            }
+        }
+
+        if best_len >= MIN_MATCH {
+            flush_literals(&mut out, &input[lit_start..i]);
+            out.push(0x80 | (best_len - MIN_MATCH) as u8);
+            out.extend_from_slice(&(best_dist as u16).to_be_bytes());
+            i += best_len;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, &input[lit_start..]);
+    out
+}
+
+/// Decompress a token stream that must produce exactly `expected_len`
+/// bytes. Any structural defect — truncated literal run, truncated or
+/// out-of-range distance, output over- or under-shooting the declared
+/// length — is a clean `Wire` error, never a panic.
+pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+    // Cap the up-front allocation so a garbage length cannot OOM us.
+    let mut out = Vec::with_capacity(expected_len.min(1 << 20));
+    let mut i = 0usize;
+    while i < input.len() {
+        let op = input[i];
+        i += 1;
+        if op < 0x80 {
+            let n = op as usize + 1;
+            if i + n > input.len() {
+                return Err(CloneCloudError::Wire(format!(
+                    "compressed stream truncated inside a {n}-byte literal run"
+                )));
+            }
+            out.extend_from_slice(&input[i..i + n]);
+            i += n;
+        } else {
+            let len = (op & 0x7F) as usize + MIN_MATCH;
+            if i + 2 > input.len() {
+                return Err(CloneCloudError::Wire(
+                    "compressed stream truncated inside a match distance".into(),
+                ));
+            }
+            let dist = u16::from_be_bytes([input[i], input[i + 1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() {
+                return Err(CloneCloudError::Wire(format!(
+                    "match distance {dist} outside the {} produced bytes",
+                    out.len()
+                )));
+            }
+            let mut k = out.len() - dist;
+            for _ in 0..len {
+                let b = out[k];
+                out.push(b);
+                k += 1;
+            }
+        }
+        if out.len() > expected_len {
+            return Err(CloneCloudError::Wire(format!(
+                "compressed stream produced {} bytes, declared {expected_len}",
+                out.len()
+            )));
+        }
+    }
+    if out.len() != expected_len {
+        return Err(CloneCloudError::Wire(format!(
+            "compressed stream produced {} bytes, declared {expected_len}",
+            out.len()
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, ensure_eq, forall, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        decompress(&compress(data), data.len()).expect("roundtrip")
+    }
+
+    #[test]
+    fn unit_roundtrips() {
+        for data in [
+            Vec::new(),
+            vec![7u8],
+            vec![0u8; 10_000],
+            b"abcabcabcabcabcabc".to_vec(),
+            (0u8..=255).collect::<Vec<_>>(),
+        ] {
+            assert_eq!(roundtrip(&data), data);
+        }
+    }
+
+    #[test]
+    fn runs_compress_hard() {
+        // One 3-byte match op covers at most MAX_MATCH (131) bytes, so
+        // a pure run tops out at ~43.7x — gate on 40x.
+        let data = vec![0u8; 64 * 1024];
+        let c = compress(&data);
+        assert!(
+            c.len() * 40 < data.len(),
+            "RLE path: 64 KiB of zeros -> {} bytes",
+            c.len()
+        );
+        assert_eq!(decompress(&c, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn wrong_declared_length_is_rejected() {
+        let data = b"hello hello hello hello".to_vec();
+        let c = compress(&data);
+        assert!(decompress(&c, data.len() + 1).is_err());
+        assert!(decompress(&c, data.len().saturating_sub(1)).is_err());
+    }
+
+    /// A mixed corpus: random bytes, zero runs, repeated small patterns,
+    /// and text-like content — the shapes capture capsules actually have.
+    fn gen_corpus(rng: &mut Rng) -> Vec<u8> {
+        let n = rng.index(4096);
+        match rng.index(4) {
+            0 => {
+                let mut b = vec![0u8; n];
+                rng.fill_bytes(&mut b);
+                b
+            }
+            1 => vec![rng.byte(); n],
+            2 => {
+                let pat: Vec<u8> = (0..rng.index(8) + 1).map(|_| rng.byte()).collect();
+                (0..n).map(|i| pat[i % pat.len()]).collect()
+            }
+            _ => (0..n).map(|_| b'a' + rng.byte() % 26).collect(),
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        forall(
+            PropConfig {
+                seed: 0xC0_DEC_01,
+                cases: 150,
+            },
+            gen_corpus,
+            |data| ensure_eq(roundtrip(data), data.clone(), "decompress(compress(d))"),
+        );
+    }
+
+    #[test]
+    fn prop_strict_prefixes_never_decode() {
+        // Every op emits at least one output byte, so a strict prefix of
+        // a valid stream either truncates an op or undershoots the
+        // declared raw length — both are errors.
+        forall(
+            PropConfig {
+                seed: 0xC0_DEC_02,
+                cases: 150,
+            },
+            |rng| {
+                let data = gen_corpus(rng);
+                let c = compress(&data);
+                let cut = rng.index(c.len().max(1));
+                (c, cut, data.len())
+            },
+            |(c, cut, raw_len)| {
+                if *raw_len == 0 {
+                    return Ok(()); // empty stream has no strict prefix
+                }
+                ensure(decompress(&c[..*cut], *raw_len).is_err(), "prefix decoded")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_garbage_never_panics() {
+        forall(
+            PropConfig {
+                seed: 0xC0_DEC_03,
+                cases: 300,
+            },
+            |rng| {
+                let mut b = vec![0u8; rng.index(512)];
+                rng.fill_bytes(&mut b);
+                let declared = rng.index(1024);
+                (b, declared)
+            },
+            |(bytes, declared)| {
+                let _ = decompress(bytes, *declared); // Ok or Err; no panic
+                Ok(())
+            },
+        );
+    }
+}

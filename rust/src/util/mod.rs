@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod bytes;
+pub mod compress;
 pub mod json;
 pub mod lazy;
 pub mod prop;
