@@ -17,11 +17,12 @@ use clonecloud::appvm::process::Process;
 use clonecloud::appvm::zygote::build_template;
 use clonecloud::config::{CostParams, NetworkProfile};
 use clonecloud::device::{DeviceSpec, Location};
-use clonecloud::exec::{run_distributed, run_monolithic};
+use clonecloud::exec::{run_distributed_policy, run_monolithic, Decision, PolicyEngine};
 use clonecloud::farm::{
     synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
 };
 use clonecloud::metrics::MetricsSnapshot;
+use clonecloud::migration::MobileSession;
 use clonecloud::util::rng::Rng;
 use clonecloud::vfs::SimFs;
 
@@ -93,13 +94,19 @@ fn main() {
                 .as_int()
                 .expect("mono result");
 
-            // Distributed run through the farm.
+            // Distributed run through the farm, each phone driving its
+            // own runtime policy engine (cold estimator: the static
+            // partition choice offloads, then the measured wifi link
+            // keeps winning).
             let mut p = phone_process(&program, &template, fs);
-            let out = run_distributed(
+            let mut engine = PolicyEngine::auto();
+            let out = run_distributed_policy(
                 &mut p,
                 &mut session,
                 &NetworkProfile::wifi(),
                 &CostParams::default(),
+                &mut MobileSession::disabled(),
+                &mut engine,
             )
             .expect("distributed");
             let got = p.statics[main_m.class.0 as usize][0]
@@ -110,6 +117,27 @@ fn main() {
                 "phone {phone}: farm result must be bit-identical to monolithic"
             );
             session.close();
+            // Each invocation's decision + estimator state, logged next
+            // to the session's negotiated (delta off, wifi) setup —
+            // printed for the first phones only to keep output readable.
+            if phone < 3 {
+                for d in &engine.log {
+                    println!(
+                        "phone {phone} trip {} point {}: {} [{}]",
+                        d.trip,
+                        d.point,
+                        match d.decision {
+                            Decision::Offload => "OFFLOAD",
+                            Decision::Local => "local",
+                        },
+                        d.estimator,
+                    );
+                }
+                println!(
+                    "phone {phone}: delta=off codec=none, estimator after run [{}]",
+                    engine.estimator.describe()
+                );
+            }
             (out.migrations, session.stats.admission_wait_ms)
         }));
     }

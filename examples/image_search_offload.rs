@@ -71,6 +71,7 @@ fn main() {
                 locations: Default::default(),
                 expected_us: entry.expected_ms * 1e3,
                 local_us: entry.local_ms * 1e3,
+                span_costs: Default::default(),
             };
             let (rewritten, _) =
                 rewrite_with_partition(&program, &partition).expect("rewrite");

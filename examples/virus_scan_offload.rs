@@ -16,10 +16,10 @@ use std::sync::Arc;
 use clonecloud::apps::{build_process, App, Size, VirusScan};
 use clonecloud::config::{Config, NetworkProfile};
 use clonecloud::device::Location;
-use clonecloud::exec::{run_distributed_session, run_monolithic};
+use clonecloud::exec::{run_distributed_policy, run_monolithic, Decision, PolicyEngine};
 use clonecloud::migration::MobileSession;
 use clonecloud::nodemanager::{CloneServer, NodeManager, TcpEndpoint, TcpTransport};
-use clonecloud::partitioner::rewrite_with_partition;
+use clonecloud::partitioner::{rewrite_with_partition, PartitionEntry};
 use clonecloud::pipeline::partition_app;
 use clonecloud::runtime::default_backend;
 use clonecloud::util::rng::Rng;
@@ -41,8 +41,15 @@ fn main() {
         report.solve_s * 1e3
     );
     let program = app.program();
-    let (rewritten, _) = rewrite_with_partition(&program, &partition).expect("rewrite");
+    let (rewritten, _points) = rewrite_with_partition(&program, &partition).expect("rewrite");
     let rewritten = Arc::new(rewritten);
+
+    // Runtime policy engine, priced from the partition-DB entry the
+    // offline pipeline would store (per-span local/clone ms); the
+    // rewritten binary itself maps method names to point ids.
+    let entry = PartitionEntry::from_partition(app.name(), &net.name, &rewritten, &partition);
+    let mut engine = PolicyEngine::auto();
+    engine.load_entry(&entry, &rewritten).expect("span prices");
 
     // Clone node: own thread, own transport, own artifacts.
     let ep = TcpEndpoint::bind("127.0.0.1:0").expect("bind");
@@ -105,8 +112,9 @@ fn main() {
     if cfg.heartbeat_idle_ms > 0 {
         session.heartbeat_every(std::time::Duration::from_millis(cfg.heartbeat_idle_ms));
     }
-    let out = run_distributed_session(&mut phone, &mut nm, &net, &cfg.costs, &mut session)
-        .expect("distributed");
+    let out =
+        run_distributed_policy(&mut phone, &mut nm, &net, &cfg.costs, &mut session, &mut engine)
+            .expect("distributed");
     println!(
         "CloneCloud wifi:  {:.2}s virtual  ({})  [{} migration(s), {}B up / {}B down]",
         out.virtual_ms / 1e3,
@@ -114,6 +122,32 @@ fn main() {
         out.migrations,
         out.transfer.up,
         out.transfer.down
+    );
+    // Per-invocation policy decisions + estimator state, next to the
+    // negotiated capability set printed above.
+    for d in &engine.log {
+        println!(
+            "  policy trip {} point {}: {}{} local={} offload_est={}  [{}]",
+            d.trip,
+            d.point,
+            match d.decision {
+                Decision::Offload => "OFFLOAD",
+                Decision::Local => "local",
+            },
+            if d.probe { " (probe)" } else { "" },
+            d.local_ms
+                .map_or_else(|| "?".to_string(), |x| format!("{x:.0}ms")),
+            d.offload_est_ms
+                .map_or_else(|| "?".to_string(), |x| format!("{x:.0}ms")),
+            d.estimator,
+        );
+    }
+    println!(
+        "policy: {} offload / {} local decisions, {} misprediction(s); estimator now [{}]",
+        out.offloads,
+        out.local_fallbacks,
+        out.mispredictions,
+        engine.estimator.describe()
     );
     println!("speedup: {:.2}x", mono_out.virtual_ms / out.virtual_ms);
 

@@ -1,0 +1,295 @@
+//! Adaptive runtime partition policy over a fast→slow→fast network
+//! trace (the PR 4 tentpole's acceptance bench).
+//!
+//! One phone runs a repeat-offload workload while the link sweeps
+//! WiFi → EDGE → WiFi. Three strategies are measured on identical
+//! inputs:
+//!
+//! * `all-local`   — `policy.force = local`: the paper's Local column;
+//! * `all-offload` — `policy.force = offload`: the seed's hardwired
+//!                   always-migrate behavior;
+//! * `adaptive`    — cost-model decisions from the live estimator
+//!                   (EWMA per-byte link times fed by the measured
+//!                   transfers, span priced from a calibration run).
+//!
+//! Gates: the engine offloads on the fast segments and runs locally on
+//! the slow one; end results are bit-identical across all three
+//! strategies; and the adaptive run's total virtual time is strictly
+//! better than either fixed strategy on the mixed trace.
+//!
+//!     cargo bench --bench adaptive_policy
+
+use std::sync::Arc;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::natives::NodeEnv;
+use clonecloud::appvm::process::Process;
+use clonecloud::appvm::zygote::build_template;
+use clonecloud::appvm::{Heap, Program};
+use clonecloud::config::{CostParams, NetworkProfile, PolicyParams};
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::exec::{
+    delta_statics_workload_src, delta_workload_expected, run_distributed_with, Decision,
+    DistOutcome, InlineClone, PolicyEngine, SpanCost,
+};
+use clonecloud::migration::MobileSession;
+use clonecloud::util::bench::{emit_json, smoke_mode, Table};
+use clonecloud::vfs::SimFs;
+
+const ZYGOTE_SEED: u64 = 0xADA9;
+const PAYLOAD: i64 = 12 * 1024;
+const STATICS: usize = 16;
+
+/// Per-round working-set bytes are large enough that the span's phone
+/// cost dominates; the calibrated instruction cost makes the contrast
+/// sharp while keeping wall time tiny (virtual time only).
+fn costs() -> CostParams {
+    CostParams {
+        instr_us: 0.6,
+        suspend_resume_us: 2_000.0,
+        ..CostParams::default()
+    }
+}
+
+struct Trace {
+    /// Segment lengths in migration trips: fast, slow, fast.
+    fast1: usize,
+    slow: usize,
+    fast2: usize,
+}
+
+impl Trace {
+    fn rounds(&self) -> i64 {
+        (self.fast1 + self.slow + self.fast2) as i64
+    }
+
+    fn net_at(&self, trip: usize) -> NetworkProfile {
+        if trip >= self.fast1 && trip < self.fast1 + self.slow {
+            NetworkProfile::edge()
+        } else {
+            NetworkProfile::wifi()
+        }
+    }
+
+    fn is_slow(&self, trip: usize) -> bool {
+        trip >= self.fast1 && trip < self.fast1 + self.slow
+    }
+}
+
+fn make_proc(program: &Arc<Program>, template: &Heap, loc: Location) -> Process {
+    let dev = match loc {
+        Location::Mobile => DeviceSpec::phone_g1(),
+        Location::Clone => DeviceSpec::clone_desktop(),
+    };
+    Process::fork_from_zygote(
+        program.clone(),
+        template,
+        dev,
+        loc,
+        NodeEnv::with_rust_compute(SimFs::new()),
+    )
+}
+
+/// One full run under `engine`; returns the outcome, the final `out`
+/// static, and the engine (for its decision log).
+fn run(
+    program: &Arc<Program>,
+    template: &Heap,
+    trace: &Trace,
+    mut engine: PolicyEngine,
+) -> (DistOutcome, i64, PolicyEngine) {
+    let mut phone = make_proc(program, template, Location::Mobile);
+    let clone = make_proc(program, template, Location::Clone);
+    let mut channel = InlineClone::new(clone, costs()).with_delta();
+    let mut session = MobileSession::new(true);
+    let out = run_distributed_with(
+        &mut phone,
+        &mut channel,
+        |trip| trace.net_at(trip),
+        &costs(),
+        &mut session,
+        &mut engine,
+    )
+    .expect("distributed run");
+    let main = program.entry().unwrap();
+    let got = phone.statics[main.class.0 as usize][1]
+        .as_int()
+        .expect("out static");
+    (out, got, engine)
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let trace = if smoke {
+        Trace { fast1: 6, slow: 4, fast2: 8 }
+    } else {
+        Trace { fast1: 8, slow: 6, fast2: 10 }
+    };
+    let rounds = trace.rounds();
+    let zygote = if smoke { 300 } else { 600 };
+    let expected = delta_workload_expected(rounds);
+
+    let program = Arc::new(
+        assemble(&delta_statics_workload_src(rounds, PAYLOAD, STATICS)).expect("assemble"),
+    );
+    clonecloud::appvm::verifier::verify_program(&program).expect("verify");
+    let template = build_template(&program, zygote, ZYGOTE_SEED);
+
+    println!(
+        "adaptive_policy: {rounds} offload rounds x {PAYLOAD} B spans over a \
+         wifi[{}] -> edge[{}] -> wifi[{}] trace{}",
+        trace.fast1,
+        trace.slow,
+        trace.fast2,
+        if smoke { "  [smoke]" } else { "" }
+    );
+
+    // Fixed strategies first; the forced-local run doubles as the span
+    // calibration for the adaptive engine.
+    let (local, got_local, _) = run(&program, &template, &trace, PolicyEngine::force_local());
+    let (offload, got_offload, _) =
+        run(&program, &template, &trace, PolicyEngine::force_offload());
+
+    let span_local_ms = local.virtual_ms / rounds as f64;
+    let phone_factor = DeviceSpec::phone_g1().cpu_factor;
+    let clone_factor = DeviceSpec::clone_desktop().cpu_factor;
+    let span_clone_ms = span_local_ms * clone_factor / phone_factor;
+
+    let params = PolicyParams {
+        // Trust the most recent trips: the trace shifts by 10x+, and
+        // detection speed matters more than smoothing here.
+        half_life_trips: 0.3,
+        probe_trips: 6,
+        ..PolicyParams::default()
+    };
+    let mut engine = PolicyEngine::from_params(&params).expect("params");
+    engine.set_span(
+        0,
+        SpanCost {
+            local_ms: span_local_ms,
+            clone_ms: span_clone_ms,
+        },
+    );
+    let (adaptive, got_adaptive, engine) = run(&program, &template, &trace, engine);
+
+    let mut table = Table::new(
+        "Fixed vs adaptive strategy over the mixed trace (virtual time)",
+        &[
+            "Strategy", "Virtual(s)", "Offloads", "Local", "Mispred", "Delta", "Wire(KB)",
+        ],
+    );
+    for (name, out) in [
+        ("all-local", &local),
+        ("all-offload", &offload),
+        ("adaptive", &adaptive),
+    ] {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", out.virtual_ms / 1e3),
+            out.offloads.to_string(),
+            out.local_fallbacks.to_string(),
+            out.mispredictions.to_string(),
+            out.delta_roundtrips.to_string(),
+            format!("{:.1}", (out.transfer.up + out.transfer.down) as f64 / 1024.0),
+        ]);
+    }
+    table.print();
+
+    println!("\ndecision log (span local {span_local_ms:.0} ms / clone {span_clone_ms:.0} ms):");
+    for d in &engine.log {
+        println!(
+            "  trip {:>2} on {:<4}: {:<7}{} offload_est={}  [{}]",
+            d.trip,
+            if trace.is_slow(d.trip) { "edge" } else { "wifi" },
+            match d.decision {
+                Decision::Offload => "OFFLOAD",
+                Decision::Local => "local",
+            },
+            if d.probe { " (probe)" } else { "" },
+            d.offload_est_ms
+                .map_or_else(|| "?".to_string(), |x| format!("{x:.0}ms")),
+            d.estimator,
+        );
+    }
+
+    // --- gates ----------------------------------------------------------
+    assert_eq!(got_local, expected, "all-local result");
+    assert_eq!(got_offload, expected, "all-offload result");
+    assert_eq!(got_adaptive, expected, "adaptive result");
+    assert_eq!(local.result, adaptive.result, "bit-identical to all-local");
+    assert_eq!(offload.result, adaptive.result, "bit-identical to all-offload");
+
+    let decisions: Vec<(usize, Decision)> =
+        engine.log.iter().map(|d| (d.trip, d.decision)).collect();
+    assert_eq!(decisions.len(), rounds as usize, "one decision per span");
+    let fast1_offloads = decisions
+        .iter()
+        .filter(|(t, d)| *t < trace.fast1 && *d == Decision::Offload)
+        .count();
+    assert_eq!(
+        fast1_offloads, trace.fast1,
+        "every first-fast-segment trip offloads"
+    );
+    let slow_offloads = decisions
+        .iter()
+        .filter(|(t, d)| trace.is_slow(*t) && *d == Decision::Offload)
+        .count();
+    assert!(
+        slow_offloads <= 2,
+        "slow segment runs locally after at most the boundary trip + one \
+         probe (got {slow_offloads} offloads)"
+    );
+    assert!(
+        slow_offloads < trace.slow,
+        "the slow segment has real local decisions"
+    );
+    let tail: Vec<Decision> = decisions
+        .iter()
+        .rev()
+        .take(2)
+        .map(|&(_, d)| d)
+        .collect();
+    assert!(
+        tail.iter().all(|&d| d == Decision::Offload),
+        "the engine recovers to offloading by the end of the second fast \
+         segment (tail {tail:?})"
+    );
+    assert!(adaptive.mispredictions >= 1, "boundary trips score as wrong");
+
+    let vs_local = local.virtual_ms / adaptive.virtual_ms;
+    let vs_offload = offload.virtual_ms / adaptive.virtual_ms;
+    emit_json(
+        "adaptive_policy",
+        &[("trace", "wifi/edge/wifi")],
+        &[
+            ("local_virtual_ms", local.virtual_ms),
+            ("offload_virtual_ms", offload.virtual_ms),
+            ("adaptive_virtual_ms", adaptive.virtual_ms),
+            ("speedup_vs_local", vs_local),
+            ("speedup_vs_offload", vs_offload),
+            ("adaptive_offloads", adaptive.offloads as f64),
+            ("adaptive_local", adaptive.local_fallbacks as f64),
+            ("adaptive_mispredictions", adaptive.mispredictions as f64),
+        ],
+    );
+
+    assert!(
+        adaptive.virtual_ms < local.virtual_ms,
+        "adaptive ({:.0} ms) must beat all-local ({:.0} ms)",
+        adaptive.virtual_ms,
+        local.virtual_ms
+    );
+    assert!(
+        adaptive.virtual_ms < offload.virtual_ms,
+        "adaptive ({:.0} ms) must beat all-offload ({:.0} ms)",
+        adaptive.virtual_ms,
+        offload.virtual_ms
+    );
+    println!(
+        "\nPASS: adaptive {:.2}s vs all-local {:.2}s ({vs_local:.2}x) and \
+         all-offload {:.2}s ({vs_offload:.2}x), identical results",
+        adaptive.virtual_ms / 1e3,
+        local.virtual_ms / 1e3,
+        offload.virtual_ms / 1e3
+    );
+}

@@ -214,6 +214,20 @@ impl Program {
             .collect()
     }
 
+    /// The migration points a rewritten binary carries, as
+    /// (point id, method) pairs sorted by point id. Empty for an
+    /// unrewritten program. The runtime policy layer treats this as the
+    /// authoritative pid ↔ method map — the binary IS the map.
+    pub fn migration_points(&self) -> Vec<(u32, MRef)> {
+        let mut out: Vec<(u32, MRef)> = self
+            .all_methods()
+            .into_iter()
+            .filter_map(|m| self.method(m).migration_point.map(|pid| (pid, m)))
+            .collect();
+        out.sort_unstable_by_key(|&(pid, _)| pid);
+        out
+    }
+
     pub fn into_shared(self) -> Arc<Program> {
         Arc::new(self)
     }
@@ -275,6 +289,15 @@ mod tests {
         let p = sample();
         assert_eq!(p.all_methods().len(), 2);
         assert_eq!(p.app_methods().len(), 1);
+    }
+
+    #[test]
+    fn migration_points_read_back_sorted() {
+        let mut p = sample();
+        assert!(p.migration_points().is_empty(), "unrewritten binary");
+        let m = p.resolve("A", "main").unwrap();
+        p.method_mut(m).migration_point = Some(7);
+        assert_eq!(p.migration_points(), vec![(7, m)]);
     }
 
     #[test]

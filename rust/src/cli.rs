@@ -8,6 +8,8 @@
 //! clonecloud clone-serve --listen 127.0.0.1:7077 --app virus
 //! clonecloud farm --phones 32 --workers 4 --policy affinity
 //! clonecloud farm --listen 127.0.0.1:7077 --app virus --workers 8
+//! clonecloud policy --db out.json
+//! clonecloud policy --trace wifi,edge,wifi --rounds 12
 //! clonecloud inspect --app behavior
 //! clonecloud help
 //! ```
@@ -18,9 +20,12 @@ use std::sync::Arc;
 
 use crate::apps::{all_apps, build_process, App, BehaviorProfile, ImageSearch, Size, VirusScan};
 use crate::config::{Config, NetworkProfile};
-use crate::device::Location;
+use crate::device::{DeviceSpec, Location};
 use crate::error::{CloneCloudError, Result};
-use crate::exec::{run_distributed_session, run_monolithic, InlineClone};
+use crate::exec::{
+    delta_statics_workload_src, delta_workload_expected, run_distributed_session,
+    run_distributed_with, run_monolithic, Decision, InlineClone, PolicyEngine, SpanCost,
+};
 use crate::farm::{
     synthetic_expected, synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
 };
@@ -44,6 +49,9 @@ COMMANDS:
   clone-serve  run a clone node on a TCP listener (one phone)
   farm         run the multi-tenant clone farm: in-proc demo, or a TCP
                serve-many gateway with --listen
+  policy       dump the partition DB (--db) and/or drive the runtime
+               policy engine across a network trace, printing each
+               invocation's migrate/local decision + estimator state
   inspect      dump an app's program, CFG, and constraint sets
   help         this text
 
@@ -63,6 +71,12 @@ FARM OPTIONS (defaults from the config 'farm' section):
   --policy <round-robin|least-loaded|affinity>
   --phones <n>                   demo mode: concurrent phone sessions
   --iters <n>                    demo mode: clone-side work per session
+
+POLICY OPTIONS (engine tunables from the config 'policy' section):
+  --trace <net,net,...>          network trace segments (default wifi,edge,wifi)
+  --segment <n>                  migration trips per trace segment (default 4)
+  --rounds <n>                   repeat-offload rounds, <= 256 (default 12)
+  --payload <bytes>              per-round working-set bytes (default 4096)
 ";
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
@@ -436,6 +450,176 @@ fn cmd_farm(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Dump the partition database and/or drive the runtime policy engine
+/// live: a repeat-offload workload across a network trace, one decision
+/// (with estimator state) printed per invocation.
+fn cmd_policy(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = load_config(flags)?;
+    if let Some(db_path) = flags.get("db") {
+        let db = PartitionDb::load(Path::new(db_path))?;
+        println!("partition database {db_path}: {} entries", db.len());
+        let mut table = Table::new(
+            "Partition DB (conditions -> chosen partition + span prices)",
+            &[
+                "App",
+                "Network",
+                "Label",
+                "Expected(s)",
+                "Local(s)",
+                "Spans (local/clone ms per call)",
+            ],
+        );
+        for e in db.entries() {
+            let spans = if e.migrate.is_empty() {
+                "-".to_string()
+            } else {
+                e.migrate
+                    .iter()
+                    .enumerate()
+                    .map(|(i, m)| {
+                        format!(
+                            "{m} ({:.1}/{:.1})",
+                            e.span_local_ms.get(i).copied().unwrap_or(0.0),
+                            e.span_clone_ms.get(i).copied().unwrap_or(0.0)
+                        )
+                    })
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            };
+            table.row(vec![
+                e.app.clone(),
+                e.network.clone(),
+                e.label().to_string(),
+                format!("{:.2}", e.expected_ms / 1e3),
+                format!("{:.2}", e.local_ms / 1e3),
+                spans,
+            ]);
+        }
+        table.print();
+        if !flags.contains_key("trace") {
+            return Ok(());
+        }
+    }
+
+    let rounds = flag_usize(flags, "rounds", 12)? as i64;
+    if !(1..=256).contains(&rounds) {
+        return Err(CloneCloudError::Config(
+            "--rounds must be in 1..=256".into(),
+        ));
+    }
+    let payload = flag_usize(flags, "payload", 4096)?.max(2) as i64;
+    let segment = flag_usize(flags, "segment", 4)?.max(1);
+    let trace = flags
+        .get("trace")
+        .map(String::as_str)
+        .unwrap_or("wifi,edge,wifi");
+    let profiles = trace
+        .split(',')
+        .map(|n| {
+            NetworkProfile::by_name(n.trim()).ok_or_else(|| {
+                CloneCloudError::Config(format!("unknown network '{}' in trace", n.trim()))
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let program = Arc::new(crate::appvm::assembler::assemble(
+        &delta_statics_workload_src(rounds, payload, 8),
+    )?);
+    crate::appvm::verifier::verify_program(&program)?;
+    let template = crate::appvm::zygote::build_template(
+        &program,
+        cfg.zygote_objects.min(2_000),
+        cfg.seed,
+    );
+    let fork = |loc: Location| -> crate::appvm::Process {
+        let dev = match loc {
+            Location::Mobile => DeviceSpec::phone_g1(),
+            Location::Clone => DeviceSpec::clone_desktop(),
+        };
+        crate::appvm::Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            dev,
+            loc,
+            crate::appvm::NodeEnv::with_rust_compute(crate::vfs::SimFs::new()),
+        )
+    };
+
+    // Calibration: a forced-local run prices the span for the engine.
+    let mut cal_phone = fork(Location::Mobile);
+    let mut cal_channel = InlineClone::new(fork(Location::Clone), cfg.costs.clone());
+    let cal = run_distributed_with(
+        &mut cal_phone,
+        &mut cal_channel,
+        |_| NetworkProfile::wifi(),
+        &cfg.costs,
+        &mut crate::migration::MobileSession::disabled(),
+        &mut PolicyEngine::force_local(),
+    )?;
+    let local_ms = cal.virtual_ms / rounds as f64;
+    let clone_ms = local_ms * cfg.clone.cpu_factor / cfg.phone.cpu_factor;
+
+    let mut engine = PolicyEngine::from_params(&cfg.policy)?;
+    engine.set_span(0, SpanCost { local_ms, clone_ms });
+    let mut phone = fork(Location::Mobile);
+    let mut channel = InlineClone::new(fork(Location::Clone), cfg.costs.clone());
+    if cfg.delta_migration {
+        channel = channel.with_delta();
+    }
+    let mut session = crate::migration::MobileSession::new(cfg.delta_migration);
+    let profs = profiles.clone();
+    let out = run_distributed_with(
+        &mut phone,
+        &mut channel,
+        |trip| profs[(trip / segment).min(profs.len() - 1)].clone(),
+        &cfg.costs,
+        &mut session,
+        &mut engine,
+    )?;
+
+    println!(
+        "\nlive decisions: span local {local_ms:.1} ms / clone {clone_ms:.1} ms, \
+         trace [{trace}] x {segment} trips/segment"
+    );
+    for d in &engine.log {
+        let net = &profiles[(d.trip / segment).min(profiles.len() - 1)];
+        let fmt = |v: Option<f64>| v.map_or_else(|| "?".to_string(), |x| format!("{x:.0}ms"));
+        println!(
+            "  trip {:>2} on {:<5} point {}: {:<7}{} local={} offload_est={}  [{}]",
+            d.trip,
+            net.name,
+            d.point,
+            match d.decision {
+                Decision::Offload => "OFFLOAD",
+                Decision::Local => "local",
+            },
+            if d.probe { " (probe)" } else { "" },
+            fmt(d.local_ms),
+            fmt(d.offload_est_ms),
+            d.estimator,
+        );
+    }
+    let main = program.entry()?;
+    let got = phone.statics[main.class.0 as usize][1].as_int();
+    let expected = delta_workload_expected(rounds);
+    if got != Some(expected) {
+        return Err(CloneCloudError::migration(format!(
+            "policy run result {got:?} != expected {expected}"
+        )));
+    }
+    println!(
+        "policy run: {:.2}s virtual vs {:.2}s all-local, {} offloads / {} local \
+         ({} mispredictions, {} delta trips), result verified",
+        out.virtual_ms / 1e3,
+        cal.virtual_ms / 1e3,
+        out.offloads,
+        out.local_fallbacks,
+        out.mispredictions,
+        out.delta_roundtrips,
+    );
+    Ok(())
+}
+
 fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
     let app = app_by_name(flags.get("app").map(String::as_str).unwrap_or("virus"))?;
     let program = app.program();
@@ -469,6 +653,16 @@ fn cmd_inspect(flags: &HashMap<String, String>) -> Result<()> {
         cfg_graph.dc_edges().len(),
         cfg_graph.tc_pairs().len()
     );
+    let candidates = crate::partitioner::candidate_points(&program, &cfg_graph);
+    println!(
+        "  conditional-binary candidates ({}): {}",
+        candidates.len(),
+        candidates
+            .iter()
+            .map(|&m| program.method_name(m))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
     Ok(())
 }
 
@@ -495,6 +689,7 @@ pub fn main(args: &[String]) -> i32 {
         "table1" => cmd_table1(&flags),
         "clone-serve" => cmd_clone_serve(&flags),
         "farm" => cmd_farm(&flags),
+        "policy" => cmd_policy(&flags),
         "inspect" => cmd_inspect(&flags),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -568,6 +763,55 @@ mod tests {
         assert_eq!(
             main(&["farm".into(), "--policy".into(), "psychic".into()]),
             1
+        );
+    }
+
+    #[test]
+    fn policy_dump_and_live_trace_run() {
+        let dir = std::env::temp_dir().join(format!("ccpolicy_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("db.json");
+        let mut db = PartitionDb::new();
+        db.put(PartitionEntry {
+            app: "virus".into(),
+            network: "wifi".into(),
+            migrate: vec!["V.scan".into()],
+            expected_ms: 1_000.0,
+            local_ms: 2_000.0,
+            span_local_ms: vec![1.5],
+            span_clone_ms: vec![0.1],
+        });
+        db.save(&path).unwrap();
+        assert_eq!(
+            main(&[
+                "policy".into(),
+                "--db".into(),
+                path.to_string_lossy().into_owned(),
+            ]),
+            0,
+            "db dump"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+
+        assert_eq!(
+            main(&[
+                "policy".into(),
+                "--rounds".into(),
+                "6".into(),
+                "--payload".into(),
+                "64".into(),
+                "--segment".into(),
+                "2".into(),
+                "--trace".into(),
+                "wifi,edge,wifi".into(),
+            ]),
+            0,
+            "live trace"
+        );
+        assert_eq!(
+            main(&["policy".into(), "--trace".into(), "psychic".into()]),
+            1,
+            "unknown trace network rejected"
         );
     }
 

@@ -46,11 +46,24 @@ impl NetworkProfile {
         }
     }
 
+    /// A degraded cellular link (EDGE-class) for the adaptive-policy
+    /// ablations: 600 ms latency, 0.20 / 0.06 Mbps. On this link even a
+    /// delta capsule usually costs more than running the span locally.
+    pub fn edge() -> NetworkProfile {
+        NetworkProfile {
+            name: "edge".into(),
+            latency_ms: 600.0,
+            down_mbps: 0.20,
+            up_mbps: 0.06,
+        }
+    }
+
     /// Lookup by name.
     pub fn by_name(name: &str) -> Option<NetworkProfile> {
         match name {
             "3g" | "threeg" => Some(Self::threeg()),
             "wifi" => Some(Self::wifi()),
+            "edge" => Some(Self::edge()),
             _ => None,
         }
     }
@@ -146,6 +159,42 @@ impl Default for FarmParams {
     }
 }
 
+/// Runtime partition-policy tunables (the `policy` config section; see
+/// `exec::policy`). The `force` override is kept as a string here and
+/// validated by `exec::policy::ForceMode::parse` when an engine is
+/// actually built.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyParams {
+    /// Network-estimator EWMA half-life, in observed transfers: after
+    /// this many roundtrips an old rate estimate has half its weight.
+    pub half_life_trips: f64,
+    /// Hysteresis margin on migrate-vs-local flips (fraction): the
+    /// losing side must win by this factor before the decision changes.
+    pub hysteresis: f64,
+    /// Force one offload probe after this many consecutive local
+    /// decisions, so the estimator keeps feeding from real transfers
+    /// instead of going stale (0 = never probe).
+    pub probe_trips: u64,
+    /// Decision override for ablation: "auto" | "offload" | "local".
+    pub force: String,
+    /// Degrade a failed offload roundtrip to local execution of the
+    /// span (error surfaced in `DistOutcome`) instead of failing the
+    /// whole run.
+    pub degrade_to_local: bool,
+}
+
+impl Default for PolicyParams {
+    fn default() -> Self {
+        PolicyParams {
+            half_life_trips: 2.0,
+            hysteresis: 0.1,
+            probe_trips: 4,
+            force: "auto".into(),
+            degrade_to_local: true,
+        }
+    }
+}
+
 /// Top-level system configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -171,6 +220,9 @@ pub struct Config {
     pub heartbeat_idle_ms: u64,
     /// Clone-farm parameters (multi-tenant serving).
     pub farm: FarmParams,
+    /// Runtime partition-policy parameters (per-invocation
+    /// migrate-vs-local decisions; see `exec::policy`).
+    pub policy: PolicyParams,
 }
 
 impl Default for Config {
@@ -185,6 +237,7 @@ impl Default for Config {
             delta_migration: true,
             heartbeat_idle_ms: 30_000,
             farm: FarmParams::default(),
+            policy: PolicyParams::default(),
         }
     }
 }
@@ -319,6 +372,49 @@ impl Config {
                         }
                     }
                 }
+                "policy" => {
+                    let p = val
+                        .as_obj()
+                        .ok_or_else(|| CloneCloudError::Config("policy must be object".into()))?;
+                    for (pk, pv) in p {
+                        match pk.as_str() {
+                            "half_life_trips" => {
+                                cfg.policy.half_life_trips = pv.as_f64().ok_or_else(|| {
+                                    CloneCloudError::Config("policy.half_life_trips".into())
+                                })?
+                            }
+                            "hysteresis" => {
+                                cfg.policy.hysteresis = pv.as_f64().ok_or_else(|| {
+                                    CloneCloudError::Config("policy.hysteresis".into())
+                                })?
+                            }
+                            "probe_trips" => {
+                                cfg.policy.probe_trips = pv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("policy.probe_trips".into())
+                                })?
+                                    as u64
+                            }
+                            "force" => {
+                                cfg.policy.force = pv
+                                    .as_str()
+                                    .ok_or_else(|| {
+                                        CloneCloudError::Config("policy.force".into())
+                                    })?
+                                    .to_string()
+                            }
+                            "degrade_to_local" => {
+                                cfg.policy.degrade_to_local = pv.as_bool().ok_or_else(|| {
+                                    CloneCloudError::Config("policy.degrade_to_local".into())
+                                })?
+                            }
+                            other => {
+                                return Err(CloneCloudError::Config(format!(
+                                    "unknown policy key '{other}'"
+                                )))
+                            }
+                        }
+                    }
+                }
                 other => {
                     return Err(CloneCloudError::Config(format!(
                         "unknown config key '{other}'"
@@ -410,6 +506,38 @@ mod tests {
 
         let bad = json::parse(r#"{"farm": {"wrokers": 8}}"#).unwrap();
         assert!(Config::from_json(&bad).is_err(), "typo'd farm key rejected");
+    }
+
+    #[test]
+    fn policy_section_overrides_and_validates() {
+        let d = Config::default().policy;
+        assert_eq!(d.half_life_trips, 2.0);
+        assert_eq!(d.force, "auto");
+        assert!(d.degrade_to_local);
+
+        let v = json::parse(
+            r#"{"policy": {"half_life_trips": 1.0, "hysteresis": 0.25,
+                "probe_trips": 0, "force": "local", "degrade_to_local": false}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.policy.half_life_trips, 1.0);
+        assert_eq!(cfg.policy.hysteresis, 0.25);
+        assert_eq!(cfg.policy.probe_trips, 0, "probing can be disabled");
+        assert_eq!(cfg.policy.force, "local");
+        assert!(!cfg.policy.degrade_to_local);
+
+        let bad = json::parse(r#"{"policy": {"hysterisis": 0.2}}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err(), "typo'd policy key rejected");
+    }
+
+    #[test]
+    fn edge_profile_is_strictly_worse_than_threeg() {
+        let e = NetworkProfile::edge();
+        let g = NetworkProfile::threeg();
+        assert_eq!(NetworkProfile::by_name("edge"), Some(e.clone()));
+        assert!(e.latency_ms > g.latency_ms && e.up_mbps < g.up_mbps);
+        assert!(e.transfer_ms(10_000, true) > g.transfer_ms(10_000, true));
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! The CloneCloud distributed run (paper §4, Figure 7).
 //!
 //! The phone process executes the partitioned binary. At each `CcStart`
-//! the policy engine (the partition DB already chose this binary, so the
-//! answer is "migrate") suspends and captures the thread, charges the
-//! uplink for the real capture bytes, and hands off to the clone channel.
-//! The clone executes to `CcStop`, the reverse capture rides the
-//! downlink, and the merge resumes the thread on the phone.
+//! the runtime [`PolicyEngine`] (`exec::policy`) decides migrate-vs-local
+//! for *this* invocation under the *current* (measured) network and
+//! input conditions. A local decision simply continues the thread — the
+//! span runs on the phone at zero capture cost. A migrate decision
+//! suspends and captures the thread, charges the uplink for the real
+//! capture bytes, and hands off to the clone channel; the clone executes
+//! to `CcStop`, the reverse capture rides the downlink, and the merge
+//! resumes the thread on the phone. Every decision and its after-the-fact
+//! score (`offloads`, `local_fallbacks`, `mispredictions`) lands in
+//! [`DistOutcome`].
 //!
 //! Three clone channels: [`InlineClone`] (clone process owned by the
 //! caller — deterministic, used by benches), any
@@ -28,6 +33,7 @@
 
 use crate::appvm::interp::{run_thread, NoHooks, RunExit};
 use crate::appvm::process::Process;
+use crate::appvm::thread::ThreadStatus;
 use crate::appvm::value::Value;
 use crate::config::{CostParams, NetworkProfile};
 use crate::error::{CloneCloudError, Result};
@@ -40,7 +46,15 @@ use crate::nodemanager::{
     NodeManager, TransferBytes, Transport,
 };
 
+use super::policy::{Decision, PolicyEngine};
+
 pub use crate::farm::FarmClone;
+
+/// Approximate wire size of a digest heartbeat probe and its ack: the
+/// virtual roundtrip charged for one heartbeat, which is also the
+/// estimator's measured RTT sample.
+const HEARTBEAT_PROBE_BYTES: u64 = 64;
+const HEARTBEAT_ACK_BYTES: u64 = 16;
 
 /// Where the offloaded span runs.
 pub trait CloneChannel {
@@ -72,6 +86,11 @@ pub trait CloneChannel {
     fn heartbeat(&mut self, _session: &mut MobileSession) -> Result<HeartbeatOutcome> {
         Ok(HeartbeatOutcome::Unsupported)
     }
+
+    /// Report a finished run's policy decision counters to the channel.
+    /// The farm aggregates these across phones; other channels ignore
+    /// them.
+    fn record_policy(&mut self, _offloads: u64, _local: u64, _mispredictions: u64) {}
 }
 
 impl<T: Transport> CloneChannel for NodeManager<T> {
@@ -246,6 +265,24 @@ pub struct DistOutcome {
     /// Baseline divergences a digest heartbeat caught *before* a doomed
     /// delta was built and shipped.
     pub heartbeat_preempts: usize,
+    /// Virtual ms charged for digest-heartbeat roundtrips (the
+    /// estimator's RTT samples).
+    pub heartbeat_ms: f64,
+    /// Policy decisions that migrated the span.
+    pub offloads: usize,
+    /// Policy decisions that ran the span locally (cost-model losses,
+    /// forced-local runs, and degraded channel failures).
+    pub local_fallbacks: usize,
+    /// Decisions the after-the-fact scoring found wrong: decided local
+    /// but the offload estimate beat the measured local time, or decided
+    /// offload but the profiled local cost beat the measured offload
+    /// time.
+    pub mispredictions: usize,
+    /// Channel failures absorbed by degrading the span to local
+    /// execution instead of failing the run.
+    pub channel_errors: usize,
+    /// The most recent degraded channel error, surfaced for reports.
+    pub last_channel_error: Option<String>,
 }
 
 /// Run the partitioned binary on `phone`, off-loading each migration
@@ -264,7 +301,9 @@ pub fn run_distributed<C: CloneChannel>(
 /// Session-aware distributed run: delta migration when `session` is
 /// enabled AND the channel negotiated it. The session may be reused
 /// across runs on the same phone/channel pairing to keep the baseline
-/// cache warm.
+/// cache warm. Every `CcStart` migrates (the seed's static policy) and
+/// channel errors propagate; use [`run_distributed_policy`] for
+/// per-invocation decisions.
 pub fn run_distributed_session<C: CloneChannel>(
     phone: &mut Process,
     channel: &mut C,
@@ -272,7 +311,50 @@ pub fn run_distributed_session<C: CloneChannel>(
     costs: &CostParams,
     session: &mut MobileSession,
 ) -> Result<DistOutcome> {
+    let mut engine = PolicyEngine::legacy_offload();
+    run_distributed_policy(phone, channel, net, costs, session, &mut engine)
+}
+
+/// Policy-driven distributed run over a fixed network profile: the
+/// engine answers migrate/local at every `CcStart`. The engine may be
+/// reused across runs, keeping its link and capsule-size estimates warm
+/// exactly like the session keeps its delta baseline.
+pub fn run_distributed_policy<C: CloneChannel>(
+    phone: &mut Process,
+    channel: &mut C,
+    net: &NetworkProfile,
+    costs: &CostParams,
+    session: &mut MobileSession,
+    engine: &mut PolicyEngine,
+) -> Result<DistOutcome> {
+    let fixed = net.clone();
+    run_distributed_with(phone, channel, |_trip| fixed.clone(), costs, session, engine)
+}
+
+/// The general driver: `net_at(trip)` supplies the link conditions in
+/// effect at each migration-point encounter, so benches and traces can
+/// sweep the network mid-run (a phone walking from WiFi through an EDGE
+/// dead zone and back). The policy decision is made BEFORE any
+/// suspend/capture work — a local decision pays zero capture cost.
+pub fn run_distributed_with<C, N>(
+    phone: &mut Process,
+    channel: &mut C,
+    mut net_at: N,
+    costs: &CostParams,
+    session: &mut MobileSession,
+    engine: &mut PolicyEngine,
+) -> Result<DistOutcome>
+where
+    C: CloneChannel,
+    N: FnMut(usize) -> NetworkProfile,
+{
     let wall0 = std::time::Instant::now();
+    if engine.forces_local() {
+        // Forced-local ablation: nothing will ever be sent, so stand the
+        // clone down up front — an armed channel must not retain delta
+        // state (or emit reverse deltas) for a session that never syncs.
+        session.disable();
+    }
     if session.is_enabled() && !channel.delta_capable() {
         // The peer cannot carry deltas; degrade the session once, loudly
         // in the stats rather than silently per-roundtrip.
@@ -288,25 +370,90 @@ pub fn run_distributed_session<C: CloneChannel>(
     let entry = phone.program.entry()?;
     let tid = phone.spawn_thread(entry, &[])?;
     let mut out = DistOutcome::default();
+    let mut trip = 0usize;
+    // Spans decided local, awaiting their CcStop: (point, clock at the
+    // decision, offload estimate at the decision). Scored after the
+    // fact against the measured local time.
+    let mut local_spans: Vec<(u32, f64, Option<f64>)> = Vec::new();
 
     let result = loop {
         match run_thread(phone, tid, &mut NoHooks, u64::MAX)? {
             RunExit::Completed(v) => break v,
-            RunExit::ReintegrationPoint { .. } => continue, // local span
+            RunExit::ReintegrationPoint { point } => {
+                // An offloaded span reintegrates at the clone; the phone
+                // re-surfaces its CcStop only after the merge, when no
+                // matching local span is pending — so a match here is
+                // always a locally-run span completing.
+                if local_spans.last().map(|s| s.0) == Some(point) {
+                    let (_, start_ms, predicted) = local_spans.pop().expect("matched above");
+                    let actual_ms = phone.clock.now_ms() - start_ms;
+                    if engine.score_local(actual_ms, predicted) {
+                        out.mispredictions += 1;
+                    }
+                }
+                continue;
+            }
             RunExit::OutOfFuel => unreachable!("u64::MAX fuel"),
-            RunExit::MigrationPoint { .. } => {
+            RunExit::MigrationPoint { point } => {
+                let net = net_at(trip);
+                trip += 1;
+
+                // --- policy: decide BEFORE suspend/capture, so a local
+                // decision pays zero capture cost -----------------------
+                if engine.decide(point, session.has_baseline()) == Decision::Local {
+                    out.local_fallbacks += 1;
+                    local_spans.push((
+                        point,
+                        phone.clock.now_ms(),
+                        engine.last_offload_estimate(),
+                    ));
+                    continue;
+                }
+                out.offloads += 1;
+                let span_start_ms = phone.clock.now_ms();
+
                 // Long-idle baseline: probe with a digest heartbeat so a
                 // diverged clone pre-arms `NeedFull` here, before a
-                // doomed delta is built and shipped.
-                if session.heartbeat_due()
-                    && channel.heartbeat(session)? == HeartbeatOutcome::Divergent
-                {
-                    out.heartbeat_preempts += 1;
+                // doomed delta is built and shipped. The probe crosses
+                // the real link: charge one small-frame roundtrip and
+                // feed the estimator's RTT from it.
+                if session.heartbeat_due() {
+                    let outcome = match channel.heartbeat(session) {
+                        Ok(o) => o,
+                        // The probe found a dead channel before anything
+                        // was captured: degrade this span to local, same
+                        // contract as a failed roundtrip.
+                        Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
+                            degrade_to_local(
+                                phone,
+                                tid,
+                                session,
+                                engine,
+                                &mut out,
+                                &mut local_spans,
+                                point,
+                                None,
+                                e,
+                            )?;
+                            continue;
+                        }
+                        Err(e) => return Err(e),
+                    };
+                    if outcome != HeartbeatOutcome::Unsupported {
+                        let rtt = net.transfer_ms(HEARTBEAT_PROBE_BYTES, true)
+                            + net.transfer_ms(HEARTBEAT_ACK_BYTES, false);
+                        phone.clock.charge_ms(rtt);
+                        out.heartbeat_ms += rtt;
+                        engine.observe_rtt(rtt);
+                    }
+                    if outcome == HeartbeatOutcome::Divergent {
+                        out.heartbeat_preempts += 1;
+                    }
                 }
 
-                // --- policy: this binary was picked for offload ---------
                 let (capsule, phases) = migrator.migrate_out_capsule(phone, tid, session)?;
                 absorb_capture_phases(&mut out, &phases);
+                let mut overhead_ms = phases.suspend_ms + phases.capture_ms;
                 let sent_delta = capsule.is_delta();
                 if sent_delta {
                     out.delta_roundtrips += 1;
@@ -314,7 +461,8 @@ pub fn run_distributed_session<C: CloneChannel>(
                     out.full_roundtrips += 1;
                 }
 
-                let fwd = stamp_and_encode(phone, net, &mut out, capsule, codec);
+                let (fwd, up_ms) = stamp_and_encode(phone, &net, &mut out, capsule, codec);
+                engine.observe_forward(fwd.len() as u64, up_ms, sent_delta);
                 let fwd_len = fwd.len() as u64;
                 let (rbytes, transfer) = match channel.roundtrip(fwd) {
                     Ok(ok) => ok,
@@ -328,8 +476,43 @@ pub fn run_distributed_session<C: CloneChannel>(
                         out.full_roundtrips += 1;
                         let (full, phases) = migrator.recapture_full(phone, tid, session)?;
                         absorb_capture_phases(&mut out, &phases);
-                        let fwd = stamp_and_encode(phone, net, &mut out, full, codec);
-                        channel.roundtrip(fwd)?
+                        overhead_ms += phases.capture_ms;
+                        let (fwd, up_ms) =
+                            stamp_and_encode(phone, &net, &mut out, full, codec);
+                        engine.observe_forward(fwd.len() as u64, up_ms, false);
+                        let fwd2_len = fwd.len() as u64;
+                        match channel.roundtrip(fwd) {
+                            Ok(ok) => ok,
+                            Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
+                                degrade_to_local(
+                                    phone,
+                                    tid,
+                                    session,
+                                    engine,
+                                    &mut out,
+                                    &mut local_spans,
+                                    point,
+                                    Some((false, fwd2_len)),
+                                    e,
+                                )?;
+                                continue;
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
+                        degrade_to_local(
+                            phone,
+                            tid,
+                            session,
+                            engine,
+                            &mut out,
+                            &mut local_spans,
+                            point,
+                            Some((sent_delta, fwd_len)),
+                            e,
+                        )?;
+                        continue;
                     }
                     Err(e) => return Err(e),
                 };
@@ -348,17 +531,73 @@ pub fn run_distributed_session<C: CloneChannel>(
                 let down_ms = net.transfer_ms(rbytes.len() as u64, false);
                 phone.clock.charge_ms(down_ms);
                 out.downlink_ms += down_ms;
+                engine.observe_reverse(rbytes.len() as u64, down_ms);
 
                 let (_stats, phases) =
                     migrator.merge_back_capsule(phone, tid, &rcapsule, session)?;
                 out.merge_ms += phases.merge_ms;
+                engine.observe_overhead(overhead_ms + phases.merge_ms);
+                let actual_ms = phone.clock.now_ms() - span_start_ms;
+                if engine.score_offload(point, actual_ms) {
+                    out.mispredictions += 1;
+                }
             }
         }
     };
     out.virtual_ms = phone.clock.now_ms();
     out.result = result;
     out.wall_s = wall0.elapsed().as_secs_f64();
+    channel.record_policy(
+        out.offloads as u64,
+        out.local_fallbacks as u64,
+        out.mispredictions as u64,
+    );
     Ok(out)
+}
+
+/// The channel died mid-offload: resume the thread and run the span
+/// locally, surfacing the error in the outcome instead of failing the
+/// run. Any capture cost already paid stays charged; the baseline
+/// recorded during capture describes state the clone never received, so
+/// it is dropped (the next offload re-establishes from a full capture).
+///
+/// `attempt` is `Some((was_delta, wire_bytes))` when a forward frame was
+/// built and sent: the roundtrip-flavor counter is rolled back (no
+/// roundtrip completed) while the attempted bytes still land in
+/// `transfer.up` — they were encoded and charged (`raw_up`/`uplink_ms`),
+/// so the byte counters stay mutually consistent. `None` means the
+/// failure happened at the heartbeat, before any capture (the thread
+/// resume below is then a no-op).
+#[allow(clippy::too_many_arguments)]
+fn degrade_to_local(
+    phone: &mut Process,
+    tid: u32,
+    session: &mut MobileSession,
+    engine: &mut PolicyEngine,
+    out: &mut DistOutcome,
+    local_spans: &mut Vec<(u32, f64, Option<f64>)>,
+    point: u32,
+    attempt: Option<(bool, u64)>,
+    e: CloneCloudError,
+) -> Result<()> {
+    phone.thread_mut(tid)?.status = ThreadStatus::Runnable;
+    phone.resume_others(tid);
+    session.drop_baseline();
+    if let Some((was_delta, wire_bytes)) = attempt {
+        if was_delta {
+            out.delta_roundtrips -= 1;
+        } else {
+            out.full_roundtrips -= 1;
+        }
+        out.transfer.up += wire_bytes;
+    }
+    out.channel_errors += 1;
+    out.last_channel_error = Some(e.to_string());
+    out.offloads -= 1;
+    out.local_fallbacks += 1;
+    engine.note_degrade();
+    local_spans.push((point, phone.clock.now_ms(), None));
+    Ok(())
 }
 
 fn absorb_capture_phases(out: &mut DistOutcome, phases: &MigrationPhases) {
@@ -373,14 +612,15 @@ fn absorb_capture_phases(out: &mut DistOutcome, phases: &MigrationPhases) {
 /// the post-transfer timestamp directly into the wire frame. Sealing
 /// keeps the capsule header (through the clock field) out of the
 /// compressed tail, so the clock is patched in place — one encode, one
-/// compression pass, and the charged size IS the sent size.
+/// compression pass, and the charged size IS the sent size. Returns the
+/// frame plus the charged ms (the policy estimator's uplink sample).
 fn stamp_and_encode(
     phone: &mut Process,
     net: &NetworkProfile,
     out: &mut DistOutcome,
     capsule: Capsule,
     codec: Codec,
-) -> Vec<u8> {
+) -> (Vec<u8>, f64) {
     let raw = capsule.encode();
     out.raw_up += raw.len() as u64;
     let mut wire = seal_frame_keep_head(codec, raw, CAPSULE_CLOCK_OFFSET + 8);
@@ -391,7 +631,7 @@ fn stamp_and_encode(
     let clock = phone.clock.now_us().to_bits().to_be_bytes();
     patch_frame_payload(&mut wire, CAPSULE_CLOCK_OFFSET, &clock)
         .expect("capsule header is always inside the preserved frame head");
-    wire
+    (wire, up_ms)
 }
 
 /// Assembly for the delta-migration workload used by
@@ -693,6 +933,183 @@ mod tests {
         assert_eq!(
             phone2.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
             Some(expected)
+        );
+    }
+
+    /// A channel that fails every roundtrip, as a dead TCP peer or a
+    /// drained farm would.
+    struct DeadChannel;
+
+    impl CloneChannel for DeadChannel {
+        fn roundtrip(&mut self, _forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+            Err(CloneCloudError::Transport("clone unreachable".into()))
+        }
+    }
+
+    /// Forced-fallback matrix (1/2): `policy.force_local` with an armed
+    /// delta session stands the clone down — no roundtrips, no reverse
+    /// deltas, no baseline — and the run is pure local execution.
+    #[test]
+    fn force_local_stands_down_armed_delta_session() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+        let mut phone = make_proc(&program, &template, Location::Mobile);
+        let clone = make_proc(&program, &template, Location::Clone);
+        let mut channel = InlineClone::new(clone, CostParams::default()).with_delta();
+        assert!(channel.delta_capable(), "channel armed before the run");
+        let mut session = MobileSession::new(true);
+        let mut engine = crate::exec::PolicyEngine::force_local();
+
+        let out = run_distributed_policy(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+            &mut engine,
+        )
+        .unwrap();
+
+        assert_eq!(out.migrations, 0, "nothing crossed the wire");
+        assert_eq!(out.offloads, 0);
+        assert_eq!(out.local_fallbacks, ROUNDS as usize);
+        assert_eq!(out.delta_roundtrips + out.full_roundtrips, 0);
+        assert_eq!(out.transfer.up + out.transfer.down, 0);
+        assert_eq!(
+            out.suspend_capture_ms, 0.0,
+            "a local decision pays zero capture cost"
+        );
+        assert!(
+            !channel.delta_capable(),
+            "the armed channel was disarmed: it cannot emit reverse deltas"
+        );
+        assert!(!session.is_enabled() && !session.has_baseline());
+        assert_eq!(channel.migrations, 0);
+        assert_eq!(
+            phone.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
+            Some(expected),
+            "pure local execution computes the same result"
+        );
+    }
+
+    /// Forced-fallback matrix (2/2): `policy.force_offload` on a dead
+    /// channel degrades every span to local execution with the error
+    /// surfaced in the outcome — the run completes, no panic, no Err.
+    #[test]
+    fn force_offload_on_dead_channel_degrades_to_local() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+        let mut phone = make_proc(&program, &template, Location::Mobile);
+        let mut channel = DeadChannel;
+        let mut session = MobileSession::disabled();
+        let mut engine = crate::exec::PolicyEngine::force_offload();
+
+        let out = run_distributed_policy(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+            &mut engine,
+        )
+        .unwrap();
+
+        assert_eq!(out.channel_errors, ROUNDS as usize, "every span degraded");
+        assert!(out
+            .last_channel_error
+            .as_deref()
+            .unwrap()
+            .contains("unreachable"));
+        assert_eq!(out.migrations, 0);
+        assert_eq!(out.offloads, 0, "degraded spans count as local");
+        assert_eq!(out.local_fallbacks, ROUNDS as usize);
+        assert_eq!(
+            out.delta_roundtrips + out.full_roundtrips,
+            0,
+            "no roundtrip completed, flavor counters rolled back"
+        );
+        assert_eq!(
+            out.transfer.up, out.raw_up,
+            "attempted frames stay byte-consistent (no codec: wire == raw)"
+        );
+        assert!(out.transfer.up > 0 && out.transfer.down == 0);
+        assert_eq!(
+            phone.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
+            Some(expected),
+            "results survive the dead channel"
+        );
+
+        // The legacy driver keeps the old contract: errors propagate.
+        let mut phone2 = make_proc(&program, &template, Location::Mobile);
+        let err = run_distributed(
+            &mut phone2,
+            &mut DeadChannel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+        );
+        assert!(err.is_err(), "legacy path still fails fast");
+    }
+
+    /// Cost-model decisions end to end: the engine offloads on the first
+    /// (cold) trip, measures a dead-slow link, and runs the remaining
+    /// spans locally — scoring the cold offload as a misprediction.
+    #[test]
+    fn auto_engine_goes_local_on_measured_slow_link() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+
+        // Price the span from a forced-local calibration run.
+        let mut cal_phone = make_proc(&program, &template, Location::Mobile);
+        let cal = run_distributed_policy(
+            &mut cal_phone,
+            &mut DeadChannel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut MobileSession::disabled(),
+            &mut crate::exec::PolicyEngine::force_local(),
+        )
+        .unwrap();
+        let local_ms = cal.virtual_ms / ROUNDS as f64;
+
+        let awful = NetworkProfile {
+            name: "awful".into(),
+            latency_ms: 50_000.0,
+            down_mbps: 0.01,
+            up_mbps: 0.01,
+        };
+        let mut phone = make_proc(&program, &template, Location::Mobile);
+        let clone = make_proc(&program, &template, Location::Clone);
+        let mut channel = InlineClone::new(clone, CostParams::default());
+        let mut engine = crate::exec::PolicyEngine::auto();
+        engine.set_span(
+            0,
+            crate::exec::SpanCost {
+                local_ms,
+                clone_ms: local_ms / 21.0,
+            },
+        );
+        let out = run_distributed_policy(
+            &mut phone,
+            &mut channel,
+            &awful,
+            &CostParams::default(),
+            &mut MobileSession::disabled(),
+            &mut engine,
+        )
+        .unwrap();
+
+        assert!(out.offloads >= 1, "cold start offloads (static choice)");
+        assert!(
+            out.local_fallbacks > out.offloads,
+            "measured link flips the rest local: {} local vs {} offload",
+            out.local_fallbacks,
+            out.offloads
+        );
+        assert!(out.mispredictions >= 1, "the cold offload scored as wrong");
+        assert_eq!(
+            phone.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
+            Some(expected),
+            "mixed local/offload execution is bit-identical"
         );
     }
 

@@ -2,17 +2,28 @@
 //!
 //! * [`monolithic`] — status-quo execution of an (unmodified or
 //!   partitioned-but-local) binary on one device.
+//! * [`policy`] — the runtime partition policy: a [`PolicyEngine`]
+//!   decides migrate-vs-local at every `CcStart` from EWMA link
+//!   estimates fed by the measured transfers and the profiled span
+//!   costs, with forced-offload/forced-local ablation modes.
 //! * [`distributed`] — the CloneCloud run: launch the partitioned binary,
-//!   migrate at CcStart, execute at the clone, reintegrate at CcStop,
-//!   merge, continue — with virtual network time charged from the real
-//!   byte counts. `run_distributed_session` adds delta migration on top
-//!   (epoch-based dirty tracking, `NeedFull` full-capture fallback).
+//!   ask the policy at CcStart, migrate (or continue locally), execute at
+//!   the clone, reintegrate at CcStop, merge, continue — with virtual
+//!   network time charged from the real byte counts.
+//!   `run_distributed_session` adds delta migration on top (epoch-based
+//!   dirty tracking, `NeedFull` full-capture fallback);
+//!   `run_distributed_with` sweeps the network per migration trip.
 
 pub mod distributed;
 pub mod monolithic;
+pub mod policy;
 
 pub use distributed::{
     delta_statics_workload_src, delta_workload_expected, delta_workload_src, run_distributed,
-    run_distributed_session, CloneChannel, DistOutcome, FarmClone, InlineClone,
+    run_distributed_policy, run_distributed_session, run_distributed_with, CloneChannel,
+    DistOutcome, FarmClone, InlineClone,
 };
 pub use monolithic::{run_monolithic, run_monolithic_hooked, MonoOutcome};
+pub use policy::{
+    Decision, DecisionRecord, ForceMode, NetworkEstimator, PolicyEngine, PolicyStats, SpanCost,
+};

@@ -1,0 +1,682 @@
+//! Runtime partition policy: per-invocation offload decisions from live
+//! network + input conditions (paper §3, §5 — "the runtime implements
+//! the choice of partition for the current execution conditions").
+//!
+//! The offline pipeline (profiler → solver → `PartitionDb` → rewriter)
+//! picks *candidate* migration points and prices each span; this module
+//! is the runtime half: at every `CcStart` the [`PolicyEngine`] compares
+//! the expected cost of offloading — forward capsule over the measured
+//! uplink, clone execution, reverse capsule over the measured downlink,
+//! plus the observed suspend/capture/merge overhead — against the
+//! profiled local cost of the span, and answers migrate or local.
+//! ThinkAir (arXiv 1105.3232) and Phone2Cloud (arXiv 2008.05851) both
+//! show this decision must be re-made at invocation time from measured
+//! bandwidth/RTT, not baked into the binary.
+//!
+//! Invariants (ROADMAP):
+//! * Decisions are made *before* suspend/capture, so a local decision
+//!   pays zero capture cost (`exec::distributed` enforces the ordering).
+//! * The [`NetworkEstimator`] only ever feeds from measured transfers
+//!   (the virtual ms actually charged for real wire bytes) and digest
+//!   heartbeat roundtrips — never from its own predictions, so there is
+//!   no estimate→decision→estimate feedback loop. Because a local
+//!   streak starves the estimator, the engine forces one offload
+//!   *probe* every `probe_trips` consecutive local decisions.
+
+use std::collections::HashMap;
+
+use crate::appvm::class::Program;
+use crate::config::PolicyParams;
+use crate::error::{CloneCloudError, Result};
+use crate::partitioner::PartitionEntry;
+
+/// Decision override for ablation runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForceMode {
+    /// Cost-model decisions (the default).
+    Auto,
+    /// Always migrate (the seed's hardwired behavior).
+    Offload,
+    /// Never migrate: the partitioned binary runs like the monolithic
+    /// one, and the driver stands the clone down up front.
+    Local,
+}
+
+impl ForceMode {
+    pub fn parse(s: &str) -> Result<ForceMode> {
+        match s {
+            "auto" => Ok(ForceMode::Auto),
+            "offload" => Ok(ForceMode::Offload),
+            "local" => Ok(ForceMode::Local),
+            other => Err(CloneCloudError::Config(format!(
+                "unknown policy.force '{other}' (auto|offload|local)"
+            ))),
+        }
+    }
+}
+
+/// The answer at one `CcStart`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Offload,
+    Local,
+}
+
+/// Exponentially weighted moving average; `alpha` is supplied per
+/// update so one engine-wide half-life governs every estimate.
+#[derive(Debug, Clone, Copy, Default)]
+struct Ewma {
+    value: f64,
+    seen: bool,
+}
+
+impl Ewma {
+    fn observe(&mut self, x: f64, alpha: f64) {
+        if self.seen {
+            self.value += alpha * (x - self.value);
+        } else {
+            self.value = x;
+            self.seen = true;
+        }
+    }
+
+    fn get(&self) -> Option<f64> {
+        if self.seen {
+            Some(self.value)
+        } else {
+            None
+        }
+    }
+}
+
+/// EWMA link estimates from measured transfers: per-direction transfer
+/// time *per byte* plus an RTT fed by digest-heartbeat roundtrips.
+///
+/// The EWMA runs over ms/byte, not bytes/ms: congestion averages
+/// arithmetically in the time domain, so one slow transfer moves the
+/// estimate as far as one fast transfer does — a throughput EWMA would
+/// detect a 10x slowdown an order of magnitude more slowly than a 10x
+/// speedup. Until a heartbeat supplies an RTT, the per-transfer latency
+/// stays folded into the observed per-byte times — predictions are then
+/// slightly pessimistic for larger-than-observed capsules, which the
+/// hysteresis margin absorbs.
+#[derive(Debug, Clone)]
+pub struct NetworkEstimator {
+    alpha: f64,
+    /// Virtual ms per byte, latency excluded once an RTT is known.
+    up_ms_per_byte: Ewma,
+    down_ms_per_byte: Ewma,
+    /// Measured small-frame roundtrip (both directions' latency).
+    rtt: Ewma,
+}
+
+impl NetworkEstimator {
+    /// `half_life_trips`: observations until an old estimate has half
+    /// its weight.
+    pub fn new(half_life_trips: f64) -> NetworkEstimator {
+        let h = half_life_trips.max(0.1);
+        NetworkEstimator {
+            alpha: 1.0 - 0.5f64.powf(1.0 / h),
+            up_ms_per_byte: Ewma::default(),
+            down_ms_per_byte: Ewma::default(),
+            rtt: Ewma::default(),
+        }
+    }
+
+    fn observe(&mut self, bytes: u64, ms: f64, up: bool) {
+        if bytes == 0 || ms <= 0.0 {
+            return;
+        }
+        // Strip the one-way latency share when it is known, flooring at
+        // 5% of the observation so a latency-dominated transfer never
+        // produces a zero/negative bandwidth term.
+        let eff_ms = match self.rtt.get() {
+            Some(rtt) => (ms - rtt / 2.0).max(ms * 0.05),
+            None => ms,
+        };
+        let ms_per_byte = eff_ms / bytes as f64;
+        let alpha = self.alpha;
+        if up {
+            self.up_ms_per_byte.observe(ms_per_byte, alpha);
+        } else {
+            self.down_ms_per_byte.observe(ms_per_byte, alpha);
+        }
+    }
+
+    /// One measured uplink transfer: `bytes` on the wire, `ms` charged.
+    pub fn observe_up(&mut self, bytes: u64, ms: f64) {
+        self.observe(bytes, ms, true);
+    }
+
+    /// One measured downlink transfer.
+    pub fn observe_down(&mut self, bytes: u64, ms: f64) {
+        self.observe(bytes, ms, false);
+    }
+
+    /// One measured small-frame roundtrip (a digest heartbeat).
+    pub fn observe_rtt(&mut self, ms: f64) {
+        if ms > 0.0 {
+            let alpha = self.alpha;
+            self.rtt.observe(ms, alpha);
+        }
+    }
+
+    /// Predicted uplink ms for `bytes`; `None` before any observation.
+    pub fn predict_up_ms(&self, bytes: u64) -> Option<f64> {
+        self.up_ms_per_byte
+            .get()
+            .map(|mpb| self.rtt.get().unwrap_or(0.0) / 2.0 + bytes as f64 * mpb)
+    }
+
+    /// Predicted downlink ms for `bytes`; `None` before any observation.
+    pub fn predict_down_ms(&self, bytes: u64) -> Option<f64> {
+        self.down_ms_per_byte
+            .get()
+            .map(|mpb| self.rtt.get().unwrap_or(0.0) / 2.0 + bytes as f64 * mpb)
+    }
+
+    /// Estimated uplink throughput, Mbps (per-byte ms inverted).
+    pub fn up_mbps(&self) -> Option<f64> {
+        self.up_ms_per_byte.get().map(|mpb| 0.008 / mpb)
+    }
+
+    /// Estimated downlink throughput, Mbps.
+    pub fn down_mbps(&self) -> Option<f64> {
+        self.down_ms_per_byte.get().map(|mpb| 0.008 / mpb)
+    }
+
+    /// Measured small-frame roundtrip estimate, ms.
+    pub fn rtt_ms(&self) -> Option<f64> {
+        self.rtt.get()
+    }
+
+    /// One-line rendering for logs and the CLI.
+    pub fn describe(&self) -> String {
+        let fmt = |v: Option<f64>, unit: &str| match v {
+            Some(x) => format!("{x:.2} {unit}"),
+            None => "?".to_string(),
+        };
+        format!(
+            "up {}, down {}, rtt {}",
+            fmt(self.up_mbps(), "Mbps"),
+            fmt(self.down_mbps(), "Mbps"),
+            fmt(self.rtt_ms(), "ms"),
+        )
+    }
+}
+
+/// Profiled per-invocation cost of one migratory span (ms, virtual):
+/// what the span costs run on the phone vs at the clone.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpanCost {
+    pub local_ms: f64,
+    pub clone_ms: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct SpanState {
+    cost: SpanCost,
+    last: Option<Decision>,
+}
+
+/// One decision, as logged for the CLI and the examples.
+#[derive(Debug, Clone)]
+pub struct DecisionRecord {
+    /// Migration-point encounter index within the engine's lifetime.
+    pub trip: usize,
+    /// Partition-point id (`CcStart` operand).
+    pub point: u32,
+    pub decision: Decision,
+    /// This offload was forced to refresh the estimator, not won on
+    /// cost.
+    pub probe: bool,
+    /// Profiled local cost of the span, if priced.
+    pub local_ms: Option<f64>,
+    /// The engine's expected offload time at decision time, if it had
+    /// enough measurements to compute one.
+    pub offload_est_ms: Option<f64>,
+    /// Forward-capsule size estimate used (bytes).
+    pub fwd_bytes_est: Option<f64>,
+    /// Estimator state rendered at decision time.
+    pub estimator: String,
+}
+
+/// Engine-lifetime decision counters (the per-run view lives in
+/// `DistOutcome`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PolicyStats {
+    pub offloads: u64,
+    pub local_fallbacks: u64,
+    pub mispredictions: u64,
+    pub probes: u64,
+    pub channel_errors: u64,
+}
+
+/// Decision records kept per engine. The engine can outlive many runs;
+/// the log exists for CLI/example introspection, so it stops growing at
+/// this bound instead of accumulating a record per `CcStart` forever
+/// (the counters in [`PolicyStats`] keep counting).
+const MAX_DECISION_LOG: usize = 4096;
+
+/// The runtime policy engine: decides migrate-vs-local at every
+/// `CcStart` from the estimator's measured link state, the session's
+/// capsule-size history, and the profiled span costs. One engine per
+/// phone/channel pairing; it may outlive a single run (estimates stay
+/// warm across runs exactly like the delta session's baseline).
+pub struct PolicyEngine {
+    force: ForceMode,
+    hysteresis: f64,
+    probe_trips: u64,
+    degrade_to_local: bool,
+    pub estimator: NetworkEstimator,
+    spans: HashMap<u32, SpanState>,
+    /// Observed forward wire sizes, by capsule flavor: a session holding
+    /// a delta baseline predicts the delta size, a cold one the full
+    /// size — the input-conditions half of the decision.
+    fwd_full_bytes: Ewma,
+    fwd_delta_bytes: Ewma,
+    rev_bytes: Ewma,
+    /// Observed suspend+capture+merge overhead per offload (ms).
+    overhead_ms: Ewma,
+    alpha: f64,
+    consecutive_local: u64,
+    trips: usize,
+    last_estimate: Option<f64>,
+    pub log: Vec<DecisionRecord>,
+    pub stats: PolicyStats,
+}
+
+impl PolicyEngine {
+    pub fn from_params(params: &PolicyParams) -> Result<PolicyEngine> {
+        let h = params.half_life_trips.max(0.1);
+        Ok(PolicyEngine {
+            force: ForceMode::parse(&params.force)?,
+            hysteresis: params.hysteresis.max(0.0),
+            probe_trips: params.probe_trips,
+            degrade_to_local: params.degrade_to_local,
+            estimator: NetworkEstimator::new(params.half_life_trips),
+            spans: HashMap::new(),
+            fwd_full_bytes: Ewma::default(),
+            fwd_delta_bytes: Ewma::default(),
+            rev_bytes: Ewma::default(),
+            overhead_ms: Ewma::default(),
+            alpha: 1.0 - 0.5f64.powf(1.0 / h),
+            consecutive_local: 0,
+            trips: 0,
+            last_estimate: None,
+            log: Vec::new(),
+            stats: PolicyStats::default(),
+        })
+    }
+
+    /// Cost-model decisions with default parameters.
+    pub fn auto() -> PolicyEngine {
+        Self::from_params(&PolicyParams::default()).expect("default params parse")
+    }
+
+    fn forced(mode: ForceMode) -> PolicyEngine {
+        let mut e = Self::auto();
+        e.force = mode;
+        e
+    }
+
+    /// Always-migrate ablation engine.
+    pub fn force_offload() -> PolicyEngine {
+        Self::forced(ForceMode::Offload)
+    }
+
+    /// Never-migrate ablation engine.
+    pub fn force_local() -> PolicyEngine {
+        Self::forced(ForceMode::Local)
+    }
+
+    /// The seed's hardwired behavior for the legacy drivers: every
+    /// `CcStart` migrates and channel errors propagate (no degrade).
+    pub(crate) fn legacy_offload() -> PolicyEngine {
+        Self::force_offload().without_degrade()
+    }
+
+    /// Propagate channel errors instead of degrading the span to local
+    /// execution.
+    pub fn without_degrade(mut self) -> PolicyEngine {
+        self.degrade_to_local = false;
+        self
+    }
+
+    pub fn forces_local(&self) -> bool {
+        self.force == ForceMode::Local
+    }
+
+    pub fn degrades_to_local(&self) -> bool {
+        self.degrade_to_local
+    }
+
+    /// Price one partition point (per-invocation profiled costs).
+    pub fn set_span(&mut self, point: u32, cost: SpanCost) {
+        self.spans.insert(point, SpanState { cost, last: None });
+    }
+
+    /// Price every span a partition-DB entry covers, resolving method
+    /// names against the *rewritten* binary: each migratory method
+    /// carries its point id (`MethodDef::migration_point`), so the
+    /// binary itself is the pid ↔ method map.
+    pub fn load_entry(&mut self, entry: &PartitionEntry, program: &Program) -> Result<()> {
+        for (i, name) in entry.migrate.iter().enumerate() {
+            let (c, m) = name.split_once('.').ok_or_else(|| {
+                CloneCloudError::partitioner(format!("bad method name '{name}'"))
+            })?;
+            let mref = program.resolve(c, m)?;
+            if let Some(pid) = program.method(mref).migration_point {
+                let local_ms = entry.span_local_ms.get(i).copied().unwrap_or(0.0);
+                let clone_ms = entry.span_clone_ms.get(i).copied().unwrap_or(0.0);
+                if local_ms > 0.0 {
+                    self.set_span(pid, SpanCost { local_ms, clone_ms });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The expected offload time computed by the most recent
+    /// [`PolicyEngine::decide`], if it had enough measurements.
+    pub fn last_offload_estimate(&self) -> Option<f64> {
+        self.last_estimate
+    }
+
+    fn cost_decision(
+        &self,
+        point: u32,
+        has_baseline: bool,
+        est_out: &mut Option<f64>,
+        fwd_out: &mut Option<f64>,
+    ) -> Decision {
+        // Unpriced span or cold estimator: fall back to the static
+        // choice — the partition DB picked this binary for offload.
+        let Some(span) = self.spans.get(&point) else {
+            return Decision::Offload;
+        };
+        // Size the forward capsule from the flavor the session will
+        // actually send. A baseline-holding session about to send its
+        // FIRST delta has no delta-size history yet — pricing it with
+        // the full-capture size would wildly overestimate, so that case
+        // also falls back to the static choice.
+        let fwd = if has_baseline {
+            self.fwd_delta_bytes.get()
+        } else {
+            self.fwd_full_bytes.get()
+        };
+        let Some(fwd) = fwd else {
+            return Decision::Offload;
+        };
+        *fwd_out = Some(fwd);
+        let rev = self.rev_bytes.get().unwrap_or(fwd);
+        let (Some(up_ms), Some(down_ms)) = (
+            self.estimator.predict_up_ms(fwd as u64),
+            self.estimator.predict_down_ms(rev as u64),
+        ) else {
+            return Decision::Offload;
+        };
+        let est = self.overhead_ms.get().unwrap_or(0.0) + up_ms + span.cost.clone_ms + down_ms;
+        *est_out = Some(est);
+        // Hysteresis: the side currently losing must win by the margin
+        // before the decision flips.
+        let margin = 1.0 + self.hysteresis;
+        let offload_wins = match span.last {
+            Some(Decision::Local) => est * margin <= span.cost.local_ms,
+            _ => est <= span.cost.local_ms * margin,
+        };
+        if offload_wins {
+            Decision::Offload
+        } else {
+            Decision::Local
+        }
+    }
+
+    /// Decide migrate-vs-local for one `CcStart`, BEFORE any
+    /// suspend/capture work. `has_baseline` selects which capsule-size
+    /// history prices the forward transfer (delta vs full capture).
+    pub fn decide(&mut self, point: u32, has_baseline: bool) -> Decision {
+        let trip = self.trips;
+        self.trips += 1;
+        let mut est = None;
+        let mut fwd = None;
+        let mut probe = false;
+        let decision = match self.force {
+            ForceMode::Offload => Decision::Offload,
+            ForceMode::Local => Decision::Local,
+            ForceMode::Auto => {
+                let computed = self.cost_decision(point, has_baseline, &mut est, &mut fwd);
+                if computed == Decision::Local
+                    && self.probe_trips > 0
+                    && self.consecutive_local >= self.probe_trips
+                {
+                    probe = true;
+                    Decision::Offload
+                } else {
+                    computed
+                }
+            }
+        };
+        self.last_estimate = est;
+        match decision {
+            Decision::Offload => {
+                self.consecutive_local = 0;
+                self.stats.offloads += 1;
+                if probe {
+                    self.stats.probes += 1;
+                }
+            }
+            Decision::Local => {
+                self.consecutive_local += 1;
+                self.stats.local_fallbacks += 1;
+            }
+        }
+        let local_ms = self.spans.get(&point).map(|s| s.cost.local_ms);
+        if let Some(s) = self.spans.get_mut(&point) {
+            s.last = Some(decision);
+        }
+        if self.log.len() < MAX_DECISION_LOG {
+            self.log.push(DecisionRecord {
+                trip,
+                point,
+                decision,
+                probe,
+                local_ms,
+                offload_est_ms: est,
+                fwd_bytes_est: fwd,
+                estimator: self.estimator.describe(),
+            });
+        }
+        decision
+    }
+
+    /// Feed one measured forward transfer (wire bytes + virtual ms
+    /// charged), tagged with the capsule flavor that produced it.
+    pub fn observe_forward(&mut self, bytes: u64, ms: f64, delta: bool) {
+        let alpha = self.alpha;
+        if delta {
+            self.fwd_delta_bytes.observe(bytes as f64, alpha);
+        } else {
+            self.fwd_full_bytes.observe(bytes as f64, alpha);
+        }
+        self.estimator.observe_up(bytes, ms);
+    }
+
+    /// Feed one measured reverse transfer.
+    pub fn observe_reverse(&mut self, bytes: u64, ms: f64) {
+        let alpha = self.alpha;
+        self.rev_bytes.observe(bytes as f64, alpha);
+        self.estimator.observe_down(bytes, ms);
+    }
+
+    /// Feed the measured suspend+capture+merge overhead of one offload.
+    pub fn observe_overhead(&mut self, ms: f64) {
+        let alpha = self.alpha;
+        self.overhead_ms.observe(ms, alpha);
+    }
+
+    /// Feed one measured heartbeat roundtrip.
+    pub fn observe_rtt(&mut self, ms: f64) {
+        self.estimator.observe_rtt(ms);
+    }
+
+    /// Score a completed offload against the profiled local cost:
+    /// decided-offload-but-local-would-have-won. Returns true on
+    /// misprediction.
+    pub fn score_offload(&mut self, point: u32, actual_ms: f64) -> bool {
+        let Some(s) = self.spans.get(&point) else {
+            return false;
+        };
+        let mis = s.cost.local_ms > 0.0 && s.cost.local_ms < actual_ms;
+        if mis {
+            self.stats.mispredictions += 1;
+        }
+        mis
+    }
+
+    /// Score a completed local span against the offload estimate made
+    /// at decision time: decided-local-but-offload-would-have-won.
+    pub fn score_local(&mut self, actual_ms: f64, predicted_offload_ms: Option<f64>) -> bool {
+        let mis = matches!(predicted_offload_ms, Some(p) if p < actual_ms);
+        if mis {
+            self.stats.mispredictions += 1;
+        }
+        mis
+    }
+
+    /// A failed offload roundtrip was degraded to local execution:
+    /// reclassify the decision in the engine-lifetime stats.
+    pub fn note_degrade(&mut self) {
+        self.stats.offloads = self.stats.offloads.saturating_sub(1);
+        self.stats.local_fallbacks += 1;
+        self.stats.channel_errors += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fed_engine(up_rate_bpms: f64, down_rate_bpms: f64) -> PolicyEngine {
+        let mut e = PolicyEngine::auto();
+        // Two observations per direction so the EWMA is warm.
+        for _ in 0..2 {
+            e.observe_forward(10_000, 10_000.0 / up_rate_bpms, false);
+            e.observe_reverse(2_000, 2_000.0 / down_rate_bpms);
+        }
+        e
+    }
+
+    #[test]
+    fn estimator_tracks_rate_shifts() {
+        let mut est = NetworkEstimator::new(1.0);
+        assert!(est.predict_up_ms(1000).is_none(), "cold estimator");
+        est.observe_up(10_000, 100.0); // 100 B/ms
+        let fast = est.predict_up_ms(10_000).unwrap();
+        assert!((fast - 100.0).abs() < 1e-6);
+        // The link degrades 10x; a couple of observations converge.
+        est.observe_up(10_000, 1000.0);
+        est.observe_up(10_000, 1000.0);
+        let slow = est.predict_up_ms(10_000).unwrap();
+        assert!(slow > 3.0 * fast, "rate shift tracked: {fast} -> {slow}");
+    }
+
+    #[test]
+    fn rtt_excluded_from_bandwidth_once_known() {
+        let mut est = NetworkEstimator::new(1.0);
+        est.observe_rtt(100.0);
+        est.observe_up(10_000, 150.0); // 50 ms latency + 100 ms wire
+        let p = est.predict_up_ms(10_000).unwrap();
+        // 50 (rtt/2) + 10_000 / (10_000/100) = 150.
+        assert!((p - 150.0).abs() < 1e-6, "{p}");
+        assert!(est.rtt_ms().unwrap() > 99.0);
+    }
+
+    #[test]
+    fn cold_engine_keeps_static_offload_choice() {
+        let mut e = PolicyEngine::auto();
+        e.set_span(0, SpanCost { local_ms: 100.0, clone_ms: 5.0 });
+        assert_eq!(e.decide(0, false), Decision::Offload, "no measurements yet");
+        assert_eq!(e.stats.offloads, 1);
+    }
+
+    #[test]
+    fn fast_link_offloads_slow_link_goes_local() {
+        // 300 B/ms up (2.4 Mbps): offload ≈ 10_000/300 + 5 + small ≈ 40 ms
+        // against 600 ms local.
+        let mut fast = fed_engine(300.0, 300.0);
+        fast.set_span(0, SpanCost { local_ms: 600.0, clone_ms: 5.0 });
+        assert_eq!(fast.decide(0, false), Decision::Offload);
+
+        // 3 B/ms up: offload ≈ 10_000/3 ≈ 3_300 ms against 600 ms local.
+        let mut slow = fed_engine(3.0, 3.0);
+        slow.set_span(0, SpanCost { local_ms: 600.0, clone_ms: 5.0 });
+        assert_eq!(slow.decide(0, false), Decision::Local);
+        assert_eq!(slow.stats.local_fallbacks, 1);
+        assert!(slow.log.last().unwrap().offload_est_ms.unwrap() > 600.0);
+    }
+
+    #[test]
+    fn probe_breaks_local_streaks() {
+        let mut e = fed_engine(3.0, 3.0);
+        e.probe_trips = 3;
+        e.set_span(0, SpanCost { local_ms: 100.0, clone_ms: 5.0 });
+        let decisions: Vec<Decision> = (0..4).map(|_| e.decide(0, false)).collect();
+        assert_eq!(
+            decisions,
+            vec![
+                Decision::Local,
+                Decision::Local,
+                Decision::Local,
+                Decision::Offload
+            ],
+            "the 4th decision is a forced probe"
+        );
+        assert_eq!(e.stats.probes, 1);
+        assert!(e.log[3].probe);
+    }
+
+    #[test]
+    fn forced_modes_override_cost_model() {
+        let mut local = PolicyEngine::force_local();
+        local.set_span(0, SpanCost { local_ms: 1e9, clone_ms: 0.0 });
+        assert!(local.forces_local());
+        assert_eq!(local.decide(0, false), Decision::Local);
+
+        let mut off = fed_engine(0.001, 0.001);
+        off.force = ForceMode::Offload;
+        off.set_span(0, SpanCost { local_ms: 0.001, clone_ms: 0.0 });
+        assert_eq!(off.decide(0, false), Decision::Offload);
+        assert!(ForceMode::parse("psychic").is_err());
+    }
+
+    #[test]
+    fn scoring_counts_both_misprediction_kinds() {
+        let mut e = PolicyEngine::auto();
+        e.set_span(0, SpanCost { local_ms: 100.0, clone_ms: 5.0 });
+        assert!(e.score_offload(0, 500.0), "local would have won");
+        assert!(!e.score_offload(0, 50.0), "offload was right");
+        assert!(e.score_local(500.0, Some(100.0)), "offload would have won");
+        assert!(!e.score_local(50.0, Some(100.0)));
+        assert!(!e.score_local(500.0, None), "no estimate, no verdict");
+        assert_eq!(e.stats.mispredictions, 2);
+    }
+
+    #[test]
+    fn hysteresis_resists_flapping() {
+        let mut e = fed_engine(100.0, 100.0);
+        e.hysteresis = 0.5;
+        // Offload estimate lands just above local cost; a prior Local
+        // decision holds unless offload wins by the 1.5x margin.
+        e.set_span(0, SpanCost { local_ms: 100.0, clone_ms: 0.0 });
+        e.spans.get_mut(&0).unwrap().last = Some(Decision::Local);
+        // fwd 10_000 B at 100 B/ms => 100 ms + rev 2_000/100 = 20 ms:
+        // est 120 ms; 120 * 1.5 > 100 -> stays Local.
+        assert_eq!(e.decide(0, false), Decision::Local);
+        // From an Offload history the same numbers keep offloading only
+        // if est <= local * 1.5 = 150: est 120 -> Offload.
+        e.spans.get_mut(&0).unwrap().last = Some(Decision::Offload);
+        e.consecutive_local = 0;
+        assert_eq!(e.decide(0, false), Decision::Offload);
+    }
+}

@@ -120,6 +120,11 @@ pub(crate) struct FarmShared {
     /// Digest heartbeats answered (and the divergent subset).
     pub heartbeats: AtomicU64,
     pub heartbeat_divergent: AtomicU64,
+    /// Phone-side policy decisions, aggregated across sessions at the
+    /// end of each run (`CloneChannel::record_policy`).
+    pub policy_offloads: AtomicU64,
+    pub policy_local_fallbacks: AtomicU64,
+    pub policy_mispredictions: AtomicU64,
     /// Slot-GC activity + per-slot high-water marks (tombstone growth).
     pub slot_gc_runs: AtomicU64,
     pub slot_gc_threads: AtomicU64,
@@ -156,6 +161,11 @@ pub struct FarmStats {
     /// Digest heartbeats answered, and how many found divergence.
     pub heartbeats: u64,
     pub heartbeat_divergent: u64,
+    /// Phone-side policy decisions the sessions reported: spans
+    /// migrated, spans run locally, and after-the-fact mispredictions.
+    pub offloads: u64,
+    pub local_fallbacks: u64,
+    pub mispredictions: u64,
     /// Periodic slot-GC activity and per-slot high-water marks.
     pub slot_gc_runs: u64,
     pub slot_gc_threads: u64,
@@ -258,6 +268,9 @@ impl FarmHandle {
             delta_rejects: s.delta_rejects.load(Ordering::Relaxed),
             heartbeats: s.heartbeats.load(Ordering::Relaxed),
             heartbeat_divergent: s.heartbeat_divergent.load(Ordering::Relaxed),
+            offloads: s.policy_offloads.load(Ordering::Relaxed),
+            local_fallbacks: s.policy_local_fallbacks.load(Ordering::Relaxed),
+            mispredictions: s.policy_mispredictions.load(Ordering::Relaxed),
             slot_gc_runs: s.slot_gc_runs.load(Ordering::Relaxed),
             slot_gc_threads: s.slot_gc_threads.load(Ordering::Relaxed),
             slot_gc_objects: s.slot_gc_objects.load(Ordering::Relaxed),
@@ -326,6 +339,9 @@ impl CloneFarm {
             delta_rejects: AtomicU64::new(0),
             heartbeats: AtomicU64::new(0),
             heartbeat_divergent: AtomicU64::new(0),
+            policy_offloads: AtomicU64::new(0),
+            policy_local_fallbacks: AtomicU64::new(0),
+            policy_mispredictions: AtomicU64::new(0),
             slot_gc_runs: AtomicU64::new(0),
             slot_gc_threads: AtomicU64::new(0),
             slot_gc_objects: AtomicU64::new(0),

@@ -226,6 +226,14 @@ impl CloneChannel for FarmClone {
             self.heartbeat_probe(digest, assignments)
         })
     }
+
+    fn record_policy(&mut self, offloads: u64, local: u64, mispredictions: u64) {
+        let s = &self.shared;
+        s.policy_offloads.fetch_add(offloads, Ordering::Relaxed);
+        s.policy_local_fallbacks.fetch_add(local, Ordering::Relaxed);
+        s.policy_mispredictions
+            .fetch_add(mispredictions, Ordering::Relaxed);
+    }
 }
 
 impl Drop for FarmClone {

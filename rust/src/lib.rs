@@ -4,7 +4,10 @@
 //! Layer map (DESIGN.md):
 //! * [`appvm`] — DroidVM, the Dalvik-like application VM substrate.
 //! * [`partitioner`] — static analysis + dynamic profiling + ILP solver
-//!   + bytecode rewriter (paper §3).
+//!   + bytecode rewriter (paper §3). The rewriter emits either the
+//!   classic one-partition binary or a *conditional* binary carrying
+//!   every candidate `CcStart`; the partition DB stores per-span
+//!   local/clone prices next to each entry.
 //! * [`migration`] — thread suspend/capture/resume/merge with the
 //!   MID/CID object-mapping table and Zygote-diff optimization (§4),
 //!   plus epoch-based **delta migration**: per-session baseline caches
@@ -26,7 +29,15 @@
 //! * [`runtime`] — PJRT loader executing the AOT HLO artifacts built by
 //!   `python/compile/aot.py` (L1 Pallas kernels + L2 JAX graphs).
 //! * [`apps`] — the paper's three evaluation applications.
-//! * [`exec`] — monolithic and distributed execution drivers.
+//! * [`exec`] — monolithic and distributed execution drivers, plus the
+//!   **runtime partition policy** (`exec::policy`): a per-phone
+//!   `PolicyEngine` re-decides migrate-vs-local at every `CcStart` from
+//!   EWMA link estimates fed only by measured transfers and digest
+//!   heartbeats, the session's capsule-size history, and the profiled
+//!   span prices — decisions made *before* suspend/capture, scored
+//!   after the fact (`offloads` / `local_fallbacks` /
+//!   `mispredictions`), with forced-offload/forced-local ablations and
+//!   dead-channel degrade-to-local.
 //! * [`baselines`] — comparison partitioners (§7 related work).
 
 pub mod appvm;

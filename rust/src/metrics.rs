@@ -57,6 +57,13 @@ impl MetricsSnapshot {
             "migration.heartbeat.preempts",
             out.heartbeat_preempts as u64,
         );
+        // Runtime partition-policy decisions (exec::policy): how often
+        // the engine migrated, stayed local, was wrong after the fact,
+        // and absorbed a dead channel.
+        self.count("policy.offloads", out.offloads as u64);
+        self.count("policy.local_fallbacks", out.local_fallbacks as u64);
+        self.count("policy.mispredictions", out.mispredictions as u64);
+        self.count("policy.channel_errors", out.channel_errors as u64);
         self.count("objects.shipped", out.objects_shipped as u64);
         self.count("objects.zygote_skipped", out.zygote_skipped as u64);
         self.count("objects.base_skipped", out.base_skipped as u64);
@@ -103,6 +110,9 @@ impl MetricsSnapshot {
         self.count("farm.delta.rejects", f.delta_rejects);
         self.count("farm.heartbeats", f.heartbeats);
         self.count("farm.heartbeat.divergent", f.heartbeat_divergent);
+        self.count("farm.policy.offloads", f.offloads);
+        self.count("farm.policy.local_fallbacks", f.local_fallbacks);
+        self.count("farm.policy.mispredictions", f.mispredictions);
         self.count("farm.slot_gc.runs", f.slot_gc_runs);
         self.count("farm.slot_gc.threads", f.slot_gc_threads);
         self.count("farm.slot_gc.objects", f.slot_gc_objects);
@@ -195,6 +205,9 @@ mod tests {
             delta_fallbacks: 1,
             heartbeat_preempts: 1,
             statics_shipped: 7,
+            offloads: 4,
+            local_fallbacks: 2,
+            mispredictions: 1,
             ..Default::default()
         };
         m.absorb_dist(&out);
@@ -206,6 +219,10 @@ mod tests {
         assert_eq!(m.counters["migration.delta.fallbacks"], 1);
         assert_eq!(m.counters["migration.heartbeat.preempts"], 1);
         assert_eq!(m.counters["statics.shipped"], 7);
+        assert_eq!(m.counters["policy.offloads"], 4);
+        assert_eq!(m.counters["policy.local_fallbacks"], 2);
+        assert_eq!(m.counters["policy.mispredictions"], 1);
+        assert_eq!(m.counters["policy.channel_errors"], 0);
         assert!((m.gauges["migration.delta.hit_rate"] - 0.75).abs() < 1e-9);
         assert!((m.gauges["migration.compression.ratio_out"] - 3.0).abs() < 1e-9);
         assert!((m.gauges["migration.compression.ratio_in"] - 1.0).abs() < 1e-9);

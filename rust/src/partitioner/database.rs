@@ -7,6 +7,7 @@
 //! conditions." Keys here are (app, network) pairs; entries name the
 //! R(m)=1 methods plus the expected/local costs; JSON on disk.
 
+use std::borrow::Borrow;
 use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
@@ -25,20 +26,33 @@ pub struct PartitionEntry {
     pub migrate: Vec<String>,
     pub expected_ms: f64,
     pub local_ms: f64,
+    /// Per-invocation profiled local (phone) cost of each `migrate`
+    /// span, ms — parallel to `migrate`. The runtime policy engine
+    /// prices migrate-vs-local per invocation with these; empty in
+    /// databases written before the policy layer existed.
+    pub span_local_ms: Vec<f64>,
+    /// Per-invocation clone-side cost of each `migrate` span, ms —
+    /// parallel to `migrate`.
+    pub span_clone_ms: Vec<f64>,
 }
 
 impl PartitionEntry {
     pub fn from_partition(app: &str, network: &str, program: &Program, p: &Partition) -> Self {
+        let refs: Vec<_> = p.migrate.iter().copied().collect();
         PartitionEntry {
             app: app.to_string(),
             network: network.to_string(),
-            migrate: p
-                .migrate
-                .iter()
-                .map(|&m| program.method_name(m))
-                .collect(),
+            migrate: refs.iter().map(|&m| program.method_name(m)).collect(),
             expected_ms: p.expected_us / 1e3,
             local_ms: p.local_us / 1e3,
+            span_local_ms: refs
+                .iter()
+                .map(|m| p.span_costs.get(m).map_or(0.0, |c| c.local_us / 1e3))
+                .collect(),
+            span_clone_ms: refs
+                .iter()
+                .map(|m| p.span_costs.get(m).map_or(0.0, |c| c.clone_us / 1e3))
+                .collect(),
         }
     }
 
@@ -68,6 +82,60 @@ impl PartitionEntry {
     }
 }
 
+/// Borrow shim for the `(String, String)`-keyed map: `lookup` queries
+/// with `(&str, &str)` through a trait object instead of allocating two
+/// owned `String`s per call (the old runtime hot path). The `Ord` here
+/// MUST agree with the tuple `Ord` the map's owned keys sort by —
+/// lexicographic on (app, network) — or lookups would miss entries.
+trait DbKey {
+    fn app(&self) -> &str;
+    fn network(&self) -> &str;
+}
+
+impl DbKey for (String, String) {
+    fn app(&self) -> &str {
+        &self.0
+    }
+    fn network(&self) -> &str {
+        &self.1
+    }
+}
+
+impl DbKey for (&str, &str) {
+    fn app(&self) -> &str {
+        self.0
+    }
+    fn network(&self) -> &str {
+        self.1
+    }
+}
+
+impl<'a> Borrow<dyn DbKey + 'a> for (String, String) {
+    fn borrow(&self) -> &(dyn DbKey + 'a) {
+        self
+    }
+}
+
+impl PartialEq for dyn DbKey + '_ {
+    fn eq(&self, other: &Self) -> bool {
+        self.app() == other.app() && self.network() == other.network()
+    }
+}
+
+impl Eq for dyn DbKey + '_ {}
+
+impl PartialOrd for dyn DbKey + '_ {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for dyn DbKey + '_ {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.app(), self.network()).cmp(&(other.app(), other.network()))
+    }
+}
+
 /// The database: (app, network) -> entry.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct PartitionDb {
@@ -90,9 +158,11 @@ impl PartitionDb {
         self.entries.insert((e.app.clone(), e.network.clone()), e);
     }
 
-    /// Runtime lookup for the current execution conditions.
+    /// Runtime lookup for the current execution conditions. Allocation
+    /// free: the borrowed pair is compared through the [`DbKey`] shim.
     pub fn lookup(&self, app: &str, network: &str) -> Option<&PartitionEntry> {
-        self.entries.get(&(app.to_string(), network.to_string()))
+        let key: &dyn DbKey = &(app, network);
+        self.entries.get(key)
     }
 
     pub fn entries(&self) -> impl Iterator<Item = &PartitionEntry> {
@@ -115,6 +185,14 @@ impl PartitionDb {
                         ),
                         ("expected_ms", e.expected_ms.into()),
                         ("local_ms", e.local_ms.into()),
+                        (
+                            "span_local_ms",
+                            Json::Arr(e.span_local_ms.iter().map(|&x| x.into()).collect()),
+                        ),
+                        (
+                            "span_clone_ms",
+                            Json::Arr(e.span_clone_ms.iter().map(|&x| x.into()).collect()),
+                        ),
                     ])
                 })
                 .collect(),
@@ -144,12 +222,34 @@ impl PartitionDb {
                         .ok_or_else(|| CloneCloudError::partitioner("bad migrate item"))
                 })
                 .collect::<Result<Vec<_>>>()?;
+            // Span-cost arrays are absent in pre-policy databases:
+            // missing means unpriced (empty), anything else must be a
+            // numeric array.
+            let get_span = |k: &str| -> Result<Vec<f64>> {
+                match e.get(k) {
+                    Json::Null => Ok(Vec::new()),
+                    v => v
+                        .as_arr()
+                        .ok_or_else(|| {
+                            CloneCloudError::partitioner(format!("{k} must be an array"))
+                        })?
+                        .iter()
+                        .map(|x| {
+                            x.as_f64().ok_or_else(|| {
+                                CloneCloudError::partitioner(format!("bad {k} item"))
+                            })
+                        })
+                        .collect(),
+                }
+            };
             db.put(PartitionEntry {
                 app: get("app")?,
                 network: get("network")?,
                 migrate,
                 expected_ms: e.get("expected_ms").as_f64().unwrap_or(0.0),
                 local_ms: e.get("local_ms").as_f64().unwrap_or(0.0),
+                span_local_ms: get_span("span_local_ms")?,
+                span_clone_ms: get_span("span_clone_ms")?,
             });
         }
         Ok(db)
@@ -169,6 +269,8 @@ impl PartitionDb {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{ensure, ensure_eq, forall, PropConfig};
+    use crate::util::rng::Rng;
 
     fn entry(app: &str, net: &str, migrate: &[&str]) -> PartitionEntry {
         PartitionEntry {
@@ -177,6 +279,39 @@ mod tests {
             migrate: migrate.iter().map(|s| s.to_string()).collect(),
             expected_ms: 123.0,
             local_ms: 456.0,
+            span_local_ms: vec![10.5; migrate.len()],
+            span_clone_ms: vec![0.5; migrate.len()],
+        }
+    }
+
+    fn random_entry(rng: &mut Rng) -> PartitionEntry {
+        // Small alphabets so duplicate (app, network) keys actually
+        // occur across a generated set.
+        let apps = ["virus", "image", "behavior", "app-ü"];
+        let nets = ["wifi", "3g", "edge"];
+        let n_migrate = rng.index(4);
+        let migrate: Vec<String> = (0..n_migrate)
+            .map(|_| format!("C{}.m{}", rng.index(3), rng.index(5)))
+            .collect();
+        // Span vectors exercise both priced and legacy (empty) shapes.
+        let priced = rng.chance(0.7);
+        let spans = |rng: &mut Rng| -> Vec<f64> {
+            if priced {
+                (0..n_migrate)
+                    .map(|_| rng.range_i64(0, 1_000_000) as f64 / 128.0)
+                    .collect()
+            } else {
+                Vec::new()
+            }
+        };
+        PartitionEntry {
+            app: apps[rng.index(apps.len())].to_string(),
+            network: nets[rng.index(nets.len())].to_string(),
+            migrate,
+            expected_ms: rng.range_i64(0, 1 << 40) as f64 / 64.0,
+            local_ms: rng.range_i64(0, 1 << 40) as f64 / 64.0,
+            span_local_ms: spans(rng),
+            span_clone_ms: spans(rng),
         }
     }
 
@@ -211,6 +346,157 @@ mod tests {
         db.save(&path).unwrap();
         assert_eq!(PartitionDb::load(&path).unwrap(), db);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Property: any generated database survives emit → parse exactly
+    /// (floats use shortest-roundtrip formatting), matching the wire
+    /// codec's roundtrip style.
+    #[test]
+    fn prop_json_roundtrip_random_dbs() {
+        forall(
+            PropConfig { seed: 0xDB01, cases: 60 },
+            |rng: &mut Rng| {
+                let n = rng.index(8);
+                (0..n).map(|_| random_entry(rng)).collect::<Vec<_>>()
+            },
+            |entries| {
+                let mut db = PartitionDb::new();
+                for e in entries {
+                    db.put(e.clone());
+                }
+                let text = json::emit(&db.to_json());
+                let back = PartitionDb::from_json(
+                    &json::parse(&text).map_err(|e| format!("parse: {e}"))?,
+                )
+                .map_err(|e| format!("from_json: {e}"))?;
+                ensure_eq(db.len(), back.len(), "entry count")?;
+                ensure(db == back, format!("roundtrip mismatch for {text}"))
+            },
+        );
+    }
+
+    /// Property: duplicate (app, network) keys resolve last-wins, both
+    /// through `put` and through `from_json` array order.
+    #[test]
+    fn prop_duplicate_keys_last_wins() {
+        forall(
+            PropConfig { seed: 0xDB02, cases: 60 },
+            |rng: &mut Rng| {
+                let n = 2 + rng.index(10);
+                (0..n).map(|_| random_entry(rng)).collect::<Vec<_>>()
+            },
+            |entries| {
+                let mut arr = Vec::new();
+                let mut db_put = PartitionDb::new();
+                for e in entries {
+                    db_put.put(e.clone());
+                    let mut single = PartitionDb::new();
+                    single.put(e.clone());
+                    // Reuse the canonical encoder for one entry's JSON.
+                    if let Json::Arr(v) = single.to_json() {
+                        arr.extend(v);
+                    }
+                }
+                let db_json = PartitionDb::from_json(&Json::Arr(arr))
+                    .map_err(|e| format!("from_json: {e}"))?;
+                ensure_eq(db_put.len(), db_json.len(), "dedup count")?;
+                for e in entries {
+                    let last = entries
+                        .iter()
+                        .rev()
+                        .find(|x| x.app == e.app && x.network == e.network)
+                        .unwrap();
+                    let got = db_json
+                        .lookup(&e.app, &e.network)
+                        .ok_or_else(|| format!("missing ({}, {})", e.app, e.network))?;
+                    ensure(got == last, "last occurrence wins")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: dropping any required field from a valid entry is a
+    /// typed parse error, never a panic or a silent default.
+    #[test]
+    fn prop_missing_required_field_rejected() {
+        let required = ["app", "network", "migrate"];
+        forall(
+            PropConfig { seed: 0xDB03, cases: 30 },
+            |rng: &mut Rng| (random_entry(rng), rng.index(required.len())),
+            |(e, drop_idx)| {
+                let mut db = PartitionDb::new();
+                db.put(e.clone());
+                let Json::Arr(arr) = db.to_json() else {
+                    return Err("db json is not an array".into());
+                };
+                let Json::Obj(mut obj) = arr[0].clone() else {
+                    return Err("entry json is not an object".into());
+                };
+                obj.remove(required[*drop_idx]);
+                let res = PartitionDb::from_json(&Json::Arr(vec![Json::Obj(obj)]));
+                ensure(
+                    res.is_err(),
+                    format!("missing '{}' must be rejected", required[*drop_idx]),
+                )
+            },
+        );
+    }
+
+    /// Property: garbage input never panics — random byte soup either
+    /// fails to parse as JSON or is rejected by `from_json`; structured
+    /// non-array JSON is always rejected.
+    #[test]
+    fn prop_garbage_never_panics() {
+        forall(
+            PropConfig { seed: 0xDB04, cases: 80 },
+            |rng: &mut Rng| {
+                let len = rng.index(64);
+                let mut bytes = vec![0u8; len];
+                rng.fill_bytes(&mut bytes);
+                String::from_utf8_lossy(&bytes).into_owned()
+            },
+            |soup| {
+                if let Ok(v) = json::parse(soup) {
+                    // Whatever parsed must be handled gracefully.
+                    let _ = PartitionDb::from_json(&v);
+                }
+                // Structured-but-wrong shapes are typed errors.
+                ensure(
+                    PartitionDb::from_json(&Json::Num(1.0)).is_err()
+                        && PartitionDb::from_json(&Json::Arr(vec![Json::Num(1.0)])).is_err(),
+                    "non-db JSON rejected",
+                )
+            },
+        );
+    }
+
+    /// Pre-policy databases (no span-cost arrays) still load; the spans
+    /// come back unpriced, and malformed span arrays are rejected.
+    #[test]
+    fn legacy_db_without_span_costs_loads() {
+        let text = r#"[{"app":"virus","network":"wifi","migrate":["V.scan"],
+                       "expected_ms":1.5,"local_ms":9.5}]"#;
+        let db = PartitionDb::from_json(&json::parse(text).unwrap()).unwrap();
+        let e = db.lookup("virus", "wifi").unwrap();
+        assert!(e.span_local_ms.is_empty() && e.span_clone_ms.is_empty());
+
+        let bad = r#"[{"app":"v","network":"w","migrate":[],"span_local_ms":"fast"}]"#;
+        assert!(PartitionDb::from_json(&json::parse(bad).unwrap()).is_err());
+    }
+
+    /// The borrow-keyed lookup returns exactly what owned-key access
+    /// would, including for unicode and empty-string keys.
+    #[test]
+    fn borrowed_lookup_matches_owned_semantics() {
+        let mut db = PartitionDb::new();
+        db.put(entry("app-ü", "wifi", &["A.m"]));
+        db.put(entry("", "", &[]));
+        db.put(entry("virus", "3g", &[]));
+        assert_eq!(db.lookup("app-ü", "wifi").unwrap().migrate, vec!["A.m"]);
+        assert!(db.lookup("", "").is_some(), "empty keys are valid keys");
+        assert!(db.lookup("app-ü", "3g").is_none(), "no cross-pairing");
+        assert!(db.lookup("virus", "wif").is_none(), "no prefix matches");
     }
 
     #[test]

@@ -66,6 +66,18 @@ impl ProfileTree {
             .sum()
     }
 
+    /// Total *inclusive* cost of a method across its invocations (body
+    /// plus callees) — the span the runtime policy engine prices: when
+    /// R(m)=1, the whole subtree under each invocation of `m` runs on
+    /// the other side. Not meaningful for recursive methods (nested
+    /// invocations double-count), which are never partition candidates.
+    pub fn method_inclusive_us(&self, m: MRef) -> f64 {
+        self.invocations_of(m)
+            .into_iter()
+            .map(|i| self.nodes[i].cost_us)
+            .sum()
+    }
+
     /// Total edge state bytes across invocations of a method.
     pub fn method_state_bytes(&self, m: MRef) -> u64 {
         self.invocations_of(m)
@@ -138,6 +150,10 @@ mod tests {
         // two invocations of a, summed residual = 5 + 30
         assert_eq!(t.invocation_count(m(1)), 2);
         assert!((t.method_residual_us(m(1)) - 35.0).abs() < 1e-9);
+        // inclusive spans: a = 40 + 30, b = 10 (leaf: inclusive ==
+        // residual)
+        assert!((t.method_inclusive_us(m(1)) - 70.0).abs() < 1e-9);
+        assert!((t.method_inclusive_us(m(2)) - 10.0).abs() < 1e-9);
         assert_eq!(t.total_us(), 100.0);
     }
 

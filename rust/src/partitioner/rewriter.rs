@@ -1,18 +1,28 @@
 //! Binary rewriter (paper §3, §5 — the Javassist role).
 //!
-//! Takes the original executable and a [`Partition`], and produces the
-//! modified executable: every R(m)=1 method gets a `CcStart(pid)` at its
+//! Takes the original executable and a set of migratory methods, and
+//! produces the modified executable: each gets a `CcStart(pid)` at its
 //! entry (the migration point) and a `CcStop(pid)` before every return
 //! (the reintegration point). Branch targets are remapped, and the result
 //! must re-verify.
+//!
+//! Two flows share the machinery:
+//! * [`rewrite_with_partition`] — the paper's pick-a-binary-offline flow:
+//!   only the solver's R(m)=1 methods get points.
+//! * [`rewrite_with_candidates`] — the adaptive flow: ONE binary carries
+//!   every candidate migration point, and the runtime policy engine
+//!   (`exec::policy`) answers migrate/local per invocation. A `CcStart`
+//!   the policy declines is a no-op continuation, so the conditional
+//!   binary run all-local is semantically the monolithic binary.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::appvm::bytecode::{Instr, MRef};
 use crate::appvm::class::Program;
 use crate::appvm::verifier::verify_program;
 use crate::error::Result;
 
+use super::cfg::Cfg;
 use super::solver::Partition;
 
 /// Rewrite `program` with the partition's migration points. Point ids are
@@ -21,10 +31,38 @@ pub fn rewrite_with_partition(
     program: &Program,
     partition: &Partition,
 ) -> Result<(Program, HashMap<u32, MRef>)> {
+    rewrite_with_candidates(program, &partition.migrate)
+}
+
+/// Every method that can host a conditional migration point: bytecode
+/// app methods that are not pinned (V_M), not recursive (Property 3
+/// with m1 = m2), and not the entry — the same exclusions the solver
+/// applies to its R variables. Nesting among candidates is fine: while
+/// a span runs offloaded, inner `CcStart`s at the clone are no-ops, and
+/// while it runs locally the driver decides each inner point on its own.
+pub fn candidate_points(program: &Program, cfg: &Cfg) -> BTreeSet<MRef> {
+    let entry = program.entry().ok();
+    program
+        .app_methods()
+        .into_iter()
+        .filter(|&m| {
+            let def = program.method(m);
+            !(def.pinned || def.is_native() || cfg.recursive(m) || Some(m) == entry)
+        })
+        .collect()
+}
+
+/// Rewrite `program` with a conditional migration point in every method
+/// of `candidates`: the one-binary adaptive flow. Point ids are assigned
+/// in method order; the returned map gives pid -> method.
+pub fn rewrite_with_candidates(
+    program: &Program,
+    candidates: &BTreeSet<MRef>,
+) -> Result<(Program, HashMap<u32, MRef>)> {
     let mut out = program.clone();
     let mut points = HashMap::new();
     let mut next_pid: u32 = 0;
-    for &m in &partition.migrate {
+    for &m in candidates {
         let pid = next_pid;
         next_pid += 1;
         points.insert(pid, m);
@@ -123,6 +161,7 @@ end
             locations: HashMap::new(),
             expected_us: 0.0,
             local_us: 0.0,
+            span_costs: HashMap::new(),
         }
     }
 
@@ -219,6 +258,48 @@ end
             matches!(code[t as usize], Instr::CcStop(_))
         });
         assert!(lands_on_stop);
+    }
+
+    #[test]
+    fn candidate_rewrite_points_every_eligible_method() {
+        let program = assemble(SRC).unwrap();
+        let cfg = crate::partitioner::Cfg::build(&program);
+        let candidates = candidate_points(&program, &cfg);
+        // `main` is excluded (entry), `work` is eligible.
+        let work = program.resolve("C", "work").unwrap();
+        let main = program.entry().unwrap();
+        assert!(candidates.contains(&work));
+        assert!(!candidates.contains(&main));
+
+        let (out, points) = rewrite_with_candidates(&program, &candidates).unwrap();
+        assert_eq!(points.len(), candidates.len());
+        for (&pid, &m) in &points {
+            assert_eq!(out.method(m).migration_point, Some(pid));
+            assert!(matches!(out.method(m).code[0], Instr::CcStart(p) if p == pid));
+        }
+        // The conditional binary run all-local computes the same result
+        // as the unrewritten one (the no-op continuation contract).
+        let run = |prog: Arc<Program>| -> i64 {
+            let main = prog.entry().unwrap();
+            let mut p = Process::new(
+                prog.clone(),
+                DeviceSpec::phone_g1(),
+                Location::Mobile,
+                NodeEnv::with_rust_compute(SimFs::new()),
+            );
+            let tid = p.spawn_thread(main, &[]).unwrap();
+            loop {
+                match run_thread(&mut p, tid, &mut NoHooks, 1_000_000).unwrap() {
+                    RunExit::Completed(_) => break,
+                    RunExit::MigrationPoint { .. } | RunExit::ReintegrationPoint { .. } => {
+                        continue
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            p.statics[main.class.0 as usize][0].as_int().unwrap()
+        };
+        assert_eq!(run(Arc::new(program)), run(Arc::new(out)));
     }
 
     #[test]

@@ -26,6 +26,16 @@ use super::cfg::Cfg;
 use super::cost_model::CostModel;
 use super::lp::{solve_ilp, Constraint, IlpResult, Sense};
 
+/// Per-invocation profiled cost of one migratory span (µs, virtual):
+/// the span's inclusive time (body + callees) run on the phone vs at
+/// the clone. The runtime policy engine prices migrate-vs-local per
+/// invocation with these (`exec::policy`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpanCostUs {
+    pub local_us: f64,
+    pub clone_us: f64,
+}
+
 /// A partitioning: the R(m)=1 set plus induced locations and costs.
 #[derive(Debug, Clone)]
 pub struct Partition {
@@ -37,6 +47,10 @@ pub struct Partition {
     pub expected_us: f64,
     /// Cost of the all-local execution (µs) — the comparison baseline.
     pub local_us: f64,
+    /// Per-invocation span costs for each R(m)=1 method, from the
+    /// profile trees (filled by `pipeline::partition_from_trees`; empty
+    /// when a partition is constructed without profiling).
+    pub span_costs: HashMap<MRef, SpanCostUs>,
 }
 
 impl Partition {
@@ -213,6 +227,7 @@ pub fn solve_partition(
         locations,
         expected_us: local_us + obj,
         local_us,
+        span_costs: HashMap::new(),
     };
     let report = SolveReport {
         n_vars: 2 * n,
@@ -505,6 +520,7 @@ end
             locations: HashMap::new(),
             expected_us: 0.0,
             local_us: 0.0,
+            span_costs: HashMap::new(),
         };
         assert!(validate_partition(&program, &cfg, &p).is_err());
         let _ = MRef {

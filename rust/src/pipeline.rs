@@ -17,7 +17,7 @@ use crate::error::Result;
 use crate::exec::{run_distributed, run_monolithic, DistOutcome, InlineClone, MonoOutcome};
 use crate::partitioner::{
     profile_run, rewrite_with_partition, solve_partition, validate_partition, Cfg, CostModel,
-    Partition, ProfileTree,
+    Partition, ProfileTree, SpanCostUs,
 };
 
 /// Timing + size diagnostics of one full partitioning run (E2).
@@ -107,8 +107,23 @@ pub fn partition_from_trees(
         cfg.phone.cpu_factor,
         cfg.clone.cpu_factor,
     );
-    let (partition, solve_report) = solve_partition(&program, &cfg_graph, &cost_model)?;
+    let (mut partition, solve_report) = solve_partition(&program, &cfg_graph, &cost_model)?;
     validate_partition(&program, &cfg_graph, &partition)?;
+    // Price each chosen span for the runtime policy engine: the
+    // per-invocation inclusive time of the method on each platform
+    // (the profile trees are already device-scaled virtual time).
+    let migrate: Vec<_> = partition.migrate.iter().copied().collect();
+    for m in migrate {
+        let n_mobile = trees.0.invocation_count(m).max(1) as f64;
+        let n_clone = trees.1.invocation_count(m).max(1) as f64;
+        partition.span_costs.insert(
+            m,
+            SpanCostUs {
+                local_us: trees.0.method_inclusive_us(m) / n_mobile,
+                clone_us: trees.1.method_inclusive_us(m) / n_clone,
+            },
+        );
+    }
     Ok((partition, static_s, solve_report.solve_wall_s))
 }
 

@@ -12,9 +12,14 @@ use clonecloud::apps::{
 use clonecloud::appvm::natives::{ComputeBackend, RustCompute};
 use clonecloud::config::{Config, NetworkProfile};
 use clonecloud::device::Location;
-use clonecloud::exec::{run_distributed, run_monolithic, InlineClone};
+use clonecloud::exec::{
+    run_distributed, run_distributed_policy, run_monolithic, InlineClone, PolicyEngine,
+};
+use clonecloud::migration::MobileSession;
 use clonecloud::nodemanager::{CloneServer, NodeManager, TcpEndpoint, TcpTransport};
-use clonecloud::partitioner::{rewrite_with_partition, solver::Partition};
+use clonecloud::partitioner::{
+    candidate_points, rewrite_with_candidates, rewrite_with_partition, solver::Partition, Cfg,
+};
 use clonecloud::pipeline::{partition_from_trees, profile_pair, table1_row};
 use clonecloud::util::rng::Rng;
 
@@ -40,6 +45,7 @@ fn forced_partition(program: &clonecloud::appvm::Program, names: &[(&str, &str)]
         locations: Default::default(),
         expected_us: 0.0,
         local_us: 0.0,
+        span_costs: Default::default(),
     }
 }
 
@@ -86,6 +92,88 @@ fn distributed_equals_monolithic_for_all_apps() {
         let dist_result = app.check(&phone, Size::Small).unwrap();
         assert_eq!(mono_result, dist_result, "{}", app.name());
     }
+}
+
+/// The conditional binary: ONE rewritten executable carries every
+/// candidate migration point, and the runtime policy engine answers
+/// migrate/local per invocation — offload-everything and local-everything
+/// both reproduce the monolithic result from the same binary (nested
+/// candidate points included).
+#[test]
+fn conditional_binary_serves_both_policies() {
+    let cfg = cfg();
+    let app = VirusScan;
+    let program = app.program();
+
+    let mut mono = build_process(
+        &app, program.clone(), Size::Small, &cfg, Location::Mobile, backend(), false,
+    )
+    .unwrap();
+    run_monolithic(&mut mono).unwrap();
+    let mono_result = app.check(&mono, Size::Small).unwrap();
+
+    let cfg_graph = Cfg::build(&program);
+    let candidates = candidate_points(&program, &cfg_graph);
+    assert!(
+        candidates.len() >= 2,
+        "virus scanner has nested candidates (scan_all -> scan_file)"
+    );
+    let (rewritten, points) = rewrite_with_candidates(&program, &candidates).unwrap();
+    assert_eq!(
+        rewritten.migration_points().len(),
+        points.len(),
+        "the binary itself carries the pid map"
+    );
+    let rewritten = Arc::new(rewritten);
+
+    // Cold auto engine: static choice offloads at the outermost point.
+    let mut phone = build_process(
+        &app, rewritten.clone(), Size::Small, &cfg, Location::Mobile, backend(), false,
+    )
+    .unwrap();
+    let clone = build_process(
+        &app, rewritten.clone(), Size::Small, &cfg, Location::Clone, backend(), false,
+    )
+    .unwrap();
+    let mut channel = InlineClone::new(clone, cfg.costs.clone());
+    let mut engine = PolicyEngine::auto();
+    let out = run_distributed_policy(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &cfg.costs,
+        &mut MobileSession::disabled(),
+        &mut engine,
+    )
+    .unwrap();
+    assert!(out.offloads >= 1 && out.migrations >= 1);
+    assert_eq!(app.check(&phone, Size::Small).unwrap(), mono_result);
+
+    // Forced local on the SAME binary: every point (nested ones too)
+    // continues in place; nothing is captured or sent.
+    let mut phone = build_process(
+        &app, rewritten.clone(), Size::Small, &cfg, Location::Mobile, backend(), false,
+    )
+    .unwrap();
+    let clone2 = build_process(
+        &app, rewritten, Size::Small, &cfg, Location::Clone, backend(), false,
+    )
+    .unwrap();
+    let mut channel = InlineClone::new(clone2, cfg.costs.clone());
+    let mut engine = PolicyEngine::force_local();
+    let out = run_distributed_policy(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &cfg.costs,
+        &mut MobileSession::disabled(),
+        &mut engine,
+    )
+    .unwrap();
+    assert_eq!(out.migrations, 0);
+    assert!(out.local_fallbacks >= candidates.len());
+    assert_eq!(out.transfer.up + out.transfer.down, 0);
+    assert_eq!(app.check(&phone, Size::Small).unwrap(), mono_result);
 }
 
 /// The partitioner's choices are stable and legal across all apps/sizes/
