@@ -19,6 +19,36 @@ use super::bytecode::ClassId;
 use super::value::{ObjBody, ObjId, Object, Value};
 use crate::error::{CloneCloudError, Result};
 
+/// Object-ids per heap page (`1 << PAGE_SHIFT`). Ids are monotonic, so a
+/// page is a fixed contiguous id range; each page carries the max epoch
+/// ever stamped onto it by the same barriers that stamp objects. A delta
+/// capture compares the page epoch once and skips a clean page wholesale,
+/// making the dirty scan O(dirty pages) instead of O(heap).
+pub const PAGE_SHIFT: u32 = 6;
+/// Object-ids per heap page (64).
+pub const PAGE_OBJECTS: u64 = 1 << PAGE_SHIFT;
+
+/// Result of one page scan: every live object stamped after `base_epoch`
+/// (in id order, so capsules stay deterministic), plus the ids on dirty
+/// pages that no longer resolve — objects removed since the sync, the
+/// deletion signal (`Heap::remove` and `Heap::gc` stamp the page of every
+/// id they drop). The counters feed the `pages_scanned`/`pages_dirty`
+/// capture metrics.
+#[derive(Debug, Clone, Default)]
+pub struct PageScan {
+    /// Live objects with `epoch > base_epoch`, ascending by id.
+    pub dirty: Vec<ObjId>,
+    /// Ids on scanned pages with no live object behind them.
+    pub missing: Vec<u64>,
+    /// Pages that exist (have ever been stamped or allocated into).
+    pub pages_total: usize,
+    /// Pages whose contents were actually examined (page epoch newer
+    /// than the baseline).
+    pub pages_scanned: usize,
+    /// Scanned pages that yielded at least one live dirty object.
+    pub pages_dirty: usize,
+}
+
 /// The object heap of one VM process.
 #[derive(Debug, Clone, Default)]
 pub struct Heap {
@@ -29,6 +59,10 @@ pub struct Heap {
     /// Current mutation epoch. Advanced by the migrator at each sync
     /// point; stamped onto objects by `alloc` and `get_mut`.
     epoch: u64,
+    /// Max epoch per id page (see [`PAGE_OBJECTS`]), maintained by the
+    /// same barriers that stamp `Object::epoch` — plus `remove`/`gc`, so
+    /// a page scan also surfaces deletions.
+    page_epochs: Vec<u64>,
 }
 
 impl Heap {
@@ -38,7 +72,63 @@ impl Heap {
             next_id: 1,
             zygote_counters: HashMap::new(),
             epoch: 0,
+            page_epochs: Vec::new(),
         }
+    }
+
+    /// Stamp the page holding `id` with the current epoch (epochs only
+    /// grow, so assignment preserves the per-page max).
+    #[inline]
+    fn stamp_page(&mut self, id: u64) {
+        let pi = (id >> PAGE_SHIFT) as usize;
+        if pi >= self.page_epochs.len() {
+            self.page_epochs.resize(pi + 1, 0);
+        }
+        self.page_epochs[pi] = self.epoch;
+    }
+
+    /// Number of id pages this heap spans.
+    pub fn page_count(&self) -> usize {
+        self.page_epochs.len()
+    }
+
+    /// Max epoch stamped onto a page (0 for pages never touched).
+    pub fn page_epoch(&self, page: usize) -> u64 {
+        self.page_epochs.get(page).copied().unwrap_or(0)
+    }
+
+    /// Scan only the pages stamped after `base_epoch` and return their
+    /// dirty live objects plus the ids that vanished (removed objects).
+    /// Work is O(dirty pages), not O(heap) — the whole point of the
+    /// page-epoch layer.
+    pub fn scan_dirty_pages(&self, base_epoch: u64) -> PageScan {
+        let mut out = PageScan {
+            pages_total: self.page_epochs.len(),
+            ..PageScan::default()
+        };
+        for (pi, &pe) in self.page_epochs.iter().enumerate() {
+            if pe <= base_epoch {
+                continue;
+            }
+            out.pages_scanned += 1;
+            let lo = ((pi as u64) << PAGE_SHIFT).max(1); // id 0 is never allocated
+            let hi = (((pi as u64) + 1) << PAGE_SHIFT).min(self.next_id);
+            let mut any = false;
+            for id in lo..hi {
+                match self.objects.get(&id) {
+                    Some(o) if o.epoch > base_epoch => {
+                        out.dirty.push(ObjId(id));
+                        any = true;
+                    }
+                    Some(_) => {}
+                    None => out.missing.push(id),
+                }
+            }
+            if any {
+                out.pages_dirty += 1;
+            }
+        }
+        out
     }
 
     /// Current mutation epoch.
@@ -69,6 +159,7 @@ impl Heap {
         self.next_id += 1;
         obj.epoch = self.epoch;
         self.objects.insert(id.0, obj);
+        self.stamp_page(id.0);
         id
     }
 
@@ -91,6 +182,7 @@ impl Heap {
         self.next_id = self.next_id.max(id.0 + 1);
         obj.epoch = self.epoch;
         self.objects.insert(id.0, obj);
+        self.stamp_page(id.0);
         Ok(())
     }
 
@@ -105,6 +197,9 @@ impl Heap {
     /// stamped with the current mutation epoch (delta migration).
     pub fn get_mut(&mut self, id: ObjId) -> Result<&mut Object> {
         let epoch = self.epoch;
+        if self.objects.contains_key(&id.0) {
+            self.stamp_page(id.0);
+        }
         let o = self
             .objects
             .get_mut(&id.0)
@@ -125,7 +220,13 @@ impl Heap {
     }
 
     pub fn remove(&mut self, id: ObjId) -> Option<Object> {
-        self.objects.remove(&id.0)
+        let gone = self.objects.remove(&id.0);
+        if gone.is_some() {
+            // A removal is a mutation of the page: the delta scan reports
+            // the vanished id, which is how deletions reach the peer.
+            self.stamp_page(id.0);
+        }
+        gone
     }
 
     /// Iterate (id, object) in unspecified order.
@@ -157,9 +258,19 @@ impl Heap {
     pub fn gc(&mut self, roots: &[ObjId]) -> usize {
         let live = self.reachable(roots);
         let live_set: HashMap<u64, ()> = live.iter().map(|r| (r.0, ())).collect();
-        let before = self.objects.len();
-        self.objects.retain(|id, _| live_set.contains_key(id));
-        before - self.objects.len()
+        let dead: Vec<u64> = self
+            .objects
+            .keys()
+            .filter(|id| !live_set.contains_key(id))
+            .copied()
+            .collect();
+        for &id in &dead {
+            self.objects.remove(&id);
+            // Stamp every page a collected id lived on: the delta scan's
+            // missing-id pass is how the peer learns about deletions.
+            self.stamp_page(id);
+        }
+        dead.len()
     }
 
     /// Total approximate byte size of a set of objects.
@@ -343,5 +454,88 @@ mod tests {
     fn dangling_reference_is_a_fault() {
         let h = Heap::new();
         assert!(h.get(ObjId(99)).is_err());
+    }
+
+    #[test]
+    fn page_epochs_track_every_barrier() {
+        let mut h = Heap::new();
+        // Fill a bit more than one page so two pages exist.
+        let ids: Vec<ObjId> = (0..PAGE_OBJECTS + 8)
+            .map(|_| h.alloc(Object::new_fields(ClassId(0), 1)))
+            .collect();
+        assert_eq!(h.page_count(), 2);
+        assert_eq!(h.page_epoch(0), 0);
+
+        let base = h.advance_epoch() - 1; // baseline recorded at epoch 0
+        let scan = h.scan_dirty_pages(base);
+        assert!(scan.dirty.is_empty(), "nothing written since the sync");
+        assert_eq!(scan.pages_scanned, 0, "clean pages skipped wholesale");
+
+        // One store dirties exactly one page.
+        h.get_mut(ids[3]).unwrap();
+        let scan = h.scan_dirty_pages(base);
+        assert_eq!(scan.dirty, vec![ids[3]]);
+        assert_eq!(scan.pages_scanned, 1);
+        assert_eq!(scan.pages_dirty, 1);
+        assert!(scan.missing.is_empty());
+
+        // An allocation stamps its page too.
+        let fresh = h.alloc(Object::new_fields(ClassId(0), 0));
+        let scan = h.scan_dirty_pages(base);
+        assert!(scan.dirty.contains(&fresh));
+
+        // peek_mut bypasses the page barrier exactly like the object one.
+        h.advance_epoch();
+        let base2 = h.epoch() - 1;
+        h.peek_mut(ids[5]).unwrap();
+        assert!(h.scan_dirty_pages(base2).dirty.is_empty());
+    }
+
+    #[test]
+    fn removals_surface_as_missing_ids_on_dirty_pages() {
+        let mut h = Heap::new();
+        let ids: Vec<ObjId> = (0..10)
+            .map(|_| h.alloc(Object::new_fields(ClassId(0), 0)))
+            .collect();
+        let base = h.epoch();
+        h.advance_epoch();
+        h.remove(ids[4]);
+        let scan = h.scan_dirty_pages(base);
+        assert!(scan.missing.contains(&ids[4].0));
+        assert!(!scan.missing.contains(&0), "id 0 never existed");
+        assert_eq!(scan.pages_scanned, 1);
+        assert_eq!(scan.pages_dirty, 0, "no live dirty object on the page");
+
+        // gc() stamps the pages of everything it sweeps.
+        let keep = ids[0];
+        h.advance_epoch();
+        let base2 = h.epoch() - 1;
+        let collected = h.gc(&[keep]);
+        assert!(collected >= 8);
+        let scan = h.scan_dirty_pages(base2);
+        assert!(scan.missing.len() >= 8, "sweep reported: {scan:?}");
+
+        // A later baseline no longer sees the old removals.
+        h.advance_epoch();
+        assert!(h.scan_dirty_pages(h.epoch()).missing.is_empty());
+    }
+
+    #[test]
+    fn dirty_scan_is_in_id_order_and_deterministic() {
+        let mut h = Heap::new();
+        let ids: Vec<ObjId> = (0..200)
+            .map(|_| h.alloc(Object::new_fields(ClassId(0), 1)))
+            .collect();
+        let base = h.epoch();
+        h.advance_epoch();
+        for &i in &[150usize, 3, 77, 42, 199] {
+            h.get_mut(ids[i]).unwrap();
+        }
+        let scan = h.scan_dirty_pages(base);
+        let mut want: Vec<ObjId> = [150usize, 3, 77, 42, 199].iter().map(|&i| ids[i]).collect();
+        want.sort_unstable();
+        assert_eq!(scan.dirty, want);
+        assert!(scan.pages_scanned <= 5);
+        assert!(scan.pages_total >= 3);
     }
 }

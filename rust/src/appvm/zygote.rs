@@ -16,7 +16,8 @@ use std::sync::Arc;
 use super::bytecode::ClassId;
 use super::class::{ClassDef, Program};
 use super::heap::Heap;
-use super::value::{ObjBody, Object, Value};
+use super::process::Process;
+use super::value::{ObjBody, ObjId, Object, Value};
 use crate::util::rng::Rng;
 
 /// Names of the synthetic system classes warmed in the template.
@@ -77,6 +78,32 @@ pub fn build_template(program: &Arc<Program>, n_objects: usize, seed: u64) -> He
         prev = Some(Value::Ref(id));
     }
     heap
+}
+
+/// Root the WHOLE template graph from an app static: a registry
+/// `RefArray` referencing every Zygote-named object, parked in
+/// `statics[class][slot]` — the shape where framework state (resource
+/// tables, interned strings) keeps the template reachable, which the
+/// Zygote-scale benches and soak tests exercise. Pre-session setup:
+/// the array rides the normal allocator, the static slot is written
+/// directly (as app builders do before the first sync point).
+pub fn root_template_in_static(p: &mut Process, class: usize, slot: usize) {
+    let mut zy: Vec<ObjId> = p
+        .heap
+        .iter()
+        .filter(|(_, o)| o.zygote_seq.is_some())
+        .map(|(id, _)| id)
+        .collect();
+    zy.sort_unstable();
+    let refs: Vec<Value> = zy.into_iter().map(Value::Ref).collect();
+    let arr_class = p.array_class;
+    let arr = p.heap.alloc_ref_array(arr_class, refs.len());
+    if let Some(obj) = p.heap.peek_mut(arr) {
+        if let ObjBody::RefArray(v) = &mut obj.body {
+            v.copy_from_slice(&refs);
+        }
+    }
+    p.statics[class][slot] = Value::Ref(arr);
 }
 
 #[cfg(test)]

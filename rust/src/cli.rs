@@ -215,7 +215,16 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         if cfg.delta_migration {
             channel = channel.with_delta();
         }
+        if cfg.session_dict {
+            channel = channel.with_dict();
+        }
+        if !cfg.capture.paged {
+            channel = channel.with_per_object_captures();
+        }
         let mut session = crate::migration::MobileSession::new(cfg.delta_migration);
+        session.set_dict_enabled(cfg.session_dict);
+        session.set_paged(cfg.capture.paged);
+        session.set_gc_interval(cfg.capture.mobile_gc_interval);
         if cfg.heartbeat_idle_ms > 0 {
             session.heartbeat_every(std::time::Duration::from_millis(cfg.heartbeat_idle_ms));
         }
@@ -388,6 +397,8 @@ fn cmd_farm(flags: &HashMap<String, String>) -> Result<()> {
         // on one worker (affinity); other policies would thrash NeedFull.
         let delta = cfg.delta_migration && handle.delta_friendly();
         session.set_delta(delta);
+        // Same placement constraint for the session dictionary replica.
+        session.set_dict(cfg.session_dict && handle.delta_friendly());
         joins.push(std::thread::spawn(move || -> Result<()> {
             let mut p = crate::appvm::Process::fork_from_zygote(
                 program.clone(),
@@ -566,7 +577,18 @@ fn cmd_policy(flags: &HashMap<String, String>) -> Result<()> {
     if cfg.delta_migration {
         channel = channel.with_delta();
     }
+    if cfg.session_dict {
+        channel = channel.with_dict();
+    }
+    if !cfg.capture.paged {
+        // The per-object ablation must cover BOTH directions, or the
+        // scan counters would mix capture modes.
+        channel = channel.with_per_object_captures();
+    }
     let mut session = crate::migration::MobileSession::new(cfg.delta_migration);
+    session.set_dict_enabled(cfg.session_dict);
+    session.set_paged(cfg.capture.paged);
+    session.set_gc_interval(cfg.capture.mobile_gc_interval);
     let profs = profiles.clone();
     let out = run_distributed_with(
         &mut phone,

@@ -159,6 +159,29 @@ impl Default for FarmParams {
     }
 }
 
+/// Capture-path tunables (the `capture` config section; see
+/// `migration::capture`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CaptureParams {
+    /// Delta captures use the page-epoch dirty scan (O(dirty pages))
+    /// instead of the per-object baseline traversal. Off = the PR 4
+    /// shape, kept for ablation.
+    pub paged: bool,
+    /// Run a mobile-side heap GC every this many delta captures
+    /// (0 = never). On the paged path GC is what turns unreachable
+    /// baseline members into the capsule's `deleted` list.
+    pub mobile_gc_interval: u64,
+}
+
+impl Default for CaptureParams {
+    fn default() -> Self {
+        CaptureParams {
+            paged: true,
+            mobile_gc_interval: 8,
+        }
+    }
+}
+
 /// Runtime partition-policy tunables (the `policy` config section; see
 /// `exec::policy`). The `force` override is kept as a string here and
 /// validated by `exec::policy::ForceMode::parse` when an engine is
@@ -218,6 +241,13 @@ pub struct Config {
     /// idled this long (ms, 0 = never): a diverged clone answers
     /// `NeedFull` *before* a doomed delta is built and shipped.
     pub heartbeat_idle_ms: u64,
+    /// Session string dictionary: capsules after the first ship only
+    /// dictionary additions plus indices (negotiated via the Hello
+    /// `CAP_SESSION_DICT` bit; off = per-capsule tables even when the
+    /// peer offers it).
+    pub session_dict: bool,
+    /// Capture-path tunables (page-epoch scan, mobile GC cadence).
+    pub capture: CaptureParams,
     /// Clone-farm parameters (multi-tenant serving).
     pub farm: FarmParams,
     /// Runtime partition-policy parameters (per-invocation
@@ -236,6 +266,8 @@ impl Default for Config {
             seed: 0xC10E,
             delta_migration: true,
             heartbeat_idle_ms: 30_000,
+            session_dict: true,
+            capture: CaptureParams::default(),
             farm: FarmParams::default(),
             policy: PolicyParams::default(),
         }
@@ -296,6 +328,38 @@ impl Config {
                         .as_usize()
                         .ok_or_else(|| CloneCloudError::Config("heartbeat_idle_ms".into()))?
                         as u64
+                }
+                "session_dict" => {
+                    cfg.session_dict = val
+                        .as_bool()
+                        .ok_or_else(|| CloneCloudError::Config("session_dict".into()))?
+                }
+                "capture" => {
+                    let c = val
+                        .as_obj()
+                        .ok_or_else(|| CloneCloudError::Config("capture must be object".into()))?;
+                    for (ck, cv) in c {
+                        match ck.as_str() {
+                            "paged" => {
+                                cfg.capture.paged = cv.as_bool().ok_or_else(|| {
+                                    CloneCloudError::Config("capture.paged".into())
+                                })?
+                            }
+                            "mobile_gc_interval" => {
+                                cfg.capture.mobile_gc_interval =
+                                    cv.as_usize().ok_or_else(|| {
+                                        CloneCloudError::Config(
+                                            "capture.mobile_gc_interval".into(),
+                                        )
+                                    })? as u64
+                            }
+                            other => {
+                                return Err(CloneCloudError::Config(format!(
+                                    "unknown capture key '{other}'"
+                                )))
+                            }
+                        }
+                    }
                 }
                 "costs" => {
                     let c = val
@@ -475,6 +539,29 @@ mod tests {
         assert!(!Config::from_json(&v).unwrap().delta_migration);
         let bad = json::parse(r#"{"delta_migration": 3}"#).unwrap();
         assert!(Config::from_json(&bad).is_err(), "non-bool rejected");
+    }
+
+    #[test]
+    fn session_dict_and_capture_knobs() {
+        let d = Config::default();
+        assert!(d.session_dict, "dictionary on by default");
+        assert!(d.capture.paged, "paged captures on by default");
+        assert_eq!(d.capture.mobile_gc_interval, 8);
+
+        let v = json::parse(
+            r#"{"session_dict": false,
+                "capture": {"paged": false, "mobile_gc_interval": 0}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert!(!cfg.session_dict);
+        assert!(!cfg.capture.paged, "per-object ablation reachable");
+        assert_eq!(cfg.capture.mobile_gc_interval, 0, "GC can be disabled");
+
+        let bad = json::parse(r#"{"capture": {"pagde": true}}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err(), "typo'd capture key rejected");
+        let bad2 = json::parse(r#"{"session_dict": 3}"#).unwrap();
+        assert!(Config::from_json(&bad2).is_err(), "non-bool rejected");
     }
 
     #[test]

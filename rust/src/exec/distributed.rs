@@ -38,8 +38,8 @@ use crate::appvm::value::Value;
 use crate::config::{CostParams, NetworkProfile};
 use crate::error::{CloneCloudError, Result};
 use crate::migration::{
-    collect_slot_garbage, Capsule, CloneSession, MigrationPhases, Migrator, MobileSession,
-    CAPSULE_CLOCK_OFFSET,
+    collect_slot_garbage, Capsule, CloneSession, DictMode, DictRead, MigrationPhases, Migrator,
+    MobileSession, CAPSULE_CLOCK_OFFSET,
 };
 use crate::nodemanager::{
     open_frame, patch_frame_payload, seal_frame, seal_frame_keep_head, Codec, HeartbeatOutcome,
@@ -80,6 +80,15 @@ pub trait CloneChannel {
         Codec::None
     }
 
+    /// Whether this channel negotiated the session string dictionary
+    /// (`CAP_SESSION_DICT`). When true, every capsule on this channel
+    /// carries the self-describing dictionary mode byte; the driver
+    /// encodes against the session's replica (or the inline table when
+    /// the session has the dictionary disabled).
+    fn dict_capable(&self) -> bool {
+        false
+    }
+
     /// Probe the clone's session baseline with a digest heartbeat. A
     /// `Divergent` answer must drop the mobile baseline (the impl does),
     /// so the next capture goes out full instead of as a doomed delta.
@@ -108,6 +117,10 @@ impl<T: Transport> CloneChannel for NodeManager<T> {
 
     fn codec(&self) -> Codec {
         self.negotiated_codec()
+    }
+
+    fn dict_capable(&self) -> bool {
+        self.dict_negotiated()
     }
 
     fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {
@@ -158,6 +171,20 @@ impl InlineClone {
         self
     }
 
+    /// Negotiate the session string dictionary on this channel, as a
+    /// wire channel whose Hello carried `CAP_SESSION_DICT` would.
+    pub fn with_dict(mut self) -> InlineClone {
+        self.session.set_dict_enabled(true);
+        self
+    }
+
+    /// Capture with the per-object baseline traversal instead of the
+    /// page-epoch scan — the PR 4 shape, kept as the bench baseline.
+    pub fn with_per_object_captures(mut self) -> InlineClone {
+        self.session.set_paged(false);
+        self
+    }
+
     /// Re-send the full statics section in every delta — the PR 2 wire
     /// shape (bench ablation only).
     pub fn with_full_statics(mut self) -> InlineClone {
@@ -176,9 +203,13 @@ impl InlineClone {
 impl CloneChannel for InlineClone {
     fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
         let up = forward.len() as u64;
-        let capsule = {
+        let (capsule, used_dict) = {
             let raw = open_frame(&forward)?;
-            Capsule::decode(&raw)?
+            if self.session.dict_enabled() {
+                Capsule::decode_with(&raw, DictRead::Negotiated(self.session.dict()))?
+            } else {
+                (Capsule::decode(&raw)?, false)
+            }
         };
         let (tid, _) = self
             .migrator
@@ -204,7 +235,17 @@ impl CloneChannel for InlineClone {
         if self.gc_interval > 0 && self.migrations as u64 % self.gc_interval == 0 {
             collect_slot_garbage(&mut self.clone, &self.session);
         }
-        let bytes = seal_frame(self.codec, rcapsule.encode());
+        // Mirror the forward capsule's dictionary mode on the reply.
+        let raw = if self.session.dict_enabled() {
+            if used_dict {
+                rcapsule.encode_with(DictMode::Shared(self.session.dict()))
+            } else {
+                rcapsule.encode_with(DictMode::Inline)
+            }
+        } else {
+            rcapsule.encode()
+        };
+        let bytes = seal_frame(self.codec, raw);
         let down = bytes.len() as u64;
         Ok((bytes, TransferBytes { up, down }))
     }
@@ -219,6 +260,10 @@ impl CloneChannel for InlineClone {
 
     fn codec(&self) -> Codec {
         self.codec
+    }
+
+    fn dict_capable(&self) -> bool {
+        self.session.dict_enabled()
     }
 
     fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {
@@ -262,6 +307,18 @@ pub struct DistOutcome {
     pub full_roundtrips: usize,
     /// Deltas rejected by the clone (`NeedFull`) and resent in full.
     pub delta_fallbacks: usize,
+    /// Full capsules rejected over a session-dictionary digest mismatch
+    /// (both replicas reset; the resend re-seeds).
+    pub dict_fallbacks: usize,
+    /// Capture work: objects examined across all captures, and (paged
+    /// captures) pages opened / found dirty by the epoch scan.
+    pub objects_scanned: usize,
+    pub pages_scanned: usize,
+    pub pages_dirty: usize,
+    /// Session-dictionary savings this run: bytes the per-capsule table
+    /// would have re-shipped, and entries newly learned.
+    pub dict_hit_bytes: u64,
+    pub dict_additions: u64,
     /// Baseline divergences a digest heartbeat caught *before* a doomed
     /// delta was built and shipped.
     pub heartbeat_preempts: usize,
@@ -367,6 +424,10 @@ where
     }
     let migrator = Migrator::new(costs.clone());
     let codec = channel.codec();
+    // Session dictionary: only a channel whose Hello negotiated
+    // `CAP_SESSION_DICT` may carry the dictionary mode byte at all.
+    let dict_on = channel.dict_capable();
+    let dict0 = session.dict_stats();
     let entry = phone.program.entry()?;
     let tid = phone.spawn_thread(entry, &[])?;
     let mut out = DistOutcome::default();
@@ -376,7 +437,7 @@ where
     // fact against the measured local time.
     let mut local_spans: Vec<(u32, f64, Option<f64>)> = Vec::new();
 
-    let result = loop {
+    let result = 'run: loop {
         match run_thread(phone, tid, &mut NoHooks, u64::MAX)? {
             RunExit::Completed(v) => break v,
             RunExit::ReintegrationPoint { point } => {
@@ -454,67 +515,77 @@ where
                 let (capsule, phases) = migrator.migrate_out_capsule(phone, tid, session)?;
                 absorb_capture_phases(&mut out, &phases);
                 let mut overhead_ms = phases.suspend_ms + phases.capture_ms;
-                let sent_delta = capsule.is_delta();
-                if sent_delta {
+                let first_was_delta = capsule.is_delta();
+                if first_was_delta {
                     out.delta_roundtrips += 1;
                 } else {
                     out.full_roundtrips += 1;
                 }
 
-                let (fwd, up_ms) = stamp_and_encode(phone, &net, &mut out, capsule, codec);
-                engine.observe_forward(fwd.len() as u64, up_ms, sent_delta);
-                let fwd_len = fwd.len() as u64;
-                let (rbytes, transfer) = match channel.roundtrip(fwd) {
-                    Ok(ok) => ok,
-                    Err(e) if e.is_need_full() && sent_delta => {
-                        // The rejected delta still crossed the uplink.
-                        out.transfer.up += fwd_len;
-                        // The clone lost/rejected the baseline: resend in
-                        // full.
-                        out.delta_fallbacks += 1;
-                        out.delta_roundtrips -= 1;
-                        out.full_roundtrips += 1;
-                        let (full, phases) = migrator.recapture_full(phone, tid, session)?;
-                        absorb_capture_phases(&mut out, &phases);
-                        overhead_ms += phases.capture_ms;
-                        let (fwd, up_ms) =
-                            stamp_and_encode(phone, &net, &mut out, full, codec);
-                        engine.observe_forward(fwd.len() as u64, up_ms, false);
-                        let fwd2_len = fwd.len() as u64;
-                        match channel.roundtrip(fwd) {
-                            Ok(ok) => ok,
-                            Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
-                                degrade_to_local(
-                                    phone,
-                                    tid,
-                                    session,
-                                    engine,
-                                    &mut out,
-                                    &mut local_spans,
-                                    point,
-                                    Some((false, fwd2_len)),
-                                    e,
-                                )?;
-                                continue;
+                let (fwd, up_ms) =
+                    stamp_and_encode(phone, &net, &mut out, capsule, codec, dict_on, session);
+                engine.observe_forward(fwd.len() as u64, up_ms, first_was_delta);
+
+                // Roundtrip with a bounded NeedFull ladder. Rung 1: the
+                // clone rejected the baseline (delta) or the dictionary
+                // prefix (full) — reset the dictionary, recapture in
+                // full, resend. Rung 2 (dict sessions only): resend the
+                // same full capture on the self-describing inline table,
+                // which cannot be rejected again.
+                let mut fwd = fwd;
+                let mut fwd_len = fwd.len() as u64;
+                let mut sent_delta = first_was_delta;
+                let mut needfull = 0u32;
+                let (rbytes, transfer) = loop {
+                    match channel.roundtrip(fwd) {
+                        Ok(ok) => break ok,
+                        Err(e) if e.is_need_full() && needfull < 2 => {
+                            needfull += 1;
+                            // The rejected frame still crossed the uplink.
+                            out.transfer.up += fwd_len;
+                            if sent_delta {
+                                out.delta_fallbacks += 1;
+                                out.delta_roundtrips -= 1;
+                                out.full_roundtrips += 1;
+                            } else {
+                                // Only a dictionary digest mismatch can
+                                // reject a full capsule; both replicas
+                                // have reset.
+                                out.dict_fallbacks += 1;
                             }
-                            Err(e) => return Err(e),
+                            session.reset_dict();
+                            let (full, phases) =
+                                migrator.recapture_full(phone, tid, session)?;
+                            absorb_capture_phases(&mut out, &phases);
+                            overhead_ms += phases.capture_ms;
+                            sent_delta = false;
+                            let (f, up_ms) = if needfull >= 2 && dict_on {
+                                stamp_and_encode_inline(phone, &net, &mut out, full, codec)
+                            } else {
+                                stamp_and_encode(
+                                    phone, &net, &mut out, full, codec, dict_on, session,
+                                )
+                            };
+                            engine.observe_forward(f.len() as u64, up_ms, false);
+                            fwd_len = f.len() as u64;
+                            fwd = f;
                         }
+                        Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
+                            degrade_to_local(
+                                phone,
+                                tid,
+                                session,
+                                engine,
+                                &mut out,
+                                &mut local_spans,
+                                point,
+                                Some((sent_delta, fwd_len)),
+                                e,
+                            )?;
+                            continue 'run;
+                        }
+                        Err(e) => return Err(e),
                     }
-                    Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
-                        degrade_to_local(
-                            phone,
-                            tid,
-                            session,
-                            engine,
-                            &mut out,
-                            &mut local_spans,
-                            point,
-                            Some((sent_delta, fwd_len)),
-                            e,
-                        )?;
-                        continue;
-                    }
-                    Err(e) => return Err(e),
                 };
                 out.transfer.up += transfer.up;
                 out.transfer.down += transfer.down;
@@ -523,7 +594,11 @@ where
                 let rcapsule = {
                     let raw = open_frame(&rbytes)?;
                     out.raw_down += raw.len() as u64;
-                    Capsule::decode(&raw)?
+                    if dict_on {
+                        Capsule::decode_with(&raw, DictRead::Negotiated(session.dict()))?.0
+                    } else {
+                        Capsule::decode(&raw)?
+                    }
                 };
                 // Adopt the clone's finish time, then pay the downlink
                 // for the *wire* (sealed) bytes.
@@ -547,6 +622,9 @@ where
     out.virtual_ms = phone.clock.now_ms();
     out.result = result;
     out.wall_s = wall0.elapsed().as_secs_f64();
+    let dict1 = session.dict_stats();
+    out.dict_hit_bytes = dict1.0.saturating_sub(dict0.0);
+    out.dict_additions = dict1.1.saturating_sub(dict0.1);
     channel.record_policy(
         out.offloads as u64,
         out.local_fallbacks as u64,
@@ -606,6 +684,9 @@ fn absorb_capture_phases(out: &mut DistOutcome, phases: &MigrationPhases) {
     out.zygote_skipped += phases.zygote_skipped;
     out.base_skipped += phases.base_skipped;
     out.statics_shipped += phases.statics_shipped;
+    out.objects_scanned += phases.objects_scanned;
+    out.pages_scanned += phases.pages_scanned;
+    out.pages_dirty += phases.pages_dirty;
 }
 
 /// Charge the uplink for the capsule's *wire* (sealed) bytes, then stamp
@@ -614,14 +695,50 @@ fn absorb_capture_phases(out: &mut DistOutcome, phases: &MigrationPhases) {
 /// compressed tail, so the clock is patched in place — one encode, one
 /// compression pass, and the charged size IS the sent size. Returns the
 /// frame plus the charged ms (the policy estimator's uplink sample).
+///
+/// `dict_on` says the channel negotiated `CAP_SESSION_DICT`: capsules
+/// then carry the self-describing mode byte and are encoded against the
+/// session's dictionary replica (or the inline per-capsule table when
+/// the session keeps the dictionary disabled).
 fn stamp_and_encode(
     phone: &mut Process,
     net: &NetworkProfile,
     out: &mut DistOutcome,
     capsule: Capsule,
     codec: Codec,
+    dict_on: bool,
+    session: &mut MobileSession,
 ) -> (Vec<u8>, f64) {
-    let raw = capsule.encode();
+    let raw = if !dict_on {
+        capsule.encode()
+    } else if session.dict_enabled() {
+        capsule.encode_with(DictMode::Shared(session.dict()))
+    } else {
+        capsule.encode_with(DictMode::Inline)
+    };
+    stamp_raw(phone, net, out, raw, codec)
+}
+
+/// [`stamp_and_encode`] forced onto the inline per-capsule table — the
+/// NeedFull ladder's last rung, which no dictionary state can reject.
+fn stamp_and_encode_inline(
+    phone: &mut Process,
+    net: &NetworkProfile,
+    out: &mut DistOutcome,
+    capsule: Capsule,
+    codec: Codec,
+) -> (Vec<u8>, f64) {
+    let raw = capsule.encode_with(DictMode::Inline);
+    stamp_raw(phone, net, out, raw, codec)
+}
+
+fn stamp_raw(
+    phone: &mut Process,
+    net: &NetworkProfile,
+    out: &mut DistOutcome,
+    raw: Vec<u8>,
+    codec: Codec,
+) -> (Vec<u8>, f64) {
     out.raw_up += raw.len() as u64;
     let mut wire = seal_frame_keep_head(codec, raw, CAPSULE_CLOCK_OFFSET + 8);
     let up_ms = net.transfer_ms(wire.len() as u64, true);

@@ -1,0 +1,169 @@
+//! Fault-injection channel wrapper for tests and resilience drills.
+//!
+//! [`FaultInjectChannel`] wraps any [`CloneChannel`] and kills the link
+//! at the Nth frame boundary: frames are counted in wire order — forward
+//! capsule, reverse capsule, heartbeat probe, heartbeat ack — and once
+//! the budget is spent every operation fails with a transport error,
+//! exactly like a dead TCP peer. Because the cut can land *between* the
+//! halves of one roundtrip, the inner clone may have executed (and
+//! mutated its slot state, baseline and dictionary included) while the
+//! phone never hears back — the half-applied-state shape the
+//! degrade-to-local and `NeedFull`-recovery paths must absorb.
+//!
+//! The fault-matrix tests sweep N across a whole session and assert
+//! that, under a degrading policy engine, every cut point still
+//! completes the run locally with the error surfaced in
+//! `DistOutcome::channel_errors` — and that the legacy
+//! `run_distributed_session` wrapper still fails fast. No panics, no
+//! half-applied merges.
+
+use crate::error::{CloneCloudError, Result};
+use crate::migration::MobileSession;
+use crate::nodemanager::{Codec, HeartbeatOutcome, TransferBytes};
+
+use super::distributed::CloneChannel;
+
+/// A [`CloneChannel`] that dies at a chosen frame boundary.
+pub struct FaultInjectChannel<C: CloneChannel> {
+    inner: C,
+    /// Frames allowed across the link before it dies (`u64::MAX` =
+    /// never).
+    kill_after: u64,
+    frames: u64,
+    dead: bool,
+}
+
+impl<C: CloneChannel> FaultInjectChannel<C> {
+    /// Wrap `inner`; the link dies once `kill_after` frames have
+    /// crossed (the frame that would exceed the budget is lost).
+    pub fn new(inner: C, kill_after: u64) -> FaultInjectChannel<C> {
+        FaultInjectChannel {
+            inner,
+            kill_after,
+            frames: 0,
+            dead: false,
+        }
+    }
+
+    /// Frames that actually crossed before the cut.
+    pub fn frames_crossed(&self) -> u64 {
+        self.frames.min(self.kill_after)
+    }
+
+    /// Whether the injected fault has fired.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    /// Access the wrapped channel (e.g. to inspect the clone state
+    /// after a cut).
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut C {
+        &mut self.inner
+    }
+
+    /// Unwrap the (possibly half-advanced) inner channel, e.g. to drive
+    /// a recovery session over the same clone after a cut.
+    pub fn into_inner(self) -> C {
+        self.inner
+    }
+
+    /// Account one frame; errors if it would cross the kill boundary.
+    fn cross(&mut self, what: &str) -> Result<()> {
+        if self.dead {
+            return Err(CloneCloudError::Transport(format!(
+                "injected fault: link down ({what})"
+            )));
+        }
+        self.frames += 1;
+        if self.frames > self.kill_after {
+            self.dead = true;
+            return Err(CloneCloudError::Transport(format!(
+                "injected fault: link killed at frame {} ({what})",
+                self.frames
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl<C: CloneChannel> CloneChannel for FaultInjectChannel<C> {
+    fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+        // The forward frame crosses (or dies) first...
+        self.cross("forward capsule")?;
+        let reply = self.inner.roundtrip(forward)?;
+        // ...then the reverse frame. When this one is cut, the clone has
+        // already executed and re-baselined — the phone-side recovery
+        // must not assume symmetric state.
+        self.cross("reverse capsule")?;
+        Ok(reply)
+    }
+
+    fn delta_capable(&self) -> bool {
+        self.inner.delta_capable()
+    }
+
+    fn disarm_delta(&mut self) {
+        self.inner.disarm_delta()
+    }
+
+    fn codec(&self) -> Codec {
+        self.inner.codec()
+    }
+
+    fn dict_capable(&self) -> bool {
+        self.inner.dict_capable()
+    }
+
+    fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {
+        self.cross("heartbeat probe")?;
+        let outcome = self.inner.heartbeat(session)?;
+        if outcome != HeartbeatOutcome::Unsupported {
+            self.cross("heartbeat ack")?;
+        }
+        Ok(outcome)
+    }
+
+    fn record_policy(&mut self, offloads: u64, local: u64, mispredictions: u64) {
+        self.inner.record_policy(offloads, local, mispredictions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodemanager::TransferBytes;
+
+    struct EchoChannel;
+    impl CloneChannel for EchoChannel {
+        fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+            let up = forward.len() as u64;
+            Ok((forward, TransferBytes { up, down: up }))
+        }
+    }
+
+    #[test]
+    fn kills_at_the_exact_frame_boundary_and_stays_dead() {
+        // Budget 3: roundtrip 1 crosses both frames, roundtrip 2 sends
+        // its forward (frame 3) and loses the reverse (frame 4).
+        let mut ch = FaultInjectChannel::new(EchoChannel, 3);
+        ch.roundtrip(vec![1]).unwrap();
+        let err = ch.roundtrip(vec![2]).unwrap_err().to_string();
+        assert!(err.contains("frame 4"), "{err}");
+        assert!(ch.is_dead());
+        assert_eq!(ch.frames_crossed(), 3);
+        // Dead forever after.
+        let err = ch.roundtrip(vec![3]).unwrap_err().to_string();
+        assert!(err.contains("link down"), "{err}");
+    }
+
+    #[test]
+    fn zero_budget_kills_the_first_forward() {
+        let mut ch = FaultInjectChannel::new(EchoChannel, 0);
+        let err = ch.roundtrip(vec![9]).unwrap_err().to_string();
+        assert!(err.contains("forward"), "{err}");
+    }
+}

@@ -13,10 +13,16 @@
 //!   `run_distributed_session` adds delta migration on top (epoch-based
 //!   dirty tracking, `NeedFull` full-capture fallback);
 //!   `run_distributed_with` sweeps the network per migration trip.
+//! * [`faults`] — [`FaultInjectChannel`], a channel wrapper that kills
+//!   the link at the Nth frame boundary (the fault-matrix tests drive
+//!   degrade-to-local and `NeedFull` recovery through it).
 
 pub mod distributed;
+pub mod faults;
 pub mod monolithic;
 pub mod policy;
+
+pub use faults::FaultInjectChannel;
 
 pub use distributed::{
     delta_statics_workload_src, delta_workload_expected, delta_workload_src, run_distributed,

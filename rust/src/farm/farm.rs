@@ -137,6 +137,9 @@ pub(crate) struct FarmShared {
     pub wire_up: AtomicU64,
     pub wire_raw_down: AtomicU64,
     pub wire_down: AtomicU64,
+    /// Bytes the slot session dictionaries saved (names a per-capsule
+    /// table would have re-shipped), flushed per job by the workers.
+    pub dict_hit_bytes: AtomicU64,
 }
 
 /// A point-in-time snapshot of farm counters.
@@ -178,6 +181,8 @@ pub struct FarmStats {
     pub wire_up: u64,
     pub wire_raw_down: u64,
     pub wire_down: u64,
+    /// Bytes the slot session dictionaries saved vs per-capsule tables.
+    pub dict_hit_bytes: u64,
     /// Total time sessions spent blocked at admission.
     pub admission_wait_ms: f64,
     /// Total time jobs waited in worker queues after admission.
@@ -280,6 +285,7 @@ impl FarmHandle {
             wire_up: s.wire_up.load(Ordering::Relaxed),
             wire_raw_down: s.wire_raw_down.load(Ordering::Relaxed),
             wire_down: s.wire_down.load(Ordering::Relaxed),
+            dict_hit_bytes: s.dict_hit_bytes.load(Ordering::Relaxed),
             admission_wait_ms: s.admission_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             queue_wait_ms: s.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             worker_jobs: s
@@ -351,6 +357,7 @@ impl CloneFarm {
             wire_up: AtomicU64::new(0),
             wire_raw_down: AtomicU64::new(0),
             wire_down: AtomicU64::new(0),
+            dict_hit_bytes: AtomicU64::new(0),
         });
 
         let mut senders = Vec::with_capacity(cfg.workers);

@@ -46,6 +46,9 @@ pub struct FarmClone {
     /// Delta capsules negotiated for this session. The affinity-pinned
     /// worker slot then keeps the baseline cache across roundtrips.
     delta: bool,
+    /// Session string dictionary negotiated (the worker slot keeps the
+    /// clone-side replica; like delta, it needs affinity placement).
+    dict: bool,
     pub stats: SessionStats,
 }
 
@@ -64,6 +67,7 @@ impl FarmClone {
             fs_version: 0,
             closed: false,
             delta: false,
+            dict: false,
             stats: SessionStats::default(),
         }
     }
@@ -81,6 +85,18 @@ impl FarmClone {
     /// Whether delta capsules are enabled on this session.
     pub fn delta_enabled(&self) -> bool {
         self.delta
+    }
+
+    /// Enable/disable the shared string dictionary for this session
+    /// (the gateway arms it from the Hello negotiation; in-process
+    /// callers set it directly).
+    pub fn set_dict(&mut self, on: bool) {
+        self.dict = on;
+    }
+
+    /// Whether the session dictionary is enabled.
+    pub fn dict_enabled(&self) -> bool {
+        self.dict
     }
 
     /// Replace the session's synchronized file system. Clone slots pick
@@ -113,6 +129,7 @@ impl FarmClone {
             fs_version: self.fs_version,
             forward,
             delta_ok: self.delta,
+            dict_ok: self.dict,
             submitted: Instant::now(),
             reply: reply_tx,
         };
@@ -216,6 +233,10 @@ impl CloneChannel for FarmClone {
 
     fn disarm_delta(&mut self) {
         self.set_delta(false);
+    }
+
+    fn dict_capable(&self) -> bool {
+        self.dict
     }
 
     fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {

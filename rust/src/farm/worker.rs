@@ -38,6 +38,9 @@ pub(crate) struct Job {
     pub forward: Vec<u8>,
     /// The session negotiated delta capsules.
     pub delta_ok: bool,
+    /// The session negotiated the shared string dictionary (slot keeps
+    /// the replica).
+    pub dict_ok: bool,
     pub submitted: Instant,
     pub reply: Sender<Result<Vec<u8>>>,
 }
@@ -70,6 +73,8 @@ struct CloneSlot {
     session: CloneSession,
     /// Roundtrips served by this slot (drives periodic slot GC).
     roundtrips: u64,
+    /// Dictionary hit-bytes already flushed to the farm counters.
+    dict_hit_bytes_reported: u64,
 }
 
 /// Worker thread body. Exits on `Shutdown` or when every sender is gone.
@@ -109,12 +114,14 @@ pub(crate) fn worker_main(
                     fs_version: job.fs_version,
                     session: CloneSession::new(job.delta_ok),
                     roundtrips: 0,
+                    dict_hit_bytes_reported: 0,
                 });
                 if slot.fs_version != job.fs_version {
                     slot.proc.env.vfs = job.fs.synchronize();
                     slot.fs_version = job.fs_version;
                 }
                 slot.session.set_enabled(job.delta_ok);
+                slot.session.set_dict_enabled(job.dict_ok);
 
                 let mut serve = CloneServeStats::default();
                 let result = execute_migration(
@@ -134,6 +141,14 @@ pub(crate) fn worker_main(
                 shared
                     .instrs_executed
                     .fetch_add(serve.instrs_executed, Ordering::Relaxed);
+                // Flush the slot dictionary's savings into the farm-wide
+                // counter (monotonic across resets, so a plain delta).
+                let (hit_bytes, _) = slot.session.dict_stats();
+                shared.dict_hit_bytes.fetch_add(
+                    hit_bytes - slot.dict_hit_bytes_reported,
+                    Ordering::Relaxed,
+                );
+                slot.dict_hit_bytes_reported = hit_bytes;
 
                 if result.is_ok() {
                     slot.roundtrips += 1;

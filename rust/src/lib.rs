@@ -14,12 +14,19 @@
 //!   ship only the mutated working set — heap objects *and* statics —
 //!   on repeat offloads, with a digest-guarded full-capture fallback
 //!   (`NeedFull`) and periodic **slot GC** (tombstone threads +
-//!   orphaned object graphs reclaimed without evicting baselines).
+//!   orphaned object graphs reclaimed without evicting baselines). At
+//!   Zygote scale, **per-page epochs** (`appvm::heap`, 64 ids/page) let
+//!   the delta capture scan only dirty pages instead of traversing the
+//!   reachable heap — deletions ride on mobile-side GC, and the
+//!   canonical digest stays the safety net for any missed stamp.
 //! * [`nodemanager`] — transport, wire protocol (v4: `Hello` capability
 //!   bitmap — unknown bits ignored, never rejected — delta `NeedFull`
 //!   frames, digest `Heartbeat` probes), negotiated frame compression
-//!   (`util::compress`, LZ77/RLE, incompressible frames ride raw),
-//!   clone provisioning: the 1:1 `CloneServer` and the serve-many farm
+//!   (`util::compress`, LZ77/RLE, incompressible frames ride raw) and
+//!   the **session string dictionary** (`CAP_SESSION_DICT`: capsules
+//!   after the first ship only dictionary additions + indices; digest
+//!   mismatch degrades to a NeedFull re-seed, never corruption), clone
+//!   provisioning: the 1:1 `CloneServer` and the serve-many farm
 //!   gateway.
 //! * [`farm`] — the multi-tenant clone farm (beyond the paper): warm
 //!   pool, placement policies, admission control, phone sessions

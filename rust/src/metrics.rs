@@ -53,6 +53,14 @@ impl MetricsSnapshot {
         self.count("migration.delta.roundtrips", out.delta_roundtrips as u64);
         self.count("migration.full.roundtrips", out.full_roundtrips as u64);
         self.count("migration.delta.fallbacks", out.delta_fallbacks as u64);
+        // Capture-work counters (page-epoch scan) and session-dictionary
+        // savings — the zygote_scale bench's headline numbers.
+        self.count("migration.objects_scanned", out.objects_scanned as u64);
+        self.count("migration.pages_scanned", out.pages_scanned as u64);
+        self.count("migration.pages_dirty", out.pages_dirty as u64);
+        self.count("migration.dict.hit_bytes", out.dict_hit_bytes);
+        self.count("migration.dict.additions", out.dict_additions);
+        self.count("migration.dict.fallbacks", out.dict_fallbacks as u64);
         self.count(
             "migration.heartbeat.preempts",
             out.heartbeat_preempts as u64,
@@ -120,6 +128,7 @@ impl MetricsSnapshot {
         self.count("farm.wire.up", f.wire_up);
         self.count("farm.wire.raw_down", f.wire_raw_down);
         self.count("farm.wire.down", f.wire_down);
+        self.count("farm.dict.hit_bytes", f.dict_hit_bytes);
         self.gauge("farm.slot.threads_peak", f.slot_threads_peak as f64);
         self.gauge("farm.slot.heap_peak", f.slot_heap_peak as f64);
         if f.wire_up > 0 {

@@ -63,6 +63,15 @@ pub struct CaptureStats {
     pub statics_shipped: usize,
     /// Encoded packet size.
     pub bytes: usize,
+    /// Objects this capture examined: every traversal visit on the
+    /// per-object path, every dirty-page entry + marked fresh object on
+    /// the paged path — the capture-work headline the zygote_scale bench
+    /// compares.
+    pub objects_scanned: usize,
+    /// Pages whose contents were examined (paged captures only).
+    pub pages_scanned: usize,
+    /// Scanned pages that held at least one dirty object.
+    pub pages_dirty: usize,
 }
 
 /// The sender's view of the session baseline during a delta capture: who
@@ -82,6 +91,22 @@ impl BaseView<'_> {
         match self {
             BaseView::Mobile(mids) => mids.contains(&local).then_some(local),
             BaseView::CloneTable(t) => t.mid_for_cid(local),
+        }
+    }
+
+    /// Every MID in the baseline (the paged path starts from "everything
+    /// retained" and subtracts the deletions the page scan surfaced).
+    pub(crate) fn member_mids(&self) -> Vec<u64> {
+        match self {
+            BaseView::Mobile(mids) => mids.iter().copied().collect(),
+            BaseView::CloneTable(t) => t
+                .entries()
+                .iter()
+                .filter_map(|e| match (e.mid, e.cid) {
+                    (Some(m), Some(_)) => Some(m),
+                    _ => None,
+                })
+                .collect(),
         }
     }
 }
@@ -151,6 +176,7 @@ pub(crate) fn capture_core(
             continue;
         }
         let obj = p.heap.get(id)?;
+        stats.objects_scanned += 1;
 
         // Delta: a baseline member the receiver already holds. Unchanged
         // since the sync epoch => reference by id; changed => ship below
@@ -211,18 +237,60 @@ pub(crate) fn capture_core(
         })
     };
 
+    let incremental_epoch = match base {
+        Some(b) if opts.incremental_statics => Some(b.epoch),
+        _ => None,
+    };
+    let (objects, frames, statics) =
+        emit_state_sections(p, thread, direction, mapping, incremental_epoch, &order, &conv)?;
+    stats.statics_shipped = statics.len();
+
+    Ok(RawCapture {
+        frames,
+        objects,
+        zygote_refs,
+        statics,
+        reached_members,
+        shipped: order,
+        stats,
+    })
+}
+
+/// Emit the objects / frames / statics sections for an already-decided
+/// shipping set, with `conv` translating references into wire values —
+/// the one place the capsule's section shape lives, shared by the
+/// traversal and paged capture paths (they differ only in how `order`
+/// and `conv` were built). Emission order (objects, frames, statics) is
+/// load-bearing for the paged path's lazily-assigned Zygote name
+/// indexes.
+///
+/// `incremental_epoch = Some(e)`: delta capture — unchanged static
+/// slots (epoch <= e) are implied by the baseline; changed ones ship
+/// their current value, Null included, so a static cleared since the
+/// sync is cleared at the receiver too. `None`: full capture (or the
+/// legacy full-statics delta shape) — null statics are implied, and
+/// full-capture receivers reset app statics before applying.
+fn emit_state_sections(
+    p: &Process,
+    thread: &crate::appvm::thread::VmThread,
+    direction: Direction,
+    mapping: Option<&MappingTable>,
+    incremental_epoch: Option<u64>,
+    order: &[ObjId],
+    conv: &dyn Fn(&Value) -> Result<WireValue>,
+) -> Result<(Vec<WireObject>, Vec<WireFrame>, Vec<WireStatic>)> {
     // ---- objects ---------------------------------------------------------
     let mut objects = Vec::with_capacity(order.len());
-    for &id in &order {
+    for &id in order {
         let obj = p.heap.get(id)?;
         let body = match &obj.body {
             ObjBody::Fields(vs) => {
-                WireBody::Fields(vs.iter().map(&conv).collect::<Result<Vec<_>>>()?)
+                WireBody::Fields(vs.iter().map(conv).collect::<Result<Vec<_>>>()?)
             }
             ObjBody::ByteArray(b) => WireBody::ByteArray(b.clone()),
             ObjBody::FloatArray(f) => WireBody::FloatArray(f.clone()),
             ObjBody::RefArray(vs) => {
-                WireBody::RefArray(vs.iter().map(&conv).collect::<Result<Vec<_>>>()?)
+                WireBody::RefArray(vs.iter().map(conv).collect::<Result<Vec<_>>>()?)
             }
         };
         // Reverse direction: attach the mobile-side id from the mapping
@@ -248,7 +316,7 @@ pub(crate) fn capture_core(
             method_name: p.program.method(f.method).name.clone(),
             pc: f.pc as u32,
             ret_reg_plus1: f.ret_reg.map(|r| r + 1).unwrap_or(0),
-            regs: f.regs.iter().map(&conv).collect::<Result<Vec<_>>>()?,
+            regs: f.regs.iter().map(conv).collect::<Result<Vec<_>>>()?,
         });
     }
 
@@ -259,20 +327,13 @@ pub(crate) fn capture_core(
             continue;
         }
         for (idx, v) in class_statics.iter().enumerate() {
-            match base {
-                // Delta capture: unchanged slots are implied by the
-                // baseline; changed ones ship their current value, Null
-                // included, so a static cleared since the sync is
-                // cleared at the receiver too.
-                Some(b) if opts.incremental_statics => {
-                    if p.statics_epoch[ci][idx] <= b.epoch {
+            match incremental_epoch {
+                Some(e) => {
+                    if p.statics_epoch[ci][idx] <= e {
                         continue;
                     }
                 }
-                // Full capture (or the legacy full-statics delta shape):
-                // null statics are implied — full-capture receivers
-                // reset app statics before applying.
-                _ => {
+                None => {
                     if matches!(v, Value::Null) {
                         continue;
                     }
@@ -285,7 +346,168 @@ pub(crate) fn capture_core(
             });
         }
     }
+
+    Ok((objects, frames, statics))
+}
+
+/// Page-accelerated delta capture: instead of traversing the whole
+/// reachable heap, scan only the pages the write barriers stamped since
+/// the baseline epoch ([`crate::appvm::Heap::scan_dirty_pages`]).
+///
+/// Soundness rests on one property of the epoch barrier: **a clean
+/// object can never reference a post-baseline object** — storing such a
+/// reference would have stamped the referrer. Therefore:
+/// * every changed/new object lives on a dirty page (found by the scan);
+/// * every path from the roots to a *fresh* object runs through the
+///   frames, the statics, or a dirty object (so reachability of fresh
+///   objects is decidable inside the dirty set — the mini-mark below);
+/// * baseline members and dirty Zygote-named objects ship
+///   unconditionally (the receiver holds a twin to overwrite in place;
+///   shipping an unreachable one is wasted bytes, never corruption);
+/// * deletions are exactly the member ids the scan found missing —
+///   `Heap::remove`/`Heap::gc` stamp the page of everything they drop,
+///   and GC removes whole unreachable subgraphs, so surviving objects
+///   never dangle into the deleted set.
+///
+/// A mutation that bypasses the barrier is *not* shipped; the canonical
+/// `state_digest` then disagrees at the next sync and the session
+/// degrades to a full capture (`NeedFull`) — a missed stamp costs a
+/// resend, never wrong bytes (the reverse merge checks the digest before
+/// touching any state).
+pub(crate) fn capture_core_paged(
+    p: &Process,
+    tid: u32,
+    direction: Direction,
+    mapping: Option<&MappingTable>,
+    opts: CaptureOptions,
+    base: &DeltaBase,
+) -> Result<RawCapture> {
+    use std::cell::RefCell;
+
+    let thread = p.thread(tid)?;
+    if thread.frames.is_empty() {
+        return Err(CloneCloudError::migration("capture of a frame-less thread"));
+    }
+
+    let scan = p.heap.scan_dirty_pages(base.epoch);
+    let mut stats = CaptureStats {
+        pages_scanned: scan.pages_scanned,
+        pages_dirty: scan.pages_dirty,
+        objects_scanned: scan.dirty.len(),
+        ..CaptureStats::default()
+    };
+
+    // Partition the dirty set. Members and dirty Zygote-named objects
+    // are "anchored" — the receiver holds a twin to overwrite — and ship
+    // as-is; fresh objects ship only if still reachable.
+    let mut anchored: Vec<ObjId> = Vec::new();
+    let mut fresh: HashMap<u64, &crate::appvm::value::Object> = HashMap::new();
+    for &id in &scan.dirty {
+        let obj = p.heap.get(id)?;
+        if base.view.mid_of(id.0).is_some() || obj.zygote_seq.is_some() {
+            anchored.push(id);
+        } else {
+            fresh.insert(id.0, obj);
+        }
+    }
+
+    // Mini-mark: which fresh objects are reachable? Roots are the frame
+    // registers, the app statics, and the references out of anchored
+    // dirty objects (a clean object cannot point at a fresh one).
+    let mut work: Vec<ObjId> = thread.roots();
+    for (ci, class_statics) in p.statics.iter().enumerate() {
+        if p.program.classes[ci].system {
+            continue;
+        }
+        work.extend(class_statics.iter().filter_map(|v| v.as_ref()));
+    }
+    for &id in &anchored {
+        work.extend(p.heap.get(id)?.body.refs());
+    }
+    let mut marked: HashSet<u64> = HashSet::new();
+    while let Some(id) = work.pop() {
+        if !fresh.contains_key(&id.0) || !marked.insert(id.0) {
+            continue;
+        }
+        stats.objects_scanned += 1;
+        work.extend(fresh[&id.0].body.refs());
+    }
+
+    let mut order: Vec<ObjId> = anchored;
+    order.extend(marked.iter().map(|&id| ObjId(id)));
+    order.sort_unstable();
+    stats.objects = order.len();
+    let slot_of: HashMap<u64, u32> = order
+        .iter()
+        .enumerate()
+        .map(|(i, id)| (id.0, i as u32))
+        .collect();
+
+    // Members that died since the sync: GC/remove stamped their pages,
+    // so the missing-id list names them; everything else is retained.
+    let mut reached_members: HashSet<u64> =
+        base.view.member_mids().into_iter().collect();
+    for &gone in &scan.missing {
+        if let Some(mid) = base.view.mid_of(gone) {
+            reached_members.remove(&mid);
+        }
+    }
+
+    // Zygote name references are assigned lazily, at the first value
+    // that mentions a clean template object (the traversal path instead
+    // listed every reachable template object — pure capsule weight when
+    // no shipped value referenced them).
+    let zygote_of: RefCell<HashMap<u64, u32>> = RefCell::new(HashMap::new());
+    let zygote_names: RefCell<Vec<(String, u32)>> = RefCell::new(Vec::new());
+    let base_seen: RefCell<HashSet<u64>> = RefCell::new(HashSet::new());
+    let conv = |v: &Value| -> Result<WireValue> {
+        Ok(match v {
+            Value::Null => WireValue::Null,
+            Value::Int(x) => WireValue::Int(*x),
+            Value::Float(x) => WireValue::Float(*x),
+            Value::Ref(r) => {
+                if let Some(&s) = slot_of.get(&r.0) {
+                    return Ok(WireValue::Slot(s));
+                }
+                if let Some(mid) = base.view.mid_of(r.0) {
+                    base_seen.borrow_mut().insert(mid);
+                    return Ok(WireValue::Base(mid));
+                }
+                // Bind the cache probe so its RefCell guard drops before
+                // the insert below re-borrows mutably.
+                let cached = zygote_of.borrow().get(&r.0).copied();
+                if let Some(z) = cached {
+                    return Ok(WireValue::Zygote(z));
+                }
+                let obj = p.heap.get(*r)?;
+                match obj.zygote_seq {
+                    Some(seq) if !obj.dirty => {
+                        let mut names = zygote_names.borrow_mut();
+                        let zi = names.len() as u32;
+                        names.push((p.program.class(obj.class).name.clone(), seq));
+                        zygote_of.borrow_mut().insert(r.0, zi);
+                        WireValue::Zygote(zi)
+                    }
+                    // Unreachable under the barrier invariant; bail so
+                    // the caller degrades to a full traversal.
+                    _ => {
+                        return Err(CloneCloudError::migration(format!(
+                            "paged capture: reference to unclassifiable object {}",
+                            r.0
+                        )))
+                    }
+                }
+            }
+        })
+    };
+
+    let incremental_epoch = opts.incremental_statics.then_some(base.epoch);
+    let (objects, frames, statics) =
+        emit_state_sections(p, thread, direction, mapping, incremental_epoch, &order, &conv)?;
     stats.statics_shipped = statics.len();
+    stats.base_skipped = base_seen.into_inner().len();
+    let zygote_refs = zygote_names.into_inner();
+    stats.zygote_skipped = zygote_refs.len();
 
     Ok(RawCapture {
         frames,

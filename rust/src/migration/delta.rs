@@ -40,10 +40,13 @@ use crate::appvm::value::{ObjBody, ObjId, Value};
 use crate::error::{CloneCloudError, Result};
 use crate::util::bytes::{WireReader, WireWriter};
 
-use super::capture::{capture_core, capture_thread, BaseView, CaptureOptions, CaptureStats, DeltaBase};
+use super::capture::{
+    capture_core, capture_core_paged, capture_thread, BaseView, CaptureOptions, CaptureStats,
+    DeltaBase,
+};
 use super::format::{
-    decode_direction, encode_direction, CapturePacket, Direction, WireBody, WireObject,
-    WireSections, WireValue, MAGIC as FULL_MAGIC,
+    decode_direction, encode_direction, CapturePacket, DictMode, DictRead, Direction,
+    SessionDict, WireBody, WireObject, WireSections, WireValue, MAGIC as FULL_MAGIC,
 };
 use super::mapping::MappingTable;
 use super::merge::{
@@ -80,6 +83,11 @@ pub struct DeltaPacket {
 
 impl DeltaPacket {
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(DictMode::Off)
+    }
+
+    /// Encode under an explicit session-dictionary mode.
+    pub fn encode_with(&self, dict: DictMode<'_>) -> Vec<u8> {
         let mut w = WireWriter::with_capacity(1024);
         w.put_u32(DELTA_MAGIC);
         w.put_u16(DELTA_VERSION);
@@ -97,11 +105,17 @@ impl DeltaPacket {
         for mid in &self.deleted {
             w.put_u64(*mid);
         }
-        self.sections.encode_into(&mut w);
+        self.sections.encode_into_with(&mut w, dict);
         w.into_vec()
     }
 
     pub fn decode(buf: &[u8]) -> Result<DeltaPacket> {
+        Ok(Self::decode_with(buf, DictRead::Off)?.0)
+    }
+
+    /// Decode under an explicit session-dictionary mode; the flag says
+    /// whether the capsule rode the shared dictionary.
+    pub fn decode_with(buf: &[u8], dict: DictRead<'_>) -> Result<(DeltaPacket, bool)> {
         let mut r = WireReader::new(buf);
         let magic = r.get_u32()?;
         if magic != DELTA_MAGIC {
@@ -132,23 +146,26 @@ impl DeltaPacket {
         for _ in 0..nd {
             deleted.push(r.get_u64()?);
         }
-        let sections = WireSections::decode_from(&mut r)?;
+        let (sections, used_dict) = WireSections::decode_from_with(&mut r, dict)?;
         if !r.is_done() {
             return Err(CloneCloudError::Wire(format!(
                 "{} trailing bytes in delta capsule",
                 r.remaining()
             )));
         }
-        Ok(DeltaPacket {
-            direction,
-            thread_id,
-            clock_us,
-            base_epoch,
-            base_digest,
-            assignments,
-            deleted,
-            sections,
-        })
+        Ok((
+            DeltaPacket {
+                direction,
+                thread_id,
+                clock_us,
+                base_epoch,
+                base_digest,
+                assignments,
+                deleted,
+                sections,
+            },
+            used_dict,
+        ))
     }
 }
 
@@ -169,18 +186,36 @@ pub enum Capsule {
 
 impl Capsule {
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(DictMode::Off)
+    }
+
+    /// Encode under an explicit session-dictionary mode.
+    pub fn encode_with(&self, dict: DictMode<'_>) -> Vec<u8> {
         match self {
-            Capsule::Full(p) => p.encode(),
-            Capsule::Delta(d) => d.encode(),
+            Capsule::Full(p) => p.encode_with(dict),
+            Capsule::Delta(d) => d.encode_with(dict),
         }
     }
 
     /// Decode either capsule flavor, dispatching on the leading magic.
     pub fn decode(buf: &[u8]) -> Result<Capsule> {
+        Ok(Self::decode_with(buf, DictRead::Off)?.0)
+    }
+
+    /// Decode either flavor under an explicit session-dictionary mode;
+    /// the flag says whether the capsule rode the shared dictionary (so
+    /// receivers can answer in the same mode).
+    pub fn decode_with(buf: &[u8], dict: DictRead<'_>) -> Result<(Capsule, bool)> {
         let mut r = WireReader::new(buf);
         match r.get_u32()? {
-            FULL_MAGIC => Ok(Capsule::Full(CapturePacket::decode(buf)?)),
-            DELTA_MAGIC => Ok(Capsule::Delta(DeltaPacket::decode(buf)?)),
+            FULL_MAGIC => {
+                let (p, used) = CapturePacket::decode_with(buf, dict)?;
+                Ok((Capsule::Full(p), used))
+            }
+            DELTA_MAGIC => {
+                let (d, used) = DeltaPacket::decode_with(buf, dict)?;
+                Ok((Capsule::Delta(d), used))
+            }
             magic => Err(CloneCloudError::Wire(format!(
                 "unknown capsule magic {magic:#x}"
             ))),
@@ -376,6 +411,21 @@ pub struct MobileSession {
     /// Wall time of the last sync point (baseline record or coherent
     /// heartbeat).
     last_sync: Instant,
+    /// Use the page-epoch dirty scan for delta captures (off = the
+    /// per-object baseline traversal, kept for the bench ablation).
+    paged: bool,
+    /// Run a mobile-side heap GC every this many delta captures
+    /// (0 = never). GC is what turns unreachable baseline members into
+    /// the capsule's `deleted` list on the paged path — capture itself
+    /// never traverses the heap.
+    gc_every: u64,
+    delta_captures: u64,
+    /// Session-lifetime string dictionary replica (used only when the
+    /// channel negotiated `CAP_SESSION_DICT`).
+    dict: SessionDict,
+    /// Encode capsules against the dictionary when the channel supports
+    /// it (off = per-capsule tables even on a negotiated channel).
+    dict_enabled: bool,
 }
 
 impl MobileSession {
@@ -387,6 +437,11 @@ impl MobileSession {
             full_statics: false,
             heartbeat_after: None,
             last_sync: Instant::now(),
+            paged: true,
+            gc_every: 8,
+            delta_captures: 0,
+            dict: SessionDict::new(),
+            dict_enabled: true,
         }
     }
 
@@ -414,6 +469,46 @@ impl MobileSession {
     /// bench ablation only — receivers stay compatible either way).
     pub fn ship_full_statics(&mut self, on: bool) {
         self.full_statics = on;
+    }
+
+    /// Select the capture strategy: page-epoch dirty scan (default) or
+    /// the per-object baseline traversal (bench ablation / the PR 4
+    /// shape).
+    pub fn set_paged(&mut self, on: bool) {
+        self.paged = on;
+    }
+
+    /// Mobile-side GC cadence in delta captures (0 = never). See the
+    /// `gc_every` field.
+    pub fn set_gc_interval(&mut self, every: u64) {
+        self.gc_every = every;
+    }
+
+    /// The session dictionary replica (driver encode/decode side).
+    pub fn dict(&mut self) -> &mut SessionDict {
+        &mut self.dict
+    }
+
+    /// Whether capsules should be encoded against the session
+    /// dictionary when the channel negotiated it.
+    pub fn dict_enabled(&self) -> bool {
+        self.dict_enabled
+    }
+
+    pub fn set_dict_enabled(&mut self, on: bool) {
+        self.dict_enabled = on;
+    }
+
+    /// Drop the dictionary back to empty. Called whenever a `NeedFull`
+    /// crosses the session in either direction, so both replicas land
+    /// on the empty prefix together and the resend re-seeds.
+    pub fn reset_dict(&mut self) {
+        self.dict.reset();
+    }
+
+    /// (hit_bytes, additions) counters for metrics deltas.
+    pub fn dict_stats(&self) -> (u64, u64) {
+        (self.dict.hit_bytes, self.dict.additions)
     }
 
     /// Probe the peer with a digest heartbeat once the baseline has been
@@ -479,6 +574,12 @@ pub struct CloneSession {
     /// Re-send the full statics section in reverse deltas (PR 2 shape;
     /// bench ablation only).
     full_statics: bool,
+    /// Use the page-epoch dirty scan for reverse captures.
+    paged: bool,
+    /// Session dictionary replica; consulted only when `dict_enabled`
+    /// (the channel negotiated `CAP_SESSION_DICT`).
+    dict: SessionDict,
+    dict_enabled: bool,
 }
 
 impl CloneSession {
@@ -487,7 +588,41 @@ impl CloneSession {
             enabled,
             base: None,
             full_statics: false,
+            paged: true,
+            dict: SessionDict::new(),
+            dict_enabled: false,
         }
+    }
+
+    /// Select the reverse-capture strategy (see
+    /// [`MobileSession::set_paged`]).
+    pub fn set_paged(&mut self, on: bool) {
+        self.paged = on;
+    }
+
+    /// The session dictionary replica (decode forward / encode reverse).
+    pub fn dict(&mut self) -> &mut SessionDict {
+        &mut self.dict
+    }
+
+    /// Whether this session negotiated the shared dictionary.
+    pub fn dict_enabled(&self) -> bool {
+        self.dict_enabled
+    }
+
+    pub fn set_dict_enabled(&mut self, on: bool) {
+        self.dict_enabled = on;
+    }
+
+    /// Reset the replica to empty (every `NeedFull` this endpoint emits
+    /// resets it, mirroring the mobile side).
+    pub fn reset_dict(&mut self) {
+        self.dict.reset();
+    }
+
+    /// (hit_bytes, additions) counters for metrics deltas.
+    pub fn dict_stats(&self) -> (u64, u64) {
+        (self.dict.hit_bytes, self.dict.additions)
     }
 
     pub fn is_enabled(&self) -> bool {
@@ -526,7 +661,11 @@ impl CloneSession {
         digest: u64,
         assignments: &[(u64, u64)],
     ) -> Result<()> {
+        // Every `NeedFull` this side emits also resets the session
+        // dictionary: the mobile endpoint resets on receiving one, so
+        // both replicas land on the empty prefix together.
         if !self.enabled {
+            self.dict.reset();
             return Err(CloneCloudError::need_full(
                 "heartbeat on a session that did not negotiate delta",
             ));
@@ -534,9 +673,10 @@ impl CloneSession {
         let b = match self.base.as_mut() {
             Some(b) => b,
             None => {
+                self.dict.reset();
                 return Err(CloneCloudError::need_full(
                     "no session baseline at the clone",
-                ))
+                ));
             }
         };
         for &(cid, mid) in assignments {
@@ -547,6 +687,7 @@ impl CloneSession {
         let have = state_digest(p, &table_members(&b.table));
         if have != digest {
             self.base = None;
+            self.dict.reset();
             return Err(CloneCloudError::need_full(format!(
                 "heartbeat digest mismatch (clone {have:#x} != mobile {digest:#x})"
             )));
@@ -626,12 +767,34 @@ pub(crate) fn capture_forward(
         opts.incremental_statics = false;
     }
     if sess.enabled && sess.baseline.is_some() {
+        // Periodic mobile-side GC: liveness is the collector's job, not
+        // the capture's. Collected members surface as stamped pages, so
+        // this same capture reports them in its `deleted` list. Zygote
+        // template objects are rooted — they must stay resolvable by
+        // their (class, seq) names however unreachable they look.
+        sess.delta_captures += 1;
+        if sess.paged && sess.gc_every > 0 && sess.delta_captures % sess.gc_every == 0 {
+            let mut roots = p.gc_roots();
+            roots.extend(p.heap.zygote_ids());
+            p.heap.gc(&roots);
+        }
         let b = sess.baseline.as_ref().expect("checked");
         let base = DeltaBase {
             epoch: b.epoch,
             view: BaseView::Mobile(&b.mids),
         };
-        let raw = capture_core(p, tid, Direction::Forward, None, opts, Some(&base))?;
+        let raw = if sess.paged && opts.zygote_diff {
+            // The paged scan bails on any reference its invariants say
+            // cannot exist (a barrier edge case, a malformed heap);
+            // degrade to the per-object traversal — always sound, its
+            // own errors are real — rather than failing the run.
+            match capture_core_paged(p, tid, Direction::Forward, None, opts, &base) {
+                Ok(raw) => raw,
+                Err(_) => capture_core(p, tid, Direction::Forward, None, opts, Some(&base))?,
+            }
+        } else {
+            capture_core(p, tid, Direction::Forward, None, opts, Some(&base))?
+        };
 
         let mut deleted: Vec<u64> = b
             .mids
@@ -914,10 +1077,17 @@ fn receive_forward_delta(
             "delta capsule on a session that did not negotiate delta",
         ));
     }
-    let mut b = sess
-        .base
-        .take()
-        .ok_or_else(|| CloneCloudError::need_full("no session baseline at the clone"))?;
+    let mut b = match sess.base.take() {
+        Some(b) => b,
+        None => {
+            // Emitting NeedFull resets the dictionary replica too (the
+            // mobile side resets on receiving it).
+            sess.dict.reset();
+            return Err(CloneCloudError::need_full(
+                "no session baseline at the clone",
+            ));
+        }
+    };
 
     // Complete the table with the MIDs the mobile merge assigned to the
     // objects this slot created last visit.
@@ -933,7 +1103,8 @@ fn receive_forward_delta(
     let have = state_digest(clone, &members);
     if have != d.base_digest {
         // Baseline poisoned — stay evicted so the retry takes the full
-        // path and re-establishes the session.
+        // path and re-establishes the session (dictionary included).
+        sess.dict.reset();
         return Err(CloneCloudError::need_full(format!(
             "baseline digest mismatch (clone {have:#x} != mobile {:#x})",
             d.base_digest
@@ -950,8 +1121,13 @@ fn receive_forward_delta(
 
     // A malformed template degrades to `NeedFull`: the retried full
     // capture resolves twins leniently instead of aborting the session.
-    let zidx = ZygoteIndex::try_build(&clone.program, &clone.heap)
-        .map_err(|e| CloneCloudError::need_full(e.to_string()))?;
+    let zidx = match ZygoteIndex::try_build(&clone.program, &clone.heap) {
+        Ok(z) => z,
+        Err(e) => {
+            sess.dict.reset();
+            return Err(CloneCloudError::need_full(e.to_string()));
+        }
+    };
     let zlocal = resolve_zygote_locals(&d.sections.zygote_refs, &zidx)?;
 
     // Placement: known members overwrite in place through the session
@@ -1029,7 +1205,30 @@ pub(crate) fn return_from_clone_capsule(
                 epoch: base.fwd_epoch,
                 view: BaseView::CloneTable(&base.table),
             };
-            capture_core(clone, tid, Direction::Reverse, Some(&base.table), opts, Some(&db))?
+            if sess.paged && opts.zygote_diff {
+                // Same degrade as the forward side: a paged-scan bail
+                // falls back to the always-sound traversal.
+                match capture_core_paged(
+                    clone,
+                    tid,
+                    Direction::Reverse,
+                    Some(&base.table),
+                    opts,
+                    &db,
+                ) {
+                    Ok(raw) => raw,
+                    Err(_) => capture_core(
+                        clone,
+                        tid,
+                        Direction::Reverse,
+                        Some(&base.table),
+                        opts,
+                        Some(&db),
+                    )?,
+                }
+            } else {
+                capture_core(clone, tid, Direction::Reverse, Some(&base.table), opts, Some(&db))?
+            }
         };
 
         let mut deleted: Vec<u64> = table_members(&base.table)

@@ -49,6 +49,128 @@ impl Strings {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Session-lifetime string dictionary
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn fnv_str(mut h: u64, s: &str) -> u64 {
+    for &b in (s.len() as u32)
+        .to_be_bytes()
+        .iter()
+        .chain(s.as_bytes().iter())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// A session-lifetime string dictionary, negotiated via the Hello
+/// capability bit `CAP_SESSION_DICT`. The per-capsule string table
+/// re-learns the same class/method names every capsule; a dict-mode
+/// capsule instead ships only the dictionary *additions* plus indices
+/// into the shared prefix, guarded by a rolling digest of that prefix.
+/// A digest mismatch is answered with the typed `NeedFull` signal and
+/// **both** endpoints reset to the empty dictionary — mismatch degrades
+/// to a re-seeded (or inline-table) capsule, never to corruption.
+#[derive(Debug, Clone)]
+pub struct SessionDict {
+    entries: Vec<String>,
+    index: std::collections::HashMap<String, u32>,
+    digest: u64,
+    /// Strings resolved from pre-existing entries — names a per-capsule
+    /// table would have re-shipped.
+    pub hits: u64,
+    /// Bytes those hits would have cost in a per-capsule table
+    /// (length prefix + payload).
+    pub hit_bytes: u64,
+    /// Entries appended over the session's lifetime (monotonic across
+    /// resets).
+    pub additions: u64,
+    /// Digest-mismatch resets this replica has been through.
+    pub resets: u64,
+}
+
+impl Default for SessionDict {
+    fn default() -> Self {
+        SessionDict::new()
+    }
+}
+
+impl SessionDict {
+    pub fn new() -> SessionDict {
+        SessionDict {
+            entries: Vec::new(),
+            index: std::collections::HashMap::new(),
+            digest: FNV_OFFSET,
+            hits: 0,
+            hit_bytes: 0,
+            additions: 0,
+            resets: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Rolling digest of the entry list (order-sensitive). Two replicas
+    /// with equal digests decode each other's indices identically.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Drop every entry (digest-mismatch recovery). The usage counters
+    /// survive — they meter the session, not the current prefix.
+    pub fn reset(&mut self) {
+        self.entries.clear();
+        self.index.clear();
+        self.digest = FNV_OFFSET;
+        self.resets += 1;
+    }
+
+    fn push(&mut self, s: String) -> u32 {
+        let i = self.entries.len() as u32;
+        self.digest = fnv_str(self.digest, &s);
+        self.index.insert(s.clone(), i);
+        self.entries.push(s);
+        self.additions += 1;
+        i
+    }
+
+    fn lookup(&self, i: u32) -> Result<String> {
+        self.entries.get(i as usize).cloned().ok_or_else(|| {
+            CloneCloudError::Wire(format!("dictionary index {i} out of range"))
+        })
+    }
+}
+
+/// How a capsule's sections are encoded with respect to the session
+/// dictionary. `Off` is the pre-dict wire layout (no mode byte) — the
+/// only legal choice when the Hello negotiation did not land on
+/// `CAP_SESSION_DICT`. On a dict-negotiated channel every capsule leads
+/// its sections with a self-describing mode byte: `Inline` (0) carries
+/// the classic per-capsule table, `Shared` (1) the dictionary form.
+pub enum DictMode<'a> {
+    Off,
+    Inline,
+    Shared(&'a mut SessionDict),
+}
+
+/// Decode-side counterpart of [`DictMode`]: `Off` expects the pre-dict
+/// layout; `Negotiated` expects the mode byte and can decode either
+/// per-capsule form against the given replica.
+pub enum DictRead<'a> {
+    Off,
+    Negotiated(&'a mut SessionDict),
+}
+
 /// Migration direction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Direction {
@@ -130,42 +252,46 @@ pub struct WireSections {
     pub statics: Vec<WireStatic>,
 }
 
-/// Encode the string table followed by every section (shared tail of
-/// both the full and the delta capsule formats).
-pub(crate) fn encode_sections(
+/// Name indexes from the intern pass (pass 1), consumed by the shared
+/// emission pass (pass 2).
+struct NameIndexes {
+    frames: Vec<(u32, u32)>,
+    objects: Vec<u32>,
+    zygotes: Vec<u32>,
+    statics: Vec<u32>,
+}
+
+/// Pass 1: intern every name in a deterministic order, against whatever
+/// backing store `intern` writes to (per-capsule table or session dict).
+fn intern_names(
+    frames: &[WireFrame],
+    objects: &[WireObject],
+    zygote_refs: &[(String, u32)],
+    statics: &[WireStatic],
+    mut intern: impl FnMut(&str) -> u32,
+) -> NameIndexes {
+    NameIndexes {
+        frames: frames
+            .iter()
+            .map(|f| (intern(&f.class_name), intern(&f.method_name)))
+            .collect(),
+        objects: objects.iter().map(|o| intern(&o.class_name)).collect(),
+        zygotes: zygote_refs.iter().map(|(name, _)| intern(name)).collect(),
+        statics: statics.iter().map(|s| intern(&s.class_name)).collect(),
+    }
+}
+
+/// Pass 2: emit every section with names replaced by their indexes.
+fn emit_sections(
     w: &mut WireWriter,
     frames: &[WireFrame],
     objects: &[WireObject],
     zygote_refs: &[(String, u32)],
     statics: &[WireStatic],
+    names: &NameIndexes,
 ) {
-    // Pass 1: intern every name, in a deterministic order.
-    let mut strings = Strings::default();
-    let frame_names: Vec<(u32, u32)> = frames
-        .iter()
-        .map(|f| (strings.intern(&f.class_name), strings.intern(&f.method_name)))
-        .collect();
-    let obj_names: Vec<u32> = objects
-        .iter()
-        .map(|o| strings.intern(&o.class_name))
-        .collect();
-    let zy_names: Vec<u32> = zygote_refs
-        .iter()
-        .map(|(name, _)| strings.intern(name))
-        .collect();
-    let static_names: Vec<u32> = statics
-        .iter()
-        .map(|s| strings.intern(&s.class_name))
-        .collect();
-
-    // Pass 2: emit.
-    w.put_u32(strings.table.len() as u32);
-    for s in &strings.table {
-        w.put_str(s);
-    }
-
     w.put_u32(frames.len() as u32);
-    for (f, &(cn, mn)) in frames.iter().zip(&frame_names) {
+    for (f, &(cn, mn)) in frames.iter().zip(&names.frames) {
         w.put_u32(cn);
         w.put_u32(mn);
         w.put_u32(f.pc);
@@ -177,7 +303,7 @@ pub(crate) fn encode_sections(
     }
 
     w.put_u32(objects.len() as u32);
-    for (o, &cn) in objects.iter().zip(&obj_names) {
+    for (o, &cn) in objects.iter().zip(&names.objects) {
         w.put_u64(o.origin_id);
         w.put_u64(o.mapped_id);
         w.put_u32(cn);
@@ -192,16 +318,93 @@ pub(crate) fn encode_sections(
     }
 
     w.put_u32(zygote_refs.len() as u32);
-    for ((_, seq), &cn) in zygote_refs.iter().zip(&zy_names) {
+    for ((_, seq), &cn) in zygote_refs.iter().zip(&names.zygotes) {
         w.put_u32(cn);
         w.put_u32(*seq);
     }
 
     w.put_u32(statics.len() as u32);
-    for (s, &cn) in statics.iter().zip(&static_names) {
+    for (s, &cn) in statics.iter().zip(&names.statics) {
         w.put_u32(cn);
         w.put_u16(s.idx);
         encode_value(w, &s.value);
+    }
+}
+
+/// Encode the string table followed by every section (shared tail of
+/// both the full and the delta capsule formats; pre-dict layout).
+pub(crate) fn encode_sections(
+    w: &mut WireWriter,
+    frames: &[WireFrame],
+    objects: &[WireObject],
+    zygote_refs: &[(String, u32)],
+    statics: &[WireStatic],
+) {
+    let mut strings = Strings::default();
+    let names = intern_names(frames, objects, zygote_refs, statics, |s| {
+        strings.intern(s)
+    });
+    w.put_u32(strings.table.len() as u32);
+    for s in &strings.table {
+        w.put_str(s);
+    }
+    emit_sections(w, frames, objects, zygote_refs, statics, &names);
+}
+
+/// Dict-aware section encoder. `Off` emits the pre-dict layout
+/// byte-for-byte; the other modes prefix the self-describing mode byte
+/// and either the classic table (`Inline`) or the dictionary header
+/// (`Shared`: prefix digest + additions + indices into the grown dict).
+pub(crate) fn encode_sections_with(
+    w: &mut WireWriter,
+    frames: &[WireFrame],
+    objects: &[WireObject],
+    zygote_refs: &[(String, u32)],
+    statics: &[WireStatic],
+    dict: DictMode<'_>,
+) {
+    match dict {
+        DictMode::Off => encode_sections(w, frames, objects, zygote_refs, statics),
+        DictMode::Inline => {
+            w.put_u8(0);
+            encode_sections(w, frames, objects, zygote_refs, statics);
+        }
+        DictMode::Shared(d) => {
+            w.put_u8(1);
+            w.put_u64(d.digest());
+            let mut additions: Vec<String> = Vec::new();
+            let mut add_index: std::collections::HashMap<String, u32> =
+                std::collections::HashMap::new();
+            // A per-capsule table would have shipped each distinct name
+            // once; meter the savings per distinct hit, not per use.
+            let mut seen: std::collections::HashSet<u32> = std::collections::HashSet::new();
+            let names = intern_names(frames, objects, zygote_refs, statics, |s| {
+                if let Some(&i) = d.index.get(s) {
+                    if seen.insert(i) {
+                        d.hits += 1;
+                        d.hit_bytes += 4 + s.len() as u64;
+                    }
+                    return i;
+                }
+                if let Some(&i) = add_index.get(s) {
+                    return i;
+                }
+                let i = (d.entries.len() + additions.len()) as u32;
+                add_index.insert(s.to_string(), i);
+                additions.push(s.to_string());
+                i
+            });
+            w.put_u32(additions.len() as u32);
+            for s in &additions {
+                w.put_str(s);
+            }
+            // Absorb the additions so the next capsule's prefix digest
+            // covers them (the receiver does the same on decode).
+            for s in additions {
+                d.push(s);
+            }
+            emit_sections(w, frames, objects, zygote_refs, statics, &names);
+        }
     }
 }
 
@@ -209,6 +412,19 @@ impl WireSections {
     /// Encode this section set (see [`encode_sections`]).
     pub(crate) fn encode_into(&self, w: &mut WireWriter) {
         encode_sections(w, &self.frames, &self.objects, &self.zygote_refs, &self.statics);
+    }
+
+    /// Encode with an explicit dictionary mode (see
+    /// [`encode_sections_with`]).
+    pub(crate) fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) {
+        encode_sections_with(
+            w,
+            &self.frames,
+            &self.objects,
+            &self.zygote_refs,
+            &self.statics,
+            dict,
+        );
     }
 
     /// Decode the string table + sections (shared tail; see
@@ -229,7 +445,54 @@ impl WireSections {
                 .cloned()
                 .ok_or_else(|| CloneCloudError::Wire(format!("string index {i} out of range")))
         };
+        Self::decode_body_sections(r, &lookup)
+    }
 
+    /// Dict-aware decoder. Returns the sections plus whether the capsule
+    /// rode the shared dictionary (`true` = mode 1), so receivers can
+    /// answer in the same mode. A prefix-digest mismatch resets the
+    /// local replica and degrades with the typed `NeedFull` signal —
+    /// both ends then re-seed from the empty dictionary.
+    pub(crate) fn decode_from_with(
+        r: &mut WireReader,
+        dict: DictRead<'_>,
+    ) -> Result<(WireSections, bool)> {
+        let d = match dict {
+            DictRead::Off => return Ok((Self::decode_from(r)?, false)),
+            DictRead::Negotiated(d) => d,
+        };
+        match r.get_u8()? {
+            0 => Ok((Self::decode_from(r)?, false)),
+            1 => {
+                let digest = r.get_u64()?;
+                if digest != d.digest() {
+                    let local = d.digest();
+                    d.reset();
+                    return Err(CloneCloudError::need_full(format!(
+                        "session dictionary digest mismatch (sender {digest:#x} != \
+                         local {local:#x}) — replica reset, resend against the \
+                         empty dictionary"
+                    )));
+                }
+                let nadd = r.get_u32()? as usize;
+                let nadd = r.checked_count(nadd, 4)?;
+                for _ in 0..nadd {
+                    let s = r.get_str()?;
+                    d.push(s);
+                }
+                let d = &*d;
+                let lookup = |i: u32| -> Result<String> { d.lookup(i) };
+                Ok((Self::decode_body_sections(r, &lookup)?, true))
+            }
+            m => Err(CloneCloudError::Wire(format!("bad dictionary mode {m}"))),
+        }
+    }
+
+    /// The section tail after the string store (table or dictionary).
+    fn decode_body_sections(
+        r: &mut WireReader,
+        lookup: &dyn Fn(u32) -> Result<String>,
+    ) -> Result<WireSections> {
         let nframes = r.get_u32()? as usize;
         let nframes = r.checked_count(nframes, 17)?;
         let mut frames = Vec::with_capacity(nframes);
@@ -341,24 +604,36 @@ impl CapturePacket {
     /// Serialize to network-byte-order bytes. Class/method names are
     /// interned into a string table written up front.
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_with(DictMode::Off)
+    }
+
+    /// Serialize under an explicit session-dictionary mode.
+    pub fn encode_with(&self, dict: DictMode<'_>) -> Vec<u8> {
         let mut w = WireWriter::with_capacity(4096);
         w.put_u32(MAGIC);
         w.put_u16(VERSION);
         encode_direction(&mut w, self.direction);
         w.put_u32(self.thread_id);
         w.put_f64(self.clock_us);
-        encode_sections(
+        encode_sections_with(
             &mut w,
             &self.frames,
             &self.objects,
             &self.zygote_refs,
             &self.statics,
+            dict,
         );
         w.into_vec()
     }
 
-    /// Decode from bytes.
+    /// Decode from bytes (pre-dict layout).
     pub fn decode(buf: &[u8]) -> Result<CapturePacket> {
+        Ok(Self::decode_with(buf, DictRead::Off)?.0)
+    }
+
+    /// Decode under an explicit session-dictionary mode; the flag says
+    /// whether the capsule rode the shared dictionary.
+    pub fn decode_with(buf: &[u8], dict: DictRead<'_>) -> Result<(CapturePacket, bool)> {
         let mut r = WireReader::new(buf);
         let magic = r.get_u32()?;
         if magic != MAGIC {
@@ -371,22 +646,25 @@ impl CapturePacket {
         let direction = decode_direction(&mut r)?;
         let thread_id = r.get_u32()?;
         let clock_us = r.get_f64()?;
-        let s = WireSections::decode_from(&mut r)?;
+        let (s, used_dict) = WireSections::decode_from_with(&mut r, dict)?;
         if !r.is_done() {
             return Err(CloneCloudError::Wire(format!(
                 "{} trailing bytes",
                 r.remaining()
             )));
         }
-        Ok(CapturePacket {
-            direction,
-            thread_id,
-            clock_us,
-            frames: s.frames,
-            objects: s.objects,
-            zygote_refs: s.zygote_refs,
-            statics: s.statics,
-        })
+        Ok((
+            CapturePacket {
+                direction,
+                thread_id,
+                clock_us,
+                frames: s.frames,
+                objects: s.objects,
+                zygote_refs: s.zygote_refs,
+                statics: s.statics,
+            },
+            used_dict,
+        ))
     }
 }
 
@@ -735,5 +1013,170 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    // ---- session-dictionary codec (property suite) ----------------------
+
+    /// A whole session's worth of capsules rides one sender/receiver
+    /// dictionary pair: every capsule round-trips, the replicas' digests
+    /// agree after every capsule, and repeated names stop being shipped
+    /// (dictionary hits accumulate).
+    #[test]
+    fn prop_session_dict_roundtrips_and_stays_coherent() {
+        use crate::util::prop::{ensure, ensure_eq, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xD1C7_0001,
+                cases: 60,
+            },
+            |rng| (0..4).map(|_| gen_packet(rng)).collect::<Vec<_>>(),
+            |packets| {
+                let mut tx = SessionDict::new();
+                let mut rx = SessionDict::new();
+                for p in packets {
+                    let bytes = p.encode_with(DictMode::Shared(&mut tx));
+                    let (q, used) = CapturePacket::decode_with(
+                        &bytes,
+                        DictRead::Negotiated(&mut rx),
+                    )
+                    .map_err(|e| format!("decode: {e}"))?;
+                    ensure(used, "capsule rode the shared dictionary")?;
+                    ensure_eq(q, p.clone(), "decode(encode(p))")?;
+                    ensure_eq(rx.digest(), tx.digest(), "replica digests agree")?;
+                    ensure_eq(rx.len(), tx.len(), "replica sizes agree")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_dict_strict_prefixes_never_decode() {
+        use crate::util::prop::{ensure, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xD1C7_0002,
+                cases: 100,
+            },
+            |rng| {
+                let mut tx = SessionDict::new();
+                let bytes = gen_packet(rng).encode_with(DictMode::Shared(&mut tx));
+                let cut = rng.index(bytes.len());
+                (bytes, cut)
+            },
+            |(bytes, cut)| {
+                let mut rx = SessionDict::new();
+                ensure(
+                    CapturePacket::decode_with(
+                        &bytes[..*cut],
+                        DictRead::Negotiated(&mut rx),
+                    )
+                    .is_err(),
+                    "prefix decoded",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_dict_garbage_never_panics() {
+        use crate::util::prop::{forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xD1C7_0003,
+                cases: 300,
+            },
+            |rng| {
+                // Start from a valid header + a dictionary mode byte so
+                // the fuzz reaches the dict header/additions parser.
+                let mut w = crate::util::bytes::WireWriter::new();
+                w.put_u32(MAGIC);
+                w.put_u16(2);
+                w.put_u8(0); // direction
+                w.put_u32(0); // thread id
+                w.put_f64(0.0); // clock
+                w.put_u8(if rng.chance(0.5) { 1 } else { rng.byte() });
+                let mut b = w.into_vec();
+                let mut tail = vec![0u8; rng.index(256)];
+                rng.fill_bytes(&mut tail);
+                b.extend_from_slice(&tail);
+                b
+            },
+            |bytes| {
+                let mut rx = SessionDict::new();
+                // Ok or Err both fine; no panic, whatever the dict state.
+                let _ = CapturePacket::decode_with(bytes, DictRead::Negotiated(&mut rx));
+                Ok(())
+            },
+        );
+    }
+
+    /// A diverged replica rejects with the typed `NeedFull`, resets
+    /// itself to empty, and then accepts a resend encoded against the
+    /// (also reset) sender dictionary — the fallback is a re-seed, never
+    /// corruption.
+    #[test]
+    fn dict_digest_mismatch_degrades_to_reset_and_reseed() {
+        let p = sample();
+        let mut tx = SessionDict::new();
+        // Warm the sender with a capsule the receiver never saw.
+        let _lost = p.encode_with(DictMode::Shared(&mut tx));
+        assert!(!tx.is_empty());
+
+        let mut rx = SessionDict::new();
+        let bytes = p.encode_with(DictMode::Shared(&mut tx));
+        let err = CapturePacket::decode_with(&bytes, DictRead::Negotiated(&mut rx))
+            .unwrap_err();
+        assert!(err.is_need_full(), "typed NeedFull signal: {err}");
+        assert!(rx.is_empty(), "replica reset on mismatch");
+        assert_eq!(rx.resets, 1);
+
+        // Both ends reset: the resend re-seeds and decodes cleanly.
+        tx.reset();
+        let bytes = p.encode_with(DictMode::Shared(&mut tx));
+        let (q, used) =
+            CapturePacket::decode_with(&bytes, DictRead::Negotiated(&mut rx)).unwrap();
+        assert!(used);
+        assert_eq!(q, p);
+        assert_eq!(rx.digest(), tx.digest());
+    }
+
+    /// Mode 0 on a negotiated channel: the classic per-capsule table,
+    /// self-describing, and the replica is untouched.
+    #[test]
+    fn dict_inline_mode_is_self_describing() {
+        let p = sample();
+        let bytes = p.encode_with(DictMode::Inline);
+        let mut rx = SessionDict::new();
+        let (q, used) =
+            CapturePacket::decode_with(&bytes, DictRead::Negotiated(&mut rx)).unwrap();
+        assert!(!used, "inline capsules do not touch the dictionary");
+        assert_eq!(q, p);
+        assert!(rx.is_empty());
+        // And the unnegotiated layout is byte-identical to the legacy
+        // encoder (one mode byte shorter than Inline).
+        assert_eq!(p.encode(), p.encode_with(DictMode::Off));
+        assert_eq!(bytes.len(), p.encode().len() + 1);
+    }
+
+    /// Dictionary hits meter what a per-capsule table would have
+    /// re-shipped: a repeat capsule with no new names costs only the
+    /// dict header, strictly less than its inline-table form.
+    #[test]
+    fn dict_repeat_capsules_beat_the_per_capsule_table() {
+        let p = sample();
+        let mut tx = SessionDict::new();
+        let first = p.encode_with(DictMode::Shared(&mut tx));
+        let hits_before = tx.hits;
+        let second = p.encode_with(DictMode::Shared(&mut tx));
+        assert!(tx.hits > hits_before, "repeat names hit the dictionary");
+        assert!(tx.hit_bytes > 0);
+        assert!(
+            second.len() < p.encode_with(DictMode::Inline).len(),
+            "repeat capsule beats the inline table ({} vs {})",
+            second.len(),
+            p.encode_with(DictMode::Inline).len()
+        );
+        assert!(second.len() < first.len(), "additions shipped only once");
     }
 }

@@ -36,6 +36,11 @@ pub struct MigrationPhases {
     pub base_skipped: usize,
     /// Static slots serialized into the capsule's statics section.
     pub statics_shipped: usize,
+    /// Capture work: objects examined (traversal visits or dirty-page
+    /// entries) and, on the paged path, pages opened / found dirty.
+    pub objects_scanned: usize,
+    pub pages_scanned: usize,
+    pub pages_dirty: usize,
 }
 
 /// The migrator: per-process component, configured with cost calibration
@@ -194,6 +199,9 @@ impl Migrator {
         phases.zygote_skipped = stats.zygote_skipped;
         phases.base_skipped = stats.base_skipped;
         phases.statics_shipped = stats.statics_shipped;
+        phases.objects_scanned = stats.objects_scanned;
+        phases.pages_scanned = stats.pages_scanned;
+        phases.pages_dirty = stats.pages_dirty;
     }
 }
 

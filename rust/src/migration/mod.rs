@@ -1,9 +1,13 @@
 //! Thread-granularity migration (paper §4) + epoch-based delta transfer.
 //!
 //! * [`capture`] — suspend-and-capture: frames + reachable heap + statics
-//!   (full, or restricted to the dirty set for delta capsules).
+//!   (full, or restricted to the dirty set for delta capsules — found by
+//!   the per-page epoch scan, O(dirty pages), with the per-object
+//!   traversal kept as the ablation baseline).
 //! * [`format`] — hprof-like portable wire encoding (network byte order);
-//!   section codecs shared by both capsule flavors.
+//!   section codecs shared by both capsule flavors, with an optional
+//!   session-lifetime string dictionary ([`SessionDict`]) replacing the
+//!   per-capsule table on negotiated channels.
 //! * [`mapping`] — the MID/CID object-mapping table (Fig. 8), promoted to
 //!   session lifetime by the delta pipeline.
 //! * [`merge`] — clone-side instantiation and mobile-side state merge.
@@ -26,7 +30,7 @@ pub use delta::{
     collect_slot_garbage, Capsule, CloneSession, DeltaPacket, MobileSession, SlotGcStats,
     CAPSULE_CLOCK_OFFSET,
 };
-pub use format::{CapturePacket, Direction};
+pub use format::{CapturePacket, DictMode, DictRead, Direction, SessionDict};
 pub use mapping::MappingTable;
 pub use merge::{instantiate_at_clone, merge_at_mobile, validate_packet, MergeStats};
 pub use migrator::{MigrationPhases, Migrator};
@@ -387,6 +391,78 @@ end
             other => panic!("expected byte array, got {other:?}"),
         };
         (out, keep_bytes, rounds, fallbacks)
+    }
+
+    /// The page-epoch scan and the per-object traversal are two
+    /// implementations of the same capture semantics: a whole session
+    /// driven through each lands on bit-identical application state,
+    /// and the paged side's GC-driven `deleted` lists keep membership
+    /// pruned (the traversal prunes by reachability every round).
+    #[test]
+    fn paged_and_traversal_delta_sessions_agree_bit_for_bit() {
+        let run = |paged: bool| -> (Value, Vec<u8>, usize) {
+            let program = Arc::new(assemble(DELTA_PROG).unwrap());
+            let main = program.entry().unwrap();
+            let mut phone = make_proc(Location::Mobile, &program, 40);
+            let mut clone = make_proc(Location::Clone, &program, 40);
+            let migrator = Migrator::new(CostParams::default());
+            let mut msess = MobileSession::new(true);
+            msess.set_paged(paged);
+            msess.set_gc_interval(2); // prune aggressively on the paged path
+            let mut csess = CloneSession::new(true);
+            csess.set_paged(paged);
+
+            let tid = phone.spawn_thread(main, &[]).unwrap();
+            let mut deleted_total = 0usize;
+            loop {
+                match run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap() {
+                    RunExit::Completed(_) => break,
+                    RunExit::ReintegrationPoint { .. } => continue,
+                    RunExit::MigrationPoint { .. } => {
+                        let (capsule, _) =
+                            migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+                        let sent = Capsule::decode(&capsule.encode()).unwrap();
+                        if let Capsule::Delta(d) = &sent {
+                            deleted_total += d.deleted.len();
+                        }
+                        let (ctid, _) = migrator
+                            .receive_capsule_at_clone(&mut clone, &sent, &mut csess)
+                            .unwrap();
+                        let exit =
+                            run_thread(&mut clone, ctid, &mut NoHooks, 10_000_000).unwrap();
+                        assert!(matches!(exit, RunExit::ReintegrationPoint { .. }));
+                        let (rcap, _, _) = migrator
+                            .return_capsule_from_clone(&mut clone, ctid, &mut csess)
+                            .unwrap();
+                        let rcap = Capsule::decode(&rcap.encode()).unwrap();
+                        migrator
+                            .merge_back_capsule(&mut phone, tid, &rcap, &mut msess)
+                            .unwrap();
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            let out = phone.statics[main.class.0 as usize][1];
+            let keep = phone.statics[main.class.0 as usize][2].as_ref().unwrap();
+            let keep_bytes = match &phone.heap.get(keep).unwrap().body {
+                ObjBody::ByteArray(b) => b.clone(),
+                other => panic!("expected byte array, got {other:?}"),
+            };
+            (out, keep_bytes, deleted_total)
+        };
+
+        let (out_paged, keep_paged, deleted_paged) = run(true);
+        let (out_trav, keep_trav, deleted_trav) = run(false);
+        assert_eq!(out_paged, out_trav, "bit-identical results");
+        assert_eq!(keep_paged, keep_trav, "clone-created state matches too");
+        assert!(
+            deleted_trav >= 1,
+            "traversal reports reachability deletions (old keep arrays)"
+        );
+        assert!(
+            deleted_paged >= 1,
+            "mobile GC feeds the paged path's deleted list"
+        );
     }
 
     /// Delta and full capsule paths must produce bit-identical results,

@@ -19,7 +19,8 @@ use crate::farm::{FarmClone, FarmHandle};
 use crate::vfs::SimFs;
 
 use super::protocol::{
-    codec_agreed, open_frame, seal_frame, Codec, Msg, PROTO_VERSION, SUPPORTED_CAPS,
+    codec_agreed, dict_agreed, open_frame, seal_frame, Codec, Msg, CAP_SESSION_DICT,
+    PROTO_VERSION, SUPPORTED_CAPS,
 };
 use super::transport::{TcpEndpoint, Transport};
 
@@ -32,6 +33,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
     let mut migrations = 0u64;
     // Armed by Hello; applied to the session whenever one exists.
     let mut delta = false;
+    let mut dict = false;
     let mut codec = Codec::None;
     loop {
         let (msg, _) = t.recv()?;
@@ -41,17 +43,29 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                 delta: want,
                 caps,
             } => {
-                // Delta also requires placement that parks the phone's
-                // baseline on one worker (affinity).
+                // Delta — and the session dictionary, whose replica also
+                // lives in the slot — require placement that parks the
+                // phone on one worker (affinity). The dictionary bit
+                // must be masked out of the REPLY caps too: the phone
+                // computes `dict_agreed` from what we advertise, and a
+                // phone that believes dict while the slots decode
+                // without it would fail every capsule.
+                let local_caps = if handle.delta_friendly() {
+                    SUPPORTED_CAPS
+                } else {
+                    SUPPORTED_CAPS & !CAP_SESSION_DICT
+                };
                 delta = super::protocol::delta_agreed(proto, want) && handle.delta_friendly();
+                dict = dict_agreed(PROTO_VERSION, local_caps, proto, caps);
                 codec = codec_agreed(proto, caps);
                 if let Some(s) = session.as_mut() {
                     s.set_delta(delta);
+                    s.set_dict(dict);
                 }
                 // Log the negotiated capability set: mixed-version
                 // fleets are debugged from exactly this line.
                 eprintln!(
-                    "[farm] session caps: proto v{}, delta={delta}, codec={}",
+                    "[farm] session caps: proto v{}, delta={delta}, dict={dict}, codec={}",
                     proto.min(PROTO_VERSION),
                     codec.name()
                 );
@@ -60,7 +74,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                 t.send(&Msg::Hello {
                     proto: proto.min(PROTO_VERSION),
                     delta,
-                    caps: SUPPORTED_CAPS,
+                    caps: local_caps,
                 })?;
             }
             Msg::Provision {
@@ -91,6 +105,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                     None => {
                         let mut s = handle.session_auto(fs);
                         s.set_delta(delta);
+                        s.set_dict(dict);
                         session = Some(s);
                     }
                 }
@@ -104,6 +119,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                 if session.is_none() {
                     let mut s = handle.session_auto(SimFs::new());
                     s.set_delta(delta);
+                    s.set_dict(dict);
                     session = Some(s);
                 }
                 let s = session.as_mut().unwrap();
@@ -294,6 +310,34 @@ mod tests {
         assert_eq!(stats.migrations, 1);
         assert_eq!(stats.sessions_opened, 1);
         assert_eq!(stats.sessions_closed, 1, "gateway session retired");
+    }
+
+    /// Without affinity placement the gateway must not just disable the
+    /// dictionary locally — it must mask `CAP_SESSION_DICT` out of the
+    /// Hello REPLY, or the phone would negotiate dict against slots
+    /// that decode without it and every capsule would fail.
+    #[test]
+    fn gateway_masks_dict_capability_without_affinity() {
+        let (_program, farm) = start_farm(); // LeastLoaded placement
+        let (phone_t, clone_t) = InProcTransport::pair();
+        let handle = farm.handle();
+        let gw = std::thread::spawn(move || serve_farm_session(clone_t, &handle).unwrap());
+
+        let mut nm = NodeManager::new(phone_t);
+        nm.negotiate().unwrap();
+        assert!(!nm.delta_negotiated(), "delta needs affinity placement");
+        assert!(
+            !nm.dict_negotiated(),
+            "dict bit masked out of the reply caps too"
+        );
+        assert_eq!(
+            nm.negotiated_codec(),
+            Codec::Lz,
+            "the codec is placement-independent and survives the mask"
+        );
+        nm.shutdown().unwrap();
+        gw.join().unwrap();
+        farm.shutdown();
     }
 
     /// The gateway rejects a provision whose executable or Zygote

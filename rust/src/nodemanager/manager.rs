@@ -22,10 +22,11 @@ use crate::migration::{collect_slot_garbage, Capsule, CloneSession, Migrator, Mo
 use crate::vfs::SimFs;
 
 use super::protocol::{
-    codec_agreed, open_frame, program_hash, seal_frame, Codec, HeartbeatOutcome, Msg,
-    PROTO_VERSION, SUPPORTED_CAPS,
+    codec_agreed_at, delta_agreed_at, dict_agreed, open_frame, program_hash, seal_frame, Codec,
+    HeartbeatOutcome, Msg, PROTO_VERSION, SUPPORTED_CAPS,
 };
 use super::transport::Transport;
+use crate::migration::{DictMode, DictRead};
 
 /// Statistics from one clone-serving session.
 #[derive(Debug, Clone, Default)]
@@ -61,6 +62,15 @@ pub struct CloneServer<T: Transport> {
     /// (0 = never): reclaims tombstone threads + orphaned object-graph
     /// copies without evicting the live delta baseline.
     pub slot_gc_interval: u64,
+    /// Highest protocol revision this server speaks. Defaults to
+    /// [`PROTO_VERSION`]; the interop matrix pins it lower to emulate a
+    /// frozen responder build.
+    pub proto_cap: u16,
+    /// Capability bitmap this server advertises (defaults to
+    /// [`SUPPORTED_CAPS`]; mask bits off for ablations/skew tests).
+    pub local_caps: u32,
+    /// Whether this server offers delta capsules at all.
+    pub speak_delta: bool,
 }
 
 impl<T: Transport> CloneServer<T> {
@@ -78,6 +88,9 @@ impl<T: Transport> CloneServer<T> {
             make_env,
             fuel: 2_000_000_000,
             slot_gc_interval: 8,
+            proto_cap: PROTO_VERSION,
+            local_caps: SUPPORTED_CAPS,
+            speak_delta: true,
         }
     }
 
@@ -97,15 +110,23 @@ impl<T: Transport> CloneServer<T> {
             let (msg, _) = self.transport.recv()?;
             match msg {
                 Msg::Hello { proto, delta, caps } => {
-                    let speak_delta = super::protocol::delta_agreed(proto, delta);
-                    codec = codec_agreed(proto, caps);
+                    let speak_delta =
+                        self.speak_delta && delta_agreed_at(self.proto_cap, proto, delta);
+                    codec = codec_agreed_at(self.proto_cap, self.local_caps, proto, caps);
                     session.set_enabled(speak_delta);
+                    session.set_dict_enabled(dict_agreed(
+                        self.proto_cap,
+                        self.local_caps,
+                        proto,
+                        caps,
+                    ));
                     // Reply with the negotiated (min) revision so a v3
-                    // initiator gets a Hello its decoder accepts.
+                    // initiator gets a Hello its decoder accepts (the
+                    // caps field only rides when that revision is >= 4).
                     self.transport.send(&Msg::Hello {
-                        proto: proto.min(PROTO_VERSION),
+                        proto: proto.min(self.proto_cap),
                         delta: speak_delta,
-                        caps: SUPPORTED_CAPS,
+                        caps: self.local_caps,
                     })?;
                 }
                 Msg::Provision {
@@ -192,6 +213,11 @@ impl<T: Transport> CloneServer<T> {
                         Ok(()) => self.transport.send(&Msg::Ack)?,
                         Err(e) if e.is_need_full() => {
                             stats.heartbeat_divergent += 1;
+                            // Covers the provision-less probe too: any
+                            // NeedFull leaving this server resets the
+                            // dictionary replica (idempotent when
+                            // `check_heartbeat` already did).
+                            session.reset_dict();
                             self.transport.send(&Msg::NeedFull(e.to_string()))?
                         }
                         Err(e) => self.transport.send(&Msg::Error(e.to_string()))?,
@@ -236,7 +262,16 @@ pub fn execute_migration(
     stats: &mut CloneServeStats,
     session: &mut CloneSession,
 ) -> Result<Vec<u8>> {
-    let capsule = Capsule::decode(bytes)?;
+    // Session dictionary: decode against the slot replica when the
+    // session negotiated it (a prefix-digest mismatch resets the replica
+    // and surfaces as `NeedFull` right here), and answer the reverse
+    // capsule in the same mode the forward one rode — so a peer that
+    // fell back to the inline table never sees a dictionary reply.
+    let (capsule, used_dict) = if session.dict_enabled() {
+        Capsule::decode_with(bytes, DictRead::Negotiated(session.dict()))?
+    } else {
+        (Capsule::decode(bytes)?, false)
+    };
     let is_delta = capsule.is_delta();
     let (tid, _) = migrator.receive_capsule_at_clone(p, &capsule, session)?;
     let instrs0 = p.metrics.instrs;
@@ -265,7 +300,16 @@ pub fn execute_migration(
     stats.instrs_executed += p.metrics.instrs - instrs0;
     let (rcapsule, _, dropped) = migrator.return_capsule_from_clone(p, tid, session)?;
     stats.mapping_entries_dropped += dropped;
-    Ok(rcapsule.encode())
+    let encoded = if session.dict_enabled() {
+        if used_dict {
+            rcapsule.encode_with(DictMode::Shared(session.dict()))
+        } else {
+            rcapsule.encode_with(DictMode::Inline)
+        }
+    } else {
+        rcapsule.encode()
+    };
+    Ok(encoded)
 }
 
 /// Byte accounting for one migration round trip.
@@ -284,8 +328,16 @@ pub struct NodeManager<T: Transport> {
     delta_negotiated: bool,
     /// Set by [`NodeManager::negotiate`]: the agreed frame codec.
     codec: Codec,
+    /// Set by [`NodeManager::negotiate`]: both peers keep the session
+    /// string dictionary.
+    dict_negotiated: bool,
     /// The peer's protocol revision from its `Hello` (0 = never seen).
     peer_proto: u16,
+    /// The revision/caps/delta this endpoint advertises. Default to the
+    /// build's; the interop matrix pins them to emulate older builds.
+    local_proto: u16,
+    local_caps: u32,
+    local_delta: bool,
 }
 
 impl<T: Transport> NodeManager<T> {
@@ -295,8 +347,28 @@ impl<T: Transport> NodeManager<T> {
             total: TransferBytes::default(),
             delta_negotiated: false,
             codec: Codec::None,
+            dict_negotiated: false,
             peer_proto: 0,
+            local_proto: PROTO_VERSION,
+            local_caps: SUPPORTED_CAPS,
+            local_delta: true,
         }
+    }
+
+    /// Pin the revision this endpoint claims in its `Hello` (skew
+    /// testing: a pre-v4 initiator sends the caps-less Hello shape).
+    pub fn pretend_proto(&mut self, proto: u16) {
+        self.local_proto = proto;
+    }
+
+    /// Override the capability bitmap this endpoint advertises.
+    pub fn advertise_caps(&mut self, caps: u32) {
+        self.local_caps = caps;
+    }
+
+    /// Whether this endpoint offers delta capsules in its `Hello`.
+    pub fn advertise_delta(&mut self, on: bool) {
+        self.local_delta = on;
     }
 
     /// Negotiate protocol capabilities. Returns whether delta capsules
@@ -305,15 +377,24 @@ impl<T: Transport> NodeManager<T> {
     /// (pre-v3) is treated as full-capture-only rather than a failure.
     pub fn negotiate(&mut self) -> Result<bool> {
         self.transport.send(&Msg::Hello {
-            proto: PROTO_VERSION,
-            delta: true,
-            caps: SUPPORTED_CAPS,
+            proto: self.local_proto,
+            delta: self.local_delta,
+            // Pre-v4 Hellos have no caps field on the wire; keep the
+            // in-memory value consistent with what actually rides.
+            caps: if self.local_proto >= super::protocol::COMPRESS_MIN_PROTO {
+                self.local_caps
+            } else {
+                0
+            },
         })?;
         match self.transport.recv()?.0 {
             Msg::Hello { proto, delta, caps } => {
                 self.peer_proto = proto;
-                self.delta_negotiated = super::protocol::delta_agreed(proto, delta);
-                self.codec = codec_agreed(proto, caps);
+                self.delta_negotiated =
+                    self.local_delta && delta_agreed_at(self.local_proto, proto, delta);
+                self.codec = codec_agreed_at(self.local_proto, self.local_caps, proto, caps);
+                self.dict_negotiated =
+                    dict_agreed(self.local_proto, self.local_caps, proto, caps);
             }
             // A peer that answers Error instead of Hello doesn't do
             // capability negotiation; stay on full, uncompressed frames.
@@ -324,6 +405,7 @@ impl<T: Transport> NodeManager<T> {
             Msg::Error(_) => {
                 self.delta_negotiated = false;
                 self.codec = Codec::None;
+                self.dict_negotiated = false;
             }
             other => {
                 return Err(CloneCloudError::Transport(format!(
@@ -332,6 +414,12 @@ impl<T: Transport> NodeManager<T> {
             }
         };
         Ok(self.delta_negotiated)
+    }
+
+    /// Whether [`NodeManager::negotiate`] agreed on the session string
+    /// dictionary.
+    pub fn dict_negotiated(&self) -> bool {
+        self.dict_negotiated
     }
 
     /// Whether [`NodeManager::negotiate`] agreed on delta capsules.
@@ -345,12 +433,12 @@ impl<T: Transport> NodeManager<T> {
     }
 
     /// The protocol revision this session effectively speaks (the
-    /// min-version agreement; `PROTO_VERSION` before any `Hello`).
+    /// min-version agreement; the local revision before any `Hello`).
     pub fn negotiated_proto(&self) -> u16 {
         if self.peer_proto == 0 {
-            PROTO_VERSION
+            self.local_proto
         } else {
-            self.peer_proto.min(PROTO_VERSION)
+            self.peer_proto.min(self.local_proto)
         }
     }
 
@@ -365,9 +453,13 @@ impl<T: Transport> NodeManager<T> {
         }
         self.delta_negotiated = false;
         let sent = self.transport.send(&Msg::Hello {
-            proto: PROTO_VERSION,
+            proto: self.local_proto,
             delta: false,
-            caps: SUPPORTED_CAPS,
+            caps: if self.local_proto >= super::protocol::COMPRESS_MIN_PROTO {
+                self.local_caps
+            } else {
+                0
+            },
         });
         if sent.is_ok() {
             let _ = self.transport.recv(); // consume the peer's Hello reply

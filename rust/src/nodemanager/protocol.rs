@@ -44,7 +44,22 @@ pub const COMPRESS_MIN_PROTO: u16 = 4;
 /// The delta decision both Hello peers compute: the negotiated revision
 /// is the minimum of the two, and it must know delta capsules.
 pub fn delta_agreed(peer_proto: u16, peer_delta: bool) -> bool {
-    peer_delta && peer_proto.min(PROTO_VERSION) >= DELTA_MIN_PROTO
+    delta_agreed_at(PROTO_VERSION, peer_proto, peer_delta)
+}
+
+/// [`delta_agreed`] with an explicit local revision — the interop matrix
+/// (and any build pinned to an older revision for skew testing) passes
+/// its own instead of `PROTO_VERSION`.
+pub fn delta_agreed_at(local_proto: u16, peer_proto: u16, peer_delta: bool) -> bool {
+    peer_delta && peer_proto.min(local_proto) >= DELTA_MIN_PROTO
+}
+
+/// The session-dictionary decision, symmetric like [`delta_agreed`]:
+/// min-revision agreement plus the intersection of the capability
+/// bitmaps. Unknown bits are ignored, never rejected.
+pub fn dict_agreed(local_proto: u16, local_caps: u32, peer_proto: u16, peer_caps: u32) -> bool {
+    peer_proto.min(local_proto) >= DICT_MIN_PROTO
+        && (peer_caps & local_caps & CAP_SESSION_DICT) != 0
 }
 
 // ---------------------------------------------------------------------------
@@ -55,8 +70,18 @@ pub fn delta_agreed(peer_proto: u16, peer_delta: bool) -> bool {
 /// ([`crate::util::compress`]).
 pub const CAP_CODEC_LZ: u32 = 1 << 0;
 
+/// Capability bit: the peer keeps a session-lifetime string dictionary
+/// ([`crate::migration::SessionDict`]) — capsules after the first ship
+/// only dictionary additions plus indices. When unnegotiated, capsules
+/// keep the pre-dict byte layout exactly.
+pub const CAP_SESSION_DICT: u32 = 1 << 1;
+
 /// Every capability bit this build advertises in its `Hello`.
-pub const SUPPORTED_CAPS: u32 = CAP_CODEC_LZ;
+pub const SUPPORTED_CAPS: u32 = CAP_CODEC_LZ | CAP_SESSION_DICT;
+
+/// Lowest protocol revision that understands the session dictionary
+/// (the caps bitmap itself only exists from v4 on).
+pub const DICT_MIN_PROTO: u16 = 4;
 
 /// The frame codec a session negotiated. `None` is always legal; `Lz`
 /// flows only after both `Hello`s carried [`CAP_CODEC_LZ`].
@@ -83,7 +108,20 @@ impl Codec {
 /// forward-compatibility story, so a future peer advertising bits we do
 /// not know still lands on the common subset.
 pub fn codec_agreed(peer_proto: u16, peer_caps: u32) -> Codec {
-    if peer_proto.min(PROTO_VERSION) >= COMPRESS_MIN_PROTO && peer_caps & CAP_CODEC_LZ != 0 {
+    codec_agreed_at(PROTO_VERSION, SUPPORTED_CAPS, peer_proto, peer_caps)
+}
+
+/// [`codec_agreed`] with an explicit local (revision, caps) pair for
+/// version-skew testing and capability ablations.
+pub fn codec_agreed_at(
+    local_proto: u16,
+    local_caps: u32,
+    peer_proto: u16,
+    peer_caps: u32,
+) -> Codec {
+    if peer_proto.min(local_proto) >= COMPRESS_MIN_PROTO
+        && (peer_caps & local_caps & CAP_CODEC_LZ) != 0
+    {
         Codec::Lz
     } else {
         Codec::None
@@ -127,6 +165,9 @@ where
         }
         Err(e) if e.is_need_full() => {
             session.drop_baseline();
+            // The peer reset its dictionary replica alongside the
+            // NeedFull; mirror it so both re-seed from empty.
+            session.reset_dict();
             Ok(HeartbeatOutcome::Divergent)
         }
         Err(e) => Err(e),
@@ -633,6 +674,26 @@ mod tests {
         // both ends; a v3 peer negotiates full-captures-only.
         assert!(delta_agreed(PROTO_VERSION, true));
         assert!(!delta_agreed(3, true), "v3 digests are incomparable");
+    }
+
+    #[test]
+    fn dict_negotiation_needs_bit_and_revision_on_both_ends() {
+        let v = PROTO_VERSION;
+        let all = SUPPORTED_CAPS;
+        assert!(dict_agreed(v, all, v, all));
+        // Unknown high bits are ignored, never rejected.
+        assert!(dict_agreed(v, all, v, 0xFFFF_FFFF));
+        // Either side withholding the bit lands on per-capsule tables.
+        assert!(!dict_agreed(v, all, v, CAP_CODEC_LZ));
+        assert!(!dict_agreed(v, CAP_CODEC_LZ, v, all));
+        // A pre-v4 peer has no caps bitmap at all.
+        assert!(!dict_agreed(v, all, 3, all));
+        assert!(!dict_agreed(3, all, v, all));
+        // A future peer lands on our revision's answer.
+        assert!(dict_agreed(v, all, u16::MAX, all | 0xF0));
+        // The locally-scoped codec negotiation masks the same way.
+        assert_eq!(codec_agreed_at(v, CAP_SESSION_DICT, v, all), Codec::None);
+        assert_eq!(codec_agreed_at(3, all, v, all), Codec::None);
     }
 
     /// A v3-shaped Hello (no caps field) decodes on a v4 build, and a

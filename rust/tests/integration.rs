@@ -309,6 +309,431 @@ fn failure_injection_wrong_binary_and_no_provision() {
     server.join().unwrap();
 }
 
+/// Protocol interop matrix: every (v3,v4) x (initiator,responder) x
+/// (LZ, dictionary, delta on/off) pairing negotiates the COMMON SUBSET —
+/// unknown bits ignored, min revision echoed, never a rejection — and a
+/// two-round session completes bit-identical to monolithic.
+#[test]
+fn interop_matrix_lands_on_common_subset_bit_identical() {
+    use clonecloud::appvm::zygote::build_template;
+    use clonecloud::config::CostParams;
+    use clonecloud::exec::{delta_statics_workload_src, delta_workload_expected,
+        run_distributed_session};
+    use clonecloud::migration::MobileSession;
+    use clonecloud::nodemanager::{
+        Codec, InProcTransport, CAP_CODEC_LZ, CAP_SESSION_DICT,
+    };
+
+    const ROUNDS: i64 = 2;
+    const ZY: usize = 120;
+    let program = Arc::new(
+        clonecloud::appvm::assembler::assemble(&delta_statics_workload_src(ROUNDS, 256, 4))
+            .unwrap(),
+    );
+    clonecloud::appvm::verifier::verify_program(&program).unwrap();
+    let template = build_template(&program, ZY, 5);
+    let main = program.entry().unwrap();
+    let expected = delta_workload_expected(ROUNDS);
+    let fork = |loc: Location| {
+        clonecloud::appvm::Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            match loc {
+                Location::Mobile => clonecloud::device::DeviceSpec::phone_g1(),
+                Location::Clone => clonecloud::device::DeviceSpec::clone_desktop(),
+            },
+            loc,
+            clonecloud::appvm::NodeEnv::with_rust_compute(clonecloud::vfs::SimFs::new()),
+        )
+    };
+
+    for init_proto in [3u16, 4] {
+        for resp_proto in [3u16, 4] {
+            for lz in [false, true] {
+                for dict in [false, true] {
+                    for delta in [false, true] {
+                        let label = format!(
+                            "init v{init_proto} vs resp v{resp_proto}, \
+                             lz={lz} dict={dict} delta={delta}"
+                        );
+                        let (phone_t, clone_t) = InProcTransport::pair();
+                        let mut server = CloneServer::new(
+                            clone_t,
+                            program.clone(),
+                            CostParams::default(),
+                            Box::new(clonecloud::appvm::NodeEnv::with_rust_compute),
+                        );
+                        server.proto_cap = resp_proto;
+                        let srv = std::thread::spawn(move || server.serve().unwrap());
+
+                        let mut nm = NodeManager::new(phone_t);
+                        nm.pretend_proto(init_proto);
+                        let mut caps = 0u32;
+                        if lz {
+                            caps |= CAP_CODEC_LZ;
+                        }
+                        if dict {
+                            caps |= CAP_SESSION_DICT;
+                        }
+                        // Advertise an unknown future bit too: it must
+                        // be ignored, never rejected.
+                        nm.advertise_caps(caps | 0x8000_0000);
+                        nm.advertise_delta(delta);
+                        nm.negotiate().unwrap();
+
+                        // The negotiated set is exactly the common
+                        // subset of what both ends speak.
+                        let min = init_proto.min(resp_proto);
+                        assert_eq!(
+                            nm.delta_negotiated(),
+                            delta && min >= 4,
+                            "{label}: delta"
+                        );
+                        assert_eq!(
+                            nm.negotiated_codec() == Codec::Lz,
+                            lz && min >= 4,
+                            "{label}: codec"
+                        );
+                        assert_eq!(
+                            nm.dict_negotiated(),
+                            dict && min >= 4,
+                            "{label}: dict"
+                        );
+                        assert_eq!(nm.negotiated_proto(), min, "{label}: revision echo");
+
+                        nm.provision(&program, ZY, 5).unwrap();
+                        let mut phone = fork(Location::Mobile);
+                        let mut session = MobileSession::new(true);
+                        let out = run_distributed_session(
+                            &mut phone,
+                            &mut nm,
+                            &NetworkProfile::wifi(),
+                            &clonecloud::config::CostParams::default(),
+                            &mut session,
+                        )
+                        .unwrap();
+                        assert_eq!(out.migrations, ROUNDS as usize, "{label}");
+                        assert_eq!(out.delta_fallbacks, 0, "{label}");
+                        assert_eq!(out.dict_fallbacks, 0, "{label}");
+                        if nm.delta_negotiated() {
+                            assert_eq!(out.delta_roundtrips, 1, "{label}: repeat delta");
+                        } else {
+                            assert_eq!(out.delta_roundtrips, 0, "{label}: full-only");
+                        }
+                        assert_eq!(
+                            phone.statics[main.class.0 as usize][1].as_int(),
+                            Some(expected),
+                            "{label}: bit-identical to monolithic"
+                        );
+                        nm.shutdown().unwrap();
+                        srv.join().unwrap();
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fault-injection matrix: the link dies at every possible frame
+/// boundary of a six-round session. Under a degrading engine every cut
+/// point still completes the run locally (bit-identical result, error
+/// surfaced in `channel_errors`, no panic, no half-applied merge), and
+/// the legacy session wrapper still fails fast.
+#[test]
+fn fault_matrix_every_cut_degrades_to_local() {
+    use clonecloud::appvm::zygote::build_template;
+    use clonecloud::config::CostParams;
+    use clonecloud::exec::{
+        delta_statics_workload_src, delta_workload_expected, run_distributed_session,
+        FaultInjectChannel,
+    };
+    use clonecloud::migration::MobileSession;
+
+    const ROUNDS: i64 = 6;
+    let program = Arc::new(
+        clonecloud::appvm::assembler::assemble(&delta_statics_workload_src(ROUNDS, 512, 8))
+            .unwrap(),
+    );
+    clonecloud::appvm::verifier::verify_program(&program).unwrap();
+    let template = build_template(&program, 100, 11);
+    let main = program.entry().unwrap();
+    let expected = delta_workload_expected(ROUNDS);
+    let fork = |loc: Location| {
+        clonecloud::appvm::Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            match loc {
+                Location::Mobile => clonecloud::device::DeviceSpec::phone_g1(),
+                Location::Clone => clonecloud::device::DeviceSpec::clone_desktop(),
+            },
+            loc,
+            clonecloud::appvm::NodeEnv::with_rust_compute(clonecloud::vfs::SimFs::new()),
+        )
+    };
+
+    // A clean session moves 2 frames per roundtrip.
+    let total_frames = 2 * ROUNDS as u64;
+    for kill_after in 0..=total_frames + 1 {
+        let inner = InlineClone::new(fork(Location::Clone), CostParams::default())
+            .with_delta()
+            .with_dict();
+        let mut channel = FaultInjectChannel::new(inner, kill_after);
+        let mut phone = fork(Location::Mobile);
+        let mut session = MobileSession::new(true);
+        let mut engine = PolicyEngine::force_offload();
+        let out = run_distributed_policy(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+            &mut engine,
+        )
+        .unwrap_or_else(|e| panic!("cut at frame {kill_after}: run must degrade, got {e}"));
+
+        assert_eq!(
+            phone.statics[main.class.0 as usize][1].as_int(),
+            Some(expected),
+            "cut at frame {kill_after}: result must stay bit-identical"
+        );
+        assert_eq!(
+            out.offloads + out.local_fallbacks,
+            ROUNDS as usize,
+            "cut at frame {kill_after}: every span decided exactly once"
+        );
+        if kill_after < total_frames {
+            assert!(
+                out.channel_errors >= 1,
+                "cut at frame {kill_after}: error must surface in channel_errors"
+            );
+            assert!(
+                out.last_channel_error.as_deref().unwrap().contains("injected fault"),
+                "cut at frame {kill_after}"
+            );
+            assert!(out.local_fallbacks >= 1, "cut at frame {kill_after}");
+        } else {
+            assert_eq!(out.channel_errors, 0, "no cut reached: {kill_after}");
+            assert_eq!(out.migrations, ROUNDS as usize);
+        }
+    }
+
+    // The legacy wrapper keeps its contract: a dead link is an error,
+    // fast and clean (no panic, no partial merge into the phone).
+    let inner = InlineClone::new(fork(Location::Clone), CostParams::default()).with_delta();
+    let mut channel = FaultInjectChannel::new(inner, 3);
+    let mut phone = fork(Location::Mobile);
+    let err = run_distributed_session(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &CostParams::default(),
+        &mut MobileSession::new(true),
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("injected fault"),
+        "legacy wrapper fails fast: {err}"
+    );
+
+    // Recovery: the same clone (which executed a roundtrip whose reverse
+    // frame was cut) serves a fresh run cleanly — the session re-arms
+    // from a full capture, no stale state leaks.
+    let inner = InlineClone::new(fork(Location::Clone), CostParams::default())
+        .with_delta()
+        .with_dict();
+    let mut channel = FaultInjectChannel::new(inner, total_frames - 1);
+    let mut phone = fork(Location::Mobile);
+    let mut session = MobileSession::new(true);
+    let mut engine = PolicyEngine::force_offload();
+    let out = run_distributed_policy(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &CostParams::default(),
+        &mut session,
+        &mut engine,
+    )
+    .unwrap();
+    assert_eq!(out.channel_errors, 1, "exactly the last reverse frame was cut");
+    let mut inner = channel.into_inner();
+    let mut phone2 = fork(Location::Mobile);
+    let out2 = run_distributed_session(
+        &mut phone2,
+        &mut inner,
+        &NetworkProfile::wifi(),
+        &CostParams::default(),
+        &mut session,
+    )
+    .unwrap();
+    assert_eq!(out2.migrations, ROUNDS as usize);
+    assert_eq!(
+        phone2.statics[main.class.0 as usize][1].as_int(),
+        Some(expected),
+        "recovery session over the half-advanced clone is bit-identical"
+    );
+}
+
+/// Page-epoch soak: 110 one-offload rounds over a 4000-object template
+/// rooted from an app static, with a skewed O(1) mutation set. Pages
+/// scanned stay bounded by dirty pages + a constant — never O(heap) —
+/// and every mutation path (interp stores, merge apply, put_static) is
+/// covered by the barrier: 110 coherent deltas, zero fallbacks. A
+/// deliberately missed stamp (peek_mut on a baseline member) surfaces
+/// as a digest divergence error BEFORE any state is merged — never as
+/// wrong bytes — and the session recovers with a full capture.
+#[test]
+fn page_epoch_soak_bounds_scan_work_and_catches_missed_stamps() {
+    use clonecloud::appvm::zygote::build_template;
+    use clonecloud::appvm::ObjBody;
+    use clonecloud::config::CostParams;
+    use clonecloud::exec::run_distributed_session;
+    use clonecloud::migration::MobileSession;
+
+    const SRC: &str = r#"
+class Soak app
+  static out
+  static keep
+  static registry
+  method main nargs=0 regs=8
+    const r0 1024
+    newarr r1 byte r0
+    const r2 0
+    const r3 7
+    aput r1 r2 r3
+    invoke r4 Soak.work r1
+    puts Soak.out r4
+    retv
+  end
+  method work nargs=1 regs=8
+    ccstart 0
+    len r1 r0
+    const r2 0
+    const r3 0
+  sum:
+    ifge r2 r1 @sd
+    aget r4 r0 r2
+    add r3 r3 r4
+    const r5 1
+    add r2 r2 r5
+    goto @sum
+  sd:
+    const r7 4
+    newarr r2 byte r7
+    const r6 0
+    aput r2 r6 r3
+    puts Soak.keep r2
+    ccstop 0
+    ret r3
+  end
+end
+"#;
+    const ZY: usize = 4_000;
+    let program = Arc::new(clonecloud::appvm::assembler::assemble(SRC).unwrap());
+    clonecloud::appvm::verifier::verify_program(&program).unwrap();
+    let template = build_template(&program, ZY, 17);
+    let main = program.entry().unwrap();
+    let fork = |loc: Location| {
+        clonecloud::appvm::Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            match loc {
+                Location::Mobile => clonecloud::device::DeviceSpec::phone_g1(),
+                Location::Clone => clonecloud::device::DeviceSpec::clone_desktop(),
+            },
+            loc,
+            clonecloud::appvm::NodeEnv::with_rust_compute(clonecloud::vfs::SimFs::new()),
+        )
+    };
+
+    // Root the WHOLE template graph from the `registry` static (slot
+    // 2), as a real app roots framework state — the Zygote-scale shape
+    // where a per-object traversal would visit ~4000 objects every
+    // capture.
+    let mut phone = fork(Location::Mobile);
+    clonecloud::appvm::zygote::root_template_in_static(&mut phone, main.class.0 as usize, 2);
+
+    let mut channel = InlineClone::new(fork(Location::Clone), CostParams::default())
+        .with_delta()
+        .with_dict();
+    let mut session = MobileSession::new(true);
+
+    const ROUNDS: usize = 110;
+    for round in 0..ROUNDS {
+        let out = run_distributed_session(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+        )
+        .unwrap();
+        assert_eq!(
+            phone.statics[main.class.0 as usize][0].as_int(),
+            Some(7),
+            "round {round}"
+        );
+        assert_eq!(out.delta_fallbacks, 0, "round {round}: barrier covered");
+        assert_eq!(out.dict_fallbacks, 0, "round {round}");
+        if round == 0 {
+            assert_eq!(out.full_roundtrips, 1, "first contact is full");
+        } else {
+            assert_eq!(out.delta_roundtrips, 1, "round {round} rode a delta");
+            // The satellite's core claim: scan work is bounded by the
+            // dirty set, never the heap. A per-object traversal would
+            // have scanned ~4000 objects here.
+            assert!(
+                out.pages_scanned <= out.pages_dirty + 8,
+                "round {round}: {} pages scanned vs {} dirty",
+                out.pages_scanned,
+                out.pages_dirty
+            );
+            assert!(
+                out.objects_scanned <= 400,
+                "round {round}: scan work {} is not O(dirty)",
+                out.objects_scanned
+            );
+        }
+    }
+
+    // Negative control: a mutation that BYPASSES the write barrier
+    // (peek_mut on a baseline member) must surface as a digest
+    // divergence before any merge applies — not as wrong bytes.
+    let keep = phone.statics[main.class.0 as usize][1].as_ref().unwrap();
+    if let ObjBody::ByteArray(b) = &mut phone.heap.peek_mut(keep).unwrap().body {
+        b[0] ^= 0xFF;
+    }
+    let out_before = phone.statics[main.class.0 as usize][0];
+    let err = run_distributed_session(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &CostParams::default(),
+        &mut session,
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("diverged"),
+        "missed stamp surfaced as a digest divergence: {err}"
+    );
+    assert_eq!(
+        phone.statics[main.class.0 as usize][0], out_before,
+        "no half-applied merge: phone state untouched by the rejected round"
+    );
+
+    // The divergence cleared the baseline; the next round recovers from
+    // a full capture with correct results.
+    let out = run_distributed_session(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &CostParams::default(),
+        &mut session,
+    )
+    .unwrap();
+    assert_eq!(out.full_roundtrips, 1, "recovery rode a full capture");
+    assert_eq!(phone.statics[main.class.0 as usize][0].as_int(), Some(7));
+}
+
 /// GC interacts correctly with migration: objects that die at the clone
 /// are collected on the phone after the merge (paper Fig. 8 orphans).
 #[test]
