@@ -13,11 +13,18 @@ use clonecloud::appvm::natives::NodeEnv;
 use clonecloud::appvm::process::Process;
 use clonecloud::appvm::value::Value;
 use clonecloud::appvm::zygote::build_template;
-use clonecloud::config::CostParams;
+use clonecloud::config::{CostParams, NetworkProfile};
 use clonecloud::device::{DeviceSpec, Location};
-use clonecloud::migration::{capture_thread, CaptureOptions, CapturePacket, Direction, Migrator};
+use clonecloud::exec::{
+    delta_statics_workload_src, delta_workload_expected, run_distributed_traced, InlineClone,
+    PolicyEngine,
+};
+use clonecloud::migration::{
+    capture_thread, CaptureOptions, CapturePacket, Direction, Migrator, MobileSession,
+};
 use clonecloud::partitioner::lp::{solve_ilp, Constraint, Sense};
-use clonecloud::util::bench::{bench, black_box};
+use clonecloud::trace::{chrome_trace_string, Endpoint, Event, Tracer};
+use clonecloud::util::bench::{bench, black_box, emit_json, smoke_mode};
 use clonecloud::vfs::SimFs;
 
 const LOOP: &str = r#"
@@ -198,9 +205,121 @@ fn ilp_latency() {
     });
 }
 
+/// Flight-recorder overhead on the offload hot path: the same traced
+/// driver runs a delta session once with `Tracer::disabled()` (the
+/// zero-cost path — every record degenerates to an enabled-flag check)
+/// and once with a live ring buffer + wire context + piggybacked clone
+/// events. The bound is the PR's acceptance criterion: tracing-on must
+/// stay within 5% of tracing-off. `CC_TRACE_OUT=<path>` additionally
+/// exports one traced session as Chrome trace-event JSON (the CI
+/// artifact next to BENCH_PR.json).
+fn tracing_overhead() {
+    let rounds: i64 = if smoke_mode() { 8 } else { 16 };
+    let iters = if smoke_mode() { 15 } else { 30 };
+    let program = Arc::new(assemble(&delta_statics_workload_src(rounds, 4096, 8)).unwrap());
+    let template = build_template(&program, 2_000, 1);
+    let expected = delta_workload_expected(rounds);
+    let main = program.entry().unwrap();
+
+    let run = |label: &str, traced: bool| {
+        bench(label, 2, iters, || {
+            let mut phone = Process::fork_from_zygote(
+                program.clone(),
+                &template,
+                DeviceSpec::phone_g1(),
+                Location::Mobile,
+                NodeEnv::with_rust_compute(SimFs::new()),
+            );
+            let clone = Process::fork_from_zygote(
+                program.clone(),
+                &template,
+                DeviceSpec::clone_desktop(),
+                Location::Clone,
+                NodeEnv::with_rust_compute(SimFs::new()),
+            );
+            let mut channel = InlineClone::new(clone, CostParams::default())
+                .with_delta()
+                .with_trace();
+            let mut session = MobileSession::new(true);
+            let mut engine = PolicyEngine::force_offload().without_degrade();
+            let mut tracer = if traced {
+                Tracer::new(0xBE7C, Endpoint::Phone, 8192)
+            } else {
+                Tracer::disabled()
+            };
+            run_distributed_traced(
+                &mut phone,
+                &mut channel,
+                &NetworkProfile::wifi(),
+                &CostParams::default(),
+                &mut session,
+                &mut engine,
+                &mut tracer,
+            )
+            .unwrap();
+            assert_eq!(phone.statics[main.class.0 as usize][1].as_int(), Some(expected));
+            black_box(tracer.report().events);
+        })
+    };
+
+    let off = run("trace: delta session, recorder off", false);
+    let on = run("trace: delta session, recorder on", true);
+    let ratio = on.summary.p50 / off.summary.p50;
+    println!("  -> tracing overhead {:.1}% (bound 5%)", (ratio - 1.0) * 100.0);
+    emit_json(
+        "hotpath",
+        &[("case", "tracing_overhead")],
+        &[
+            ("untraced_p50_ms", off.summary.p50),
+            ("traced_p50_ms", on.summary.p50),
+            ("overhead_ratio", ratio),
+        ],
+    );
+    assert!(
+        ratio <= 1.05,
+        "tracing overhead {:.1}% exceeds the 5% bound",
+        (ratio - 1.0) * 100.0
+    );
+
+    if let Some(path) = std::env::var_os("CC_TRACE_OUT") {
+        let mut phone = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        );
+        let clone = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::clone_desktop(),
+            Location::Clone,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        );
+        let mut channel = InlineClone::new(clone, CostParams::default())
+            .with_delta()
+            .with_trace();
+        let mut tracer = Tracer::new(0xBE7C, Endpoint::Phone, 8192);
+        run_distributed_traced(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut MobileSession::new(true),
+            &mut PolicyEngine::force_offload().without_degrade(),
+            &mut tracer,
+        )
+        .unwrap();
+        let events: Vec<Event> = tracer.events().cloned().collect();
+        std::fs::write(&path, chrome_trace_string(tracer.session_id(), &events)).unwrap();
+        println!("  -> sample chrome trace written to {path:?}");
+    }
+}
+
 fn main() {
     interp_rate();
     capture_throughput();
     codec_throughput();
     ilp_latency();
+    tracing_overhead();
 }

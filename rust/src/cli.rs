@@ -10,6 +10,7 @@
 //! clonecloud farm --listen 127.0.0.1:7077 --app virus --workers 8
 //! clonecloud policy --db out.json
 //! clonecloud policy --trace wifi,edge,wifi --rounds 12
+//! clonecloud trace --rounds 6 --out session.trace.json
 //! clonecloud inspect --app behavior
 //! clonecloud help
 //! ```
@@ -52,6 +53,10 @@ COMMANDS:
   policy       dump the partition DB (--db) and/or drive the runtime
                policy engine across a network trace, printing each
                invocation's migrate/local decision + estimator state
+  trace        run a traced farm session (flight recorder on), print the
+               per-phase percentile table, and export the merged
+               phone+clone timeline as Chrome trace-event JSON (--out;
+               load in Perfetto / chrome://tracing)
   inspect      dump an app's program, CFG, and constraint sets
   help         this text
 
@@ -77,6 +82,11 @@ POLICY OPTIONS (engine tunables from the config 'policy' section):
   --segment <n>                  migration trips per trace segment (default 4)
   --rounds <n>                   repeat-offload rounds, <= 256 (default 12)
   --payload <bytes>              per-round working-set bytes (default 4096)
+
+TRACE OPTIONS (recorder tunables from the config 'trace' section):
+  --rounds <n>                   offload rounds, <= 256 (default 6)
+  --payload <bytes>              per-round working-set bytes (default 2048)
+  --out <file.json>              Chrome trace output path (default session.trace.json)
 ";
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
@@ -225,6 +235,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         session.set_dict_enabled(cfg.session_dict);
         session.set_paged(cfg.capture.paged);
         session.set_gc_interval(cfg.capture.mobile_gc_interval);
+        session.set_gc_growth(cfg.capture.mobile_gc_growth_objects);
         if cfg.heartbeat_idle_ms > 0 {
             session.heartbeat_every(std::time::Duration::from_millis(cfg.heartbeat_idle_ms));
         }
@@ -589,6 +600,7 @@ fn cmd_policy(flags: &HashMap<String, String>) -> Result<()> {
     session.set_dict_enabled(cfg.session_dict);
     session.set_paged(cfg.capture.paged);
     session.set_gc_interval(cfg.capture.mobile_gc_interval);
+    session.set_gc_growth(cfg.capture.mobile_gc_growth_objects);
     let profs = profiles.clone();
     let out = run_distributed_with(
         &mut phone,
@@ -639,6 +651,132 @@ fn cmd_policy(flags: &HashMap<String, String>) -> Result<()> {
         out.mispredictions,
         out.delta_roundtrips,
     );
+    Ok(())
+}
+
+/// Run one traced offload session against a small in-proc clone farm:
+/// phone-side flight recorder on, clone events piggybacked home, merged
+/// timeline exported as Chrome trace-event JSON plus a percentile table.
+fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
+    use crate::exec::run_distributed_traced;
+    use crate::trace::{chrome_trace_string, phone_coverage, Endpoint, Tracer};
+
+    let cfg = load_config(flags)?;
+    let rounds = flag_usize(flags, "rounds", 6)? as i64;
+    if !(1..=256).contains(&rounds) {
+        return Err(CloneCloudError::Config("--rounds must be in 1..=256".into()));
+    }
+    let payload = flag_usize(flags, "payload", 2048)?.max(2) as i64;
+    let net = NetworkProfile::by_name(flags.get("network").map(String::as_str).unwrap_or("wifi"))
+        .ok_or_else(|| CloneCloudError::Config("unknown network".into()))?;
+    let out_path = flags
+        .get("out")
+        .map(String::as_str)
+        .unwrap_or("session.trace.json");
+
+    let program = Arc::new(crate::appvm::assembler::assemble(
+        &delta_statics_workload_src(rounds, payload, 8),
+    )?);
+    crate::appvm::verifier::verify_program(&program)?;
+    let zygote_objects = cfg.zygote_objects.min(2_000);
+    let farm = CloneFarm::start(
+        program.clone(),
+        FarmConfig {
+            workers: 1,
+            warm_per_worker: 1,
+            queue_depth: 4,
+            policy: PlacementPolicy::Affinity,
+            zygote_objects,
+            zygote_seed: cfg.seed,
+            fuel: 2_000_000_000,
+            slot_gc_interval: cfg.farm.slot_gc_interval,
+        },
+        cfg.costs.clone(),
+        Arc::new(crate::appvm::NodeEnv::with_rust_compute),
+    )?;
+    let handle = farm.handle();
+    let mut session = handle.session_auto(crate::vfs::SimFs::new());
+    session.set_delta(cfg.delta_migration && handle.delta_friendly());
+    session.set_dict(cfg.session_dict && handle.delta_friendly());
+    // In-proc sessions skip Hello; arm the capability directly.
+    session.set_trace(true);
+
+    let template = crate::appvm::zygote::build_template(&program, zygote_objects, cfg.seed);
+    let mut phone = crate::appvm::Process::fork_from_zygote(
+        program.clone(),
+        &template,
+        DeviceSpec::phone_g1(),
+        Location::Mobile,
+        crate::appvm::NodeEnv::with_rust_compute(crate::vfs::SimFs::new()),
+    );
+    let mut msess = crate::migration::MobileSession::new(session.delta_enabled());
+    msess.set_dict_enabled(session.dict_enabled());
+    msess.set_paged(cfg.capture.paged);
+    msess.set_gc_interval(cfg.capture.mobile_gc_interval);
+    msess.set_gc_growth(cfg.capture.mobile_gc_growth_objects);
+
+    let mut tracer =
+        Tracer::new(session.phone_id(), Endpoint::Phone, cfg.trace.ring_capacity.max(16));
+    tracer.set_ship_clone_events(cfg.trace.ship_clone_events);
+    let mut engine = crate::exec::PolicyEngine::force_offload().without_degrade();
+    let out = run_distributed_traced(
+        &mut phone,
+        &mut session,
+        &net,
+        &cfg.costs,
+        &mut msess,
+        &mut engine,
+        &mut tracer,
+    )?;
+
+    let main = program.entry()?;
+    let got = phone.statics[main.class.0 as usize][1].as_int();
+    let expected = delta_workload_expected(rounds);
+    if got != Some(expected) {
+        return Err(CloneCloudError::migration(format!(
+            "traced run result {got:?} != expected {expected}"
+        )));
+    }
+
+    let events: Vec<crate::trace::Event> = tracer.events().cloned().collect();
+    let rep = tracer.report();
+    let mut table = Table::new(
+        "Phase latency (virtual ms)",
+        &["Endpoint", "Phase", "Spans", "p50", "p95", "p99"],
+    );
+    for ph in &rep.phases {
+        if ph.hist.is_empty() {
+            continue;
+        }
+        table.row(vec![
+            ph.endpoint.name().to_string(),
+            ph.phase.name().to_string(),
+            format!("{}", ph.hist.count()),
+            format!("{:.3}", ph.hist.p50()),
+            format!("{:.3}", ph.hist.p95()),
+            format!("{:.3}", ph.hist.p99()),
+        ]);
+    }
+    table.print();
+
+    std::fs::write(out_path, chrome_trace_string(rep.session_id, &events))?;
+    let clone_events = events.iter().filter(|e| e.endpoint == Endpoint::Clone).count();
+    println!(
+        "traced session: {} migration(s), {:.2}s virtual, {} event(s) \
+         ({clone_events} clone-side, {} dropped), phone coverage {:.0}%",
+        out.migrations,
+        out.virtual_ms / 1e3,
+        events.len(),
+        rep.dropped,
+        phone_coverage(&events) * 100.0,
+    );
+    println!("chrome trace written to {out_path} (load in Perfetto or chrome://tracing)");
+    session.close();
+    let mut m = MetricsSnapshot::default();
+    m.absorb_dist(&out);
+    m.absorb_trace(&rep);
+    m.absorb_farm(&farm.shutdown());
+    print!("{}", m.render());
     Ok(())
 }
 
@@ -712,6 +850,7 @@ pub fn main(args: &[String]) -> i32 {
         "clone-serve" => cmd_clone_serve(&flags),
         "farm" => cmd_farm(&flags),
         "policy" => cmd_policy(&flags),
+        "trace" => cmd_trace(&flags),
         "inspect" => cmd_inspect(&flags),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -785,6 +924,42 @@ mod tests {
         assert_eq!(
             main(&["farm".into(), "--policy".into(), "psychic".into()]),
             1
+        );
+    }
+
+    #[test]
+    fn trace_subcommand_exports_valid_chrome_trace() {
+        let dir = std::env::temp_dir().join(format!("cctrace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("session.trace.json");
+        assert_eq!(
+            main(&[
+                "trace".into(),
+                "--rounds".into(),
+                "4".into(),
+                "--payload".into(),
+                "64".into(),
+                "--out".into(),
+                path.to_string_lossy().into_owned(),
+            ]),
+            0,
+            "trace subcommand"
+        );
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).expect("valid trace-event JSON");
+        let evs = doc.get("traceEvents").as_arr().expect("traceEvents array");
+        let tids: std::collections::BTreeSet<i64> = evs
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .map(|e| e.get("tid").as_i64().unwrap())
+            .collect();
+        assert_eq!(tids.len(), 2, "both phone- and clone-side span lanes");
+        std::fs::remove_dir_all(&dir).ok();
+
+        assert_eq!(
+            main(&["trace".into(), "--rounds".into(), "0".into()]),
+            1,
+            "rounds bound enforced"
         );
     }
 

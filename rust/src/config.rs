@@ -171,6 +171,12 @@ pub struct CaptureParams {
     /// (0 = never). On the paged path GC is what turns unreachable
     /// baseline members into the capsule's `deleted` list.
     pub mobile_gc_interval: u64,
+    /// Also trigger the mobile GC once the heap has grown by this many
+    /// objects since the last collection (0 = count-based cadence
+    /// only). A fast-allocating trace collects on growth, not on the
+    /// fixed capture count — garbage stops riding delta capsules just
+    /// when they would bloat most.
+    pub mobile_gc_growth_objects: u64,
 }
 
 impl Default for CaptureParams {
@@ -178,6 +184,32 @@ impl Default for CaptureParams {
         CaptureParams {
             paged: true,
             mobile_gc_interval: 8,
+            mobile_gc_growth_objects: 0,
+        }
+    }
+}
+
+/// Flight-recorder tunables (the `trace` config section; see `trace`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceParams {
+    /// Record phase spans/counters/decisions into the session ring.
+    /// Off = every tracer entry point is a no-op (the zero-cost path).
+    pub enabled: bool,
+    /// Bounded ring capacity, in events; the oldest events are dropped
+    /// (and counted) once the ring is full.
+    pub ring_capacity: usize,
+    /// Ask the clone to piggyback its phase events on reverse capsules
+    /// (`FLAG_WANT_CLONE_EVENTS` in the wire context) so one merged
+    /// timeline covers both endpoints.
+    pub ship_clone_events: bool,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams {
+            enabled: false,
+            ring_capacity: 4096,
+            ship_clone_events: true,
         }
     }
 }
@@ -248,6 +280,8 @@ pub struct Config {
     pub session_dict: bool,
     /// Capture-path tunables (page-epoch scan, mobile GC cadence).
     pub capture: CaptureParams,
+    /// Flight-recorder tunables (phase tracing; see `trace`).
+    pub trace: TraceParams,
     /// Clone-farm parameters (multi-tenant serving).
     pub farm: FarmParams,
     /// Runtime partition-policy parameters (per-invocation
@@ -268,6 +302,7 @@ impl Default for Config {
             heartbeat_idle_ms: 30_000,
             session_dict: true,
             capture: CaptureParams::default(),
+            trace: TraceParams::default(),
             farm: FarmParams::default(),
             policy: PolicyParams::default(),
         }
@@ -353,9 +388,46 @@ impl Config {
                                         )
                                     })? as u64
                             }
+                            "mobile_gc_growth_objects" => {
+                                cfg.capture.mobile_gc_growth_objects =
+                                    cv.as_usize().ok_or_else(|| {
+                                        CloneCloudError::Config(
+                                            "capture.mobile_gc_growth_objects".into(),
+                                        )
+                                    })? as u64
+                            }
                             other => {
                                 return Err(CloneCloudError::Config(format!(
                                     "unknown capture key '{other}'"
+                                )))
+                            }
+                        }
+                    }
+                }
+                "trace" => {
+                    let c = val
+                        .as_obj()
+                        .ok_or_else(|| CloneCloudError::Config("trace must be object".into()))?;
+                    for (tk, tv) in c {
+                        match tk.as_str() {
+                            "enabled" => {
+                                cfg.trace.enabled = tv.as_bool().ok_or_else(|| {
+                                    CloneCloudError::Config("trace.enabled".into())
+                                })?
+                            }
+                            "ring_capacity" => {
+                                cfg.trace.ring_capacity = tv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("trace.ring_capacity".into())
+                                })?
+                            }
+                            "ship_clone_events" => {
+                                cfg.trace.ship_clone_events = tv.as_bool().ok_or_else(|| {
+                                    CloneCloudError::Config("trace.ship_clone_events".into())
+                                })?
+                            }
+                            other => {
+                                return Err(CloneCloudError::Config(format!(
+                                    "unknown trace key '{other}'"
                                 )))
                             }
                         }
@@ -562,6 +634,45 @@ mod tests {
         assert!(Config::from_json(&bad).is_err(), "typo'd capture key rejected");
         let bad2 = json::parse(r#"{"session_dict": 3}"#).unwrap();
         assert!(Config::from_json(&bad2).is_err(), "non-bool rejected");
+    }
+
+    #[test]
+    fn gc_growth_trigger_knob() {
+        assert_eq!(
+            Config::default().capture.mobile_gc_growth_objects,
+            0,
+            "growth trigger off by default"
+        );
+        let v = json::parse(r#"{"capture": {"mobile_gc_growth_objects": 500}}"#).unwrap();
+        assert_eq!(
+            Config::from_json(&v).unwrap().capture.mobile_gc_growth_objects,
+            500
+        );
+        let bad = json::parse(r#"{"capture": {"mobile_gc_growth_objects": "lots"}}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err(), "non-numeric rejected");
+    }
+
+    #[test]
+    fn trace_section_overrides_and_validates() {
+        let d = Config::default().trace;
+        assert!(!d.enabled, "tracing off by default");
+        assert_eq!(d.ring_capacity, 4096);
+        assert!(d.ship_clone_events);
+
+        let v = json::parse(
+            r#"{"trace": {"enabled": true, "ring_capacity": 256,
+                "ship_clone_events": false}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.ring_capacity, 256);
+        assert!(!cfg.trace.ship_clone_events);
+
+        let bad = json::parse(r#"{"trace": {"enbaled": true}}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err(), "typo'd trace key rejected");
+        let bad2 = json::parse(r#"{"trace": {"ring_capacity": false}}"#).unwrap();
+        assert!(Config::from_json(&bad2).is_err(), "non-numeric rejected");
     }
 
     #[test]

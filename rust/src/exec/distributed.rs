@@ -42,8 +42,11 @@ use crate::migration::{
     MobileSession, CAPSULE_CLOCK_OFFSET,
 };
 use crate::nodemanager::{
-    open_frame, patch_frame_payload, seal_frame, seal_frame_keep_head, Codec, HeartbeatOutcome,
-    NodeManager, TransferBytes, Transport,
+    execute_migration, open_frame, patch_frame_payload, seal_frame, seal_frame_keep_head,
+    CloneServeStats, Codec, HeartbeatOutcome, NodeManager, TransferBytes, Transport,
+};
+use crate::trace::{
+    self, Counter, DecisionEvent, Mark, Phase, TraceCtx, Tracer, FLAG_WANT_CLONE_EVENTS,
 };
 
 use super::policy::{Decision, PolicyEngine};
@@ -100,6 +103,13 @@ pub trait CloneChannel {
     /// The farm aggregates these across phones; other channels ignore
     /// them.
     fn record_policy(&mut self, _offloads: u64, _local: u64, _mispredictions: u64) {}
+
+    /// Whether this channel negotiated the trace-context envelope
+    /// (`CAP_TRACE_CTX`). Only then does the driver prepend a context to
+    /// forward frames (and expect piggybacked clone events on replies).
+    fn trace_capable(&self) -> bool {
+        false
+    }
 }
 
 impl<T: Transport> CloneChannel for NodeManager<T> {
@@ -126,6 +136,10 @@ impl<T: Transport> CloneChannel for NodeManager<T> {
     fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {
         NodeManager::heartbeat(self, session)
     }
+
+    fn trace_capable(&self) -> bool {
+        self.trace_negotiated()
+    }
 }
 
 /// In-process clone: the caller owns the clone process directly.
@@ -138,6 +152,13 @@ pub struct InlineClone {
     /// (0 = never) — same policy as the farm workers.
     pub gc_interval: u64,
     pub migrations: usize,
+    /// Whether this channel "negotiated" the trace-context envelope,
+    /// as a wire channel whose Hello carried `CAP_TRACE_CTX` would.
+    trace: bool,
+    /// Clone-side recorder. Stays disabled by default — a forward
+    /// capsule carrying a context still gets its events recorded (and
+    /// shipped back) via [`execute_migration`]'s ephemeral recorder.
+    pub tracer: Tracer,
 }
 
 impl InlineClone {
@@ -149,6 +170,8 @@ impl InlineClone {
             codec: Codec::None,
             gc_interval: 8,
             migrations: 0,
+            trace: false,
+            tracer: Tracer::disabled(),
         }
     }
 
@@ -178,6 +201,14 @@ impl InlineClone {
         self
     }
 
+    /// Negotiate the trace-context envelope on this channel, as a wire
+    /// channel whose Hello carried `CAP_TRACE_CTX` would: the driver may
+    /// then prepend contexts and expect piggybacked clone events.
+    pub fn with_trace(mut self) -> InlineClone {
+        self.trace = true;
+        self
+    }
+
     /// Capture with the per-object baseline traversal instead of the
     /// page-epoch scan — the PR 4 shape, kept as the bench baseline.
     pub fn with_per_object_captures(mut self) -> InlineClone {
@@ -203,49 +234,24 @@ impl InlineClone {
 impl CloneChannel for InlineClone {
     fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
         let up = forward.len() as u64;
-        let (capsule, used_dict) = {
-            let raw = open_frame(&forward)?;
-            if self.session.dict_enabled() {
-                Capsule::decode_with(&raw, DictRead::Negotiated(self.session.dict()))?
-            } else {
-                (Capsule::decode(&raw)?, false)
-            }
-        };
-        let (tid, _) = self
-            .migrator
-            .receive_capsule_at_clone(&mut self.clone, &capsule, &mut self.session)?;
-        loop {
-            match run_thread(&mut self.clone, tid, &mut NoHooks, u64::MAX)? {
-                RunExit::ReintegrationPoint { .. } => break,
-                RunExit::MigrationPoint { .. } => continue,
-                RunExit::Completed(_) => {
-                    return Err(CloneCloudError::migration(
-                        "offloaded thread completed without reintegration",
-                    ))
-                }
-                RunExit::OutOfFuel => unreachable!("u64::MAX fuel"),
-            }
-        }
-        self.migrations += 1;
-        let (rcapsule, _, _) = self.migrator.return_capsule_from_clone(
+        let raw = open_frame(&forward)?;
+        // Same execution core as the CloneServer and the farm workers —
+        // including trace-context handling and dict-mode mirroring.
+        let mut stats = CloneServeStats::default();
+        let encoded = execute_migration(
+            &self.migrator,
             &mut self.clone,
-            tid,
+            &raw,
+            u64::MAX,
+            &mut stats,
             &mut self.session,
+            &mut self.tracer,
         )?;
+        self.migrations += 1;
         if self.gc_interval > 0 && self.migrations as u64 % self.gc_interval == 0 {
             collect_slot_garbage(&mut self.clone, &self.session);
         }
-        // Mirror the forward capsule's dictionary mode on the reply.
-        let raw = if self.session.dict_enabled() {
-            if used_dict {
-                rcapsule.encode_with(DictMode::Shared(self.session.dict()))
-            } else {
-                rcapsule.encode_with(DictMode::Inline)
-            }
-        } else {
-            rcapsule.encode()
-        };
-        let bytes = seal_frame(self.codec, raw);
+        let bytes = seal_frame(self.codec, encoded);
         let down = bytes.len() as u64;
         Ok((bytes, TransferBytes { up, down }))
     }
@@ -273,6 +279,10 @@ impl CloneChannel for InlineClone {
         crate::nodemanager::drive_heartbeat(session, |_epoch, digest, assignments| {
             self.session.check_heartbeat(&self.clone, digest, assignments)
         })
+    }
+
+    fn trace_capable(&self) -> bool {
+        self.trace
     }
 }
 
@@ -396,10 +406,107 @@ pub fn run_distributed_policy<C: CloneChannel>(
 pub fn run_distributed_with<C, N>(
     phone: &mut Process,
     channel: &mut C,
+    net_at: N,
+    costs: &CostParams,
+    session: &mut MobileSession,
+    engine: &mut PolicyEngine,
+) -> Result<DistOutcome>
+where
+    C: CloneChannel,
+    N: FnMut(usize) -> NetworkProfile,
+{
+    let mut off = Tracer::disabled();
+    run_distributed_traced_with(phone, channel, net_at, costs, session, engine, &mut off)
+}
+
+/// [`run_distributed_policy`] with a flight recorder attached: every
+/// phase of every trip lands in `tracer` as a span on the phone's
+/// virtual timeline. When the channel negotiated `CAP_TRACE_CTX`, a
+/// causality context rides ahead of each forward capsule and the
+/// clone's own phase events come back piggybacked on the reverse
+/// capsule, merged into the same timeline. Observe-only: results are
+/// bit-identical with tracing on or off.
+pub fn run_distributed_traced<C: CloneChannel>(
+    phone: &mut Process,
+    channel: &mut C,
+    net: &NetworkProfile,
+    costs: &CostParams,
+    session: &mut MobileSession,
+    engine: &mut PolicyEngine,
+    tracer: &mut Tracer,
+) -> Result<DistOutcome> {
+    let fixed = net.clone();
+    run_distributed_traced_with(
+        phone,
+        channel,
+        move |_trip| fixed.clone(),
+        costs,
+        session,
+        engine,
+        tracer,
+    )
+}
+
+/// A span decided local, awaiting its `CcStop`: scored after the fact
+/// against the measured local time, then closed on the trace timeline.
+struct LocalSpan {
+    point: u32,
+    /// Virtual clock at the decision (ms).
+    start_ms: f64,
+    /// The engine's offload estimate at the decision, if it had one.
+    predicted: Option<f64>,
+    trip: u32,
+    /// Predicted per-term costs at decision time (0.0 = no estimate),
+    /// carried forward for the post-hoc decision event.
+    predicted_local_ms: f64,
+    predicted_fwd_bytes: f64,
+}
+
+/// Predicted per-term costs from the engine's most recent decision
+/// record. Unavailable estimates become 0.0, never NaN — decision
+/// events may cross the wire and must stay equality-comparable.
+fn predicted_terms(engine: &PolicyEngine) -> (f64, f64, f64) {
+    match engine.log.last() {
+        Some(r) => (
+            r.local_ms.unwrap_or(0.0),
+            r.offload_est_ms.unwrap_or(0.0),
+            r.fwd_bytes_est.unwrap_or(0.0),
+        ),
+        None => (0.0, 0.0, 0.0),
+    }
+}
+
+/// Build the forward trace context for one send, or `None` when the
+/// channel did not negotiate `CAP_TRACE_CTX`. `parent_span` is the
+/// tracer's current watermark — the clone's events causally follow it.
+fn make_ctx(tracer: &Tracer, ctx_on: bool, trip: u32) -> Option<TraceCtx> {
+    if !ctx_on {
+        return None;
+    }
+    Some(TraceCtx {
+        session_id: tracer.session_id(),
+        trip,
+        parent_span: tracer.mark() as u32,
+        flags: if tracer.ship_clone_events() {
+            FLAG_WANT_CLONE_EVENTS
+        } else {
+            0
+        },
+    })
+}
+
+/// [`run_distributed_with`] plus the flight recorder (see
+/// [`run_distributed_traced`]). This is the real driver body; the
+/// untraced entry points pass a disabled tracer, whose record calls
+/// early-return on one branch.
+pub fn run_distributed_traced_with<C, N>(
+    phone: &mut Process,
+    channel: &mut C,
     mut net_at: N,
     costs: &CostParams,
     session: &mut MobileSession,
     engine: &mut PolicyEngine,
+    tracer: &mut Tracer,
 ) -> Result<DistOutcome>
 where
     C: CloneChannel,
@@ -427,15 +534,16 @@ where
     // Session dictionary: only a channel whose Hello negotiated
     // `CAP_SESSION_DICT` may carry the dictionary mode byte at all.
     let dict_on = channel.dict_capable();
+    // Trace context rides only a channel whose Hello negotiated
+    // `CAP_TRACE_CTX`; phone-side spans record whenever the tracer is
+    // enabled, capable peer or not.
+    let ctx_on = tracer.is_enabled() && channel.trace_capable();
     let dict0 = session.dict_stats();
     let entry = phone.program.entry()?;
     let tid = phone.spawn_thread(entry, &[])?;
     let mut out = DistOutcome::default();
     let mut trip = 0usize;
-    // Spans decided local, awaiting their CcStop: (point, clock at the
-    // decision, offload estimate at the decision). Scored after the
-    // fact against the measured local time.
-    let mut local_spans: Vec<(u32, f64, Option<f64>)> = Vec::new();
+    let mut local_spans: Vec<LocalSpan> = Vec::new();
 
     let result = 'run: loop {
         match run_thread(phone, tid, &mut NoHooks, u64::MAX)? {
@@ -445,32 +553,57 @@ where
                 // re-surfaces its CcStop only after the merge, when no
                 // matching local span is pending — so a match here is
                 // always a locally-run span completing.
-                if local_spans.last().map(|s| s.0) == Some(point) {
-                    let (_, start_ms, predicted) = local_spans.pop().expect("matched above");
-                    let actual_ms = phone.clock.now_ms() - start_ms;
-                    if engine.score_local(actual_ms, predicted) {
+                if local_spans.last().map(|s| s.point) == Some(point) {
+                    let span = local_spans.pop().expect("matched above");
+                    let actual_ms = phone.clock.now_ms() - span.start_ms;
+                    let mispredicted = engine.score_local(actual_ms, span.predicted);
+                    if mispredicted {
                         out.mispredictions += 1;
                     }
+                    let t = phone.clock.now_us();
+                    tracer.end(span.trip, Phase::LocalExec, t);
+                    tracer.decision(
+                        span.trip,
+                        DecisionEvent {
+                            offloaded: false,
+                            predicted_local_ms: span.predicted_local_ms,
+                            predicted_offload_ms: span.predicted.unwrap_or(0.0),
+                            predicted_fwd_bytes: span.predicted_fwd_bytes as u64,
+                            actual_ms,
+                            mispredicted,
+                        },
+                        t,
+                    );
                 }
                 continue;
             }
             RunExit::OutOfFuel => unreachable!("u64::MAX fuel"),
             RunExit::MigrationPoint { point } => {
                 let net = net_at(trip);
+                let trip32 = trip as u32;
                 trip += 1;
+                let t_decide = phone.clock.now_us();
 
                 // --- policy: decide BEFORE suspend/capture, so a local
                 // decision pays zero capture cost -----------------------
                 if engine.decide(point, session.has_baseline()) == Decision::Local {
                     out.local_fallbacks += 1;
-                    local_spans.push((
+                    let (pred_local, _, pred_fwd) = predicted_terms(engine);
+                    tracer.span(trip32, Phase::Decide, t_decide, t_decide);
+                    tracer.begin(trip32, Phase::LocalExec, t_decide);
+                    local_spans.push(LocalSpan {
                         point,
-                        phone.clock.now_ms(),
-                        engine.last_offload_estimate(),
-                    ));
+                        start_ms: phone.clock.now_ms(),
+                        predicted: engine.last_offload_estimate(),
+                        trip: trip32,
+                        predicted_local_ms: pred_local,
+                        predicted_fwd_bytes: pred_fwd,
+                    });
                     continue;
                 }
                 out.offloads += 1;
+                let (pred_local, pred_off, pred_fwd) = predicted_terms(engine);
+                tracer.span(trip32, Phase::Decide, t_decide, t_decide);
                 let span_start_ms = phone.clock.now_ms();
 
                 // Long-idle baseline: probe with a digest heartbeat so a
@@ -493,8 +626,10 @@ where
                                 &mut out,
                                 &mut local_spans,
                                 point,
+                                trip32,
                                 None,
                                 e,
+                                tracer,
                             )?;
                             continue;
                         }
@@ -503,17 +638,41 @@ where
                     if outcome != HeartbeatOutcome::Unsupported {
                         let rtt = net.transfer_ms(HEARTBEAT_PROBE_BYTES, true)
                             + net.transfer_ms(HEARTBEAT_ACK_BYTES, false);
+                        let t_hb = phone.clock.now_us();
                         phone.clock.charge_ms(rtt);
                         out.heartbeat_ms += rtt;
                         engine.observe_rtt(rtt);
+                        tracer.span(trip32, Phase::Heartbeat, t_hb, phone.clock.now_us());
+                        tracer.instant(trip32, Mark::Heartbeat, phone.clock.now_us());
                     }
                     if outcome == HeartbeatOutcome::Divergent {
                         out.heartbeat_preempts += 1;
+                        tracer.instant(
+                            trip32,
+                            Mark::HeartbeatDivergent,
+                            phone.clock.now_us(),
+                        );
                     }
                 }
 
                 let (capsule, phases) = migrator.migrate_out_capsule(phone, tid, session)?;
                 absorb_capture_phases(&mut out, &phases);
+                if tracer.is_enabled() {
+                    // migrate_out charged the clock with suspend +
+                    // capture: reconstruct both spans ending now.
+                    let t = phone.clock.now_us();
+                    let cap_us = phases.capture_ms * 1000.0;
+                    let sus_us = phases.suspend_ms * 1000.0;
+                    tracer.span(trip32, Phase::Suspend, t - cap_us - sus_us, t - cap_us);
+                    tracer.span(trip32, Phase::Capture, t - cap_us, t);
+                    tracer.counter(
+                        trip32,
+                        Counter::ObjectsShipped,
+                        phases.objects_shipped as f64,
+                        t,
+                    );
+                    tracer.counter(trip32, Counter::PagesDirty, phases.pages_dirty as f64, t);
+                }
                 let mut overhead_ms = phases.suspend_ms + phases.capture_ms;
                 let first_was_delta = capsule.is_delta();
                 if first_was_delta {
@@ -522,8 +681,10 @@ where
                     out.full_roundtrips += 1;
                 }
 
-                let (fwd, up_ms) =
-                    stamp_and_encode(phone, &net, &mut out, capsule, codec, dict_on, session);
+                let ctx = make_ctx(tracer, ctx_on, trip32);
+                let (fwd, up_ms) = stamp_and_encode(
+                    phone, &net, &mut out, capsule, codec, dict_on, session, tracer, trip32, ctx,
+                );
                 engine.observe_forward(fwd.len() as u64, up_ms, first_was_delta);
 
                 // Roundtrip with a bounded NeedFull ladder. Rung 1: the
@@ -553,17 +714,32 @@ where
                                 // have reset.
                                 out.dict_fallbacks += 1;
                             }
+                            tracer.instant(trip32, Mark::NeedFull, phone.clock.now_us());
                             session.reset_dict();
+                            tracer.instant(trip32, Mark::DictReset, phone.clock.now_us());
                             let (full, phases) =
                                 migrator.recapture_full(phone, tid, session)?;
                             absorb_capture_phases(&mut out, &phases);
+                            if tracer.is_enabled() {
+                                let t = phone.clock.now_us();
+                                tracer.span(
+                                    trip32,
+                                    Phase::Capture,
+                                    t - phases.capture_ms * 1000.0,
+                                    t,
+                                );
+                            }
                             overhead_ms += phases.capture_ms;
                             sent_delta = false;
+                            let ctx = make_ctx(tracer, ctx_on, trip32);
                             let (f, up_ms) = if needfull >= 2 && dict_on {
-                                stamp_and_encode_inline(phone, &net, &mut out, full, codec)
+                                stamp_and_encode_inline(
+                                    phone, &net, &mut out, full, codec, tracer, trip32, ctx,
+                                )
                             } else {
                                 stamp_and_encode(
                                     phone, &net, &mut out, full, codec, dict_on, session,
+                                    tracer, trip32, ctx,
                                 )
                             };
                             engine.observe_forward(f.len() as u64, up_ms, false);
@@ -579,8 +755,10 @@ where
                                 &mut out,
                                 &mut local_spans,
                                 point,
+                                trip32,
                                 Some((sent_delta, fwd_len)),
                                 e,
+                                tracer,
                             )?;
                             continue 'run;
                         }
@@ -590,32 +768,59 @@ where
                 out.transfer.up += transfer.up;
                 out.transfer.down += transfer.down;
                 out.migrations += 1;
+                let t_sent = phone.clock.now_us();
 
                 let rcapsule = {
                     let raw = open_frame(&rbytes)?;
                     out.raw_down += raw.len() as u64;
+                    // Piggybacked clone events (if any) sit ahead of the
+                    // capsule; merge them into this timeline.
+                    let (remote_events, craw) = trace::split_events(&raw)?;
+                    tracer.absorb_remote(remote_events);
                     if dict_on {
-                        Capsule::decode_with(&raw, DictRead::Negotiated(session.dict()))?.0
+                        Capsule::decode_with(craw, DictRead::Negotiated(session.dict()))?.0
                     } else {
-                        Capsule::decode(&raw)?
+                        Capsule::decode(craw)?
                     }
                 };
                 // Adopt the clone's finish time, then pay the downlink
                 // for the *wire* (sealed) bytes.
                 phone.clock.advance_to_us(rcapsule.clock_us());
+                tracer.span(trip32, Phase::CloneTrip, t_sent, phone.clock.now_us());
+                let t_clone_done = phone.clock.now_us();
                 let down_ms = net.transfer_ms(rbytes.len() as u64, false);
                 phone.clock.charge_ms(down_ms);
                 out.downlink_ms += down_ms;
                 engine.observe_reverse(rbytes.len() as u64, down_ms);
+                tracer.span(trip32, Phase::Downlink, t_clone_done, phone.clock.now_us());
 
                 let (_stats, phases) =
                     migrator.merge_back_capsule(phone, tid, &rcapsule, session)?;
                 out.merge_ms += phases.merge_ms;
                 engine.observe_overhead(overhead_ms + phases.merge_ms);
+                if tracer.is_enabled() {
+                    let t_end = phone.clock.now_us();
+                    tracer.span(trip32, Phase::Merge, t_end - phases.merge_ms * 1000.0, t_end);
+                    tracer.counter(trip32, Counter::BytesUp, transfer.up as f64, t_end);
+                    tracer.counter(trip32, Counter::BytesDown, transfer.down as f64, t_end);
+                }
                 let actual_ms = phone.clock.now_ms() - span_start_ms;
-                if engine.score_offload(point, actual_ms) {
+                let mispredicted = engine.score_offload(point, actual_ms);
+                if mispredicted {
                     out.mispredictions += 1;
                 }
+                tracer.decision(
+                    trip32,
+                    DecisionEvent {
+                        offloaded: true,
+                        predicted_local_ms: pred_local,
+                        predicted_offload_ms: pred_off,
+                        predicted_fwd_bytes: pred_fwd as u64,
+                        actual_ms,
+                        mispredicted,
+                    },
+                    phone.clock.now_us(),
+                );
             }
         }
     };
@@ -625,6 +830,12 @@ where
     let dict1 = session.dict_stats();
     out.dict_hit_bytes = dict1.0.saturating_sub(dict0.0);
     out.dict_additions = dict1.1.saturating_sub(dict0.1);
+    tracer.counter(
+        0,
+        Counter::DictHitBytes,
+        out.dict_hit_bytes as f64,
+        phone.clock.now_us(),
+    );
     channel.record_policy(
         out.offloads as u64,
         out.local_fallbacks as u64,
@@ -653,10 +864,12 @@ fn degrade_to_local(
     session: &mut MobileSession,
     engine: &mut PolicyEngine,
     out: &mut DistOutcome,
-    local_spans: &mut Vec<(u32, f64, Option<f64>)>,
+    local_spans: &mut Vec<LocalSpan>,
     point: u32,
+    trip: u32,
     attempt: Option<(bool, u64)>,
     e: CloneCloudError,
+    tracer: &mut Tracer,
 ) -> Result<()> {
     phone.thread_mut(tid)?.status = ThreadStatus::Runnable;
     phone.resume_others(tid);
@@ -674,7 +887,16 @@ fn degrade_to_local(
     out.offloads -= 1;
     out.local_fallbacks += 1;
     engine.note_degrade();
-    local_spans.push((point, phone.clock.now_ms(), None));
+    tracer.instant(trip, Mark::Degrade, phone.clock.now_us());
+    tracer.begin(trip, Phase::LocalExec, phone.clock.now_us());
+    local_spans.push(LocalSpan {
+        point,
+        start_ms: phone.clock.now_ms(),
+        predicted: None,
+        trip,
+        predicted_local_ms: 0.0,
+        predicted_fwd_bytes: 0.0,
+    });
     Ok(())
 }
 
@@ -700,6 +922,7 @@ fn absorb_capture_phases(out: &mut DistOutcome, phases: &MigrationPhases) {
 /// then carry the self-describing mode byte and are encoded against the
 /// session's dictionary replica (or the inline per-capsule table when
 /// the session keeps the dictionary disabled).
+#[allow(clippy::too_many_arguments)]
 fn stamp_and_encode(
     phone: &mut Process,
     net: &NetworkProfile,
@@ -708,7 +931,11 @@ fn stamp_and_encode(
     codec: Codec,
     dict_on: bool,
     session: &mut MobileSession,
+    tracer: &mut Tracer,
+    trip: u32,
+    ctx: Option<TraceCtx>,
 ) -> (Vec<u8>, f64) {
+    let wall0 = tracer.is_enabled().then(std::time::Instant::now);
     let raw = if !dict_on {
         capsule.encode()
     } else if session.dict_enabled() {
@@ -716,38 +943,73 @@ fn stamp_and_encode(
     } else {
         capsule.encode_with(DictMode::Inline)
     };
-    stamp_raw(phone, net, out, raw, codec)
+    if let Some(w0) = wall0 {
+        tracer.span_wall(
+            trip,
+            Phase::Encode,
+            phone.clock.now_us(),
+            w0.elapsed().as_micros() as u64,
+        );
+    }
+    stamp_raw(phone, net, out, raw, codec, tracer, trip, ctx)
 }
 
 /// [`stamp_and_encode`] forced onto the inline per-capsule table — the
 /// NeedFull ladder's last rung, which no dictionary state can reject.
+#[allow(clippy::too_many_arguments)]
 fn stamp_and_encode_inline(
     phone: &mut Process,
     net: &NetworkProfile,
     out: &mut DistOutcome,
     capsule: Capsule,
     codec: Codec,
+    tracer: &mut Tracer,
+    trip: u32,
+    ctx: Option<TraceCtx>,
 ) -> (Vec<u8>, f64) {
+    let wall0 = tracer.is_enabled().then(std::time::Instant::now);
     let raw = capsule.encode_with(DictMode::Inline);
-    stamp_raw(phone, net, out, raw, codec)
+    if let Some(w0) = wall0 {
+        tracer.span_wall(
+            trip,
+            Phase::Encode,
+            phone.clock.now_us(),
+            w0.elapsed().as_micros() as u64,
+        );
+    }
+    stamp_raw(phone, net, out, raw, codec, tracer, trip, ctx)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn stamp_raw(
     phone: &mut Process,
     net: &NetworkProfile,
     out: &mut DistOutcome,
     raw: Vec<u8>,
     codec: Codec,
+    tracer: &mut Tracer,
+    trip: u32,
+    ctx: Option<TraceCtx>,
 ) -> (Vec<u8>, f64) {
+    // The trace context rides *inside* the sealed frame, ahead of the
+    // capsule; its bytes cross the link and are charged like any others.
+    let (raw, ctx_len) = match &ctx {
+        Some(c) => (trace::prepend_ctx(c, &raw), trace::TRACE_CTX_LEN),
+        None => (raw, 0),
+    };
     out.raw_up += raw.len() as u64;
-    let mut wire = seal_frame_keep_head(codec, raw, CAPSULE_CLOCK_OFFSET + 8);
+    let mut wire = seal_frame_keep_head(codec, raw, ctx_len + CAPSULE_CLOCK_OFFSET + 8);
     let up_ms = net.transfer_ms(wire.len() as u64, true);
     phone.clock.charge_ms(up_ms);
     out.uplink_ms += up_ms;
     // Clone resumes at the post-transfer timestamp.
     let clock = phone.clock.now_us().to_bits().to_be_bytes();
-    patch_frame_payload(&mut wire, CAPSULE_CLOCK_OFFSET, &clock)
+    patch_frame_payload(&mut wire, ctx_len + CAPSULE_CLOCK_OFFSET, &clock)
         .expect("capsule header is always inside the preserved frame head");
+    if tracer.is_enabled() {
+        let t_sent = phone.clock.now_us();
+        tracer.span(trip, Phase::Uplink, t_sent - up_ms * 1000.0, t_sent);
+    }
     (wire, up_ms)
 }
 
@@ -1258,6 +1520,110 @@ mod tests {
             channel.clone.threads.len() <= 4,
             "tombstone threads bounded by the GC interval, got {}",
             channel.clone.threads.len()
+        );
+    }
+
+    /// The flight recorder: a traced delta session produces phone- AND
+    /// clone-side spans on one merged timeline, phone-side spans cover
+    /// >= 95% of each trip's virtual window, and execution results and
+    /// counters are bit-identical to an untraced run.
+    #[test]
+    fn traced_run_merges_both_endpoints_and_changes_nothing() {
+        use crate::trace::{phone_coverage, Endpoint, Event};
+
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+        let (plain, got_plain) = run(&program, &template, true, false, Codec::None);
+        assert_eq!(got_plain, expected);
+
+        let mut phone = make_proc(&program, &template, Location::Mobile);
+        let clone = make_proc(&program, &template, Location::Clone);
+        let mut channel = InlineClone::new(clone, CostParams::default())
+            .with_delta()
+            .with_trace();
+        let mut session = MobileSession::new(true);
+        let mut engine = PolicyEngine::legacy_offload();
+        let mut tracer = Tracer::new(0x5E55, Endpoint::Phone, 8192);
+        let out = run_distributed_traced(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+            &mut engine,
+            &mut tracer,
+        )
+        .unwrap();
+
+        // Observe-only: results and execution counters match untraced.
+        assert_eq!(out.result, plain.result);
+        assert_eq!(out.migrations, plain.migrations);
+        assert_eq!(out.delta_roundtrips, plain.delta_roundtrips);
+        assert_eq!(out.delta_fallbacks, plain.delta_fallbacks);
+        assert_eq!(
+            phone.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
+            Some(expected)
+        );
+        // The context + piggybacked events DO cross the (charged) wire.
+        assert!(out.raw_up > plain.raw_up, "trace ctx bytes are accounted");
+
+        let events: Vec<Event> = tracer.events().cloned().collect();
+        assert!(
+            events.iter().any(|e| e.endpoint == Endpoint::Clone),
+            "clone events came home piggybacked"
+        );
+        let cov = phone_coverage(&events);
+        assert!(cov >= 0.95, "phase spans cover the trips: {cov}");
+        let rep = tracer.report();
+        assert!(rep.phase(Endpoint::Clone, Phase::CloneExec).is_some());
+        assert!(
+            rep.phase(Endpoint::Phone, Phase::Uplink).unwrap().hist.count()
+                >= ROUNDS as u64
+        );
+        assert_eq!(rep.decisions, ROUNDS as u64, "one decision event per trip");
+    }
+
+    /// A tracer on a channel that did NOT negotiate `CAP_TRACE_CTX`
+    /// still records phone-side spans — but nothing trace-related rides
+    /// the wire and no clone events appear.
+    #[test]
+    fn tracing_without_capability_stays_phone_local() {
+        use crate::trace::Endpoint;
+
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+        let (plain, _) = run(&program, &template, true, false, Codec::None);
+
+        let mut phone = make_proc(&program, &template, Location::Mobile);
+        let clone = make_proc(&program, &template, Location::Clone);
+        let mut channel = InlineClone::new(clone, CostParams::default()).with_delta();
+        let mut session = MobileSession::new(true);
+        let mut engine = PolicyEngine::legacy_offload();
+        let mut tracer = Tracer::new(1, Endpoint::Phone, 8192);
+        let out = run_distributed_traced(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+            &mut engine,
+            &mut tracer,
+        )
+        .unwrap();
+
+        assert_eq!(out.raw_up, plain.raw_up, "no envelope bytes on the wire");
+        assert_eq!(out.raw_down, plain.raw_down);
+        assert!(
+            tracer.events().all(|e| e.endpoint == Endpoint::Phone),
+            "no clone events without the capability"
+        );
+        assert!(
+            tracer.report().phase(Endpoint::Phone, Phase::Capture).is_some(),
+            "phone-side spans still recorded"
+        );
+        assert_eq!(
+            phone.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
+            Some(expected)
         );
     }
 }

@@ -26,8 +26,9 @@ pub use faults::FaultInjectChannel;
 
 pub use distributed::{
     delta_statics_workload_src, delta_workload_expected, delta_workload_src, run_distributed,
-    run_distributed_policy, run_distributed_session, run_distributed_with, CloneChannel,
-    DistOutcome, FarmClone, InlineClone,
+    run_distributed_policy, run_distributed_session, run_distributed_traced,
+    run_distributed_traced_with, run_distributed_with, CloneChannel, DistOutcome, FarmClone,
+    InlineClone,
 };
 pub use monolithic::{run_monolithic, run_monolithic_hooked, MonoOutcome};
 pub use policy::{

@@ -12,7 +12,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::appvm::zygote::build_template;
@@ -20,6 +20,7 @@ use crate::appvm::Program;
 use crate::config::{CostParams, FarmParams};
 use crate::error::{CloneCloudError, Result};
 use crate::nodemanager::program_hash;
+use crate::util::stats::LogHistogram;
 use crate::vfs::SimFs;
 
 use super::admission::Admission;
@@ -140,6 +141,13 @@ pub(crate) struct FarmShared {
     /// Bytes the slot session dictionaries saved (names a per-capsule
     /// table would have re-shipped), flushed per job by the workers.
     pub dict_hit_bytes: AtomicU64,
+    /// Gateway-wide latency distributions (wall-clock ms), log-bucketed
+    /// so the snapshot can report percentiles, not just totals: time a
+    /// job waited in a worker queue after admission, and time a worker
+    /// spent executing it. Workers record one sample per job; the lock
+    /// is uncontended relative to the work between samples.
+    pub queue_ms: Mutex<LogHistogram>,
+    pub exec_ms: Mutex<LogHistogram>,
 }
 
 /// A point-in-time snapshot of farm counters.
@@ -187,6 +195,10 @@ pub struct FarmStats {
     pub admission_wait_ms: f64,
     /// Total time jobs waited in worker queues after admission.
     pub queue_wait_ms: f64,
+    /// Queue-wait and execution latency distributions (wall ms), one
+    /// sample per served job — NaN percentiles until a job has run.
+    pub queue_hist: LogHistogram,
+    pub exec_hist: LogHistogram,
     pub worker_jobs: Vec<u64>,
     pub worker_busy_ms: Vec<f64>,
 }
@@ -288,6 +300,8 @@ impl FarmHandle {
             dict_hit_bytes: s.dict_hit_bytes.load(Ordering::Relaxed),
             admission_wait_ms: s.admission_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             queue_wait_ms: s.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
+            queue_hist: s.queue_ms.lock().unwrap().clone(),
+            exec_hist: s.exec_ms.lock().unwrap().clone(),
             worker_jobs: s
                 .worker_stats
                 .iter()
@@ -358,6 +372,8 @@ impl CloneFarm {
             wire_raw_down: AtomicU64::new(0),
             wire_down: AtomicU64::new(0),
             dict_hit_bytes: AtomicU64::new(0),
+            queue_ms: Mutex::new(LogHistogram::new()),
+            exec_ms: Mutex::new(LogHistogram::new()),
         });
 
         let mut senders = Vec::with_capacity(cfg.workers);

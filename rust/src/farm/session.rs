@@ -49,6 +49,10 @@ pub struct FarmClone {
     /// Session string dictionary negotiated (the worker slot keeps the
     /// clone-side replica; like delta, it needs affinity placement).
     dict: bool,
+    /// Trace context negotiated (`CAP_TRACE_CTX`). Unlike delta/dict it
+    /// is stateless per job — no affinity requirement — so the gateway
+    /// never masks it.
+    trace: bool,
     pub stats: SessionStats,
 }
 
@@ -68,6 +72,7 @@ impl FarmClone {
             closed: false,
             delta: false,
             dict: false,
+            trace: false,
             stats: SessionStats::default(),
         }
     }
@@ -97,6 +102,18 @@ impl FarmClone {
     /// Whether the session dictionary is enabled.
     pub fn dict_enabled(&self) -> bool {
         self.dict
+    }
+
+    /// Enable/disable the trace-context envelope for this session (the
+    /// gateway arms it from the Hello negotiation; in-process callers
+    /// set it directly).
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace = on;
+    }
+
+    /// Whether the trace-context envelope is enabled.
+    pub fn trace_enabled(&self) -> bool {
+        self.trace
     }
 
     /// Replace the session's synchronized file system. Clone slots pick
@@ -237,6 +254,10 @@ impl CloneChannel for FarmClone {
 
     fn dict_capable(&self) -> bool {
         self.dict
+    }
+
+    fn trace_capable(&self) -> bool {
+        self.trace
     }
 
     fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {

@@ -25,6 +25,7 @@ use crate::config::CostParams;
 use crate::error::{CloneCloudError, Result};
 use crate::migration::{collect_slot_garbage, CloneSession, Migrator};
 use crate::nodemanager::{execute_migration, CloneServeStats};
+use crate::trace::Tracer;
 use crate::vfs::SimFs;
 
 use super::farm::FarmShared;
@@ -89,6 +90,10 @@ pub(crate) fn worker_main(
 ) {
     let migrator = Migrator::new(costs);
     let mut slots: HashMap<u64, CloneSlot> = HashMap::new();
+    // The worker itself records nothing: jobs that carry a trace context
+    // get an ephemeral per-job tracer inside `execute_migration`, whose
+    // events ride the reply back to the phone's timeline.
+    let mut tracer = Tracer::disabled();
     loop {
         // Drain eagerly; refill the warm pool only when the queue is
         // empty so provisioning stays off the migration critical path.
@@ -107,6 +112,11 @@ pub(crate) fn worker_main(
             FarmMsg::Work(job) => {
                 let wait_us = job.submitted.elapsed().as_micros() as u64;
                 shared.queue_wait_us.fetch_add(wait_us, Ordering::Relaxed);
+                shared
+                    .queue_ms
+                    .lock()
+                    .unwrap()
+                    .record(wait_us as f64 / 1e3);
 
                 let t0 = Instant::now();
                 let slot = slots.entry(job.phone).or_insert_with(|| CloneSlot {
@@ -131,6 +141,7 @@ pub(crate) fn worker_main(
                     fuel,
                     &mut serve,
                     &mut slot.session,
+                    &mut tracer,
                 );
                 if matches!(&result, Err(e) if e.is_need_full()) {
                     shared.delta_rejects.fetch_add(1, Ordering::Relaxed);
@@ -174,8 +185,9 @@ pub(crate) fn worker_main(
 
                 let ws = &shared.worker_stats[idx];
                 ws.jobs.fetch_add(1, Ordering::Relaxed);
-                ws.busy_us
-                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                let busy_us = t0.elapsed().as_micros() as u64;
+                ws.busy_us.fetch_add(busy_us, Ordering::Relaxed);
+                shared.exec_ms.lock().unwrap().record(busy_us as f64 / 1e3);
                 shared.scheduler.job_finished(idx);
                 // A dead session (dropped receiver) is not the worker's
                 // problem; the admission slot is released by the session

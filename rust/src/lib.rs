@@ -45,6 +45,14 @@
 //!   after the fact (`offloads` / `local_fallbacks` /
 //!   `mispredictions`), with forced-offload/forced-local ablations and
 //!   dead-channel degrade-to-local.
+//! * [`trace`] — the session flight recorder (§6's phase breakdown,
+//!   live): a bounded ring of span/counter/instant/decision events
+//!   stamped in both virtual and wall µs, an explicit `Tracer` handle
+//!   threaded through driver, migration, protocol and farm (no
+//!   globals), cross-endpoint causality via the `CAP_TRACE_CTX` wire
+//!   context with clone events piggybacked on the reverse capsule, and
+//!   Chrome trace-event export. Observe-only: tracing never changes
+//!   execution results.
 //! * [`baselines`] — comparison partitioners (§7 related work).
 
 pub mod appvm;
@@ -62,6 +70,7 @@ pub mod nodemanager;
 pub mod partitioner;
 pub mod pipeline;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 pub mod vfs;
 

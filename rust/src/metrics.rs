@@ -2,38 +2,42 @@
 //! (instructions, native calls, migrations, bytes) for reports and the
 //! benches' summary lines.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 
 use crate::appvm::process::Process;
 use crate::exec::DistOutcome;
+use crate::trace::TraceReport;
 
-/// A flat, printable metrics snapshot.
+/// A flat, printable metrics snapshot. Keys are `Cow<'static, str>`:
+/// the common case — a fixed metric name — never allocates, while
+/// computed names (per-worker, per-phase) pass an owned `String`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MetricsSnapshot {
-    pub counters: BTreeMap<String, u64>,
-    pub gauges: BTreeMap<String, f64>,
+    pub counters: BTreeMap<Cow<'static, str>, u64>,
+    pub gauges: BTreeMap<Cow<'static, str>, f64>,
 }
 
 impl MetricsSnapshot {
-    pub fn count(&mut self, name: &str, v: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    pub fn count(&mut self, name: impl Into<Cow<'static, str>>, v: u64) {
+        *self.counters.entry(name.into()).or_insert(0) += v;
     }
 
-    pub fn gauge(&mut self, name: &str, v: f64) {
-        self.gauges.insert(name.to_string(), v);
+    pub fn gauge(&mut self, name: impl Into<Cow<'static, str>>, v: f64) {
+        self.gauges.insert(name.into(), v);
     }
 
     /// Absorb a process's VM metrics + native-call counts.
     pub fn absorb_process(&mut self, prefix: &str, p: &Process) {
-        self.count(&format!("{prefix}.instrs"), p.metrics.instrs);
-        self.count(&format!("{prefix}.invokes"), p.metrics.invokes);
-        self.count(&format!("{prefix}.native_calls"), p.metrics.native_calls);
-        self.count(&format!("{prefix}.allocations"), p.metrics.allocations);
+        self.count(format!("{prefix}.instrs"), p.metrics.instrs);
+        self.count(format!("{prefix}.invokes"), p.metrics.invokes);
+        self.count(format!("{prefix}.native_calls"), p.metrics.native_calls);
+        self.count(format!("{prefix}.allocations"), p.metrics.allocations);
         for (name, n) in &p.env.native_calls {
-            self.count(&format!("{prefix}.native.{name}"), *n);
+            self.count(format!("{prefix}.native.{name}"), *n);
         }
-        self.gauge(&format!("{prefix}.virtual_ms"), p.clock.now_ms());
-        self.gauge(&format!("{prefix}.heap_objects"), p.heap.len() as f64);
+        self.gauge(format!("{prefix}.virtual_ms"), p.clock.now_ms());
+        self.gauge(format!("{prefix}.heap_objects"), p.heap.len() as f64);
     }
 
     /// Absorb a distributed-run outcome.
@@ -152,9 +156,46 @@ impl MetricsSnapshot {
         }
         self.gauge("farm.admission_wait_ms", f.admission_wait_ms);
         self.gauge("farm.queue_wait_ms", f.queue_wait_ms);
+        if !f.queue_hist.is_empty() {
+            self.gauge("farm.queue.p50_ms", f.queue_hist.p50());
+            self.gauge("farm.queue.p95_ms", f.queue_hist.p95());
+            self.gauge("farm.queue.p99_ms", f.queue_hist.p99());
+        }
+        if !f.exec_hist.is_empty() {
+            self.gauge("farm.exec.p50_ms", f.exec_hist.p50());
+            self.gauge("farm.exec.p95_ms", f.exec_hist.p95());
+            self.gauge("farm.exec.p99_ms", f.exec_hist.p99());
+        }
         for (i, (jobs, busy)) in f.worker_jobs.iter().zip(&f.worker_busy_ms).enumerate() {
-            self.count(&format!("farm.worker{i}.jobs"), *jobs);
-            self.gauge(&format!("farm.worker{i}.busy_ms"), *busy);
+            self.count(format!("farm.worker{i}.jobs"), *jobs);
+            self.gauge(format!("farm.worker{i}.busy_ms"), *busy);
+        }
+    }
+
+    /// Absorb a trace report: per-(endpoint, phase) duration percentiles
+    /// under `trace.<endpoint>.<phase>.*`, counter totals, and the
+    /// decision/misprediction tallies. Durations are virtual-clock ms —
+    /// the same clock the spans were stamped with.
+    pub fn absorb_trace(&mut self, rep: &TraceReport) {
+        self.count("trace.events", rep.events);
+        self.count("trace.dropped", rep.dropped);
+        self.count("trace.decisions", rep.decisions);
+        self.count("trace.mispredictions", rep.mispredictions);
+        for ph in &rep.phases {
+            if ph.hist.is_empty() {
+                continue;
+            }
+            let base = format!("trace.{}.{}", ph.endpoint.name(), ph.phase.name());
+            self.count(format!("{base}.spans"), ph.hist.count());
+            self.gauge(format!("{base}.p50_ms"), ph.hist.p50());
+            self.gauge(format!("{base}.p95_ms"), ph.hist.p95());
+            self.gauge(format!("{base}.p99_ms"), ph.hist.p99());
+        }
+        for (c, total) in &rep.counters {
+            self.gauge(format!("trace.counter.{}", c.name()), *total);
+        }
+        for (m, n) in &rep.instants {
+            self.count(format!("trace.mark.{}", m.name()), *n);
         }
     }
 

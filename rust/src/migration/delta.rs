@@ -420,6 +420,18 @@ pub struct MobileSession {
     /// never traverses the heap.
     gc_every: u64,
     delta_captures: u64,
+    /// Also collect once the heap has grown by this many objects since
+    /// the last collection (0 = count-based cadence only). A
+    /// fast-allocating trace collects on growth, before the fixed
+    /// capture count comes due.
+    gc_growth_objects: u64,
+    /// Heap id watermark (`next_id_hint`) at the last collection — the
+    /// growth trigger's reference point. 0 = unarmed; armed (without
+    /// collecting) on the first delta capture so template allocations
+    /// never count as growth.
+    gc_watermark: u64,
+    /// Mobile GCs this session actually ran (tests + diagnostics).
+    gc_runs: u64,
     /// Session-lifetime string dictionary replica (used only when the
     /// channel negotiated `CAP_SESSION_DICT`).
     dict: SessionDict,
@@ -440,6 +452,9 @@ impl MobileSession {
             paged: true,
             gc_every: 8,
             delta_captures: 0,
+            gc_growth_objects: 0,
+            gc_watermark: 0,
+            gc_runs: 0,
             dict: SessionDict::new(),
             dict_enabled: true,
         }
@@ -482,6 +497,19 @@ impl MobileSession {
     /// `gc_every` field.
     pub fn set_gc_interval(&mut self, every: u64) {
         self.gc_every = every;
+    }
+
+    /// Heap-growth GC trigger: also collect once `next_id_hint` has
+    /// advanced this many objects past the last collection (0 = off).
+    /// Ids are monotonic, so the allocation-rate check is a subtraction
+    /// — never a heap walk.
+    pub fn set_gc_growth(&mut self, objects: u64) {
+        self.gc_growth_objects = objects;
+    }
+
+    /// Mobile-side GCs this session has run (either trigger).
+    pub fn gc_runs(&self) -> u64 {
+        self.gc_runs
     }
 
     /// The session dictionary replica (driver encode/decode side).
@@ -773,10 +801,19 @@ pub(crate) fn capture_forward(
         // template objects are rooted — they must stay resolvable by
         // their (class, seq) names however unreachable they look.
         sess.delta_captures += 1;
-        if sess.paged && sess.gc_every > 0 && sess.delta_captures % sess.gc_every == 0 {
+        let next_id = p.heap.next_id_hint();
+        if sess.gc_watermark == 0 {
+            sess.gc_watermark = next_id;
+        }
+        let count_due = sess.gc_every > 0 && sess.delta_captures % sess.gc_every == 0;
+        let growth_due = sess.gc_growth_objects > 0
+            && next_id - sess.gc_watermark >= sess.gc_growth_objects;
+        if sess.paged && (count_due || growth_due) {
             let mut roots = p.gc_roots();
             roots.extend(p.heap.zygote_ids());
             p.heap.gc(&roots);
+            sess.gc_runs += 1;
+            sess.gc_watermark = next_id;
         }
         let b = sess.baseline.as_ref().expect("checked");
         let base = DeltaBase {

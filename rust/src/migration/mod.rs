@@ -465,6 +465,59 @@ end
         );
     }
 
+    /// The heap-growth trigger fires the mobile GC from allocation rate:
+    /// a trace that allocates every round collects before the count
+    /// cadence (set far beyond the run) would ever come due.
+    #[test]
+    fn gc_growth_trigger_collects_earlier_than_count_cadence() {
+        let run = |growth: u64| -> (Value, u64) {
+            let program = Arc::new(assemble(DELTA_PROG).unwrap());
+            let main = program.entry().unwrap();
+            let mut phone = make_proc(Location::Mobile, &program, 40);
+            let mut clone = make_proc(Location::Clone, &program, 40);
+            let migrator = Migrator::new(CostParams::default());
+            let mut msess = MobileSession::new(true);
+            msess.set_gc_interval(1_000); // count cadence never fires here
+            msess.set_gc_growth(growth);
+            let mut csess = CloneSession::new(true);
+            let tid = phone.spawn_thread(main, &[]).unwrap();
+            loop {
+                match run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap() {
+                    RunExit::Completed(_) => break,
+                    RunExit::ReintegrationPoint { .. } => continue,
+                    RunExit::MigrationPoint { .. } => {
+                        let (capsule, _) =
+                            migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+                        let sent = Capsule::decode(&capsule.encode()).unwrap();
+                        let (ctid, _) = migrator
+                            .receive_capsule_at_clone(&mut clone, &sent, &mut csess)
+                            .unwrap();
+                        let exit =
+                            run_thread(&mut clone, ctid, &mut NoHooks, 10_000_000).unwrap();
+                        assert!(matches!(exit, RunExit::ReintegrationPoint { .. }));
+                        let (rcap, _, _) = migrator
+                            .return_capsule_from_clone(&mut clone, ctid, &mut csess)
+                            .unwrap();
+                        let rcap = Capsule::decode(&rcap.encode()).unwrap();
+                        migrator
+                            .merge_back_capsule(&mut phone, tid, &rcap, &mut msess)
+                            .unwrap();
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            (phone.statics[main.class.0 as usize][1], msess.gc_runs())
+        };
+        let (out_off, runs_off) = run(0);
+        let (out_on, runs_on) = run(2);
+        assert_eq!(runs_off, 0, "count cadence alone never fires in this run");
+        assert!(
+            runs_on >= 1,
+            "allocation growth trips the collector early (ran {runs_on})"
+        );
+        assert_eq!(out_on, out_off, "GC timing is invisible to results");
+    }
+
     /// Delta and full capsule paths must produce bit-identical results,
     /// and repeat rounds must ship dramatically fewer bytes via deltas.
     #[test]

@@ -19,8 +19,8 @@ use crate::farm::{FarmClone, FarmHandle};
 use crate::vfs::SimFs;
 
 use super::protocol::{
-    codec_agreed, dict_agreed, open_frame, seal_frame, Codec, Msg, CAP_SESSION_DICT,
-    PROTO_VERSION, SUPPORTED_CAPS,
+    codec_agreed, dict_agreed, open_frame, seal_frame, trace_agreed, Codec, Msg,
+    CAP_SESSION_DICT, PROTO_VERSION, SUPPORTED_CAPS,
 };
 use super::transport::{TcpEndpoint, Transport};
 
@@ -34,6 +34,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
     // Armed by Hello; applied to the session whenever one exists.
     let mut delta = false;
     let mut dict = false;
+    let mut trace = false;
     let mut codec = Codec::None;
     loop {
         let (msg, _) = t.recv()?;
@@ -57,15 +58,19 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                 };
                 delta = super::protocol::delta_agreed(proto, want) && handle.delta_friendly();
                 dict = dict_agreed(PROTO_VERSION, local_caps, proto, caps);
+                // Trace context is per-job stateless (no slot-resident
+                // baseline), so it needs no affinity and no masking.
+                trace = trace_agreed(PROTO_VERSION, local_caps, proto, caps);
                 codec = codec_agreed(proto, caps);
                 if let Some(s) = session.as_mut() {
                     s.set_delta(delta);
                     s.set_dict(dict);
+                    s.set_trace(trace);
                 }
                 // Log the negotiated capability set: mixed-version
                 // fleets are debugged from exactly this line.
                 eprintln!(
-                    "[farm] session caps: proto v{}, delta={delta}, dict={dict}, codec={}",
+                    "[farm] session caps: proto v{}, delta={delta}, dict={dict}, trace={trace}, codec={}",
                     proto.min(PROTO_VERSION),
                     codec.name()
                 );
@@ -106,6 +111,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                         let mut s = handle.session_auto(fs);
                         s.set_delta(delta);
                         s.set_dict(dict);
+                        s.set_trace(trace);
                         session = Some(s);
                     }
                 }
@@ -120,6 +126,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                     let mut s = handle.session_auto(SimFs::new());
                     s.set_delta(delta);
                     s.set_dict(dict);
+                    s.set_trace(trace);
                     session = Some(s);
                 }
                 let s = session.as_mut().unwrap();

@@ -19,11 +19,12 @@ use crate::config::CostParams;
 use crate::device::{DeviceSpec, Location};
 use crate::error::{CloneCloudError, Result};
 use crate::migration::{collect_slot_garbage, Capsule, CloneSession, Migrator, MobileSession};
+use crate::trace::{self, Counter, Endpoint, Phase, Tracer};
 use crate::vfs::SimFs;
 
 use super::protocol::{
-    codec_agreed_at, delta_agreed_at, dict_agreed, open_frame, program_hash, seal_frame, Codec,
-    HeartbeatOutcome, Msg, PROTO_VERSION, SUPPORTED_CAPS,
+    codec_agreed_at, delta_agreed_at, dict_agreed, open_frame, program_hash, seal_frame,
+    trace_agreed, Codec, HeartbeatOutcome, Msg, PROTO_VERSION, SUPPORTED_CAPS,
 };
 use super::transport::Transport;
 use crate::migration::{DictMode, DictRead};
@@ -71,6 +72,12 @@ pub struct CloneServer<T: Transport> {
     pub local_caps: u32,
     /// Whether this server offers delta capsules at all.
     pub speak_delta: bool,
+    /// Clone-side flight recorder. Disabled by default; a forward
+    /// capsule carrying a trace context still gets its events recorded
+    /// (and shipped back) via an ephemeral per-trip recorder inside
+    /// [`execute_migration`], so this field is for server-local
+    /// observability beyond single trips.
+    pub tracer: Tracer,
 }
 
 impl<T: Transport> CloneServer<T> {
@@ -91,6 +98,7 @@ impl<T: Transport> CloneServer<T> {
             proto_cap: PROTO_VERSION,
             local_caps: SUPPORTED_CAPS,
             speak_delta: true,
+            tracer: Tracer::disabled(),
         }
     }
 
@@ -233,7 +241,7 @@ impl<T: Transport> CloneServer<T> {
     }
 
     fn handle_migration(
-        &self,
+        &mut self,
         migrator: &Migrator,
         proc: Option<&mut Process>,
         bytes: &[u8],
@@ -241,7 +249,15 @@ impl<T: Transport> CloneServer<T> {
         session: &mut CloneSession,
     ) -> Result<Vec<u8>> {
         let p = proc.ok_or_else(|| CloneCloudError::Transport("migrate before provision".into()))?;
-        execute_migration(migrator, p, bytes, self.fuel, stats, session)
+        execute_migration(
+            migrator,
+            p,
+            bytes,
+            self.fuel,
+            stats,
+            session,
+            &mut self.tracer,
+        )
     }
 }
 
@@ -254,6 +270,13 @@ impl<T: Transport> CloneServer<T> {
 ///
 /// A `NeedFull` error means the delta could not be applied (no baseline /
 /// digest mismatch); the caller relays it so the phone re-sends in full.
+///
+/// Tracing: a forward payload may carry a self-describing trace-context
+/// envelope (`CAP_TRACE_CTX`). When present, clone-side phase spans are
+/// recorded — into `tracer` if the caller enabled one, else into an
+/// ephemeral per-trip recorder — and piggybacked in front of the reverse
+/// capsule when the context asks for them. Observe-only: the envelope
+/// never changes what executes.
 pub fn execute_migration(
     migrator: &Migrator,
     p: &mut Process,
@@ -261,24 +284,52 @@ pub fn execute_migration(
     fuel: u64,
     stats: &mut CloneServeStats,
     session: &mut CloneSession,
+    tracer: &mut Tracer,
 ) -> Result<Vec<u8>> {
+    let (ctx, bytes) = trace::split_ctx(bytes)?;
+    let mut ephemeral;
+    let tracer: &mut Tracer = match ctx {
+        Some(c) if !tracer.is_enabled() => {
+            ephemeral = Tracer::new(c.session_id, Endpoint::Clone, 256);
+            &mut ephemeral
+        }
+        _ => tracer,
+    };
+    let trip = ctx.map(|c| c.trip).unwrap_or(0);
+    let mark = tracer.mark();
+
     // Session dictionary: decode against the slot replica when the
     // session negotiated it (a prefix-digest mismatch resets the replica
     // and surfaces as `NeedFull` right here), and answer the reverse
     // capsule in the same mode the forward one rode — so a peer that
     // fell back to the inline table never sees a dictionary reply.
+    let wall0 = std::time::Instant::now();
     let (capsule, used_dict) = if session.dict_enabled() {
         Capsule::decode_with(bytes, DictRead::Negotiated(session.dict()))?
     } else {
         (Capsule::decode(bytes)?, false)
     };
     let is_delta = capsule.is_delta();
+    let decode_wall = wall0.elapsed().as_micros() as u64;
+    let wall0 = std::time::Instant::now();
     let (tid, _) = migrator.receive_capsule_at_clone(p, &capsule, session)?;
+    // The merge installed the capsule's shipped virtual clock, so the
+    // arrival stamp is only known now; decode/merge are not charged to
+    // virtual time, so they sit at that point with measured wall widths.
+    let t_arrival = p.clock.now_us();
+    tracer.span_wall(trip, Phase::CloneDecode, t_arrival, decode_wall);
+    tracer.span_wall(
+        trip,
+        Phase::CloneMerge,
+        t_arrival,
+        wall0.elapsed().as_micros() as u64,
+    );
     let instrs0 = p.metrics.instrs;
 
     // Drive the migrant to its reintegration point. Nested CcStart
     // means "already at the clone — continue" (Property 3 guarantees
     // migration/reintegration alternate).
+    tracer.begin(trip, Phase::CloneExec, t_arrival);
     loop {
         match run_thread(p, tid, &mut NoHooks, fuel)? {
             RunExit::ReintegrationPoint { .. } => break,
@@ -293,13 +344,28 @@ pub fn execute_migration(
             }
         }
     }
+    tracer.end(trip, Phase::CloneExec, p.clock.now_us());
     stats.migrations += 1;
     if is_delta {
         stats.delta_migrations += 1;
     }
     stats.instrs_executed += p.metrics.instrs - instrs0;
+    tracer.counter(
+        trip,
+        Counter::Instrs,
+        (p.metrics.instrs - instrs0) as f64,
+        p.clock.now_us(),
+    );
+    let wall0 = std::time::Instant::now();
     let (rcapsule, _, dropped) = migrator.return_capsule_from_clone(p, tid, session)?;
     stats.mapping_entries_dropped += dropped;
+    tracer.span_wall(
+        trip,
+        Phase::CloneCapture,
+        p.clock.now_us(),
+        wall0.elapsed().as_micros() as u64,
+    );
+    let wall0 = std::time::Instant::now();
     let encoded = if session.dict_enabled() {
         if used_dict {
             rcapsule.encode_with(DictMode::Shared(session.dict()))
@@ -309,7 +375,18 @@ pub fn execute_migration(
     } else {
         rcapsule.encode()
     };
-    Ok(encoded)
+    tracer.span_wall(
+        trip,
+        Phase::CloneEncode,
+        p.clock.now_us(),
+        wall0.elapsed().as_micros() as u64,
+    );
+    match ctx {
+        Some(c) if c.wants_clone_events() => {
+            Ok(trace::prepend_events(&tracer.events_since(mark), &encoded))
+        }
+        _ => Ok(encoded),
+    }
 }
 
 /// Byte accounting for one migration round trip.
@@ -331,6 +408,9 @@ pub struct NodeManager<T: Transport> {
     /// Set by [`NodeManager::negotiate`]: both peers keep the session
     /// string dictionary.
     dict_negotiated: bool,
+    /// Set by [`NodeManager::negotiate`]: both peers understand the
+    /// trace-context envelope.
+    trace_negotiated: bool,
     /// The peer's protocol revision from its `Hello` (0 = never seen).
     peer_proto: u16,
     /// The revision/caps/delta this endpoint advertises. Default to the
@@ -348,6 +428,7 @@ impl<T: Transport> NodeManager<T> {
             delta_negotiated: false,
             codec: Codec::None,
             dict_negotiated: false,
+            trace_negotiated: false,
             peer_proto: 0,
             local_proto: PROTO_VERSION,
             local_caps: SUPPORTED_CAPS,
@@ -395,6 +476,8 @@ impl<T: Transport> NodeManager<T> {
                 self.codec = codec_agreed_at(self.local_proto, self.local_caps, proto, caps);
                 self.dict_negotiated =
                     dict_agreed(self.local_proto, self.local_caps, proto, caps);
+                self.trace_negotiated =
+                    trace_agreed(self.local_proto, self.local_caps, proto, caps);
             }
             // A peer that answers Error instead of Hello doesn't do
             // capability negotiation; stay on full, uncompressed frames.
@@ -406,6 +489,7 @@ impl<T: Transport> NodeManager<T> {
                 self.delta_negotiated = false;
                 self.codec = Codec::None;
                 self.dict_negotiated = false;
+                self.trace_negotiated = false;
             }
             other => {
                 return Err(CloneCloudError::Transport(format!(
@@ -425,6 +509,12 @@ impl<T: Transport> NodeManager<T> {
     /// Whether [`NodeManager::negotiate`] agreed on delta capsules.
     pub fn delta_negotiated(&self) -> bool {
         self.delta_negotiated
+    }
+
+    /// Whether [`NodeManager::negotiate`] agreed on the trace-context
+    /// envelope (`CAP_TRACE_CTX`).
+    pub fn trace_negotiated(&self) -> bool {
+        self.trace_negotiated
     }
 
     /// The frame codec [`NodeManager::negotiate`] agreed on.

@@ -23,9 +23,9 @@ pub use manager::{
 };
 pub use protocol::{
     codec_agreed, codec_agreed_at, delta_agreed, delta_agreed_at, dict_agreed, drive_heartbeat,
-    open_frame, patch_frame_payload, program_hash, seal_frame, seal_frame_keep_head, Codec,
-    HeartbeatOutcome, Msg, CAP_CODEC_LZ, CAP_SESSION_DICT, DICT_MIN_PROTO, PROTO_VERSION,
-    SUPPORTED_CAPS,
+    open_frame, patch_frame_payload, program_hash, seal_frame, seal_frame_keep_head, trace_agreed,
+    Codec, HeartbeatOutcome, Msg, CAP_CODEC_LZ, CAP_SESSION_DICT, CAP_TRACE_CTX, DICT_MIN_PROTO,
+    PROTO_VERSION, SUPPORTED_CAPS, TRACE_MIN_PROTO,
 };
 pub use transport::{InProcTransport, TcpEndpoint, TcpTransport, Transport};
 

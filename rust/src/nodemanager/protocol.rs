@@ -76,12 +76,29 @@ pub const CAP_CODEC_LZ: u32 = 1 << 0;
 /// keep the pre-dict byte layout exactly.
 pub const CAP_SESSION_DICT: u32 = 1 << 1;
 
+/// Capability bit: the peer understands the trace-context envelope
+/// ([`crate::trace::wire`]) riding in front of `Migrate` payloads and
+/// may piggyback its own phase events on `Reintegrate` payloads. Pure
+/// observability — negotiating it never changes execution results.
+pub const CAP_TRACE_CTX: u32 = 1 << 2;
+
 /// Every capability bit this build advertises in its `Hello`.
-pub const SUPPORTED_CAPS: u32 = CAP_CODEC_LZ | CAP_SESSION_DICT;
+pub const SUPPORTED_CAPS: u32 = CAP_CODEC_LZ | CAP_SESSION_DICT | CAP_TRACE_CTX;
 
 /// Lowest protocol revision that understands the session dictionary
 /// (the caps bitmap itself only exists from v4 on).
 pub const DICT_MIN_PROTO: u16 = 4;
+
+/// Lowest protocol revision that understands trace-context envelopes.
+pub const TRACE_MIN_PROTO: u16 = 4;
+
+/// The trace-context decision, symmetric like [`dict_agreed`]:
+/// min-revision agreement plus the intersection of the capability
+/// bitmaps. Unknown bits are ignored, never rejected.
+pub fn trace_agreed(local_proto: u16, local_caps: u32, peer_proto: u16, peer_caps: u32) -> bool {
+    peer_proto.min(local_proto) >= TRACE_MIN_PROTO
+        && (peer_caps & local_caps & CAP_TRACE_CTX) != 0
+}
 
 /// The frame codec a session negotiated. `None` is always legal; `Lz`
 /// flows only after both `Hello`s carried [`CAP_CODEC_LZ`].
@@ -694,6 +711,27 @@ mod tests {
         // The locally-scoped codec negotiation masks the same way.
         assert_eq!(codec_agreed_at(v, CAP_SESSION_DICT, v, all), Codec::None);
         assert_eq!(codec_agreed_at(3, all, v, all), Codec::None);
+    }
+
+    #[test]
+    fn trace_negotiation_needs_bit_and_revision_on_both_ends() {
+        let v = PROTO_VERSION;
+        let all = SUPPORTED_CAPS;
+        assert!(trace_agreed(v, all, v, all));
+        // Unknown high bits are ignored, never rejected.
+        assert!(trace_agreed(v, all, v, 0xFFFF_FFFF));
+        // Either side withholding the bit disables the envelope.
+        assert!(!trace_agreed(v, all, v, all & !CAP_TRACE_CTX));
+        assert!(!trace_agreed(v, all & !CAP_TRACE_CTX, v, all));
+        // A pre-v4 peer has no caps bitmap at all.
+        assert!(!trace_agreed(v, all, 3, all));
+        assert!(!trace_agreed(3, all, v, all));
+        // A future peer lands on our revision's answer.
+        assert!(trace_agreed(v, all, u16::MAX, all | 0xF0));
+        // Orthogonal to dict/codec: trace-only caps give trace only.
+        assert!(trace_agreed(v, CAP_TRACE_CTX, v, CAP_TRACE_CTX));
+        assert!(!dict_agreed(v, CAP_TRACE_CTX, v, CAP_TRACE_CTX));
+        assert_eq!(codec_agreed_at(v, CAP_TRACE_CTX, v, CAP_TRACE_CTX), Codec::None);
     }
 
     /// A v3-shaped Hello (no caps field) decodes on a v4 build, and a

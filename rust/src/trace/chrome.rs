@@ -1,0 +1,188 @@
+//! Chrome trace-event JSON export (Perfetto / `chrome://tracing`).
+//!
+//! Maps the merged session timeline onto the trace-event format's
+//! object form: paired begin/end events become complete ("X") slices in
+//! virtual-time µs, counters become "C" samples, instants become "i"
+//! markers. `pid` is the session id and `tid` the endpoint lane
+//! (1 = phone, 2 = clone), so one session renders as a single process
+//! with a track per endpoint; thread-name metadata events label the
+//! lanes. Wall-clock stamps and trip numbers ride in `args`.
+
+use super::{Endpoint, Event, EventKind};
+use crate::util::json::{emit, Json};
+
+fn base_args(ev: &Event) -> Vec<(&'static str, Json)> {
+    vec![
+        ("trip", Json::from(ev.trip as i64)),
+        ("wall_us", Json::from(ev.wall_us as i64)),
+    ]
+}
+
+fn thread_meta(pid: u64, endpoint: Endpoint) -> Json {
+    Json::obj(vec![
+        ("ph", "M".into()),
+        ("name", "thread_name".into()),
+        ("pid", Json::from(pid as i64)),
+        ("tid", Json::from(endpoint.tid() as i64)),
+        (
+            "args",
+            Json::obj(vec![("name", endpoint.name().into())]),
+        ),
+    ])
+}
+
+/// Build a trace-event JSON document from a merged event timeline.
+pub fn chrome_trace(session_id: u64, events: &[Event]) -> Json {
+    let pid = session_id as i64;
+    let mut out: Vec<Json> = vec![
+        thread_meta(session_id, Endpoint::Phone),
+        thread_meta(session_id, Endpoint::Clone),
+    ];
+    // Open begins per (endpoint, trip, phase), matched LIFO.
+    let mut open: Vec<(&Event, u8)> = Vec::new();
+    for ev in events {
+        match &ev.kind {
+            EventKind::Begin(p) => open.push((ev, p.as_u8())),
+            EventKind::End(p) => {
+                let key = p.as_u8();
+                if let Some(i) = open.iter().rposition(|&(b, ph)| {
+                    ph == key && b.endpoint == ev.endpoint && b.trip == ev.trip
+                }) {
+                    let (b, _) = open.remove(i);
+                    let mut args = base_args(b);
+                    args.push((
+                        "wall_dur_us",
+                        Json::from(ev.wall_us.saturating_sub(b.wall_us) as i64),
+                    ));
+                    out.push(Json::obj(vec![
+                        ("ph", "X".into()),
+                        ("name", p.name().into()),
+                        ("cat", if p.is_clone_side() { "clone" } else { "phone" }.into()),
+                        ("pid", Json::from(pid)),
+                        ("tid", Json::from(ev.endpoint.tid() as i64)),
+                        ("ts", Json::from(b.virt_us)),
+                        ("dur", Json::from((ev.virt_us - b.virt_us).max(0.0))),
+                        ("args", Json::obj(args)),
+                    ]));
+                }
+            }
+            EventKind::Counter(c, v) => {
+                out.push(Json::obj(vec![
+                    ("ph", "C".into()),
+                    ("name", c.name().into()),
+                    ("pid", Json::from(pid)),
+                    ("tid", Json::from(ev.endpoint.tid() as i64)),
+                    ("ts", Json::from(ev.virt_us)),
+                    ("args", Json::obj(vec![(c.name(), Json::from(*v))])),
+                ]));
+            }
+            EventKind::Instant(m) => {
+                out.push(Json::obj(vec![
+                    ("ph", "i".into()),
+                    ("s", "t".into()),
+                    ("name", m.name().into()),
+                    ("pid", Json::from(pid)),
+                    ("tid", Json::from(ev.endpoint.tid() as i64)),
+                    ("ts", Json::from(ev.virt_us)),
+                    ("args", Json::obj(base_args(ev))),
+                ]));
+            }
+            EventKind::Decision(d) => {
+                out.push(Json::obj(vec![
+                    ("ph", "i".into()),
+                    ("s", "t".into()),
+                    (
+                        "name",
+                        if d.mispredicted {
+                            "decide:mispredicted"
+                        } else {
+                            "decide"
+                        }
+                        .into(),
+                    ),
+                    ("pid", Json::from(pid)),
+                    ("tid", Json::from(ev.endpoint.tid() as i64)),
+                    ("ts", Json::from(ev.virt_us)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("trip", Json::from(ev.trip as i64)),
+                            ("offloaded", Json::from(d.offloaded)),
+                            ("predicted_local_ms", Json::from(d.predicted_local_ms)),
+                            ("predicted_offload_ms", Json::from(d.predicted_offload_ms)),
+                            (
+                                "predicted_fwd_bytes",
+                                Json::from(d.predicted_fwd_bytes as i64),
+                            ),
+                            ("actual_ms", Json::from(d.actual_ms)),
+                            ("mispredicted", Json::from(d.mispredicted)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+    }
+    Json::obj(vec![
+        ("displayTimeUnit", "ms".into()),
+        ("traceEvents", Json::Arr(out)),
+    ])
+}
+
+/// Emit the document as a JSON string.
+pub fn chrome_trace_string(session_id: u64, events: &[Event]) -> String {
+    emit(&chrome_trace(session_id, events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Counter, Mark, Phase, Tracer};
+    use crate::util::json::parse;
+
+    #[test]
+    fn export_is_valid_and_has_both_lanes() {
+        let mut t = Tracer::new(0x5E55, Endpoint::Phone, 128);
+        t.span(0, Phase::Capture, 0.0, 150.0);
+        t.span(0, Phase::Uplink, 150.0, 400.0);
+        t.counter(0, Counter::BytesUp, 2048.0, 400.0);
+        t.instant(0, Mark::Heartbeat, 500.0);
+        let mut clone = Tracer::new(0x5E55, Endpoint::Clone, 128);
+        clone.span(0, Phase::CloneExec, 400.0, 900.0);
+        t.absorb_remote(clone.events_since(0));
+
+        let text = chrome_trace_string(0x5E55, &t.events().cloned().collect::<Vec<_>>());
+        let doc = parse(&text).expect("export must be valid JSON");
+        assert_eq!(doc.get("displayTimeUnit").as_str(), Some("ms"));
+        let evs = doc.get("traceEvents").as_arr().expect("traceEvents array");
+        // 2 thread metas + 3 slices + 1 counter + 1 instant.
+        assert_eq!(evs.len(), 7);
+        let tids: Vec<i64> = evs
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .map(|e| e.get("tid").as_i64().unwrap())
+            .collect();
+        assert!(tids.contains(&1) && tids.contains(&2), "both lanes present");
+        let cap = evs
+            .iter()
+            .find(|e| e.get("name").as_str() == Some("capture"))
+            .unwrap();
+        assert_eq!(cap.get("dur").as_f64(), Some(150.0));
+        assert_eq!(cap.get("pid").as_i64(), Some(0x5E55));
+    }
+
+    #[test]
+    fn unmatched_begin_is_dropped_not_panicked() {
+        let mut t = Tracer::new(1, Endpoint::Phone, 16);
+        t.begin(0, Phase::Merge, 10.0);
+        let text = chrome_trace_string(1, &t.events().cloned().collect::<Vec<_>>());
+        let doc = parse(&text).unwrap();
+        let slices = doc
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .count();
+        assert_eq!(slices, 0);
+    }
+}

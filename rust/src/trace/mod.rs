@@ -1,0 +1,801 @@
+//! Session flight recorder: phase-level distributed tracing.
+//!
+//! CloneCloud's evaluation explains every speedup as a phase breakdown —
+//! suspend, capture, transfer, clone execution, merge, resume (§6,
+//! Fig. 10). This module records that breakdown live: a bounded
+//! ring-buffer of typed events ([`Event`]) stamped with both
+//! virtual-clock µs (the simulated device/network time everything else
+//! in the runtime is charged in) and wall µs (real host time, for
+//! profiling the runtime itself).
+//!
+//! Design points, matching the codebase style:
+//!
+//! - **No globals.** An explicit [`Tracer`] handle is threaded through
+//!   the exec driver, migration, CloneServer and farm workers. Code that
+//!   doesn't trace passes [`Tracer::disabled()`].
+//! - **Zero-cost disabled path.** Every record method early-returns on a
+//!   single bool; a disabled tracer allocates nothing.
+//! - **Bounded.** The ring holds `capacity` events; older events are
+//!   dropped (counted in [`Tracer::dropped`]) rather than growing
+//!   without bound — this is a flight recorder, not a log.
+//! - **Observe-only.** Tracing must never change execution *results*.
+//!   The wire context does add bytes to the (virtual-time-charged)
+//!   link, but application state, migration counts and fallback
+//!   behaviour are bit-identical with tracing on or off — enforced by
+//!   test.
+//!
+//! Cross-endpoint causality lives in [`wire`]: a session-id + trip-seq +
+//! parent-span context rides in front of the forward capsule (behind the
+//! `CAP_TRACE_CTX` Hello capability bit), and the clone's own phase
+//! events ship back piggybacked on the reverse capsule so one merged
+//! timeline covers both endpoints. [`chrome`] exports that timeline as
+//! Chrome trace-event JSON (load in Perfetto / `chrome://tracing`).
+
+pub mod chrome;
+pub mod wire;
+
+pub use chrome::{chrome_trace, chrome_trace_string};
+pub use wire::{
+    prepend_ctx, prepend_events, split_ctx, split_events, TraceCtx, FLAG_WANT_CLONE_EVENTS,
+    TRACE_CTX_LEN,
+};
+
+use crate::util::stats::LogHistogram;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Which endpoint recorded an event. Becomes the `tid` lane in the
+/// Chrome export, so phone and clone spans stack under one session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Endpoint {
+    Phone,
+    Clone,
+}
+
+impl Endpoint {
+    pub fn name(self) -> &'static str {
+        match self {
+            Endpoint::Phone => "phone",
+            Endpoint::Clone => "clone",
+        }
+    }
+    pub fn tid(self) -> u32 {
+        match self {
+            Endpoint::Phone => 1,
+            Endpoint::Clone => 2,
+        }
+    }
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Endpoint::Phone => 0,
+            Endpoint::Clone => 1,
+        }
+    }
+    pub fn from_u8(v: u8) -> Option<Endpoint> {
+        match v {
+            0 => Some(Endpoint::Phone),
+            1 => Some(Endpoint::Clone),
+            _ => None,
+        }
+    }
+}
+
+/// Offload phases, the span vocabulary of the recorder. Phone-side
+/// phases mirror the paper's breakdown; `Clone*` phases are recorded at
+/// the other endpoint and merged into the same timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Policy evaluation for one invocation (phone).
+    Decide,
+    /// Thread suspend at the migration point (phone).
+    Suspend,
+    /// Capture: heap/stack walk into the capsule (phone).
+    Capture,
+    /// Frame encode + optional compression (phone).
+    Encode,
+    /// Forward transfer on the virtual link (phone).
+    Uplink,
+    /// The phone-side wait while the clone works (phone).
+    CloneTrip,
+    /// Reverse transfer on the virtual link (phone).
+    Downlink,
+    /// Reintegration merge back into the phone process (phone).
+    Merge,
+    /// Local (non-offloaded) execution of the partition (phone).
+    LocalExec,
+    /// Frame decode + decompression at the clone.
+    CloneDecode,
+    /// Merge of the forward capsule into the clone process.
+    CloneMerge,
+    /// The offloaded partition running at the clone.
+    CloneExec,
+    /// Reverse capture at the clone.
+    CloneCapture,
+    /// Reverse frame encode at the clone.
+    CloneEncode,
+    /// Digest-heartbeat roundtrip on the virtual link (phone).
+    Heartbeat,
+}
+
+/// All phases, for aggregation sweeps.
+pub const PHASES: [Phase; 15] = [
+    Phase::Decide,
+    Phase::Suspend,
+    Phase::Capture,
+    Phase::Encode,
+    Phase::Uplink,
+    Phase::CloneTrip,
+    Phase::Downlink,
+    Phase::Merge,
+    Phase::LocalExec,
+    Phase::CloneDecode,
+    Phase::CloneMerge,
+    Phase::CloneExec,
+    Phase::CloneCapture,
+    Phase::CloneEncode,
+    Phase::Heartbeat,
+];
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Decide => "decide",
+            Phase::Suspend => "suspend",
+            Phase::Capture => "capture",
+            Phase::Encode => "encode",
+            Phase::Uplink => "uplink",
+            Phase::CloneTrip => "clone_trip",
+            Phase::Downlink => "downlink",
+            Phase::Merge => "merge",
+            Phase::LocalExec => "local_exec",
+            Phase::CloneDecode => "clone_decode",
+            Phase::CloneMerge => "clone_merge",
+            Phase::CloneExec => "clone_exec",
+            Phase::CloneCapture => "clone_capture",
+            Phase::CloneEncode => "clone_encode",
+            Phase::Heartbeat => "heartbeat",
+        }
+    }
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Phase::Decide => 0,
+            Phase::Suspend => 1,
+            Phase::Capture => 2,
+            Phase::Encode => 3,
+            Phase::Uplink => 4,
+            Phase::CloneTrip => 5,
+            Phase::Downlink => 6,
+            Phase::Merge => 7,
+            Phase::LocalExec => 8,
+            Phase::CloneDecode => 9,
+            Phase::CloneMerge => 10,
+            Phase::CloneExec => 11,
+            Phase::CloneCapture => 12,
+            Phase::CloneEncode => 13,
+            Phase::Heartbeat => 14,
+        }
+    }
+    pub fn from_u8(v: u8) -> Option<Phase> {
+        PHASES.get(v as usize).copied()
+    }
+    /// Phases recorded at the clone endpoint.
+    pub fn is_clone_side(self) -> bool {
+        matches!(
+            self,
+            Phase::CloneDecode
+                | Phase::CloneMerge
+                | Phase::CloneExec
+                | Phase::CloneCapture
+                | Phase::CloneEncode
+        )
+    }
+}
+
+/// Named scalar counters attached to a trip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Counter {
+    BytesUp,
+    BytesDown,
+    ObjectsShipped,
+    PagesDirty,
+    Instrs,
+    DictHitBytes,
+}
+
+pub const COUNTERS: [Counter; 6] = [
+    Counter::BytesUp,
+    Counter::BytesDown,
+    Counter::ObjectsShipped,
+    Counter::PagesDirty,
+    Counter::Instrs,
+    Counter::DictHitBytes,
+];
+
+impl Counter {
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::BytesUp => "bytes_up",
+            Counter::BytesDown => "bytes_down",
+            Counter::ObjectsShipped => "objects_shipped",
+            Counter::PagesDirty => "pages_dirty",
+            Counter::Instrs => "instrs",
+            Counter::DictHitBytes => "dict_hit_bytes",
+        }
+    }
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Counter::BytesUp => 0,
+            Counter::BytesDown => 1,
+            Counter::ObjectsShipped => 2,
+            Counter::PagesDirty => 3,
+            Counter::Instrs => 4,
+            Counter::DictHitBytes => 5,
+        }
+    }
+    pub fn from_u8(v: u8) -> Option<Counter> {
+        COUNTERS.get(v as usize).copied()
+    }
+}
+
+/// Point-in-time markers (no duration).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Mark {
+    /// Delta capsule rejected by the clone; full-recapture fallback.
+    NeedFull,
+    /// Session dictionary reset.
+    DictReset,
+    /// Heartbeat digest diverged.
+    HeartbeatDivergent,
+    /// Offload attempt degraded to local execution.
+    Degrade,
+    /// Idle heartbeat probe sent.
+    Heartbeat,
+    /// Mobile-side GC ran during capture.
+    MobileGc,
+}
+
+pub const MARKS: [Mark; 6] = [
+    Mark::NeedFull,
+    Mark::DictReset,
+    Mark::HeartbeatDivergent,
+    Mark::Degrade,
+    Mark::Heartbeat,
+    Mark::MobileGc,
+];
+
+impl Mark {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mark::NeedFull => "need_full",
+            Mark::DictReset => "dict_reset",
+            Mark::HeartbeatDivergent => "heartbeat_divergent",
+            Mark::Degrade => "degrade",
+            Mark::Heartbeat => "heartbeat",
+            Mark::MobileGc => "mobile_gc",
+        }
+    }
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Mark::NeedFull => 0,
+            Mark::DictReset => 1,
+            Mark::HeartbeatDivergent => 2,
+            Mark::Degrade => 3,
+            Mark::Heartbeat => 4,
+            Mark::MobileGc => 5,
+        }
+    }
+    pub fn from_u8(v: u8) -> Option<Mark> {
+        MARKS.get(v as usize).copied()
+    }
+}
+
+/// A policy decision record: the predicted per-term costs next to what
+/// actually happened, so every misprediction is explainable post-hoc.
+/// Decision events are phone-only; they never cross the wire envelope
+/// in practice (the clone has no policy engine) but encode fine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecisionEvent {
+    pub offloaded: bool,
+    /// Predicted local cost (ms) at decision time.
+    pub predicted_local_ms: f64,
+    /// Predicted offload cost (ms) at decision time.
+    pub predicted_offload_ms: f64,
+    /// Predicted forward payload (bytes) at decision time.
+    pub predicted_fwd_bytes: u64,
+    /// Measured cost (ms) of the path actually taken.
+    pub actual_ms: f64,
+    /// Whether post-hoc scoring judged the choice wrong.
+    pub mispredicted: bool,
+}
+
+/// Event payloads.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    Begin(Phase),
+    End(Phase),
+    Counter(Counter, f64),
+    Instant(Mark),
+    Decision(DecisionEvent),
+}
+
+/// One recorded event. `virt_us` is virtual-clock time (comparable
+/// across endpoints — the clone runs on the phone's shipped clock);
+/// `wall_us` is host wall time since the recording tracer's epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub endpoint: Endpoint,
+    pub trip: u32,
+    pub virt_us: f64,
+    pub wall_us: u64,
+    pub kind: EventKind,
+}
+
+/// Bounded flight recorder. Construct with [`Tracer::new`] to record or
+/// [`Tracer::disabled`] for the zero-cost pass-through.
+#[derive(Debug)]
+pub struct Tracer {
+    enabled: bool,
+    session_id: u64,
+    endpoint: Endpoint,
+    ship_clone_events: bool,
+    capacity: usize,
+    ring: VecDeque<Event>,
+    seq: u64,
+    dropped: u64,
+    epoch: Instant,
+}
+
+impl Tracer {
+    /// An enabled recorder with the given ring capacity (min 16).
+    pub fn new(session_id: u64, endpoint: Endpoint, capacity: usize) -> Tracer {
+        let capacity = capacity.max(16);
+        Tracer {
+            enabled: true,
+            session_id,
+            endpoint,
+            ship_clone_events: true,
+            capacity,
+            ring: VecDeque::with_capacity(capacity),
+            seq: 0,
+            dropped: 0,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// The zero-cost path: every record method returns immediately and
+    /// nothing is ever allocated.
+    pub fn disabled() -> Tracer {
+        Tracer {
+            enabled: false,
+            session_id: 0,
+            endpoint: Endpoint::Phone,
+            ship_clone_events: false,
+            capacity: 0,
+            ring: VecDeque::new(),
+            seq: 0,
+            dropped: 0,
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+    pub fn session_id(&self) -> u64 {
+        self.session_id
+    }
+    pub fn endpoint(&self) -> Endpoint {
+        self.endpoint
+    }
+    /// Whether the phone side asks the clone to ship its events back.
+    pub fn ship_clone_events(&self) -> bool {
+        self.enabled && self.ship_clone_events
+    }
+    pub fn set_ship_clone_events(&mut self, ship: bool) {
+        self.ship_clone_events = ship;
+    }
+
+    /// Events recorded so far (oldest first), ring-bounded.
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.ring.iter()
+    }
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+    /// Events evicted by the ring bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Wall µs since this tracer's construction.
+    fn wall_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn push(&mut self, trip: u32, virt_us: f64, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let wall = self.wall_us();
+        self.push_at(trip, virt_us, wall, kind);
+    }
+
+    fn push_at(&mut self, trip: u32, virt_us: f64, wall_us: u64, kind: EventKind) {
+        if !self.enabled {
+            return;
+        }
+        let ev = Event {
+            seq: self.seq,
+            endpoint: self.endpoint,
+            trip,
+            virt_us,
+            wall_us,
+            kind,
+        };
+        self.seq += 1;
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    pub fn begin(&mut self, trip: u32, phase: Phase, virt_us: f64) {
+        self.push(trip, virt_us, EventKind::Begin(phase));
+    }
+
+    pub fn end(&mut self, trip: u32, phase: Phase, virt_us: f64) {
+        self.push(trip, virt_us, EventKind::End(phase));
+    }
+
+    /// Record a whole span from its virtual endpoints — used when the
+    /// duration was measured elsewhere (e.g. `MigrationPhases`) and is
+    /// being reconstructed onto the timeline after the fact.
+    pub fn span(&mut self, trip: u32, phase: Phase, start_virt_us: f64, end_virt_us: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.begin(trip, phase, start_virt_us);
+        self.end(trip, phase, end_virt_us.max(start_virt_us));
+    }
+
+    /// Record a span that sits at a single point of virtual time but
+    /// took `wall_dur_us` of measured wall time — decode/encode work
+    /// that is not charged to the virtual clock.
+    pub fn span_wall(&mut self, trip: u32, phase: Phase, virt_us: f64, wall_dur_us: u64) {
+        if !self.enabled {
+            return;
+        }
+        let now = self.wall_us();
+        self.push_at(
+            trip,
+            virt_us,
+            now.saturating_sub(wall_dur_us),
+            EventKind::Begin(phase),
+        );
+        self.push_at(trip, virt_us, now, EventKind::End(phase));
+    }
+
+    pub fn counter(&mut self, trip: u32, c: Counter, value: f64, virt_us: f64) {
+        self.push(trip, virt_us, EventKind::Counter(c, value));
+    }
+
+    pub fn instant(&mut self, trip: u32, m: Mark, virt_us: f64) {
+        self.push(trip, virt_us, EventKind::Instant(m));
+    }
+
+    pub fn decision(&mut self, trip: u32, d: DecisionEvent, virt_us: f64) {
+        self.push(trip, virt_us, EventKind::Decision(d));
+    }
+
+    /// A watermark for [`Tracer::events_since`] — take it before a unit
+    /// of work to collect exactly that work's events afterwards.
+    pub fn mark(&self) -> u64 {
+        self.seq
+    }
+
+    /// Events with `seq >= mark` (clones; the ring keeps its copy).
+    pub fn events_since(&self, mark: u64) -> Vec<Event> {
+        self.ring
+            .iter()
+            .filter(|e| e.seq >= mark)
+            .cloned()
+            .collect()
+    }
+
+    /// Merge events recorded at the other endpoint (decoded off the
+    /// reverse capsule) into this timeline. Remote virtual stamps are
+    /// kept verbatim — the clone ran on the phone's shipped virtual
+    /// clock, so they are directly comparable; remote wall stamps are
+    /// kept too but belong to the remote host's epoch. Each absorbed
+    /// event gets a fresh local `seq` and counts against the ring bound.
+    pub fn absorb_remote(&mut self, events: Vec<Event>) {
+        if !self.enabled {
+            return;
+        }
+        for mut ev in events {
+            ev.seq = self.seq;
+            self.seq += 1;
+            if self.ring.len() == self.capacity {
+                self.ring.pop_front();
+                self.dropped += 1;
+            }
+            self.ring.push_back(ev);
+        }
+    }
+
+    /// Aggregate the ring into per-phase percentile summaries.
+    pub fn report(&self) -> TraceReport {
+        TraceReport::from_events(self.session_id, self.dropped, self.ring.iter())
+    }
+}
+
+/// Per-(endpoint, phase) streaming summary.
+#[derive(Debug, Clone)]
+pub struct PhaseSummary {
+    pub endpoint: Endpoint,
+    pub phase: Phase,
+    pub hist: LogHistogram,
+}
+
+/// Aggregated view of a trace: per-phase virtual-duration histograms
+/// (ms), plus counter totals and instant counts. This is the shape
+/// `MetricsSnapshot::absorb_trace` consumes.
+#[derive(Debug, Clone, Default)]
+pub struct TraceReport {
+    pub session_id: u64,
+    pub events: u64,
+    pub dropped: u64,
+    pub phases: Vec<PhaseSummary>,
+    /// (counter, total) in event order of first appearance.
+    pub counters: Vec<(Counter, f64)>,
+    /// (mark, occurrences).
+    pub instants: Vec<(Mark, u64)>,
+    pub decisions: u64,
+    pub mispredictions: u64,
+}
+
+impl TraceReport {
+    pub fn from_events<'a, I>(session_id: u64, dropped: u64, events: I) -> TraceReport
+    where
+        I: Iterator<Item = &'a Event>,
+    {
+        let mut rep = TraceReport {
+            session_id,
+            dropped,
+            ..TraceReport::default()
+        };
+        // Open-span stack per (endpoint, trip, phase). Spans of one
+        // phase never nest in practice; a Vec handles it if they do.
+        let mut open: Vec<(Endpoint, u32, Phase, f64)> = Vec::new();
+        for ev in events {
+            rep.events += 1;
+            match &ev.kind {
+                EventKind::Begin(p) => {
+                    open.push((ev.endpoint, ev.trip, *p, ev.virt_us));
+                }
+                EventKind::End(p) => {
+                    if let Some(i) = open
+                        .iter()
+                        .rposition(|&(e, t, ph, _)| e == ev.endpoint && t == ev.trip && ph == *p)
+                    {
+                        let (_, _, _, start) = open.remove(i);
+                        let dur_ms = (ev.virt_us - start).max(0.0) / 1000.0;
+                        rep.phase_mut(ev.endpoint, *p).hist.record(dur_ms);
+                    }
+                }
+                EventKind::Counter(c, v) => {
+                    match rep.counters.iter_mut().find(|(k, _)| k == c) {
+                        Some((_, total)) => *total += v,
+                        None => rep.counters.push((*c, *v)),
+                    }
+                }
+                EventKind::Instant(m) => match rep.instants.iter_mut().find(|(k, _)| k == m) {
+                    Some((_, n)) => *n += 1,
+                    None => rep.instants.push((*m, 1)),
+                },
+                EventKind::Decision(d) => {
+                    rep.decisions += 1;
+                    if d.mispredicted {
+                        rep.mispredictions += 1;
+                    }
+                }
+            }
+        }
+        rep
+    }
+
+    fn phase_mut(&mut self, endpoint: Endpoint, phase: Phase) -> &mut PhaseSummary {
+        if let Some(i) = self
+            .phases
+            .iter()
+            .position(|s| s.endpoint == endpoint && s.phase == phase)
+        {
+            return &mut self.phases[i];
+        }
+        self.phases.push(PhaseSummary {
+            endpoint,
+            phase,
+            hist: LogHistogram::new(),
+        });
+        self.phases.last_mut().unwrap()
+    }
+
+    pub fn phase(&self, endpoint: Endpoint, phase: Phase) -> Option<&PhaseSummary> {
+        self.phases
+            .iter()
+            .find(|s| s.endpoint == endpoint && s.phase == phase)
+    }
+}
+
+/// Fraction of trip virtual time covered by phone-side phase spans:
+/// `sum(span durations) / sum(trip window lengths)` over all trips that
+/// have at least one phone-side span. Phone phases are sequential and
+/// non-overlapping (the clone's work happens inside `CloneTrip`), so a
+/// well-instrumented driver approaches 1.0; the acceptance bar is 0.95.
+pub fn phone_coverage(events: &[Event]) -> f64 {
+    // Paired (start, end) per completed phone-side span, keyed by trip.
+    let mut open: Vec<(u32, Phase, f64)> = Vec::new();
+    // trip -> (window_lo, window_hi, covered)
+    let mut trips: Vec<(u32, f64, f64, f64)> = Vec::new();
+    for ev in events {
+        if ev.endpoint != Endpoint::Phone {
+            continue;
+        }
+        match &ev.kind {
+            EventKind::Begin(p) => open.push((ev.trip, *p, ev.virt_us)),
+            EventKind::End(p) => {
+                if let Some(i) = open
+                    .iter()
+                    .rposition(|&(t, ph, _)| t == ev.trip && ph == *p)
+                {
+                    let (trip, phase, start) = open.remove(i);
+                    // Decide overlaps nothing by construction but is
+                    // instantaneous in virtual time; include it anyway.
+                    let _ = phase;
+                    let dur = (ev.virt_us - start).max(0.0);
+                    match trips.iter_mut().find(|(t, ..)| *t == trip) {
+                        Some((_, lo, hi, cov)) => {
+                            *lo = lo.min(start);
+                            *hi = hi.max(ev.virt_us);
+                            *cov += dur;
+                        }
+                        None => trips.push((trip, start, ev.virt_us, dur)),
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    let window: f64 = trips.iter().map(|(_, lo, hi, _)| hi - lo).sum();
+    let covered: f64 = trips.iter().map(|(_, _, _, c)| c).sum();
+    if window <= 0.0 {
+        return if covered >= 0.0 && !trips.is_empty() {
+            1.0
+        } else {
+            0.0
+        };
+    }
+    (covered / window).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        t.begin(0, Phase::Capture, 0.0);
+        t.end(0, Phase::Capture, 10.0);
+        t.counter(0, Counter::BytesUp, 100.0, 10.0);
+        t.instant(0, Mark::NeedFull, 10.0);
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert!(!t.ship_clone_events());
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let mut t = Tracer::new(7, Endpoint::Phone, 16);
+        for i in 0..40 {
+            t.instant(i, Mark::Heartbeat, i as f64);
+        }
+        assert_eq!(t.len(), 16);
+        assert_eq!(t.dropped(), 24);
+        // Oldest surviving event is seq 24.
+        assert_eq!(t.events().next().unwrap().seq, 24);
+    }
+
+    #[test]
+    fn report_pairs_spans_and_aggregates() {
+        let mut t = Tracer::new(1, Endpoint::Phone, 64);
+        for trip in 0..10u32 {
+            let base = trip as f64 * 1000.0;
+            t.span(trip, Phase::Capture, base, base + 200.0);
+            t.span(trip, Phase::Uplink, base + 200.0, base + 700.0);
+            t.counter(trip, Counter::BytesUp, 64.0, base + 700.0);
+        }
+        t.instant(0, Mark::NeedFull, 5.0);
+        let rep = t.report();
+        let cap = rep.phase(Endpoint::Phone, Phase::Capture).unwrap();
+        assert_eq!(cap.hist.count(), 10);
+        assert!((cap.hist.p50() - 0.2).abs() / 0.2 < 0.1, "p50 ~0.2ms");
+        let up = rep.phase(Endpoint::Phone, Phase::Uplink).unwrap();
+        assert!((up.hist.mean() - 0.5).abs() / 0.5 < 0.1);
+        assert_eq!(rep.counters, vec![(Counter::BytesUp, 640.0)]);
+        assert_eq!(rep.instants, vec![(Mark::NeedFull, 1)]);
+    }
+
+    #[test]
+    fn events_since_mark_isolates_new_work() {
+        let mut t = Tracer::new(1, Endpoint::Clone, 64);
+        t.span(0, Phase::CloneExec, 0.0, 10.0);
+        let m = t.mark();
+        t.span(1, Phase::CloneExec, 20.0, 30.0);
+        let evs = t.events_since(m);
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().all(|e| e.trip == 1));
+    }
+
+    #[test]
+    fn absorb_remote_merges_clone_timeline() {
+        let mut phone = Tracer::new(9, Endpoint::Phone, 64);
+        phone.span(0, Phase::Uplink, 0.0, 100.0);
+        let mut clone = Tracer::new(9, Endpoint::Clone, 64);
+        clone.span(0, Phase::CloneExec, 100.0, 400.0);
+        phone.absorb_remote(clone.events_since(0));
+        let rep = phone.report();
+        assert!(rep.phase(Endpoint::Phone, Phase::Uplink).is_some());
+        let ce = rep.phase(Endpoint::Clone, Phase::CloneExec).unwrap();
+        assert!((ce.hist.mean() - 0.3).abs() < 0.05);
+        // Fresh local seqs, monotone.
+        let seqs: Vec<u64> = phone.events().map(|e| e.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn coverage_full_and_partial() {
+        let mut t = Tracer::new(1, Endpoint::Phone, 64);
+        // Trip 0: spans tile [0, 100] fully.
+        t.span(0, Phase::Capture, 0.0, 40.0);
+        t.span(0, Phase::Uplink, 40.0, 100.0);
+        let evs: Vec<Event> = t.events().cloned().collect();
+        assert!((phone_coverage(&evs) - 1.0).abs() < 1e-9);
+        // Trip 1: a 50% hole.
+        t.span(1, Phase::Capture, 200.0, 250.0);
+        t.span(1, Phase::Merge, 300.0, 300.0);
+        let evs: Vec<Event> = t.events().cloned().collect();
+        let cov = phone_coverage(&evs);
+        assert!(cov > 0.7 && cov < 0.8, "got {cov}");
+    }
+
+    #[test]
+    fn decision_misprediction_tallies() {
+        let mut t = Tracer::new(1, Endpoint::Phone, 64);
+        let d = DecisionEvent {
+            offloaded: true,
+            predicted_local_ms: 10.0,
+            predicted_offload_ms: 4.0,
+            predicted_fwd_bytes: 512,
+            actual_ms: 12.0,
+            mispredicted: true,
+        };
+        t.decision(0, d, 0.0);
+        t.decision(
+            1,
+            DecisionEvent {
+                mispredicted: false,
+                ..d
+            },
+            1.0,
+        );
+        let rep = t.report();
+        assert_eq!(rep.decisions, 2);
+        assert_eq!(rep.mispredictions, 1);
+    }
+}

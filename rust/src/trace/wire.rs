@@ -1,0 +1,455 @@
+//! Trace context and event piggybacking on the migration wire.
+//!
+//! Both envelopes sit *inside* the sealed frame, in front of the capsule
+//! bytes, and are self-describing by magic — a receiver that was not
+//! told to expect one still parses the payload correctly, and a payload
+//! without one passes through untouched (`split_*` returns the input
+//! unchanged). Presence is negotiated by the `CAP_TRACE_CTX` Hello bit
+//! (proto >= 4); per the PR 3 invariant the bit is ignored by older
+//! peers, and these envelopes are never attached unless both ends
+//! advertised it.
+//!
+//! Forward direction (phone → clone), fixed [`TRACE_CTX_LEN`] bytes:
+//!
+//! ```text
+//! magic "CCTC" (u32) | ver u8 | flags u8 | session_id u64 | trip u32 | parent_span u32
+//! ```
+//!
+//! Reverse direction (clone → phone): magic "CCTR" (u32) | ver u8 |
+//! length-prefixed event blob, then the reverse capsule. Event records
+//! are fixed-layout per kind; garbage input yields `Err`, never a panic
+//! (property-tested).
+
+use super::{Counter, DecisionEvent, Endpoint, Event, EventKind, Mark, Phase};
+use crate::error::{CloneCloudError, Result};
+use crate::util::bytes::{WireReader, WireWriter};
+
+/// "CCTC" — forward trace context.
+pub const TRACE_CTX_MAGIC: u32 = 0x4343_5443;
+/// "CCTR" — reverse trace event blob.
+pub const TRACE_EVT_MAGIC: u32 = 0x4343_5452;
+pub const TRACE_WIRE_VERSION: u8 = 1;
+
+/// Forward flag: the phone wants the clone's phase events shipped back.
+pub const FLAG_WANT_CLONE_EVENTS: u8 = 1;
+
+/// Encoded size of a forward context: magic + ver + flags + session_id +
+/// trip + parent_span.
+pub const TRACE_CTX_LEN: usize = 4 + 1 + 1 + 8 + 4 + 4;
+
+/// Minimum encoded size of one event record (an Instant):
+/// kind + endpoint + code + trip + virt + wall.
+const EVENT_MIN_LEN: usize = 1 + 1 + 1 + 4 + 8 + 8;
+
+/// Cross-endpoint causality context: identifies which session, trip and
+/// parent span a forward capsule belongs to, so the clone's events can
+/// be merged into the right place on the phone's timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub session_id: u64,
+    pub trip: u32,
+    /// Sequence number of the phone-side span this work nests under
+    /// (the `CloneTrip` begin event).
+    pub parent_span: u32,
+    pub flags: u8,
+}
+
+impl TraceCtx {
+    pub fn wants_clone_events(&self) -> bool {
+        self.flags & FLAG_WANT_CLONE_EVENTS != 0
+    }
+}
+
+fn encode_ctx(ctx: &TraceCtx, w: &mut WireWriter) {
+    w.put_u32(TRACE_CTX_MAGIC);
+    w.put_u8(TRACE_WIRE_VERSION);
+    w.put_u8(ctx.flags);
+    w.put_u64(ctx.session_id);
+    w.put_u32(ctx.trip);
+    w.put_u32(ctx.parent_span);
+}
+
+/// Attach a forward context in front of capsule bytes.
+pub fn prepend_ctx(ctx: &TraceCtx, capsule: &[u8]) -> Vec<u8> {
+    let mut w = WireWriter::with_capacity(TRACE_CTX_LEN + capsule.len());
+    encode_ctx(ctx, &mut w);
+    let mut out = w.into_vec();
+    out.extend_from_slice(capsule);
+    out
+}
+
+/// Split a forward payload into its optional context and the capsule
+/// bytes. A payload that does not start with the magic is returned
+/// whole with no context; a payload that *does* but is truncated or has
+/// an unknown version is an error (the magic is 4 bytes of a sealed,
+/// CRC-checked frame — a chance collision with capsule data cannot
+/// happen because capsules start with their own magic).
+pub fn split_ctx(buf: &[u8]) -> Result<(Option<TraceCtx>, &[u8])> {
+    if buf.len() < 4 {
+        return Ok((None, buf));
+    }
+    let magic = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if magic != TRACE_CTX_MAGIC {
+        return Ok((None, buf));
+    }
+    let mut r = WireReader::new(&buf[4..]);
+    let ver = r.get_u8()?;
+    if ver != TRACE_WIRE_VERSION {
+        return Err(CloneCloudError::Wire(format!(
+            "trace ctx version {ver} unsupported"
+        )));
+    }
+    let flags = r.get_u8()?;
+    let session_id = r.get_u64()?;
+    let trip = r.get_u32()?;
+    let parent_span = r.get_u32()?;
+    Ok((
+        Some(TraceCtx {
+            session_id,
+            trip,
+            parent_span,
+            flags,
+        }),
+        &buf[TRACE_CTX_LEN..],
+    ))
+}
+
+fn encode_event(ev: &Event, w: &mut WireWriter) {
+    let (kind, code) = match &ev.kind {
+        EventKind::Begin(p) => (0u8, p.as_u8()),
+        EventKind::End(p) => (1, p.as_u8()),
+        EventKind::Counter(c, _) => (2, c.as_u8()),
+        EventKind::Instant(m) => (3, m.as_u8()),
+        EventKind::Decision(d) => (4, d.offloaded as u8),
+    };
+    w.put_u8(kind);
+    w.put_u8(ev.endpoint.as_u8());
+    w.put_u8(code);
+    w.put_u32(ev.trip);
+    w.put_f64(ev.virt_us);
+    w.put_u64(ev.wall_us);
+    match &ev.kind {
+        EventKind::Counter(_, v) => w.put_f64(*v),
+        EventKind::Decision(d) => {
+            w.put_u8(d.mispredicted as u8);
+            w.put_f64(d.predicted_local_ms);
+            w.put_f64(d.predicted_offload_ms);
+            w.put_u64(d.predicted_fwd_bytes);
+            w.put_f64(d.actual_ms);
+        }
+        _ => {}
+    }
+}
+
+fn decode_event(r: &mut WireReader) -> Result<Event> {
+    let kind = r.get_u8()?;
+    let endpoint = Endpoint::from_u8(r.get_u8()?)
+        .ok_or_else(|| CloneCloudError::Wire("bad trace endpoint".into()))?;
+    let code = r.get_u8()?;
+    let trip = r.get_u32()?;
+    let virt_us = r.get_f64()?;
+    let wall_us = r.get_u64()?;
+    let bad = |what: &str| CloneCloudError::Wire(format!("bad trace {what} code {code}"));
+    let kind = match kind {
+        0 => EventKind::Begin(Phase::from_u8(code).ok_or_else(|| bad("phase"))?),
+        1 => EventKind::End(Phase::from_u8(code).ok_or_else(|| bad("phase"))?),
+        2 => EventKind::Counter(
+            Counter::from_u8(code).ok_or_else(|| bad("counter"))?,
+            r.get_f64()?,
+        ),
+        3 => EventKind::Instant(Mark::from_u8(code).ok_or_else(|| bad("mark"))?),
+        4 => {
+            if code > 1 {
+                return Err(bad("decision"));
+            }
+            let mispredicted = r.get_u8()? != 0;
+            EventKind::Decision(DecisionEvent {
+                offloaded: code != 0,
+                mispredicted,
+                predicted_local_ms: r.get_f64()?,
+                predicted_offload_ms: r.get_f64()?,
+                predicted_fwd_bytes: r.get_u64()?,
+                actual_ms: r.get_f64()?,
+            })
+        }
+        k => {
+            return Err(CloneCloudError::Wire(format!(
+                "unknown trace event kind {k}"
+            )))
+        }
+    };
+    Ok(Event {
+        seq: 0, // reassigned by the absorbing tracer
+        endpoint,
+        trip,
+        virt_us,
+        wall_us,
+        kind,
+    })
+}
+
+/// Encode events into a standalone blob (no magic; used inside the
+/// reverse envelope and directly testable).
+pub fn encode_events(events: &[Event]) -> Vec<u8> {
+    let mut w = WireWriter::with_capacity(8 + events.len() * 32);
+    w.put_u32(events.len() as u32);
+    for ev in events {
+        encode_event(ev, &mut w);
+    }
+    w.into_vec()
+}
+
+/// Decode an event blob produced by [`encode_events`].
+pub fn decode_events(buf: &[u8]) -> Result<Vec<Event>> {
+    let mut r = WireReader::new(buf);
+    let n = r.get_u32()? as usize;
+    let n = r.checked_count(n, EVENT_MIN_LEN)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(decode_event(&mut r)?);
+    }
+    if !r.is_done() {
+        return Err(CloneCloudError::Wire(format!(
+            "{} trailing bytes after trace events",
+            r.remaining()
+        )));
+    }
+    Ok(out)
+}
+
+/// Attach a reverse event blob in front of the reverse capsule bytes.
+pub fn prepend_events(events: &[Event], capsule: &[u8]) -> Vec<u8> {
+    let blob = encode_events(events);
+    let mut w = WireWriter::with_capacity(4 + 1 + 4 + blob.len() + capsule.len());
+    w.put_u32(TRACE_EVT_MAGIC);
+    w.put_u8(TRACE_WIRE_VERSION);
+    w.put_bytes(&blob);
+    let mut out = w.into_vec();
+    out.extend_from_slice(capsule);
+    out
+}
+
+/// Split a reverse payload into piggybacked events (possibly none) and
+/// the capsule bytes. Same self-describing contract as [`split_ctx`].
+pub fn split_events(buf: &[u8]) -> Result<(Vec<Event>, &[u8])> {
+    if buf.len() < 4 {
+        return Ok((Vec::new(), buf));
+    }
+    let magic = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if magic != TRACE_EVT_MAGIC {
+        return Ok((Vec::new(), buf));
+    }
+    let mut r = WireReader::new(&buf[4..]);
+    let ver = r.get_u8()?;
+    if ver != TRACE_WIRE_VERSION {
+        return Err(CloneCloudError::Wire(format!(
+            "trace event version {ver} unsupported"
+        )));
+    }
+    let blob = r.get_bytes()?;
+    let events = decode_events(&blob)?;
+    let consumed = buf.len() - r.remaining();
+    Ok((events, &buf[consumed..]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{ensure, ensure_eq, forall, PropConfig};
+    use crate::util::rng::Rng;
+
+    fn arb_event(rng: &mut Rng) -> Event {
+        let endpoint = if rng.next_u64() % 2 == 0 {
+            Endpoint::Phone
+        } else {
+            Endpoint::Clone
+        };
+        let trip = (rng.next_u64() % 1000) as u32;
+        let virt_us = (rng.next_u64() % 1_000_000) as f64 / 3.0;
+        let wall_us = rng.next_u64() % 1_000_000;
+        let kind = match rng.next_u64() % 5 {
+            0 => EventKind::Begin(Phase::from_u8((rng.next_u64() % 15) as u8).unwrap()),
+            1 => EventKind::End(Phase::from_u8((rng.next_u64() % 15) as u8).unwrap()),
+            2 => EventKind::Counter(
+                Counter::from_u8((rng.next_u64() % 6) as u8).unwrap(),
+                (rng.next_u64() % 1_000_000) as f64,
+            ),
+            3 => EventKind::Instant(Mark::from_u8((rng.next_u64() % 6) as u8).unwrap()),
+            _ => EventKind::Decision(DecisionEvent {
+                offloaded: rng.next_u64() % 2 == 0,
+                mispredicted: rng.next_u64() % 2 == 0,
+                predicted_local_ms: (rng.next_u64() % 10_000) as f64 / 7.0,
+                predicted_offload_ms: (rng.next_u64() % 10_000) as f64 / 11.0,
+                predicted_fwd_bytes: rng.next_u64() % (1 << 20),
+                actual_ms: (rng.next_u64() % 10_000) as f64 / 13.0,
+            }),
+        };
+        Event {
+            seq: 0,
+            endpoint,
+            trip,
+            virt_us,
+            wall_us,
+            kind,
+        }
+    }
+
+    #[test]
+    fn ctx_roundtrip_and_passthrough() {
+        let ctx = TraceCtx {
+            session_id: 0xDEAD_BEEF_0042,
+            trip: 17,
+            parent_span: 99,
+            flags: FLAG_WANT_CLONE_EVENTS,
+        };
+        let capsule = b"CCAP-not-really-a-capsule".to_vec();
+        let buf = prepend_ctx(&ctx, &capsule);
+        assert_eq!(buf.len(), TRACE_CTX_LEN + capsule.len());
+        let (got, rest) = split_ctx(&buf).unwrap();
+        assert_eq!(got, Some(ctx));
+        assert!(got.unwrap().wants_clone_events());
+        assert_eq!(rest, &capsule[..]);
+        // No envelope → untouched.
+        let (none, rest) = split_ctx(&capsule).unwrap();
+        assert!(none.is_none());
+        assert_eq!(rest, &capsule[..]);
+        // Short buffers are fine too.
+        assert!(split_ctx(&[1, 2]).unwrap().0.is_none());
+    }
+
+    #[test]
+    fn events_roundtrip_with_capsule() {
+        let mut rng = Rng::new(42);
+        let events: Vec<Event> = (0..20).map(|_| arb_event(&mut rng)).collect();
+        let capsule = vec![0xAB; 300];
+        let buf = prepend_events(&events, &capsule);
+        let (got, rest) = split_events(&buf).unwrap();
+        assert_eq!(got, events);
+        assert_eq!(rest, &capsule[..]);
+        // Empty event list still frames correctly.
+        let buf = prepend_events(&[], &capsule);
+        let (got, rest) = split_events(&buf).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(rest, &capsule[..]);
+    }
+
+    #[test]
+    fn prop_event_blob_roundtrip() {
+        forall(
+            PropConfig::default(),
+            |rng| {
+                let n = (rng.next_u64() % 40) as usize;
+                (0..n).map(|_| arb_event(rng)).collect::<Vec<Event>>()
+            },
+            |events| {
+                let blob = encode_events(events);
+                let back = decode_events(&blob)
+                    .map_err(|e| format!("decode failed on own encoding: {e}"))?;
+                ensure_eq(back.len(), events.len(), "event count")?;
+                ensure(&back == events, "events mutated by roundtrip")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_ctx_roundtrip_any_payload() {
+        forall(
+            PropConfig::default(),
+            |rng| {
+                let ctx = TraceCtx {
+                    session_id: rng.next_u64(),
+                    trip: (rng.next_u64() & 0xFFFF_FFFF) as u32,
+                    parent_span: (rng.next_u64() & 0xFFFF_FFFF) as u32,
+                    flags: (rng.next_u64() % 2) as u8 * FLAG_WANT_CLONE_EVENTS,
+                };
+                let n = (rng.next_u64() % 300) as usize;
+                let capsule: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+                (ctx, capsule)
+            },
+            |(ctx, capsule)| {
+                let buf = prepend_ctx(ctx, capsule);
+                let (got, rest) =
+                    split_ctx(&buf).map_err(|e| format!("split on own encoding: {e}"))?;
+                ensure_eq(got, Some(*ctx), "ctx")?;
+                ensure(rest == &capsule[..], "capsule bytes mutated")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_strict_prefix_never_decodes() {
+        forall(
+            PropConfig::default(),
+            |rng| {
+                let n = 1 + (rng.next_u64() % 10) as usize;
+                let events: Vec<Event> = (0..n).map(|_| arb_event(rng)).collect();
+                let blob = encode_events(&events);
+                let cut = 1 + (rng.next_u64() as usize) % (blob.len() - 1);
+                (blob, cut)
+            },
+            |(blob, cut)| {
+                ensure(
+                    decode_events(&blob[..*cut]).is_err(),
+                    "strict prefix decoded successfully",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_garbage_never_panics() {
+        forall(
+            PropConfig {
+                cases: 300,
+                ..PropConfig::default()
+            },
+            |rng| {
+                let n = (rng.next_u64() % 200) as usize;
+                let mut buf: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+                // Half the time, graft a real magic on front so the
+                // parsers go past the early-out.
+                match rng.next_u64() % 4 {
+                    0 if buf.len() >= 4 => {
+                        buf[..4].copy_from_slice(&TRACE_CTX_MAGIC.to_be_bytes())
+                    }
+                    1 if buf.len() >= 4 => {
+                        buf[..4].copy_from_slice(&TRACE_EVT_MAGIC.to_be_bytes())
+                    }
+                    _ => {}
+                }
+                buf
+            },
+            |buf| {
+                // Any outcome but a panic is acceptable.
+                let _ = split_ctx(buf);
+                let _ = split_events(buf);
+                let _ = decode_events(buf);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn truncated_envelope_after_magic_is_error() {
+        let mut buf = TRACE_CTX_MAGIC.to_be_bytes().to_vec();
+        buf.push(TRACE_WIRE_VERSION);
+        assert!(split_ctx(&buf).is_err(), "truncated ctx must not pass");
+        let mut buf = TRACE_EVT_MAGIC.to_be_bytes().to_vec();
+        buf.push(TRACE_WIRE_VERSION);
+        buf.extend_from_slice(&[0, 0, 0, 50]); // blob length beyond buffer
+        assert!(split_events(&buf).is_err());
+    }
+
+    #[test]
+    fn unknown_version_is_error_not_passthrough() {
+        let ctx = TraceCtx {
+            session_id: 1,
+            trip: 0,
+            parent_span: 0,
+            flags: 0,
+        };
+        let mut buf = prepend_ctx(&ctx, b"x");
+        buf[4] = 99; // version byte
+        assert!(split_ctx(&buf).is_err());
+    }
+}

@@ -59,6 +59,154 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Sub-buckets per octave of the log-bucketed histogram: resolution is
+/// `2^(1/8)` per bucket, ~9% worst-case relative error on a reported
+/// percentile — plenty for latency work at O(1) memory per stream.
+const LOG_SUB: usize = 8;
+/// Smallest representable value; anything at or below lands in the
+/// underflow bucket.
+const LOG_MIN: f64 = 1e-6;
+/// Hard cap on bucket count (`LOG_MIN * 2^(512/8)` ≈ 1e13): a hostile
+/// or NaN-ish sample can never grow the table unboundedly.
+const LOG_MAX_BUCKETS: usize = 512;
+
+/// Streaming log-bucketed histogram: O(1) record, O(buckets) percentile,
+/// mergeable across streams. This is what per-phase trace aggregation
+/// and the farm's gateway-wide percentiles run on — exact sample vectors
+/// would grow with session count, this does not.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    underflow: u64,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        let idx = ((v / LOG_MIN).log2() * LOG_SUB as f64).floor();
+        (idx.max(0.0) as usize).min(LOG_MAX_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of a bucket (the value a percentile reports).
+    fn bucket_value(idx: usize) -> f64 {
+        LOG_MIN * ((idx as f64 + 0.5) / LOG_SUB as f64).exp2()
+    }
+
+    /// Record one observation. Non-finite samples are dropped (they
+    /// would poison every percentile).
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+        if v <= LOG_MIN {
+            self.underflow += 1;
+            return;
+        }
+        let idx = Self::bucket_of(v);
+        if idx >= self.counts.len() {
+            self.counts.resize(idx + 1, 0);
+        }
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.n as f64
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        self.max
+    }
+
+    /// Approximate percentile (`q` in 0..=1): walk buckets to the rank,
+    /// report the bucket's geometric midpoint clamped into the observed
+    /// [min, max] range.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.n as f64).ceil().max(1.0) as u64;
+        if rank <= self.underflow {
+            return self.min;
+        }
+        let mut seen = self.underflow;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_value(idx).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    /// Fold another histogram into this one (farm workers → gateway).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.n += other.n;
+        self.sum += other.sum;
+        self.underflow += other.underflow;
+        if other.counts.len() > self.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, &c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+    }
+}
+
 /// Geometric mean (for speedup aggregation).
 pub fn geomean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

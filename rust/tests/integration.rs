@@ -434,6 +434,122 @@ fn interop_matrix_lands_on_common_subset_bit_identical() {
     }
 }
 
+/// `CAP_TRACE_CTX` rows of the interop matrix: every (v3,v4) initiator/
+/// responder pairing with the trace envelope advertised or withheld
+/// negotiates the common subset — context only when both ends speak v4
+/// AND both carried the bit — and the session stays bit-identical to
+/// every other pairing. Observe-only invariant: the recorder's
+/// presence/absence never changes execution results, it only decides
+/// whether clone-side spans come home merged into the phone timeline.
+#[test]
+fn trace_interop_pairings_negotiate_common_subset_bit_identical() {
+    use clonecloud::appvm::zygote::build_template;
+    use clonecloud::config::CostParams;
+    use clonecloud::exec::{
+        delta_statics_workload_src, delta_workload_expected, run_distributed_traced,
+    };
+    use clonecloud::nodemanager::{InProcTransport, CAP_CODEC_LZ, CAP_TRACE_CTX};
+    use clonecloud::trace::{Endpoint, Event, Tracer};
+
+    const ROUNDS: i64 = 2;
+    const ZY: usize = 120;
+    let program = Arc::new(
+        clonecloud::appvm::assembler::assemble(&delta_statics_workload_src(ROUNDS, 256, 4))
+            .unwrap(),
+    );
+    clonecloud::appvm::verifier::verify_program(&program).unwrap();
+    let template = build_template(&program, ZY, 5);
+    let main = program.entry().unwrap();
+    let expected = delta_workload_expected(ROUNDS);
+
+    // (migrations, result) must agree across ALL pairings — trace
+    // on/off and v3/v4 alike. (delta_roundtrips legitimately varies
+    // with the protocol floor, so it is checked per-pairing instead.)
+    let mut fingerprint: Option<(usize, Option<i64>)> = None;
+    for init_proto in [3u16, 4] {
+        for resp_proto in [3u16, 4] {
+            for trace in [false, true] {
+                let label = format!("init v{init_proto} vs resp v{resp_proto}, trace={trace}");
+                let (phone_t, clone_t) = InProcTransport::pair();
+                let mut server = CloneServer::new(
+                    clone_t,
+                    program.clone(),
+                    CostParams::default(),
+                    Box::new(clonecloud::appvm::NodeEnv::with_rust_compute),
+                );
+                server.proto_cap = resp_proto;
+                let srv = std::thread::spawn(move || server.serve().unwrap());
+
+                let mut nm = NodeManager::new(phone_t);
+                nm.pretend_proto(init_proto);
+                let mut caps = CAP_CODEC_LZ;
+                if trace {
+                    caps |= CAP_TRACE_CTX;
+                }
+                nm.advertise_caps(caps);
+                nm.advertise_delta(true);
+                nm.negotiate().unwrap();
+
+                let min = init_proto.min(resp_proto);
+                assert_eq!(
+                    nm.trace_negotiated(),
+                    trace && min >= 4,
+                    "{label}: trace ctx is the intersection at proto >= 4"
+                );
+
+                nm.provision(&program, ZY, 5).unwrap();
+                let mut phone = clonecloud::appvm::Process::fork_from_zygote(
+                    program.clone(),
+                    &template,
+                    clonecloud::device::DeviceSpec::phone_g1(),
+                    Location::Mobile,
+                    clonecloud::appvm::NodeEnv::with_rust_compute(clonecloud::vfs::SimFs::new()),
+                );
+                let mut session = MobileSession::new(true);
+                let mut engine = PolicyEngine::force_offload().without_degrade();
+                let mut tracer = Tracer::new(0x1A7E, Endpoint::Phone, 4096);
+                let out = run_distributed_traced(
+                    &mut phone,
+                    &mut nm,
+                    &NetworkProfile::wifi(),
+                    &CostParams::default(),
+                    &mut session,
+                    &mut engine,
+                    &mut tracer,
+                )
+                .unwrap();
+
+                let got = phone.statics[main.class.0 as usize][1].as_int();
+                assert_eq!(got, Some(expected), "{label}: result");
+                assert_eq!(
+                    out.delta_roundtrips,
+                    if nm.delta_negotiated() { 1 } else { 0 },
+                    "{label}: delta follows its own negotiation, not trace's"
+                );
+                let fp = (out.migrations, got);
+                if let Some(base) = &fingerprint {
+                    assert_eq!(*base, fp, "{label}: bit-identical across pairings");
+                } else {
+                    fingerprint = Some(fp);
+                }
+
+                // Clone-side spans come home exactly when negotiated;
+                // the phone records its own spans either way.
+                let events: Vec<Event> = tracer.events().cloned().collect();
+                let clone_events = events.iter().filter(|e| e.endpoint == Endpoint::Clone).count();
+                assert!(!events.is_empty(), "{label}: phone spans recorded");
+                assert_eq!(
+                    clone_events > 0,
+                    nm.trace_negotiated(),
+                    "{label}: piggybacked events iff negotiated"
+                );
+                nm.shutdown().unwrap();
+                srv.join().unwrap();
+            }
+        }
+    }
+}
+
 /// Fault-injection matrix: the link dies at every possible frame
 /// boundary of a six-round session. Under a degrading engine every cut
 /// point still completes the run locally (bit-identical result, error
