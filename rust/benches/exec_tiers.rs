@@ -1,0 +1,198 @@
+//! Execution tiers: tier-1 direct-threaded dispatch vs the tier-0
+//! interpreter on a hot offloaded span.
+//!
+//! The same phone workload (the farm's synthetic offload: a byte-sum
+//! loop over a 64-byte file, clone-side between `ccstart`/`ccstop`) runs
+//! through an `InlineClone` twice — once with the `interp` ablation,
+//! once with tier 1 — and the bench demands two things at once:
+//!
+//!  1. **Bit identity.** Merged result, phone virtual-clock bits, and
+//!     executed-instruction counts must match exactly. The tier is only
+//!     allowed to change wall time.
+//!  2. **Speed.** Tier 1 must run the load in under half the interp's
+//!     wall time (>=2x; informational under CC_BENCH_SMOKE, where the
+//!     span is too short to amortize translation).
+//!
+//!     cargo bench --bench exec_tiers
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::natives::NodeEnv;
+use clonecloud::appvm::process::Process;
+use clonecloud::appvm::Program;
+use clonecloud::nodemanager::CloneServeStats;
+use clonecloud::config::{CostParams, ExecTierKind, NetworkProfile};
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::exec::{run_distributed, InlineClone};
+use clonecloud::farm::{synthetic_expected, synthetic_offload_src};
+use clonecloud::util::bench::{emit_json, smoke_mode, Table};
+use clonecloud::util::rng::Rng;
+use clonecloud::vfs::SimFs;
+
+struct RunOut {
+    wall: f64,
+    result: i64,
+    clock_bits: u64,
+    instrs: u64,
+    serve: CloneServeStats,
+}
+
+fn load_fs() -> SimFs {
+    let mut bytes = vec![0u8; 64];
+    Rng::new(0x71E2).fill_bytes(&mut bytes);
+    let mut fs = SimFs::new();
+    fs.add("data.bin", bytes);
+    fs
+}
+
+/// One full offload roundtrip under `kind`; `trips` re-runs reuse the
+/// channel so tier 1's translation cache persists like a farm slot's.
+fn run_once(program: &Arc<Program>, kind: ExecTierKind, trips: usize) -> RunOut {
+    let fs = load_fs();
+    let clone = Process::new(
+        program.clone(),
+        DeviceSpec::clone_desktop(),
+        Location::Clone,
+        NodeEnv::with_rust_compute(fs.synchronize()),
+    );
+    let mut channel = InlineClone::new(clone, CostParams::default()).with_exec_tier(kind);
+    let main = program.entry().unwrap();
+
+    let mut out = RunOut {
+        wall: 0.0,
+        result: 0,
+        clock_bits: 0,
+        instrs: 0,
+        serve: CloneServeStats::default(),
+    };
+    for _ in 0..trips {
+        let mut phone = Process::new(
+            program.clone(),
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(fs.synchronize()),
+        );
+        let t0 = Instant::now();
+        run_distributed(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+        )
+        .expect("distributed run");
+        out.wall += t0.elapsed().as_secs_f64();
+        out.result = phone.statics[main.class.0 as usize][0]
+            .as_int()
+            .expect("int result");
+        out.clock_bits = phone.clock.now_us().to_bits();
+        out.instrs = phone.metrics.instrs;
+    }
+    out.serve = channel.serve_stats.clone();
+    out
+}
+
+fn best_of(program: &Arc<Program>, kind: ExecTierKind, trips: usize, rounds: usize) -> RunOut {
+    let mut best = run_once(program, kind, trips);
+    for _ in 1..rounds {
+        let next = run_once(program, kind, trips);
+        // Identical VM state by construction; keep the quietest wall.
+        assert_eq!(next.clock_bits, best.clock_bits, "round-to-round clock");
+        assert_eq!(next.instrs, best.instrs, "round-to-round instrs");
+        if next.wall < best.wall {
+            best = next;
+        }
+    }
+    best
+}
+
+fn main() {
+    let smoke = smoke_mode();
+    let (iters, trips, rounds) = if smoke {
+        (30_000i64, 2usize, 2usize)
+    } else {
+        (400_000i64, 3usize, 3usize)
+    };
+
+    let program = Arc::new(assemble(&synthetic_offload_src(iters)).expect("assemble"));
+    clonecloud::appvm::verifier::verify_program(&program).expect("verify");
+    let expected = synthetic_expected(&load_fs(), iters);
+
+    println!(
+        "exec_tiers: {iters} clone iters/span, {trips} trips/run, best of {rounds}{}",
+        if smoke { "  [smoke]" } else { "" }
+    );
+
+    let interp = best_of(&program, ExecTierKind::Interp, trips, rounds);
+    let tier1 = best_of(&program, ExecTierKind::Tier1, trips, rounds);
+
+    // Gate 1: bit identity, same contract as tests/exec_parity.rs but on
+    // the real offload path at bench scale.
+    assert_eq!(interp.result, expected, "interp result");
+    assert_eq!(tier1.result, expected, "tier1 result");
+    assert_eq!(tier1.clock_bits, interp.clock_bits, "virtual clock bits");
+    assert_eq!(tier1.instrs, interp.instrs, "phone instructions");
+    assert_eq!(
+        tier1.serve.instrs_executed, interp.serve.instrs_executed,
+        "clone instructions"
+    );
+    assert_eq!(interp.serve.tier1_instrs, 0, "ablation ran tier-1 code");
+    assert!(tier1.serve.tier_promotions >= 1, "hot span never promoted");
+    assert!(
+        tier1.serve.tier_cache_hits >= 1,
+        "translation cache never hit across trips"
+    );
+
+    let mut table = Table::new(
+        "Offloaded span: interp vs tier-1 dispatch",
+        &["Tier", "Wall(s)", "Minstr/s", "Promoted", "CacheHit", "T1Instr%"],
+    );
+    for (name, r) in [("interp", &interp), ("tier1", &tier1)] {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.4}", r.wall),
+            format!("{:.1}", r.serve.instrs_executed as f64 / r.wall / 1e6),
+            r.serve.tier_promotions.to_string(),
+            r.serve.tier_cache_hits.to_string(),
+            format!(
+                "{:.0}",
+                100.0 * r.serve.tier1_instrs as f64 / r.serve.instrs_executed.max(1) as f64
+            ),
+        ]);
+    }
+    table.print();
+
+    // Gate 2: speed.
+    let speedup = interp.wall / tier1.wall;
+    emit_json(
+        "exec_tiers",
+        &[],
+        &[
+            ("interp_wall_s", interp.wall),
+            ("tier1_wall_s", tier1.wall),
+            ("speedup", speedup),
+            ("tier1_promotions", tier1.serve.tier_promotions as f64),
+            ("tier1_cache_hits", tier1.serve.tier_cache_hits as f64),
+            (
+                "tier1_instr_share",
+                tier1.serve.tier1_instrs as f64 / tier1.serve.instrs_executed.max(1) as f64,
+            ),
+        ],
+    );
+    println!("\ntier1 speedup over interp: {speedup:.2}x (bit-identical state)");
+    if smoke {
+        if speedup > 1.1 {
+            println!("PASS: tier 1 faster at bit-identical results (smoke threshold 1.1x)");
+        } else {
+            println!(
+                "NOTE: speedup below 1.1x in smoke mode (span too short to \
+                 amortize translation on this host)"
+            );
+        }
+    } else if speedup >= 2.0 {
+        println!("PASS: tier 1 delivers >=2x dispatch speedup at bit-identical results");
+    } else {
+        panic!("FAIL: tier-1 speedup {speedup:.2}x below the 2x gate");
+    }
+}

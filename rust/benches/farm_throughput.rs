@@ -17,7 +17,7 @@ use clonecloud::appvm::assembler::assemble;
 use clonecloud::appvm::natives::NodeEnv;
 use clonecloud::appvm::process::Process;
 use clonecloud::appvm::zygote::build_template;
-use clonecloud::config::{CostParams, NetworkProfile};
+use clonecloud::config::{CostParams, ExecTierKind, NetworkProfile};
 use clonecloud::device::{DeviceSpec, Location};
 use clonecloud::exec::run_distributed;
 use clonecloud::farm::{
@@ -68,6 +68,7 @@ fn run_load(
             zygote_seed: ZYGOTE_SEED,
             fuel: 2_000_000_000,
             slot_gc_interval: 8,
+            exec_tier: ExecTierKind::Tier1,
         },
         CostParams::default(),
         Arc::new(NodeEnv::with_rust_compute),

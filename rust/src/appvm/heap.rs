@@ -30,9 +30,12 @@ pub const PAGE_OBJECTS: u64 = 1 << PAGE_SHIFT;
 
 /// Result of one page scan: every live object stamped after `base_epoch`
 /// (in id order, so capsules stay deterministic), plus the ids on dirty
-/// pages that no longer resolve — objects removed since the sync, the
-/// deletion signal (`Heap::remove` and `Heap::gc` stamp the page of every
-/// id they drop). The counters feed the `pages_scanned`/`pages_dirty`
+/// pages removed since the sync — the deletion signal (`Heap::remove` and
+/// `Heap::gc` record a per-page tombstone and stamp the page for every id
+/// they drop). Tombstones carry their removal epoch, so a page redirtied
+/// long after a removal reports only removals newer than the baseline —
+/// scan output shrinks on removal-heavy workloads instead of re-listing
+/// every hole forever. The counters feed the `pages_scanned`/`pages_dirty`
 /// capture metrics.
 #[derive(Debug, Clone, Default)]
 pub struct PageScan {
@@ -63,6 +66,17 @@ pub struct Heap {
     /// same barriers that stamp `Object::epoch` — plus `remove`/`gc`, so
     /// a page scan also surfaces deletions.
     page_epochs: Vec<u64>,
+    /// Compacted per-page tombstones: `(offset-within-page, removal
+    /// epoch)` for every id dropped from the page, kept sorted by offset.
+    /// The paged scan reports removals straight off this list (filtered
+    /// by the baseline epoch) instead of probing all `PAGE_OBJECTS` id
+    /// slots for liveness holes.
+    tombstones: HashMap<usize, Vec<(u16, u64)>>,
+    /// Generation counter of the Zygote-named object set: bumped whenever
+    /// an object carrying a `zygote_seq` name is added or removed. Lets a
+    /// receive path cache its `ZygoteIndex` and invalidate only on
+    /// template mutation.
+    zygote_gen: u64,
 }
 
 impl Heap {
@@ -73,6 +87,8 @@ impl Heap {
             zygote_counters: HashMap::new(),
             epoch: 0,
             page_epochs: Vec::new(),
+            tombstones: HashMap::new(),
+            zygote_gen: 0,
         }
     }
 
@@ -85,6 +101,32 @@ impl Heap {
             self.page_epochs.resize(pi + 1, 0);
         }
         self.page_epochs[pi] = self.epoch;
+    }
+
+    /// Record a removal tombstone for `id` at the current epoch. A
+    /// re-removal (remove, resurrect via `alloc_with_id`, remove again)
+    /// replaces the entry in place, so the list stays one entry per
+    /// offset — compacted, never growing past `PAGE_OBJECTS`.
+    fn note_removed(&mut self, id: u64) {
+        let pi = (id >> PAGE_SHIFT) as usize;
+        let off = (id & (PAGE_OBJECTS - 1)) as u16;
+        let epoch = self.epoch;
+        let list = self.tombstones.entry(pi).or_default();
+        match list.binary_search_by_key(&off, |&(o, _)| o) {
+            Ok(i) => list[i].1 = epoch,
+            Err(i) => list.insert(i, (off, epoch)),
+        }
+    }
+
+    /// Drop the tombstone for `id`, if any (resurrection via
+    /// `alloc_with_id` — the id is live again, not removed).
+    fn clear_tombstone(&mut self, id: u64) {
+        if let Some(list) = self.tombstones.get_mut(&((id >> PAGE_SHIFT) as usize)) {
+            let off = (id & (PAGE_OBJECTS - 1)) as u16;
+            if let Ok(i) = list.binary_search_by_key(&off, |&(o, _)| o) {
+                list.remove(i);
+            }
+        }
     }
 
     /// Number of id pages this heap spans.
@@ -115,13 +157,23 @@ impl Heap {
             let hi = (((pi as u64) + 1) << PAGE_SHIFT).min(self.next_id);
             let mut any = false;
             for id in lo..hi {
-                match self.objects.get(&id) {
-                    Some(o) if o.epoch > base_epoch => {
+                if let Some(o) = self.objects.get(&id) {
+                    if o.epoch > base_epoch {
                         out.dirty.push(ObjId(id));
                         any = true;
                     }
-                    Some(_) => {}
-                    None => out.missing.push(id),
+                }
+            }
+            // Removals come straight off the compacted tombstone list:
+            // only ids dropped *after* the baseline are reported, so an
+            // old removal stops riding along once the peer has synced
+            // past it (the list is offset-sorted, so ids stay ascending).
+            if let Some(list) = self.tombstones.get(&pi) {
+                let page_base = (pi as u64) << PAGE_SHIFT;
+                for &(off, removed_at) in list {
+                    if removed_at > base_epoch {
+                        out.missing.push(page_base + off as u64);
+                    }
                 }
             }
             if any {
@@ -158,6 +210,9 @@ impl Heap {
         let id = ObjId(self.next_id);
         self.next_id += 1;
         obj.epoch = self.epoch;
+        if obj.zygote_seq.is_some() {
+            self.zygote_gen += 1;
+        }
         self.objects.insert(id.0, obj);
         self.stamp_page(id.0);
         id
@@ -181,8 +236,12 @@ impl Heap {
         }
         self.next_id = self.next_id.max(id.0 + 1);
         obj.epoch = self.epoch;
+        if obj.zygote_seq.is_some() {
+            self.zygote_gen += 1;
+        }
         self.objects.insert(id.0, obj);
         self.stamp_page(id.0);
+        self.clear_tombstone(id.0);
         Ok(())
     }
 
@@ -221,10 +280,15 @@ impl Heap {
 
     pub fn remove(&mut self, id: ObjId) -> Option<Object> {
         let gone = self.objects.remove(&id.0);
-        if gone.is_some() {
+        if let Some(o) = &gone {
+            if o.zygote_seq.is_some() {
+                self.zygote_gen += 1;
+            }
             // A removal is a mutation of the page: the delta scan reports
-            // the vanished id, which is how deletions reach the peer.
+            // the vanished id (off the tombstone list), which is how
+            // deletions reach the peer.
             self.stamp_page(id.0);
+            self.note_removed(id.0);
         }
         gone
     }
@@ -265,10 +329,16 @@ impl Heap {
             .copied()
             .collect();
         for &id in &dead {
-            self.objects.remove(&id);
-            // Stamp every page a collected id lived on: the delta scan's
-            // missing-id pass is how the peer learns about deletions.
+            if let Some(o) = self.objects.remove(&id) {
+                if o.zygote_seq.is_some() {
+                    self.zygote_gen += 1;
+                }
+            }
+            // Stamp every page a collected id lived on and tombstone the
+            // id: the delta scan's missing-id pass is how the peer learns
+            // about deletions.
             self.stamp_page(id);
+            self.note_removed(id);
         }
         dead.len()
     }
@@ -284,6 +354,15 @@ impl Heap {
     /// Next id that will be assigned (for tests / diagnostics).
     pub fn next_id_hint(&self) -> u64 {
         self.next_id
+    }
+
+    /// Generation of the Zygote-named object set: changes iff a
+    /// `zygote_seq`-carrying object was added or removed since the last
+    /// observation. A cached `ZygoteIndex` built at generation G stays
+    /// valid while `zygote_gen() == G` (template bodies may mutate — the
+    /// (class, seq) → id mapping doesn't care).
+    pub fn zygote_gen(&self) -> u64 {
+        self.zygote_gen
     }
 
     /// Ids of every Zygote-named object (clean or dirtied). Slot GC
@@ -518,6 +597,68 @@ mod tests {
         // A later baseline no longer sees the old removals.
         h.advance_epoch();
         assert!(h.scan_dirty_pages(h.epoch()).missing.is_empty());
+    }
+
+    #[test]
+    fn old_removals_stop_riding_redirtied_pages() {
+        let mut h = Heap::new();
+        let ids: Vec<ObjId> = (0..10)
+            .map(|_| h.alloc(Object::new_fields(ClassId(0), 1)))
+            .collect();
+        let base = h.epoch();
+        h.advance_epoch();
+        h.remove(ids[4]);
+        assert_eq!(h.scan_dirty_pages(base).missing, vec![ids[4].0]);
+
+        // Sync past the removal, then redirty the same page: the old
+        // tombstone is epoch-filtered out — only the fresh write shows.
+        let base2 = h.epoch();
+        h.advance_epoch();
+        h.get_mut(ids[7]).unwrap();
+        let scan = h.scan_dirty_pages(base2);
+        assert_eq!(scan.dirty, vec![ids[7]]);
+        assert!(scan.missing.is_empty(), "pre-baseline removal re-reported");
+
+        // A re-removal after resurrection replaces the tombstone in place.
+        h.alloc_with_id(ids[4], Object::new_fields(ClassId(0), 1))
+            .unwrap();
+        let base3 = h.epoch();
+        h.advance_epoch();
+        h.remove(ids[4]);
+        let scan = h.scan_dirty_pages(base3);
+        assert_eq!(scan.missing, vec![ids[4].0]);
+        let page = (ids[4].0 >> PAGE_SHIFT) as usize;
+        assert_eq!(h.tombstones[&page].len(), 1, "one entry per offset");
+    }
+
+    #[test]
+    fn resurrection_clears_the_tombstone() {
+        let mut h = Heap::new();
+        let a = h.alloc(Object::new_fields(ClassId(0), 1));
+        let base = h.epoch();
+        h.advance_epoch();
+        h.remove(a);
+        h.alloc_with_id(a, Object::new_fields(ClassId(0), 1)).unwrap();
+        let scan = h.scan_dirty_pages(base);
+        assert!(scan.missing.is_empty(), "live id reported as removed");
+        assert_eq!(scan.dirty, vec![a]);
+    }
+
+    #[test]
+    fn zygote_generation_tracks_template_set() {
+        let mut h = Heap::new();
+        let g0 = h.zygote_gen();
+        let app = h.alloc(Object::new_fields(ClassId(0), 1));
+        assert_eq!(h.zygote_gen(), g0, "app objects don't move the gen");
+        let z = h.alloc_zygote(Object::new_fields(ClassId(1), 1));
+        assert!(h.zygote_gen() > g0, "template addition bumps");
+        let g1 = h.zygote_gen();
+        h.get_mut(z).unwrap();
+        assert_eq!(h.zygote_gen(), g1, "template mutation keeps the name map");
+        h.remove(app);
+        assert_eq!(h.zygote_gen(), g1, "app removal doesn't move the gen");
+        h.remove(z);
+        assert!(h.zygote_gen() > g1, "template removal bumps");
     }
 
     #[test]

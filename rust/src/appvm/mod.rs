@@ -5,9 +5,35 @@
 //! bytecode [`bytecode`], the Method Area [`class`], heap with monotonic
 //! object ids and mark-sweep GC [`heap`], threads with safe-point suspend
 //! counters [`thread`], the interpreter with migration-point events
-//! [`interp`], the native interface [`natives`], the Zygote template
-//! [`zygote`], a textual assembler [`assembler`], and a load-time
-//! verifier [`verifier`].
+//! [`interp`] (single-step semantics shared via [`ops`]), the
+//! profile-guided direct-threaded execution tier [`tier1`], the native
+//! interface [`natives`], the Zygote template [`zygote`], a textual
+//! assembler [`assembler`], and a load-time verifier [`verifier`].
+//!
+//! # Execution tiers
+//!
+//! Two engines share one instruction semantics ([`ops::step_one`]):
+//!
+//! - **Tier 0** ([`interp`]): the switch-dispatch interpreter. The only
+//!   tier on the phone side, and the ablation baseline on the clone
+//!   (`exec_tier = "interp"`).
+//! - **Tier 1** ([`tier1`]): profile-guided direct-threaded dispatch.
+//!   When a method crosses a hotness threshold, its `Instr` sequence is
+//!   translated once into a pre-decoded [`tier1::Translation`] — operand
+//!   registers resolved, branch targets pre-bound to translated-op
+//!   indices, adjacent `Const`/`IntBin`/`Goto` runs fused into
+//!   superinstructions — cached per `MRef` in a bounded cache that is
+//!   invalidated when the program changes. Heavy instructions (invoke,
+//!   return, allocation, statics stores, `CcStart`/`CcStop`) bail to the
+//!   shared single-step, so there is exactly one implementation of their
+//!   semantics.
+//!
+//! Tier 1 is **bit-identical** to the interpreter by construction and by
+//! test (`tests/exec_parity.rs`): same `Value` results, same
+//! `clock.charge_us` accounting per instruction, same epoch/page
+//! write-barrier stamping through `Heap::get_mut`, same `RunExit` points
+//! and fuel semantics, same error strings. The tier may only change how
+//! fast the wall clock moves — never what the virtual machine computes.
 
 pub mod assembler;
 pub mod bytecode;
@@ -15,8 +41,10 @@ pub mod class;
 pub mod heap;
 pub mod interp;
 pub mod natives;
+pub(crate) mod ops;
 pub mod process;
 pub mod thread;
+pub mod tier1;
 pub mod value;
 pub mod verifier;
 pub mod zygote;
@@ -25,6 +53,7 @@ pub use bytecode::{ClassId, Instr, MRef, MethodId};
 pub use class::{ClassDef, MethodDef, Program};
 pub use heap::Heap;
 pub use interp::{run_thread, ExecHooks, NoHooks, RunExit};
+pub use tier1::{ExecTier, Tier1Engine, TierStats};
 pub use natives::{ComputeBackend, NativeRegistry, NodeEnv, RustCompute};
 pub use process::Process;
 pub use thread::{Frame, ThreadStatus, VmThread};

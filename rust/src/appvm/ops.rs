@@ -1,0 +1,400 @@
+//! Shared single-step instruction semantics.
+//!
+//! Exactly one implementation of "execute one DroidVM instruction" lives
+//! here, used by both execution tiers: the switch-dispatch interpreter
+//! (`interp::run_thread`, tier 0) drives it in a loop, and the
+//! direct-threaded tier (`tier1`) bails to it for every heavy
+//! instruction (invoke/return/allocation/statics stores/`CcStart`/
+//! `CcStop`) and for cold code. Anything this function does — charge
+//! order, write-barrier routing, error strings, pc adjustment on fault —
+//! *is* the VM's semantics; the tiers may only change dispatch speed.
+//!
+//! The fetch path deliberately avoids the two classic interpreter-loop
+//! taxes: the instruction is borrowed from the caller-held `Program`
+//! (no per-fetch `Instr` clone — `Invoke` carries a `Vec<Reg>`), and the
+//! status/frame/charge bookkeeping runs under a single thread lookup
+//! with split field borrows instead of three `thread(tid)` round-trips.
+
+use super::bytecode::{eval_cmp_f, eval_cmp_i, eval_float, eval_int, ArrKind, CmpOp, Instr};
+use super::class::Program;
+use super::interp::{ExecHooks, RunExit};
+use super::natives::{NativeCtx, NativeRegistry};
+use super::process::Process;
+use super::thread::{Frame, ThreadStatus};
+use super::value::{ObjBody, ObjId, Object, Value};
+use crate::config::CostParams;
+use crate::error::{CloneCloudError, Result};
+
+/// Execute exactly one instruction of thread `tid`: fetch, charge,
+/// advance, execute. Returns `Ok(Some(exit))` when the thread reaches an
+/// exit condition (completion or a partition point), `Ok(None)` when it
+/// merely advanced. `program` must be the process's own program (callers
+/// clone the `Arc` once per run so the fetch can borrow instructions
+/// while the process is mutated).
+pub(crate) fn step_one<H: ExecHooks>(
+    p: &mut Process,
+    program: &Program,
+    tid: u32,
+    hooks: &mut H,
+    costs: &CostParams,
+    instr_cost: f64,
+) -> Result<Option<RunExit>> {
+    let (instr, mref) = {
+        let Process {
+            ref mut threads,
+            ref mut clock,
+            ref mut metrics,
+            ..
+        } = *p;
+        let t = threads
+            .get_mut(tid as usize)
+            .ok_or_else(|| CloneCloudError::vm(format!("no thread {tid}")))?;
+        match t.status {
+            ThreadStatus::Finished => return Ok(Some(RunExit::Completed(None))),
+            ThreadStatus::Suspended | ThreadStatus::Migrated => {
+                return Err(CloneCloudError::vm(format!(
+                    "thread {tid} not runnable ({:?})",
+                    t.status
+                )))
+            }
+            ThreadStatus::Runnable => {}
+        }
+
+        // Fetch.
+        let frame = t
+            .frames
+            .last_mut()
+            .ok_or_else(|| CloneCloudError::vm("runnable thread with no frames"))?;
+        let mref = frame.method;
+        let pc = frame.pc;
+        let method = program.method(mref);
+        if pc >= method.code.len() {
+            return Err(CloneCloudError::vm(format!(
+                "pc {pc} past end of {}",
+                program.method_name(mref)
+            )));
+        }
+
+        // Charge and advance.
+        clock.charge_us(instr_cost);
+        metrics.instrs += 1;
+        t.cpu_us += instr_cost;
+        frame.pc = pc + 1;
+        (&method.code[pc], mref)
+    };
+
+    // Execute.
+    match instr {
+        Instr::Nop => {}
+        Instr::Const(d, v) => set_reg(p, tid, *d, Value::Int(*v))?,
+        Instr::ConstF(d, v) => set_reg(p, tid, *d, Value::Float(*v))?,
+        Instr::Move(d, s) => {
+            let v = get_reg(p, tid, *s)?;
+            set_reg(p, tid, *d, v)?;
+        }
+        Instr::IntBin(op, d, a, b) => {
+            let (x, y) = (int_reg(p, tid, *a)?, int_reg(p, tid, *b)?);
+            let v =
+                eval_int(*op, x, y).ok_or_else(|| CloneCloudError::vm("division by zero"))?;
+            set_reg(p, tid, *d, Value::Int(v))?;
+        }
+        Instr::FloatBin(op, d, a, b) => {
+            let (x, y) = (float_reg(p, tid, *a)?, float_reg(p, tid, *b)?);
+            set_reg(p, tid, *d, Value::Float(eval_float(*op, x, y)))?;
+        }
+        Instr::Cmp(op, d, a, b) => {
+            let va = get_reg(p, tid, *a)?;
+            let vb = get_reg(p, tid, *b)?;
+            let r = cmp_values(*op, va, vb)?;
+            set_reg(p, tid, *d, Value::Int(r as i64))?;
+        }
+        Instr::IfZ(r, target) => {
+            if !get_reg(p, tid, *r)?.is_truthy() {
+                jump(p, tid, *target)?;
+            }
+        }
+        Instr::IfNZ(r, target) => {
+            if get_reg(p, tid, *r)?.is_truthy() {
+                jump(p, tid, *target)?;
+            }
+        }
+        Instr::IfCmp(op, a, b, target) => {
+            let va = get_reg(p, tid, *a)?;
+            let vb = get_reg(p, tid, *b)?;
+            if cmp_values(*op, va, vb)? {
+                jump(p, tid, *target)?;
+            }
+        }
+        Instr::Goto(target) => jump(p, tid, *target)?,
+        Instr::Invoke { mref: callee, ret, args } => {
+            let callee = *callee;
+            p.metrics.invokes += 1;
+            let callee_def = program.method(callee);
+            let nargs = callee_def.nargs;
+            if args.len() != nargs {
+                return Err(CloneCloudError::vm(format!(
+                    "{} expects {nargs} args, got {}",
+                    program.method_name(callee),
+                    args.len()
+                )));
+            }
+            let mut argv = Vec::with_capacity(args.len());
+            for &r in args {
+                argv.push(get_reg(p, tid, r)?);
+            }
+            if let Some(nid) = callee_def.native {
+                // Natives execute inline (treated as part of the
+                // calling method's body by the profiler, §3.2).
+                p.metrics.native_calls += 1;
+                let reg = NativeRegistry::standard();
+                let result = {
+                    let Process {
+                        ref mut heap,
+                        ref mut clock,
+                        ref device,
+                        location,
+                        ref mut env,
+                        array_class,
+                        allow_pinned,
+                        ..
+                    } = *p;
+                    let mut ctx = NativeCtx {
+                        heap,
+                        clock,
+                        device,
+                        costs,
+                        location,
+                        env,
+                        array_class,
+                        allow_pinned,
+                    };
+                    reg.call(nid, &mut ctx, &argv)?
+                };
+                if let Some(d) = ret {
+                    set_reg(p, tid, *d, result)?;
+                }
+                hooks.on_native(p, tid, mref, callee);
+            } else {
+                let nregs = callee_def.nregs;
+                let mut frame = Frame::new(callee, nregs, *ret);
+                frame.regs[..argv.len()].copy_from_slice(&argv);
+                p.thread_mut(tid)?.frames.push(frame);
+                hooks.on_entry(p, tid, callee);
+            }
+        }
+        Instr::Return(src) => {
+            let rv = match src {
+                Some(r) => Some(get_reg(p, tid, *r)?),
+                None => None,
+            };
+            let finished_frame = p
+                .thread_mut(tid)?
+                .frames
+                .pop()
+                .ok_or_else(|| CloneCloudError::vm("return with no frame"))?;
+            hooks.on_exit(p, tid, finished_frame.method);
+            let t = p.thread_mut(tid)?;
+            if t.frames.is_empty() {
+                t.status = ThreadStatus::Finished;
+                return Ok(Some(RunExit::Completed(rv)));
+            }
+            if let (Some(dst), Some(v)) = (finished_frame.ret_reg, rv) {
+                set_reg(p, tid, dst, v)?;
+            }
+        }
+        Instr::New(d, class) => {
+            let nfields = program.class(*class).fields.len();
+            p.metrics.allocations += 1;
+            let id = p.heap.alloc(Object::new_fields(*class, nfields));
+            set_reg(p, tid, *d, Value::Ref(id))?;
+        }
+        Instr::GetField(d, o, idx) => {
+            let oid = ref_reg(p, tid, *o)?;
+            let obj = p.heap.get(oid)?;
+            let v = match &obj.body {
+                ObjBody::Fields(fs) => *fs.get(*idx as usize).ok_or_else(|| {
+                    CloneCloudError::vm(format!("field index {idx} out of range"))
+                })?,
+                _ => return Err(CloneCloudError::vm("getfield on array")),
+            };
+            set_reg(p, tid, *d, v)?;
+        }
+        Instr::PutField(o, idx, s) => {
+            let v = get_reg(p, tid, *s)?;
+            let oid = ref_reg(p, tid, *o)?;
+            let obj = p.heap.get_mut(oid)?;
+            match &mut obj.body {
+                ObjBody::Fields(fs) => {
+                    let slot = fs.get_mut(*idx as usize).ok_or_else(|| {
+                        CloneCloudError::vm(format!("field index {idx} out of range"))
+                    })?;
+                    *slot = v;
+                }
+                _ => return Err(CloneCloudError::vm("putfield on array")),
+            }
+        }
+        Instr::GetStatic(d, class, idx) => {
+            let v = *p
+                .statics
+                .get(class.0 as usize)
+                .and_then(|s| s.get(*idx as usize))
+                .ok_or_else(|| CloneCloudError::vm("static index out of range"))?;
+            set_reg(p, tid, *d, v)?;
+        }
+        Instr::PutStatic(class, idx, s) => {
+            let v = get_reg(p, tid, *s)?;
+            // Through the statics write barrier: stamps the slot's
+            // mutation epoch for delta captures.
+            p.put_static(class.0 as usize, *idx as usize, v)?;
+        }
+        Instr::NewArray(d, kind, len_reg) => {
+            let len = int_reg(p, tid, *len_reg)?;
+            if len < 0 {
+                return Err(CloneCloudError::vm("negative array length"));
+            }
+            p.metrics.allocations += 1;
+            let class = p.array_class;
+            let id = match kind {
+                ArrKind::Byte => p.heap.alloc_byte_array(class, vec![0; len as usize]),
+                ArrKind::Float => p.heap.alloc_float_array(class, vec![0.0; len as usize]),
+                ArrKind::Val => p.heap.alloc_ref_array(class, len as usize),
+            };
+            set_reg(p, tid, *d, Value::Ref(id))?;
+        }
+        Instr::ArrGet(d, arr, idx) => {
+            let oid = ref_reg(p, tid, *arr)?;
+            let i = int_reg(p, tid, *idx)? as usize;
+            let v = match &p.heap.get(oid)?.body {
+                ObjBody::ByteArray(b) => Value::Int(*b.get(i).ok_or_else(oob)? as i64),
+                ObjBody::FloatArray(f) => Value::Float(*f.get(i).ok_or_else(oob)? as f64),
+                ObjBody::RefArray(v) => *v.get(i).ok_or_else(oob)?,
+                ObjBody::Fields(_) => return Err(CloneCloudError::vm("arrget on object")),
+            };
+            set_reg(p, tid, *d, v)?;
+        }
+        Instr::ArrPut(arr, idx, src) => {
+            let v = get_reg(p, tid, *src)?;
+            let oid = ref_reg(p, tid, *arr)?;
+            let i = int_reg(p, tid, *idx)? as usize;
+            match &mut p.heap.get_mut(oid)?.body {
+                ObjBody::ByteArray(b) => {
+                    let slot = b.get_mut(i).ok_or_else(oob)?;
+                    *slot = v
+                        .as_int()
+                        .ok_or_else(|| CloneCloudError::vm("byte array stores require ints"))?
+                        as u8;
+                }
+                ObjBody::FloatArray(f) => {
+                    let slot = f.get_mut(i).ok_or_else(oob)?;
+                    *slot = v.as_float().ok_or_else(|| {
+                        CloneCloudError::vm("float array stores require numbers")
+                    })? as f32;
+                }
+                ObjBody::RefArray(rv) => {
+                    let slot = rv.get_mut(i).ok_or_else(oob)?;
+                    *slot = v;
+                }
+                ObjBody::Fields(_) => return Err(CloneCloudError::vm("arrput on object")),
+            }
+        }
+        Instr::ArrLen(d, arr) => {
+            let oid = ref_reg(p, tid, *arr)?;
+            let len = match &p.heap.get(oid)?.body {
+                ObjBody::ByteArray(b) => b.len(),
+                ObjBody::FloatArray(f) => f.len(),
+                ObjBody::RefArray(v) => v.len(),
+                ObjBody::Fields(_) => return Err(CloneCloudError::vm("arrlen on object")),
+            };
+            set_reg(p, tid, *d, Value::Int(len as i64))?;
+        }
+        Instr::IntToFloat(d, s) => {
+            let v = int_reg(p, tid, *s)?;
+            set_reg(p, tid, *d, Value::Float(v as f64))?;
+        }
+        Instr::FloatToInt(d, s) => {
+            let v = float_reg(p, tid, *s)?;
+            set_reg(p, tid, *d, Value::Int(v as i64))?;
+        }
+        Instr::CcStart(point) => {
+            return Ok(Some(RunExit::MigrationPoint { point: *point }));
+        }
+        Instr::CcStop(point) => {
+            return Ok(Some(RunExit::ReintegrationPoint { point: *point }));
+        }
+    }
+    Ok(None)
+}
+
+pub(crate) fn oob() -> CloneCloudError {
+    CloneCloudError::vm("array index out of bounds")
+}
+
+pub(crate) fn cmp_values(op: CmpOp, a: Value, b: Value) -> Result<bool> {
+    match (a, b) {
+        (Value::Int(x), Value::Int(y)) => Ok(eval_cmp_i(op, x, y)),
+        (Value::Null, Value::Null) => Ok(eval_cmp_i(op, 0, 0)),
+        (Value::Ref(x), Value::Ref(y)) => Ok(eval_cmp_i(op, x.0 as i64, y.0 as i64)),
+        (Value::Ref(_), Value::Null) => Ok(eval_cmp_i(op, 1, 0)),
+        (Value::Null, Value::Ref(_)) => Ok(eval_cmp_i(op, 0, 1)),
+        _ => {
+            let x = a
+                .as_float()
+                .ok_or_else(|| CloneCloudError::vm("uncomparable values"))?;
+            let y = b
+                .as_float()
+                .ok_or_else(|| CloneCloudError::vm("uncomparable values"))?;
+            Ok(eval_cmp_f(op, x, y))
+        }
+    }
+}
+
+fn get_reg(p: &Process, tid: u32, r: u8) -> Result<Value> {
+    let f = p
+        .thread(tid)?
+        .current_frame()
+        .ok_or_else(|| CloneCloudError::vm("no frame"))?;
+    f.regs
+        .get(r as usize)
+        .copied()
+        .ok_or_else(|| CloneCloudError::vm(format!("register r{r} out of range")))
+}
+
+fn set_reg(p: &mut Process, tid: u32, r: u8, v: Value) -> Result<()> {
+    let f = p
+        .thread_mut(tid)?
+        .current_frame_mut()
+        .ok_or_else(|| CloneCloudError::vm("no frame"))?;
+    let slot = f
+        .regs
+        .get_mut(r as usize)
+        .ok_or_else(|| CloneCloudError::vm(format!("register r{r} out of range")))?;
+    *slot = v;
+    Ok(())
+}
+
+fn int_reg(p: &Process, tid: u32, r: u8) -> Result<i64> {
+    get_reg(p, tid, r)?
+        .as_int()
+        .ok_or_else(|| CloneCloudError::vm(format!("r{r} is not an int")))
+}
+
+fn float_reg(p: &Process, tid: u32, r: u8) -> Result<f64> {
+    get_reg(p, tid, r)?
+        .as_float()
+        .ok_or_else(|| CloneCloudError::vm(format!("r{r} is not a float")))
+}
+
+fn ref_reg(p: &Process, tid: u32, r: u8) -> Result<ObjId> {
+    get_reg(p, tid, r)?
+        .as_ref()
+        .ok_or_else(|| CloneCloudError::vm(format!("r{r} is not a reference (null deref?)")))
+}
+
+fn jump(p: &mut Process, tid: u32, target: u32) -> Result<()> {
+    let f = p
+        .thread_mut(tid)?
+        .current_frame_mut()
+        .ok_or_else(|| CloneCloudError::vm("no frame"))?;
+    f.pc = target as usize;
+    Ok(())
+}

@@ -1,0 +1,1276 @@
+//! Tier-1 execution engine: profile-guided direct-threaded dispatch.
+//!
+//! The clone exists to run the offloaded span faster than the phone
+//! (paper §1 — up to 21.2x); this module is where that speed actually
+//! comes from inside the reproduction, instead of only the
+//! `device.scale_us` config multiplier. When a method crosses a hotness
+//! threshold (activation count, or a long uninterrupted run inside one
+//! method), its `Instr` sequence is translated **once** into a
+//! pre-decoded direct-threaded form ([`Translation`]):
+//!
+//! - operand registers are resolved to plain indices with a single
+//!   up-front `min_regs` bound, so segment execution indexes the
+//!   register file directly instead of bounds-checking per operand;
+//! - branch targets are pre-bound to translated-op indices (no pc → op
+//!   re-decode on the back edge of a loop);
+//! - the dominant adjacent patterns are fused into superinstructions
+//!   (`Const`+`IntBin`, `IntBin`+`Goto`, `Const`+`IntBin`+`Goto`),
+//!   eliminating dispatch between them;
+//! - heavy instructions (invoke/return/allocation/statics stores/
+//!   `CcStart`/`CcStop`) become [`TOp::Bail`] entries that fall back to
+//!   the shared single-step [`super::ops::step_one`], so their
+//!   semantics exist exactly once.
+//!
+//! Translations are cached per `MRef` in a bounded FIFO cache owned by
+//! the engine (one engine per clone process / farm slot), invalidated
+//! when the process's `Arc<Program>` identity changes — the engine holds
+//! the `Arc`, so a pointer compare cannot alias a dropped program.
+//!
+//! # Bit-identity contract
+//!
+//! Tier 1 MUST be indistinguishable from the interpreter in everything
+//! but wall time: same `Value` results, same per-instruction
+//! `clock.charge_us` order (the clock and `cpu_us` are f64 accumulators
+//! — batching charges would change the bits), same `Heap::get_mut`
+//! write-barrier stamping, same fuel semantics (the instruction that
+//! would exceed the budget is not executed and `frame.pc` points at
+//! it), same error strings with `frame.pc` advanced past the faulting
+//! instruction. Statically suspect methods (an operand register beyond
+//! `nregs`, an invalid static slot, a branch target past the method
+//! end) are left **untranslated** so their lazy, only-if-executed fault
+//! behaviour stays with the cold path. `tests/exec_parity.rs` enforces
+//! the contract over randomized programs and every example workload.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::bytecode::{eval_float, eval_int, CmpOp, FloatOp, Instr, IntOp, MRef};
+use super::class::{MethodDef, Program};
+use super::interp::{self, NoHooks, RunExit};
+use super::ops;
+use super::process::{Process, VmMetrics};
+use super::thread::{Frame, ThreadStatus, VmThread};
+use super::value::{ObjBody, ObjId, Value};
+use crate::clock::VirtualClock;
+use crate::config::{CostParams, ExecTierKind};
+use crate::error::{CloneCloudError, Result};
+
+/// Sentinel in `pc_to_top` for pcs inside a fused superinstruction.
+const NO_TOP: u32 = u32::MAX;
+
+/// One pre-decoded translated op. `src` is the pc of the first source
+/// instruction, kept so exits and faults can restore the exact
+/// interpreter pc. Branch ops carry both the pre-bound translated-op
+/// index (`t_top`) and the original pc (`t_pc` — what `frame.pc` must
+/// say if the segment exits right after the jump).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum TOp {
+    Nop { src: u32 },
+    ConstI { src: u32, d: u8, v: i64 },
+    ConstF { src: u32, d: u8, v: f64 },
+    Move { src: u32, d: u8, s: u8 },
+    IntBin { src: u32, op: IntOp, d: u8, a: u8, b: u8 },
+    FloatBin { src: u32, op: FloatOp, d: u8, a: u8, b: u8 },
+    Cmp { src: u32, op: CmpOp, d: u8, a: u8, b: u8 },
+    IfZ { src: u32, r: u8, t_top: u32, t_pc: u32 },
+    IfNZ { src: u32, r: u8, t_top: u32, t_pc: u32 },
+    IfCmp { src: u32, op: CmpOp, a: u8, b: u8, t_top: u32, t_pc: u32 },
+    Goto { src: u32, t_top: u32, t_pc: u32 },
+    GetField { src: u32, d: u8, o: u8, idx: u16 },
+    PutField { src: u32, o: u8, idx: u16, s: u8 },
+    GetStatic { src: u32, d: u8, class: u16, idx: u16 },
+    ArrGet { src: u32, d: u8, arr: u8, idx: u8 },
+    ArrPut { src: u32, arr: u8, idx: u8, s: u8 },
+    ArrLen { src: u32, d: u8, arr: u8 },
+    IntToFloat { src: u32, d: u8, s: u8 },
+    FloatToInt { src: u32, d: u8, s: u8 },
+    /// Fused `Const(c, k); IntBin(op, d, a, b)` — two charged
+    /// components, one dispatch.
+    ConstIntBin { src: u32, c: u8, k: i64, op: IntOp, d: u8, a: u8, b: u8 },
+    /// Fused `IntBin(op, d, a, b); Goto` — the classic loop back edge.
+    IntBinGoto { src: u32, op: IntOp, d: u8, a: u8, b: u8, t_top: u32, t_pc: u32 },
+    /// Fused `Const; IntBin; Goto` — induction step + back edge.
+    ConstIntBinGoto {
+        src: u32,
+        c: u8,
+        k: i64,
+        op: IntOp,
+        d: u8,
+        a: u8,
+        b: u8,
+        t_top: u32,
+        t_pc: u32,
+    },
+    /// Heavy instruction: restore `frame.pc = src` (nothing charged) and
+    /// hand control to the shared single-step.
+    Bail { src: u32 },
+}
+
+/// A method's pre-decoded direct-threaded form.
+#[derive(Debug)]
+pub(crate) struct Translation {
+    pub(crate) tops: Vec<TOp>,
+    /// pc → index into `tops`; `NO_TOP` for fused interiors. Length is
+    /// `code.len() + 1`: the end slot maps to a trailing [`TOp::Bail`]
+    /// so running off the method end re-raises the interpreter's
+    /// past-end fault from the cold path.
+    pub(crate) pc_to_top: Vec<u32>,
+    /// Segment entry requires `frame.regs.len() >= min_regs`; frames
+    /// with fewer registers (possible only through a malformed capsule)
+    /// run cold, where per-operand bounds checks fault exactly like the
+    /// interpreter.
+    pub(crate) min_regs: usize,
+}
+
+/// Promotion / translation-cache counters, drained per migration by
+/// `execute_migration` into `CloneServeStats` (and from there into
+/// `MetricsSnapshot` / `FarmStats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Methods that crossed the hotness threshold (first promotion per
+    /// cache lifetime).
+    pub promotions: u64,
+    /// Successful translations (promotions minus untranslatable).
+    pub translations: u64,
+    /// Hot activations served from the translation cache.
+    pub cache_hits: u64,
+    /// Translations dropped by the FIFO bound.
+    pub cache_evictions: u64,
+    /// Instructions executed by translated segments (subset of
+    /// `VmMetrics::instrs`, which both tiers charge identically).
+    pub tier1_instrs: u64,
+    /// Wall µs spent translating. Observe-only: translation charges no
+    /// virtual time (it's the runtime's own cost, not the app's).
+    pub translation_wall_us: u64,
+}
+
+impl TierStats {
+    /// Drain: return the accumulated counters and reset to zero.
+    pub fn take(&mut self) -> TierStats {
+        std::mem::take(self)
+    }
+}
+
+/// The execution tier of one clone process, selected by
+/// `config.exec_tier`. `Interp` is the ablation baseline (and the only
+/// tier the phone side ever uses); `Tier1` owns the profile state and
+/// translation cache for one process.
+#[derive(Debug)]
+pub enum ExecTier {
+    Interp,
+    Tier1(Box<Tier1Engine>),
+}
+
+impl ExecTier {
+    pub fn from_kind(kind: ExecTierKind) -> ExecTier {
+        match kind {
+            ExecTierKind::Interp => ExecTier::Interp,
+            ExecTierKind::Tier1 => ExecTier::Tier1(Box::new(Tier1Engine::new())),
+        }
+    }
+
+    pub fn kind(&self) -> ExecTierKind {
+        match self {
+            ExecTier::Interp => ExecTierKind::Interp,
+            ExecTier::Tier1(_) => ExecTierKind::Tier1,
+        }
+    }
+
+    /// Run thread `tid` until an exit condition — same contract (and
+    /// bit-identical behaviour) as `interp::run_thread` with `NoHooks`.
+    pub fn run_thread(&mut self, p: &mut Process, tid: u32, fuel: u64) -> Result<RunExit> {
+        match self {
+            ExecTier::Interp => interp::run_thread(p, tid, &mut NoHooks, fuel),
+            ExecTier::Tier1(e) => e.run_thread(p, tid, fuel),
+        }
+    }
+
+    /// Drain the tier counters (zero for the interpreter tier).
+    pub fn take_stats(&mut self) -> TierStats {
+        match self {
+            ExecTier::Interp => TierStats::default(),
+            ExecTier::Tier1(e) => e.stats.take(),
+        }
+    }
+}
+
+/// Profile state + translation cache for one process. Not shared across
+/// processes: hotness is per clone session, and the cache is pinned to
+/// one `Arc<Program>` identity.
+#[derive(Debug)]
+pub struct Tier1Engine {
+    /// Activations of one method before it is promoted.
+    threshold: u32,
+    /// Alternative trigger: this many consecutively interpreted
+    /// instructions inside one method (catches a single long-running
+    /// activation, e.g. `main`'s scan loop on the first trip).
+    instr_threshold: u64,
+    /// Translation-cache bound (methods, FIFO eviction).
+    cache_cap: usize,
+    counts: HashMap<MRef, u32>,
+    /// `None` = promoted but untranslatable (runs cold forever).
+    cache: HashMap<MRef, Option<Arc<Translation>>>,
+    order: VecDeque<MRef>,
+    /// The program the cache was built against. Holding the `Arc` keeps
+    /// the allocation alive, so `Arc::ptr_eq` is ABA-safe.
+    program: Option<Arc<Program>>,
+    stats: TierStats,
+}
+
+impl Default for Tier1Engine {
+    fn default() -> Self {
+        Tier1Engine::new()
+    }
+}
+
+impl Tier1Engine {
+    pub fn new() -> Tier1Engine {
+        Tier1Engine {
+            threshold: 2,
+            instr_threshold: 64,
+            cache_cap: 128,
+            counts: HashMap::new(),
+            cache: HashMap::new(),
+            order: VecDeque::new(),
+            program: None,
+            stats: TierStats::default(),
+        }
+    }
+
+    /// Activation-count promotion threshold (default 2).
+    pub fn with_threshold(mut self, n: u32) -> Self {
+        self.threshold = n.max(1);
+        self
+    }
+
+    /// Translation-cache bound in methods (default 128).
+    pub fn with_cache_cap(mut self, n: usize) -> Self {
+        self.cache_cap = n.max(1);
+        self
+    }
+
+    /// Counters accumulated since the last [`TierStats::take`].
+    pub fn stats(&self) -> &TierStats {
+        &self.stats
+    }
+
+    /// Run thread `tid` until an exit condition, executing hot
+    /// translated spans directly and everything else through the shared
+    /// single-step.
+    pub fn run_thread(&mut self, p: &mut Process, tid: u32, fuel: u64) -> Result<RunExit> {
+        let costs: CostParams = p.env_costs();
+        let instr_cost = p.device.scale_us(costs.instr_us);
+        let program = p.program.clone();
+        let stale = match &self.program {
+            Some(prev) => !Arc::ptr_eq(prev, &program),
+            None => true,
+        };
+        if stale {
+            self.cache.clear();
+            self.counts.clear();
+            self.order.clear();
+            self.program = Some(program.clone());
+        }
+
+        let mut hooks = NoHooks;
+        let mut spent: u64 = 0;
+        let mut last_depth: usize = 0;
+        let mut run_mref: Option<MRef> = None;
+        let mut run_len: u64 = 0;
+
+        loop {
+            if spent >= fuel {
+                return Ok(RunExit::OutOfFuel);
+            }
+            // Peek the current activation. Anything that is not a
+            // runnable thread with a frame is the cold path's job — it
+            // owns those exit/error semantics.
+            let peek = {
+                let t = p.thread(tid)?;
+                if t.status == ThreadStatus::Runnable {
+                    t.frames
+                        .last()
+                        .map(|f| (f.method, f.pc, f.regs.len(), t.frames.len()))
+                } else {
+                    None
+                }
+            };
+            if let Some((mref, pc, regs_len, depth)) = peek {
+                // Hotness profile: a new activation is a deeper stack
+                // than last seen, or the first frame observed this run
+                // (a resumed span counts as an entry).
+                let entered = depth > last_depth || last_depth == 0;
+                last_depth = depth;
+                if run_mref != Some(mref) {
+                    run_mref = Some(mref);
+                    run_len = 0;
+                }
+                if entered {
+                    let c = {
+                        let e = self.counts.entry(mref).or_insert(0);
+                        *e = e.saturating_add(1);
+                        *e
+                    };
+                    if c >= self.threshold {
+                        if self.cache.contains_key(&mref) {
+                            self.stats.cache_hits += 1;
+                        } else {
+                            self.promote(&program, mref);
+                        }
+                    }
+                } else if run_len == self.instr_threshold && !self.cache.contains_key(&mref) {
+                    self.promote(&program, mref);
+                }
+
+                let tr = self.cache.get(&mref).and_then(|e| e.clone());
+                if let Some(tr) = tr {
+                    let start = tr.pc_to_top.get(pc).copied().unwrap_or(NO_TOP);
+                    let enterable = start != NO_TOP
+                        && !matches!(tr.tops[start as usize], TOp::Bail { .. })
+                        && regs_len >= tr.min_regs;
+                    if enterable {
+                        match run_segment(
+                            &tr,
+                            start,
+                            p,
+                            tid,
+                            &mut spent,
+                            fuel,
+                            instr_cost,
+                            &mut self.stats,
+                        )? {
+                            SegExit::Exit(exit) => return Ok(exit),
+                            // Re-check fuel/status/profile, then take
+                            // the cold path for the bail pc.
+                            SegExit::Bail => continue,
+                        }
+                    }
+                }
+            }
+            // Cold path: exactly one shared-semantics step.
+            match ops::step_one(p, &program, tid, &mut hooks, &costs, instr_cost)? {
+                Some(exit) => return Ok(exit),
+                None => {
+                    spent += 1;
+                    run_len += 1;
+                }
+            }
+        }
+    }
+
+    /// Promote `mref`: translate (or record untranslatable) and insert
+    /// into the bounded cache.
+    fn promote(&mut self, program: &Program, mref: MRef) {
+        self.stats.promotions += 1;
+        let t0 = Instant::now();
+        let tr = translate(program.method(mref), program);
+        self.stats.translation_wall_us += t0.elapsed().as_micros() as u64;
+        if tr.is_some() {
+            self.stats.translations += 1;
+        }
+        if self.cache.len() >= self.cache_cap {
+            if let Some(old) = self.order.pop_front() {
+                self.cache.remove(&old);
+                self.stats.cache_evictions += 1;
+            }
+        }
+        self.order.push_back(mref);
+        self.cache.insert(mref, tr.map(Arc::new));
+    }
+}
+
+/// Why a segment returned control to the outer loop.
+enum SegExit {
+    /// A thread exit condition (completion can't happen in-segment —
+    /// `Return` bails — so this is fuel or a partition point reached via
+    /// cold re-entry; in practice only `OutOfFuel` originates here).
+    Exit(RunExit),
+    /// `frame.pc` points at an instruction the segment can't execute;
+    /// the cold path takes exactly one step.
+    Bail,
+}
+
+/// Translate one method, or `None` if any statically suspect
+/// instruction makes lazy cold-path faulting the only safe behaviour.
+pub(crate) fn translate(method: &MethodDef, program: &Program) -> Option<Translation> {
+    let code = &method.code;
+    let len = code.len();
+    let nregs = method.nregs;
+
+    // Pass 0: validate light ops, collect branch targets, bound regs.
+    let mut is_target = vec![false; len + 1];
+    let mut min_regs: usize = 0;
+    {
+        let mut reg = |r: u8, min_regs: &mut usize| {
+            *min_regs = (*min_regs).max(r as usize + 1);
+        };
+        for ins in code {
+            match ins {
+                Instr::Nop => {}
+                Instr::Const(d, _) | Instr::ConstF(d, _) => reg(*d, &mut min_regs),
+                Instr::Move(d, s)
+                | Instr::IntToFloat(d, s)
+                | Instr::FloatToInt(d, s)
+                | Instr::ArrLen(d, s) => {
+                    reg(*d, &mut min_regs);
+                    reg(*s, &mut min_regs);
+                }
+                Instr::IntBin(_, d, a, b)
+                | Instr::FloatBin(_, d, a, b)
+                | Instr::Cmp(_, d, a, b)
+                | Instr::ArrGet(d, a, b)
+                | Instr::ArrPut(d, a, b) => {
+                    reg(*d, &mut min_regs);
+                    reg(*a, &mut min_regs);
+                    reg(*b, &mut min_regs);
+                }
+                Instr::IfZ(r, _) | Instr::IfNZ(r, _) => reg(*r, &mut min_regs),
+                Instr::IfCmp(_, a, b, _) => {
+                    reg(*a, &mut min_regs);
+                    reg(*b, &mut min_regs);
+                }
+                Instr::Goto(_) => {}
+                Instr::GetField(d, o, _) => {
+                    reg(*d, &mut min_regs);
+                    reg(*o, &mut min_regs);
+                }
+                Instr::PutField(o, _, s) => {
+                    reg(*o, &mut min_regs);
+                    reg(*s, &mut min_regs);
+                }
+                Instr::GetStatic(d, class, idx) => {
+                    reg(*d, &mut min_regs);
+                    let ok = program
+                        .classes
+                        .get(class.0 as usize)
+                        .map_or(false, |c| (*idx as usize) < c.statics.len());
+                    if !ok {
+                        // The interpreter faults only if this executes;
+                        // keep that laziness by not translating.
+                        return None;
+                    }
+                }
+                // Heavy ops bail to the cold path — their operands are
+                // validated (lazily) there.
+                Instr::Invoke { .. }
+                | Instr::Return(_)
+                | Instr::New(..)
+                | Instr::PutStatic(..)
+                | Instr::NewArray(..)
+                | Instr::CcStart(_)
+                | Instr::CcStop(_) => {}
+            }
+            if let Some(t) = ins.branch_target() {
+                if (t as usize) > len {
+                    // Taken, this branch faults on the next fetch; keep
+                    // it lazy.
+                    return None;
+                }
+                is_target[t as usize] = true;
+            }
+        }
+    }
+    if min_regs > nregs {
+        // Some light op indexes past the frame — the interpreter faults
+        // lazily when (and only when) it executes.
+        return None;
+    }
+
+    // Pass 1: emit tops, fusing adjacent runs whose interiors are not
+    // branch targets; branch `t_top`s are patched after.
+    let mut tops: Vec<TOp> = Vec::with_capacity(len + 1);
+    let mut pc_to_top = vec![NO_TOP; len + 1];
+    let mut pc = 0usize;
+    while pc < len {
+        pc_to_top[pc] = tops.len() as u32;
+        let src = pc as u32;
+        let fuse2 = pc + 1 < len && !is_target[pc + 1];
+        let fuse3 = pc + 2 < len && !is_target[pc + 1] && !is_target[pc + 2];
+        if let Instr::Const(c, k) = code[pc] {
+            if fuse2 {
+                if let Instr::IntBin(op, d, a, b) = code[pc + 1] {
+                    if fuse3 {
+                        if let Instr::Goto(t) = code[pc + 2] {
+                            tops.push(TOp::ConstIntBinGoto {
+                                src,
+                                c,
+                                k,
+                                op,
+                                d,
+                                a,
+                                b,
+                                t_top: 0,
+                                t_pc: t,
+                            });
+                            pc += 3;
+                            continue;
+                        }
+                    }
+                    tops.push(TOp::ConstIntBin { src, c, k, op, d, a, b });
+                    pc += 2;
+                    continue;
+                }
+            }
+        }
+        if let Instr::IntBin(op, d, a, b) = code[pc] {
+            if fuse2 {
+                if let Instr::Goto(t) = code[pc + 1] {
+                    tops.push(TOp::IntBinGoto {
+                        src,
+                        op,
+                        d,
+                        a,
+                        b,
+                        t_top: 0,
+                        t_pc: t,
+                    });
+                    pc += 2;
+                    continue;
+                }
+            }
+        }
+        let top = match &code[pc] {
+            Instr::Nop => TOp::Nop { src },
+            Instr::Const(d, v) => TOp::ConstI { src, d: *d, v: *v },
+            Instr::ConstF(d, v) => TOp::ConstF { src, d: *d, v: *v },
+            Instr::Move(d, s) => TOp::Move { src, d: *d, s: *s },
+            Instr::IntBin(op, d, a, b) => TOp::IntBin {
+                src,
+                op: *op,
+                d: *d,
+                a: *a,
+                b: *b,
+            },
+            Instr::FloatBin(op, d, a, b) => TOp::FloatBin {
+                src,
+                op: *op,
+                d: *d,
+                a: *a,
+                b: *b,
+            },
+            Instr::Cmp(op, d, a, b) => TOp::Cmp {
+                src,
+                op: *op,
+                d: *d,
+                a: *a,
+                b: *b,
+            },
+            Instr::IfZ(r, t) => TOp::IfZ {
+                src,
+                r: *r,
+                t_top: 0,
+                t_pc: *t,
+            },
+            Instr::IfNZ(r, t) => TOp::IfNZ {
+                src,
+                r: *r,
+                t_top: 0,
+                t_pc: *t,
+            },
+            Instr::IfCmp(op, a, b, t) => TOp::IfCmp {
+                src,
+                op: *op,
+                a: *a,
+                b: *b,
+                t_top: 0,
+                t_pc: *t,
+            },
+            Instr::Goto(t) => TOp::Goto {
+                src,
+                t_top: 0,
+                t_pc: *t,
+            },
+            Instr::GetField(d, o, idx) => TOp::GetField {
+                src,
+                d: *d,
+                o: *o,
+                idx: *idx,
+            },
+            Instr::PutField(o, idx, s) => TOp::PutField {
+                src,
+                o: *o,
+                idx: *idx,
+                s: *s,
+            },
+            Instr::GetStatic(d, class, idx) => TOp::GetStatic {
+                src,
+                d: *d,
+                class: class.0,
+                idx: *idx,
+            },
+            Instr::ArrGet(d, arr, idx) => TOp::ArrGet {
+                src,
+                d: *d,
+                arr: *arr,
+                idx: *idx,
+            },
+            Instr::ArrPut(arr, idx, s) => TOp::ArrPut {
+                src,
+                arr: *arr,
+                idx: *idx,
+                s: *s,
+            },
+            Instr::ArrLen(d, arr) => TOp::ArrLen {
+                src,
+                d: *d,
+                arr: *arr,
+            },
+            Instr::IntToFloat(d, s) => TOp::IntToFloat { src, d: *d, s: *s },
+            Instr::FloatToInt(d, s) => TOp::FloatToInt { src, d: *d, s: *s },
+            Instr::Invoke { .. }
+            | Instr::Return(_)
+            | Instr::New(..)
+            | Instr::PutStatic(..)
+            | Instr::NewArray(..)
+            | Instr::CcStart(_)
+            | Instr::CcStop(_) => TOp::Bail { src },
+        };
+        tops.push(top);
+        pc += 1;
+    }
+    // Running off the end bails so the cold path raises the
+    // interpreter's past-end fault verbatim.
+    pc_to_top[len] = tops.len() as u32;
+    tops.push(TOp::Bail { src: len as u32 });
+
+    // Patch branch targets to translated-op indices. Every in-method
+    // target has a top (fusion never swallows a branch target); a
+    // method-end target resolves to the trailing bail.
+    for top in &mut tops {
+        match top {
+            TOp::IfZ { t_top, t_pc, .. }
+            | TOp::IfNZ { t_top, t_pc, .. }
+            | TOp::IfCmp { t_top, t_pc, .. }
+            | TOp::Goto { t_top, t_pc, .. }
+            | TOp::IntBinGoto { t_top, t_pc, .. }
+            | TOp::ConstIntBinGoto { t_top, t_pc, .. } => {
+                let ti = pc_to_top[*t_pc as usize];
+                if ti == NO_TOP {
+                    return None;
+                }
+                *t_top = ti;
+            }
+            _ => {}
+        }
+    }
+
+    Some(Translation {
+        tops,
+        pc_to_top,
+        min_regs,
+    })
+}
+
+/// Charge bookkeeping shared by every segment component: fuel gate,
+/// virtual-clock charge, metrics, pc advance — byte-for-byte the
+/// interpreter's per-instruction sequence.
+struct SegCtx<'a> {
+    clock: &'a mut VirtualClock,
+    metrics: &'a mut VmMetrics,
+    cpu_us: &'a mut f64,
+    spent: &'a mut u64,
+    fuel: u64,
+    instr_cost: f64,
+    stats: &'a mut TierStats,
+}
+
+impl SegCtx<'_> {
+    /// Returns `false` when the fuel budget is exhausted — the component
+    /// at `src` was NOT executed and `frame.pc` now points at it.
+    #[inline(always)]
+    fn charge(&mut self, frame: &mut Frame, src: u32) -> bool {
+        if *self.spent >= self.fuel {
+            frame.pc = src as usize;
+            return false;
+        }
+        self.clock.charge_us(self.instr_cost);
+        self.metrics.instrs += 1;
+        *self.spent += 1;
+        *self.cpu_us += self.instr_cost;
+        self.stats.tier1_instrs += 1;
+        frame.pc = src as usize + 1;
+        true
+    }
+}
+
+#[inline(always)]
+fn ireg(frame: &Frame, r: u8) -> Result<i64> {
+    frame.regs[r as usize]
+        .as_int()
+        .ok_or_else(|| CloneCloudError::vm(format!("r{r} is not an int")))
+}
+
+#[inline(always)]
+fn freg(frame: &Frame, r: u8) -> Result<f64> {
+    frame.regs[r as usize]
+        .as_float()
+        .ok_or_else(|| CloneCloudError::vm(format!("r{r} is not a float")))
+}
+
+#[inline(always)]
+fn rref(frame: &Frame, r: u8) -> Result<ObjId> {
+    frame.regs[r as usize]
+        .as_ref()
+        .ok_or_else(|| CloneCloudError::vm(format!("r{r} is not a reference (null deref?)")))
+}
+
+/// Execute translated ops starting at `start` until a bail, a fault, or
+/// fuel exhaustion. Holds split borrows of the process for the whole
+/// segment — no per-instruction thread lookups — while routing every
+/// heap store through `Heap::get_mut` (the write barrier) exactly like
+/// the interpreter.
+#[allow(clippy::too_many_arguments)]
+fn run_segment(
+    tr: &Translation,
+    start: u32,
+    p: &mut Process,
+    tid: u32,
+    spent: &mut u64,
+    fuel: u64,
+    instr_cost: f64,
+    stats: &mut TierStats,
+) -> Result<SegExit> {
+    let Process {
+        ref mut heap,
+        ref mut clock,
+        ref mut metrics,
+        ref mut threads,
+        ref statics,
+        ..
+    } = *p;
+    let Some(t) = threads.get_mut(tid as usize) else {
+        return Ok(SegExit::Bail);
+    };
+    let VmThread {
+        ref mut frames,
+        ref mut cpu_us,
+        ..
+    } = *t;
+    let Some(frame) = frames.last_mut() else {
+        return Ok(SegExit::Bail);
+    };
+
+    let mut cx = SegCtx {
+        clock,
+        metrics,
+        cpu_us,
+        spent,
+        fuel,
+        instr_cost,
+        stats,
+    };
+
+    macro_rules! fuel_gate {
+        ($src:expr) => {
+            if !cx.charge(frame, $src) {
+                return Ok(SegExit::Exit(RunExit::OutOfFuel));
+            }
+        };
+    }
+    macro_rules! int_bin {
+        ($op:expr, $d:expr, $a:expr, $b:expr) => {{
+            let (x, y) = (ireg(frame, $a)?, ireg(frame, $b)?);
+            let v =
+                eval_int($op, x, y).ok_or_else(|| CloneCloudError::vm("division by zero"))?;
+            frame.regs[$d as usize] = Value::Int(v);
+        }};
+    }
+
+    let mut ti = start as usize;
+    loop {
+        let Some(top) = tr.tops.get(ti).copied() else {
+            return Ok(SegExit::Bail);
+        };
+        match top {
+            TOp::Nop { src } => {
+                fuel_gate!(src);
+            }
+            TOp::ConstI { src, d, v } => {
+                fuel_gate!(src);
+                frame.regs[d as usize] = Value::Int(v);
+            }
+            TOp::ConstF { src, d, v } => {
+                fuel_gate!(src);
+                frame.regs[d as usize] = Value::Float(v);
+            }
+            TOp::Move { src, d, s } => {
+                fuel_gate!(src);
+                frame.regs[d as usize] = frame.regs[s as usize];
+            }
+            TOp::IntBin { src, op, d, a, b } => {
+                fuel_gate!(src);
+                int_bin!(op, d, a, b);
+            }
+            TOp::FloatBin { src, op, d, a, b } => {
+                fuel_gate!(src);
+                let (x, y) = (freg(frame, a)?, freg(frame, b)?);
+                frame.regs[d as usize] = Value::Float(eval_float(op, x, y));
+            }
+            TOp::Cmp { src, op, d, a, b } => {
+                fuel_gate!(src);
+                let r = ops::cmp_values(op, frame.regs[a as usize], frame.regs[b as usize])?;
+                frame.regs[d as usize] = Value::Int(r as i64);
+            }
+            TOp::IfZ { src, r, t_top, t_pc } => {
+                fuel_gate!(src);
+                if !frame.regs[r as usize].is_truthy() {
+                    frame.pc = t_pc as usize;
+                    ti = t_top as usize;
+                    continue;
+                }
+            }
+            TOp::IfNZ { src, r, t_top, t_pc } => {
+                fuel_gate!(src);
+                if frame.regs[r as usize].is_truthy() {
+                    frame.pc = t_pc as usize;
+                    ti = t_top as usize;
+                    continue;
+                }
+            }
+            TOp::IfCmp {
+                src,
+                op,
+                a,
+                b,
+                t_top,
+                t_pc,
+            } => {
+                fuel_gate!(src);
+                if ops::cmp_values(op, frame.regs[a as usize], frame.regs[b as usize])? {
+                    frame.pc = t_pc as usize;
+                    ti = t_top as usize;
+                    continue;
+                }
+            }
+            TOp::Goto { src, t_top, t_pc } => {
+                fuel_gate!(src);
+                frame.pc = t_pc as usize;
+                ti = t_top as usize;
+                continue;
+            }
+            TOp::GetField { src, d, o, idx } => {
+                fuel_gate!(src);
+                let oid = rref(frame, o)?;
+                let obj = heap.get(oid)?;
+                let v = match &obj.body {
+                    ObjBody::Fields(fs) => *fs.get(idx as usize).ok_or_else(|| {
+                        CloneCloudError::vm(format!("field index {idx} out of range"))
+                    })?,
+                    _ => return Err(CloneCloudError::vm("getfield on array")),
+                };
+                frame.regs[d as usize] = v;
+            }
+            TOp::PutField { src, o, idx, s } => {
+                fuel_gate!(src);
+                let v = frame.regs[s as usize];
+                let oid = rref(frame, o)?;
+                let obj = heap.get_mut(oid)?;
+                match &mut obj.body {
+                    ObjBody::Fields(fs) => {
+                        let slot = fs.get_mut(idx as usize).ok_or_else(|| {
+                            CloneCloudError::vm(format!("field index {idx} out of range"))
+                        })?;
+                        *slot = v;
+                    }
+                    _ => return Err(CloneCloudError::vm("putfield on array")),
+                }
+            }
+            TOp::GetStatic { src, d, class, idx } => {
+                fuel_gate!(src);
+                let v = *statics
+                    .get(class as usize)
+                    .and_then(|s| s.get(idx as usize))
+                    .ok_or_else(|| CloneCloudError::vm("static index out of range"))?;
+                frame.regs[d as usize] = v;
+            }
+            TOp::ArrGet { src, d, arr, idx } => {
+                fuel_gate!(src);
+                let oid = rref(frame, arr)?;
+                let i = ireg(frame, idx)? as usize;
+                let v = match &heap.get(oid)?.body {
+                    ObjBody::ByteArray(b) => {
+                        Value::Int(*b.get(i).ok_or_else(ops::oob)? as i64)
+                    }
+                    ObjBody::FloatArray(f) => {
+                        Value::Float(*f.get(i).ok_or_else(ops::oob)? as f64)
+                    }
+                    ObjBody::RefArray(v) => *v.get(i).ok_or_else(ops::oob)?,
+                    ObjBody::Fields(_) => {
+                        return Err(CloneCloudError::vm("arrget on object"))
+                    }
+                };
+                frame.regs[d as usize] = v;
+            }
+            TOp::ArrPut { src, arr, idx, s } => {
+                fuel_gate!(src);
+                let v = frame.regs[s as usize];
+                let oid = rref(frame, arr)?;
+                let i = ireg(frame, idx)? as usize;
+                match &mut heap.get_mut(oid)?.body {
+                    ObjBody::ByteArray(b) => {
+                        let slot = b.get_mut(i).ok_or_else(ops::oob)?;
+                        *slot = v.as_int().ok_or_else(|| {
+                            CloneCloudError::vm("byte array stores require ints")
+                        })? as u8;
+                    }
+                    ObjBody::FloatArray(f) => {
+                        let slot = f.get_mut(i).ok_or_else(ops::oob)?;
+                        *slot = v.as_float().ok_or_else(|| {
+                            CloneCloudError::vm("float array stores require numbers")
+                        })? as f32;
+                    }
+                    ObjBody::RefArray(rv) => {
+                        let slot = rv.get_mut(i).ok_or_else(ops::oob)?;
+                        *slot = v;
+                    }
+                    ObjBody::Fields(_) => {
+                        return Err(CloneCloudError::vm("arrput on object"))
+                    }
+                }
+            }
+            TOp::ArrLen { src, d, arr } => {
+                fuel_gate!(src);
+                let oid = rref(frame, arr)?;
+                let len = match &heap.get(oid)?.body {
+                    ObjBody::ByteArray(b) => b.len(),
+                    ObjBody::FloatArray(f) => f.len(),
+                    ObjBody::RefArray(v) => v.len(),
+                    ObjBody::Fields(_) => {
+                        return Err(CloneCloudError::vm("arrlen on object"))
+                    }
+                };
+                frame.regs[d as usize] = Value::Int(len as i64);
+            }
+            TOp::IntToFloat { src, d, s } => {
+                fuel_gate!(src);
+                let v = ireg(frame, s)?;
+                frame.regs[d as usize] = Value::Float(v as f64);
+            }
+            TOp::FloatToInt { src, d, s } => {
+                fuel_gate!(src);
+                let v = freg(frame, s)?;
+                frame.regs[d as usize] = Value::Int(v as i64);
+            }
+            TOp::ConstIntBin {
+                src,
+                c,
+                k,
+                op,
+                d,
+                a,
+                b,
+            } => {
+                fuel_gate!(src);
+                frame.regs[c as usize] = Value::Int(k);
+                fuel_gate!(src + 1);
+                int_bin!(op, d, a, b);
+            }
+            TOp::IntBinGoto {
+                src,
+                op,
+                d,
+                a,
+                b,
+                t_top,
+                t_pc,
+            } => {
+                fuel_gate!(src);
+                int_bin!(op, d, a, b);
+                fuel_gate!(src + 1);
+                frame.pc = t_pc as usize;
+                ti = t_top as usize;
+                continue;
+            }
+            TOp::ConstIntBinGoto {
+                src,
+                c,
+                k,
+                op,
+                d,
+                a,
+                b,
+                t_top,
+                t_pc,
+            } => {
+                fuel_gate!(src);
+                frame.regs[c as usize] = Value::Int(k);
+                fuel_gate!(src + 1);
+                int_bin!(op, d, a, b);
+                fuel_gate!(src + 2);
+                frame.pc = t_pc as usize;
+                ti = t_top as usize;
+                continue;
+            }
+            TOp::Bail { src } => {
+                frame.pc = src as usize;
+                return Ok(SegExit::Bail);
+            }
+        }
+        ti += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::appvm::bytecode::ClassId;
+    use crate::appvm::class::ClassDef;
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::value::Value;
+    use crate::device::{DeviceSpec, Location};
+    use crate::vfs::SimFs;
+
+    fn program_with_main(code: Vec<Instr>, nregs: usize) -> Arc<Program> {
+        let mut p = Program::new();
+        let mut c = ClassDef::new("App", false);
+        c.add_static("s");
+        c.add_method(MethodDef {
+            name: "main".into(),
+            nargs: 0,
+            nregs,
+            code,
+            native: None,
+            pinned: true,
+            native_state: false,
+            migration_point: None,
+        });
+        p.add_class(c);
+        p.into_shared()
+    }
+
+    fn process(program: &Arc<Program>) -> Process {
+        let mut p = Process::new(
+            program.clone(),
+            DeviceSpec::clone_desktop(),
+            Location::Clone,
+            NodeEnv::with_rust_compute(SimFs::new()),
+        );
+        let main = program.entry().unwrap();
+        p.spawn_thread(main, &[]).unwrap();
+        p
+    }
+
+    /// Sum loop with a `Const`+`IntBin` pair in the body:
+    ///   3: Const r3 1 ; 4: add r1 r1 r3 ; 5: add r0 r0 r1 ;
+    ///   6: iflt r1 r2 -> 3 ; 7: ret r0
+    fn sum_kernel(limit: i64) -> Vec<Instr> {
+        vec![
+            Instr::Const(0, 0),
+            Instr::Const(1, 0),
+            Instr::Const(2, limit),
+            Instr::Const(3, 1),
+            Instr::IntBin(IntOp::Add, 1, 1, 3),
+            Instr::IntBin(IntOp::Add, 0, 0, 1),
+            Instr::IfCmp(CmpOp::Lt, 1, 2, 4),
+            Instr::Return(Some(0)),
+        ]
+    }
+
+    /// Back-edge kernel exercising `Const`+`IntBin`+`Goto` fusion:
+    ///   3: ifge r1 r2 -> 8 ; 4: add r0 r0 r1 ;
+    ///   5: Const r3 1 ; 6: add r1 r1 r3 ; 7: goto 3 ; 8: ret r0
+    fn goto_kernel(limit: i64) -> Vec<Instr> {
+        vec![
+            Instr::Const(0, 0),
+            Instr::Const(1, 0),
+            Instr::Const(2, limit),
+            Instr::IfCmp(CmpOp::Ge, 1, 2, 8),
+            Instr::IntBin(IntOp::Add, 0, 0, 1),
+            Instr::Const(3, 1),
+            Instr::IntBin(IntOp::Add, 1, 1, 3),
+            Instr::Goto(3),
+            Instr::Return(Some(0)),
+        ]
+    }
+
+    fn fingerprint(p: &Process) -> (u64, u64, f64, f64) {
+        let t = p.thread(0).unwrap();
+        (
+            p.metrics.instrs,
+            p.clock.now_us().to_bits(),
+            t.cpu_us,
+            t.frames.last().map_or(-1.0, |f| f.pc as f64),
+        )
+    }
+
+    fn run_both(code: Vec<Instr>, nregs: usize, fuel: u64) -> (Result<RunExit>, Result<RunExit>) {
+        let prog = program_with_main(code, nregs);
+        let mut base = process(&prog);
+        let r0 = interp::run_thread(&mut base, 0, &mut NoHooks, fuel);
+        let mut tiered = process(&prog);
+        let mut tier = ExecTier::Tier1(Box::new(Tier1Engine::new().with_threshold(1)));
+        let r1 = tier.run_thread(&mut tiered, 0, fuel);
+        assert_eq!(fingerprint(&base), fingerprint(&tiered), "state fingerprint");
+        (r0, r1)
+    }
+
+    #[test]
+    fn translation_fuses_and_maps_interiors() {
+        let prog = program_with_main(goto_kernel(10), 4);
+        let main = prog.entry().unwrap();
+        let tr = translate(prog.method(main), &prog).expect("translatable");
+        assert!(tr
+            .tops
+            .iter()
+            .any(|t| matches!(t, TOp::ConstIntBinGoto { .. })));
+        // Fused interiors (pcs 6, 7) have no top of their own.
+        assert_eq!(tr.pc_to_top[6], NO_TOP);
+        assert_eq!(tr.pc_to_top[7], NO_TOP);
+        // The loop head is a real entry and branch targets resolve.
+        assert_ne!(tr.pc_to_top[3], NO_TOP);
+        assert_eq!(tr.min_regs, 4);
+        // Return is a bail; the end slot maps to the trailing bail.
+        assert!(matches!(tr.tops[tr.pc_to_top[8] as usize], TOp::Bail { .. }));
+        assert!(matches!(
+            tr.tops[tr.pc_to_top[9] as usize],
+            TOp::Bail { .. }
+        ));
+    }
+
+    #[test]
+    fn tier1_matches_interp_on_loop_kernels() {
+        let (r0, r1) = run_both(sum_kernel(100), 4, u64::MAX);
+        assert_eq!(
+            r0.unwrap(),
+            RunExit::Completed(Some(Value::Int(5050)))
+        );
+        assert_eq!(r1.unwrap(), RunExit::Completed(Some(Value::Int(5050))));
+
+        let (r0, r1) = run_both(goto_kernel(50), 4, u64::MAX);
+        assert_eq!(
+            r0.unwrap(),
+            RunExit::Completed(Some(Value::Int(1225)))
+        );
+        assert_eq!(r1.unwrap(), RunExit::Completed(Some(Value::Int(1225))));
+    }
+
+    #[test]
+    fn fuel_exhaustion_is_bit_identical_even_mid_fusion() {
+        // Fuel values land on every phase of the fused bodies, including
+        // interiors; resuming from an interior pc cold-steps back onto a
+        // translated boundary.
+        for fuel in 1..40u64 {
+            let prog = program_with_main(goto_kernel(6), 4);
+            let mut base = process(&prog);
+            let r0 = interp::run_thread(&mut base, 0, &mut NoHooks, fuel).unwrap();
+            let mut tiered = process(&prog);
+            let mut tier = ExecTier::Tier1(Box::new(Tier1Engine::new().with_threshold(1)));
+            let r1 = tier.run_thread(&mut tiered, 0, fuel).unwrap();
+            assert_eq!(r0, r1, "exit at fuel {fuel}");
+            assert_eq!(
+                fingerprint(&base),
+                fingerprint(&tiered),
+                "state at fuel {fuel}"
+            );
+            // Resume both to completion; results must still agree.
+            let r0 = interp::run_thread(&mut base, 0, &mut NoHooks, u64::MAX).unwrap();
+            let r1 = tier.run_thread(&mut tiered, 0, u64::MAX).unwrap();
+            assert_eq!(r0, r1, "resumed exit at fuel {fuel}");
+            assert_eq!(fingerprint(&base), fingerprint(&tiered));
+        }
+    }
+
+    #[test]
+    fn faults_match_the_interpreter() {
+        // Division by zero inside a translated segment.
+        let code = vec![
+            Instr::Const(0, 7),
+            Instr::Const(1, 0),
+            Instr::IntBin(IntOp::Div, 2, 0, 1),
+            Instr::Return(Some(2)),
+        ];
+        let prog = program_with_main(code, 3);
+        let mut base = process(&prog);
+        let e0 = interp::run_thread(&mut base, 0, &mut NoHooks, u64::MAX).unwrap_err();
+        let mut tiered = process(&prog);
+        let mut tier = ExecTier::Tier1(Box::new(Tier1Engine::new().with_threshold(1)));
+        let e1 = tier.run_thread(&mut tiered, 0, u64::MAX).unwrap_err();
+        assert_eq!(e0.to_string(), e1.to_string());
+        assert_eq!(fingerprint(&base), fingerprint(&tiered), "pc past fault");
+
+        // A light op indexing past the frame: untranslatable, faults
+        // identically from the cold path.
+        let code = vec![Instr::Const(200, 1), Instr::Return(None)];
+        let prog = program_with_main(code, 2);
+        let main = prog.entry().unwrap();
+        assert!(translate(prog.method(main), &prog).is_none());
+        let mut base = process(&prog);
+        let e0 = interp::run_thread(&mut base, 0, &mut NoHooks, u64::MAX).unwrap_err();
+        let mut tiered = process(&prog);
+        let mut tier = ExecTier::Tier1(Box::new(Tier1Engine::new().with_threshold(1)));
+        let e1 = tier.run_thread(&mut tiered, 0, u64::MAX).unwrap_err();
+        assert_eq!(e0.to_string(), e1.to_string());
+    }
+
+    #[test]
+    fn cache_invalidated_when_program_changes() {
+        let prog_a = program_with_main(sum_kernel(10), 4);
+        let mut engine = Tier1Engine::new().with_threshold(1);
+        let mut pa = process(&prog_a);
+        engine.run_thread(&mut pa, 0, u64::MAX).unwrap();
+        assert_eq!(engine.stats().translations, 1);
+
+        // Same bytecode, different Arc identity: the cache must rebuild.
+        let prog_b = program_with_main(sum_kernel(10), 4);
+        let mut pb = process(&prog_b);
+        engine.run_thread(&mut pb, 0, u64::MAX).unwrap();
+        assert_eq!(engine.stats().translations, 2, "stale cache reused");
+        assert!(engine.stats().tier1_instrs > 0);
+    }
+
+    #[test]
+    fn cache_bound_evicts_fifo() {
+        // main + helper both hot, cache capped at one translation.
+        let mut p = Program::new();
+        let mut c = ClassDef::new("App", false);
+        let helper_code = sum_kernel(5);
+        c.add_method(MethodDef {
+            name: "main".into(),
+            nargs: 0,
+            nregs: 2,
+            code: vec![
+                Instr::Const(0, 0),
+                // 1: call helper twice so both cross threshold 1.
+                Instr::Invoke {
+                    mref: MRef {
+                        class: ClassId(0),
+                        method: crate::appvm::bytecode::MethodId(1),
+                    },
+                    ret: Some(1),
+                    args: vec![],
+                },
+                Instr::Invoke {
+                    mref: MRef {
+                        class: ClassId(0),
+                        method: crate::appvm::bytecode::MethodId(1),
+                    },
+                    ret: Some(1),
+                    args: vec![],
+                },
+                Instr::Return(Some(1)),
+            ],
+            native: None,
+            pinned: true,
+            native_state: false,
+            migration_point: None,
+        });
+        c.add_method(MethodDef {
+            name: "helper".into(),
+            nargs: 0,
+            nregs: 4,
+            code: helper_code,
+            native: None,
+            pinned: false,
+            native_state: false,
+            migration_point: None,
+        });
+        p.add_class(c);
+        let prog = p.into_shared();
+        let mut proc = process(&prog);
+        let mut engine = Tier1Engine::new().with_threshold(1).with_cache_cap(1);
+        let r = engine.run_thread(&mut proc, 0, u64::MAX).unwrap();
+        assert_eq!(r, RunExit::Completed(Some(Value::Int(15))));
+        assert!(engine.stats().cache_evictions >= 1, "{:?}", engine.stats());
+    }
+}

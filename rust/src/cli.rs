@@ -221,7 +221,8 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         let clone = build_process(
             app.as_ref(), rewritten, size, &cfg, Location::Clone, backend, false,
         )?;
-        let mut channel = InlineClone::new(clone, cfg.costs.clone());
+        let mut channel =
+            InlineClone::new(clone, cfg.costs.clone()).with_exec_tier(cfg.exec_tier);
         if cfg.delta_migration {
             channel = channel.with_delta();
         }
@@ -312,7 +313,8 @@ fn cmd_clone_serve(flags: &HashMap<String, String>) -> Result<()> {
             Box::new(move |fs| {
                 crate::appvm::NodeEnv::new(fs, default_backend(Path::new(&artifacts)))
             }),
-        );
+        )
+        .with_exec_tier(cfg.exec_tier);
         match srv.serve() {
             Ok(stats) => println!("session done: {} migrations", stats.migrations),
             Err(e) => eprintln!("session error: {e}"),
@@ -339,7 +341,8 @@ fn cmd_farm(flags: &HashMap<String, String>) -> Result<()> {
         PlacementPolicy::parse(p)?; // validate now, fail fast
         params.policy = p.clone();
     }
-    let farm_cfg = FarmConfig::from_params(&params, cfg.zygote_objects, cfg.seed)?;
+    let mut farm_cfg = FarmConfig::from_params(&params, cfg.zygote_objects, cfg.seed)?;
+    farm_cfg.exec_tier = cfg.exec_tier;
 
     if let Some(addr) = flags.get("listen") {
         // Serve-many gateway for a real app over TCP.
@@ -569,7 +572,8 @@ fn cmd_policy(flags: &HashMap<String, String>) -> Result<()> {
 
     // Calibration: a forced-local run prices the span for the engine.
     let mut cal_phone = fork(Location::Mobile);
-    let mut cal_channel = InlineClone::new(fork(Location::Clone), cfg.costs.clone());
+    let mut cal_channel =
+        InlineClone::new(fork(Location::Clone), cfg.costs.clone()).with_exec_tier(cfg.exec_tier);
     let cal = run_distributed_with(
         &mut cal_phone,
         &mut cal_channel,
@@ -584,7 +588,8 @@ fn cmd_policy(flags: &HashMap<String, String>) -> Result<()> {
     let mut engine = PolicyEngine::from_params(&cfg.policy)?;
     engine.set_span(0, SpanCost { local_ms, clone_ms });
     let mut phone = fork(Location::Mobile);
-    let mut channel = InlineClone::new(fork(Location::Clone), cfg.costs.clone());
+    let mut channel =
+        InlineClone::new(fork(Location::Clone), cfg.costs.clone()).with_exec_tier(cfg.exec_tier);
     if cfg.delta_migration {
         channel = channel.with_delta();
     }
@@ -690,6 +695,7 @@ fn cmd_trace(flags: &HashMap<String, String>) -> Result<()> {
             zygote_seed: cfg.seed,
             fuel: 2_000_000_000,
             slot_gc_interval: cfg.farm.slot_gc_interval,
+            exec_tier: cfg.exec_tier,
         },
         cfg.costs.clone(),
         Arc::new(crate::appvm::NodeEnv::with_rust_compute),

@@ -13,6 +13,36 @@ use crate::device::DeviceSpec;
 use crate::error::{CloneCloudError, Result};
 use crate::util::json::{self, Json};
 
+/// Execution tier for offloaded spans on the clone side (see
+/// `appvm::tier1`). The phone always interprets — tiering only pays
+/// where spans are hot, and the paper's asymmetry lives on the clone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecTierKind {
+    /// Switch-dispatch interpreter only (ablation baseline).
+    Interp,
+    /// Profile-guided direct-threaded dispatch for hot methods.
+    #[default]
+    Tier1,
+}
+
+impl ExecTierKind {
+    /// Parse a config string: "interp" | "tier1".
+    pub fn parse(s: &str) -> Option<ExecTierKind> {
+        match s {
+            "interp" => Some(ExecTierKind::Interp),
+            "tier1" => Some(ExecTierKind::Tier1),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecTierKind::Interp => "interp",
+            ExecTierKind::Tier1 => "tier1",
+        }
+    }
+}
+
 /// Network link model between the phone and the cloud.
 ///
 /// Direction convention is the phone's: `up_mbps` carries captures
@@ -278,6 +308,11 @@ pub struct Config {
     /// `CAP_SESSION_DICT` bit; off = per-capsule tables even when the
     /// peer offers it).
     pub session_dict: bool,
+    /// Clone-side execution tier: "tier1" (profile-guided
+    /// direct-threaded dispatch) or "interp" (switch-dispatch ablation
+    /// baseline). Bit-identical results either way — only wall time
+    /// differs (see `appvm::tier1`).
+    pub exec_tier: ExecTierKind,
     /// Capture-path tunables (page-epoch scan, mobile GC cadence).
     pub capture: CaptureParams,
     /// Flight-recorder tunables (phase tracing; see `trace`).
@@ -301,6 +336,7 @@ impl Default for Config {
             delta_migration: true,
             heartbeat_idle_ms: 30_000,
             session_dict: true,
+            exec_tier: ExecTierKind::default(),
             capture: CaptureParams::default(),
             trace: TraceParams::default(),
             farm: FarmParams::default(),
@@ -368,6 +404,16 @@ impl Config {
                     cfg.session_dict = val
                         .as_bool()
                         .ok_or_else(|| CloneCloudError::Config("session_dict".into()))?
+                }
+                "exec_tier" => {
+                    let s = val
+                        .as_str()
+                        .ok_or_else(|| CloneCloudError::Config("exec_tier".into()))?;
+                    cfg.exec_tier = ExecTierKind::parse(s).ok_or_else(|| {
+                        CloneCloudError::Config(format!(
+                            "exec_tier must be \"interp\" or \"tier1\", got '{s}'"
+                        ))
+                    })?
                 }
                 "capture" => {
                     let c = val
@@ -727,6 +773,28 @@ mod tests {
 
         let bad = json::parse(r#"{"policy": {"hysterisis": 0.2}}"#).unwrap();
         assert!(Config::from_json(&bad).is_err(), "typo'd policy key rejected");
+    }
+
+    #[test]
+    fn exec_tier_knob() {
+        assert_eq!(
+            Config::default().exec_tier,
+            ExecTierKind::Tier1,
+            "tiered execution on by default"
+        );
+        let v = json::parse(r#"{"exec_tier": "interp"}"#).unwrap();
+        assert_eq!(
+            Config::from_json(&v).unwrap().exec_tier,
+            ExecTierKind::Interp,
+            "ablation baseline selectable"
+        );
+        assert_eq!(ExecTierKind::parse("tier1"), Some(ExecTierKind::Tier1));
+        assert_eq!(ExecTierKind::Tier1.as_str(), "tier1");
+        assert_eq!(ExecTierKind::Interp.as_str(), "interp");
+        let bad = json::parse(r#"{"exec_tier": "tier2"}"#).unwrap();
+        assert!(Config::from_json(&bad).is_err(), "unknown tier rejected");
+        let bad2 = json::parse(r#"{"exec_tier": 1}"#).unwrap();
+        assert!(Config::from_json(&bad2).is_err(), "non-string rejected");
     }
 
     #[test]

@@ -35,7 +35,8 @@ use crate::appvm::interp::{run_thread, NoHooks, RunExit};
 use crate::appvm::process::Process;
 use crate::appvm::thread::ThreadStatus;
 use crate::appvm::value::Value;
-use crate::config::{CostParams, NetworkProfile};
+use crate::appvm::ExecTier;
+use crate::config::{CostParams, ExecTierKind, NetworkProfile};
 use crate::error::{CloneCloudError, Result};
 use crate::migration::{
     collect_slot_garbage, Capsule, CloneSession, DictMode, DictRead, MigrationPhases, Migrator,
@@ -159,6 +160,15 @@ pub struct InlineClone {
     /// capsule carrying a context still gets its events recorded (and
     /// shipped back) via [`execute_migration`]'s ephemeral recorder.
     pub tracer: Tracer,
+    /// Execution tier for offloaded spans (default tier 1; select the
+    /// `interp` ablation with [`InlineClone::with_exec_tier`]). Profile
+    /// state and the translation cache persist across roundtrips, like
+    /// a farm slot's.
+    pub tier: ExecTier,
+    /// Clone-side serve counters accumulated across roundtrips (the
+    /// tier counters land here too — `execute_migration` drains the
+    /// engine per trip). The farm equivalent is `FarmStats`.
+    pub serve_stats: CloneServeStats,
 }
 
 impl InlineClone {
@@ -172,7 +182,15 @@ impl InlineClone {
             migrations: 0,
             trace: false,
             tracer: Tracer::disabled(),
+            tier: ExecTier::from_kind(ExecTierKind::default()),
+            serve_stats: CloneServeStats::default(),
         }
+    }
+
+    /// Select the execution tier for offloaded spans on this clone.
+    pub fn with_exec_tier(mut self, kind: ExecTierKind) -> InlineClone {
+        self.tier = ExecTier::from_kind(kind);
+        self
     }
 
     pub fn without_zygote_diff(mut self) -> InlineClone {
@@ -237,15 +255,15 @@ impl CloneChannel for InlineClone {
         let raw = open_frame(&forward)?;
         // Same execution core as the CloneServer and the farm workers —
         // including trace-context handling and dict-mode mirroring.
-        let mut stats = CloneServeStats::default();
         let encoded = execute_migration(
             &self.migrator,
             &mut self.clone,
             &raw,
             u64::MAX,
-            &mut stats,
+            &mut self.serve_stats,
             &mut self.session,
             &mut self.tracer,
+            &mut self.tier,
         )?;
         self.migrations += 1;
         if self.gc_interval > 0 && self.migrations as u64 % self.gc_interval == 0 {

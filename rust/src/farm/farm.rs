@@ -17,7 +17,7 @@ use std::thread::JoinHandle;
 
 use crate::appvm::zygote::build_template;
 use crate::appvm::Program;
-use crate::config::{CostParams, FarmParams};
+use crate::config::{CostParams, ExecTierKind, FarmParams};
 use crate::error::{CloneCloudError, Result};
 use crate::nodemanager::program_hash;
 use crate::util::stats::LogHistogram;
@@ -49,6 +49,9 @@ pub struct FarmConfig {
     /// Collect a clone slot's garbage (tombstone threads + orphaned
     /// object graphs) every this many roundtrips; 0 = never.
     pub slot_gc_interval: u64,
+    /// Execution tier for offloaded spans on every worker slot
+    /// (`config.exec_tier`; "interp" is the ablation baseline).
+    pub exec_tier: ExecTierKind,
 }
 
 impl Default for FarmConfig {
@@ -62,6 +65,7 @@ impl Default for FarmConfig {
             zygote_seed: 0xC10E,
             fuel: 2_000_000_000,
             slot_gc_interval: 8,
+            exec_tier: ExecTierKind::default(),
         }
     }
 }
@@ -141,6 +145,12 @@ pub(crate) struct FarmShared {
     /// Bytes the slot session dictionaries saved (names a per-capsule
     /// table would have re-shipped), flushed per job by the workers.
     pub dict_hit_bytes: AtomicU64,
+    /// Tier-1 engine activity across all worker slots (zero under the
+    /// `exec_tier = interp` ablation), flushed per job by the workers.
+    pub tier_promotions: AtomicU64,
+    pub tier_translations: AtomicU64,
+    pub tier_cache_hits: AtomicU64,
+    pub tier1_instrs: AtomicU64,
     /// Gateway-wide latency distributions (wall-clock ms), log-bucketed
     /// so the snapshot can report percentiles, not just totals: time a
     /// job waited in a worker queue after admission, and time a worker
@@ -191,6 +201,13 @@ pub struct FarmStats {
     pub wire_down: u64,
     /// Bytes the slot session dictionaries saved vs per-capsule tables.
     pub dict_hit_bytes: u64,
+    /// Tier-1 engine activity across all worker slots: promotions past
+    /// the hotness threshold, successful translations, cache-served hot
+    /// activations, and instructions run by translated segments.
+    pub tier_promotions: u64,
+    pub tier_translations: u64,
+    pub tier_cache_hits: u64,
+    pub tier1_instrs: u64,
     /// Total time sessions spent blocked at admission.
     pub admission_wait_ms: f64,
     /// Total time jobs waited in worker queues after admission.
@@ -298,6 +315,10 @@ impl FarmHandle {
             wire_raw_down: s.wire_raw_down.load(Ordering::Relaxed),
             wire_down: s.wire_down.load(Ordering::Relaxed),
             dict_hit_bytes: s.dict_hit_bytes.load(Ordering::Relaxed),
+            tier_promotions: s.tier_promotions.load(Ordering::Relaxed),
+            tier_translations: s.tier_translations.load(Ordering::Relaxed),
+            tier_cache_hits: s.tier_cache_hits.load(Ordering::Relaxed),
+            tier1_instrs: s.tier1_instrs.load(Ordering::Relaxed),
             admission_wait_ms: s.admission_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             queue_wait_ms: s.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
             queue_hist: s.queue_ms.lock().unwrap().clone(),
@@ -372,6 +393,10 @@ impl CloneFarm {
             wire_raw_down: AtomicU64::new(0),
             wire_down: AtomicU64::new(0),
             dict_hit_bytes: AtomicU64::new(0),
+            tier_promotions: AtomicU64::new(0),
+            tier_translations: AtomicU64::new(0),
+            tier_cache_hits: AtomicU64::new(0),
+            tier1_instrs: AtomicU64::new(0),
             queue_ms: Mutex::new(LogHistogram::new()),
             exec_ms: Mutex::new(LogHistogram::new()),
         });
@@ -389,6 +414,7 @@ impl CloneFarm {
             let warm = cfg.warm_per_worker;
             let fuel = cfg.fuel;
             let slot_gc = cfg.slot_gc_interval;
+            let exec_tier = cfg.exec_tier;
             let jh = std::thread::Builder::new()
                 .name(format!("farm-worker-{i}"))
                 .spawn(move || {
@@ -403,7 +429,7 @@ impl CloneFarm {
                         warm,
                         shared.pool.clone(),
                     );
-                    worker_main(i, rx, pool, shared, costs, fuel, slot_gc);
+                    worker_main(i, rx, pool, shared, costs, fuel, slot_gc, exec_tier);
                 })
                 .map_err(|e| {
                     CloneCloudError::Runtime(format!("spawn farm worker {i}: {e}"))

@@ -112,7 +112,7 @@ mod tests {
     use crate::appvm::assembler::assemble;
     use crate::appvm::process::Process;
     use crate::appvm::zygote::build_template;
-    use crate::config::{CostParams, NetworkProfile};
+    use crate::config::{CostParams, ExecTierKind, NetworkProfile};
     use crate::device::{DeviceSpec, Location};
     use crate::exec::run_distributed;
     use crate::util::rng::Rng;
@@ -149,6 +149,7 @@ mod tests {
             zygote_seed: ZY_SEED,
             fuel: 100_000_000,
             slot_gc_interval: 8,
+            exec_tier: ExecTierKind::Tier1,
         };
         let farm = CloneFarm::start(
             program.clone(),
@@ -221,6 +222,7 @@ mod tests {
             zygote_seed: ZY_SEED,
             fuel: 100_000_000,
             slot_gc_interval: 8,
+            exec_tier: ExecTierKind::Tier1,
         };
         let farm = CloneFarm::start(
             program.clone(),
@@ -282,6 +284,7 @@ mod tests {
             zygote_seed: ZY_SEED,
             fuel: 100_000_000,
             slot_gc_interval: 8,
+            exec_tier: ExecTierKind::Tier1,
         };
         let farm = CloneFarm::start(
             program.clone(),
@@ -372,6 +375,7 @@ mod tests {
             zygote_seed: ZY_SEED,
             fuel: 100_000_000,
             slot_gc_interval: 8,
+            exec_tier: ExecTierKind::Tier1,
         };
         let farm = CloneFarm::start(
             program.clone(),
@@ -456,6 +460,7 @@ mod tests {
             zygote_seed: ZY_SEED,
             fuel: 100_000_000,
             slot_gc_interval: GC_INTERVAL,
+            exec_tier: ExecTierKind::Tier1,
         };
         let farm = CloneFarm::start(
             program.clone(),
@@ -539,6 +544,7 @@ mod tests {
                 zygote_seed: 1,
                 fuel: 1_000_000,
                 slot_gc_interval: 8,
+                exec_tier: ExecTierKind::Tier1,
             },
             CostParams::default(),
             Arc::new(NodeEnv::with_rust_compute),

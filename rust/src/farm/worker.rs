@@ -21,7 +21,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::appvm::process::Process;
-use crate::config::CostParams;
+use crate::appvm::ExecTier;
+use crate::config::{CostParams, ExecTierKind};
 use crate::error::{CloneCloudError, Result};
 use crate::migration::{collect_slot_garbage, CloneSession, Migrator};
 use crate::nodemanager::{execute_migration, CloneServeStats};
@@ -76,9 +77,13 @@ struct CloneSlot {
     roundtrips: u64,
     /// Dictionary hit-bytes already flushed to the farm counters.
     dict_hit_bytes_reported: u64,
+    /// Per-slot execution tier: the profile state and translation cache
+    /// live (and stay valid) with the slot's process across roundtrips.
+    tier: ExecTier,
 }
 
 /// Worker thread body. Exits on `Shutdown` or when every sender is gone.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn worker_main(
     idx: usize,
     rx: Receiver<FarmMsg>,
@@ -87,6 +92,7 @@ pub(crate) fn worker_main(
     costs: CostParams,
     fuel: u64,
     slot_gc_interval: u64,
+    exec_tier: ExecTierKind,
 ) {
     let migrator = Migrator::new(costs);
     let mut slots: HashMap<u64, CloneSlot> = HashMap::new();
@@ -125,6 +131,7 @@ pub(crate) fn worker_main(
                     session: CloneSession::new(job.delta_ok),
                     roundtrips: 0,
                     dict_hit_bytes_reported: 0,
+                    tier: ExecTier::from_kind(exec_tier),
                 });
                 if slot.fs_version != job.fs_version {
                     slot.proc.env.vfs = job.fs.synchronize();
@@ -142,6 +149,7 @@ pub(crate) fn worker_main(
                     &mut serve,
                     &mut slot.session,
                     &mut tracer,
+                    &mut slot.tier,
                 );
                 if matches!(&result, Err(e) if e.is_need_full()) {
                     shared.delta_rejects.fetch_add(1, Ordering::Relaxed);
@@ -152,6 +160,18 @@ pub(crate) fn worker_main(
                 shared
                     .instrs_executed
                     .fetch_add(serve.instrs_executed, Ordering::Relaxed);
+                shared
+                    .tier_promotions
+                    .fetch_add(serve.tier_promotions, Ordering::Relaxed);
+                shared
+                    .tier_translations
+                    .fetch_add(serve.tier_translations, Ordering::Relaxed);
+                shared
+                    .tier_cache_hits
+                    .fetch_add(serve.tier_cache_hits, Ordering::Relaxed);
+                shared
+                    .tier1_instrs
+                    .fetch_add(serve.tier1_instrs, Ordering::Relaxed);
                 // Flush the slot dictionary's savings into the farm-wide
                 // counter (monotonic across resets, so a plain delta).
                 let (hit_bytes, _) = slot.session.dict_stats();

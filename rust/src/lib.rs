@@ -3,6 +3,14 @@
 //!
 //! Layer map (DESIGN.md):
 //! * [`appvm`] — DroidVM, the Dalvik-like application VM substrate.
+//!   Two execution tiers share one op-semantics core (`appvm::ops`):
+//!   the switch-dispatch interpreter (tier 0, the ablation baseline)
+//!   and the profile-guided **direct-threaded tier**
+//!   ([`appvm::tier1`]) — hot offloaded methods are translated once
+//!   into a pre-decoded superinstruction form, cached per method, and
+//!   run bit-identically (same results, virtual-clock bits, epochs and
+//!   error strings; enforced by `tests/exec_parity.rs`). Selected per
+//!   clone via `config.exec_tier`; the phone always interprets.
 //! * [`partitioner`] — static analysis + dynamic profiling + ILP solver
 //!   + bytecode rewriter (paper §3). The rewriter emits either the
 //!   classic one-partition binary or a *conditional* binary carrying

@@ -115,6 +115,10 @@ impl MetricsSnapshot {
         self.count("farm.bytes.up", f.bytes_up);
         self.count("farm.bytes.down", f.bytes_down);
         self.count("farm.instrs_executed", f.instrs_executed);
+        self.count("farm.tier.promotions", f.tier_promotions);
+        self.count("farm.tier.translations", f.tier_translations);
+        self.count("farm.tier.cache_hits", f.tier_cache_hits);
+        self.count("farm.tier.tier1_instrs", f.tier1_instrs);
         self.count("farm.pool.hits", f.pool_hits);
         self.count("farm.pool.misses", f.pool_misses);
         self.count("farm.pool.refills", f.pool_refills);
@@ -230,11 +234,15 @@ mod tests {
             admission_wait_ms: 12.5,
             worker_jobs: vec![5, 4],
             worker_busy_ms: vec![10.0, 8.0],
+            tier_promotions: 2,
+            tier1_instrs: 5_000,
             ..Default::default()
         };
         m.absorb_farm(&f);
         assert_eq!(m.counters["farm.migrations"], 9);
         assert_eq!(m.counters["farm.worker1.jobs"], 4);
+        assert_eq!(m.counters["farm.tier.promotions"], 2);
+        assert_eq!(m.counters["farm.tier.tier1_instrs"], 5_000);
         assert!((m.gauges["farm.pool.hit_rate"] - 0.75).abs() < 1e-9);
         assert!(m.render().contains("farm.admission_wait_ms = 12.500"));
     }

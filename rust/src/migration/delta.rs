@@ -32,6 +32,7 @@
 //! comparison `obj.epoch > baseline.epoch` on either side.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::appvm::process::Process;
@@ -582,6 +583,16 @@ impl MobileSession {
     }
 }
 
+/// A memoized clone-side [`ZygoteIndex`], tagged with the heap template
+/// generation it was built at and whether it passed the strict
+/// duplicate-name check (the delta path demands strictness; the full
+/// path resolves twins leniently).
+struct ZidxCache {
+    gen: u64,
+    strict: bool,
+    idx: Arc<ZygoteIndex>,
+}
+
 struct CloneBaseline {
     /// Persistent MID <-> CID mapping — the paper's Fig. 8 table promoted
     /// to session lifetime.
@@ -608,6 +619,9 @@ pub struct CloneSession {
     /// (the channel negotiated `CAP_SESSION_DICT`).
     dict: SessionDict,
     dict_enabled: bool,
+    /// Memoized Zygote name index: the full-heap scan is paid once per
+    /// template generation on a warm slot, not once per migration.
+    zidx: Option<ZidxCache>,
 }
 
 impl CloneSession {
@@ -619,7 +633,51 @@ impl CloneSession {
             paged: true,
             dict: SessionDict::new(),
             dict_enabled: false,
+            zidx: None,
         }
+    }
+
+    /// The clone's (class name, construction seq) -> local-object index,
+    /// cached across migrations. A cached index built at template
+    /// generation G stays valid while `Heap::zygote_gen() == G`: template
+    /// *bodies* may mutate freely, only adding or removing a template
+    /// member moves the generation. Lenient twin resolution (duplicate
+    /// names keep the last-seen object) — the full-capture path.
+    pub(crate) fn zygote_index(&mut self, p: &Process) -> Arc<ZygoteIndex> {
+        let gen = p.heap.zygote_gen();
+        if let Some(c) = &self.zidx {
+            if c.gen == gen {
+                return c.idx.clone();
+            }
+        }
+        let idx = Arc::new(ZygoteIndex::build(&p.program, &p.heap));
+        self.zidx = Some(ZidxCache {
+            gen,
+            strict: false,
+            idx: idx.clone(),
+        });
+        idx
+    }
+
+    /// Strict variant for the delta path: duplicate template names are a
+    /// typed error (the caller degrades it to `NeedFull`). An index
+    /// cached by the lenient path is re-verified once and upgraded; a
+    /// strict hit is returned as-is, since the template member set cannot
+    /// change without moving the generation.
+    pub(crate) fn try_zygote_index(&mut self, p: &Process) -> Result<Arc<ZygoteIndex>> {
+        let gen = p.heap.zygote_gen();
+        if let Some(c) = &self.zidx {
+            if c.gen == gen && c.strict {
+                return Ok(c.idx.clone());
+            }
+        }
+        let idx = Arc::new(ZygoteIndex::try_build(&p.program, &p.heap)?);
+        self.zidx = Some(ZidxCache {
+            gen,
+            strict: true,
+            idx: idx.clone(),
+        });
+        Ok(idx)
     }
 
     /// Select the reverse-capture strategy (see
@@ -1081,7 +1139,7 @@ pub(crate) fn receive_at_clone_capsule(
 ) -> Result<(u32, MergeStats)> {
     match capsule {
         Capsule::Full(pkt) => {
-            let zidx = ZygoteIndex::build(&clone.program, &clone.heap);
+            let zidx = sess.zygote_index(clone);
             let (tid, table, stats) = super::merge::instantiate_at_clone(clone, pkt, &zidx)?;
             // The digest only matters when deltas may follow.
             let fwd_digest = if sess.enabled {
@@ -1158,7 +1216,7 @@ fn receive_forward_delta(
 
     // A malformed template degrades to `NeedFull`: the retried full
     // capture resolves twins leniently instead of aborting the session.
-    let zidx = match ZygoteIndex::try_build(&clone.program, &clone.heap) {
+    let zidx = match sess.try_zygote_index(clone) {
         Ok(z) => z,
         Err(e) => {
             sess.dict.reset();
@@ -1329,6 +1387,41 @@ mod tests {
         let mut p = Program::new();
         install_system_classes(&mut p);
         p.into_shared()
+    }
+
+    #[test]
+    fn clone_session_caches_zygote_index_per_template_generation() {
+        let p = program();
+        let mut c = proc_with(p);
+        let class = ClassId(0);
+        let mut o = Object::new_fields(class, 0);
+        o.zygote_seq = Some(1);
+        o.dirty = false;
+        c.heap.alloc(o);
+
+        let mut sess = CloneSession::new(true);
+        let a = sess.zygote_index(&c);
+        let b = sess.zygote_index(&c);
+        assert!(Arc::ptr_eq(&a, &b), "warm hit reuses the built index");
+        assert_eq!(a.len(), 1);
+
+        // The strict path re-verifies the lenient entry once, then hits.
+        let s1 = sess.try_zygote_index(&c).unwrap();
+        let s2 = sess.try_zygote_index(&c).unwrap();
+        assert!(Arc::ptr_eq(&s1, &s2), "strict hit after one re-verify");
+
+        // Adding a template member moves the generation: rebuild.
+        let mut o2 = Object::new_fields(class, 0);
+        o2.zygote_seq = Some(2);
+        o2.dirty = false;
+        c.heap.alloc(o2);
+        let d = sess.zygote_index(&c);
+        assert!(!Arc::ptr_eq(&s2, &d), "template change invalidates");
+        assert_eq!(d.len(), 2);
+
+        // App allocations leave the generation (and the cache) alone.
+        c.heap.alloc(Object::new_fields(class, 0));
+        assert!(Arc::ptr_eq(&d, &sess.zygote_index(&c)));
     }
 
     #[test]

@@ -234,7 +234,7 @@ mod tests {
     use crate::appvm::natives::NodeEnv;
     use crate::appvm::process::Process;
     use crate::appvm::zygote::build_template;
-    use crate::config::CostParams;
+    use crate::config::{CostParams, ExecTierKind};
     use crate::device::{DeviceSpec, Location};
     use crate::farm::{
         synthetic_expected, synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
@@ -259,6 +259,7 @@ mod tests {
                 zygote_seed: SEED,
                 fuel: 100_000_000,
                 slot_gc_interval: 8,
+                exec_tier: ExecTierKind::Tier1,
             },
             CostParams::default(),
             Arc::new(NodeEnv::with_rust_compute),

@@ -10,12 +10,12 @@
 
 use std::sync::Arc;
 
-use crate::appvm::interp::{run_thread, NoHooks, RunExit};
+use crate::appvm::interp::RunExit;
 use crate::appvm::natives::NodeEnv;
 use crate::appvm::process::Process;
 use crate::appvm::zygote::build_template;
-use crate::appvm::Program;
-use crate::config::CostParams;
+use crate::appvm::{ExecTier, Program};
+use crate::config::{CostParams, ExecTierKind};
 use crate::device::{DeviceSpec, Location};
 use crate::error::{CloneCloudError, Result};
 use crate::migration::{collect_slot_garbage, Capsule, CloneSession, Migrator, MobileSession};
@@ -48,6 +48,14 @@ pub struct CloneServeStats {
     pub slot_gc_runs: usize,
     pub slot_gc_threads: usize,
     pub slot_gc_objects: usize,
+    /// Tier-1 engine activity (zero when `exec_tier = interp`): methods
+    /// promoted past the hotness threshold, successful translations,
+    /// hot activations served from the translation cache, and
+    /// instructions executed by translated segments.
+    pub tier_promotions: u64,
+    pub tier_translations: u64,
+    pub tier_cache_hits: u64,
+    pub tier1_instrs: u64,
 }
 
 /// The clone node: serves one phone over one transport.
@@ -78,6 +86,9 @@ pub struct CloneServer<T: Transport> {
     /// [`execute_migration`], so this field is for server-local
     /// observability beyond single trips.
     pub tracer: Tracer,
+    /// Execution tier for offloaded spans (default tier 1; the
+    /// `exec_tier = "interp"` ablation selects the switch interpreter).
+    pub tier: ExecTier,
 }
 
 impl<T: Transport> CloneServer<T> {
@@ -99,7 +110,14 @@ impl<T: Transport> CloneServer<T> {
             local_caps: SUPPORTED_CAPS,
             speak_delta: true,
             tracer: Tracer::disabled(),
+            tier: ExecTier::from_kind(ExecTierKind::default()),
         }
+    }
+
+    /// Select the execution tier for offloaded spans.
+    pub fn with_exec_tier(mut self, kind: ExecTierKind) -> Self {
+        self.tier = ExecTier::from_kind(kind);
+        self
     }
 
     /// Serve until Shutdown (or transport loss). Each Migrate is answered
@@ -257,6 +275,7 @@ impl<T: Transport> CloneServer<T> {
             stats,
             session,
             &mut self.tracer,
+            &mut self.tier,
         )
     }
 }
@@ -277,6 +296,13 @@ impl<T: Transport> CloneServer<T> {
 /// ephemeral per-trip recorder — and piggybacked in front of the reverse
 /// capsule when the context asks for them. Observe-only: the envelope
 /// never changes what executes.
+///
+/// `tier` selects the execution engine for the offloaded span (the
+/// caller owns it so profile state and the translation cache persist
+/// across roundtrips of one slot). Tier 1 is bit-identical to the
+/// interpreter — results, virtual-time charges, and exit points cannot
+/// depend on the tier.
+#[allow(clippy::too_many_arguments)]
 pub fn execute_migration(
     migrator: &Migrator,
     p: &mut Process,
@@ -285,6 +311,7 @@ pub fn execute_migration(
     stats: &mut CloneServeStats,
     session: &mut CloneSession,
     tracer: &mut Tracer,
+    tier: &mut ExecTier,
 ) -> Result<Vec<u8>> {
     let (ctx, bytes) = trace::split_ctx(bytes)?;
     let mut ephemeral;
@@ -331,7 +358,7 @@ pub fn execute_migration(
     // migration/reintegration alternate).
     tracer.begin(trip, Phase::CloneExec, t_arrival);
     loop {
-        match run_thread(p, tid, &mut NoHooks, fuel)? {
+        match tier.run_thread(p, tid, fuel)? {
             RunExit::ReintegrationPoint { .. } => break,
             RunExit::MigrationPoint { .. } => continue,
             RunExit::Completed(_) => {
@@ -345,6 +372,16 @@ pub fn execute_migration(
         }
     }
     tracer.end(trip, Phase::CloneExec, p.clock.now_us());
+    let tstats = tier.take_stats();
+    stats.tier_promotions += tstats.promotions;
+    stats.tier_translations += tstats.translations;
+    stats.tier_cache_hits += tstats.cache_hits;
+    stats.tier1_instrs += tstats.tier1_instrs;
+    if tstats.translation_wall_us > 0 {
+        // Translation is runtime work inside the exec window: wall time
+        // only, no virtual charge (same convention as decode/merge).
+        tracer.span_wall(trip, Phase::Tier, p.clock.now_us(), tstats.translation_wall_us);
+    }
     stats.migrations += 1;
     if is_delta {
         stats.delta_migrations += 1;

@@ -115,10 +115,13 @@ pub enum Phase {
     CloneEncode,
     /// Digest-heartbeat roundtrip on the virtual link (phone).
     Heartbeat,
+    /// Tier-1 translation work at the clone (wall time spent promoting
+    /// hot methods to direct-threaded form; charges no virtual time).
+    Tier,
 }
 
 /// All phases, for aggregation sweeps.
-pub const PHASES: [Phase; 15] = [
+pub const PHASES: [Phase; 16] = [
     Phase::Decide,
     Phase::Suspend,
     Phase::Capture,
@@ -134,6 +137,7 @@ pub const PHASES: [Phase; 15] = [
     Phase::CloneCapture,
     Phase::CloneEncode,
     Phase::Heartbeat,
+    Phase::Tier,
 ];
 
 impl Phase {
@@ -154,6 +158,7 @@ impl Phase {
             Phase::CloneCapture => "clone_capture",
             Phase::CloneEncode => "clone_encode",
             Phase::Heartbeat => "heartbeat",
+            Phase::Tier => "tier",
         }
     }
     pub fn as_u8(self) -> u8 {
@@ -173,6 +178,7 @@ impl Phase {
             Phase::CloneCapture => 12,
             Phase::CloneEncode => 13,
             Phase::Heartbeat => 14,
+            Phase::Tier => 15,
         }
     }
     pub fn from_u8(v: u8) -> Option<Phase> {
@@ -187,6 +193,7 @@ impl Phase {
                 | Phase::CloneExec
                 | Phase::CloneCapture
                 | Phase::CloneEncode
+                | Phase::Tier
         )
     }
 }

@@ -1,0 +1,348 @@
+//! Differential parity suite: tier-1 direct-threaded execution vs the
+//! tier-0 interpreter (the bit-identity contract in `appvm::tier1`).
+//!
+//! Every test runs the same program under both engines and compares the
+//! *complete* observable machine state — exit condition or error string,
+//! per-instruction virtual-clock bits, `VmMetrics::instrs`, thread
+//! `cpu_us` bits, the full frame stack (pc + registers), statics, and
+//! every heap object including its write-barrier epoch. The tier may
+//! only change wall time, never a single bit of VM state.
+
+use std::sync::Arc;
+
+use clonecloud::appvm::assembler::assemble;
+use clonecloud::appvm::bytecode::{ArrKind, CmpOp, FloatOp, IntOp};
+use clonecloud::appvm::interp::{run_thread, NoHooks, RunExit};
+use clonecloud::appvm::{
+    ClassDef, ExecTier, Instr, MethodDef, NodeEnv, Process, Program, Tier1Engine,
+};
+use clonecloud::config::{CostParams, ExecTierKind, NetworkProfile};
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::exec::{run_distributed, InlineClone};
+use clonecloud::farm::{synthetic_expected, synthetic_offload_src};
+use clonecloud::util::prop::{forall, PropConfig};
+use clonecloud::util::rng::Rng;
+use clonecloud::vfs::SimFs;
+
+const REGS: usize = 6;
+const FUEL: u64 = 4_000;
+
+fn method(name: &str, nregs: usize, code: Vec<Instr>) -> MethodDef {
+    MethodDef {
+        name: name.into(),
+        nargs: 0,
+        nregs,
+        code,
+        native: None,
+        pinned: name == "main",
+        native_state: false,
+        migration_point: None,
+    }
+}
+
+/// App class with two statics, `main` = the generated code, plus a small
+/// loop helper that random `Invoke`s call (exercises call/return bails
+/// and helper promotion).
+fn program_with(code: Vec<Instr>) -> Arc<Program> {
+    let mut p = Program::new();
+    let mut c = ClassDef::new("App", false);
+    c.add_static("s0");
+    c.add_static("s1");
+    c.add_method(method("main", REGS, code));
+    c.add_method(method(
+        "helper",
+        4,
+        vec![
+            Instr::Const(0, 0),
+            Instr::Const(1, 0),
+            Instr::Const(2, 5),
+            Instr::Const(3, 1),
+            Instr::IntBin(IntOp::Add, 1, 1, 3),
+            Instr::IntBin(IntOp::Add, 0, 0, 1),
+            Instr::IfCmp(CmpOp::Lt, 1, 2, 4),
+            Instr::Return(Some(0)),
+        ],
+    ));
+    p.add_class(c);
+    p.into_shared()
+}
+
+fn process(program: &Arc<Program>) -> Process {
+    let mut p = Process::new(
+        program.clone(),
+        DeviceSpec::clone_desktop(),
+        Location::Clone,
+        NodeEnv::with_rust_compute(SimFs::new()),
+    );
+    let main = program.entry().unwrap();
+    p.spawn_thread(main, &[]).unwrap();
+    p
+}
+
+/// The complete observable state, rendered so NaN payloads and f64 bit
+/// patterns compare exactly (`Debug` of identical NaNs is equal where
+/// `PartialEq` is not).
+fn fingerprint(p: &Process) -> String {
+    let heap: Vec<String> = p
+        .heap
+        .iter()
+        .map(|(id, o)| format!("{}:{o:?}", id.0))
+        .collect();
+    let t = p.thread(0).unwrap();
+    format!(
+        "instrs={} clock={:#x} cpu={:#x} status={:?}\nframes={:?}\nstatics={:?}\nheap={heap:?}",
+        p.metrics.instrs,
+        p.clock.now_us().to_bits(),
+        t.cpu_us.to_bits(),
+        t.status,
+        t.frames,
+        p.statics,
+    )
+}
+
+/// Drive one engine across partition-point exits until the thread
+/// completes, faults, or runs dry. Both engines hit the same points in
+/// the same order, so the re-entry cap compares equal too.
+fn drive(
+    p: &mut Process,
+    mut step: impl FnMut(&mut Process) -> clonecloud::error::Result<RunExit>,
+) -> String {
+    for _ in 0..64 {
+        match step(p) {
+            Ok(RunExit::MigrationPoint { .. }) | Ok(RunExit::ReintegrationPoint { .. }) => {
+                continue
+            }
+            Ok(exit) => return format!("{exit:?}"),
+            Err(e) => return format!("err: {e}"),
+        }
+    }
+    "partition-point limit".into()
+}
+
+/// Run `code` under both tiers and demand bit-identical everything.
+fn assert_parity(code: &[Instr], fuel: u64, threshold: u32) -> Result<(), String> {
+    let prog = program_with(code.to_vec());
+    let mut base = process(&prog);
+    let r0 = drive(&mut base, |p| run_thread(p, 0, &mut NoHooks, fuel));
+
+    let mut tiered = process(&prog);
+    let mut tier = ExecTier::Tier1(Box::new(Tier1Engine::new().with_threshold(threshold)));
+    let r1 = drive(&mut tiered, |p| tier.run_thread(p, 0, fuel));
+
+    if r0 != r1 {
+        return Err(format!("exit diverged: interp {r0} vs tier1 {r1}"));
+    }
+    let (f0, f1) = (fingerprint(&base), fingerprint(&tiered));
+    if f0 != f1 {
+        return Err(format!("state diverged after {r0}:\n--- interp\n{f0}\n--- tier1\n{f1}"));
+    }
+    Ok(())
+}
+
+/// Random program: a seeded prologue (ints + one array), a body drawn
+/// from the full light-op set plus heavy ops (alloc, statics stores,
+/// invoke, partition points), and random forward/backward branches.
+/// Ill-typed and out-of-range combinations are left in on purpose —
+/// fault parity (error string + pc + charged work) is half the contract.
+fn random_code(rng: &mut Rng) -> Vec<Instr> {
+    let body = rng.range_i64(6, 30) as usize;
+    let len = 6 + body + 1; // prologue + body + final Return
+    let mut code = vec![
+        Instr::Const(0, rng.range_i64(-4, 9)),
+        Instr::Const(1, rng.range_i64(0, 3)),
+        Instr::Const(2, rng.range_i64(1, 6)),
+        Instr::Const(3, rng.range_i64(-2, 5)),
+        Instr::Const(5, rng.range_i64(1, 8)),
+        Instr::NewArray(
+            4,
+            match rng.range_i64(0, 2) {
+                0 => ArrKind::Byte,
+                1 => ArrKind::Float,
+                _ => ArrKind::Val,
+            },
+            5,
+        ),
+    ];
+    let reg = |rng: &mut Rng| rng.range_i64(0, (REGS - 1) as i64) as u8;
+    // Branches stay past the prologue so loops re-run real work, but a
+    // rare wild target (== len, or past it) checks the lazy-fault and
+    // end-slot paths.
+    let target = |rng: &mut Rng| {
+        if rng.chance(0.06) {
+            len as u32 + rng.range_i64(0, 2) as u32
+        } else {
+            rng.range_i64(6, (len - 1) as i64) as u32
+        }
+    };
+    let int_op = |rng: &mut Rng| {
+        [
+            IntOp::Add,
+            IntOp::Sub,
+            IntOp::Mul,
+            IntOp::Div,
+            IntOp::Rem,
+            IntOp::And,
+            IntOp::Or,
+            IntOp::Xor,
+            IntOp::Shl,
+            IntOp::Shr,
+        ][rng.range_i64(0, 9) as usize]
+    };
+    let cmp_op = |rng: &mut Rng| {
+        [
+            CmpOp::Eq,
+            CmpOp::Ne,
+            CmpOp::Lt,
+            CmpOp::Le,
+            CmpOp::Gt,
+            CmpOp::Ge,
+        ][rng.range_i64(0, 5) as usize]
+    };
+    for _ in 0..body {
+        let ins = match rng.range_i64(0, 21) {
+            0 => Instr::Nop,
+            1 => Instr::Const(reg(rng), rng.range_i64(-8, 8)),
+            2 => Instr::ConstF(reg(rng), rng.range_i64(-40, 40) as f64 / 8.0),
+            3 => Instr::Move(reg(rng), reg(rng)),
+            4 | 5 => Instr::IntBin(int_op(rng), reg(rng), reg(rng), reg(rng)),
+            6 => Instr::FloatBin(
+                [FloatOp::Add, FloatOp::Sub, FloatOp::Mul, FloatOp::Div]
+                    [rng.range_i64(0, 3) as usize],
+                reg(rng),
+                reg(rng),
+                reg(rng),
+            ),
+            7 => Instr::Cmp(cmp_op(rng), reg(rng), reg(rng), reg(rng)),
+            8 => Instr::IfZ(reg(rng), target(rng)),
+            9 => Instr::IfNZ(reg(rng), target(rng)),
+            10 => Instr::IfCmp(cmp_op(rng), reg(rng), reg(rng), target(rng)),
+            11 => Instr::Goto(target(rng)),
+            12 => Instr::ArrGet(reg(rng), 4, reg(rng)),
+            13 => Instr::ArrPut(4, reg(rng), reg(rng)),
+            14 => Instr::ArrLen(reg(rng), reg(rng)),
+            15 => Instr::IntToFloat(reg(rng), reg(rng)),
+            16 => Instr::FloatToInt(reg(rng), reg(rng)),
+            17 => Instr::GetStatic(reg(rng), clonecloud::appvm::ClassId(0), rng.range_i64(0, 2) as u16),
+            18 => Instr::PutStatic(clonecloud::appvm::ClassId(0), rng.range_i64(0, 1) as u16, reg(rng)),
+            19 => Instr::Invoke {
+                mref: clonecloud::appvm::MRef {
+                    class: clonecloud::appvm::ClassId(0),
+                    method: clonecloud::appvm::MethodId(1),
+                },
+                ret: Some(reg(rng)),
+                args: vec![],
+            },
+            20 => Instr::CcStart(0),
+            _ => Instr::CcStop(0),
+        };
+        code.push(ins);
+    }
+    code.push(Instr::Return(Some(0)));
+    code
+}
+
+#[test]
+fn random_programs_are_bit_identical_across_tiers() {
+    forall(
+        PropConfig {
+            seed: 0x7EE2_1CED,
+            cases: 200,
+        },
+        random_code,
+        |code| assert_parity(code, FUEL, 1),
+    );
+}
+
+#[test]
+fn random_programs_match_under_tight_fuel() {
+    // Small fuel values land the budget on every segment phase,
+    // including fused-superinstruction interiors.
+    forall(
+        PropConfig {
+            seed: 0xF0E1,
+            cases: 60,
+        },
+        random_code,
+        |code| {
+            for fuel in [1, 2, 3, 5, 9, 17, 33, 65] {
+                assert_parity(code, fuel, 1)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parity_holds_across_promotion_boundaries() {
+    // Threshold sweep: the same program is interpreted for 0, 1, 2, or 3
+    // activations before tier-1 takes over mid-run. The switch point
+    // must not be observable in VM state.
+    forall(
+        PropConfig {
+            seed: 0xB0DA_12,
+            cases: 40,
+        },
+        random_code,
+        |code| {
+            for threshold in 1..=4u32 {
+                assert_parity(code, FUEL, threshold)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn offload_roundtrip_is_bit_identical_across_tiers() {
+    // End-to-end: the same offload workload through `InlineClone` under
+    // the interp ablation and under tier 1 — merged statics and the
+    // phone's virtual clock must agree to the bit, and match the
+    // monolithic expectation.
+    let iters = 3_000;
+    let program = Arc::new(assemble(&synthetic_offload_src(iters)).unwrap());
+    clonecloud::appvm::verifier::verify_program(&program).unwrap();
+    let mut fs = SimFs::new();
+    let mut bytes = vec![0u8; 64];
+    Rng::new(0xD1FF).fill_bytes(&mut bytes);
+    fs.add("data.bin", bytes);
+    let expected = synthetic_expected(&fs, iters);
+
+    let run = |kind: ExecTierKind| {
+        let phone_env = NodeEnv::with_rust_compute(fs.synchronize());
+        let clone_env = NodeEnv::with_rust_compute(fs.synchronize());
+        let mut phone = Process::new(
+            program.clone(),
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            phone_env,
+        );
+        let clone = Process::new(
+            program.clone(),
+            DeviceSpec::clone_desktop(),
+            Location::Clone,
+            clone_env,
+        );
+        let mut channel = InlineClone::new(clone, CostParams::default()).with_exec_tier(kind);
+        run_distributed(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+        )
+        .unwrap();
+        let main = program.entry().unwrap();
+        (
+            phone.statics[main.class.0 as usize][0]
+                .as_int()
+                .unwrap(),
+            phone.clock.now_us().to_bits(),
+            phone.metrics.instrs,
+        )
+    };
+
+    let interp = run(ExecTierKind::Interp);
+    let tier1 = run(ExecTierKind::Tier1);
+    assert_eq!(interp.0, expected, "interp result");
+    assert_eq!(tier1.0, expected, "tier1 result");
+    assert_eq!(interp, tier1, "merged state and clock bits");
+}
