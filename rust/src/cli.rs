@@ -31,7 +31,9 @@ use crate::farm::{
     synthetic_expected, synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
 };
 use crate::metrics::MetricsSnapshot;
-use crate::nodemanager::{serve_farm, CloneServer, TcpEndpoint};
+use crate::nodemanager::{
+    serve_farm, serve_farm_async, AsyncGatewayConfig, CloneServer, GatewayKind, TcpEndpoint,
+};
 use crate::partitioner::{rewrite_with_partition, Cfg, PartitionDb, PartitionEntry};
 use crate::pipeline::{partition_app, table1_row};
 use crate::runtime::default_backend;
@@ -74,6 +76,8 @@ FARM OPTIONS (defaults from the config 'farm' section):
   --warm <n>                     pre-forked processes per worker
   --queue <n>                    admission window (in-flight bound)
   --policy <round-robin|least-loaded|affinity>
+  --gateway <async|blocking>     serve path (async = sharded readiness loop)
+  --shards <n>                   async gateway shard threads
   --phones <n>                   demo mode: concurrent phone sessions
   --iters <n>                    demo mode: clone-side work per session
 
@@ -357,11 +361,18 @@ fn cmd_farm(flags: &HashMap<String, String>) -> Result<()> {
                 crate::appvm::NodeEnv::new(fs, default_backend(Path::new(&artifacts)))
             }),
         )?;
+        let gateway = flags.get("gateway").unwrap_or(&params.gateway);
+        let kind = GatewayKind::parse(gateway).ok_or_else(|| {
+            CloneCloudError::Config(format!(
+                "--gateway must be \"async\" or \"blocking\", got '{gateway}'"
+            ))
+        })?;
         let ep = TcpEndpoint::bind(addr)?;
         println!(
-            "clone farm listening on {} for app '{}' ({} workers, warm {}, queue {}, policy {})",
+            "clone farm listening on {} for app '{}' ({} gateway, {} workers, warm {}, queue {}, policy {})",
             ep.local_addr()?,
             app.name(),
+            kind.name(),
             params.workers,
             params.warm_per_worker,
             params.queue_depth,
@@ -372,7 +383,18 @@ fn cmd_farm(flags: &HashMap<String, String>) -> Result<()> {
         } else {
             None
         };
-        return serve_farm(&ep, &farm.handle(), timeout, None);
+        return match kind {
+            GatewayKind::Blocking => serve_farm(&ep, &farm.handle(), timeout, None),
+            GatewayKind::Async => {
+                let gw_cfg = AsyncGatewayConfig {
+                    shards: flag_usize(flags, "shards", params.gateway_shards)?,
+                    shard_queue_depth: params.shard_queue_depth,
+                    read_timeout: timeout,
+                    max_sessions: None,
+                };
+                serve_farm_async(&ep, &farm.handle(), &gw_cfg).map(|_| ())
+            }
+        };
     }
 
     // In-proc demo: N concurrent phones against the synthetic workload.

@@ -174,6 +174,16 @@ pub struct FarmParams {
     /// Collect a clone slot's garbage (tombstone threads + orphaned
     /// object graphs) every this many roundtrips (0 = never).
     pub slot_gc_interval: u64,
+    /// Serve-path shape: "async" (sharded nonblocking readiness loop,
+    /// the default) | "blocking" (thread-per-connection, the ablation).
+    /// Validated by `nodemanager::GatewayKind::parse` at serve time.
+    pub gateway: String,
+    /// Shard threads for the async gateway (each owns a private
+    /// connection table; ignored by the blocking gateway).
+    pub gateway_shards: usize,
+    /// Bounded accept→shard handoff queue depth for the async gateway
+    /// (a full queue backpressures the acceptor).
+    pub shard_queue_depth: usize,
 }
 
 impl Default for FarmParams {
@@ -185,6 +195,9 @@ impl Default for FarmParams {
             policy: "affinity".into(),
             read_timeout_ms: 0,
             slot_gc_interval: 8,
+            gateway: "async".into(),
+            gateway_shards: 4,
+            shard_queue_depth: 64,
         }
     }
 }
@@ -546,6 +559,30 @@ impl Config {
                                 })?
                                     as u64
                             }
+                            "gateway" => {
+                                let g = fv
+                                    .as_str()
+                                    .ok_or_else(|| {
+                                        CloneCloudError::Config("farm.gateway".into())
+                                    })?
+                                    .to_string();
+                                if !matches!(g.as_str(), "async" | "blocking") {
+                                    return Err(CloneCloudError::Config(format!(
+                                        "farm.gateway must be \"async\" or \"blocking\", got '{g}'"
+                                    )));
+                                }
+                                cfg.farm.gateway = g;
+                            }
+                            "gateway_shards" => {
+                                cfg.farm.gateway_shards = fv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("farm.gateway_shards".into())
+                                })?
+                            }
+                            "shard_queue_depth" => {
+                                cfg.farm.shard_queue_depth = fv.as_usize().ok_or_else(|| {
+                                    CloneCloudError::Config("farm.shard_queue_depth".into())
+                                })?
+                            }
                             other => {
                                 return Err(CloneCloudError::Config(format!(
                                     "unknown farm key '{other}'"
@@ -750,6 +787,27 @@ mod tests {
 
         let bad = json::parse(r#"{"farm": {"wrokers": 8}}"#).unwrap();
         assert!(Config::from_json(&bad).is_err(), "typo'd farm key rejected");
+    }
+
+    #[test]
+    fn farm_gateway_knobs() {
+        let d = Config::default().farm;
+        assert_eq!(d.gateway, "async", "async serve path is the default");
+        assert_eq!(d.gateway_shards, 4);
+        assert_eq!(d.shard_queue_depth, 64);
+
+        let v = json::parse(
+            r#"{"farm": {"gateway": "blocking", "gateway_shards": 8, "shard_queue_depth": 16}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.farm.gateway, "blocking", "ablation stays selectable");
+        assert_eq!(cfg.farm.gateway_shards, 8);
+        assert_eq!(cfg.farm.shard_queue_depth, 16);
+
+        let bad = json::parse(r#"{"farm": {"gateway": "epoll"}}"#).unwrap();
+        let err = Config::from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("farm.gateway"), "{err}");
     }
 
     #[test]

@@ -42,7 +42,22 @@ impl Admission {
         t0.elapsed().as_secs_f64() * 1e3
     }
 
-    /// Release a slot taken by `acquire`.
+    /// Take a slot only if one is free *right now*. The async gateway's
+    /// shard threads go through here — they must never park on
+    /// admission, because one saturated farm would stall every other
+    /// connection on the shard. Returns whether the slot was taken; on
+    /// `false` the caller keeps the work queued locally (backpressure)
+    /// and retries on a later sweep.
+    pub fn try_acquire(&self) -> bool {
+        let mut n = self.inflight.lock().unwrap();
+        if *n >= self.depth {
+            return false;
+        }
+        *n += 1;
+        true
+    }
+
+    /// Release a slot taken by `acquire` / `try_acquire`.
     pub fn release(&self) {
         let mut n = self.inflight.lock().unwrap();
         *n = n.saturating_sub(1);
@@ -55,6 +70,7 @@ impl Admission {
         *self.inflight.lock().unwrap()
     }
 
+    /// The configured window size (after the ≥ 1 clamp).
     pub fn depth(&self) -> usize {
         self.depth
     }
@@ -82,6 +98,19 @@ mod tests {
         let a = Admission::new(0);
         assert_eq!(a.depth(), 1);
         a.acquire();
+        assert_eq!(a.in_flight(), 1);
+    }
+
+    #[test]
+    fn try_acquire_never_blocks() {
+        let a = Admission::new(1);
+        assert!(a.try_acquire());
+        // Window full: refuse instantly instead of parking.
+        let t0 = Instant::now();
+        assert!(!a.try_acquire());
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        a.release();
+        assert!(a.try_acquire());
         assert_eq!(a.in_flight(), 1);
     }
 

@@ -39,10 +39,13 @@ pub struct FarmConfig {
     pub warm_per_worker: usize,
     /// Farm-wide bound on in-flight migrations (admission window).
     pub queue_depth: usize,
+    /// Placement of phone jobs onto workers.
     pub policy: PlacementPolicy,
-    /// Zygote template parameters — must match the phones' (§4.3
+    /// Zygote template size — must match the phones' (§4.3
     /// deterministic naming is what makes the diff optimization sound).
     pub zygote_objects: usize,
+    /// Zygote template seed — must match the phones', like
+    /// [`FarmConfig::zygote_objects`].
     pub zygote_seed: u64,
     /// Interpreter fuel per offloaded span.
     pub fuel: u64,
@@ -94,7 +97,9 @@ impl FarmConfig {
 /// Per-worker counters.
 #[derive(Debug, Default)]
 pub struct WorkerStats {
+    /// Jobs this worker served.
     pub jobs: AtomicU64,
+    /// Wall-clock microseconds this worker spent executing jobs.
     pub busy_us: AtomicU64,
 }
 
@@ -163,60 +168,86 @@ pub(crate) struct FarmShared {
 /// A point-in-time snapshot of farm counters.
 #[derive(Debug, Clone, Default)]
 pub struct FarmStats {
+    /// Worker pool size M.
     pub workers: usize,
+    /// Placement policy name ("round-robin" | "least-loaded" | "affinity").
     pub policy: &'static str,
+    /// Sessions opened on the farm so far.
     pub sessions_opened: u64,
+    /// Sessions closed so far.
     pub sessions_closed: u64,
+    /// Migration roundtrips served.
     pub migrations: u64,
+    /// Jobs that ended in an error (`NeedFull` is not an error).
     pub errors: u64,
+    /// Capsule bytes received from phones.
     pub bytes_up: u64,
+    /// Capsule bytes returned to phones.
     pub bytes_down: u64,
+    /// Instructions executed on behalf of migrated threads.
     pub instrs_executed: u64,
+    /// Provisions served from a warm pool process.
     pub pool_hits: u64,
+    /// Provisions that had to cold-fork.
     pub pool_misses: u64,
+    /// Background refills the warm pools performed.
     pub pool_refills: u64,
     /// Migrations that rode delta capsules (vs full captures).
     pub delta_migrations: u64,
     /// Delta capsules the farm rejected with `NeedFull`.
     pub delta_rejects: u64,
-    /// Digest heartbeats answered, and how many found divergence.
+    /// Digest heartbeats answered.
     pub heartbeats: u64,
+    /// Heartbeats that found a divergent/missing baseline.
     pub heartbeat_divergent: u64,
-    /// Phone-side policy decisions the sessions reported: spans
-    /// migrated, spans run locally, and after-the-fact mispredictions.
+    /// Phone-side policy decisions the sessions reported: spans migrated.
     pub offloads: u64,
+    /// Spans the policy kept local.
     pub local_fallbacks: u64,
+    /// After-the-fact policy mispredictions.
     pub mispredictions: u64,
-    /// Periodic slot-GC activity and per-slot high-water marks.
+    /// Periodic slot collections run.
     pub slot_gc_runs: u64,
+    /// Tombstone threads slot GC reclaimed.
     pub slot_gc_threads: u64,
+    /// Orphaned object-graph copies slot GC reclaimed.
     pub slot_gc_objects: u64,
+    /// High-water mark of threads alive in any one clone slot.
     pub slot_threads_peak: u64,
+    /// High-water mark of heap objects in any one clone slot.
     pub slot_heap_peak: u64,
-    /// Gateway frame-layer bytes: raw capsule vs sealed wire, per
-    /// direction (equal when no codec was negotiated).
+    /// Gateway frame-layer bytes: raw capsule bytes phone → farm.
     pub wire_raw_up: u64,
+    /// Sealed wire bytes phone → farm (equals raw when no codec).
     pub wire_up: u64,
+    /// Raw capsule bytes farm → phone.
     pub wire_raw_down: u64,
+    /// Sealed wire bytes farm → phone.
     pub wire_down: u64,
     /// Bytes the slot session dictionaries saved vs per-capsule tables.
     pub dict_hit_bytes: u64,
-    /// Tier-1 engine activity across all worker slots: promotions past
-    /// the hotness threshold, successful translations, cache-served hot
-    /// activations, and instructions run by translated segments.
+    /// Tier-1 engine activity across all worker slots (zero under the
+    /// `exec_tier = interp` ablation): promotions past the hotness
+    /// threshold.
     pub tier_promotions: u64,
+    /// Successful tier-1 translations.
     pub tier_translations: u64,
+    /// Hot activations served from the translation cache.
     pub tier_cache_hits: u64,
+    /// Instructions run by translated tier-1 segments.
     pub tier1_instrs: u64,
     /// Total time sessions spent blocked at admission.
     pub admission_wait_ms: f64,
     /// Total time jobs waited in worker queues after admission.
     pub queue_wait_ms: f64,
-    /// Queue-wait and execution latency distributions (wall ms), one
-    /// sample per served job — NaN percentiles until a job has run.
+    /// Queue-wait latency distribution (wall ms), one sample per served
+    /// job — NaN percentiles until a job has run.
     pub queue_hist: LogHistogram,
+    /// Execution latency distribution (wall ms), one sample per job.
     pub exec_hist: LogHistogram,
+    /// Jobs served, per worker.
     pub worker_jobs: Vec<u64>,
+    /// Wall-clock ms spent executing, per worker.
     pub worker_busy_ms: Vec<f64>,
 }
 
@@ -283,6 +314,7 @@ impl FarmHandle {
         s.wire_down.fetch_add(wire_down, Ordering::Relaxed);
     }
 
+    /// Snapshot the farm-wide counters and latency histograms.
     pub fn stats(&self) -> FarmStats {
         let s = &self.shared;
         FarmStats {
@@ -442,6 +474,7 @@ impl CloneFarm {
         })
     }
 
+    /// A cloneable handle for opening sessions from other threads.
     pub fn handle(&self) -> FarmHandle {
         self.handle.clone()
     }
@@ -451,6 +484,7 @@ impl CloneFarm {
         self.handle.session(phone, fs)
     }
 
+    /// Snapshot the farm counters (see [`FarmHandle::stats`]).
     pub fn stats(&self) -> FarmStats {
         self.handle.stats()
     }

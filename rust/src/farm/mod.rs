@@ -23,7 +23,11 @@
 //!   [`FarmStats`] snapshot.
 //!
 //! The network front door (accept loop speaking the existing
-//! `protocol::Msg` wire protocol) lives in `nodemanager::gateway`.
+//! `protocol::Msg` wire protocol) lives in `nodemanager::gateway`
+//! (blocking, thread-per-connection) and `nodemanager::gateway_async`
+//! (nonblocking sharded readiness loop); see `farm/README.md` and
+//! `docs/ARCHITECTURE.md`.
+#![warn(missing_docs)]
 
 pub mod admission;
 #[allow(clippy::module_inception)]
@@ -37,7 +41,7 @@ pub use admission::Admission;
 pub use farm::{CloneFarm, FarmConfig, FarmHandle, FarmStats, WorkerStats};
 pub use policy::{PlacementPolicy, Scheduler};
 pub use pool::{PoolStats, WarmPool};
-pub use session::{FarmClone, SessionStats};
+pub use session::{FarmClone, PendingProbe, PendingRoundtrip, SessionStats, Submit};
 
 use crate::appvm::natives::NodeEnv;
 use crate::vfs::SimFs;

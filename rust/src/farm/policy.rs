@@ -22,8 +22,11 @@ use crate::error::{CloneCloudError, Result};
 /// How sessions map onto clone workers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlacementPolicy {
+    /// Rotate over workers regardless of load or locality.
     RoundRobin,
+    /// Pick the worker with the fewest outstanding jobs.
     LeastLoaded,
+    /// Hash the phone id onto a worker (keeps its clone slot warm).
     Affinity,
 }
 
@@ -40,6 +43,7 @@ impl PlacementPolicy {
         }
     }
 
+    /// The canonical config-file spelling of this policy.
     pub fn name(self) -> &'static str {
         match self {
             PlacementPolicy::RoundRobin => "round-robin",
@@ -69,6 +73,7 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
+    /// Build a scheduler for `workers` clone workers.
     pub fn new(policy: PlacementPolicy, workers: usize) -> Scheduler {
         assert!(workers >= 1, "scheduler needs at least one worker");
         Scheduler {
@@ -78,10 +83,12 @@ impl Scheduler {
         }
     }
 
+    /// Number of workers this scheduler places onto.
     pub fn workers(&self) -> usize {
         self.inflight.len()
     }
 
+    /// The policy this scheduler applies.
     pub fn policy(&self) -> PlacementPolicy {
         self.policy
     }
@@ -107,14 +114,17 @@ impl Scheduler {
         }
     }
 
+    /// Record a job dispatched to `worker` (feeds least-loaded).
     pub fn job_started(&self, worker: usize) {
         self.inflight[worker].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a job completed by `worker`.
     pub fn job_finished(&self, worker: usize) {
         self.inflight[worker].fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Outstanding jobs (queued + executing) on `worker`.
     pub fn inflight(&self, worker: usize) -> usize {
         self.inflight[worker].load(Ordering::Relaxed)
     }

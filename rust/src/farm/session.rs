@@ -28,11 +28,69 @@ use super::worker::{FarmMsg, Job};
 /// phone actually feels).
 #[derive(Debug, Clone, Default)]
 pub struct SessionStats {
+    /// Completed migration roundtrips.
     pub migrations: u64,
+    /// Failed roundtrips (worker loss, execution faults; NeedFull
+    /// fallbacks are not errors).
     pub errors: u64,
+    /// Forward capsule bytes shipped (including rejected deltas).
     pub bytes_up: u64,
+    /// Reverse capsule bytes received.
     pub bytes_down: u64,
+    /// Total milliseconds this session spent blocked at admission.
     pub admission_wait_ms: f64,
+}
+
+/// Outcome of a non-blocking submission
+/// ([`FarmClone::try_begin_roundtrip`]).
+pub enum Submit {
+    /// Admitted and queued on a worker: poll the ticket.
+    Pending(PendingRoundtrip),
+    /// The admission window was full. The forward frame comes back
+    /// untouched so the caller can retry later without a copy.
+    Backpressure(Vec<u8>),
+}
+
+/// An admitted, in-flight roundtrip awaiting its reverse capture.
+///
+/// Holds the session's admission slot: polling it to completion
+/// releases the slot, and dropping an unfinished ticket (connection
+/// died mid-roundtrip) releases it too — admission can never leak.
+pub struct PendingRoundtrip {
+    shared: Arc<FarmShared>,
+    reply_rx: mpsc::Receiver<Result<Vec<u8>>>,
+    worker: usize,
+    up: u64,
+    admitted: bool,
+}
+
+impl PendingRoundtrip {
+    /// Release the admission slot exactly once.
+    fn settle_admission(&mut self) {
+        if self.admitted {
+            self.admitted = false;
+            self.shared.admission.release();
+        }
+    }
+}
+
+impl Drop for PendingRoundtrip {
+    fn drop(&mut self) {
+        self.settle_admission();
+    }
+}
+
+/// An in-flight heartbeat probe ([`FarmClone::try_begin_heartbeat`]).
+/// Probes bypass admission, so dropping one leaks nothing.
+pub struct PendingProbe {
+    reply_rx: mpsc::Receiver<Result<()>>,
+    worker: usize,
+}
+
+fn worker_dropped_reply(worker: usize) -> CloneCloudError {
+    CloneCloudError::Transport(format!(
+        "farm worker {worker} dropped the session reply"
+    ))
 }
 
 /// One phone's session on the clone farm.
@@ -53,6 +111,7 @@ pub struct FarmClone {
     /// is stateless per job — no affinity requirement — so the gateway
     /// never masks it.
     trace: bool,
+    /// Live per-session counters.
     pub stats: SessionStats,
 }
 
@@ -77,6 +136,7 @@ impl FarmClone {
         }
     }
 
+    /// The phone id this session is keyed on (placement hash input).
     pub fn phone_id(&self) -> u64 {
         self.phone
     }
@@ -129,14 +189,86 @@ impl FarmClone {
         if self.closed {
             return Err(CloneCloudError::Transport("farm session closed".into()));
         }
-        let up = forward.len() as u64;
-
         let waited_ms = self.shared.admission.acquire();
         self.stats.admission_wait_ms += waited_ms;
         self.shared
             .admission_wait_us
             .fetch_add((waited_ms * 1e3) as u64, Ordering::Relaxed);
 
+        let up = forward.len() as u64;
+        let (worker, reply_rx) = match self.submit_job(forward) {
+            Ok(x) => x,
+            Err(e) => {
+                self.shared.admission.release();
+                return Err(e);
+            }
+        };
+        let reply = reply_rx
+            .recv()
+            .map_err(|_| worker_dropped_reply(worker));
+        self.shared.admission.release();
+        self.settle(up, reply)
+    }
+
+    /// Queue one roundtrip **without blocking**: the async gateway's
+    /// shard threads submit here and keep sweeping other connections
+    /// while the farm executes. A full admission window hands the
+    /// forward frame back untouched ([`Submit::Backpressure`]) so the
+    /// caller retries on a later sweep with no copy. A successful
+    /// submission yields a [`PendingRoundtrip`] ticket to poll with
+    /// [`FarmClone::poll_roundtrip`].
+    pub fn try_begin_roundtrip(&mut self, forward: Vec<u8>) -> Result<Submit> {
+        if self.closed {
+            return Err(CloneCloudError::Transport("farm session closed".into()));
+        }
+        if !self.shared.admission.try_acquire() {
+            return Ok(Submit::Backpressure(forward));
+        }
+        let up = forward.len() as u64;
+        match self.submit_job(forward) {
+            Ok((worker, reply_rx)) => Ok(Submit::Pending(PendingRoundtrip {
+                shared: self.shared.clone(),
+                reply_rx,
+                worker,
+                up,
+                admitted: true,
+            })),
+            Err(e) => {
+                self.shared.admission.release();
+                Err(e)
+            }
+        }
+    }
+
+    /// Poll a ticket from [`FarmClone::try_begin_roundtrip`]: `None`
+    /// while the farm is still executing, `Some(result)` exactly once
+    /// when the reverse capture (or its error) is in. Bookkeeping —
+    /// admission release, per-session and farm-wide counters — is
+    /// identical to the blocking path, so blocking and async gateways
+    /// report the same numbers for the same work.
+    pub fn poll_roundtrip(
+        &mut self,
+        pending: &mut PendingRoundtrip,
+    ) -> Option<Result<(Vec<u8>, TransferBytes)>> {
+        let reply = match pending.reply_rx.try_recv() {
+            Ok(r) => Ok(r),
+            Err(mpsc::TryRecvError::Empty) => return None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(worker_dropped_reply(pending.worker))
+            }
+        };
+        pending.settle_admission();
+        Some(self.settle(pending.up, reply))
+    }
+
+    /// Placement + worker handoff shared by the blocking and pending
+    /// paths. The caller owns the admission slot; on a send failure the
+    /// scheduler bookkeeping is undone and the error counted, but the
+    /// slot is NOT released here (the caller knows how it acquired it).
+    fn submit_job(
+        &mut self,
+        forward: Vec<u8>,
+    ) -> Result<(usize, mpsc::Receiver<Result<Vec<u8>>>)> {
         let worker = self.shared.scheduler.pick(self.phone);
         self.shared.scheduler.job_started(worker);
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -152,15 +284,22 @@ impl FarmClone {
         };
         if self.senders[worker].send(FarmMsg::Work(job)).is_err() {
             self.shared.scheduler.job_finished(worker);
-            self.shared.admission.release();
             self.stats.errors += 1;
             self.shared.errors.fetch_add(1, Ordering::Relaxed);
             return Err(CloneCloudError::Transport(format!(
                 "farm worker {worker} is down"
             )));
         }
-        let reply = reply_rx.recv();
-        self.shared.admission.release();
+        Ok((worker, reply_rx))
+    }
+
+    /// Fold a worker reply into session + farm counters (one place, so
+    /// every path — blocking, polled — accounts identically).
+    fn settle(
+        &mut self,
+        up: u64,
+        reply: Result<Result<Vec<u8>>>,
+    ) -> Result<(Vec<u8>, TransferBytes)> {
         match reply {
             Ok(Ok(bytes)) => {
                 let down = bytes.len() as u64;
@@ -186,12 +325,10 @@ impl FarmClone {
                 self.shared.errors.fetch_add(1, Ordering::Relaxed);
                 Err(e)
             }
-            Err(_) => {
+            Err(e) => {
                 self.stats.errors += 1;
                 self.shared.errors.fetch_add(1, Ordering::Relaxed);
-                Err(CloneCloudError::Transport(format!(
-                    "farm worker {worker} dropped the session reply"
-                )))
+                Err(e)
             }
         }
     }
@@ -201,6 +338,47 @@ impl FarmClone {
     /// typed `NeedFull` error means the slot is gone or diverged — the
     /// caller should drop its baseline and plan a full capture.
     pub fn heartbeat_probe(&mut self, digest: u64, assignments: &[(u64, u64)]) -> Result<()> {
+        let (worker, reply_rx) = self.submit_heartbeat(digest, assignments)?;
+        reply_rx.recv().map_err(|_| {
+            CloneCloudError::Transport(format!(
+                "farm worker {worker} dropped the heartbeat reply"
+            ))
+        })?
+    }
+
+    /// Queue a heartbeat probe without blocking for the worker's
+    /// answer; poll the ticket with [`FarmClone::poll_heartbeat`].
+    /// Heartbeats bypass admission (they carry no capsule), so there is
+    /// no backpressure arm.
+    pub fn try_begin_heartbeat(
+        &mut self,
+        digest: u64,
+        assignments: &[(u64, u64)],
+    ) -> Result<PendingProbe> {
+        let (worker, reply_rx) = self.submit_heartbeat(digest, assignments)?;
+        Ok(PendingProbe { reply_rx, worker })
+    }
+
+    /// Poll a [`FarmClone::try_begin_heartbeat`] ticket: `None` while
+    /// the worker is busy, the probe's result exactly once thereafter.
+    pub fn poll_heartbeat(&mut self, pending: &mut PendingProbe) -> Option<Result<()>> {
+        match pending.reply_rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(CloneCloudError::Transport(format!(
+                    "farm worker {} dropped the heartbeat reply",
+                    pending.worker
+                ))))
+            }
+        }
+    }
+
+    fn submit_heartbeat(
+        &mut self,
+        digest: u64,
+        assignments: &[(u64, u64)],
+    ) -> Result<(usize, mpsc::Receiver<Result<()>>)> {
         if self.closed {
             return Err(CloneCloudError::Transport("farm session closed".into()));
         }
@@ -218,11 +396,7 @@ impl FarmClone {
             .map_err(|_| {
                 CloneCloudError::Transport(format!("farm worker {worker} is down"))
             })?;
-        reply_rx.recv().map_err(|_| {
-            CloneCloudError::Transport(format!(
-                "farm worker {worker} dropped the heartbeat reply"
-            ))
-        })?
+        Ok((worker, reply_rx))
     }
 
     /// End the session: retire this phone's clone slot on every worker.

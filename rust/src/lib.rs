@@ -35,7 +35,8 @@
 //!   after the first ship only dictionary additions + indices; digest
 //!   mismatch degrades to a NeedFull re-seed, never corruption), clone
 //!   provisioning: the 1:1 `CloneServer` and the serve-many farm
-//!   gateway.
+//!   gateways — blocking thread-per-connection (the ablation) and the
+//!   async sharded readiness loop (`gateway_async`, C10k front door).
 //! * [`farm`] — the multi-tenant clone farm (beyond the paper): warm
 //!   pool, placement policies, admission control, phone sessions
 //!   multiplexed over clone workers; affinity-pinned slots retain the
@@ -62,6 +63,12 @@
 //!   Chrome trace-event export. Observe-only: tracing never changes
 //!   execution results.
 //! * [`baselines`] — comparison partitioners (§7 related work).
+//!
+//! Book-length companions in `docs/`: `docs/ARCHITECTURE.md` (layer
+//! map, cross-PR invariants next to the code that binds them, one
+//! request lifecycle end to end) and `docs/WIRE.md` (the complete wire
+//! reference — framing, every message tag, negotiation, every
+//! capability bit and frame magic).
 
 pub mod appvm;
 pub mod apps;

@@ -176,6 +176,24 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Absorb an async-gateway drain report (connection churn, framing
+    /// pressure, and the accept→shard handoff latency percentiles).
+    pub fn absorb_gateway(&mut self, g: &crate::nodemanager::GatewayStats) {
+        self.count("gateway.accepts", g.accepts);
+        self.count("gateway.accept_errors", g.accept_errors);
+        self.count("gateway.migrations", g.migrations);
+        self.count("gateway.decode_stalls", g.decode_stalls);
+        self.count("gateway.short_writes", g.short_writes);
+        self.count("gateway.backpressure_stalls", g.backpressure_stalls);
+        self.count("gateway.protocol_errors", g.protocol_errors);
+        self.gauge("gateway.conns_peak", g.conns_peak as f64);
+        if !g.handoff_ms.is_empty() {
+            self.gauge("gateway.handoff.p50_ms", g.handoff_ms.p50());
+            self.gauge("gateway.handoff.p95_ms", g.handoff_ms.p95());
+            self.gauge("gateway.handoff.p99_ms", g.handoff_ms.p99());
+        }
+    }
+
     /// Absorb a trace report: per-(endpoint, phase) duration percentiles
     /// under `trace.<endpoint>.<phase>.*`, counter totals, and the
     /// decision/misprediction tallies. Durations are virtual-clock ms —
@@ -284,6 +302,29 @@ mod tests {
         assert!((m.gauges["migration.delta.hit_rate"] - 0.75).abs() < 1e-9);
         assert!((m.gauges["migration.compression.ratio_out"] - 3.0).abs() < 1e-9);
         assert!((m.gauges["migration.compression.ratio_in"] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_gateway_maps_counters_and_handoff_percentiles() {
+        let mut m = MetricsSnapshot::default();
+        let mut g = crate::nodemanager::GatewayStats {
+            accepts: 10,
+            conns_peak: 6,
+            migrations: 8,
+            decode_stalls: 3,
+            backpressure_stalls: 1,
+            ..Default::default()
+        };
+        g.handoff_ms.record(0.5);
+        g.handoff_ms.record(2.0);
+        m.absorb_gateway(&g);
+        assert_eq!(m.counters["gateway.accepts"], 10);
+        assert_eq!(m.counters["gateway.migrations"], 8);
+        assert_eq!(m.counters["gateway.decode_stalls"], 3);
+        assert_eq!(m.counters["gateway.backpressure_stalls"], 1);
+        assert_eq!(m.counters["gateway.protocol_errors"], 0);
+        assert!((m.gauges["gateway.conns_peak"] - 6.0).abs() < 1e-9);
+        assert!(m.gauges["gateway.handoff.p99_ms"] >= m.gauges["gateway.handoff.p50_ms"]);
     }
 
     #[test]

@@ -24,6 +24,106 @@ use super::protocol::{
 };
 use super::transport::{TcpEndpoint, Transport};
 
+/// The per-connection capability set a gateway arms from `Hello`.
+/// Shared by the blocking and async serve paths so both negotiate —
+/// and therefore execute — identically.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct SessionCaps {
+    pub delta: bool,
+    pub dict: bool,
+    pub trace: bool,
+    pub codec: Codec,
+}
+
+impl SessionCaps {
+    /// Arm a farm session with the negotiated set.
+    pub(crate) fn apply(&self, s: &mut FarmClone) {
+        s.set_delta(self.delta);
+        s.set_dict(self.dict);
+        s.set_trace(self.trace);
+    }
+}
+
+/// Negotiate one `Hello` against the farm: compute the capability set
+/// this connection runs with and the `Hello` reply to send. Both
+/// gateways call this — the dict-masking rule and the min-revision echo
+/// live in exactly one place.
+pub(crate) fn negotiate_hello(
+    handle: &FarmHandle,
+    proto: u16,
+    want_delta: bool,
+    caps: u32,
+) -> (SessionCaps, Msg) {
+    // Delta — and the session dictionary, whose replica also
+    // lives in the slot — require placement that parks the
+    // phone on one worker (affinity). The dictionary bit
+    // must be masked out of the REPLY caps too: the phone
+    // computes `dict_agreed` from what we advertise, and a
+    // phone that believes dict while the slots decode
+    // without it would fail every capsule.
+    let local_caps = if handle.delta_friendly() {
+        SUPPORTED_CAPS
+    } else {
+        SUPPORTED_CAPS & !CAP_SESSION_DICT
+    };
+    let negotiated = SessionCaps {
+        delta: super::protocol::delta_agreed(proto, want_delta) && handle.delta_friendly(),
+        dict: dict_agreed(PROTO_VERSION, local_caps, proto, caps),
+        // Trace context is per-job stateless (no slot-resident
+        // baseline), so it needs no affinity and no masking.
+        trace: trace_agreed(PROTO_VERSION, local_caps, proto, caps),
+        codec: codec_agreed(proto, caps),
+    };
+    // Log the negotiated capability set: mixed-version
+    // fleets are debugged from exactly this line.
+    eprintln!(
+        "[farm] session caps: proto v{}, delta={}, dict={}, trace={}, codec={}",
+        proto.min(PROTO_VERSION),
+        negotiated.delta,
+        negotiated.dict,
+        negotiated.trace,
+        negotiated.codec.name()
+    );
+    // Reply with the negotiated (min) revision so a v3
+    // initiator gets a Hello its decoder accepts.
+    let reply = Msg::Hello {
+        proto: proto.min(PROTO_VERSION),
+        delta: negotiated.delta,
+        caps: local_caps,
+    };
+    (negotiated, reply)
+}
+
+/// Validate a `Provision` against the farm's fixed template; returns
+/// the reply to send and whether the connection is now provisioned.
+/// Shared by both gateways.
+pub(crate) fn check_provision(
+    handle: &FarmHandle,
+    zygote_objects: u32,
+    zygote_seed: u64,
+    want_hash: u64,
+) -> (bool, Msg) {
+    let have = handle.program_hash();
+    if have != want_hash {
+        return (
+            false,
+            Msg::Error(format!(
+                "program hash mismatch: farm={have:#x} phone={want_hash:#x} (resync executables)"
+            )),
+        );
+    }
+    let (zo, zs) = handle.zygote_params();
+    if zygote_objects as usize != zo || zygote_seed != zs {
+        return (
+            false,
+            Msg::Error(format!(
+                "zygote parameter mismatch: farm=({zo}, {zs}) phone=({zygote_objects}, {zygote_seed})"
+            )),
+        );
+    }
+    (true, Msg::Ack)
+}
+
 /// Serve one phone connection against the farm. Returns the number of
 /// migrations served. Exits cleanly on `Shutdown` (explicit, or a clean
 /// TCP EOF which the transport reports as `Shutdown`).
@@ -32,86 +132,37 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
     let mut provisioned = false;
     let mut migrations = 0u64;
     // Armed by Hello; applied to the session whenever one exists.
-    let mut delta = false;
-    let mut dict = false;
-    let mut trace = false;
-    let mut codec = Codec::None;
+    let mut caps = SessionCaps::default();
     loop {
         let (msg, _) = t.recv()?;
         match msg {
             Msg::Hello {
                 proto,
                 delta: want,
-                caps,
+                caps: peer_caps,
             } => {
-                // Delta — and the session dictionary, whose replica also
-                // lives in the slot — require placement that parks the
-                // phone on one worker (affinity). The dictionary bit
-                // must be masked out of the REPLY caps too: the phone
-                // computes `dict_agreed` from what we advertise, and a
-                // phone that believes dict while the slots decode
-                // without it would fail every capsule.
-                let local_caps = if handle.delta_friendly() {
-                    SUPPORTED_CAPS
-                } else {
-                    SUPPORTED_CAPS & !CAP_SESSION_DICT
-                };
-                delta = super::protocol::delta_agreed(proto, want) && handle.delta_friendly();
-                dict = dict_agreed(PROTO_VERSION, local_caps, proto, caps);
-                // Trace context is per-job stateless (no slot-resident
-                // baseline), so it needs no affinity and no masking.
-                trace = trace_agreed(PROTO_VERSION, local_caps, proto, caps);
-                codec = codec_agreed(proto, caps);
+                let (negotiated, reply) = negotiate_hello(handle, proto, want, peer_caps);
+                caps = negotiated;
                 if let Some(s) = session.as_mut() {
-                    s.set_delta(delta);
-                    s.set_dict(dict);
-                    s.set_trace(trace);
+                    caps.apply(s);
                 }
-                // Log the negotiated capability set: mixed-version
-                // fleets are debugged from exactly this line.
-                eprintln!(
-                    "[farm] session caps: proto v{}, delta={delta}, dict={dict}, trace={trace}, codec={}",
-                    proto.min(PROTO_VERSION),
-                    codec.name()
-                );
-                // Reply with the negotiated (min) revision so a v3
-                // initiator gets a Hello its decoder accepts.
-                t.send(&Msg::Hello {
-                    proto: proto.min(PROTO_VERSION),
-                    delta,
-                    caps: local_caps,
-                })?;
+                t.send(&reply)?;
             }
             Msg::Provision {
                 zygote_objects,
                 zygote_seed,
                 program_hash: want,
             } => {
-                let have = handle.program_hash();
-                if have != want {
-                    t.send(&Msg::Error(format!(
-                        "program hash mismatch: farm={have:#x} phone={want:#x} (resync executables)"
-                    )))?;
-                    continue;
-                }
-                let (zo, zs) = handle.zygote_params();
-                if zygote_objects as usize != zo || zygote_seed != zs {
-                    t.send(&Msg::Error(format!(
-                        "zygote parameter mismatch: farm=({zo}, {zs}) phone=({zygote_objects}, {zygote_seed})"
-                    )))?;
-                    continue;
-                }
-                provisioned = true;
-                t.send(&Msg::Ack)?;
+                let (ok, reply) = check_provision(handle, zygote_objects, zygote_seed, want);
+                provisioned = provisioned || ok;
+                t.send(&reply)?;
             }
             Msg::SyncFs(fs) => {
                 match session.as_mut() {
                     Some(s) => s.set_fs(fs),
                     None => {
                         let mut s = handle.session_auto(fs);
-                        s.set_delta(delta);
-                        s.set_dict(dict);
-                        s.set_trace(trace);
+                        caps.apply(&mut s);
                         session = Some(s);
                     }
                 }
@@ -124,9 +175,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                 }
                 if session.is_none() {
                     let mut s = handle.session_auto(SimFs::new());
-                    s.set_delta(delta);
-                    s.set_dict(dict);
-                    s.set_trace(trace);
+                    caps.apply(&mut s);
                     session = Some(s);
                 }
                 let s = session.as_mut().unwrap();
@@ -146,7 +195,7 @@ pub fn serve_farm_session<T: Transport>(mut t: T, handle: &FarmHandle) -> Result
                     Ok((rbytes, _)) => {
                         migrations += 1;
                         let raw_down = rbytes.len() as u64;
-                        let sealed = seal_frame(codec, rbytes);
+                        let sealed = seal_frame(caps.codec, rbytes);
                         handle.record_wire(raw_up, wire_up, raw_down, sealed.len() as u64);
                         t.send(&Msg::Reintegrate(sealed))?;
                     }

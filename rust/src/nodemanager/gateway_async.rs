@@ -1,0 +1,977 @@
+//! Async sharded gateway: the C10k serve path for clone farms.
+//!
+//! The blocking gateway ([`super::gateway::serve_farm`]) spends one OS
+//! thread per phone; at farm scale (thousands of mostly-idle phones)
+//! that is thousands of stacks parked in `read()`. This module serves
+//! the *same wire protocol* from a fixed thread count:
+//!
+//! * **One acceptor** polls the listener nonblocking and deals new
+//!   connections round-robin to shards over bounded queues (a full
+//!   shard queue blocks the acceptor — admission backpressure at the
+//!   front door, not unbounded conn growth).
+//! * **N shard threads** each own a private connection table — no
+//!   global session lock, no cross-shard contention. A shard sweeps its
+//!   connections with nonblocking reads/writes
+//!   ([`crate::util::readiness`]), parsing frames incrementally through
+//!   the same [`FrameDecoder`] the blocking transport uses.
+//! * **Farm handoff never blocks a shard**: migrations are submitted
+//!   through [`FarmClone::try_begin_roundtrip`] and polled to
+//!   completion, so one slow capsule (or a full admission window) stalls
+//!   only its own connection while the shard keeps sweeping the rest.
+//!
+//! Protocol semantics are shared with the blocking path — Hello
+//! negotiation, dict masking, provision checks, and error strings come
+//! from the same helpers in [`super::gateway`] — so a phone cannot tell
+//! which gateway it reached, and results are bit-identical. The
+//! blocking gateway remains selectable (`farm.gateway = "blocking"`) as
+//! the ablation baseline.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{CloneCloudError, Result};
+use crate::farm::{FarmClone, FarmHandle, PendingProbe, PendingRoundtrip, Submit};
+use crate::util::readiness::{read_step, write_step, IdleBackoff, ReadStep, WriteStep};
+use crate::util::stats::LogHistogram;
+use crate::vfs::SimFs;
+
+use super::gateway::{check_provision, negotiate_hello, SessionCaps};
+use super::protocol::{open_frame, seal_frame, FrameDecoder, Msg};
+use super::transport::TcpEndpoint;
+
+/// Which serve loop fronts the farm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GatewayKind {
+    /// Thread-per-connection blocking gateway (the ablation baseline).
+    Blocking,
+    /// Sharded nonblocking readiness loop (the default).
+    #[default]
+    Async,
+}
+
+impl GatewayKind {
+    /// Parse a config value (`"blocking"` / `"async"`).
+    pub fn parse(s: &str) -> Option<GatewayKind> {
+        match s {
+            "blocking" => Some(GatewayKind::Blocking),
+            "async" => Some(GatewayKind::Async),
+            _ => None,
+        }
+    }
+
+    /// The config-file spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            GatewayKind::Blocking => "blocking",
+            GatewayKind::Async => "async",
+        }
+    }
+}
+
+/// Tuning for [`serve_farm_async`].
+#[derive(Debug, Clone)]
+pub struct AsyncGatewayConfig {
+    /// Shard thread count; each shard owns a private connection table.
+    pub shards: usize,
+    /// Bounded accept→shard queue depth. A full queue blocks the
+    /// acceptor (front-door backpressure).
+    pub shard_queue_depth: usize,
+    /// Retire a connection idle for longer than this (`None` = never).
+    /// Mid-frame dribble and in-flight farm work both count as
+    /// progress, so a slow phone is not retired mid-capsule.
+    pub read_timeout: Option<Duration>,
+    /// Stop accepting after this many connections and drain (`None` =
+    /// serve forever). Used by tests and controlled shutdowns.
+    pub max_sessions: Option<usize>,
+}
+
+impl Default for AsyncGatewayConfig {
+    fn default() -> AsyncGatewayConfig {
+        AsyncGatewayConfig {
+            shards: 4,
+            shard_queue_depth: 64,
+            read_timeout: None,
+            max_sessions: None,
+        }
+    }
+}
+
+/// Counters the async gateway reports when it drains.
+#[derive(Debug, Clone, Default)]
+pub struct GatewayStats {
+    /// Connections accepted.
+    pub accepts: u64,
+    /// Accept/setup failures (the gateway keeps serving through them).
+    pub accept_errors: u64,
+    /// Peak simultaneously-open connections across all shards.
+    pub conns_peak: u64,
+    /// Migration roundtrips served to completion.
+    pub migrations: u64,
+    /// Sweeps that read bytes but could not yet complete a frame
+    /// (partial-frame pressure: big capsules, slow phones).
+    pub decode_stalls: u64,
+    /// Writes the socket accepted only partially (send-buffer pressure).
+    pub short_writes: u64,
+    /// Times a connection had to hold work because the farm admission
+    /// window was full, or paused reading on its own write backlog.
+    pub backpressure_stalls: u64,
+    /// Connections killed for protocol violations (undecodable frames,
+    /// lying length prefixes, EOF mid-frame).
+    pub protocol_errors: u64,
+    /// Accept→shard-pickup handoff latency (milliseconds).
+    pub handoff_ms: LogHistogram,
+}
+
+impl GatewayStats {
+    fn absorb(&mut self, o: &GatewayStats) {
+        self.accepts += o.accepts;
+        self.accept_errors += o.accept_errors;
+        self.conns_peak += o.conns_peak;
+        self.migrations += o.migrations;
+        self.decode_stalls += o.decode_stalls;
+        self.short_writes += o.short_writes;
+        self.backpressure_stalls += o.backpressure_stalls;
+        self.protocol_errors += o.protocol_errors;
+        self.handoff_ms.merge(&o.handoff_ms);
+    }
+}
+
+/// Stop reading from a connection whose unflushed reply backlog exceeds
+/// this (write-interest backpressure): the peer gets no new replies
+/// buffered until it drains the ones in flight.
+const WRITE_BACKLOG_CAP: usize = 256 * 1024;
+
+/// Farm work a connection is waiting on. The protocol is strictly
+/// request/response, so at most one of these exists per connection and
+/// frame processing pauses while it is in flight.
+enum Pending {
+    /// A submitted migration awaiting its reverse capture.
+    Migrate {
+        ticket: PendingRoundtrip,
+        raw_up: u64,
+        wire_up: u64,
+    },
+    /// A migration refused at the admission window, held for retry on a
+    /// later sweep (the opened frame rides along untouched).
+    Admission { raw: Vec<u8>, wire_up: u64 },
+    /// A heartbeat probe awaiting the placement worker's verdict.
+    Heartbeat(PendingProbe),
+}
+
+/// One phone connection's incremental state machine.
+struct Conn {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    /// Encoded replies not yet accepted by the socket.
+    out: Vec<u8>,
+    out_pos: usize,
+    session: Option<FarmClone>,
+    provisioned: bool,
+    caps: SessionCaps,
+    pending: Option<Pending>,
+    /// Clean shutdown requested: flush `out`, then retire.
+    closing: bool,
+    /// Hard failure: retire immediately.
+    dead: bool,
+    /// True while reads are paused on the write backlog (so the stall
+    /// counter records transitions, not sweeps).
+    write_blocked: bool,
+    migrations: u64,
+    last_progress: Instant,
+}
+
+impl Conn {
+    fn adopt(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true).ok();
+        Ok(Conn {
+            stream,
+            decoder: FrameDecoder::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            session: None,
+            provisioned: false,
+            caps: SessionCaps::default(),
+            pending: None,
+            closing: false,
+            dead: false,
+            write_blocked: false,
+            migrations: 0,
+            last_progress: Instant::now(),
+        })
+    }
+
+    fn finished(&self) -> bool {
+        self.dead || (self.closing && self.out_pos >= self.out.len())
+    }
+
+    fn backlog(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    fn queue_msg(&mut self, msg: &Msg) {
+        let payload = msg.encode();
+        self.out
+            .extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        self.out.extend_from_slice(&payload);
+    }
+
+    /// Push queued bytes at the socket; short writes keep a cursor.
+    fn flush(&mut self, stats: &mut GatewayStats) -> std::io::Result<bool> {
+        let mut progress = false;
+        while self.out_pos < self.out.len() {
+            match write_step(&mut self.stream, &self.out[self.out_pos..])? {
+                WriteStep::Wrote(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ));
+                }
+                WriteStep::Wrote(n) => {
+                    if n < self.backlog() {
+                        stats.short_writes += 1;
+                    }
+                    self.out_pos += n;
+                    self.last_progress = Instant::now();
+                    progress = true;
+                }
+                WriteStep::Idle => break,
+            }
+        }
+        if self.out_pos > 0 && self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+        Ok(progress)
+    }
+
+    /// Submit (or re-submit) an opened forward frame to the farm
+    /// without blocking the shard.
+    fn begin_roundtrip(
+        &mut self,
+        raw: Vec<u8>,
+        wire_up: u64,
+        stats: &mut GatewayStats,
+        first_attempt: bool,
+    ) {
+        let raw_up = raw.len() as u64;
+        let s = self
+            .session
+            .as_mut()
+            .expect("begin_roundtrip without a session");
+        match s.try_begin_roundtrip(raw) {
+            Ok(Submit::Pending(ticket)) => {
+                self.pending = Some(Pending::Migrate {
+                    ticket,
+                    raw_up,
+                    wire_up,
+                });
+            }
+            Ok(Submit::Backpressure(raw)) => {
+                if first_attempt {
+                    stats.backpressure_stalls += 1;
+                }
+                self.pending = Some(Pending::Admission { raw, wire_up });
+            }
+            Err(CloneCloudError::NeedFull(reason)) => self.queue_msg(&Msg::NeedFull(reason)),
+            Err(e) => self.queue_msg(&Msg::Error(e.to_string())),
+        }
+    }
+
+    /// Poll in-flight farm work; returns whether state advanced.
+    fn poll_pending(&mut self, handle: &FarmHandle, stats: &mut GatewayStats) -> bool {
+        let Some(p) = self.pending.take() else {
+            return false;
+        };
+        match p {
+            Pending::Admission { raw, wire_up } => {
+                self.begin_roundtrip(raw, wire_up, stats, false);
+                // Progress only if the retry escaped the admission arm.
+                !matches!(self.pending, Some(Pending::Admission { .. }))
+            }
+            Pending::Migrate {
+                mut ticket,
+                raw_up,
+                wire_up,
+            } => {
+                let s = self
+                    .session
+                    .as_mut()
+                    .expect("pending roundtrip without a session");
+                match s.poll_roundtrip(&mut ticket) {
+                    None => {
+                        self.pending = Some(Pending::Migrate {
+                            ticket,
+                            raw_up,
+                            wire_up,
+                        });
+                        false
+                    }
+                    Some(Ok((rbytes, _))) => {
+                        self.migrations += 1;
+                        let raw_down = rbytes.len() as u64;
+                        let sealed = seal_frame(self.caps.codec, rbytes);
+                        handle.record_wire(raw_up, wire_up, raw_down, sealed.len() as u64);
+                        self.queue_msg(&Msg::Reintegrate(sealed));
+                        true
+                    }
+                    Some(Err(CloneCloudError::NeedFull(reason))) => {
+                        self.queue_msg(&Msg::NeedFull(reason));
+                        true
+                    }
+                    Some(Err(e)) => {
+                        self.queue_msg(&Msg::Error(e.to_string()));
+                        true
+                    }
+                }
+            }
+            Pending::Heartbeat(mut probe) => {
+                let s = self
+                    .session
+                    .as_mut()
+                    .expect("pending heartbeat without a session");
+                match s.poll_heartbeat(&mut probe) {
+                    None => {
+                        self.pending = Some(Pending::Heartbeat(probe));
+                        false
+                    }
+                    Some(Ok(())) => {
+                        self.queue_msg(&Msg::Ack);
+                        true
+                    }
+                    Some(Err(e)) if e.is_need_full() => {
+                        self.queue_msg(&Msg::NeedFull(e.to_string()));
+                        true
+                    }
+                    Some(Err(e)) => {
+                        self.queue_msg(&Msg::Error(e.to_string()));
+                        true
+                    }
+                }
+            }
+        }
+    }
+
+    /// One decoded message, with semantics identical to the blocking
+    /// gateway (shared helpers for everything negotiation-shaped).
+    fn handle_msg(&mut self, msg: Msg, handle: &FarmHandle, stats: &mut GatewayStats) {
+        match msg {
+            Msg::Hello {
+                proto,
+                delta: want,
+                caps: peer_caps,
+            } => {
+                let (negotiated, reply) = negotiate_hello(handle, proto, want, peer_caps);
+                self.caps = negotiated;
+                if let Some(s) = self.session.as_mut() {
+                    self.caps.apply(s);
+                }
+                self.queue_msg(&reply);
+            }
+            Msg::Provision {
+                zygote_objects,
+                zygote_seed,
+                program_hash: want,
+            } => {
+                let (ok, reply) = check_provision(handle, zygote_objects, zygote_seed, want);
+                self.provisioned = self.provisioned || ok;
+                self.queue_msg(&reply);
+            }
+            Msg::SyncFs(fs) => {
+                match self.session.as_mut() {
+                    Some(s) => s.set_fs(fs),
+                    None => {
+                        let mut s = handle.session_auto(fs);
+                        self.caps.apply(&mut s);
+                        self.session = Some(s);
+                    }
+                }
+                self.queue_msg(&Msg::Ack);
+            }
+            Msg::Migrate(bytes) => {
+                if !self.provisioned {
+                    self.queue_msg(&Msg::Error("migrate before provision".into()));
+                    return;
+                }
+                if self.session.is_none() {
+                    let mut s = handle.session_auto(SimFs::new());
+                    self.caps.apply(&mut s);
+                    self.session = Some(s);
+                }
+                let wire_up = bytes.len() as u64;
+                let raw = match open_frame(&bytes) {
+                    Ok(raw) => raw.into_owned(),
+                    Err(e) => {
+                        self.queue_msg(&Msg::Error(e.to_string()));
+                        return;
+                    }
+                };
+                self.begin_roundtrip(raw, wire_up, stats, true);
+            }
+            Msg::Heartbeat {
+                base_epoch: _,
+                digest,
+                assignments,
+            } => match self.session.as_mut() {
+                Some(s) => match s.try_begin_heartbeat(digest, &assignments) {
+                    Ok(probe) => self.pending = Some(Pending::Heartbeat(probe)),
+                    Err(e) if e.is_need_full() => self.queue_msg(&Msg::NeedFull(e.to_string())),
+                    Err(e) => self.queue_msg(&Msg::Error(e.to_string())),
+                },
+                None => {
+                    let e = CloneCloudError::need_full("heartbeat before any session");
+                    self.queue_msg(&Msg::NeedFull(e.to_string()));
+                }
+            },
+            Msg::Shutdown => self.closing = true,
+            other => {
+                self.queue_msg(&Msg::Error(format!("unexpected message {other:?}")));
+            }
+        }
+    }
+
+    /// One readiness sweep: flush → poll farm → read → decode → flush.
+    /// Returns whether anything moved (the shard's backoff signal).
+    fn sweep(
+        &mut self,
+        handle: &FarmHandle,
+        stats: &mut GatewayStats,
+        read_timeout: Option<Duration>,
+        scratch: &mut [u8],
+    ) -> bool {
+        if self.dead {
+            return false;
+        }
+        let mut progress = match self.flush(stats) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("[farm] async conn write error: {e}");
+                self.dead = true;
+                return true;
+            }
+        };
+        if self.poll_pending(handle, stats) {
+            self.last_progress = Instant::now();
+            progress = true;
+        }
+
+        // Read, unless the peer owes us a drain first (write-interest
+        // backpressure) or a clean shutdown is already underway.
+        let mut fed = false;
+        if !self.closing {
+            if self.backlog() > WRITE_BACKLOG_CAP {
+                if !self.write_blocked {
+                    self.write_blocked = true;
+                    stats.backpressure_stalls += 1;
+                }
+            } else {
+                self.write_blocked = false;
+                match read_step(&mut self.stream, scratch) {
+                    Ok(ReadStep::Data(n)) => {
+                        self.decoder.feed(&scratch[..n]);
+                        self.last_progress = Instant::now();
+                        fed = true;
+                        progress = true;
+                    }
+                    Ok(ReadStep::Eof) => {
+                        progress = true;
+                        if self.decoder.mid_frame() {
+                            eprintln!(
+                                "[farm] async conn eof mid-frame ({} bytes buffered)",
+                                self.decoder.buffered()
+                            );
+                            stats.protocol_errors += 1;
+                            self.dead = true;
+                        } else if self.pending.is_some() {
+                            // Peer hung up with a roundtrip in flight;
+                            // dropping the ticket releases admission.
+                            eprintln!("[farm] async conn eof with work in flight");
+                            self.dead = true;
+                        } else {
+                            // EOF at a frame boundary is a clean close,
+                            // exactly like the blocking transport.
+                            self.closing = true;
+                        }
+                    }
+                    Ok(ReadStep::Idle) => {}
+                    Err(e) => {
+                        eprintln!("[farm] async conn read error: {e}");
+                        self.dead = true;
+                        return true;
+                    }
+                }
+            }
+        }
+
+        // Decode buffered frames. Strictly request/response: stop while
+        // farm work is pending — later frames wait in the decoder.
+        while !self.dead && !self.closing && self.pending.is_none() {
+            match self.decoder.next_frame() {
+                Ok(Some(frame)) => {
+                    progress = true;
+                    match Msg::decode(&frame) {
+                        Ok(msg) => self.handle_msg(msg, handle, stats),
+                        Err(e) => {
+                            eprintln!("[farm] async conn protocol error: {e}");
+                            stats.protocol_errors += 1;
+                            self.dead = true;
+                        }
+                    }
+                }
+                Ok(None) => {
+                    if fed && self.decoder.mid_frame() {
+                        stats.decode_stalls += 1;
+                    }
+                    break;
+                }
+                Err(e) => {
+                    eprintln!("[farm] async conn framing error: {e}");
+                    stats.protocol_errors += 1;
+                    self.dead = true;
+                }
+            }
+        }
+
+        if !self.dead {
+            match self.flush(stats) {
+                Ok(p) => progress |= p,
+                Err(e) => {
+                    eprintln!("[farm] async conn write error: {e}");
+                    self.dead = true;
+                    return true;
+                }
+            }
+        }
+
+        // Idle timeout. In-flight farm work suspends it (the phone is
+        // waiting on us), and any read/write progress resets it — a
+        // mid-frame dribble never retires a slow phone.
+        if let Some(tmo) = read_timeout {
+            if !self.dead
+                && !self.closing
+                && self.pending.is_none()
+                && self.last_progress.elapsed() > tmo
+            {
+                eprintln!(
+                    "[farm] async conn idle past {}ms, retiring{}",
+                    tmo.as_millis(),
+                    if self.decoder.mid_frame() {
+                        " (stalled mid-frame)"
+                    } else {
+                        ""
+                    }
+                );
+                self.dead = true;
+                progress = true;
+            }
+        }
+        progress
+    }
+}
+
+/// One shard: a private connection table swept with nonblocking I/O.
+fn shard_main(
+    shard: usize,
+    rx: Receiver<(TcpStream, Instant)>,
+    handle: FarmHandle,
+    read_timeout: Option<Duration>,
+    open: Arc<AtomicU64>,
+    peak: Arc<AtomicU64>,
+) -> GatewayStats {
+    let mut stats = GatewayStats::default();
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut scratch = vec![0u8; 64 * 1024];
+    let mut backoff = IdleBackoff::new(Duration::from_millis(2));
+    let mut accepting = true;
+    loop {
+        let mut progress = false;
+        // Adopt newly dealt connections.
+        while accepting {
+            match rx.try_recv() {
+                Ok((stream, accepted_at)) => {
+                    stats
+                        .handoff_ms
+                        .record(accepted_at.elapsed().as_secs_f64() * 1e3);
+                    match Conn::adopt(stream) {
+                        Ok(c) => {
+                            let now_open = open.fetch_add(1, Ordering::Relaxed) + 1;
+                            peak.fetch_max(now_open, Ordering::Relaxed);
+                            conns.push(c);
+                            progress = true;
+                        }
+                        Err(e) => {
+                            stats.accept_errors += 1;
+                            eprintln!("[farm] shard {shard} conn setup error: {e}");
+                        }
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => accepting = false,
+            }
+        }
+        // Sweep every connection; retire the finished ones.
+        let mut i = 0;
+        while i < conns.len() {
+            progress |= conns[i].sweep(&handle, &mut stats, read_timeout, &mut scratch);
+            if conns[i].finished() {
+                let c = conns.swap_remove(i);
+                stats.migrations += c.migrations;
+                open.fetch_sub(1, Ordering::Relaxed);
+                progress = true;
+            } else {
+                i += 1;
+            }
+        }
+        if !accepting && conns.is_empty() {
+            return stats;
+        }
+        if progress {
+            backoff.progress();
+        } else {
+            backoff.idle();
+        }
+    }
+}
+
+/// Serve the farm with the sharded nonblocking gateway. Returns the
+/// merged per-shard [`GatewayStats`] once `max_sessions` connections
+/// have been accepted **and** drained (with `max_sessions: None` it
+/// serves forever).
+///
+/// The phone-visible protocol — and every reply byte — is identical to
+/// [`super::gateway::serve_farm`]; only the scheduling differs.
+pub fn serve_farm_async(
+    ep: &TcpEndpoint,
+    handle: &FarmHandle,
+    cfg: &AsyncGatewayConfig,
+) -> Result<GatewayStats> {
+    let shards = cfg.shards.max(1);
+    let depth = cfg.shard_queue_depth.max(1);
+    ep.set_nonblocking(true)?;
+    let open = Arc::new(AtomicU64::new(0));
+    let peak = Arc::new(AtomicU64::new(0));
+    let mut senders = Vec::with_capacity(shards);
+    let mut joins = Vec::with_capacity(shards);
+    for shard in 0..shards {
+        let (tx, rx) = mpsc::sync_channel::<(TcpStream, Instant)>(depth);
+        senders.push(tx);
+        let h = handle.clone();
+        let (open, peak) = (open.clone(), peak.clone());
+        let tmo = cfg.read_timeout;
+        let join = std::thread::Builder::new()
+            .name(format!("gw-shard-{shard}"))
+            .spawn(move || shard_main(shard, rx, h, tmo, open, peak))
+            .map_err(|e| CloneCloudError::Transport(format!("spawn gateway shard: {e}")))?;
+        joins.push(join);
+    }
+
+    let mut accepts = 0u64;
+    let mut accept_errors = 0u64;
+    let mut backoff = IdleBackoff::new(Duration::from_millis(2));
+    loop {
+        if let Some(max) = cfg.max_sessions {
+            if accepts as usize >= max {
+                break;
+            }
+        }
+        match ep.poll_accept() {
+            Ok(Some(stream)) => {
+                let shard = (accepts as usize) % shards;
+                accepts += 1;
+                // A full shard queue blocks right here: backpressure at
+                // the front door instead of unbounded connection growth.
+                if senders[shard].send((stream, Instant::now())).is_err() {
+                    accept_errors += 1;
+                }
+                backoff.progress();
+            }
+            Ok(None) => backoff.idle(),
+            Err(e) => {
+                accept_errors += 1;
+                eprintln!("[farm] accept error: {e}");
+                backoff.idle();
+            }
+        }
+    }
+
+    drop(senders); // shards drain their tables, then exit
+    let mut stats = GatewayStats::default();
+    for join in joins {
+        let shard_stats = join
+            .join()
+            .map_err(|_| CloneCloudError::Transport("gateway shard panicked".into()))?;
+        stats.absorb(&shard_stats);
+    }
+    stats.accepts = accepts;
+    stats.accept_errors += accept_errors;
+    stats.conns_peak = peak.load(Ordering::Relaxed);
+    ep.set_nonblocking(false)?;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::{Read, Write};
+    use std::sync::Arc;
+
+    use super::super::manager::NodeManager;
+    use super::super::protocol::{Codec, PROTO_VERSION, SUPPORTED_CAPS};
+    use super::super::transport::TcpTransport;
+    use super::*;
+    use crate::appvm::assembler::assemble;
+    use crate::appvm::natives::NodeEnv;
+    use crate::appvm::process::Process;
+    use crate::appvm::zygote::build_template;
+    use crate::config::{CostParams, ExecTierKind};
+    use crate::device::{DeviceSpec, Location};
+    use crate::farm::{
+        synthetic_expected, synthetic_offload_src, CloneFarm, FarmConfig, PlacementPolicy,
+    };
+    use crate::migration::{CapturePacket, Migrator};
+
+    const ITERS: i64 = 2_000;
+    const ZY: usize = 120;
+    const SEED: u64 = 3;
+
+    fn start_farm(workers: usize, policy: PlacementPolicy) -> (Arc<crate::appvm::Program>, CloneFarm) {
+        let program = Arc::new(assemble(&synthetic_offload_src(ITERS)).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let farm = CloneFarm::start(
+            program.clone(),
+            FarmConfig {
+                workers,
+                warm_per_worker: 1,
+                queue_depth: 8,
+                policy,
+                zygote_objects: ZY,
+                zygote_seed: SEED,
+                fuel: 100_000_000,
+                slot_gc_interval: 8,
+                exec_tier: ExecTierKind::Tier1,
+            },
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        (program, farm)
+    }
+
+    fn drive_phone(addr: &str, program: &Arc<crate::appvm::Program>) -> i64 {
+        let mut fs = crate::vfs::SimFs::new();
+        fs.add("data.bin", (0u8..64).collect());
+
+        let mut nm = NodeManager::new(TcpTransport::connect(addr).unwrap());
+        nm.provision(program, ZY, SEED).unwrap();
+        nm.sync_fs(&fs).unwrap();
+
+        let template = build_template(program, ZY, SEED);
+        let mut phone = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(fs),
+        );
+        let main = program.entry().unwrap();
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        use crate::appvm::interp::{run_thread, NoHooks, RunExit};
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 100_000_000).unwrap();
+        assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+
+        let migrator = Migrator::new(CostParams::default());
+        let (packet, _) = migrator.migrate_out(&mut phone, tid).unwrap();
+        let (rbytes, transfer) = nm.migrate(packet.encode()).unwrap();
+        assert!(transfer.up > 0 && transfer.down > 0);
+        let rpacket = CapturePacket::decode(&rbytes).unwrap();
+        migrator.merge_back(&mut phone, tid, &rpacket).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 100_000_000).unwrap();
+        assert!(matches!(exit, RunExit::Completed(_)), "{exit:?}");
+        nm.shutdown().unwrap();
+        phone.statics[main.class.0 as usize][0].as_int().unwrap()
+    }
+
+    /// Full wire path over real sockets: several phones, each running
+    /// the complete provision → sync → migrate → merge conversation
+    /// against the sharded gateway, all landing the right result.
+    #[test]
+    fn async_gateway_end_to_end_over_wire_protocol() {
+        const PHONES: usize = 3;
+        let (program, farm) = start_farm(2, PlacementPolicy::LeastLoaded);
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        let handle = farm.handle();
+        let gw = std::thread::spawn(move || {
+            let cfg = AsyncGatewayConfig {
+                shards: 2,
+                max_sessions: Some(PHONES),
+                ..AsyncGatewayConfig::default()
+            };
+            serve_farm_async(&ep, &handle, &cfg).unwrap()
+        });
+
+        let mut fs = crate::vfs::SimFs::new();
+        fs.add("data.bin", (0u8..64).collect());
+        let expected = synthetic_expected(&fs, ITERS);
+
+        let phones: Vec<_> = (0..PHONES)
+            .map(|_| {
+                let addr = addr.clone();
+                let program = program.clone();
+                std::thread::spawn(move || drive_phone(&addr, &program))
+            })
+            .collect();
+        for p in phones {
+            assert_eq!(p.join().unwrap(), expected);
+        }
+
+        let stats = gw.join().unwrap();
+        assert_eq!(stats.accepts, PHONES as u64);
+        assert_eq!(stats.migrations, PHONES as u64);
+        assert_eq!(stats.protocol_errors, 0);
+        assert!(stats.conns_peak >= 1);
+        assert_eq!(stats.handoff_ms.count(), PHONES as u64);
+
+        let fstats = farm.shutdown();
+        assert_eq!(fstats.migrations, PHONES as u64);
+        assert_eq!(fstats.sessions_opened, PHONES as u64);
+        assert_eq!(fstats.sessions_closed, PHONES as u64, "sessions retired");
+    }
+
+    /// The async gateway applies the same dict-masking rule as the
+    /// blocking one: without affinity placement, `CAP_SESSION_DICT` is
+    /// masked out of the Hello reply.
+    #[test]
+    fn async_gateway_masks_dict_capability_without_affinity() {
+        let (_program, farm) = start_farm(2, PlacementPolicy::LeastLoaded);
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        let handle = farm.handle();
+        let gw = std::thread::spawn(move || {
+            let cfg = AsyncGatewayConfig {
+                shards: 1,
+                max_sessions: Some(1),
+                ..AsyncGatewayConfig::default()
+            };
+            serve_farm_async(&ep, &handle, &cfg).unwrap()
+        });
+
+        let mut nm = NodeManager::new(TcpTransport::connect(&addr).unwrap());
+        nm.negotiate().unwrap();
+        assert!(!nm.delta_negotiated(), "delta needs affinity placement");
+        assert!(!nm.dict_negotiated(), "dict bit masked out of reply caps");
+        assert_eq!(nm.negotiated_codec(), Codec::Lz, "codec survives the mask");
+        nm.shutdown().unwrap();
+        gw.join().unwrap();
+        farm.shutdown();
+    }
+
+    /// A phone dribbling its frames a byte at a time (partial reads on
+    /// every sweep) still completes the conversation: the decoder
+    /// accumulates across sweeps and the idle timeout counts dribble as
+    /// progress.
+    #[test]
+    fn async_gateway_survives_byte_dribble() {
+        let (_program, farm) = start_farm(1, PlacementPolicy::Affinity);
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        let handle = farm.handle();
+        let gw = std::thread::spawn(move || {
+            let cfg = AsyncGatewayConfig {
+                shards: 1,
+                read_timeout: Some(Duration::from_millis(100)),
+                max_sessions: Some(1),
+                ..AsyncGatewayConfig::default()
+            };
+            serve_farm_async(&ep, &handle, &cfg).unwrap()
+        });
+
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.set_nodelay(true).ok();
+        let hello = Msg::Hello {
+            proto: PROTO_VERSION,
+            delta: true,
+            caps: SUPPORTED_CAPS,
+        };
+        let payload = hello.encode();
+        let mut wire = (payload.len() as u32).to_be_bytes().to_vec();
+        wire.extend_from_slice(&payload);
+        for b in wire {
+            s.write_all(&[b]).unwrap();
+            s.flush().ok();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Read the Hello reply frame off the raw socket.
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let mut reply = vec![0u8; u32::from_be_bytes(len) as usize];
+        s.read_exact(&mut reply).unwrap();
+        match Msg::decode(&reply).unwrap() {
+            Msg::Hello { proto, delta, caps } => {
+                assert_eq!(proto, PROTO_VERSION);
+                assert!(delta, "affinity placement keeps delta on");
+                assert_eq!(caps, SUPPORTED_CAPS);
+            }
+            other => panic!("expected Hello reply, got {other:?}"),
+        }
+        let bye = Msg::Shutdown.encode();
+        s.write_all(&(bye.len() as u32).to_be_bytes()).unwrap();
+        s.write_all(&bye).unwrap();
+        drop(s);
+
+        let stats = gw.join().unwrap();
+        assert_eq!(stats.protocol_errors, 0, "dribble is not a violation");
+        assert!(stats.decode_stalls > 0, "partial frames were observed");
+        farm.shutdown();
+    }
+
+    /// Dozens of concurrent connections multiplex over a small fixed
+    /// shard count, and the per-shard tables retire them all cleanly.
+    #[test]
+    fn async_gateway_many_concurrent_connections() {
+        const CONNS: usize = 32;
+        let (_program, farm) = start_farm(2, PlacementPolicy::LeastLoaded);
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        let handle = farm.handle();
+        let gw = std::thread::spawn(move || {
+            let cfg = AsyncGatewayConfig {
+                shards: 2,
+                shard_queue_depth: 4,
+                max_sessions: Some(CONNS),
+                ..AsyncGatewayConfig::default()
+            };
+            serve_farm_async(&ep, &handle, &cfg).unwrap()
+        });
+
+        let clients: Vec<_> = (0..CONNS)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut nm = NodeManager::new(TcpTransport::connect(&addr).unwrap());
+                    nm.negotiate().unwrap();
+                    nm.shutdown().unwrap();
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+
+        let stats = gw.join().unwrap();
+        assert_eq!(stats.accepts, CONNS as u64);
+        assert_eq!(stats.protocol_errors, 0);
+        assert_eq!(stats.handoff_ms.count(), CONNS as u64);
+        farm.shutdown();
+    }
+
+    #[test]
+    fn gateway_kind_parses_config_spellings() {
+        assert_eq!(GatewayKind::parse("async"), Some(GatewayKind::Async));
+        assert_eq!(GatewayKind::parse("blocking"), Some(GatewayKind::Blocking));
+        assert_eq!(GatewayKind::parse("epoll"), None);
+        assert_eq!(GatewayKind::default().name(), "async");
+    }
+}

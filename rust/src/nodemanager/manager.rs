@@ -32,8 +32,11 @@ use crate::migration::{DictMode, DictRead};
 /// Statistics from one clone-serving session.
 #[derive(Debug, Clone, Default)]
 pub struct CloneServeStats {
+    /// Forward capsules executed to their reintegration point.
     pub migrations: usize,
+    /// Instructions executed on behalf of migrated threads.
     pub instrs_executed: u64,
+    /// Stale phone→clone object-map entries dropped at capture time.
     pub mapping_entries_dropped: usize,
     /// Migrations that arrived as delta capsules.
     pub delta_migrations: usize,
@@ -44,17 +47,20 @@ pub struct CloneServeStats {
     pub heartbeats: usize,
     /// Heartbeats answered `NeedFull` (divergent/missing baseline).
     pub heartbeat_divergent: usize,
-    /// Periodic slot collections run, and what they reclaimed.
+    /// Periodic slot collections run.
     pub slot_gc_runs: usize,
+    /// Tombstone threads reclaimed by slot GC.
     pub slot_gc_threads: usize,
+    /// Orphaned object-graph copies reclaimed by slot GC.
     pub slot_gc_objects: usize,
     /// Tier-1 engine activity (zero when `exec_tier = interp`): methods
-    /// promoted past the hotness threshold, successful translations,
-    /// hot activations served from the translation cache, and
-    /// instructions executed by translated segments.
+    /// promoted past the hotness threshold.
     pub tier_promotions: u64,
+    /// Successful tier-1 translations.
     pub tier_translations: u64,
+    /// Hot activations served from the translation cache.
     pub tier_cache_hits: u64,
+    /// Instructions executed by translated tier-1 segments.
     pub tier1_instrs: u64,
 }
 
@@ -92,6 +98,8 @@ pub struct CloneServer<T: Transport> {
 }
 
 impl<T: Transport> CloneServer<T> {
+    /// Build a server for one transport with default tuning (tier-1
+    /// execution, full protocol revision and capability set).
     pub fn new(
         transport: T,
         program: Arc<Program>,
@@ -429,7 +437,9 @@ pub fn execute_migration(
 /// Byte accounting for one migration round trip.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TransferBytes {
+    /// Bytes shipped phone → clone (forward capsule, fs sync).
     pub up: u64,
+    /// Bytes shipped clone → phone (reverse capsule).
     pub down: u64,
 }
 
@@ -458,6 +468,8 @@ pub struct NodeManager<T: Transport> {
 }
 
 impl<T: Transport> NodeManager<T> {
+    /// Wrap a connected transport; no negotiation happens until
+    /// [`NodeManager::negotiate`].
     pub fn new(transport: T) -> NodeManager<T> {
         NodeManager {
             transport,
@@ -683,6 +695,7 @@ impl<T: Transport> NodeManager<T> {
         Ok((bytes, t))
     }
 
+    /// Tell the peer this session is over (clean EOF follows).
     pub fn shutdown(&mut self) -> Result<()> {
         self.transport.send(&Msg::Shutdown)?;
         Ok(())

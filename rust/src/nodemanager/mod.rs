@@ -8,24 +8,33 @@
 //! report.
 //!
 //! Two server shapes share one execution core ([`execute_migration`]):
-//! [`CloneServer`] dedicates a clone to a single phone, while
-//! [`gateway`] fronts the multi-tenant farm (`crate::farm`) — same wire
-//! protocol, many phones.
+//! [`CloneServer`] dedicates a clone to a single phone, while the farm
+//! gateways front the multi-tenant farm (`crate::farm`) — same wire
+//! protocol, many phones. The gateway itself comes in two
+//! interchangeable builds: [`gateway`] (thread-per-connection, the
+//! ablation baseline) and [`gateway_async`] (nonblocking sharded
+//! readiness loop for C10k-scale phone swarms).
+//!
+//! See `docs/WIRE.md` for the complete wire reference and
+//! `docs/ARCHITECTURE.md` for how this layer fits the whole system.
+#![warn(missing_docs)]
 
 pub mod gateway;
+pub mod gateway_async;
 pub mod manager;
 pub mod protocol;
 pub mod transport;
 
 pub use gateway::{serve_farm, serve_farm_session};
+pub use gateway_async::{serve_farm_async, AsyncGatewayConfig, GatewayKind, GatewayStats};
 pub use manager::{
     execute_migration, CloneServeStats, CloneServer, NodeManager, TransferBytes,
 };
 pub use protocol::{
     codec_agreed, codec_agreed_at, delta_agreed, delta_agreed_at, dict_agreed, drive_heartbeat,
     open_frame, patch_frame_payload, program_hash, seal_frame, seal_frame_keep_head, trace_agreed,
-    Codec, HeartbeatOutcome, Msg, CAP_CODEC_LZ, CAP_SESSION_DICT, CAP_TRACE_CTX, DICT_MIN_PROTO,
-    PROTO_VERSION, SUPPORTED_CAPS, TRACE_MIN_PROTO,
+    Codec, FrameDecoder, HeartbeatOutcome, Msg, CAP_CODEC_LZ, CAP_SESSION_DICT, CAP_TRACE_CTX,
+    DICT_MIN_PROTO, MAX_FRAME_BYTES, PROTO_VERSION, SUPPORTED_CAPS, TRACE_MIN_PROTO,
 };
 pub use transport::{InProcTransport, TcpEndpoint, TcpTransport, Transport};
 

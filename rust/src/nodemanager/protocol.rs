@@ -104,12 +104,15 @@ pub fn trace_agreed(local_proto: u16, local_caps: u32, peer_proto: u16, peer_cap
 /// flows only after both `Hello`s carried [`CAP_CODEC_LZ`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Codec {
+    /// Frames ride raw (always legal; the pre-v4 answer).
     #[default]
     None,
+    /// Frames are sealed with the hand-rolled LZ77/RLE codec.
     Lz,
 }
 
 impl Codec {
+    /// Short lowercase name for logs and metrics labels.
     pub fn name(&self) -> &'static str {
         match self {
             Codec::None => "none",
@@ -305,6 +308,108 @@ pub fn patch_frame_payload(wire: &mut [u8], offset: usize, patch: &[u8]) -> Resu
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Incremental frame decoder (shared by the blocking and async serve paths)
+// ---------------------------------------------------------------------------
+
+/// Hard ceiling on a single wire frame's payload (the 4-byte length
+/// prefix may not claim more). A lying or hostile prefix is rejected at
+/// [`FrameDecoder::next_frame`] *before* any payload-sized allocation,
+/// so buffering stays bounded by real bytes received.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Incremental decoder for the TCP framing: 4-byte big-endian length
+/// prefix followed by that many payload bytes, repeated.
+///
+/// Feed it whatever the socket produced — one byte or one megabyte —
+/// and drain complete frames with [`FrameDecoder::next_frame`]. The
+/// decoder never blocks, never looks at a transport, and never
+/// preallocates what a prefix merely *claims*: memory grows only with
+/// bytes actually fed. Both gateways share it: the blocking transport
+/// drives it from timeout-interrupted reads, the async gateway from
+/// readiness-loop reads.
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already consumed by returned frames; compacted
+    /// away once past half the buffer so feeds stay amortized O(1).
+    start: usize,
+    max_frame: usize,
+}
+
+impl Default for FrameDecoder {
+    fn default() -> Self {
+        FrameDecoder::new()
+    }
+}
+
+impl FrameDecoder {
+    /// A decoder with the default [`MAX_FRAME_BYTES`] frame ceiling.
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::with_max_frame(MAX_FRAME_BYTES)
+    }
+
+    /// A decoder with an explicit frame ceiling (tests use small ones
+    /// to exercise the lying-prefix rejection cheaply).
+    pub fn with_max_frame(max_frame: usize) -> FrameDecoder {
+        FrameDecoder {
+            buf: Vec::new(),
+            start: 0,
+            max_frame,
+        }
+    }
+
+    /// Append raw socket bytes. Any split is fine — mid-prefix,
+    /// mid-payload, several frames at once.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        if self.start > 0 && self.start >= self.buf.len().max(4096) / 2 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame's payload, `Ok(None)` while more
+    /// bytes are needed. A prefix claiming more than the ceiling is a
+    /// wire error (the connection is poisoned — callers drop it).
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>> {
+        let avail = &self.buf[self.start..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_be_bytes([avail[0], avail[1], avail[2], avail[3]]) as usize;
+        if len > self.max_frame {
+            return Err(CloneCloudError::Wire(format!(
+                "frame length prefix {len} exceeds the {}-byte ceiling",
+                self.max_frame
+            )));
+        }
+        if avail.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = avail[4..4 + len].to_vec();
+        self.start += 4 + len;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        }
+        Ok(Some(frame))
+    }
+
+    /// Unconsumed bytes currently buffered (partial prefix + payload).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Whether the decoder sits mid-frame: it has seen at least one
+    /// byte of the next frame but not all of it. This is the bit the
+    /// blocking transport uses to tell "idle peer" (clean timeout /
+    /// EOF) from "peer died mid-capsule" (hard error).
+    pub fn mid_frame(&self) -> bool {
+        self.buffered() > 0
+    }
+}
+
 /// Protocol messages.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Msg {
@@ -312,8 +417,11 @@ pub enum Msg {
     /// hash (the executable itself arrives via file sync — both sides
     /// load the same binary).
     Provision {
+        /// Zygote template size (object count) to boot with.
         zygote_objects: u32,
+        /// Deterministic template seed (same seed ⇒ same names).
         zygote_seed: u64,
+        /// FNV-1a identity of the executable both sides must share.
         program_hash: u64,
     },
     /// Synchronize the phone file system to the clone.
@@ -338,7 +446,16 @@ pub enum Msg {
     /// `proto >= 4` (a v3-shaped `Hello` has no caps field; it decodes
     /// as `caps = 0`), so a v4 responder stays byte-compatible with v3
     /// initiators.
-    Hello { proto: u16, delta: bool, caps: u32 },
+    Hello {
+        /// Protocol revision the sender speaks (responders echo the
+        /// negotiated minimum).
+        proto: u16,
+        /// Whether the sender offers delta capsules.
+        delta: bool,
+        /// Capability bitmap (`CAP_*`); rides the wire only when
+        /// `proto >= 4`.
+        caps: u32,
+    },
     /// The clone rejected a delta capsule (no/incoherent baseline); the
     /// phone must resend the migration as a full capture.
     NeedFull(String),
@@ -349,7 +466,9 @@ pub enum Msg {
     /// `NeedFull`, pre-arming a full capture *before* a doomed delta is
     /// built and shipped.
     Heartbeat {
+        /// The sender's baseline heap epoch.
         base_epoch: u64,
+        /// Canonical session digest at that epoch.
         digest: u64,
         /// (clone id, assigned mobile id) pairs from the last reverse
         /// merge (same bookkeeping a forward delta would carry).
@@ -358,6 +477,7 @@ pub enum Msg {
 }
 
 impl Msg {
+    /// Encode to the tagged wire form ([`Msg::decode`] inverts it).
     pub fn encode(&self) -> Vec<u8> {
         let mut w = WireWriter::new();
         match self {
@@ -426,6 +546,9 @@ impl Msg {
         w.into_vec()
     }
 
+    /// Decode one tagged message. Strict: unknown tags and trailing
+    /// bytes are errors, and hostile counts are clamped by
+    /// [`WireReader::checked_count`] before any allocation.
     pub fn decode(buf: &[u8]) -> Result<Msg> {
         let mut r = WireReader::new(buf);
         let tag = r.get_u8()?;
@@ -899,6 +1022,171 @@ mod tests {
         let mut plain = raw.clone();
         patch_frame_payload(&mut plain, 11, &patch).unwrap();
         assert_eq!(plain, expect);
+    }
+
+    // ---- incremental frame decoder --------------------------------------
+
+    /// Length-prefix a payload the way the TCP transport does.
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut v = (payload.len() as u32).to_be_bytes().to_vec();
+        v.extend_from_slice(payload);
+        v
+    }
+
+    /// Drain every complete frame currently buffered.
+    fn drain(d: &mut FrameDecoder) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        while let Some(f) = d.next_frame().unwrap() {
+            out.push(f);
+        }
+        out
+    }
+
+    #[test]
+    fn frame_decoder_byte_at_a_time() {
+        let frames: Vec<Vec<u8>> = vec![vec![], vec![7], vec![1, 2, 3, 4, 5]];
+        let stream: Vec<u8> = frames.iter().flat_map(|f| framed(f)).collect();
+        let mut d = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in &stream {
+            d.feed(&[b]);
+            got.extend(drain(&mut d));
+        }
+        assert_eq!(got, frames);
+        assert_eq!(d.buffered(), 0);
+        assert!(!d.mid_frame());
+    }
+
+    /// Split a two-frame stream at EVERY byte boundary: the decoder must
+    /// hand back exactly the same frames regardless of where the socket
+    /// happened to cut.
+    #[test]
+    fn frame_decoder_split_at_every_boundary() {
+        let a = vec![0xAB; 37];
+        let b = vec![0xCD; 5];
+        let mut stream = framed(&a);
+        stream.extend_from_slice(&framed(&b));
+        for cut in 0..=stream.len() {
+            let mut d = FrameDecoder::new();
+            d.feed(&stream[..cut]);
+            let mut got = drain(&mut d);
+            // Mid-frame exactly when the cut left unconsumed bytes.
+            assert_eq!(d.mid_frame(), d.buffered() > 0);
+            d.feed(&stream[cut..]);
+            got.extend(drain(&mut d));
+            assert_eq!(got, vec![a.clone(), b.clone()], "cut at {cut}");
+            assert_eq!(d.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn prop_frame_decoder_random_chunking_roundtrips() {
+        use crate::util::prop::{ensure, ensure_eq, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xF4A_3E05,
+                cases: 100,
+            },
+            |rng| {
+                let frames: Vec<Vec<u8>> = (0..1 + rng.index(5))
+                    .map(|_| {
+                        let mut b = vec![0u8; rng.index(512)];
+                        rng.fill_bytes(&mut b);
+                        b
+                    })
+                    .collect();
+                let stream: Vec<u8> = frames.iter().flat_map(|f| framed(f)).collect();
+                // Random cut points, sorted, possibly duplicated.
+                let mut cuts: Vec<usize> =
+                    (0..rng.index(8)).map(|_| rng.index(stream.len() + 1)).collect();
+                cuts.sort_unstable();
+                (frames, stream, cuts)
+            },
+            |(frames, stream, cuts)| {
+                let mut d = FrameDecoder::new();
+                let mut got = Vec::new();
+                let mut prev = 0usize;
+                for &c in cuts.iter().chain(std::iter::once(&stream.len())) {
+                    d.feed(&stream[prev..c]);
+                    prev = c;
+                    while let Some(f) =
+                        d.next_frame().map_err(|e| format!("next_frame: {e}"))?
+                    {
+                        got.push(f);
+                    }
+                }
+                ensure_eq(got, frames.clone(), "frames survive arbitrary chunking")?;
+                ensure(d.buffered() == 0, "stream fully consumed")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_frame_decoder_garbage_never_panics() {
+        use crate::util::prop::{ensure, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0xF4A_3E06,
+                cases: 300,
+            },
+            |rng| {
+                let mut b = vec![0u8; rng.index(256)];
+                rng.fill_bytes(&mut b);
+                b
+            },
+            |bytes| {
+                let mut d = FrameDecoder::with_max_frame(4096);
+                let mut fed = 0usize;
+                for chunk in bytes.chunks(7) {
+                    d.feed(chunk);
+                    fed += chunk.len();
+                    loop {
+                        match d.next_frame() {
+                            Ok(Some(_)) => continue,
+                            Ok(None) => break,
+                            Err(_) => break, // lying prefix: clean error
+                        }
+                    }
+                    // Bounded buffering: the decoder never holds more
+                    // than what was actually fed, whatever the prefixes
+                    // claim.
+                    ensure(d.buffered() <= fed, "buffering bounded by bytes fed")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// A lying length prefix is rejected as soon as the 4 prefix bytes
+    /// arrive — no payload-sized allocation, no waiting for a payload
+    /// that will never come.
+    #[test]
+    fn frame_decoder_rejects_lying_prefix_immediately() {
+        let mut d = FrameDecoder::with_max_frame(1024);
+        d.feed(&(1025u32).to_be_bytes());
+        let err = d.next_frame().unwrap_err().to_string();
+        assert!(err.contains("ceiling"), "got: {err}");
+        // At the exact ceiling it is a legal (pending) frame.
+        let mut d = FrameDecoder::with_max_frame(1024);
+        d.feed(&(1024u32).to_be_bytes());
+        assert!(d.next_frame().unwrap().is_none());
+        assert!(d.mid_frame());
+        d.feed(&[3u8; 1024]);
+        assert_eq!(d.next_frame().unwrap().unwrap().len(), 1024);
+    }
+
+    /// Long sessions stay O(1): the consumed prefix is compacted away,
+    /// so a million tiny frames never grow the buffer.
+    #[test]
+    fn frame_decoder_compacts_consumed_bytes() {
+        let mut d = FrameDecoder::new();
+        let one = framed(&[0x11; 16]);
+        for _ in 0..10_000 {
+            d.feed(&one);
+            assert_eq!(d.next_frame().unwrap().unwrap(), vec![0x11; 16]);
+        }
+        assert_eq!(d.buffered(), 0);
+        assert!(d.buf.len() < 8 * one.len(), "buffer stays compacted");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use crate::error::{CloneCloudError, Result};
 
-use super::protocol::Msg;
+use super::protocol::{FrameDecoder, Msg};
 
 /// A bidirectional message transport.
 pub trait Transport {
@@ -66,29 +66,40 @@ impl Transport for InProcTransport {
 
 // -------------------------------------------------------------------- tcp
 
-/// Framed TCP transport (4-byte big-endian length prefix).
+/// Framed TCP transport (4-byte big-endian length prefix), driven by
+/// the same incremental [`FrameDecoder`] the async gateway uses.
 ///
 /// Peer EOF *between* frames is a clean close: `recv` reports it as a
 /// `Msg::Shutdown` so servers tear sessions down without error noise.
 /// EOF *inside* a frame (truncated length or body) is still an error.
 /// An optional read timeout bounds how long `recv` blocks, so a hung
-/// peer cannot wedge the caller forever; a timeout is fatal to the
-/// transport (the frame stream may be mid-frame and desynchronized).
+/// peer cannot wedge the caller forever. Timeouts distinguish *where*
+/// the stream stood: at a frame boundary an idle timeout is fatal (the
+/// peer owed us nothing and the caller chose not to wait), but
+/// **mid-frame a timeout only kills the transport when the peer made no
+/// progress at all across a full timeout window** — a slow phone
+/// dribbling a large capsule over a slow uplink keeps its session
+/// instead of being silently retired mid-capsule.
 pub struct TcpTransport {
     stream: TcpStream,
+    decoder: FrameDecoder,
 }
 
 impl TcpTransport {
+    /// Connect to a listening gateway/clone at `addr`.
     pub fn connect(addr: &str) -> Result<TcpTransport> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| CloneCloudError::Transport(format!("connect {addr}: {e}")))?;
-        stream.set_nodelay(true).ok();
-        Ok(TcpTransport { stream })
+        Ok(TcpTransport::from_stream(stream))
     }
 
+    /// Wrap an accepted stream (sets TCP_NODELAY; frames are small).
     pub fn from_stream(stream: TcpStream) -> TcpTransport {
         stream.set_nodelay(true).ok();
-        TcpTransport { stream }
+        TcpTransport {
+            stream,
+            decoder: FrameDecoder::new(),
+        }
     }
 
     /// Bound how long `recv` may block (`None` = wait forever).
@@ -99,7 +110,7 @@ impl TcpTransport {
     }
 }
 
-fn is_timeout(e: &std::io::Error) -> bool {
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
     matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
 }
 
@@ -115,34 +126,61 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&mut self) -> Result<(Msg, u64)> {
-        let mut len = [0u8; 4];
-        // A clean close lands exactly on a frame boundary: only an EOF
-        // before the first prefix byte reads as Shutdown. EOF after a
-        // partial prefix is a truncated frame and stays an error.
-        let mut got = 0usize;
-        while got < 4 {
-            match self.stream.read(&mut len[got..]) {
-                Ok(0) if got == 0 => return Ok((Msg::Shutdown, 0)),
+        // A frame may already be fully buffered from an earlier read
+        // that straddled a boundary.
+        if let Some(frame) = self.decoder.next_frame()? {
+            let n = frame.len() as u64;
+            return Ok((Msg::decode(&frame)?, n));
+        }
+        let mut scratch = [0u8; 64 * 1024];
+        // One timeout window with zero bytes of progress while
+        // mid-frame means the peer stalled, not that it is slow.
+        let mut progressed_since_timeout = false;
+        loop {
+            match self.stream.read(&mut scratch) {
+                // A clean close lands exactly on a frame boundary: only
+                // an EOF with nothing buffered reads as Shutdown. EOF
+                // after a partial prefix/body is a truncated frame.
+                Ok(0) if !self.decoder.mid_frame() => return Ok((Msg::Shutdown, 0)),
                 Ok(0) => {
                     return Err(CloneCloudError::Transport(format!(
-                        "recv len: eof after {got} of 4 prefix bytes"
+                        "recv: eof mid-frame with {} bytes buffered",
+                        self.decoder.buffered()
                     )))
                 }
-                Ok(n) => got += n,
+                Ok(n) => {
+                    progressed_since_timeout = true;
+                    self.decoder.feed(&scratch[..n]);
+                    if let Some(frame) = self.decoder.next_frame()? {
+                        let n = frame.len() as u64;
+                        return Ok((Msg::decode(&frame)?, n));
+                    }
+                }
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if is_timeout(&e) => {
+                    if !self.decoder.mid_frame() {
+                        // Idle at a frame boundary: the bounded wait the
+                        // caller asked for. Fatal, but clean.
+                        return Err(CloneCloudError::Transport(format!(
+                            "recv timed out: {e}"
+                        )));
+                    }
+                    if progressed_since_timeout {
+                        // Mid-frame but still moving: a slow peer, not a
+                        // dead one. Grant another window.
+                        progressed_since_timeout = false;
+                        continue;
+                    }
+                    return Err(CloneCloudError::Transport(format!(
+                        "recv: peer stalled mid-frame ({} bytes buffered): {e}",
+                        self.decoder.buffered()
+                    )));
+                }
                 Err(e) => {
-                    let what = if is_timeout(&e) { "recv timed out" } else { "recv len" };
-                    return Err(CloneCloudError::Transport(format!("{what}: {e}")));
+                    return Err(CloneCloudError::Transport(format!("recv: {e}")));
                 }
             }
         }
-        let n = u32::from_be_bytes(len) as usize;
-        let mut buf = vec![0u8; n];
-        self.stream.read_exact(&mut buf).map_err(|e| {
-            let what = if is_timeout(&e) { "recv timed out mid-frame" } else { "recv body" };
-            CloneCloudError::Transport(format!("{what}: {e}"))
-        })?;
-        Ok((Msg::decode(&buf)?, n as u64))
     }
 }
 
@@ -159,6 +197,7 @@ impl TcpEndpoint {
         Ok(TcpEndpoint { listener })
     }
 
+    /// The bound address as `ip:port` (resolves ephemeral port 0).
     pub fn local_addr(&self) -> Result<String> {
         Ok(self
             .listener
@@ -167,12 +206,33 @@ impl TcpEndpoint {
             .to_string())
     }
 
+    /// Block for the next connection, wrapped as a framed transport.
     pub fn accept(&self) -> Result<TcpTransport> {
         let (stream, _) = self
             .listener
             .accept()
             .map_err(|e| CloneCloudError::Transport(format!("accept: {e}")))?;
         Ok(TcpTransport::from_stream(stream))
+    }
+
+    /// Switch the listener between blocking and nonblocking accepts
+    /// (the async gateway polls; the blocking gateway waits).
+    pub fn set_nonblocking(&self, on: bool) -> Result<()> {
+        self.listener
+            .set_nonblocking(on)
+            .map_err(|e| CloneCloudError::Transport(format!("set_nonblocking: {e}")))
+    }
+
+    /// Nonblocking accept: `Ok(Some)` on a new connection, `Ok(None)`
+    /// when none is pending. Only meaningful after
+    /// [`TcpEndpoint::set_nonblocking`]`(true)`.
+    pub fn poll_accept(&self) -> Result<Option<TcpStream>> {
+        match self.listener.accept() {
+            Ok((stream, _)) => Ok(Some(stream)),
+            Err(e) if is_timeout(&e) => Ok(None),
+            Err(e) if e.kind() == ErrorKind::Interrupted => Ok(None),
+            Err(e) => Err(CloneCloudError::Transport(format!("accept: {e}"))),
+        }
     }
 }
 
@@ -223,6 +283,103 @@ mod tests {
         let err = t.recv().unwrap_err().to_string();
         assert!(err.contains("timed out"), "{err}");
         assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+    }
+
+    /// A slow phone dribbling one frame across many timeout windows is
+    /// NOT retired: every window sees progress, so `recv` keeps
+    /// granting another. (This was the PR 8 bugfix — a mid-frame
+    /// timeout used to kill the session like a hard error.)
+    #[test]
+    fn tcp_slow_dribble_mid_frame_survives_timeouts() {
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        // The server only starts its bounded recv once the first bytes
+        // are already on the wire, so the *idle* timeout path cannot
+        // race the client's first write.
+        let (started_tx, started_rx) = channel();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_nodelay(true).ok();
+            let msg = Msg::Migrate(vec![42; 64]);
+            let payload = msg.encode();
+            let mut wire = (payload.len() as u32).to_be_bytes().to_vec();
+            wire.extend_from_slice(&payload);
+            let mut chunks = wire.chunks(5);
+            s.write_all(chunks.next().unwrap()).unwrap();
+            s.flush().ok();
+            started_tx.send(()).unwrap();
+            // Each remaining chunk is separated by more than the read
+            // timeout: every window still sees progress.
+            for chunk in chunks {
+                std::thread::sleep(Duration::from_millis(30));
+                s.write_all(chunk).unwrap();
+                s.flush().ok();
+            }
+            s
+        });
+        let mut t = ep.accept().unwrap();
+        t.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        started_rx.recv().unwrap();
+        let (m, _) = t.recv().unwrap();
+        assert_eq!(m, Msg::Migrate(vec![42; 64]));
+        drop(client.join().unwrap());
+    }
+
+    /// A peer that goes silent *mid-frame* gets the distinct stall
+    /// error — not the clean-Shutdown EOF path, not the idle-timeout
+    /// message.
+    #[test]
+    fn tcp_stall_mid_frame_is_a_distinct_error() {
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        // Claim an 80-byte frame, deliver 3 bytes, then go silent.
+        s.write_all(&80u32.to_be_bytes()).unwrap();
+        s.write_all(&[1, 2, 3]).unwrap();
+        s.flush().ok();
+        let mut t = ep.accept().unwrap();
+        t.set_read_timeout(Some(Duration::from_millis(40))).unwrap();
+        let err = t.recv().unwrap_err().to_string();
+        assert!(err.contains("stalled mid-frame"), "{err}");
+        drop(s);
+    }
+
+    /// EOF mid-frame (peer died between prefix and body) stays a hard
+    /// error, never a clean Shutdown.
+    #[test]
+    fn tcp_eof_mid_frame_is_an_error() {
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(&16u32.to_be_bytes()).unwrap();
+            s.write_all(&[9; 4]).unwrap();
+            s.flush().ok();
+        } // dropped: half a frame on the wire, then EOF
+        let mut t = ep.accept().unwrap();
+        let err = t.recv().unwrap_err().to_string();
+        assert!(err.contains("eof mid-frame"), "{err}");
+    }
+
+    /// Two frames arriving in one burst both come out of consecutive
+    /// `recv` calls (the decoder buffers across boundaries).
+    #[test]
+    fn tcp_coalesced_frames_both_arrive() {
+        let ep = TcpEndpoint::bind("127.0.0.1:0").unwrap();
+        let addr = ep.local_addr().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut burst = Vec::new();
+        for m in [Msg::Ack, Msg::NeedFull("x".into())] {
+            let p = m.encode();
+            burst.extend_from_slice(&(p.len() as u32).to_be_bytes());
+            burst.extend_from_slice(&p);
+        }
+        s.write_all(&burst).unwrap();
+        s.flush().ok();
+        let mut t = ep.accept().unwrap();
+        assert_eq!(t.recv().unwrap().0, Msg::Ack);
+        assert_eq!(t.recv().unwrap().0, Msg::NeedFull("x".into()));
+        drop(s);
     }
 
     #[test]

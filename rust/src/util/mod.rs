@@ -9,5 +9,6 @@ pub mod compress;
 pub mod json;
 pub mod lazy;
 pub mod prop;
+pub mod readiness;
 pub mod rng;
 pub mod stats;
