@@ -20,7 +20,8 @@ use clonecloud::exec::{
     PolicyEngine,
 };
 use clonecloud::migration::{
-    capture_thread, CaptureOptions, CapturePacket, Direction, Migrator, MobileSession,
+    capture_thread, Capsule, CaptureOptions, CapturePacket, DictMode, Direction, Migrator,
+    MobileSession,
 };
 use clonecloud::partitioner::lp::{solve_ilp, Constraint, Sense};
 use clonecloud::trace::{chrome_trace_string, Endpoint, Event, Tracer};
@@ -162,6 +163,68 @@ fn codec_throughput() {
     });
     let mbps = encoded.len() as f64 / 1e6 / (r.summary.p50 / 1e3);
     println!("  -> decode {mbps:.0} MB/s");
+}
+
+/// The session-lifetime encode scratch on the offload hot path: the
+/// driver's `stamp_and_encode` streams every forward capsule into one
+/// reused buffer, so the encoder's doubling reallocations are paid once
+/// per session instead of once per trip. Measured head-to-head on the
+/// same capsule: fresh buffer per encode vs `WireWriter::from_vec`
+/// scratch reuse (the exact take/encode/split_off/put cycle the driver
+/// runs).
+fn encode_scratch_reuse() {
+    let program = Arc::new(assemble(LOOP).unwrap());
+    let main = program.entry().unwrap();
+    let template = build_template(&program, 5_000, 1);
+    let mut p = Process::fork_from_zygote(
+        program.clone(),
+        &template,
+        DeviceSpec::phone_g1(),
+        Location::Mobile,
+        NodeEnv::with_rust_compute(SimFs::new()),
+    );
+    let arr = p.heap.alloc_byte_array(p.array_class, vec![9u8; 1 << 20]);
+    let tid = p.spawn_thread(main, &[]).unwrap();
+    p.thread_mut(tid).unwrap().current_frame_mut().unwrap().regs[7] = Value::Ref(arr);
+    let zy_ids: Vec<Value> = p.heap.iter().map(|(id, _)| Value::Ref(id)).collect();
+    let registry = p.heap.alloc_ref_array(p.array_class, zy_ids.len());
+    if let clonecloud::appvm::ObjBody::RefArray(v) =
+        &mut p.heap.get_mut(registry).unwrap().body
+    {
+        v.copy_from_slice(&zy_ids);
+    }
+    p.thread_mut(tid).unwrap().current_frame_mut().unwrap().regs[6] = Value::Ref(registry);
+    let mut m = Migrator::new(CostParams::default());
+    m.opts.zygote_diff = false;
+    let (packet, _) = m.migrate_out(&mut p, tid).unwrap();
+    let capsule = Capsule::Full(packet);
+    let bytes = capsule.encode().len();
+    println!("  capsule: {bytes} bytes");
+
+    let fresh = bench("wire: encode capsule, fresh buffer per trip", 2, 20, || {
+        black_box(capsule.encode().len());
+    });
+    let mut scratch: Vec<u8> = Vec::new();
+    let reused = bench("wire: encode capsule, session scratch reuse", 2, 20, || {
+        let mut w = clonecloud::util::bytes::WireWriter::from_vec(std::mem::take(&mut scratch));
+        capsule.encode_into_with(&mut w, DictMode::Off);
+        let mut store = w.into_vec();
+        let raw = store.split_off(0);
+        scratch = store;
+        black_box(raw.len());
+    });
+    let ratio = fresh.summary.p50 / reused.summary.p50;
+    println!("  -> scratch reuse speedup {ratio:.2}x over fresh-buffer encode");
+    emit_json(
+        "hotpath",
+        &[("case", "encode_scratch_reuse")],
+        &[
+            ("fresh_p50_ms", fresh.summary.p50),
+            ("scratch_p50_ms", reused.summary.p50),
+            ("speedup", ratio),
+            ("capsule_bytes", bytes as f64),
+        ],
+    );
 }
 
 fn ilp_latency() {
@@ -320,6 +383,7 @@ fn main() {
     interp_rate();
     capture_throughput();
     codec_throughput();
+    encode_scratch_reuse();
     ilp_latency();
     tracing_overhead();
 }

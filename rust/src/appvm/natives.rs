@@ -180,6 +180,20 @@ pub struct NodeEnv {
     pub native_calls: HashMap<String, u64>,
 }
 
+/// Hand-rolled: the compute backend is shared (`Arc`), not duplicated —
+/// a speculative local fork must race against the same backend the
+/// original process uses.
+impl Clone for NodeEnv {
+    fn clone(&self) -> NodeEnv {
+        NodeEnv {
+            vfs: self.vfs.clone(),
+            compute: Arc::clone(&self.compute),
+            ui_log: self.ui_log.clone(),
+            native_calls: self.native_calls.clone(),
+        }
+    }
+}
+
 impl NodeEnv {
     pub fn new(vfs: SimFs, compute: Arc<dyn ComputeBackend>) -> NodeEnv {
         NodeEnv {

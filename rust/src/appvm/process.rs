@@ -28,6 +28,12 @@ pub struct VmMetrics {
 }
 
 /// One running VM process.
+///
+/// `Clone` is a full fork: heap, statics, threads, clock, and (shared
+/// compute backend aside) environment. The exec driver's speculative
+/// local-vs-clone race runs the local leg on a fork so the loser can be
+/// discarded atomically.
+#[derive(Clone)]
 pub struct Process {
     pub program: Arc<Program>,
     pub heap: Heap,

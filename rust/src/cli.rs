@@ -1005,6 +1005,7 @@ mod tests {
             local_ms: 2_000.0,
             span_local_ms: vec![1.5],
             span_clone_ms: vec![0.1],
+            span_shards: vec![0],
         });
         db.save(&path).unwrap();
         assert_eq!(

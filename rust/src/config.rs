@@ -279,6 +279,11 @@ pub struct PolicyParams {
     /// span (error surfaced in `DistOutcome`) instead of failing the
     /// whole run.
     pub degrade_to_local: bool,
+    /// Race local execution against the offload when the decision is
+    /// marginal — |predicted offload − profiled local| below this many
+    /// virtual ms — committing whichever leg finishes first on the
+    /// virtual clock. 0 disables speculation.
+    pub speculation_margin_ms: f64,
 }
 
 impl Default for PolicyParams {
@@ -289,6 +294,7 @@ impl Default for PolicyParams {
             probe_trips: 4,
             force: "auto".into(),
             degrade_to_local: true,
+            speculation_margin_ms: 0.0,
         }
     }
 }
@@ -626,6 +632,14 @@ impl Config {
                                     CloneCloudError::Config("policy.degrade_to_local".into())
                                 })?
                             }
+                            "speculation_margin_ms" => {
+                                cfg.policy.speculation_margin_ms =
+                                    pv.as_f64().ok_or_else(|| {
+                                        CloneCloudError::Config(
+                                            "policy.speculation_margin_ms".into(),
+                                        )
+                                    })?
+                            }
                             other => {
                                 return Err(CloneCloudError::Config(format!(
                                     "unknown policy key '{other}'"
@@ -817,9 +831,12 @@ mod tests {
         assert_eq!(d.force, "auto");
         assert!(d.degrade_to_local);
 
+        assert_eq!(d.speculation_margin_ms, 0.0, "speculation is opt-in");
+
         let v = json::parse(
             r#"{"policy": {"half_life_trips": 1.0, "hysteresis": 0.25,
-                "probe_trips": 0, "force": "local", "degrade_to_local": false}}"#,
+                "probe_trips": 0, "force": "local", "degrade_to_local": false,
+                "speculation_margin_ms": 40.0}}"#,
         )
         .unwrap();
         let cfg = Config::from_json(&v).unwrap();
@@ -828,6 +845,7 @@ mod tests {
         assert_eq!(cfg.policy.probe_trips, 0, "probing can be disabled");
         assert_eq!(cfg.policy.force, "local");
         assert!(!cfg.policy.degrade_to_local);
+        assert_eq!(cfg.policy.speculation_margin_ms, 40.0);
 
         let bad = json::parse(r#"{"policy": {"hysterisis": 0.2}}"#).unwrap();
         assert!(Config::from_json(&bad).is_err(), "typo'd policy key rejected");

@@ -28,6 +28,12 @@ pub enum CloneCloudError {
     /// mismatch). Recoverable: the sender re-captures in full.
     NeedFull(String),
 
+    /// Two scatter shards returned overlapping dirty state, so their
+    /// reverse capsules cannot be merged against the shared baseline.
+    /// Detected before any mutation: the process and baseline are left
+    /// untouched and the driver degrades to a single-clone offload.
+    ScatterConflict(String),
+
     /// Wire-format decode failures.
     Wire(String),
 
@@ -65,6 +71,9 @@ impl fmt::Display for CloneCloudError {
             CloneCloudError::Migration(m) => write!(f, "migration error: {m}"),
             CloneCloudError::NeedFull(m) => {
                 write!(f, "delta rejected: {m} (resend a full capture)")
+            }
+            CloneCloudError::ScatterConflict(m) => {
+                write!(f, "scatter conflict: {m} (degrade to single-clone)")
             }
             CloneCloudError::Wire(m) => write!(f, "wire error: {m}"),
             CloneCloudError::Transport(m) => write!(f, "transport error: {m}"),
@@ -119,6 +128,14 @@ impl CloneCloudError {
     /// signal of the delta-migration path.
     pub fn is_need_full(&self) -> bool {
         matches!(self, CloneCloudError::NeedFull(_))
+    }
+    pub fn scatter_conflict(msg: impl Into<String>) -> Self {
+        CloneCloudError::ScatterConflict(msg.into())
+    }
+    /// True when concurrent shard results touched overlapping state and
+    /// the gather was (safely) refused before mutating anything.
+    pub fn is_scatter_conflict(&self) -> bool {
+        matches!(self, CloneCloudError::ScatterConflict(_))
     }
     pub fn partitioner(msg: impl Into<String>) -> Self {
         CloneCloudError::Partitioner(msg.into())

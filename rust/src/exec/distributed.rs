@@ -39,16 +39,18 @@ use crate::appvm::ExecTier;
 use crate::config::{CostParams, ExecTierKind, NetworkProfile};
 use crate::error::{CloneCloudError, Result};
 use crate::migration::{
-    collect_slot_garbage, Capsule, CloneSession, DictMode, DictRead, MigrationPhases, Migrator,
-    MobileSession, CAPSULE_CLOCK_OFFSET,
+    collect_slot_garbage, scatter_range, shard_capsule, Capsule, CloneSession, DeltaPacket,
+    DictMode, DictRead, MigrationPhases, Migrator, MobileSession, CAPSULE_CLOCK_OFFSET,
 };
 use crate::nodemanager::{
-    execute_migration, open_frame, patch_frame_payload, seal_frame, seal_frame_keep_head,
-    CloneServeStats, Codec, HeartbeatOutcome, NodeManager, TransferBytes, Transport,
+    decode_sub_result, execute_migration, open_frame, patch_frame_payload, seal_frame,
+    seal_frame_keep_head, CloneServeStats, Codec, HeartbeatOutcome, NodeManager, SubJobFrame,
+    TransferBytes, Transport, SUB_JOB_PAYLOAD_OFFSET,
 };
 use crate::trace::{
     self, Counter, DecisionEvent, Mark, Phase, TraceCtx, Tracer, FLAG_WANT_CLONE_EVENTS,
 };
+use crate::util::bytes::WireWriter;
 
 use super::policy::{Decision, PolicyEngine};
 
@@ -111,6 +113,22 @@ pub trait CloneChannel {
     fn trace_capable(&self) -> bool {
         false
     }
+
+    /// Whether this channel can carry scatter sub-job frames
+    /// (`CAP_SCATTER`): N patched copies of one forward capture fanned
+    /// to distinct clone slots in a single exchange.
+    fn scatter_capable(&self) -> bool {
+        false
+    }
+
+    /// Fan N sealed sub-job frames out and return their sealed
+    /// sub-result frames (in whatever order the lanes finished — each
+    /// sub-result carries its shard index) plus the exchange's byte
+    /// totals. Any lane failure fails the whole exchange; the driver
+    /// degrades to the single-clone offload of the same capture.
+    fn scatter(&mut self, _frames: Vec<Vec<u8>>) -> Result<(Vec<Vec<u8>>, TransferBytes)> {
+        Err(CloneCloudError::migration("channel cannot scatter"))
+    }
 }
 
 impl<T: Transport> CloneChannel for NodeManager<T> {
@@ -140,6 +158,27 @@ impl<T: Transport> CloneChannel for NodeManager<T> {
 
     fn trace_capable(&self) -> bool {
         self.trace_negotiated()
+    }
+
+    fn scatter_capable(&self) -> bool {
+        self.scatter_negotiated()
+    }
+
+    fn scatter(&mut self, frames: Vec<Vec<u8>>) -> Result<(Vec<Vec<u8>>, TransferBytes)> {
+        // One protocol, one link: sub-job frames cross the single
+        // transport back-to-back and the peer (CloneServer or a farm
+        // gateway) unwraps each in the shared execution core. A direct
+        // single-slot peer serves the shards serially — correct, just
+        // without the farm's lane parallelism.
+        let mut replies = Vec::with_capacity(frames.len());
+        let mut total = TransferBytes::default();
+        for f in frames {
+            let (r, t) = self.migrate(f)?;
+            total.up += t.up;
+            total.down += t.down;
+            replies.push(r);
+        }
+        Ok((replies, total))
     }
 }
 
@@ -302,6 +341,42 @@ impl CloneChannel for InlineClone {
     fn trace_capable(&self) -> bool {
         self.trace
     }
+
+    fn scatter_capable(&self) -> bool {
+        true
+    }
+
+    fn scatter(&mut self, frames: Vec<Vec<u8>>) -> Result<(Vec<Vec<u8>>, TransferBytes)> {
+        // Each sub-job runs on a fresh fork of the clone process with
+        // its own throwaway session, mirroring how the farm hands each
+        // lane a distinct warm slot: shard state never bleeds between
+        // lanes, and the channel's own delta session (lane 0) keeps its
+        // baseline for the next monolithic trip.
+        let mut replies = Vec::with_capacity(frames.len());
+        let mut total = TransferBytes::default();
+        for f in frames {
+            total.up += f.len() as u64;
+            let raw = open_frame(&f)?;
+            let mut lane = self.clone.clone();
+            let mut lane_session = CloneSession::new(true);
+            let mut lane_tier = ExecTier::from_kind(ExecTierKind::default());
+            let encoded = execute_migration(
+                &self.migrator,
+                &mut lane,
+                &raw,
+                u64::MAX,
+                &mut self.serve_stats,
+                &mut lane_session,
+                &mut self.tracer,
+                &mut lane_tier,
+            )?;
+            let bytes = seal_frame(self.codec, encoded);
+            total.down += bytes.len() as u64;
+            replies.push(bytes);
+        }
+        self.migrations += 1;
+        Ok((replies, total))
+    }
 }
 
 /// Outcome of a distributed run.
@@ -368,6 +443,27 @@ pub struct DistOutcome {
     pub channel_errors: usize,
     /// The most recent degraded channel error, surfaced for reports.
     pub last_channel_error: Option<String>,
+    /// Offloads that committed via scatter/gather (each also counts in
+    /// `offloads` and `migrations`).
+    pub scatter_offloads: usize,
+    /// Sub-jobs fanned out across all scatter attempts (committed or
+    /// degraded).
+    pub scatter_shards: usize,
+    /// Gathers refused because two reverse capsules wrote the same
+    /// object; each degraded to a single-clone offload of the same
+    /// capture.
+    pub scatter_conflicts: usize,
+    /// Scatter attempts abandoned for any other reason (lane failure,
+    /// malformed sub-result, non-delta reply); also degraded to the
+    /// single-clone offload.
+    pub scatter_failures: usize,
+    /// Marginal offload decisions raced against a local fork.
+    pub speculations: usize,
+    /// Races the local fork won (the offload's merged state was
+    /// discarded); each also counts as a misprediction.
+    pub speculation_local_wins: usize,
+    /// Races the clone won (the fork was discarded).
+    pub speculation_clone_wins: usize,
 }
 
 /// Run the partitioned binary on `phone`, off-loading each migration
@@ -624,6 +720,34 @@ where
                 tracer.span(trip32, Phase::Decide, t_decide, t_decide);
                 let span_start_ms = phone.clock.now_ms();
 
+                // --- scatter/gather: a span the partition annotated as
+                // data-parallel, on a channel that negotiated
+                // `CAP_SCATTER`, fans ONE full capture across N clone
+                // lanes and merges N disjoint reverse deltas ------------
+                let scatter_width = match engine.span_shards(point) {
+                    Some(w) if channel.scatter_capable() && session.is_enabled() => Some(w),
+                    _ => None,
+                };
+                if scatter_width.is_some() {
+                    // Every lane executes (and answers) against the same
+                    // snapshot, so the fan-out wants a full capture —
+                    // which also re-records the baseline the gather will
+                    // validate against.
+                    session.drop_baseline();
+                }
+
+                // --- speculation: a marginal decision races the local
+                // interpreter on a fork of the phone against the offload;
+                // the earlier virtual finisher commits, the loser is
+                // dropped wholesale. Scattered spans never race — the fan
+                // exists because local execution is the known loser.
+                let mut spec_fork = if scatter_width.is_none() && engine.speculation_candidate()
+                {
+                    speculative_fork(phone, tid, point)
+                } else {
+                    None
+                };
+
                 // Long-idle baseline: probe with a digest heartbeat so a
                 // diverged clone pre-arms `NeedFull` here, before a
                 // doomed delta is built and shipped. The probe crosses
@@ -636,19 +760,29 @@ where
                         // was captured: degrade this span to local, same
                         // contract as a failed roundtrip.
                         Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
-                            degrade_to_local(
-                                phone,
-                                tid,
-                                session,
-                                engine,
-                                &mut out,
-                                &mut local_spans,
-                                point,
-                                trip32,
-                                None,
-                                e,
-                                tracer,
-                            )?;
+                            if let Some(fork) = spec_fork.take() {
+                                // Dead channel mid-race: the local leg
+                                // already ran on the fork, so commit it
+                                // instead of re-running the span.
+                                commit_racing_local(
+                                    phone, fork.0, session, engine, &mut out, None, e,
+                                    tracer, trip32,
+                                );
+                            } else {
+                                degrade_to_local(
+                                    phone,
+                                    tid,
+                                    session,
+                                    engine,
+                                    &mut out,
+                                    &mut local_spans,
+                                    point,
+                                    trip32,
+                                    None,
+                                    e,
+                                    tracer,
+                                )?;
+                            }
                             continue;
                         }
                         Err(e) => return Err(e),
@@ -697,6 +831,40 @@ where
                     out.delta_roundtrips += 1;
                 } else {
                     out.full_roundtrips += 1;
+                }
+
+                if let Some(width) = scatter_width {
+                    if let Some(merge_ms) = try_scatter(
+                        phone, channel, &net, &migrator, session, engine, &mut out, tracer,
+                        &capsule, width, codec, dict_on, ctx_on, trip32, tid,
+                    ) {
+                        out.migrations += 1;
+                        engine.observe_overhead(overhead_ms + merge_ms);
+                        let actual_ms = phone.clock.now_ms() - span_start_ms;
+                        let mispredicted = engine.score_offload(point, actual_ms);
+                        if mispredicted {
+                            out.mispredictions += 1;
+                        }
+                        tracer.decision(
+                            trip32,
+                            DecisionEvent {
+                                offloaded: true,
+                                predicted_local_ms: pred_local,
+                                predicted_offload_ms: pred_off,
+                                predicted_fwd_bytes: pred_fwd as u64,
+                                actual_ms,
+                                mispredicted,
+                            },
+                            phone.clock.now_us(),
+                        );
+                        continue;
+                    }
+                    // Conflict, lane failure, or a capsule that turned
+                    // out not to follow the shard convention: the gather
+                    // is validate-then-apply, so the phone and the
+                    // baseline are exactly as the capture left them —
+                    // fall through to the single-clone offload of the
+                    // SAME capture.
                 }
 
                 let ctx = make_ctx(tracer, ctx_on, trip32);
@@ -752,7 +920,8 @@ where
                             let ctx = make_ctx(tracer, ctx_on, trip32);
                             let (f, up_ms) = if needfull >= 2 && dict_on {
                                 stamp_and_encode_inline(
-                                    phone, &net, &mut out, full, codec, tracer, trip32, ctx,
+                                    phone, &net, &mut out, full, codec, session, tracer,
+                                    trip32, ctx,
                                 )
                             } else {
                                 stamp_and_encode(
@@ -765,19 +934,33 @@ where
                             fwd = f;
                         }
                         Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
-                            degrade_to_local(
-                                phone,
-                                tid,
-                                session,
-                                engine,
-                                &mut out,
-                                &mut local_spans,
-                                point,
-                                trip32,
-                                Some((sent_delta, fwd_len)),
-                                e,
-                                tracer,
-                            )?;
+                            if let Some(fork) = spec_fork.take() {
+                                commit_racing_local(
+                                    phone,
+                                    fork.0,
+                                    session,
+                                    engine,
+                                    &mut out,
+                                    Some((sent_delta, fwd_len)),
+                                    e,
+                                    tracer,
+                                    trip32,
+                                );
+                            } else {
+                                degrade_to_local(
+                                    phone,
+                                    tid,
+                                    session,
+                                    engine,
+                                    &mut out,
+                                    &mut local_spans,
+                                    point,
+                                    trip32,
+                                    Some((sent_delta, fwd_len)),
+                                    e,
+                                    tracer,
+                                )?;
+                            }
                             continue 'run;
                         }
                         Err(e) => return Err(e),
@@ -823,6 +1006,46 @@ where
                     tracer.counter(trip32, Counter::BytesDown, transfer.down as f64, t_end);
                 }
                 let actual_ms = phone.clock.now_ms() - span_start_ms;
+                if let Some((fork, local_done_ms)) = spec_fork.take() {
+                    out.speculations += 1;
+                    if local_done_ms < phone.clock.now_ms() {
+                        // The local leg crossed its CcStop first: adopt
+                        // the fork wholesale — heap, statics, clock —
+                        // and discard the merged clone state atomically.
+                        // The clone re-baselined for a merge that never
+                        // committed, so the session resyncs from the
+                        // next full capture. The race measured BOTH
+                        // legs, so the loser's cost still feeds the
+                        // estimator (the score_offload call below) and
+                        // the decision is scored as a misprediction.
+                        out.speculation_local_wins += 1;
+                        out.mispredictions += 1;
+                        engine.note_speculation(true);
+                        engine.score_offload(point, actual_ms);
+                        *phone = fork;
+                        session.drop_baseline();
+                        let t = phone.clock.now_us();
+                        tracer.instant(trip32, Mark::Speculate, t);
+                        tracer.decision(
+                            trip32,
+                            DecisionEvent {
+                                offloaded: false,
+                                predicted_local_ms: pred_local,
+                                predicted_offload_ms: pred_off,
+                                predicted_fwd_bytes: pred_fwd as u64,
+                                actual_ms: local_done_ms - span_start_ms,
+                                mispredicted: true,
+                            },
+                            t,
+                        );
+                        continue;
+                    }
+                    // Clone finished first: drop the fork, keep the
+                    // merge that already landed.
+                    out.speculation_clone_wins += 1;
+                    engine.note_speculation(false);
+                    tracer.instant(trip32, Mark::Speculate, phone.clock.now_us());
+                }
                 let mispredicted = engine.score_offload(point, actual_ms);
                 if mispredicted {
                     out.mispredictions += 1;
@@ -929,6 +1152,285 @@ fn absorb_capture_phases(out: &mut DistOutcome, phases: &MigrationPhases) {
     out.pages_dirty += phases.pages_dirty;
 }
 
+/// Run the race's local leg: fork the phone at the offload decision
+/// (before any suspend/capture touched it) and interpret the span on the
+/// fork through its matching `CcStop`. Returns the finished fork and its
+/// virtual finish time, or `None` when the leg cannot adjudicate cleanly
+/// (the span completed the whole program, or errored) — the offload then
+/// proceeds unraced. The fork costs wall-clock only; its virtual clock
+/// is the local leg's own timeline, independent of the offload charges
+/// accruing on the real phone.
+fn speculative_fork(phone: &Process, tid: u32, point: u32) -> Option<(Process, f64)> {
+    let mut fork = phone.clone();
+    loop {
+        match run_thread(&mut fork, tid, &mut NoHooks, u64::MAX) {
+            Ok(RunExit::ReintegrationPoint { point: p }) if p == point => {
+                let done_ms = fork.clock.now_ms();
+                return Some((fork, done_ms));
+            }
+            // Nested migration points inside the raced span run local on
+            // this leg (their CcStarts are no-ops), and inner CcStops
+            // just continue to the matching outer stop.
+            Ok(RunExit::MigrationPoint { .. }) | Ok(RunExit::ReintegrationPoint { .. }) => {}
+            _ => return None,
+        }
+    }
+}
+
+/// The channel died while a speculative race was in flight: the local
+/// leg already ran to its `CcStop` on the fork, so instead of resuming
+/// the suspended thread ([`degrade_to_local`]) the driver commits the
+/// fork wholesale — same bookkeeping as a degrade (error surfaced,
+/// offload rolled back to a local fallback) plus the race counters.
+#[allow(clippy::too_many_arguments)]
+fn commit_racing_local(
+    phone: &mut Process,
+    fork: Process,
+    session: &mut MobileSession,
+    engine: &mut PolicyEngine,
+    out: &mut DistOutcome,
+    attempt: Option<(bool, u64)>,
+    e: CloneCloudError,
+    tracer: &mut Tracer,
+    trip: u32,
+) {
+    *phone = fork;
+    // Any baseline recorded for the dead offload describes state the
+    // clone never merged; the next offload re-establishes in full.
+    session.drop_baseline();
+    if let Some((was_delta, wire_bytes)) = attempt {
+        if was_delta {
+            out.delta_roundtrips -= 1;
+        } else {
+            out.full_roundtrips -= 1;
+        }
+        out.transfer.up += wire_bytes;
+    }
+    out.channel_errors += 1;
+    out.last_channel_error = Some(e.to_string());
+    out.offloads -= 1;
+    out.local_fallbacks += 1;
+    out.speculations += 1;
+    out.speculation_local_wins += 1;
+    engine.note_degrade();
+    engine.note_speculation(true);
+    tracer.instant(trip, Mark::Degrade, phone.clock.now_us());
+    tracer.instant(trip, Mark::Speculate, phone.clock.now_us());
+}
+
+/// One scatter/gather attempt over an already-captured full capsule.
+/// Shards the capsule by the `work(begin, end, shards)` convention, fans
+/// the sub-job frames out through the channel, and gathers the reverse
+/// deltas against the capture's baseline. Returns `Some(merge_ms)` when
+/// the gather committed. `None` degrades to the single-clone offload of
+/// the SAME capture: the gather is validate-then-apply, so every refusal
+/// path (lane failure, malformed or missing sub-result, overlapping
+/// write sets) leaves the phone process and the session baseline exactly
+/// as `migrate_out_capsule` left them. Virtual-clock shape on commit:
+/// serial uplink per frame, lanes overlap (the trip adopts the slowest
+/// lane's finish), serial downlink for the gathered replies, then the
+/// merge.
+#[allow(clippy::too_many_arguments)]
+fn try_scatter<C: CloneChannel>(
+    phone: &mut Process,
+    channel: &mut C,
+    net: &NetworkProfile,
+    migrator: &Migrator,
+    session: &mut MobileSession,
+    engine: &mut PolicyEngine,
+    out: &mut DistOutcome,
+    tracer: &mut Tracer,
+    capsule: &Capsule,
+    width: u16,
+    codec: Codec,
+    dict_on: bool,
+    ctx_on: bool,
+    trip: u32,
+    tid: u32,
+) -> Option<f64> {
+    // A span annotated as data-parallel but whose live capture does not
+    // follow the shard convention (delta capsule, missing registers,
+    // empty range) silently runs monolithic — annotations are hints,
+    // correctness never depends on them.
+    let (begin, end, declared) = scatter_range(capsule)?;
+    let shards = i64::from(width.min(declared));
+    if shards < 2 {
+        return None;
+    }
+
+    // --- fan-out: shard, encode, seal one sub-job frame per lane ------
+    let total = end - begin;
+    let mut frames = Vec::with_capacity(shards as usize);
+    let mut sent_at = Vec::with_capacity(shards as usize);
+    let mut up_bytes = 0u64;
+    let mut fan_up_ms = 0.0;
+    for i in 0..shards {
+        // Contiguous near-equal sub-ranges covering [begin, end).
+        let b = begin + total * i / shards;
+        let e = begin + total * (i + 1) / shards;
+        let sub = match shard_capsule(capsule, b, e) {
+            Ok(s) => s,
+            Err(_) => {
+                out.scatter_failures += 1;
+                return None;
+            }
+        };
+        // Sub-jobs never ride the shared dictionary: N lanes decoding
+        // shared-mode assignments would fork N diverging replicas of the
+        // phone's one dictionary. The inline table is self-describing on
+        // every lane.
+        let raw = if dict_on {
+            sub.encode_with(DictMode::Inline)
+        } else {
+            sub.encode()
+        };
+        let ctx = make_ctx(tracer, ctx_on, trip);
+        let (payload, ctx_len) = match &ctx {
+            Some(c) => (trace::prepend_ctx(c, &raw), trace::TRACE_CTX_LEN),
+            None => (raw, 0),
+        };
+        let framed = SubJobFrame {
+            shard: i as u16,
+            shards: shards as u16,
+            payload,
+        }
+        .encode();
+        out.raw_up += framed.len() as u64;
+        // The sub-job header sits ahead of the (possibly ctx-prefixed)
+        // capsule, so the patchable clock moves by the header's bytes.
+        let head = SUB_JOB_PAYLOAD_OFFSET + ctx_len + CAPSULE_CLOCK_OFFSET;
+        let mut wire = seal_frame_keep_head(codec, framed, head + 8);
+        // Serial uplink on the single physical link: lane i resumes at
+        // the instant its own frame finished arriving.
+        let t0 = phone.clock.now_us();
+        let up_ms = net.transfer_ms(wire.len() as u64, true);
+        phone.clock.charge_ms(up_ms);
+        out.uplink_ms += up_ms;
+        fan_up_ms += up_ms;
+        let clock = phone.clock.now_us().to_bits().to_be_bytes();
+        patch_frame_payload(&mut wire, head, &clock)
+            .expect("capsule header is always inside the preserved frame head");
+        tracer.span(trip, Phase::Uplink, t0, phone.clock.now_us());
+        sent_at.push(phone.clock.now_us());
+        up_bytes += wire.len() as u64;
+        frames.push(wire);
+    }
+    engine.observe_forward(up_bytes, fan_up_ms, false);
+    out.scatter_shards += shards as usize;
+
+    // --- exchange ------------------------------------------------------
+    let (replies, transfer) = match channel.scatter(frames) {
+        Ok(r) => r,
+        Err(e) => {
+            // The frames were encoded and charged; whatever crossed (or
+            // died on) the uplink stays in the byte counters, same
+            // contract as a degraded monolithic attempt.
+            out.scatter_failures += 1;
+            out.channel_errors += 1;
+            out.last_channel_error = Some(e.to_string());
+            out.transfer.up += up_bytes;
+            return None;
+        }
+    };
+    out.transfer.up += transfer.up;
+    out.transfer.down += transfer.down;
+
+    // --- decode: lanes answer in completion order; each sub-result
+    // carries its shard index, so reorder into shard slots --------------
+    let mut deltas: Vec<Option<DeltaPacket>> = Vec::new();
+    deltas.resize_with(shards as usize, || None);
+    let mut reply_wire_bytes = 0u64;
+    for rbytes in &replies {
+        reply_wire_bytes += rbytes.len() as u64;
+        let decoded = (|| -> Result<()> {
+            let raw = open_frame(rbytes)?;
+            out.raw_down += raw.len() as u64;
+            let (shard, payload) = decode_sub_result(&raw)?;
+            let (remote_events, craw) = trace::split_events(&payload)?;
+            tracer.absorb_remote(remote_events);
+            let capsule = if dict_on {
+                Capsule::decode_with(craw, DictRead::Negotiated(session.dict()))?.0
+            } else {
+                Capsule::decode(craw)?
+            };
+            let slot = deltas
+                .get_mut(shard as usize)
+                .ok_or_else(|| CloneCloudError::migration("sub-result shard out of range"))?;
+            if slot.is_some() {
+                return Err(CloneCloudError::migration("duplicate sub-result shard"));
+            }
+            match capsule {
+                Capsule::Delta(d) => {
+                    *slot = Some(d);
+                    Ok(())
+                }
+                Capsule::Full(_) => Err(CloneCloudError::migration(
+                    "scatter lane answered in full; the gather needs reverse deltas",
+                )),
+            }
+        })();
+        if let Err(e) = decoded {
+            out.scatter_failures += 1;
+            out.channel_errors += 1;
+            out.last_channel_error = Some(e.to_string());
+            return None;
+        }
+    }
+    let deltas: Vec<DeltaPacket> = match deltas.into_iter().collect() {
+        Some(d) => d,
+        None => {
+            out.scatter_failures += 1;
+            out.channel_errors += 1;
+            out.last_channel_error = Some("scatter gather is missing a shard".into());
+            return None;
+        }
+    };
+
+    // Lanes overlap in virtual time: each span runs from its frame's
+    // arrival to that lane's own finish, and the phone waits for the
+    // slowest before the gathered downlink starts.
+    let mut max_clock = f64::MIN;
+    for (i, d) in deltas.iter().enumerate() {
+        tracer.span(trip, Phase::ScatterShard, sent_at[i], d.clock_us);
+        max_clock = max_clock.max(d.clock_us);
+    }
+    phone.clock.advance_to_us(max_clock);
+    let t_lanes_done = phone.clock.now_us();
+    let down_ms = net.transfer_ms(reply_wire_bytes, false);
+    phone.clock.charge_ms(down_ms);
+    out.downlink_ms += down_ms;
+    engine.observe_reverse(reply_wire_bytes, down_ms);
+    tracer.span(trip, Phase::Downlink, t_lanes_done, phone.clock.now_us());
+
+    // --- gather --------------------------------------------------------
+    match migrator.gather_scatter_capsules(phone, tid, &deltas, session) {
+        Ok((_stats, phases)) => {
+            if tracer.is_enabled() {
+                let t_end = phone.clock.now_us();
+                tracer.span(trip, Phase::Gather, t_end - phases.merge_ms * 1000.0, t_end);
+                tracer.counter(trip, Counter::BytesUp, transfer.up as f64, t_end);
+                tracer.counter(trip, Counter::BytesDown, transfer.down as f64, t_end);
+            }
+            out.merge_ms += phases.merge_ms;
+            out.scatter_offloads += 1;
+            Some(phases.merge_ms)
+        }
+        Err(e) if e.is_scatter_conflict() => {
+            // Two lanes wrote the same object. The merge validated
+            // before applying anything, so nothing is half-merged —
+            // count it, mark it, run the span on one clone instead.
+            out.scatter_conflicts += 1;
+            tracer.instant(trip, Mark::ScatterConflict, phone.clock.now_us());
+            None
+        }
+        Err(e) => {
+            out.scatter_failures += 1;
+            out.last_channel_error = Some(e.to_string());
+            None
+        }
+    }
+}
+
 /// Charge the uplink for the capsule's *wire* (sealed) bytes, then stamp
 /// the post-transfer timestamp directly into the wire frame. Sealing
 /// keeps the capsule header (through the clock field) out of the
@@ -954,13 +1456,21 @@ fn stamp_and_encode(
     ctx: Option<TraceCtx>,
 ) -> (Vec<u8>, f64) {
     let wall0 = tracer.is_enabled().then(std::time::Instant::now);
-    let raw = if !dict_on {
-        capsule.encode()
+    // Session-lifetime encode scratch: the capsule streams into a buffer
+    // whose capacity was learned on earlier trips, so a steady-state
+    // trip makes one exact-size allocation (the split below) instead of
+    // climbing a realloc ladder from empty every time.
+    let mut w = WireWriter::from_vec(session.take_scratch());
+    if !dict_on {
+        capsule.encode_into_with(&mut w, DictMode::Off);
     } else if session.dict_enabled() {
-        capsule.encode_with(DictMode::Shared(session.dict()))
+        capsule.encode_into_with(&mut w, DictMode::Shared(session.dict()));
     } else {
-        capsule.encode_with(DictMode::Inline)
-    };
+        capsule.encode_into_with(&mut w, DictMode::Inline);
+    }
+    let mut store = w.into_vec();
+    let raw = store.split_off(0);
+    session.put_scratch(store);
     if let Some(w0) = wall0 {
         tracer.span_wall(
             trip,
@@ -981,12 +1491,17 @@ fn stamp_and_encode_inline(
     out: &mut DistOutcome,
     capsule: Capsule,
     codec: Codec,
+    session: &mut MobileSession,
     tracer: &mut Tracer,
     trip: u32,
     ctx: Option<TraceCtx>,
 ) -> (Vec<u8>, f64) {
     let wall0 = tracer.is_enabled().then(std::time::Instant::now);
-    let raw = capsule.encode_with(DictMode::Inline);
+    let mut w = WireWriter::from_vec(session.take_scratch());
+    capsule.encode_into_with(&mut w, DictMode::Inline);
+    let mut store = w.into_vec();
+    let raw = store.split_off(0);
+    session.put_scratch(store);
     if let Some(w0) = wall0 {
         tracer.span_wall(
             trip,
@@ -1126,6 +1641,124 @@ end
 /// `i`, which holds a single non-zero byte `i`, so out = Σ i.
 pub fn delta_workload_expected(rounds: i64) -> i64 {
     rounds * (rounds - 1) / 2
+}
+
+fn scatter_workload_src_inner(slots: i64, payload: i64, spin: i64, conflict: bool) -> String {
+    assert!(slots >= 2 && payload >= 1 && spin >= 0);
+    // Every shard dirties slot 0 before touching its own range: any
+    // scatter fan of width >= 2 then has two lanes writing one object
+    // and the gather must refuse. Monolithically the cell is overwritten
+    // by the i=0 pass, so the expected result does not change.
+    let conflict_src = if conflict {
+        "    const r6 0\n    aget r4 r3 r6\n    const r7 1\n    aput r4 r6 r7\n"
+    } else {
+        ""
+    };
+    format!(
+        r#"
+class Scat app
+  static data
+  static out
+  method main nargs=0 regs=12
+    const r0 {slots}
+    newarr r1 val r0
+    puts Scat.data r1
+    const r6 {payload}
+    const r2 0
+  mk:
+    ifge r2 r0 @mkd
+    newarr r4 val r6
+    aput r1 r2 r4
+    const r5 1
+    add r2 r2 r5
+    goto @mk
+  mkd:
+    const r2 0
+    invoke r7 Scat.work r2 r0 r0
+    const r2 0
+    const r8 0
+  so:
+    ifge r2 r0 @sod
+    aget r4 r1 r2
+    const r3 0
+  si:
+    ifge r3 r6 @sid
+    aget r5 r4 r3
+    add r8 r8 r5
+    const r9 1
+    add r3 r3 r9
+    goto @si
+  sid:
+    const r9 1
+    add r2 r2 r9
+    goto @so
+  sod:
+    add r8 r8 r7
+    puts Scat.out r8
+    retv
+  end
+  method work nargs=3 regs=12
+    ccstart 0
+    gets r3 Scat.data
+{conflict_src}    const r9 {spin}
+    const r11 1
+  outer:
+    ifge r0 r1 @done
+    aget r4 r3 r0
+    len r5 r4
+    const r6 0
+  inner:
+    ifge r6 r5 @id
+    mul r7 r0 r6
+    add r7 r7 r0
+    const r10 0
+  spin:
+    ifge r10 r9 @spun
+    add r10 r10 r11
+    goto @spin
+  spun:
+    aput r4 r6 r7
+    add r6 r6 r11
+    goto @inner
+  id:
+    add r0 r0 r11
+    goto @outer
+  done:
+    ccstop 0
+    const r7 0
+    ret r7
+  end
+end
+"#
+    )
+}
+
+/// Assembly for the scatter/gather workload: `slots` val-arrays of
+/// `payload` cells hang off `Scat.data`; one `ccstart 0` span calls
+/// `work(0, slots, slots)` — the rewriter's shard convention — which
+/// fills slot `i`, cell `j` with `i*(j+1)` (plus `spin` busy iterations
+/// per cell, so the span's compute can be scaled independently of its
+/// state size); `main` then sums every cell into `Scat.out`. The span is
+/// embarrassingly parallel over the slot range, so a partition may
+/// annotate it with a scatter width.
+pub fn scatter_workload_src(slots: i64, payload: i64, spin: i64) -> String {
+    scatter_workload_src_inner(slots, payload, spin, false)
+}
+
+/// [`scatter_workload_src`] with a deliberate cross-shard collision:
+/// the span also writes slot 0 before walking its own range, so any
+/// scatter fan of width >= 2 dirties one object from two lanes and the
+/// gather must refuse — degrade to a single clone, never corrupt. The
+/// expected result is unchanged (the colliding cell is overwritten by
+/// the `i = 0` pass).
+pub fn scatter_conflict_workload_src(slots: i64, payload: i64, spin: i64) -> String {
+    scatter_workload_src_inner(slots, payload, spin, true)
+}
+
+/// The `out` static the scatter workload computes:
+/// Σ over slots and cells of `i*(j+1)`, and `work` returns 0.
+pub fn scatter_workload_expected(slots: i64, payload: i64) -> i64 {
+    (slots * (slots - 1) / 2) * (payload * (payload + 1) / 2)
 }
 
 /// Migration-phase record for the E3 bench: one round trip's breakdown.
@@ -1643,5 +2276,351 @@ mod tests {
             phone.statics[program.entry().unwrap().class.0 as usize][1].as_int(),
             Some(expected)
         );
+    }
+
+    // ---- scatter/gather + speculation ----------------------------------
+
+    const SLOTS: i64 = 8;
+    const CELLS: i64 = 256;
+    const SPIN: i64 = 16;
+
+    /// A link fast enough that exec dominates transfer — the regime the
+    /// fan-out targets (wifi's 66 ms latency would charge N serial
+    /// uplinks against a few ms of saved clone compute).
+    fn lan() -> NetworkProfile {
+        NetworkProfile {
+            name: "lan".into(),
+            latency_ms: 0.2,
+            down_mbps: 400.0,
+            up_mbps: 400.0,
+        }
+    }
+
+    fn scatter_setup(conflict: bool) -> (Arc<Program>, Heap) {
+        let src = if conflict {
+            scatter_conflict_workload_src(SLOTS, CELLS, SPIN)
+        } else {
+            scatter_workload_src(SLOTS, CELLS, SPIN)
+        };
+        let program = Arc::new(assemble(&src).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let template = build_template(&program, 200, 11);
+        (program, template)
+    }
+
+    /// One delta session over an inline clone, span 0 annotated with
+    /// `width` scatter lanes (0 = monolithic).
+    fn run_scatter(
+        program: &Arc<Program>,
+        template: &Heap,
+        width: u16,
+    ) -> (DistOutcome, i64) {
+        let mut phone = make_proc(program, template, Location::Mobile);
+        let clone = make_proc(program, template, Location::Clone);
+        let mut channel = InlineClone::new(clone, CostParams::default()).with_delta();
+        let mut session = MobileSession::new(true);
+        let mut engine = crate::exec::PolicyEngine::force_offload();
+        engine.set_span_shards(0, width);
+        let out = run_distributed_policy(
+            &mut phone,
+            &mut channel,
+            &lan(),
+            &CostParams::default(),
+            &mut session,
+            &mut engine,
+        )
+        .unwrap();
+        let main = program.entry().unwrap();
+        let got = phone.statics[main.class.0 as usize][1].as_int().unwrap();
+        (out, got)
+    }
+
+    /// The tentpole's speedup claim: fanning one capture across N lanes
+    /// beats the single clone on virtual time — lanes overlap while the
+    /// serial uplink and the gather stay charged — and the merged result
+    /// is bit-identical at every width.
+    #[test]
+    fn scatter_beats_single_clone_bit_identically() {
+        let (program, template) = scatter_setup(false);
+        let expected = scatter_workload_expected(SLOTS, CELLS);
+
+        let (single, got1) = run_scatter(&program, &template, 0);
+        let (fan2, got2) = run_scatter(&program, &template, 2);
+        let (fan4, got4) = run_scatter(&program, &template, 4);
+        assert_eq!(got1, expected);
+        assert_eq!(got2, expected);
+        assert_eq!(got4, expected);
+        assert_eq!(single.result, fan4.result, "bit-identical results");
+
+        assert_eq!(single.scatter_offloads, 0);
+        assert_eq!(single.scatter_shards, 0);
+        assert_eq!(fan2.scatter_offloads, 1);
+        assert_eq!(fan2.scatter_shards, 2);
+        assert_eq!(fan4.scatter_offloads, 1);
+        assert_eq!(fan4.scatter_shards, 4);
+        assert_eq!(fan4.scatter_conflicts, 0);
+        assert_eq!(fan4.scatter_failures, 0);
+        assert_eq!(fan4.channel_errors, 0);
+        assert_eq!(fan4.migrations, 1, "one scatter trip IS one migration");
+
+        assert!(
+            fan2.virtual_ms < single.virtual_ms,
+            "2 lanes beat the single clone: {} vs {}",
+            fan2.virtual_ms,
+            single.virtual_ms
+        );
+        assert!(
+            fan4.virtual_ms < fan2.virtual_ms,
+            "4 lanes beat 2: {} vs {}",
+            fan4.virtual_ms,
+            fan2.virtual_ms
+        );
+    }
+
+    /// Two lanes dirtying one object: the gather refuses (typed
+    /// conflict), the driver retries the SAME capture on one clone, and
+    /// the result is still bit-identical — degrade, never corrupt.
+    #[test]
+    fn scatter_conflict_degrades_to_one_clone() {
+        let (program, template) = scatter_setup(true);
+        let expected = scatter_workload_expected(SLOTS, CELLS);
+
+        let (mono, got_m) = run_scatter(&program, &template, 0);
+        let (fan, got_f) = run_scatter(&program, &template, 4);
+        assert_eq!(got_m, expected);
+        assert_eq!(got_f, expected, "conflicted fan still computes the truth");
+        assert_eq!(mono.result, fan.result);
+
+        assert_eq!(fan.scatter_shards, 4, "the fan-out was attempted");
+        assert_eq!(fan.scatter_conflicts, 1, "the gather refused the overlap");
+        assert_eq!(fan.scatter_offloads, 0, "no scatter committed");
+        assert_eq!(fan.scatter_failures, 0);
+        assert_eq!(fan.channel_errors, 0, "a conflict is not a link failure");
+        assert_eq!(fan.migrations, 1, "the monolithic retry committed");
+        assert_eq!(mono.scatter_conflicts, 0, "one clone cannot conflict");
+    }
+
+    /// Fault matrix over the scatter exchange: a 4-lane fan is 8 wire
+    /// frames (4 sub-jobs, 4 sub-results). Kill the link at every frame
+    /// boundary: any cut degrades the span — scatter refused, monolithic
+    /// retry dead, local execution — with the error surfaced and the
+    /// result bit-identical; an uncut exchange commits the gather.
+    #[test]
+    fn scatter_fault_matrix_degrades_cleanly() {
+        let (program, template) = scatter_setup(false);
+        let expected = scatter_workload_expected(SLOTS, CELLS);
+
+        for kill in 0..=9u64 {
+            let mut phone = make_proc(&program, &template, Location::Mobile);
+            let clone = make_proc(&program, &template, Location::Clone);
+            let inner = InlineClone::new(clone, CostParams::default()).with_delta();
+            let mut channel = crate::exec::FaultInjectChannel::new(inner, kill);
+            let mut session = MobileSession::new(true);
+            let mut engine = crate::exec::PolicyEngine::force_offload();
+            engine.set_span_shards(0, 4);
+            let out = run_distributed_policy(
+                &mut phone,
+                &mut channel,
+                &lan(),
+                &CostParams::default(),
+                &mut session,
+                &mut engine,
+            )
+            .unwrap();
+            let main = program.entry().unwrap();
+            let got = phone.statics[main.class.0 as usize][1].as_int().unwrap();
+            assert_eq!(got, expected, "kill_after={kill}: result survives the cut");
+            if kill >= 8 {
+                assert_eq!(out.scatter_offloads, 1, "kill_after={kill}");
+                assert_eq!(out.channel_errors, 0, "kill_after={kill}");
+                assert_eq!(out.migrations, 1, "kill_after={kill}");
+            } else {
+                assert_eq!(out.scatter_offloads, 0, "kill_after={kill}");
+                assert!(out.scatter_failures >= 1, "kill_after={kill}");
+                assert!(out.channel_errors >= 1, "kill_after={kill}");
+                assert_eq!(out.migrations, 0, "kill_after={kill}");
+                assert_eq!(out.offloads, 0, "kill_after={kill}");
+                assert_eq!(out.local_fallbacks, 1, "kill_after={kill}");
+            }
+        }
+    }
+
+    /// Speculation pairing (1/3): marginal decisions race and the clone
+    /// leg keeps winning on a fast link — every race commits the merged
+    /// clone state, and the run is bit-identical to speculation off.
+    #[test]
+    fn speculation_commits_the_winning_clone_leg() {
+        // A compute-heavy span: ~20 ms local vs ~1 ms on the clone, so
+        // the offload leg wins every race on the lan profile.
+        let program =
+            Arc::new(assemble(&delta_statics_workload_src(ROUNDS, 2048, STATICS)).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let template = build_template(&program, 200, 11);
+        let expected = delta_workload_expected(ROUNDS);
+
+        let run_margin = |margin: f64| -> (DistOutcome, i64) {
+            let mut phone = make_proc(&program, &template, Location::Mobile);
+            let clone = make_proc(&program, &template, Location::Clone);
+            let mut channel = InlineClone::new(clone, CostParams::default()).with_delta();
+            let mut session = MobileSession::new(true);
+            let mut engine =
+                crate::exec::PolicyEngine::auto().with_speculation_margin(margin);
+            engine.set_span(
+                0,
+                crate::exec::SpanCost {
+                    local_ms: 50.0,
+                    clone_ms: 1.0,
+                },
+            );
+            let out = run_distributed_policy(
+                &mut phone,
+                &mut channel,
+                &lan(),
+                &CostParams::default(),
+                &mut session,
+                &mut engine,
+            )
+            .unwrap();
+            let main = program.entry().unwrap();
+            let got = phone.statics[main.class.0 as usize][1].as_int().unwrap();
+            (out, got)
+        };
+
+        let (raced, got_r) = run_margin(1e12);
+        let (plain, got_p) = run_margin(0.0);
+        assert_eq!(got_r, expected);
+        assert_eq!(got_p, expected);
+        assert_eq!(raced.result, plain.result, "racing is invisible in results");
+        assert_eq!(raced.migrations, plain.migrations);
+
+        // Trip 0 is cold (no offload estimate — no race); the rest race.
+        assert!(raced.speculations >= 1, "marginal trips raced");
+        assert_eq!(raced.speculation_clone_wins, raced.speculations);
+        assert_eq!(raced.speculation_local_wins, 0);
+        assert_eq!(plain.speculations, 0, "margin 0 never races");
+    }
+
+    /// Speculation pairing (2/3): the link collapses mid-run while the
+    /// estimator is still warm from better days — the stale-low estimate
+    /// mispredicts Offload, the local leg finishes first, and the fork
+    /// commits wholesale. Results stay bit-identical to speculation off.
+    #[test]
+    fn speculation_commits_the_winning_local_leg() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+        let awful = NetworkProfile {
+            name: "awful".into(),
+            latency_ms: 20_000.0,
+            down_mbps: 0.01,
+            up_mbps: 0.01,
+        };
+
+        let run_sweep = |margin: f64| -> (DistOutcome, i64) {
+            let mut phone = make_proc(&program, &template, Location::Mobile);
+            let clone = make_proc(&program, &template, Location::Clone);
+            let mut channel = InlineClone::new(clone, CostParams::default());
+            let mut engine =
+                crate::exec::PolicyEngine::auto().with_speculation_margin(margin);
+            // Priced well above any lan-measured estimate, so the
+            // decision stays Offload when the link turns awful.
+            engine.set_span(
+                0,
+                crate::exec::SpanCost {
+                    local_ms: 200.0,
+                    clone_ms: 0.1,
+                },
+            );
+            let fast = lan();
+            let slow = awful.clone();
+            let out = run_distributed_with(
+                &mut phone,
+                &mut channel,
+                |trip| if trip < 2 { fast.clone() } else { slow.clone() },
+                &CostParams::default(),
+                &mut MobileSession::disabled(),
+                &mut engine,
+            )
+            .unwrap();
+            let main = program.entry().unwrap();
+            let got = phone.statics[main.class.0 as usize][1].as_int().unwrap();
+            (out, got)
+        };
+
+        let (raced, got_r) = run_sweep(1e12);
+        let (plain, got_p) = run_sweep(0.0);
+        assert_eq!(got_r, expected, "a committed fork is a correct phone");
+        assert_eq!(got_p, expected);
+        assert_eq!(raced.result, plain.result);
+
+        assert!(
+            raced.speculation_local_wins >= 1,
+            "the awful trip's race went local: {} races, {} local wins",
+            raced.speculations,
+            raced.speculation_local_wins
+        );
+        assert!(raced.mispredictions >= 1, "the stale estimate was scored");
+        assert_eq!(plain.speculations, 0);
+    }
+
+    /// Speculation pairing (3/3): the channel dies while a race is in
+    /// flight. The local leg already ran on the fork, so the driver
+    /// commits it instead of re-running the span — same error surfacing
+    /// as a plain degrade, bit-identical results either way.
+    #[test]
+    fn speculation_survives_a_dead_channel() {
+        let (program, template) = setup();
+        let expected = delta_workload_expected(ROUNDS);
+
+        let run_dead = |margin: f64| -> (DistOutcome, i64) {
+            let mut phone = make_proc(&program, &template, Location::Mobile);
+            let mut engine =
+                crate::exec::PolicyEngine::auto().with_speculation_margin(margin);
+            // Hand-fed estimator (the channel will never feed it): est
+            // = 100 up + 0 clone + 20 down = 120 ms against a 130 ms
+            // local price — marginal under a 50 ms margin, and Offload
+            // still wins the decision.
+            for _ in 0..2 {
+                engine.observe_forward(10_000, 100.0, false);
+                engine.observe_reverse(2_000, 20.0);
+            }
+            engine.set_span(
+                0,
+                crate::exec::SpanCost {
+                    local_ms: 130.0,
+                    clone_ms: 0.0,
+                },
+            );
+            let out = run_distributed_policy(
+                &mut phone,
+                &mut DeadChannel,
+                &NetworkProfile::wifi(),
+                &CostParams::default(),
+                &mut MobileSession::disabled(),
+                &mut engine,
+            )
+            .unwrap();
+            let main = program.entry().unwrap();
+            let got = phone.statics[main.class.0 as usize][1].as_int().unwrap();
+            (out, got)
+        };
+
+        let (raced, got_r) = run_dead(50.0);
+        let (plain, got_p) = run_dead(0.0);
+        assert_eq!(got_r, expected);
+        assert_eq!(got_p, expected);
+        assert_eq!(raced.result, plain.result);
+
+        assert!(raced.speculations >= 1, "the fed estimator raced trip 0");
+        assert_eq!(
+            raced.speculation_local_wins, raced.speculations,
+            "a dead channel always commits the local leg"
+        );
+        assert_eq!(raced.speculation_clone_wins, 0);
+        assert_eq!(raced.migrations, 0);
+        assert_eq!(raced.offloads, 0, "dead offloads rolled back to local");
+        assert_eq!(raced.local_fallbacks, ROUNDS as usize);
+        assert_eq!(raced.channel_errors, ROUNDS as usize, "every span surfaced");
+        assert_eq!(plain.speculations, 0);
+        assert_eq!(plain.channel_errors, ROUNDS as usize);
     }
 }

@@ -130,6 +130,26 @@ impl<C: CloneChannel> CloneChannel for FaultInjectChannel<C> {
     fn record_policy(&mut self, offloads: u64, local: u64, mispredictions: u64) {
         self.inner.record_policy(offloads, local, mispredictions)
     }
+
+    fn scatter_capable(&self) -> bool {
+        self.inner.scatter_capable()
+    }
+
+    fn scatter(&mut self, frames: Vec<Vec<u8>>) -> Result<(Vec<Vec<u8>>, TransferBytes)> {
+        // Every sub-job frame crosses before the exchange, and every
+        // sub-result after it — so a cut can strand any prefix of the
+        // fan-out on the wire, or kill the gather after some lanes
+        // already executed. Either way the driver must degrade with the
+        // phone untouched.
+        for i in 0..frames.len() {
+            self.cross(&format!("scatter sub-job {i}"))?;
+        }
+        let (replies, total) = self.inner.scatter(frames)?;
+        for i in 0..replies.len() {
+            self.cross(&format!("scatter sub-result {i}"))?;
+        }
+        Ok((replies, total))
+    }
 }
 
 #[cfg(test)]

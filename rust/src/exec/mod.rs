@@ -13,6 +13,13 @@
 //!   `run_distributed_session` adds delta migration on top (epoch-based
 //!   dirty tracking, `NeedFull` full-capture fallback);
 //!   `run_distributed_with` sweeps the network per migration trip.
+//!   Spans annotated with `span_shards >= 2` scatter/gather: one full
+//!   capture fans across N clone lanes as sub-job frames and the N
+//!   disjoint reverse deltas merge against the single baseline (an
+//!   overlap degrades to the monolithic offload, never corrupts);
+//!   marginal decisions under `policy.speculation_margin_ms` race the
+//!   local interpretation against the offload and commit whichever
+//!   finishes first on the virtual clock.
 //! * [`faults`] — [`FaultInjectChannel`], a channel wrapper that kills
 //!   the link at the Nth frame boundary (the fault-matrix tests drive
 //!   degrade-to-local and `NeedFull` recovery through it).
@@ -27,7 +34,8 @@ pub use faults::FaultInjectChannel;
 pub use distributed::{
     delta_statics_workload_src, delta_workload_expected, delta_workload_src, run_distributed,
     run_distributed_policy, run_distributed_session, run_distributed_traced,
-    run_distributed_traced_with, run_distributed_with, CloneChannel, DistOutcome, FarmClone,
+    run_distributed_traced_with, run_distributed_with, scatter_conflict_workload_src,
+    scatter_workload_expected, scatter_workload_src, CloneChannel, DistOutcome, FarmClone,
     InlineClone,
 };
 pub use monolithic::{run_monolithic, run_monolithic_hooked, MonoOutcome};

@@ -250,6 +250,10 @@ pub struct PolicyStats {
     pub mispredictions: u64,
     pub probes: u64,
     pub channel_errors: u64,
+    /// Marginal decisions raced (local vs clone), and which leg won.
+    pub speculations: u64,
+    pub speculation_local_wins: u64,
+    pub speculation_clone_wins: u64,
 }
 
 /// Decision records kept per engine. The engine can outlive many runs;
@@ -268,8 +272,15 @@ pub struct PolicyEngine {
     hysteresis: f64,
     probe_trips: u64,
     degrade_to_local: bool,
+    /// Race local-vs-clone when |offload estimate − local cost| lands
+    /// under this margin (virtual ms); 0 = never speculate.
+    speculation_margin_ms: f64,
     pub estimator: NetworkEstimator,
     spans: HashMap<u32, SpanState>,
+    /// Partition-DB shard annotations: points whose span is
+    /// data-parallel under the `work(begin, end, shards)` convention,
+    /// and how many clone lanes to scatter across.
+    span_shards: HashMap<u32, u16>,
     /// Observed forward wire sizes, by capsule flavor: a session holding
     /// a delta baseline predicts the delta size, a cold one the full
     /// size — the input-conditions half of the decision.
@@ -282,6 +293,8 @@ pub struct PolicyEngine {
     consecutive_local: u64,
     trips: usize,
     last_estimate: Option<f64>,
+    /// The most recent `decide` was marginal (see `speculation_margin_ms`).
+    last_marginal: bool,
     pub log: Vec<DecisionRecord>,
     pub stats: PolicyStats,
 }
@@ -294,8 +307,10 @@ impl PolicyEngine {
             hysteresis: params.hysteresis.max(0.0),
             probe_trips: params.probe_trips,
             degrade_to_local: params.degrade_to_local,
+            speculation_margin_ms: params.speculation_margin_ms.max(0.0),
             estimator: NetworkEstimator::new(params.half_life_trips),
             spans: HashMap::new(),
+            span_shards: HashMap::new(),
             fwd_full_bytes: Ewma::default(),
             fwd_delta_bytes: Ewma::default(),
             rev_bytes: Ewma::default(),
@@ -304,6 +319,7 @@ impl PolicyEngine {
             consecutive_local: 0,
             trips: 0,
             last_estimate: None,
+            last_marginal: false,
             log: Vec::new(),
             stats: PolicyStats::default(),
         })
@@ -356,6 +372,22 @@ impl PolicyEngine {
         self.spans.insert(point, SpanState { cost, last: None });
     }
 
+    /// Annotate one partition point as data-parallel: offloads of this
+    /// span may scatter across `shards` clone lanes (< 2 clears the
+    /// annotation).
+    pub fn set_span_shards(&mut self, point: u32, shards: u16) {
+        if shards >= 2 {
+            self.span_shards.insert(point, shards);
+        } else {
+            self.span_shards.remove(&point);
+        }
+    }
+
+    /// The scatter width annotated for this point (`None` = monolithic).
+    pub fn span_shards(&self, point: u32) -> Option<u16> {
+        self.span_shards.get(&point).copied()
+    }
+
     /// Price every span a partition-DB entry covers, resolving method
     /// names against the *rewritten* binary: each migratory method
     /// carries its point id (`MethodDef::migration_point`), so the
@@ -371,6 +403,13 @@ impl PolicyEngine {
                 let clone_ms = entry.span_clone_ms.get(i).copied().unwrap_or(0.0);
                 if local_ms > 0.0 {
                     self.set_span(pid, SpanCost { local_ms, clone_ms });
+                }
+                // Honor a DB shard annotation only when the rewritten
+                // method actually matches the scatter convention — a
+                // stale annotation must never scatter a monolithic span.
+                let shards = entry.span_shards.get(i).copied().unwrap_or(0);
+                if shards >= 2 && crate::partitioner::shard_shaped(program, mref) {
+                    self.set_span_shards(pid, shards);
                 }
             }
         }
@@ -472,6 +511,12 @@ impl PolicyEngine {
             }
         }
         let local_ms = self.spans.get(&point).map(|s| s.cost.local_ms);
+        // Marginal call: both sides priced and within the speculation
+        // margin of each other — the cost model has no real confidence,
+        // so the driver may race the two legs instead of trusting it.
+        self.last_marginal = self.speculation_margin_ms > 0.0
+            && matches!((est, local_ms),
+                (Some(e), Some(l)) if l > 0.0 && (e - l).abs() < self.speculation_margin_ms);
         if let Some(s) = self.spans.get_mut(&point) {
             s.last = Some(decision);
         }
@@ -488,6 +533,33 @@ impl PolicyEngine {
             });
         }
         decision
+    }
+
+    /// Whether the most recent [`PolicyEngine::decide`] was marginal:
+    /// offload estimate and profiled local cost within the speculation
+    /// margin. The driver races the two legs and commits the first
+    /// finisher instead of trusting a coin-flip prediction.
+    pub fn speculation_candidate(&self) -> bool {
+        self.last_marginal
+    }
+
+    /// Set the speculation margin directly (builders/tests; the config
+    /// path goes through [`PolicyEngine::from_params`]).
+    pub fn with_speculation_margin(mut self, ms: f64) -> PolicyEngine {
+        self.speculation_margin_ms = ms.max(0.0);
+        self
+    }
+
+    /// Record the outcome of one local-vs-clone race. The loser's leg
+    /// also feeds `score_*` as usual, so races sharpen the estimator
+    /// with a measured sample of BOTH sides.
+    pub fn note_speculation(&mut self, local_won: bool) {
+        self.stats.speculations += 1;
+        if local_won {
+            self.stats.speculation_local_wins += 1;
+        } else {
+            self.stats.speculation_clone_wins += 1;
+        }
     }
 
     /// Feed one measured forward transfer (wire bytes + virtual ms
@@ -660,6 +732,36 @@ mod tests {
         assert!(!e.score_local(50.0, Some(100.0)));
         assert!(!e.score_local(500.0, None), "no estimate, no verdict");
         assert_eq!(e.stats.mispredictions, 2);
+    }
+
+    #[test]
+    fn marginal_decisions_become_speculation_candidates() {
+        // fed_engine(100, 100): est = 10_000/100 + clone + 2_000/100
+        // = 120 ms + clone_ms.
+        let mut e = fed_engine(100.0, 100.0).with_speculation_margin(50.0);
+        e.set_span(0, SpanCost { local_ms: 100.0, clone_ms: 0.0 });
+        e.decide(0, false);
+        assert!(e.speculation_candidate(), "|120 - 100| < 50");
+
+        e.set_span(1, SpanCost { local_ms: 600.0, clone_ms: 0.0 });
+        e.decide(1, false);
+        assert!(!e.speculation_candidate(), "|120 - 600| is a clear call");
+
+        let mut off = fed_engine(100.0, 100.0); // margin 0: disabled
+        off.set_span(0, SpanCost { local_ms: 100.0, clone_ms: 0.0 });
+        off.decide(0, false);
+        assert!(!off.speculation_candidate());
+
+        let mut cold = PolicyEngine::auto().with_speculation_margin(50.0);
+        cold.set_span(0, SpanCost { local_ms: 100.0, clone_ms: 0.0 });
+        cold.decide(0, false);
+        assert!(!cold.speculation_candidate(), "no estimate, no race");
+
+        e.note_speculation(true);
+        e.note_speculation(false);
+        assert_eq!(e.stats.speculations, 2);
+        assert_eq!(e.stats.speculation_local_wins, 1);
+        assert_eq!(e.stats.speculation_clone_wins, 1);
     }
 
     #[test]

@@ -150,6 +150,14 @@ pub(crate) struct FarmShared {
     /// Bytes the slot session dictionaries saved (names a per-capsule
     /// table would have re-shipped), flushed per job by the workers.
     pub dict_hit_bytes: AtomicU64,
+    /// Scatter fan-out: sub-job frames served by workers, completed
+    /// gathers (one per scatter, counted by the session), lanes fanned
+    /// across those gathers, and gathers that failed (a dead lane or
+    /// shard error; the phone degrades to a single-clone offload).
+    pub scatter_subjobs: AtomicU64,
+    pub scatter_gathers: AtomicU64,
+    pub scatter_lanes: AtomicU64,
+    pub scatter_failed: AtomicU64,
     /// Tier-1 engine activity across all worker slots (zero under the
     /// `exec_tier = interp` ablation), flushed per job by the workers.
     pub tier_promotions: AtomicU64,
@@ -226,6 +234,14 @@ pub struct FarmStats {
     pub wire_down: u64,
     /// Bytes the slot session dictionaries saved vs per-capsule tables.
     pub dict_hit_bytes: u64,
+    /// Sub-job frames the workers served (scatter shards).
+    pub scatter_subjobs: u64,
+    /// Scatter gathers sessions completed (one per fanned migration).
+    pub scatter_gathers: u64,
+    /// Lanes fanned across all completed gathers.
+    pub scatter_lanes: u64,
+    /// Gathers that failed (dead lane / shard error → phone degraded).
+    pub scatter_failed: u64,
     /// Tier-1 engine activity across all worker slots (zero under the
     /// `exec_tier = interp` ablation): promotions past the hotness
     /// threshold.
@@ -347,6 +363,10 @@ impl FarmHandle {
             wire_raw_down: s.wire_raw_down.load(Ordering::Relaxed),
             wire_down: s.wire_down.load(Ordering::Relaxed),
             dict_hit_bytes: s.dict_hit_bytes.load(Ordering::Relaxed),
+            scatter_subjobs: s.scatter_subjobs.load(Ordering::Relaxed),
+            scatter_gathers: s.scatter_gathers.load(Ordering::Relaxed),
+            scatter_lanes: s.scatter_lanes.load(Ordering::Relaxed),
+            scatter_failed: s.scatter_failed.load(Ordering::Relaxed),
             tier_promotions: s.tier_promotions.load(Ordering::Relaxed),
             tier_translations: s.tier_translations.load(Ordering::Relaxed),
             tier_cache_hits: s.tier_cache_hits.load(Ordering::Relaxed),
@@ -425,6 +445,10 @@ impl CloneFarm {
             wire_raw_down: AtomicU64::new(0),
             wire_down: AtomicU64::new(0),
             dict_hit_bytes: AtomicU64::new(0),
+            scatter_subjobs: AtomicU64::new(0),
+            scatter_gathers: AtomicU64::new(0),
+            scatter_lanes: AtomicU64::new(0),
+            scatter_failed: AtomicU64::new(0),
             tier_promotions: AtomicU64::new(0),
             tier_translations: AtomicU64::new(0),
             tier_cache_hits: AtomicU64::new(0),

@@ -362,6 +362,87 @@ mod tests {
         assert_eq!(stats.delta_rejects, 1);
     }
 
+    /// A scatter-annotated span fans its sub-jobs across the farm's warm
+    /// lanes: 4 sub-jobs, one gather, bit-identical result, and the
+    /// scatter counters account every lane.
+    #[test]
+    fn scatter_fans_across_farm_lanes() {
+        use crate::exec::{
+            run_distributed_policy, scatter_workload_expected, scatter_workload_src,
+            PolicyEngine,
+        };
+
+        const SLOTS: i64 = 8;
+        const CELLS: i64 = 64;
+        let program =
+            Arc::new(assemble(&scatter_workload_src(SLOTS, CELLS, 4)).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let cfg = FarmConfig {
+            workers: 2,
+            warm_per_worker: 2,
+            queue_depth: 4,
+            policy: PlacementPolicy::RoundRobin,
+            zygote_objects: ZY_OBJECTS,
+            zygote_seed: ZY_SEED,
+            fuel: 100_000_000,
+            slot_gc_interval: 8,
+            exec_tier: ExecTierKind::Tier1,
+        };
+        let farm = CloneFarm::start(
+            program.clone(),
+            cfg,
+            CostParams::default(),
+            Arc::new(NodeEnv::with_rust_compute),
+        )
+        .unwrap();
+        let template = Arc::new(build_template(&program, ZY_OBJECTS, ZY_SEED));
+        let fs = phone_fs(7);
+        let main = program.entry().unwrap();
+
+        let mut p = Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            DeviceSpec::phone_g1(),
+            Location::Mobile,
+            NodeEnv::with_rust_compute(fs.clone()),
+        );
+        let mut msess = crate::migration::MobileSession::new(true);
+        let mut engine = PolicyEngine::force_offload();
+        engine.set_span_shards(0, 4);
+
+        let mut session = farm.session(7, fs.clone());
+        session.set_delta(true);
+        let out = run_distributed_policy(
+            &mut p,
+            &mut session,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut msess,
+            &mut engine,
+        )
+        .unwrap();
+        assert_eq!(out.scatter_offloads, 1, "the gather committed");
+        assert_eq!(out.scatter_shards, 4);
+        assert_eq!(out.scatter_failures, 0);
+        assert_eq!(out.channel_errors, 0);
+        assert_eq!(
+            p.statics[main.class.0 as usize][1].as_int(),
+            Some(scatter_workload_expected(SLOTS, CELLS)),
+            "farm-gathered result is bit-identical"
+        );
+        session.close();
+        drop(session);
+
+        let stats = farm.shutdown();
+        assert_eq!(stats.scatter_subjobs, 4, "every lane served one sub-job");
+        assert_eq!(stats.scatter_gathers, 1);
+        assert_eq!(stats.scatter_lanes, 4);
+        assert_eq!(stats.scatter_failed, 0);
+        assert_eq!(stats.errors, 0);
+        assert_eq!(stats.sessions_opened, 1);
+        assert_eq!(stats.sessions_closed, 1);
+    }
+
     /// A recycled slot is detected by the digest heartbeat BEFORE any
     /// delta is built: the driver pre-arms the full path, so the farm
     /// sees zero doomed deltas (`delta_rejects == 0`) — contrast with

@@ -196,7 +196,7 @@ impl FarmClone {
             .fetch_add((waited_ms * 1e3) as u64, Ordering::Relaxed);
 
         let up = forward.len() as u64;
-        let (worker, reply_rx) = match self.submit_job(forward) {
+        let (worker, reply_rx) = match self.submit_job(forward, 0) {
             Ok(x) => x,
             Err(e) => {
                 self.shared.admission.release();
@@ -225,7 +225,7 @@ impl FarmClone {
             return Ok(Submit::Backpressure(forward));
         }
         let up = forward.len() as u64;
-        match self.submit_job(forward) {
+        match self.submit_job(forward, 0) {
             Ok((worker, reply_rx)) => Ok(Submit::Pending(PendingRoundtrip {
                 shared: self.shared.clone(),
                 reply_rx,
@@ -268,17 +268,29 @@ impl FarmClone {
     fn submit_job(
         &mut self,
         forward: Vec<u8>,
+        lane: u32,
     ) -> Result<(usize, mpsc::Receiver<Result<Vec<u8>>>)> {
-        let worker = self.shared.scheduler.pick(self.phone);
+        // Lane 0 keeps the phone's affinity placement (the delta/dict
+        // slot lives there); scatter lanes perturb the placement key so
+        // the shards of one phone spread across workers instead of
+        // queueing behind each other.
+        let key = self
+            .phone
+            .wrapping_add((lane as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let worker = self.shared.scheduler.pick(key);
         self.shared.scheduler.job_started(worker);
         let (reply_tx, reply_rx) = mpsc::channel();
         let job = Job {
             phone: self.phone,
+            lane,
             fs: self.fs.clone(),
             fs_version: self.fs_version,
             forward,
             delta_ok: self.delta,
-            dict_ok: self.dict,
+            // The session dictionary lives on the lane-0 affinity slot;
+            // arming it on scatter lanes would grow N diverging replicas
+            // of the phone's one dictionary. Sub-jobs ship plain names.
+            dict_ok: self.dict && lane == 0,
             submitted: Instant::now(),
             reply: reply_tx,
         };
@@ -331,6 +343,89 @@ impl FarmClone {
                 Err(e)
             }
         }
+    }
+
+    /// Scatter one migration over `frames.len()` lanes: sub-job frame i
+    /// is queued on slot `(phone, i)` and the replies are gathered back
+    /// in shard order. The whole fan-out holds **one** admission slot —
+    /// a scatter is one logical migration, and acquiring N slots while
+    /// holding earlier ones could deadlock two concurrent scatters on a
+    /// small admission window.
+    ///
+    /// Any dead lane or shard error fails the gather (the driver
+    /// degrades to a single-clone offload); queued replies are still
+    /// drained so no worker blocks on a dropped receiver and the byte
+    /// counters stay honest.
+    pub fn scatter_bytes(
+        &mut self,
+        frames: Vec<Vec<u8>>,
+    ) -> Result<(Vec<Vec<u8>>, TransferBytes)> {
+        if self.closed {
+            return Err(CloneCloudError::Transport("farm session closed".into()));
+        }
+        if frames.is_empty() {
+            return Err(CloneCloudError::migration("scatter of zero sub-jobs"));
+        }
+        let waited_ms = self.shared.admission.acquire();
+        self.stats.admission_wait_ms += waited_ms;
+        self.shared
+            .admission_wait_us
+            .fetch_add((waited_ms * 1e3) as u64, Ordering::Relaxed);
+
+        let mut up = 0u64;
+        let mut pendings = Vec::with_capacity(frames.len());
+        let mut submit_err = None;
+        for (lane, forward) in frames.into_iter().enumerate() {
+            up += forward.len() as u64;
+            match self.submit_job(forward, lane as u32) {
+                Ok(x) => pendings.push(x),
+                Err(e) => {
+                    submit_err = Some(e);
+                    break;
+                }
+            }
+        }
+        let mut replies = Vec::with_capacity(pendings.len());
+        for (worker, reply_rx) in pendings {
+            replies.push(reply_rx.recv().map_err(|_| worker_dropped_reply(worker)));
+        }
+        self.shared.admission.release();
+        if let Some(e) = submit_err {
+            // submit_job already counted the error.
+            self.shared.scatter_failed.fetch_add(1, Ordering::Relaxed);
+            return Err(e);
+        }
+
+        let mut out = Vec::with_capacity(replies.len());
+        let mut down = 0u64;
+        for reply in replies {
+            match reply {
+                Ok(Ok(bytes)) => {
+                    down += bytes.len() as u64;
+                    out.push(bytes);
+                }
+                Ok(Err(e)) | Err(e) => {
+                    self.stats.errors += 1;
+                    self.shared.errors.fetch_add(1, Ordering::Relaxed);
+                    self.shared.scatter_failed.fetch_add(1, Ordering::Relaxed);
+                    // The uplink bytes crossed even though the gather
+                    // failed — count them, like a rejected delta.
+                    self.stats.bytes_up += up;
+                    self.shared.bytes_up.fetch_add(up, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        }
+        let lanes = out.len() as u64;
+        self.stats.migrations += 1;
+        self.stats.bytes_up += up;
+        self.stats.bytes_down += down;
+        self.shared.migrations.fetch_add(1, Ordering::Relaxed);
+        self.shared.bytes_up.fetch_add(up, Ordering::Relaxed);
+        self.shared.bytes_down.fetch_add(down, Ordering::Relaxed);
+        self.shared.scatter_gathers.fetch_add(1, Ordering::Relaxed);
+        self.shared.scatter_lanes.fetch_add(lanes, Ordering::Relaxed);
+        Ok((out, TransferBytes { up, down }))
     }
 
     /// Digest-only heartbeat: verify the phone's baseline digest against
@@ -449,6 +544,14 @@ impl CloneChannel for FarmClone {
         s.policy_local_fallbacks.fetch_add(local, Ordering::Relaxed);
         s.policy_mispredictions
             .fetch_add(mispredictions, Ordering::Relaxed);
+    }
+
+    fn scatter_capable(&self) -> bool {
+        true
+    }
+
+    fn scatter(&mut self, frames: Vec<Vec<u8>>) -> Result<(Vec<Vec<u8>>, TransferBytes)> {
+        self.scatter_bytes(frames)
     }
 }
 

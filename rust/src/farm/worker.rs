@@ -35,6 +35,10 @@ use super::pool::WarmPool;
 /// One admitted migration roundtrip.
 pub(crate) struct Job {
     pub phone: u64,
+    /// Scatter lane (0 for plain roundtrips): shard i of a scatter runs
+    /// on slot `(phone, i)`, so concurrent sub-jobs never share a clone
+    /// process or its virtual clock.
+    pub lane: u32,
     pub fs: Arc<SimFs>,
     pub fs_version: u32,
     pub forward: Vec<u8>,
@@ -95,7 +99,9 @@ pub(crate) fn worker_main(
     exec_tier: ExecTierKind,
 ) {
     let migrator = Migrator::new(costs);
-    let mut slots: HashMap<u64, CloneSlot> = HashMap::new();
+    // Keyed by (phone, lane): lane 0 is the affinity slot plain
+    // roundtrips and heartbeats use; scatter shards get their own.
+    let mut slots: HashMap<(u64, u32), CloneSlot> = HashMap::new();
     // The worker itself records nothing: jobs that carry a trace context
     // get an ephemeral per-job tracer inside `execute_migration`, whose
     // events ride the reply back to the phone's timeline.
@@ -125,7 +131,7 @@ pub(crate) fn worker_main(
                     .record(wait_us as f64 / 1e3);
 
                 let t0 = Instant::now();
-                let slot = slots.entry(job.phone).or_insert_with(|| CloneSlot {
+                let slot = slots.entry((job.phone, job.lane)).or_insert_with(|| CloneSlot {
                     proc: pool.take(&job.fs),
                     fs_version: job.fs_version,
                     session: CloneSession::new(job.delta_ok),
@@ -157,6 +163,9 @@ pub(crate) fn worker_main(
                 shared
                     .delta_migrations
                     .fetch_add(serve.delta_migrations as u64, Ordering::Relaxed);
+                shared
+                    .scatter_subjobs
+                    .fetch_add(serve.scatter_subjobs, Ordering::Relaxed);
                 shared
                     .instrs_executed
                     .fetch_add(serve.instrs_executed, Ordering::Relaxed);
@@ -221,7 +230,7 @@ pub(crate) fn worker_main(
                 reply,
             } => {
                 shared.heartbeats.fetch_add(1, Ordering::Relaxed);
-                let res = match slots.get_mut(&phone) {
+                let res = match slots.get_mut(&(phone, 0)) {
                     Some(slot) => slot.session.check_heartbeat(&slot.proc, digest, &assignments),
                     None => Err(CloneCloudError::need_full("no clone slot for this phone")),
                 };
@@ -231,7 +240,8 @@ pub(crate) fn worker_main(
                 let _ = reply.send(res);
             }
             FarmMsg::Retire { phone } => {
-                slots.remove(&phone);
+                // Every lane of the phone, not just the affinity slot.
+                slots.retain(|k, _| k.0 != phone);
             }
             FarmMsg::Shutdown => break,
         }

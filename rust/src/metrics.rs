@@ -76,6 +76,24 @@ impl MetricsSnapshot {
         self.count("policy.local_fallbacks", out.local_fallbacks as u64);
         self.count("policy.mispredictions", out.mispredictions as u64);
         self.count("policy.channel_errors", out.channel_errors as u64);
+        // Local-vs-clone races on marginal decisions, and which leg the
+        // virtual clock crowned.
+        self.count("policy.speculation.races", out.speculations as u64);
+        self.count(
+            "policy.speculation.local_wins",
+            out.speculation_local_wins as u64,
+        );
+        self.count(
+            "policy.speculation.clone_wins",
+            out.speculation_clone_wins as u64,
+        );
+        // Scatter/gather fan-outs: committed gathers, lanes fanned, and
+        // the two refusal flavors (typed write-set conflict vs lane or
+        // link failure) — both degrade to the single-clone offload.
+        self.count("migration.scatter.offloads", out.scatter_offloads as u64);
+        self.count("migration.scatter.shards", out.scatter_shards as u64);
+        self.count("migration.scatter.conflicts", out.scatter_conflicts as u64);
+        self.count("migration.scatter.failures", out.scatter_failures as u64);
         self.count("objects.shipped", out.objects_shipped as u64);
         self.count("objects.zygote_skipped", out.zygote_skipped as u64);
         self.count("objects.base_skipped", out.base_skipped as u64);
@@ -129,6 +147,10 @@ impl MetricsSnapshot {
         self.count("farm.policy.offloads", f.offloads);
         self.count("farm.policy.local_fallbacks", f.local_fallbacks);
         self.count("farm.policy.mispredictions", f.mispredictions);
+        self.count("farm.scatter.subjobs", f.scatter_subjobs);
+        self.count("farm.scatter.gathers", f.scatter_gathers);
+        self.count("farm.scatter.lanes", f.scatter_lanes);
+        self.count("farm.scatter.failed", f.scatter_failed);
         self.count("farm.slot_gc.runs", f.slot_gc_runs);
         self.count("farm.slot_gc.threads", f.slot_gc_threads);
         self.count("farm.slot_gc.objects", f.slot_gc_objects);
@@ -254,6 +276,10 @@ mod tests {
             worker_busy_ms: vec![10.0, 8.0],
             tier_promotions: 2,
             tier1_instrs: 5_000,
+            scatter_subjobs: 8,
+            scatter_gathers: 2,
+            scatter_lanes: 8,
+            scatter_failed: 1,
             ..Default::default()
         };
         m.absorb_farm(&f);
@@ -261,6 +287,10 @@ mod tests {
         assert_eq!(m.counters["farm.worker1.jobs"], 4);
         assert_eq!(m.counters["farm.tier.promotions"], 2);
         assert_eq!(m.counters["farm.tier.tier1_instrs"], 5_000);
+        assert_eq!(m.counters["farm.scatter.subjobs"], 8);
+        assert_eq!(m.counters["farm.scatter.gathers"], 2);
+        assert_eq!(m.counters["farm.scatter.lanes"], 8);
+        assert_eq!(m.counters["farm.scatter.failed"], 1);
         assert!((m.gauges["farm.pool.hit_rate"] - 0.75).abs() < 1e-9);
         assert!(m.render().contains("farm.admission_wait_ms = 12.500"));
     }
@@ -284,6 +314,12 @@ mod tests {
             offloads: 4,
             local_fallbacks: 2,
             mispredictions: 1,
+            scatter_offloads: 1,
+            scatter_shards: 4,
+            scatter_conflicts: 1,
+            speculations: 3,
+            speculation_local_wins: 1,
+            speculation_clone_wins: 2,
             ..Default::default()
         };
         m.absorb_dist(&out);
@@ -299,6 +335,13 @@ mod tests {
         assert_eq!(m.counters["policy.local_fallbacks"], 2);
         assert_eq!(m.counters["policy.mispredictions"], 1);
         assert_eq!(m.counters["policy.channel_errors"], 0);
+        assert_eq!(m.counters["policy.speculation.races"], 3);
+        assert_eq!(m.counters["policy.speculation.local_wins"], 1);
+        assert_eq!(m.counters["policy.speculation.clone_wins"], 2);
+        assert_eq!(m.counters["migration.scatter.offloads"], 1);
+        assert_eq!(m.counters["migration.scatter.shards"], 4);
+        assert_eq!(m.counters["migration.scatter.conflicts"], 1);
+        assert_eq!(m.counters["migration.scatter.failures"], 0);
         assert!((m.gauges["migration.delta.hit_rate"] - 0.75).abs() < 1e-9);
         assert!((m.gauges["migration.compression.ratio_out"] - 3.0).abs() < 1e-9);
         assert!((m.gauges["migration.compression.ratio_in"] - 1.0).abs() < 1e-9);

@@ -90,9 +90,16 @@ impl DeltaPacket {
     /// Encode under an explicit session-dictionary mode.
     pub fn encode_with(&self, dict: DictMode<'_>) -> Vec<u8> {
         let mut w = WireWriter::with_capacity(1024);
+        self.encode_into_with(&mut w, dict);
+        w.into_vec()
+    }
+
+    /// Encode into an existing writer (scratch-buffer reuse; see
+    /// [`CapturePacket::encode_into_with`]).
+    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) {
         w.put_u32(DELTA_MAGIC);
         w.put_u16(DELTA_VERSION);
-        encode_direction(&mut w, self.direction);
+        encode_direction(w, self.direction);
         w.put_u32(self.thread_id);
         w.put_f64(self.clock_us);
         w.put_u64(self.base_epoch);
@@ -106,8 +113,7 @@ impl DeltaPacket {
         for mid in &self.deleted {
             w.put_u64(*mid);
         }
-        self.sections.encode_into_with(&mut w, dict);
-        w.into_vec()
+        self.sections.encode_into_with(w, dict);
     }
 
     pub fn decode(buf: &[u8]) -> Result<DeltaPacket> {
@@ -195,6 +201,15 @@ impl Capsule {
         match self {
             Capsule::Full(p) => p.encode_with(dict),
             Capsule::Delta(d) => d.encode_with(dict),
+        }
+    }
+
+    /// Encode into an existing writer (scratch-buffer reuse; see
+    /// [`CapturePacket::encode_into_with`]).
+    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) {
+        match self {
+            Capsule::Full(p) => p.encode_into_with(w, dict),
+            Capsule::Delta(d) => d.encode_into_with(w, dict),
         }
     }
 
@@ -439,6 +454,9 @@ pub struct MobileSession {
     /// Encode capsules against the dictionary when the channel supports
     /// it (off = per-capsule tables even on a negotiated channel).
     dict_enabled: bool,
+    /// Session-lifetime encode scratch: the driver reuses this buffer's
+    /// capacity across trips instead of growing a fresh Vec per capsule.
+    scratch: Vec<u8>,
 }
 
 impl MobileSession {
@@ -458,6 +476,7 @@ impl MobileSession {
             gc_runs: 0,
             dict: SessionDict::new(),
             dict_enabled: true,
+            scratch: Vec::new(),
         }
     }
 
@@ -580,6 +599,20 @@ impl MobileSession {
     pub fn drop_baseline(&mut self) {
         self.baseline = None;
         self.pending.clear();
+    }
+
+    /// Take the session-lifetime encode scratch (empty, but with the
+    /// capacity of every prior trip). Pair with [`put_scratch`]: encode
+    /// into it, `split_off(0)` the frame, hand the allocation back.
+    pub fn take_scratch(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.scratch)
+    }
+
+    /// Return the scratch allocation after a trip; contents are cleared,
+    /// capacity is kept for the next encode.
+    pub fn put_scratch(&mut self, mut buf: Vec<u8>) {
+        buf.clear();
+        self.scratch = buf;
     }
 }
 
@@ -1120,6 +1153,310 @@ fn merge_reverse_delta(
         mids: b.mids,
     });
     sess.pending = assignments;
+    sess.last_sync = Instant::now();
+    p.advance_epoch();
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
+// Scatter/gather: one baseline, N shard capsules
+// ---------------------------------------------------------------------------
+
+/// Specialize a monolithic forward capsule for one scatter shard by
+/// patching the callee convention arguments `m(begin, end, shards)` in
+/// the top (innermost) frame: `regs[0] = begin`, `regs[1] = end`. The
+/// capture is taken once — registers are not covered by the canonical
+/// state digest, so every patched copy still names the same baseline and
+/// all N reverse deltas gather against it.
+pub fn shard_capsule(capsule: &Capsule, begin: i64, end: i64) -> Result<Capsule> {
+    let base = match capsule {
+        Capsule::Full(p) => p,
+        Capsule::Delta(_) => {
+            return Err(CloneCloudError::migration(
+                "scatter requires a full forward capture",
+            ))
+        }
+    };
+    let mut p = base.clone();
+    let top = p.frames.last_mut().ok_or_else(|| {
+        CloneCloudError::migration("scatter capsule has no frames")
+    })?;
+    if top.regs.len() < 3 {
+        return Err(CloneCloudError::migration(
+            "scatter span is not shard-shaped: top frame needs (begin, end, shards) args",
+        ));
+    }
+    for r in &top.regs[..3] {
+        if !matches!(r, WireValue::Int(_)) {
+            return Err(CloneCloudError::migration(
+                "scatter span is not shard-shaped: (begin, end, shards) must be ints",
+            ));
+        }
+    }
+    top.regs[0] = WireValue::Int(begin);
+    top.regs[1] = WireValue::Int(end);
+    Ok(Capsule::Full(p))
+}
+
+/// Read the shard convention `(begin, end, shards)` off a full forward
+/// capsule's top frame. `None` means the captured span is not
+/// shard-shaped (delta capsule, missing frame, wrong arity or types,
+/// empty range, or fewer than 2 shards): the caller falls back to the
+/// ordinary single-clone offload.
+pub fn scatter_range(capsule: &Capsule) -> Option<(i64, i64, u16)> {
+    let p = match capsule {
+        Capsule::Full(p) => p,
+        Capsule::Delta(_) => return None,
+    };
+    let top = p.frames.last()?;
+    if top.regs.len() < 3 {
+        return None;
+    }
+    match (&top.regs[0], &top.regs[1], &top.regs[2]) {
+        (WireValue::Int(b), WireValue::Int(e), WireValue::Int(s))
+            if *e > *b && *s >= 2 && *s <= i64::from(u16::MAX) =>
+        {
+            // Never more shards than indices: a 2-element range scatters
+            // at most 2 ways regardless of the annotation.
+            Some((*b, *e, (*s).min(*e - *b) as u16))
+        }
+        _ => None,
+    }
+}
+
+/// Gather N concurrent reverse deltas — one per scatter shard — against
+/// the single mobile baseline they were all built from.
+///
+/// The merge is **validate-then-apply**: every check (direction, digest,
+/// baseline-reference liveness, frame agreement, write-set disjointness)
+/// runs read-only before any heap state is touched, so a conflicting
+/// shard set leaves the process *and* the baseline exactly as they were
+/// and the caller can degrade to a single-clone offload. A shard's write
+/// set is its overwritten baseline members, its dirtied Zygote twins,
+/// and its static stores; sets must be pairwise disjoint and must not
+/// touch members another shard deleted (concurrent deletes of the same
+/// member are fine — deletion is idempotent). Conflicts surface as the
+/// typed [`CloneCloudError::ScatterConflict`]; merged results are
+/// bit-identical to running the shards back-to-back on one clone.
+///
+/// The virtual clock advances to the *maximum* shard clock (shards run
+/// in parallel), and the gather ends the delta session: the merged union
+/// is a state no single clone slot holds, and cross-shard CID
+/// assignments could collide, so the next forward capture is full.
+pub(crate) fn merge_scatter_at_mobile(
+    p: &mut Process,
+    tid: u32,
+    deltas: &[DeltaPacket],
+    sess: &mut MobileSession,
+) -> Result<MergeStats> {
+    if deltas.is_empty() {
+        return Err(CloneCloudError::migration("scatter gather of zero shards"));
+    }
+    if deltas.len() == 1 {
+        // One shard is just a roundtrip; keep the session alive.
+        return merge_reverse_delta(p, tid, &deltas[0], sess);
+    }
+    let digest = match sess.baseline.as_ref() {
+        Some(b) => b.digest,
+        None => {
+            return Err(CloneCloudError::migration(
+                "scatter gather without a mobile baseline",
+            ))
+        }
+    };
+
+    // ---- validation: everything below is read-only ----
+    for d in deltas {
+        if d.direction != Direction::Reverse {
+            return Err(CloneCloudError::migration("expected reverse capsules"));
+        }
+        if d.thread_id != deltas[0].thread_id {
+            return Err(CloneCloudError::migration(
+                "scatter shards answered for different threads",
+            ));
+        }
+    }
+    for d in deltas {
+        if d.base_digest != digest {
+            // Same contract as the single-delta path: divergence poisons
+            // the baseline so the next forward capture is full.
+            sess.baseline = None;
+            sess.pending.clear();
+            return Err(CloneCloudError::migration(
+                "scatter shard baseline digest mismatch — endpoints diverged",
+            ));
+        }
+    }
+    // Every shard must stop at the same reintegration point with the
+    // same call structure; register *contents* are exempt (the shard
+    // loop's convention args and scratch counters legitimately differ
+    // per shard, and post-reintegration code must not read them — the
+    // rewriter validates that). Shard 0's registers are the ones
+    // reintegrated.
+    let same_shape = |a: &crate::migration::format::WireFrame,
+                      b: &crate::migration::format::WireFrame|
+     -> bool {
+        a.class_name == b.class_name
+            && a.method_name == b.method_name
+            && a.pc == b.pc
+            && a.ret_reg_plus1 == b.ret_reg_plus1
+            && a.regs.len() == b.regs.len()
+    };
+    for d in &deltas[1..] {
+        let f0 = &deltas[0].sections.frames;
+        if d.sections.frames.len() != f0.len()
+            || !d.sections.frames.iter().zip(f0).all(|(a, b)| same_shape(a, b))
+        {
+            return Err(CloneCloudError::scatter_conflict(
+                "shards stopped at divergent thread frames",
+            ));
+        }
+    }
+    let chk = |v: &WireValue| -> Result<()> {
+        if let WireValue::Base(mid) = v {
+            if !p.heap.contains(ObjId(*mid)) {
+                return Err(CloneCloudError::migration(format!(
+                    "reverse delta references dead baseline object {mid}"
+                )));
+            }
+        }
+        Ok(())
+    };
+    for d in deltas {
+        for f in &d.sections.frames {
+            for v in &f.regs {
+                chk(v)?;
+            }
+        }
+        for o in &d.sections.objects {
+            if let WireBody::Fields(vs) | WireBody::RefArray(vs) = &o.body {
+                for v in vs {
+                    chk(v)?;
+                }
+            }
+        }
+        for s in &d.sections.statics {
+            chk(&s.value)?;
+        }
+    }
+
+    // Placement plans + write-set disjointness. Conflict keys: baseline
+    // member (tag 0, MID), Zygote twin (tag 1, seq + class), static slot
+    // (tag 2, idx + class). Fresh allocations cannot conflict — each
+    // shard's new objects get their own local ids at apply time.
+    enum Plan {
+        Mapped(ObjId),
+        Twin(ObjId),
+        Fresh(crate::appvm::bytecode::ClassId),
+    }
+    let deleted_union: HashSet<u64> = deltas
+        .iter()
+        .flat_map(|d| d.deleted.iter().copied())
+        .collect();
+    let zidx = ZygoteIndex::build(&p.program, &p.heap);
+    let mut seen: HashSet<(u8, u64, &str)> = HashSet::new();
+    let mut plans: Vec<Vec<Plan>> = Vec::with_capacity(deltas.len());
+    let mut zlocals = Vec::with_capacity(deltas.len());
+    for (si, d) in deltas.iter().enumerate() {
+        zlocals.push(resolve_zygote_locals(&d.sections.zygote_refs, &zidx)?);
+        let mut plan = Vec::with_capacity(d.sections.objects.len());
+        for wo in &d.sections.objects {
+            let (key, pl) = if wo.mapped_id != 0 {
+                let id = ObjId(wo.mapped_id);
+                if !p.heap.contains(id) {
+                    return Err(CloneCloudError::migration(format!(
+                        "returned object maps to dead local id {}",
+                        wo.mapped_id
+                    )));
+                }
+                if deleted_union.contains(&wo.mapped_id) {
+                    return Err(CloneCloudError::scatter_conflict(format!(
+                        "shard {si} rewrote baseline object {} that another \
+                         shard deleted",
+                        wo.mapped_id
+                    )));
+                }
+                ((0u8, wo.mapped_id, ""), Plan::Mapped(id))
+            } else if let Some(seq) = wo.zygote_seq {
+                let twin = zidx.lookup(&wo.class_name, seq)?;
+                ((1u8, seq as u64, wo.class_name.as_str()), Plan::Twin(twin))
+            } else {
+                let class = p.program.class_id(&wo.class_name).ok_or_else(|| {
+                    CloneCloudError::migration(format!(
+                        "unknown class '{}'",
+                        wo.class_name
+                    ))
+                })?;
+                // Fresh objects conflict with nothing; skip the key.
+                plan.push(Plan::Fresh(class));
+                continue;
+            };
+            if !seen.insert(key) {
+                return Err(CloneCloudError::scatter_conflict(format!(
+                    "shard {si} and an earlier shard both dirtied {}",
+                    match key.0 {
+                        0 => format!("baseline object {}", key.1),
+                        _ => format!("zygote twin {}#{}", key.2, key.1),
+                    }
+                )));
+            }
+            plan.push(pl);
+        }
+        for s in &d.sections.statics {
+            if !seen.insert((2u8, s.idx as u64, s.class_name.as_str())) {
+                return Err(CloneCloudError::scatter_conflict(format!(
+                    "shard {si} and an earlier shard both stored static {}.{}",
+                    s.class_name, s.idx
+                )));
+            }
+        }
+        plans.push(plan);
+    }
+
+    // ---- apply: conflict-free by construction ----
+    let mut stats = MergeStats::default();
+    let mut merged_frames = None;
+    for ((d, plan), zlocal) in deltas.iter().zip(&plans).zip(&zlocals) {
+        let mut locals = Vec::with_capacity(plan.len());
+        for pl in plan {
+            locals.push(match pl {
+                Plan::Mapped(id) | Plan::Twin(id) => {
+                    stats.overwritten += 1;
+                    *id
+                }
+                Plan::Fresh(class) => {
+                    stats.created += 1;
+                    p.heap.alloc(placeholder(*class))
+                }
+            });
+        }
+        let frames = apply_sections(
+            p,
+            &d.sections.frames,
+            &d.sections.objects,
+            &d.sections.statics,
+            &locals,
+            zlocal,
+            BaseResolve::Local,
+        )?;
+        // All shards carry identical frames (validated above); resolve
+        // them once, from the first shard.
+        if merged_frames.is_none() {
+            merged_frames = Some(frames);
+        }
+    }
+
+    let t = p.thread_mut(tid)?;
+    t.frames = merged_frames.expect("at least one shard applied");
+    t.status = ThreadStatus::Runnable;
+    t.suspend_count = 0;
+    let clock = deltas.iter().fold(f64::MIN, |a, d| a.max(d.clock_us));
+    p.clock.advance_to_us(clock);
+
+    // The gather ends the delta session (see the doc comment): next
+    // forward capture is full and re-seeds a fresh baseline.
+    sess.baseline = None;
+    sess.pending.clear();
     sess.last_sync = Instant::now();
     p.advance_epoch();
     Ok(stats)

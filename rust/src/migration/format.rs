@@ -610,20 +610,27 @@ impl CapturePacket {
     /// Serialize under an explicit session-dictionary mode.
     pub fn encode_with(&self, dict: DictMode<'_>) -> Vec<u8> {
         let mut w = WireWriter::with_capacity(4096);
+        self.encode_into_with(&mut w, dict);
+        w.into_vec()
+    }
+
+    /// Serialize into an existing writer, so a session-lifetime scratch
+    /// buffer can be reused across trips instead of growing a fresh
+    /// vector from zero each time.
+    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) {
         w.put_u32(MAGIC);
         w.put_u16(VERSION);
-        encode_direction(&mut w, self.direction);
+        encode_direction(w, self.direction);
         w.put_u32(self.thread_id);
         w.put_f64(self.clock_us);
         encode_sections_with(
-            &mut w,
+            w,
             &self.frames,
             &self.objects,
             &self.zygote_refs,
             &self.statics,
             dict,
         );
-        w.into_vec()
     }
 
     /// Decode from bytes (pre-dict layout).

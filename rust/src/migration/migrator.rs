@@ -14,7 +14,7 @@ use crate::config::CostParams;
 use crate::error::Result;
 
 use super::capture::{capture_thread, CaptureOptions, CaptureStats};
-use super::delta::{self, Capsule, CloneSession, MobileSession};
+use super::delta::{self, Capsule, CloneSession, DeltaPacket, MobileSession};
 use super::format::{CapturePacket, Direction, WireBody, WireObject};
 use super::mapping::MappingTable;
 use super::merge::{instantiate_at_clone, merge_at_mobile, MergeStats};
@@ -309,6 +309,36 @@ impl Migrator {
         let merge_us = p.device.scale_us(
             self.merge_cost_objs_us(capsule.objects()) + self.costs.suspend_resume_us / 2.0,
         );
+        p.clock.charge_us(merge_us);
+        phases.merge_ms = merge_us / 1e3;
+        p.resume_others(tid);
+        Ok((stats, phases))
+    }
+
+    /// Mobile side: gather N scatter-shard reverse deltas against the
+    /// single forward baseline, merge them disjointly, and resume. The
+    /// merge cost covers every shard's shipped objects (the gather
+    /// patches them all). A [`CloneCloudError::ScatterConflict`] from the
+    /// merge leaves the process *and* the baseline untouched, so the
+    /// caller can degrade to a single-clone offload without corruption.
+    ///
+    /// [`CloneCloudError::ScatterConflict`]: crate::error::CloneCloudError
+    pub fn gather_scatter_capsules(
+        &self,
+        p: &mut Process,
+        tid: u32,
+        deltas: &[DeltaPacket],
+        sess: &mut MobileSession,
+    ) -> Result<(MergeStats, MigrationPhases)> {
+        let mut phases = MigrationPhases::default();
+        let stats = delta::merge_scatter_at_mobile(p, tid, deltas, sess)?;
+        let objs_us: f64 = deltas
+            .iter()
+            .map(|d| self.merge_cost_objs_us(&d.sections.objects))
+            .sum();
+        let merge_us = p
+            .device
+            .scale_us(objs_us + self.costs.suspend_resume_us / 2.0);
         p.clock.charge_us(merge_us);
         phases.merge_ms = merge_us / 1e3;
         p.resume_others(tid);

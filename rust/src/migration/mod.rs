@@ -27,8 +27,8 @@ pub mod zygote_diff;
 
 pub use capture::{capture_thread, measure_state_size, CaptureOptions, CaptureStats};
 pub use delta::{
-    collect_slot_garbage, Capsule, CloneSession, DeltaPacket, MobileSession, SlotGcStats,
-    CAPSULE_CLOCK_OFFSET,
+    collect_slot_garbage, scatter_range, shard_capsule, Capsule, CloneSession, DeltaPacket,
+    MobileSession, SlotGcStats, CAPSULE_CLOCK_OFFSET,
 };
 pub use format::{CapturePacket, DictMode, DictRead, Direction, SessionDict};
 pub use mapping::MappingTable;
@@ -606,5 +606,277 @@ end
         }
         let got = p.statics[main.class.0 as usize][0];
         assert_eq!(got.as_float(), Some(2016.0));
+    }
+
+    /// A data-parallel span in the scatter convention: `work(begin, end,
+    /// shards)` fills per-index byte arrays pre-allocated by the caller,
+    /// so shard i's writes land in slot i only (disjoint heaps), and the
+    /// method returns a constant so no post-reintegration code depends on
+    /// shard-private registers. `main` invokes it monolithically as
+    /// `work(0, N, N)` and then sums the slots locally.
+    const SCATTER_PROG: &str = r#"
+class S app
+  static data
+  static out
+  method main nargs=0 regs=12
+    const r0 4
+    newarr r1 val r0
+    puts S.data r1
+    const r6 16
+    const r2 0
+  mk:
+    ifge r2 r0 @mkd
+    newarr r4 byte r6
+    aput r1 r2 r4
+    const r5 1
+    add r2 r2 r5
+    goto @mk
+  mkd:
+    const r2 0
+    invoke r7 S.work r2 r0 r0
+    const r2 0
+    const r8 0
+  so:
+    ifge r2 r0 @sod
+    aget r4 r1 r2
+    const r3 0
+  si:
+    ifge r3 r6 @sid
+    aget r5 r4 r3
+    add r8 r8 r5
+    const r9 1
+    add r3 r3 r9
+    goto @si
+  sid:
+    const r9 1
+    add r2 r2 r9
+    goto @so
+  sod:
+    add r8 r8 r7
+    puts S.out r8
+    retv
+  end
+  method work nargs=3 regs=12
+    ccstart 0
+    gets r3 S.data
+  outer:
+    ifge r0 r1 @done
+    aget r4 r3 r0
+    len r5 r4
+    const r6 0
+  inner:
+    ifge r6 r5 @id
+    mul r7 r0 r6
+    add r7 r7 r0
+    aput r4 r6 r7
+    const r8 1
+    add r6 r6 r8
+    goto @inner
+  id:
+    const r8 1
+    add r0 r0 r8
+    goto @outer
+  done:
+    ccstop 0
+    const r9 0
+    ret r9
+  end
+end
+"#;
+
+    /// Drive one shard sub-job on a fresh clone slot: apply the (patched)
+    /// forward capsule, run to the reintegration point, capture the
+    /// reverse capsule.
+    fn run_shard(
+        program: &Arc<Program>,
+        migrator: &Migrator,
+        forward: &Capsule,
+    ) -> Capsule {
+        let mut clone = make_proc(Location::Clone, program, 40);
+        let mut csess = CloneSession::new(true);
+        let sent = Capsule::decode(&forward.encode()).unwrap();
+        let (ctid, _) = migrator
+            .receive_capsule_at_clone(&mut clone, &sent, &mut csess)
+            .unwrap();
+        let exit = run_thread(&mut clone, ctid, &mut NoHooks, 10_000_000).unwrap();
+        assert!(matches!(exit, RunExit::ReintegrationPoint { .. }), "{exit:?}");
+        let (rcap, _, _) = migrator
+            .return_capsule_from_clone(&mut clone, ctid, &mut csess)
+            .unwrap();
+        Capsule::decode(&rcap.encode()).unwrap()
+    }
+
+    fn scatter_slot_bytes(phone: &Process, main: crate::appvm::MRef) -> Vec<Vec<u8>> {
+        let data = phone.statics[main.class.0 as usize][0].as_ref().unwrap();
+        let slots = match &phone.heap.get(data).unwrap().body {
+            ObjBody::RefArray(vs) => vs.clone(),
+            other => panic!("expected ref array, got {other:?}"),
+        };
+        slots
+            .iter()
+            .map(|v| match &phone.heap.get(v.as_ref().unwrap()).unwrap().body {
+                ObjBody::ByteArray(b) => b.clone(),
+                other => panic!("expected byte array, got {other:?}"),
+            })
+            .collect()
+    }
+
+    /// Tentpole invariant: a 4-way scatter of one forward baseline merges
+    /// to bit-identical state as the single-clone offload, advances the
+    /// clock to the slowest shard (not the sum), and ends the delta
+    /// session.
+    #[test]
+    fn scatter_gather_matches_single_clone_bit_for_bit() {
+        let program = Arc::new(assemble(SCATTER_PROG).unwrap());
+        crate::appvm::verifier::verify_program(&program).unwrap();
+        let main = program.entry().unwrap();
+        let migrator = Migrator::new(CostParams::default());
+
+        // Single-clone reference offload.
+        let (single_out, single_slots) = {
+            let mut phone = make_proc(Location::Mobile, &program, 40);
+            let mut msess = MobileSession::new(true);
+            let tid = phone.spawn_thread(main, &[]).unwrap();
+            let exit = run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap();
+            assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+            let (capsule, _) =
+                migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+            let rcap = run_shard(&program, &migrator, &capsule);
+            migrator
+                .merge_back_capsule(&mut phone, tid, &rcap, &mut msess)
+                .unwrap();
+            let exit = run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap();
+            assert!(matches!(exit, RunExit::Completed(_)), "{exit:?}");
+            (
+                phone.statics[main.class.0 as usize][1],
+                scatter_slot_bytes(&phone, main),
+            )
+        };
+        // sum over slot i, index j of i*(j+1): 136 * (0+1+2+3)
+        assert_eq!(single_out.as_int(), Some(816));
+
+        // Scattered run: one capture, four patched sub-jobs, one gather.
+        let mut phone = make_proc(Location::Mobile, &program, 40);
+        let mut msess = MobileSession::new(true);
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap();
+        assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+        let (capsule, _) = migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+        assert!(!capsule.is_delta(), "first capture is full");
+
+        let mut deltas = Vec::new();
+        for i in 0..4i64 {
+            let sub = shard_capsule(&capsule, i, i + 1).unwrap();
+            match run_shard(&program, &migrator, &sub) {
+                Capsule::Delta(d) => deltas.push(d),
+                Capsule::Full(_) => panic!("shard answered in full"),
+            }
+        }
+        let max_shard_clock = deltas.iter().fold(f64::MIN, |a, d| a.max(d.clock_us));
+
+        let (stats, _) = migrator
+            .gather_scatter_capsules(&mut phone, tid, &deltas, &mut msess)
+            .unwrap();
+        assert_eq!(stats.overwritten, 4, "each shard dirtied its own slot");
+        assert!(
+            phone.clock.now_us() >= max_shard_clock,
+            "gather advances to the slowest shard"
+        );
+        assert!(
+            !msess.has_baseline(),
+            "the gather ends the delta session (next capture is full)"
+        );
+
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap();
+        assert!(matches!(exit, RunExit::Completed(_)), "{exit:?}");
+        assert_eq!(
+            phone.statics[main.class.0 as usize][1],
+            single_out,
+            "scatter result is bit-identical to the single-clone offload"
+        );
+        assert_eq!(scatter_slot_bytes(&phone, main), single_slots);
+    }
+
+    /// Overlapping shard write sets are refused *before* any mutation:
+    /// the typed conflict leaves the process and baseline untouched, so
+    /// the caller degrades to a single-clone offload of the same capture
+    /// and still lands on the correct result — never corruption.
+    #[test]
+    fn scatter_conflict_degrades_to_single_clone_without_corruption() {
+        let program = Arc::new(assemble(SCATTER_PROG).unwrap());
+        let main = program.entry().unwrap();
+        let migrator = Migrator::new(CostParams::default());
+        let mut phone = make_proc(Location::Mobile, &program, 40);
+        let mut msess = MobileSession::new(true);
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap();
+        assert!(matches!(exit, RunExit::MigrationPoint { .. }));
+        let (capsule, _) = migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+
+        // Ranges [0,2) and [1,3) both dirty slot 1.
+        let mut deltas = Vec::new();
+        for (b, e) in [(0i64, 2i64), (1, 3)] {
+            let sub = shard_capsule(&capsule, b, e).unwrap();
+            match run_shard(&program, &migrator, &sub) {
+                Capsule::Delta(d) => deltas.push(d),
+                Capsule::Full(_) => panic!("shard answered in full"),
+            }
+        }
+        let err = migrator
+            .gather_scatter_capsules(&mut phone, tid, &deltas, &mut msess)
+            .unwrap_err();
+        assert!(err.is_scatter_conflict(), "{err}");
+        assert!(msess.has_baseline(), "conflict leaves the baseline intact");
+        for slot in scatter_slot_bytes(&phone, main) {
+            assert!(
+                slot.iter().all(|&b| b == 0),
+                "conflict left the phone heap untouched"
+            );
+        }
+
+        // Degrade: the original monolithic capture is still valid.
+        let rcap = run_shard(&program, &migrator, &capsule);
+        migrator
+            .merge_back_capsule(&mut phone, tid, &rcap, &mut msess)
+            .unwrap();
+        let exit = run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap();
+        assert!(matches!(exit, RunExit::Completed(_)), "{exit:?}");
+        assert_eq!(phone.statics[main.class.0 as usize][1].as_int(), Some(816));
+    }
+
+    /// The shard patch validates the `(begin, end, shards)` convention
+    /// and refuses non-conforming spans and delta capsules.
+    #[test]
+    fn shard_capsule_validates_the_convention() {
+        let program = Arc::new(assemble(SCATTER_PROG).unwrap());
+        let main = program.entry().unwrap();
+        let migrator = Migrator::new(CostParams::default());
+        let mut phone = make_proc(Location::Mobile, &program, 40);
+        let mut msess = MobileSession::new(true);
+        let tid = phone.spawn_thread(main, &[]).unwrap();
+        let _ = run_thread(&mut phone, tid, &mut NoHooks, 10_000_000).unwrap();
+        let (capsule, _) = migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
+
+        let patched = shard_capsule(&capsule, 2, 3).unwrap();
+        let Capsule::Full(p) = &patched else { panic!() };
+        let top = p.frames.last().unwrap();
+        assert_eq!(top.regs[0], crate::migration::format::WireValue::Int(2));
+        assert_eq!(top.regs[1], crate::migration::format::WireValue::Int(3));
+        // The monolithic original is untouched (one capture, N patches).
+        let Capsule::Full(orig) = &capsule else { panic!() };
+        assert_eq!(
+            orig.frames.last().unwrap().regs[0],
+            crate::migration::format::WireValue::Int(0)
+        );
+
+        // A non-shard-shaped span (PROG's fill(arr) has a ref in r0).
+        let program2 = Arc::new(assemble(PROG).unwrap());
+        let main2 = program2.entry().unwrap();
+        let mut phone2 = make_proc(Location::Mobile, &program2, 30);
+        let mut msess2 = MobileSession::new(true);
+        let tid2 = phone2.spawn_thread(main2, &[]).unwrap();
+        let _ = run_thread(&mut phone2, tid2, &mut NoHooks, 1_000_000).unwrap();
+        let (c2, _) = migrator.migrate_out_capsule(&mut phone2, tid2, &mut msess2).unwrap();
+        assert!(shard_capsule(&c2, 0, 1).is_err());
     }
 }

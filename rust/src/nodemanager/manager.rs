@@ -62,6 +62,8 @@ pub struct CloneServeStats {
     pub tier_cache_hits: u64,
     /// Instructions executed by translated tier-1 segments.
     pub tier1_instrs: u64,
+    /// Scatter sub-job frames unwrapped and executed (one shard each).
+    pub scatter_subjobs: u64,
 }
 
 /// The clone node: serves one phone over one transport.
@@ -321,6 +323,29 @@ pub fn execute_migration(
     tracer: &mut Tracer,
     tier: &mut ExecTier,
 ) -> Result<Vec<u8>> {
+    // Scatter sub-job frames (`CAP_SCATTER`): unwrap, execute the inner
+    // capsule exactly like a plain `Migrate` payload, and tag the reply
+    // with the shard index so the gather side can match it. Living here
+    // — the one execution core — is what keeps the sub-job framing
+    // identical across the blocking gateway, the async gateway, the
+    // single-phone server, and the farm workers (one-protocol
+    // invariant).
+    if super::protocol::is_sub_job(bytes) {
+        let sub = super::protocol::decode_sub_job(bytes)?;
+        stats.scatter_subjobs += 1;
+        let reply = execute_migration(
+            migrator,
+            p,
+            &sub.payload,
+            fuel,
+            stats,
+            session,
+            tracer,
+            tier,
+        )?;
+        return Ok(super::protocol::encode_sub_result(sub.shard, &reply));
+    }
+
     let (ctx, bytes) = trace::split_ctx(bytes)?;
     let mut ephemeral;
     let tracer: &mut Tracer = match ctx {
@@ -458,6 +483,9 @@ pub struct NodeManager<T: Transport> {
     /// Set by [`NodeManager::negotiate`]: both peers understand the
     /// trace-context envelope.
     trace_negotiated: bool,
+    /// Set by [`NodeManager::negotiate`]: both peers understand scatter
+    /// sub-job frames.
+    scatter_negotiated: bool,
     /// The peer's protocol revision from its `Hello` (0 = never seen).
     peer_proto: u16,
     /// The revision/caps/delta this endpoint advertises. Default to the
@@ -478,6 +506,7 @@ impl<T: Transport> NodeManager<T> {
             codec: Codec::None,
             dict_negotiated: false,
             trace_negotiated: false,
+            scatter_negotiated: false,
             peer_proto: 0,
             local_proto: PROTO_VERSION,
             local_caps: SUPPORTED_CAPS,
@@ -527,6 +556,12 @@ impl<T: Transport> NodeManager<T> {
                     dict_agreed(self.local_proto, self.local_caps, proto, caps);
                 self.trace_negotiated =
                     trace_agreed(self.local_proto, self.local_caps, proto, caps);
+                self.scatter_negotiated = super::protocol::scatter_agreed(
+                    self.local_proto,
+                    self.local_caps,
+                    proto,
+                    caps,
+                );
             }
             // A peer that answers Error instead of Hello doesn't do
             // capability negotiation; stay on full, uncompressed frames.
@@ -539,6 +574,7 @@ impl<T: Transport> NodeManager<T> {
                 self.codec = Codec::None;
                 self.dict_negotiated = false;
                 self.trace_negotiated = false;
+                self.scatter_negotiated = false;
             }
             other => {
                 return Err(CloneCloudError::Transport(format!(
@@ -564,6 +600,12 @@ impl<T: Transport> NodeManager<T> {
     /// envelope (`CAP_TRACE_CTX`).
     pub fn trace_negotiated(&self) -> bool {
         self.trace_negotiated
+    }
+
+    /// Whether [`NodeManager::negotiate`] agreed on scatter sub-job
+    /// frames (`CAP_SCATTER`).
+    pub fn scatter_negotiated(&self) -> bool {
+        self.scatter_negotiated
     }
 
     /// The frame codec [`NodeManager::negotiate`] agreed on.

@@ -31,10 +31,12 @@ pub use manager::{
     execute_migration, CloneServeStats, CloneServer, NodeManager, TransferBytes,
 };
 pub use protocol::{
-    codec_agreed, codec_agreed_at, delta_agreed, delta_agreed_at, dict_agreed, drive_heartbeat,
-    open_frame, patch_frame_payload, program_hash, seal_frame, seal_frame_keep_head, trace_agreed,
-    Codec, FrameDecoder, HeartbeatOutcome, Msg, CAP_CODEC_LZ, CAP_SESSION_DICT, CAP_TRACE_CTX,
-    DICT_MIN_PROTO, MAX_FRAME_BYTES, PROTO_VERSION, SUPPORTED_CAPS, TRACE_MIN_PROTO,
+    codec_agreed, codec_agreed_at, decode_sub_job, decode_sub_result, delta_agreed,
+    delta_agreed_at, dict_agreed, drive_heartbeat, encode_sub_result, is_sub_job, open_frame,
+    patch_frame_payload, program_hash, seal_frame, seal_frame_keep_head, trace_agreed, Codec,
+    FrameDecoder, HeartbeatOutcome, Msg, SubJobFrame, CAP_CODEC_LZ, CAP_SCATTER,
+    CAP_SESSION_DICT, CAP_TRACE_CTX, DICT_MIN_PROTO, MAX_FRAME_BYTES, PROTO_VERSION,
+    SUB_JOB_PAYLOAD_OFFSET, SUPPORTED_CAPS, TRACE_MIN_PROTO,
 };
 pub use transport::{InProcTransport, TcpEndpoint, TcpTransport, Transport};
 

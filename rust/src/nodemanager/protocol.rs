@@ -82,8 +82,15 @@ pub const CAP_SESSION_DICT: u32 = 1 << 1;
 /// observability — negotiating it never changes execution results.
 pub const CAP_TRACE_CTX: u32 = 1 << 2;
 
+/// Capability bit: the peer understands scatter sub-job frames — a
+/// `Migrate` payload wrapped in [`SubJobFrame`] ("CCSJ") whose reply
+/// rides back wrapped in a sub-result frame ("CCSR"). Executors that
+/// never see the wrapper behave exactly as before; the bit only says
+/// the wrapper will be unwrapped rather than rejected as a bad capsule.
+pub const CAP_SCATTER: u32 = 1 << 3;
+
 /// Every capability bit this build advertises in its `Hello`.
-pub const SUPPORTED_CAPS: u32 = CAP_CODEC_LZ | CAP_SESSION_DICT | CAP_TRACE_CTX;
+pub const SUPPORTED_CAPS: u32 = CAP_CODEC_LZ | CAP_SESSION_DICT | CAP_TRACE_CTX | CAP_SCATTER;
 
 /// Lowest protocol revision that understands the session dictionary
 /// (the caps bitmap itself only exists from v4 on).
@@ -98,6 +105,18 @@ pub const TRACE_MIN_PROTO: u16 = 4;
 pub fn trace_agreed(local_proto: u16, local_caps: u32, peer_proto: u16, peer_caps: u32) -> bool {
     peer_proto.min(local_proto) >= TRACE_MIN_PROTO
         && (peer_caps & local_caps & CAP_TRACE_CTX) != 0
+}
+
+/// Lowest protocol revision that understands scatter sub-job frames
+/// (the caps bitmap itself only exists from v4 on).
+pub const SCATTER_MIN_PROTO: u16 = 4;
+
+/// The scatter decision, symmetric like [`dict_agreed`]: min-revision
+/// agreement plus the intersection of the capability bitmaps. Unknown
+/// bits are ignored, never rejected.
+pub fn scatter_agreed(local_proto: u16, local_caps: u32, peer_proto: u16, peer_caps: u32) -> bool {
+    peer_proto.min(local_proto) >= SCATTER_MIN_PROTO
+        && (peer_caps & local_caps & CAP_SCATTER) != 0
 }
 
 /// The frame codec a session negotiated. `None` is always legal; `Lz`
@@ -306,6 +325,138 @@ pub fn patch_frame_payload(wire: &mut [u8], offset: usize, patch: &[u8]) -> Resu
     }
     wire[start..start + patch.len()].copy_from_slice(patch);
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Scatter sub-job framing (shared by both gateways and the farm workers)
+// ---------------------------------------------------------------------------
+
+/// Magic for a scatter sub-job frame ("CCSJ"): one shard of a
+/// data-parallel span riding inside a `Migrate` payload. Distinct from
+/// the capsule magics ("CCHP"/"CCDP") and the z-frame ("CCZF"), so an
+/// executor can always tell a wrapped sub-job from a bare capsule.
+pub const SUB_JOB_MAGIC: u32 = 0x4343_534A;
+
+/// Magic for a scatter sub-result frame ("CCSR"): the reverse capsule of
+/// one shard, tagged with its shard index so the gather side can match
+/// replies to sub-jobs whatever order they complete in.
+pub const SUB_RESULT_MAGIC: u32 = 0x4343_5352;
+
+/// Wire revision of the sub-job/sub-result framing.
+pub const SUB_FRAME_VERSION: u16 = 1;
+
+/// Byte offset of the payload inside an encoded sub-job frame: magic
+/// (4) + version (2) + shard (2) + shards (2) + payload length prefix
+/// (4). The driver patches the capsule clock through this header, so
+/// the offset is part of the wire contract.
+pub const SUB_JOB_PAYLOAD_OFFSET: usize = 14;
+
+/// One shard of a scattered span: which shard this is, how many the
+/// span was split into, and the (possibly sealed) forward capsule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubJobFrame {
+    /// Shard index, `0 <= shard < shards`.
+    pub shard: u16,
+    /// Total shard count for the span (`>= 1`; a count of 1 is a legal
+    /// degenerate scatter and must roundtrip like any other).
+    pub shards: u16,
+    /// The forward capsule bytes for this shard.
+    pub payload: Vec<u8>,
+}
+
+impl SubJobFrame {
+    /// Encode to the tagged wire form ([`decode_sub_job`] inverts it).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::with_capacity(14 + self.payload.len());
+        w.put_u32(SUB_JOB_MAGIC);
+        w.put_u16(SUB_FRAME_VERSION);
+        w.put_u16(self.shard);
+        w.put_u16(self.shards);
+        w.put_bytes(&self.payload);
+        w.into_vec()
+    }
+}
+
+/// Whether a payload leads with the sub-job magic (cheap dispatch for
+/// executors; a `true` here still needs the strict decode to succeed).
+pub fn is_sub_job(bytes: &[u8]) -> bool {
+    bytes.len() >= 4
+        && u32::from_be_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) == SUB_JOB_MAGIC
+}
+
+/// Strictly decode a sub-job frame: wrong magic, unknown version, a
+/// zero shard count, an out-of-range shard index, truncation, and
+/// trailing bytes are all typed errors — never panics, never a silent
+/// partial parse.
+pub fn decode_sub_job(bytes: &[u8]) -> Result<SubJobFrame> {
+    let mut r = WireReader::new(bytes);
+    let magic = r.get_u32()?;
+    if magic != SUB_JOB_MAGIC {
+        return Err(CloneCloudError::Wire(format!(
+            "sub-job frame magic {magic:#x} != {SUB_JOB_MAGIC:#x}"
+        )));
+    }
+    let version = r.get_u16()?;
+    if version != SUB_FRAME_VERSION {
+        return Err(CloneCloudError::Wire(format!(
+            "unknown sub-job frame version {version}"
+        )));
+    }
+    let shard = r.get_u16()?;
+    let shards = r.get_u16()?;
+    if shards == 0 {
+        return Err(CloneCloudError::Wire("sub-job shard count 0".into()));
+    }
+    if shard >= shards {
+        return Err(CloneCloudError::Wire(format!(
+            "sub-job shard {shard} out of range (count {shards})"
+        )));
+    }
+    let payload = r.get_bytes()?;
+    if !r.is_done() {
+        return Err(CloneCloudError::Wire("trailing bytes in sub-job frame".into()));
+    }
+    Ok(SubJobFrame {
+        shard,
+        shards,
+        payload,
+    })
+}
+
+/// Wrap one shard's reverse capsule in a sub-result frame.
+pub fn encode_sub_result(shard: u16, payload: &[u8]) -> Vec<u8> {
+    let mut w = WireWriter::with_capacity(12 + payload.len());
+    w.put_u32(SUB_RESULT_MAGIC);
+    w.put_u16(SUB_FRAME_VERSION);
+    w.put_u16(shard);
+    w.put_bytes(payload);
+    w.into_vec()
+}
+
+/// Strictly decode a sub-result frame into (shard index, reverse
+/// capsule bytes). Same strictness contract as [`decode_sub_job`].
+pub fn decode_sub_result(bytes: &[u8]) -> Result<(u16, Vec<u8>)> {
+    let mut r = WireReader::new(bytes);
+    let magic = r.get_u32()?;
+    if magic != SUB_RESULT_MAGIC {
+        return Err(CloneCloudError::Wire(format!(
+            "sub-result frame magic {magic:#x} != {SUB_RESULT_MAGIC:#x}"
+        )));
+    }
+    let version = r.get_u16()?;
+    if version != SUB_FRAME_VERSION {
+        return Err(CloneCloudError::Wire(format!(
+            "unknown sub-result frame version {version}"
+        )));
+    }
+    let shard = r.get_u16()?;
+    let payload = r.get_bytes()?;
+    if !r.is_done() {
+        return Err(CloneCloudError::Wire(
+            "trailing bytes in sub-result frame".into(),
+        ));
+    }
+    Ok((shard, payload))
 }
 
 // ---------------------------------------------------------------------------
@@ -1022,6 +1173,152 @@ mod tests {
         let mut plain = raw.clone();
         patch_frame_payload(&mut plain, 11, &patch).unwrap();
         assert_eq!(plain, expect);
+    }
+
+    // ---- scatter sub-job / sub-result framing ---------------------------
+
+    /// Generate an arbitrary legal sub-job frame, covering the shard
+    /// count 1 edge and empty payloads.
+    fn gen_sub_job(rng: &mut crate::util::rng::Rng) -> SubJobFrame {
+        let shards = 1 + rng.index(9) as u16; // 1..=9: count 1 is legal
+        let shard = rng.index(shards as usize) as u16;
+        let mut payload = vec![0u8; rng.index(2048)]; // 0 = empty capsule slot
+        rng.fill_bytes(&mut payload);
+        SubJobFrame {
+            shard,
+            shards,
+            payload,
+        }
+    }
+
+    #[test]
+    fn prop_sub_frames_roundtrip() {
+        use crate::util::prop::{ensure, ensure_eq, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0x5CA_77E1,
+                cases: 200,
+            },
+            gen_sub_job,
+            |j| {
+                let bytes = j.encode();
+                ensure(is_sub_job(&bytes), "magic recognized")?;
+                let back = decode_sub_job(&bytes).map_err(|e| format!("decode: {e}"))?;
+                ensure_eq(back, j.clone(), "decode(encode(j))")?;
+                let reply = encode_sub_result(j.shard, &j.payload);
+                ensure(!is_sub_job(&reply), "result magic is distinct")?;
+                let (shard, payload) =
+                    decode_sub_result(&reply).map_err(|e| format!("decode result: {e}"))?;
+                ensure_eq(shard, j.shard, "result shard index")?;
+                ensure_eq(payload, j.payload.clone(), "result payload")
+            },
+        );
+    }
+
+    #[test]
+    fn prop_sub_frame_strict_prefixes_never_decode() {
+        use crate::util::prop::{ensure, forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0x5CA_77E2,
+                cases: 200,
+            },
+            |rng| {
+                let j = gen_sub_job(rng);
+                let job_bytes = j.encode();
+                let res_bytes = encode_sub_result(j.shard, &j.payload);
+                let job_cut = rng.index(job_bytes.len());
+                let res_cut = rng.index(res_bytes.len());
+                (job_bytes, job_cut, res_bytes, res_cut)
+            },
+            |(job, job_cut, res, res_cut)| {
+                ensure(
+                    decode_sub_job(&job[..*job_cut]).is_err(),
+                    "sub-job prefix decoded",
+                )?;
+                ensure(
+                    decode_sub_result(&res[..*res_cut]).is_err(),
+                    "sub-result prefix decoded",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn prop_sub_frame_garbage_never_panics() {
+        use crate::util::prop::{forall, PropConfig};
+        forall(
+            PropConfig {
+                seed: 0x5CA_77E3,
+                cases: 300,
+            },
+            |rng| {
+                // Half the cases start from a real magic so the fuzz
+                // reaches the body parsers, not just the magic check.
+                let mut b = match rng.index(3) {
+                    0 => SUB_JOB_MAGIC.to_be_bytes().to_vec(),
+                    1 => SUB_RESULT_MAGIC.to_be_bytes().to_vec(),
+                    _ => Vec::new(),
+                };
+                let mut tail = vec![0u8; rng.index(256)];
+                rng.fill_bytes(&mut tail);
+                b.extend_from_slice(&tail);
+                b
+            },
+            |bytes| {
+                let _ = decode_sub_job(bytes); // Ok or Err both fine
+                let _ = decode_sub_result(bytes); // no panic either way
+                Ok(())
+            },
+        );
+    }
+
+    /// Shard-count edge cases: 0 is a typed error, 1 roundtrips, and an
+    /// out-of-range shard index is rejected.
+    #[test]
+    fn sub_job_shard_count_edges() {
+        let one = SubJobFrame {
+            shard: 0,
+            shards: 1,
+            payload: vec![0xAB; 7],
+        };
+        assert_eq!(decode_sub_job(&one.encode()).unwrap(), one);
+
+        // Hand-build a zero-count frame (encode of a legal frame can
+        // never produce one).
+        let mut w = WireWriter::new();
+        w.put_u32(SUB_JOB_MAGIC);
+        w.put_u16(SUB_FRAME_VERSION);
+        w.put_u16(0);
+        w.put_u16(0);
+        w.put_bytes(&[]);
+        let err = decode_sub_job(&w.into_vec()).unwrap_err().to_string();
+        assert!(err.contains("shard count 0"), "{err}");
+
+        let mut w = WireWriter::new();
+        w.put_u32(SUB_JOB_MAGIC);
+        w.put_u16(SUB_FRAME_VERSION);
+        w.put_u16(3);
+        w.put_u16(3);
+        w.put_bytes(&[1, 2]);
+        let err = decode_sub_job(&w.into_vec()).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        // Unknown framing version: typed error on both frame kinds.
+        let mut w = WireWriter::new();
+        w.put_u32(SUB_RESULT_MAGIC);
+        w.put_u16(SUB_FRAME_VERSION + 1);
+        w.put_u16(0);
+        w.put_bytes(&[]);
+        assert!(decode_sub_result(&w.into_vec()).is_err());
+    }
+
+    /// The scatter capability bit negotiates like every other bit:
+    /// unknown high bits ignored, pre-v4 peers never see it.
+    #[test]
+    fn scatter_cap_is_advertised_and_maskable() {
+        assert_ne!(SUPPORTED_CAPS & CAP_SCATTER, 0);
+        assert_eq!(CAP_SCATTER & (CAP_CODEC_LZ | CAP_SESSION_DICT | CAP_TRACE_CTX), 0);
     }
 
     // ---- incremental frame decoder --------------------------------------

@@ -34,6 +34,11 @@ pub struct PartitionEntry {
     /// Per-invocation clone-side cost of each `migrate` span, ms —
     /// parallel to `migrate`.
     pub span_clone_ms: Vec<f64>,
+    /// Scatter width of each `migrate` span — parallel to `migrate`.
+    /// 0 (or a missing array: pre-scatter databases) = monolithic;
+    /// >= 2 = data-parallel under the `work(begin, end, shards)`
+    /// convention, offloads may fan across that many clone lanes.
+    pub span_shards: Vec<u16>,
 }
 
 impl PartitionEntry {
@@ -52,6 +57,10 @@ impl PartitionEntry {
             span_clone_ms: refs
                 .iter()
                 .map(|m| p.span_costs.get(m).map_or(0.0, |c| c.clone_us / 1e3))
+                .collect(),
+            span_shards: refs
+                .iter()
+                .map(|m| p.span_shards.get(m).copied().unwrap_or(0))
                 .collect(),
         }
     }
@@ -193,6 +202,12 @@ impl PartitionDb {
                             "span_clone_ms",
                             Json::Arr(e.span_clone_ms.iter().map(|&x| x.into()).collect()),
                         ),
+                        (
+                            "span_shards",
+                            Json::Arr(
+                                e.span_shards.iter().map(|&x| f64::from(x).into()).collect(),
+                            ),
+                        ),
                     ])
                 })
                 .collect(),
@@ -250,6 +265,16 @@ impl PartitionDb {
                 local_ms: e.get("local_ms").as_f64().unwrap_or(0.0),
                 span_local_ms: get_span("span_local_ms")?,
                 span_clone_ms: get_span("span_clone_ms")?,
+                span_shards: get_span("span_shards")?
+                    .into_iter()
+                    .map(|x| {
+                        if x.fract() == 0.0 && (0.0..=f64::from(u16::MAX)).contains(&x) {
+                            Ok(x as u16)
+                        } else {
+                            Err(CloneCloudError::partitioner("bad span_shards item"))
+                        }
+                    })
+                    .collect::<Result<Vec<_>>>()?,
             });
         }
         Ok(db)
@@ -281,6 +306,7 @@ mod tests {
             local_ms: 456.0,
             span_local_ms: vec![10.5; migrate.len()],
             span_clone_ms: vec![0.5; migrate.len()],
+            span_shards: vec![0; migrate.len()],
         }
     }
 
@@ -312,6 +338,7 @@ mod tests {
             local_ms: rng.range_i64(0, 1 << 40) as f64 / 64.0,
             span_local_ms: spans(rng),
             span_clone_ms: spans(rng),
+            span_shards: (0..rng.index(4)).map(|_| rng.index(8) as u16).collect(),
         }
     }
 
@@ -480,6 +507,7 @@ mod tests {
         let db = PartitionDb::from_json(&json::parse(text).unwrap()).unwrap();
         let e = db.lookup("virus", "wifi").unwrap();
         assert!(e.span_local_ms.is_empty() && e.span_clone_ms.is_empty());
+        assert!(e.span_shards.is_empty(), "pre-scatter db loads unannotated");
 
         let bad = r#"[{"app":"v","network":"w","migrate":[],"span_local_ms":"fast"}]"#;
         assert!(PartitionDb::from_json(&json::parse(bad).unwrap()).is_err());

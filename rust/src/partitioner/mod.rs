@@ -15,5 +15,7 @@ pub use cost_model::CostModel;
 pub use database::{PartitionDb, PartitionEntry};
 pub use profile_tree::{ProfileNode, ProfileTree};
 pub use profiler::{profile_run, ProfileRunReport, Profiler};
-pub use rewriter::{candidate_points, rewrite_with_candidates, rewrite_with_partition};
+pub use rewriter::{
+    candidate_points, rewrite_with_candidates, rewrite_with_partition, shard_shaped,
+};
 pub use solver::{solve_partition, validate_partition, Partition, SolveReport, SpanCostUs};

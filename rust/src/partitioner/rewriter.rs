@@ -20,7 +20,7 @@ use std::collections::{BTreeSet, HashMap};
 use crate::appvm::bytecode::{Instr, MRef};
 use crate::appvm::class::Program;
 use crate::appvm::verifier::verify_program;
-use crate::error::Result;
+use crate::error::{CloneCloudError, Result};
 
 use super::cfg::Cfg;
 use super::solver::Partition;
@@ -31,7 +31,27 @@ pub fn rewrite_with_partition(
     program: &Program,
     partition: &Partition,
 ) -> Result<(Program, HashMap<u32, MRef>)> {
+    for (&m, &shards) in &partition.span_shards {
+        if shards >= 2 && !shard_shaped(program, m) {
+            return Err(CloneCloudError::partitioner(format!(
+                "shard annotation on '{}', which is not shard-shaped: \
+                 the scatter convention needs `work(begin, end, shards)` \
+                 (nargs >= 3)",
+                program.method_name(m)
+            )));
+        }
+    }
     rewrite_with_candidates(program, &partition.migrate)
+}
+
+/// Whether a method matches the rewriter-visible scatter convention
+/// `work(begin, end, shards)`: at least three arguments, so `regs[0..3]`
+/// of a captured top frame are the patchable range. The value-level
+/// checks (ints, non-empty range) happen on the capture itself
+/// (`migration::shard_capsule`); this is the static half the rewriter
+/// and DB loader can enforce.
+pub fn shard_shaped(program: &Program, m: MRef) -> bool {
+    program.method(m).nargs >= 3
 }
 
 /// Every method that can host a conditional migration point: bytecode
@@ -162,6 +182,7 @@ end
             expected_us: 0.0,
             local_us: 0.0,
             span_costs: HashMap::new(),
+            span_shards: HashMap::new(),
         }
     }
 
@@ -186,6 +207,21 @@ end
             .code
             .iter()
             .any(|i| matches!(i, Instr::CcStart(_))));
+    }
+
+    #[test]
+    fn shard_annotation_requires_the_convention() {
+        let program = assemble(SRC).unwrap();
+        let work = program.resolve("C", "work").unwrap(); // nargs=1
+        let mut p = partition_of(&program, &["work"]);
+        p.span_shards.insert(work, 4);
+        let err = rewrite_with_partition(&program, &p)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not shard-shaped"), "{err}");
+        // Width < 2 never scatters, so it is not worth refusing.
+        p.span_shards.insert(work, 1);
+        rewrite_with_partition(&program, &p).unwrap();
     }
 
     #[test]

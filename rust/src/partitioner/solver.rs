@@ -51,6 +51,11 @@ pub struct Partition {
     /// profile trees (filled by `pipeline::partition_from_trees`; empty
     /// when a partition is constructed without profiling).
     pub span_costs: HashMap<MRef, SpanCostUs>,
+    /// Data-parallel R(m)=1 methods: scatter width under the
+    /// `work(begin, end, shards)` convention (absent = monolithic).
+    /// The rewriter refuses an annotation on a method that is not
+    /// shard-shaped, so a stored width is always honorable.
+    pub span_shards: HashMap<MRef, u16>,
 }
 
 impl Partition {
@@ -228,6 +233,7 @@ pub fn solve_partition(
         expected_us: local_us + obj,
         local_us,
         span_costs: HashMap::new(),
+        span_shards: HashMap::new(),
     };
     let report = SolveReport {
         n_vars: 2 * n,
@@ -521,6 +527,7 @@ end
             expected_us: 0.0,
             local_us: 0.0,
             span_costs: HashMap::new(),
+            span_shards: HashMap::new(),
         };
         assert!(validate_partition(&program, &cfg, &p).is_err());
         let _ = MRef {

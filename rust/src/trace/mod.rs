@@ -118,10 +118,16 @@ pub enum Phase {
     /// Tier-1 translation work at the clone (wall time spent promoting
     /// hot methods to direct-threaded form; charges no virtual time).
     Tier,
+    /// One shard's trip window inside a scatter/gather offload (phone).
+    /// Shard spans overlap in virtual time; the trip charges their max.
+    ScatterShard,
+    /// Gather merge: N disjoint reverse capsules applied against the
+    /// single scatter baseline (phone).
+    Gather,
 }
 
 /// All phases, for aggregation sweeps.
-pub const PHASES: [Phase; 16] = [
+pub const PHASES: [Phase; 18] = [
     Phase::Decide,
     Phase::Suspend,
     Phase::Capture,
@@ -138,6 +144,8 @@ pub const PHASES: [Phase; 16] = [
     Phase::CloneEncode,
     Phase::Heartbeat,
     Phase::Tier,
+    Phase::ScatterShard,
+    Phase::Gather,
 ];
 
 impl Phase {
@@ -159,6 +167,8 @@ impl Phase {
             Phase::CloneEncode => "clone_encode",
             Phase::Heartbeat => "heartbeat",
             Phase::Tier => "tier",
+            Phase::ScatterShard => "scatter_shard",
+            Phase::Gather => "gather",
         }
     }
     pub fn as_u8(self) -> u8 {
@@ -179,6 +189,8 @@ impl Phase {
             Phase::CloneEncode => 13,
             Phase::Heartbeat => 14,
             Phase::Tier => 15,
+            Phase::ScatterShard => 16,
+            Phase::Gather => 17,
         }
     }
     pub fn from_u8(v: u8) -> Option<Phase> {
@@ -259,15 +271,23 @@ pub enum Mark {
     Heartbeat,
     /// Mobile-side GC ran during capture.
     MobileGc,
+    /// Scatter gather found overlapping dirty state; the trip degraded
+    /// to a single-clone offload (never a corrupted merge).
+    ScatterConflict,
+    /// Marginal decision: local interpretation raced the offload; the
+    /// instant records the commit of whichever leg finished first.
+    Speculate,
 }
 
-pub const MARKS: [Mark; 6] = [
+pub const MARKS: [Mark; 8] = [
     Mark::NeedFull,
     Mark::DictReset,
     Mark::HeartbeatDivergent,
     Mark::Degrade,
     Mark::Heartbeat,
     Mark::MobileGc,
+    Mark::ScatterConflict,
+    Mark::Speculate,
 ];
 
 impl Mark {
@@ -279,6 +299,8 @@ impl Mark {
             Mark::Degrade => "degrade",
             Mark::Heartbeat => "heartbeat",
             Mark::MobileGc => "mobile_gc",
+            Mark::ScatterConflict => "scatter_conflict",
+            Mark::Speculate => "speculate",
         }
     }
     pub fn as_u8(self) -> u8 {
@@ -289,6 +311,8 @@ impl Mark {
             Mark::Degrade => 3,
             Mark::Heartbeat => 4,
             Mark::MobileGc => 5,
+            Mark::ScatterConflict => 6,
+            Mark::Speculate => 7,
         }
     }
     pub fn from_u8(v: u8) -> Option<Mark> {

@@ -268,13 +268,13 @@ mod tests {
         let virt_us = (rng.next_u64() % 1_000_000) as f64 / 3.0;
         let wall_us = rng.next_u64() % 1_000_000;
         let kind = match rng.next_u64() % 5 {
-            0 => EventKind::Begin(Phase::from_u8((rng.next_u64() % 16) as u8).unwrap()),
-            1 => EventKind::End(Phase::from_u8((rng.next_u64() % 16) as u8).unwrap()),
+            0 => EventKind::Begin(Phase::from_u8((rng.next_u64() % 18) as u8).unwrap()),
+            1 => EventKind::End(Phase::from_u8((rng.next_u64() % 18) as u8).unwrap()),
             2 => EventKind::Counter(
                 Counter::from_u8((rng.next_u64() % 6) as u8).unwrap(),
                 (rng.next_u64() % 1_000_000) as f64,
             ),
-            3 => EventKind::Instant(Mark::from_u8((rng.next_u64() % 6) as u8).unwrap()),
+            3 => EventKind::Instant(Mark::from_u8((rng.next_u64() % 8) as u8).unwrap()),
             _ => EventKind::Decision(DecisionEvent {
                 offloaded: rng.next_u64() % 2 == 0,
                 mispredicted: rng.next_u64() % 2 == 0,

@@ -24,6 +24,15 @@ impl WireWriter {
         }
     }
 
+    /// Reuse an existing buffer's allocation: the vector is cleared but
+    /// keeps its capacity, so a session-lifetime scratch buffer encodes
+    /// every trip without re-growing from zero. [`WireWriter::into_vec`]
+    /// hands the (refilled) buffer back.
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        WireWriter { buf }
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }
