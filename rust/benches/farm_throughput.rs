@@ -278,7 +278,7 @@ fn canned_capsule(
     let (packet, _) = Migrator::new(CostParams::default())
         .migrate_out(&mut p, tid)
         .expect("capture");
-    packet.encode()
+    packet.encode().expect("encode")
 }
 
 fn fd_count() -> Option<usize> {

@@ -151,10 +151,10 @@ fn codec_throughput() {
     let mut m = Migrator::new(CostParams::default());
     m.opts.zygote_diff = false; // big packet
     let (packet, _) = m.migrate_out(&mut p, tid).unwrap();
-    let encoded = packet.encode();
+    let encoded = packet.encode().unwrap();
     println!("  packet: {} objects, {} bytes", packet.objects.len(), encoded.len());
     let r = bench("wire: encode capture packet", 2, 20, || {
-        black_box(packet.encode().len());
+        black_box(packet.encode().unwrap().len());
     });
     let mbps = encoded.len() as f64 / 1e6 / (r.summary.p50 / 1e3);
     println!("  -> encode {mbps:.0} MB/s");
@@ -198,16 +198,16 @@ fn encode_scratch_reuse() {
     m.opts.zygote_diff = false;
     let (packet, _) = m.migrate_out(&mut p, tid).unwrap();
     let capsule = Capsule::Full(packet);
-    let bytes = capsule.encode().len();
+    let bytes = capsule.encode().unwrap().len();
     println!("  capsule: {bytes} bytes");
 
     let fresh = bench("wire: encode capsule, fresh buffer per trip", 2, 20, || {
-        black_box(capsule.encode().len());
+        black_box(capsule.encode().unwrap().len());
     });
     let mut scratch: Vec<u8> = Vec::new();
     let reused = bench("wire: encode capsule, session scratch reuse", 2, 20, || {
         let mut w = clonecloud::util::bytes::WireWriter::from_vec(std::mem::take(&mut scratch));
-        capsule.encode_into_with(&mut w, DictMode::Off);
+        capsule.encode_into_with(&mut w, DictMode::Off).unwrap();
         let mut store = w.into_vec();
         let raw = store.split_off(0);
         scratch = store;

@@ -870,7 +870,7 @@ where
                 let ctx = make_ctx(tracer, ctx_on, trip32);
                 let (fwd, up_ms) = stamp_and_encode(
                     phone, &net, &mut out, capsule, codec, dict_on, session, tracer, trip32, ctx,
-                );
+                )?;
                 engine.observe_forward(fwd.len() as u64, up_ms, first_was_delta);
 
                 // Roundtrip with a bounded NeedFull ladder. Rung 1: the
@@ -922,18 +922,25 @@ where
                                 stamp_and_encode_inline(
                                     phone, &net, &mut out, full, codec, session, tracer,
                                     trip32, ctx,
-                                )
+                                )?
                             } else {
                                 stamp_and_encode(
                                     phone, &net, &mut out, full, codec, dict_on, session,
                                     tracer, trip32, ctx,
-                                )
+                                )?
                             };
                             engine.observe_forward(f.len() as u64, up_ms, false);
                             fwd_len = f.len() as u64;
                             fwd = f;
                         }
-                        Err(e) if engine.degrades_to_local() && !e.is_need_full() => {
+                        // A NeedFull that survives the whole ladder means
+                        // the peer rejected even the self-describing
+                        // inline resend — it is lying or broken, and the
+                        // span degrades like any other channel error.
+                        Err(e)
+                            if engine.degrades_to_local()
+                                && (!e.is_need_full() || needfull >= 2) =>
+                        {
                             if let Some(fork) = spec_fork.take() {
                                 commit_racing_local(
                                     phone,
@@ -971,18 +978,64 @@ where
                 out.migrations += 1;
                 let t_sent = phone.clock.now_us();
 
-                let rcapsule = {
-                    let raw = open_frame(&rbytes)?;
+                let decoded = open_frame(&rbytes).and_then(|raw| {
                     out.raw_down += raw.len() as u64;
                     // Piggybacked clone events (if any) sit ahead of the
                     // capsule; merge them into this timeline.
                     let (remote_events, craw) = trace::split_events(&raw)?;
                     tracer.absorb_remote(remote_events);
                     if dict_on {
-                        Capsule::decode_with(craw, DictRead::Negotiated(session.dict()))?.0
+                        Ok(Capsule::decode_with(craw, DictRead::Negotiated(session.dict()))?.0)
                     } else {
-                        Capsule::decode(craw)?
+                        Capsule::decode(craw)
                     }
+                });
+                let rcapsule = match decoded {
+                    Ok(c) => c,
+                    // An undecodable reply is a hostile or corrupted
+                    // peer, not a phone-side fault: the wire exchange
+                    // completed but there is nothing to merge. Decoding
+                    // is validate-then-apply (a rejected capsule leaves
+                    // the phone and its dictionary replica untouched or
+                    // cleanly reset), so the span can finish locally
+                    // exactly like a dead link. No ladder applies — the
+                    // reply cannot be re-requested — so a `NeedFull`
+                    // verdict from the decoder degrades too.
+                    Err(e) if engine.degrades_to_local() => {
+                        // The bytes already crossed and were charged
+                        // above; hand the degrade path a zero-byte
+                        // attempt so only the roundtrip counters rewind.
+                        out.migrations -= 1;
+                        if let Some(fork) = spec_fork.take() {
+                            commit_racing_local(
+                                phone,
+                                fork.0,
+                                session,
+                                engine,
+                                &mut out,
+                                Some((sent_delta, 0)),
+                                e,
+                                tracer,
+                                trip32,
+                            );
+                        } else {
+                            degrade_to_local(
+                                phone,
+                                tid,
+                                session,
+                                engine,
+                                &mut out,
+                                &mut local_spans,
+                                point,
+                                trip32,
+                                Some((sent_delta, 0)),
+                                e,
+                                tracer,
+                            )?;
+                        }
+                        continue 'run;
+                    }
+                    Err(e) => return Err(e),
                 };
                 // Adopt the clone's finish time, then pay the downlink
                 // for the *wire* (sealed) bytes.
@@ -995,8 +1048,49 @@ where
                 engine.observe_reverse(rbytes.len() as u64, down_ms);
                 tracer.span(trip32, Phase::Downlink, t_clone_done, phone.clock.now_us());
 
-                let (_stats, phases) =
-                    migrator.merge_back_capsule(phone, tid, &rcapsule, session)?;
+                let merged = migrator.merge_back_capsule(phone, tid, &rcapsule, session);
+                let (_stats, phases) = match merged {
+                    Ok(v) => v,
+                    // A `NeedFull` from the reply merge comes from the
+                    // reverse-delta preconditions (missing or mismatched
+                    // mobile baseline — a replayed capsule, a recycled
+                    // worker), which fire before any process state is
+                    // touched, so the span can still finish locally.
+                    // Every other merge error may be mid-apply and stays
+                    // fatal.
+                    Err(e) if e.is_need_full() && engine.degrades_to_local() => {
+                        out.migrations -= 1;
+                        if let Some(fork) = spec_fork.take() {
+                            commit_racing_local(
+                                phone,
+                                fork.0,
+                                session,
+                                engine,
+                                &mut out,
+                                Some((sent_delta, 0)),
+                                e,
+                                tracer,
+                                trip32,
+                            );
+                        } else {
+                            degrade_to_local(
+                                phone,
+                                tid,
+                                session,
+                                engine,
+                                &mut out,
+                                &mut local_spans,
+                                point,
+                                trip32,
+                                Some((sent_delta, 0)),
+                                e,
+                                tracer,
+                            )?;
+                        }
+                        continue 'run;
+                    }
+                    Err(e) => return Err(e),
+                };
                 out.merge_ms += phases.merge_ms;
                 engine.observe_overhead(overhead_ms + phases.merge_ms);
                 if tracer.is_enabled() {
@@ -1279,10 +1373,16 @@ fn try_scatter<C: CloneChannel>(
         // shared-mode assignments would fork N diverging replicas of the
         // phone's one dictionary. The inline table is self-describing on
         // every lane.
-        let raw = if dict_on {
+        let raw = match if dict_on {
             sub.encode_with(DictMode::Inline)
         } else {
             sub.encode()
+        } {
+            Ok(r) => r,
+            Err(_) => {
+                out.scatter_failures += 1;
+                return None;
+            }
         };
         let ctx = make_ctx(tracer, ctx_on, trip);
         let (payload, ctx_len) = match &ctx {
@@ -1454,7 +1554,7 @@ fn stamp_and_encode(
     tracer: &mut Tracer,
     trip: u32,
     ctx: Option<TraceCtx>,
-) -> (Vec<u8>, f64) {
+) -> Result<(Vec<u8>, f64)> {
     let wall0 = tracer.is_enabled().then(std::time::Instant::now);
     // Session-lifetime encode scratch: the capsule streams into a buffer
     // whose capacity was learned on earlier trips, so a steady-state
@@ -1462,11 +1562,11 @@ fn stamp_and_encode(
     // climbing a realloc ladder from empty every time.
     let mut w = WireWriter::from_vec(session.take_scratch());
     if !dict_on {
-        capsule.encode_into_with(&mut w, DictMode::Off);
+        capsule.encode_into_with(&mut w, DictMode::Off)?;
     } else if session.dict_enabled() {
-        capsule.encode_into_with(&mut w, DictMode::Shared(session.dict()));
+        capsule.encode_into_with(&mut w, DictMode::Shared(session.dict()))?;
     } else {
-        capsule.encode_into_with(&mut w, DictMode::Inline);
+        capsule.encode_into_with(&mut w, DictMode::Inline)?;
     }
     let mut store = w.into_vec();
     let raw = store.split_off(0);
@@ -1479,7 +1579,7 @@ fn stamp_and_encode(
             w0.elapsed().as_micros() as u64,
         );
     }
-    stamp_raw(phone, net, out, raw, codec, tracer, trip, ctx)
+    Ok(stamp_raw(phone, net, out, raw, codec, tracer, trip, ctx))
 }
 
 /// [`stamp_and_encode`] forced onto the inline per-capsule table — the
@@ -1495,10 +1595,10 @@ fn stamp_and_encode_inline(
     tracer: &mut Tracer,
     trip: u32,
     ctx: Option<TraceCtx>,
-) -> (Vec<u8>, f64) {
+) -> Result<(Vec<u8>, f64)> {
     let wall0 = tracer.is_enabled().then(std::time::Instant::now);
     let mut w = WireWriter::from_vec(session.take_scratch());
-    capsule.encode_into_with(&mut w, DictMode::Inline);
+    capsule.encode_into_with(&mut w, DictMode::Inline)?;
     let mut store = w.into_vec();
     let raw = store.split_off(0);
     session.put_scratch(store);
@@ -1510,7 +1610,7 @@ fn stamp_and_encode_inline(
             w0.elapsed().as_micros() as u64,
         );
     }
-    stamp_raw(phone, net, out, raw, codec, tracer, trip, ctx)
+    Ok(stamp_raw(phone, net, out, raw, codec, tracer, trip, ctx))
 }
 
 #[allow(clippy::too_many_arguments)]

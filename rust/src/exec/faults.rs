@@ -1,4 +1,5 @@
-//! Fault-injection channel wrapper for tests and resilience drills.
+//! Fault-injection and hostile-peer channel wrappers for tests and
+//! resilience drills.
 //!
 //! [`FaultInjectChannel`] wraps any [`CloneChannel`] and kills the link
 //! at the Nth frame boundary: frames are counted in wire order — forward
@@ -20,6 +21,7 @@
 use crate::error::{CloneCloudError, Result};
 use crate::migration::MobileSession;
 use crate::nodemanager::{Codec, HeartbeatOutcome, TransferBytes};
+use crate::util::rng::Rng;
 
 use super::distributed::CloneChannel;
 
@@ -149,6 +151,191 @@ impl<C: CloneChannel> CloneChannel for FaultInjectChannel<C> {
             self.cross(&format!("scatter sub-result {i}"))?;
         }
         Ok((replies, total))
+    }
+}
+
+/// The scripted misbehaviors a [`HostilePeerChannel`] applies to reply
+/// frames — the malicious-endpoint half of the wire-robustness matrix
+/// (`tests/hostile_peer.rs`). Each one models a concrete attack or
+/// corruption shape a phone can meet on a real link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostileBehavior {
+    /// Deliver replies untouched (the control row of the matrix).
+    Honest,
+    /// Cut the reply short — a truncated frame.
+    TruncateReply,
+    /// Flip one bit somewhere in the reply.
+    BitFlipReply,
+    /// Answer with the PREVIOUS round's reply, verbatim — a replayed
+    /// capsule (stale clock, stale baseline epoch, stale mappings).
+    ReplayPreviousReply,
+    /// Append garbage after the valid reply (trailing bytes).
+    AppendGarbage,
+    /// Replace the reply with pure random garbage.
+    GarbageReply,
+    /// Rewrite a 32-bit word inside the reply with an all-ones value —
+    /// an oversize length/count claim aimed at the decoder's
+    /// pre-validation allocations.
+    OversizeClaim,
+    /// Claim `NeedFull` on every frame, forever — a peer lying about
+    /// its baseline to force useless full recaptures.
+    AlwaysNeedFull,
+}
+
+/// A [`CloneChannel`] whose peer executes honestly but answers
+/// maliciously: the wrapped channel's replies are tampered with per
+/// [`HostileBehavior`] before the driver sees them. Deterministic for a
+/// seed, so any matrix failure replays exactly.
+///
+/// The driver contract under every behavior: no panic, no half-applied
+/// merge, and — under a degrading policy engine — the span completes
+/// locally with the error surfaced in `DistOutcome::channel_errors`.
+pub struct HostilePeerChannel<C: CloneChannel> {
+    inner: C,
+    behavior: HostileBehavior,
+    rng: Rng,
+    prev_reply: Option<Vec<u8>>,
+    /// Reply frames tampered with so far.
+    tampered: u64,
+}
+
+impl<C: CloneChannel> HostilePeerChannel<C> {
+    pub fn new(inner: C, behavior: HostileBehavior, seed: u64) -> HostilePeerChannel<C> {
+        HostilePeerChannel {
+            inner,
+            behavior,
+            rng: Rng::new(seed),
+            prev_reply: None,
+            tampered: 0,
+        }
+    }
+
+    /// Reply frames tampered with so far.
+    pub fn tampered(&self) -> u64 {
+        self.tampered
+    }
+
+    /// Access the wrapped (honest) channel.
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> C {
+        self.inner
+    }
+
+    fn corrupt(&mut self, reply: Vec<u8>) -> Vec<u8> {
+        match self.behavior {
+            HostileBehavior::Honest | HostileBehavior::AlwaysNeedFull => reply,
+            HostileBehavior::TruncateReply => {
+                self.tampered += 1;
+                let keep = self.rng.index(reply.len().max(1));
+                reply[..keep].to_vec()
+            }
+            HostileBehavior::BitFlipReply => {
+                self.tampered += 1;
+                let mut b = reply;
+                if !b.is_empty() {
+                    let i = self.rng.index(b.len());
+                    b[i] ^= 1 << self.rng.index(8);
+                }
+                b
+            }
+            HostileBehavior::ReplayPreviousReply => {
+                // The first exchange has nothing to replay; pass it
+                // through and start lying on the second.
+                let out = match self.prev_reply.take() {
+                    Some(prev) => {
+                        self.tampered += 1;
+                        prev
+                    }
+                    None => reply.clone(),
+                };
+                self.prev_reply = Some(reply);
+                out
+            }
+            HostileBehavior::AppendGarbage => {
+                self.tampered += 1;
+                let mut b = reply;
+                let n = 1 + self.rng.index(32);
+                for _ in 0..n {
+                    b.push(self.rng.byte());
+                }
+                b
+            }
+            HostileBehavior::GarbageReply => {
+                self.tampered += 1;
+                let mut b = vec![0u8; reply.len().max(8)];
+                self.rng.fill_bytes(&mut b);
+                b
+            }
+            HostileBehavior::OversizeClaim => {
+                self.tampered += 1;
+                let mut b = reply;
+                if b.len() >= 4 {
+                    let i = self.rng.index(b.len() - 3);
+                    b[i..i + 4].copy_from_slice(&u32::MAX.to_be_bytes());
+                }
+                b
+            }
+        }
+    }
+}
+
+impl<C: CloneChannel> CloneChannel for HostilePeerChannel<C> {
+    fn roundtrip(&mut self, forward: Vec<u8>) -> Result<(Vec<u8>, TransferBytes)> {
+        if self.behavior == HostileBehavior::AlwaysNeedFull {
+            self.tampered += 1;
+            return Err(CloneCloudError::need_full(
+                "hostile peer claims a baseline mismatch on every frame",
+            ));
+        }
+        let (reply, t) = self.inner.roundtrip(forward)?;
+        Ok((self.corrupt(reply), t))
+    }
+
+    fn delta_capable(&self) -> bool {
+        self.inner.delta_capable()
+    }
+
+    fn disarm_delta(&mut self) {
+        self.inner.disarm_delta()
+    }
+
+    fn codec(&self) -> Codec {
+        self.inner.codec()
+    }
+
+    fn dict_capable(&self) -> bool {
+        self.inner.dict_capable()
+    }
+
+    fn heartbeat(&mut self, session: &mut MobileSession) -> Result<HeartbeatOutcome> {
+        self.inner.heartbeat(session)
+    }
+
+    fn record_policy(&mut self, offloads: u64, local: u64, mispredictions: u64) {
+        self.inner.record_policy(offloads, local, mispredictions)
+    }
+
+    fn trace_capable(&self) -> bool {
+        self.inner.trace_capable()
+    }
+
+    fn scatter_capable(&self) -> bool {
+        self.inner.scatter_capable()
+    }
+
+    fn scatter(&mut self, frames: Vec<Vec<u8>>) -> Result<(Vec<Vec<u8>>, TransferBytes)> {
+        if self.behavior == HostileBehavior::AlwaysNeedFull {
+            self.tampered += 1;
+            return Err(CloneCloudError::need_full(
+                "hostile peer claims a baseline mismatch on every frame",
+            ));
+        }
+        let (replies, t) = self.inner.scatter(frames)?;
+        let replies = replies.into_iter().map(|r| self.corrupt(r)).collect();
+        Ok((replies, t))
     }
 }
 

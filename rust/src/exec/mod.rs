@@ -22,14 +22,18 @@
 //!   finishes first on the virtual clock.
 //! * [`faults`] — [`FaultInjectChannel`], a channel wrapper that kills
 //!   the link at the Nth frame boundary (the fault-matrix tests drive
-//!   degrade-to-local and `NeedFull` recovery through it).
+//!   degrade-to-local and `NeedFull` recovery through it), and
+//!   [`HostilePeerChannel`], a wrapper whose peer answers maliciously —
+//!   truncated, bit-flipped, replayed, oversize-claiming, or garbage
+//!   replies (the hostile-peer matrix drives clean degradation through
+//!   it).
 
 pub mod distributed;
 pub mod faults;
 pub mod monolithic;
 pub mod policy;
 
-pub use faults::FaultInjectChannel;
+pub use faults::{FaultInjectChannel, HostileBehavior, HostilePeerChannel};
 
 pub use distributed::{
     delta_statics_workload_src, delta_workload_expected, delta_workload_src, run_distributed,

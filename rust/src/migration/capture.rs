@@ -540,7 +540,7 @@ pub fn capture_thread(
         statics: raw.statics,
     };
     let mut stats = raw.stats;
-    stats.bytes = packet.encode().len();
+    stats.bytes = packet.encode()?.len();
     Ok((packet, stats))
 }
 

@@ -83,20 +83,22 @@ pub struct DeltaPacket {
 }
 
 impl DeltaPacket {
-    pub fn encode(&self) -> Vec<u8> {
+    /// Serialize to bytes. Fails only when a collection count cannot be
+    /// represented on the wire (see [`WireWriter::put_count`]).
+    pub fn encode(&self) -> Result<Vec<u8>> {
         self.encode_with(DictMode::Off)
     }
 
     /// Encode under an explicit session-dictionary mode.
-    pub fn encode_with(&self, dict: DictMode<'_>) -> Vec<u8> {
+    pub fn encode_with(&self, dict: DictMode<'_>) -> Result<Vec<u8>> {
         let mut w = WireWriter::with_capacity(1024);
-        self.encode_into_with(&mut w, dict);
-        w.into_vec()
+        self.encode_into_with(&mut w, dict)?;
+        Ok(w.into_vec())
     }
 
     /// Encode into an existing writer (scratch-buffer reuse; see
     /// [`CapturePacket::encode_into_with`]).
-    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) {
+    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) -> Result<()> {
         w.put_u32(DELTA_MAGIC);
         w.put_u16(DELTA_VERSION);
         encode_direction(w, self.direction);
@@ -104,16 +106,16 @@ impl DeltaPacket {
         w.put_f64(self.clock_us);
         w.put_u64(self.base_epoch);
         w.put_u64(self.base_digest);
-        w.put_u32(self.assignments.len() as u32);
+        w.put_count(self.assignments.len())?;
         for (cid, mid) in &self.assignments {
             w.put_u64(*cid);
             w.put_u64(*mid);
         }
-        w.put_u32(self.deleted.len() as u32);
+        w.put_count(self.deleted.len())?;
         for mid in &self.deleted {
             w.put_u64(*mid);
         }
-        self.sections.encode_into_with(w, dict);
+        self.sections.encode_into_with(w, dict)
     }
 
     pub fn decode(buf: &[u8]) -> Result<DeltaPacket> {
@@ -192,12 +194,14 @@ pub enum Capsule {
 }
 
 impl Capsule {
-    pub fn encode(&self) -> Vec<u8> {
+    /// Serialize to bytes. Fails only when a collection count cannot be
+    /// represented on the wire (see [`WireWriter::put_count`]).
+    pub fn encode(&self) -> Result<Vec<u8>> {
         self.encode_with(DictMode::Off)
     }
 
     /// Encode under an explicit session-dictionary mode.
-    pub fn encode_with(&self, dict: DictMode<'_>) -> Vec<u8> {
+    pub fn encode_with(&self, dict: DictMode<'_>) -> Result<Vec<u8>> {
         match self {
             Capsule::Full(p) => p.encode_with(dict),
             Capsule::Delta(d) => d.encode_with(dict),
@@ -206,7 +210,7 @@ impl Capsule {
 
     /// Encode into an existing writer (scratch-buffer reuse; see
     /// [`CapturePacket::encode_into_with`]).
-    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) {
+    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) -> Result<()> {
         match self {
             Capsule::Full(p) => p.encode_into_with(w, dict),
             Capsule::Delta(d) => d.encode_into_with(w, dict),
@@ -543,7 +547,14 @@ impl MobileSession {
         self.dict_enabled
     }
 
+    /// (Re)arm or disarm the shared dictionary. Any toggle resets the
+    /// replica: a peer that drops `CAP_SESSION_DICT` across Hellos and
+    /// later re-advertises it must re-seed from the empty prefix, never
+    /// decode against state the other end no longer holds.
     pub fn set_dict_enabled(&mut self, on: bool) {
+        if self.dict_enabled != on {
+            self.dict.reset();
+        }
         self.dict_enabled = on;
     }
 
@@ -729,7 +740,14 @@ impl CloneSession {
         self.dict_enabled
     }
 
+    /// (Re)arm or disarm the shared dictionary. A toggle resets the
+    /// replica (see [`MobileSession::set_dict_enabled`]): a
+    /// capability-flapping peer re-seeds, it never decodes against a
+    /// stale prefix.
     pub fn set_dict_enabled(&mut self, on: bool) {
+        if self.dict_enabled != on {
+            self.dict.reset();
+        }
         self.dict_enabled = on;
     }
 
@@ -798,10 +816,12 @@ impl CloneSession {
                 ));
             }
         };
-        for &(cid, mid) in assignments {
-            if b.table.mid_for_cid(cid).is_none() && b.table.cid_for_mid(mid).is_none() {
-                b.table.insert(Some(mid), Some(cid));
-            }
+        if let Err(e) = apply_assignments(&mut b.table, assignments) {
+            // A replayed assignment poisons the table: evict the
+            // baseline and re-seed rather than answer from it.
+            self.base = None;
+            self.dict.reset();
+            return Err(e);
         }
         let have = state_digest(p, &table_members(&b.table));
         if have != digest {
@@ -856,6 +876,31 @@ pub fn collect_slot_garbage(p: &mut Process, sess: &CloneSession) -> SlotGcStats
     roots.extend(p.heap.zygote_ids());
     stats.objects_reclaimed = p.heap.gc(&roots);
     stats
+}
+
+/// Apply piggybacked `(cid, mid)` assignment pairs to a session mapping
+/// table. An exact pair already present is skipped (a later capsule may
+/// legitimately re-carry assignments the peer has not acknowledged); a
+/// pair that is fresh on both axes is recorded. Anything else — the same
+/// CID or MID mapped a second time to a *different* partner — is a
+/// replayed or forged assignment: applying it would silently rebind an
+/// id and corrupt every future `Base` resolution, so it degrades with
+/// the typed `NeedFull` instead (callers evict the baseline and reset
+/// the dictionary so the session re-seeds).
+fn apply_assignments(table: &mut MappingTable, assignments: &[(u64, u64)]) -> Result<()> {
+    for &(cid, mid) in assignments {
+        let known_cid = table.contains_cid(cid);
+        let known_mid = table.contains_mid(mid);
+        if !known_cid && !known_mid {
+            table.insert(Some(mid), Some(cid));
+        } else if !(table.mid_for_cid(cid) == Some(mid) && table.cid_for_mid(mid) == Some(cid)) {
+            return Err(CloneCloudError::need_full(format!(
+                "assignment ({cid} -> {mid}) rebinds an already-mapped id \
+                 (duplicate or replayed assignment)"
+            )));
+        }
+    }
+    Ok(())
 }
 
 fn table_members(table: &MappingTable) -> Vec<(u64, ObjId)> {
@@ -966,7 +1011,7 @@ pub(crate) fn capture_forward(
         p.advance_epoch();
 
         let mut stats = raw.stats;
-        stats.bytes = packet.encode().len();
+        stats.bytes = packet.encode()?.len();
         Ok((Capsule::Delta(packet), stats))
     } else {
         let (capsule, stats) = full_forward(p, tid, opts, sess)?;
@@ -1046,12 +1091,17 @@ fn merge_reverse_delta(
     if d.direction != Direction::Reverse {
         return Err(CloneCloudError::migration("expected a reverse capsule"));
     }
+    // Both precondition failures below are typed `NeedFull` and fire
+    // BEFORE any process state is touched: a reverse delta that does not
+    // match our baseline (a replayed capsule, a stale worker, a peer
+    // from another session) is survivable — the caller may degrade the
+    // span and the next forward capture re-seeds in full.
     let mut b = sess.baseline.take().ok_or_else(|| {
-        CloneCloudError::migration("reverse delta without a mobile baseline")
+        CloneCloudError::need_full("reverse delta without a mobile baseline")
     })?;
     if d.base_digest != b.digest {
         // Leave the baseline cleared: the next forward capture is full.
-        return Err(CloneCloudError::migration(
+        return Err(CloneCloudError::need_full(
             "reverse delta baseline digest mismatch — endpoints diverged",
         ));
     }
@@ -1522,11 +1572,12 @@ fn receive_forward_delta(
     };
 
     // Complete the table with the MIDs the mobile merge assigned to the
-    // objects this slot created last visit.
-    for &(cid, mid) in &d.assignments {
-        if b.table.mid_for_cid(cid).is_none() && b.table.cid_for_mid(mid).is_none() {
-            b.table.insert(Some(mid), Some(cid));
-        }
+    // objects this slot created last visit. A conflicting pair degrades
+    // to `NeedFull` — the baseline was already taken, so it stays
+    // evicted and the retry takes the full path.
+    if let Err(e) = apply_assignments(&mut b.table, &d.assignments) {
+        sess.dict.reset();
+        return Err(e);
     }
 
     // Verify coherence. The slot heap has not run since the last reverse
@@ -1687,7 +1738,7 @@ pub(crate) fn return_from_clone_capsule(
             },
         };
         let mut stats = raw.stats;
-        stats.bytes = packet.encode().len();
+        stats.bytes = packet.encode()?.len();
         Ok((Capsule::Delta(packet), stats, dropped))
     } else {
         let (packet, stats) =
@@ -1724,6 +1775,81 @@ mod tests {
         let mut p = Program::new();
         install_system_classes(&mut p);
         p.into_shared()
+    }
+
+    /// Regression: a replayed or forged heartbeat assignment used to be
+    /// applied last-write-wins, silently rebinding an already-mapped id
+    /// and poisoning every later `Base` resolution. The contract now:
+    /// an exact duplicate is idempotent, any rebinding of a known CID or
+    /// MID is a conflict — `NeedFull`, baseline evicted, dictionary
+    /// reset — so the session re-seeds instead of answering from a
+    /// corrupted table.
+    #[test]
+    fn heartbeat_assignment_replay_is_a_conflict_not_last_write_wins() {
+        let prog = program();
+        let mut c = proc_with(prog);
+        let class = ClassId(0);
+        let l1 = c.heap.alloc(Object::new_fields(class, 0));
+        let l2 = c.heap.alloc(Object::new_fields(class, 0));
+
+        // A session whose baseline knows one pair (mobile 501 <-> local
+        // l1) and whose dictionary replica holds a warm entry.
+        let seed_session = |c: &Process| -> CloneSession {
+            let mut table = MappingTable::new();
+            table.insert(Some(501), Some(l1.0));
+            let mut sess = CloneSession::new(true);
+            sess.base = Some(CloneBaseline {
+                table,
+                fwd_epoch: c.heap.epoch(),
+                fwd_digest: 0,
+            });
+            sess.set_dict_enabled(true);
+            let warm = CapturePacket {
+                direction: Direction::Forward,
+                thread_id: 0,
+                clock_us: 0.0,
+                frames: vec![],
+                objects: vec![],
+                zygote_refs: vec![("Warm".into(), 1)],
+                statics: vec![],
+            };
+            warm.encode_with(DictMode::Shared(&mut sess.dict)).unwrap();
+            assert!(!sess.dict.is_empty(), "replica warmed");
+            sess
+        };
+
+        // An exact duplicate pair is idempotent: both copies of
+        // (l2 -> 502) land as ONE entry and the heartbeat verifies.
+        let mut sess = seed_session(&c);
+        let mut expected = MappingTable::new();
+        expected.insert(Some(501), Some(l1.0));
+        expected.insert(Some(502), Some(l2.0));
+        let digest = state_digest(&c, &table_members(&expected));
+        sess.check_heartbeat(&c, digest, &[(l2.0, 502), (l2.0, 502)])
+            .expect("exact duplicate assignment is idempotent");
+        assert!(sess.has_baseline());
+        assert!(!sess.dict.is_empty(), "replica untouched on success");
+
+        // Replaying the CID with a DIFFERENT mid is a conflict: typed
+        // NeedFull, baseline evicted, dictionary reset. Under the old
+        // last-write-wins apply this silently rebound l2.
+        let mut sess = seed_session(&c);
+        let err = sess
+            .check_heartbeat(&c, digest, &[(l2.0, 502), (l2.0, 503)])
+            .unwrap_err();
+        assert!(err.is_need_full(), "typed degradation: {err}");
+        assert!(!sess.has_baseline(), "poisoned baseline evicted");
+        assert!(sess.dict.is_empty(), "replica reset with the NeedFull");
+
+        // Claiming an already-bound MID for a fresh CID is the same
+        // conflict (the forged-assignment shape).
+        let mut sess = seed_session(&c);
+        let err = sess
+            .check_heartbeat(&c, digest, &[(l2.0, 501)])
+            .unwrap_err();
+        assert!(err.is_need_full(), "typed degradation: {err}");
+        assert!(!sess.has_baseline());
+        assert!(sess.dict.is_empty());
     }
 
     #[test]
@@ -1879,7 +2005,7 @@ mod tests {
             },
             gen_delta,
             |d| {
-                let bytes = d.encode();
+                let bytes = d.encode().map_err(|e| format!("encode: {e}"))?;
                 let decoded =
                     DeltaPacket::decode(&bytes).map_err(|e| format!("decode: {e}"))?;
                 ensure_eq(decoded, d.clone(), "decode(encode(d))")?;
@@ -1901,7 +2027,7 @@ mod tests {
                 cases: 120,
             },
             |rng| {
-                let bytes = gen_delta(rng).encode();
+                let bytes = gen_delta(rng).encode().unwrap();
                 let cut = rng.index(bytes.len());
                 (bytes, cut)
             },
@@ -1924,7 +2050,7 @@ mod tests {
         let mut rng = Rng::new(7);
         let mut d = gen_delta(&mut rng);
         d.clock_us = 1.5;
-        let mut bytes = d.encode();
+        let mut bytes = d.encode().unwrap();
         bytes[CAPSULE_CLOCK_OFFSET..CAPSULE_CLOCK_OFFSET + 8]
             .copy_from_slice(&42.25f64.to_bits().to_be_bytes());
         let back = DeltaPacket::decode(&bytes).unwrap();
@@ -1944,7 +2070,7 @@ mod tests {
             zygote_refs: Vec::new(),
             statics: Vec::new(),
         };
-        let mut bytes = full.encode();
+        let mut bytes = full.encode().unwrap();
         bytes[CAPSULE_CLOCK_OFFSET..CAPSULE_CLOCK_OFFSET + 8]
             .copy_from_slice(&8.125f64.to_bits().to_be_bytes());
         assert_eq!(CapturePacket::decode(&bytes).unwrap().clock_us, 8.125);

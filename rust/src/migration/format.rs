@@ -289,20 +289,20 @@ fn emit_sections(
     zygote_refs: &[(String, u32)],
     statics: &[WireStatic],
     names: &NameIndexes,
-) {
-    w.put_u32(frames.len() as u32);
+) -> Result<()> {
+    w.put_count(frames.len())?;
     for (f, &(cn, mn)) in frames.iter().zip(&names.frames) {
         w.put_u32(cn);
         w.put_u32(mn);
         w.put_u32(f.pc);
         w.put_u8(f.ret_reg_plus1);
-        w.put_u32(f.regs.len() as u32);
+        w.put_count(f.regs.len())?;
         for v in &f.regs {
             encode_value(w, v);
         }
     }
 
-    w.put_u32(objects.len() as u32);
+    w.put_count(objects.len())?;
     for (o, &cn) in objects.iter().zip(&names.objects) {
         w.put_u64(o.origin_id);
         w.put_u64(o.mapped_id);
@@ -314,21 +314,22 @@ fn emit_sections(
             }
             None => w.put_u8(0),
         }
-        encode_body(w, &o.body);
+        encode_body(w, &o.body)?;
     }
 
-    w.put_u32(zygote_refs.len() as u32);
+    w.put_count(zygote_refs.len())?;
     for ((_, seq), &cn) in zygote_refs.iter().zip(&names.zygotes) {
         w.put_u32(cn);
         w.put_u32(*seq);
     }
 
-    w.put_u32(statics.len() as u32);
+    w.put_count(statics.len())?;
     for (s, &cn) in statics.iter().zip(&names.statics) {
         w.put_u32(cn);
         w.put_u16(s.idx);
         encode_value(w, &s.value);
     }
+    Ok(())
 }
 
 /// Encode the string table followed by every section (shared tail of
@@ -339,16 +340,16 @@ pub(crate) fn encode_sections(
     objects: &[WireObject],
     zygote_refs: &[(String, u32)],
     statics: &[WireStatic],
-) {
+) -> Result<()> {
     let mut strings = Strings::default();
     let names = intern_names(frames, objects, zygote_refs, statics, |s| {
         strings.intern(s)
     });
-    w.put_u32(strings.table.len() as u32);
+    w.put_count(strings.table.len())?;
     for s in &strings.table {
         w.put_str(s);
     }
-    emit_sections(w, frames, objects, zygote_refs, statics, &names);
+    emit_sections(w, frames, objects, zygote_refs, statics, &names)
 }
 
 /// Dict-aware section encoder. `Off` emits the pre-dict layout
@@ -362,12 +363,12 @@ pub(crate) fn encode_sections_with(
     zygote_refs: &[(String, u32)],
     statics: &[WireStatic],
     dict: DictMode<'_>,
-) {
+) -> Result<()> {
     match dict {
         DictMode::Off => encode_sections(w, frames, objects, zygote_refs, statics),
         DictMode::Inline => {
             w.put_u8(0);
-            encode_sections(w, frames, objects, zygote_refs, statics);
+            encode_sections(w, frames, objects, zygote_refs, statics)
         }
         DictMode::Shared(d) => {
             w.put_u8(1);
@@ -394,7 +395,7 @@ pub(crate) fn encode_sections_with(
                 additions.push(s.to_string());
                 i
             });
-            w.put_u32(additions.len() as u32);
+            w.put_count(additions.len())?;
             for s in &additions {
                 w.put_str(s);
             }
@@ -403,20 +404,20 @@ pub(crate) fn encode_sections_with(
             for s in additions {
                 d.push(s);
             }
-            emit_sections(w, frames, objects, zygote_refs, statics, &names);
+            emit_sections(w, frames, objects, zygote_refs, statics, &names)
         }
     }
 }
 
 impl WireSections {
     /// Encode this section set (see [`encode_sections`]).
-    pub(crate) fn encode_into(&self, w: &mut WireWriter) {
-        encode_sections(w, &self.frames, &self.objects, &self.zygote_refs, &self.statics);
+    pub(crate) fn encode_into(&self, w: &mut WireWriter) -> Result<()> {
+        encode_sections(w, &self.frames, &self.objects, &self.zygote_refs, &self.statics)
     }
 
     /// Encode with an explicit dictionary mode (see
     /// [`encode_sections_with`]).
-    pub(crate) fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) {
+    pub(crate) fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) -> Result<()> {
         encode_sections_with(
             w,
             &self.frames,
@@ -424,7 +425,7 @@ impl WireSections {
             &self.zygote_refs,
             &self.statics,
             dict,
-        );
+        )
     }
 
     /// Decode the string table + sections (shared tail; see
@@ -476,13 +477,45 @@ impl WireSections {
                 }
                 let nadd = r.get_u32()? as usize;
                 let nadd = r.checked_count(nadd, 4)?;
+                // Additions are held back until the whole section tail
+                // parses. Absorbing them eagerly would let a capsule
+                // that dies halfway through its body leave the replica
+                // holding entries the digest handshake never covered —
+                // a hostile or corrupted capsule could silently fork
+                // the replicas and poison every later digest check.
+                let mut pending: Vec<String> = Vec::with_capacity(nadd);
                 for _ in 0..nadd {
-                    let s = r.get_str()?;
-                    d.push(s);
+                    pending.push(r.get_str()?);
                 }
-                let d = &*d;
-                let lookup = |i: u32| -> Result<String> { d.lookup(i) };
-                Ok((Self::decode_body_sections(r, &lookup)?, true))
+                let base = d.len() as u32;
+                let sections = {
+                    let d = &*d;
+                    let pending = &pending;
+                    let lookup = |i: u32| -> Result<String> {
+                        if i < base {
+                            d.lookup(i)
+                        } else {
+                            pending.get((i - base) as usize).cloned().ok_or_else(|| {
+                                CloneCloudError::Wire(format!(
+                                    "dictionary index {i} out of range"
+                                ))
+                            })
+                        }
+                    };
+                    Self::decode_body_sections(r, &lookup)?
+                };
+                // Absorb only when the capsule consumed its buffer
+                // exactly: the sections are the final wire field of
+                // both capsule flavors, so leftover bytes mean the
+                // outer decoder is about to reject the capsule as
+                // trailing garbage — its (possibly forged) additions
+                // must not survive that rejection.
+                if r.is_done() {
+                    for s in pending {
+                        d.push(s);
+                    }
+                }
+                Ok((sections, true))
             }
             m => Err(CloneCloudError::Wire(format!("bad dictionary mode {m}"))),
         }
@@ -602,22 +635,24 @@ pub struct CapturePacket {
 
 impl CapturePacket {
     /// Serialize to network-byte-order bytes. Class/method names are
-    /// interned into a string table written up front.
-    pub fn encode(&self) -> Vec<u8> {
+    /// interned into a string table written up front. Fails only when a
+    /// collection count cannot be represented on the wire (see
+    /// [`WireWriter::put_count`]).
+    pub fn encode(&self) -> Result<Vec<u8>> {
         self.encode_with(DictMode::Off)
     }
 
     /// Serialize under an explicit session-dictionary mode.
-    pub fn encode_with(&self, dict: DictMode<'_>) -> Vec<u8> {
+    pub fn encode_with(&self, dict: DictMode<'_>) -> Result<Vec<u8>> {
         let mut w = WireWriter::with_capacity(4096);
-        self.encode_into_with(&mut w, dict);
-        w.into_vec()
+        self.encode_into_with(&mut w, dict)?;
+        Ok(w.into_vec())
     }
 
     /// Serialize into an existing writer, so a session-lifetime scratch
     /// buffer can be reused across trips instead of growing a fresh
     /// vector from zero each time.
-    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) {
+    pub fn encode_into_with(&self, w: &mut WireWriter, dict: DictMode<'_>) -> Result<()> {
         w.put_u32(MAGIC);
         w.put_u16(VERSION);
         encode_direction(w, self.direction);
@@ -630,7 +665,7 @@ impl CapturePacket {
             &self.zygote_refs,
             &self.statics,
             dict,
-        );
+        )
     }
 
     /// Decode from bytes (pre-dict layout).
@@ -713,11 +748,11 @@ pub(crate) fn decode_value(r: &mut WireReader) -> Result<WireValue> {
     })
 }
 
-fn encode_body(w: &mut WireWriter, b: &WireBody) {
+fn encode_body(w: &mut WireWriter, b: &WireBody) -> Result<()> {
     match b {
         WireBody::Fields(vs) => {
             w.put_u8(0);
-            w.put_u32(vs.len() as u32);
+            w.put_count(vs.len())?;
             for v in vs {
                 encode_value(w, v);
             }
@@ -728,19 +763,20 @@ fn encode_body(w: &mut WireWriter, b: &WireBody) {
         }
         WireBody::FloatArray(fs) => {
             w.put_u8(2);
-            w.put_u32(fs.len() as u32);
+            w.put_count(fs.len())?;
             for f in fs {
                 w.put_f32(*f);
             }
         }
         WireBody::RefArray(vs) => {
             w.put_u8(3);
-            w.put_u32(vs.len() as u32);
+            w.put_count(vs.len())?;
             for v in vs {
                 encode_value(w, v);
             }
         }
     }
+    Ok(())
 }
 
 fn decode_body(r: &mut WireReader) -> Result<WireBody> {
@@ -828,7 +864,7 @@ mod tests {
     #[test]
     fn roundtrip() {
         let p = sample();
-        let bytes = p.encode();
+        let bytes = p.encode().unwrap();
         let q = CapturePacket::decode(&bytes).unwrap();
         assert_eq!(p, q);
     }
@@ -836,16 +872,16 @@ mod tests {
     #[test]
     fn rejects_bad_magic_and_truncation() {
         let p = sample();
-        let mut bytes = p.encode();
+        let mut bytes = p.encode().unwrap();
         bytes[0] ^= 0xFF;
         assert!(CapturePacket::decode(&bytes).is_err());
-        let bytes2 = p.encode();
+        let bytes2 = p.encode().unwrap();
         assert!(CapturePacket::decode(&bytes2[..bytes2.len() - 3]).is_err());
     }
 
     #[test]
     fn rejects_trailing_garbage() {
-        let mut bytes = sample().encode();
+        let mut bytes = sample().encode().unwrap();
         bytes.push(0);
         assert!(CapturePacket::decode(&bytes).is_err());
     }
@@ -853,7 +889,7 @@ mod tests {
     #[test]
     fn wire_is_network_byte_order() {
         // MAGIC is the first u32, big-endian.
-        let bytes = sample().encode();
+        let bytes = sample().encode().unwrap();
         assert_eq!(&bytes[..4], &[0x43, 0x43, 0x48, 0x50]);
     }
 
@@ -861,7 +897,7 @@ mod tests {
     fn float_arrays_roundtrip_precisely() {
         let mut p = sample();
         p.objects[1].body = WireBody::FloatArray(vec![1.5, -0.25, 3.0e-8]);
-        let q = CapturePacket::decode(&p.encode()).unwrap();
+        let q = CapturePacket::decode(&p.encode().unwrap()).unwrap();
         assert_eq!(p.objects[1].body, q.objects[1].body);
     }
 
@@ -959,7 +995,8 @@ mod tests {
             },
             gen_packet,
             |p| {
-                let decoded = CapturePacket::decode(&p.encode())
+                let bytes = p.encode().map_err(|e| format!("encode failed: {e}"))?;
+                let decoded = CapturePacket::decode(&bytes)
                     .map_err(|e| format!("decode failed: {e}"))?;
                 ensure_eq(decoded, p.clone(), "decode(encode(p))")
             },
@@ -978,7 +1015,7 @@ mod tests {
                 cases: 150,
             },
             |rng| {
-                let bytes = gen_packet(rng).encode();
+                let bytes = gen_packet(rng).encode().unwrap();
                 let cut = rng.index(bytes.len());
                 (bytes, cut)
             },
@@ -1041,7 +1078,9 @@ mod tests {
                 let mut tx = SessionDict::new();
                 let mut rx = SessionDict::new();
                 for p in packets {
-                    let bytes = p.encode_with(DictMode::Shared(&mut tx));
+                    let bytes = p
+                        .encode_with(DictMode::Shared(&mut tx))
+                        .map_err(|e| format!("encode: {e}"))?;
                     let (q, used) = CapturePacket::decode_with(
                         &bytes,
                         DictRead::Negotiated(&mut rx),
@@ -1067,7 +1106,7 @@ mod tests {
             },
             |rng| {
                 let mut tx = SessionDict::new();
-                let bytes = gen_packet(rng).encode_with(DictMode::Shared(&mut tx));
+                let bytes = gen_packet(rng).encode_with(DictMode::Shared(&mut tx)).unwrap();
                 let cut = rng.index(bytes.len());
                 (bytes, cut)
             },
@@ -1127,11 +1166,11 @@ mod tests {
         let p = sample();
         let mut tx = SessionDict::new();
         // Warm the sender with a capsule the receiver never saw.
-        let _lost = p.encode_with(DictMode::Shared(&mut tx));
+        let _lost = p.encode_with(DictMode::Shared(&mut tx)).unwrap();
         assert!(!tx.is_empty());
 
         let mut rx = SessionDict::new();
-        let bytes = p.encode_with(DictMode::Shared(&mut tx));
+        let bytes = p.encode_with(DictMode::Shared(&mut tx)).unwrap();
         let err = CapturePacket::decode_with(&bytes, DictRead::Negotiated(&mut rx))
             .unwrap_err();
         assert!(err.is_need_full(), "typed NeedFull signal: {err}");
@@ -1140,7 +1179,7 @@ mod tests {
 
         // Both ends reset: the resend re-seeds and decodes cleanly.
         tx.reset();
-        let bytes = p.encode_with(DictMode::Shared(&mut tx));
+        let bytes = p.encode_with(DictMode::Shared(&mut tx)).unwrap();
         let (q, used) =
             CapturePacket::decode_with(&bytes, DictRead::Negotiated(&mut rx)).unwrap();
         assert!(used);
@@ -1153,7 +1192,7 @@ mod tests {
     #[test]
     fn dict_inline_mode_is_self_describing() {
         let p = sample();
-        let bytes = p.encode_with(DictMode::Inline);
+        let bytes = p.encode_with(DictMode::Inline).unwrap();
         let mut rx = SessionDict::new();
         let (q, used) =
             CapturePacket::decode_with(&bytes, DictRead::Negotiated(&mut rx)).unwrap();
@@ -1162,8 +1201,8 @@ mod tests {
         assert!(rx.is_empty());
         // And the unnegotiated layout is byte-identical to the legacy
         // encoder (one mode byte shorter than Inline).
-        assert_eq!(p.encode(), p.encode_with(DictMode::Off));
-        assert_eq!(bytes.len(), p.encode().len() + 1);
+        assert_eq!(p.encode().unwrap(), p.encode_with(DictMode::Off).unwrap());
+        assert_eq!(bytes.len(), p.encode().unwrap().len() + 1);
     }
 
     /// Dictionary hits meter what a per-capsule table would have
@@ -1173,16 +1212,16 @@ mod tests {
     fn dict_repeat_capsules_beat_the_per_capsule_table() {
         let p = sample();
         let mut tx = SessionDict::new();
-        let first = p.encode_with(DictMode::Shared(&mut tx));
+        let first = p.encode_with(DictMode::Shared(&mut tx)).unwrap();
         let hits_before = tx.hits;
-        let second = p.encode_with(DictMode::Shared(&mut tx));
+        let second = p.encode_with(DictMode::Shared(&mut tx)).unwrap();
         assert!(tx.hits > hits_before, "repeat names hit the dictionary");
         assert!(tx.hit_bytes > 0);
         assert!(
-            second.len() < p.encode_with(DictMode::Inline).len(),
+            second.len() < p.encode_with(DictMode::Inline).unwrap().len(),
             "repeat capsule beats the inline table ({} vs {})",
             second.len(),
-            p.encode_with(DictMode::Inline).len()
+            p.encode_with(DictMode::Inline).unwrap().len()
         );
         assert!(second.len() < first.len(), "additions shipped only once");
     }

@@ -74,6 +74,10 @@ impl MappingTable {
         self.by_cid.contains_key(&cid)
     }
 
+    pub fn contains_mid(&self, mid: u64) -> bool {
+        self.by_mid.contains_key(&mid)
+    }
+
     pub fn entries(&self) -> &[MapEntry] {
         &self.entries
     }

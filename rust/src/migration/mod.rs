@@ -150,7 +150,7 @@ end
         validate_packet(&packet).unwrap();
 
         // Wire round trip (encode/decode) like the real transport does.
-        let packet = CapturePacket::decode(&packet.encode()).unwrap();
+        let packet = CapturePacket::decode(&packet.encode().unwrap()).unwrap();
         let (ctid, table, _) = migrator.receive_at_clone(&mut clone, &packet).unwrap();
         assert_eq!(table.len(), packet.objects.len());
 
@@ -163,7 +163,7 @@ end
 
         let (rpacket, _, _dropped) =
             migrator.return_from_clone(&mut clone, ctid, table).unwrap();
-        let rpacket = CapturePacket::decode(&rpacket.encode()).unwrap();
+        let rpacket = CapturePacket::decode(&rpacket.encode().unwrap()).unwrap();
         migrator.merge_back(&mut phone, tid, &rpacket).unwrap();
 
         // Phone finishes the thread.
@@ -352,7 +352,7 @@ end
                     let (capsule, _) = migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
                     // Wire roundtrip, with the NeedFull fallback the real
                     // drivers implement.
-                    let mut bytes = capsule.encode();
+                    let mut bytes = capsule.encode().unwrap();
                     let mut sent = Capsule::decode(&bytes).unwrap();
                     let ctid = loop {
                         match migrator.receive_capsule_at_clone(&mut clone, &sent, &mut csess) {
@@ -361,7 +361,7 @@ end
                                 fallbacks += 1;
                                 let (full, _) =
                                     migrator.recapture_full(&mut phone, tid, &mut msess).unwrap();
-                                bytes = full.encode();
+                                bytes = full.encode().unwrap();
                                 sent = Capsule::decode(&bytes).unwrap();
                             }
                             Err(e) => panic!("receive: {e}"),
@@ -374,7 +374,7 @@ end
                     let (rcap, _, _) = migrator
                         .return_capsule_from_clone(&mut clone, ctid, &mut csess)
                         .unwrap();
-                    let rcap = Capsule::decode(&rcap.encode()).unwrap();
+                    let rcap = Capsule::decode(&rcap.encode().unwrap()).unwrap();
                     migrator
                         .merge_back_capsule(&mut phone, tid, &rcap, &mut msess)
                         .unwrap();
@@ -421,7 +421,7 @@ end
                     RunExit::MigrationPoint { .. } => {
                         let (capsule, _) =
                             migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
-                        let sent = Capsule::decode(&capsule.encode()).unwrap();
+                        let sent = Capsule::decode(&capsule.encode().unwrap()).unwrap();
                         if let Capsule::Delta(d) = &sent {
                             deleted_total += d.deleted.len();
                         }
@@ -434,7 +434,7 @@ end
                         let (rcap, _, _) = migrator
                             .return_capsule_from_clone(&mut clone, ctid, &mut csess)
                             .unwrap();
-                        let rcap = Capsule::decode(&rcap.encode()).unwrap();
+                        let rcap = Capsule::decode(&rcap.encode().unwrap()).unwrap();
                         migrator
                             .merge_back_capsule(&mut phone, tid, &rcap, &mut msess)
                             .unwrap();
@@ -488,7 +488,7 @@ end
                     RunExit::MigrationPoint { .. } => {
                         let (capsule, _) =
                             migrator.migrate_out_capsule(&mut phone, tid, &mut msess).unwrap();
-                        let sent = Capsule::decode(&capsule.encode()).unwrap();
+                        let sent = Capsule::decode(&capsule.encode().unwrap()).unwrap();
                         let (ctid, _) = migrator
                             .receive_capsule_at_clone(&mut clone, &sent, &mut csess)
                             .unwrap();
@@ -498,7 +498,7 @@ end
                         let (rcap, _, _) = migrator
                             .return_capsule_from_clone(&mut clone, ctid, &mut csess)
                             .unwrap();
-                        let rcap = Capsule::decode(&rcap.encode()).unwrap();
+                        let rcap = Capsule::decode(&rcap.encode().unwrap()).unwrap();
                         migrator
                             .merge_back_capsule(&mut phone, tid, &rcap, &mut msess)
                             .unwrap();
@@ -694,7 +694,7 @@ end
     ) -> Capsule {
         let mut clone = make_proc(Location::Clone, program, 40);
         let mut csess = CloneSession::new(true);
-        let sent = Capsule::decode(&forward.encode()).unwrap();
+        let sent = Capsule::decode(&forward.encode().unwrap()).unwrap();
         let (ctid, _) = migrator
             .receive_capsule_at_clone(&mut clone, &sent, &mut csess)
             .unwrap();
@@ -703,7 +703,7 @@ end
         let (rcap, _, _) = migrator
             .return_capsule_from_clone(&mut clone, ctid, &mut csess)
             .unwrap();
-        Capsule::decode(&rcap.encode()).unwrap()
+        Capsule::decode(&rcap.encode().unwrap()).unwrap()
     }
 
     fn scatter_slot_bytes(phone: &Process, main: crate::appvm::MRef) -> Vec<Vec<u8>> {

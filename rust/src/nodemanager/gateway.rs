@@ -350,7 +350,7 @@ mod tests {
 
         let migrator = Migrator::new(CostParams::default());
         let (packet, _) = migrator.migrate_out(&mut phone, tid).unwrap();
-        let (rbytes, transfer) = nm.migrate(packet.encode()).unwrap();
+        let (rbytes, transfer) = nm.migrate(packet.encode().unwrap()).unwrap();
         assert!(transfer.up > 0 && transfer.down > 0);
         let rpacket = CapturePacket::decode(&rbytes).unwrap();
         migrator.merge_back(&mut phone, tid, &rpacket).unwrap();

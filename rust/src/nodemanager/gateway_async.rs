@@ -213,7 +213,12 @@ impl Conn {
     }
 
     fn queue_msg(&mut self, msg: &Msg) {
-        let payload = msg.encode();
+        // Gateway replies carry no variable-count sections (Hello, Ack,
+        // Error, NeedFull, Reintegrate — blobs and strings only), so
+        // encoding cannot hit the u32 count limit.
+        let payload = msg
+            .encode()
+            .expect("gateway replies contain no oversized collections");
         self.out
             .extend_from_slice(&(payload.len() as u32).to_be_bytes());
         self.out.extend_from_slice(&payload);
@@ -783,7 +788,7 @@ mod tests {
 
         let migrator = Migrator::new(CostParams::default());
         let (packet, _) = migrator.migrate_out(&mut phone, tid).unwrap();
-        let (rbytes, transfer) = nm.migrate(packet.encode()).unwrap();
+        let (rbytes, transfer) = nm.migrate(packet.encode().unwrap()).unwrap();
         assert!(transfer.up > 0 && transfer.down > 0);
         let rpacket = CapturePacket::decode(&rbytes).unwrap();
         migrator.merge_back(&mut phone, tid, &rpacket).unwrap();
@@ -895,7 +900,7 @@ mod tests {
             delta: true,
             caps: SUPPORTED_CAPS,
         };
-        let payload = hello.encode();
+        let payload = hello.encode().unwrap();
         let mut wire = (payload.len() as u32).to_be_bytes().to_vec();
         wire.extend_from_slice(&payload);
         for b in wire {
@@ -916,7 +921,7 @@ mod tests {
             }
             other => panic!("expected Hello reply, got {other:?}"),
         }
-        let bye = Msg::Shutdown.encode();
+        let bye = Msg::Shutdown.encode().unwrap();
         s.write_all(&(bye.len() as u32).to_be_bytes()).unwrap();
         s.write_all(&bye).unwrap();
         drop(s);

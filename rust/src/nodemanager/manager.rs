@@ -438,12 +438,12 @@ pub fn execute_migration(
     let wall0 = std::time::Instant::now();
     let encoded = if session.dict_enabled() {
         if used_dict {
-            rcapsule.encode_with(DictMode::Shared(session.dict()))
+            rcapsule.encode_with(DictMode::Shared(session.dict()))?
         } else {
-            rcapsule.encode_with(DictMode::Inline)
+            rcapsule.encode_with(DictMode::Inline)?
         }
     } else {
-        rcapsule.encode()
+        rcapsule.encode()?
     };
     tracer.span_wall(
         trip,
@@ -453,7 +453,7 @@ pub fn execute_migration(
     );
     match ctx {
         Some(c) if c.wants_clone_events() => {
-            Ok(trace::prepend_events(&tracer.events_since(mark), &encoded))
+            trace::prepend_events(&tracer.events_since(mark), &encoded)
         }
         _ => Ok(encoded),
     }

@@ -35,8 +35,9 @@ pub use protocol::{
     delta_agreed_at, dict_agreed, drive_heartbeat, encode_sub_result, is_sub_job, open_frame,
     patch_frame_payload, program_hash, seal_frame, seal_frame_keep_head, trace_agreed, Codec,
     FrameDecoder, HeartbeatOutcome, Msg, SubJobFrame, CAP_CODEC_LZ, CAP_SCATTER,
-    CAP_SESSION_DICT, CAP_TRACE_CTX, DICT_MIN_PROTO, MAX_FRAME_BYTES, PROTO_VERSION,
-    SUB_JOB_PAYLOAD_OFFSET, SUPPORTED_CAPS, TRACE_MIN_PROTO,
+    CAP_SESSION_DICT, CAP_TRACE_CTX, DICT_MIN_PROTO, MAX_FRAME_BYTES,
+    MAX_PREVALIDATION_ALLOC, PROTO_VERSION, SUB_JOB_PAYLOAD_OFFSET, SUPPORTED_CAPS,
+    TRACE_MIN_PROTO,
 };
 pub use transport::{InProcTransport, TcpEndpoint, TcpTransport, Transport};
 
@@ -133,7 +134,7 @@ end
 
         let migrator = Migrator::new(CostParams::default());
         let (packet, _) = migrator.migrate_out(&mut phone, tid).unwrap();
-        let (rbytes, transfer) = nm.migrate(packet.encode()).unwrap();
+        let (rbytes, transfer) = nm.migrate(packet.encode().unwrap()).unwrap();
         assert!(transfer.up > 0 && transfer.down > 0);
 
         let rpacket = crate::migration::CapturePacket::decode(&rbytes).unwrap();

@@ -217,6 +217,18 @@ where
 // Frame layer: self-describing compressed payload container
 // ---------------------------------------------------------------------------
 
+/// The most any decoder may reserve on the strength of an *unvalidated*
+/// length claim. Wire counts and raw-length fields are attacker
+/// controlled until the bytes behind them have actually been consumed,
+/// so every `Vec::with_capacity(claimed)` site clamps through this one
+/// constant — [`open_frame`], [`crate::util::compress::decompress`], and
+/// (indirectly, via `WireReader::checked_count`'s bytes-remaining bound)
+/// every section decoder. Decoded output may still *grow* past the cap,
+/// but only in proportion to input bytes actually received, never in
+/// proportion to what a hostile prefix merely claims. The fuzz harness
+/// (`tests/fuzz_wire.rs`) asserts this law with a counting allocator.
+pub const MAX_PREVALIDATION_ALLOC: usize = 1 << 20;
+
 /// Magic for a compressed `Migrate`/`Reintegrate` payload ("CCZF" =
 /// CloneCloud Z-frame). Distinct from both capsule magics ("CCHP" full /
 /// "CCDP" delta), so `open_frame` can always tell a sealed frame from a
@@ -290,7 +302,7 @@ pub fn open_frame(bytes: &[u8]) -> Result<Cow<'_, [u8]>> {
             "sealed frame head {head_len} exceeds raw length {raw_len} or frame size"
         )));
     }
-    let mut raw = Vec::with_capacity(raw_len.min(1 << 20));
+    let mut raw = Vec::with_capacity(raw_len.min(MAX_PREVALIDATION_ALLOC));
     raw.extend_from_slice(&bytes[FRAME_HEADER..FRAME_HEADER + head_len]);
     let tail = compress::decompress(&bytes[FRAME_HEADER + head_len..], raw_len - head_len)?;
     raw.extend_from_slice(&tail);
@@ -629,7 +641,10 @@ pub enum Msg {
 
 impl Msg {
     /// Encode to the tagged wire form ([`Msg::decode`] inverts it).
-    pub fn encode(&self) -> Vec<u8> {
+    /// Fails (typed `Wire` error) only when a collection count exceeds
+    /// the u32 wire limit — the old `as u32` cast silently truncated the
+    /// count and produced a frame the receiver misparses.
+    pub fn encode(&self) -> Result<Vec<u8>> {
         let mut w = WireWriter::new();
         match self {
             Msg::Provision {
@@ -644,7 +659,7 @@ impl Msg {
             }
             Msg::SyncFs(fs) => {
                 w.put_u8(1);
-                w.put_u32(fs.count() as u32);
+                w.put_count(fs.count())?;
                 for i in 0..fs.count() {
                     let f = fs.file(i).unwrap();
                     w.put_str(&f.name);
@@ -687,14 +702,14 @@ impl Msg {
                 w.put_u8(9);
                 w.put_u64(*base_epoch);
                 w.put_u64(*digest);
-                w.put_u32(assignments.len() as u32);
+                w.put_count(assignments.len())?;
                 for (cid, mid) in assignments {
                     w.put_u64(*cid);
                     w.put_u64(*mid);
                 }
             }
         }
-        w.into_vec()
+        Ok(w.into_vec())
     }
 
     /// Decode one tagged message. Strict: unknown tags and trailing
@@ -711,6 +726,8 @@ impl Msg {
             },
             1 => {
                 let n = r.get_u32()? as usize;
+                // Each file needs at least its two length prefixes.
+                let n = r.checked_count(n, 8)?;
                 let mut fs = SimFs::new();
                 for _ in 0..n {
                     let name = r.get_str()?;
@@ -822,7 +839,7 @@ mod tests {
             },
         ];
         for m in msgs {
-            assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+            assert_eq!(Msg::decode(&m.encode().unwrap()).unwrap(), m);
         }
     }
 
@@ -903,7 +920,8 @@ mod tests {
             },
             gen_msg,
             |m| {
-                let decoded = Msg::decode(&m.encode())
+                let bytes = m.encode().map_err(|e| format!("encode failed: {e}"))?;
+                let decoded = Msg::decode(&bytes)
                     .map_err(|e| format!("decode failed: {e}"))?;
                 ensure_eq(decoded, m.clone(), "decode(encode(m))")
             },
@@ -922,7 +940,7 @@ mod tests {
                 cases: 200,
             },
             |rng| {
-                let bytes = gen_msg(rng).encode();
+                let bytes = gen_msg(rng).encode().unwrap();
                 let cut = rng.index(bytes.len());
                 (bytes, cut)
             },
@@ -1034,7 +1052,7 @@ mod tests {
             delta: false,
             caps: 0,
         };
-        assert_eq!(reply.encode().len(), v3_bytes.len());
+        assert_eq!(reply.encode().unwrap().len(), v3_bytes.len());
     }
 
     // ---- frame layer (negotiated compression) ---------------------------

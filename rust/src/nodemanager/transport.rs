@@ -46,7 +46,7 @@ impl InProcTransport {
 
 impl Transport for InProcTransport {
     fn send(&mut self, msg: &Msg) -> Result<u64> {
-        let bytes = msg.encode();
+        let bytes = msg.encode()?;
         let n = bytes.len() as u64;
         self.tx
             .send(bytes)
@@ -116,7 +116,7 @@ pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
 
 impl Transport for TcpTransport {
     fn send(&mut self, msg: &Msg) -> Result<u64> {
-        let bytes = msg.encode();
+        let bytes = msg.encode()?;
         let len = (bytes.len() as u32).to_be_bytes();
         self.stream
             .write_all(&len)
@@ -301,7 +301,7 @@ mod tests {
             let mut s = TcpStream::connect(addr).unwrap();
             s.set_nodelay(true).ok();
             let msg = Msg::Migrate(vec![42; 64]);
-            let payload = msg.encode();
+            let payload = msg.encode().unwrap();
             let mut wire = (payload.len() as u32).to_be_bytes().to_vec();
             wire.extend_from_slice(&payload);
             let mut chunks = wire.chunks(5);
@@ -370,7 +370,7 @@ mod tests {
         let mut s = TcpStream::connect(addr).unwrap();
         let mut burst = Vec::new();
         for m in [Msg::Ack, Msg::NeedFull("x".into())] {
-            let p = m.encode();
+            let p = m.encode().unwrap();
             burst.extend_from_slice(&(p.len() as u32).to_be_bytes());
             burst.extend_from_slice(&p);
         }

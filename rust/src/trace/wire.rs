@@ -190,13 +190,13 @@ fn decode_event(r: &mut WireReader) -> Result<Event> {
 
 /// Encode events into a standalone blob (no magic; used inside the
 /// reverse envelope and directly testable).
-pub fn encode_events(events: &[Event]) -> Vec<u8> {
+pub fn encode_events(events: &[Event]) -> Result<Vec<u8>> {
     let mut w = WireWriter::with_capacity(8 + events.len() * 32);
-    w.put_u32(events.len() as u32);
+    w.put_count(events.len())?;
     for ev in events {
         encode_event(ev, &mut w);
     }
-    w.into_vec()
+    Ok(w.into_vec())
 }
 
 /// Decode an event blob produced by [`encode_events`].
@@ -218,15 +218,15 @@ pub fn decode_events(buf: &[u8]) -> Result<Vec<Event>> {
 }
 
 /// Attach a reverse event blob in front of the reverse capsule bytes.
-pub fn prepend_events(events: &[Event], capsule: &[u8]) -> Vec<u8> {
-    let blob = encode_events(events);
+pub fn prepend_events(events: &[Event], capsule: &[u8]) -> Result<Vec<u8>> {
+    let blob = encode_events(events)?;
     let mut w = WireWriter::with_capacity(4 + 1 + 4 + blob.len() + capsule.len());
     w.put_u32(TRACE_EVT_MAGIC);
     w.put_u8(TRACE_WIRE_VERSION);
     w.put_bytes(&blob);
     let mut out = w.into_vec();
     out.extend_from_slice(capsule);
-    out
+    Ok(out)
 }
 
 /// Split a reverse payload into piggybacked events (possibly none) and
@@ -322,12 +322,12 @@ mod tests {
         let mut rng = Rng::new(42);
         let events: Vec<Event> = (0..20).map(|_| arb_event(&mut rng)).collect();
         let capsule = vec![0xAB; 300];
-        let buf = prepend_events(&events, &capsule);
+        let buf = prepend_events(&events, &capsule).unwrap();
         let (got, rest) = split_events(&buf).unwrap();
         assert_eq!(got, events);
         assert_eq!(rest, &capsule[..]);
         // Empty event list still frames correctly.
-        let buf = prepend_events(&[], &capsule);
+        let buf = prepend_events(&[], &capsule).unwrap();
         let (got, rest) = split_events(&buf).unwrap();
         assert!(got.is_empty());
         assert_eq!(rest, &capsule[..]);
@@ -342,7 +342,7 @@ mod tests {
                 (0..n).map(|_| arb_event(rng)).collect::<Vec<Event>>()
             },
             |events| {
-                let blob = encode_events(events);
+                let blob = encode_events(events).map_err(|e| format!("encode: {e}"))?;
                 let back = decode_events(&blob)
                     .map_err(|e| format!("decode failed on own encoding: {e}"))?;
                 ensure_eq(back.len(), events.len(), "event count")?;
@@ -383,7 +383,7 @@ mod tests {
             |rng| {
                 let n = 1 + (rng.next_u64() % 10) as usize;
                 let events: Vec<Event> = (0..n).map(|_| arb_event(rng)).collect();
-                let blob = encode_events(&events);
+                let blob = encode_events(&events).unwrap();
                 let cut = 1 + (rng.next_u64() as usize) % (blob.len() - 1);
                 (blob, cut)
             },

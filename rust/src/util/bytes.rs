@@ -61,6 +61,20 @@ impl WireWriter {
     pub fn put_f32(&mut self, v: f32) {
         self.put_u32(v.to_bits());
     }
+    /// Write a collection count as its u32 wire form, or fail with a
+    /// typed `Wire` error when the count does not fit. The unchecked
+    /// `put_u32(n as u32)` idiom silently truncates an oversized
+    /// collection into a frame whose count disagrees with its body —
+    /// the receiver then misparses bytes instead of rejecting them.
+    /// Every encoder with a variable-count section goes through here.
+    pub fn put_count(&mut self, n: usize) -> Result<()> {
+        let v = u32::try_from(n).map_err(|_| {
+            CloneCloudError::Wire(format!("collection count {n} exceeds the u32 wire limit"))
+        })?;
+        self.put_u32(v);
+        Ok(())
+    }
+
     pub fn put_bytes(&mut self, v: &[u8]) {
         self.put_u32(v.len() as u32);
         self.buf.extend_from_slice(v);
@@ -195,6 +209,20 @@ mod tests {
         let mut w = WireWriter::new();
         w.put_u32(1);
         assert_eq!(w.as_slice(), &[0, 0, 0, 1], "network byte order");
+    }
+
+    #[test]
+    fn put_count_matches_put_u32_and_rejects_overflow() {
+        let mut w = WireWriter::new();
+        w.put_count(3).unwrap();
+        let mut w2 = WireWriter::new();
+        w2.put_u32(3);
+        assert_eq!(w.as_slice(), w2.as_slice(), "in-range counts stay bit-identical");
+        assert!(w.put_count(u32::MAX as usize).is_ok());
+        // Counts past u32::MAX must error, never truncate. (usize is 64-bit
+        // on every supported target; the check is what makes that explicit.)
+        let err = w.put_count(u32::MAX as usize + 1).unwrap_err().to_string();
+        assert!(err.contains("u32 wire limit"), "{err}");
     }
 
     #[test]

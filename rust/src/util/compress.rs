@@ -104,8 +104,12 @@ pub fn compress(input: &[u8]) -> Vec<u8> {
 /// out-of-range distance, output over- or under-shooting the declared
 /// length — is a clean `Wire` error, never a panic.
 pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>> {
-    // Cap the up-front allocation so a garbage length cannot OOM us.
-    let mut out = Vec::with_capacity(expected_len.min(1 << 20));
+    // Cap the up-front allocation so a garbage length cannot OOM us:
+    // `expected_len` is an unvalidated wire claim until the stream has
+    // actually produced that many bytes, so it may reserve at most the
+    // one protocol-wide pre-validation cap.
+    let mut out =
+        Vec::with_capacity(expected_len.min(crate::nodemanager::protocol::MAX_PREVALIDATION_ALLOC));
     let mut i = 0usize;
     while i < input.len() {
         let op = input[i];

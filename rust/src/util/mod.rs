@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod bytes;
 pub mod compress;
+pub mod fuzz;
 pub mod json;
 pub mod lazy;
 pub mod prop;

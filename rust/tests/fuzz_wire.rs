@@ -1,0 +1,529 @@
+//! Adversarial wire-robustness harness: every decoder in the protocol
+//! stack is driven with structured mutants ([`clonecloud::util::fuzz`])
+//! of its own valid encodings, plus pure garbage, under a counting
+//! global allocator. Three laws are asserted for every input:
+//!
+//! 1. **No panic** — decode returns `Ok` or a typed error, period.
+//! 2. **No state corruption** — a rejected capsule leaves the session
+//!    dictionary replica bit-identical, cleanly reset (the `NeedFull`
+//!    path), or exactly in the sender's post-encode state (the
+//!    trailing-garbage-after-a-valid-capsule case, where both replicas
+//!    agree by construction). Never a silently forked replica.
+//! 3. **Bounded allocation** — no decode path reserves more than
+//!    `MAX_PREVALIDATION_ALLOC` ahead of validation; peak allocation
+//!    may exceed it only in proportion to input bytes actually present
+//!    (decompression expands at most ~44x per input byte; 64x is the
+//!    asserted ceiling, plus fixed slack for error strings).
+//!
+//! Budgets are fixed-seed and small enough for the CI `fuzz-smoke` job
+//! (a few seconds total); any failure reproduces from (seed, iteration).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use clonecloud::migration::format::{
+    WireBody, WireFrame, WireObject, WireStatic, WireValue,
+};
+use clonecloud::migration::{
+    Capsule, CapturePacket, DeltaPacket, DictMode, DictRead, Direction, SessionDict,
+};
+use clonecloud::nodemanager::{
+    decode_sub_job, decode_sub_result, encode_sub_result, open_frame, seal_frame, Codec,
+    FrameDecoder, Msg, SubJobFrame, MAX_PREVALIDATION_ALLOC,
+};
+use clonecloud::trace::wire::{decode_events, encode_events};
+use clonecloud::trace::{
+    prepend_ctx, prepend_events, split_ctx, split_events, Endpoint, Event, EventKind, Mark,
+    Phase, TraceCtx, FLAG_WANT_CLONE_EVENTS,
+};
+use clonecloud::util::compress::{compress, decompress};
+use clonecloud::util::fuzz::WireFuzzer;
+use clonecloud::util::rng::Rng;
+use clonecloud::vfs::SimFs;
+
+// ---- counting allocator (law 3) ------------------------------------------
+
+/// Wraps the system allocator and tracks, per thread, the live byte
+/// count and the high-water mark since the last reset. Thread-local
+/// const-init `Cell`s avoid both locks and allocation recursion.
+struct CountingAlloc;
+
+thread_local! {
+    static LIVE: Cell<usize> = const { Cell::new(0) };
+    static PEAK: Cell<usize> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            LIVE.with(|l| {
+                let v = l.get() + layout.size();
+                l.set(v);
+                PEAK.with(|pk| {
+                    if v > pk.get() {
+                        pk.set(v);
+                    }
+                });
+            });
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        // saturating: a buffer may be freed on a different thread than
+        // the one that allocated it.
+        LIVE.with(|l| l.set(l.get().saturating_sub(layout.size())));
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Run `f` and return (peak allocation delta over the call, result).
+fn peak_during<R>(f: impl FnOnce() -> R) -> (usize, R) {
+    let base = LIVE.with(|l| l.get());
+    PEAK.with(|p| p.set(base));
+    let r = f();
+    let peak = PEAK.with(|p| p.get());
+    (peak.saturating_sub(base), r)
+}
+
+/// Law 3: pre-validation reservations are capped by the one protocol
+/// constant; anything beyond must be paid for by real input bytes.
+/// 64x covers the worst decompression expansion (~44x) with margin;
+/// the fixed slack covers error-string formatting and Vec rounding.
+fn assert_alloc_law(what: &str, input_len: usize, peak: usize) {
+    let bound = MAX_PREVALIDATION_ALLOC + 64 * input_len + 4096;
+    assert!(
+        peak <= bound,
+        "{what}: peak allocation {peak} exceeds {bound} for a {input_len}-byte input"
+    );
+}
+
+// ---- generators of valid base encodings ----------------------------------
+
+fn gen_blob(rng: &mut Rng, max: usize) -> Vec<u8> {
+    let mut b = vec![0u8; rng.index(max)];
+    rng.fill_bytes(&mut b);
+    b
+}
+
+fn gen_msg(rng: &mut Rng) -> Msg {
+    match rng.index(10) {
+        0 => Msg::Provision {
+            zygote_objects: rng.next_u64() as u32,
+            zygote_seed: rng.next_u64(),
+            program_hash: rng.next_u64(),
+        },
+        1 => {
+            let mut fs = SimFs::new();
+            for i in 0..rng.index(4) {
+                fs.add(&format!("f{i}"), gen_blob(rng, 256));
+            }
+            Msg::SyncFs(fs)
+        }
+        2 => Msg::Migrate(gen_blob(rng, 512)),
+        3 => Msg::Reintegrate(gen_blob(rng, 512)),
+        4 => Msg::Ack,
+        5 => Msg::Error(format!("err {}", rng.next_u64())),
+        6 => Msg::Shutdown,
+        7 => Msg::Hello {
+            proto: (rng.next_u64() % 6) as u16,
+            delta: rng.chance(0.5),
+            caps: rng.next_u64() as u32,
+        },
+        8 => Msg::NeedFull(format!("nf {}", rng.next_u64())),
+        _ => Msg::Heartbeat {
+            base_epoch: rng.next_u64(),
+            digest: rng.next_u64(),
+            assignments: (0..rng.index(6))
+                .map(|_| (rng.next_u64(), rng.next_u64()))
+                .collect(),
+        },
+    }
+}
+
+fn gen_name(rng: &mut Rng) -> String {
+    const POOL: &[&str] = &["App", "sys.String", "[arr]", "x.y.Z", "Работа"];
+    if rng.chance(0.8) {
+        POOL[rng.index(POOL.len())].to_string()
+    } else {
+        format!("C{}", rng.next_u64())
+    }
+}
+
+fn gen_value(rng: &mut Rng) -> WireValue {
+    match rng.index(6) {
+        0 => WireValue::Null,
+        1 => WireValue::Int(rng.next_u64() as i64),
+        2 => WireValue::Float(rng.range_i64(-1_000_000, 1_000_000) as f64 / 64.0),
+        3 => WireValue::Slot(rng.next_u64() as u32),
+        4 => WireValue::Zygote(rng.next_u64() as u32),
+        _ => WireValue::Base(rng.next_u64()),
+    }
+}
+
+fn gen_body(rng: &mut Rng) -> WireBody {
+    match rng.index(4) {
+        0 => WireBody::Fields((0..rng.index(6)).map(|_| gen_value(rng)).collect()),
+        1 => WireBody::ByteArray(gen_blob(rng, 128)),
+        2 => WireBody::FloatArray((0..rng.index(16)).map(|_| rng.range_f32(-1e6, 1e6)).collect()),
+        _ => WireBody::RefArray((0..rng.index(6)).map(|_| gen_value(rng)).collect()),
+    }
+}
+
+fn gen_packet(rng: &mut Rng) -> CapturePacket {
+    CapturePacket {
+        direction: if rng.chance(0.5) {
+            Direction::Forward
+        } else {
+            Direction::Reverse
+        },
+        thread_id: rng.next_u64() as u32,
+        clock_us: rng.range_i64(0, 1 << 40) as f64 / 16.0,
+        frames: (0..rng.index(3))
+            .map(|_| WireFrame {
+                class_name: gen_name(rng),
+                method_name: gen_name(rng),
+                pc: rng.next_u64() as u32,
+                ret_reg_plus1: rng.byte(),
+                regs: (0..rng.index(6)).map(|_| gen_value(rng)).collect(),
+            })
+            .collect(),
+        objects: (0..rng.index(6))
+            .map(|_| WireObject {
+                origin_id: rng.next_u64(),
+                mapped_id: rng.next_u64(),
+                class_name: gen_name(rng),
+                zygote_seq: rng.chance(0.3).then(|| rng.next_u64() as u32),
+                body: gen_body(rng),
+            })
+            .collect(),
+        zygote_refs: (0..rng.index(3))
+            .map(|_| (gen_name(rng), rng.next_u64() as u32))
+            .collect(),
+        statics: (0..rng.index(3))
+            .map(|_| WireStatic {
+                class_name: gen_name(rng),
+                idx: rng.next_u64() as u16,
+                value: gen_value(rng),
+            })
+            .collect(),
+    }
+}
+
+fn gen_capsule(rng: &mut Rng) -> Capsule {
+    if rng.chance(0.5) {
+        Capsule::Full(gen_packet(rng))
+    } else {
+        let p = gen_packet(rng);
+        Capsule::Delta(DeltaPacket {
+            direction: p.direction,
+            thread_id: p.thread_id,
+            clock_us: p.clock_us,
+            base_epoch: rng.next_u64(),
+            base_digest: rng.next_u64(),
+            assignments: (0..rng.index(5))
+                .map(|_| (rng.next_u64(), rng.next_u64()))
+                .collect(),
+            deleted: (0..rng.index(5)).map(|_| rng.next_u64()).collect(),
+            sections: clonecloud::migration::format::WireSections {
+                frames: p.frames,
+                objects: p.objects,
+                zygote_refs: p.zygote_refs,
+                statics: p.statics,
+            },
+        })
+    }
+}
+
+fn gen_event(rng: &mut Rng) -> Event {
+    let kind = match rng.index(3) {
+        0 => EventKind::Begin(Phase::Capture),
+        1 => EventKind::End(Phase::Encode),
+        _ => EventKind::Instant(Mark::NeedFull),
+    };
+    Event {
+        seq: rng.next_u64(),
+        endpoint: if rng.chance(0.5) {
+            Endpoint::Phone
+        } else {
+            Endpoint::Clone
+        },
+        trip: rng.next_u64() as u32,
+        virt_us: rng.range_i64(0, 1 << 40) as f64 / 16.0,
+        wall_us: rng.next_u64() >> 16,
+        kind,
+    }
+}
+
+// ---- the harness ----------------------------------------------------------
+
+/// Drive one decoder closure with mutants, garbage tails, and pure
+/// garbage derived from `base`, asserting the allocation law each time.
+/// The closure must already swallow its decoder's `Result`.
+fn pound(what: &str, fz: &mut WireFuzzer, base: &[u8], budget: usize, decode: &dyn Fn(&[u8])) {
+    for i in 0..budget {
+        let input = match i % 3 {
+            0 => fz.mutate(base),
+            1 => fz.garbage_tail(base),
+            _ => fz.garbage(base.len() + 64),
+        };
+        let (peak, ()) = peak_during(|| decode(&input));
+        assert_alloc_law(what, input.len(), peak);
+    }
+    // The unmutated base must of course also obey the law.
+    let (peak, ()) = peak_during(|| decode(base));
+    assert_alloc_law(what, base.len(), peak);
+}
+
+#[test]
+fn fuzz_msg_decoder() {
+    let mut fz = WireFuzzer::new(0xF022_0001);
+    let mut rng = Rng::new(0xF022_0002);
+    for _ in 0..60 {
+        let base = gen_msg(&mut rng).encode().unwrap();
+        pound("Msg::decode", &mut fz, &base, 12, &|input| {
+            let _ = Msg::decode(input);
+        });
+    }
+}
+
+#[test]
+fn fuzz_frame_container() {
+    let mut fz = WireFuzzer::new(0xF022_0003);
+    let mut rng = Rng::new(0xF022_0004);
+    for _ in 0..40 {
+        // Compressible payloads so the LZ path really engages.
+        let mut payload = gen_blob(&mut rng, 2048);
+        let run = rng.index(2048);
+        payload.resize(payload.len() + run, 0xAB);
+        for codec in [Codec::None, Codec::Lz] {
+            let base = seal_frame(codec, payload.clone());
+            pound("open_frame", &mut fz, &base, 8, &|input| {
+                let _ = open_frame(input);
+            });
+        }
+    }
+}
+
+#[test]
+fn fuzz_incremental_frame_decoder_any_chunking() {
+    let mut fz = WireFuzzer::new(0xF022_0005);
+    let mut rng = Rng::new(0xF022_0006);
+
+    // A valid multi-frame stream must decode identically however the
+    // bytes are fragmented.
+    for _ in 0..30 {
+        let frames: Vec<Vec<u8>> = (0..1 + rng.index(4))
+            .map(|_| gen_blob(&mut rng, 600))
+            .collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&(f.len() as u32).to_be_bytes());
+            stream.extend_from_slice(f);
+        }
+        let points = fz.chunk_points(stream.len());
+        let mut dec = FrameDecoder::new();
+        let mut got: Vec<Vec<u8>> = Vec::new();
+        for w in points.windows(2) {
+            dec.feed(&stream[w[0]..w[1]]);
+            while let Some(f) = dec.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames, "chunking changed the decoded frames");
+    }
+
+    // Mutated / hostile streams: no panic, allocation stays bounded by
+    // bytes actually fed (a lying length prefix must not pre-allocate).
+    for _ in 0..60 {
+        let mut stream = Vec::new();
+        for _ in 0..1 + rng.index(3) {
+            let f = gen_blob(&mut rng, 300);
+            stream.extend_from_slice(&(f.len() as u32).to_be_bytes());
+            stream.extend_from_slice(&f);
+        }
+        let hostile = fz.mutate(&stream);
+        let points = fz.chunk_points(hostile.len());
+        let (peak, ()) = peak_during(|| {
+            let mut dec = FrameDecoder::new();
+            for w in points.windows(2) {
+                dec.feed(&hostile[w[0]..w[1]]);
+                loop {
+                    match dec.next_frame() {
+                        Ok(Some(_)) => {}
+                        Ok(None) => break,
+                        Err(_) => return, // typed error; connection would drop
+                    }
+                }
+            }
+        });
+        assert_alloc_law("FrameDecoder", hostile.len(), peak);
+    }
+}
+
+#[test]
+fn fuzz_capsule_decoders_all_dict_modes() {
+    let mut fz = WireFuzzer::new(0xF022_0007);
+    let mut rng = Rng::new(0xF022_0008);
+
+    for round in 0..40 {
+        let capsule = gen_capsule(&mut rng);
+
+        // Mode Off: the pre-dict layout through both entry points.
+        let base = capsule.encode().unwrap();
+        pound("Capsule::decode", &mut fz, &base, 6, &|input| {
+            let _ = Capsule::decode(input);
+            let _ = CapturePacket::decode(input);
+        });
+
+        // Mode Inline under a negotiated channel: replica must stay
+        // untouched whatever happens.
+        let base = capsule.encode_with(DictMode::Inline).unwrap();
+        for i in 0..6 {
+            let input = if i % 2 == 0 {
+                fz.mutate(&base)
+            } else {
+                fz.garbage_tail(&base)
+            };
+            let mut rx = SessionDict::new();
+            let (peak, _) =
+                peak_during(|| Capsule::decode_with(&input, DictRead::Negotiated(&mut rx)));
+            assert_alloc_law("Capsule::decode_with(Inline)", input.len(), peak);
+        }
+
+        // Mode Shared: the replica-coherence law (law 2). Warm a
+        // sender/receiver pair, encode against the warm dict, then
+        // mutate. On ANY decode error the receiver replica must be
+        // bit-identical, cleanly reset, or exactly the sender's
+        // post-encode state — never silently forked.
+        let mut tx = SessionDict::new();
+        let mut rx_master = SessionDict::new();
+        let warm = gen_capsule(&mut rng);
+        let warm_bytes = warm.encode_with(DictMode::Shared(&mut tx)).unwrap();
+        Capsule::decode_with(&warm_bytes, DictRead::Negotiated(&mut rx_master))
+            .expect("warm capsule decodes");
+        let base = capsule.encode_with(DictMode::Shared(&mut tx)).unwrap();
+        // The sender's post-encode digest: what a receiver that absorbs
+        // this capsule's additions lands on.
+        let absorbed_digest = tx.digest();
+        let before_digest = rx_master.digest();
+        for i in 0..8 {
+            let input = match i % 3 {
+                0 => fz.mutate(&base),
+                1 => fz.garbage_tail(&base),
+                _ => fz.garbage(base.len() + 32),
+            };
+            let mut rx = rx_master.clone();
+            let (peak, res) =
+                peak_during(|| Capsule::decode_with(&input, DictRead::Negotiated(&mut rx)));
+            assert_alloc_law("Capsule::decode_with(Shared)", input.len(), peak);
+            if res.is_err() {
+                let d = rx.digest();
+                assert!(
+                    d == before_digest || rx.is_empty() || d == absorbed_digest,
+                    "round {round}.{i}: rejected capsule forked the replica \
+                     (digest {d:#x}, expected untouched {before_digest:#x}, \
+                     reset, or absorbed {absorbed_digest:#x})"
+                );
+            }
+        }
+        // And the unmutated capsule still decodes against the master.
+        let mut rx = rx_master.clone();
+        let (got, used) = Capsule::decode_with(&base, DictRead::Negotiated(&mut rx))
+            .expect("valid shared capsule decodes");
+        assert!(used);
+        assert_eq!(rx.digest(), absorbed_digest);
+        match (&got, &capsule) {
+            (Capsule::Full(a), Capsule::Full(b)) => assert_eq!(a, b),
+            (Capsule::Delta(a), Capsule::Delta(b)) => assert_eq!(a, b),
+            _ => panic!("capsule flavor flipped"),
+        }
+    }
+}
+
+#[test]
+fn fuzz_sub_job_frames() {
+    let mut fz = WireFuzzer::new(0xF022_0009);
+    let mut rng = Rng::new(0xF022_000A);
+    for _ in 0..50 {
+        let shards = 1 + rng.index(8) as u16;
+        let frame = SubJobFrame {
+            shard: rng.index(shards as usize) as u16,
+            shards,
+            payload: gen_blob(&mut rng, 400),
+        };
+        let base = frame.encode();
+        pound("decode_sub_job", &mut fz, &base, 8, &|input| {
+            let _ = decode_sub_job(input);
+        });
+
+        let base = encode_sub_result(frame.shard, &frame.payload);
+        pound("decode_sub_result", &mut fz, &base, 8, &|input| {
+            let _ = decode_sub_result(input);
+        });
+    }
+}
+
+#[test]
+fn fuzz_trace_envelopes() {
+    let mut fz = WireFuzzer::new(0xF022_000B);
+    let mut rng = Rng::new(0xF022_000C);
+    for _ in 0..40 {
+        let events: Vec<Event> = (0..rng.index(12)).map(|_| gen_event(&mut rng)).collect();
+        let capsule = gen_blob(&mut rng, 400);
+
+        let base = encode_events(&events).unwrap();
+        pound("decode_events", &mut fz, &base, 6, &|input| {
+            let _ = decode_events(input);
+        });
+
+        let base = prepend_events(&events, &capsule).unwrap();
+        pound("split_events", &mut fz, &base, 6, &|input| {
+            let _ = split_events(input);
+        });
+
+        let ctx = TraceCtx {
+            session_id: rng.next_u64(),
+            trip: rng.next_u64() as u32,
+            parent_span: rng.next_u64() as u32,
+            flags: if rng.chance(0.5) { FLAG_WANT_CLONE_EVENTS } else { 0 },
+        };
+        let base = prepend_ctx(&ctx, &capsule);
+        pound("split_ctx", &mut fz, &base, 6, &|input| {
+            let _ = split_ctx(input);
+        });
+    }
+}
+
+#[test]
+fn fuzz_decompress() {
+    let mut fz = WireFuzzer::new(0xF022_000D);
+    let mut rng = Rng::new(0xF022_000E);
+    for _ in 0..60 {
+        let mut data = gen_blob(&mut rng, 2048);
+        let run = rng.index(2048);
+        data.resize(data.len() + run, 0x5A);
+        let base = compress(&data);
+        for i in 0..8 {
+            let input = if i % 2 == 0 {
+                fz.mutate(&base)
+            } else {
+                fz.garbage(base.len() + 64)
+            };
+            // Both the true length and hostile claims, including claims
+            // far past the pre-validation cap.
+            for claimed in [
+                data.len(),
+                fz.rng().index(4 * MAX_PREVALIDATION_ALLOC),
+                usize::from(u16::MAX) * 70_000, // ~4.5 GiB claim
+            ] {
+                let (peak, _) = peak_during(|| decompress(&input, claimed));
+                assert_alloc_law("decompress", input.len(), peak);
+            }
+        }
+    }
+}

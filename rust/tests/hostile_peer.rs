@@ -1,0 +1,226 @@
+//! Hostile-peer matrix: full offload sessions against a scripted
+//! malicious endpoint ([`HostilePeerChannel`]). The clone executes
+//! honestly but its replies come back truncated, bit-flipped, replayed,
+//! garbage, oversize-claiming, trailing-garbage, or as an endless
+//! stream of `NeedFull` lies. The driver contract under every behavior:
+//!
+//! * no panic, ever;
+//! * no half-applied merge — a rejected reply leaves the phone exactly
+//!   as the capture left it;
+//! * under a degrading policy engine, deterministically-rejected
+//!   tampering finishes the run locally with a bit-identical result and
+//!   the error surfaced in `DistOutcome::channel_errors`.
+
+use std::sync::Arc;
+
+use clonecloud::appvm::zygote::build_template;
+use clonecloud::appvm::{Heap, Process, Program};
+use clonecloud::config::{CostParams, NetworkProfile};
+use clonecloud::device::{DeviceSpec, Location};
+use clonecloud::exec::{
+    delta_statics_workload_src, delta_workload_expected, run_distributed_policy, HostileBehavior,
+    HostilePeerChannel, InlineClone, PolicyEngine,
+};
+use clonecloud::migration::MobileSession;
+
+const ROUNDS: i64 = 6;
+
+struct Rig {
+    program: Arc<Program>,
+    template: Heap,
+    expected: i64,
+    main_class: usize,
+}
+
+fn rig() -> Rig {
+    let program = Arc::new(
+        clonecloud::appvm::assembler::assemble(&delta_statics_workload_src(ROUNDS, 512, 8))
+            .unwrap(),
+    );
+    clonecloud::appvm::verifier::verify_program(&program).unwrap();
+    let template = build_template(&program, 100, 11);
+    let main = program.entry().unwrap();
+    Rig {
+        main_class: main.class.0 as usize,
+        template,
+        expected: delta_workload_expected(ROUNDS),
+        program,
+    }
+}
+
+impl Rig {
+    fn fork(&self, loc: Location) -> Process {
+        Process::fork_from_zygote(
+            self.program.clone(),
+            &self.template,
+            match loc {
+                Location::Mobile => DeviceSpec::phone_g1(),
+                Location::Clone => DeviceSpec::clone_desktop(),
+            },
+            loc,
+            clonecloud::appvm::NodeEnv::with_rust_compute(clonecloud::vfs::SimFs::new()),
+        )
+    }
+
+    fn result(&self, phone: &Process) -> Option<i64> {
+        phone.statics[self.main_class][1].as_int()
+    }
+
+    fn run(
+        &self,
+        behavior: HostileBehavior,
+        seed: u64,
+    ) -> clonecloud::error::Result<(Process, clonecloud::exec::DistOutcome)> {
+        let inner = InlineClone::new(self.fork(Location::Clone), CostParams::default())
+            .with_delta()
+            .with_dict();
+        let mut channel = HostilePeerChannel::new(inner, behavior, seed);
+        let mut phone = self.fork(Location::Mobile);
+        let mut session = MobileSession::new(true);
+        let mut engine = PolicyEngine::force_offload();
+        let out = run_distributed_policy(
+            &mut phone,
+            &mut channel,
+            &NetworkProfile::wifi(),
+            &CostParams::default(),
+            &mut session,
+            &mut engine,
+        )?;
+        Ok((phone, out))
+    }
+}
+
+/// The control row: an untampering wrapper is invisible — every round
+/// migrates, nothing degrades, and the result is the workload's answer.
+#[test]
+fn honest_control_row_is_transparent() {
+    let rig = rig();
+    let (phone, out) = rig.run(HostileBehavior::Honest, 0x4057_1E00).unwrap();
+    assert_eq!(rig.result(&phone), Some(rig.expected));
+    assert_eq!(out.channel_errors, 0);
+    assert_eq!(out.migrations, ROUNDS as usize);
+}
+
+/// Behaviors whose tampering is deterministically rejected by the
+/// decoders (truncation, pure garbage, trailing garbage, a replayed
+/// capsule against an advanced dictionary, an endless `NeedFull` lie):
+/// every such session must complete locally with a bit-identical
+/// result, the hostile replies surfaced as channel errors, and every
+/// span decided exactly once. No panic, no half-applied merge.
+#[test]
+fn deterministic_tampering_degrades_to_a_bit_identical_local_run() {
+    let rig = rig();
+    for (behavior, seed) in [
+        (HostileBehavior::TruncateReply, 0x4057_1E01),
+        (HostileBehavior::GarbageReply, 0x4057_1E02),
+        (HostileBehavior::AppendGarbage, 0x4057_1E03),
+        (HostileBehavior::ReplayPreviousReply, 0x4057_1E04),
+        (HostileBehavior::AlwaysNeedFull, 0x4057_1E05),
+    ] {
+        let (phone, out) = rig
+            .run(behavior, seed)
+            .unwrap_or_else(|e| panic!("{behavior:?}: run must degrade, got {e}"));
+        assert_eq!(
+            rig.result(&phone),
+            Some(rig.expected),
+            "{behavior:?}: result must stay bit-identical"
+        );
+        assert!(
+            out.channel_errors >= 1,
+            "{behavior:?}: tampering must surface in channel_errors"
+        );
+        assert!(out.local_fallbacks >= 1, "{behavior:?}");
+        assert_eq!(
+            out.offloads + out.local_fallbacks,
+            ROUNDS as usize,
+            "{behavior:?}: every span decided exactly once"
+        );
+        assert!(
+            out.last_channel_error.is_some(),
+            "{behavior:?}: the last hostile error is reported"
+        );
+    }
+}
+
+/// Chaos behaviors (a single bit flip, an oversize word overwrite) can
+/// land anywhere — sometimes the reply still decodes and merges,
+/// sometimes it dies in any decoder layer. The harness sweeps seeds and
+/// holds the unconditional laws: no panic, and every failure is a typed
+/// error, never a corrupted driver state (a subsequent clean run on the
+/// same rig still produces the exact workload answer).
+#[test]
+fn chaos_tampering_never_panics_and_always_fails_typed() {
+    let rig = rig();
+    for behavior in [HostileBehavior::BitFlipReply, HostileBehavior::OversizeClaim] {
+        for seed in 0..12u64 {
+            match rig.run(behavior, 0x4057_1E10 + seed) {
+                Ok((_, out)) => {
+                    assert_eq!(
+                        out.offloads + out.local_fallbacks,
+                        ROUNDS as usize,
+                        "{behavior:?}/{seed}: every span decided exactly once"
+                    );
+                }
+                Err(e) => {
+                    // Typed, printable, and categorized — the shape a
+                    // caller can act on.
+                    let msg = e.to_string();
+                    assert!(!msg.is_empty(), "{behavior:?}/{seed}");
+                }
+            }
+        }
+    }
+    // The rig itself is untouched by the chaos sweeps: an honest run
+    // still lands on the exact answer.
+    let (phone, _) = rig.run(HostileBehavior::Honest, 0x4057_1EFF).unwrap();
+    assert_eq!(rig.result(&phone), Some(rig.expected));
+}
+
+/// Tampered replies must never leak half-applied state into the phone:
+/// after a fully hostile session (every reply truncated), the SAME
+/// mobile session recovers over an honest channel — full re-seed, all
+/// rounds migrate, bit-identical result.
+#[test]
+fn session_recovers_over_an_honest_channel_after_a_hostile_one() {
+    let rig = rig();
+    let mut session = MobileSession::new(true);
+
+    let inner = InlineClone::new(rig.fork(Location::Clone), CostParams::default())
+        .with_delta()
+        .with_dict();
+    let mut channel =
+        HostilePeerChannel::new(inner, HostileBehavior::TruncateReply, 0x4057_1E20);
+    let mut phone = rig.fork(Location::Mobile);
+    let mut engine = PolicyEngine::force_offload();
+    let out = run_distributed_policy(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &CostParams::default(),
+        &mut session,
+        &mut engine,
+    )
+    .unwrap();
+    assert_eq!(rig.result(&phone), Some(rig.expected));
+    assert!(out.channel_errors >= 1);
+
+    // Same session object, fresh honest channel: nothing stale leaks.
+    let inner = InlineClone::new(rig.fork(Location::Clone), CostParams::default())
+        .with_delta()
+        .with_dict();
+    let mut channel = HostilePeerChannel::new(inner, HostileBehavior::Honest, 0x4057_1E21);
+    let mut phone = rig.fork(Location::Mobile);
+    let mut engine = PolicyEngine::force_offload();
+    let out = run_distributed_policy(
+        &mut phone,
+        &mut channel,
+        &NetworkProfile::wifi(),
+        &CostParams::default(),
+        &mut session,
+        &mut engine,
+    )
+    .unwrap();
+    assert_eq!(out.channel_errors, 0, "honest channel, clean session");
+    assert_eq!(out.migrations, ROUNDS as usize);
+    assert_eq!(rig.result(&phone), Some(rig.expected));
+}

@@ -434,6 +434,119 @@ fn interop_matrix_lands_on_common_subset_bit_identical() {
     }
 }
 
+/// Capability-flapping rows of the interop matrix: a peer that
+/// advertises `CAP_SESSION_DICT`/`CAP_SCATTER` on one Hello and drops
+/// them on the next must renegotiate cleanly — and when the bits come
+/// BACK a round later, neither end may decode against the dictionary
+/// replica left over from the first negotiation. The clone's per-Hello
+/// `set_dict_enabled` toggle resets its replica, so a fresh phone and
+/// the long-lived clone both re-seed from the empty prefix: round 3
+/// completes with zero dictionary fallbacks instead of a digest
+/// mismatch against stale state.
+#[test]
+fn interop_capability_flapping_renegotiates_without_stale_dict_state() {
+    use clonecloud::appvm::zygote::build_template;
+    use clonecloud::config::CostParams;
+    use clonecloud::exec::{
+        delta_statics_workload_src, delta_workload_expected, run_distributed_session,
+    };
+    use clonecloud::nodemanager::{InProcTransport, CAP_SCATTER, CAP_SESSION_DICT};
+
+    const ROUNDS: i64 = 2;
+    const ZY: usize = 120;
+    let program = Arc::new(
+        clonecloud::appvm::assembler::assemble(&delta_statics_workload_src(ROUNDS, 256, 4))
+            .unwrap(),
+    );
+    clonecloud::appvm::verifier::verify_program(&program).unwrap();
+    let template = build_template(&program, ZY, 5);
+    let main = program.entry().unwrap();
+    let expected = delta_workload_expected(ROUNDS);
+    let fork = || {
+        clonecloud::appvm::Process::fork_from_zygote(
+            program.clone(),
+            &template,
+            clonecloud::device::DeviceSpec::phone_g1(),
+            Location::Mobile,
+            clonecloud::appvm::NodeEnv::with_rust_compute(clonecloud::vfs::SimFs::new()),
+        )
+    };
+
+    let (phone_t, clone_t) = InProcTransport::pair();
+    let mut server = CloneServer::new(
+        clone_t,
+        program.clone(),
+        CostParams::default(),
+        Box::new(clonecloud::appvm::NodeEnv::with_rust_compute),
+    );
+    server.proto_cap = 4;
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    let mut nm = NodeManager::new(phone_t);
+    nm.pretend_proto(4);
+    // Delta stays off throughout: baselines would add their own
+    // (legitimate) fallbacks across phone restarts and mask the
+    // dictionary behavior under test.
+    nm.advertise_delta(false);
+
+    // One session per negotiation round; each uses a fresh phone (the
+    // app restarted) against the SAME long-lived clone connection.
+    let mut provisioned = false;
+    let mut run_round = |nm: &mut NodeManager<InProcTransport>, label: &str| {
+        if !provisioned {
+            nm.provision(&program, ZY, 5).unwrap();
+            provisioned = true;
+        }
+        let mut phone = fork();
+        let mut session = MobileSession::new(true);
+        let out = run_distributed_session(
+            &mut phone,
+            nm,
+            &NetworkProfile::wifi(),
+            &clonecloud::config::CostParams::default(),
+            &mut session,
+        )
+        .unwrap();
+        assert_eq!(out.migrations, ROUNDS as usize, "{label}: migrations");
+        assert_eq!(out.delta_fallbacks, 0, "{label}: delta fallbacks");
+        assert_eq!(out.dict_fallbacks, 0, "{label}: dict fallbacks");
+        assert_eq!(
+            phone.statics[main.class.0 as usize][1].as_int(),
+            Some(expected),
+            "{label}: bit-identical to monolithic"
+        );
+    };
+
+    // Round 1: both capabilities advertised and agreed; the clone's
+    // dictionary replica warms up over the session.
+    nm.advertise_caps(CAP_SESSION_DICT | CAP_SCATTER);
+    nm.negotiate().unwrap();
+    assert!(nm.dict_negotiated(), "round 1: dict agreed");
+    assert!(nm.scatter_negotiated(), "round 1: scatter agreed");
+    run_round(&mut nm, "round 1 (caps on)");
+
+    // Round 2: the peer flaps both bits off. Negotiation must land on
+    // the plain subset and the session must run dict-free.
+    nm.advertise_caps(0);
+    nm.negotiate().unwrap();
+    assert!(!nm.dict_negotiated(), "round 2: dict off after flap");
+    assert!(!nm.scatter_negotiated(), "round 2: scatter off after flap");
+    run_round(&mut nm, "round 2 (caps flapped off)");
+
+    // Round 3: the bits come back. The fresh phone starts from the
+    // empty dictionary; the clone must too (its replica was reset by
+    // the capability toggle), or the very first shared-mode capsule
+    // would be answered with a digest-mismatch NeedFull.
+    nm.advertise_caps(CAP_SESSION_DICT | CAP_SCATTER);
+    nm.negotiate().unwrap();
+    assert!(nm.dict_negotiated(), "round 3: dict re-agreed");
+    assert!(nm.scatter_negotiated(), "round 3: scatter re-agreed");
+    run_round(&mut nm, "round 3 (caps back on)");
+
+    nm.shutdown().unwrap();
+    srv.join().unwrap();
+}
+
 /// `CAP_TRACE_CTX` rows of the interop matrix: every (v3,v4) initiator/
 /// responder pairing with the trace envelope advertised or withheld
 /// negotiates the common subset — context only when both ends speak v4

@@ -68,7 +68,8 @@ fn prop_capture_roundtrips_random_heaps() {
             let (packet, stats) =
                 capture_thread(&p, tid, Direction::Forward, None, CaptureOptions::default())
                     .map_err(|e| e.to_string())?;
-            let decoded = CapturePacket::decode(&packet.encode()).map_err(|e| e.to_string())?;
+            let bytes = packet.encode().map_err(|e| e.to_string())?;
+            let decoded = CapturePacket::decode(&bytes).map_err(|e| e.to_string())?;
             ensure_eq(decoded, packet.clone(), "wire roundtrip")?;
             ensure(
                 stats.objects <= n_objs + 1,
